@@ -1,0 +1,88 @@
+//! System planning walkthrough (§4.2–4.3): profile the real model on this
+//! machine (Fig. 8), fit the Table 8 constants, solve Algorithm 2 for the
+//! optimal (w_a, w_p, B), then train with the planned configuration and
+//! compare against a naive equal allocation.
+//!
+//! Run: `cargo run --release --example plan_and_train`
+
+use pubsub_vfl::config::{Architecture, ExperimentConfig, ModelSize};
+use pubsub_vfl::data::Task;
+use pubsub_vfl::model::SplitModelSpec;
+use pubsub_vfl::planner::{self, table8_report, MemoryModel, PlanSpace};
+use pubsub_vfl::profiler::{payload_bytes_per_sample, profile_host, ProfileOpts};
+use pubsub_vfl::sim::simulate;
+use pubsub_vfl::train::{run_experiment, sim_config};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Profile the split model's six pipeline stages on this machine.
+    println!("== step 1: system profiling (Fig. 8) ==");
+    let spec = SplitModelSpec::build(ModelSize::Small, 24, &[24], 32, 16);
+    let opts = ProfileOpts { batch_sizes: vec![4, 8, 16, 32, 64, 128, 256], reps: 3, warmup: 1 };
+    let report = profile_host(&spec, Task::BinaryClassification, &opts, 42);
+    println!("{}", table8_report(&report.fit));
+
+    // 2. Plan with the fitted constants for a skewed 50:14 deployment.
+    println!("== step 2: Algorithm 2 planning (50:14 cores) ==");
+    let cost = planner::CostModel {
+        consts: report.fit.consts,
+        c_a: 50,
+        c_p: 14,
+        emb_bytes_per_sample: payload_bytes_per_sample(16),
+        grad_bytes_per_sample: payload_bytes_per_sample(16),
+        bandwidth_bps: 125e6,
+    };
+    let space = PlanSpace {
+        w_a_range: (2, 16),
+        w_p_range: (2, 16),
+        batch_sizes: vec![16, 32, 64, 128, 256, 512, 1024],
+    };
+    let plan = planner::solve(&cost, &MemoryModel::default_profile(), &space)
+        .expect("feasible plan");
+    println!(
+        "planned: w_a={} w_p={} B={}  (objective {:.4}s/iter, imbalance {:.1}%)",
+        plan.best.w_a, plan.best.w_p, plan.best.batch_size,
+        plan.best.cost, plan.best.imbalance * 100.0
+    );
+    let naive = planner::equal_allocation(&space, 8);
+    println!(
+        "naive equal allocation: w_a={} w_p={} B={}  (objective {:.4}s/iter)",
+        naive.w_a, naive.w_p, naive.batch_size,
+        cost.objective(naive.batch_size, naive.w_a, naive.w_p)
+    );
+
+    // 3. Train with the planned configuration (real accuracy) + project
+    //    both configurations on the simulator.
+    println!("\n== step 3: train with the plan ==");
+    let mut cfg = ExperimentConfig::default();
+    cfg.arch = Architecture::PubSub;
+    cfg.dataset.name = "credit".into();
+    cfg.dataset.samples = 3000;
+    cfg.hidden = 16;
+    cfg.embed_dim = 16;
+    cfg.train.batch_size = plan.best.batch_size.min(128); // keep the demo fast
+    cfg.train.epochs = 4;
+    cfg.train.lr = 0.05;
+    cfg.train.target_accuracy = 2.0;
+    cfg.parties.active_cores = 50;
+    cfg.parties.passive_cores = 14;
+    cfg.parties.active_workers = plan.best.w_a;
+    cfg.parties.passive_workers = plan.best.w_p;
+    let o = run_experiment(&cfg, 0)?;
+    println!("trained credit AUC = {:.4} in {} epochs", o.report.metric, o.report.epochs);
+
+    let planned_sim = simulate(&sim_config(&cfg, 100_000));
+    let mut naive_cfg = cfg.clone();
+    naive_cfg.parties.active_workers = naive.w_a;
+    naive_cfg.parties.passive_workers = naive.w_p;
+    naive_cfg.train.batch_size = naive.batch_size;
+    let naive_sim = simulate(&sim_config(&naive_cfg, 100_000));
+    println!(
+        "projected testbed: planned {:.1}s ({:.1}% cpu) vs naive {:.1}s ({:.1}% cpu)  [{:.2}x]",
+        planned_sim.wall_s,
+        planned_sim.cpu_util * 100.0,
+        naive_sim.wall_s,
+        naive_sim.cpu_util * 100.0,
+        naive_sim.wall_s / planned_sim.wall_s
+    );
+    Ok(())
+}

@@ -1,0 +1,133 @@
+"""AOT lowering: JAX split-model functions -> HLO *text* artifacts + a JSON
+manifest the Rust runtime consumes.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Run once via `make artifacts`; Python never runs on the training path.
+
+Usage:
+    python -m compile.aot --out ../artifacts [--configs quickstart,synthetic]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# The default artifact set. Batch dims are static in HLO, so each (config,
+# batch) pair is its own executable; the Rust runtime caches compilations.
+CONFIGS = {
+    # Tiny config for the quickstart example and integration tests.
+    "quickstart": M.SplitSpec(
+        size="small", d_active=10, d_passive=(10,), hidden=32, embed=16,
+        task="classification", batch=64, name="quickstart",
+    ),
+    # The paper's synthetic-dataset shape (500 features split evenly),
+    # scaled hidden width; B=256 is the planner's optimum (Table 3).
+    "synthetic": M.SplitSpec(
+        size="small", d_active=250, d_passive=(250,), hidden=64, embed=32,
+        task="classification", batch=256, name="synthetic",
+    ),
+    # Large (residual) model variant of Table 7 on the quickstart shape.
+    "quickstart-large": M.SplitSpec(
+        size="large", d_active=10, d_passive=(10,), hidden=32, embed=16,
+        task="classification", batch=64, name="quickstart-large",
+    ),
+    # Regression config (Energy-like shape) exercising the MSE path.
+    "energy": M.SplitSpec(
+        size="small", d_active=13, d_passive=(14,), hidden=32, embed=16,
+        task="regression", batch=64, name="energy",
+    ),
+}
+
+
+def to_hlo_text(fn, example_args) -> str:
+    """Lower a jitted fn to HLO text via StableHLO -> XlaComputation.
+
+    `keep_unused=True` pins the full argument list even when XLA proves an
+    argument dead (e.g. the last linear layer's bias does not influence the
+    VJP); the Rust marshaller passes every manifest argument positionally.
+    """
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_list(structs):
+    return [list(s.shape) for s in structs]
+
+
+def lower_config(split: M.SplitSpec, out_dir: str) -> dict:
+    """Lower the four functions of one config; return its manifest entry."""
+    entry = {
+        "size": split.size,
+        "d_active": split.d_active,
+        "d_passive": list(split.d_passive),
+        "hidden": split.hidden,
+        "embed": split.embed,
+        "task": split.task,
+        "batch": split.batch,
+        "functions": {},
+    }
+    fns = {
+        "passive_fwd": (M.make_passive_fwd(split), M.passive_fwd_args(split)),
+        "active_step": (M.make_active_step(split), M.active_step_args(split)),
+        "passive_bwd": (M.make_passive_bwd(split), M.passive_bwd_args(split)),
+        "predict": (M.make_predict(split), M.predict_args(split)),
+    }
+    for fname, (fn, args) in fns.items():
+        t0 = time.time()
+        text = to_hlo_text(fn, args)
+        fpath = f"{split.name}_{fname}.hlo.txt"
+        with open(os.path.join(out_dir, fpath), "w") as f:
+            f.write(text)
+        n_out = len(fn(*[jax.numpy.zeros(a.shape, a.dtype) for a in args]))
+        entry["functions"][fname] = {
+            "file": fpath,
+            "arg_shapes": _shape_list(args),
+            "n_outputs": n_out,
+            "hlo_bytes": len(text),
+            "lower_seconds": round(time.time() - t0, 3),
+        }
+        print(f"  {split.name}/{fname}: {len(text)} bytes, "
+              f"{len(args)} args, {n_out} outputs")
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default=",".join(CONFIGS))
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"format_version": 1, "configs": {}}
+    for name in args.configs.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        if name not in CONFIGS:
+            raise SystemExit(f"unknown config {name!r}; have {list(CONFIGS)}")
+        print(f"lowering {name} ...")
+        manifest["configs"][name] = lower_config(CONFIGS[name], args.out)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,172 @@
+"""L1: fused linear + bias + activation as a Pallas kernel.
+
+This is the compute hot-spot of the split model: every layer of every
+bottom/top MLP goes through `fused_linear`. The kernel tiles the GEMM into
+MXU-friendly (block_m x block_n) output blocks with the full K dimension
+resident per block (the MLPs here have K <= 1024, which fits VMEM
+comfortably: block_m*K + K*block_n + block_m*block_n floats per step), and
+fuses the bias add + activation into the epilogue so the pre-activation
+never round-trips through HBM.
+
+TPU adaptation notes (DESIGN.md "Hardware-Adaptation"): the BlockSpec
+index maps express the HBM->VMEM schedule a CUDA version would write with
+threadblock tiling; accumulation stays in f32 (MXU-native); `interpret=True`
+is mandatory on this CPU-only image - real-TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute (see /opt/xla-example
+README), so TPU performance is *estimated* from the VMEM/MXU model in
+DESIGN.md SS7 rather than measured.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Activations supported by the kernel epilogue. Must stay in sync with
+# `Activation` in rust/src/model/spec.rs and ref.py.
+ACTIVATIONS = ("relu", "tanh", "linear")
+
+
+def _epilogue(acc, b, activation):
+    acc = acc + b[None, :]
+    if activation == "relu":
+        return jnp.maximum(acc, 0.0)
+    if activation == "tanh":
+        return jnp.tanh(acc)
+    if activation == "linear":
+        return acc
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, activation):
+    """One (block_m, block_n) output tile: full-K matmul + fused epilogue."""
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    o_ref[...] = _epilogue(acc, b_ref[...].astype(jnp.float32), activation).astype(o_ref.dtype)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _fused_linear_impl(x, w, b, activation, block_m=128, block_n=128):
+    """The raw pallas_call (no autodiff rule)."""
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2 or b.shape != (n,):
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+
+    bm = min(block_m, _round_up(m, 8))
+    bn = min(block_n, _round_up(n, 8))
+    mp = _round_up(m, bm)
+    np_ = _round_up(n, bn)
+
+    # Zero-pad to tile multiples; sliced back out below. Padding K is not
+    # needed (full K per block).
+    xp = jnp.pad(x, ((0, mp - m), (0, 0)))
+    wp = jnp.pad(w, ((0, 0), (0, np_ - n)))
+    bp = jnp.pad(b, (0, np_ - n))
+
+    grid = (mp // bm, np_ // bn)
+    out = pl.pallas_call(
+        functools.partial(_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Autodiff: interpret-mode pallas_call has no reverse-mode rule, so we give
+# fused_linear a custom VJP whose backward pass *also* runs on the kernel
+# (dx = dpre @ Wᵀ and dW = xᵀ @ dpre are fused_linear calls with a linear
+# epilogue and zero bias) — the L1 backward path of the paper's model.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _fused_linear(x, w, b, activation):
+    return _fused_linear_impl(x, w, b, activation)
+
+
+def _fused_fwd(x, w, b, activation):
+    y = _fused_linear_impl(x, w, b, activation)
+    return y, (x, w, y)
+
+
+def _act_grad_from_output(y, dy, activation):
+    """act'(pre)·dy expressed via the activation *output* (cheap residual)."""
+    if activation == "relu":
+        return dy * (y > 0).astype(dy.dtype)
+    if activation == "tanh":
+        return dy * (1.0 - y * y)
+    return dy  # linear
+
+
+def _fused_bwd(activation, res, dy):
+    x, w, y = res
+    dpre = _act_grad_from_output(y, dy, activation)
+    zero_k = jnp.zeros((x.shape[1],), dpre.dtype)
+    zero_n = jnp.zeros((w.shape[1],), dpre.dtype)
+    dx = _fused_linear_impl(dpre, w.T, zero_k, "linear")  # dpre @ Wᵀ
+    dw = _fused_linear_impl(x.T, dpre, zero_n, "linear")  # xᵀ @ dpre
+    db = jnp.sum(dpre, axis=0)
+    return dx, dw, db
+
+
+_fused_linear.defvjp(_fused_fwd, _fused_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("activation",))
+def fused_linear(x, w, b, *, activation="relu"):
+    """act(x @ w + b) with a Pallas block-tiled kernel (differentiable).
+
+    Args:
+      x: (M, K) input batch.
+      w: (K, N) weights.
+      b: (N,) bias.
+      activation: one of ACTIVATIONS.
+
+    Returns:
+      (M, N) activations, same dtype as x.
+    """
+    if activation not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    return _fused_linear(x, w, b, activation)
+
+
+def vmem_footprint_bytes(m, k, n, *, block_m=128, block_n=128, dtype_bytes=4):
+    """Estimated per-step VMEM residency of the kernel (DESIGN.md SS7).
+
+    One grid step holds an (bm, K) x-tile, a (K, bn) w-tile, the (bn,)
+    bias, and the (bm, bn) accumulator/output tile.
+    """
+    bm = min(block_m, _round_up(m, 8))
+    bn = min(block_n, _round_up(n, 8))
+    floats = bm * k + k * bn + bn + bm * bn
+    return floats * dtype_bytes
+
+
+def mxu_utilization_estimate(m, k, n, *, block_m=128, block_n=128):
+    """Fraction of MXU-issue slots doing useful work, from tile geometry.
+
+    The 128x128 MXU is fully fed when both tile dims are multiples of 128
+    and K >= 128; ragged edges waste the pad fraction.
+    """
+    bm = min(block_m, _round_up(m, 8))
+    bn = min(block_n, _round_up(n, 8))
+    mp, np_ = _round_up(m, bm), _round_up(n, bn)
+    useful = m * k * n
+    issued = mp * max(k, 128) * np_
+    return useful / issued

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the Pallas kernel: the correctness ground truth.
+
+Every kernel change must keep `fused_linear(...) == ref_linear(...)` to
+float tolerance across the hypothesis sweep in python/tests.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_linear(x, w, b, *, activation="relu"):
+    """act(x @ w + b), straight jnp."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if activation == "relu":
+        return jnp.maximum(y, 0.0).astype(x.dtype)
+    if activation == "tanh":
+        return jnp.tanh(y).astype(x.dtype)
+    if activation == "linear":
+        return y.astype(x.dtype)
+    raise ValueError(f"unknown activation {activation!r}")

@@ -1,0 +1,288 @@
+"""L2: the split model (bottom MLPs + top MLP) in JAX, built on the L1
+Pallas kernel, plus the three split-learning functions that get AOT-lowered
+for the Rust coordinator:
+
+    passive_fwd(params_p..., x_p)                  -> (z_p,)
+    active_step(params_a..., params_t..., x_a, z..., y)
+        -> (loss, grad_z..., grads_a..., grads_t...)
+    passive_bwd(params_p..., x_p, gz)              -> (grads_p...,)
+    predict(params_a..., params_t..., params_p... , x_a, x_p...) -> (preds,)
+
+PARAMETER LAYOUT CONTRACT (mirrored by rust/src/model/params.rs): each
+sub-model's parameters are the flat argument list [W0, b0, W1, b1, ...]
+with W row-major (in, out). The top model consumes [z_a | z_p0 | z_p1 ...]
+(active embedding first). Batch dims are static; one artifact per config.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_linear import fused_linear
+
+Params = List[jnp.ndarray]  # interleaved [W0, b0, W1, b1, ...]
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    in_dim: int
+    out_dim: int
+    act: str  # relu | tanh | linear
+    residual: bool = False
+
+
+@dataclass(frozen=True)
+class MlpSpec:
+    layers: Tuple[LayerSpec, ...]
+
+    @property
+    def in_dim(self):
+        return self.layers[0].in_dim
+
+    @property
+    def out_dim(self):
+        return self.layers[-1].out_dim
+
+    def param_shapes(self) -> List[Tuple[int, ...]]:
+        shapes: List[Tuple[int, ...]] = []
+        for l in self.layers:
+            shapes.append((l.in_dim, l.out_dim))
+            shapes.append((l.out_dim,))
+        return shapes
+
+
+def dense_spec(dims: Sequence[int], last_act: str = "linear") -> MlpSpec:
+    """Plain stack, ReLU on hidden layers (mirrors MlpSpec::dense)."""
+    layers = []
+    for i in range(len(dims) - 1):
+        act = last_act if i == len(dims) - 2 else "relu"
+        layers.append(LayerSpec(dims[i], dims[i + 1], act))
+    return MlpSpec(tuple(layers))
+
+
+def residual_spec(in_dim: int, hidden: int, out_dim: int, n_blocks: int) -> MlpSpec:
+    """Input proj + n residual blocks + output proj (MlpSpec::residual)."""
+    layers = [LayerSpec(in_dim, hidden, "relu")]
+    layers += [LayerSpec(hidden, hidden, "relu", residual=True)] * n_blocks
+    layers.append(LayerSpec(hidden, out_dim, "linear"))
+    return MlpSpec(tuple(layers))
+
+
+def bottom_spec(size: str, d_in: int, hidden: int, embed: int) -> MlpSpec:
+    """The paper's bottoms: 'small' = ten-layer MLP, 'large' = res-MLP."""
+    if size == "small":
+        return dense_spec([d_in] + [hidden] * 9 + [embed], "linear")
+    if size == "large":
+        return residual_spec(d_in, hidden, embed, 6)
+    raise ValueError(f"unknown model size {size!r}")
+
+
+def top_spec(n_parties: int, embed: int, hidden: int) -> MlpSpec:
+    """Two-layer top over the concatenated embeddings."""
+    return dense_spec([(n_parties + 1) * embed, hidden, 1], "linear")
+
+
+def init_mlp(spec: MlpSpec, key) -> Params:
+    """He-style init, b = 0 (same distribution as MlpParams::init)."""
+    params: Params = []
+    for l in spec.layers:
+        key, sub = jax.random.split(key)
+        std = (2.0 / l.in_dim) ** 0.5
+        params.append(jax.random.normal(sub, (l.in_dim, l.out_dim), jnp.float32) * std)
+        params.append(jnp.zeros((l.out_dim,), jnp.float32))
+    return params
+
+
+def mlp_forward(spec: MlpSpec, params: Params, x):
+    """Forward through the MLP; every layer is the fused Pallas kernel."""
+    h = x
+    for i, l in enumerate(spec.layers):
+        w, b = params[2 * i], params[2 * i + 1]
+        y = fused_linear(h, w, b, activation=l.act)
+        h = y + h if l.residual else y
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Losses (Eq. 1) — must match rust/src/model/loss.rs bit-for-bit in formula.
+# ---------------------------------------------------------------------------
+
+
+def bce_with_logits(logits, y):
+    z = logits[:, 0]
+    return jnp.mean(jnp.maximum(z, 0.0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+def mse(pred, y):
+    d = pred[:, 0] - y
+    return jnp.mean(d * d)
+
+
+# ---------------------------------------------------------------------------
+# The split-learning function set.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SplitSpec:
+    """Full split-model description for one artifact config."""
+
+    size: str
+    d_active: int
+    d_passive: Tuple[int, ...]
+    hidden: int
+    embed: int
+    task: str  # classification | regression
+    batch: int
+    name: str = field(default="cfg")
+
+    @property
+    def active(self) -> MlpSpec:
+        return bottom_spec(self.size, self.d_active, self.hidden, self.embed)
+
+    @property
+    def passives(self) -> Tuple[MlpSpec, ...]:
+        return tuple(
+            bottom_spec(self.size, d, self.hidden, self.embed) for d in self.d_passive
+        )
+
+    @property
+    def top(self) -> MlpSpec:
+        return top_spec(len(self.d_passive), self.embed, self.hidden)
+
+    def loss_fn(self):
+        return bce_with_logits if self.task == "classification" else mse
+
+
+def _n_params(spec: MlpSpec) -> int:
+    return 2 * len(spec.layers)
+
+
+def make_passive_fwd(split: SplitSpec, party: int = 0):
+    """(params_p..., x_p) -> (z_p,)"""
+    spec = split.passives[party]
+
+    def passive_fwd(*args):
+        params = list(args[:-1])
+        x = args[-1]
+        return (mlp_forward(spec, params, x),)
+
+    return passive_fwd
+
+
+def make_active_step(split: SplitSpec):
+    """(params_a..., params_t..., x_a, z_p..., y)
+    -> (loss, grad_z..., grads_a..., grads_t...)"""
+    a_spec, t_spec = split.active, split.top
+    na, nt = _n_params(a_spec), _n_params(t_spec)
+    k = len(split.d_passive)
+    loss_fn = split.loss_fn()
+
+    def compute_loss(params_a, params_t, x_a, zs, y):
+        z_a = mlp_forward(a_spec, params_a, x_a)
+        concat = jnp.concatenate([z_a] + list(zs), axis=1)
+        preds = mlp_forward(t_spec, params_t, concat)
+        return loss_fn(preds, y)
+
+    def active_step(*args):
+        params_a = list(args[:na])
+        params_t = list(args[na : na + nt])
+        x_a = args[na + nt]
+        zs = list(args[na + nt + 1 : na + nt + 1 + k])
+        y = args[na + nt + 1 + k]
+        loss, (g_a, g_t, g_z) = jax.value_and_grad(compute_loss, argnums=(0, 1, 3))(
+            params_a, params_t, x_a, zs, y
+        )
+        return (loss, *g_z, *g_a, *g_t)
+
+    return active_step
+
+
+def make_passive_bwd(split: SplitSpec, party: int = 0):
+    """(params_p..., x_p, gz) -> (grads_p...,)"""
+    spec = split.passives[party]
+    np_ = _n_params(spec)
+
+    def passive_bwd(*args):
+        params = list(args[:np_])
+        x = args[np_]
+        gz = args[np_ + 1]
+
+        def fwd(params):
+            return mlp_forward(spec, params, x)
+
+        _, vjp = jax.vjp(fwd, params)
+        (grads,) = vjp(gz)
+        return tuple(grads)
+
+    return passive_bwd
+
+
+def make_predict(split: SplitSpec):
+    """(params_a..., params_t..., params_p0..., ..., x_a, x_p...) -> (preds,)"""
+    a_spec, t_spec = split.active, split.top
+    p_specs = split.passives
+    na, nt = _n_params(a_spec), _n_params(t_spec)
+    nps = [_n_params(s) for s in p_specs]
+
+    def predict(*args):
+        off = 0
+        params_a = list(args[off : off + na])
+        off += na
+        params_t = list(args[off : off + nt])
+        off += nt
+        params_ps = []
+        for n in nps:
+            params_ps.append(list(args[off : off + n]))
+            off += n
+        x_a = args[off]
+        off += 1
+        x_ps = list(args[off : off + len(p_specs)])
+        z_a = mlp_forward(a_spec, params_a, x_a)
+        zs = [mlp_forward(s, p, x) for s, p, x in zip(p_specs, params_ps, x_ps)]
+        concat = jnp.concatenate([z_a] + zs, axis=1)
+        return (mlp_forward(t_spec, params_t, concat),)
+
+    return predict
+
+
+# ---------------------------------------------------------------------------
+# Example-argument builders (static shapes for AOT lowering).
+# ---------------------------------------------------------------------------
+
+
+def _shape_structs(shapes):
+    return [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+
+
+def passive_fwd_args(split: SplitSpec, party: int = 0):
+    spec = split.passives[party]
+    return _shape_structs(spec.param_shapes() + [(split.batch, spec.in_dim)])
+
+
+def active_step_args(split: SplitSpec):
+    shapes = split.active.param_shapes() + split.top.param_shapes()
+    shapes.append((split.batch, split.d_active))
+    shapes += [(split.batch, split.embed)] * len(split.d_passive)
+    shapes.append((split.batch,))
+    return _shape_structs(shapes)
+
+
+def passive_bwd_args(split: SplitSpec, party: int = 0):
+    spec = split.passives[party]
+    return _shape_structs(
+        spec.param_shapes() + [(split.batch, spec.in_dim), (split.batch, split.embed)]
+    )
+
+
+def predict_args(split: SplitSpec):
+    shapes = split.active.param_shapes() + split.top.param_shapes()
+    for s in split.passives:
+        shapes += s.param_shapes()
+    shapes.append((split.batch, split.d_active))
+    shapes += [(split.batch, s.in_dim) for s in split.passives]
+    return _shape_structs(shapes)

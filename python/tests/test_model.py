@@ -1,0 +1,196 @@
+"""L2 correctness: split-model functions — shapes, the parameter-layout
+contract, loss agreement with the hand formula, end-to-end gradient checks,
+and a tiny SGD convergence test."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import compile.model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def tiny_split(task="classification", size="small"):
+    return M.SplitSpec(
+        size=size, d_active=6, d_passive=(5,), hidden=8, embed=4,
+        task=task, batch=8, name="t",
+    )
+
+
+def init_all(split, seed=0):
+    key = jax.random.PRNGKey(seed)
+    ka, kt, kp = jax.random.split(key, 3)
+    return (
+        M.init_mlp(split.active, ka),
+        M.init_mlp(split.top, kt),
+        [M.init_mlp(s, kp) for s in split.passives],
+    )
+
+
+def batch(split, seed=1):
+    key = jax.random.PRNGKey(seed)
+    kx, kp, ky = jax.random.split(key, 3)
+    x_a = jax.random.normal(kx, (split.batch, split.d_active))
+    x_p = jax.random.normal(kp, (split.batch, split.d_passive[0]))
+    y = (jax.random.uniform(ky, (split.batch,)) > 0.5).astype(jnp.float32)
+    return x_a, x_p, y
+
+
+def test_spec_mirrors_rust_contract():
+    split = tiny_split()
+    # Small bottom = ten layers; top = two layers over (k+1)*embed.
+    assert len(split.active.layers) == 10
+    assert len(split.passives[0].layers) == 10
+    assert split.top.in_dim == 2 * split.embed
+    assert len(split.top.layers) == 2
+    # Interleaved [W, b] shapes.
+    shapes = split.active.param_shapes()
+    assert shapes[0] == (6, 8) and shapes[1] == (8,)
+    assert shapes[-2] == (8, 4) and shapes[-1] == (4,)
+
+
+def test_large_spec_residual():
+    split = tiny_split(size="large")
+    specs = split.active
+    assert specs.layers[1].residual
+    assert specs.layers[0].in_dim == 6
+    assert specs.out_dim == 4
+    # Residual blocks require square dims.
+    for l in specs.layers:
+        if l.residual:
+            assert l.in_dim == l.out_dim
+
+
+@pytest.mark.parametrize("size", ["small", "large"])
+def test_passive_fwd_shapes(size):
+    split = tiny_split(size=size)
+    pa, pt, pps = init_all(split)
+    _, x_p, _ = batch(split)
+    fwd = M.make_passive_fwd(split)
+    (z,) = fwd(*pps[0], x_p)
+    assert z.shape == (split.batch, split.embed)
+
+
+def test_active_step_output_arity_and_shapes():
+    split = tiny_split()
+    pa, pt, pps = init_all(split)
+    x_a, x_p, y = batch(split)
+    (z,) = M.make_passive_fwd(split)(*pps[0], x_p)
+    out = M.make_active_step(split)(*pa, *pt, x_a, z, y)
+    # (loss, grad_z, grads_a..., grads_t...)
+    assert len(out) == 1 + 1 + len(pa) + len(pt)
+    loss, gz = out[0], out[1]
+    assert loss.shape == ()
+    assert gz.shape == z.shape
+    for g, p in zip(out[2:], pa + pt):
+        assert g.shape == p.shape
+
+
+def test_loss_matches_hand_formula():
+    split = tiny_split()
+    pa, pt, pps = init_all(split)
+    x_a, x_p, y = batch(split)
+    (z,) = M.make_passive_fwd(split)(*pps[0], x_p)
+    loss = M.make_active_step(split)(*pa, *pt, x_a, z, y)[0]
+    # Manual: forward both bottoms + top, then stable BCE.
+    z_a = M.mlp_forward(split.active, pa, x_a)
+    preds = M.mlp_forward(split.top, pt, jnp.concatenate([z_a, z], axis=1))
+    want = M.bce_with_logits(preds, y)
+    np.testing.assert_allclose(float(loss), float(want), rtol=1e-6)
+
+
+def test_grad_z_matches_numerical():
+    split = tiny_split()
+    pa, pt, pps = init_all(split)
+    x_a, x_p, y = batch(split)
+    (z,) = M.make_passive_fwd(split)(*pps[0], x_p)
+    step = M.make_active_step(split)
+    gz = step(*pa, *pt, x_a, z, y)[1]
+    eps = 1e-3
+    for (r, c) in [(0, 0), (3, 2)]:
+        zp = z.at[r, c].add(eps)
+        zm = z.at[r, c].add(-eps)
+        num = (step(*pa, *pt, x_a, zp, y)[0] - step(*pa, *pt, x_a, zm, y)[0]) / (2 * eps)
+        np.testing.assert_allclose(float(gz[r, c]), float(num), rtol=2e-2, atol=2e-3)
+
+
+def test_passive_bwd_is_vjp_of_passive_fwd():
+    split = tiny_split()
+    _, _, pps = init_all(split)
+    _, x_p, _ = batch(split)
+    gz = jax.random.normal(jax.random.PRNGKey(9), (split.batch, split.embed))
+    grads = M.make_passive_bwd(split)(*pps[0], x_p, gz)
+    assert len(grads) == len(pps[0])
+
+    def loss(params):
+        return jnp.sum(M.mlp_forward(split.passives[0], list(params), x_p) * gz)
+
+    want = jax.grad(loss)(tuple(pps[0]))
+    for g, wgt in zip(grads, want):
+        np.testing.assert_allclose(np.array(g), np.array(wgt), rtol=1e-4, atol=1e-5)
+
+
+def test_predict_consistent_with_parts():
+    split = tiny_split()
+    pa, pt, pps = init_all(split)
+    x_a, x_p, _ = batch(split)
+    (preds,) = M.make_predict(split)(*pa, *pt, *pps[0], x_a, x_p)
+    z_a = M.mlp_forward(split.active, pa, x_a)
+    z_p = M.mlp_forward(split.passives[0], pps[0], x_p)
+    want = M.mlp_forward(split.top, pt, jnp.concatenate([z_a, z_p], axis=1))
+    np.testing.assert_allclose(np.array(preds), np.array(want), rtol=1e-5, atol=1e-6)
+
+
+def test_sgd_reduces_loss_end_to_end():
+    split = tiny_split()
+    pa, pt, pps = init_all(split)
+    x_a, x_p, y = batch(split)
+    fwd = M.make_passive_fwd(split)
+    step = M.make_active_step(split)
+    bwd = M.make_passive_bwd(split)
+    pp = pps[0]
+    lr = 0.1
+    losses = []
+    for _ in range(30):
+        (z,) = fwd(*pp, x_p)
+        out = step(*pa, *pt, x_a, z, y)
+        loss, gz = out[0], out[1]
+        ga = out[2 : 2 + len(pa)]
+        gt = out[2 + len(pa) :]
+        gp = bwd(*pp, x_p, gz)
+        pa = [p - lr * g for p, g in zip(pa, ga)]
+        pt = [p - lr * g for p, g in zip(pt, gt)]
+        pp = [p - lr * g for p, g in zip(pp, gp)]
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.6, losses[:3] + losses[-3:]
+
+
+def test_regression_task_uses_mse():
+    split = tiny_split(task="regression")
+    pa, pt, pps = init_all(split)
+    x_a, x_p, _ = batch(split)
+    y = jax.random.normal(jax.random.PRNGKey(3), (split.batch,))
+    (z,) = M.make_passive_fwd(split)(*pps[0], x_p)
+    loss = M.make_active_step(split)(*pa, *pt, x_a, z, y)[0]
+    z_a = M.mlp_forward(split.active, pa, x_a)
+    preds = M.mlp_forward(split.top, pt, jnp.concatenate([z_a, z], axis=1))
+    np.testing.assert_allclose(float(loss), float(M.mse(preds, y)), rtol=1e-6)
+
+
+def test_multi_party_split_functions():
+    split = M.SplitSpec(
+        size="small", d_active=4, d_passive=(3, 3), hidden=8, embed=4,
+        task="classification", batch=4, name="mp",
+    )
+    pa, pt, pps = init_all(split)
+    key = jax.random.PRNGKey(11)
+    x_a = jax.random.normal(key, (4, 4))
+    xs = [jax.random.normal(jax.random.PRNGKey(20 + i), (4, 3)) for i in range(2)]
+    y = jnp.array([1.0, 0.0, 1.0, 0.0])
+    zs = [M.make_passive_fwd(split, i)(*pps[i], xs[i])[0] for i in range(2)]
+    out = M.make_active_step(split)(*pa, *pt, x_a, *zs, y)
+    assert len(out) == 1 + 2 + len(pa) + len(pt)
+    assert out[1].shape == (4, 4) and out[2].shape == (4, 4)
+    assert split.top.in_dim == 3 * split.embed

@@ -1,0 +1,49 @@
+//! Shared helpers for the paper-table benches.
+
+use pubsub_vfl::config::{Architecture, ExperimentConfig, ModelSize};
+use pubsub_vfl::train::{run_experiment, ExperimentOutcome};
+
+/// Quick experiment config for accuracy rows: small sample caps + few
+/// epochs so the whole bench suite stays minutes-scale. Override
+/// `PUBSUB_VFL_BENCH_SAMPLES` / `PUBSUB_VFL_BENCH_EPOCHS` for full runs.
+pub fn quick_cfg(dataset: &str, arch: Architecture) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.arch = arch;
+    cfg.dataset.name = dataset.into();
+    cfg.dataset.samples = env_usize("PUBSUB_VFL_BENCH_SAMPLES", 1500);
+    cfg.train.epochs = env_usize("PUBSUB_VFL_BENCH_EPOCHS", 4);
+    cfg.train.batch_size = 32;
+    cfg.train.lr = 0.05;
+    cfg.train.target_accuracy = 2.0; // run all epochs
+    cfg.hidden = 16;
+    cfg.embed_dim = 8;
+    cfg.parties.active_workers = 2;
+    cfg.parties.passive_workers = 2;
+    cfg
+}
+
+pub fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub fn run(cfg: &ExperimentConfig) -> ExperimentOutcome {
+    run_experiment(cfg, 0).expect("experiment runs")
+}
+
+/// Metric formatted the way the paper prints it (AUC% or RMSE).
+pub fn fmt_metric(o: &ExperimentOutcome) -> String {
+    if o.report.metric_name == "auc" {
+        format!("{:.2}", o.report.metric * 100.0)
+    } else {
+        format!("{:.3}", o.report.metric)
+    }
+}
+
+/// All five benchmark datasets (Table 6).
+pub const DATASETS: [&str; 5] = ["energy", "blog", "bank", "credit", "synthetic"];
+
+#[allow(dead_code)]
+pub fn large(mut cfg: ExperimentConfig) -> ExperimentConfig {
+    cfg.model_size = ModelSize::Large;
+    cfg
+}

@@ -1,0 +1,106 @@
+//! Fig. 4: computation efficiency under resource heterogeneity (CPU core
+//! ratios) and data heterogeneity (feature-split ratios). For each
+//! scenario the Algorithm 2 planner configures PubSub-VFL; baselines use
+//! the fixed default allocation (they have no planner).
+
+mod common;
+
+use pubsub_vfl::bench_harness::Table;
+use pubsub_vfl::config::Architecture;
+use pubsub_vfl::planner::{self, MemoryModel, PlanSpace};
+use pubsub_vfl::sim::simulate;
+use pubsub_vfl::train::sim_config;
+
+fn main() {
+    let n = common::env_usize("PUBSUB_VFL_BENCH_SIM_SAMPLES", 100_000);
+    let space = PlanSpace {
+        w_a_range: (2, 16),
+        w_p_range: (2, 16),
+        batch_sizes: vec![16, 32, 64, 128, 256, 512, 1024],
+    };
+
+    // (a)-(b): resource heterogeneity.
+    let mut t = Table::new(
+        "Fig 4(a)-(b): resource heterogeneity (cores A:P, 64 total)",
+        &["cores", "method", "time(s)", "cpu%", "wait/ep(s)"],
+    );
+    for &(ca, cp) in &[(50usize, 14usize), (48, 16), (40, 24), (36, 28)] {
+        for arch in Architecture::ALL {
+            let mut cfg = common::quick_cfg("synthetic", arch);
+            cfg.parties.active_cores = ca;
+            cfg.parties.passive_cores = cp;
+            cfg.train.batch_size = 256;
+            if arch == Architecture::PubSub {
+                // §4.3: the planner tunes (w_a, w_p, B) for the profile.
+                let probe = sim_config(&cfg, n);
+                if let Some(r) = planner::solve(&probe.cost, &MemoryModel::default_profile(), &space)
+                {
+                    cfg.parties.active_workers = r.best.w_a;
+                    cfg.parties.passive_workers = r.best.w_p;
+                    cfg.train.batch_size = r.best.batch_size;
+                }
+            } else {
+                cfg.parties.active_workers = 8;
+                cfg.parties.passive_workers = 10;
+            }
+            let r = simulate(&sim_config(&cfg, n));
+            t.row(&[
+                format!("{ca}:{cp}"),
+                arch.name().to_string(),
+                format!("{:.1}", r.wall_s),
+                format!("{:.2}", r.cpu_util * 100.0),
+                format!("{:.4}", r.wait_per_epoch_s),
+            ]);
+        }
+    }
+    t.print();
+    t.save_csv("fig4_resource_heterogeneity.csv");
+
+    // (c)-(d): data heterogeneity — feature split shifts per-party work.
+    // The cost model sees it through the payload/compute ratio: we scale
+    // each party's compute constants by its feature share.
+    let mut t2 = Table::new(
+        "Fig 4(c)-(d): data heterogeneity (features A:P of 500)",
+        &["features", "method", "time(s)", "cpu%", "wait/ep(s)"],
+    );
+    for &(fa, fp) in &[(50usize, 450usize), (100, 400), (150, 350), (200, 300)] {
+        for arch in Architecture::ALL {
+            let mut cfg = common::quick_cfg("synthetic", arch);
+            cfg.train.batch_size = 256;
+            cfg.parties.active_workers = 8;
+            cfg.parties.passive_workers = 10;
+            let mut sc = sim_config(&cfg, n);
+            // First-layer work scales with input width: fold the feature
+            // share into the bottom-model constants (input proj is the
+            // dominant layer at d=250..450 vs hidden 64).
+            let share_a = fa as f64 / 250.0;
+            let share_p = fp as f64 / 250.0;
+            sc.cost.consts.lambda_a *= 0.5 + 0.5 * share_a;
+            sc.cost.consts.phi_a *= 0.5 + 0.5 * share_a;
+            sc.cost.consts.lambda_p *= 0.5 + 0.5 * share_p;
+            sc.cost.consts.phi_p *= 0.5 + 0.5 * share_p;
+            if arch == Architecture::PubSub {
+                let space2 = space.clone();
+                if let Some(r) =
+                    planner::solve(&sc.cost, &MemoryModel::default_profile(), &space2)
+                {
+                    sc.w_a = r.best.w_a;
+                    sc.w_p = r.best.w_p;
+                    sc.batch_size = r.best.batch_size;
+                }
+            }
+            let r = simulate(&sc);
+            t2.row(&[
+                format!("{fa}:{fp}"),
+                arch.name().to_string(),
+                format!("{:.1}", r.wall_s),
+                format!("{:.2}", r.cpu_util * 100.0),
+                format!("{:.4}", r.wait_per_epoch_s),
+            ]);
+        }
+    }
+    t2.print();
+    t2.save_csv("fig4_data_heterogeneity.csv");
+    println!("paper shape: PubSub holds >=~85% CPU under skew (87.42% @50:14 in the paper)");
+    println!("while AVFL-PS collapses (~42%); planner shrinks the active-feature share gap.");
+}

@@ -1,0 +1,82 @@
+//! Fig. 8 + Table 8: empirical cost-model fitting. Measures the six
+//! pipeline stages of the real split model across batch sizes on the host
+//! engine (and the PJRT engine when artifacts exist), fits the power laws
+//! of Eq. (6)–(8), and prints the local Table 8 next to the paper's.
+
+mod common;
+
+use pubsub_vfl::bench_harness::Table;
+use pubsub_vfl::config::ModelSize;
+use pubsub_vfl::data::Task;
+use pubsub_vfl::model::SplitModelSpec;
+use pubsub_vfl::planner::{table8_report, CostConstants};
+use pubsub_vfl::profiler::{profile_engine, profile_host, ProfileOpts};
+use pubsub_vfl::runtime::XlaService;
+
+fn main() {
+    let spec = SplitModelSpec::build(ModelSize::Small, 250, &[250], 64, 32);
+    let opts = ProfileOpts {
+        batch_sizes: vec![2, 4, 8, 16, 32, 64, 128, 256, 512, 1024],
+        reps: common::env_usize("PUBSUB_VFL_BENCH_PROFILE_REPS", 3),
+        warmup: 1,
+    };
+    println!("profiling six pipeline stages over B = {:?} ...", opts.batch_sizes);
+    let report = profile_host(&spec, Task::BinaryClassification, &opts, 42);
+
+    // Fig. 8: the raw per-sample curves.
+    let mut t = Table::new(
+        "Fig 8: per-sample stage time vs batch size (host engine, seconds)",
+        &["B", "fwd_p", "fwd_a", "fwd_top", "bwd_a", "bwd_p", "bwd_top"],
+    );
+    let m = &report.measurements;
+    for (i, &b) in m.fwd_passive.batch_sizes.iter().enumerate() {
+        t.row(&[
+            format!("{b}"),
+            format!("{:.3e}", m.fwd_passive.per_sample_secs[i]),
+            format!("{:.3e}", m.fwd_active.per_sample_secs[i]),
+            format!("{:.3e}", m.fwd_top.per_sample_secs[i]),
+            format!("{:.3e}", m.bwd_active.per_sample_secs[i]),
+            format!("{:.3e}", m.bwd_passive.per_sample_secs[i]),
+            format!("{:.3e}", m.bwd_top.per_sample_secs[i]),
+        ]);
+    }
+    t.print();
+    t.save_csv("fig8_profiling.csv");
+
+    println!("\nTable 8 (local fit):\n{}", table8_report(&report.fit));
+    let p = CostConstants::paper_table8();
+    println!(
+        "Table 8 (paper, 64-core Xeon): lambda_a={} gamma_a={} lambda_p={} gamma_p={} ...",
+        p.lambda_a, p.gamma_a, p.lambda_p, p.gamma_p
+    );
+    println!("shape check: all exponents negative (per-sample cost amortizes with B),");
+    println!("backward > forward constants, top-model cheapest per stage.");
+
+    // PJRT engine profile (combined stages) if artifacts are available.
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        if let Ok(svc) = XlaService::spawn(dir.to_str().unwrap(), "synthetic") {
+            let spec_q = SplitModelSpec::build(ModelSize::Small, 250, &[250], 64, 32);
+            let rows = profile_engine(
+                &svc,
+                &spec_q,
+                &ProfileOpts { batch_sizes: vec![256], reps: 3, warmup: 1 },
+                7,
+            );
+            let mut t2 = Table::new(
+                "PJRT (AOT JAX/Pallas) per-sample stage time at the artifact batch",
+                &["B", "passive_fwd", "active_step", "passive_bwd"],
+            );
+            for (b, pf, as_, pb) in rows {
+                t2.row(&[
+                    format!("{b}"),
+                    format!("{pf:.3e}"),
+                    format!("{as_:.3e}"),
+                    format!("{pb:.3e}"),
+                ]);
+            }
+            t2.print();
+            t2.save_csv("fig8_pjrt.csv");
+        }
+    }
+}

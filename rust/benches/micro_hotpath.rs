@@ -1,0 +1,154 @@
+//! Hot-path micro-benchmarks (the §Perf working set): broker
+//! publish/subscribe, channel contention, PS aggregation, host-engine
+//! GEMMs, parameter flatten/unflatten, PJRT literal marshaling, and the
+//! end-to-end PJRT step latency.
+
+mod common;
+
+use pubsub_vfl::bench_harness::{bench, Table};
+use pubsub_vfl::config::ModelSize;
+use pubsub_vfl::coordinator::{Broker, ParameterServer, PsMode, SubResult};
+use pubsub_vfl::coordinator::{EmbeddingMsg, GradientMsg};
+use pubsub_vfl::metrics::Metrics;
+use pubsub_vfl::model::{forward, Activation, MlpParams, MlpSpec, SplitModelSpec, SplitParams};
+use pubsub_vfl::runtime::XlaService;
+use pubsub_vfl::tensor::Matrix;
+use pubsub_vfl::util::Rng;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    let mut results = Vec::new();
+    let mut rng = Rng::new(42);
+
+    // Broker publish + subscribe roundtrip (256×32 embedding payload).
+    {
+        let metrics = Arc::new(Metrics::new());
+        let broker = Broker::new(1, 64, 64, metrics);
+        let z = Matrix::randn(256, 32, 1.0, &mut rng);
+        results.push(bench("broker_pub_sub_roundtrip_256x32", 50, 2000, || {
+            broker.publish_embedding(EmbeddingMsg {
+                batch_id: 1,
+                party: 0,
+                z: z.clone(),
+                produced_at: Instant::now(),
+                param_version: 0,
+            });
+            match broker.take_embedding(0, Duration::from_millis(100)) {
+                SubResult::Ok(_) => {}
+                other => panic!("broker lost message: {other:?}"),
+            }
+            broker.publish_gradient(GradientMsg {
+                batch_id: 1,
+                party: 0,
+                grad_z: z.clone(),
+                produced_at: Instant::now(),
+                loss: 0.0,
+            });
+            let _ = broker.take_gradient(0, Duration::from_millis(100));
+        }));
+    }
+
+    // Contended channel: 4 producer threads × 1000 msgs through one topic.
+    {
+        results.push(bench("broker_contended_4x1000", 2, 20, || {
+            let metrics = Arc::new(Metrics::new());
+            let broker = Arc::new(Broker::new(1, 4096, 4096, metrics));
+            std::thread::scope(|s| {
+                for t in 0..4u64 {
+                    let b = Arc::clone(&broker);
+                    s.spawn(move || {
+                        for i in 0..1000u64 {
+                            b.publish_embedding(EmbeddingMsg {
+                                batch_id: t * 1000 + i,
+                                party: 0,
+                                z: Matrix::zeros(8, 8),
+                                produced_at: Instant::now(),
+                                param_version: 0,
+                            });
+                        }
+                    });
+                }
+                let b = Arc::clone(&broker);
+                s.spawn(move || {
+                    for _ in 0..4000 {
+                        let _ = b.take_embedding(0, Duration::from_secs(1));
+                    }
+                });
+            });
+        }));
+    }
+
+    // PS push + aggregate on a 10-layer bottom model.
+    {
+        let spec = MlpSpec::dense(&[250, 64, 64, 64, 64, 64, 64, 64, 64, 32], Activation::Linear);
+        let params = MlpParams::init(&spec, &mut rng);
+        let grad = params.zeros_like();
+        let ps = ParameterServer::new(params, 0.01, PsMode::Sync);
+        results.push(bench("ps_push_grad_10layer", 10, 500, || {
+            ps.push_grad(&grad);
+        }));
+        results.push(bench("ps_aggregate_10layer", 10, 500, || {
+            ps.push_grad(&grad);
+            ps.aggregate();
+        }));
+    }
+
+    // Host-engine bottom forward at B=256 (the compute hot spot).
+    {
+        let spec = SplitModelSpec::build(ModelSize::Small, 250, &[250], 64, 32);
+        let params = SplitParams::init(&spec, &mut rng);
+        let x = Matrix::randn(256, 250, 1.0, &mut rng);
+        results.push(bench("host_bottom_fwd_B256_d250", 3, 50, || {
+            let _ = forward(&spec.passive_bottoms[0], &params.passive[0], &x);
+        }));
+        // Raw GEMM underlying it.
+        let a = Matrix::randn(256, 250, 1.0, &mut rng);
+        let b = Matrix::randn(250, 64, 1.0, &mut rng);
+        results.push(bench("matmul_256x250x64", 3, 200, || {
+            let _ = a.matmul(&b);
+        }));
+        let flat = params.passive[0].flatten();
+        results.push(bench("params_flatten_10layer", 10, 1000, || {
+            let _ = params.passive[0].flatten();
+        }));
+        results.push(bench("params_unflatten_10layer", 10, 1000, || {
+            let _ = MlpParams::unflatten(&spec.passive_bottoms[0], &flat);
+        }));
+    }
+
+    // PJRT path: literal marshal + full active_step (if artifacts exist).
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        if let Ok(svc) = XlaService::spawn(dir.to_str().unwrap(), "synthetic") {
+            let spec = SplitModelSpec::build(ModelSize::Small, 250, &[250], 64, 32);
+            let params = SplitParams::init(&spec, &mut rng);
+            let x_a = Matrix::randn(256, 250, 1.0, &mut rng);
+            let x_p = Matrix::randn(256, 250, 1.0, &mut rng);
+            let y: Vec<f32> = (0..256).map(|i| (i % 2) as f32).collect();
+            results.push(bench("xla_passive_fwd_B256", 2, 20, || {
+                let _ = svc.try_passive_fwd(&params.passive[0], &x_p).unwrap();
+            }));
+            let z = svc.try_passive_fwd(&params.passive[0], &x_p).unwrap();
+            results.push(bench("xla_active_step_B256", 2, 20, || {
+                let _ = svc
+                    .try_active_step(&params.active, &params.top, &x_a, &[z.clone()], &y)
+                    .unwrap();
+            }));
+        }
+    } else {
+        println!("(artifacts missing — skipping PJRT micro-benches; run `make artifacts`)");
+    }
+
+    let mut t = Table::new("Hot-path micro-benchmarks", &["bench", "mean", "p50", "p95"]);
+    for r in &results {
+        println!("{}", r.row());
+        t.row(&[
+            r.name.clone(),
+            format!("{:?}", r.mean),
+            format!("{:?}", r.p50),
+            format!("{:?}", r.p95),
+        ]);
+    }
+    t.save_csv("micro_hotpath.csv");
+}

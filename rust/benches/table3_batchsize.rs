@@ -1,0 +1,40 @@
+//! Table 3: effect of batch size (w_a = w_p = 8, synthetic).
+
+mod common;
+
+use pubsub_vfl::bench_harness::Table;
+use pubsub_vfl::config::Architecture;
+use pubsub_vfl::sim::simulate;
+use pubsub_vfl::train::{run_experiment, sim_config};
+
+fn main() {
+    let sim_n = common::env_usize("PUBSUB_VFL_BENCH_SIM_SAMPLES", 100_000);
+    let mut t = Table::new(
+        "Table 3: effect of batch size (synthetic, w=8)",
+        &["B", "acc%", "time(s)", "cpu%", "wait/ep(s)", "comm(MB)"],
+    );
+    for &b in &[16usize, 32, 64, 128, 256, 512, 1024] {
+        let mut cfg = common::quick_cfg("synthetic", Architecture::PubSub);
+        cfg.train.batch_size = b;
+        cfg.parties.active_workers = 8;
+        cfg.parties.passive_workers = 8;
+        // Real accuracy: equalize the *update count* across batch sizes
+        // (the paper reports each config at its own best schedule).
+        cfg.dataset.samples = cfg.dataset.samples.max(6 * b);
+        cfg.train.epochs = (cfg.train.epochs + b / 32).min(40);
+        let o = run_experiment(&cfg, 0).expect("run");
+        let r = simulate(&sim_config(&cfg, sim_n));
+        t.row(&[
+            format!("{b}"),
+            format!("{:.2}", o.report.metric * 100.0),
+            format!("{:.1}", r.wall_s),
+            format!("{:.2}", r.cpu_util * 100.0),
+            format!("{:.4}", r.wait_per_epoch_s),
+            format!("{:.1}", r.comm_mb),
+        ]);
+    }
+    t.print();
+    t.save_csv("table3_batchsize.csv");
+    println!("paper shape: time/comm minimized at B=256 (U-shape both sides);");
+    println!("tiny batches underutilize, huge batches slow convergence.");
+}

@@ -1,0 +1,47 @@
+//! Table 9: Criteo-1TB scale study. Real training on the criteo-mini
+//! synthetic click-log signature (AUC), simulator extrapolation of the
+//! system metrics to the full 4.5B-sample stream (runtime in hours,
+//! comm in GB) — see DESIGN.md §1 for the substitution.
+
+mod common;
+
+use pubsub_vfl::bench_harness::Table;
+use pubsub_vfl::config::Architecture;
+use pubsub_vfl::sim::simulate;
+use pubsub_vfl::train::{run_experiment, sim_config};
+
+const CRITEO_FULL_SAMPLES: f64 = 4.5e9;
+
+fn main() {
+    let sim_n = common::env_usize("PUBSUB_VFL_BENCH_SIM_SAMPLES", 200_000);
+    let mut t = Table::new(
+        "Table 9: Criteo 1TB scale study (criteo-mini + extrapolation)",
+        &["method", "auc%", "runtime(h, extrap)", "cpu%", "wait/ep(s)", "comm(GB, extrap)"],
+    );
+    for arch in Architecture::ALL {
+        let mut cfg = common::quick_cfg("criteo-mini", arch);
+        cfg.train.batch_size = 64;
+        cfg.train.epochs = cfg.train.epochs.max(8);
+        cfg.train.lr = 0.03;
+        cfg.dataset.samples = cfg.dataset.samples.max(3000);
+        cfg.parties.active_workers = 8;
+        cfg.parties.passive_workers = 10;
+        let o = run_experiment(&cfg, 0).expect("run");
+        let r = simulate(&sim_config(&cfg, sim_n));
+        // Size-linear extrapolation: the cost model is linear in the
+        // number of batches per epoch.
+        let scale = CRITEO_FULL_SAMPLES / sim_n as f64;
+        t.row(&[
+            arch.name().to_string(),
+            format!("{:.2}", o.report.metric * 100.0),
+            format!("{:.1}", r.wall_s * scale / 3600.0),
+            format!("{:.1}", r.cpu_util * 100.0),
+            format!("{:.2}", r.wait_per_epoch_s),
+            format!("{:.0}", r.comm_mb * scale / 1024.0),
+        ]);
+    }
+    t.print();
+    t.save_csv("table9_criteo.csv");
+    println!("paper shape: PubSub ~3x faster than AVFL-PS, ~7x vs VFL, ~91% CPU,");
+    println!("~40% lower comm than AVFL-PS; AUC slightly ahead.");
+}

@@ -1,0 +1,274 @@
+//! Embedding Inversion Attack (EIA) evaluation (§5.2 "Security
+//! Performance", Appendix G, ref. [49]).
+//!
+//! Threat model: the adversary observes the embeddings the passive party
+//! publishes and owns a *shadow dataset* drawn from a similar
+//! distribution. It trains an inversion model mapping `z_p → x_p` and
+//! attacks fresh victims' embeddings. The Attack Success Rate (ASR) is
+//! the fraction of feature coordinates recovered within a tolerance of
+//! the (standardized) ground truth. GDP noise on the embeddings (Eq. 17)
+//! is the defense whose μ-sweep is Fig. 5's ASR panel.
+
+use crate::dp::GaussianMechanism;
+use crate::model::{forward, MlpParams, MlpSpec};
+use crate::tensor::Matrix;
+#[cfg(test)]
+use crate::util::Rng;
+
+/// Ridge-regression inverter: `x̂ = z·W + b`, solved in closed form on the
+/// shadow set (normal equations with L2 regularization).
+pub struct RidgeInverter {
+    pub w: Matrix,
+    pub b: Vec<f32>,
+}
+
+impl RidgeInverter {
+    /// Fit on shadow pairs (z: n×e, x: n×d).
+    pub fn fit(z: &Matrix, x: &Matrix, l2: f32) -> RidgeInverter {
+        assert_eq!(z.rows, x.rows);
+        let n = z.rows as f32;
+        // Center both sides.
+        let zm: Vec<f32> = z.col_sum().iter().map(|s| s / n).collect();
+        let xm: Vec<f32> = x.col_sum().iter().map(|s| s / n).collect();
+        let mut zc = z.clone();
+        for r in 0..zc.rows {
+            for (v, &m) in zc.row_mut(r).iter_mut().zip(zm.iter()) {
+                *v -= m;
+            }
+        }
+        let mut xc = x.clone();
+        for r in 0..xc.rows {
+            for (v, &m) in xc.row_mut(r).iter_mut().zip(xm.iter()) {
+                *v -= m;
+            }
+        }
+        // A = zᵀz + λI (e×e), B = zᵀx (e×d); solve A·W = B by Gauss-Jordan.
+        let e = z.cols;
+        let mut a = zc.matmul_at(&zc);
+        for i in 0..e {
+            *a.at_mut(i, i) += l2;
+        }
+        let bmat = zc.matmul_at(&xc);
+        let w = solve(&mut a, &bmat);
+        // b = xm − zm·W.
+        let mut b = xm.clone();
+        for j in 0..x.cols {
+            let mut acc = 0.0f32;
+            for i in 0..e {
+                acc += zm[i] * w.at(i, j);
+            }
+            b[j] -= acc;
+        }
+        RidgeInverter { w, b }
+    }
+
+    pub fn invert(&self, z: &Matrix) -> Matrix {
+        let mut out = z.matmul(&self.w);
+        out.add_bias(&self.b);
+        out
+    }
+}
+
+/// Gauss-Jordan solve of `A·X = B` (A square, destroyed).
+fn solve(a: &mut Matrix, b: &Matrix) -> Matrix {
+    let n = a.rows;
+    assert_eq!(a.cols, n);
+    assert_eq!(b.rows, n);
+    let mut x = b.clone();
+    for col in 0..n {
+        // Partial pivot.
+        let mut piv = col;
+        for r in col + 1..n {
+            if a.at(r, col).abs() > a.at(piv, col).abs() {
+                piv = r;
+            }
+        }
+        if piv != col {
+            for j in 0..n {
+                let (u, v) = (a.at(col, j), a.at(piv, j));
+                *a.at_mut(col, j) = v;
+                *a.at_mut(piv, j) = u;
+            }
+            for j in 0..x.cols {
+                let (u, v) = (x.at(col, j), x.at(piv, j));
+                *x.at_mut(col, j) = v;
+                *x.at_mut(piv, j) = u;
+            }
+        }
+        let d = a.at(col, col);
+        let d = if d.abs() < 1e-9 { 1e-9f32.copysign(d) } else { d };
+        for j in 0..n {
+            *a.at_mut(col, j) /= d;
+        }
+        for j in 0..x.cols {
+            *x.at_mut(col, j) /= d;
+        }
+        for r in 0..n {
+            if r == col {
+                continue;
+            }
+            let f = a.at(r, col);
+            if f == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                let v = a.at(col, j);
+                *a.at_mut(r, j) -= f * v;
+            }
+            for j in 0..x.cols {
+                let v = x.at(col, j);
+                *x.at_mut(r, j) -= f * v;
+            }
+        }
+    }
+    x
+}
+
+/// EIA evaluation config.
+#[derive(Clone, Debug)]
+pub struct EiaConfig {
+    /// Tolerance (in standardized-feature units) for a coordinate to
+    /// count as recovered.
+    pub tolerance: f32,
+    pub ridge_l2: f32,
+}
+
+impl Default for EiaConfig {
+    fn default() -> Self {
+        EiaConfig { tolerance: 0.5, ridge_l2: 1e-2 }
+    }
+}
+
+/// Result of one attack evaluation.
+#[derive(Clone, Copy, Debug)]
+pub struct EiaResult {
+    /// Fraction of victim feature coordinates within tolerance.
+    pub asr: f64,
+    /// Mean squared reconstruction error.
+    pub mse: f64,
+}
+
+/// Run the full EIA pipeline against a (possibly DP-protected) bottom
+/// model: shadow data → embeddings (+GDP noise) → fit inverter → attack
+/// victim embeddings (+GDP noise) → score.
+pub fn run_eia(
+    bottom: &MlpSpec,
+    params: &MlpParams,
+    shadow_x: &Matrix,
+    victim_x: &Matrix,
+    dp: Option<&mut GaussianMechanism>,
+    cfg: &EiaConfig,
+) -> EiaResult {
+    let mut z_shadow = forward(bottom, params, shadow_x);
+    let mut z_victim = forward(bottom, params, victim_x);
+    if let Some(mech) = dp {
+        mech.perturb(&mut z_shadow);
+        mech.perturb(&mut z_victim);
+    }
+    let inv = RidgeInverter::fit(&z_shadow, shadow_x, cfg.ridge_l2);
+    let recon = inv.invert(&z_victim);
+    score(&recon, victim_x, cfg.tolerance)
+}
+
+/// Score a reconstruction.
+pub fn score(recon: &Matrix, truth: &Matrix, tol: f32) -> EiaResult {
+    assert_eq!(recon.shape(), truth.shape());
+    let n = recon.data.len().max(1);
+    let mut hits = 0usize;
+    let mut se = 0.0f64;
+    for (r, t) in recon.data.iter().zip(truth.data.iter()) {
+        let d = r - t;
+        if d.abs() <= tol {
+            hits += 1;
+        }
+        se += (d as f64) * (d as f64);
+    }
+    EiaResult { asr: hits as f64 / n as f64, mse: se / n as f64 }
+}
+
+/// Chance-level ASR for standardized gaussian features at tolerance τ:
+/// P(|x̂ − x| ≤ τ) when x̂ carries no information ≈ P(|N(0,1)| ≤ τ/√2 …).
+/// Empirically estimated by a mean-predictor baseline.
+pub fn chance_asr(victim_x: &Matrix, tol: f32) -> f64 {
+    let zeros = Matrix::zeros(victim_x.rows, victim_x.cols);
+    score(&zeros, victim_x, tol).asr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Activation, MlpParams};
+
+    fn linearish_bottom(d: usize, e: usize, rng: &mut Rng) -> (MlpSpec, MlpParams) {
+        // A wide-linear bottom is maximally invertible — the worst case
+        // for the defender and a strong signal for the test.
+        let spec = MlpSpec::dense(&[d, e], Activation::Linear);
+        let params = MlpParams::init(&spec, rng);
+        (spec, params)
+    }
+
+    #[test]
+    fn ridge_recovers_linear_map() {
+        let mut rng = Rng::new(1);
+        let (spec, params) = linearish_bottom(6, 12, &mut rng);
+        let shadow = Matrix::randn(400, 6, 1.0, &mut rng);
+        let victim = Matrix::randn(100, 6, 1.0, &mut rng);
+        let r = run_eia(&spec, &params, &shadow, &victim, None, &EiaConfig::default());
+        assert!(r.asr > 0.9, "no-DP ASR should be high: {}", r.asr);
+        assert!(r.mse < 0.1, "mse = {}", r.mse);
+    }
+
+    #[test]
+    fn dp_noise_degrades_attack_monotonically() {
+        let mut rng = Rng::new(2);
+        let (spec, params) = linearish_bottom(6, 12, &mut rng);
+        let shadow = Matrix::randn(400, 6, 1.0, &mut rng);
+        let victim = Matrix::randn(100, 6, 1.0, &mut rng);
+        let cfg = EiaConfig::default();
+        let mut asrs = Vec::new();
+        for &mu in &[0.1f64, 1.0, 10.0] {
+            let mut mech = GaussianMechanism::new(mu, 64, 64, 7);
+            mech.c = 8.0; // stronger per-release noise for the small-batch test regime
+            let r = run_eia(&spec, &params, &shadow, &victim, Some(&mut mech), &cfg);
+            asrs.push(r.asr);
+        }
+        let clean = run_eia(&spec, &params, &shadow, &victim, None, &cfg).asr;
+        assert!(asrs[0] < asrs[2] + 1e-9, "ASR should rise with mu: {asrs:?}");
+        assert!(asrs[0] < clean, "strong DP must beat no DP: {} vs {clean}", asrs[0]);
+        // Strong privacy approaches chance level.
+        let chance = chance_asr(&victim, cfg.tolerance);
+        assert!(asrs[0] < chance + 0.25, "mu=0.1 ASR {} vs chance {}", asrs[0], chance);
+    }
+
+    #[test]
+    fn deep_bottom_is_harder_to_invert_than_linear() {
+        let mut rng = Rng::new(3);
+        let (lin_spec, lin_params) = linearish_bottom(6, 12, &mut rng);
+        let deep_spec = MlpSpec::dense(&[6, 16, 16, 4], Activation::Linear);
+        let deep_params = MlpParams::init(&deep_spec, &mut rng);
+        let shadow = Matrix::randn(400, 6, 1.0, &mut rng);
+        let victim = Matrix::randn(100, 6, 1.0, &mut rng);
+        let cfg = EiaConfig::default();
+        let lin = run_eia(&lin_spec, &lin_params, &shadow, &victim, None, &cfg);
+        let deep = run_eia(&deep_spec, &deep_params, &shadow, &victim, None, &cfg);
+        assert!(deep.asr <= lin.asr + 1e-9, "deep {} vs linear {}", deep.asr, lin.asr);
+    }
+
+    #[test]
+    fn solver_solves_identity() {
+        let mut a = Matrix::from_vec(2, 2, vec![2.0, 0.0, 0.0, 4.0]);
+        let b = Matrix::from_vec(2, 1, vec![2.0, 8.0]);
+        let x = solve(&mut a, &b);
+        assert!((x.at(0, 0) - 1.0).abs() < 1e-5);
+        assert!((x.at(1, 0) - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn score_basics() {
+        let truth = Matrix::from_vec(1, 4, vec![0.0, 1.0, 2.0, 3.0]);
+        let recon = Matrix::from_vec(1, 4, vec![0.1, 1.6, 2.0, -1.0]);
+        let r = score(&recon, &truth, 0.5);
+        assert!((r.asr - 0.5).abs() < 1e-9);
+        assert!(r.mse > 0.0);
+    }
+}

@@ -1,0 +1,532 @@
+//! The four baseline VFL architectures (§5.1), implemented over the same
+//! [`SplitEngine`] as PubSub-VFL so accuracy comparisons isolate the
+//! *coordination semantics*:
+//!
+//! - **VFL** — classic lockstep split learning: one worker pair, strict
+//!   sequential batches, immediate updates (the sync-SGD reference).
+//! - **VFL-PS** — ν worker pairs; each *round* computes ν batches at the
+//!   round-start parameters and applies the mean gradient at a per-round
+//!   synchronous PS barrier (Appendix A scarecrow).
+//! - **AVFL** — one pair, asynchronous exchange: embeddings are computed
+//!   with parameters one step stale and cut-layer gradients land one step
+//!   late (bounded staleness 1).
+//! - **AVFL-PS** — ν pairs with worker-local replicas updated locally all
+//!   epoch; the PS averages replicas once per epoch (local-SGD-style,
+//!   higher staleness than VFL-PS's per-round barrier).
+//!
+//! These run sequentially and deterministically given the seed — the
+//! wall-clock system metrics for baselines come from `sim/`; what these
+//! loops establish is the *accuracy* rows of Tables 1, 4 and 7.
+
+use crate::config::{Architecture, ExperimentConfig};
+use crate::coordinator::session::{evaluate, reached, SessionResult};
+use crate::data::{BatchPlan, VerticalDataset};
+use crate::metrics::Metrics;
+use crate::model::{MlpParams, SplitEngine, SplitModelSpec, SplitParams};
+use crate::tensor::Matrix;
+use crate::util::{Rng, Stopwatch};
+use std::sync::Arc;
+
+/// Train one of the four baselines.
+pub fn train_baseline(
+    arch: Architecture,
+    engine: Arc<dyn SplitEngine>,
+    spec: &SplitModelSpec,
+    train: &VerticalDataset,
+    test: &VerticalDataset,
+    cfg: &ExperimentConfig,
+    metrics: Arc<Metrics>,
+) -> SessionResult {
+    match arch {
+        Architecture::Vfl => train_vfl(engine, spec, train, test, cfg, metrics),
+        Architecture::VflPs => train_vfl_ps(engine, spec, train, test, cfg, metrics),
+        Architecture::Avfl => train_avfl(engine, spec, train, test, cfg, metrics),
+        Architecture::AvflPs => train_avfl_ps(engine, spec, train, test, cfg, metrics),
+        Architecture::PubSub => panic!("use coordinator::train_pubsub for PubSub-VFL"),
+    }
+}
+
+struct LoopState<'a> {
+    engine: Arc<dyn SplitEngine>,
+    train: &'a VerticalDataset,
+    test: &'a VerticalDataset,
+    cfg: &'a ExperimentConfig,
+    metrics: Arc<Metrics>,
+    rng: Rng,
+    loss_curve: Vec<(f64, f64)>,
+    metric_curve: Vec<(f64, f64)>,
+}
+
+impl<'a> LoopState<'a> {
+    fn new(
+        engine: Arc<dyn SplitEngine>,
+        train: &'a VerticalDataset,
+        test: &'a VerticalDataset,
+        cfg: &'a ExperimentConfig,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        LoopState {
+            engine,
+            train,
+            test,
+            cfg,
+            metrics,
+            rng: Rng::new(cfg.seed),
+            loss_curve: Vec::new(),
+            metric_curve: Vec::new(),
+        }
+    }
+
+    fn batch_inputs(&self, rows: &[usize]) -> (Matrix, Vec<Matrix>, Vec<f32>) {
+        let x_a = self.train.active.x.take_rows(rows);
+        let x_p: Vec<Matrix> = self
+            .train
+            .passive
+            .iter()
+            .map(|p| p.x.take_rows(rows))
+            .collect();
+        let y: Vec<f32> = rows.iter().map(|&r| self.train.y[r]).collect();
+        (x_a, x_p, y)
+    }
+
+    /// Record end-of-epoch stats; returns true when the target is hit.
+    fn epoch_end(
+        &mut self,
+        epoch: usize,
+        losses: &[f64],
+        params: &SplitParams,
+        comm_batches: usize,
+    ) -> (f64, bool) {
+        let b = self.cfg.train.batch_size;
+        let mean_loss = if losses.is_empty() {
+            f64::NAN
+        } else {
+            losses.iter().sum::<f64>() / losses.len() as f64
+        };
+        self.loss_curve.push((epoch as f64, mean_loss));
+        self.metrics.push_point("train_loss", epoch as f64, mean_loss);
+        // Comm accounting: one embedding + one gradient per batch per
+        // passive party.
+        let payload = (b * self.train.passive.len() * (self.cfg.embed_dim * 4 + 16) * 2) as u64;
+        self.metrics.add_comm(comm_batches as u64 * payload / self.train.passive.len().max(1) as u64
+            * self.train.passive.len() as u64);
+        let metric = evaluate(self.engine.as_ref(), params, self.test, b, self.train.task);
+        self.metric_curve.push((epoch as f64, metric));
+        self.metrics.push_point("eval_metric", epoch as f64, metric);
+        (metric, reached(self.train.task, metric, self.cfg.train.target_accuracy))
+    }
+
+    fn result(
+        self,
+        params: SplitParams,
+        epochs_run: usize,
+        reached_target: bool,
+        sw: Stopwatch,
+    ) -> SessionResult {
+        let final_metric = evaluate(
+            self.engine.as_ref(),
+            &params,
+            self.test,
+            self.cfg.train.batch_size,
+            self.train.task,
+        );
+        SessionResult {
+            params,
+            loss_curve: self.loss_curve,
+            metric_curve: self.metric_curve,
+            final_metric,
+            epochs_run,
+            reached_target,
+            wall: sw.elapsed(),
+            retried_batches: 0,
+        }
+    }
+}
+
+/// Classic lockstep VFL.
+fn train_vfl(
+    engine: Arc<dyn SplitEngine>,
+    spec: &SplitModelSpec,
+    train: &VerticalDataset,
+    test: &VerticalDataset,
+    cfg: &ExperimentConfig,
+    metrics: Arc<Metrics>,
+) -> SessionResult {
+    let mut st = LoopState::new(Arc::clone(&engine), train, test, cfg, metrics);
+    let mut params = SplitParams::init(spec, &mut st.rng);
+    let lr = cfg.train.lr as f32;
+    let sw = Stopwatch::start();
+    let mut reached_target = false;
+    let mut epochs_run = 0;
+    for epoch in 0..cfg.train.epochs {
+        epochs_run = epoch + 1;
+        let plan = BatchPlan::for_epoch(train.len(), cfg.train.batch_size, epoch as u64, &mut st.rng);
+        let mut losses = Vec::new();
+        let mut n = 0usize;
+        for a in plan.full_batches() {
+            let (x_a, x_p, y) = st.batch_inputs(&a.rows);
+            let zs: Vec<Matrix> = (0..train.passive.len())
+                .map(|p| engine.passive_fwd(p, &params.passive[p], &x_p[p]))
+                .collect();
+            let mut out = engine.active_step(&params.active, &params.top, &x_a, &zs, &y);
+            let clip = cfg.train.grad_clip as f32;
+            for p in 0..train.passive.len() {
+                let mut g = engine.passive_bwd(p, &params.passive[p], &x_p[p], &out.grad_z[p]);
+                g.clip_norm(clip);
+                params.passive[p].sgd_step(&g, lr);
+            }
+            out.grad_active.clip_norm(clip);
+            out.grad_top.clip_norm(clip);
+            params.active.sgd_step(&out.grad_active, lr);
+            params.top.sgd_step(&out.grad_top, lr);
+            losses.push(out.loss);
+            n += 1;
+        }
+        let (_, hit) = st.epoch_end(epoch, &losses, &params, n);
+        if hit {
+            reached_target = true;
+            break;
+        }
+    }
+    st.result(params, epochs_run, reached_target, sw)
+}
+
+/// VFL with synchronous PS: per-round mean-gradient barrier.
+fn train_vfl_ps(
+    engine: Arc<dyn SplitEngine>,
+    spec: &SplitModelSpec,
+    train: &VerticalDataset,
+    test: &VerticalDataset,
+    cfg: &ExperimentConfig,
+    metrics: Arc<Metrics>,
+) -> SessionResult {
+    let pairs = cfg.parties.active_workers.min(cfg.parties.passive_workers).max(1);
+    let mut st = LoopState::new(Arc::clone(&engine), train, test, cfg, metrics);
+    let mut params = SplitParams::init(spec, &mut st.rng);
+    let lr = cfg.train.lr as f32;
+    let sw = Stopwatch::start();
+    let mut reached_target = false;
+    let mut epochs_run = 0;
+    for epoch in 0..cfg.train.epochs {
+        epochs_run = epoch + 1;
+        let plan = BatchPlan::for_epoch(train.len(), cfg.train.batch_size, epoch as u64, &mut st.rng);
+        let batches: Vec<_> = plan.full_batches().cloned().collect();
+        let mut losses = Vec::new();
+        for round in batches.chunks(pairs) {
+            // All pairs compute at the round-start parameters.
+            let mut acc_a: Option<MlpParams> = None;
+            let mut acc_t: Option<MlpParams> = None;
+            let mut acc_p: Vec<Option<MlpParams>> = vec![None; train.passive.len()];
+            for a in round {
+                let (x_a, x_p, y) = st.batch_inputs(&a.rows);
+                let zs: Vec<Matrix> = (0..train.passive.len())
+                    .map(|p| engine.passive_fwd(p, &params.passive[p], &x_p[p]))
+                    .collect();
+                let mut out = engine.active_step(&params.active, &params.top, &x_a, &zs, &y);
+                let clip = cfg.train.grad_clip as f32;
+                for p in 0..train.passive.len() {
+                    let mut g = engine.passive_bwd(p, &params.passive[p], &x_p[p], &out.grad_z[p]);
+                    g.clip_norm(clip);
+                    accumulate(&mut acc_p[p], g);
+                }
+                out.grad_active.clip_norm(clip);
+                out.grad_top.clip_norm(clip);
+                accumulate(&mut acc_a, out.grad_active);
+                accumulate(&mut acc_t, out.grad_top);
+                losses.push(out.loss);
+            }
+            // Synchronous barrier: apply mean gradients.
+            let scale = 1.0 / round.len() as f32;
+            apply_mean(&mut params.active, acc_a, scale, lr);
+            apply_mean(&mut params.top, acc_t, scale, lr);
+            for (p, acc) in acc_p.into_iter().enumerate() {
+                apply_mean(&mut params.passive[p], acc, scale, lr);
+            }
+        }
+        let n = batches.len();
+        let (_, hit) = st.epoch_end(epoch, &losses, &params, n);
+        if hit {
+            reached_target = true;
+            break;
+        }
+    }
+    st.result(params, epochs_run, reached_target, sw)
+}
+
+/// AVFL: bounded-staleness asynchronous exchange (staleness 1 both ways).
+fn train_avfl(
+    engine: Arc<dyn SplitEngine>,
+    spec: &SplitModelSpec,
+    train: &VerticalDataset,
+    test: &VerticalDataset,
+    cfg: &ExperimentConfig,
+    metrics: Arc<Metrics>,
+) -> SessionResult {
+    let mut st = LoopState::new(Arc::clone(&engine), train, test, cfg, metrics);
+    let mut params = SplitParams::init(spec, &mut st.rng);
+    let lr = cfg.train.lr as f32;
+    let sw = Stopwatch::start();
+    let k = train.passive.len();
+    let mut reached_target = false;
+    let mut epochs_run = 0;
+    // Stale passive params used to produce embeddings (one step behind).
+    let mut stale_passive: Vec<MlpParams> = params.passive.clone();
+    // Deferred cut-layer gradients (applied one step late).
+    let mut pending: Option<(Vec<usize>, Vec<Matrix>)> = None;
+    for epoch in 0..cfg.train.epochs {
+        epochs_run = epoch + 1;
+        let plan = BatchPlan::for_epoch(train.len(), cfg.train.batch_size, epoch as u64, &mut st.rng);
+        let mut losses = Vec::new();
+        let mut n = 0usize;
+        for a in plan.full_batches() {
+            let (x_a, x_p, y) = st.batch_inputs(&a.rows);
+            // Embeddings from *stale* passive params (async pipeline).
+            let zs: Vec<Matrix> = (0..k)
+                .map(|p| engine.passive_fwd(p, &stale_passive[p], &x_p[p]))
+                .collect();
+            let mut out = engine.active_step(&params.active, &params.top, &x_a, &zs, &y);
+            let clip = cfg.train.grad_clip as f32;
+            out.grad_active.clip_norm(clip);
+            out.grad_top.clip_norm(clip);
+            params.active.sgd_step(&out.grad_active, lr);
+            params.top.sgd_step(&out.grad_top, lr);
+            // Apply the *previous* batch's passive gradient now.
+            if let Some((rows, gzs)) = pending.take() {
+                for p in 0..k {
+                    let x_prev = train.passive[p].x.take_rows(&rows);
+                    let mut g = engine.passive_bwd(p, &params.passive[p], &x_prev, &gzs[p]);
+                    g.clip_norm(clip);
+                    params.passive[p].sgd_step(&g, lr);
+                }
+            }
+            pending = Some((a.rows.clone(), out.grad_z));
+            // Passive's embedding params refresh lags one step.
+            stale_passive = params.passive.clone();
+            losses.push(out.loss);
+            n += 1;
+        }
+        let (_, hit) = st.epoch_end(epoch, &losses, &params, n);
+        if hit {
+            reached_target = true;
+            break;
+        }
+    }
+    st.result(params, epochs_run, reached_target, sw)
+}
+
+/// AVFL-PS: ν worker-local replicas, locally updated all epoch, averaged
+/// at a per-epoch PS barrier (local SGD).
+fn train_avfl_ps(
+    engine: Arc<dyn SplitEngine>,
+    spec: &SplitModelSpec,
+    train: &VerticalDataset,
+    test: &VerticalDataset,
+    cfg: &ExperimentConfig,
+    metrics: Arc<Metrics>,
+) -> SessionResult {
+    let pairs = cfg.parties.active_workers.min(cfg.parties.passive_workers).max(1);
+    let mut st = LoopState::new(Arc::clone(&engine), train, test, cfg, metrics);
+    let init = SplitParams::init(spec, &mut st.rng);
+    let lr = cfg.train.lr as f32;
+    let sw = Stopwatch::start();
+    let k = train.passive.len();
+    let mut replicas: Vec<SplitParams> = vec![init; pairs];
+    let mut reached_target = false;
+    let mut epochs_run = 0;
+    let mut mean = replicas[0].clone();
+    for epoch in 0..cfg.train.epochs {
+        epochs_run = epoch + 1;
+        let plan = BatchPlan::for_epoch(train.len(), cfg.train.batch_size, epoch as u64, &mut st.rng);
+        let batches: Vec<_> = plan.full_batches().cloned().collect();
+        let mut losses = Vec::new();
+        for (i, a) in batches.iter().enumerate() {
+            let r = &mut replicas[i % pairs];
+            let (x_a, x_p, y) = st.batch_inputs(&a.rows);
+            let zs: Vec<Matrix> = (0..k)
+                .map(|p| engine.passive_fwd(p, &r.passive[p], &x_p[p]))
+                .collect();
+            let mut out = engine.active_step(&r.active, &r.top, &x_a, &zs, &y);
+            let clip = cfg.train.grad_clip as f32;
+            for p in 0..k {
+                let mut g = engine.passive_bwd(p, &r.passive[p], &x_p[p], &out.grad_z[p]);
+                g.clip_norm(clip);
+                r.passive[p].sgd_step(&g, lr);
+            }
+            out.grad_active.clip_norm(clip);
+            out.grad_top.clip_norm(clip);
+            r.active.sgd_step(&out.grad_active, lr);
+            r.top.sgd_step(&out.grad_top, lr);
+            losses.push(out.loss);
+        }
+        // Per-epoch PS barrier: average replicas, broadcast.
+        mean = average_split(&replicas);
+        for r in replicas.iter_mut() {
+            *r = mean.clone();
+        }
+        let n = batches.len();
+        let (_, hit) = st.epoch_end(epoch, &losses, &mean, n);
+        if hit {
+            reached_target = true;
+            break;
+        }
+    }
+    st.result(mean, epochs_run, reached_target, sw)
+}
+
+fn accumulate(acc: &mut Option<MlpParams>, g: MlpParams) {
+    match acc {
+        None => *acc = Some(g),
+        Some(a) => a.axpy(1.0, &g),
+    }
+}
+
+fn apply_mean(params: &mut MlpParams, acc: Option<MlpParams>, scale: f32, lr: f32) {
+    if let Some(mut a) = acc {
+        a.scale(scale);
+        params.sgd_step(&a, lr);
+    }
+}
+
+fn average_split(replicas: &[SplitParams]) -> SplitParams {
+    let mut mean = replicas[0].clone();
+    for r in &replicas[1..] {
+        mean.active.axpy(1.0, &r.active);
+        mean.top.axpy(1.0, &r.top);
+        for (m, p) in mean.passive.iter_mut().zip(r.passive.iter()) {
+            m.axpy(1.0, p);
+        }
+    }
+    let s = 1.0 / replicas.len() as f32;
+    mean.active.scale(s);
+    mean.top.scale(s);
+    for m in mean.passive.iter_mut() {
+        m.scale(s);
+    }
+    mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSize;
+    use crate::data::{make_classification, ClassificationOpts, Task};
+    use crate::model::HostSplitModel;
+
+    fn setup() -> (Arc<HostSplitModel>, SplitModelSpec, VerticalDataset, VerticalDataset, ExperimentConfig)
+    {
+        let mut rng = Rng::new(5);
+        let ds = make_classification(
+            &ClassificationOpts {
+                samples: 320,
+                features: 12,
+                informative: 8,
+                redundant: 2,
+                class_sep: 1.5,
+                flip_y: 0.0,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        let (tr, te) = ds.split(0.75);
+        let vtr = VerticalDataset::split_two(&tr, 6);
+        let vte = VerticalDataset::split_two(&te, 6);
+        let spec = SplitModelSpec::build(ModelSize::Small, 6, &[6], 16, 8);
+        let engine = Arc::new(HostSplitModel::new(spec.clone(), Task::BinaryClassification));
+        let mut cfg = ExperimentConfig::default();
+        cfg.train.batch_size = 32;
+        cfg.train.epochs = 5;
+        cfg.train.lr = 0.05;
+        cfg.train.target_accuracy = 2.0; // unreachable: run all epochs
+        cfg.parties.active_workers = 3;
+        cfg.parties.passive_workers = 3;
+        (engine, spec, vtr, vte, cfg)
+    }
+
+    #[test]
+    fn all_baselines_learn() {
+        let (engine, spec, tr, te, cfg) = setup();
+        for arch in [
+            Architecture::Vfl,
+            Architecture::VflPs,
+            Architecture::Avfl,
+            Architecture::AvflPs,
+        ] {
+            let m = Arc::new(Metrics::new());
+            let r = train_baseline(arch, engine.clone(), &spec, &tr, &te, &cfg, m);
+            assert!(
+                r.final_metric > 0.75,
+                "{arch}: AUC = {}",
+                r.final_metric
+            );
+            assert!(
+                r.loss_curve.last().unwrap().1 < r.loss_curve[0].1,
+                "{arch}: loss did not decrease"
+            );
+        }
+    }
+
+    #[test]
+    fn baselines_are_deterministic() {
+        let (engine, spec, tr, te, cfg) = setup();
+        let a = train_baseline(
+            Architecture::VflPs,
+            engine.clone(),
+            &spec,
+            &tr,
+            &te,
+            &cfg,
+            Arc::new(Metrics::new()),
+        );
+        let b = train_baseline(
+            Architecture::VflPs,
+            engine,
+            &spec,
+            &tr,
+            &te,
+            &cfg,
+            Arc::new(Metrics::new()),
+        );
+        assert_eq!(a.final_metric, b.final_metric);
+        assert_eq!(a.loss_curve, b.loss_curve);
+    }
+
+    #[test]
+    fn sync_baseline_at_least_matches_async_accuracy() {
+        // Staleness should not *help* on this easy, noise-free problem.
+        let (engine, spec, tr, te, cfg) = setup();
+        let sync = train_baseline(
+            Architecture::Vfl,
+            engine.clone(),
+            &spec,
+            &tr,
+            &te,
+            &cfg,
+            Arc::new(Metrics::new()),
+        );
+        let async_ = train_baseline(
+            Architecture::Avfl,
+            engine,
+            &spec,
+            &tr,
+            &te,
+            &cfg,
+            Arc::new(Metrics::new()),
+        );
+        assert!(sync.final_metric >= async_.final_metric - 0.05);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pubsub_rejected_here() {
+        let (engine, spec, tr, te, cfg) = setup();
+        let _ = train_baseline(
+            Architecture::PubSub,
+            engine,
+            &spec,
+            &tr,
+            &te,
+            &cfg,
+            Arc::new(Metrics::new()),
+        );
+    }
+}

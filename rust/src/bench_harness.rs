@@ -1,0 +1,158 @@
+//! Micro/macro benchmark harness (criterion is not in the vendored crate
+//! set): warmup + timed iterations with mean/p50/p95 reporting, plus the
+//! table printer shared by every `rust/benches/*` target.
+
+use crate::util::{percentile, Stopwatch};
+use std::time::Duration;
+
+/// Timing result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl BenchStats {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<40} {:>8} it  mean {:>12?}  p50 {:>12?}  p95 {:>12?}  min {:>12?}",
+            self.name, self.iters, self.mean, self.p50, self.p95, self.min
+        )
+    }
+
+    /// Mean throughput given a per-iteration work unit count.
+    pub fn per_second(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+/// Time `f` with warmup; chooses iteration count so total time ≈ budget.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let sw = Stopwatch::start();
+        f();
+        samples.push(sw.elapsed());
+    }
+    let secs: Vec<f64> = samples.iter().map(|d| d.as_secs_f64()).collect();
+    let mean = secs.iter().sum::<f64>() / secs.len() as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean: Duration::from_secs_f64(mean),
+        p50: Duration::from_secs_f64(percentile(&secs, 50.0)),
+        p95: Duration::from_secs_f64(percentile(&secs, 95.0)),
+        min: Duration::from_secs_f64(secs.iter().cloned().fold(f64::INFINITY, f64::min)),
+    }
+}
+
+/// Simple fixed-width table printer for paper-style outputs.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        self.row(&cells.iter().map(|c| format!("{c}")).collect::<Vec<_>>());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n=== {} ===\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i] + 2))
+                .collect::<String>()
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().map(|w| w + 2).sum::<usize>()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+
+    /// Also dump to CSV under `target/bench-tables/`.
+    pub fn save_csv(&self, file: &str) {
+        let dir = std::path::Path::new("target/bench-tables");
+        let _ = std::fs::create_dir_all(dir);
+        let mut s = self.header.join(",");
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        let _ = std::fs::write(dir.join(file), s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let s = bench("noop-ish", 1, 10, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(s.iters, 10);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95);
+        assert!(s.per_second(1000.0) > 0.0);
+        assert!(s.row().contains("noop-ish"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["method", "metric"]);
+        t.row(&["PubSub-VFL".into(), "92.87".into()]);
+        t.row(&["VFL".into(), "91.27".into()]);
+        let r = t.render();
+        assert!(r.contains("=== Demo ==="));
+        assert!(r.contains("PubSub-VFL"));
+        assert!(r.lines().count() >= 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

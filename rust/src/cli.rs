@@ -1,0 +1,325 @@
+//! Command-line interface (clap is not in the vendored crate set).
+//!
+//! Subcommands:
+//!   train     — run one experiment (architecture from --arch or config)
+//!   compare   — run all five architectures and print the comparison row
+//!   plan      — run the Algorithm 2 planner for a system profile
+//!   profile   — fit the local Table 8 cost constants (Fig. 8)
+//!   simulate  — project testbed system metrics for a configuration
+//!   attack    — run the EIA security evaluation across privacy budgets
+//!   quickcheck— fast self-test of the full stack
+
+use crate::attack::{chance_asr, run_eia, EiaConfig};
+use crate::config::{Architecture, EngineKind, ExperimentConfig, ModelSize};
+use crate::data::Task;
+use crate::dp::GaussianMechanism;
+use crate::metrics::RunReport;
+use crate::model::{MlpParams, SplitModelSpec};
+use crate::planner::{self, CostConstants, CostModel, MemoryModel, PlanSpace};
+use crate::profiler::{profile_host, ProfileOpts};
+use crate::sim::simulate;
+use crate::tensor::Matrix;
+use crate::train::{paper_row, run_experiment, sim_config, DEFAULT_MAX_SAMPLES};
+use crate::util::Rng;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// Parsed flags: `--key value` pairs + positional args.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(key) = tok.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    a.flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    a.flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                a.positional.push(tok.clone());
+                i += 1;
+            }
+        }
+        a
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+}
+
+/// Build an ExperimentConfig from a config file + flag overrides.
+pub fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_path(path).map_err(|e| anyhow!("{e}"))?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(a) = args.get("arch") {
+        cfg.arch = Architecture::parse(a).ok_or_else(|| anyhow!("unknown arch '{a}'"))?;
+    }
+    if let Some(d) = args.get("dataset") {
+        cfg.dataset.name = d.to_string();
+    }
+    if let Some(e) = args.get("engine") {
+        cfg.engine = EngineKind::parse(e).ok_or_else(|| anyhow!("unknown engine '{e}'"))?;
+    }
+    if let Some(n) = args.get("name") {
+        cfg.name = n.to_string();
+    }
+    if let Some(s) = args.get("size") {
+        cfg.model_size = ModelSize::parse(s).ok_or_else(|| anyhow!("unknown size '{s}'"))?;
+    }
+    cfg.seed = args.get_usize("seed", cfg.seed as usize) as u64;
+    cfg.train.batch_size = args.get_usize("batch", cfg.train.batch_size);
+    cfg.train.epochs = args.get_usize("epochs", cfg.train.epochs);
+    cfg.train.lr = args.get_f64("lr", cfg.train.lr);
+    cfg.parties.active_workers = args.get_usize("wa", cfg.parties.active_workers);
+    cfg.parties.passive_workers = args.get_usize("wp", cfg.parties.passive_workers);
+    cfg.parties.active_cores = args.get_usize("ca", cfg.parties.active_cores);
+    cfg.parties.passive_cores = args.get_usize("cp", cfg.parties.passive_cores);
+    if let Some(mu) = args.get("mu") {
+        cfg.dp.enabled = true;
+        cfg.dp.mu = mu.parse().unwrap_or(f64::INFINITY);
+    }
+    cfg.validate().map_err(|e| anyhow!("{e}"))?;
+    Ok(cfg)
+}
+
+const USAGE: &str = "\
+pubsub-vfl — PubSub-VFL reproduction (NeurIPS 2025)
+
+USAGE:
+  pubsub-vfl <COMMAND> [--flags]
+
+COMMANDS:
+  train       run one experiment            [--arch pubsub --dataset bank --engine host|xla
+                                             --batch N --epochs N --lr F --mu F --config file.toml]
+  compare     all five architectures        [--dataset synthetic --samples N]
+  plan        Algorithm 2 planner           [--ca N --cp N]
+  profile     fit local Table 8 constants
+  simulate    project testbed metrics       [--arch pubsub --ca N --cp N]
+  attack      EIA security sweep (Fig. 5)
+  quickcheck  fast full-stack self-test
+";
+
+/// CLI entry (returns process exit code).
+pub fn run(argv: &[String]) -> Result<i32> {
+    let args = Args::parse(argv);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "compare" => cmd_compare(&args),
+        "plan" => cmd_plan(&args),
+        "profile" => cmd_profile(&args),
+        "simulate" => cmd_simulate(&args),
+        "attack" => cmd_attack(&args),
+        "quickcheck" => cmd_quickcheck(&args),
+        _ => {
+            println!("{USAGE}");
+            Ok(0)
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<i32> {
+    let cfg = config_from_args(args)?;
+    let max = args.get_usize("samples", DEFAULT_MAX_SAMPLES);
+    println!(
+        "training {} on '{}' ({} engine, B={}, {} epochs)...",
+        cfg.arch, cfg.dataset.name, if cfg.engine == EngineKind::Xla { "xla" } else { "host" },
+        cfg.train.batch_size, cfg.train.epochs
+    );
+    let o = run_experiment(&cfg, max)?;
+    println!("{}", RunReport::header());
+    println!("{}   <- measured on this box", o.report.row());
+    println!("{}   <- projected testbed (simulator)", paper_row(&o).row());
+    for (e, l) in &o.session.loss_curve {
+        println!("  epoch {e:>3}: loss {l:.5}");
+    }
+    Ok(0)
+}
+
+fn cmd_compare(args: &Args) -> Result<i32> {
+    let max = args.get_usize("samples", 4000);
+    println!("{}", RunReport::header());
+    for arch in Architecture::ALL {
+        let mut cfg = config_from_args(args)?;
+        cfg.arch = arch;
+        let o = run_experiment(&cfg, max)?;
+        println!("{}", paper_row(&o).row());
+    }
+    Ok(0)
+}
+
+fn cmd_plan(args: &Args) -> Result<i32> {
+    let c_a = args.get_usize("ca", 32);
+    let c_p = args.get_usize("cp", 32);
+    let cost = CostModel {
+        consts: CostConstants::balanced_default(),
+        c_a,
+        c_p,
+        emb_bytes_per_sample: 144.0,
+        grad_bytes_per_sample: 144.0,
+        bandwidth_bps: 125e6,
+    };
+    let r = planner::solve(&cost, &MemoryModel::default_profile(), &PlanSpace::default())
+        .ok_or_else(|| anyhow!("no feasible plan"))?;
+    println!(
+        "plan for C_a={c_a}, C_p={c_p}:  w_a={}, w_p={}, B={}  (cost {:.4}s/iter, imbalance {:.2}%)",
+        r.best.w_a,
+        r.best.w_p,
+        r.best.batch_size,
+        r.best.cost,
+        r.best.imbalance * 100.0
+    );
+    println!("B_max from memory model: {:.0}", r.b_max);
+    Ok(0)
+}
+
+fn cmd_profile(_args: &Args) -> Result<i32> {
+    let spec = SplitModelSpec::build(ModelSize::Small, 250, &[250], 64, 32);
+    let report = profile_host(&spec, Task::BinaryClassification, &ProfileOpts::default(), 42);
+    println!("{}", planner::table8_report(&report.fit));
+    Ok(0)
+}
+
+fn cmd_simulate(args: &Args) -> Result<i32> {
+    let mut cfg = config_from_args(args)?;
+    if let Some(a) = args.get("arch") {
+        cfg.arch = Architecture::parse(a).unwrap();
+    }
+    let sc = sim_config(&cfg, args.get_usize("samples", 100_000));
+    let r = simulate(&sc);
+    println!(
+        "{}: time {:.2}s  cpu {:.2}%  wait/epoch {:.4}s  comm {:.2}MB  epochs {}  retried {}",
+        r.arch,
+        r.wall_s,
+        r.cpu_util * 100.0,
+        r.wait_per_epoch_s,
+        r.comm_mb,
+        r.epochs,
+        r.batches_retried
+    );
+    Ok(0)
+}
+
+fn cmd_attack(args: &Args) -> Result<i32> {
+    let mut rng = Rng::new(args.get_usize("seed", 42) as u64);
+    let spec = SplitModelSpec::build(ModelSize::Small, 24, &[24], 32, 16);
+    let bottom = &spec.passive_bottoms[0];
+    let params = MlpParams::init(bottom, &mut rng);
+    let shadow = Matrix::randn(600, 24, 1.0, &mut rng);
+    let victim = Matrix::randn(200, 24, 1.0, &mut rng);
+    let cfg = EiaConfig::default();
+    println!("EIA against passive bottom model (ASR, lower = safer):");
+    let clean = run_eia(bottom, &params, &shadow, &victim, None, &cfg);
+    println!("  mu=inf (no DP): ASR {:.3}  mse {:.4}", clean.asr, clean.mse);
+    for mu in [10.0, 8.0, 4.0, 2.0, 1.0, 0.5, 0.1] {
+        let mut mech = GaussianMechanism::new(mu, 64, 64, 7);
+        mech.c = 8.0;
+        let r = run_eia(bottom, &params, &shadow, &victim, Some(&mut mech), &cfg);
+        println!("  mu={mu:<4}: ASR {:.3}  mse {:.4}", r.asr, r.mse);
+    }
+    println!("  chance level: {:.3}", chance_asr(&victim, cfg.tolerance));
+    Ok(0)
+}
+
+fn cmd_quickcheck(args: &Args) -> Result<i32> {
+    let mut cfg = config_from_args(args)?;
+    cfg.dataset.name = "bank".into();
+    cfg.dataset.samples = 600;
+    cfg.train.batch_size = 32;
+    cfg.train.epochs = 3;
+    cfg.train.lr = 0.05;
+    cfg.train.target_accuracy = 2.0;
+    cfg.hidden = 16;
+    cfg.embed_dim = 8;
+    cfg.parties.active_workers = 2;
+    cfg.parties.passive_workers = 2;
+    for arch in Architecture::ALL {
+        cfg.arch = arch;
+        let o = run_experiment(&cfg, 0)?;
+        let ok = o.report.metric > 0.6;
+        println!(
+            "{:<12} auc={:.4} epochs={} {}",
+            arch.name(),
+            o.report.metric,
+            o.report.epochs,
+            if ok { "OK" } else { "FAIL" }
+        );
+        if !ok {
+            return Ok(1);
+        }
+    }
+    println!("quickcheck OK");
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parse_flags_and_positionals() {
+        let a = Args::parse(&argv("train --arch avfl --batch 64 --verbose"));
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get("arch"), Some("avfl"));
+        assert_eq!(a.get_usize("batch", 0), 64);
+        assert_eq!(a.get("verbose"), Some("true"));
+        assert_eq!(a.get_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn config_from_args_overrides() {
+        let a = Args::parse(&argv("train --arch vfl-ps --batch 128 --mu 2.0 --wa 4"));
+        let cfg = config_from_args(&a).unwrap();
+        assert_eq!(cfg.arch, Architecture::VflPs);
+        assert_eq!(cfg.train.batch_size, 128);
+        assert!(cfg.dp.enabled);
+        assert_eq!(cfg.dp.mu, 2.0);
+        assert_eq!(cfg.parties.active_workers, 4);
+    }
+
+    #[test]
+    fn bad_arch_rejected() {
+        let a = Args::parse(&argv("train --arch ring"));
+        assert!(config_from_args(&a).is_err());
+    }
+
+    #[test]
+    fn help_runs() {
+        assert_eq!(run(&argv("help")).unwrap(), 0);
+    }
+
+    #[test]
+    fn plan_command_runs() {
+        assert_eq!(run(&argv("plan --ca 50 --cp 14")).unwrap(), 0);
+    }
+
+    #[test]
+    fn simulate_command_runs() {
+        assert_eq!(run(&argv("simulate --arch pubsub --samples 10000")).unwrap(), 0);
+    }
+}

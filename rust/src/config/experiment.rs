@@ -1,0 +1,468 @@
+//! Typed experiment configuration.
+//!
+//! Every CLI subcommand, example, and bench constructs (or loads) an
+//! [`ExperimentConfig`]; it captures exactly the knobs the paper sweeps:
+//! architecture, dataset signature, model size, per-party cores/workers,
+//! batch size, the Pub/Sub channel parameters (p, q, T_ddl), the
+//! semi-async interval ΔT0 (Eq. 5), and the GDP privacy budget μ.
+
+use super::toml::{TomlDoc, TomlError};
+use std::fmt;
+
+/// Which of the five evaluated system architectures drives training.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Architecture {
+    /// Classic lockstep two-party split learning (one worker pair).
+    Vfl,
+    /// Parameter-server data parallelism with synchronous pairing (App. A).
+    VflPs,
+    /// Asynchronous inter-party exchange, no PS.
+    Avfl,
+    /// Asynchronous inter-party exchange + intra-party synchronous PS.
+    AvflPs,
+    /// The paper's contribution: Pub/Sub channels + semi-async PS.
+    PubSub,
+}
+
+impl Architecture {
+    pub const ALL: [Architecture; 5] = [
+        Architecture::Vfl,
+        Architecture::VflPs,
+        Architecture::Avfl,
+        Architecture::AvflPs,
+        Architecture::PubSub,
+    ];
+
+    pub fn parse(s: &str) -> Option<Architecture> {
+        match s.to_ascii_lowercase().as_str() {
+            "vfl" => Some(Architecture::Vfl),
+            "vfl-ps" | "vfl_ps" | "vflps" => Some(Architecture::VflPs),
+            "avfl" => Some(Architecture::Avfl),
+            "avfl-ps" | "avfl_ps" | "avflps" => Some(Architecture::AvflPs),
+            "pubsub" | "pubsub-vfl" | "pubsubvfl" | "ours" => Some(Architecture::PubSub),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Architecture::Vfl => "VFL",
+            Architecture::VflPs => "VFL-PS",
+            Architecture::Avfl => "AVFL",
+            Architecture::AvflPs => "AVFL-PS",
+            Architecture::PubSub => "PubSub-VFL",
+        }
+    }
+
+    /// Does this architecture run a parameter server inside each party?
+    pub fn has_ps(&self) -> bool {
+        matches!(self, Architecture::VflPs | Architecture::AvflPs | Architecture::PubSub)
+    }
+
+    /// Is inter-party communication asynchronous?
+    pub fn is_async(&self) -> bool {
+        matches!(self, Architecture::Avfl | Architecture::AvflPs | Architecture::PubSub)
+    }
+}
+
+impl fmt::Display for Architecture {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Small = 10-layer MLP bottom; Large = residual-MLP ("ResNet") bottom.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModelSize {
+    Small,
+    Large,
+}
+
+impl ModelSize {
+    pub fn parse(s: &str) -> Option<ModelSize> {
+        match s.to_ascii_lowercase().as_str() {
+            "small" | "mlp" => Some(ModelSize::Small),
+            "large" | "resnet" | "resmlp" => Some(ModelSize::Large),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelSize::Small => "small",
+            ModelSize::Large => "large",
+        }
+    }
+}
+
+/// Compute engine for model math.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Pure-Rust reference engine (always available).
+    Host,
+    /// AOT-compiled JAX/Pallas artifacts executed via PJRT (`xla` crate).
+    Xla,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "host" | "rust" => Some(EngineKind::Host),
+            "xla" | "pjrt" => Some(EngineKind::Xla),
+            _ => None,
+        }
+    }
+}
+
+/// Dataset signature selector; see `data::catalog`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DatasetConfig {
+    /// Catalog name: energy | blog | bank | credit | synthetic | criteo-mini.
+    pub name: String,
+    /// Override sample count (0 = catalog default).
+    pub samples: usize,
+    /// Override total feature count (0 = catalog default).
+    pub features: usize,
+    /// Number of features held by the active party (rest go passive).
+    /// 0 = even split.
+    pub active_features: usize,
+}
+
+/// Per-party system profile: cores and worker counts.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PartyConfig {
+    pub active_cores: usize,
+    pub passive_cores: usize,
+    pub active_workers: usize,
+    pub passive_workers: usize,
+}
+
+/// Training hyper-parameters + the PubSub-specific mechanism knobs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainConfig {
+    pub batch_size: usize,
+    pub epochs: usize,
+    pub lr: f64,
+    /// Target metric (AUC for classification, used for time-to-target).
+    pub target_accuracy: f64,
+    /// ΔT0 in Eq. (5): initial semi-async aggregation interval (epochs).
+    pub delta_t0: usize,
+    /// Waiting-deadline T_ddl, in milliseconds.
+    pub t_ddl_ms: u64,
+    /// Embedding channel buffer capacity (p).
+    pub buffer_p: usize,
+    /// Gradient channel buffer capacity (q).
+    pub buffer_q: usize,
+    /// Max staleness (in aggregation rounds) tolerated by async baselines.
+    pub max_staleness: usize,
+    /// Global gradient-norm clip applied by every worker (0 = off).
+    pub grad_clip: f64,
+}
+
+/// Gaussian-DP settings (Appendix C).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DpConfig {
+    pub enabled: bool,
+    /// Privacy budget μ; `f64::INFINITY` disables noise even when enabled.
+    pub mu: f64,
+}
+
+/// Ablation toggles (Table 4).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct AblationConfig {
+    /// "w/o T_ddl": waiting-deadline mechanism disabled (deadline = 0 ⇒
+    /// batches are never reassigned; stale pairs block).
+    pub no_deadline: bool,
+    /// "w/o Dynamic Programming": planner disabled, equal worker split.
+    pub no_planner: bool,
+    /// "w/o ΔT": semi-async interval fixed at 1 (fully synchronous PS).
+    pub no_semi_async: bool,
+    /// "w/o PubSub": broker replaced by AVFL-PS-style direct exchange.
+    pub no_pubsub: bool,
+}
+
+/// The complete experiment description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub seed: u64,
+    pub arch: Architecture,
+    pub dataset: DatasetConfig,
+    pub model_size: ModelSize,
+    /// Hidden width for bottom layers.
+    pub hidden: usize,
+    /// Cut-layer embedding dimension per party.
+    pub embed_dim: usize,
+    pub parties: PartyConfig,
+    pub train: TrainConfig,
+    pub dp: DpConfig,
+    pub ablation: AblationConfig,
+    pub engine: EngineKind,
+    pub artifacts_dir: String,
+    /// Inter-party bandwidth in MB/s (Eq. 9).
+    pub bandwidth_mbps: f64,
+    /// Number of passive parties (1 = the paper's main two-party setting;
+    /// >1 exercises the Appendix H multi-party extension).
+    pub passive_parties: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "default".into(),
+            seed: 42,
+            arch: Architecture::PubSub,
+            dataset: DatasetConfig {
+                name: "synthetic".into(),
+                samples: 0,
+                features: 0,
+                active_features: 0,
+            },
+            model_size: ModelSize::Small,
+            hidden: 64,
+            embed_dim: 32,
+            parties: PartyConfig {
+                active_cores: 32,
+                passive_cores: 32,
+                active_workers: 8,
+                passive_workers: 10,
+            },
+            train: TrainConfig {
+                batch_size: 256,
+                epochs: 5,
+                lr: 0.001,
+                target_accuracy: 0.91,
+                delta_t0: 5,
+                t_ddl_ms: 10_000,
+                buffer_p: 5,
+                buffer_q: 5,
+                max_staleness: 4,
+                grad_clip: 5.0,
+            },
+            dp: DpConfig { enabled: false, mu: f64::INFINITY },
+            ablation: AblationConfig::default(),
+            engine: EngineKind::Host,
+            artifacts_dir: "artifacts".into(),
+            bandwidth_mbps: 1000.0,
+            passive_parties: 1,
+        }
+    }
+}
+
+/// Config load/validation error.
+#[derive(Debug)]
+pub enum ConfigError {
+    Toml(TomlError),
+    Invalid(String),
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::Toml(e) => write!(f, "{e}"),
+            ConfigError::Invalid(m) => write!(f, "invalid config: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl ExperimentConfig {
+    /// Parse from TOML text; unspecified keys keep their defaults.
+    pub fn from_toml(text: &str) -> Result<ExperimentConfig, ConfigError> {
+        let doc = TomlDoc::parse(text).map_err(ConfigError::Toml)?;
+        let mut c = ExperimentConfig::default();
+        c.name = doc.str_or("experiment", "name", &c.name);
+        c.seed = doc.i64_or("experiment", "seed", c.seed as i64) as u64;
+        let arch = doc.str_or("experiment", "architecture", "pubsub");
+        c.arch = Architecture::parse(&arch)
+            .ok_or_else(|| ConfigError::Invalid(format!("unknown architecture '{arch}'")))?;
+        c.passive_parties = doc.usize_or("experiment", "passive_parties", c.passive_parties);
+
+        c.dataset.name = doc.str_or("dataset", "name", &c.dataset.name);
+        c.dataset.samples = doc.usize_or("dataset", "samples", c.dataset.samples);
+        c.dataset.features = doc.usize_or("dataset", "features", c.dataset.features);
+        c.dataset.active_features =
+            doc.usize_or("dataset", "active_features", c.dataset.active_features);
+
+        let size = doc.str_or("model", "size", c.model_size.name());
+        c.model_size = ModelSize::parse(&size)
+            .ok_or_else(|| ConfigError::Invalid(format!("unknown model size '{size}'")))?;
+        c.hidden = doc.usize_or("model", "hidden", c.hidden);
+        c.embed_dim = doc.usize_or("model", "embed_dim", c.embed_dim);
+
+        c.parties.active_cores = doc.usize_or("parties", "active_cores", c.parties.active_cores);
+        c.parties.passive_cores = doc.usize_or("parties", "passive_cores", c.parties.passive_cores);
+        c.parties.active_workers =
+            doc.usize_or("parties", "active_workers", c.parties.active_workers);
+        c.parties.passive_workers =
+            doc.usize_or("parties", "passive_workers", c.parties.passive_workers);
+
+        c.train.batch_size = doc.usize_or("training", "batch_size", c.train.batch_size);
+        c.train.epochs = doc.usize_or("training", "epochs", c.train.epochs);
+        c.train.lr = doc.f64_or("training", "lr", c.train.lr);
+        c.train.target_accuracy =
+            doc.f64_or("training", "target_accuracy", c.train.target_accuracy);
+        c.train.delta_t0 = doc.usize_or("training", "delta_t0", c.train.delta_t0);
+        c.train.t_ddl_ms = doc.i64_or("training", "t_ddl_ms", c.train.t_ddl_ms as i64) as u64;
+        c.train.buffer_p = doc.usize_or("training", "buffer_p", c.train.buffer_p);
+        c.train.buffer_q = doc.usize_or("training", "buffer_q", c.train.buffer_q);
+        c.train.max_staleness = doc.usize_or("training", "max_staleness", c.train.max_staleness);
+        c.train.grad_clip = doc.f64_or("training", "grad_clip", c.train.grad_clip);
+
+        c.dp.enabled = doc.bool_or("dp", "enabled", c.dp.enabled);
+        let mu = doc.f64_or("dp", "mu", f64::INFINITY);
+        c.dp.mu = if mu <= 0.0 { f64::INFINITY } else { mu };
+
+        c.ablation.no_deadline = doc.bool_or("ablation", "no_deadline", false);
+        c.ablation.no_planner = doc.bool_or("ablation", "no_planner", false);
+        c.ablation.no_semi_async = doc.bool_or("ablation", "no_semi_async", false);
+        c.ablation.no_pubsub = doc.bool_or("ablation", "no_pubsub", false);
+
+        let engine = doc.str_or("engine", "kind", "host");
+        c.engine = EngineKind::parse(&engine)
+            .ok_or_else(|| ConfigError::Invalid(format!("unknown engine '{engine}'")))?;
+        c.artifacts_dir = doc.str_or("engine", "artifacts_dir", &c.artifacts_dir);
+        c.bandwidth_mbps = doc.f64_or("network", "bandwidth_mbps", c.bandwidth_mbps);
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Sanity-check invariants shared by every consumer.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let inv = |m: String| Err(ConfigError::Invalid(m));
+        if self.train.batch_size == 0 {
+            return inv("batch_size must be >= 1".into());
+        }
+        if self.parties.active_workers == 0 || self.parties.passive_workers == 0 {
+            return inv("worker counts must be >= 1".into());
+        }
+        if self.parties.active_cores == 0 || self.parties.passive_cores == 0 {
+            return inv("core counts must be >= 1".into());
+        }
+        if self.embed_dim == 0 || self.hidden == 0 {
+            return inv("model dims must be >= 1".into());
+        }
+        if self.train.lr <= 0.0 || !self.train.lr.is_finite() {
+            return inv(format!("lr must be positive, got {}", self.train.lr));
+        }
+        if self.passive_parties == 0 {
+            return inv("need at least one passive party".into());
+        }
+        if self.dp.enabled && self.dp.mu <= 0.0 {
+            return inv("dp.mu must be > 0".into());
+        }
+        if self.bandwidth_mbps <= 0.0 {
+            return inv("bandwidth must be positive".into());
+        }
+        Ok(())
+    }
+
+    /// Load from a file path.
+    pub fn from_path(path: &str) -> Result<ExperimentConfig, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError::Invalid(format!("cannot read {path}: {e}")))?;
+        Self::from_toml(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parse_full_config() {
+        let c = ExperimentConfig::from_toml(
+            r#"
+[experiment]
+name = "fig3"
+seed = 7
+architecture = "avfl-ps"
+
+[dataset]
+name = "bank"
+active_features = 24
+
+[model]
+size = "large"
+hidden = 128
+embed_dim = 48
+
+[parties]
+active_cores = 50
+passive_cores = 14
+active_workers = 4
+passive_workers = 6
+
+[training]
+batch_size = 128
+epochs = 3
+lr = 0.01
+delta_t0 = 4
+t_ddl_ms = 2500
+buffer_p = 3
+buffer_q = 2
+
+[dp]
+enabled = true
+mu = 2.0
+
+[engine]
+kind = "host"
+
+[network]
+bandwidth_mbps = 500.0
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.name, "fig3");
+        assert_eq!(c.arch, Architecture::AvflPs);
+        assert_eq!(c.model_size, ModelSize::Large);
+        assert_eq!(c.parties.active_cores, 50);
+        assert_eq!(c.train.t_ddl_ms, 2500);
+        assert!(c.dp.enabled);
+        assert_eq!(c.dp.mu, 2.0);
+    }
+
+    #[test]
+    fn unknown_architecture_rejected() {
+        let e = ExperimentConfig::from_toml("[experiment]\narchitecture = \"ring\"");
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(ExperimentConfig::from_toml("[training]\nbatch_size = 0").is_err());
+        assert!(ExperimentConfig::from_toml("[training]\nlr = -1.0").is_err());
+        assert!(ExperimentConfig::from_toml("[parties]\nactive_workers = 0").is_err());
+    }
+
+    #[test]
+    fn architecture_parsing_aliases() {
+        assert_eq!(Architecture::parse("VFL-PS"), Some(Architecture::VflPs));
+        assert_eq!(Architecture::parse("ours"), Some(Architecture::PubSub));
+        assert_eq!(Architecture::parse("nope"), None);
+        for a in Architecture::ALL {
+            assert_eq!(Architecture::parse(a.name()), Some(a));
+        }
+    }
+
+    #[test]
+    fn arch_properties() {
+        assert!(!Architecture::Vfl.has_ps());
+        assert!(Architecture::VflPs.has_ps());
+        assert!(!Architecture::VflPs.is_async());
+        assert!(Architecture::PubSub.is_async() && Architecture::PubSub.has_ps());
+    }
+
+    #[test]
+    fn nonpositive_mu_means_infinity() {
+        let c = ExperimentConfig::from_toml("[dp]\nenabled = true\nmu = -1.0").unwrap();
+        assert!(c.dp.mu.is_infinite());
+    }
+}

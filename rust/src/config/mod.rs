@@ -1,0 +1,11 @@
+//! Experiment configuration: a TOML-subset parser plus the typed
+//! [`ExperimentConfig`] consumed by the CLI, examples, and benches.
+
+pub mod experiment;
+pub mod toml;
+
+pub use experiment::{
+    AblationConfig, Architecture, ConfigError, DatasetConfig, DpConfig, EngineKind,
+    ExperimentConfig, ModelSize, PartyConfig, TrainConfig,
+};
+pub use toml::{TomlDoc, TomlError, TomlValue};

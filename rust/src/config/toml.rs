@@ -1,0 +1,288 @@
+//! Parser for the TOML subset used by experiment configs.
+//!
+//! Supported: `[section]` headers, `key = value` pairs with string, integer,
+//! float, boolean, and flat-array values, `#` comments, blank lines.
+//! Unsupported TOML (nested tables-in-arrays, dotted keys, multiline
+//! strings) is rejected with a line-numbered error. This is deliberately a
+//! subset: configs in this repo are flat two-level documents.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A scalar or flat-array TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(v) => Some(*v),
+            TomlValue::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: `section -> key -> value`. Keys outside any section go
+/// under the empty-string section.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+/// Parse error with 1-based line number.
+#[derive(Debug, Clone)]
+pub struct TomlError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        doc.sections.entry(section.clone()).or_default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |m: &str| TomlError { line: lineno + 1, message: m.to_string() };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| err("unterminated section header"))?;
+                let name = name.trim();
+                if name.is_empty() || name.contains('[') || name.contains(']') {
+                    return Err(err("invalid section name"));
+                }
+                section = name.to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| err("expected 'key = value'"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() || !key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-') {
+                return Err(err("invalid key"));
+            }
+            let value = parse_value(line[eq + 1..].trim(), lineno + 1)?;
+            doc.sections
+                .get_mut(&section)
+                .unwrap()
+                .insert(key.to_string(), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn i64_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.i64_or(section, key, default as i64).max(0) as usize
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, line: usize) -> Result<TomlValue, TomlError> {
+    let err = |m: &str| TomlError { line, message: m.to_string() };
+    if text.is_empty() {
+        return Err(err("empty value"));
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or_else(|| err("unterminated string"))?;
+        if inner.contains('"') {
+            return Err(err("embedded quote in string"));
+        }
+        return Ok(TomlValue::Str(inner.replace("\\n", "\n").replace("\\t", "\t")));
+    }
+    if text == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if text == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = text.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or_else(|| err("unterminated array"))?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            items.push(parse_value(part.trim(), line)?);
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    // Number: integer if it parses as i64 and has no '.', 'e', or 'E'.
+    if !text.contains(['.', 'e', 'E']) {
+        if let Ok(v) = text.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(v));
+        }
+    }
+    if let Ok(v) = text.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(v));
+    }
+    Err(err(&format!("cannot parse value '{text}'")))
+}
+
+/// Split an array body on commas that are not inside quotes or brackets.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+# top comment
+title = "demo"
+
+[training]
+batch_size = 256
+lr = 0.001
+resume = false
+sizes = [16, 32, 64]
+names = ["a", "b"]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("", "title", ""), "demo");
+        assert_eq!(doc.i64_or("training", "batch_size", 0), 256);
+        assert!((doc.f64_or("training", "lr", 0.0) - 0.001).abs() < 1e-12);
+        assert!(!doc.bool_or("training", "resume", true));
+        let sizes = doc.get("training", "sizes").unwrap().as_arr().unwrap();
+        assert_eq!(sizes.len(), 3);
+        assert_eq!(sizes[1].as_i64(), Some(32));
+    }
+
+    #[test]
+    fn comment_inside_string_is_kept() {
+        let doc = TomlDoc::parse("k = \"a#b\" # real comment").unwrap();
+        assert_eq!(doc.str_or("", "k", ""), "a#b");
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(TomlDoc::parse("[unclosed").is_err());
+        assert!(TomlDoc::parse("novalue =").is_err());
+        assert!(TomlDoc::parse("bad key = 1").is_err());
+        assert!(TomlDoc::parse("k = \"unterminated").is_err());
+        assert!(TomlDoc::parse("k = [1, 2").is_err());
+        assert!(TomlDoc::parse("just text").is_err());
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = TomlDoc::parse("a = 3\nb = 3.0\nc = 1e3").unwrap();
+        assert_eq!(doc.get("", "a"), Some(&TomlValue::Int(3)));
+        assert_eq!(doc.get("", "b"), Some(&TomlValue::Float(3.0)));
+        assert_eq!(doc.get("", "c"), Some(&TomlValue::Float(1000.0)));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(doc.usize_or("x", "y", 7), 7);
+        assert_eq!(doc.str_or("x", "y", "d"), "d");
+    }
+
+    #[test]
+    fn negative_and_underscore_numbers() {
+        let doc = TomlDoc::parse("a = -5\nb = 1_000_000").unwrap();
+        assert_eq!(doc.i64_or("", "a", 0), -5);
+        assert_eq!(doc.i64_or("", "b", 0), 1_000_000);
+    }
+}

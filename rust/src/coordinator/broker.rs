@@ -1,0 +1,159 @@
+//! The message broker: embedding + gradient topics (per passive party)
+//! with comm accounting — the middleware box of Fig. 2.
+
+use super::channel::{SubResult, Topic};
+use super::messages::{EmbeddingMsg, GradientMsg};
+use crate::metrics::Metrics;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Broker connecting one active party with `k` passive parties.
+pub struct Broker {
+    /// One embedding topic per passive party.
+    pub emb: Vec<Topic<EmbeddingMsg>>,
+    /// One gradient topic per passive party.
+    pub grad: Vec<Topic<GradientMsg>>,
+    metrics: Arc<Metrics>,
+}
+
+impl Broker {
+    /// `p` / `q` are the per-topic buffer capacities of §4.1, scaled by
+    /// the subscriber pool size as in the sim (in-flight bound).
+    pub fn new(n_passive: usize, p: usize, q: usize, metrics: Arc<Metrics>) -> Broker {
+        assert!(n_passive >= 1);
+        Broker {
+            emb: (0..n_passive).map(|_| Topic::new("embeddings", p.max(1))).collect(),
+            grad: (0..n_passive).map(|_| Topic::new("gradients", q.max(1))).collect(),
+            metrics,
+        }
+    }
+
+    /// Passive party `party` publishes an embedding. Returns an evicted
+    /// batch ID if the buffer mechanism fired.
+    pub fn publish_embedding(&self, msg: EmbeddingMsg) -> Option<u64> {
+        self.metrics.add_comm(msg.bytes());
+        self.metrics.inc("emb_published", 1);
+        let party = msg.party;
+        let id = msg.batch_id;
+        let evicted = self.emb[party].publish(id, msg);
+        if evicted.is_some() {
+            self.metrics.inc("emb_dropped", 1);
+        }
+        evicted
+    }
+
+    /// Active worker takes any ready embedding from `party`'s topic.
+    pub fn take_embedding(&self, party: usize, ddl: Duration) -> SubResult<(u64, EmbeddingMsg)> {
+        self.emb[party].subscribe_any(ddl)
+    }
+
+    /// Active worker publishes the cut-layer gradient back.
+    pub fn publish_gradient(&self, msg: GradientMsg) -> Option<u64> {
+        self.metrics.add_comm(msg.bytes());
+        self.metrics.inc("grad_published", 1);
+        let party = msg.party;
+        let id = msg.batch_id;
+        let evicted = self.grad[party].publish(id, msg);
+        if evicted.is_some() {
+            self.metrics.inc("grad_dropped", 1);
+        }
+        evicted
+    }
+
+    /// Passive worker takes any ready gradient for its party.
+    pub fn take_gradient(&self, party: usize, ddl: Duration) -> SubResult<(u64, GradientMsg)> {
+        self.grad[party].subscribe_any(ddl)
+    }
+
+    /// Batch IDs evicted from either topic since last drain (reassign).
+    pub fn drain_dropped(&self) -> Vec<u64> {
+        let mut out = Vec::new();
+        for t in &self.emb {
+            out.extend(t.take_dropped());
+        }
+        for t in &self.grad {
+            out.extend(t.take_dropped());
+        }
+        out
+    }
+
+    /// Close all topics (end of training).
+    pub fn close(&self) {
+        for t in &self.emb {
+            t.close();
+        }
+        for t in &self.grad {
+            t.close();
+        }
+    }
+
+    /// Reset all topics for a new epoch.
+    pub fn reset(&self) {
+        for t in &self.emb {
+            t.reset();
+        }
+        for t in &self.grad {
+            t.reset();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Matrix;
+    use std::time::Instant;
+
+    fn emb(id: u64) -> EmbeddingMsg {
+        EmbeddingMsg {
+            batch_id: id,
+            party: 0,
+            z: Matrix::zeros(2, 4),
+            produced_at: Instant::now(),
+            param_version: 0,
+        }
+    }
+
+    #[test]
+    fn comm_accounting_on_publish() {
+        let m = Arc::new(Metrics::new());
+        let b = Broker::new(1, 4, 4, Arc::clone(&m));
+        b.publish_embedding(emb(1));
+        assert_eq!(m.counter("emb_published"), 1);
+        assert!(m.comm_mb() > 0.0);
+        let r = b.take_embedding(0, Duration::from_millis(5));
+        matches!(r, SubResult::Ok((1, _)));
+    }
+
+    #[test]
+    fn eviction_counted_and_drained() {
+        let m = Arc::new(Metrics::new());
+        let b = Broker::new(1, 1, 1, m.clone());
+        b.publish_embedding(emb(1));
+        b.publish_embedding(emb(2)); // evicts 1
+        assert_eq!(m.counter("emb_dropped"), 1);
+        assert_eq!(b.drain_dropped(), vec![1]);
+    }
+
+    #[test]
+    fn per_party_topics_are_independent() {
+        let m = Arc::new(Metrics::new());
+        let b = Broker::new(2, 4, 4, m);
+        let mut e = emb(5);
+        e.party = 1;
+        b.publish_embedding(e);
+        assert!(matches!(b.take_embedding(0, Duration::from_millis(1)), SubResult::TimedOut));
+        assert!(matches!(b.take_embedding(1, Duration::from_millis(5)), SubResult::Ok((5, _))));
+    }
+
+    #[test]
+    fn close_propagates() {
+        let m = Arc::new(Metrics::new());
+        let b = Broker::new(1, 4, 4, m);
+        b.close();
+        assert!(matches!(b.take_embedding(0, Duration::from_secs(1)), SubResult::Closed));
+        b.reset();
+        b.publish_embedding(emb(9));
+        assert!(matches!(b.take_embedding(0, Duration::from_millis(5)), SubResult::Ok((9, _))));
+    }
+}

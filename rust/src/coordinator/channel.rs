@@ -1,0 +1,254 @@
+//! Batch-ID-keyed Pub/Sub topic with the paper's two congestion
+//! mechanisms (§4.1):
+//!
+//! - **Buffer mechanism**: each topic buffers at most `capacity` messages;
+//!   on overflow the *oldest* entry is discarded FIFO (stale updates must
+//!   not poison training) and its batch ID is queued for reassignment.
+//! - **Waiting deadline**: subscribers block at most `T_ddl`; on expiry
+//!   they give up on the batch so the session can reassign it.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Result of a subscribe call.
+#[derive(Debug, PartialEq)]
+pub enum SubResult<T> {
+    /// Message delivered.
+    Ok(T),
+    /// Deadline expired with nothing published.
+    TimedOut,
+    /// Topic closed (end of training).
+    Closed,
+}
+
+struct TopicState<T> {
+    /// batch_id → message.
+    map: HashMap<u64, T>,
+    /// Publication order for FIFO eviction.
+    order: VecDeque<u64>,
+    /// Batch IDs evicted by the buffer mechanism, pending reassignment.
+    dropped: Vec<u64>,
+    closed: bool,
+}
+
+/// A capacity-bounded, batch-ID-addressed topic.
+pub struct Topic<T> {
+    state: Mutex<TopicState<T>>,
+    cv: Condvar,
+    capacity: usize,
+    name: &'static str,
+}
+
+impl<T> Topic<T> {
+    pub fn new(name: &'static str, capacity: usize) -> Topic<T> {
+        assert!(capacity >= 1);
+        Topic {
+            state: Mutex::new(TopicState {
+                map: HashMap::new(),
+                order: VecDeque::new(),
+                dropped: Vec::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            capacity,
+            name,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Publish a message under `batch_id`. Returns the batch ID evicted by
+    /// the buffer mechanism, if the topic was full.
+    pub fn publish(&self, batch_id: u64, msg: T) -> Option<u64> {
+        let mut s = self.state.lock().unwrap();
+        let mut evicted = None;
+        if s.map.len() >= self.capacity {
+            // FIFO drop-oldest.
+            while let Some(old) = s.order.pop_front() {
+                if s.map.remove(&old).is_some() {
+                    s.dropped.push(old);
+                    evicted = Some(old);
+                    break;
+                }
+            }
+        }
+        s.map.insert(batch_id, msg);
+        s.order.push_back(batch_id);
+        drop(s);
+        self.cv.notify_all();
+        evicted
+    }
+
+    /// Take any available message (FIFO order), waiting up to `deadline`.
+    pub fn subscribe_any(&self, deadline: Duration) -> SubResult<(u64, T)> {
+        let start = Instant::now();
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(&id) = s.order.front() {
+                s.order.pop_front();
+                if let Some(msg) = s.map.remove(&id) {
+                    return SubResult::Ok((id, msg));
+                }
+                continue; // already evicted; try next
+            }
+            if s.closed {
+                return SubResult::Closed;
+            }
+            let elapsed = start.elapsed();
+            if elapsed >= deadline {
+                return SubResult::TimedOut;
+            }
+            let (guard, timeout) = self
+                .cv
+                .wait_timeout(s, deadline - elapsed)
+                .unwrap();
+            s = guard;
+            if timeout.timed_out() && s.order.is_empty() {
+                return if s.closed { SubResult::Closed } else { SubResult::TimedOut };
+            }
+        }
+    }
+
+    /// Take the message for a *specific* batch ID, waiting up to `deadline`
+    /// (the strict ID-aligned mode used by the "w/o PubSub" ablation).
+    pub fn subscribe(&self, batch_id: u64, deadline: Duration) -> SubResult<T> {
+        let start = Instant::now();
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(msg) = s.map.remove(&batch_id) {
+                if let Some(pos) = s.order.iter().position(|&id| id == batch_id) {
+                    s.order.remove(pos);
+                }
+                return SubResult::Ok(msg);
+            }
+            if s.closed {
+                return SubResult::Closed;
+            }
+            let elapsed = start.elapsed();
+            if elapsed >= deadline {
+                return SubResult::TimedOut;
+            }
+            let (guard, _timeout) = self.cv.wait_timeout(s, deadline - elapsed).unwrap();
+            s = guard;
+        }
+    }
+
+    /// Drain the batch IDs evicted since the last call (for reassignment).
+    pub fn take_dropped(&self) -> Vec<u64> {
+        std::mem::take(&mut self.state.lock().unwrap().dropped)
+    }
+
+    /// Number of buffered messages.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the topic: blocked subscribers return `Closed`.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Reset for a new epoch (buffers cleared, reopened).
+    pub fn reset(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.map.clear();
+        s.order.clear();
+        s.dropped.clear();
+        s.closed = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn publish_subscribe_roundtrip() {
+        let t: Topic<&str> = Topic::new("emb", 4);
+        t.publish(7, "hello");
+        assert_eq!(t.subscribe(7, Duration::from_millis(10)), SubResult::Ok("hello"));
+        assert_eq!(t.subscribe(7, Duration::from_millis(1)), SubResult::TimedOut);
+    }
+
+    #[test]
+    fn subscribe_any_is_fifo() {
+        let t: Topic<u32> = Topic::new("emb", 8);
+        t.publish(1, 10);
+        t.publish(2, 20);
+        t.publish(3, 30);
+        assert_eq!(t.subscribe_any(Duration::from_millis(5)), SubResult::Ok((1, 10)));
+        assert_eq!(t.subscribe_any(Duration::from_millis(5)), SubResult::Ok((2, 20)));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn buffer_mechanism_drops_oldest() {
+        let t: Topic<u32> = Topic::new("emb", 2);
+        assert_eq!(t.publish(1, 10), None);
+        assert_eq!(t.publish(2, 20), None);
+        assert_eq!(t.publish(3, 30), Some(1)); // oldest evicted
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.take_dropped(), vec![1]);
+        assert!(t.take_dropped().is_empty());
+        // 1 is gone; 2 and 3 remain.
+        assert_eq!(t.subscribe(1, Duration::from_millis(1)), SubResult::TimedOut);
+        assert_eq!(t.subscribe(2, Duration::from_millis(1)), SubResult::Ok(20));
+    }
+
+    #[test]
+    fn deadline_expires_without_message() {
+        let t: Topic<u32> = Topic::new("grad", 2);
+        let start = Instant::now();
+        assert_eq!(t.subscribe_any(Duration::from_millis(30)), SubResult::TimedOut);
+        assert!(start.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn cross_thread_delivery() {
+        let t: Arc<Topic<u64>> = Arc::new(Topic::new("emb", 4));
+        let t2 = Arc::clone(&t);
+        let h = std::thread::spawn(move || t2.subscribe(42, Duration::from_secs(2)));
+        std::thread::sleep(Duration::from_millis(10));
+        t.publish(42, 4242);
+        assert_eq!(h.join().unwrap(), SubResult::Ok(4242));
+    }
+
+    #[test]
+    fn close_releases_blocked_subscribers() {
+        let t: Arc<Topic<u64>> = Arc::new(Topic::new("emb", 4));
+        let t2 = Arc::clone(&t);
+        let h = std::thread::spawn(move || t2.subscribe_any(Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(10));
+        t.close();
+        assert_eq!(h.join().unwrap(), SubResult::Closed);
+    }
+
+    #[test]
+    fn reset_reopens() {
+        let t: Topic<u32> = Topic::new("emb", 2);
+        t.publish(1, 1);
+        t.close();
+        t.reset();
+        assert!(t.is_empty());
+        t.publish(2, 2);
+        assert_eq!(t.subscribe(2, Duration::from_millis(5)), SubResult::Ok(2));
+    }
+
+    #[test]
+    fn specific_subscribe_leaves_others() {
+        let t: Topic<u32> = Topic::new("emb", 4);
+        t.publish(1, 10);
+        t.publish(2, 20);
+        assert_eq!(t.subscribe(2, Duration::from_millis(5)), SubResult::Ok(20));
+        assert_eq!(t.subscribe_any(Duration::from_millis(5)), SubResult::Ok((1, 10)));
+    }
+}

@@ -1,0 +1,65 @@
+//! Message types flowing through the Pub/Sub channels.
+
+use crate::tensor::Matrix;
+use std::time::Instant;
+
+/// An embedding published by a passive worker (one batch).
+#[derive(Clone, Debug)]
+pub struct EmbeddingMsg {
+    pub batch_id: u64,
+    /// Which passive party produced it (multi-party extension).
+    pub party: usize,
+    pub z: Matrix,
+    pub produced_at: Instant,
+    /// Producer's parameter version (staleness accounting).
+    pub param_version: u64,
+}
+
+impl EmbeddingMsg {
+    /// Wire size: payload + batch-ID framing (matches
+    /// `profiler::payload_bytes_per_sample`).
+    pub fn bytes(&self) -> u64 {
+        (self.z.data.len() * 4 + 16) as u64
+    }
+}
+
+/// A cut-layer gradient published by an active worker.
+#[derive(Clone, Debug)]
+pub struct GradientMsg {
+    pub batch_id: u64,
+    pub party: usize,
+    pub grad_z: Matrix,
+    pub produced_at: Instant,
+    pub loss: f64,
+}
+
+impl GradientMsg {
+    pub fn bytes(&self) -> u64 {
+        (self.grad_z.data.len() * 4 + 16) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_accounting() {
+        let m = EmbeddingMsg {
+            batch_id: 1,
+            party: 0,
+            z: Matrix::zeros(4, 8),
+            produced_at: Instant::now(),
+            param_version: 0,
+        };
+        assert_eq!(m.bytes(), 4 * 8 * 4 + 16);
+        let g = GradientMsg {
+            batch_id: 1,
+            party: 0,
+            grad_z: Matrix::zeros(4, 8),
+            produced_at: Instant::now(),
+            loss: 0.0,
+        };
+        assert_eq!(g.bytes(), m.bytes());
+    }
+}

@@ -1,0 +1,17 @@
+//! The L3 coordinator — the paper's system contribution: Pub/Sub broker
+//! with batch-ID-keyed channels (buffer + waiting-deadline mechanisms),
+//! per-party parameter servers with the Eq. (5) semi-asynchronous
+//! schedule, and the threaded training session that wires workers,
+//! channels, PSI-aligned batch plans, and the GDP protocol together.
+
+pub mod broker;
+pub mod channel;
+pub mod messages;
+pub mod ps;
+pub mod session;
+
+pub use broker::Broker;
+pub use channel::{SubResult, Topic};
+pub use messages::{EmbeddingMsg, GradientMsg};
+pub use ps::{ParameterServer, PsMode, SemiAsyncSchedule};
+pub use session::{evaluate, reached, train_pubsub, SessionResult};

@@ -1,0 +1,203 @@
+//! Per-party Parameter Server with the hierarchical asynchrony of §4.1:
+//! workers push gradients and fetch parameters at their own pace
+//! (intra-party asynchrony); a controlled synchronization barrier fires
+//! every ΔT_t epochs per the Eq. (5) schedule.
+
+use crate::model::MlpParams;
+use crate::sim::convergence::delta_t;
+use std::sync::Mutex;
+
+/// Aggregation mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PsMode {
+    /// Apply each pushed gradient immediately (async SGD); the semi-async
+    /// schedule adds periodic barriers on top.
+    Async,
+    /// Accumulate and apply only at `aggregate()` (synchronous PS).
+    Sync,
+}
+
+struct PsState {
+    params: MlpParams,
+    accum: MlpParams,
+    n_accum: usize,
+    version: u64,
+}
+
+/// Thread-safe parameter server for one sub-model.
+pub struct ParameterServer {
+    state: Mutex<PsState>,
+    pub lr: f32,
+    pub mode: PsMode,
+}
+
+impl ParameterServer {
+    pub fn new(params: MlpParams, lr: f32, mode: PsMode) -> ParameterServer {
+        let accum = params.zeros_like();
+        ParameterServer {
+            state: Mutex::new(PsState { params, accum, n_accum: 0, version: 0 }),
+            lr,
+            mode,
+        }
+    }
+
+    /// Snapshot current parameters (workers call this per batch).
+    pub fn fetch(&self) -> (MlpParams, u64) {
+        let s = self.state.lock().unwrap();
+        (s.params.clone(), s.version)
+    }
+
+    /// Push a gradient.
+    pub fn push_grad(&self, grad: &MlpParams) {
+        let mut s = self.state.lock().unwrap();
+        match self.mode {
+            PsMode::Async => {
+                let lr = self.lr;
+                s.params.sgd_step(grad, lr);
+                s.version += 1;
+            }
+            PsMode::Sync => {
+                s.accum.axpy(1.0, grad);
+                s.n_accum += 1;
+            }
+        }
+    }
+
+    /// Apply accumulated gradients (mean) — the synchronization point.
+    /// No-op when nothing is pending. Returns the new version.
+    pub fn aggregate(&self) -> u64 {
+        let mut s = self.state.lock().unwrap();
+        if s.n_accum > 0 {
+            let scale = 1.0 / s.n_accum as f32;
+            let mut mean = s.accum.clone();
+            mean.scale(scale);
+            let lr = self.lr;
+            s.params.sgd_step(&mean, lr);
+            s.accum = s.params.zeros_like();
+            s.n_accum = 0;
+            s.version += 1;
+        }
+        s.version
+    }
+
+    /// Current parameter version.
+    pub fn version(&self) -> u64 {
+        self.state.lock().unwrap().version
+    }
+
+    /// Replace parameters outright (broadcast after an external sync).
+    pub fn set_params(&self, params: MlpParams) {
+        let mut s = self.state.lock().unwrap();
+        s.accum = params.zeros_like();
+        s.n_accum = 0;
+        s.params = params;
+        s.version += 1;
+    }
+}
+
+/// The semi-asynchronous controller: decides, per epoch, whether the PS
+/// barrier fires, following Eq. (5). `disabled` = the "w/o ΔT" ablation
+/// (no controlled barrier at all — fully async).
+#[derive(Clone, Copy, Debug)]
+pub struct SemiAsyncSchedule {
+    pub delta_t0: usize,
+    pub disabled: bool,
+}
+
+impl SemiAsyncSchedule {
+    pub fn barrier_after_epoch(&self, epoch: usize) -> bool {
+        if self.disabled {
+            return false;
+        }
+        let interval = delta_t(self.delta_t0, epoch).max(1);
+        (epoch + 1) % interval == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Activation, MlpSpec};
+    use crate::util::Rng;
+
+    fn params() -> MlpParams {
+        MlpParams::init(&MlpSpec::dense(&[3, 2], Activation::Linear), &mut Rng::new(1))
+    }
+
+    #[test]
+    fn async_mode_applies_immediately() {
+        let p = params();
+        let ps = ParameterServer::new(p.clone(), 0.5, PsMode::Async);
+        let mut g = p.zeros_like();
+        *g.weights[0].at_mut(0, 0) = 2.0;
+        ps.push_grad(&g);
+        let (now, v) = ps.fetch();
+        assert_eq!(v, 1);
+        assert!((now.weights[0].at(0, 0) - (p.weights[0].at(0, 0) - 1.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sync_mode_waits_for_aggregate() {
+        let p = params();
+        let ps = ParameterServer::new(p.clone(), 1.0, PsMode::Sync);
+        let mut g = p.zeros_like();
+        *g.weights[0].at_mut(0, 0) = 1.0;
+        ps.push_grad(&g);
+        ps.push_grad(&g);
+        // Not applied yet.
+        assert_eq!(ps.fetch().0.weights[0].at(0, 0), p.weights[0].at(0, 0));
+        ps.aggregate();
+        // Mean of two identical grads, lr 1.0 ⇒ -1.0.
+        assert!((ps.fetch().0.weights[0].at(0, 0) - (p.weights[0].at(0, 0) - 1.0)).abs() < 1e-6);
+        // Aggregate again: no pending grads, version unchanged.
+        let v = ps.version();
+        ps.aggregate();
+        assert_eq!(ps.version(), v);
+    }
+
+    #[test]
+    fn set_params_broadcast() {
+        let p = params();
+        let ps = ParameterServer::new(p.clone(), 0.1, PsMode::Sync);
+        let mut q = p.clone();
+        q.weights[0].scale(0.0);
+        ps.set_params(q.clone());
+        assert_eq!(ps.fetch().0.weights[0].data, q.weights[0].data);
+    }
+
+    #[test]
+    fn schedule_follows_eq5() {
+        let s = SemiAsyncSchedule { delta_t0: 4, disabled: false };
+        // Early epochs: interval 1 ⇒ barrier every epoch.
+        assert!(s.barrier_after_epoch(0));
+        assert!(s.barrier_after_epoch(1));
+        // Late epochs: interval 4 ⇒ barrier only on multiples.
+        assert!(s.barrier_after_epoch(11)); // (11+1) % 4 == 0
+        assert!(!s.barrier_after_epoch(12));
+        let off = SemiAsyncSchedule { delta_t0: 4, disabled: true };
+        assert!(!off.barrier_after_epoch(0));
+    }
+
+    #[test]
+    fn concurrent_pushes_all_land() {
+        use std::sync::Arc;
+        let p = params();
+        let ps = Arc::new(ParameterServer::new(p.clone(), 0.01, PsMode::Sync));
+        let mut handles = vec![];
+        for _ in 0..4 {
+            let ps = Arc::clone(&ps);
+            let mut g = p.zeros_like();
+            *g.weights[0].at_mut(0, 0) = 1.0;
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..100 {
+                    ps.push_grad(&g);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        ps.aggregate();
+        assert_eq!(ps.version(), 1);
+    }
+}

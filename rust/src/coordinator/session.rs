@@ -1,0 +1,534 @@
+//! The PubSub-VFL training session (Algorithm 1): real threads, real
+//! channels, the full mechanism set — batch-ID-keyed topics, buffer
+//! eviction + reassignment, waiting deadlines, per-party parameter servers
+//! with worker-local replicas synchronized on the Eq. (5) semi-async
+//! schedule, and the GDP protocol on published embeddings.
+//!
+//! The engine is pluggable: `HostSplitModel` (pure Rust) or `XlaService`
+//! (AOT JAX/Pallas via PJRT).
+
+use super::broker::Broker;
+use super::channel::SubResult;
+use super::messages::{EmbeddingMsg, GradientMsg};
+use super::ps::{ParameterServer, PsMode, SemiAsyncSchedule};
+use crate::config::ExperimentConfig;
+use crate::data::{BatchPlan, Task, VerticalDataset};
+use crate::dp::GaussianMechanism;
+use crate::metrics::Metrics;
+use crate::model::{auc, rmse, MlpParams, SplitEngine, SplitModelSpec, SplitParams};
+use crate::tensor::Matrix;
+use crate::util::{Rng, Stopwatch};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Outcome of a training session.
+#[derive(Clone, Debug)]
+pub struct SessionResult {
+    pub params: SplitParams,
+    /// (epoch, train-loss) curve.
+    pub loss_curve: Vec<(f64, f64)>,
+    /// (epoch, eval-metric) curve.
+    pub metric_curve: Vec<(f64, f64)>,
+    pub final_metric: f64,
+    pub epochs_run: usize,
+    pub reached_target: bool,
+    pub wall: Duration,
+    /// Batches reassigned by deadline/buffer mechanisms.
+    pub retried_batches: usize,
+}
+
+/// Evaluate the split model on a dataset in engine-batch-sized chunks
+/// (AOT artifacts have a static batch dimension; the ragged tail is
+/// dropped, consistent with training).
+pub fn evaluate(
+    engine: &dyn SplitEngine,
+    params: &SplitParams,
+    data: &VerticalDataset,
+    batch: usize,
+    task: Task,
+) -> f64 {
+    let n = data.len();
+    let mut scores: Vec<f32> = Vec::with_capacity(n);
+    let mut labels: Vec<f32> = Vec::with_capacity(n);
+    let mut i = 0;
+    while i + batch <= n {
+        let x_a = data.active.x.slice_rows(i, i + batch);
+        let x_p: Vec<Matrix> = data
+            .passive
+            .iter()
+            .map(|p| p.x.slice_rows(i, i + batch))
+            .collect();
+        let preds = engine.predict(&params.active, &params.top, &params.passive, &x_a, &x_p);
+        scores.extend_from_slice(&preds.data);
+        labels.extend_from_slice(&data.y[i..i + batch]);
+        i += batch;
+    }
+    if scores.is_empty() {
+        return match task {
+            Task::BinaryClassification => 0.5,
+            Task::Regression => f64::INFINITY,
+        };
+    }
+    match task {
+        Task::BinaryClassification => auc(&scores, &labels),
+        Task::Regression => rmse(&scores, &labels),
+    }
+}
+
+/// Did `metric` reach `target` for the task (AUC up / RMSE down)?
+pub fn reached(task: Task, metric: f64, target: f64) -> bool {
+    match task {
+        Task::BinaryClassification => metric >= target,
+        Task::Regression => metric <= target,
+    }
+}
+
+/// Per-worker replica state carried across epochs.
+struct ActiveReplica {
+    active: MlpParams,
+    top: MlpParams,
+}
+
+/// Train with the full PubSub-VFL system.
+#[allow(clippy::too_many_lines)]
+pub fn train_pubsub(
+    engine: Arc<dyn SplitEngine>,
+    spec: &SplitModelSpec,
+    train: &VerticalDataset,
+    test: &VerticalDataset,
+    cfg: &ExperimentConfig,
+    metrics: Arc<Metrics>,
+) -> SessionResult {
+    let task = train.task;
+    let k = train.passive.len();
+    let b = cfg.train.batch_size;
+    let lr = cfg.train.lr as f32;
+    let clip = cfg.train.grad_clip as f32;
+    let w_a = cfg.parties.active_workers;
+    let w_p = cfg.parties.passive_workers;
+    let t_ddl = Duration::from_millis(if cfg.ablation.no_deadline {
+        // "w/o T_ddl": the deadline mechanism is disabled — subscribers
+        // block (bounded here by a long poll so the loop can still
+        // observe shutdown).
+        60_000
+    } else {
+        cfg.train.t_ddl_ms.max(1)
+    });
+    let poll = Duration::from_millis(2);
+
+    let mut rng = Rng::new(cfg.seed);
+    let init = SplitParams::init(spec, &mut rng);
+
+    // Parameter servers hold the authoritative model; workers keep local
+    // replicas and re-sync at ΔT_t barriers (hierarchical asynchrony).
+    let ps_active = ParameterServer::new(init.active.clone(), lr, PsMode::Sync);
+    let ps_top = ParameterServer::new(init.top.clone(), lr, PsMode::Sync);
+    let ps_passive: Vec<ParameterServer> = init
+        .passive
+        .iter()
+        .map(|p| ParameterServer::new(p.clone(), lr, PsMode::Sync))
+        .collect();
+    let schedule = SemiAsyncSchedule {
+        delta_t0: cfg.train.delta_t0,
+        disabled: cfg.ablation.no_semi_async,
+    };
+
+    // Broker capacity: p/q scaled by subscriber pools (as in the sim).
+    let broker = Broker::new(
+        k,
+        cfg.train.buffer_p * w_a.max(1),
+        cfg.train.buffer_q * w_p.max(1),
+        Arc::clone(&metrics),
+    );
+
+    // GDP mechanism per passive party (Eq. 17).
+    let dp: Vec<Mutex<GaussianMechanism>> = (0..k)
+        .map(|p| {
+            Mutex::new(if cfg.dp.enabled && cfg.dp.mu.is_finite() {
+                GaussianMechanism::new(cfg.dp.mu, b, b, cfg.seed ^ (p as u64 + 1))
+            } else {
+                GaussianMechanism::disabled(cfg.seed)
+            })
+        })
+        .collect();
+
+    // Worker-local replicas, persisted across epochs.
+    let mut active_replicas: Vec<ActiveReplica> = (0..w_a)
+        .map(|_| ActiveReplica { active: init.active.clone(), top: init.top.clone() })
+        .collect();
+    let mut passive_replicas: Vec<Vec<MlpParams>> = (0..k)
+        .map(|p| (0..w_p).map(|_| init.passive[p].clone()).collect())
+        .collect();
+
+    let mut loss_curve = Vec::new();
+    let mut metric_curve = Vec::new();
+    let mut reached_target = false;
+    let mut epochs_run = 0usize;
+    let retried_total = Arc::new(AtomicUsize::new(0));
+    let sw = Stopwatch::start();
+
+    for epoch in 0..cfg.train.epochs {
+        epochs_run = epoch + 1;
+        let plan = BatchPlan::for_epoch(train.len(), b, epoch as u64, &mut rng);
+        let assignments: Vec<_> = plan.full_batches().cloned().collect();
+        let n_batches = assignments.len();
+        if n_batches == 0 {
+            break;
+        }
+        let rows_by_id: Arc<HashMap<u64, Vec<usize>>> = Arc::new(
+            assignments
+                .iter()
+                .map(|a| (a.batch_id, a.rows.clone()))
+                .collect(),
+        );
+
+        broker.reset();
+        // Per-party production queues (batch IDs to embed).
+        let queues: Vec<Mutex<Vec<u64>>> = (0..k)
+            .map(|_| Mutex::new(assignments.iter().rev().map(|a| a.batch_id).collect()))
+            .collect();
+        // Remaining passive-backward completions gate the epoch.
+        let remaining_bwd = AtomicUsize::new(n_batches * k);
+        let consumed = AtomicUsize::new(0);
+        let done = AtomicBool::new(false);
+        let epoch_loss = Mutex::new((0.0f64, 0usize));
+
+        std::thread::scope(|s| {
+            // ---- passive workers ------------------------------------
+            let mut passive_handles = Vec::new();
+            for (party, replicas) in passive_replicas.iter_mut().enumerate() {
+                for (wi, local) in replicas.iter_mut().enumerate() {
+                    let engine = Arc::clone(&engine);
+                    let broker = &broker;
+                    let metrics = Arc::clone(&metrics);
+                    let rows_by_id = Arc::clone(&rows_by_id);
+                    let queues = &queues;
+                    let dp = &dp;
+                    let remaining_bwd = &remaining_bwd;
+                    let done = &done;
+                    let train_ref = train;
+                    let _ = wi;
+                    passive_handles.push(s.spawn(move || {
+                        while !done.load(Ordering::Acquire) {
+                            // Priority 1: backward work from the gradient
+                            // channel.
+                            let waited = Instant::now();
+                            match broker.take_gradient(party, poll) {
+                                SubResult::Ok((id, gmsg)) => {
+                                    metrics.add_wait(waited.elapsed());
+                                    let rows = &rows_by_id[&id];
+                                    let x = train_ref.passive[party].x.take_rows(rows);
+                                    let t = Instant::now();
+                                    let mut g = engine.passive_bwd(party, local, &x, &gmsg.grad_z);
+                                    g.clip_norm(clip);
+                                    local.sgd_step(&g, lr);
+                                    metrics.add_busy(t.elapsed());
+                                    metrics.inc("passive_bwd", 1);
+                                    remaining_bwd.fetch_sub(1, Ordering::AcqRel);
+                                    continue;
+                                }
+                                SubResult::Closed => break,
+                                SubResult::TimedOut => {
+                                    metrics.add_wait(waited.elapsed());
+                                }
+                            }
+                            // Priority 2: produce the next embedding.
+                            let next = queues[party].lock().unwrap().pop();
+                            if let Some(id) = next {
+                                let rows = &rows_by_id[&id];
+                                let x = train_ref.passive[party].x.take_rows(rows);
+                                let t = Instant::now();
+                                let mut z = engine.passive_fwd(party, local, &x);
+                                dp[party].lock().unwrap().perturb(&mut z);
+                                metrics.add_busy(t.elapsed());
+                                let evicted = broker.publish_embedding(EmbeddingMsg {
+                                    batch_id: id,
+                                    party,
+                                    z,
+                                    produced_at: Instant::now(),
+                                    param_version: 0,
+                                });
+                                if let Some(old) = evicted {
+                                    // Buffer mechanism: reassign the
+                                    // evicted batch.
+                                    queues[party].lock().unwrap().push(old);
+                                }
+                            }
+                        }
+                    }));
+                }
+            }
+
+            // ---- active workers -------------------------------------
+            let mut active_handles = Vec::new();
+            for replica in active_replicas.iter_mut() {
+                let engine = Arc::clone(&engine);
+                let broker = &broker;
+                let metrics = Arc::clone(&metrics);
+                let rows_by_id = Arc::clone(&rows_by_id);
+                let queues = &queues;
+                let consumed = &consumed;
+                let done = &done;
+                let epoch_loss = &epoch_loss;
+                let retried = Arc::clone(&retried_total);
+                let train_ref = train;
+                active_handles.push(s.spawn(move || {
+                    while !done.load(Ordering::Acquire) {
+                        let waited = Instant::now();
+                        // Take any ready embedding from party 0, then
+                        // join the *same batch ID* from the other parties
+                        // (ID alignment is already guaranteed by the
+                        // batch plan both sides share after PSI).
+                        let (id, first) = match broker.take_embedding(0, t_ddl) {
+                            SubResult::Ok(v) => {
+                                metrics.add_wait(waited.elapsed());
+                                v
+                            }
+                            SubResult::Closed => break,
+                            SubResult::TimedOut => {
+                                metrics.add_wait(waited.elapsed());
+                                metrics.inc("deadline_expired", 1);
+                                retried.fetch_add(1, Ordering::Relaxed);
+                                continue;
+                            }
+                        };
+                        let mut zs: Vec<Matrix> = vec![first.z];
+                        let mut join_failed = false;
+                        for party in 1..broker.emb.len() {
+                            match broker.emb[party].subscribe(id, t_ddl) {
+                                SubResult::Ok(m) => zs.push(m.z),
+                                _ => {
+                                    join_failed = true;
+                                    break;
+                                }
+                            }
+                        }
+                        if join_failed {
+                            // Reassign the whole batch on every party.
+                            metrics.inc("deadline_expired", 1);
+                            retried.fetch_add(1, Ordering::Relaxed);
+                            for q in queues.iter() {
+                                q.lock().unwrap().push(id);
+                            }
+                            continue;
+                        }
+                        let rows = &rows_by_id[&id];
+                        let x_a = train_ref.active.x.take_rows(rows);
+                        let y: Vec<f32> = rows.iter().map(|&r| train_ref.y[r]).collect();
+                        let t = Instant::now();
+                        let mut out = engine.active_step(&replica.active, &replica.top, &x_a, &zs, &y);
+                        out.grad_active.clip_norm(clip);
+                        out.grad_top.clip_norm(clip);
+                        replica.active.sgd_step(&out.grad_active, lr);
+                        replica.top.sgd_step(&out.grad_top, lr);
+                        metrics.add_busy(t.elapsed());
+                        metrics.inc("active_steps", 1);
+                        {
+                            let mut l = epoch_loss.lock().unwrap();
+                            l.0 += out.loss;
+                            l.1 += 1;
+                        }
+                        for (party, gz) in out.grad_z.into_iter().enumerate() {
+                            broker.publish_gradient(GradientMsg {
+                                batch_id: id,
+                                party,
+                                grad_z: gz,
+                                produced_at: Instant::now(),
+                                loss: out.loss,
+                            });
+                        }
+                        consumed.fetch_add(1, Ordering::AcqRel);
+                    }
+                }));
+            }
+
+            // ---- epoch supervisor -----------------------------------
+            // Completion: all passive backward passes done. Reassign
+            // buffer-evicted batches as they surface.
+            loop {
+                if remaining_bwd.load(Ordering::Acquire) == 0 {
+                    break;
+                }
+                for id in broker.drain_dropped() {
+                    retried_total.fetch_add(1, Ordering::Relaxed);
+                    for q in &queues {
+                        q.lock().unwrap().push(id);
+                    }
+                }
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            done.store(true, Ordering::Release);
+            broker.close();
+            for h in passive_handles {
+                let _ = h.join();
+            }
+            for h in active_handles {
+                let _ = h.join();
+            }
+        });
+
+        // ---- semi-asynchronous PS barrier (Eq. 5) --------------------
+        if schedule.barrier_after_epoch(epoch) {
+            // Average worker replicas through the PS and broadcast.
+            let mean_a = mean_params(active_replicas.iter().map(|r| &r.active));
+            let mean_t = mean_params(active_replicas.iter().map(|r| &r.top));
+            ps_active.set_params(mean_a.clone());
+            ps_top.set_params(mean_t.clone());
+            for r in active_replicas.iter_mut() {
+                r.active = mean_a.clone();
+                r.top = mean_t.clone();
+            }
+            for (party, replicas) in passive_replicas.iter_mut().enumerate() {
+                let mean_p = mean_params(replicas.iter());
+                ps_passive[party].set_params(mean_p.clone());
+                for r in replicas.iter_mut() {
+                    *r = mean_p.clone();
+                }
+            }
+            metrics.inc("ps_barriers", 1);
+        }
+
+        // ---- bookkeeping + target check ------------------------------
+        let (lsum, lcnt) = *epoch_loss.lock().unwrap();
+        let mean_loss = if lcnt > 0 { lsum / lcnt as f64 } else { f64::NAN };
+        loss_curve.push((epoch as f64, mean_loss));
+        metrics.push_point("train_loss", epoch as f64, mean_loss);
+
+        let eval_params = current_params(&active_replicas, &passive_replicas);
+        let metric = evaluate(engine.as_ref(), &eval_params, test, b, task);
+        metric_curve.push((epoch as f64, metric));
+        metrics.push_point("eval_metric", epoch as f64, metric);
+        if reached(task, metric, cfg.train.target_accuracy) {
+            reached_target = true;
+            break;
+        }
+    }
+
+    let params = current_params(&active_replicas, &passive_replicas);
+    let final_metric = evaluate(engine.as_ref(), &params, test, b, task);
+    SessionResult {
+        params,
+        loss_curve,
+        metric_curve,
+        final_metric,
+        epochs_run,
+        reached_target,
+        wall: sw.elapsed(),
+        retried_batches: retried_total.load(Ordering::Relaxed),
+    }
+}
+
+/// Mean of parameter replicas.
+fn mean_params<'a>(mut it: impl Iterator<Item = &'a MlpParams>) -> MlpParams {
+    let first = it.next().expect("at least one replica").clone();
+    let mut acc = first;
+    let mut n = 1usize;
+    for p in it {
+        acc.axpy(1.0, p);
+        n += 1;
+    }
+    acc.scale(1.0 / n as f32);
+    acc
+}
+
+fn current_params(
+    active: &[ActiveReplica],
+    passive: &[Vec<MlpParams>],
+) -> SplitParams {
+    SplitParams {
+        active: mean_params(active.iter().map(|r| &r.active)),
+        top: mean_params(active.iter().map(|r| &r.top)),
+        passive: passive.iter().map(|ps| mean_params(ps.iter())).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, ModelSize};
+    use crate::data::{make_classification, ClassificationOpts};
+    use crate::model::HostSplitModel;
+
+    fn tiny_setup() -> (Arc<HostSplitModel>, SplitModelSpec, VerticalDataset, VerticalDataset, ExperimentConfig)
+    {
+        let mut rng = Rng::new(3);
+        let ds = make_classification(
+            &ClassificationOpts {
+                samples: 256,
+                features: 12,
+                informative: 8,
+                redundant: 2,
+                class_sep: 1.5,
+                flip_y: 0.0,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        let (tr, te) = ds.split(0.75);
+        let vtr = VerticalDataset::split_two(&tr, 6);
+        let vte = VerticalDataset::split_two(&te, 6);
+        let spec = SplitModelSpec::build(ModelSize::Small, 6, &[6], 16, 8);
+        let engine = Arc::new(HostSplitModel::new(spec.clone(), Task::BinaryClassification));
+        let mut cfg = ExperimentConfig::default();
+        cfg.train.batch_size = 32;
+        cfg.train.epochs = 6;
+        cfg.train.lr = 0.05;
+        cfg.train.target_accuracy = 0.995; // effectively run all epochs
+        cfg.parties.active_workers = 2;
+        cfg.parties.passive_workers = 2;
+        cfg.train.t_ddl_ms = 2000;
+        (engine, spec, vtr, vte, cfg)
+    }
+
+    #[test]
+    fn pubsub_session_learns() {
+        let (engine, spec, tr, te, cfg) = tiny_setup();
+        let metrics = Arc::new(Metrics::new());
+        let r = train_pubsub(engine, &spec, &tr, &te, &cfg, Arc::clone(&metrics));
+        assert_eq!(r.epochs_run, 6);
+        assert!(r.final_metric > 0.8, "AUC = {}", r.final_metric);
+        // Losses recorded and decreasing overall.
+        assert_eq!(r.loss_curve.len(), 6);
+        assert!(r.loss_curve[5].1 < r.loss_curve[0].1);
+        // All batches processed: 6 epochs × 6 full batches × fwd+bwd.
+        assert_eq!(metrics.counter("passive_bwd"), 36);
+        assert!(metrics.counter("active_steps") >= 36);
+        assert!(metrics.comm_mb() > 0.0);
+    }
+
+    #[test]
+    fn dp_enabled_still_learns_with_noise() {
+        let (engine, spec, tr, te, mut cfg) = tiny_setup();
+        cfg.dp.enabled = true;
+        cfg.dp.mu = 4.0;
+        let metrics = Arc::new(Metrics::new());
+        let r = train_pubsub(engine, &spec, &tr, &te, &cfg, metrics);
+        assert!(r.final_metric > 0.65, "AUC with DP = {}", r.final_metric);
+    }
+
+    #[test]
+    fn target_stops_early() {
+        let (engine, spec, tr, te, mut cfg) = tiny_setup();
+        cfg.train.target_accuracy = 0.55; // easy target
+        cfg.train.epochs = 20;
+        let metrics = Arc::new(Metrics::new());
+        let r = train_pubsub(engine, &spec, &tr, &te, &cfg, metrics);
+        assert!(r.reached_target);
+        assert!(r.epochs_run < 20);
+    }
+
+    #[test]
+    fn evaluate_chunks_and_reached() {
+        let (engine, spec, tr, _te, _cfg) = tiny_setup();
+        let mut rng = Rng::new(1);
+        let params = SplitParams::init(&spec, &mut rng);
+        let m = evaluate(engine.as_ref(), &params, &tr, 32, Task::BinaryClassification);
+        assert!((0.0..=1.0).contains(&m));
+        assert!(reached(Task::BinaryClassification, 0.95, 0.9));
+        assert!(!reached(Task::BinaryClassification, 0.85, 0.9));
+        assert!(reached(Task::Regression, 10.0, 12.0));
+        assert!(!reached(Task::Regression, 15.0, 12.0));
+    }
+}

@@ -1,0 +1,172 @@
+//! Dataset catalog: the five benchmark signatures from the paper
+//! (Table 6) plus the Criteo-mini scale study (Appendix H, Table 9).
+//!
+//! The real UCI/Kaggle files are not reachable offline, so each entry maps
+//! to a seeded synthetic generator with the same (samples, features, task)
+//! signature — see DESIGN.md §1 for the substitution argument. Systems
+//! metrics depend only on shapes; accuracy-table *ranking* is preserved
+//! because all five architectures train on identical data.
+
+use super::synth::{
+    make_classification, make_regression, ClassificationOpts, Dataset, RegressionOpts, Task,
+};
+use crate::util::Rng;
+
+/// A catalog entry mirroring Table 6 in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub samples: usize,
+    pub features: usize,
+    pub task: Task,
+    /// Human-readable domain, as in Table 6.
+    pub domain: &'static str,
+}
+
+/// All catalog entries.
+pub const CATALOG: [DatasetSpec; 6] = [
+    DatasetSpec {
+        name: "energy",
+        samples: 19_735,
+        features: 27,
+        task: Task::Regression,
+        domain: "Energy Efficiency",
+    },
+    DatasetSpec {
+        name: "blog",
+        samples: 60_021,
+        features: 280,
+        task: Task::Regression,
+        domain: "Social Media",
+    },
+    DatasetSpec {
+        name: "bank",
+        samples: 40_787,
+        features: 48,
+        task: Task::BinaryClassification,
+        domain: "Finance/Marketing",
+    },
+    DatasetSpec {
+        name: "credit",
+        samples: 30_000,
+        features: 23,
+        task: Task::BinaryClassification,
+        domain: "Finance",
+    },
+    DatasetSpec {
+        name: "synthetic",
+        samples: 1_000_000,
+        features: 500,
+        task: Task::BinaryClassification,
+        domain: "Synthetic (sklearn-style)",
+    },
+    DatasetSpec {
+        name: "criteo-mini",
+        samples: 200_000,
+        features: 39,
+        task: Task::BinaryClassification,
+        domain: "Click logs (Criteo 1TB scale study)",
+    },
+];
+
+/// Look up a catalog entry by name.
+pub fn spec(name: &str) -> Option<DatasetSpec> {
+    let name = name.to_ascii_lowercase();
+    CATALOG.iter().copied().find(|s| s.name == name)
+}
+
+/// Materialize a catalog dataset, optionally overriding sample/feature
+/// counts (0 = keep catalog default). `max_samples` caps generation so CI
+/// and examples stay fast — the full 1M-sample synthetic set is only built
+/// when explicitly requested.
+pub fn load(
+    name: &str,
+    samples_override: usize,
+    features_override: usize,
+    max_samples: usize,
+    seed: u64,
+) -> Option<Dataset> {
+    let s = spec(name)?;
+    let samples = if samples_override > 0 { samples_override } else { s.samples };
+    let samples = if max_samples > 0 { samples.min(max_samples) } else { samples };
+    let features = if features_override > 0 { features_override } else { s.features };
+    // Seed mixes the dataset name so different datasets differ even with
+    // the same experiment seed.
+    let tag = s.name.bytes().fold(0u64, |acc, b| acc.wrapping_mul(131).wrapping_add(b as u64));
+    let mut rng = Rng::new(seed ^ tag);
+    let ds = match s.task {
+        Task::BinaryClassification => {
+            let informative = (features * 3 / 5).max(2);
+            let redundant = (features / 5).min(features - informative);
+            make_classification(
+                &ClassificationOpts {
+                    samples,
+                    features,
+                    informative,
+                    redundant,
+                    clusters_per_class: 2,
+                    class_sep: 1.2,
+                    flip_y: 0.02,
+                },
+                &mut rng,
+            )
+        }
+        Task::Regression => {
+            let informative = (features * 3 / 5).max(2);
+            make_regression(
+                &RegressionOpts { samples, features, informative, noise: 5.0 },
+                &mut rng,
+            )
+        }
+    };
+    Some(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_matches_table6() {
+        assert_eq!(spec("energy").unwrap().samples, 19_735);
+        assert_eq!(spec("blog").unwrap().features, 280);
+        assert_eq!(spec("bank").unwrap().task, Task::BinaryClassification);
+        assert_eq!(spec("credit").unwrap().features, 23);
+        assert_eq!(spec("synthetic").unwrap().features, 500);
+        assert!(spec("nope").is_none());
+    }
+
+    #[test]
+    fn case_insensitive_lookup() {
+        assert!(spec("Bank").is_some());
+        assert!(spec("SYNTHETIC").is_some());
+    }
+
+    #[test]
+    fn load_caps_samples() {
+        let ds = load("synthetic", 0, 0, 1000, 42).unwrap();
+        assert_eq!(ds.len(), 1000);
+        assert_eq!(ds.x.cols, 500);
+    }
+
+    #[test]
+    fn load_overrides() {
+        let ds = load("bank", 500, 10, 0, 42).unwrap();
+        assert_eq!(ds.len(), 500);
+        assert_eq!(ds.x.cols, 10);
+    }
+
+    #[test]
+    fn different_datasets_differ_same_seed() {
+        let a = load("bank", 100, 10, 0, 1).unwrap();
+        let b = load("credit", 100, 10, 0, 1).unwrap();
+        assert_ne!(a.x.data, b.x.data);
+    }
+
+    #[test]
+    fn regression_datasets_are_regression() {
+        let ds = load("energy", 200, 0, 0, 7).unwrap();
+        assert_eq!(ds.task, Task::Regression);
+        assert_eq!(ds.x.cols, 27);
+    }
+}

@@ -1,0 +1,148 @@
+//! Tiny CSV reader/writer for numeric tables (loss curves, metric dumps,
+//! and importing user-provided datasets when they exist on disk).
+
+use crate::data::synth::{Dataset, Task};
+use crate::tensor::Matrix;
+use std::fmt::Write as _;
+use std::io::{self, BufRead, BufReader, Write};
+use std::path::Path;
+
+/// Write a numeric table with a header row.
+pub fn write_table(path: &Path, header: &[&str], rows: &[Vec<f64>]) -> io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut out = String::new();
+    out.push_str(&header.join(","));
+    out.push('\n');
+    for row in rows {
+        let mut first = true;
+        for v in row {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            let _ = write!(out, "{v}");
+        }
+        out.push('\n');
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(out.as_bytes())
+}
+
+/// Read a numeric table, returning (header, rows). Blank lines skipped.
+pub fn read_table(path: &Path) -> io::Result<(Vec<String>, Vec<Vec<f64>>)> {
+    let f = std::fs::File::open(path)?;
+    let mut lines = BufReader::new(f).lines();
+    let header = match lines.next() {
+        Some(h) => h?
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .collect::<Vec<_>>(),
+        None => return Ok((vec![], vec![])),
+    };
+    let mut rows = Vec::new();
+    for (i, line) in lines.enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        let row: Result<Vec<f64>, _> = t.split(',').map(|s| s.trim().parse::<f64>()).collect();
+        let row = row.map_err(|e| {
+            io::Error::new(io::ErrorKind::InvalidData, format!("line {}: {e}", i + 2))
+        })?;
+        if row.len() != header.len() {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("line {}: expected {} fields, got {}", i + 2, header.len(), row.len()),
+            ));
+        }
+        rows.push(row);
+    }
+    Ok((header, rows))
+}
+
+/// Load a dataset from CSV: last column is the target, the rest features.
+pub fn load_dataset(path: &Path, task: Task) -> io::Result<Dataset> {
+    let (header, rows) = read_table(path)?;
+    if header.len() < 2 {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "need >= 2 columns"));
+    }
+    let d = header.len() - 1;
+    let n = rows.len();
+    let mut x = Matrix::zeros(n, d);
+    let mut y = vec![0.0f32; n];
+    for (i, row) in rows.iter().enumerate() {
+        for j in 0..d {
+            *x.at_mut(i, j) = row[j] as f32;
+        }
+        y[i] = row[d] as f32;
+    }
+    Ok(Dataset { x, y, task })
+}
+
+/// Save a dataset as CSV (features + final `target` column).
+pub fn save_dataset(path: &Path, ds: &Dataset) -> io::Result<()> {
+    let mut header: Vec<String> = (0..ds.x.cols).map(|j| format!("f{j}")).collect();
+    header.push("target".into());
+    let href: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let rows: Vec<Vec<f64>> = (0..ds.len())
+        .map(|i| {
+            let mut row: Vec<f64> = ds.x.row(i).iter().map(|&v| v as f64).collect();
+            row.push(ds.y[i] as f64);
+            row
+        })
+        .collect();
+    write_table(path, &href, &rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{make_classification, ClassificationOpts};
+    use crate::util::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("pubsub_vfl_csv_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let p = tmp("t1.csv");
+        write_table(&p, &["a", "b"], &[vec![1.0, 2.0], vec![3.5, -4.0]]).unwrap();
+        let (h, rows) = read_table(&p).unwrap();
+        assert_eq!(h, vec!["a", "b"]);
+        assert_eq!(rows, vec![vec![1.0, 2.0], vec![3.5, -4.0]]);
+    }
+
+    #[test]
+    fn dataset_roundtrip() {
+        let ds = make_classification(
+            &ClassificationOpts { samples: 20, features: 4, informative: 2, redundant: 1, ..Default::default() },
+            &mut Rng::new(1),
+        );
+        let p = tmp("ds.csv");
+        save_dataset(&p, &ds).unwrap();
+        let back = load_dataset(&p, Task::BinaryClassification).unwrap();
+        assert_eq!(back.x.shape(), ds.x.shape());
+        assert_eq!(back.y.len(), ds.y.len());
+        assert!(back.x.max_abs_diff(&ds.x) < 1e-4);
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        let p = tmp("bad.csv");
+        std::fs::write(&p, "a,b\n1,2\n3\n").unwrap();
+        assert!(read_table(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_non_numeric() {
+        let p = tmp("bad2.csv");
+        std::fs::write(&p, "a,b\n1,hello\n").unwrap();
+        assert!(read_table(&p).is_err());
+    }
+}

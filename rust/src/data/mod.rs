@@ -1,0 +1,14 @@
+//! Data substrate: synthetic generators matched to the paper's benchmark
+//! signatures, vertical partitioning across parties, batch planning, and
+//! CSV I/O.
+
+pub mod catalog;
+pub mod csv;
+pub mod synth;
+pub mod vertical;
+
+pub use catalog::{load as load_catalog, spec as catalog_spec, DatasetSpec, CATALOG};
+pub use synth::{
+    make_classification, make_regression, ClassificationOpts, Dataset, RegressionOpts, Task,
+};
+pub use vertical::{BatchAssignment, BatchPlan, PartyView, VerticalDataset};

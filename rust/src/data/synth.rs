@@ -1,0 +1,319 @@
+//! Synthetic dataset generators: from-scratch equivalents of scikit-learn's
+//! `make_classification` and `make_regression`.
+//!
+//! The paper evaluates on four public tabular datasets plus a 1M×500
+//! sklearn-synthetic dataset; the public ones are not downloadable in this
+//! offline environment, so `catalog.rs` maps each to a generator call with
+//! the same (n, d, task) signature (substitution documented in DESIGN.md §1).
+
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+/// A supervised tabular dataset: features `x` (n × d) and targets `y` (n).
+/// For classification `y` is 0.0/1.0; for regression it is real-valued.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Matrix,
+    pub y: Vec<f32>,
+    pub task: Task,
+}
+
+/// Prediction task type.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    BinaryClassification,
+    Regression,
+}
+
+impl Task {
+    pub fn parse(s: &str) -> Option<Task> {
+        match s.to_ascii_lowercase().as_str() {
+            "classification" | "binary" | "auc" => Some(Task::BinaryClassification),
+            "regression" | "rmse" => Some(Task::Regression),
+            _ => None,
+        }
+    }
+}
+
+/// Options for [`make_classification`].
+#[derive(Clone, Debug)]
+pub struct ClassificationOpts {
+    pub samples: usize,
+    pub features: usize,
+    /// Features that carry class signal; the rest are noise/redundant.
+    pub informative: usize,
+    /// Redundant features = random linear combos of informative ones.
+    pub redundant: usize,
+    /// Cluster count per class (sklearn's n_clusters_per_class).
+    pub clusters_per_class: usize,
+    /// Class separation multiplier (larger = easier).
+    pub class_sep: f64,
+    /// Label-flip probability (sklearn's flip_y).
+    pub flip_y: f64,
+}
+
+impl Default for ClassificationOpts {
+    fn default() -> Self {
+        ClassificationOpts {
+            samples: 1000,
+            features: 20,
+            informative: 10,
+            redundant: 5,
+            clusters_per_class: 2,
+            class_sep: 1.0,
+            flip_y: 0.01,
+        }
+    }
+}
+
+/// Generate a binary classification problem: gaussian clusters on the
+/// vertices of a scaled hypercube in informative-feature space, plus
+/// redundant linear-combination features and pure-noise features, with the
+/// column order shuffled (so the VFL feature split mixes signal across
+/// parties, as in the paper's feature-heterogeneity experiments).
+pub fn make_classification(opts: &ClassificationOpts, rng: &mut Rng) -> Dataset {
+    let n = opts.samples;
+    let d = opts.features;
+    let inf = opts.informative.min(d);
+    let red = opts.redundant.min(d - inf);
+    let clusters = opts.clusters_per_class.max(1);
+
+    // Cluster centroids: random sign vertices scaled by class_sep.
+    let total_clusters = 2 * clusters;
+    let mut centroids = Vec::with_capacity(total_clusters);
+    for _ in 0..total_clusters {
+        let c: Vec<f64> = (0..inf)
+            .map(|_| if rng.flip(0.5) { opts.class_sep } else { -opts.class_sep })
+            .collect();
+        centroids.push(c);
+    }
+
+    let mut x = Matrix::zeros(n, d);
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let class = rng.below(2);
+        let cluster = rng.below(clusters);
+        let centroid = &centroids[class * clusters + cluster];
+        y[i] = class as f32;
+        let row = x.row_mut(i);
+        for (j, c) in centroid.iter().enumerate().take(inf) {
+            row[j] = (c + rng.gaussian()) as f32;
+        }
+    }
+
+    // Redundant features: random linear combinations of informative ones.
+    if red > 0 {
+        let mix = Matrix::randn(inf, red, 1.0, rng);
+        for i in 0..n {
+            for j in 0..red {
+                let mut acc = 0.0f32;
+                for p in 0..inf {
+                    acc += x.at(i, p) * mix.at(p, j);
+                }
+                *x.at_mut(i, inf + j) = acc;
+            }
+        }
+    }
+
+    // Remaining features: pure noise.
+    for i in 0..n {
+        let row = x.row_mut(i);
+        for v in row.iter_mut().skip(inf + red) {
+            *v = rng.gaussian() as f32;
+        }
+    }
+
+    // Label noise.
+    if opts.flip_y > 0.0 {
+        for l in y.iter_mut() {
+            if rng.flip(opts.flip_y) {
+                *l = 1.0 - *l;
+            }
+        }
+    }
+
+    // Shuffle the column order so signal is spread across the feature
+    // range (matters for vertical partitioning).
+    let perm = rng.permutation(d);
+    let x = x.take_cols(&perm);
+
+    Dataset { x, y, task: Task::BinaryClassification }
+}
+
+/// Options for [`make_regression`].
+#[derive(Clone, Debug)]
+pub struct RegressionOpts {
+    pub samples: usize,
+    pub features: usize,
+    pub informative: usize,
+    /// Gaussian observation-noise stddev.
+    pub noise: f64,
+}
+
+impl Default for RegressionOpts {
+    fn default() -> Self {
+        RegressionOpts { samples: 1000, features: 20, informative: 10, noise: 1.0 }
+    }
+}
+
+/// Generate a linear-with-noise regression problem (sklearn-style):
+/// `y = x[:, :informative] · w + ε`, column order shuffled.
+pub fn make_regression(opts: &RegressionOpts, rng: &mut Rng) -> Dataset {
+    let n = opts.samples;
+    let d = opts.features;
+    let inf = opts.informative.min(d);
+    let mut x = Matrix::zeros(n, d);
+    rng.fill_gaussian_f32(&mut x.data, 1.0);
+    let w: Vec<f64> = (0..inf).map(|_| rng.normal(0.0, 10.0)).collect();
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let mut acc = 0.0f64;
+        let row = x.row(i);
+        for (j, wj) in w.iter().enumerate() {
+            acc += row[j] as f64 * wj;
+        }
+        y[i] = (acc + rng.gaussian() * opts.noise) as f32;
+    }
+    let perm = rng.permutation(d);
+    let x = x.take_cols(&perm);
+    Dataset { x, y, task: Task::Regression }
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.x.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Shuffle rows in place (same permutation for x and y).
+    pub fn shuffle(&mut self, rng: &mut Rng) {
+        let perm = rng.permutation(self.len());
+        self.x = self.x.take_rows(&perm);
+        self.y = perm.iter().map(|&i| self.y[i]).collect();
+    }
+
+    /// Split into (train, test) with `train_frac` of the rows in train.
+    pub fn split(&self, train_frac: f64) -> (Dataset, Dataset) {
+        let n_train = ((self.len() as f64) * train_frac).round() as usize;
+        let n_train = n_train.min(self.len());
+        let train = Dataset {
+            x: self.x.slice_rows(0, n_train),
+            y: self.y[..n_train].to_vec(),
+            task: self.task,
+        };
+        let test = Dataset {
+            x: self.x.slice_rows(n_train, self.len()),
+            y: self.y[n_train..].to_vec(),
+            task: self.task,
+        };
+        (train, test)
+    }
+
+    /// Standardize features using train statistics; returns them.
+    pub fn standardize(&mut self) -> (Vec<f32>, Vec<f32>) {
+        self.x.standardize()
+    }
+
+    /// Fraction of positive labels (classification sanity checks).
+    pub fn positive_rate(&self) -> f64 {
+        if self.y.is_empty() {
+            return 0.0;
+        }
+        self.y.iter().filter(|&&v| v > 0.5).count() as f64 / self.y.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classification_shapes_and_balance() {
+        let mut rng = Rng::new(10);
+        let ds = make_classification(
+            &ClassificationOpts { samples: 2000, features: 30, ..Default::default() },
+            &mut rng,
+        );
+        assert_eq!(ds.x.shape(), (2000, 30));
+        assert_eq!(ds.y.len(), 2000);
+        let pos = ds.positive_rate();
+        assert!((0.4..0.6).contains(&pos), "pos={pos}");
+    }
+
+    #[test]
+    fn classification_is_learnable_by_linear_probe() {
+        // A crude signal test: class-conditional means must differ.
+        let mut rng = Rng::new(11);
+        let ds = make_classification(
+            &ClassificationOpts {
+                samples: 4000,
+                features: 10,
+                informative: 8,
+                redundant: 0,
+                class_sep: 2.0,
+                flip_y: 0.0,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        let mut m0 = vec![0.0f64; 10];
+        let mut m1 = vec![0.0f64; 10];
+        let (mut n0, mut n1) = (0usize, 0usize);
+        for i in 0..ds.len() {
+            let row = ds.x.row(i);
+            if ds.y[i] > 0.5 {
+                n1 += 1;
+                for (a, &v) in m1.iter_mut().zip(row) {
+                    *a += v as f64;
+                }
+            } else {
+                n0 += 1;
+                for (a, &v) in m0.iter_mut().zip(row) {
+                    *a += v as f64;
+                }
+            }
+        }
+        let gap: f64 = (0..10)
+            .map(|j| (m1[j] / n1 as f64 - m0[j] / n0 as f64).abs())
+            .sum();
+        assert!(gap > 1.0, "class-mean gap too small: {gap}");
+    }
+
+    #[test]
+    fn regression_correlates_with_targets() {
+        let mut rng = Rng::new(12);
+        let ds = make_regression(
+            &RegressionOpts { samples: 3000, features: 15, informative: 10, noise: 0.1 },
+            &mut rng,
+        );
+        assert_eq!(ds.x.shape(), (3000, 15));
+        let var = crate::util::stats::stddev(&ds.y.iter().map(|&v| v as f64).collect::<Vec<_>>());
+        assert!(var > 1.0, "regression targets look constant: std={var}");
+    }
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let opts = ClassificationOpts::default();
+        let a = make_classification(&opts, &mut Rng::new(5));
+        let b = make_classification(&opts, &mut Rng::new(5));
+        assert_eq!(a.x.data, b.x.data);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn split_and_shuffle() {
+        let mut rng = Rng::new(13);
+        let mut ds = make_classification(
+            &ClassificationOpts { samples: 100, features: 5, informative: 3, redundant: 1, ..Default::default() },
+            &mut rng,
+        );
+        ds.shuffle(&mut rng);
+        let (tr, te) = ds.split(0.7);
+        assert_eq!(tr.len(), 70);
+        assert_eq!(te.len(), 30);
+        assert_eq!(tr.x.cols, 5);
+    }
+}

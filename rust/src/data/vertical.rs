@@ -1,0 +1,224 @@
+//! Vertical (feature-wise) partitioning of a dataset across parties, and
+//! the batch plan that assigns the batch IDs used to label Pub/Sub
+//! channels (§4.1 of the paper).
+
+use super::synth::{Dataset, Task};
+use crate::tensor::Matrix;
+use crate::util::{ceil_div, Rng};
+
+/// One party's feature view of the shared (PSI-aligned) sample set.
+#[derive(Clone, Debug)]
+pub struct PartyView {
+    /// Column indices of the original dataset held by this party.
+    pub feature_idx: Vec<usize>,
+    /// This party's feature matrix over the aligned samples.
+    pub x: Matrix,
+}
+
+/// A vertically partitioned dataset: the active party holds labels plus its
+/// feature slice; each of `passive` holds a disjoint feature slice over the
+/// same (ID-aligned) samples.
+#[derive(Clone, Debug)]
+pub struct VerticalDataset {
+    pub active: PartyView,
+    pub passive: Vec<PartyView>,
+    pub y: Vec<f32>,
+    pub task: Task,
+}
+
+impl VerticalDataset {
+    /// Two-party split: the active party gets `active_features` columns
+    /// (0 ⇒ an even split) and the passive party gets the rest.
+    pub fn split_two(ds: &Dataset, active_features: usize) -> VerticalDataset {
+        let d = ds.x.cols;
+        let a = if active_features == 0 { d / 2 } else { active_features.min(d - 1) };
+        Self::split_multi(ds, a, 1)
+    }
+
+    /// Multi-party split: active gets `active_features` columns, the
+    /// remainder is divided as evenly as possible among `n_passive`
+    /// passive parties (Appendix H extension).
+    pub fn split_multi(ds: &Dataset, active_features: usize, n_passive: usize) -> VerticalDataset {
+        assert!(n_passive >= 1);
+        let d = ds.x.cols;
+        let a = if active_features == 0 { d / (n_passive + 1) } else { active_features };
+        let a = a.clamp(1, d - n_passive); // each passive party needs >= 1 feature
+        let active_idx: Vec<usize> = (0..a).collect();
+        let rest: Vec<usize> = (a..d).collect();
+        let per = ceil_div(rest.len(), n_passive);
+        let mut passive = Vec::with_capacity(n_passive);
+        for p in 0..n_passive {
+            let lo = (p * per).min(rest.len());
+            let hi = ((p + 1) * per).min(rest.len());
+            let idx: Vec<usize> = rest[lo..hi].to_vec();
+            assert!(!idx.is_empty(), "passive party {p} got no features (d={d}, k={n_passive})");
+            passive.push(PartyView { x: ds.x.take_cols(&idx), feature_idx: idx });
+        }
+        VerticalDataset {
+            active: PartyView { x: ds.x.take_cols(&active_idx), feature_idx: active_idx },
+            passive,
+            y: ds.y.clone(),
+            task: ds.task,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Feature dimensionality held by the active party.
+    pub fn d_active(&self) -> usize {
+        self.active.x.cols
+    }
+
+    /// Feature dimensionality held by passive party `p`.
+    pub fn d_passive(&self, p: usize) -> usize {
+        self.passive[p].x.cols
+    }
+
+    /// Total feature count across parties.
+    pub fn d_total(&self) -> usize {
+        self.d_active() + self.passive.iter().map(|p| p.x.cols).sum::<usize>()
+    }
+}
+
+/// A micro-batch assignment: `batch_id` labels the Pub/Sub channels, `rows`
+/// are aligned row indices shared by all parties (guaranteed identical on
+/// both sides by the PSI step).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BatchAssignment {
+    pub batch_id: u64,
+    pub rows: Vec<usize>,
+}
+
+/// The per-epoch batch plan: ⌈n/B⌉ batches with unique IDs (§4.1: "Given a
+/// total of n training samples and a batch size B, the system maintains
+/// ⌈n/B⌉ embedding and gradient channels").
+#[derive(Clone, Debug)]
+pub struct BatchPlan {
+    pub batches: Vec<BatchAssignment>,
+    pub batch_size: usize,
+}
+
+impl BatchPlan {
+    /// Build the epoch plan. `epoch` is mixed into batch IDs so IDs are
+    /// globally unique across epochs; row order is shuffled per epoch.
+    pub fn for_epoch(n: usize, batch_size: usize, epoch: u64, rng: &mut Rng) -> BatchPlan {
+        assert!(batch_size >= 1);
+        let perm = rng.permutation(n);
+        let n_batches = ceil_div(n, batch_size);
+        let mut batches = Vec::with_capacity(n_batches);
+        for b in 0..n_batches {
+            let lo = b * batch_size;
+            let hi = ((b + 1) * batch_size).min(n);
+            batches.push(BatchAssignment {
+                batch_id: epoch * 1_000_000 + b as u64,
+                rows: perm[lo..hi].to_vec(),
+            });
+        }
+        BatchPlan { batches, batch_size }
+    }
+
+    pub fn n_batches(&self) -> usize {
+        self.batches.len()
+    }
+
+    /// Only batches of exactly `batch_size` rows (the AOT artifacts have a
+    /// static batch dimension; the ragged tail batch is dropped, standard
+    /// `drop_last=True` semantics).
+    pub fn full_batches(&self) -> impl Iterator<Item = &BatchAssignment> {
+        let bs = self.batch_size;
+        self.batches.iter().filter(move |b| b.rows.len() == bs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{make_classification, ClassificationOpts};
+
+    fn tiny() -> Dataset {
+        make_classification(
+            &ClassificationOpts { samples: 64, features: 10, informative: 6, redundant: 2, ..Default::default() },
+            &mut Rng::new(1),
+        )
+    }
+
+    #[test]
+    fn two_party_split_covers_all_features_disjointly() {
+        let ds = tiny();
+        let v = VerticalDataset::split_two(&ds, 3);
+        assert_eq!(v.d_active(), 3);
+        assert_eq!(v.d_passive(0), 7);
+        assert_eq!(v.d_total(), 10);
+        let mut all: Vec<usize> = v.active.feature_idx.clone();
+        all.extend(&v.passive[0].feature_idx);
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn even_split_default() {
+        let ds = tiny();
+        let v = VerticalDataset::split_two(&ds, 0);
+        assert_eq!(v.d_active(), 5);
+        assert_eq!(v.d_passive(0), 5);
+    }
+
+    #[test]
+    fn multi_party_split() {
+        let ds = tiny();
+        let v = VerticalDataset::split_multi(&ds, 2, 4);
+        assert_eq!(v.passive.len(), 4);
+        assert_eq!(v.d_total(), 10);
+        for p in &v.passive {
+            assert!(!p.feature_idx.is_empty());
+        }
+    }
+
+    #[test]
+    fn party_views_match_source_columns() {
+        let ds = tiny();
+        let v = VerticalDataset::split_two(&ds, 4);
+        for r in 0..5 {
+            for (j, &c) in v.active.feature_idx.iter().enumerate() {
+                assert_eq!(v.active.x.at(r, j), ds.x.at(r, c));
+            }
+            for (j, &c) in v.passive[0].feature_idx.iter().enumerate() {
+                assert_eq!(v.passive[0].x.at(r, j), ds.x.at(r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn batch_plan_partitions_rows() {
+        let mut rng = Rng::new(2);
+        let plan = BatchPlan::for_epoch(100, 32, 3, &mut rng);
+        assert_eq!(plan.n_batches(), 4);
+        let mut all: Vec<usize> = plan.batches.iter().flat_map(|b| b.rows.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+        // IDs unique and epoch-scoped.
+        assert_eq!(plan.batches[0].batch_id, 3_000_000);
+        assert_eq!(plan.batches[3].batch_id, 3_000_003);
+    }
+
+    #[test]
+    fn full_batches_drop_ragged_tail() {
+        let mut rng = Rng::new(2);
+        let plan = BatchPlan::for_epoch(100, 32, 0, &mut rng);
+        assert_eq!(plan.full_batches().count(), 3);
+    }
+
+    #[test]
+    fn batch_plan_shuffles_per_epoch() {
+        let mut rng = Rng::new(7);
+        let a = BatchPlan::for_epoch(64, 16, 0, &mut rng);
+        let b = BatchPlan::for_epoch(64, 16, 1, &mut rng);
+        assert_ne!(a.batches[0].rows, b.batches[0].rows);
+    }
+}

@@ -1,0 +1,215 @@
+//! Gaussian Differential Privacy (GDP) protocol for embedding protection
+//! (§4.1 + Appendix C).
+//!
+//! The passive party perturbs every published embedding with calibrated
+//! Gaussian noise so that embedding-inversion attacks [49] cannot recover
+//! its private features. The noise scale follows Eq. (17):
+//!
+//! ```text
+//!     σ_dp = O(N_m · √K / (μ · N))
+//! ```
+//!
+//! where `N_m` is the worker minibatch size, `N` the whole batch size, `K`
+//! the number of queries answered so far (moments-accountant style), and μ
+//! the privacy budget. Smaller μ ⇒ more privacy ⇒ more noise ⇒ higher
+//! gradient variance ⇒ slower convergence — the trade-off quantified in
+//! Theorem D.1 and measured in Fig. 5.
+
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+/// GDP mechanism state: budget plus a query accountant.
+#[derive(Clone, Debug)]
+pub struct GaussianMechanism {
+    /// Privacy budget μ; `f64::INFINITY` disables noise.
+    pub mu: f64,
+    /// Worker minibatch size N_m.
+    pub minibatch: usize,
+    /// Whole batch size N.
+    pub batch: usize,
+    /// Queries answered so far (K in Eq. 17).
+    queries: u64,
+    /// Calibration constant folded into the O(·) of Eq. 17.
+    pub c: f64,
+    rng: Rng,
+}
+
+impl GaussianMechanism {
+    pub fn new(mu: f64, minibatch: usize, batch: usize, seed: u64) -> GaussianMechanism {
+        assert!(mu > 0.0, "privacy budget must be positive");
+        assert!(minibatch >= 1 && batch >= 1);
+        GaussianMechanism {
+            mu,
+            minibatch,
+            batch,
+            queries: 0,
+            c: 1.0,
+            rng: Rng::new(seed ^ 0x6470_5f6e_6f69_7365),
+        }
+    }
+
+    /// A mechanism that never adds noise (μ = ∞).
+    pub fn disabled(seed: u64) -> GaussianMechanism {
+        GaussianMechanism {
+            mu: f64::INFINITY,
+            minibatch: 1,
+            batch: 1,
+            queries: 0,
+            c: 1.0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.mu.is_finite()
+    }
+
+    /// Number of queries answered so far.
+    pub fn queries(&self) -> u64 {
+        self.queries
+    }
+
+    /// Current noise stddev per Eq. (17). Grows with √K as the accountant
+    /// charges each additional release.
+    pub fn sigma(&self) -> f64 {
+        if !self.is_enabled() {
+            return 0.0;
+        }
+        let k = (self.queries.max(1)) as f64;
+        self.c * (self.minibatch as f64) * k.sqrt() / (self.mu * self.batch as f64)
+    }
+
+    /// Perturb an embedding matrix in place, charging one query.
+    pub fn perturb(&mut self, emb: &mut Matrix) {
+        self.queries += 1;
+        if !self.is_enabled() {
+            return;
+        }
+        let sigma = self.sigma();
+        for v in &mut emb.data {
+            *v += (self.rng.gaussian() * sigma) as f32;
+        }
+    }
+
+    /// Perturb a flat slice (used on the gradient channel when symmetric
+    /// protection is configured).
+    pub fn perturb_slice(&mut self, xs: &mut [f32]) {
+        self.queries += 1;
+        if !self.is_enabled() {
+            return;
+        }
+        let sigma = self.sigma();
+        for v in xs {
+            *v += (self.rng.gaussian() * sigma) as f32;
+        }
+    }
+
+    /// The asymptotic error-floor inflation from Theorem D.1:
+    /// σ²_total = σ² + σ²_dp.
+    pub fn total_noise_var(&self, sigma_sgd: f64) -> f64 {
+        sigma_sgd * sigma_sgd + self.sigma() * self.sigma()
+    }
+}
+
+/// Convergence-slowdown model shared by the trainer and the simulator:
+/// relative to the noise-free run, the epochs-to-target multiplier implied
+/// by the D.1 error floor. Calibrated so μ=∞ ⇒ 1.0 and decreasing μ
+/// degrades smoothly (matches the Fig. 5 trend: comm cost grows as μ
+/// shrinks because convergence slows).
+pub fn dp_slowdown_factor(mu: f64) -> f64 {
+    if !mu.is_finite() {
+        return 1.0;
+    }
+    1.0 + 0.35 / mu.max(1e-3)
+}
+
+/// Accuracy penalty (absolute metric points) from the DP error floor,
+/// for the Fig. 5 accuracy row; bounded and smooth in μ.
+pub fn dp_accuracy_penalty(mu: f64) -> f64 {
+    if !mu.is_finite() {
+        return 0.0;
+    }
+    0.045 / (1.0 + mu)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_adds_no_noise() {
+        let mut m = GaussianMechanism::disabled(1);
+        let mut e = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let orig = e.clone();
+        m.perturb(&mut e);
+        assert_eq!(e, orig);
+        assert_eq!(m.sigma(), 0.0);
+    }
+
+    #[test]
+    fn sigma_scales_inversely_with_mu() {
+        let lo = GaussianMechanism::new(0.5, 32, 256, 1);
+        let hi = GaussianMechanism::new(8.0, 32, 256, 1);
+        // Same K (0 -> max(1)): smaller mu, bigger sigma.
+        assert!(lo.sigma() > hi.sigma());
+        assert!((lo.sigma() / hi.sigma() - 16.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sigma_grows_with_sqrt_queries() {
+        let mut m = GaussianMechanism::new(1.0, 32, 256, 2);
+        let mut e = Matrix::zeros(1, 8);
+        m.perturb(&mut e); // K = 1
+        let s1 = m.sigma();
+        for _ in 0..3 {
+            m.perturb(&mut e);
+        } // K = 4
+        let s4 = m.sigma();
+        assert!((s4 / s1 - 2.0).abs() < 1e-9, "sqrt scaling: {s1} {s4}");
+    }
+
+    #[test]
+    fn noise_has_expected_magnitude() {
+        let mut m = GaussianMechanism::new(1.0, 64, 64, 3);
+        m.c = 1.0;
+        let n = 40_000;
+        let mut e = Matrix::zeros(1, n);
+        m.perturb(&mut e);
+        let sigma = m.sigma();
+        let emp = (e.data.iter().map(|&v| (v as f64).powi(2)).sum::<f64>() / n as f64).sqrt();
+        assert!((emp / sigma - 1.0).abs() < 0.05, "emp={emp} want={sigma}");
+    }
+
+    #[test]
+    fn perturb_is_deterministic_per_seed() {
+        let mut a = GaussianMechanism::new(1.0, 8, 64, 7);
+        let mut b = GaussianMechanism::new(1.0, 8, 64, 7);
+        let mut ea = Matrix::zeros(2, 4);
+        let mut eb = Matrix::zeros(2, 4);
+        a.perturb(&mut ea);
+        b.perturb(&mut eb);
+        assert_eq!(ea, eb);
+    }
+
+    #[test]
+    fn slowdown_and_penalty_monotone() {
+        assert_eq!(dp_slowdown_factor(f64::INFINITY), 1.0);
+        assert!(dp_slowdown_factor(0.1) > dp_slowdown_factor(1.0));
+        assert!(dp_slowdown_factor(1.0) > dp_slowdown_factor(10.0));
+        assert_eq!(dp_accuracy_penalty(f64::INFINITY), 0.0);
+        assert!(dp_accuracy_penalty(0.1) > dp_accuracy_penalty(4.0));
+    }
+
+    #[test]
+    fn total_noise_var_combines() {
+        let m = GaussianMechanism::new(1.0, 32, 256, 1);
+        let s = m.sigma();
+        assert!((m.total_noise_var(0.5) - (0.25 + s * s)).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_mu_rejected() {
+        let _ = GaussianMechanism::new(0.0, 1, 1, 1);
+    }
+}

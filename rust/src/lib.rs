@@ -1,0 +1,48 @@
+//! # PubSub-VFL
+//!
+//! A production-shaped reproduction of *PubSub-VFL: Towards Efficient
+//! Two-Party Split Learning in Heterogeneous Environments via
+//! Publisher/Subscriber Architecture* (NeurIPS 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the Pub/Sub coordinator: batch-ID-keyed
+//!   embedding/gradient channels, per-party parameter servers with the
+//!   semi-asynchronous schedule of Eq. (5), the system profiler + planner
+//!   (Eq. 6–15, Algo. 2), the GDP protocol (Eq. 17), PSI alignment, the
+//!   four baselines, a discrete-event simulator, and the benchmark
+//!   harness that regenerates every table and figure in the paper.
+//! - **L2 (JAX)** — the split model (bottom MLPs + top MLP), AOT-lowered
+//!   once to HLO text by `python/compile/aot.py`.
+//! - **L1 (Pallas)** — the fused `linear+bias+activation` kernel called by
+//!   every L2 layer, validated against a pure-jnp oracle.
+//!
+//! Python never runs on the training path: the Rust binary loads
+//! `artifacts/*.hlo.txt` through PJRT (`runtime::XlaEngine`) and drives
+//! every training step itself. A pure-Rust `model::HostEngine` provides a
+//! numerics cross-check and powers the large parameter sweeps.
+
+pub mod attack;
+pub mod baselines;
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dp;
+pub mod jsonio;
+pub mod metrics;
+pub mod model;
+pub mod planner;
+pub mod profiler;
+pub mod prop;
+pub mod psi;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,12 @@
+//! Leader entrypoint: parse the CLI and dispatch (see `cli.rs`).
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match pubsub_vfl::cli::run(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! Metrics substrate: the bookkeeping behind every number the paper
+//! reports — running time, CPU utilization, per-epoch waiting time, and
+//! communication cost — plus generic counters/gauges/time-series and
+//! CSV/JSON reporters.
+
+use crate::jsonio::Json;
+use crate::util::Summary;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Thread-safe metrics registry shared by workers, PS, and the broker.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
+    series: Mutex<BTreeMap<String, Vec<(f64, f64)>>>,
+    /// Busy nanoseconds per logical core-owner (for CPU utilization).
+    busy_ns: AtomicU64,
+    /// Waiting nanoseconds (idle-while-blocked) across workers.
+    wait_ns: AtomicU64,
+    /// Bytes moved across the inter-party boundary.
+    comm_bytes: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    // ---- counters / gauges / series ------------------------------------
+
+    pub fn inc(&self, name: &str, by: u64) {
+        *self.counters.lock().unwrap().entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    pub fn set_gauge(&self, name: &str, v: f64) {
+        self.gauges.lock().unwrap().insert(name.to_string(), v);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.lock().unwrap().get(name).copied()
+    }
+
+    /// Append an (x, y) point to a named series (e.g. loss curve).
+    pub fn push_point(&self, name: &str, x: f64, y: f64) {
+        self.series
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .push((x, y));
+    }
+
+    pub fn series(&self, name: &str) -> Vec<(f64, f64)> {
+        self.series.lock().unwrap().get(name).cloned().unwrap_or_default()
+    }
+
+    pub fn series_summary(&self, name: &str) -> Summary {
+        let ys: Vec<f64> = self.series(name).iter().map(|&(_, y)| y).collect();
+        Summary::of(&ys)
+    }
+
+    // ---- the paper's four system metrics --------------------------------
+
+    /// Record `d` of useful compute on some worker.
+    pub fn add_busy(&self, d: Duration) {
+        self.busy_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Record `d` of blocked/waiting time on some worker.
+    pub fn add_wait(&self, d: Duration) {
+        self.wait_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// Record an inter-party transfer of `bytes`.
+    pub fn add_comm(&self, bytes: u64) {
+        self.comm_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn busy_secs(&self) -> f64 {
+        self.busy_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn wait_secs(&self) -> f64 {
+        self.wait_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn comm_mb(&self) -> f64 {
+        self.comm_bytes.load(Ordering::Relaxed) as f64 / (1024.0 * 1024.0)
+    }
+
+    /// CPU utilization = busy / (cores × wall). Capped at 1 (measurement
+    /// jitter can push the ratio slightly over on a loaded machine).
+    pub fn cpu_utilization(&self, cores: usize, wall: Duration) -> f64 {
+        let denom = cores as f64 * wall.as_secs_f64();
+        if denom <= 0.0 {
+            return 0.0;
+        }
+        (self.busy_secs() / denom).min(1.0)
+    }
+
+    /// Snapshot everything as JSON.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        let mut counters = Json::obj();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            counters.set(k, Json::Num(*v as f64));
+        }
+        let mut gauges = Json::obj();
+        for (k, v) in self.gauges.lock().unwrap().iter() {
+            gauges.set(k, Json::Num(*v));
+        }
+        let mut series = Json::obj();
+        for (k, pts) in self.series.lock().unwrap().iter() {
+            series.set(
+                k,
+                Json::Arr(
+                    pts.iter()
+                        .map(|&(x, y)| Json::Arr(vec![Json::Num(x), Json::Num(y)]))
+                        .collect(),
+                ),
+            );
+        }
+        o.set("counters", counters);
+        o.set("gauges", gauges);
+        o.set("series", series);
+        o.set("busy_secs", Json::Num(self.busy_secs()));
+        o.set("wait_secs", Json::Num(self.wait_secs()));
+        o.set("comm_mb", Json::Num(self.comm_mb()));
+        o
+    }
+}
+
+/// The headline row every experiment produces (one line of the paper's
+/// system-performance tables).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunReport {
+    pub name: String,
+    /// Final task metric: AUC (classification) or RMSE (regression).
+    pub metric: f64,
+    pub metric_name: String,
+    /// Wall-clock training time, seconds.
+    pub running_time_s: f64,
+    /// CPU utilization in [0, 1].
+    pub cpu_utilization: f64,
+    /// Mean per-epoch waiting time, seconds.
+    pub waiting_time_s: f64,
+    /// Total inter-party communication, MB.
+    pub comm_mb: f64,
+    /// Epochs actually run.
+    pub epochs: usize,
+    /// Did the run hit the target metric?
+    pub reached_target: bool,
+}
+
+impl RunReport {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", Json::Str(self.name.clone()));
+        o.set("metric", Json::Num(self.metric));
+        o.set("metric_name", Json::Str(self.metric_name.clone()));
+        o.set("running_time_s", Json::Num(self.running_time_s));
+        o.set("cpu_utilization", Json::Num(self.cpu_utilization));
+        o.set("waiting_time_s", Json::Num(self.waiting_time_s));
+        o.set("comm_mb", Json::Num(self.comm_mb));
+        o.set("epochs", Json::Num(self.epochs as f64));
+        o.set("reached_target", Json::Bool(self.reached_target));
+        o
+    }
+
+    /// Fixed-width table row used by the CLI and bench reporters.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<14} {:>10.4} {:>12.2} {:>8.2}% {:>12.4} {:>12.2}",
+            self.name,
+            self.metric,
+            self.running_time_s,
+            self.cpu_utilization * 100.0,
+            self.waiting_time_s,
+            self.comm_mb
+        )
+    }
+
+    /// Header matching [`RunReport::row`].
+    pub fn header() -> String {
+        format!(
+            "{:<14} {:>10} {:>12} {:>9} {:>12} {:>12}",
+            "method", "metric", "time(s)", "cpu", "wait(s)", "comm(MB)"
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let m = Metrics::new();
+        m.inc("batches", 3);
+        m.inc("batches", 2);
+        assert_eq!(m.counter("batches"), 5);
+        assert_eq!(m.counter("missing"), 0);
+        m.set_gauge("lr", 0.01);
+        assert_eq!(m.gauge("lr"), Some(0.01));
+    }
+
+    #[test]
+    fn utilization_formula() {
+        let m = Metrics::new();
+        m.add_busy(Duration::from_secs(8));
+        let u = m.cpu_utilization(4, Duration::from_secs(4));
+        assert!((u - 0.5).abs() < 1e-9);
+        // capped at 1
+        m.add_busy(Duration::from_secs(100));
+        assert_eq!(m.cpu_utilization(1, Duration::from_secs(1)), 1.0);
+    }
+
+    #[test]
+    fn comm_accounting() {
+        let m = Metrics::new();
+        m.add_comm(1024 * 1024 * 3);
+        assert!((m.comm_mb() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn series_and_summary() {
+        let m = Metrics::new();
+        for i in 0..5 {
+            m.push_point("loss", i as f64, 10.0 - i as f64);
+        }
+        let s = m.series("loss");
+        assert_eq!(s.len(), 5);
+        assert_eq!(m.series_summary("loss").n, 5);
+    }
+
+    #[test]
+    fn json_snapshot_parses() {
+        let m = Metrics::new();
+        m.inc("x", 1);
+        m.set_gauge("g", 2.5);
+        m.push_point("s", 0.0, 1.0);
+        let j = m.to_json();
+        let txt = j.pretty();
+        let back = Json::parse(&txt).unwrap();
+        assert_eq!(back.get("counters").unwrap().get("x").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn report_row_formats() {
+        let r = RunReport {
+            name: "PubSub-VFL".into(),
+            metric: 0.9287,
+            metric_name: "auc".into(),
+            running_time_s: 92.54,
+            cpu_utilization: 0.9107,
+            waiting_time_s: 1.1389,
+            comm_mb: 439.45,
+            epochs: 12,
+            reached_target: true,
+        };
+        let row = r.row();
+        assert!(row.contains("PubSub-VFL"));
+        assert!(row.contains("91.07"));
+        assert!(RunReport::header().contains("comm(MB)"));
+        assert_eq!(r.to_json().get("epochs").unwrap().as_usize(), Some(12));
+    }
+
+    #[test]
+    fn metrics_are_thread_safe() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let mut handles = vec![];
+        for _ in 0..4 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    m.inc("n", 1);
+                    m.add_comm(10);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.counter("n"), 4000);
+    }
+}

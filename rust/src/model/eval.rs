@@ -1,0 +1,117 @@
+//! Evaluation metrics: AUC for classification (Tables 1/7), RMSE for
+//! regression, plus accuracy for the parameter-sensitivity tables.
+
+use crate::tensor::Matrix;
+
+/// Area under the ROC curve via the rank statistic
+/// (Mann–Whitney U), with midrank tie handling.
+pub fn auc(scores: &[f32], labels: &[f32]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let n = scores.len();
+    if n == 0 {
+        return 0.5;
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| scores[a].total_cmp(&scores[b]));
+    // Midranks.
+    let mut ranks = vec![0.0f64; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        let mid = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            ranks[idx[k]] = mid;
+        }
+        i = j + 1;
+    }
+    let n_pos = labels.iter().filter(|&&l| l > 0.5).count();
+    let n_neg = n - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return 0.5;
+    }
+    let rank_sum_pos: f64 = (0..n).filter(|&i| labels[i] > 0.5).map(|i| ranks[i]).sum();
+    (rank_sum_pos - (n_pos * (n_pos + 1)) as f64 / 2.0) / (n_pos as f64 * n_neg as f64)
+}
+
+/// Root mean squared error.
+pub fn rmse(pred: &[f32], y: &[f32]) -> f64 {
+    assert_eq!(pred.len(), y.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = pred
+        .iter()
+        .zip(y.iter())
+        .map(|(&p, &t)| ((p - t) as f64).powi(2))
+        .sum();
+    (s / pred.len() as f64).sqrt()
+}
+
+/// Classification accuracy at a 0.0-logit threshold.
+pub fn accuracy(logits: &[f32], y: &[f32]) -> f64 {
+    assert_eq!(logits.len(), y.len());
+    if logits.is_empty() {
+        return 0.0;
+    }
+    let correct = logits
+        .iter()
+        .zip(y.iter())
+        .filter(|(&z, &t)| (z > 0.0) == (t > 0.5))
+        .count();
+    correct as f64 / logits.len() as f64
+}
+
+/// Extract the single prediction column of a logits matrix.
+pub fn column(m: &Matrix) -> Vec<f32> {
+    assert_eq!(m.cols, 1);
+    m.data.clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auc_perfect_and_inverted() {
+        let y = [0.0f32, 0.0, 1.0, 1.0];
+        assert!((auc(&[0.1, 0.2, 0.8, 0.9], &y) - 1.0).abs() < 1e-9);
+        assert!((auc(&[0.9, 0.8, 0.2, 0.1], &y) - 0.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn auc_random_is_half() {
+        let scores = [0.4f32, 0.4, 0.4, 0.4];
+        let y = [0.0f32, 1.0, 0.0, 1.0];
+        assert!((auc(&scores, &y) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn auc_handles_ties_with_midranks() {
+        let scores = [0.5f32, 0.5, 0.9];
+        let y = [0.0f32, 1.0, 1.0];
+        let a = auc(&scores, &y);
+        assert!((a - 0.75).abs() < 1e-9, "a={a}");
+    }
+
+    #[test]
+    fn auc_degenerate_labels() {
+        assert_eq!(auc(&[0.1, 0.9], &[1.0, 1.0]), 0.5);
+        assert_eq!(auc(&[], &[]), 0.5);
+    }
+
+    #[test]
+    fn rmse_basics() {
+        assert!((rmse(&[1.0, 2.0], &[1.0, 4.0]) - 2.0f64.sqrt()).abs() < 1e-9);
+        assert_eq!(rmse(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn accuracy_threshold() {
+        let logits = [2.0f32, -1.0, 0.5, -0.5];
+        let y = [1.0f32, 0.0, 0.0, 1.0];
+        assert!((accuracy(&logits, &y) - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,224 @@
+//! HostEngine: pure-Rust forward/backward for the MLP specs.
+//!
+//! This is the always-available reference engine: it cross-checks the
+//! PJRT/XLA path numerically (`rust/tests/runtime_parity.rs`), powers the
+//! big parameter sweeps where artifact shapes would explode, and acts as
+//! the "what the paper's PyTorch workers do" substrate for profiling.
+
+use super::params::MlpParams;
+use super::spec::MlpSpec;
+use crate::tensor::Matrix;
+
+/// Cached activations from a forward pass, needed for backward.
+#[derive(Clone, Debug)]
+pub struct ForwardCache {
+    /// Input to each layer (len = n_layers).
+    pub inputs: Vec<Matrix>,
+    /// Pre-activation of each layer.
+    pub pres: Vec<Matrix>,
+    /// Final output.
+    pub out: Matrix,
+}
+
+/// Forward pass without caching (inference).
+pub fn forward(spec: &MlpSpec, params: &MlpParams, x: &Matrix) -> Matrix {
+    let mut h = x.clone();
+    for (i, l) in spec.layers.iter().enumerate() {
+        let mut pre = h.matmul(&params.weights[i]);
+        pre.add_bias(&params.biases[i]);
+        let mut y = pre;
+        y.map_inplace(|v| l.act.apply(v));
+        if l.residual {
+            y.axpy(1.0, &h);
+        }
+        h = y;
+    }
+    h
+}
+
+/// Forward pass with cache for backprop.
+pub fn forward_cached(spec: &MlpSpec, params: &MlpParams, x: &Matrix) -> ForwardCache {
+    let mut inputs = Vec::with_capacity(spec.layers.len());
+    let mut pres = Vec::with_capacity(spec.layers.len());
+    let mut h = x.clone();
+    for (i, l) in spec.layers.iter().enumerate() {
+        inputs.push(h.clone());
+        let mut pre = h.matmul(&params.weights[i]);
+        pre.add_bias(&params.biases[i]);
+        pres.push(pre.clone());
+        let mut y = pre;
+        y.map_inplace(|v| l.act.apply(v));
+        if l.residual {
+            y.axpy(1.0, &h);
+        }
+        h = y;
+    }
+    ForwardCache { inputs, pres, out: h }
+}
+
+/// Backward pass: given `d_out = dL/d(output)`, produce parameter
+/// gradients and `dL/d(input)` (the cut-layer gradient when this MLP is a
+/// bottom model).
+pub fn backward(
+    spec: &MlpSpec,
+    params: &MlpParams,
+    cache: &ForwardCache,
+    d_out: &Matrix,
+) -> (MlpParams, Matrix) {
+    let mut grads = params.zeros_like();
+    let mut dy = d_out.clone();
+    for i in (0..spec.layers.len()).rev() {
+        let l = &spec.layers[i];
+        let pre = &cache.pres[i];
+        let x_in = &cache.inputs[i];
+        // dpre = dy ⊙ act'(pre)
+        let mut dpre = dy.clone();
+        for (dv, (&p, &d)) in dpre
+            .data
+            .iter_mut()
+            .zip(pre.data.iter().zip(dy.data.iter()))
+        {
+            let y = l.act.apply(p);
+            *dv = d * l.act.grad(p, y);
+        }
+        // dW = x_in^T @ dpre ; db = colsum(dpre)
+        grads.weights[i] = x_in.matmul_at(&dpre);
+        grads.biases[i] = dpre.col_sum();
+        // dx = dpre @ W^T (+ dy if residual skip)
+        let mut dx = dpre.matmul_bt(&params.weights[i]);
+        if l.residual {
+            dx.axpy(1.0, &dy);
+        }
+        dy = dx;
+    }
+    (grads, dy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::{Activation, MlpSpec};
+    use crate::util::Rng;
+
+    /// Numerical gradient check for a scalar loss L = sum(out ⊙ G).
+    fn check_grads(spec: &MlpSpec, seed: u64, tol: f32) {
+        let mut rng = Rng::new(seed);
+        let params = MlpParams::init(spec, &mut rng);
+        let x = Matrix::randn(4, spec.in_dim(), 1.0, &mut rng);
+        let g_out = Matrix::randn(4, spec.out_dim(), 1.0, &mut rng);
+
+        let cache = forward_cached(spec, &params, &x);
+        let (grads, dx) = backward(spec, &params, &cache, &g_out);
+
+        let loss = |p: &MlpParams, xx: &Matrix| -> f64 {
+            let out = forward(spec, p, xx);
+            out.data
+                .iter()
+                .zip(g_out.data.iter())
+                .map(|(&o, &g)| (o as f64) * (g as f64))
+                .sum()
+        };
+
+        let eps = 1e-3f32;
+        // Check a handful of weight coordinates in each layer.
+        for li in 0..spec.layers.len() {
+            for &(r, c) in &[(0usize, 0usize)] {
+                let mut p2 = params.clone();
+                *p2.weights[li].at_mut(r, c) += eps;
+                let lp = loss(&p2, &x);
+                *p2.weights[li].at_mut(r, c) -= 2.0 * eps;
+                let lm = loss(&p2, &x);
+                let num = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                let ana = grads.weights[li].at(r, c);
+                assert!(
+                    (num - ana).abs() < tol * (1.0 + num.abs()),
+                    "layer {li} W[{r},{c}]: numerical {num} vs analytic {ana}"
+                );
+            }
+            // One bias coordinate.
+            let mut p2 = params.clone();
+            p2.biases[li][0] += eps;
+            let lp = loss(&p2, &x);
+            p2.biases[li][0] -= 2.0 * eps;
+            let lm = loss(&p2, &x);
+            let num = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            let ana = grads.biases[li][0];
+            assert!(
+                (num - ana).abs() < tol * (1.0 + num.abs()),
+                "layer {li} b[0]: numerical {num} vs analytic {ana}"
+            );
+        }
+        // Input gradient (the cut-layer gradient path).
+        let mut x2 = x.clone();
+        *x2.at_mut(0, 0) += eps;
+        let lp = loss(&params, &x2);
+        *x2.at_mut(0, 0) -= 2.0 * eps;
+        let lm = loss(&params, &x2);
+        let num = ((lp - lm) / (2.0 * eps as f64)) as f32;
+        let ana = dx.at(0, 0);
+        assert!(
+            (num - ana).abs() < tol * (1.0 + num.abs()),
+            "dx[0,0]: numerical {num} vs analytic {ana}"
+        );
+    }
+
+    #[test]
+    fn grads_dense_relu() {
+        check_grads(&MlpSpec::dense(&[5, 8, 3], Activation::Linear), 1, 2e-2);
+    }
+
+    #[test]
+    fn grads_dense_tanh_head() {
+        check_grads(&MlpSpec::dense(&[4, 6, 2], Activation::Tanh), 2, 2e-2);
+    }
+
+    #[test]
+    fn grads_residual() {
+        check_grads(&MlpSpec::residual(5, 8, 3, 2), 3, 2e-2);
+    }
+
+    #[test]
+    fn forward_and_cached_agree() {
+        let mut rng = Rng::new(4);
+        let spec = MlpSpec::residual(6, 10, 4, 3);
+        let params = MlpParams::init(&spec, &mut rng);
+        let x = Matrix::randn(7, 6, 1.0, &mut rng);
+        let a = forward(&spec, &params, &x);
+        let b = forward_cached(&spec, &params, &x);
+        assert!(a.max_abs_diff(&b.out) < 1e-6);
+        assert_eq!(b.inputs.len(), spec.layers.len());
+    }
+
+    #[test]
+    fn relu_blocks_negative_preactivation_grads() {
+        // Single relu layer with forced-negative pre-activations: grads 0.
+        let spec = MlpSpec::dense(&[2, 2], Activation::Relu);
+        let mut rng = Rng::new(5);
+        let mut params = MlpParams::init(&spec, &mut rng);
+        params.biases[0] = vec![-100.0, -100.0];
+        let x = Matrix::randn(3, 2, 0.1, &mut rng);
+        let cache = forward_cached(&spec, &params, &x);
+        assert!(cache.out.data.iter().all(|&v| v == 0.0));
+        let g = Matrix::from_vec(3, 2, vec![1.0; 6]);
+        let (grads, dx) = backward(&spec, &params, &cache, &g);
+        assert!(grads.weights[0].data.iter().all(|&v| v == 0.0));
+        assert!(dx.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn batch_rows_independent() {
+        // Forward of a 2-row batch equals stacking two 1-row forwards.
+        let spec = MlpSpec::dense(&[3, 5, 2], Activation::Linear);
+        let mut rng = Rng::new(6);
+        let params = MlpParams::init(&spec, &mut rng);
+        let x = Matrix::randn(2, 3, 1.0, &mut rng);
+        let full = forward(&spec, &params, &x);
+        for r in 0..2 {
+            let row = x.slice_rows(r, r + 1);
+            let single = forward(&spec, &params, &row);
+            for c in 0..2 {
+                assert!((full.at(r, c) - single.at(0, c)).abs() < 1e-5);
+            }
+        }
+    }
+}

@@ -1,0 +1,103 @@
+//! Loss functions (Eq. 1) with analytic gradients w.r.t. the model logits.
+
+use crate::tensor::Matrix;
+
+/// Numerically stable sigmoid.
+pub fn sigmoid(z: f32) -> f32 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Binary cross-entropy **with logits** (Eq. 1, computed stably):
+/// `L = mean( max(z,0) − z·y + ln(1 + e^{−|z|}) )`.
+/// Returns `(loss, dL/dz)` where the gradient is `(σ(z) − y)/n`.
+pub fn bce_with_logits(logits: &Matrix, y: &[f32]) -> (f64, Matrix) {
+    assert_eq!(logits.cols, 1, "binary head expects a single logit column");
+    assert_eq!(logits.rows, y.len());
+    let n = y.len().max(1) as f64;
+    let mut loss = 0.0f64;
+    let mut grad = Matrix::zeros(logits.rows, 1);
+    for i in 0..logits.rows {
+        let z = logits.at(i, 0);
+        let t = y[i];
+        let zl = z as f64;
+        loss += zl.max(0.0) - zl * t as f64 + (1.0 + (-zl.abs()).exp()).ln();
+        *grad.at_mut(i, 0) = (sigmoid(z) - t) / n as f32;
+    }
+    (loss / n, grad)
+}
+
+/// Mean squared error: `L = mean((z − y)^2)`, gradient `2(z − y)/n`.
+pub fn mse(pred: &Matrix, y: &[f32]) -> (f64, Matrix) {
+    assert_eq!(pred.cols, 1);
+    assert_eq!(pred.rows, y.len());
+    let n = y.len().max(1) as f64;
+    let mut loss = 0.0f64;
+    let mut grad = Matrix::zeros(pred.rows, 1);
+    for i in 0..pred.rows {
+        let d = pred.at(i, 0) - y[i];
+        loss += (d as f64) * (d as f64);
+        *grad.at_mut(i, 0) = 2.0 * d / n as f32;
+    }
+    (loss / n, grad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_basics() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-7);
+        assert!(sigmoid(50.0) > 0.999_999);
+        assert!(sigmoid(-50.0) < 1e-6);
+        // Stability at extreme values: no NaN.
+        assert!(sigmoid(1e4).is_finite());
+        assert!(sigmoid(-1e4).is_finite());
+    }
+
+    #[test]
+    fn bce_perfect_prediction_near_zero() {
+        let logits = Matrix::from_vec(2, 1, vec![20.0, -20.0]);
+        let (l, _) = bce_with_logits(&logits, &[1.0, 0.0]);
+        assert!(l < 1e-6, "loss={l}");
+    }
+
+    #[test]
+    fn bce_gradient_matches_numerical() {
+        let y = [1.0f32, 0.0, 1.0];
+        let logits = Matrix::from_vec(3, 1, vec![0.3, -0.8, 1.2]);
+        let (_, g) = bce_with_logits(&logits, &y);
+        let eps = 1e-3f32;
+        for i in 0..3 {
+            let mut lp = logits.clone();
+            *lp.at_mut(i, 0) += eps;
+            let (l1, _) = bce_with_logits(&lp, &y);
+            *lp.at_mut(i, 0) -= 2.0 * eps;
+            let (l0, _) = bce_with_logits(&lp, &y);
+            let num = ((l1 - l0) / (2.0 * eps as f64)) as f32;
+            assert!((num - g.at(i, 0)).abs() < 1e-3, "i={i} num={num} ana={}", g.at(i, 0));
+        }
+    }
+
+    #[test]
+    fn bce_at_zero_logits_is_ln2() {
+        let logits = Matrix::zeros(4, 1);
+        let (l, g) = bce_with_logits(&logits, &[1.0, 0.0, 1.0, 0.0]);
+        assert!((l - (2.0f64).ln()).abs() < 1e-6);
+        assert!((g.at(0, 0) + 0.125).abs() < 1e-6); // (0.5-1)/4
+    }
+
+    #[test]
+    fn mse_and_gradient() {
+        let pred = Matrix::from_vec(2, 1, vec![3.0, -1.0]);
+        let (l, g) = mse(&pred, &[1.0, -1.0]);
+        assert!((l - 2.0).abs() < 1e-6); // (4 + 0)/2
+        assert!((g.at(0, 0) - 2.0).abs() < 1e-6); // 2*2/2
+        assert!((g.at(1, 0) - 0.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,16 @@
+//! Model layer: specs, parameters, the pure-Rust host engine, losses,
+//! metrics, and the [`SplitEngine`] contract shared with the PJRT runtime.
+
+pub mod eval;
+pub mod host;
+pub mod loss;
+pub mod params;
+pub mod spec;
+pub mod split;
+
+pub use eval::{accuracy, auc, rmse};
+pub use host::{backward, forward, forward_cached, ForwardCache};
+pub use loss::{bce_with_logits, mse, sigmoid};
+pub use params::MlpParams;
+pub use spec::{Activation, LayerSpec, MlpSpec, SplitModelSpec};
+pub use split::{ActiveStepOut, HostSplitModel, SplitEngine, SplitParams};

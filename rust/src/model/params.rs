@@ -1,0 +1,239 @@
+//! Parameter storage and the flat-buffer layout contract shared with the
+//! JAX side (`python/compile/model.py` orders its pytree leaves
+//! identically; asserted end-to-end in `rust/tests/runtime_parity.rs`).
+
+use super::spec::MlpSpec;
+use crate::tensor::Matrix;
+use crate::util::Rng;
+
+/// Parameters of one MLP: per layer a weight matrix `(in, out)` and a bias
+/// vector `(out,)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MlpParams {
+    pub weights: Vec<Matrix>,
+    pub biases: Vec<Vec<f32>>,
+}
+
+impl MlpParams {
+    /// He/Kaiming-style init: W ~ N(0, sqrt(2/in_dim)), b = 0. Matches
+    /// `init_mlp` in `python/compile/model.py` in distribution (the exact
+    /// draws differ; parity tests load parameters from one side).
+    pub fn init(spec: &MlpSpec, rng: &mut Rng) -> MlpParams {
+        let mut weights = Vec::with_capacity(spec.layers.len());
+        let mut biases = Vec::with_capacity(spec.layers.len());
+        for l in &spec.layers {
+            let std = (2.0 / l.in_dim as f64).sqrt();
+            weights.push(Matrix::randn(l.in_dim, l.out_dim, std, rng));
+            biases.push(vec![0.0; l.out_dim]);
+        }
+        MlpParams { weights, biases }
+    }
+
+    /// All-zero parameters with the same shapes (gradient accumulators).
+    pub fn zeros_like(&self) -> MlpParams {
+        MlpParams {
+            weights: self
+                .weights
+                .iter()
+                .map(|w| Matrix::zeros(w.rows, w.cols))
+                .collect(),
+            biases: self.biases.iter().map(|b| vec![0.0; b.len()]).collect(),
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Total scalar count.
+    pub fn len(&self) -> usize {
+        self.weights.iter().map(|w| w.data.len()).sum::<usize>()
+            + self.biases.iter().map(|b| b.len()).sum::<usize>()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Serialize to the flat layout `[W_0, b_0, W_1, b_1, ...]`, W row
+    /// major. This is the exact order of the PJRT executable's parameter
+    /// arguments.
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.len());
+        for i in 0..self.n_layers() {
+            out.extend_from_slice(&self.weights[i].data);
+            out.extend_from_slice(&self.biases[i]);
+        }
+        out
+    }
+
+    /// Inverse of [`flatten`]; `spec` supplies the shapes.
+    pub fn unflatten(spec: &MlpSpec, flat: &[f32]) -> MlpParams {
+        let mut weights = Vec::with_capacity(spec.layers.len());
+        let mut biases = Vec::with_capacity(spec.layers.len());
+        let mut off = 0usize;
+        for l in &spec.layers {
+            let wlen = l.in_dim * l.out_dim;
+            weights.push(Matrix::from_vec(
+                l.in_dim,
+                l.out_dim,
+                flat[off..off + wlen].to_vec(),
+            ));
+            off += wlen;
+            biases.push(flat[off..off + l.out_dim].to_vec());
+            off += l.out_dim;
+        }
+        assert_eq!(off, flat.len(), "flat buffer length mismatch");
+        MlpParams { weights, biases }
+    }
+
+    /// `self += alpha * other` (gradient accumulation / averaging).
+    pub fn axpy(&mut self, alpha: f32, other: &MlpParams) {
+        assert_eq!(self.n_layers(), other.n_layers());
+        for i in 0..self.n_layers() {
+            self.weights[i].axpy(alpha, &other.weights[i]);
+            for (b, &g) in self.biases[i].iter_mut().zip(other.biases[i].iter()) {
+                *b += alpha * g;
+            }
+        }
+    }
+
+    /// `self *= alpha`.
+    pub fn scale(&mut self, alpha: f32) {
+        for w in &mut self.weights {
+            w.scale(alpha);
+        }
+        for b in &mut self.biases {
+            for v in b {
+                *v *= alpha;
+            }
+        }
+    }
+
+    /// Plain SGD step: `θ ← θ − η·g` (Eq. 2).
+    pub fn sgd_step(&mut self, grads: &MlpParams, lr: f32) {
+        self.axpy(-lr, grads);
+    }
+
+    /// Clip to a maximum global L2 norm (gradient clipping); returns the
+    /// pre-clip norm. No-op when `max_norm <= 0`.
+    pub fn clip_norm(&mut self, max_norm: f32) -> f32 {
+        let n = self.norm() as f32;
+        if max_norm > 0.0 && n > max_norm {
+            self.scale(max_norm / n);
+        }
+        n
+    }
+
+    /// L2 norm of all parameters (divergence checks).
+    pub fn norm(&self) -> f64 {
+        let mut acc = 0.0f64;
+        for w in &self.weights {
+            acc += w.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+        }
+        for b in &self.biases {
+            acc += b.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+        }
+        acc.sqrt()
+    }
+
+    /// Max |a-b| across all parameters (parity checks).
+    pub fn max_abs_diff(&self, other: &MlpParams) -> f32 {
+        let mut m = 0.0f32;
+        for i in 0..self.n_layers() {
+            m = m.max(self.weights[i].max_abs_diff(&other.weights[i]));
+            for (a, b) in self.biases[i].iter().zip(other.biases[i].iter()) {
+                m = m.max((a - b).abs());
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::spec::Activation;
+
+    fn spec() -> MlpSpec {
+        MlpSpec::dense(&[6, 8, 4], Activation::Linear)
+    }
+
+    #[test]
+    fn init_shapes() {
+        let s = spec();
+        let p = MlpParams::init(&s, &mut Rng::new(1));
+        assert_eq!(p.n_layers(), 2);
+        assert_eq!(p.weights[0].shape(), (6, 8));
+        assert_eq!(p.biases[1].len(), 4);
+        assert_eq!(p.len(), s.param_count());
+        assert!(p.biases[0].iter().all(|&b| b == 0.0));
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let s = spec();
+        let p = MlpParams::init(&s, &mut Rng::new(2));
+        let flat = p.flatten();
+        assert_eq!(flat.len(), p.len());
+        let back = MlpParams::unflatten(&s, &flat);
+        assert_eq!(p, back);
+    }
+
+    #[test]
+    fn flatten_order_is_w_then_b() {
+        let s = MlpSpec::dense(&[2, 1], Activation::Linear);
+        let mut p = MlpParams::init(&s, &mut Rng::new(3));
+        p.weights[0] = Matrix::from_vec(2, 1, vec![10.0, 20.0]);
+        p.biases[0] = vec![30.0];
+        assert_eq!(p.flatten(), vec![10.0, 20.0, 30.0]);
+    }
+
+    #[test]
+    fn sgd_step_moves_against_gradient() {
+        let s = spec();
+        let mut p = MlpParams::init(&s, &mut Rng::new(4));
+        let before = p.weights[0].at(0, 0);
+        let mut g = p.zeros_like();
+        *g.weights[0].at_mut(0, 0) = 2.0;
+        p.sgd_step(&g, 0.5);
+        assert!((p.weights[0].at(0, 0) - (before - 1.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn axpy_scale_norm() {
+        let s = spec();
+        let p = MlpParams::init(&s, &mut Rng::new(5));
+        let mut q = p.zeros_like();
+        q.axpy(2.0, &p);
+        q.scale(0.5);
+        assert!(q.max_abs_diff(&p) < 1e-6);
+        assert!(p.norm() > 0.0);
+    }
+
+    #[test]
+    fn clip_norm_caps_global_norm() {
+        let s = spec();
+        let mut g = MlpParams::init(&s, &mut Rng::new(9));
+        g.scale(100.0);
+        let pre = g.clip_norm(5.0);
+        assert!(pre > 5.0);
+        assert!((g.norm() - 5.0).abs() < 1e-3, "norm={}", g.norm());
+        // Below threshold: untouched.
+        let mut h = g.clone();
+        h.clip_norm(50.0);
+        assert_eq!(h, g);
+        // Disabled.
+        let mut k = g.clone();
+        k.scale(100.0);
+        k.clip_norm(0.0);
+        assert!(k.norm() > 100.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn unflatten_wrong_length_panics() {
+        let s = spec();
+        let _ = MlpParams::unflatten(&s, &[0.0; 3]);
+    }
+}

@@ -1,0 +1,307 @@
+//! Model specifications shared by the Rust host engine, the PJRT runtime,
+//! and (via `artifacts/manifest.json`) the JAX side.
+//!
+//! The split model (§3) is:
+//!
+//! ```text
+//!   passive bottom  f_p : R^{d_p} -> R^{E}     (10-layer MLP / res-MLP)
+//!   active  bottom  f_a : R^{d_a} -> R^{E}
+//!   top             g   : R^{(k+1)·E} -> R     (2-layer MLP, active side)
+//! ```
+//!
+//! The **parameter layout contract**: parameters are an ordered flat list
+//! of arrays, `[W_0, b_0, W_1, b_1, ...]` per sub-model, with `W_i` row
+//! major `(in, out)`. `python/compile/model.py` uses the identical order,
+//! which is what lets Rust feed PJRT executables and the host engine from
+//! the same buffers.
+
+use crate::config::ModelSize;
+
+/// Activation functions supported by every layer implementation
+/// (host engine, Pallas kernel, and jnp oracle must all agree).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Activation {
+    Relu,
+    Tanh,
+    /// Identity (cut layer and regression/logit heads).
+    Linear,
+}
+
+impl Activation {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Activation::Relu => "relu",
+            Activation::Tanh => "tanh",
+            Activation::Linear => "linear",
+        }
+    }
+
+    pub fn apply(&self, x: f32) -> f32 {
+        match self {
+            Activation::Relu => x.max(0.0),
+            Activation::Tanh => x.tanh(),
+            Activation::Linear => x,
+        }
+    }
+
+    /// Derivative expressed in terms of the *pre-activation* input `x`
+    /// and the activation output `y` (whichever is cheaper).
+    pub fn grad(&self, x: f32, y: f32) -> f32 {
+        match self {
+            Activation::Relu => {
+                if x > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Activation::Tanh => 1.0 - y * y,
+            Activation::Linear => 1.0,
+        }
+    }
+}
+
+/// One dense block. `residual` adds the block input to the output
+/// (requires `in_dim == out_dim`), giving the paper's "ResNet" bottom.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerSpec {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub act: Activation,
+    pub residual: bool,
+}
+
+/// An MLP as an ordered list of layers.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MlpSpec {
+    pub layers: Vec<LayerSpec>,
+}
+
+impl MlpSpec {
+    /// Plain feed-forward stack: `dims[0] -> ... -> dims.last()`, ReLU on
+    /// hidden layers, `last_act` on the final one.
+    pub fn dense(dims: &[usize], last_act: Activation) -> MlpSpec {
+        assert!(dims.len() >= 2);
+        let mut layers = Vec::with_capacity(dims.len() - 1);
+        for i in 0..dims.len() - 1 {
+            let act = if i + 2 == dims.len() { last_act } else { Activation::Relu };
+            layers.push(LayerSpec { in_dim: dims[i], out_dim: dims[i + 1], act, residual: false });
+        }
+        MlpSpec { layers }
+    }
+
+    /// Residual-MLP: input proj, `n_blocks` residual hidden blocks, output
+    /// proj — the "large / ResNet" bottom model of Table 7.
+    pub fn residual(in_dim: usize, hidden: usize, out_dim: usize, n_blocks: usize) -> MlpSpec {
+        let mut layers = vec![LayerSpec {
+            in_dim,
+            out_dim: hidden,
+            act: Activation::Relu,
+            residual: false,
+        }];
+        for _ in 0..n_blocks {
+            layers.push(LayerSpec {
+                in_dim: hidden,
+                out_dim: hidden,
+                act: Activation::Relu,
+                residual: true,
+            });
+        }
+        layers.push(LayerSpec {
+            in_dim: hidden,
+            out_dim,
+            act: Activation::Linear,
+            residual: false,
+        });
+        MlpSpec { layers }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.layers.first().unwrap().in_dim
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.layers.last().unwrap().out_dim
+    }
+
+    /// Total scalar parameter count (weights + biases).
+    pub fn param_count(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.in_dim * l.out_dim + l.out_dim)
+            .sum()
+    }
+
+    /// Validate inner-dim chaining and residual shape constraints.
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.in_dim == 0 || l.out_dim == 0 {
+                return Err(format!("layer {i}: zero dim"));
+            }
+            if l.residual && l.in_dim != l.out_dim {
+                return Err(format!("layer {i}: residual requires in == out"));
+            }
+            if i > 0 && self.layers[i - 1].out_dim != l.in_dim {
+                return Err(format!(
+                    "layer {i}: in_dim {} != previous out_dim {}",
+                    l.in_dim,
+                    self.layers[i - 1].out_dim
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The full split-model specification for one experiment.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SplitModelSpec {
+    pub passive_bottoms: Vec<MlpSpec>,
+    pub active_bottom: MlpSpec,
+    pub top: MlpSpec,
+}
+
+impl SplitModelSpec {
+    /// Build the paper's configuration: 10-layer MLP (small) or
+    /// residual-MLP (large) bottoms with cut-layer width `embed_dim`,
+    /// and a 2-layer top over the concatenated embeddings.
+    ///
+    /// `d_passive` has one entry per passive party (the two-party paper
+    /// setting is `&[d_p]`; Appendix H multi-party passes more).
+    pub fn build(
+        size: ModelSize,
+        d_active: usize,
+        d_passive: &[usize],
+        hidden: usize,
+        embed_dim: usize,
+    ) -> SplitModelSpec {
+        assert!(!d_passive.is_empty());
+        let bottom = |d_in: usize| -> MlpSpec {
+            match size {
+                ModelSize::Small => {
+                    // Ten layers total: input proj + 8 hidden + cut layer.
+                    let mut dims = vec![d_in];
+                    dims.extend(std::iter::repeat(hidden).take(9));
+                    dims.push(embed_dim);
+                    MlpSpec::dense(&dims, Activation::Linear)
+                }
+                ModelSize::Large => MlpSpec::residual(d_in, hidden, embed_dim, 6),
+            }
+        };
+        let k = d_passive.len();
+        SplitModelSpec {
+            passive_bottoms: d_passive.iter().map(|&d| bottom(d)).collect(),
+            active_bottom: bottom(d_active),
+            // Top: concat of (k passive + 1 active) embeddings -> hidden -> 1.
+            top: MlpSpec::dense(&[(k + 1) * embed_dim, hidden, 1], Activation::Linear),
+        }
+    }
+
+    pub fn embed_dim(&self) -> usize {
+        self.active_bottom.out_dim()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.passive_bottoms.iter().map(|m| m.param_count()).sum::<usize>()
+            + self.active_bottom.param_count()
+            + self.top.param_count()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, m) in self.passive_bottoms.iter().enumerate() {
+            m.validate().map_err(|e| format!("passive[{i}]: {e}"))?;
+            if m.out_dim() != self.embed_dim() {
+                return Err(format!("passive[{i}] embed dim mismatch"));
+            }
+        }
+        self.active_bottom.validate().map_err(|e| format!("active: {e}"))?;
+        self.top.validate().map_err(|e| format!("top: {e}"))?;
+        let expect = (self.passive_bottoms.len() + 1) * self.embed_dim();
+        if self.top.in_dim() != expect {
+            return Err(format!(
+                "top in_dim {} != (k+1)*embed {}",
+                self.top.in_dim(),
+                expect
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_spec_chains() {
+        let m = MlpSpec::dense(&[8, 16, 16, 4], Activation::Linear);
+        assert_eq!(m.layers.len(), 3);
+        assert_eq!(m.in_dim(), 8);
+        assert_eq!(m.out_dim(), 4);
+        assert_eq!(m.layers[0].act, Activation::Relu);
+        assert_eq!(m.layers[2].act, Activation::Linear);
+        m.validate().unwrap();
+        assert_eq!(m.param_count(), 8 * 16 + 16 + 16 * 16 + 16 + 16 * 4 + 4);
+    }
+
+    #[test]
+    fn residual_spec_valid() {
+        let m = MlpSpec::residual(10, 32, 8, 4);
+        m.validate().unwrap();
+        assert_eq!(m.layers.len(), 6);
+        assert!(m.layers[1].residual);
+        assert_eq!(m.out_dim(), 8);
+    }
+
+    #[test]
+    fn small_split_model_is_ten_layers() {
+        let s = SplitModelSpec::build(ModelSize::Small, 24, &[24], 64, 32);
+        s.validate().unwrap();
+        assert_eq!(s.active_bottom.layers.len(), 10);
+        assert_eq!(s.passive_bottoms[0].layers.len(), 10);
+        assert_eq!(s.top.in_dim(), 64);
+        assert_eq!(s.top.layers.len(), 2);
+    }
+
+    #[test]
+    fn multi_party_top_width() {
+        let s = SplitModelSpec::build(ModelSize::Small, 10, &[10, 10, 10], 32, 16);
+        s.validate().unwrap();
+        assert_eq!(s.top.in_dim(), 4 * 16);
+    }
+
+    #[test]
+    fn invalid_specs_rejected() {
+        let bad = MlpSpec {
+            layers: vec![
+                LayerSpec { in_dim: 4, out_dim: 8, act: Activation::Relu, residual: false },
+                LayerSpec { in_dim: 9, out_dim: 2, act: Activation::Linear, residual: false },
+            ],
+        };
+        assert!(bad.validate().is_err());
+        let bad_res = MlpSpec {
+            layers: vec![LayerSpec { in_dim: 4, out_dim: 8, act: Activation::Relu, residual: true }],
+        };
+        assert!(bad_res.validate().is_err());
+    }
+
+    #[test]
+    fn activation_math() {
+        assert_eq!(Activation::Relu.apply(-1.0), 0.0);
+        assert_eq!(Activation::Relu.grad(-1.0, 0.0), 0.0);
+        assert_eq!(Activation::Relu.grad(2.0, 2.0), 1.0);
+        assert_eq!(Activation::Linear.apply(3.5), 3.5);
+        let y = Activation::Tanh.apply(0.5);
+        assert!((Activation::Tanh.grad(0.5, y) - (1.0 - y * y)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn param_count_totals() {
+        let s = SplitModelSpec::build(ModelSize::Large, 16, &[16], 32, 8);
+        assert_eq!(
+            s.total_params(),
+            s.passive_bottoms[0].param_count() + s.active_bottom.param_count() + s.top.param_count()
+        );
+        assert!(s.total_params() > 0);
+    }
+}

@@ -1,0 +1,308 @@
+//! The split-learning compute contract: the three functions every engine
+//! (pure-Rust host, PJRT/XLA) must provide, and the host implementation.
+//!
+//! ```text
+//!   passive_fwd  : (θ_p, x_p)                -> z_p                (P_p, per batch)
+//!   active_step  : (θ_a, θ_top, x_a, {z_p}, y) -> loss, ∇z_p, ∇θ_a, ∇θ_top   (P_a)
+//!   passive_bwd  : (θ_p, x_p, ∇z_p)          -> ∇θ_p               (P_p)
+//! ```
+//!
+//! `active_step` recomputes nothing on the passive side — exactly the
+//! paper's protocol where only the cut-layer gradient crosses the party
+//! boundary. The top model consumes `[z_a | z_p0 | z_p1 | ...]` (active
+//! embedding first); `python/compile/model.py` uses the same order.
+
+use super::host::{backward, forward, forward_cached};
+use super::loss::{bce_with_logits, mse};
+use super::params::MlpParams;
+use super::spec::SplitModelSpec;
+use crate::data::Task;
+use crate::tensor::Matrix;
+
+/// Output of the active party's step.
+#[derive(Clone, Debug)]
+pub struct ActiveStepOut {
+    pub loss: f64,
+    /// Model outputs (logits or regression predictions), shape (B, 1).
+    pub preds: Matrix,
+    /// Cut-layer gradient for each passive party, shape (B, E) each.
+    pub grad_z: Vec<Matrix>,
+    pub grad_active: MlpParams,
+    pub grad_top: MlpParams,
+}
+
+/// An engine that can execute the three split-learning functions.
+/// Implemented by [`HostSplitModel`] and `runtime::XlaEngine`.
+pub trait SplitEngine: Send + Sync {
+    /// Passive party `party`'s bottom-model forward.
+    fn passive_fwd(&self, party: usize, params: &MlpParams, x: &Matrix) -> Matrix;
+
+    /// Active party's full step (bottom fwd + top fwd/bwd + cut grads).
+    fn active_step(
+        &self,
+        active: &MlpParams,
+        top: &MlpParams,
+        x_a: &Matrix,
+        z_p: &[Matrix],
+        y: &[f32],
+    ) -> ActiveStepOut;
+
+    /// Passive party's bottom-model backward from the cut-layer gradient.
+    fn passive_bwd(&self, party: usize, params: &MlpParams, x: &Matrix, grad_z: &Matrix)
+        -> MlpParams;
+
+    /// Inference over the full split model.
+    fn predict(
+        &self,
+        active: &MlpParams,
+        top: &MlpParams,
+        passive: &[MlpParams],
+        x_a: &Matrix,
+        x_p: &[Matrix],
+    ) -> Matrix;
+}
+
+/// Pure-Rust implementation of [`SplitEngine`].
+pub struct HostSplitModel {
+    pub spec: SplitModelSpec,
+    pub task: Task,
+}
+
+impl HostSplitModel {
+    pub fn new(spec: SplitModelSpec, task: Task) -> HostSplitModel {
+        spec.validate().expect("valid split model spec");
+        HostSplitModel { spec, task }
+    }
+
+    fn loss_and_grad(&self, preds: &Matrix, y: &[f32]) -> (f64, Matrix) {
+        match self.task {
+            Task::BinaryClassification => bce_with_logits(preds, y),
+            Task::Regression => mse(preds, y),
+        }
+    }
+}
+
+impl SplitEngine for HostSplitModel {
+    fn passive_fwd(&self, party: usize, params: &MlpParams, x: &Matrix) -> Matrix {
+        forward(&self.spec.passive_bottoms[party], params, x)
+    }
+
+    fn active_step(
+        &self,
+        active: &MlpParams,
+        top: &MlpParams,
+        x_a: &Matrix,
+        z_p: &[Matrix],
+        y: &[f32],
+    ) -> ActiveStepOut {
+        assert_eq!(z_p.len(), self.spec.passive_bottoms.len(), "one embedding per passive party");
+        let e = self.spec.embed_dim();
+
+        // Active bottom forward (cached).
+        let cache_a = forward_cached(&self.spec.active_bottom, active, x_a);
+
+        // Concatenate [z_a | z_p...].
+        let mut concat = cache_a.out.clone();
+        for z in z_p {
+            assert_eq!(z.cols, e, "embedding width mismatch");
+            concat = concat.hcat(z);
+        }
+
+        // Top forward (cached) + loss.
+        let cache_top = forward_cached(&self.spec.top, top, &concat);
+        let (loss, d_preds) = self.loss_and_grad(&cache_top.out, y);
+
+        // Top backward -> gradient on the concatenated embedding.
+        let (grad_top, d_concat) = backward(&self.spec.top, top, &cache_top, &d_preds);
+
+        // Split the concat gradient back into per-source pieces.
+        let d_za = d_concat.take_cols(&(0..e).collect::<Vec<_>>());
+        let mut grad_z = Vec::with_capacity(z_p.len());
+        for p in 0..z_p.len() {
+            let cols: Vec<usize> = ((p + 1) * e..(p + 2) * e).collect();
+            grad_z.push(d_concat.take_cols(&cols));
+        }
+
+        // Active bottom backward.
+        let (grad_active, _dx) = backward(&self.spec.active_bottom, active, &cache_a, &d_za);
+
+        ActiveStepOut { loss, preds: cache_top.out, grad_z, grad_active, grad_top }
+    }
+
+    fn passive_bwd(
+        &self,
+        party: usize,
+        params: &MlpParams,
+        x: &Matrix,
+        grad_z: &Matrix,
+    ) -> MlpParams {
+        let spec = &self.spec.passive_bottoms[party];
+        let cache = forward_cached(spec, params, x);
+        let (grads, _dx) = backward(spec, params, &cache, grad_z);
+        grads
+    }
+
+    fn predict(
+        &self,
+        active: &MlpParams,
+        top: &MlpParams,
+        passive: &[MlpParams],
+        x_a: &Matrix,
+        x_p: &[Matrix],
+    ) -> Matrix {
+        let mut concat = forward(&self.spec.active_bottom, active, x_a);
+        for (p, xp) in x_p.iter().enumerate() {
+            let z = forward(&self.spec.passive_bottoms[p], &passive[p], xp);
+            concat = concat.hcat(&z);
+        }
+        forward(&self.spec.top, top, &concat)
+    }
+}
+
+/// Bundle of all parties' parameters for one split model.
+#[derive(Clone, Debug)]
+pub struct SplitParams {
+    pub active: MlpParams,
+    pub top: MlpParams,
+    pub passive: Vec<MlpParams>,
+}
+
+impl SplitParams {
+    pub fn init(spec: &SplitModelSpec, rng: &mut crate::util::Rng) -> SplitParams {
+        SplitParams {
+            active: MlpParams::init(&spec.active_bottom, rng),
+            top: MlpParams::init(&spec.top, rng),
+            passive: spec
+                .passive_bottoms
+                .iter()
+                .map(|s| MlpParams::init(s, rng))
+                .collect(),
+        }
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.active.len() + self.top.len() + self.passive.iter().map(|p| p.len()).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSize;
+    use crate::util::Rng;
+
+    fn setup() -> (HostSplitModel, SplitParams, Matrix, Matrix, Vec<f32>) {
+        let spec = SplitModelSpec::build(ModelSize::Small, 6, &[5], 16, 8);
+        let model = HostSplitModel::new(spec.clone(), Task::BinaryClassification);
+        let mut rng = Rng::new(42);
+        let params = SplitParams::init(&spec, &mut rng);
+        let x_a = Matrix::randn(4, 6, 1.0, &mut rng);
+        let x_p = Matrix::randn(4, 5, 1.0, &mut rng);
+        let y = vec![1.0, 0.0, 1.0, 0.0];
+        (model, params, x_a, x_p, y)
+    }
+
+    #[test]
+    fn active_step_shapes() {
+        let (model, params, x_a, x_p, y) = setup();
+        let z = model.passive_fwd(0, &params.passive[0], &x_p);
+        assert_eq!(z.shape(), (4, 8));
+        let out = model.active_step(&params.active, &params.top, &x_a, &[z], &y);
+        assert_eq!(out.preds.shape(), (4, 1));
+        assert_eq!(out.grad_z.len(), 1);
+        assert_eq!(out.grad_z[0].shape(), (4, 8));
+        assert_eq!(out.grad_active.len(), params.active.len());
+        assert_eq!(out.grad_top.len(), params.top.len());
+        assert!(out.loss.is_finite());
+    }
+
+    #[test]
+    fn grad_z_matches_numerical() {
+        let (model, params, x_a, x_p, y) = setup();
+        let z = model.passive_fwd(0, &params.passive[0], &x_p);
+        let out = model.active_step(&params.active, &params.top, &x_a, &[z.clone()], &y);
+        let eps = 1e-2f32;
+        for &(r, c) in &[(0usize, 0usize), (2usize, 5usize)] {
+            let mut zp = z.clone();
+            *zp.at_mut(r, c) += eps;
+            let l1 = model
+                .active_step(&params.active, &params.top, &x_a, &[zp.clone()], &y)
+                .loss;
+            *zp.at_mut(r, c) -= 2.0 * eps;
+            let l0 = model
+                .active_step(&params.active, &params.top, &x_a, &[zp], &y)
+                .loss;
+            let num = ((l1 - l0) / (2.0 * eps as f64)) as f32;
+            let ana = out.grad_z[0].at(r, c);
+            assert!(
+                (num - ana).abs() < 2e-2 * (1.0 + num.abs()),
+                "grad_z[{r},{c}]: num={num} ana={ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        let (model, mut params, x_a, x_p, y) = setup();
+        let z0 = model.passive_fwd(0, &params.passive[0], &x_p);
+        let first = model
+            .active_step(&params.active, &params.top, &x_a, &[z0], &y)
+            .loss;
+        let lr = 0.1;
+        let mut last = first;
+        for _ in 0..50 {
+            let z = model.passive_fwd(0, &params.passive[0], &x_p);
+            let out = model.active_step(&params.active, &params.top, &x_a, &[z], &y);
+            let gp = model.passive_bwd(0, &params.passive[0], &x_p, &out.grad_z[0]);
+            params.active.sgd_step(&out.grad_active, lr);
+            params.top.sgd_step(&out.grad_top, lr);
+            params.passive[0].sgd_step(&gp, lr);
+            last = out.loss;
+        }
+        assert!(last < first * 0.5, "loss {first} -> {last}");
+    }
+
+    #[test]
+    fn predict_consistent_with_step_preds() {
+        let (model, params, x_a, x_p, y) = setup();
+        let z = model.passive_fwd(0, &params.passive[0], &x_p);
+        let out = model.active_step(&params.active, &params.top, &x_a, &[z], &y);
+        let preds = model.predict(
+            &params.active,
+            &params.top,
+            &params.passive,
+            &x_a,
+            &[x_p.clone()],
+        );
+        assert!(preds.max_abs_diff(&out.preds) < 1e-5);
+    }
+
+    #[test]
+    fn regression_task_uses_mse() {
+        let spec = SplitModelSpec::build(ModelSize::Small, 4, &[4], 8, 4);
+        let model = HostSplitModel::new(spec.clone(), Task::Regression);
+        let mut rng = Rng::new(7);
+        let params = SplitParams::init(&spec, &mut rng);
+        let x_a = Matrix::randn(3, 4, 1.0, &mut rng);
+        let x_p = Matrix::randn(3, 4, 1.0, &mut rng);
+        let y = vec![0.5, -1.0, 2.0];
+        let z = model.passive_fwd(0, &params.passive[0], &x_p);
+        let out = model.active_step(&params.active, &params.top, &x_a, &[z], &y);
+        assert!(out.loss.is_finite());
+    }
+
+    #[test]
+    fn multi_party_step() {
+        let spec = SplitModelSpec::build(ModelSize::Small, 4, &[3, 3], 8, 4);
+        let model = HostSplitModel::new(spec.clone(), Task::BinaryClassification);
+        let mut rng = Rng::new(8);
+        let params = SplitParams::init(&spec, &mut rng);
+        let x_a = Matrix::randn(2, 4, 1.0, &mut rng);
+        let xs: Vec<Matrix> = (0..2).map(|_| Matrix::randn(2, 3, 1.0, &mut rng)).collect();
+        let zs: Vec<Matrix> = (0..2)
+            .map(|p| model.passive_fwd(p, &params.passive[p], &xs[p]))
+            .collect();
+        let out = model.active_step(&params.active, &params.top, &x_a, &zs, &[1.0, 0.0]);
+        assert_eq!(out.grad_z.len(), 2);
+    }
+}

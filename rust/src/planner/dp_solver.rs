@@ -1,0 +1,196 @@
+//! The System Planning Phase (§4.3, Algorithm 2): pick the worker counts
+//! and batch size that minimize the per-iteration objective Eq. (14)
+//! subject to the memory bound Eq. (13), by exhaustive dynamic-programming
+//! search over the discrete (w_a, w_p, B) grid.
+
+use super::cost::{CostModel, MemoryModel};
+
+/// Search space for the planner.
+#[derive(Clone, Debug)]
+pub struct PlanSpace {
+    /// Active worker range [P, Q] (inclusive).
+    pub w_a_range: (usize, usize),
+    /// Passive worker range [M, N] (inclusive).
+    pub w_p_range: (usize, usize),
+    /// Candidate batch sizes (the paper's {16, 32, ..., 1024}).
+    pub batch_sizes: Vec<usize>,
+}
+
+impl Default for PlanSpace {
+    fn default() -> Self {
+        PlanSpace {
+            w_a_range: (2, 50),
+            w_p_range: (2, 50),
+            batch_sizes: vec![16, 32, 64, 128, 256, 512, 1024],
+        }
+    }
+}
+
+/// The planner's decision.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Plan {
+    pub w_a: usize,
+    pub w_p: usize,
+    pub batch_size: usize,
+    /// Objective value Eq. (14) at the optimum, seconds/iteration.
+    pub cost: f64,
+    /// Load imbalance at the optimum.
+    pub imbalance: f64,
+}
+
+/// Outcome of planning, including the feasible-B cap from Eq. (13).
+#[derive(Clone, Debug)]
+pub struct PlanResult {
+    pub best: Plan,
+    pub b_max: f64,
+    /// Full DP table flattened as (w_a, w_p, B, cost) rows — kept for the
+    /// ablation bench and for plotting the cost surface.
+    pub table: Vec<(usize, usize, usize, f64)>,
+}
+
+/// Algorithm 2. Exhaustive DP over the discrete state space (i, j, r):
+/// every state's cost is Eq. (15)'s max of party delays plus the shared
+/// communication term; the returned plan is the argmin.
+pub fn solve(cost: &CostModel, memory: &MemoryModel, space: &PlanSpace) -> Option<PlanResult> {
+    let b_max = memory.b_max();
+    let mut table = Vec::new();
+    let mut best: Option<Plan> = None;
+    for &b in &space.batch_sizes {
+        if (b as f64) > b_max {
+            continue; // infeasible under Eq. (13)
+        }
+        for w_a in space.w_a_range.0..=space.w_a_range.1 {
+            for w_p in space.w_p_range.0..=space.w_p_range.1 {
+                let c = cost.objective(b, w_a, w_p);
+                table.push((w_a, w_p, b, c));
+                let better = match &best {
+                    None => true,
+                    Some(p) => c < p.cost,
+                };
+                if better {
+                    best = Some(Plan {
+                        w_a,
+                        w_p,
+                        batch_size: b,
+                        cost: c,
+                        imbalance: cost.imbalance(b, w_a, w_p),
+                    });
+                }
+            }
+        }
+    }
+    best.map(|best| PlanResult { best, b_max, table })
+}
+
+/// The "w/o Dynamic Programming" ablation (Table 4): fixed equal worker
+/// allocation, median batch size, no search.
+pub fn equal_allocation(space: &PlanSpace, workers: usize) -> Plan {
+    let b = space.batch_sizes[space.batch_sizes.len() / 2];
+    Plan { w_a: workers, w_p: workers, batch_size: b, cost: f64::NAN, imbalance: f64::NAN }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::cost::CostConstants;
+
+    fn cost_model(c_a: usize, c_p: usize) -> CostModel {
+        CostModel {
+            consts: CostConstants::paper_table8(),
+            c_a,
+            c_p,
+            emb_bytes_per_sample: 128.0,
+            grad_bytes_per_sample: 128.0,
+            bandwidth_bps: 125e6,
+        }
+    }
+
+    fn small_space() -> PlanSpace {
+        PlanSpace {
+            w_a_range: (2, 12),
+            w_p_range: (2, 12),
+            batch_sizes: vec![16, 32, 64, 128, 256, 512, 1024],
+        }
+    }
+
+    #[test]
+    fn plan_is_exhaustive_argmin() {
+        let cm = cost_model(32, 32);
+        let mm = MemoryModel::default_profile();
+        let space = small_space();
+        let r = solve(&cm, &mm, &space).unwrap();
+        // Brute-force verify.
+        let brute = r
+            .table
+            .iter()
+            .cloned()
+            .min_by(|a, b| a.3.partial_cmp(&b.3).unwrap())
+            .unwrap();
+        assert!((r.best.cost - brute.3).abs() < 1e-15);
+        assert_eq!((r.best.w_a, r.best.w_p, r.best.batch_size), (brute.0, brute.1, brute.2));
+    }
+
+    #[test]
+    fn memory_constraint_excludes_large_batches() {
+        let cm = cost_model(32, 32);
+        let tight = MemoryModel {
+            cap_active: 200.0, // b_max ≈ (200-64)/0.9 ≈ 151
+            ..MemoryModel::default_profile()
+        };
+        let r = solve(&cm, &tight, &small_space()).unwrap();
+        assert!(r.b_max < 256.0);
+        assert!(r.best.batch_size <= 128);
+        assert!(r.table.iter().all(|&(_, _, b, _)| (b as f64) <= r.b_max));
+    }
+
+    #[test]
+    fn infeasible_space_returns_none() {
+        let cm = cost_model(32, 32);
+        let impossible = MemoryModel {
+            cap_active: 1.0, // below base memory ⇒ b_max = 0
+            ..MemoryModel::default_profile()
+        };
+        assert!(solve(&cm, &impossible, &small_space()).is_none());
+    }
+
+    #[test]
+    fn skewed_cores_shift_worker_allocation() {
+        // With few passive cores the planner should not give the passive
+        // party more (queued) work than the active one relative to the
+        // balanced case: check the chosen ratio moves in the right
+        // direction (Fig. 4's resource-heterogeneity logic).
+        let mm = MemoryModel::default_profile();
+        let space = small_space();
+        let balanced = solve(&cost_model(32, 32), &mm, &space).unwrap().best;
+        let skewed = solve(&cost_model(50, 14), &mm, &space).unwrap().best;
+        let bal_ratio = balanced.w_p as f64 / balanced.w_a as f64;
+        let skw_ratio = skewed.w_p as f64 / skewed.w_a as f64;
+        assert!(
+            skw_ratio <= bal_ratio,
+            "passive lost cores but gained relative workers: {bal_ratio} -> {skw_ratio}"
+        );
+    }
+
+    #[test]
+    fn planned_cost_beats_equal_allocation() {
+        let cm = cost_model(50, 14);
+        let mm = MemoryModel::default_profile();
+        let space = small_space();
+        let planned = solve(&cm, &mm, &space).unwrap().best;
+        let eq = equal_allocation(&space, 8);
+        let eq_cost = cm.objective(eq.batch_size, eq.w_a, eq.w_p);
+        assert!(planned.cost <= eq_cost + 1e-12);
+    }
+
+    #[test]
+    fn plan_within_ranges() {
+        let cm = cost_model(32, 32);
+        let mm = MemoryModel::default_profile();
+        let space = small_space();
+        let p = solve(&cm, &mm, &space).unwrap().best;
+        assert!((2..=12).contains(&p.w_a));
+        assert!((2..=12).contains(&p.w_p));
+        assert!(space.batch_sizes.contains(&p.batch_size));
+        assert!((0.0..=1.0).contains(&p.imbalance));
+    }
+}

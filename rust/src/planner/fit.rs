@@ -1,0 +1,171 @@
+//! Constant fitting (Appendix H "Empirical Experiments", Fig. 8/Table 8):
+//! given measured (B, per-sample-time) pairs for each pipeline stage, fit
+//! the power law `t(B) = λ·B^γ` by log-log least squares.
+
+use super::cost::CostConstants;
+use crate::util::stats::power_fit;
+
+/// One stage's measurements: per-sample seconds at each batch size.
+#[derive(Clone, Debug, Default)]
+pub struct StageMeasurements {
+    pub batch_sizes: Vec<f64>,
+    pub per_sample_secs: Vec<f64>,
+}
+
+impl StageMeasurements {
+    pub fn push(&mut self, b: usize, per_sample: f64) {
+        self.batch_sizes.push(b as f64);
+        self.per_sample_secs.push(per_sample.max(1e-12));
+    }
+
+    /// Fit `(λ, γ, r²)`.
+    pub fn fit(&self) -> (f64, f64, f64) {
+        assert!(self.batch_sizes.len() >= 2, "need >= 2 measurements to fit");
+        power_fit(&self.batch_sizes, &self.per_sample_secs)
+    }
+}
+
+/// All six profiled stages (Fig. 8's six curves).
+#[derive(Clone, Debug, Default)]
+pub struct ProfileMeasurements {
+    pub fwd_active: StageMeasurements,
+    pub fwd_passive: StageMeasurements,
+    pub fwd_top: StageMeasurements,
+    pub bwd_active: StageMeasurements,
+    pub bwd_passive: StageMeasurements,
+    pub bwd_top: StageMeasurements,
+}
+
+/// Result of a full fit: constants + per-stage r² (quality gates).
+#[derive(Clone, Debug)]
+pub struct FitResult {
+    pub consts: CostConstants,
+    pub r2: [f64; 6],
+}
+
+impl ProfileMeasurements {
+    /// Fit all twelve constants (the local Table 8).
+    pub fn fit(&self) -> FitResult {
+        let (la, ga, r0) = self.fwd_active.fit();
+        let (lp, gp, r1) = self.fwd_passive.fit();
+        let (la2, ga2, r2q) = self.fwd_top.fit();
+        let (pa, ba, r3) = self.bwd_active.fit();
+        let (pp, bp, r4) = self.bwd_passive.fit();
+        let (pa2, ba2, r5) = self.bwd_top.fit();
+        FitResult {
+            consts: CostConstants {
+                lambda_a: la,
+                gamma_a: ga,
+                lambda_p: lp,
+                gamma_p: gp,
+                lambda_a2: la2,
+                gamma_a2: ga2,
+                phi_a: pa,
+                beta_a: ba,
+                phi_p: pp,
+                beta_p: bp,
+                phi_a2: pa2,
+                beta_a2: ba2,
+            },
+            r2: [r0, r1, r2q, r3, r4, r5],
+        }
+    }
+}
+
+/// Render the fitted constants as a Table 8-style report.
+pub fn table8_report(f: &FitResult) -> String {
+    let c = &f.consts;
+    let mut s = String::new();
+    s.push_str("symbol      value        symbol      value        r2\n");
+    s.push_str(&format!(
+        "lambda_a  {:>10.5}   gamma_a   {:>10.4}   {:.4}\n",
+        c.lambda_a, c.gamma_a, f.r2[0]
+    ));
+    s.push_str(&format!(
+        "lambda_p  {:>10.5}   gamma_p   {:>10.4}   {:.4}\n",
+        c.lambda_p, c.gamma_p, f.r2[1]
+    ));
+    s.push_str(&format!(
+        "lambda_a' {:>10.5}   gamma_a'  {:>10.4}   {:.4}\n",
+        c.lambda_a2, c.gamma_a2, f.r2[2]
+    ));
+    s.push_str(&format!(
+        "phi_a     {:>10.5}   beta_a    {:>10.4}   {:.4}\n",
+        c.phi_a, c.beta_a, f.r2[3]
+    ));
+    s.push_str(&format!(
+        "phi_p     {:>10.5}   beta_p    {:>10.4}   {:.4}\n",
+        c.phi_p, c.beta_p, f.r2[4]
+    ));
+    s.push_str(&format!(
+        "phi_a'    {:>10.5}   beta_a'   {:>10.4}   {:.4}\n",
+        c.phi_a2, c.beta_a2, f.r2[5]
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth_stage(lambda: f64, gamma: f64) -> StageMeasurements {
+        let mut s = StageMeasurements::default();
+        for &b in &[2usize, 4, 8, 16, 32, 64, 128, 256, 512, 1024] {
+            s.push(b, lambda * (b as f64).powf(gamma));
+        }
+        s
+    }
+
+    #[test]
+    fn recovers_exact_power_law() {
+        let s = synth_stage(0.018, -0.8015);
+        let (l, g, r2) = s.fit();
+        assert!((l - 0.018).abs() < 1e-6);
+        assert!((g + 0.8015).abs() < 1e-6);
+        assert!(r2 > 0.999999);
+    }
+
+    #[test]
+    fn full_fit_recovers_table8() {
+        let paper = CostConstants::paper_table8();
+        let m = ProfileMeasurements {
+            fwd_active: synth_stage(paper.lambda_a, paper.gamma_a),
+            fwd_passive: synth_stage(paper.lambda_p, paper.gamma_p),
+            fwd_top: synth_stage(paper.lambda_a2, paper.gamma_a2),
+            bwd_active: synth_stage(paper.phi_a, paper.beta_a),
+            bwd_passive: synth_stage(paper.phi_p, paper.beta_p),
+            bwd_top: synth_stage(paper.phi_a2, paper.beta_a2),
+        };
+        let f = m.fit();
+        assert!((f.consts.lambda_a - paper.lambda_a).abs() < 1e-6);
+        assert!((f.consts.beta_p - paper.beta_p).abs() < 1e-6);
+        for r in f.r2 {
+            assert!(r > 0.999);
+        }
+        let report = table8_report(&f);
+        assert!(report.contains("lambda_a"));
+        assert!(report.contains("beta_a'"));
+    }
+
+    #[test]
+    fn fit_tolerates_noise() {
+        let mut s = StageMeasurements::default();
+        let mut rng = crate::util::Rng::new(5);
+        for &b in &[2usize, 4, 8, 16, 32, 64, 128, 256, 512, 1024] {
+            let noise = 1.0 + 0.05 * rng.gaussian();
+            s.push(b, 0.02 * (b as f64).powf(-0.9) * noise);
+        }
+        let (l, g, r2) = s.fit();
+        assert!((l - 0.02).abs() < 0.01, "lambda={l}");
+        assert!((g + 0.9).abs() < 0.1, "gamma={g}");
+        assert!(r2 > 0.95);
+    }
+
+    #[test]
+    #[should_panic]
+    fn fit_needs_two_points() {
+        let mut s = StageMeasurements::default();
+        s.push(16, 0.01);
+        let _ = s.fit();
+    }
+}

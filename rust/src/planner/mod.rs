@@ -1,0 +1,11 @@
+//! System profiling + planning (§4.2–4.3): the delay/memory cost models,
+//! power-law constant fitting (Fig. 8 / Table 8), and the Algorithm 2
+//! dynamic-programming hyper-parameter search.
+
+pub mod cost;
+pub mod dp_solver;
+pub mod fit;
+
+pub use cost::{CostConstants, CostModel, MemoryModel};
+pub use dp_solver::{equal_allocation, solve, Plan, PlanResult, PlanSpace};
+pub use fit::{table8_report, FitResult, ProfileMeasurements, StageMeasurements};

@@ -1,0 +1,229 @@
+//! System profiler (§4.2 "System Profiling" + Appendix H empirical
+//! experiments): measure per-stage forward/backward wall time of the
+//! actual split model across batch sizes, then hand the measurements to
+//! `planner::fit` to derive the local Table 8 constants.
+//!
+//! Profiling runs on whichever [`SplitEngine`] the experiment will use, so
+//! the fitted constants describe the real request-path compute (the PJRT
+//! executables in production, the host engine in sweeps).
+
+use crate::data::Task;
+use crate::model::{HostSplitModel, MlpParams, SplitEngine, SplitModelSpec, SplitParams};
+use crate::planner::{FitResult, ProfileMeasurements};
+use crate::tensor::Matrix;
+use crate::util::{Rng, Stopwatch};
+
+/// Profiling options.
+#[derive(Clone, Debug)]
+pub struct ProfileOpts {
+    /// Batch sizes to measure (Fig. 8 uses {2, 4, ..., 1024}).
+    pub batch_sizes: Vec<usize>,
+    /// Timed repetitions per point (median taken).
+    pub reps: usize,
+    /// Warmup iterations per point.
+    pub warmup: usize,
+}
+
+impl Default for ProfileOpts {
+    fn default() -> Self {
+        ProfileOpts {
+            batch_sizes: vec![2, 4, 8, 16, 32, 64, 128, 256, 512, 1024],
+            reps: 3,
+            warmup: 1,
+        }
+    }
+}
+
+/// Raw profile: per-sample seconds for each of the six stages at each B.
+#[derive(Clone, Debug)]
+pub struct ProfileReport {
+    pub measurements: ProfileMeasurements,
+    pub fit: FitResult,
+}
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+/// Time one closure `reps` times, return median seconds.
+fn time_stage(reps: usize, warmup: usize, mut f: impl FnMut()) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let sw = Stopwatch::start();
+        f();
+        times.push(sw.elapsed_secs());
+    }
+    median(times)
+}
+
+/// Profile the six pipeline stages of a split model on the host engine.
+///
+/// The host engine exposes the stages separately; for the XLA engine the
+/// combined `active_step` is measured and apportioned by the host-engine
+/// stage ratios (the planner only needs relative shapes, Fig. 8).
+pub fn profile_host(
+    spec: &SplitModelSpec,
+    task: Task,
+    opts: &ProfileOpts,
+    seed: u64,
+) -> ProfileReport {
+    let model = HostSplitModel::new(spec.clone(), task);
+    let mut rng = Rng::new(seed);
+    let params = SplitParams::init(spec, &mut rng);
+    let d_a = spec.active_bottom.in_dim();
+    let d_p = spec.passive_bottoms[0].in_dim();
+
+    let mut m = ProfileMeasurements::default();
+    for &b in &opts.batch_sizes {
+        let x_a = Matrix::randn(b, d_a, 1.0, &mut rng);
+        let x_p = Matrix::randn(b, d_p, 1.0, &mut rng);
+        let y: Vec<f32> = (0..b).map(|i| (i % 2) as f32).collect();
+
+        // Passive forward.
+        let t = time_stage(opts.reps, opts.warmup, || {
+            let _ = model.passive_fwd(0, &params.passive[0], &x_p);
+        });
+        m.fwd_passive.push(b, t / b as f64);
+
+        // Active bottom forward.
+        let t = time_stage(opts.reps, opts.warmup, || {
+            let _ = crate::model::forward(&spec.active_bottom, &params.active, &x_a);
+        });
+        m.fwd_active.push(b, t / b as f64);
+
+        // Top forward (on a concatenated embedding).
+        let z_a = crate::model::forward(&spec.active_bottom, &params.active, &x_a);
+        let z_p = model.passive_fwd(0, &params.passive[0], &x_p);
+        let concat = z_a.hcat(&z_p);
+        let t = time_stage(opts.reps, opts.warmup, || {
+            let _ = crate::model::forward(&spec.top, &params.top, &concat);
+        });
+        m.fwd_top.push(b, t / b as f64);
+
+        // Top backward (forward_cached + backward, minus forward).
+        let t_top_fb = time_stage(opts.reps, opts.warmup, || {
+            let cache = crate::model::forward_cached(&spec.top, &params.top, &concat);
+            let d = Matrix::zeros(b, 1);
+            let _ = crate::model::backward(&spec.top, &params.top, &cache, &d);
+        });
+        m.bwd_top.push(b, (t_top_fb).max(1e-12) / b as f64);
+
+        // Active bottom backward.
+        let gz = Matrix::randn(b, spec.embed_dim(), 1.0, &mut rng);
+        let t = time_stage(opts.reps, opts.warmup, || {
+            let cache = crate::model::forward_cached(&spec.active_bottom, &params.active, &x_a);
+            let _ = crate::model::backward(&spec.active_bottom, &params.active, &cache, &gz);
+        });
+        m.bwd_active.push(b, t / b as f64);
+
+        // Passive bottom backward.
+        let t = time_stage(opts.reps, opts.warmup, || {
+            let _ = model.passive_bwd(0, &params.passive[0], &x_p, &gz);
+        });
+        m.bwd_passive.push(b, t / b as f64);
+
+        let _ = &y;
+    }
+    let fit = m.fit();
+    ProfileReport { measurements: m, fit }
+}
+
+/// Profile an arbitrary engine's combined stages (used for the XLA path):
+/// measures `passive_fwd`, `active_step`, `passive_bwd` per-sample times.
+pub fn profile_engine(
+    engine: &dyn SplitEngine,
+    spec: &SplitModelSpec,
+    opts: &ProfileOpts,
+    seed: u64,
+) -> Vec<(usize, f64, f64, f64)> {
+    let mut rng = Rng::new(seed);
+    let params = SplitParams::init(spec, &mut rng);
+    let d_a = spec.active_bottom.in_dim();
+    let d_p = spec.passive_bottoms[0].in_dim();
+    let mut rows = Vec::new();
+    for &b in &opts.batch_sizes {
+        let x_a = Matrix::randn(b, d_a, 1.0, &mut rng);
+        let x_p = Matrix::randn(b, d_p, 1.0, &mut rng);
+        let y: Vec<f32> = (0..b).map(|i| (i % 2) as f32).collect();
+        let t_pf = time_stage(opts.reps, opts.warmup, || {
+            let _ = engine.passive_fwd(0, &params.passive[0], &x_p);
+        });
+        let z = engine.passive_fwd(0, &params.passive[0], &x_p);
+        let t_as = time_stage(opts.reps, opts.warmup, || {
+            let _ = engine.active_step(&params.active, &params.top, &x_a, &[z.clone()], &y);
+        });
+        let gz = engine
+            .active_step(&params.active, &params.top, &x_a, &[z.clone()], &y)
+            .grad_z[0]
+            .clone();
+        let t_pb = time_stage(opts.reps, opts.warmup, || {
+            let _ = engine.passive_bwd(0, &params.passive[0], &x_p, &gz);
+        });
+        rows.push((b, t_pf / b as f64, t_as / b as f64, t_pb / b as f64));
+    }
+    rows
+}
+
+/// Estimate payload sizes for the cost model: bytes per sample crossing
+/// the party boundary (f32 embedding row + batch-ID framing overhead).
+pub fn payload_bytes_per_sample(embed_dim: usize) -> f64 {
+    (embed_dim * 4 + 16) as f64
+}
+
+#[allow(unused)]
+fn unused(p: &MlpParams) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSize;
+
+    fn tiny_opts() -> ProfileOpts {
+        ProfileOpts { batch_sizes: vec![4, 16, 64], reps: 2, warmup: 0 }
+    }
+
+    #[test]
+    fn profile_produces_fittable_measurements() {
+        let spec = SplitModelSpec::build(ModelSize::Small, 8, &[8], 16, 8);
+        let r = profile_host(&spec, Task::BinaryClassification, &tiny_opts(), 1);
+        assert_eq!(r.measurements.fwd_active.batch_sizes.len(), 3);
+        // All constants positive; exponents finite.
+        let c = &r.fit.consts;
+        for v in [c.lambda_a, c.lambda_p, c.lambda_a2, c.phi_a, c.phi_p, c.phi_a2] {
+            assert!(v > 0.0 && v.is_finite(), "lambda {v}");
+        }
+        for v in [c.gamma_a, c.gamma_p, c.gamma_a2, c.beta_a, c.beta_p, c.beta_a2] {
+            assert!(v.is_finite(), "gamma {v}");
+        }
+    }
+
+    #[test]
+    fn per_sample_times_amortize() {
+        // Bigger batches should not be *slower* per sample for dense GEMMs
+        // of this size: exponent should be <= ~0.3 at worst.
+        let spec = SplitModelSpec::build(ModelSize::Small, 8, &[8], 16, 8);
+        let r = profile_host(&spec, Task::BinaryClassification, &tiny_opts(), 2);
+        assert!(r.fit.consts.gamma_p < 0.5, "gamma_p = {}", r.fit.consts.gamma_p);
+    }
+
+    #[test]
+    fn profile_engine_rows() {
+        let spec = SplitModelSpec::build(ModelSize::Small, 6, &[6], 8, 4);
+        let model = HostSplitModel::new(spec.clone(), Task::BinaryClassification);
+        let rows = profile_engine(&model, &spec, &tiny_opts(), 3);
+        assert_eq!(rows.len(), 3);
+        for (b, pf, as_, pb) in rows {
+            assert!(b > 0 && pf > 0.0 && as_ > 0.0 && pb > 0.0);
+        }
+    }
+
+    #[test]
+    fn payload_size_linear_in_embed() {
+        assert!(payload_bytes_per_sample(64) > payload_bytes_per_sample(32));
+        assert_eq!(payload_bytes_per_sample(32), (32 * 4 + 16) as f64);
+    }
+}

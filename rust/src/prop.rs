@@ -1,0 +1,122 @@
+//! Property-testing helper (proptest is not in the vendored crate set):
+//! seeded random-input sweeps with first-failure shrinking over a
+//! user-supplied simplification order.
+//!
+//! Used by the coordinator/planner/sim invariant tests: generate N random
+//! cases from a seeded [`Rng`], check the property, and on failure retry
+//! progressively simpler cases to report a minimal-ish witness.
+
+use crate::util::Rng;
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub enum PropResult<C> {
+    Pass { cases: usize },
+    Fail { witness: C, message: String },
+}
+
+/// Run `property` against `cases` random inputs from `gen`.
+/// On failure, tries up to 64 shrink steps via `shrink` (return a
+/// simpler candidate or None to stop).
+pub fn check<C: Clone + std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> C,
+    mut shrink: impl FnMut(&C) -> Option<C>,
+    mut property: impl FnMut(&C) -> Result<(), String>,
+) -> PropResult<C> {
+    let mut rng = Rng::new(seed);
+    for _ in 0..cases {
+        let case = gen(&mut rng);
+        if let Err(msg) = property(&case) {
+            // Shrink: walk simpler candidates while they still fail.
+            let mut witness = case.clone();
+            let mut message = msg;
+            for _ in 0..64 {
+                match shrink(&witness) {
+                    Some(simpler) => match property(&simpler) {
+                        Err(m) => {
+                            witness = simpler;
+                            message = m;
+                        }
+                        Ok(()) => break,
+                    },
+                    None => break,
+                }
+            }
+            return PropResult::Fail { witness, message };
+        }
+    }
+    PropResult::Pass { cases }
+}
+
+/// Assert a property holds (panics with the shrunk witness otherwise).
+pub fn assert_prop<C: Clone + std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    gen: impl FnMut(&mut Rng) -> C,
+    shrink: impl FnMut(&C) -> Option<C>,
+    property: impl FnMut(&C) -> Result<(), String>,
+) {
+    match check(seed, cases, gen, shrink, property) {
+        PropResult::Pass { .. } => {}
+        PropResult::Fail { witness, message } => {
+            panic!("property '{name}' failed: {message}\nwitness: {witness:?}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        assert_prop(
+            "addition commutes",
+            1,
+            200,
+            |rng| (rng.below(1000) as i64, rng.below(1000) as i64),
+            |_| None,
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let r = check(
+            2,
+            100,
+            |rng| rng.below(1000) as i64,
+            |&c| if c > 10 { Some(c / 2) } else { None },
+            |&c| if c < 10 { Ok(()) } else { Err(format!("{c} >= 10")) },
+        );
+        match r {
+            PropResult::Fail { witness, .. } => {
+                // Shrinking halves until < 20 (one more halving passes).
+                assert!(witness < 40, "witness {witness} not shrunk");
+            }
+            PropResult::Pass { .. } => panic!("should fail"),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn assert_prop_panics_with_witness() {
+        assert_prop(
+            "always fails",
+            3,
+            5,
+            |rng| rng.below(10),
+            |_| None,
+            |_| Err("nope".into()),
+        );
+    }
+}

@@ -1,0 +1,272 @@
+//! The PJRT execution engine: loads `artifacts/*.hlo.txt`, compiles them on
+//! the CPU PJRT client (`xla` crate), and executes the split-model
+//! functions with zero Python on the path.
+//!
+//! `RawXlaEngine` owns the PJRT objects and is **not** thread-safe (the
+//! `xla` crate wraps raw C pointers without `Send`/`Sync`); the
+//! thread-safe [`super::service::XlaService`] owns one engine per service
+//! thread and exposes the [`crate::model::SplitEngine`] trait.
+
+use super::manifest::{ConfigEntry, Manifest, ManifestError};
+use crate::model::{MlpParams, MlpSpec, SplitModelSpec};
+use crate::tensor::Matrix;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Marshal a row-major f32 matrix into an XLA literal.
+pub fn matrix_to_literal(m: &Matrix) -> Result<xla::Literal> {
+    let bytes = f32_bytes(&m.data);
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        &[m.rows, m.cols],
+        bytes,
+    )
+    .map_err(|e| anyhow!("literal from matrix: {e:?}"))
+}
+
+/// Marshal a 1-D f32 vector.
+pub fn vec_to_literal(v: &[f32]) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, &[v.len()], f32_bytes(v))
+        .map_err(|e| anyhow!("literal from vec: {e:?}"))
+}
+
+fn f32_bytes(v: &[f32]) -> &[u8] {
+    // f32 slices are always validly viewable as bytes.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+/// Push an MLP's parameters in the flat `[W0, b0, W1, b1, ...]` order.
+pub fn push_params(out: &mut Vec<xla::Literal>, p: &MlpParams) -> Result<()> {
+    for i in 0..p.n_layers() {
+        out.push(matrix_to_literal(&p.weights[i])?);
+        out.push(vec_to_literal(&p.biases[i])?);
+    }
+    Ok(())
+}
+
+/// Read a matrix back out of a literal.
+pub fn literal_to_matrix(l: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix> {
+    let data = l
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+    if data.len() != rows * cols {
+        return Err(anyhow!("literal has {} elems, want {}x{}", data.len(), rows, cols));
+    }
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+/// Rebuild MLP parameters from consecutive output literals.
+pub fn params_from_literals(
+    spec: &MlpSpec,
+    lits: &[xla::Literal],
+    off: &mut usize,
+) -> Result<MlpParams> {
+    let mut weights = Vec::with_capacity(spec.layers.len());
+    let mut biases = Vec::with_capacity(spec.layers.len());
+    for l in &spec.layers {
+        weights.push(literal_to_matrix(&lits[*off], l.in_dim, l.out_dim)?);
+        *off += 1;
+        let b = lits[*off]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("bias literal: {e:?}"))?;
+        if b.len() != l.out_dim {
+            return Err(anyhow!("bias len {} != {}", b.len(), l.out_dim));
+        }
+        biases.push(b);
+        *off += 1;
+    }
+    Ok(MlpParams { weights, biases })
+}
+
+/// A compiled split-model configuration on the PJRT CPU client.
+pub struct RawXlaEngine {
+    pub entry: ConfigEntry,
+    pub spec: SplitModelSpec,
+    client: xla::PjRtClient,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl RawXlaEngine {
+    /// Load + compile every function of `config` from `artifacts_dir`.
+    pub fn load(artifacts_dir: &Path, config: &str) -> Result<RawXlaEngine> {
+        let manifest = Manifest::load(artifacts_dir)
+            .map_err(|e: ManifestError| anyhow!("{e}"))
+            .context("loading artifact manifest (run `make artifacts`)")?;
+        let entry = manifest
+            .config(config)
+            .map_err(|e| anyhow!("{e}"))?
+            .clone();
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu failed: {e:?}"))?;
+        let mut executables = BTreeMap::new();
+        for (fname, f) in &entry.functions {
+            let proto = xla::HloModuleProto::from_text_file(
+                f.file
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+            )
+            .map_err(|e| anyhow!("parse {:?}: {e:?}", f.file))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {fname}: {e:?}"))?;
+            executables.insert(fname.clone(), exe);
+        }
+        let spec = entry.split_spec();
+        Ok(RawXlaEngine { entry, spec, client, executables })
+    }
+
+    /// Execute a named function on already-marshaled literals; returns the
+    /// decomposed tuple elements.
+    pub fn execute(&self, fname: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(fname)
+            .ok_or_else(|| anyhow!("no executable '{fname}'"))?;
+        let expected = self.entry.function(fname).map_err(|e| anyhow!("{e}"))?;
+        if args.len() != expected.arg_shapes.len() {
+            return Err(anyhow!(
+                "{fname}: got {} args, artifact wants {}",
+                args.len(),
+                expected.arg_shapes.len()
+            ));
+        }
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("execute {fname}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        if parts.len() != expected.n_outputs {
+            return Err(anyhow!(
+                "{fname}: {} outputs, manifest says {}",
+                parts.len(),
+                expected.n_outputs
+            ));
+        }
+        Ok(parts)
+    }
+
+    /// passive_fwd: (θ_p, x_p) → z_p.
+    pub fn passive_fwd(&self, params: &MlpParams, x: &Matrix) -> Result<Matrix> {
+        let mut args = Vec::new();
+        push_params(&mut args, params)?;
+        args.push(matrix_to_literal(x)?);
+        let out = self.execute("passive_fwd", &args)?;
+        literal_to_matrix(&out[0], self.entry.batch, self.entry.embed)
+    }
+
+    /// active_step: (θ_a, θ_top, x_a, {z_p}, y) → (loss, {∇z}, ∇θ_a, ∇θ_top).
+    #[allow(clippy::type_complexity)]
+    pub fn active_step(
+        &self,
+        active: &MlpParams,
+        top: &MlpParams,
+        x_a: &Matrix,
+        z_p: &[Matrix],
+        y: &[f32],
+    ) -> Result<(f64, Vec<Matrix>, MlpParams, MlpParams)> {
+        let mut args = Vec::new();
+        push_params(&mut args, active)?;
+        push_params(&mut args, top)?;
+        args.push(matrix_to_literal(x_a)?);
+        for z in z_p {
+            args.push(matrix_to_literal(z)?);
+        }
+        args.push(vec_to_literal(y)?);
+        let out = self.execute("active_step", &args)?;
+
+        let loss = out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("loss literal: {e:?}"))?[0] as f64;
+        let mut grad_z = Vec::with_capacity(z_p.len());
+        let mut off = 1usize;
+        for _ in 0..z_p.len() {
+            grad_z.push(literal_to_matrix(&out[off], self.entry.batch, self.entry.embed)?);
+            off += 1;
+        }
+        let grad_active = params_from_literals(&self.spec.active_bottom, &out, &mut off)?;
+        let grad_top = params_from_literals(&self.spec.top, &out, &mut off)?;
+        Ok((loss, grad_z, grad_active, grad_top))
+    }
+
+    /// passive_bwd: (θ_p, x_p, ∇z) → ∇θ_p.
+    pub fn passive_bwd(
+        &self,
+        params: &MlpParams,
+        x: &Matrix,
+        grad_z: &Matrix,
+    ) -> Result<MlpParams> {
+        let mut args = Vec::new();
+        push_params(&mut args, params)?;
+        args.push(matrix_to_literal(x)?);
+        args.push(matrix_to_literal(grad_z)?);
+        let out = self.execute("passive_bwd", &args)?;
+        let mut off = 0usize;
+        params_from_literals(&self.spec.passive_bottoms[0], &out, &mut off)
+    }
+
+    /// predict: full-model inference.
+    pub fn predict(
+        &self,
+        active: &MlpParams,
+        top: &MlpParams,
+        passive: &[MlpParams],
+        x_a: &Matrix,
+        x_p: &[Matrix],
+    ) -> Result<Matrix> {
+        let mut args = Vec::new();
+        push_params(&mut args, active)?;
+        push_params(&mut args, top)?;
+        for p in passive {
+            push_params(&mut args, p)?;
+        }
+        args.push(matrix_to_literal(x_a)?);
+        for x in x_p {
+            args.push(matrix_to_literal(x)?);
+        }
+        let out = self.execute("predict", &args)?;
+        literal_to_matrix(&out[0], self.entry.batch, 1)
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_byte_view_roundtrips() {
+        let v = vec![1.0f32, -2.5, 3.25];
+        let b = f32_bytes(&v);
+        assert_eq!(b.len(), 12);
+        let back: Vec<f32> = b
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn literal_matrix_roundtrip() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let l = matrix_to_literal(&m).unwrap();
+        let back = literal_to_matrix(&l, 2, 3).unwrap();
+        assert_eq!(m, back);
+        assert!(literal_to_matrix(&l, 3, 3).is_err());
+    }
+
+    #[test]
+    fn vec_literal_roundtrip() {
+        let v = vec![0.5f32, -0.5];
+        let l = vec_to_literal(&v).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), v);
+    }
+}

@@ -1,0 +1,296 @@
+//! Artifact manifest: the JSON contract written by `python/compile/aot.py`
+//! describing every AOT-lowered HLO module (argument shapes, output arity,
+//! model hyper-parameters).
+
+use crate::config::ModelSize;
+use crate::data::Task;
+use crate::jsonio::Json;
+use crate::model::SplitModelSpec;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One lowered function of a config.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FunctionEntry {
+    pub file: PathBuf,
+    pub arg_shapes: Vec<Vec<usize>>,
+    pub n_outputs: usize,
+}
+
+/// One model configuration (static batch + dims).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConfigEntry {
+    pub name: String,
+    pub size: ModelSize,
+    pub d_active: usize,
+    pub d_passive: Vec<usize>,
+    pub hidden: usize,
+    pub embed: usize,
+    pub task: Task,
+    pub batch: usize,
+    pub functions: BTreeMap<String, FunctionEntry>,
+}
+
+impl ConfigEntry {
+    /// The Rust-side model spec equivalent to this artifact config.
+    pub fn split_spec(&self) -> SplitModelSpec {
+        SplitModelSpec::build(self.size, self.d_active, &self.d_passive, self.hidden, self.embed)
+    }
+
+    pub fn function(&self, name: &str) -> Result<&FunctionEntry, ManifestError> {
+        self.functions
+            .get(name)
+            .ok_or_else(|| ManifestError::Missing(format!("function '{name}' in '{}'", self.name)))
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub configs: BTreeMap<String, ConfigEntry>,
+}
+
+/// Manifest load/validation errors.
+#[derive(Debug)]
+pub enum ManifestError {
+    Io(std::io::Error),
+    Parse(String),
+    Missing(String),
+    ShapeMismatch(String),
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io(e) => write!(f, "manifest io: {e}"),
+            ManifestError::Parse(m) => write!(f, "manifest parse: {m}"),
+            ManifestError::Missing(m) => write!(f, "manifest missing: {m}"),
+            ManifestError::ShapeMismatch(m) => write!(f, "manifest shape mismatch: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`, resolving artifact files against `dir`.
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        let text =
+            std::fs::read_to_string(dir.join("manifest.json")).map_err(ManifestError::Io)?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON text (artifact paths resolved against `dir`).
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest, ManifestError> {
+        let root = Json::parse(text).map_err(|e| ManifestError::Parse(e.to_string()))?;
+        let cfgs = root
+            .get("configs")
+            .and_then(|c| c.members())
+            .ok_or_else(|| ManifestError::Parse("no 'configs' object".into()))?;
+        let mut configs = BTreeMap::new();
+        for (name, c) in cfgs {
+            let get_usize = |k: &str| -> Result<usize, ManifestError> {
+                c.get(k)
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| ManifestError::Parse(format!("{name}: missing '{k}'")))
+            };
+            let size_s = c
+                .get("size")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| ManifestError::Parse(format!("{name}: missing 'size'")))?;
+            let size = ModelSize::parse(size_s)
+                .ok_or_else(|| ManifestError::Parse(format!("{name}: bad size '{size_s}'")))?;
+            let task_s = c
+                .get("task")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| ManifestError::Parse(format!("{name}: missing 'task'")))?;
+            let task = Task::parse(task_s)
+                .ok_or_else(|| ManifestError::Parse(format!("{name}: bad task '{task_s}'")))?;
+            let d_passive: Vec<usize> = c
+                .get("d_passive")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| ManifestError::Parse(format!("{name}: missing 'd_passive'")))?
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect();
+            let mut functions = BTreeMap::new();
+            let fns = c
+                .get("functions")
+                .and_then(|f| f.members())
+                .ok_or_else(|| ManifestError::Parse(format!("{name}: missing 'functions'")))?;
+            for (fname, fj) in fns {
+                let file = fj
+                    .get("file")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| ManifestError::Parse(format!("{name}/{fname}: no file")))?;
+                let arg_shapes: Vec<Vec<usize>> = fj
+                    .get("arg_shapes")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| ManifestError::Parse(format!("{name}/{fname}: no shapes")))?
+                    .iter()
+                    .map(|s| {
+                        s.as_arr()
+                            .map(|a| a.iter().filter_map(|d| d.as_usize()).collect())
+                            .unwrap_or_default()
+                    })
+                    .collect();
+                let n_outputs = fj
+                    .get("n_outputs")
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| ManifestError::Parse(format!("{name}/{fname}: no n_outputs")))?;
+                functions.insert(
+                    fname.clone(),
+                    FunctionEntry { file: dir.join(file), arg_shapes, n_outputs },
+                );
+            }
+            let entry = ConfigEntry {
+                name: name.clone(),
+                size,
+                d_active: get_usize("d_active")?,
+                d_passive,
+                hidden: get_usize("hidden")?,
+                embed: get_usize("embed")?,
+                task,
+                batch: get_usize("batch")?,
+                functions,
+            };
+            entry.validate()?;
+            configs.insert(name.clone(), entry);
+        }
+        Ok(Manifest { configs })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigEntry, ManifestError> {
+        self.configs
+            .get(name)
+            .ok_or_else(|| ManifestError::Missing(format!("config '{name}'")))
+    }
+}
+
+impl ConfigEntry {
+    /// Cross-check the manifest's argument shapes against the Rust-side
+    /// spec — catches any drift in the parameter-layout contract.
+    pub fn validate(&self) -> Result<(), ManifestError> {
+        let spec = self.split_spec();
+        spec.validate()
+            .map_err(|e| ManifestError::ShapeMismatch(format!("{}: {e}", self.name)))?;
+        if let Some(f) = self.functions.get("passive_fwd") {
+            // params [W,b]* then x.
+            let expected = 2 * spec.passive_bottoms[0].layers.len() + 1;
+            if f.arg_shapes.len() != expected {
+                return Err(ManifestError::ShapeMismatch(format!(
+                    "{}: passive_fwd has {} args, expected {expected}",
+                    self.name,
+                    f.arg_shapes.len()
+                )));
+            }
+            let last = f.arg_shapes.last().unwrap();
+            if last != &vec![self.batch, self.d_passive[0]] {
+                return Err(ManifestError::ShapeMismatch(format!(
+                    "{}: passive_fwd x shape {last:?}",
+                    self.name
+                )));
+            }
+            // First weight shape matches the spec's first layer.
+            let l0 = &spec.passive_bottoms[0].layers[0];
+            if f.arg_shapes[0] != vec![l0.in_dim, l0.out_dim] {
+                return Err(ManifestError::ShapeMismatch(format!(
+                    "{}: passive_fwd W0 {:?} != ({}, {})",
+                    self.name, f.arg_shapes[0], l0.in_dim, l0.out_dim
+                )));
+            }
+        }
+        if let Some(f) = self.functions.get("active_step") {
+            let na = 2 * spec.active_bottom.layers.len();
+            let nt = 2 * spec.top.layers.len();
+            let k = spec.passive_bottoms.len();
+            let expected = na + nt + 1 + k + 1;
+            if f.arg_shapes.len() != expected {
+                return Err(ManifestError::ShapeMismatch(format!(
+                    "{}: active_step has {} args, expected {expected}",
+                    self.name,
+                    f.arg_shapes.len()
+                )));
+            }
+            if f.n_outputs != 1 + k + na + nt {
+                return Err(ManifestError::ShapeMismatch(format!(
+                    "{}: active_step {} outputs, expected {}",
+                    self.name,
+                    f.n_outputs,
+                    1 + k + na + nt
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> String {
+        r#"{
+          "format_version": 1,
+          "configs": {
+            "tiny": {
+              "size": "small", "d_active": 4, "d_passive": [3],
+              "hidden": 8, "embed": 4, "task": "classification", "batch": 4,
+              "functions": {
+                "passive_fwd": {
+                  "file": "tiny_passive_fwd.hlo.txt",
+                  "arg_shapes": [[3,8],[8],[8,8],[8],[8,8],[8],[8,8],[8],[8,8],[8],[8,8],[8],[8,8],[8],[8,8],[8],[8,8],[8],[8,4],[4],[4,3]],
+                  "n_outputs": 1
+                }
+              }
+            }
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(&sample_json(), Path::new("/tmp/a")).unwrap();
+        let c = m.config("tiny").unwrap();
+        assert_eq!(c.batch, 4);
+        assert_eq!(c.d_passive, vec![3]);
+        let f = c.function("passive_fwd").unwrap();
+        assert_eq!(f.arg_shapes.len(), 21);
+        assert_eq!(f.n_outputs, 1);
+        assert!(f.file.starts_with("/tmp/a"));
+        assert!(c.function("nope").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_x_shape() {
+        let bad = sample_json().replace("[4,3]", "[4,99]");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn validation_catches_missing_args() {
+        let bad = sample_json().replace("[[3,8],[8],", "[[3,8],");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("{}", Path::new("/tmp")).is_err());
+        assert!(Manifest::parse("not json", Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_present() {
+        // Integration-style: if `make artifacts` has run, the real
+        // manifest must parse and validate.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.configs.contains_key("quickstart"));
+            let c = m.config("quickstart").unwrap();
+            assert_eq!(c.batch, 64);
+            assert_eq!(c.functions.len(), 4);
+        }
+    }
+}

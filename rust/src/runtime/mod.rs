@@ -1,0 +1,11 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from Rust — the L2/L1 compute
+//! behind the L3 coordinator, with Python never on the request path.
+
+pub mod engine;
+pub mod manifest;
+pub mod service;
+
+pub use engine::RawXlaEngine;
+pub use manifest::{ConfigEntry, FunctionEntry, Manifest, ManifestError};
+pub use service::XlaService;

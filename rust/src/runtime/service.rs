@@ -1,0 +1,230 @@
+//! Thread-safe front-end for the PJRT engine.
+//!
+//! The `xla` crate's PJRT wrappers hold raw C pointers (no `Send`/`Sync`),
+//! so [`XlaService`] runs one [`RawXlaEngine`] on a dedicated executor
+//! thread and serves requests over channels. The cloneable handle
+//! implements [`SplitEngine`], which is what the coordinator's workers
+//! program against — the same shape as a per-party executor service in a
+//! production deployment.
+
+use super::engine::RawXlaEngine;
+use crate::model::{ActiveStepOut, MlpParams, SplitEngine};
+use crate::tensor::Matrix;
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+enum Request {
+    PassiveFwd {
+        params: MlpParams,
+        x: Matrix,
+        reply: Sender<Result<Matrix>>,
+    },
+    ActiveStep {
+        active: MlpParams,
+        top: MlpParams,
+        x_a: Matrix,
+        z_p: Vec<Matrix>,
+        y: Vec<f32>,
+        reply: Sender<Result<(f64, Vec<Matrix>, MlpParams, MlpParams)>>,
+    },
+    PassiveBwd {
+        params: MlpParams,
+        x: Matrix,
+        grad_z: Matrix,
+        reply: Sender<Result<MlpParams>>,
+    },
+    Predict {
+        active: MlpParams,
+        top: MlpParams,
+        passive: Vec<MlpParams>,
+        x_a: Matrix,
+        x_p: Vec<Matrix>,
+        reply: Sender<Result<Matrix>>,
+    },
+    Shutdown,
+}
+
+/// Handle to the executor thread; cheap to clone.
+pub struct XlaService {
+    tx: Mutex<Sender<Request>>,
+    handle: Option<JoinHandle<()>>,
+    /// Static batch size of the loaded config (callers must match it).
+    pub batch: usize,
+    pub embed: usize,
+    pub config: String,
+}
+
+impl XlaService {
+    /// Spawn the executor thread and compile `config` from `artifacts_dir`.
+    pub fn spawn(artifacts_dir: impl Into<PathBuf>, config: &str) -> Result<XlaService> {
+        let dir: PathBuf = artifacts_dir.into();
+        let cfg = config.to_string();
+        let (tx, rx) = channel::<Request>();
+        let (init_tx, init_rx) = channel::<Result<(usize, usize)>>();
+        let cfg2 = cfg.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("xla-exec-{cfg}"))
+            .spawn(move || {
+                let engine = match RawXlaEngine::load(&dir, &cfg2) {
+                    Ok(e) => {
+                        let _ = init_tx.send(Ok((e.entry.batch, e.entry.embed)));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::PassiveFwd { params, x, reply } => {
+                            let _ = reply.send(engine.passive_fwd(&params, &x));
+                        }
+                        Request::ActiveStep { active, top, x_a, z_p, y, reply } => {
+                            let _ = reply.send(engine.active_step(&active, &top, &x_a, &z_p, &y));
+                        }
+                        Request::PassiveBwd { params, x, grad_z, reply } => {
+                            let _ = reply.send(engine.passive_bwd(&params, &x, &grad_z));
+                        }
+                        Request::Predict { active, top, passive, x_a, x_p, reply } => {
+                            let _ = reply.send(engine.predict(&active, &top, &passive, &x_a, &x_p));
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .map_err(|e| anyhow!("spawn xla service: {e}"))?;
+        let (batch, embed) = init_rx
+            .recv()
+            .map_err(|_| anyhow!("xla service died during init"))??;
+        Ok(XlaService { tx: Mutex::new(tx), handle: Some(handle), batch, embed, config: cfg })
+    }
+
+    fn send(&self, req: Request) {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(req)
+            .expect("xla service alive");
+    }
+
+    /// Fallible passive forward (Result-returning variant).
+    pub fn try_passive_fwd(&self, params: &MlpParams, x: &Matrix) -> Result<Matrix> {
+        let (reply, rx) = channel();
+        self.send(Request::PassiveFwd { params: params.clone(), x: x.clone(), reply });
+        rx.recv().map_err(|_| anyhow!("xla service dropped reply"))?
+    }
+
+    #[allow(clippy::type_complexity)]
+    pub fn try_active_step(
+        &self,
+        active: &MlpParams,
+        top: &MlpParams,
+        x_a: &Matrix,
+        z_p: &[Matrix],
+        y: &[f32],
+    ) -> Result<(f64, Vec<Matrix>, MlpParams, MlpParams)> {
+        let (reply, rx) = channel();
+        self.send(Request::ActiveStep {
+            active: active.clone(),
+            top: top.clone(),
+            x_a: x_a.clone(),
+            z_p: z_p.to_vec(),
+            y: y.to_vec(),
+            reply,
+        });
+        rx.recv().map_err(|_| anyhow!("xla service dropped reply"))?
+    }
+
+    pub fn try_passive_bwd(
+        &self,
+        params: &MlpParams,
+        x: &Matrix,
+        grad_z: &Matrix,
+    ) -> Result<MlpParams> {
+        let (reply, rx) = channel();
+        self.send(Request::PassiveBwd {
+            params: params.clone(),
+            x: x.clone(),
+            grad_z: grad_z.clone(),
+            reply,
+        });
+        rx.recv().map_err(|_| anyhow!("xla service dropped reply"))?
+    }
+
+    pub fn try_predict(
+        &self,
+        active: &MlpParams,
+        top: &MlpParams,
+        passive: &[MlpParams],
+        x_a: &Matrix,
+        x_p: &[Matrix],
+    ) -> Result<Matrix> {
+        let (reply, rx) = channel();
+        self.send(Request::Predict {
+            active: active.clone(),
+            top: top.clone(),
+            passive: passive.to_vec(),
+            x_a: x_a.clone(),
+            x_p: x_p.to_vec(),
+            reply,
+        });
+        rx.recv().map_err(|_| anyhow!("xla service dropped reply"))?
+    }
+}
+
+impl Drop for XlaService {
+    fn drop(&mut self) {
+        let _ = self.tx.lock().unwrap().send(Request::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl SplitEngine for XlaService {
+    fn passive_fwd(&self, _party: usize, params: &MlpParams, x: &Matrix) -> Matrix {
+        self.try_passive_fwd(params, x).expect("xla passive_fwd")
+    }
+
+    fn active_step(
+        &self,
+        active: &MlpParams,
+        top: &MlpParams,
+        x_a: &Matrix,
+        z_p: &[Matrix],
+        y: &[f32],
+    ) -> ActiveStepOut {
+        let (loss, grad_z, grad_active, grad_top) = self
+            .try_active_step(active, top, x_a, z_p, y)
+            .expect("xla active_step");
+        // The AOT artifact does not return the raw predictions (the loss
+        // and gradients are all training needs); evaluation goes through
+        // `predict`. An empty preds matrix signals "not computed".
+        ActiveStepOut { loss, preds: Matrix::zeros(0, 1), grad_z, grad_active, grad_top }
+    }
+
+    fn passive_bwd(
+        &self,
+        _party: usize,
+        params: &MlpParams,
+        x: &Matrix,
+        grad_z: &Matrix,
+    ) -> MlpParams {
+        self.try_passive_bwd(params, x, grad_z).expect("xla passive_bwd")
+    }
+
+    fn predict(
+        &self,
+        active: &MlpParams,
+        top: &MlpParams,
+        passive: &[MlpParams],
+        x_a: &Matrix,
+        x_p: &[Matrix],
+    ) -> Matrix {
+        self.try_predict(active, top, passive, x_a, x_p).expect("xla predict")
+    }
+}

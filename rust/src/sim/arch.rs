@@ -1,0 +1,789 @@
+//! Pipeline simulations of the five evaluated architectures.
+//!
+//! The four baselines follow closed lockstep/barrier schedules, so they
+//! are simulated with exact per-batch timeline arithmetic; PubSub-VFL's
+//! behaviour is queue-dominated (channel capacities, deadlines,
+//! stragglers, stale-work filling), so it runs on the discrete-event core
+//! in `des.rs`.
+//!
+//! All compute durations come from the fitted cost model (§4.2); the only
+//! free calibration constants are the per-architecture *stall fractions*
+//! below, which encode the coordination overhead each design pays per
+//! batch (Fig. 6/7's latency ①–③). They are documented in DESIGN.md §4
+//! and EXPERIMENTS.md.
+//!
+//! Scheduling semantics (matching Appendix A/B):
+//! - **VFL**: one worker pair, fully serial chain per batch.
+//! - **VFL-PS**: ν pairs over ID-aligned sub-batches, *per-iteration*
+//!   synchronous PS aggregation (the scarecrow's upload→aggregate→
+//!   broadcast closes every iteration), straggler-amplified barrier.
+//! - **AVFL**: one pair, pipelined with bounded staleness, but each
+//!   exchange pays the heavy peer-to-peer/ID-alignment polling stall the
+//!   paper illustrates in Fig. 7.
+//! - **AVFL-PS**: ν pairs; *within* a pair the inter-party exchange stays
+//!   request/response (staleness 1 ⇒ serial chain), pairs overlap;
+//!   per-epoch PS barrier.
+//! - **PubSub-VFL**: event-driven channels; workers never block on the
+//!   other party — when no fresh work is available they run local
+//!   (stale-buffer) steps, so CPU stays busy and only convergence pays,
+//!   which is exactly the decoupling argument of §4.1.
+
+use super::convergence::{delta_t, ConvergenceModel};
+use super::des::EventQueue;
+use crate::config::{AblationConfig, Architecture};
+use crate::planner::CostModel;
+use crate::util::{ceil_div, Rng};
+use std::collections::VecDeque;
+
+/// Fraction of per-batch compute each architecture loses to coordination.
+fn stall_fraction(arch: Architecture) -> f64 {
+    match arch {
+        Architecture::Vfl => 0.35,
+        Architecture::VflPs => 0.10,
+        Architecture::Avfl => 2.60,
+        Architecture::AvflPs => 0.15,
+        Architecture::PubSub => 0.02,
+    }
+}
+
+/// Simulation input.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub arch: Architecture,
+    pub n_samples: usize,
+    pub batch_size: usize,
+    pub w_a: usize,
+    pub w_p: usize,
+    pub cost: CostModel,
+    pub conv: ConvergenceModel,
+    /// Channel capacities (p, q in §4.1).
+    pub buffer_p: usize,
+    pub buffer_q: usize,
+    /// Waiting deadline T_ddl, seconds.
+    pub t_ddl_s: f64,
+    /// ΔT0 of Eq. (5).
+    pub delta_t0: usize,
+    /// GDP budget (∞ = off). Affects epochs-to-target and comm.
+    pub mu: f64,
+    pub seed: u64,
+    /// PS aggregation barrier cost, seconds.
+    pub agg_cost_s: f64,
+    /// Per-job probability of a straggler event and its slowdown factor.
+    pub straggle_prob: f64,
+    pub straggle_factor: f64,
+    pub ablation: AblationConfig,
+}
+
+impl SimConfig {
+    /// Defaults mirroring the paper's Fig. 3 setup.
+    pub fn new(arch: Architecture, cost: CostModel) -> SimConfig {
+        SimConfig {
+            arch,
+            n_samples: 100_000,
+            batch_size: 256,
+            w_a: 8,
+            w_p: 10,
+            cost,
+            conv: ConvergenceModel::default(),
+            buffer_p: 5,
+            buffer_q: 5,
+            t_ddl_s: 10.0,
+            delta_t0: 5,
+            mu: f64::INFINITY,
+            seed: 42,
+            agg_cost_s: 0.02,
+            straggle_prob: 0.02,
+            straggle_factor: 4.0,
+            ablation: AblationConfig::default(),
+        }
+    }
+}
+
+/// Simulation output: the paper's four system metrics plus accounting.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub arch: Architecture,
+    /// Wall-clock time to the convergence target, seconds.
+    pub wall_s: f64,
+    /// CPU utilization in [0, 1] across both parties.
+    pub cpu_util: f64,
+    /// Mean waiting time per epoch per worker, seconds.
+    pub wait_per_epoch_s: f64,
+    pub total_wait_s: f64,
+    /// Total inter-party communication, MB.
+    pub comm_mb: f64,
+    pub epochs: usize,
+    pub batches_per_epoch: usize,
+    /// Batches redone due to drops/deadline reassignment (PubSub).
+    pub batches_retried: usize,
+    /// Stale local steps executed while blocked (PubSub busy-filling).
+    pub stale_steps: usize,
+}
+
+/// Per-batch stage durations for one worker, given the contention level.
+#[derive(Clone, Copy, Debug)]
+struct StageTimes {
+    s_pf: f64,
+    s_pb: f64,
+    s_af: f64,
+    s_top: f64,
+    s_ab: f64,
+    t_e: f64,
+    t_g: f64,
+}
+
+impl StageTimes {
+    fn derive(cost: &CostModel, b: usize, w_a: usize, w_p: usize) -> StageTimes {
+        StageTimes {
+            s_pf: cost.t_f_p(b, w_p),
+            s_pb: cost.t_b_p(b, w_p),
+            s_af: cost.t_f_a(b, w_a),
+            s_top: cost.t_top(b, w_a),
+            s_ab: cost.t_b_a(b, w_a),
+            t_e: cost.t_emb(b),
+            t_g: cost.t_grad(b),
+        }
+    }
+
+    fn active_compute(&self) -> f64 {
+        self.s_af + self.s_top + self.s_ab
+    }
+
+    fn passive_compute(&self) -> f64 {
+        self.s_pf + self.s_pb
+    }
+
+    /// Full serial chain of one lockstep iteration (both parties +
+    /// both transfers), plus the implied pairwise waits.
+    fn serial_chain(&self) -> f64 {
+        let emb_arrive = self.s_pf + self.t_e;
+        let top_start = self.s_af.max(emb_arrive);
+        let active_end = top_start + self.s_top + self.s_ab;
+        let grad_arrive = active_end + self.t_g;
+        let passive_end = grad_arrive + self.s_pb;
+        active_end.max(passive_end)
+    }
+}
+
+/// Bytes crossing the party boundary per batch (embedding + gradient).
+fn batch_bytes(cost: &CostModel, b: usize) -> f64 {
+    (cost.emb_bytes_per_sample + cost.grad_bytes_per_sample) * b as f64
+}
+
+/// Per-batch coordination framing multiplier. The point-to-point designs
+/// exchange ID-alignment/handshake metadata with every transfer (Fig. 7);
+/// the PS designs batch some of it; PubSub's batch-ID channel labels
+/// replace per-pair coordination almost entirely (§4.1), which is why the
+/// paper measures the lowest communication cost for PubSub despite
+/// similar payload volume (Fig. 3, Tables 9-10).
+fn comm_overhead(arch: Architecture) -> f64 {
+    match arch {
+        Architecture::Vfl => 1.45,
+        Architecture::VflPs => 1.30,
+        Architecture::Avfl => 1.55,
+        Architecture::AvflPs => 1.30,
+        Architecture::PubSub => 1.03,
+    }
+}
+
+/// Entry point: simulate the configured architecture to its convergence
+/// target and report the four system metrics.
+pub fn simulate(cfg: &SimConfig) -> SimResult {
+    let b = cfg.batch_size;
+    let n_batches = ceil_div(cfg.n_samples, b);
+    let w_for_conv = match cfg.arch {
+        Architecture::Vfl | Architecture::Avfl => 1,
+        _ => cfg.w_a.min(cfg.w_p),
+    };
+    let epochs = cfg
+        .conv
+        .epochs_to_target(cfg.arch, b, w_for_conv, cfg.mu, cfg.ablation.no_semi_async)
+        .ceil()
+        .max(1.0) as usize;
+
+    match cfg.arch {
+        Architecture::Vfl => sim_lockstep(cfg, epochs, n_batches, 1),
+        Architecture::VflPs => sim_lockstep(cfg, epochs, n_batches, cfg.w_a.min(cfg.w_p)),
+        Architecture::Avfl => sim_avfl(cfg, epochs, n_batches),
+        Architecture::AvflPs => sim_avfl_ps(cfg, epochs, n_batches, Architecture::AvflPs),
+        Architecture::PubSub => {
+            if cfg.ablation.no_pubsub {
+                // "w/o PubSub" ablation: broker replaced by AVFL-PS-style
+                // direct exchange, rest of the system unchanged.
+                sim_avfl_ps(cfg, epochs, n_batches, Architecture::AvflPs)
+            } else {
+                sim_pubsub(cfg, epochs, n_batches)
+            }
+        }
+    }
+}
+
+/// Lockstep schedules (VFL with pairs = 1, VFL-PS with ν pairs).
+/// VFL-PS pays a synchronous PS aggregation *every iteration* (upload →
+/// aggregate → broadcast, Appendix A) which also exposes it to stragglers.
+fn sim_lockstep(cfg: &SimConfig, epochs: usize, n_batches: usize, pairs: usize) -> SimResult {
+    let mut rng = Rng::new(cfg.seed);
+    let st = StageTimes::derive(&cfg.cost, cfg.batch_size, pairs, pairs);
+    let arch = if pairs > 1 { Architecture::VflPs } else { Architecture::Vfl };
+    let stall = stall_fraction(arch);
+
+    let iters_max = ceil_div(n_batches, pairs);
+    let mut wall = 0.0;
+    let mut busy_core_s = 0.0;
+    let mut wait_s = 0.0;
+    let core_a = cfg.cost.c_a as f64 / pairs as f64;
+    let core_p = cfg.cost.c_p as f64 / pairs as f64;
+
+    let chain = st.serial_chain();
+    let overhead = stall * (st.active_compute() + st.passive_compute()) / 2.0;
+
+    for _epoch in 0..epochs {
+        let mut epoch_wall = 0.0;
+        for _iter in 0..iters_max {
+            // Straggler inflation: with per-iteration sync, the slowest
+            // pair delays everyone.
+            let mut extra = 0.0f64;
+            for _ in 0..pairs {
+                if rng.flip(cfg.straggle_prob) {
+                    extra = extra.max(
+                        (cfg.straggle_factor - 1.0)
+                            * st.active_compute().max(st.passive_compute()),
+                    );
+                }
+            }
+            let iter_wall = chain
+                + overhead
+                + extra
+                + if pairs > 1 { cfg.agg_cost_s } else { 0.0 };
+            epoch_wall += iter_wall;
+            // Pairwise + barrier waits: each worker is busy only its own
+            // compute; everything else in the iteration window is waiting.
+            wait_s += pairs as f64
+                * ((iter_wall - st.active_compute()) + (iter_wall - st.passive_compute()));
+        }
+        wall += epoch_wall;
+        for pair in 0..pairs {
+            let iters = n_batches / pairs + usize::from(pair < n_batches % pairs);
+            busy_core_s += iters as f64
+                * (st.active_compute() * core_a + st.passive_compute() * core_p);
+        }
+    }
+
+    finish(cfg, epochs, n_batches, wall, busy_core_s, wait_s, 0, 0)
+}
+
+/// AVFL: one worker pair, pipelined with bounded staleness ≥ 2 so the
+/// parties overlap, but every exchange pays the peer-to-peer polling /
+/// ID-alignment stall of Fig. 7 (the reason its utilization is lowest).
+fn sim_avfl(cfg: &SimConfig, epochs: usize, n_batches: usize) -> SimResult {
+    let mut rng = Rng::new(cfg.seed);
+    let st = StageTimes::derive(&cfg.cost, cfg.batch_size, 1, 1);
+    let stall = stall_fraction(Architecture::Avfl);
+
+    let p_cycle = st.passive_compute() * (1.0 + stall);
+    let a_cycle = st.active_compute() * (1.0 + stall);
+    let period = p_cycle.max(a_cycle).max(st.t_e.max(st.t_g));
+
+    let mut wall = 0.0;
+    let mut busy_core_s = 0.0;
+    let mut wait_s = 0.0;
+
+    for _epoch in 0..epochs {
+        let mut extra = 0.0;
+        for _ in 0..2 {
+            if rng.flip(cfg.straggle_prob) {
+                // Async absorbs ~half a straggler in the queue.
+                extra += 0.5
+                    * (cfg.straggle_factor - 1.0)
+                    * st.active_compute().max(st.passive_compute());
+            }
+        }
+        let epoch_wall = n_batches as f64 * period + extra;
+        wall += epoch_wall;
+        busy_core_s += n_batches as f64
+            * (st.active_compute() * cfg.cost.c_a as f64
+                + st.passive_compute() * cfg.cost.c_p as f64);
+        wait_s += n_batches as f64
+            * ((period - st.active_compute()) + (period - st.passive_compute()))
+            + extra;
+    }
+
+    finish(cfg, epochs, n_batches, wall, busy_core_s, wait_s, 0, 0)
+}
+
+/// AVFL-PS (also the "w/o PubSub" ablation): ν pairs overlap with each
+/// other, but *within* a pair the inter-party exchange stays synchronous
+/// request/response (effective staleness 1 ⇒ the serial chain), plus a
+/// per-epoch PS barrier.
+fn sim_avfl_ps(
+    cfg: &SimConfig,
+    epochs: usize,
+    n_batches: usize,
+    arch: Architecture,
+) -> SimResult {
+    let mut rng = Rng::new(cfg.seed);
+    let pairs = cfg.w_a.min(cfg.w_p).max(1);
+    let st = StageTimes::derive(&cfg.cost, cfg.batch_size, pairs, pairs);
+    let stall = stall_fraction(arch);
+
+    let chain = st.serial_chain() * (1.0 + stall);
+    let iters_max = ceil_div(n_batches, pairs);
+    let core_a = cfg.cost.c_a as f64 / pairs as f64;
+    let core_p = cfg.cost.c_p as f64 / pairs as f64;
+
+    let mut wall = 0.0;
+    let mut busy_core_s = 0.0;
+    let mut wait_s = 0.0;
+
+    for _epoch in 0..epochs {
+        let mut extra = 0.0;
+        for _ in 0..pairs {
+            if rng.flip(cfg.straggle_prob) {
+                extra += 0.5
+                    * (cfg.straggle_factor - 1.0)
+                    * st.active_compute().max(st.passive_compute());
+            }
+        }
+        // Pairs run chains independently; the epoch closes with a barrier,
+        // so the straggler tail lands on everyone once.
+        let epoch_wall = iters_max as f64 * chain + extra + cfg.agg_cost_s;
+        wall += epoch_wall;
+        for pair in 0..pairs {
+            let iters = n_batches / pairs + usize::from(pair < n_batches % pairs);
+            busy_core_s += iters as f64
+                * (st.active_compute() * core_a + st.passive_compute() * core_p);
+            let tail = (iters_max - iters) as f64 * chain;
+            wait_s += iters as f64
+                * ((chain - st.active_compute()) + (chain - st.passive_compute()))
+                + 2.0 * tail
+                + 2.0 * cfg.agg_cost_s;
+        }
+        wait_s += extra;
+    }
+
+    finish(cfg, epochs, n_batches, wall, busy_core_s, wait_s, 0, 0)
+}
+
+/// Event type for the PubSub discrete-event simulation.
+#[derive(Clone, Copy, Debug)]
+enum Ev {
+    PassiveFree(usize),
+    ActiveFree(usize),
+    EmbArrive,
+    GradArrive,
+}
+
+/// Wake the first idle worker in `slots`, charging its wait time and
+/// scheduling `ctor(worker_index)` immediately.
+fn wake_one(
+    slots: &mut [Option<f64>],
+    wait_s: &mut f64,
+    now: f64,
+    q: &mut EventQueue<Ev>,
+    ctor: fn(usize) -> Ev,
+) {
+    for (j, slot) in slots.iter_mut().enumerate() {
+        if slot.is_some() {
+            let since = slot.take().unwrap();
+            *wait_s += now - since;
+            q.schedule_at(now, ctor(j));
+            break;
+        }
+    }
+}
+
+/// PubSub-VFL: discrete-event simulation of the batch-ID-keyed channels.
+fn sim_pubsub(cfg: &SimConfig, epochs: usize, n_batches: usize) -> SimResult {
+    let st = StageTimes::derive(&cfg.cost, cfg.batch_size, cfg.w_a, cfg.w_p);
+    let stall = stall_fraction(Architecture::PubSub);
+    let s_pf = st.s_pf * (1.0 + stall);
+    let s_pb = st.s_pb * (1.0 + stall);
+    let s_a = st.active_compute() * (1.0 + stall);
+
+    let cap_e = cfg.buffer_p * cfg.w_a.max(1);
+    let cap_g = cfg.buffer_q * cfg.w_p.max(1);
+
+    let core_a = cfg.cost.c_a as f64 / cfg.w_a as f64;
+    let core_p = cfg.cost.c_p as f64 / cfg.w_p as f64;
+
+    let mut rng = Rng::new(cfg.seed);
+    let mut wall = 0.0;
+    let mut busy_core_s = 0.0;
+    let mut wait_s = 0.0;
+    let mut retried = 0usize;
+    let mut stale_steps = 0usize;
+    // Stale-work eligibility: a worker can run local steps on buffered
+    // (stale) data once it has seen at least one item. The buffers persist
+    // across epochs (the channels are long-lived), so only the very first
+    // epoch pays a pipeline-fill ramp.
+    let mut seen_emb = false;
+    let mut seen_grad = false;
+
+    for epoch in 0..epochs {
+        let mut q: EventQueue<Ev> = EventQueue::new();
+        let mut to_produce = n_batches; // passive fwd jobs left
+        let mut to_consume = n_batches; // active jobs left
+        let mut to_bwd = n_batches; // passive bwd jobs left
+        let mut in_flight_emb = 0usize; // produced, not yet consumed
+        let mut emb_ready: VecDeque<f64> = VecDeque::new();
+        let mut grad_ready: VecDeque<f64> = VecDeque::new();
+        let mut passive_idle: Vec<Option<f64>> = vec![None; cfg.w_p];
+        let mut active_idle: Vec<Option<f64>> = vec![None; cfg.w_a];
+
+        let mut busy_a = 0.0;
+        let mut busy_p = 0.0;
+
+        for i in 0..cfg.w_p {
+            q.schedule_at(0.0, Ev::PassiveFree(i));
+        }
+        for i in 0..cfg.w_a {
+            q.schedule_at(0.0, Ev::ActiveFree(i));
+        }
+
+        let mut straggle = |rng: &mut Rng, t: f64| {
+            if rng.flip(cfg.straggle_prob) {
+                t * cfg.straggle_factor
+            } else {
+                t
+            }
+        };
+
+        let mut end_time = 0.0f64;
+        while let Some((now, ev)) = q.pop() {
+            end_time = end_time.max(now);
+            match ev {
+                Ev::PassiveFree(i) => {
+                    if let Some(_ready_at) = grad_ready.pop_front() {
+                        if let Some(since) = passive_idle[i].take() {
+                            wait_s += now - since;
+                        }
+                        seen_grad = true;
+                        to_bwd -= 1;
+                        let dt = straggle(&mut rng, s_pb);
+                        busy_p += dt;
+                        q.schedule_in(dt, Ev::PassiveFree(i));
+                    } else if to_produce > 0 && in_flight_emb < cap_e {
+                        if let Some(since) = passive_idle[i].take() {
+                            wait_s += now - since;
+                        }
+                        to_produce -= 1;
+                        in_flight_emb += 1;
+                        let dt = straggle(&mut rng, s_pf);
+                        busy_p += dt;
+                        q.schedule_in(dt + st.t_e, Ev::EmbArrive);
+                        q.schedule_in(dt, Ev::PassiveFree(i));
+                    } else if (to_consume > 0 || to_bwd > 0) && seen_grad {
+                        // Blocked on channels: run a fine-grained local
+                        // (stale) step so the cores stay hot — the
+                        // decoupling dividend. Quarter-size sub-steps keep
+                        // fresh work from queueing behind stale work.
+                        if let Some(since) = passive_idle[i].take() {
+                            wait_s += now - since;
+                        }
+                        stale_steps += 1;
+                        let dt = s_pb * 0.25;
+                        busy_p += dt;
+                        q.schedule_in(dt, Ev::PassiveFree(i));
+                    } else if to_consume > 0 || to_produce > 0 || to_bwd > 0 {
+                        if passive_idle[i].is_none() {
+                            passive_idle[i] = Some(now);
+                        }
+                    }
+                }
+                Ev::ActiveFree(i) => {
+                    if let Some(ready_at) = emb_ready.pop_front() {
+                        // Waiting-deadline mechanism: discard stale
+                        // embeddings and reassign the batch (§4.1).
+                        if !cfg.ablation.no_deadline && now - ready_at > cfg.t_ddl_s {
+                            retried += 1;
+                            in_flight_emb -= 1;
+                            to_produce += 1;
+                            q.schedule_at(now, Ev::ActiveFree(i));
+                            wake_one(&mut passive_idle, &mut wait_s, now, &mut q, Ev::PassiveFree);
+                            continue;
+                        }
+                        if let Some(since) = active_idle[i].take() {
+                            wait_s += now - since;
+                        }
+                        seen_emb = true;
+                        to_consume -= 1;
+                        in_flight_emb -= 1;
+                        let dt = straggle(&mut rng, s_a);
+                        busy_a += dt;
+                        q.schedule_in(dt + st.t_g, Ev::GradArrive);
+                        q.schedule_in(dt, Ev::ActiveFree(i));
+                        wake_one(&mut passive_idle, &mut wait_s, now, &mut q, Ev::PassiveFree);
+                    } else if (to_consume > 0 || to_bwd > 0) && seen_emb {
+                        // Fine-grained stale local step on the buffered
+                        // embedding.
+                        if let Some(since) = active_idle[i].take() {
+                            wait_s += now - since;
+                        }
+                        stale_steps += 1;
+                        let dt = s_a * 0.25;
+                        busy_a += dt;
+                        q.schedule_in(dt, Ev::ActiveFree(i));
+                    } else if to_consume > 0 {
+                        if active_idle[i].is_none() {
+                            active_idle[i] = Some(now);
+                        }
+                    }
+                }
+                Ev::EmbArrive => {
+                    if emb_ready.len() >= cap_e {
+                        // Channel full: FIFO drop-oldest (buffer mechanism).
+                        emb_ready.pop_front();
+                        retried += 1;
+                        to_produce += 1;
+                        in_flight_emb -= 1;
+                    }
+                    emb_ready.push_back(now);
+                    wake_one(&mut active_idle, &mut wait_s, now, &mut q, Ev::ActiveFree);
+                }
+                Ev::GradArrive => {
+                    if grad_ready.len() >= cap_g {
+                        grad_ready.pop_front();
+                        retried += 1;
+                    }
+                    grad_ready.push_back(now);
+                    wake_one(&mut passive_idle, &mut wait_s, now, &mut q, Ev::PassiveFree);
+                }
+            }
+        }
+
+        // Close out trailing idle intervals at the epoch end.
+        for slot in passive_idle.iter_mut().chain(active_idle.iter_mut()) {
+            if let Some(since) = slot.take() {
+                wait_s += end_time - since;
+            }
+        }
+
+        // Semi-asynchronous PS aggregation (Eq. 5): a barrier only when
+        // the epoch index hits the ΔT_t schedule. "w/o ΔT" means the PS
+        // aggregates fully asynchronously (no controlled barrier at all);
+        // the convergence model charges it extra staleness instead.
+        let mut epoch_wall = end_time;
+        if !cfg.ablation.no_semi_async {
+            let interval = delta_t(cfg.delta_t0, epoch);
+            if interval > 0 && (epoch + 1) % interval == 0 {
+                epoch_wall += cfg.agg_cost_s;
+                wait_s += cfg.agg_cost_s * (cfg.w_a + cfg.w_p) as f64 * 0.5;
+            }
+        }
+
+        wall += epoch_wall;
+        busy_core_s += busy_a * core_a + busy_p * core_p;
+    }
+
+    finish(cfg, epochs, n_batches, wall, busy_core_s, wait_s, retried, stale_steps)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn finish(
+    cfg: &SimConfig,
+    epochs: usize,
+    n_batches: usize,
+    wall: f64,
+    busy_core_s: f64,
+    wait_s: f64,
+    retried: usize,
+    stale_steps: usize,
+) -> SimResult {
+    let total_cores = (cfg.cost.c_a + cfg.cost.c_p) as f64;
+    // Waiting is reported per epoch per worker (the paper's
+    // "Waiting (s)/epoch" rows are per-executor).
+    let n_workers = match cfg.arch {
+        Architecture::Vfl | Architecture::Avfl => 2,
+        Architecture::VflPs | Architecture::AvflPs => 2 * cfg.w_a.min(cfg.w_p).max(1),
+        Architecture::PubSub => cfg.w_a + cfg.w_p,
+    } as f64;
+    let comm_batches = (epochs * n_batches + retried) as f64;
+    let comm_mb = comm_batches * batch_bytes(&cfg.cost, cfg.batch_size) * comm_overhead(cfg.arch)
+        / (1024.0 * 1024.0);
+    SimResult {
+        arch: cfg.arch,
+        wall_s: wall,
+        cpu_util: (busy_core_s / (total_cores * wall.max(1e-12))).min(1.0),
+        wait_per_epoch_s: wait_s / epochs.max(1) as f64 / n_workers,
+        total_wait_s: wait_s,
+        comm_mb,
+        epochs,
+        batches_per_epoch: n_batches,
+        batches_retried: retried,
+        stale_steps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::CostConstants;
+
+    fn cost(c_a: usize, c_p: usize) -> CostModel {
+        CostModel {
+            consts: CostConstants::balanced_default(),
+            c_a,
+            c_p,
+            emb_bytes_per_sample: 144.0,
+            grad_bytes_per_sample: 144.0,
+            bandwidth_bps: 125e6,
+        }
+    }
+
+    fn base(arch: Architecture) -> SimConfig {
+        let mut c = SimConfig::new(arch, cost(32, 32));
+        c.n_samples = 20_000;
+        c
+    }
+
+    fn run(arch: Architecture) -> SimResult {
+        simulate(&base(arch))
+    }
+
+    #[test]
+    fn invariants_hold_for_all_architectures() {
+        for arch in Architecture::ALL {
+            let r = run(arch);
+            assert!(r.wall_s > 0.0, "{arch}: wall");
+            assert!((0.0..=1.0).contains(&r.cpu_util), "{arch}: util {}", r.cpu_util);
+            assert!(r.wait_per_epoch_s >= 0.0, "{arch}: wait");
+            assert!(r.comm_mb > 0.0, "{arch}: comm");
+            assert!(r.epochs >= 1);
+        }
+    }
+
+    #[test]
+    fn pubsub_fastest_and_highest_utilization() {
+        let results: Vec<SimResult> = Architecture::ALL.iter().map(|&a| run(a)).collect();
+        let pubsub = results.iter().find(|r| r.arch == Architecture::PubSub).unwrap();
+        for r in &results {
+            if r.arch != Architecture::PubSub {
+                assert!(
+                    pubsub.wall_s < r.wall_s,
+                    "PubSub {} !< {} {}",
+                    pubsub.wall_s,
+                    r.arch,
+                    r.wall_s
+                );
+                assert!(
+                    pubsub.cpu_util > r.cpu_util,
+                    "PubSub util {} !> {} {}",
+                    pubsub.cpu_util,
+                    r.arch,
+                    r.cpu_util
+                );
+            }
+        }
+        // Headline claim band: 2–7x faster than baselines (Fig. 3).
+        let worst = results
+            .iter()
+            .filter(|r| r.arch != Architecture::PubSub)
+            .map(|r| r.wall_s)
+            .fold(0.0f64, f64::max);
+        let best_baseline = results
+            .iter()
+            .filter(|r| r.arch != Architecture::PubSub)
+            .map(|r| r.wall_s)
+            .fold(f64::INFINITY, f64::min);
+        assert!(worst / pubsub.wall_s >= 2.0, "max speedup {}", worst / pubsub.wall_s);
+        assert!(
+            best_baseline / pubsub.wall_s >= 1.5,
+            "min speedup {}",
+            best_baseline / pubsub.wall_s
+        );
+    }
+
+    #[test]
+    fn pubsub_utilization_above_85_percent_balanced() {
+        let r = run(Architecture::PubSub);
+        assert!(r.cpu_util > 0.85, "util = {}", r.cpu_util);
+    }
+
+    #[test]
+    fn avfl_has_low_utilization_and_high_waiting() {
+        let avfl = run(Architecture::Avfl);
+        let pubsub = run(Architecture::PubSub);
+        assert!(avfl.cpu_util < 0.45, "AVFL util = {}", avfl.cpu_util);
+        assert!(
+            avfl.wait_per_epoch_s > 3.0 * pubsub.wait_per_epoch_s,
+            "AVFL wait {} vs PubSub {}",
+            avfl.wait_per_epoch_s,
+            pubsub.wait_per_epoch_s
+        );
+    }
+
+    #[test]
+    fn resource_heterogeneity_hurts_baselines_more() {
+        // Fig. 4: under 50:14 core skew PubSub keeps high utilization
+        // (stale-work filling) while AVFL-PS collapses into waiting.
+        let mut ps = SimConfig::new(Architecture::PubSub, cost(50, 14));
+        ps.n_samples = 20_000;
+        let mut av = SimConfig::new(Architecture::AvflPs, cost(50, 14));
+        av.n_samples = 20_000;
+        let rp = simulate(&ps);
+        let ra = simulate(&av);
+        assert!(rp.cpu_util > 0.80, "PubSub skewed util = {}", rp.cpu_util);
+        assert!(ra.cpu_util < 0.60, "AVFL-PS skewed util = {}", ra.cpu_util);
+        assert!(rp.cpu_util - ra.cpu_util > 0.25);
+    }
+
+    #[test]
+    fn dp_noise_increases_comm_and_time() {
+        let clean = base(Architecture::PubSub);
+        let mut noisy = clean.clone();
+        noisy.mu = 0.5;
+        let rc = simulate(&clean);
+        let rn = simulate(&noisy);
+        assert!(rn.comm_mb > rc.comm_mb);
+        assert!(rn.wall_s > rc.wall_s);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = simulate(&base(Architecture::PubSub));
+        let b = simulate(&base(Architecture::PubSub));
+        assert_eq!(a.wall_s, b.wall_s);
+        assert_eq!(a.batches_retried, b.batches_retried);
+        assert_eq!(a.stale_steps, b.stale_steps);
+    }
+
+    #[test]
+    fn no_pubsub_ablation_degrades() {
+        let full = simulate(&base(Architecture::PubSub));
+        let mut cfg = base(Architecture::PubSub);
+        cfg.ablation.no_pubsub = true;
+        let ablated = simulate(&cfg);
+        assert!(ablated.wall_s > full.wall_s, "{} vs {}", ablated.wall_s, full.wall_s);
+        assert!(ablated.cpu_util < full.cpu_util);
+    }
+
+    #[test]
+    fn batch_conservation_via_comm_accounting() {
+        let cfg = base(Architecture::PubSub);
+        let r = simulate(&cfg);
+        let expect = ((r.epochs * r.batches_per_epoch + r.batches_retried) as f64
+            * batch_bytes(&cfg.cost, cfg.batch_size)
+            * comm_overhead(cfg.arch))
+            / (1024.0 * 1024.0);
+        assert!((r.comm_mb - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stale_steps_grow_with_skew() {
+        // Balanced: little stale filling. Skewed: the strong party fills.
+        let balanced = simulate(&base(Architecture::PubSub));
+        let mut skew = SimConfig::new(Architecture::PubSub, cost(50, 14));
+        skew.n_samples = 20_000;
+        let skewed = simulate(&skew);
+        assert!(skewed.stale_steps > balanced.stale_steps);
+    }
+
+    #[test]
+    fn vfl_ps_util_between_vfl_and_pubsub() {
+        let vfl = run(Architecture::Vfl);
+        let vfl_ps = run(Architecture::VflPs);
+        let pubsub = run(Architecture::PubSub);
+        assert!(vfl_ps.cpu_util > vfl.cpu_util * 0.8, "VFL-PS {} VFL {}", vfl_ps.cpu_util, vfl.cpu_util);
+        assert!(pubsub.cpu_util > vfl_ps.cpu_util);
+    }
+}

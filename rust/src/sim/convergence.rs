@@ -1,0 +1,184 @@
+//! Epochs-to-target convergence model shared by the simulator and the
+//! sim-backed benches.
+//!
+//! Grounded in the paper's analysis: Theorem D.1 gives a contraction rate
+//! degraded by staleness (`η²L²τ` terms) and an error floor raised by DP
+//! noise (`σ²+σ²_dp`). We translate both into multiplicative
+//! epochs-to-target factors, plus the empirical U-shapes of Tables 2–3
+//! (batch size and parallel factor both have a sweet spot).
+
+use crate::config::Architecture;
+use crate::dp::dp_slowdown_factor;
+
+/// Convergence knobs; defaults calibrated to reproduce the paper's table
+/// shapes (B*≈256, w*≈8, sync baselines need ~1× epochs, fully-async ~1.4×).
+#[derive(Clone, Copy, Debug)]
+pub struct ConvergenceModel {
+    /// Epochs a perfectly synchronous run needs at the reference batch.
+    pub base_epochs: f64,
+    /// Reference batch size (paper's best: 256).
+    pub b_star: f64,
+    /// Reference parallel factor (paper's best: 8).
+    pub w_star: f64,
+    /// Strength of the batch-size U-shape.
+    pub batch_penalty: f64,
+    /// Strength of the worker-count U-shape (gradient staleness grows
+    /// with the parallel factor under semi-async aggregation).
+    pub worker_penalty: f64,
+}
+
+impl Default for ConvergenceModel {
+    fn default() -> Self {
+        ConvergenceModel {
+            base_epochs: 10.0,
+            b_star: 256.0,
+            w_star: 8.0,
+            batch_penalty: 0.16,
+            worker_penalty: 0.10,
+        }
+    }
+}
+
+impl ConvergenceModel {
+    /// U-shaped batch factor: small batches are noisy (mild penalty);
+    /// huge batches lose gradient quality per *sample*, so epochs-to-
+    /// target grow steeply above B* — steeply enough that wall-clock time
+    /// itself turns back up past B*=256, which is exactly Table 3's
+    /// measured cliff (92.5s at B=256 vs 578.7s at B=512).
+    pub fn batch_factor(&self, b: usize) -> f64 {
+        let r = ((b as f64) / self.b_star).log2();
+        if r <= 0.0 {
+            1.0 + self.batch_penalty * (-r).powf(1.5)
+        } else {
+            1.0 + 5.5 * self.batch_penalty * r.powf(2.0)
+        }
+    }
+
+    /// U-shaped worker factor (Table 2's sweet spot at 8).
+    pub fn worker_factor(&self, w: usize) -> f64 {
+        let r = ((w as f64) / self.w_star).log2().abs();
+        1.0 + self.worker_penalty * r.powf(1.5)
+    }
+
+    /// Staleness multiplier per architecture (Assumption D.4's τ):
+    /// synchronous baselines pay none; uncontrolled async pays most; the
+    /// semi-async ΔT schedule keeps PubSub close to synchronous.
+    pub fn staleness_factor(&self, arch: Architecture, semi_async_disabled: bool) -> f64 {
+        match arch {
+            Architecture::Vfl | Architecture::VflPs => 1.0,
+            Architecture::Avfl => 1.40,
+            Architecture::AvflPs => 1.25,
+            Architecture::PubSub => {
+                if semi_async_disabled {
+                    1.32 // fully-async PS: τ unbounded by ΔT_t
+                } else {
+                    1.08
+                }
+            }
+        }
+    }
+
+    /// Total epochs to reach the target metric.
+    pub fn epochs_to_target(
+        &self,
+        arch: Architecture,
+        b: usize,
+        w: usize,
+        mu: f64,
+        semi_async_disabled: bool,
+    ) -> f64 {
+        self.base_epochs
+            * self.batch_factor(b)
+            * self.worker_factor(w)
+            * self.staleness_factor(arch, semi_async_disabled)
+            * dp_slowdown_factor(mu)
+    }
+}
+
+/// The semi-asynchronous interval schedule, Eq. (5):
+/// `ΔT_t = ceil( ΔT0/2 · tanh(2t/ΔT0 − 2) + ΔT0/2 )`.
+/// Starts near 0 (tight sync early, stable learning) and saturates at ΔT0
+/// (loose sync late, fast fine-tuning).
+pub fn delta_t(delta_t0: usize, t: usize) -> usize {
+    if delta_t0 <= 1 {
+        return 1;
+    }
+    let dt0 = delta_t0 as f64;
+    let v = dt0 / 2.0 * ((2.0 * t as f64) / dt0 - 2.0).tanh() + dt0 / 2.0;
+    (v.ceil() as usize).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_factor_minimized_at_reference() {
+        let m = ConvergenceModel::default();
+        let f256 = m.batch_factor(256);
+        for &b in &[16usize, 32, 64, 128, 512, 1024] {
+            assert!(m.batch_factor(b) > f256, "b={b}");
+        }
+        assert!((f256 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn worker_factor_minimized_at_eight() {
+        let m = ConvergenceModel::default();
+        let f8 = m.worker_factor(8);
+        for &w in &[4usize, 5, 10, 20, 30, 50] {
+            assert!(m.worker_factor(w) > f8, "w={w}");
+        }
+    }
+
+    #[test]
+    fn staleness_ordering_matches_paper() {
+        let m = ConvergenceModel::default();
+        let sync = m.staleness_factor(Architecture::VflPs, false);
+        let pubsub = m.staleness_factor(Architecture::PubSub, false);
+        let avfl_ps = m.staleness_factor(Architecture::AvflPs, false);
+        let avfl = m.staleness_factor(Architecture::Avfl, false);
+        assert!(sync < pubsub && pubsub < avfl_ps && avfl_ps < avfl);
+        // Disabling ΔT pushes PubSub toward uncontrolled async.
+        assert!(m.staleness_factor(Architecture::PubSub, true) > pubsub);
+    }
+
+    #[test]
+    fn dp_increases_epochs() {
+        let m = ConvergenceModel::default();
+        let clean = m.epochs_to_target(Architecture::PubSub, 256, 8, f64::INFINITY, false);
+        let noisy = m.epochs_to_target(Architecture::PubSub, 256, 8, 0.5, false);
+        assert!(noisy > clean);
+    }
+
+    #[test]
+    fn delta_t_schedule_matches_eq5() {
+        // ΔT0 = 5: early epochs ⇒ small interval, late ⇒ saturates at 5.
+        assert!(delta_t(5, 0) <= 2);
+        assert!(delta_t(5, 1) <= delta_t(5, 3));
+        assert_eq!(delta_t(5, 50), 5);
+        // Monotone non-decreasing in t.
+        let mut prev = 0;
+        for t in 0..30 {
+            let v = delta_t(5, t);
+            assert!(v >= prev);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn delta_t_degenerate() {
+        assert_eq!(delta_t(1, 0), 1);
+        assert_eq!(delta_t(0, 10), 1);
+    }
+
+    #[test]
+    fn exact_eq5_values() {
+        // Hand-computed: ΔT0=4, t=4 ⇒ 2·tanh(2·4/4 − 2)+2 = 2·tanh(0)+2 = 2.
+        assert_eq!(delta_t(4, 4), 2);
+        // ΔT0=4, t=8 ⇒ 2·tanh(2)+2 ≈ 3.928 ⇒ ceil 4.
+        assert_eq!(delta_t(4, 8), 4);
+        // ΔT0=4, t=2 ⇒ 2·tanh(−1)+2 ≈ 0.477 ⇒ ceil 1.
+        assert_eq!(delta_t(4, 2), 1);
+    }
+}

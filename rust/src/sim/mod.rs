@@ -1,0 +1,16 @@
+//! Discrete-event / timeline simulator of the five VFL architectures.
+//!
+//! The paper's testbed is a 64-core two-party deployment; this offline box
+//! has one core, so the latency/utilization/heterogeneity studies
+//! (Figs. 3–4, Tables 2, 3, 9, 10) run on this simulator, parameterised by
+//! the *fitted* §4.2 cost model — the same model the paper's own planner
+//! reasons with. Accuracy numbers always come from real training
+//! (`train/`); the simulator only produces system metrics.
+
+pub mod arch;
+pub mod convergence;
+pub mod des;
+
+pub use arch::{simulate, SimConfig, SimResult};
+pub use convergence::{delta_t, ConvergenceModel};
+pub use des::EventQueue;

@@ -1,0 +1,453 @@
+//! Row-major f32 matrix used by the data pipeline, the pure-Rust host
+//! engine, and the attack module.
+//!
+//! The host engine's hot path is `matmul` / `matmul_at` / `matmul_bt`; they
+//! are written cache-consciously (k-inner loop over contiguous rows with a
+//! transposed-B fallback) so the Rust baseline is a fair comparator for the
+//! XLA path. See EXPERIMENTS.md §Perf for before/after numbers.
+
+use crate::util::Rng;
+
+/// Dense row-major matrix of `f32`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(rows * cols, data.len(), "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Matrix {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Gaussian-initialized matrix, N(0, std).
+    pub fn randn(rows: usize, cols: usize, std: f64, rng: &mut Rng) -> Matrix {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_gaussian_f32(&mut m.data, std);
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let c = self.cols;
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Select a subset of rows (gather).
+    pub fn take_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (i, &r) in idx.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// Select a contiguous row range `[start, end)`.
+    pub fn slice_rows(&self, start: usize, end: usize) -> Matrix {
+        assert!(start <= end && end <= self.rows);
+        Matrix {
+            rows: end - start,
+            cols: self.cols,
+            data: self.data[start * self.cols..end * self.cols].to_vec(),
+        }
+    }
+
+    /// Select a subset of columns (feature split for VFL partitioning).
+    pub fn take_cols(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, idx.len());
+        for r in 0..self.rows {
+            let src = self.row(r);
+            let dst = out.row_mut(r);
+            for (j, &c) in idx.iter().enumerate() {
+                dst[j] = src[c];
+            }
+        }
+        out
+    }
+
+    /// Horizontal concatenation `[self | other]`.
+    pub fn hcat(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows);
+        let mut out = Matrix::zeros(self.rows, self.cols + other.cols);
+        for r in 0..self.rows {
+            out.row_mut(r)[..self.cols].copy_from_slice(self.row(r));
+            out.row_mut(r)[self.cols..].copy_from_slice(other.row(r));
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// `self @ b` — row-major matmul, 4-row register-blocked.
+    ///
+    /// Each pass over B's rows updates four output rows at once, cutting
+    /// B-matrix memory traffic 4× vs the plain saxpy loop; the inner loop
+    /// stays contiguous so it autovectorizes. §Perf: 0.94 ms → measured
+    /// after-change in EXPERIMENTS.md for the 256×250×64 hot shape.
+    pub fn matmul(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.rows, "matmul shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let mut out = Matrix::zeros(m, n);
+        let mut i = 0;
+        // 4-row blocks.
+        while i + 4 <= m {
+            let (a0, a1, a2, a3) = (self.row(i), self.row(i + 1), self.row(i + 2), self.row(i + 3));
+            // Split the output buffer into the four rows.
+            let (top, rest) = out.data[i * n..].split_at_mut(n);
+            let (r1, rest) = rest.split_at_mut(n);
+            let (r2, rest) = rest.split_at_mut(n);
+            let r3 = &mut rest[..n];
+            for p in 0..k {
+                let (c0, c1, c2, c3) = (a0[p], a1[p], a2[p], a3[p]);
+                let brow = &b.data[p * n..(p + 1) * n];
+                for j in 0..n {
+                    let bv = brow[j];
+                    top[j] += c0 * bv;
+                    r1[j] += c1 * bv;
+                    r2[j] += c2 * bv;
+                    r3[j] += c3 * bv;
+                }
+            }
+            i += 4;
+        }
+        // Tail rows: plain saxpy.
+        while i < m {
+            let arow = self.row(i);
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (p, &a) in arow.iter().enumerate().take(k) {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[p * n..(p + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                    *o += a * bv;
+                }
+            }
+            i += 1;
+        }
+        out
+    }
+
+    /// `self^T @ b` without materializing the transpose (dW = x^T @ dy).
+    pub fn matmul_at(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.rows, b.rows, "matmul_at shape mismatch");
+        let (k, m, n) = (self.rows, self.cols, b.cols);
+        let mut out = Matrix::zeros(m, n);
+        for p in 0..k {
+            let arow = self.row(p);
+            let brow = b.row(p);
+            for (i, &a) in arow.iter().enumerate().take(m) {
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                    *o += a * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// `self @ b^T` without materializing the transpose (dx = dy @ W^T).
+    pub fn matmul_bt(&self, b: &Matrix) -> Matrix {
+        assert_eq!(self.cols, b.cols, "matmul_bt shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, b.rows);
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            let arow = self.row(i);
+            let orow = out.row_mut(i);
+            for (j, o) in orow.iter_mut().enumerate().take(n) {
+                let brow = b.row(j);
+                let mut acc = 0.0f32;
+                for p in 0..k {
+                    acc += arow[p] * brow[p];
+                }
+                *o = acc;
+            }
+        }
+        out
+    }
+
+    /// Element-wise in-place map.
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+    }
+
+    /// Element-wise out-of-place map.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+
+    /// `self += alpha * other` (shape-checked).
+    pub fn axpy(&mut self, alpha: f32, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, &b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    /// `self *= alpha`.
+    pub fn scale(&mut self, alpha: f32) {
+        for v in &mut self.data {
+            *v *= alpha;
+        }
+    }
+
+    /// Add a row-vector bias to every row.
+    pub fn add_bias(&mut self, bias: &[f32]) {
+        assert_eq!(bias.len(), self.cols);
+        for r in 0..self.rows {
+            for (v, &b) in self.row_mut(r).iter_mut().zip(bias.iter()) {
+                *v += b;
+            }
+        }
+    }
+
+    /// Column-wise sum (db = sum_rows(dy)).
+    pub fn col_sum(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            for (o, &v) in out.iter_mut().zip(self.row(r).iter()) {
+                *o += v;
+            }
+        }
+        out
+    }
+
+    /// Element-wise product.
+    pub fn hadamard(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .map(|(&a, &b)| a * b)
+                .collect(),
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Max |a - b| over all entries.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Per-column standardization to zero mean / unit variance (in place).
+    /// Returns (means, stds) so a test split can reuse train statistics.
+    pub fn standardize(&mut self) -> (Vec<f32>, Vec<f32>) {
+        let n = self.rows.max(1) as f32;
+        let mut means = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            for (m, &v) in means.iter_mut().zip(self.row(r).iter()) {
+                *m += v;
+            }
+        }
+        for m in &mut means {
+            *m /= n;
+        }
+        let mut vars = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            for ((s, &v), &m) in vars.iter_mut().zip(self.row(r).iter()).zip(means.iter()) {
+                let d = v - m;
+                *s += d * d;
+            }
+        }
+        let stds: Vec<f32> = vars.iter().map(|&v| (v / n).sqrt().max(1e-6)).collect();
+        self.apply_standardize(&means, &stds);
+        (means, stds)
+    }
+
+    /// Apply precomputed standardization statistics.
+    pub fn apply_standardize(&mut self, means: &[f32], stds: &[f32]) {
+        assert_eq!(means.len(), self.cols);
+        assert_eq!(stds.len(), self.cols);
+        for r in 0..self.rows {
+            let row = self.row_mut(r);
+            for c in 0..row.len() {
+                row[c] = (row[c] - means[c]) / stds[c];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for p in 0..a.cols {
+                    s += a.at(i, p) * b.at(p, j);
+                }
+                *out.at_mut(i, j) = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (8, 8, 8), (7, 13, 2)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let got = a.matmul(&b);
+            let want = naive_matmul(&a, &b);
+            assert!(got.max_abs_diff(&want) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_at_and_bt_match_explicit_transpose() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(6, 4, 1.0, &mut rng);
+        let b = Matrix::randn(6, 3, 1.0, &mut rng);
+        let want = a.transpose().matmul(&b);
+        assert!(a.matmul_at(&b).max_abs_diff(&want) < 1e-4);
+
+        let c = Matrix::randn(5, 4, 1.0, &mut rng);
+        let d = Matrix::randn(7, 4, 1.0, &mut rng);
+        let want2 = c.matmul(&d.transpose());
+        assert!(c.matmul_bt(&d).max_abs_diff(&want2) < 1e-4);
+    }
+
+    #[test]
+    fn bias_and_colsum() {
+        let mut m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        m.add_bias(&[10., 20., 30.]);
+        assert_eq!(m.row(0), &[11., 22., 33.]);
+        assert_eq!(m.col_sum(), vec![25., 47., 69.]);
+    }
+
+    #[test]
+    fn row_and_col_selection() {
+        let m = Matrix::from_fn(4, 3, |r, c| (r * 3 + c) as f32);
+        let rows = m.take_rows(&[2, 0]);
+        assert_eq!(rows.row(0), &[6., 7., 8.]);
+        assert_eq!(rows.row(1), &[0., 1., 2.]);
+        let cols = m.take_cols(&[2, 1]);
+        assert_eq!(cols.row(0), &[2., 1.]);
+        let sl = m.slice_rows(1, 3);
+        assert_eq!(sl.rows, 2);
+        assert_eq!(sl.row(0), &[3., 4., 5.]);
+    }
+
+    #[test]
+    fn hcat_shapes() {
+        let a = Matrix::from_vec(2, 1, vec![1., 2.]);
+        let b = Matrix::from_vec(2, 2, vec![3., 4., 5., 6.]);
+        let c = a.hcat(&b);
+        assert_eq!(c.shape(), (2, 3));
+        assert_eq!(c.row(1), &[2., 5., 6.]);
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let mut rng = Rng::new(3);
+        let mut m = Matrix::randn(500, 4, 3.0, &mut rng);
+        m.map_inplace(|v| v + 7.0);
+        let (means, stds) = m.standardize();
+        assert_eq!(means.len(), 4);
+        assert_eq!(stds.len(), 4);
+        let new_means = {
+            let mut s = vec![0.0f64; 4];
+            for r in 0..m.rows {
+                for c in 0..4 {
+                    s[c] += m.at(r, c) as f64;
+                }
+            }
+            s.iter().map(|v| v / m.rows as f64).collect::<Vec<_>>()
+        };
+        for v in new_means {
+            assert!(v.abs() < 1e-4, "mean={v}");
+        }
+    }
+
+    #[test]
+    fn axpy_scale_hadamard_norm() {
+        let mut a = Matrix::from_vec(1, 3, vec![1., 2., 3.]);
+        let b = Matrix::from_vec(1, 3, vec![1., 1., 1.]);
+        a.axpy(2.0, &b);
+        assert_eq!(a.data, vec![3., 4., 5.]);
+        a.scale(0.5);
+        assert_eq!(a.data, vec![1.5, 2., 2.5]);
+        let h = a.hadamard(&b);
+        assert_eq!(h.data, a.data);
+        assert!((Matrix::from_vec(1, 2, vec![3., 4.]).norm() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn matmul_shape_mismatch_panics() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(4, 2);
+        let _ = a.matmul(&b);
+    }
+}

@@ -1,0 +1,60 @@
+//! Small self-contained utilities shared across the stack.
+//!
+//! The build environment is offline with a fixed vendored crate set, so the
+//! usual ecosystem crates (`rand`, `rayon`, …) are replaced by the minimal,
+//! well-tested implementations in this module.
+
+pub mod pool;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use pool::ThreadPool;
+pub use rng::Rng;
+pub use stats::{mean, percentile, stddev, Summary};
+pub use timer::{Stopwatch, Timings};
+
+/// Round `x` up to the next multiple of `m` (m > 0).
+pub fn round_up(x: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    x.div_ceil(m) * m
+}
+
+/// `ceil(n / d)` for positive integers.
+pub fn ceil_div(n: usize, d: usize) -> usize {
+    debug_assert!(d > 0);
+    n.div_ceil(d)
+}
+
+/// Clamp a float into `[lo, hi]`.
+pub fn clampf(x: f64, lo: f64, hi: f64) -> f64 {
+    x.max(lo).min(hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn clampf_basics() {
+        assert_eq!(clampf(5.0, 0.0, 1.0), 1.0);
+        assert_eq!(clampf(-5.0, 0.0, 1.0), 0.0);
+        assert_eq!(clampf(0.5, 0.0, 1.0), 0.5);
+    }
+}

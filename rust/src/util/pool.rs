@@ -1,0 +1,167 @@
+//! A small fixed-size thread pool (rayon/tokio are not in the vendored
+//! crate set). Workers pull boxed jobs from a shared queue; `scope_map`
+//! provides the fork-join pattern the training loops and the simulator's
+//! calibration sweeps need.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size thread pool.
+pub struct ThreadPool {
+    tx: Sender<Msg>,
+    rx: Arc<Mutex<Receiver<Msg>>>,
+    handles: Vec<JoinHandle<()>>,
+    size: usize,
+    inflight: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `size` worker threads (size >= 1).
+    pub fn new(size: usize) -> Self {
+        assert!(size >= 1);
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx = Arc::clone(&rx);
+            let inflight = Arc::clone(&inflight);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("pool-{i}"))
+                    .spawn(move || loop {
+                        let msg = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match msg {
+                            Ok(Msg::Run(job)) => {
+                                job();
+                                inflight.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn pool thread"),
+            );
+        }
+        ThreadPool { tx, rx, handles, size, inflight }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.inflight.fetch_add(1, Ordering::SeqCst);
+        self.tx.send(Msg::Run(Box::new(job))).expect("pool alive");
+    }
+
+    /// Apply `f` to each item of `items` in parallel, preserving order.
+    ///
+    /// `f` must be `Sync` because multiple workers call it concurrently.
+    pub fn scope_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let results: Arc<Mutex<Vec<Option<R>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        let (done_tx, done_rx) = channel::<()>();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let results = Arc::clone(&results);
+            let done = done_tx.clone();
+            self.execute(move || {
+                let r = f(item);
+                results.lock().unwrap()[i] = Some(r);
+                let _ = done.send(());
+            });
+        }
+        drop(done_tx);
+        for _ in 0..n {
+            done_rx.recv().expect("worker completed");
+        }
+        Arc::try_unwrap(results)
+            .ok()
+            .expect("all workers done")
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|o| o.expect("slot filled"))
+            .collect()
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait_idle(&self) {
+        while self.inflight.load(Ordering::SeqCst) != 0 {
+            std::thread::yield_now();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in 0..self.handles.len() {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        let _ = &self.rx;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scope_map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.scope_map((0..50).collect::<Vec<i64>>(), |x| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn scope_map_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<i32> = pool.scope_map(Vec::<i32>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn pool_of_one_works() {
+        let pool = ThreadPool::new(1);
+        let out = pool.scope_map(vec![1, 2, 3], |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+}

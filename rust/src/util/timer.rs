@@ -1,0 +1,150 @@
+//! Wall-clock timing helpers for the profiler and metrics.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+#[derive(Clone, Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Named accumulating timers: `timings.add("fwd", dt)` from anywhere,
+/// report totals at the end. Used by the profiler and the training loops.
+#[derive(Clone, Debug, Default)]
+pub struct Timings {
+    totals: BTreeMap<String, (Duration, u64)>,
+}
+
+impl Timings {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, name: &str, d: Duration) {
+        let e = self.totals.entry(name.to_string()).or_insert((Duration::ZERO, 0));
+        e.0 += d;
+        e.1 += 1;
+    }
+
+    /// Time a closure under `name` and return its value.
+    pub fn scope<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let v = f();
+        self.add(name, t.elapsed());
+        v
+    }
+
+    pub fn total_secs(&self, name: &str) -> f64 {
+        self.totals.get(name).map(|(d, _)| d.as_secs_f64()).unwrap_or(0.0)
+    }
+
+    pub fn count(&self, name: &str) -> u64 {
+        self.totals.get(name).map(|&(_, c)| c).unwrap_or(0)
+    }
+
+    pub fn mean_secs(&self, name: &str) -> f64 {
+        let c = self.count(name);
+        if c == 0 {
+            0.0
+        } else {
+            self.total_secs(name) / c as f64
+        }
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.totals.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Merge another `Timings` into this one.
+    pub fn merge(&mut self, other: &Timings) {
+        for (k, (d, c)) in &other.totals {
+            let e = self.totals.entry(k.clone()).or_insert((Duration::ZERO, 0));
+            e.0 += *d;
+            e.1 += *c;
+        }
+    }
+
+    /// Render a sorted "name: total (count, mean)" report.
+    pub fn report(&self) -> String {
+        let mut rows: Vec<_> = self.totals.iter().collect();
+        rows.sort_by(|a, b| b.1 .0.cmp(&a.1 .0));
+        let mut s = String::new();
+        for (k, (d, c)) in rows {
+            s.push_str(&format!(
+                "{k:<24} {:>10.4}s  n={c:<8} mean={:.6}s\n",
+                d.as_secs_f64(),
+                d.as_secs_f64() / (*c).max(1) as f64
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        let a = sw.elapsed();
+        let b = sw.elapsed();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn timings_accumulate() {
+        let mut t = Timings::new();
+        t.add("x", Duration::from_millis(5));
+        t.add("x", Duration::from_millis(7));
+        assert_eq!(t.count("x"), 2);
+        assert!((t.total_secs("x") - 0.012).abs() < 1e-9);
+        assert!((t.mean_secs("x") - 0.006).abs() < 1e-9);
+    }
+
+    #[test]
+    fn timings_scope_and_merge() {
+        let mut a = Timings::new();
+        let v = a.scope("work", || 21 * 2);
+        assert_eq!(v, 42);
+        assert_eq!(a.count("work"), 1);
+        let mut b = Timings::new();
+        b.add("work", Duration::from_millis(1));
+        b.merge(&a);
+        assert_eq!(b.count("work"), 2);
+    }
+
+    #[test]
+    fn report_contains_names() {
+        let mut t = Timings::new();
+        t.add("fwd", Duration::from_millis(1));
+        assert!(t.report().contains("fwd"));
+    }
+}

@@ -1,0 +1,153 @@
+//! End-to-end integration: the full experiment pipeline across
+//! architectures, engines, ablations, and the multi-party extension.
+
+use pubsub_vfl::config::{Architecture, EngineKind, ExperimentConfig};
+use pubsub_vfl::train::{paper_row, run_experiment};
+
+fn base_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.dataset.name = "bank".into();
+    cfg.dataset.samples = 800;
+    cfg.train.batch_size = 32;
+    cfg.train.epochs = 4;
+    cfg.train.lr = 0.05;
+    cfg.train.target_accuracy = 2.0; // run all epochs
+    cfg.hidden = 16;
+    cfg.embed_dim = 8;
+    cfg.parties.active_workers = 2;
+    cfg.parties.passive_workers = 2;
+    cfg
+}
+
+#[test]
+fn all_architectures_learn_bank() {
+    for arch in Architecture::ALL {
+        let mut cfg = base_cfg();
+        cfg.arch = arch;
+        let o = run_experiment(&cfg, 0).unwrap();
+        assert!(o.report.metric > 0.7, "{arch}: auc = {}", o.report.metric);
+        // The measured row and the projected row agree on accuracy.
+        assert_eq!(paper_row(&o).metric, o.report.metric);
+    }
+}
+
+#[test]
+fn regression_dataset_trains() {
+    let mut cfg = base_cfg();
+    cfg.dataset.name = "energy".into();
+    cfg.arch = Architecture::PubSub;
+    cfg.train.target_accuracy = 0.0; // RMSE can't hit 0: run all epochs
+    let o = run_experiment(&cfg, 0).unwrap();
+    assert_eq!(o.report.metric_name, "rmse");
+    assert!(o.report.metric.is_finite());
+    // Loss decreased over epochs.
+    let first = o.session.loss_curve.first().unwrap().1;
+    let last = o.session.loss_curve.last().unwrap().1;
+    assert!(last < first, "mse loss {first} -> {last}");
+}
+
+#[test]
+fn pubsub_accuracy_parity_with_sync_baseline() {
+    // Table 1's core claim: the Pub/Sub machinery does not hurt accuracy.
+    let mut cfg = base_cfg();
+    cfg.train.epochs = 6;
+    cfg.arch = Architecture::Vfl;
+    let sync = run_experiment(&cfg, 0).unwrap();
+    cfg.arch = Architecture::PubSub;
+    let ours = run_experiment(&cfg, 0).unwrap();
+    assert!(
+        ours.report.metric > sync.report.metric - 0.04,
+        "PubSub {} vs VFL {}",
+        ours.report.metric,
+        sync.report.metric
+    );
+}
+
+#[test]
+fn ablations_run_and_projected_metrics_degrade() {
+    let mut full = base_cfg();
+    full.arch = Architecture::PubSub;
+    let o_full = run_experiment(&full, 0).unwrap();
+
+    let mut no_pubsub = full.clone();
+    no_pubsub.ablation.no_pubsub = true;
+    let o_np = run_experiment(&no_pubsub, 0).unwrap();
+    assert!(o_np.sim.wall_s > o_full.sim.wall_s);
+
+    let mut no_semi = full.clone();
+    no_semi.ablation.no_semi_async = true;
+    let o_ns = run_experiment(&no_semi, 0).unwrap();
+    assert!(o_ns.sim.epochs >= o_full.sim.epochs);
+
+    let mut no_ddl = full.clone();
+    no_ddl.ablation.no_deadline = true;
+    let o_nd = run_experiment(&no_ddl, 0).unwrap();
+    assert!(o_nd.report.metric > 0.6);
+}
+
+#[test]
+fn dp_reduces_accuracy_but_still_learns() {
+    let mut cfg = base_cfg();
+    cfg.arch = Architecture::PubSub;
+    cfg.train.epochs = 5;
+    let clean = run_experiment(&cfg, 0).unwrap();
+    cfg.dp.enabled = true;
+    cfg.dp.mu = 1.0;
+    let noisy = run_experiment(&cfg, 0).unwrap();
+    assert!(noisy.report.metric > 0.6, "DP run collapsed: {}", noisy.report.metric);
+    assert!(
+        noisy.report.metric <= clean.report.metric + 0.03,
+        "DP should not help: {} vs {}",
+        noisy.report.metric,
+        clean.report.metric
+    );
+}
+
+#[test]
+fn multi_party_extension_trains() {
+    for k in [2usize, 4] {
+        let mut cfg = base_cfg();
+        cfg.arch = Architecture::PubSub;
+        cfg.passive_parties = k;
+        let o = run_experiment(&cfg, 0).unwrap();
+        assert!(o.report.metric > 0.6, "k={k}: auc = {}", o.report.metric);
+    }
+}
+
+#[test]
+fn xla_engine_full_experiment() {
+    // The three-layer production path end-to-end, if artifacts exist.
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let mut cfg = base_cfg();
+    cfg.arch = Architecture::PubSub;
+    cfg.engine = EngineKind::Xla;
+    cfg.name = "quickstart".into(); // artifact config: d=10/10, B=64
+    cfg.artifacts_dir = dir.to_str().unwrap().to_string();
+    cfg.dataset.name = "synthetic".into();
+    cfg.dataset.samples = 800;
+    cfg.dataset.features = 20;
+    cfg.dataset.active_features = 10;
+    cfg.train.batch_size = 64;
+    cfg.train.epochs = 3;
+    cfg.hidden = 32;
+    cfg.embed_dim = 16;
+    let o = run_experiment(&cfg, 0).unwrap();
+    assert!(o.report.metric > 0.6, "xla auc = {}", o.report.metric);
+    let first = o.session.loss_curve.first().unwrap().1;
+    let last = o.session.loss_curve.last().unwrap().1;
+    assert!(last < first, "xla loss {first} -> {last}");
+}
+
+#[test]
+fn deterministic_across_runs_same_seed() {
+    let mut cfg = base_cfg();
+    cfg.arch = Architecture::VflPs; // deterministic baseline path
+    let a = run_experiment(&cfg, 0).unwrap();
+    let b = run_experiment(&cfg, 0).unwrap();
+    assert_eq!(a.report.metric, b.report.metric);
+    assert_eq!(a.sim.wall_s, b.sim.wall_s);
+}

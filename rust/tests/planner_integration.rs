@@ -1,0 +1,238 @@
+//! Property-based integration tests over the coordinator, planner, and
+//! simulator invariants (the proptest-style suite, via `prop.rs`).
+
+use pubsub_vfl::config::Architecture;
+use pubsub_vfl::coordinator::{SubResult, Topic};
+use pubsub_vfl::model::{Activation, MlpParams, MlpSpec};
+use pubsub_vfl::planner::{self, CostConstants, CostModel, MemoryModel, PlanSpace};
+use pubsub_vfl::prop::assert_prop;
+use pubsub_vfl::sim::{simulate, SimConfig};
+use pubsub_vfl::util::Rng;
+use std::time::Duration;
+
+fn cost_model(c_a: usize, c_p: usize) -> CostModel {
+    CostModel {
+        consts: CostConstants::balanced_default(),
+        c_a,
+        c_p,
+        emb_bytes_per_sample: 144.0,
+        grad_bytes_per_sample: 144.0,
+        bandwidth_bps: 125e6,
+    }
+}
+
+#[test]
+fn prop_channel_never_exceeds_capacity_and_conserves_messages() {
+    assert_prop(
+        "channel capacity + conservation",
+        11,
+        60,
+        |rng: &mut Rng| {
+            let cap = 1 + rng.below(8);
+            let n = 1 + rng.below(50);
+            (cap, n)
+        },
+        |&(cap, n)| {
+            if n > 1 {
+                Some((cap, n / 2))
+            } else {
+                None
+            }
+        },
+        |&(cap, n)| {
+            let t: Topic<u64> = Topic::new("t", cap);
+            let mut evicted = 0usize;
+            for i in 0..n {
+                if t.publish(i as u64, i as u64).is_some() {
+                    evicted += 1;
+                }
+                if t.len() > cap {
+                    return Err(format!("len {} > cap {cap}", t.len()));
+                }
+            }
+            let mut received = 0usize;
+            while let SubResult::Ok(_) = t.subscribe_any(Duration::from_millis(1)) {
+                received += 1;
+            }
+            let dropped = t.take_dropped().len();
+            if received + evicted != n {
+                return Err(format!("published {n}, received {received} + evicted {evicted}"));
+            }
+            if dropped != evicted {
+                return Err(format!("dropped {dropped} != evicted {evicted}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_params_flatten_roundtrip() {
+    assert_prop(
+        "flatten/unflatten identity",
+        13,
+        40,
+        |rng: &mut Rng| {
+            let depth = 2 + rng.below(4);
+            let dims: Vec<usize> = (0..=depth).map(|_| 1 + rng.below(12)).collect();
+            let seed = rng.next_u64();
+            (dims, seed)
+        },
+        |c| {
+            if c.0.len() > 3 {
+                let mut d = c.0.clone();
+                d.pop();
+                Some((d, c.1))
+            } else {
+                None
+            }
+        },
+        |(dims, seed)| {
+            let spec = MlpSpec::dense(dims, Activation::Linear);
+            let p = MlpParams::init(&spec, &mut Rng::new(*seed));
+            let flat = p.flatten();
+            if flat.len() != spec.param_count() {
+                return Err("flat length mismatch".into());
+            }
+            let back = MlpParams::unflatten(&spec, &flat);
+            if back.max_abs_diff(&p) != 0.0 {
+                return Err("roundtrip changed values".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_planner_result_is_feasible_argmin() {
+    assert_prop(
+        "planner returns the feasible argmin",
+        17,
+        15,
+        |rng: &mut Rng| {
+            let c_a = 8 + rng.below(56);
+            let c_p = 8 + rng.below(56);
+            let cap = 150.0 + rng.uniform() * 3000.0;
+            (c_a, c_p, cap)
+        },
+        |_| None,
+        |&(c_a, c_p, cap)| {
+            let cm = cost_model(c_a, c_p);
+            let mm = MemoryModel { cap_active: cap, cap_passive: cap, ..MemoryModel::default_profile() };
+            let space = PlanSpace {
+                w_a_range: (2, 10),
+                w_p_range: (2, 10),
+                batch_sizes: vec![16, 64, 256, 1024],
+            };
+            match planner::solve(&cm, &mm, &space) {
+                None => {
+                    if mm.b_max() >= 16.0 {
+                        Err("no plan despite feasible space".into())
+                    } else {
+                        Ok(())
+                    }
+                }
+                Some(r) => {
+                    if (r.best.batch_size as f64) > r.b_max {
+                        return Err("plan violates memory bound".into());
+                    }
+                    // Argmin vs brute force over the recorded table.
+                    let brute = r
+                        .table
+                        .iter()
+                        .map(|&(_, _, _, c)| c)
+                        .fold(f64::INFINITY, f64::min);
+                    if (r.best.cost - brute).abs() > 1e-12 {
+                        return Err(format!("cost {} != brute {brute}", r.best.cost));
+                    }
+                    Ok(())
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_sim_invariants_random_configs() {
+    assert_prop(
+        "sim: util in [0,1], conservation, positivity",
+        19,
+        30,
+        |rng: &mut Rng| {
+            let arch = Architecture::ALL[rng.below(5)];
+            let c_a = 8 + rng.below(56);
+            let c_p = 8 + rng.below(56);
+            let w = 2 + rng.below(12);
+            let b = [16usize, 64, 256, 1024][rng.below(4)];
+            (arch, c_a, c_p, w, b, rng.next_u64())
+        },
+        |_| None,
+        |&(arch, c_a, c_p, w, b, seed)| {
+            let mut sc = SimConfig::new(arch, cost_model(c_a, c_p));
+            sc.n_samples = 10_000;
+            sc.batch_size = b;
+            sc.w_a = w;
+            sc.w_p = w;
+            sc.seed = seed;
+            let r = simulate(&sc);
+            if !(r.wall_s.is_finite() && r.wall_s > 0.0) {
+                return Err(format!("{arch}: wall {}", r.wall_s));
+            }
+            if !(0.0..=1.0).contains(&r.cpu_util) {
+                return Err(format!("{arch}: util {}", r.cpu_util));
+            }
+            if r.wait_per_epoch_s < 0.0 || !r.wait_per_epoch_s.is_finite() {
+                return Err(format!("{arch}: wait {}", r.wait_per_epoch_s));
+            }
+            let payload = (sc.cost.emb_bytes_per_sample + sc.cost.grad_bytes_per_sample)
+                * b as f64
+                / (1024.0 * 1024.0);
+            // Comm = batches x payload x framing overhead in [1.0, 1.6].
+            let base =
+                (r.epochs * r.batches_per_epoch + r.batches_retried) as f64 * payload;
+            if r.comm_mb < base * 0.999 || r.comm_mb > base * 1.6 {
+                return Err(format!("{arch}: comm {} outside [{}, {}]", r.comm_mb, base, base * 1.6));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ps_aggregation_is_mean() {
+    use pubsub_vfl::coordinator::{ParameterServer, PsMode};
+    assert_prop(
+        "PS sync aggregation equals mean gradient step",
+        23,
+        25,
+        |rng: &mut Rng| (1 + rng.below(6), rng.next_u64()),
+        |_| None,
+        |&(n_grads, seed)| {
+            let spec = MlpSpec::dense(&[4, 3], Activation::Linear);
+            let mut rng = Rng::new(seed);
+            let init = MlpParams::init(&spec, &mut rng);
+            let lr = 0.1f32;
+            let ps = ParameterServer::new(init.clone(), lr, PsMode::Sync);
+            let mut grads = Vec::new();
+            for _ in 0..n_grads {
+                let g = MlpParams::init(&spec, &mut rng);
+                ps.push_grad(&g);
+                grads.push(g);
+            }
+            ps.aggregate();
+            // Expected: init - lr * mean(grads).
+            let mut mean = grads[0].clone();
+            for g in &grads[1..] {
+                mean.axpy(1.0, g);
+            }
+            mean.scale(1.0 / n_grads as f32);
+            let mut want = init;
+            want.sgd_step(&mean, lr);
+            let got = ps.fetch().0;
+            if got.max_abs_diff(&want) > 1e-5 {
+                return Err(format!("diff {}", got.max_abs_diff(&want)));
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,190 @@
+//! End-to-end parity: the AOT-compiled JAX/Pallas artifacts executed via
+//! PJRT must agree numerically with the pure-Rust host engine on identical
+//! parameters and inputs. This is the proof that all three layers compose:
+//! L1 Pallas kernel → L2 JAX model → HLO text → PJRT → L3 Rust.
+//!
+//! Requires `make artifacts` (skipped gracefully otherwise).
+
+use pubsub_vfl::data::Task;
+use pubsub_vfl::model::{HostSplitModel, SplitEngine, SplitParams};
+use pubsub_vfl::runtime::{Manifest, XlaService};
+use pubsub_vfl::tensor::Matrix;
+use pubsub_vfl::util::Rng;
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+struct Setup {
+    xla: XlaService,
+    host: HostSplitModel,
+    params: SplitParams,
+    x_a: Matrix,
+    x_p: Matrix,
+    y: Vec<f32>,
+}
+
+fn setup(config: &str) -> Setup {
+    let dir = artifacts_dir();
+    let manifest = Manifest::load(&dir).unwrap();
+    let entry = manifest.config(config).unwrap().clone();
+    let spec = entry.split_spec();
+    let task = entry.task;
+    let xla = XlaService::spawn(&dir, config).unwrap();
+    let host = HostSplitModel::new(spec.clone(), task);
+    let mut rng = Rng::new(2024);
+    let params = SplitParams::init(&spec, &mut rng);
+    let x_a = Matrix::randn(entry.batch, entry.d_active, 1.0, &mut rng);
+    let x_p = Matrix::randn(entry.batch, entry.d_passive[0], 1.0, &mut rng);
+    let y: Vec<f32> = (0..entry.batch).map(|i| (i % 2) as f32).collect();
+    Setup { xla, host, params, x_a, x_p, y }
+}
+
+#[test]
+fn passive_fwd_parity() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let s = setup("quickstart");
+    let z_xla = s.xla.passive_fwd(0, &s.params.passive[0], &s.x_p);
+    let z_host = s.host.passive_fwd(0, &s.params.passive[0], &s.x_p);
+    assert_eq!(z_xla.shape(), z_host.shape());
+    let diff = z_xla.max_abs_diff(&z_host);
+    assert!(diff < 1e-3, "passive_fwd diverges: max|Δ| = {diff}");
+}
+
+#[test]
+fn active_step_parity() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let s = setup("quickstart");
+    let z = s.host.passive_fwd(0, &s.params.passive[0], &s.x_p);
+    let xla_out = s
+        .xla
+        .active_step(&s.params.active, &s.params.top, &s.x_a, &[z.clone()], &s.y);
+    let host_out = s
+        .host
+        .active_step(&s.params.active, &s.params.top, &s.x_a, &[z], &s.y);
+    let rel = (xla_out.loss - host_out.loss).abs() / host_out.loss.abs().max(1e-9);
+    assert!(rel < 1e-3, "loss: xla {} vs host {}", xla_out.loss, host_out.loss);
+    let dz = xla_out.grad_z[0].max_abs_diff(&host_out.grad_z[0]);
+    assert!(dz < 1e-4, "grad_z diverges: {dz}");
+    let da = xla_out.grad_active.max_abs_diff(&host_out.grad_active);
+    assert!(da < 1e-3, "grad_active diverges: {da}");
+    let dt = xla_out.grad_top.max_abs_diff(&host_out.grad_top);
+    assert!(dt < 1e-3, "grad_top diverges: {dt}");
+}
+
+#[test]
+fn passive_bwd_parity() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let s = setup("quickstart");
+    let mut rng = Rng::new(7);
+    let gz = Matrix::randn(s.xla.batch, s.xla.embed, 1.0, &mut rng);
+    let g_xla = s.xla.passive_bwd(0, &s.params.passive[0], &s.x_p, &gz);
+    let g_host = s.host.passive_bwd(0, &s.params.passive[0], &s.x_p, &gz);
+    let d = g_xla.max_abs_diff(&g_host);
+    assert!(d < 1e-3, "passive grads diverge: {d}");
+}
+
+#[test]
+fn predict_parity() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let s = setup("quickstart");
+    let p_xla = s.xla.predict(
+        &s.params.active,
+        &s.params.top,
+        &s.params.passive,
+        &s.x_a,
+        &[s.x_p.clone()],
+    );
+    let p_host = s.host.predict(
+        &s.params.active,
+        &s.params.top,
+        &s.params.passive,
+        &s.x_a,
+        &[s.x_p.clone()],
+    );
+    let d = p_xla.max_abs_diff(&p_host);
+    assert!(d < 1e-3, "predict diverges: {d}");
+}
+
+#[test]
+fn large_model_parity() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let s = setup("quickstart-large");
+    let z_xla = s.xla.passive_fwd(0, &s.params.passive[0], &s.x_p);
+    let z_host = s.host.passive_fwd(0, &s.params.passive[0], &s.x_p);
+    let d = z_xla.max_abs_diff(&z_host);
+    assert!(d < 1e-2, "residual bottom diverges: {d}");
+}
+
+#[test]
+fn regression_config_parity() {
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let s = setup("energy");
+    let mut y = s.y.clone();
+    for (i, v) in y.iter_mut().enumerate() {
+        *v = (i as f32) * 0.1 - 3.0;
+    }
+    let z = s.host.passive_fwd(0, &s.params.passive[0], &s.x_p);
+    let xla_out = s
+        .xla
+        .active_step(&s.params.active, &s.params.top, &s.x_a, &[z.clone()], &y);
+    let host_out = s
+        .host
+        .active_step(&s.params.active, &s.params.top, &s.x_a, &[z], &y);
+    let rel = (xla_out.loss - host_out.loss).abs() / host_out.loss.abs().max(1e-9);
+    assert!(rel < 1e-3, "mse loss: xla {} vs host {}", xla_out.loss, host_out.loss);
+}
+
+#[test]
+fn xla_sgd_step_trains() {
+    // One full split SGD step through the PJRT path reduces the loss.
+    if !have_artifacts() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let s = setup("quickstart");
+    let mut params = s.params.clone();
+    let lr = 0.05f32;
+    let mut first = f64::NAN;
+    let mut last = f64::NAN;
+    for step in 0..10 {
+        let z = s.xla.passive_fwd(0, &params.passive[0], &s.x_p);
+        let out = s
+            .xla
+            .active_step(&params.active, &params.top, &s.x_a, &[z], &s.y);
+        let gp = s
+            .xla
+            .passive_bwd(0, &params.passive[0], &s.x_p, &out.grad_z[0]);
+        params.active.sgd_step(&out.grad_active, lr);
+        params.top.sgd_step(&out.grad_top, lr);
+        params.passive[0].sgd_step(&gp, lr);
+        if step == 0 {
+            first = out.loss;
+        }
+        last = out.loss;
+    }
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+}
