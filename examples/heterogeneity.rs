@@ -8,9 +8,9 @@
 
 use pubsub_vfl::bench_harness::Table;
 use pubsub_vfl::config::{Architecture, ExperimentConfig};
+use pubsub_vfl::experiment::{sim_config, Experiment};
 use pubsub_vfl::planner::{self, MemoryModel, PlanSpace};
 use pubsub_vfl::sim::simulate;
-use pubsub_vfl::train::{run_experiment, sim_config};
 
 fn main() -> anyhow::Result<()> {
     println!("== Resource heterogeneity (total 64 cores) ==");
@@ -63,24 +63,25 @@ fn main() -> anyhow::Result<()> {
         &["features A:P", "auc (PubSub)", "auc (VFL)", "sim time(s)", "sim cpu%"],
     );
     for &(fa, fp) in &[(50usize, 450usize), (100, 400), (150, 350), (200, 300), (250, 250)] {
-        let mut cfg = ExperimentConfig::default();
-        cfg.dataset.name = "synthetic".into();
-        cfg.dataset.samples = 3000;
-        cfg.dataset.features = fa + fp;
-        cfg.dataset.active_features = fa;
-        cfg.hidden = 24;
-        cfg.embed_dim = 12;
-        cfg.train.batch_size = 64;
-        cfg.train.epochs = 3;
-        cfg.train.lr = 0.05;
-        cfg.train.target_accuracy = 2.0;
-        cfg.parties.active_workers = 2;
-        cfg.parties.passive_workers = 2;
+        // Prepare the skewed split once; both architectures reuse it.
+        let mut prepared = Experiment::builder()
+            .arch(Architecture::PubSub)
+            .dataset("synthetic")
+            .samples(3000)
+            .features(fa + fp)
+            .active_features(fa)
+            .hidden(24)
+            .embed_dim(12)
+            .batch_size(64)
+            .epochs(3)
+            .lr(0.05)
+            .target_accuracy(2.0)
+            .workers(2, 2)
+            .prepare()?;
 
-        cfg.arch = Architecture::PubSub;
-        let ours = run_experiment(&cfg, 0)?;
-        cfg.arch = Architecture::Vfl;
-        let vfl = run_experiment(&cfg, 0)?;
+        let ours = prepared.run()?;
+        prepared.set_arch(Architecture::Vfl)?;
+        let vfl = prepared.run()?;
         t2.row(&[
             format!("{fa}:{fp}"),
             format!("{:.4}", ours.report.metric),

@@ -5,13 +5,13 @@
 //!
 //! Run: `cargo run --release --example plan_and_train`
 
-use pubsub_vfl::config::{Architecture, ExperimentConfig, ModelSize};
+use pubsub_vfl::config::{Architecture, ModelSize};
 use pubsub_vfl::data::Task;
+use pubsub_vfl::experiment::{sim_config, Experiment};
 use pubsub_vfl::model::SplitModelSpec;
 use pubsub_vfl::planner::{self, table8_report, MemoryModel, PlanSpace};
 use pubsub_vfl::profiler::{payload_bytes_per_sample, profile_host, ProfileOpts};
 use pubsub_vfl::sim::simulate;
-use pubsub_vfl::train::{run_experiment, sim_config};
 
 fn main() -> anyhow::Result<()> {
     // 1. Profile the split model's six pipeline stages on this machine.
@@ -53,23 +53,23 @@ fn main() -> anyhow::Result<()> {
     // 3. Train with the planned configuration (real accuracy) + project
     //    both configurations on the simulator.
     println!("\n== step 3: train with the plan ==");
-    let mut cfg = ExperimentConfig::default();
-    cfg.arch = Architecture::PubSub;
-    cfg.dataset.name = "credit".into();
-    cfg.dataset.samples = 3000;
-    cfg.hidden = 16;
-    cfg.embed_dim = 16;
-    cfg.train.batch_size = plan.best.batch_size.min(128); // keep the demo fast
-    cfg.train.epochs = 4;
-    cfg.train.lr = 0.05;
-    cfg.train.target_accuracy = 2.0;
-    cfg.parties.active_cores = 50;
-    cfg.parties.passive_cores = 14;
-    cfg.parties.active_workers = plan.best.w_a;
-    cfg.parties.passive_workers = plan.best.w_p;
-    let o = run_experiment(&cfg, 0)?;
+    let prepared = Experiment::builder()
+        .arch(Architecture::PubSub)
+        .dataset("credit")
+        .samples(3000)
+        .hidden(16)
+        .embed_dim(16)
+        .batch_size(plan.best.batch_size.min(128)) // keep the demo fast
+        .epochs(4)
+        .lr(0.05)
+        .target_accuracy(2.0)
+        .cores(50, 14)
+        .workers(plan.best.w_a, plan.best.w_p)
+        .prepare()?;
+    let o = prepared.run()?;
     println!("trained credit AUC = {:.4} in {} epochs", o.report.metric, o.report.epochs);
 
+    let cfg = prepared.config().clone();
     let planned_sim = simulate(&sim_config(&cfg, 100_000));
     let mut naive_cfg = cfg.clone();
     naive_cfg.parties.active_workers = naive.w_a;

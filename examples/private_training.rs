@@ -2,29 +2,34 @@
 //! GDP budget μ, train with noisy embeddings, and attack the published
 //! embeddings with the embedding-inversion adversary (Appendix G).
 //!
+//! One `PreparedExperiment` drives the whole sweep: the dataset, PSI
+//! alignment, and vertical split are materialized once, and each μ is a
+//! `reconfigure` + `run` — the attack also reads the prepared train
+//! split directly instead of re-materializing it.
+//!
 //! Run: `cargo run --release --example private_training`
 
 use pubsub_vfl::attack::{chance_asr, run_eia, EiaConfig};
 use pubsub_vfl::bench_harness::Table;
-use pubsub_vfl::config::{Architecture, ExperimentConfig};
+use pubsub_vfl::config::Architecture;
 use pubsub_vfl::dp::GaussianMechanism;
+use pubsub_vfl::experiment::Experiment;
 use pubsub_vfl::tensor::Matrix;
-use pubsub_vfl::train::{prepare_data, run_experiment};
 use pubsub_vfl::util::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let mut cfg = ExperimentConfig::default();
-    cfg.arch = Architecture::PubSub;
-    cfg.dataset.name = "bank".into();
-    cfg.dataset.samples = 2000;
-    cfg.hidden = 16;
-    cfg.embed_dim = 8;
-    cfg.train.batch_size = 32;
-    cfg.train.epochs = 4;
-    cfg.train.lr = 0.05;
-    cfg.train.target_accuracy = 2.0;
-    cfg.parties.active_workers = 2;
-    cfg.parties.passive_workers = 2;
+    let mut prepared = Experiment::builder()
+        .arch(Architecture::PubSub)
+        .dataset("bank")
+        .samples(2000)
+        .hidden(16)
+        .embed_dim(8)
+        .batch_size(32)
+        .epochs(4)
+        .lr(0.05)
+        .target_accuracy(2.0)
+        .workers(2, 2)
+        .prepare()?;
 
     let mut table = Table::new(
         "Fig 5: privacy budget sweep (bank)",
@@ -33,23 +38,24 @@ fn main() -> anyhow::Result<()> {
 
     let mus = [f64::INFINITY, 10.0, 8.0, 4.0, 2.0, 1.0, 0.5, 0.1];
     for &mu in &mus {
-        let mut c = cfg.clone();
-        c.dp.enabled = mu.is_finite();
-        c.dp.mu = mu;
-        let o = run_experiment(&c, 0)?;
+        prepared.reconfigure(|c| {
+            c.dp.enabled = mu.is_finite();
+            c.dp.mu = mu;
+        })?;
+        let o = prepared.run()?;
 
-        // EIA against the trained passive bottom, with matching GDP noise.
-        let (train, _) = prepare_data(&c, 0)?;
-        let bottom_spec = &pubsub_vfl::train::build_spec(&c, &train).passive_bottoms[0];
+        // EIA against the trained passive bottom, with matching GDP
+        // noise, over the already-prepared train split.
+        let train = prepared.train_data();
+        let cfg = prepared.config();
+        let bottom_spec = &prepared.spec().passive_bottoms[0];
         let params = &o.session.params.passive[0];
-        let mut rng = Rng::new(c.seed ^ 0xa77ac4);
         let n_shadow = 600.min(train.len() / 2);
         let shadow = train.passive[0].x.slice_rows(0, n_shadow);
         let victim = train.passive[0].x.slice_rows(n_shadow, (n_shadow + 200).min(train.len()));
-        let _ = &mut rng;
         let eia_cfg = EiaConfig::default();
         let result = if mu.is_finite() {
-            let mut mech = GaussianMechanism::new(mu, c.train.batch_size, c.train.batch_size, 7);
+            let mut mech = GaussianMechanism::new(mu, cfg.train.batch_size, cfg.train.batch_size, 7);
             mech.c = 8.0;
             run_eia(bottom_spec, params, &shadow, &victim, Some(&mut mech), &eia_cfg)
         } else {

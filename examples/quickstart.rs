@@ -1,65 +1,83 @@
-//! Quickstart — the end-to-end driver proving all three layers compose.
+//! Quickstart — the staged experiment session API, end to end.
 //!
-//! Trains the two-party split model with the full PubSub-VFL system on a
-//! real (synthetic, catalog-matched) workload, through the **production
-//! path**: AOT-compiled JAX/Pallas artifacts executed via PJRT from the
-//! Rust coordinator. Falls back to the pure-Rust host engine when
-//! `make artifacts` hasn't run. Logs the loss curve (recorded in
-//! EXPERIMENTS.md).
+//! The lifecycle is **build → prepare → run**:
+//!
+//! 1. `Experiment::builder()` accumulates the configuration fluently.
+//! 2. `.prepare()?` validates once and materializes everything runs
+//!    share — dataset generation, PSI alignment, the vertical split, the
+//!    model spec, and the compute engine (AOT JAX/Pallas via PJRT when
+//!    `make artifacts` has run, pure-Rust host engine otherwise).
+//! 3. `.run_with(&RunOptions)` trains with the full PubSub-VFL system,
+//!    streaming live `RunEvent`s (epoch progress, PS barriers, batch
+//!    retries) — and the same `PreparedExperiment` can run again without
+//!    re-paying the data/PSI cost.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use pubsub_vfl::config::{Architecture, EngineKind, ExperimentConfig};
+use pubsub_vfl::config::{Architecture, EngineKind};
+use pubsub_vfl::experiment::{paper_row, Experiment, RunEvent, RunOptions};
 use pubsub_vfl::metrics::RunReport;
-use pubsub_vfl::train::{paper_row, run_experiment};
 
 fn main() -> anyhow::Result<()> {
     let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let have_artifacts = artifacts.join("manifest.json").exists();
-
-    let mut cfg = ExperimentConfig::default();
-    cfg.arch = Architecture::PubSub;
-    cfg.name = "quickstart".into(); // selects the artifact config
-    cfg.dataset.name = "synthetic".into();
-    cfg.dataset.samples = 6_000;
-    cfg.dataset.features = 20;
-    cfg.dataset.active_features = 10;
-    cfg.hidden = 32;
-    cfg.embed_dim = 16;
-    cfg.train.batch_size = 64;
-    cfg.train.epochs = 8;
-    cfg.train.lr = 0.01;
-    cfg.train.target_accuracy = 0.97;
-    cfg.parties.active_workers = 4;
-    cfg.parties.passive_workers = 4;
-    cfg.engine = if have_artifacts { EngineKind::Xla } else { EngineKind::Host };
-    cfg.artifacts_dir = artifacts.to_string_lossy().into_owned();
+    let engine = if have_artifacts { EngineKind::Xla } else { EngineKind::Host };
 
     println!("== PubSub-VFL quickstart ==");
     println!(
         "engine: {}",
-        match cfg.engine {
+        match engine {
             EngineKind::Xla => "XLA/PJRT (AOT JAX + Pallas artifacts — the production path)",
             EngineKind::Host => "pure-Rust host engine (run `make artifacts` for the XLA path)",
         }
     );
+
+    // Stage 1+2: build the config fluently, then prepare once.
+    let prepared = Experiment::builder()
+        .arch(Architecture::PubSub)
+        .name("quickstart") // selects the artifact config
+        .dataset("synthetic")
+        .samples(6_000)
+        .features(20)
+        .active_features(10)
+        .hidden(32)
+        .embed_dim(16)
+        .batch_size(64)
+        .epochs(8)
+        .lr(0.01)
+        .target_accuracy(0.97)
+        .workers(4, 4)
+        .engine(engine)
+        .artifacts_dir(&artifacts.to_string_lossy())
+        .prepare()?;
+
+    let cfg = prepared.config();
     println!(
         "dataset: {} ({} samples, {} features, {}/{} split)\n",
-        cfg.dataset.name, cfg.dataset.samples, cfg.dataset.features,
-        cfg.dataset.active_features, cfg.dataset.features - cfg.dataset.active_features
+        cfg.dataset.name,
+        cfg.dataset.samples,
+        cfg.dataset.features,
+        cfg.dataset.active_features,
+        cfg.dataset.features - cfg.dataset.active_features
     );
 
-    let o = run_experiment(&cfg, cfg.dataset.samples)?;
-
-    println!("loss curve:");
-    for (e, l) in &o.session.loss_curve {
-        let bar = "#".repeat((l * 60.0).min(60.0) as usize);
-        println!("  epoch {e:>2}  loss {l:.4}  {bar}");
-    }
-    println!("\neval (AUC) curve:");
-    for (e, m) in &o.session.metric_curve {
-        println!("  epoch {e:>2}  auc {m:.4}");
-    }
+    // Stage 3: run with a streaming observer — progress arrives live,
+    // not after the fact.
+    println!("loss / AUC curve (streamed):");
+    let opts = RunOptions::new().with_observer(|ev| match ev {
+        RunEvent::EpochEnd { epoch, mean_loss, metric } => {
+            let bar = "#".repeat((mean_loss * 60.0).min(60.0) as usize);
+            println!("  epoch {epoch:>2}  loss {mean_loss:.4}  auc {metric:.4}  {bar}");
+        }
+        RunEvent::PsBarrier { epoch } => {
+            println!("  epoch {epoch:>2}  -- semi-async PS barrier --");
+        }
+        RunEvent::BatchRetried { epoch, batch_id } => {
+            println!("  epoch {epoch:>2}  batch {batch_id} reassigned");
+        }
+        _ => {}
+    });
+    let o = prepared.run_with(&opts)?;
 
     println!("\n{}", RunReport::header());
     println!("{}   <- measured on this box", o.report.row());
@@ -74,7 +92,11 @@ fn main() -> anyhow::Result<()> {
         o.metrics.comm_mb()
     );
     if o.session.reached_target {
-        println!("reached target AUC {:.2} in {} epochs", cfg.train.target_accuracy, o.report.epochs);
+        println!(
+            "reached target AUC {:.2} in {} epochs",
+            prepared.config().train.target_accuracy,
+            o.report.epochs
+        );
     }
     Ok(())
 }

@@ -1,7 +1,10 @@
 //! Shared helpers for the paper-table benches.
 
+// Each bench target compiles this module separately and uses a subset.
+#![allow(dead_code)]
+
 use pubsub_vfl::config::{Architecture, ExperimentConfig, ModelSize};
-use pubsub_vfl::train::{run_experiment, ExperimentOutcome};
+use pubsub_vfl::experiment::{Experiment, ExperimentOutcome, PreparedExperiment};
 
 /// Quick experiment config for accuracy rows: small sample caps + few
 /// epochs so the whole bench suite stays minutes-scale. Override
@@ -26,8 +29,23 @@ pub fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// Prepare once — sweeps then `reconfigure`/`set_arch` + `run` per row,
+/// amortizing data materialization + PSI across the whole table.
+pub fn prepare(cfg: &ExperimentConfig) -> PreparedExperiment {
+    Experiment::from_config(cfg.clone())
+        .prepare()
+        .expect("experiment prepares")
+}
+
+/// One-shot run for rows that can't share prepared state.
 pub fn run(cfg: &ExperimentConfig) -> ExperimentOutcome {
-    run_experiment(cfg, 0).expect("experiment runs")
+    prepare(cfg).run().expect("experiment runs")
+}
+
+/// Run an already-prepared experiment.
+#[allow(dead_code)]
+pub fn run_prepared(prepared: &PreparedExperiment) -> ExperimentOutcome {
+    prepared.run().expect("experiment runs")
 }
 
 /// Metric formatted the way the paper prints it (AUC% or RMSE).

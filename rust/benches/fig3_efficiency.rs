@@ -9,7 +9,7 @@ mod common;
 use pubsub_vfl::bench_harness::Table;
 use pubsub_vfl::config::Architecture;
 use pubsub_vfl::sim::simulate;
-use pubsub_vfl::train::sim_config;
+use pubsub_vfl::experiment::sim_config;
 
 fn main() {
     let n = common::env_usize("PUBSUB_VFL_BENCH_SIM_SAMPLES", 100_000);

@@ -1,32 +1,42 @@
 //! Fig. 5: privacy budget μ sweep — accuracy (real training with GDP
 //! noise), CPU%/comm (simulator), and EIA attack success rate.
+//!
+//! One `PreparedExperiment` per dataset: each μ is a `reconfigure` +
+//! `run`, and the EIA attack reads the prepared train split directly
+//! instead of re-materializing the data per row.
 
 mod common;
 
+use common::prepare;
 use pubsub_vfl::attack::{chance_asr, run_eia, EiaConfig};
 use pubsub_vfl::bench_harness::Table;
 use pubsub_vfl::config::Architecture;
 use pubsub_vfl::dp::GaussianMechanism;
+use pubsub_vfl::experiment::sim_config;
 use pubsub_vfl::sim::simulate;
-use pubsub_vfl::train::{build_spec, prepare_data, run_experiment, sim_config};
 
 fn main() {
     let sim_n = common::env_usize("PUBSUB_VFL_BENCH_SIM_SAMPLES", 100_000);
     for ds in ["bank", "credit", "synthetic"] {
+        let mut prepared = prepare(&common::quick_cfg(ds, Architecture::PubSub));
         let mut t = Table::new(
             &format!("Fig 5 ({ds}): privacy budget sweep"),
             &["mu", "auc%", "cpu%(sim)", "comm(MB,sim)", "ASR"],
         );
         for &mu in &[f64::INFINITY, 10.0, 8.0, 4.0, 2.0, 1.0, 0.5, 0.1] {
-            let mut cfg = common::quick_cfg(ds, Architecture::PubSub);
-            cfg.dp.enabled = mu.is_finite();
-            cfg.dp.mu = mu;
-            let o = run_experiment(&cfg, 0).expect("run");
-            let sim = simulate(&sim_config(&cfg, sim_n));
+            prepared
+                .reconfigure(|c| {
+                    c.dp.enabled = mu.is_finite();
+                    c.dp.mu = mu;
+                })
+                .expect("dp sweep");
+            let o = prepared.run().expect("run");
+            let sim = simulate(&sim_config(prepared.config(), sim_n));
 
             // EIA against the trained passive bottom under matching noise.
-            let (train, _) = prepare_data(&cfg, 0).expect("data");
-            let spec = build_spec(&cfg, &train);
+            let train = prepared.train_data();
+            let spec = prepared.spec();
+            let batch = prepared.config().train.batch_size;
             let n_shadow = 500.min(train.len() * 2 / 3);
             let shadow = train.passive[0].x.slice_rows(0, n_shadow);
             let victim = train.passive[0]
@@ -34,8 +44,7 @@ fn main() {
                 .slice_rows(n_shadow, (n_shadow + 200).min(train.len()));
             let eia_cfg = EiaConfig::default();
             let asr = if mu.is_finite() {
-                let mut mech =
-                    GaussianMechanism::new(mu, cfg.train.batch_size, cfg.train.batch_size, 7);
+                let mut mech = GaussianMechanism::new(mu, batch, batch, 7);
                 mech.c = 8.0;
                 run_eia(
                     &spec.passive_bottoms[0],

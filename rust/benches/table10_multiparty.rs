@@ -2,34 +2,43 @@
 //! Blog signature. Real training RMSE with k passive parties; system
 //! metrics from the simulator with the paper's own reduction (model the
 //! active party against the aggregate passive side; comm scales with k−1).
+//!
+//! The party count shapes the vertical split, so there is one
+//! `PreparedExperiment` per party count — each shared across the four
+//! architecture rows (the loop nest is parties-outer to maximize reuse;
+//! rows are re-emitted in the paper's arch-outer order).
 
 mod common;
 
+use common::prepare;
 use pubsub_vfl::bench_harness::Table;
 use pubsub_vfl::config::Architecture;
+use pubsub_vfl::experiment::sim_config;
 use pubsub_vfl::sim::simulate;
-use pubsub_vfl::train::{run_experiment, sim_config};
+use std::collections::HashMap;
+
+const ARCHS: [Architecture; 4] = [
+    Architecture::PubSub,
+    Architecture::VflPs,
+    Architecture::Avfl,
+    Architecture::AvflPs,
+];
+const PARTY_COUNTS: [usize; 5] = [2, 4, 6, 8, 10];
 
 fn main() {
     let sim_n = common::env_usize("PUBSUB_VFL_BENCH_SIM_SAMPLES", 100_000);
-    let mut t = Table::new(
-        "Table 10: multi-party setting (blog)",
-        &["method", "parties", "rmse", "time(s)", "cpu%", "wait/ep(s)", "comm(MB)"],
-    );
-    for arch in [
-        Architecture::PubSub,
-        Architecture::VflPs,
-        Architecture::Avfl,
-        Architecture::AvflPs,
-    ] {
-        for &parties in &[2usize, 4, 6, 8, 10] {
-            let k = parties - 1; // passive parties
-            let mut cfg = common::quick_cfg("blog", arch);
-            cfg.passive_parties = k;
-            // Keep each party at >= 1 feature: blog has 280 features.
-            cfg.dataset.active_features = 280 / parties;
-            let o = run_experiment(&cfg, 0).expect("run");
-            let mut sc = sim_config(&cfg, sim_n);
+    let mut rows: HashMap<(Architecture, usize), Vec<String>> = HashMap::new();
+    for &parties in &PARTY_COUNTS {
+        let k = parties - 1; // passive parties
+        let mut cfg = common::quick_cfg("blog", ARCHS[0]);
+        cfg.passive_parties = k;
+        // Keep each party at >= 1 feature: blog has 280 features.
+        cfg.dataset.active_features = 280 / parties;
+        let mut prepared = prepare(&cfg);
+        for arch in ARCHS {
+            prepared.set_arch(arch).expect("arch swap");
+            let o = prepared.run().expect("run");
+            let mut sc = sim_config(prepared.config(), sim_n);
             // Appendix H reduction: k passive parties ⇒ k× the embedding
             // traffic and the weakest party bounds the passive side; the
             // coordination surface grows mildly with k.
@@ -38,15 +47,28 @@ fn main() {
             sc.cost.consts.lambda_p *= 1.0 + 0.08 * (k as f64 - 1.0);
             sc.cost.consts.phi_p *= 1.0 + 0.08 * (k as f64 - 1.0);
             let r = simulate(&sc);
-            t.row(&[
-                arch.name().to_string(),
-                format!("{parties}"),
-                format!("{:.3}", o.report.metric),
-                format!("{:.1}", r.wall_s),
-                format!("{:.2}", r.cpu_util * 100.0),
-                format!("{:.4}", r.wait_per_epoch_s),
-                format!("{:.1}", r.comm_mb),
-            ]);
+            rows.insert(
+                (arch, parties),
+                vec![
+                    arch.name().to_string(),
+                    format!("{parties}"),
+                    format!("{:.3}", o.report.metric),
+                    format!("{:.1}", r.wall_s),
+                    format!("{:.2}", r.cpu_util * 100.0),
+                    format!("{:.4}", r.wait_per_epoch_s),
+                    format!("{:.1}", r.comm_mb),
+                ],
+            );
+        }
+    }
+
+    let mut t = Table::new(
+        "Table 10: multi-party setting (blog)",
+        &["method", "parties", "rmse", "time(s)", "cpu%", "wait/ep(s)", "comm(MB)"],
+    );
+    for arch in ARCHS {
+        for &parties in &PARTY_COUNTS {
+            t.row(&rows[&(arch, parties)]);
         }
     }
     t.print();

@@ -1,10 +1,13 @@
 //! Table 1: accuracy comparison, small model, 5 datasets × 5 methods.
 //! Accuracy is real training (identical data/seed per column); the claim
 //! to reproduce is *parity* — PubSub-VFL does not lose accuracy.
+//!
+//! Each dataset column is one `PreparedExperiment`: data + PSI run once,
+//! then all five architectures sweep over it via `set_arch`.
 
 mod common;
 
-use common::{fmt_metric, quick_cfg, run, DATASETS};
+use common::{fmt_metric, prepare, quick_cfg, DATASETS};
 use pubsub_vfl::bench_harness::Table;
 use pubsub_vfl::config::Architecture;
 
@@ -14,10 +17,11 @@ fn main() {
         &["dataset", "metric", "VFL", "VFL-PS", "AVFL", "AVFL-PS", "PubSub-VFL (ours)"],
     );
     for ds in DATASETS {
+        let mut prepared = prepare(&quick_cfg(ds, Architecture::Vfl));
         let mut cells = vec![ds.to_string(), String::new()];
         for arch in Architecture::ALL {
-            let cfg = quick_cfg(ds, arch);
-            let o = run(&cfg);
+            prepared.set_arch(arch).expect("arch swap");
+            let o = prepared.run().expect("run");
             if cells[1].is_empty() {
                 cells[1] = o.report.metric_name.to_uppercase();
             }

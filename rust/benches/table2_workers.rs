@@ -1,28 +1,37 @@
 //! Table 2: effect of the number of workers (w_a = w_p = w, B = 32,
 //! synthetic). Accuracy from real training; time/CPU/wait/comm from the
 //! calibrated simulator, including the convergence U-shape around w* = 8.
+//!
+//! Worker counts are training knobs, not data knobs: the whole sweep
+//! reuses one `PreparedExperiment` via `reconfigure`.
 
 mod common;
 
+use common::prepare;
 use pubsub_vfl::bench_harness::Table;
 use pubsub_vfl::config::Architecture;
+use pubsub_vfl::experiment::sim_config;
 use pubsub_vfl::sim::simulate;
-use pubsub_vfl::train::{run_experiment, sim_config};
 
 fn main() {
     let sim_n = common::env_usize("PUBSUB_VFL_BENCH_SIM_SAMPLES", 100_000);
+    let mut base = common::quick_cfg("synthetic", Architecture::PubSub);
+    base.train.batch_size = 32;
+    let mut prepared = prepare(&base);
     let mut t = Table::new(
         "Table 2: effect of #workers (synthetic, B=32)",
         &["w", "acc%", "time(s)", "cpu%", "wait/ep(s)", "comm(MB)"],
     );
     for &w in &[4usize, 5, 8, 10, 20, 30, 50] {
-        let mut cfg = common::quick_cfg("synthetic", Architecture::PubSub);
-        cfg.train.batch_size = 32;
-        cfg.parties.active_workers = w;
-        cfg.parties.passive_workers = w;
+        prepared
+            .reconfigure(|c| {
+                c.parties.active_workers = w;
+                c.parties.passive_workers = w;
+            })
+            .expect("worker sweep");
         // Real accuracy (worker count changes replica averaging).
-        let o = run_experiment(&cfg, 0).expect("run");
-        let r = simulate(&sim_config(&cfg, sim_n));
+        let o = prepared.run().expect("run");
+        let r = simulate(&sim_config(prepared.config(), sim_n));
         t.row(&[
             format!("{w}"),
             format!("{:.2}", o.report.metric * 100.0),

@@ -1,29 +1,45 @@
 //! Table 3: effect of batch size (w_a = w_p = 8, synthetic).
+//!
+//! The sample count is fixed up-front at the largest sweep point so the
+//! dataset signature stays constant; one `PreparedExperiment` then
+//! drives every batch size via `reconfigure` (batch size + epoch budget
+//! are training knobs, not data knobs).
 
 mod common;
 
+use common::prepare;
 use pubsub_vfl::bench_harness::Table;
 use pubsub_vfl::config::Architecture;
+use pubsub_vfl::experiment::sim_config;
 use pubsub_vfl::sim::simulate;
-use pubsub_vfl::train::{run_experiment, sim_config};
+
+const BATCHES: [usize; 7] = [16, 32, 64, 128, 256, 512, 1024];
 
 fn main() {
     let sim_n = common::env_usize("PUBSUB_VFL_BENCH_SIM_SAMPLES", 100_000);
+    let mut base = common::quick_cfg("synthetic", Architecture::PubSub);
+    base.parties.active_workers = 8;
+    base.parties.passive_workers = 8;
+    // Keep >= 6 full batches at the largest B for every sweep point.
+    let max_b = *BATCHES.iter().max().unwrap();
+    base.dataset.samples = base.dataset.samples.max(6 * max_b);
+    let base_epochs = base.train.epochs;
+    let mut prepared = prepare(&base);
     let mut t = Table::new(
         "Table 3: effect of batch size (synthetic, w=8)",
         &["B", "acc%", "time(s)", "cpu%", "wait/ep(s)", "comm(MB)"],
     );
-    for &b in &[16usize, 32, 64, 128, 256, 512, 1024] {
-        let mut cfg = common::quick_cfg("synthetic", Architecture::PubSub);
-        cfg.train.batch_size = b;
-        cfg.parties.active_workers = 8;
-        cfg.parties.passive_workers = 8;
+    for &b in &BATCHES {
         // Real accuracy: equalize the *update count* across batch sizes
         // (the paper reports each config at its own best schedule).
-        cfg.dataset.samples = cfg.dataset.samples.max(6 * b);
-        cfg.train.epochs = (cfg.train.epochs + b / 32).min(40);
-        let o = run_experiment(&cfg, 0).expect("run");
-        let r = simulate(&sim_config(&cfg, sim_n));
+        prepared
+            .reconfigure(|c| {
+                c.train.batch_size = b;
+                c.train.epochs = (base_epochs + b / 32).min(40);
+            })
+            .expect("batch sweep");
+        let o = prepared.run().expect("run");
+        let r = simulate(&sim_config(prepared.config(), sim_n));
         t.row(&[
             format!("{b}"),
             format!("{:.2}", o.report.metric * 100.0),

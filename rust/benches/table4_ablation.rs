@@ -1,9 +1,13 @@
 //! Table 4: ablation study — each PubSub-VFL mechanism removed in turn,
 //! plus the four baselines, on all five datasets (real training accuracy).
+//!
+//! One `PreparedExperiment` per dataset drives all ten variants: the
+//! architecture and ablation toggles are training knobs, so the column's
+//! data materialization + PSI run once.
 
 mod common;
 
-use common::{fmt_metric, quick_cfg, run, DATASETS};
+use common::{fmt_metric, prepare, quick_cfg, DATASETS};
 use pubsub_vfl::bench_harness::Table;
 use pubsub_vfl::config::{AblationConfig, Architecture};
 
@@ -41,24 +45,34 @@ fn main() {
         ("AVFL-PS", Architecture::AvflPs, AblationConfig::default()),
     ];
 
-    let mut t = Table::new(
-        "Table 4: ablation study (AUC% / RMSE in target-sigma units)",
-        &["method", "energy", "blog", "bank", "credit", "synthetic"],
-    );
-    for (name, arch, ab) in &variants {
-        let mut cells = vec![name.to_string()];
-        for ds in DATASETS {
-            let mut cfg = quick_cfg(ds, *arch);
-            cfg.ablation = *ab;
+    // cells[vi] = [variant name, energy, blog, bank, credit, synthetic].
+    let mut cells: Vec<Vec<String>> =
+        variants.iter().map(|(name, _, _)| vec![name.to_string()]).collect();
+    for ds in DATASETS {
+        let mut prepared = prepare(&quick_cfg(ds, Architecture::PubSub));
+        for (vi, (_, arch, ab)) in variants.iter().enumerate() {
             // "w/o ΔT" in the real session = fully-async PS (no barrier);
             // "w/o PubSub" routes through the AVFL-PS-style exchange in
             // the simulator; in the real trainer the session keeps running
             // with the broker (accuracy impact comes from the other
             // mechanisms), matching the paper's isolation methodology.
-            let o = run(&cfg);
-            cells.push(fmt_metric(&o));
+            prepared
+                .reconfigure(|c| {
+                    c.arch = *arch;
+                    c.ablation = *ab;
+                })
+                .expect("variant swap");
+            let o = prepared.run().expect("run");
+            cells[vi].push(fmt_metric(&o));
         }
-        t.row(&cells);
+    }
+
+    let mut t = Table::new(
+        "Table 4: ablation study (AUC% / RMSE in target-sigma units)",
+        &["method", "energy", "blog", "bank", "credit", "synthetic"],
+    );
+    for row in &cells {
+        t.row(row);
     }
     t.print();
     t.save_csv("table4_ablation.csv");

@@ -1,8 +1,10 @@
 //! Table 7: accuracy comparison with the large (residual-MLP) bottom.
+//!
+//! One `PreparedExperiment` per dataset; the five architectures sweep it.
 
 mod common;
 
-use common::{fmt_metric, quick_cfg, run, DATASETS};
+use common::{fmt_metric, prepare, quick_cfg, DATASETS};
 use pubsub_vfl::bench_harness::Table;
 use pubsub_vfl::config::{Architecture, ModelSize};
 
@@ -12,12 +14,14 @@ fn main() {
         &["dataset", "metric", "VFL", "VFL-PS", "AVFL", "AVFL-PS", "PubSub-VFL (ours)"],
     );
     for ds in DATASETS {
+        let mut cfg = quick_cfg(ds, Architecture::Vfl);
+        cfg.model_size = ModelSize::Large;
+        cfg.train.lr = 0.02; // deeper residual stack: gentler step
+        let mut prepared = prepare(&cfg);
         let mut cells = vec![ds.to_string(), String::new()];
         for arch in Architecture::ALL {
-            let mut cfg = quick_cfg(ds, arch);
-            cfg.model_size = ModelSize::Large;
-            cfg.train.lr = 0.02; // deeper residual stack: gentler step
-            let o = run(&cfg);
+            prepared.set_arch(arch).expect("arch swap");
+            let o = prepared.run().expect("run");
             if cells[1].is_empty() {
                 cells[1] = o.report.metric_name.to_uppercase();
             }

@@ -2,32 +2,38 @@
 //! synthetic click-log signature (AUC), simulator extrapolation of the
 //! system metrics to the full 4.5B-sample stream (runtime in hours,
 //! comm in GB) — see DESIGN.md §1 for the substitution.
+//!
+//! The criteo-mini materialization + PSI run once; all five
+//! architectures sweep the same `PreparedExperiment`.
 
 mod common;
 
+use common::prepare;
 use pubsub_vfl::bench_harness::Table;
 use pubsub_vfl::config::Architecture;
+use pubsub_vfl::experiment::sim_config;
 use pubsub_vfl::sim::simulate;
-use pubsub_vfl::train::{run_experiment, sim_config};
 
 const CRITEO_FULL_SAMPLES: f64 = 4.5e9;
 
 fn main() {
     let sim_n = common::env_usize("PUBSUB_VFL_BENCH_SIM_SAMPLES", 200_000);
+    let mut base = common::quick_cfg("criteo-mini", Architecture::PubSub);
+    base.train.batch_size = 64;
+    base.train.epochs = base.train.epochs.max(8);
+    base.train.lr = 0.03;
+    base.dataset.samples = base.dataset.samples.max(3000);
+    base.parties.active_workers = 8;
+    base.parties.passive_workers = 10;
+    let mut prepared = prepare(&base);
     let mut t = Table::new(
         "Table 9: Criteo 1TB scale study (criteo-mini + extrapolation)",
         &["method", "auc%", "runtime(h, extrap)", "cpu%", "wait/ep(s)", "comm(GB, extrap)"],
     );
     for arch in Architecture::ALL {
-        let mut cfg = common::quick_cfg("criteo-mini", arch);
-        cfg.train.batch_size = 64;
-        cfg.train.epochs = cfg.train.epochs.max(8);
-        cfg.train.lr = 0.03;
-        cfg.dataset.samples = cfg.dataset.samples.max(3000);
-        cfg.parties.active_workers = 8;
-        cfg.parties.passive_workers = 10;
-        let o = run_experiment(&cfg, 0).expect("run");
-        let r = simulate(&sim_config(&cfg, sim_n));
+        prepared.set_arch(arch).expect("arch swap");
+        let o = prepared.run().expect("run");
+        let r = simulate(&sim_config(prepared.config(), sim_n));
         // Size-linear extrapolation: the cost model is linear in the
         // number of batches per epoch.
         let scale = CRITEO_FULL_SAMPLES / sim_n as f64;

@@ -1,6 +1,6 @@
 //! The four baseline VFL architectures (§5.1), implemented over the same
-//! [`SplitEngine`] as PubSub-VFL so accuracy comparisons isolate the
-//! *coordination semantics*:
+//! [`SplitEngine`](crate::model::SplitEngine) as PubSub-VFL so accuracy
+//! comparisons isolate the *coordination semantics*:
 //!
 //! - **VFL** — classic lockstep split learning: one worker pair, strict
 //!   sequential batches, immediate updates (the sync-SGD reference).
@@ -17,75 +17,65 @@
 //! These run sequentially and deterministically given the seed — the
 //! wall-clock system metrics for baselines come from `sim/`; what these
 //! loops establish is the *accuracy* rows of Tables 1, 4 and 7.
+//!
+//! Each loop runs against an [`experiment::TrainCtx`](crate::experiment::TrainCtx)
+//! (the `Trainer`-trait calling convention), honors the run's
+//! [`CancelToken`](crate::experiment::CancelToken) at batch granularity,
+//! and streams [`RunEvent`](crate::experiment::RunEvent)s per epoch.
 
-use crate::config::{Architecture, ExperimentConfig};
+use crate::config::Architecture;
 use crate::coordinator::session::{evaluate, reached, SessionResult};
 use crate::data::{BatchPlan, VerticalDataset};
-use crate::metrics::Metrics;
-use crate::model::{MlpParams, SplitEngine, SplitModelSpec, SplitParams};
+use crate::experiment::{RunEvent, RunOptions, TrainCtx};
+use crate::model::{MlpParams, SplitParams};
 use crate::tensor::Matrix;
 use crate::util::{Rng, Stopwatch};
-use std::sync::Arc;
 
-/// Train one of the four baselines.
+/// Train one of the four baselines (legacy explicit-argument shim; the
+/// `Trainer` impls in `experiment::trainer` call the ctx functions
+/// directly).
 pub fn train_baseline(
     arch: Architecture,
-    engine: Arc<dyn SplitEngine>,
-    spec: &SplitModelSpec,
+    engine: std::sync::Arc<dyn crate::model::SplitEngine>,
+    spec: &crate::model::SplitModelSpec,
     train: &VerticalDataset,
     test: &VerticalDataset,
-    cfg: &ExperimentConfig,
-    metrics: Arc<Metrics>,
+    cfg: &crate::config::ExperimentConfig,
+    metrics: std::sync::Arc<crate::metrics::Metrics>,
 ) -> SessionResult {
+    let opts = RunOptions::default();
+    let ctx = TrainCtx { engine, spec, train, test, cfg, metrics, opts: &opts };
     match arch {
-        Architecture::Vfl => train_vfl(engine, spec, train, test, cfg, metrics),
-        Architecture::VflPs => train_vfl_ps(engine, spec, train, test, cfg, metrics),
-        Architecture::Avfl => train_avfl(engine, spec, train, test, cfg, metrics),
-        Architecture::AvflPs => train_avfl_ps(engine, spec, train, test, cfg, metrics),
+        Architecture::Vfl => train_vfl(&ctx),
+        Architecture::VflPs => train_vfl_ps(&ctx),
+        Architecture::Avfl => train_avfl(&ctx),
+        Architecture::AvflPs => train_avfl_ps(&ctx),
         Architecture::PubSub => panic!("use coordinator::train_pubsub for PubSub-VFL"),
     }
 }
 
 struct LoopState<'a> {
-    engine: Arc<dyn SplitEngine>,
-    train: &'a VerticalDataset,
-    test: &'a VerticalDataset,
-    cfg: &'a ExperimentConfig,
-    metrics: Arc<Metrics>,
+    ctx: &'a TrainCtx<'a>,
     rng: Rng,
     loss_curve: Vec<(f64, f64)>,
     metric_curve: Vec<(f64, f64)>,
 }
 
 impl<'a> LoopState<'a> {
-    fn new(
-        engine: Arc<dyn SplitEngine>,
-        train: &'a VerticalDataset,
-        test: &'a VerticalDataset,
-        cfg: &'a ExperimentConfig,
-        metrics: Arc<Metrics>,
-    ) -> Self {
+    fn new(ctx: &'a TrainCtx<'a>) -> Self {
         LoopState {
-            engine,
-            train,
-            test,
-            cfg,
-            metrics,
-            rng: Rng::new(cfg.seed),
+            ctx,
+            rng: Rng::new(ctx.cfg.seed),
             loss_curve: Vec::new(),
             metric_curve: Vec::new(),
         }
     }
 
     fn batch_inputs(&self, rows: &[usize]) -> (Matrix, Vec<Matrix>, Vec<f32>) {
-        let x_a = self.train.active.x.take_rows(rows);
-        let x_p: Vec<Matrix> = self
-            .train
-            .passive
-            .iter()
-            .map(|p| p.x.take_rows(rows))
-            .collect();
-        let y: Vec<f32> = rows.iter().map(|&r| self.train.y[r]).collect();
+        let train = self.ctx.train;
+        let x_a = train.active.x.take_rows(rows);
+        let x_p: Vec<Matrix> = train.passive.iter().map(|p| p.x.take_rows(rows)).collect();
+        let y: Vec<f32> = rows.iter().map(|&r| train.y[r]).collect();
         (x_a, x_p, y)
     }
 
@@ -97,23 +87,29 @@ impl<'a> LoopState<'a> {
         params: &SplitParams,
         comm_batches: usize,
     ) -> (f64, bool) {
-        let b = self.cfg.train.batch_size;
+        let ctx = self.ctx;
+        let b = ctx.cfg.train.batch_size;
+        let train = ctx.train;
         let mean_loss = if losses.is_empty() {
             f64::NAN
         } else {
             losses.iter().sum::<f64>() / losses.len() as f64
         };
         self.loss_curve.push((epoch as f64, mean_loss));
-        self.metrics.push_point("train_loss", epoch as f64, mean_loss);
+        ctx.metrics.push_point("train_loss", epoch as f64, mean_loss);
         // Comm accounting: one embedding + one gradient per batch per
         // passive party.
-        let payload = (b * self.train.passive.len() * (self.cfg.embed_dim * 4 + 16) * 2) as u64;
-        self.metrics.add_comm(comm_batches as u64 * payload / self.train.passive.len().max(1) as u64
-            * self.train.passive.len() as u64);
-        let metric = evaluate(self.engine.as_ref(), params, self.test, b, self.train.task);
+        let payload = (b * train.passive.len() * (ctx.cfg.embed_dim * 4 + 16) * 2) as u64;
+        ctx.metrics.add_comm(
+            comm_batches as u64 * payload / train.passive.len().max(1) as u64
+                * train.passive.len() as u64,
+        );
+        let metric = evaluate(ctx.engine.as_ref(), params, ctx.test, b, train.task);
         self.metric_curve.push((epoch as f64, metric));
-        self.metrics.push_point("eval_metric", epoch as f64, metric);
-        (metric, reached(self.train.task, metric, self.cfg.train.target_accuracy))
+        ctx.metrics.push_point("eval_metric", epoch as f64, metric);
+        ctx.emit(RunEvent::Eval { epoch, metric });
+        ctx.emit(RunEvent::EpochEnd { epoch, mean_loss, metric });
+        (metric, reached(train.task, metric, ctx.target()))
     }
 
     fn result(
@@ -123,12 +119,13 @@ impl<'a> LoopState<'a> {
         reached_target: bool,
         sw: Stopwatch,
     ) -> SessionResult {
+        let ctx = self.ctx;
         let final_metric = evaluate(
-            self.engine.as_ref(),
+            ctx.engine.as_ref(),
             &params,
-            self.test,
-            self.cfg.train.batch_size,
-            self.train.task,
+            ctx.test,
+            ctx.cfg.train.batch_size,
+            ctx.train.task,
         );
         SessionResult {
             params,
@@ -144,32 +141,33 @@ impl<'a> LoopState<'a> {
 }
 
 /// Classic lockstep VFL.
-fn train_vfl(
-    engine: Arc<dyn SplitEngine>,
-    spec: &SplitModelSpec,
-    train: &VerticalDataset,
-    test: &VerticalDataset,
-    cfg: &ExperimentConfig,
-    metrics: Arc<Metrics>,
-) -> SessionResult {
-    let mut st = LoopState::new(Arc::clone(&engine), train, test, cfg, metrics);
-    let mut params = SplitParams::init(spec, &mut st.rng);
-    let lr = cfg.train.lr as f32;
+pub(crate) fn train_vfl(ctx: &TrainCtx<'_>) -> SessionResult {
+    let engine = ctx.engine.as_ref();
+    let train = ctx.train;
+    let mut st = LoopState::new(ctx);
+    let mut params = SplitParams::init(ctx.spec, &mut st.rng);
+    let lr = ctx.cfg.train.lr as f32;
     let sw = Stopwatch::start();
     let mut reached_target = false;
     let mut epochs_run = 0;
-    for epoch in 0..cfg.train.epochs {
+    let mut cancelled = false;
+    for epoch in 0..ctx.epochs() {
         epochs_run = epoch + 1;
-        let plan = BatchPlan::for_epoch(train.len(), cfg.train.batch_size, epoch as u64, &mut st.rng);
+        let plan =
+            BatchPlan::for_epoch(train.len(), ctx.cfg.train.batch_size, epoch as u64, &mut st.rng);
         let mut losses = Vec::new();
         let mut n = 0usize;
         for a in plan.full_batches() {
+            if ctx.cancelled() {
+                cancelled = true;
+                break;
+            }
             let (x_a, x_p, y) = st.batch_inputs(&a.rows);
             let zs: Vec<Matrix> = (0..train.passive.len())
                 .map(|p| engine.passive_fwd(p, &params.passive[p], &x_p[p]))
                 .collect();
             let mut out = engine.active_step(&params.active, &params.top, &x_a, &zs, &y);
-            let clip = cfg.train.grad_clip as f32;
+            let clip = ctx.cfg.train.grad_clip as f32;
             for p in 0..train.passive.len() {
                 let mut g = engine.passive_bwd(p, &params.passive[p], &x_p[p], &out.grad_z[p]);
                 g.clip_norm(clip);
@@ -182,6 +180,10 @@ fn train_vfl(
             losses.push(out.loss);
             n += 1;
         }
+        if cancelled {
+            ctx.emit(RunEvent::Cancelled { epoch });
+            break;
+        }
         let (_, hit) = st.epoch_end(epoch, &losses, &params, n);
         if hit {
             reached_target = true;
@@ -192,27 +194,29 @@ fn train_vfl(
 }
 
 /// VFL with synchronous PS: per-round mean-gradient barrier.
-fn train_vfl_ps(
-    engine: Arc<dyn SplitEngine>,
-    spec: &SplitModelSpec,
-    train: &VerticalDataset,
-    test: &VerticalDataset,
-    cfg: &ExperimentConfig,
-    metrics: Arc<Metrics>,
-) -> SessionResult {
+pub(crate) fn train_vfl_ps(ctx: &TrainCtx<'_>) -> SessionResult {
+    let engine = ctx.engine.as_ref();
+    let train = ctx.train;
+    let cfg = ctx.cfg;
     let pairs = cfg.parties.active_workers.min(cfg.parties.passive_workers).max(1);
-    let mut st = LoopState::new(Arc::clone(&engine), train, test, cfg, metrics);
-    let mut params = SplitParams::init(spec, &mut st.rng);
+    let mut st = LoopState::new(ctx);
+    let mut params = SplitParams::init(ctx.spec, &mut st.rng);
     let lr = cfg.train.lr as f32;
     let sw = Stopwatch::start();
     let mut reached_target = false;
     let mut epochs_run = 0;
-    for epoch in 0..cfg.train.epochs {
+    let mut cancelled = false;
+    for epoch in 0..ctx.epochs() {
         epochs_run = epoch + 1;
-        let plan = BatchPlan::for_epoch(train.len(), cfg.train.batch_size, epoch as u64, &mut st.rng);
+        let plan =
+            BatchPlan::for_epoch(train.len(), cfg.train.batch_size, epoch as u64, &mut st.rng);
         let batches: Vec<_> = plan.full_batches().cloned().collect();
         let mut losses = Vec::new();
         for round in batches.chunks(pairs) {
+            if ctx.cancelled() {
+                cancelled = true;
+                break;
+            }
             // All pairs compute at the round-start parameters.
             let mut acc_a: Option<MlpParams> = None;
             let mut acc_t: Option<MlpParams> = None;
@@ -243,6 +247,10 @@ fn train_vfl_ps(
                 apply_mean(&mut params.passive[p], acc, scale, lr);
             }
         }
+        if cancelled {
+            ctx.emit(RunEvent::Cancelled { epoch });
+            break;
+        }
         let n = batches.len();
         let (_, hit) = st.epoch_end(epoch, &losses, &params, n);
         if hit {
@@ -254,31 +262,33 @@ fn train_vfl_ps(
 }
 
 /// AVFL: bounded-staleness asynchronous exchange (staleness 1 both ways).
-fn train_avfl(
-    engine: Arc<dyn SplitEngine>,
-    spec: &SplitModelSpec,
-    train: &VerticalDataset,
-    test: &VerticalDataset,
-    cfg: &ExperimentConfig,
-    metrics: Arc<Metrics>,
-) -> SessionResult {
-    let mut st = LoopState::new(Arc::clone(&engine), train, test, cfg, metrics);
-    let mut params = SplitParams::init(spec, &mut st.rng);
+pub(crate) fn train_avfl(ctx: &TrainCtx<'_>) -> SessionResult {
+    let engine = ctx.engine.as_ref();
+    let train = ctx.train;
+    let cfg = ctx.cfg;
+    let mut st = LoopState::new(ctx);
+    let mut params = SplitParams::init(ctx.spec, &mut st.rng);
     let lr = cfg.train.lr as f32;
     let sw = Stopwatch::start();
     let k = train.passive.len();
     let mut reached_target = false;
     let mut epochs_run = 0;
+    let mut cancelled = false;
     // Stale passive params used to produce embeddings (one step behind).
     let mut stale_passive: Vec<MlpParams> = params.passive.clone();
     // Deferred cut-layer gradients (applied one step late).
     let mut pending: Option<(Vec<usize>, Vec<Matrix>)> = None;
-    for epoch in 0..cfg.train.epochs {
+    for epoch in 0..ctx.epochs() {
         epochs_run = epoch + 1;
-        let plan = BatchPlan::for_epoch(train.len(), cfg.train.batch_size, epoch as u64, &mut st.rng);
+        let plan =
+            BatchPlan::for_epoch(train.len(), cfg.train.batch_size, epoch as u64, &mut st.rng);
         let mut losses = Vec::new();
         let mut n = 0usize;
         for a in plan.full_batches() {
+            if ctx.cancelled() {
+                cancelled = true;
+                break;
+            }
             let (x_a, x_p, y) = st.batch_inputs(&a.rows);
             // Embeddings from *stale* passive params (async pipeline).
             let zs: Vec<Matrix> = (0..k)
@@ -305,6 +315,10 @@ fn train_avfl(
             losses.push(out.loss);
             n += 1;
         }
+        if cancelled {
+            ctx.emit(RunEvent::Cancelled { epoch });
+            break;
+        }
         let (_, hit) = st.epoch_end(epoch, &losses, &params, n);
         if hit {
             reached_target = true;
@@ -316,30 +330,32 @@ fn train_avfl(
 
 /// AVFL-PS: ν worker-local replicas, locally updated all epoch, averaged
 /// at a per-epoch PS barrier (local SGD).
-fn train_avfl_ps(
-    engine: Arc<dyn SplitEngine>,
-    spec: &SplitModelSpec,
-    train: &VerticalDataset,
-    test: &VerticalDataset,
-    cfg: &ExperimentConfig,
-    metrics: Arc<Metrics>,
-) -> SessionResult {
+pub(crate) fn train_avfl_ps(ctx: &TrainCtx<'_>) -> SessionResult {
+    let engine = ctx.engine.as_ref();
+    let train = ctx.train;
+    let cfg = ctx.cfg;
     let pairs = cfg.parties.active_workers.min(cfg.parties.passive_workers).max(1);
-    let mut st = LoopState::new(Arc::clone(&engine), train, test, cfg, metrics);
-    let init = SplitParams::init(spec, &mut st.rng);
+    let mut st = LoopState::new(ctx);
+    let init = SplitParams::init(ctx.spec, &mut st.rng);
     let lr = cfg.train.lr as f32;
     let sw = Stopwatch::start();
     let k = train.passive.len();
     let mut replicas: Vec<SplitParams> = vec![init; pairs];
     let mut reached_target = false;
     let mut epochs_run = 0;
+    let mut cancelled = false;
     let mut mean = replicas[0].clone();
-    for epoch in 0..cfg.train.epochs {
+    for epoch in 0..ctx.epochs() {
         epochs_run = epoch + 1;
-        let plan = BatchPlan::for_epoch(train.len(), cfg.train.batch_size, epoch as u64, &mut st.rng);
+        let plan =
+            BatchPlan::for_epoch(train.len(), cfg.train.batch_size, epoch as u64, &mut st.rng);
         let batches: Vec<_> = plan.full_batches().cloned().collect();
         let mut losses = Vec::new();
         for (i, a) in batches.iter().enumerate() {
+            if ctx.cancelled() {
+                cancelled = true;
+                break;
+            }
             let r = &mut replicas[i % pairs];
             let (x_a, x_p, y) = st.batch_inputs(&a.rows);
             let zs: Vec<Matrix> = (0..k)
@@ -358,11 +374,16 @@ fn train_avfl_ps(
             r.top.sgd_step(&out.grad_top, lr);
             losses.push(out.loss);
         }
+        if cancelled {
+            ctx.emit(RunEvent::Cancelled { epoch });
+            break;
+        }
         // Per-epoch PS barrier: average replicas, broadcast.
         mean = average_split(&replicas);
         for r in replicas.iter_mut() {
             *r = mean.clone();
         }
+        ctx.emit(RunEvent::PsBarrier { epoch });
         let n = batches.len();
         let (_, hit) = st.epoch_end(epoch, &losses, &mean, n);
         if hit {
@@ -408,9 +429,11 @@ fn average_split(replicas: &[SplitParams]) -> SplitParams {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::ModelSize;
+    use crate::config::{ExperimentConfig, ModelSize};
     use crate::data::{make_classification, ClassificationOpts, Task};
-    use crate::model::HostSplitModel;
+    use crate::metrics::Metrics;
+    use crate::model::{HostSplitModel, SplitModelSpec};
+    use std::sync::Arc;
 
     fn setup() -> (Arc<HostSplitModel>, SplitModelSpec, VerticalDataset, VerticalDataset, ExperimentConfig)
     {
@@ -513,6 +536,47 @@ mod tests {
             Arc::new(Metrics::new()),
         );
         assert!(sync.final_metric >= async_.final_metric - 0.05);
+    }
+
+    #[test]
+    fn cancel_token_stops_baseline_mid_run() {
+        use crate::experiment::CancelToken;
+        let (engine, spec, tr, te, mut cfg) = setup();
+        cfg.train.epochs = 10_000; // would run ~forever without the token
+        let token = CancelToken::new();
+        token.cancel(); // pre-cancelled: first batch check trips
+        let opts = RunOptions::new().with_cancel(token);
+        let ctx = TrainCtx {
+            engine,
+            spec: &spec,
+            train: &tr,
+            test: &te,
+            cfg: &cfg,
+            metrics: Arc::new(Metrics::new()),
+            opts: &opts,
+        };
+        let r = train_vfl(&ctx);
+        assert_eq!(r.epochs_run, 1);
+        assert!(!r.reached_target);
+        assert!(r.loss_curve.is_empty());
+    }
+
+    #[test]
+    fn epoch_override_limits_run() {
+        let (engine, spec, tr, te, cfg) = setup();
+        let opts = RunOptions::new().with_epochs(2);
+        let ctx = TrainCtx {
+            engine,
+            spec: &spec,
+            train: &tr,
+            test: &te,
+            cfg: &cfg,
+            metrics: Arc::new(Metrics::new()),
+            opts: &opts,
+        };
+        let r = train_vfl(&ctx);
+        assert_eq!(r.epochs_run, 2);
+        assert_eq!(r.loss_curve.len(), 2);
     }
 
     #[test]

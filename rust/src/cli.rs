@@ -19,7 +19,9 @@ use crate::planner::{self, CostConstants, CostModel, MemoryModel, PlanSpace};
 use crate::profiler::{profile_host, ProfileOpts};
 use crate::sim::simulate;
 use crate::tensor::Matrix;
-use crate::train::{paper_row, run_experiment, sim_config, DEFAULT_MAX_SAMPLES};
+use crate::experiment::{
+    paper_row, sim_config, Experiment, RunEvent, RunOptions, DEFAULT_MAX_SAMPLES,
+};
 use crate::util::Rng;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
@@ -147,23 +149,38 @@ fn cmd_train(args: &Args) -> Result<i32> {
         cfg.arch, cfg.dataset.name, if cfg.engine == EngineKind::Xla { "xla" } else { "host" },
         cfg.train.batch_size, cfg.train.epochs
     );
-    let o = run_experiment(&cfg, max)?;
+    let prepared = Experiment::from_config(cfg).max_samples(max).prepare()?;
+    // Stream progress live as the session emits events.
+    let opts = RunOptions::new().with_observer(|ev| match ev {
+        RunEvent::EpochEnd { epoch, mean_loss, metric } => {
+            println!("  epoch {epoch:>3}: loss {mean_loss:.5}  metric {metric:.4}");
+        }
+        RunEvent::PsBarrier { epoch } => {
+            println!("  epoch {epoch:>3}: semi-async PS barrier");
+        }
+        RunEvent::BatchRetried { epoch, batch_id } => {
+            println!("  epoch {epoch:>3}: batch {batch_id} reassigned (deadline/buffer)");
+        }
+        _ => {}
+    });
+    let o = prepared.run_with(&opts)?;
     println!("{}", RunReport::header());
     println!("{}   <- measured on this box", o.report.row());
     println!("{}   <- projected testbed (simulator)", paper_row(&o).row());
-    for (e, l) in &o.session.loss_curve {
-        println!("  epoch {e:>3}: loss {l:.5}");
-    }
     Ok(0)
 }
 
 fn cmd_compare(args: &Args) -> Result<i32> {
     let max = args.get_usize("samples", 4000);
+    // One prepared experiment drives all five architectures: the data
+    // materialization + PSI alignment run once, not per row.
+    let mut prepared = Experiment::from_config(config_from_args(args)?)
+        .max_samples(max)
+        .prepare()?;
     println!("{}", RunReport::header());
     for arch in Architecture::ALL {
-        let mut cfg = config_from_args(args)?;
-        cfg.arch = arch;
-        let o = run_experiment(&cfg, max)?;
+        prepared.set_arch(arch)?;
+        let o = prepared.run()?;
         println!("{}", paper_row(&o).row());
     }
     Ok(0)
@@ -243,20 +260,21 @@ fn cmd_attack(args: &Args) -> Result<i32> {
 }
 
 fn cmd_quickcheck(args: &Args) -> Result<i32> {
-    let mut cfg = config_from_args(args)?;
-    cfg.dataset.name = "bank".into();
-    cfg.dataset.samples = 600;
-    cfg.train.batch_size = 32;
-    cfg.train.epochs = 3;
-    cfg.train.lr = 0.05;
-    cfg.train.target_accuracy = 2.0;
-    cfg.hidden = 16;
-    cfg.embed_dim = 8;
-    cfg.parties.active_workers = 2;
-    cfg.parties.passive_workers = 2;
+    // One prepared experiment checks all five architectures.
+    let mut prepared = Experiment::from_config(config_from_args(args)?)
+        .dataset("bank")
+        .samples(600)
+        .batch_size(32)
+        .epochs(3)
+        .lr(0.05)
+        .target_accuracy(2.0)
+        .hidden(16)
+        .embed_dim(8)
+        .workers(2, 2)
+        .prepare()?;
     for arch in Architecture::ALL {
-        cfg.arch = arch;
-        let o = run_experiment(&cfg, 0)?;
+        prepared.set_arch(arch)?;
+        let o = prepared.run()?;
         let ok = o.report.metric > 0.6;
         println!(
             "{:<12} auc={:.4} epochs={} {}",

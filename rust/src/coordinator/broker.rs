@@ -122,7 +122,7 @@ mod tests {
         assert_eq!(m.counter("emb_published"), 1);
         assert!(m.comm_mb() > 0.0);
         let r = b.take_embedding(0, Duration::from_millis(5));
-        matches!(r, SubResult::Ok((1, _)));
+        assert!(matches!(r, SubResult::Ok((1, _))));
     }
 
     #[test]

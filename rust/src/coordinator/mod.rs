@@ -14,4 +14,4 @@ pub use broker::Broker;
 pub use channel::{SubResult, Topic};
 pub use messages::{EmbeddingMsg, GradientMsg};
 pub use ps::{ParameterServer, PsMode, SemiAsyncSchedule};
-pub use session::{evaluate, reached, train_pubsub, SessionResult};
+pub use session::{evaluate, reached, train_pubsub, train_pubsub_session, SessionResult};

@@ -5,7 +5,11 @@
 //! schedule, and the GDP protocol on published embeddings.
 //!
 //! The engine is pluggable: `HostSplitModel` (pure Rust) or `XlaService`
-//! (AOT JAX/Pallas via PJRT).
+//! (AOT JAX/Pallas via PJRT). The session runs against an
+//! [`experiment::TrainCtx`](crate::experiment::TrainCtx): it honors the
+//! run's [`CancelToken`](crate::experiment::CancelToken) (checked by the
+//! epoch supervisor, so cancellation lands within one deadline period)
+//! and streams [`RunEvent`](crate::experiment::RunEvent)s.
 
 use super::broker::Broker;
 use super::channel::SubResult;
@@ -14,6 +18,7 @@ use super::ps::{ParameterServer, PsMode, SemiAsyncSchedule};
 use crate::config::ExperimentConfig;
 use crate::data::{BatchPlan, Task, VerticalDataset};
 use crate::dp::GaussianMechanism;
+use crate::experiment::{RunEvent, RunOptions, TrainCtx};
 use crate::metrics::Metrics;
 use crate::model::{auc, rmse, MlpParams, SplitEngine, SplitModelSpec, SplitParams};
 use crate::tensor::Matrix;
@@ -91,8 +96,8 @@ struct ActiveReplica {
     top: MlpParams,
 }
 
-/// Train with the full PubSub-VFL system.
-#[allow(clippy::too_many_lines)]
+/// Legacy explicit-argument entry point; the `Trainer` impl in
+/// `experiment::trainer` calls [`train_pubsub_session`] directly.
 pub fn train_pubsub(
     engine: Arc<dyn SplitEngine>,
     spec: &SplitModelSpec,
@@ -101,6 +106,22 @@ pub fn train_pubsub(
     cfg: &ExperimentConfig,
     metrics: Arc<Metrics>,
 ) -> SessionResult {
+    let opts = RunOptions::default();
+    let ctx = TrainCtx { engine, spec, train, test, cfg, metrics, opts: &opts };
+    train_pubsub_session(&ctx)
+}
+
+/// Train with the full PubSub-VFL system.
+#[allow(clippy::too_many_lines)]
+pub fn train_pubsub_session(ctx: &TrainCtx<'_>) -> SessionResult {
+    let engine = &ctx.engine;
+    let spec = ctx.spec;
+    let train = ctx.train;
+    let test = ctx.test;
+    let cfg = ctx.cfg;
+    let metrics = &ctx.metrics;
+    let opts = ctx.opts;
+
     let task = train.task;
     let k = train.passive.len();
     let b = cfg.train.batch_size;
@@ -140,7 +161,7 @@ pub fn train_pubsub(
         k,
         cfg.train.buffer_p * w_a.max(1),
         cfg.train.buffer_q * w_p.max(1),
-        Arc::clone(&metrics),
+        Arc::clone(metrics),
     );
 
     // GDP mechanism per passive party (Eq. 17).
@@ -166,10 +187,16 @@ pub fn train_pubsub(
     let mut metric_curve = Vec::new();
     let mut reached_target = false;
     let mut epochs_run = 0usize;
+    let mut cancelled = false;
     let retried_total = Arc::new(AtomicUsize::new(0));
     let sw = Stopwatch::start();
 
-    for epoch in 0..cfg.train.epochs {
+    for epoch in 0..ctx.epochs() {
+        if ctx.cancelled() {
+            cancelled = true;
+            epochs_run = epoch;
+            break;
+        }
         epochs_run = epoch + 1;
         let plan = BatchPlan::for_epoch(train.len(), b, epoch as u64, &mut rng);
         let assignments: Vec<_> = plan.full_batches().cloned().collect();
@@ -200,9 +227,9 @@ pub fn train_pubsub(
             let mut passive_handles = Vec::new();
             for (party, replicas) in passive_replicas.iter_mut().enumerate() {
                 for (wi, local) in replicas.iter_mut().enumerate() {
-                    let engine = Arc::clone(&engine);
+                    let engine = Arc::clone(engine);
                     let broker = &broker;
-                    let metrics = Arc::clone(&metrics);
+                    let metrics = Arc::clone(metrics);
                     let rows_by_id = Arc::clone(&rows_by_id);
                     let queues = &queues;
                     let dp = &dp;
@@ -264,9 +291,9 @@ pub fn train_pubsub(
             // ---- active workers -------------------------------------
             let mut active_handles = Vec::new();
             for replica in active_replicas.iter_mut() {
-                let engine = Arc::clone(&engine);
+                let engine = Arc::clone(engine);
                 let broker = &broker;
-                let metrics = Arc::clone(&metrics);
+                let metrics = Arc::clone(metrics);
                 let rows_by_id = Arc::clone(&rows_by_id);
                 let queues = &queues;
                 let consumed = &consumed;
@@ -309,6 +336,7 @@ pub fn train_pubsub(
                             // Reassign the whole batch on every party.
                             metrics.inc("deadline_expired", 1);
                             retried.fetch_add(1, Ordering::Relaxed);
+                            opts.emit(RunEvent::BatchRetried { epoch, batch_id: id });
                             for q in queues.iter() {
                                 q.lock().unwrap().push(id);
                             }
@@ -346,13 +374,20 @@ pub fn train_pubsub(
 
             // ---- epoch supervisor -----------------------------------
             // Completion: all passive backward passes done. Reassign
-            // buffer-evicted batches as they surface.
+            // buffer-evicted batches as they surface, and observe the
+            // run's cancel token (this poll is what bounds cancellation
+            // latency to well under one deadline period).
             loop {
                 if remaining_bwd.load(Ordering::Acquire) == 0 {
                     break;
                 }
+                if opts.is_cancelled() {
+                    cancelled = true;
+                    break;
+                }
                 for id in broker.drain_dropped() {
                     retried_total.fetch_add(1, Ordering::Relaxed);
+                    opts.emit(RunEvent::BatchRetried { epoch, batch_id: id });
                     for q in &queues {
                         q.lock().unwrap().push(id);
                     }
@@ -368,6 +403,11 @@ pub fn train_pubsub(
                 let _ = h.join();
             }
         });
+
+        if cancelled {
+            opts.emit(RunEvent::Cancelled { epoch });
+            break;
+        }
 
         // ---- semi-asynchronous PS barrier (Eq. 5) --------------------
         if schedule.barrier_after_epoch(epoch) {
@@ -388,6 +428,7 @@ pub fn train_pubsub(
                 }
             }
             metrics.inc("ps_barriers", 1);
+            opts.emit(RunEvent::PsBarrier { epoch });
         }
 
         // ---- bookkeeping + target check ------------------------------
@@ -400,7 +441,9 @@ pub fn train_pubsub(
         let metric = evaluate(engine.as_ref(), &eval_params, test, b, task);
         metric_curve.push((epoch as f64, metric));
         metrics.push_point("eval_metric", epoch as f64, metric);
-        if reached(task, metric, cfg.train.target_accuracy) {
+        opts.emit(RunEvent::Eval { epoch, metric });
+        opts.emit(RunEvent::EpochEnd { epoch, mean_loss, metric });
+        if reached(task, metric, ctx.target()) {
             reached_target = true;
             break;
         }

@@ -1,0 +1,228 @@
+//! Fluent construction of experiments.
+//!
+//! `Experiment::builder()` replaces the ad-hoc field mutation of
+//! [`ExperimentConfig`] that every example and bench used to do; the
+//! terminal [`ExperimentBuilder::prepare`] validates the config once and
+//! materializes all reusable state into a [`PreparedExperiment`].
+
+use super::prepared::{materialize_data, PreparedExperiment};
+use super::trainer::{Trainer, TrainerRegistry};
+use super::{build_engine, build_spec};
+use crate::config::{AblationConfig, Architecture, EngineKind, ExperimentConfig, ModelSize};
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+/// Entry point of the staged experiment API.
+pub struct Experiment;
+
+impl Experiment {
+    /// Start from the default configuration.
+    pub fn builder() -> ExperimentBuilder {
+        ExperimentBuilder::new(ExperimentConfig::default())
+    }
+
+    /// Start from an existing configuration (e.g. loaded from TOML).
+    pub fn from_config(cfg: ExperimentConfig) -> ExperimentBuilder {
+        ExperimentBuilder::new(cfg)
+    }
+}
+
+/// Builder for a [`PreparedExperiment`]; every setter returns `self`.
+pub struct ExperimentBuilder {
+    cfg: ExperimentConfig,
+    max_samples: usize,
+    registry: TrainerRegistry,
+}
+
+impl ExperimentBuilder {
+    fn new(cfg: ExperimentConfig) -> ExperimentBuilder {
+        ExperimentBuilder { cfg, max_samples: 0, registry: TrainerRegistry::with_defaults() }
+    }
+
+    pub fn arch(mut self, arch: Architecture) -> Self {
+        self.cfg.arch = arch;
+        self
+    }
+
+    pub fn dataset(mut self, name: &str) -> Self {
+        self.cfg.dataset.name = name.to_string();
+        self
+    }
+
+    pub fn samples(mut self, n: usize) -> Self {
+        self.cfg.dataset.samples = n;
+        self
+    }
+
+    pub fn features(mut self, n: usize) -> Self {
+        self.cfg.dataset.features = n;
+        self
+    }
+
+    pub fn active_features(mut self, n: usize) -> Self {
+        self.cfg.dataset.active_features = n;
+        self
+    }
+
+    pub fn model_size(mut self, size: ModelSize) -> Self {
+        self.cfg.model_size = size;
+        self
+    }
+
+    pub fn hidden(mut self, n: usize) -> Self {
+        self.cfg.hidden = n;
+        self
+    }
+
+    pub fn embed_dim(mut self, n: usize) -> Self {
+        self.cfg.embed_dim = n;
+        self
+    }
+
+    pub fn engine(mut self, kind: EngineKind) -> Self {
+        self.cfg.engine = kind;
+        self
+    }
+
+    pub fn artifacts_dir(mut self, dir: &str) -> Self {
+        self.cfg.artifacts_dir = dir.to_string();
+        self
+    }
+
+    pub fn name(mut self, name: &str) -> Self {
+        self.cfg.name = name.to_string();
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    pub fn batch_size(mut self, b: usize) -> Self {
+        self.cfg.train.batch_size = b;
+        self
+    }
+
+    pub fn epochs(mut self, e: usize) -> Self {
+        self.cfg.train.epochs = e;
+        self
+    }
+
+    pub fn lr(mut self, lr: f64) -> Self {
+        self.cfg.train.lr = lr;
+        self
+    }
+
+    pub fn target_accuracy(mut self, t: f64) -> Self {
+        self.cfg.train.target_accuracy = t;
+        self
+    }
+
+    /// Worker pool sizes (active, passive).
+    pub fn workers(mut self, active: usize, passive: usize) -> Self {
+        self.cfg.parties.active_workers = active;
+        self.cfg.parties.passive_workers = passive;
+        self
+    }
+
+    /// Core counts (active, passive) for the cost model / simulator.
+    pub fn cores(mut self, active: usize, passive: usize) -> Self {
+        self.cfg.parties.active_cores = active;
+        self.cfg.parties.passive_cores = passive;
+        self
+    }
+
+    pub fn passive_parties(mut self, k: usize) -> Self {
+        self.cfg.passive_parties = k;
+        self
+    }
+
+    /// Enable Gaussian DP with budget μ (`f64::INFINITY` disables noise).
+    pub fn dp_mu(mut self, mu: f64) -> Self {
+        self.cfg.dp.enabled = mu.is_finite();
+        self.cfg.dp.mu = mu;
+        self
+    }
+
+    pub fn ablation(mut self, ab: AblationConfig) -> Self {
+        self.cfg.ablation = ab;
+        self
+    }
+
+    /// Cap generated samples (0 = catalog default size).
+    pub fn max_samples(mut self, n: usize) -> Self {
+        self.max_samples = n;
+        self
+    }
+
+    /// Escape hatch for knobs without a dedicated setter.
+    pub fn tune(mut self, f: impl FnOnce(&mut ExperimentConfig)) -> Self {
+        f(&mut self.cfg);
+        self
+    }
+
+    /// Plug in (or replace) the trainer driving `arch`.
+    pub fn register_trainer(mut self, arch: Architecture, trainer: Arc<dyn Trainer>) -> Self {
+        self.registry.register(arch, trainer);
+        self
+    }
+
+    /// Peek at the accumulated configuration.
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    /// Validate the config and materialize everything reusable across
+    /// runs: dataset generation, PSI alignment, the vertical split, the
+    /// model spec, and the compute engine.
+    pub fn prepare(self) -> Result<PreparedExperiment> {
+        let ExperimentBuilder { cfg, max_samples, registry } = self;
+        cfg.validate().map_err(|e| anyhow!("{e}"))?;
+        let (train, test) = materialize_data(&cfg, max_samples)?;
+        let spec = build_spec(&cfg, &train);
+        let engine = build_engine(&cfg, &spec, train.task)?;
+        Ok(PreparedExperiment::new(cfg, max_samples, train, test, spec, engine, registry))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_accumulates_fields() {
+        let b = Experiment::builder()
+            .arch(Architecture::Avfl)
+            .dataset("bank")
+            .batch_size(64)
+            .epochs(2)
+            .workers(3, 5)
+            .seed(7)
+            .dp_mu(2.0)
+            .tune(|c| c.bandwidth_mbps = 10.0);
+        let cfg = b.config();
+        assert_eq!(cfg.arch, Architecture::Avfl);
+        assert_eq!(cfg.dataset.name, "bank");
+        assert_eq!(cfg.train.batch_size, 64);
+        assert_eq!(cfg.parties.active_workers, 3);
+        assert_eq!(cfg.parties.passive_workers, 5);
+        assert_eq!(cfg.seed, 7);
+        assert!(cfg.dp.enabled);
+        assert_eq!(cfg.bandwidth_mbps, 10.0);
+    }
+
+    #[test]
+    fn invalid_config_rejected_at_prepare() {
+        let err = Experiment::builder().batch_size(0).prepare();
+        assert!(err.is_err());
+        let err = Experiment::builder().lr(-0.5).prepare();
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn unknown_dataset_rejected_at_prepare() {
+        let err = Experiment::builder().dataset("no-such-dataset").prepare();
+        assert!(err.is_err());
+    }
+}

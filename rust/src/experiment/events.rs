@@ -1,0 +1,137 @@
+//! Streaming progress events, cancellation, and per-run options for the
+//! staged experiment API.
+//!
+//! A [`RunOptions`] travels (by reference) into every trainer through
+//! [`super::TrainCtx`]; trainers check the [`CancelToken`] at batch/epoch
+//! granularity and emit [`RunEvent`]s through the observer so the CLI can
+//! stream live progress and benches can stop at a target without hacks.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// Progress events emitted during a training run.
+///
+/// Observers run on the emitting thread (the session supervisor or a
+/// worker thread for [`RunEvent::BatchRetried`]) — keep them cheap and
+/// non-blocking.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RunEvent {
+    /// An epoch finished: mean train loss + eval metric at epoch end.
+    EpochEnd { epoch: usize, mean_loss: f64, metric: f64 },
+    /// A batch was reassigned by the deadline/buffer mechanisms.
+    BatchRetried { epoch: usize, batch_id: u64 },
+    /// A semi-asynchronous parameter-server barrier fired (Eq. 5).
+    PsBarrier { epoch: usize },
+    /// An evaluation pass completed.
+    Eval { epoch: usize, metric: f64 },
+    /// The run observed its cancel token and stopped early.
+    Cancelled { epoch: usize },
+}
+
+/// Shared, cloneable cancellation flag checked inside training loops.
+///
+/// Cancelling stops a PubSub session within one supervisor poll (sub-ms)
+/// plus worker wakeup — well inside one waiting-deadline period — and
+/// stops baseline loops at the next batch boundary.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Request cancellation (idempotent, callable from any thread).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+/// Observer callback for [`RunEvent`]s.
+pub type EventSink = Arc<dyn Fn(RunEvent) + Send + Sync>;
+
+/// Per-run knobs for [`super::PreparedExperiment::run_with`]: everything
+/// here varies per *run* without touching the prepared state.
+#[derive(Clone, Default)]
+pub struct RunOptions {
+    /// Cooperative cancellation; `None` = run to completion.
+    pub cancel: Option<CancelToken>,
+    /// Streaming progress observer; `None` = silent.
+    pub observer: Option<EventSink>,
+    /// Override `cfg.train.epochs` for this run only.
+    pub epochs: Option<usize>,
+    /// Override `cfg.train.target_accuracy` for this run only (lets
+    /// time-to-target benches stop early without mutating the config).
+    pub target_accuracy: Option<f64>,
+}
+
+impl RunOptions {
+    pub fn new() -> RunOptions {
+        RunOptions::default()
+    }
+
+    pub fn with_cancel(mut self, token: CancelToken) -> RunOptions {
+        self.cancel = Some(token);
+        self
+    }
+
+    pub fn with_observer<F: Fn(RunEvent) + Send + Sync + 'static>(mut self, f: F) -> RunOptions {
+        self.observer = Some(Arc::new(f));
+        self
+    }
+
+    pub fn with_epochs(mut self, epochs: usize) -> RunOptions {
+        self.epochs = Some(epochs);
+        self
+    }
+
+    pub fn with_target_accuracy(mut self, target: f64) -> RunOptions {
+        self.target_accuracy = Some(target);
+        self
+    }
+
+    /// Emit an event to the observer, if any.
+    pub fn emit(&self, ev: RunEvent) {
+        if let Some(obs) = &self.observer {
+            obs(ev);
+        }
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancel.as_ref().is_some_and(|t| t.is_cancelled())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn cancel_token_flags_across_clones() {
+        let t = CancelToken::new();
+        let t2 = t.clone();
+        assert!(!t2.is_cancelled());
+        t.cancel();
+        assert!(t2.is_cancelled());
+    }
+
+    #[test]
+    fn options_emit_and_overrides() {
+        let seen: Arc<Mutex<Vec<RunEvent>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = Arc::clone(&seen);
+        let opts = RunOptions::new()
+            .with_epochs(3)
+            .with_target_accuracy(0.9)
+            .with_observer(move |ev| sink.lock().unwrap().push(ev));
+        assert_eq!(opts.epochs, Some(3));
+        assert_eq!(opts.target_accuracy, Some(0.9));
+        opts.emit(RunEvent::PsBarrier { epoch: 1 });
+        assert_eq!(seen.lock().unwrap().len(), 1);
+        assert!(!opts.is_cancelled());
+    }
+}

@@ -1,0 +1,144 @@
+//! The staged experiment session API — prepare once, run many.
+//!
+//! ```text
+//! Experiment::builder()            // fluent config
+//!     .dataset("bank").arch(Architecture::PubSub)
+//!     .prepare()?                  // materialize data + PSI + spec + engine (once)
+//!     .run()?                      // train; repeatable, observable, cancellable
+//! ```
+//!
+//! The three stages:
+//!
+//! 1. **Build** ([`ExperimentBuilder`]) — accumulate an
+//!    [`crate::config::ExperimentConfig`] fluently, optionally plugging
+//!    custom [`Trainer`]s into the registry.
+//! 2. **Prepare** ([`PreparedExperiment`]) — validate once, then
+//!    materialize everything runs share: dataset generation, PSI
+//!    alignment, the vertical split, the model spec, and the engine.
+//!    This is the expensive stage; sweeps pay it once and
+//!    [`PreparedExperiment::reconfigure`] training knobs between runs.
+//! 3. **Run** ([`PreparedExperiment::run_with`]) — dispatch through the
+//!    [`Trainer`] registered for the configured architecture, streaming
+//!    [`RunEvent`]s to an observer and honoring a [`CancelToken`], and
+//!    assemble the [`ExperimentOutcome`] (measured report + simulator
+//!    projection).
+//!
+//! The old single-shot `train::run_experiment` / `train::prepare_data`
+//! remain as deprecated shims over this module for one release.
+
+mod builder;
+mod events;
+mod prepared;
+mod trainer;
+
+pub use builder::{Experiment, ExperimentBuilder};
+pub use events::{CancelToken, EventSink, RunEvent, RunOptions};
+pub use prepared::{materialize_data, PreparedExperiment};
+pub use trainer::{
+    AvflPsTrainer, AvflTrainer, PubSubTrainer, TrainCtx, Trainer, TrainerRegistry, VflPsTrainer,
+    VflTrainer,
+};
+
+use crate::config::{EngineKind, ExperimentConfig};
+use crate::coordinator::SessionResult;
+use crate::data::{Task, VerticalDataset};
+use crate::metrics::{Metrics, RunReport};
+use crate::model::{HostSplitModel, SplitEngine, SplitModelSpec};
+use crate::planner::{CostConstants, CostModel};
+use crate::profiler::payload_bytes_per_sample;
+use crate::runtime::XlaService;
+use crate::sim::{SimConfig, SimResult};
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+/// Everything a run produces.
+pub struct ExperimentOutcome {
+    /// Measured row (accuracy from real training; time/util/wait/comm from
+    /// this process's metrics).
+    pub report: RunReport,
+    pub session: SessionResult,
+    /// Projected system metrics on the paper's testbed (simulator).
+    pub sim: SimResult,
+    pub metrics: Arc<Metrics>,
+}
+
+/// Cap on generated samples for interactive runs; benches override.
+pub const DEFAULT_MAX_SAMPLES: usize = 20_000;
+
+/// Build the model spec implied by config + data dims.
+pub fn build_spec(cfg: &ExperimentConfig, train: &VerticalDataset) -> SplitModelSpec {
+    let d_passive: Vec<usize> = (0..train.passive.len()).map(|p| train.d_passive(p)).collect();
+    SplitModelSpec::build(
+        cfg.model_size,
+        train.d_active(),
+        &d_passive,
+        cfg.hidden,
+        cfg.embed_dim,
+    )
+}
+
+/// Construct the configured engine.
+pub fn build_engine(
+    cfg: &ExperimentConfig,
+    spec: &SplitModelSpec,
+    task: Task,
+) -> Result<Arc<dyn SplitEngine>> {
+    match cfg.engine {
+        EngineKind::Host => Ok(Arc::new(HostSplitModel::new(spec.clone(), task))),
+        EngineKind::Xla => {
+            // The artifact config is selected by name convention; its
+            // dims must match the spec (validated inside the service).
+            let svc = XlaService::spawn(cfg.artifacts_dir.clone(), &cfg.name)?;
+            if svc.batch != cfg.train.batch_size {
+                return Err(anyhow!(
+                    "artifact '{}' has batch {}, config wants {}",
+                    cfg.name,
+                    svc.batch,
+                    cfg.train.batch_size
+                ));
+            }
+            Ok(Arc::new(svc))
+        }
+    }
+}
+
+/// The calibrated simulator configuration for this experiment.
+pub fn sim_config(cfg: &ExperimentConfig, n_samples: usize) -> SimConfig {
+    let cost = CostModel {
+        consts: CostConstants::balanced_default(),
+        c_a: cfg.parties.active_cores,
+        c_p: cfg.parties.passive_cores,
+        emb_bytes_per_sample: payload_bytes_per_sample(cfg.embed_dim),
+        grad_bytes_per_sample: payload_bytes_per_sample(cfg.embed_dim),
+        bandwidth_bps: cfg.bandwidth_mbps * 1e6 / 8.0,
+    };
+    let mut sc = SimConfig::new(cfg.arch, cost);
+    sc.n_samples = n_samples;
+    sc.batch_size = cfg.train.batch_size;
+    sc.w_a = cfg.parties.active_workers;
+    sc.w_p = cfg.parties.passive_workers;
+    sc.buffer_p = cfg.train.buffer_p;
+    sc.buffer_q = cfg.train.buffer_q;
+    sc.t_ddl_s = cfg.train.t_ddl_ms as f64 / 1000.0;
+    sc.delta_t0 = cfg.train.delta_t0;
+    sc.mu = if cfg.dp.enabled { cfg.dp.mu } else { f64::INFINITY };
+    sc.seed = cfg.seed;
+    sc.ablation = cfg.ablation;
+    sc
+}
+
+/// Combined row for the paper-style tables: accuracy measured, system
+/// metrics projected by the simulator.
+pub fn paper_row(o: &ExperimentOutcome) -> RunReport {
+    RunReport {
+        name: o.report.name.clone(),
+        metric: o.report.metric,
+        metric_name: o.report.metric_name.clone(),
+        running_time_s: o.sim.wall_s,
+        cpu_utilization: o.sim.cpu_util,
+        waiting_time_s: o.sim.wait_per_epoch_s,
+        comm_mb: o.sim.comm_mb,
+        epochs: o.sim.epochs,
+        reached_target: o.report.reached_target,
+    }
+}

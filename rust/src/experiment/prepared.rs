@@ -1,0 +1,204 @@
+//! Prepared, reusable experiment state: `prepare()` once, `run()` many.
+//!
+//! A [`PreparedExperiment`] owns the materialized [`VerticalDataset`]s
+//! (dataset generation + PSI alignment + vertical split — the expensive,
+//! run-invariant stage), the [`SplitModelSpec`], the compute engine, and
+//! the trainer registry. Sweeps reconfigure the training knobs between
+//! runs without re-paying the data/PSI cost.
+
+use super::events::RunOptions;
+use super::trainer::{TrainCtx, TrainerRegistry};
+use super::{build_engine, build_spec, sim_config, ExperimentOutcome};
+use crate::config::{Architecture, ExperimentConfig};
+use crate::data::{self, Task, VerticalDataset};
+use crate::metrics::{Metrics, RunReport};
+use crate::model::{SplitEngine, SplitModelSpec};
+use crate::psi;
+use crate::sim::simulate;
+use crate::util::Rng;
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+/// Materialize + vertically partition the configured dataset, running the
+/// PSI alignment step both parties would execute first (§3). This is the
+/// prepare-stage work a [`PreparedExperiment`] amortizes across runs.
+pub fn materialize_data(
+    cfg: &ExperimentConfig,
+    max_samples: usize,
+) -> Result<(VerticalDataset, VerticalDataset)> {
+    let mut ds = data::load_catalog(
+        &cfg.dataset.name,
+        cfg.dataset.samples,
+        cfg.dataset.features,
+        max_samples,
+        cfg.seed,
+    )
+    .ok_or_else(|| anyhow!("unknown dataset '{}'", cfg.dataset.name))?;
+    ds.standardize();
+    // Standardized regression targets (the raw synthetic targets have
+    // std ≈ 40; unscaled MSE gradients blow past any reasonable lr).
+    // Reported RMSE is therefore in target-σ units; see EXPERIMENTS.md.
+    if ds.task == Task::Regression {
+        ds.standardize_targets();
+    }
+
+    // PSI: both parties hold the same entities here (the generator is the
+    // "shared" population), but we still run the protocol — it yields the
+    // canonical shared ordering both sides use for batch IDs.
+    let ids = psi::IdSet::from_range("user", 0..ds.len());
+    let alignment = psi::align(&ids, &ids, b"active-contrib", b"passive-contrib");
+    assert_eq!(alignment.len(), ds.len(), "full-overlap PSI sanity");
+    ds.x = ds.x.take_rows(&alignment.rows_a);
+    ds.y = alignment.rows_a.iter().map(|&i| ds.y[i]).collect();
+
+    let mut rng = Rng::new(cfg.seed ^ 0x5111_7000);
+    ds.shuffle(&mut rng);
+    let (tr, te) = ds.split(0.7);
+    let vtr = VerticalDataset::split_multi(&tr, cfg.dataset.active_features, cfg.passive_parties);
+    let vte = VerticalDataset::split_multi(&te, cfg.dataset.active_features, cfg.passive_parties);
+    Ok((vtr, vte))
+}
+
+/// The part of the config that determines the materialized data; a
+/// [`PreparedExperiment::reconfigure`] must keep it fixed.
+fn data_signature(cfg: &ExperimentConfig) -> (String, usize, usize, usize, u64, usize) {
+    (
+        cfg.dataset.name.clone(),
+        cfg.dataset.samples,
+        cfg.dataset.features,
+        cfg.dataset.active_features,
+        cfg.seed,
+        cfg.passive_parties,
+    )
+}
+
+/// A validated experiment with all run-invariant state materialized.
+pub struct PreparedExperiment {
+    cfg: ExperimentConfig,
+    max_samples: usize,
+    train: VerticalDataset,
+    test: VerticalDataset,
+    spec: SplitModelSpec,
+    engine: Arc<dyn SplitEngine>,
+    registry: TrainerRegistry,
+}
+
+impl PreparedExperiment {
+    pub(super) fn new(
+        cfg: ExperimentConfig,
+        max_samples: usize,
+        train: VerticalDataset,
+        test: VerticalDataset,
+        spec: SplitModelSpec,
+        engine: Arc<dyn SplitEngine>,
+        registry: TrainerRegistry,
+    ) -> PreparedExperiment {
+        PreparedExperiment { cfg, max_samples, train, test, spec, engine, registry }
+    }
+
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    pub fn train_data(&self) -> &VerticalDataset {
+        &self.train
+    }
+
+    pub fn test_data(&self) -> &VerticalDataset {
+        &self.test
+    }
+
+    pub fn spec(&self) -> &SplitModelSpec {
+        &self.spec
+    }
+
+    pub fn engine(&self) -> &Arc<dyn SplitEngine> {
+        &self.engine
+    }
+
+    /// Sample cap this experiment was prepared with.
+    pub fn max_samples(&self) -> usize {
+        self.max_samples
+    }
+
+    /// Change training knobs between runs without re-materializing data.
+    ///
+    /// The data signature (dataset config, seed, passive parties) must
+    /// stay fixed — those fields shaped the prepared datasets; changing
+    /// them requires a new [`super::Experiment`]. The model spec and
+    /// engine are rebuilt only when the mutation affects them.
+    pub fn reconfigure(&mut self, f: impl FnOnce(&mut ExperimentConfig)) -> Result<()> {
+        let mut next = self.cfg.clone();
+        f(&mut next);
+        next.validate().map_err(|e| anyhow!("{e}"))?;
+        if data_signature(&next) != data_signature(&self.cfg) {
+            return Err(anyhow!(
+                "reconfigure cannot change the prepared data signature \
+                 (dataset, seed, passive_parties); build a new Experiment"
+            ));
+        }
+        let spec = build_spec(&next, &self.train);
+        let engine_invariant = spec == self.spec
+            && next.engine == self.cfg.engine
+            && next.name == self.cfg.name
+            && next.artifacts_dir == self.cfg.artifacts_dir
+            && next.train.batch_size == self.cfg.train.batch_size;
+        if !engine_invariant {
+            self.engine = build_engine(&next, &spec, self.train.task)?;
+        }
+        self.spec = spec;
+        self.cfg = next;
+        Ok(())
+    }
+
+    /// Convenience for architecture sweeps over one prepared dataset.
+    pub fn set_arch(&mut self, arch: Architecture) -> Result<()> {
+        self.reconfigure(|c| c.arch = arch)
+    }
+
+    /// Run with default options.
+    pub fn run(&self) -> Result<ExperimentOutcome> {
+        self.run_with(&RunOptions::default())
+    }
+
+    /// Run one training session over the prepared state; repeatable.
+    pub fn run_with(&self, opts: &RunOptions) -> Result<ExperimentOutcome> {
+        let trainer = self
+            .registry
+            .get(self.cfg.arch)
+            .ok_or_else(|| anyhow!("no trainer registered for '{}'", self.cfg.arch))?;
+        let metrics = Arc::new(Metrics::new());
+        let ctx = TrainCtx {
+            engine: Arc::clone(&self.engine),
+            spec: &self.spec,
+            train: &self.train,
+            test: &self.test,
+            cfg: &self.cfg,
+            metrics: Arc::clone(&metrics),
+            opts,
+        };
+        let session = trainer.train(&ctx);
+
+        // Projected testbed metrics from the calibrated simulator.
+        let sim = simulate(&sim_config(&self.cfg, self.train.len()));
+
+        let metric_name = match self.train.task {
+            Task::BinaryClassification => "auc",
+            Task::Regression => "rmse",
+        };
+        let total_cores = self.cfg.parties.active_cores + self.cfg.parties.passive_cores;
+        let report = RunReport {
+            name: trainer.name().to_string(),
+            metric: session.final_metric,
+            metric_name: metric_name.to_string(),
+            running_time_s: session.wall.as_secs_f64(),
+            cpu_utilization: metrics.cpu_utilization(total_cores, session.wall),
+            waiting_time_s: metrics.wait_secs() / session.epochs_run.max(1) as f64,
+            comm_mb: metrics.comm_mb(),
+            epochs: session.epochs_run,
+            reached_target: session.reached_target,
+        };
+
+        Ok(ExperimentOutcome { report, session, sim, metrics })
+    }
+}

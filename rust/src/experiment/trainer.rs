@@ -1,0 +1,193 @@
+//! Trait-based architecture dispatch.
+//!
+//! [`Trainer`] replaces the old `match cfg.arch` in the experiment
+//! runner: each of the five architectures implements
+//! `train(&self, ctx) -> SessionResult`, and a [`TrainerRegistry`] maps
+//! [`Architecture`] → trainer so new architectures plug in (via
+//! [`super::ExperimentBuilder::register_trainer`]) without touching any
+//! dispatcher.
+
+use super::events::{RunEvent, RunOptions};
+use crate::baselines;
+use crate::config::{Architecture, ExperimentConfig};
+use crate::coordinator::{train_pubsub_session, SessionResult};
+use crate::data::VerticalDataset;
+use crate::metrics::Metrics;
+use crate::model::{SplitEngine, SplitModelSpec};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Everything a trainer needs for one run: prepared state borrowed from
+/// the [`super::PreparedExperiment`] plus the per-run [`RunOptions`].
+pub struct TrainCtx<'a> {
+    pub engine: Arc<dyn SplitEngine>,
+    pub spec: &'a SplitModelSpec,
+    pub train: &'a VerticalDataset,
+    pub test: &'a VerticalDataset,
+    pub cfg: &'a ExperimentConfig,
+    pub metrics: Arc<Metrics>,
+    pub opts: &'a RunOptions,
+}
+
+impl<'a> TrainCtx<'a> {
+    /// Epoch budget for this run (options override config).
+    pub fn epochs(&self) -> usize {
+        self.opts.epochs.unwrap_or(self.cfg.train.epochs)
+    }
+
+    /// Target metric for this run (options override config).
+    pub fn target(&self) -> f64 {
+        self.opts.target_accuracy.unwrap_or(self.cfg.train.target_accuracy)
+    }
+
+    pub fn cancelled(&self) -> bool {
+        self.opts.is_cancelled()
+    }
+
+    pub fn emit(&self, ev: RunEvent) {
+        self.opts.emit(ev);
+    }
+}
+
+/// One VFL training architecture, pluggable into the experiment runner.
+pub trait Trainer: Send + Sync {
+    /// Display name (matches `Architecture::name()` for built-ins).
+    fn name(&self) -> &'static str;
+    /// Run one training session over the prepared state.
+    fn train(&self, ctx: &TrainCtx<'_>) -> SessionResult;
+}
+
+/// The paper's contribution: the threaded Pub/Sub session.
+pub struct PubSubTrainer;
+
+impl Trainer for PubSubTrainer {
+    fn name(&self) -> &'static str {
+        Architecture::PubSub.name()
+    }
+
+    fn train(&self, ctx: &TrainCtx<'_>) -> SessionResult {
+        train_pubsub_session(ctx)
+    }
+}
+
+/// Classic lockstep split learning.
+pub struct VflTrainer;
+
+impl Trainer for VflTrainer {
+    fn name(&self) -> &'static str {
+        Architecture::Vfl.name()
+    }
+
+    fn train(&self, ctx: &TrainCtx<'_>) -> SessionResult {
+        baselines::train_vfl(ctx)
+    }
+}
+
+/// Synchronous per-round parameter-server pairing.
+pub struct VflPsTrainer;
+
+impl Trainer for VflPsTrainer {
+    fn name(&self) -> &'static str {
+        Architecture::VflPs.name()
+    }
+
+    fn train(&self, ctx: &TrainCtx<'_>) -> SessionResult {
+        baselines::train_vfl_ps(ctx)
+    }
+}
+
+/// Asynchronous exchange with bounded staleness, no PS.
+pub struct AvflTrainer;
+
+impl Trainer for AvflTrainer {
+    fn name(&self) -> &'static str {
+        Architecture::Avfl.name()
+    }
+
+    fn train(&self, ctx: &TrainCtx<'_>) -> SessionResult {
+        baselines::train_avfl(ctx)
+    }
+}
+
+/// Asynchronous exchange + per-epoch local-SGD parameter server.
+pub struct AvflPsTrainer;
+
+impl Trainer for AvflPsTrainer {
+    fn name(&self) -> &'static str {
+        Architecture::AvflPs.name()
+    }
+
+    fn train(&self, ctx: &TrainCtx<'_>) -> SessionResult {
+        baselines::train_avfl_ps(ctx)
+    }
+}
+
+/// Maps [`Architecture`] → [`Trainer`]. Cloning shares trainer instances.
+#[derive(Clone)]
+pub struct TrainerRegistry {
+    map: HashMap<Architecture, Arc<dyn Trainer>>,
+}
+
+impl TrainerRegistry {
+    /// Empty registry (no architectures runnable).
+    pub fn empty() -> TrainerRegistry {
+        TrainerRegistry { map: HashMap::new() }
+    }
+
+    /// All five built-in architectures.
+    pub fn with_defaults() -> TrainerRegistry {
+        let mut r = TrainerRegistry::empty();
+        r.register(Architecture::PubSub, Arc::new(PubSubTrainer));
+        r.register(Architecture::Vfl, Arc::new(VflTrainer));
+        r.register(Architecture::VflPs, Arc::new(VflPsTrainer));
+        r.register(Architecture::Avfl, Arc::new(AvflTrainer));
+        r.register(Architecture::AvflPs, Arc::new(AvflPsTrainer));
+        r
+    }
+
+    /// Register (or replace) the trainer driving `arch`.
+    pub fn register(&mut self, arch: Architecture, trainer: Arc<dyn Trainer>) {
+        self.map.insert(arch, trainer);
+    }
+
+    pub fn get(&self, arch: Architecture) -> Option<Arc<dyn Trainer>> {
+        self.map.get(&arch).cloned()
+    }
+}
+
+impl Default for TrainerRegistry {
+    fn default() -> TrainerRegistry {
+        TrainerRegistry::with_defaults()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_cover_all_architectures() {
+        let r = TrainerRegistry::with_defaults();
+        for arch in Architecture::ALL {
+            let t = r.get(arch).expect("registered");
+            assert_eq!(t.name(), arch.name());
+        }
+    }
+
+    #[test]
+    fn register_overrides() {
+        struct Custom;
+        impl Trainer for Custom {
+            fn name(&self) -> &'static str {
+                "custom"
+            }
+            fn train(&self, _ctx: &TrainCtx<'_>) -> SessionResult {
+                unimplemented!("never run in this test")
+            }
+        }
+        let mut r = TrainerRegistry::with_defaults();
+        r.register(Architecture::Vfl, Arc::new(Custom));
+        assert_eq!(r.get(Architecture::Vfl).unwrap().name(), "custom");
+        assert!(r.get(Architecture::PubSub).is_some());
+    }
+}

@@ -20,6 +20,12 @@
 //! `artifacts/*.hlo.txt` through PJRT (`runtime::XlaEngine`) and drives
 //! every training step itself. A pure-Rust `model::HostEngine` provides a
 //! numerics cross-check and powers the large parameter sweeps.
+//!
+//! The public entry point is the staged session API in [`experiment`]:
+//! `Experiment::builder().prepare()?.run_with(&RunOptions)` — prepare
+//! once (data + PSI + spec + engine), run many, with trait-based
+//! architecture dispatch ([`experiment::Trainer`]), streaming
+//! [`experiment::RunEvent`]s, and cooperative cancellation.
 
 pub mod attack;
 pub mod baselines;
@@ -29,6 +35,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod dp;
+pub mod experiment;
 pub mod jsonio;
 pub mod metrics;
 pub mod model;

@@ -15,8 +15,20 @@
 use hmac::{Hmac, Mac};
 use sha2::{Digest, Sha256};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 type HmacSha256 = Hmac<Sha256>;
+
+/// Process-wide count of PSI protocol executions ([`align`] +
+/// [`align_multi`]). PSI is the expensive prepare-stage step the staged
+/// experiment API amortizes; tests assert this stays flat across
+/// `PreparedExperiment` runs.
+static ALIGN_CALLS: AtomicUsize = AtomicUsize::new(0);
+
+/// How many times the PSI protocol has run in this process.
+pub fn align_call_count() -> usize {
+    ALIGN_CALLS.load(Ordering::Relaxed)
+}
 
 /// A party's private ID list (e.g. customer identifiers).
 #[derive(Clone, Debug)]
@@ -118,6 +130,7 @@ pub fn intersect(tokens_a: &[Token], tokens_b: &[Token]) -> Alignment {
 
 /// End-to-end two-party PSI: derive key, blind both sides, intersect.
 pub fn align(ids_a: &IdSet, ids_b: &IdSet, contrib_a: &[u8], contrib_b: &[u8]) -> Alignment {
+    ALIGN_CALLS.fetch_add(1, Ordering::Relaxed);
     let key = derive_key(contrib_a, contrib_b);
     let ta = blind(ids_a, &key);
     let tb = blind(ids_b, &key);
@@ -133,6 +146,7 @@ pub fn align_multi(
     passives: &[IdSet],
     contribs: &[Vec<u8>],
 ) -> (Vec<usize>, Vec<Vec<usize>>) {
+    ALIGN_CALLS.fetch_add(1, Ordering::Relaxed);
     assert_eq!(passives.len() + 1, contribs.len(), "one contribution per party");
     // Joint key over all contributions.
     let mut h = Sha256::new();

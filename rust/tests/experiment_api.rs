@@ -1,0 +1,162 @@
+//! The staged `Experiment` session API: builder validation, prepared
+//! reuse determinism, streaming run events, cancellation, and
+//! reconfigure guardrails. (PSI-reuse accounting lives in
+//! `prepare_reuse.rs` — it needs a process-private counter.)
+
+use pubsub_vfl::config::{Architecture, ExperimentConfig};
+use pubsub_vfl::experiment::{
+    CancelToken, Experiment, PreparedExperiment, RunEvent, RunOptions,
+};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+fn base_cfg(arch: Architecture) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.arch = arch;
+    cfg.dataset.name = "bank".into();
+    cfg.dataset.samples = 400;
+    cfg.train.batch_size = 32;
+    cfg.train.epochs = 3;
+    cfg.train.lr = 0.05;
+    cfg.train.target_accuracy = 2.0; // run all epochs
+    cfg.hidden = 16;
+    cfg.embed_dim = 8;
+    cfg.parties.active_workers = 2;
+    cfg.parties.passive_workers = 2;
+    cfg
+}
+
+fn prepare(arch: Architecture) -> PreparedExperiment {
+    Experiment::from_config(base_cfg(arch)).prepare().unwrap()
+}
+
+#[test]
+fn builder_rejects_invalid_configs() {
+    assert!(Experiment::builder().batch_size(0).prepare().is_err());
+    assert!(Experiment::builder().lr(-1.0).prepare().is_err());
+    assert!(Experiment::builder().workers(0, 2).prepare().is_err());
+    assert!(Experiment::builder().dataset("no-such-dataset").prepare().is_err());
+    // The same invariants hold when smuggled in through `tune`.
+    assert!(Experiment::builder().tune(|c| c.embed_dim = 0).prepare().is_err());
+}
+
+#[test]
+fn prepared_reuse_is_deterministic() {
+    // One PreparedExperiment, two runs, identical metrics under the
+    // fixed seed (VFL-PS is the fully deterministic path).
+    let prepared = prepare(Architecture::VflPs);
+    let a = prepared.run().unwrap();
+    let b = prepared.run().unwrap();
+    assert_eq!(a.report.metric, b.report.metric);
+    assert_eq!(a.session.loss_curve, b.session.loss_curve);
+    assert_eq!(a.session.metric_curve, b.session.metric_curve);
+}
+
+#[test]
+fn run_options_override_epochs_and_target() {
+    let prepared = prepare(Architecture::Vfl);
+    // Config says 3 epochs; the run options cut it to 1.
+    let o = prepared.run_with(&RunOptions::new().with_epochs(1)).unwrap();
+    assert_eq!(o.report.epochs, 1);
+    // A trivially reachable target stops after the first epoch.
+    let o = prepared
+        .run_with(&RunOptions::new().with_target_accuracy(0.5))
+        .unwrap();
+    assert!(o.session.reached_target);
+    assert_eq!(o.report.epochs, 1);
+    // The prepared config itself was not mutated by either run.
+    assert_eq!(prepared.config().train.epochs, 3);
+    assert_eq!(prepared.config().train.target_accuracy, 2.0);
+}
+
+#[test]
+fn events_stream_per_epoch() {
+    let prepared = prepare(Architecture::PubSub);
+    let events: Arc<Mutex<Vec<RunEvent>>> = Arc::new(Mutex::new(Vec::new()));
+    let sink = Arc::clone(&events);
+    let opts = RunOptions::new().with_observer(move |ev| sink.lock().unwrap().push(ev));
+    let o = prepared.run_with(&opts).unwrap();
+    let events = events.lock().unwrap();
+    let epoch_ends: Vec<_> = events
+        .iter()
+        .filter(|e| matches!(e, RunEvent::EpochEnd { .. }))
+        .collect();
+    assert_eq!(epoch_ends.len(), o.report.epochs);
+    // EpochEnd carries the same metrics as the session curves.
+    if let RunEvent::EpochEnd { epoch, metric, .. } = epoch_ends[0] {
+        assert_eq!(*epoch, 0);
+        assert_eq!(*metric, o.session.metric_curve[0].1);
+    }
+    // Eval events accompany every EpochEnd.
+    let evals = events.iter().filter(|e| matches!(e, RunEvent::Eval { .. })).count();
+    assert_eq!(evals, o.report.epochs);
+}
+
+#[test]
+fn cancel_token_stops_pubsub_mid_epoch() {
+    // A PubSub session with an effectively unbounded epoch budget must
+    // stop within one deadline period of cancellation.
+    let prepared = Experiment::from_config(base_cfg(Architecture::PubSub))
+        .epochs(10_000)
+        .tune(|c| c.train.t_ddl_ms = 2_000)
+        .prepare()
+        .unwrap();
+    let token = CancelToken::new();
+    let canceller = token.clone();
+    let h = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(150));
+        canceller.cancel();
+    });
+    let start = Instant::now();
+    let o = prepared
+        .run_with(&RunOptions::new().with_cancel(token))
+        .unwrap();
+    let elapsed = start.elapsed();
+    h.join().unwrap();
+    assert!(!o.session.reached_target);
+    assert!(
+        o.report.epochs < 10_000,
+        "cancelled run still reports {} epochs",
+        o.report.epochs
+    );
+    // Cancellation latency: well under one deadline period (2s) plus
+    // slack for the epoch teardown on a loaded CI box.
+    assert!(
+        elapsed < Duration::from_secs(8),
+        "cancel took {elapsed:?}, want << epoch budget"
+    );
+}
+
+#[test]
+fn reconfigure_rejects_data_signature_changes() {
+    let mut prepared = prepare(Architecture::Vfl);
+    assert!(prepared.reconfigure(|c| c.dataset.name = "credit".into()).is_err());
+    assert!(prepared.reconfigure(|c| c.dataset.samples = 999).is_err());
+    assert!(prepared.reconfigure(|c| c.seed = 1).is_err());
+    assert!(prepared.reconfigure(|c| c.passive_parties = 2).is_err());
+    // Invalid values are rejected too, and the prepared config is
+    // untouched by failed reconfigures.
+    assert!(prepared.reconfigure(|c| c.train.batch_size = 0).is_err());
+    assert_eq!(prepared.config().dataset.name, "bank");
+    assert_eq!(prepared.config().train.batch_size, 32);
+    // Training knobs remain reconfigurable after rejected attempts.
+    prepared.reconfigure(|c| c.train.lr = 0.01).unwrap();
+    assert_eq!(prepared.config().train.lr, 0.01);
+}
+
+#[test]
+fn arch_sweep_over_one_prepared_dataset() {
+    // The acceptance-criteria sweep: one prepare, >= 2 architectures run
+    // over the identical materialized data.
+    let mut prepared = prepare(Architecture::Vfl);
+    let mut metrics = Vec::new();
+    for arch in [Architecture::Vfl, Architecture::AvflPs, Architecture::PubSub] {
+        prepared.set_arch(arch).unwrap();
+        let o = prepared.run().unwrap();
+        assert_eq!(o.report.name, arch.name());
+        metrics.push(o.report.metric);
+    }
+    for (i, m) in metrics.iter().enumerate() {
+        assert!(*m > 0.6, "arch #{i} failed to learn: {m}");
+    }
+}

@@ -1,0 +1,51 @@
+//! Prepare-once/run-many accounting: one `PreparedExperiment` must not
+//! re-run dataset materialization or PSI across runs.
+//!
+//! This lives in its own integration-test binary (= its own process) so
+//! the process-global `psi::align_call_count()` is not perturbed by
+//! concurrent tests.
+
+use pubsub_vfl::config::Architecture;
+use pubsub_vfl::experiment::Experiment;
+use pubsub_vfl::psi;
+
+#[test]
+fn psi_and_data_run_once_across_runs_and_arch_sweeps() {
+    let before = psi::align_call_count();
+    let mut prepared = Experiment::builder()
+        .arch(Architecture::Vfl)
+        .dataset("bank")
+        .samples(400)
+        .batch_size(32)
+        .epochs(2)
+        .lr(0.05)
+        .target_accuracy(2.0)
+        .hidden(16)
+        .embed_dim(8)
+        .workers(2, 2)
+        .prepare()
+        .unwrap();
+    let after_prepare = psi::align_call_count();
+    assert_eq!(after_prepare, before + 1, "prepare runs PSI exactly once");
+
+    // Two runs + an architecture swap + a training-knob reconfigure:
+    // zero further PSI executions (and therefore zero re-materialization,
+    // which PSI gates).
+    let a = prepared.run().unwrap();
+    let b = prepared.run().unwrap();
+    prepared.set_arch(Architecture::PubSub).unwrap();
+    let c = prepared.run().unwrap();
+    prepared.reconfigure(|cfg| cfg.train.lr = 0.02).unwrap();
+    let d = prepared.run().unwrap();
+    assert_eq!(
+        psi::align_call_count(),
+        after_prepare,
+        "runs and reconfigures must not re-run PSI"
+    );
+
+    for (name, o) in [("run1", &a), ("run2", &b), ("pubsub", &c), ("lr-swap", &d)] {
+        assert!(o.report.metric > 0.55, "{name}: auc = {}", o.report.metric);
+    }
+    // Same prepared data + same seed + deterministic trainer ⇒ identical.
+    assert_eq!(a.report.metric, b.report.metric);
+}

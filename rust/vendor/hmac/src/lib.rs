@@ -1,0 +1,134 @@
+//! Minimal, dependency-free HMAC (RFC 2104) over the vendored `sha2`,
+//! implementing the slice of the RustCrypto `hmac`/`digest` API this
+//! workspace uses: `Hmac<Sha256>`, the `Mac` trait with
+//! `new_from_slice`/`update`/`finalize().into_bytes()`.
+//!
+//! SHA-256's 64-byte block size and 32-byte output are assumed (the only
+//! digest we ship).
+
+use sha2::Digest;
+
+/// Error type for `new_from_slice` (never returned here — any key length
+/// is valid for HMAC — but kept for API compatibility).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct InvalidLength;
+
+impl std::fmt::Display for InvalidLength {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("invalid HMAC key length")
+    }
+}
+
+impl std::error::Error for InvalidLength {}
+
+/// MAC output wrapper (API mirror of `CtOutput`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CtOutput(pub [u8; 32]);
+
+impl CtOutput {
+    pub fn into_bytes(self) -> [u8; 32] {
+        self.0
+    }
+}
+
+/// The `Mac` trait surface we rely on.
+pub trait Mac: Sized {
+    fn new_from_slice(key: &[u8]) -> Result<Self, InvalidLength>;
+    fn update(&mut self, data: &[u8]);
+    fn finalize(self) -> CtOutput;
+}
+
+const BLOCK: usize = 64;
+
+/// HMAC keyed over digest `D` (instantiated as `Hmac<Sha256>`).
+#[derive(Clone)]
+pub struct Hmac<D: Digest> {
+    inner: D,
+    opad_key: [u8; BLOCK],
+}
+
+impl<D: Digest> Mac for Hmac<D> {
+    fn new_from_slice(key: &[u8]) -> Result<Self, InvalidLength> {
+        let mut k = [0u8; BLOCK];
+        if key.len() > BLOCK {
+            let mut h = D::new();
+            h.update(key);
+            let digest: [u8; 32] = h.finalize().into();
+            k[..32].copy_from_slice(&digest);
+        } else {
+            k[..key.len()].copy_from_slice(key);
+        }
+        let mut ipad = [0u8; BLOCK];
+        let mut opad = [0u8; BLOCK];
+        for i in 0..BLOCK {
+            ipad[i] = k[i] ^ 0x36;
+            opad[i] = k[i] ^ 0x5c;
+        }
+        let mut inner = D::new();
+        inner.update(ipad);
+        Ok(Hmac { inner, opad_key: opad })
+    }
+
+    fn update(&mut self, data: &[u8]) {
+        self.inner.update(data);
+    }
+
+    fn finalize(self) -> CtOutput {
+        let inner_digest: [u8; 32] = self.inner.finalize().into();
+        let mut outer = D::new();
+        outer.update(self.opad_key);
+        outer.update(inner_digest);
+        CtOutput(outer.finalize().into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use sha2::Sha256;
+
+    fn hex(bytes: &[u8]) -> String {
+        bytes.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    fn hmac(key: &[u8], msg: &[u8]) -> String {
+        let mut m = Hmac::<Sha256>::new_from_slice(key).unwrap();
+        m.update(msg);
+        hex(&m.finalize().into_bytes())
+    }
+
+    #[test]
+    fn rfc4231_case_1() {
+        // Key = 20x 0x0b, msg = "Hi There".
+        assert_eq!(
+            hmac(&[0x0bu8; 20], b"Hi There"),
+            "b0344c61d8db38535ca8afceaf0bf12b881dc200c9833da726e9376c2e32cff7"
+        );
+    }
+
+    #[test]
+    fn rfc4231_case_2() {
+        assert_eq!(
+            hmac(b"Jefe", b"what do ya want for nothing?"),
+            "5bdcc146bf60754e6a042426089575c75a003f089d2739839dec58b964ec3843"
+        );
+    }
+
+    #[test]
+    fn long_key_is_hashed_first() {
+        // Key longer than the block size takes the hashed-key path.
+        assert_eq!(
+            hmac(
+                &[0xaau8; 131],
+                b"Test Using Larger Than Block-Size Key - Hash Key First"
+            ),
+            "60e431591ee0b67f0d8a26aacbf5b77f8e0bc6213728c5140546040f0ee37f54"
+        );
+    }
+
+    #[test]
+    fn distinct_keys_distinct_macs() {
+        assert_ne!(hmac(b"k1", b"m"), hmac(b"k2", b"m"));
+        assert_ne!(hmac(b"k1", b"m1"), hmac(b"k1", b"m2"));
+    }
+}

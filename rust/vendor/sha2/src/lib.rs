@@ -1,0 +1,289 @@
+//! Minimal, dependency-free SHA-256 implementing the slice of the
+//! RustCrypto `sha2`/`digest` API this workspace uses (`Sha256`, the
+//! `Digest` trait, 32-byte output convertible via `.into()`).
+//!
+//! The round constants are derived at first use from the fractional parts
+//! of the cube/square roots of the first primes (the FIPS 180-4
+//! definition) rather than transcribed, and the known-answer tests below
+//! pin the implementation to the standard vectors.
+
+use std::sync::OnceLock;
+
+/// The sha2 `Digest` trait surface we rely on.
+pub trait Digest: Sized {
+    fn new() -> Self;
+    fn update(&mut self, data: impl AsRef<[u8]>);
+    fn finalize(self) -> Output;
+}
+
+/// Fixed 32-byte digest output. `impl From<Output> for [u8; 32]` mirrors
+/// `GenericArray::into()` at the call sites.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Output(pub [u8; 32]);
+
+impl From<Output> for [u8; 32] {
+    fn from(o: Output) -> [u8; 32] {
+        o.0
+    }
+}
+
+impl std::ops::Deref for Output {
+    type Target = [u8; 32];
+    fn deref(&self) -> &[u8; 32] {
+        &self.0
+    }
+}
+
+impl AsRef<[u8]> for Output {
+    fn as_ref(&self) -> &[u8] {
+        &self.0
+    }
+}
+
+fn is_prime(n: u64) -> bool {
+    if n < 2 {
+        return false;
+    }
+    let mut d = 2;
+    while d * d <= n {
+        if n % d == 0 {
+            return false;
+        }
+        d += 1;
+    }
+    true
+}
+
+fn primes(count: usize) -> Vec<u64> {
+    let mut out = Vec::with_capacity(count);
+    let mut n = 2;
+    while out.len() < count {
+        if is_prime(n) {
+            out.push(n);
+        }
+        n += 1;
+    }
+    out
+}
+
+/// floor(sqrt(p) * 2^32) via exact integer binary search (no libm —
+/// platform math libraries do not guarantee correctly-rounded results).
+fn sqrt_frac_bits(p: u64) -> u32 {
+    // floor(sqrt(p << 64)): search x with x^2 <= p*2^64.
+    let n = (p as u128) << 64;
+    let (mut lo, mut hi) = (0u128, 1u128 << 40);
+    while lo + 1 < hi {
+        let mid = (lo + hi) / 2;
+        if mid * mid <= n {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo as u32 // low 32 bits = fractional part of sqrt(p) in 1/2^32 units
+}
+
+/// floor(cbrt(p) * 2^32) via exact integer binary search.
+fn cbrt_frac_bits(p: u64) -> u32 {
+    // floor(cbrt(p << 96)): search x with x^3 <= p*2^96 (x < 2^36).
+    let n = (p as u128) << 96;
+    let (mut lo, mut hi) = (0u128, 1u128 << 36);
+    while lo + 1 < hi {
+        let mid = (lo + hi) / 2;
+        if mid * mid * mid <= n {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo as u32
+}
+
+struct Consts {
+    h0: [u32; 8],
+    k: [u32; 64],
+}
+
+fn consts() -> &'static Consts {
+    static C: OnceLock<Consts> = OnceLock::new();
+    C.get_or_init(|| {
+        let ps = primes(64);
+        let mut h0 = [0u32; 8];
+        for (i, h) in h0.iter_mut().enumerate() {
+            *h = sqrt_frac_bits(ps[i]);
+        }
+        let mut k = [0u32; 64];
+        for (i, kk) in k.iter_mut().enumerate() {
+            *kk = cbrt_frac_bits(ps[i]);
+        }
+        // Pin the derivation to FIPS 180-4 at first use, on every
+        // platform — not just where the unit tests run.
+        assert_eq!(h0[0], 0x6a09e667, "SHA-256 H0 derivation broken");
+        assert_eq!(k[0], 0x428a2f98, "SHA-256 K derivation broken");
+        assert_eq!(k[63], 0xc67178f2, "SHA-256 K derivation broken");
+        Consts { h0, k }
+    })
+}
+
+/// Streaming SHA-256 state.
+#[derive(Clone)]
+pub struct Sha256 {
+    h: [u32; 8],
+    buf: [u8; 64],
+    buf_len: usize,
+    total_len: u64,
+}
+
+impl Sha256 {
+    fn compress(&mut self, block: &[u8; 64]) {
+        let k = &consts().k;
+        let mut w = [0u32; 64];
+        for (i, chunk) in block.chunks_exact(4).enumerate() {
+            w[i] = u32::from_be_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        for i in 16..64 {
+            let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+            let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+            w[i] = w[i - 16]
+                .wrapping_add(s0)
+                .wrapping_add(w[i - 7])
+                .wrapping_add(s1);
+        }
+        let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut hh] = self.h;
+        for i in 0..64 {
+            let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+            let ch = (e & f) ^ (!e & g);
+            let t1 = hh
+                .wrapping_add(s1)
+                .wrapping_add(ch)
+                .wrapping_add(k[i])
+                .wrapping_add(w[i]);
+            let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = s0.wrapping_add(maj);
+            hh = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+        self.h[0] = self.h[0].wrapping_add(a);
+        self.h[1] = self.h[1].wrapping_add(b);
+        self.h[2] = self.h[2].wrapping_add(c);
+        self.h[3] = self.h[3].wrapping_add(d);
+        self.h[4] = self.h[4].wrapping_add(e);
+        self.h[5] = self.h[5].wrapping_add(f);
+        self.h[6] = self.h[6].wrapping_add(g);
+        self.h[7] = self.h[7].wrapping_add(hh);
+    }
+}
+
+impl Digest for Sha256 {
+    fn new() -> Sha256 {
+        Sha256 { h: consts().h0, buf: [0u8; 64], buf_len: 0, total_len: 0 }
+    }
+
+    fn update(&mut self, data: impl AsRef<[u8]>) {
+        let mut data = data.as_ref();
+        self.total_len = self.total_len.wrapping_add(data.len() as u64);
+        if self.buf_len > 0 {
+            let take = (64 - self.buf_len).min(data.len());
+            self.buf[self.buf_len..self.buf_len + take].copy_from_slice(&data[..take]);
+            self.buf_len += take;
+            data = &data[take..];
+            if self.buf_len == 64 {
+                let block = self.buf;
+                self.compress(&block);
+                self.buf_len = 0;
+            }
+        }
+        while data.len() >= 64 {
+            let mut block = [0u8; 64];
+            block.copy_from_slice(&data[..64]);
+            self.compress(&block);
+            data = &data[64..];
+        }
+        if !data.is_empty() {
+            self.buf[..data.len()].copy_from_slice(data);
+            self.buf_len = data.len();
+        }
+    }
+
+    fn finalize(mut self) -> Output {
+        let bit_len = self.total_len.wrapping_mul(8);
+        self.update([0x80u8]);
+        while self.buf_len != 56 {
+            self.update([0u8]);
+        }
+        // The length block must not recount the padding bytes.
+        let mut block = self.buf;
+        block[56..64].copy_from_slice(&bit_len.to_be_bytes());
+        self.compress(&block);
+        let mut out = [0u8; 32];
+        for (i, word) in self.h.iter().enumerate() {
+            out[i * 4..i * 4 + 4].copy_from_slice(&word.to_be_bytes());
+        }
+        Output(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hex(bytes: &[u8]) -> String {
+        bytes.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    fn sha(data: &[u8]) -> String {
+        let mut h = Sha256::new();
+        h.update(data);
+        hex(&h.finalize().0)
+    }
+
+    #[test]
+    fn derived_constants_match_fips() {
+        let c = consts();
+        assert_eq!(c.h0[0], 0x6a09e667);
+        assert_eq!(c.h0[7], 0x5be0cd19);
+        assert_eq!(c.k[0], 0x428a2f98);
+        assert_eq!(c.k[63], 0xc67178f2);
+    }
+
+    #[test]
+    fn fips_vectors() {
+        assert_eq!(
+            sha(b""),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        assert_eq!(
+            sha(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        assert_eq!(
+            sha(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq"),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+    }
+
+    #[test]
+    fn streaming_equals_one_shot() {
+        let mut h = Sha256::new();
+        for chunk in [&b"ab"[..], b"c"] {
+            h.update(chunk);
+        }
+        assert_eq!(hex(&h.finalize().0), sha(b"abc"));
+        // Cross 64-byte block boundaries in odd steps.
+        let data: Vec<u8> = (0u8..=200).collect();
+        let mut h2 = Sha256::new();
+        for chunk in data.chunks(7) {
+            h2.update(chunk);
+        }
+        let mut h3 = Sha256::new();
+        h3.update(&data);
+        assert_eq!(h2.finalize(), h3.finalize());
+    }
+}

@@ -1,0 +1,203 @@
+//! API-compatible stub of the `xla` (PJRT) wrapper crate.
+//!
+//! Literal construction/marshaling is implemented for real (host-side
+//! byte buffers), so code and tests that only move data through
+//! `Literal` work unchanged. Anything that needs the native XLA runtime
+//! — `PjRtClient::cpu()`, HLO parsing, compilation, execution — returns
+//! [`Error::BackendUnavailable`], which callers already treat the same
+//! way as missing AOT artifacts: they fall back to the host engine.
+//!
+//! Swapping in the real PJRT backend is a one-line change to the `xla`
+//! path dependency in the root `Cargo.toml`; no call site changes.
+
+/// Stub error: every runtime entry point reports the backend is absent.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Error {
+    BackendUnavailable(&'static str),
+    InvalidArgument(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::BackendUnavailable(what) => write!(
+                f,
+                "{what}: XLA/PJRT backend not available (built with the vendored stub)"
+            ),
+            Error::InvalidArgument(m) => write!(f, "invalid argument: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element dtypes we marshal (F32 is the only one the workspace uses).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+}
+
+impl ElementType {
+    fn size_of(self) -> usize {
+        match self {
+            ElementType::F32 => 4,
+        }
+    }
+}
+
+/// Marker trait mapping Rust scalars to [`ElementType`].
+pub trait NativeType: Copy {
+    const ELEMENT_TYPE: ElementType;
+    fn from_le(bytes: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const ELEMENT_TYPE: ElementType = ElementType::F32;
+    fn from_le(bytes: [u8; 4]) -> f32 {
+        f32::from_le_bytes(bytes)
+    }
+}
+
+/// A host-side typed buffer with a shape — fully functional in the stub.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    element_type: ElementType,
+    dims: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        element_type: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let elems: usize = dims.iter().product();
+        if elems * element_type.size_of() != data.len() {
+            return Err(Error::InvalidArgument(format!(
+                "shape {dims:?} wants {} bytes, got {}",
+                elems * element_type.size_of(),
+                data.len()
+            )));
+        }
+        Ok(Literal { element_type, dims: dims.to_vec(), data: data.to_vec() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.element_type != T::ELEMENT_TYPE {
+            return Err(Error::InvalidArgument(format!(
+                "literal is {:?}, requested {:?}",
+                self.element_type,
+                T::ELEMENT_TYPE
+            )));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| T::from_le([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.element_type
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Tuple decomposition — stub literals are never tuples.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::BackendUnavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module handle (never constructible at runtime in the stub).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::BackendUnavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Computation wrapper.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::BackendUnavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::BackendUnavailable("PjRtClient::compile"))
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::BackendUnavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::BackendUnavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let v = [1.0f32, -2.5, 3.25, 0.0];
+        let bytes: Vec<u8> = v.iter().flat_map(|x| x.to_le_bytes()).collect();
+        let l =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2, 2], &bytes).unwrap();
+        assert_eq!(l.dims(), &[2, 2]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), v);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let r = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &[0u8; 8]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn runtime_paths_report_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
