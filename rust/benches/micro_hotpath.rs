@@ -30,6 +30,7 @@ fn main() {
             broker.publish_embedding(EmbeddingMsg {
                 batch_id: 1,
                 party: 0,
+                generation: 0,
                 z: z.clone(),
                 produced_at: Instant::now(),
                 param_version: 0,
@@ -41,6 +42,7 @@ fn main() {
             broker.publish_gradient(GradientMsg {
                 batch_id: 1,
                 party: 0,
+                generation: 0,
                 grad_z: z.clone(),
                 produced_at: Instant::now(),
                 loss: 0.0,
@@ -62,6 +64,7 @@ fn main() {
                             b.publish_embedding(EmbeddingMsg {
                                 batch_id: t * 1000 + i,
                                 party: 0,
+                                generation: 0,
                                 z: Matrix::zeros(8, 8),
                                 produced_at: Instant::now(),
                                 param_version: 0,

@@ -1,7 +1,14 @@
 //! The message broker: embedding + gradient topics (per passive party)
 //! with comm accounting — the middleware box of Fig. 2.
+//!
+//! The broker enforces the generation discipline of the batch lifecycle:
+//! publishes are versioned by the message's ledger generation (stale
+//! generations are rejected at the door), and [`Broker::purge_stale`]
+//! removes superseded messages for a batch after a reassignment so a
+//! retried batch can never be joined against leftovers of an earlier
+//! attempt.
 
-use super::channel::{SubResult, Topic};
+use super::channel::{Publish, SubResult, Topic};
 use super::messages::{EmbeddingMsg, GradientMsg};
 use crate::metrics::Metrics;
 use std::sync::Arc;
@@ -28,18 +35,26 @@ impl Broker {
         }
     }
 
-    /// Passive party `party` publishes an embedding. Returns an evicted
-    /// batch ID if the buffer mechanism fired.
-    pub fn publish_embedding(&self, msg: EmbeddingMsg) -> Option<u64> {
+    /// Passive party `party` publishes an embedding. Returns the
+    /// `(batch_id, generation)` evicted by the buffer mechanism, if the
+    /// topic was full; a stale-generation publish is rejected and `None`
+    /// is returned.
+    pub fn publish_embedding(&self, msg: EmbeddingMsg) -> Option<(u64, u64)> {
         self.metrics.add_comm(msg.bytes());
         self.metrics.inc("emb_published", 1);
         let party = msg.party;
         let id = msg.batch_id;
-        let evicted = self.emb[party].publish(id, msg);
-        if evicted.is_some() {
-            self.metrics.inc("emb_dropped", 1);
+        match self.emb[party].publish_versioned(id, msg, |m| m.generation) {
+            Publish::Evicted(old_id, old) => {
+                self.metrics.inc("emb_dropped", 1);
+                Some((old_id, old.generation))
+            }
+            Publish::Stale(_) => {
+                self.metrics.inc("emb_rejected_stale", 1);
+                None
+            }
+            Publish::Stored => None,
         }
-        evicted
     }
 
     /// Active worker takes any ready embedding from `party`'s topic.
@@ -47,17 +62,24 @@ impl Broker {
         self.emb[party].subscribe_any(ddl)
     }
 
-    /// Active worker publishes the cut-layer gradient back.
-    pub fn publish_gradient(&self, msg: GradientMsg) -> Option<u64> {
+    /// Active worker publishes the cut-layer gradient back. Returns the
+    /// `(batch_id, generation)` evicted by the buffer mechanism, if any.
+    pub fn publish_gradient(&self, msg: GradientMsg) -> Option<(u64, u64)> {
         self.metrics.add_comm(msg.bytes());
         self.metrics.inc("grad_published", 1);
         let party = msg.party;
         let id = msg.batch_id;
-        let evicted = self.grad[party].publish(id, msg);
-        if evicted.is_some() {
-            self.metrics.inc("grad_dropped", 1);
+        match self.grad[party].publish_versioned(id, msg, |m| m.generation) {
+            Publish::Evicted(old_id, old) => {
+                self.metrics.inc("grad_dropped", 1);
+                Some((old_id, old.generation))
+            }
+            Publish::Stale(_) => {
+                self.metrics.inc("grad_rejected_stale", 1);
+                None
+            }
+            Publish::Stored => None,
         }
-        evicted
     }
 
     /// Passive worker takes any ready gradient for its party.
@@ -65,16 +87,25 @@ impl Broker {
         self.grad[party].subscribe_any(ddl)
     }
 
-    /// Batch IDs evicted from either topic since last drain (reassign).
-    pub fn drain_dropped(&self) -> Vec<u64> {
-        let mut out = Vec::new();
+    /// After `batch_id` was reassigned at `current_gen`, drop every
+    /// buffered message for it from an older generation (both directions,
+    /// all parties). Returns how many messages were purged.
+    pub fn purge_stale(&self, batch_id: u64, current_gen: u64) -> usize {
+        let mut purged = 0;
         for t in &self.emb {
-            out.extend(t.take_dropped());
+            if t.purge_if(batch_id, |m| m.generation != current_gen) {
+                purged += 1;
+            }
         }
         for t in &self.grad {
-            out.extend(t.take_dropped());
+            if t.purge_if(batch_id, |m| m.generation != current_gen) {
+                purged += 1;
+            }
         }
-        out
+        if purged > 0 {
+            self.metrics.inc("purged_stale", purged as u64);
+        }
+        purged
     }
 
     /// Close all topics (end of training).
@@ -87,7 +118,8 @@ impl Broker {
         }
     }
 
-    /// Reset all topics for a new epoch.
+    /// Reset all topics at an epoch boundary (anything still buffered is
+    /// stale by construction once the epoch's ledger is fully drained).
     pub fn reset(&self) {
         for t in &self.emb {
             t.reset();
@@ -105,9 +137,14 @@ mod tests {
     use std::time::Instant;
 
     fn emb(id: u64) -> EmbeddingMsg {
+        emb_gen(id, 0)
+    }
+
+    fn emb_gen(id: u64, generation: u64) -> EmbeddingMsg {
         EmbeddingMsg {
             batch_id: id,
             party: 0,
+            generation,
             z: Matrix::zeros(2, 4),
             produced_at: Instant::now(),
             param_version: 0,
@@ -126,13 +163,42 @@ mod tests {
     }
 
     #[test]
-    fn eviction_counted_and_drained() {
+    fn eviction_returns_victim_id_and_generation() {
         let m = Arc::new(Metrics::new());
         let b = Broker::new(1, 1, 1, m.clone());
-        b.publish_embedding(emb(1));
-        b.publish_embedding(emb(2)); // evicts 1
+        assert_eq!(b.publish_embedding(emb_gen(1, 3)), None);
+        assert_eq!(b.publish_embedding(emb_gen(2, 5)), Some((1, 3))); // evicts 1
         assert_eq!(m.counter("emb_dropped"), 1);
-        assert_eq!(b.drain_dropped(), vec![1]);
+    }
+
+    #[test]
+    fn stale_generation_rejected_at_publish() {
+        let m = Arc::new(Metrics::new());
+        let b = Broker::new(1, 4, 4, m.clone());
+        b.publish_embedding(emb_gen(1, 4));
+        assert_eq!(b.publish_embedding(emb_gen(1, 2)), None);
+        assert_eq!(m.counter("emb_rejected_stale"), 1);
+        // The buffered generation-4 message survived.
+        match b.take_embedding(0, Duration::from_millis(5)) {
+            SubResult::Ok((1, msg)) => assert_eq!(msg.generation, 4),
+            other => panic!("expected generation-4 message, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn purge_stale_drops_old_generations_only() {
+        let m = Arc::new(Metrics::new());
+        let b = Broker::new(2, 4, 4, m.clone());
+        b.publish_embedding(emb_gen(7, 1));
+        let mut sibling = emb_gen(7, 2);
+        sibling.party = 1;
+        b.publish_embedding(sibling);
+        // Batch 7 reassigned at generation 2: party 0's gen-1 leftover is
+        // purged, party 1's current-gen message survives.
+        assert_eq!(b.purge_stale(7, 2), 1);
+        assert_eq!(m.counter("purged_stale"), 1);
+        assert!(matches!(b.take_embedding(0, Duration::from_millis(1)), SubResult::TimedOut));
+        assert!(matches!(b.take_embedding(1, Duration::from_millis(5)), SubResult::Ok((7, _))));
     }
 
     #[test]

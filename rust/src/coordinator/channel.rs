@@ -3,9 +3,18 @@
 //!
 //! - **Buffer mechanism**: each topic buffers at most `capacity` messages;
 //!   on overflow the *oldest* entry is discarded FIFO (stale updates must
-//!   not poison training) and its batch ID is queued for reassignment.
+//!   not poison training) and the evicted message is handed back to the
+//!   publisher so the session can reassign its batch.
 //! - **Waiting deadline**: subscribers block at most `T_ddl`; on expiry
 //!   they give up on the batch so the session can reassign it.
+//!
+//! Topics are long-lived: one set of channels serves the whole training
+//! session (the persistent worker pool publishes and subscribes across
+//! epoch boundaries). Re-publishing an already-buffered batch ID replaces
+//! the message in place — it never duplicates the FIFO order and never
+//! triggers an eviction — and [`Topic::publish_versioned`] additionally
+//! rejects messages older than the buffered one, which is how stale
+//! generations are kept out of the channels.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Condvar, Mutex};
@@ -22,13 +31,24 @@ pub enum SubResult<T> {
     Closed,
 }
 
+/// Outcome of a publish call.
+#[derive(Debug, PartialEq)]
+pub enum Publish<T> {
+    /// Stored; nothing was displaced.
+    Stored,
+    /// Stored; the buffer mechanism evicted this other (batch ID, message).
+    Evicted(u64, T),
+    /// Rejected: a newer-version message for this batch ID is already
+    /// buffered. The offered message is returned untouched.
+    Stale(T),
+}
+
 struct TopicState<T> {
     /// batch_id → message.
     map: HashMap<u64, T>,
-    /// Publication order for FIFO eviction.
+    /// Publication order for FIFO eviction. May contain ghost entries for
+    /// IDs already taken by `subscribe`/`purge_if`; readers skip them.
     order: VecDeque<u64>,
-    /// Batch IDs evicted by the buffer mechanism, pending reassignment.
-    dropped: Vec<u64>,
     closed: bool,
 }
 
@@ -47,7 +67,6 @@ impl<T> Topic<T> {
             state: Mutex::new(TopicState {
                 map: HashMap::new(),
                 order: VecDeque::new(),
-                dropped: Vec::new(),
                 closed: false,
             }),
             cv: Condvar::new(),
@@ -60,17 +79,43 @@ impl<T> Topic<T> {
         self.name
     }
 
-    /// Publish a message under `batch_id`. Returns the batch ID evicted by
-    /// the buffer mechanism, if the topic was full.
-    pub fn publish(&self, batch_id: u64, msg: T) -> Option<u64> {
+    /// Publish a message under `batch_id` (unversioned: a re-publish of a
+    /// buffered ID always replaces it in place).
+    pub fn publish(&self, batch_id: u64, msg: T) -> Publish<T> {
+        self.publish_versioned(batch_id, msg, |_| 0)
+    }
+
+    /// Publish a message under `batch_id`, with staleness protection: if
+    /// the ID is already buffered, the message replaces it in place (no
+    /// duplicate `order` entry, no eviction) unless `version` ranks it
+    /// below the buffered one, in which case it is rejected as stale.
+    /// Returns the (batch ID, message) evicted by the buffer mechanism if
+    /// the topic was full.
+    pub fn publish_versioned(
+        &self,
+        batch_id: u64,
+        msg: T,
+        version: impl Fn(&T) -> u64,
+    ) -> Publish<T> {
         let mut s = self.state.lock().unwrap();
+        if let Some(existing) = s.map.get(&batch_id) {
+            if version(&msg) < version(existing) {
+                return Publish::Stale(msg);
+            }
+            // In-place replacement: the ID keeps its single `order` slot,
+            // and a full topic must not evict (least of all the entry
+            // being replaced).
+            s.map.insert(batch_id, msg);
+            drop(s);
+            self.cv.notify_all();
+            return Publish::Stored;
+        }
         let mut evicted = None;
         if s.map.len() >= self.capacity {
-            // FIFO drop-oldest.
+            // FIFO drop-oldest (skipping ghost order entries).
             while let Some(old) = s.order.pop_front() {
-                if s.map.remove(&old).is_some() {
-                    s.dropped.push(old);
-                    evicted = Some(old);
+                if let Some(m) = s.map.remove(&old) {
+                    evicted = Some((old, m));
                     break;
                 }
             }
@@ -79,7 +124,10 @@ impl<T> Topic<T> {
         s.order.push_back(batch_id);
         drop(s);
         self.cv.notify_all();
-        evicted
+        match evicted {
+            Some((id, m)) => Publish::Evicted(id, m),
+            None => Publish::Stored,
+        }
     }
 
     /// Take any available message (FIFO order), waiting up to `deadline`.
@@ -92,7 +140,7 @@ impl<T> Topic<T> {
                 if let Some(msg) = s.map.remove(&id) {
                     return SubResult::Ok((id, msg));
                 }
-                continue; // already evicted; try next
+                continue; // ghost entry (taken or purged); try next
             }
             if s.closed {
                 return SubResult::Closed;
@@ -113,7 +161,8 @@ impl<T> Topic<T> {
     }
 
     /// Take the message for a *specific* batch ID, waiting up to `deadline`
-    /// (the strict ID-aligned mode used by the "w/o PubSub" ablation).
+    /// (the ID-aligned mode the active workers use to join sibling
+    /// embeddings).
     pub fn subscribe(&self, batch_id: u64, deadline: Duration) -> SubResult<T> {
         let start = Instant::now();
         let mut s = self.state.lock().unwrap();
@@ -136,9 +185,18 @@ impl<T> Topic<T> {
         }
     }
 
-    /// Drain the batch IDs evicted since the last call (for reassignment).
-    pub fn take_dropped(&self) -> Vec<u64> {
-        std::mem::take(&mut self.state.lock().unwrap().dropped)
+    /// Remove the buffered message for `batch_id` if `pred` holds for it
+    /// (used to purge stale generations after a batch reassignment).
+    /// Returns whether a message was removed.
+    pub fn purge_if(&self, batch_id: u64, pred: impl FnOnce(&T) -> bool) -> bool {
+        let mut s = self.state.lock().unwrap();
+        match s.map.get(&batch_id) {
+            Some(msg) if pred(msg) => {
+                s.map.remove(&batch_id);
+                true
+            }
+            _ => false,
+        }
     }
 
     /// Number of buffered messages.
@@ -156,12 +214,12 @@ impl<T> Topic<T> {
         self.cv.notify_all();
     }
 
-    /// Reset for a new epoch (buffers cleared, reopened).
+    /// Clear all buffered messages (epoch-boundary hygiene: anything left
+    /// over is a stale generation by construction) and reopen.
     pub fn reset(&self) {
         let mut s = self.state.lock().unwrap();
         s.map.clear();
         s.order.clear();
-        s.dropped.clear();
         s.closed = false;
     }
 }
@@ -193,15 +251,65 @@ mod tests {
     #[test]
     fn buffer_mechanism_drops_oldest() {
         let t: Topic<u32> = Topic::new("emb", 2);
-        assert_eq!(t.publish(1, 10), None);
-        assert_eq!(t.publish(2, 20), None);
-        assert_eq!(t.publish(3, 30), Some(1)); // oldest evicted
+        assert_eq!(t.publish(1, 10), Publish::Stored);
+        assert_eq!(t.publish(2, 20), Publish::Stored);
+        assert_eq!(t.publish(3, 30), Publish::Evicted(1, 10)); // oldest evicted
         assert_eq!(t.len(), 2);
-        assert_eq!(t.take_dropped(), vec![1]);
-        assert!(t.take_dropped().is_empty());
         // 1 is gone; 2 and 3 remain.
         assert_eq!(t.subscribe(1, Duration::from_millis(1)), SubResult::TimedOut);
         assert_eq!(t.subscribe(2, Duration::from_millis(1)), SubResult::Ok(20));
+    }
+
+    #[test]
+    fn republish_replaces_in_place_without_eviction() {
+        // Regression: publishing an already-buffered ID used to duplicate
+        // it in `order` and, at capacity, could evict a live entry (or the
+        // batch itself), leaving it both reassigned and consumable.
+        let t: Topic<u32> = Topic::new("emb", 2);
+        t.publish(1, 10);
+        t.publish(2, 20);
+        // At capacity: re-publish of ID 1 must not evict anything.
+        assert_eq!(t.publish(1, 11), Publish::Stored);
+        assert_eq!(t.len(), 2);
+        // Each ID is delivered exactly once, with the replaced payload.
+        assert_eq!(t.subscribe_any(Duration::from_millis(5)), SubResult::Ok((1, 11)));
+        assert_eq!(t.subscribe_any(Duration::from_millis(5)), SubResult::Ok((2, 20)));
+        assert_eq!(t.subscribe_any(Duration::from_millis(1)), SubResult::TimedOut);
+    }
+
+    #[test]
+    fn republish_at_capacity_one_does_not_self_evict() {
+        let t: Topic<u32> = Topic::new("emb", 1);
+        t.publish(7, 70);
+        assert_eq!(t.publish(7, 71), Publish::Stored);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.subscribe(7, Duration::from_millis(5)), SubResult::Ok(71));
+    }
+
+    #[test]
+    fn versioned_publish_rejects_stale() {
+        let t: Topic<(u64, u32)> = Topic::new("emb", 4);
+        let ver = |m: &(u64, u32)| m.0;
+        assert_eq!(t.publish_versioned(1, (3, 30), ver), Publish::Stored);
+        // Older generation for the same ID is rejected untouched.
+        assert_eq!(t.publish_versioned(1, (2, 20), ver), Publish::Stale((2, 20)));
+        // Same or newer generation replaces.
+        assert_eq!(t.publish_versioned(1, (4, 40), ver), Publish::Stored);
+        assert_eq!(t.subscribe(1, Duration::from_millis(5)), SubResult::Ok((4, 40)));
+    }
+
+    #[test]
+    fn purge_if_removes_matching_message() {
+        let t: Topic<u32> = Topic::new("emb", 4);
+        t.publish(1, 10);
+        assert!(!t.purge_if(1, |&m| m > 50)); // predicate false: kept
+        assert!(t.purge_if(1, |&m| m == 10));
+        assert!(!t.purge_if(1, |_| true)); // already gone
+        assert_eq!(t.subscribe(1, Duration::from_millis(1)), SubResult::TimedOut);
+        // A purged ID can be republished and delivered exactly once.
+        t.publish(1, 12);
+        assert_eq!(t.subscribe_any(Duration::from_millis(5)), SubResult::Ok((1, 12)));
+        assert_eq!(t.subscribe_any(Duration::from_millis(1)), SubResult::TimedOut);
     }
 
     #[test]

@@ -1,0 +1,544 @@
+//! The epoch-scoped batch ledger: an exactly-once state machine for the
+//! §4.1 batch lifecycle.
+//!
+//! Every batch moves through
+//!
+//! ```text
+//! Queued ──publish(party)──▶ Published ──join──▶ Joined ──step──▶ Stepped ──bwd×k──▶ Done
+//!    ▲                                                               │
+//!    └────────────── requeue_all (generation += 1) ◀─────────────────┘
+//! ```
+//!
+//! and carries a **generation** token — a session-monotonic counter
+//! bumped on every reassignment (deadline expiry, buffer eviction of a
+//! gradient, join failure). Messages in the broker are tagged with the
+//! generation they were produced for; consumers validate against the
+//! ledger before doing work, so a retried batch can never be trained
+//! twice and `remaining_bwd` can never underflow:
+//!
+//! - [`BatchLedger::begin_join`] is a compare-and-claim: only one active
+//!   worker can ever step a given generation of a batch.
+//! - [`BatchLedger::claim_bwd`] counts each `(batch, party)` backward
+//!   pass exactly once per epoch, across any number of retries
+//!   (`bwd_done` flags survive [`BatchLedger::requeue_all`]).
+//! - [`BatchLedger::requeue_party`] handles embedding-buffer evictions
+//!   without a generation bump (the message never reached a consumer), so
+//!   sibling embeddings already buffered stay valid.
+//!
+//! The ledger is also the work queue of the persistent worker pool: the
+//! epoch supervisor installs each epoch's batch plan with
+//! [`BatchLedger::install_epoch`] and the (session-lived) workers pull
+//! embed jobs from it, so no threads are spawned or torn down at epoch
+//! boundaries.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+/// Lifecycle stage of one batch within the current epoch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchStage {
+    /// Waiting to be embedded (initial state, and after a full requeue).
+    Queued,
+    /// At least one party has published an embedding for the current
+    /// generation.
+    Published,
+    /// An active worker holds the join claim for the current generation.
+    Joined,
+    /// The active step ran; cut-layer gradients are being published.
+    Stepped,
+    /// All `k` passive backward passes are accounted for.
+    Done,
+}
+
+/// A unit of embedding work handed to a passive worker.
+#[derive(Clone, Debug)]
+pub struct EmbedJob {
+    pub batch_id: u64,
+    /// Generation the work is valid for; checked again at publish time.
+    pub generation: u64,
+    pub rows: Arc<Vec<usize>>,
+}
+
+struct Entry {
+    generation: u64,
+    stage: BatchStage,
+    /// Per-party: has the current generation been published?
+    published: Vec<bool>,
+    /// Per-party: is the batch currently sitting in the party's queue?
+    /// (Dedupes requeues so retry storms cannot bloat the queues.)
+    queued: Vec<bool>,
+    /// Per-party: has the backward pass been counted? Survives requeues —
+    /// this is the exactly-once guarantee.
+    bwd_done: Vec<bool>,
+    rows: Arc<Vec<usize>>,
+}
+
+struct LedgerState {
+    epoch: usize,
+    /// Session-monotonic generation counter (never reused, even across
+    /// epochs, so no in-flight message can alias a later attempt).
+    gen_seq: u64,
+    entries: HashMap<u64, Entry>,
+    /// Per-party production queues (batch IDs to embed).
+    queues: Vec<VecDeque<u64>>,
+    /// Backward passes still owed this epoch (`n_batches × k` at install).
+    remaining_bwd: usize,
+    /// Genuine reassignments (requeues) across the session.
+    retried: usize,
+}
+
+/// Thread-safe exactly-once ledger shared by the supervisor and the
+/// persistent worker pool.
+pub struct BatchLedger {
+    k: usize,
+    state: Mutex<LedgerState>,
+}
+
+impl BatchLedger {
+    /// A ledger for `k` passive parties, with no epoch installed yet.
+    pub fn new(k: usize) -> BatchLedger {
+        assert!(k >= 1);
+        BatchLedger {
+            k,
+            state: Mutex::new(LedgerState {
+                epoch: 0,
+                gen_seq: 0,
+                entries: HashMap::new(),
+                queues: (0..k).map(|_| VecDeque::new()).collect(),
+                remaining_bwd: 0,
+                retried: 0,
+            }),
+        }
+    }
+
+    /// Install a new epoch's batch plan: every batch starts `Queued` on
+    /// every party with a fresh generation; `remaining_bwd` is armed to
+    /// `batches.len() × k`. Replaces any previous epoch state outright.
+    pub fn install_epoch(&self, epoch: usize, batches: &[(u64, Arc<Vec<usize>>)]) {
+        let mut s = self.state.lock().unwrap();
+        s.epoch = epoch;
+        s.entries.clear();
+        for q in &mut s.queues {
+            q.clear();
+        }
+        for (id, rows) in batches {
+            s.gen_seq += 1;
+            let generation = s.gen_seq;
+            s.entries.insert(
+                *id,
+                Entry {
+                    generation,
+                    stage: BatchStage::Queued,
+                    published: vec![false; self.k],
+                    queued: vec![true; self.k],
+                    bwd_done: vec![false; self.k],
+                    rows: Arc::clone(rows),
+                },
+            );
+            for q in &mut s.queues {
+                q.push_back(*id);
+            }
+        }
+        s.remaining_bwd = batches.len() * self.k;
+    }
+
+    /// Number of passive parties the ledger tracks.
+    pub fn parties(&self) -> usize {
+        self.k
+    }
+
+    /// Current epoch index.
+    pub fn epoch(&self) -> usize {
+        self.state.lock().unwrap().epoch
+    }
+
+    /// Backward passes still owed this epoch.
+    pub fn remaining_bwd(&self) -> usize {
+        self.state.lock().unwrap().remaining_bwd
+    }
+
+    /// Has the current epoch fully drained?
+    pub fn epoch_done(&self) -> bool {
+        self.remaining_bwd() == 0
+    }
+
+    /// Genuine reassignments across the session so far.
+    pub fn retried(&self) -> usize {
+        self.state.lock().unwrap().retried
+    }
+
+    /// Current generation of a batch (tests/diagnostics).
+    pub fn generation(&self, batch_id: u64) -> Option<u64> {
+        self.state.lock().unwrap().entries.get(&batch_id).map(|e| e.generation)
+    }
+
+    /// Current stage of a batch (tests/diagnostics).
+    pub fn stage(&self, batch_id: u64) -> Option<BatchStage> {
+        self.state.lock().unwrap().entries.get(&batch_id).map(|e| e.stage)
+    }
+
+    /// Pop the next embed job for `party`, skipping batches that finished
+    /// while queued (stale requeue leftovers).
+    pub fn next_embed_job(&self, party: usize) -> Option<EmbedJob> {
+        let mut s = self.state.lock().unwrap();
+        while let Some(id) = s.queues[party].pop_front() {
+            let Some(e) = s.entries.get_mut(&id) else { continue };
+            e.queued[party] = false;
+            if e.stage == BatchStage::Done {
+                continue;
+            }
+            return Some(EmbedJob {
+                batch_id: id,
+                generation: e.generation,
+                rows: Arc::clone(&e.rows),
+            });
+        }
+        None
+    }
+
+    /// Gate an embedding publish: succeeds only if `generation` is still
+    /// current and the batch has not already been stepped. On success the
+    /// party is marked published and the stage advances to `Published`.
+    pub fn begin_publish(&self, batch_id: u64, generation: u64, party: usize) -> bool {
+        let mut s = self.state.lock().unwrap();
+        let Some(e) = s.entries.get_mut(&batch_id) else { return false };
+        if e.generation != generation
+            || matches!(e.stage, BatchStage::Stepped | BatchStage::Done)
+        {
+            return false;
+        }
+        e.published[party] = true;
+        if e.stage == BatchStage::Queued {
+            e.stage = BatchStage::Published;
+        }
+        true
+    }
+
+    /// Claim the join for `(batch_id, generation)`: the compare-and-claim
+    /// that makes the active step exactly-once per generation. Returns the
+    /// batch's row set on success.
+    pub fn begin_join(&self, batch_id: u64, generation: u64) -> Option<Arc<Vec<usize>>> {
+        let mut s = self.state.lock().unwrap();
+        let e = s.entries.get_mut(&batch_id)?;
+        if e.generation != generation || e.stage != BatchStage::Published {
+            return None;
+        }
+        e.stage = BatchStage::Joined;
+        Some(Arc::clone(&e.rows))
+    }
+
+    /// Record that the active step for the claimed generation ran.
+    pub fn mark_stepped(&self, batch_id: u64, generation: u64) -> bool {
+        let mut s = self.state.lock().unwrap();
+        let Some(e) = s.entries.get_mut(&batch_id) else { return false };
+        if e.generation != generation || e.stage != BatchStage::Joined {
+            return false;
+        }
+        e.stage = BatchStage::Stepped;
+        true
+    }
+
+    /// Claim the backward pass for `(batch_id, party)`. Claims exactly
+    /// once per epoch: a stale generation or an already-claimed party is
+    /// rejected. Returns the batch's row set on success. The claim only
+    /// reserves the work — call [`BatchLedger::finish_bwd`] once the
+    /// update has actually been applied, so the epoch cannot be declared
+    /// drained (and the PS barrier run) while the last backward pass is
+    /// still computing.
+    pub fn claim_bwd(
+        &self,
+        batch_id: u64,
+        generation: u64,
+        party: usize,
+    ) -> Option<Arc<Vec<usize>>> {
+        let mut s = self.state.lock().unwrap();
+        let e = s.entries.get_mut(&batch_id)?;
+        if e.generation != generation || e.bwd_done[party] {
+            return None;
+        }
+        e.bwd_done[party] = true;
+        let rows = Arc::clone(&e.rows);
+        if e.bwd_done.iter().all(|&d| d) {
+            e.stage = BatchStage::Done;
+        }
+        Some(rows)
+    }
+
+    /// Credit a backward pass claimed via [`BatchLedger::claim_bwd`] after
+    /// its update landed in the worker replica. Must be called exactly
+    /// once per successful claim.
+    pub fn finish_bwd(&self) {
+        let mut s = self.state.lock().unwrap();
+        debug_assert!(s.remaining_bwd > 0, "finish_bwd without a matching claim");
+        s.remaining_bwd = s.remaining_bwd.saturating_sub(1);
+    }
+
+    /// Reassign a batch on a single party after its (unconsumed) embedding
+    /// was evicted by the buffer mechanism. No generation bump: the
+    /// message never reached a consumer, and sibling embeddings already
+    /// buffered must stay valid. Counts as one retry. Returns whether the
+    /// batch was actually requeued.
+    pub fn requeue_party(&self, party: usize, batch_id: u64, generation: u64) -> bool {
+        let mut s = self.state.lock().unwrap();
+        let Some(e) = s.entries.get_mut(&batch_id) else { return false };
+        if e.generation != generation || e.stage == BatchStage::Done || e.queued[party] {
+            return false;
+        }
+        e.published[party] = false;
+        e.queued[party] = true;
+        s.queues[party].push_back(batch_id);
+        s.retried += 1;
+        true
+    }
+
+    /// Fully reassign a batch (join failure, deadline expiry, or a
+    /// gradient evicted by the buffer mechanism): bump the generation —
+    /// invalidating every in-flight message of the old attempt — and
+    /// requeue the batch on all parties. `bwd_done` flags survive, so
+    /// parties that already applied their backward pass will drop the
+    /// retried attempt's duplicate gradients. Counts as one retry.
+    /// Returns the new generation, or `None` if the batch was already
+    /// done or `generation` was stale (someone else requeued first).
+    pub fn requeue_all(&self, batch_id: u64, generation: u64) -> Option<u64> {
+        let mut s = self.state.lock().unwrap();
+        let next_gen = s.gen_seq + 1;
+        let e = s.entries.get_mut(&batch_id)?;
+        if e.generation != generation || e.stage == BatchStage::Done {
+            return None;
+        }
+        e.generation = next_gen;
+        e.stage = BatchStage::Queued;
+        e.published.fill(false);
+        let mut to_queue = Vec::with_capacity(self.k);
+        for p in 0..self.k {
+            if !e.queued[p] {
+                e.queued[p] = true;
+                to_queue.push(p);
+            }
+        }
+        for p in to_queue {
+            s.queues[p].push_back(batch_id);
+        }
+        s.gen_seq = next_gen;
+        s.retried += 1;
+        Some(next_gen)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(n: usize) -> Arc<Vec<usize>> {
+        Arc::new((0..n).collect())
+    }
+
+    fn ledger_with(k: usize, ids: &[u64]) -> BatchLedger {
+        let l = BatchLedger::new(k);
+        let batches: Vec<(u64, Arc<Vec<usize>>)> =
+            ids.iter().map(|&id| (id, rows(4))).collect();
+        l.install_epoch(0, &batches);
+        l
+    }
+
+    #[test]
+    fn happy_path_walks_the_state_machine() {
+        let l = ledger_with(2, &[10]);
+        assert_eq!(l.remaining_bwd(), 2);
+        assert_eq!(l.stage(10), Some(BatchStage::Queued));
+
+        let j0 = l.next_embed_job(0).unwrap();
+        let j1 = l.next_embed_job(1).unwrap();
+        assert_eq!(j0.batch_id, 10);
+        assert_eq!(j0.generation, j1.generation);
+        assert!(l.begin_publish(10, j0.generation, 0));
+        assert_eq!(l.stage(10), Some(BatchStage::Published));
+        assert!(l.begin_publish(10, j1.generation, 1));
+
+        assert!(l.begin_join(10, j0.generation).is_some());
+        assert_eq!(l.stage(10), Some(BatchStage::Joined));
+        // Second claim of the same generation is rejected: exactly-once.
+        assert!(l.begin_join(10, j0.generation).is_none());
+
+        assert!(l.mark_stepped(10, j0.generation));
+        assert!(l.claim_bwd(10, j0.generation, 0).is_some());
+        // Claims reserve; only `finish_bwd` credits the epoch.
+        assert_eq!(l.remaining_bwd(), 2);
+        l.finish_bwd();
+        assert_eq!(l.remaining_bwd(), 1);
+        // Duplicate gradient for party 0 is dropped.
+        assert!(l.claim_bwd(10, j0.generation, 0).is_none());
+        assert_eq!(l.remaining_bwd(), 1);
+        assert!(l.claim_bwd(10, j0.generation, 1).is_some());
+        l.finish_bwd();
+        assert_eq!(l.remaining_bwd(), 0);
+        assert_eq!(l.stage(10), Some(BatchStage::Done));
+        assert!(l.epoch_done());
+        assert_eq!(l.retried(), 0);
+    }
+
+    #[test]
+    fn requeue_all_bumps_generation_and_invalidates_old_messages() {
+        let l = ledger_with(2, &[10]);
+        let j = l.next_embed_job(0).unwrap();
+        l.next_embed_job(1).unwrap();
+        assert!(l.begin_publish(10, j.generation, 0));
+        assert!(l.begin_publish(10, j.generation, 1));
+        let claim = l.begin_join(10, j.generation);
+        assert!(claim.is_some());
+
+        // Join failed (sibling deadline): full reassignment.
+        let g2 = l.requeue_all(10, j.generation).unwrap();
+        assert!(g2 > j.generation);
+        assert_eq!(l.stage(10), Some(BatchStage::Queued));
+        assert_eq!(l.retried(), 1);
+        // Everything carrying the old generation is now rejected.
+        assert!(!l.begin_publish(10, j.generation, 0));
+        assert!(l.begin_join(10, j.generation).is_none());
+        assert!(l.claim_bwd(10, j.generation, 0).is_none());
+        assert_eq!(l.remaining_bwd(), 2);
+        // A stale requeue (e.g. a second worker observing the same
+        // failure) is a no-op.
+        assert!(l.requeue_all(10, j.generation).is_none());
+        assert_eq!(l.retried(), 1);
+
+        // The new attempt proceeds normally on both parties.
+        let n0 = l.next_embed_job(0).unwrap();
+        let n1 = l.next_embed_job(1).unwrap();
+        assert_eq!(n0.generation, g2);
+        assert!(l.begin_publish(10, g2, 0));
+        assert!(l.begin_publish(10, g2, 1));
+        assert!(l.begin_join(10, g2).is_some());
+        assert!(l.mark_stepped(10, g2));
+        assert!(l.claim_bwd(10, g2, 0).is_some());
+        l.finish_bwd();
+        assert!(l.claim_bwd(10, g2, 1).is_some());
+        l.finish_bwd();
+        assert!(l.epoch_done());
+        let _ = n1;
+    }
+
+    #[test]
+    fn bwd_done_survives_requeue_for_exactly_once_counting() {
+        // Gradient for party 1 evicted after party 0 already applied its
+        // backward pass: the retry re-steps the batch, but party 0's
+        // duplicate gradient must not be counted again.
+        let l = ledger_with(2, &[10]);
+        let j = l.next_embed_job(0).unwrap();
+        l.next_embed_job(1).unwrap();
+        assert!(l.begin_publish(10, j.generation, 0));
+        assert!(l.begin_publish(10, j.generation, 1));
+        l.begin_join(10, j.generation).unwrap();
+        assert!(l.mark_stepped(10, j.generation));
+        assert!(l.claim_bwd(10, j.generation, 0).is_some());
+        l.finish_bwd();
+        assert_eq!(l.remaining_bwd(), 1);
+
+        let g2 = l.requeue_all(10, j.generation).unwrap();
+        // Retry attempt steps again and republishes both gradients.
+        let n0 = l.next_embed_job(0).unwrap();
+        assert_eq!(n0.generation, g2);
+        l.next_embed_job(1).unwrap();
+        assert!(l.begin_publish(10, g2, 0));
+        assert!(l.begin_publish(10, g2, 1));
+        l.begin_join(10, g2).unwrap();
+        assert!(l.mark_stepped(10, g2));
+        // Party 0 already counted: duplicate dropped, no underflow.
+        assert!(l.claim_bwd(10, g2, 0).is_none());
+        assert_eq!(l.remaining_bwd(), 1);
+        assert!(l.claim_bwd(10, g2, 1).is_some());
+        l.finish_bwd();
+        assert_eq!(l.remaining_bwd(), 0);
+        assert!(l.epoch_done());
+    }
+
+    #[test]
+    fn requeue_party_keeps_generation_and_dedupes_queue() {
+        let l = ledger_with(2, &[10, 11]);
+        let j = l.next_embed_job(0).unwrap();
+        assert_eq!(j.batch_id, 10);
+        assert!(l.begin_publish(10, j.generation, 0));
+        // Embedding evicted by the buffer mechanism: single-party requeue,
+        // same generation (sibling embeddings stay valid).
+        assert!(l.requeue_party(0, 10, j.generation));
+        assert_eq!(l.generation(10), Some(j.generation));
+        assert_eq!(l.retried(), 1);
+        // Already queued: a second requeue is deduped.
+        assert!(!l.requeue_party(0, 10, j.generation));
+        assert_eq!(l.retried(), 1);
+        // Queue order: 11 (original) then 10 (requeued).
+        assert_eq!(l.next_embed_job(0).unwrap().batch_id, 11);
+        assert_eq!(l.next_embed_job(0).unwrap().batch_id, 10);
+        assert!(l.next_embed_job(0).is_none());
+    }
+
+    #[test]
+    fn done_batches_are_skipped_by_queues_and_requeues() {
+        let l = ledger_with(1, &[10]);
+        let j = l.next_embed_job(0).unwrap();
+        assert!(l.begin_publish(10, j.generation, 0));
+        l.begin_join(10, j.generation).unwrap();
+        assert!(l.mark_stepped(10, j.generation));
+        assert!(l.claim_bwd(10, j.generation, 0).is_some());
+        l.finish_bwd();
+        assert_eq!(l.stage(10), Some(BatchStage::Done));
+        // Late eviction of a leftover message must not resurrect the batch.
+        assert!(!l.requeue_party(0, 10, j.generation));
+        assert!(l.requeue_all(10, j.generation).is_none());
+        // A leftover queue entry for a batch that finished while queued is
+        // skipped by the job feed.
+        let l2 = ledger_with(1, &[20, 21]);
+        let a = l2.next_embed_job(0).unwrap();
+        assert!(l2.begin_publish(20, a.generation, 0));
+        l2.begin_join(20, a.generation).unwrap();
+        assert!(l2.mark_stepped(20, a.generation));
+        // A duplicate embedding gets evicted: 20 is requeued behind 21...
+        assert!(l2.requeue_party(0, 20, a.generation));
+        // ...and then the in-flight attempt completes the batch.
+        assert!(l2.claim_bwd(20, a.generation, 0).is_some());
+        l2.finish_bwd();
+        assert_eq!(l2.stage(20), Some(BatchStage::Done));
+        assert_eq!(l2.next_embed_job(0).unwrap().batch_id, 21);
+        assert!(l2.next_embed_job(0).is_none(), "done batch 20 must be skipped");
+    }
+
+    #[test]
+    fn install_epoch_resets_state_with_fresh_generations() {
+        let l = ledger_with(1, &[10]);
+        let g1 = l.generation(10).unwrap();
+        let batches = vec![(30u64, rows(4)), (31u64, rows(4))];
+        l.install_epoch(1, &batches);
+        assert_eq!(l.epoch(), 1);
+        assert_eq!(l.remaining_bwd(), 2);
+        assert!(l.generation(10).is_none());
+        // Generations keep growing across epochs: old-epoch messages can
+        // never alias a new attempt.
+        assert!(l.generation(30).unwrap() > g1);
+        assert!(l.claim_bwd(10, g1, 0).is_none());
+    }
+
+    #[test]
+    fn concurrent_claims_count_each_bwd_exactly_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let l = ledger_with(4, &[1, 2, 3, 4, 5, 6, 7, 8]);
+        let gens: Vec<(u64, u64)> =
+            (1..=8).map(|id| (id, l.generation(id).unwrap())).collect();
+        let counted = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for &(id, g) in &gens {
+                        for party in 0..4 {
+                            if l.claim_bwd(id, g, party).is_some() {
+                                l.finish_bwd();
+                                counted.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(counted.load(Ordering::Relaxed), 8 * 4);
+        assert_eq!(l.remaining_bwd(), 0);
+    }
+}

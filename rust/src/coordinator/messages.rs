@@ -1,4 +1,10 @@
 //! Message types flowing through the Pub/Sub channels.
+//!
+//! Every message is tagged with `(batch_id, generation)`. The generation
+//! is the [`super::ledger::BatchLedger`]'s retry token for the batch: it
+//! is bumped each time the batch is reassigned, so brokers and consumers
+//! can reject messages produced for a superseded attempt and a retried
+//! batch can never be trained twice.
 
 use crate::tensor::Matrix;
 use std::time::Instant;
@@ -9,14 +15,18 @@ pub struct EmbeddingMsg {
     pub batch_id: u64,
     /// Which passive party produced it (multi-party extension).
     pub party: usize,
+    /// Ledger generation of the batch at production time; stale
+    /// generations are rejected by the broker and dropped by consumers.
+    pub generation: u64,
     pub z: Matrix,
     pub produced_at: Instant,
-    /// Producer's parameter version (staleness accounting).
+    /// Parameter-server version the producer's replica was synced to
+    /// (staleness accounting).
     pub param_version: u64,
 }
 
 impl EmbeddingMsg {
-    /// Wire size: payload + batch-ID framing (matches
+    /// Wire size: payload + `(batch_id, generation)` framing (matches
     /// `profiler::payload_bytes_per_sample`).
     pub fn bytes(&self) -> u64 {
         (self.z.data.len() * 4 + 16) as u64
@@ -28,6 +38,8 @@ impl EmbeddingMsg {
 pub struct GradientMsg {
     pub batch_id: u64,
     pub party: usize,
+    /// Generation of the batch attempt the gradient was computed for.
+    pub generation: u64,
     pub grad_z: Matrix,
     pub produced_at: Instant,
     pub loss: f64,
@@ -48,6 +60,7 @@ mod tests {
         let m = EmbeddingMsg {
             batch_id: 1,
             party: 0,
+            generation: 0,
             z: Matrix::zeros(4, 8),
             produced_at: Instant::now(),
             param_version: 0,
@@ -56,6 +69,7 @@ mod tests {
         let g = GradientMsg {
             batch_id: 1,
             party: 0,
+            generation: 0,
             grad_z: Matrix::zeros(4, 8),
             produced_at: Instant::now(),
             loss: 0.0,

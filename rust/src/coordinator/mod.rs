@@ -1,17 +1,21 @@
 //! The L3 coordinator — the paper's system contribution: Pub/Sub broker
 //! with batch-ID-keyed channels (buffer + waiting-deadline mechanisms),
-//! per-party parameter servers with the Eq. (5) semi-asynchronous
-//! schedule, and the threaded training session that wires workers,
-//! channels, PSI-aligned batch plans, and the GDP protocol together.
+//! a generation-tagged batch ledger that makes the retry lifecycle
+//! exactly-once, per-party parameter servers with the Eq. (5)
+//! semi-asynchronous schedule, and the session-lived worker pool that
+//! wires workers, channels, PSI-aligned batch plans, and the GDP
+//! protocol together.
 
 pub mod broker;
 pub mod channel;
+pub mod ledger;
 pub mod messages;
 pub mod ps;
 pub mod session;
 
 pub use broker::Broker;
-pub use channel::{SubResult, Topic};
+pub use channel::{Publish, SubResult, Topic};
+pub use ledger::{BatchLedger, BatchStage, EmbedJob};
 pub use messages::{EmbeddingMsg, GradientMsg};
 pub use ps::{ParameterServer, PsMode, SemiAsyncSchedule};
 pub use session::{evaluate, reached, train_pubsub, train_pubsub_session, SessionResult};

@@ -85,6 +85,12 @@ impl ParameterServer {
         self.state.lock().unwrap().version
     }
 
+    /// Gradients pushed since the last `aggregate`/`set_params` (the
+    /// backlog a synchronization point would fold in).
+    pub fn pending(&self) -> usize {
+        self.state.lock().unwrap().n_accum
+    }
+
     /// Replace parameters outright (broadcast after an external sync).
     pub fn set_params(&self, params: MlpParams) {
         let mut s = self.state.lock().unwrap();
@@ -145,8 +151,10 @@ mod tests {
         ps.push_grad(&g);
         ps.push_grad(&g);
         // Not applied yet.
+        assert_eq!(ps.pending(), 2);
         assert_eq!(ps.fetch().0.weights[0].at(0, 0), p.weights[0].at(0, 0));
         ps.aggregate();
+        assert_eq!(ps.pending(), 0);
         // Mean of two identical grads, lr 1.0 ⇒ -1.0.
         assert!((ps.fetch().0.weights[0].at(0, 0) - (p.weights[0].at(0, 0) - 1.0)).abs() < 1e-6);
         // Aggregate again: no pending grads, version unchanged.

@@ -22,6 +22,10 @@ pub enum RunEvent {
     BatchRetried { epoch: usize, batch_id: u64 },
     /// A semi-asynchronous parameter-server barrier fired (Eq. 5).
     PsBarrier { epoch: usize },
+    /// Per-epoch parameter-staleness summary: the gap (in PS versions)
+    /// between the version embeddings were produced at and the live PS
+    /// version when the active party consumed them.
+    Staleness { epoch: usize, mean: f64, max: u64 },
     /// An evaluation pass completed.
     Eval { epoch: usize, metric: f64 },
     /// The run observed its cancel token and stopped early.
@@ -131,7 +135,8 @@ mod tests {
         assert_eq!(opts.epochs, Some(3));
         assert_eq!(opts.target_accuracy, Some(0.9));
         opts.emit(RunEvent::PsBarrier { epoch: 1 });
-        assert_eq!(seen.lock().unwrap().len(), 1);
+        opts.emit(RunEvent::Staleness { epoch: 1, mean: 0.5, max: 2 });
+        assert_eq!(seen.lock().unwrap().len(), 2);
         assert!(!opts.is_cancelled());
     }
 }

@@ -47,6 +47,17 @@ impl Metrics {
         self.gauges.lock().unwrap().get(name).copied()
     }
 
+    /// Raise gauge `name` to `v` if `v` exceeds its current value
+    /// (running-maximum gauge, e.g. the highest parameter version
+    /// observed in messages).
+    pub fn gauge_max(&self, name: &str, v: f64) {
+        let mut g = self.gauges.lock().unwrap();
+        let e = g.entry(name.to_string()).or_insert(f64::NEG_INFINITY);
+        if v > *e {
+            *e = v;
+        }
+    }
+
     /// Append an (x, y) point to a named series (e.g. loss curve).
     pub fn push_point(&self, name: &str, x: f64, y: f64) {
         self.series
@@ -209,6 +220,16 @@ mod tests {
         assert_eq!(m.counter("missing"), 0);
         m.set_gauge("lr", 0.01);
         assert_eq!(m.gauge("lr"), Some(0.01));
+    }
+
+    #[test]
+    fn gauge_max_keeps_running_maximum() {
+        let m = Metrics::new();
+        m.gauge_max("v", 3.0);
+        m.gauge_max("v", 1.0);
+        assert_eq!(m.gauge("v"), Some(3.0));
+        m.gauge_max("v", 7.5);
+        assert_eq!(m.gauge("v"), Some(7.5));
     }
 
     #[test]

@@ -542,8 +542,19 @@ fn sim_pubsub(cfg: &SimConfig, epochs: usize, n_batches: usize) -> SimResult {
                 }
                 Ev::GradArrive => {
                     if grad_ready.len() >= cap_g {
+                        // Channel full: FIFO drop-oldest. A dropped
+                        // gradient strands its batch's backward pass, so
+                        // the lifecycle forces a full retry — re-embed and
+                        // re-step (exactly-once ledger semantics: the
+                        // completed backward passes keep their credit,
+                        // hence `to_bwd` is untouched). Without the
+                        // re-produce/re-consume credit the event loop
+                        // could never drain `to_bwd` and the simulation
+                        // would spin on stale steps forever.
                         grad_ready.pop_front();
                         retried += 1;
+                        to_produce += 1;
+                        to_consume += 1;
                     }
                     grad_ready.push_back(now);
                     wake_one(&mut passive_idle, &mut wait_s, now, &mut q, Ev::PassiveFree);
@@ -761,6 +772,30 @@ mod tests {
     fn batch_conservation_via_comm_accounting() {
         let cfg = base(Architecture::PubSub);
         let r = simulate(&cfg);
+        let expect = ((r.epochs * r.batches_per_epoch + r.batches_retried) as f64
+            * batch_bytes(&cfg.cost, cfg.batch_size)
+            * comm_overhead(cfg.arch))
+            / (1024.0 * 1024.0);
+        assert!((r.comm_mb - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gradient_eviction_forces_full_retry_and_terminates() {
+        // buffer_q = 1 with a single passive worker feeding 8 active
+        // workers keeps the gradient channel saturated. A dropped
+        // gradient must credit a re-produce + re-consume (full retry) —
+        // without it `to_bwd` can never drain and the event loop spins on
+        // stale steps forever, so merely *returning* is the regression
+        // check. Conservation still holds: every retry is visible in the
+        // comm accounting.
+        let mut cfg = SimConfig::new(Architecture::PubSub, cost(32, 32));
+        cfg.n_samples = 5_000;
+        cfg.buffer_q = 1;
+        cfg.w_p = 1;
+        cfg.w_a = 8;
+        let r = simulate(&cfg);
+        assert!(r.wall_s.is_finite() && r.wall_s > 0.0);
+        assert!((0.0..=1.0).contains(&r.cpu_util));
         let expect = ((r.epochs * r.batches_per_epoch + r.batches_retried) as f64
             * batch_bytes(&cfg.cost, cfg.batch_size)
             * comm_overhead(cfg.arch))

@@ -2,7 +2,7 @@
 //! simulator invariants (the proptest-style suite, via `prop.rs`).
 
 use pubsub_vfl::config::Architecture;
-use pubsub_vfl::coordinator::{SubResult, Topic};
+use pubsub_vfl::coordinator::{Publish, SubResult, Topic};
 use pubsub_vfl::model::{Activation, MlpParams, MlpSpec};
 use pubsub_vfl::planner::{self, CostConstants, CostModel, MemoryModel, PlanSpace};
 use pubsub_vfl::prop::assert_prop;
@@ -43,8 +43,17 @@ fn prop_channel_never_exceeds_capacity_and_conserves_messages() {
             let t: Topic<u64> = Topic::new("t", cap);
             let mut evicted = 0usize;
             for i in 0..n {
-                if t.publish(i as u64, i as u64).is_some() {
-                    evicted += 1;
+                match t.publish(i as u64, i as u64) {
+                    Publish::Evicted(old, msg) => {
+                        if old != msg {
+                            return Err(format!("evicted id {old} carried payload {msg}"));
+                        }
+                        evicted += 1;
+                    }
+                    Publish::Stale(_) => {
+                        return Err(format!("fresh id {i} rejected as stale"));
+                    }
+                    Publish::Stored => {}
                 }
                 if t.len() > cap {
                     return Err(format!("len {} > cap {cap}", t.len()));
@@ -54,12 +63,8 @@ fn prop_channel_never_exceeds_capacity_and_conserves_messages() {
             while let SubResult::Ok(_) = t.subscribe_any(Duration::from_millis(1)) {
                 received += 1;
             }
-            let dropped = t.take_dropped().len();
             if received + evicted != n {
                 return Err(format!("published {n}, received {received} + evicted {evicted}"));
-            }
-            if dropped != evicted {
-                return Err(format!("dropped {dropped} != evicted {evicted}"));
             }
             Ok(())
         },
