@@ -5,12 +5,16 @@
 
 mod common;
 
-use pubsub_vfl::bench_harness::{bench, Table};
+use pubsub_vfl::bench_harness::{bench, save_json, Table};
 use pubsub_vfl::config::ModelSize;
 use pubsub_vfl::coordinator::{Broker, ParameterServer, PsMode, SubResult};
 use pubsub_vfl::coordinator::{EmbeddingMsg, GradientMsg};
+use pubsub_vfl::linalg::{available_threads, make, Backend, BackendKind, Threaded};
 use pubsub_vfl::metrics::Metrics;
-use pubsub_vfl::model::{forward, Activation, MlpParams, MlpSpec, SplitModelSpec, SplitParams};
+use pubsub_vfl::model::{
+    backward, backward_into, forward, forward_cached, forward_cached_into, Activation,
+    BackwardScratch, ForwardCache, MlpParams, MlpSpec, SplitModelSpec, SplitParams,
+};
 use pubsub_vfl::runtime::XlaService;
 use pubsub_vfl::tensor::Matrix;
 use pubsub_vfl::util::Rng;
@@ -120,6 +124,66 @@ fn main() {
         }));
     }
 
+    // ---- linalg backends on the 256×250×64 hot shape ------------------
+    // Per-backend GEMM ns/step, plus the forward+backward train step:
+    // seed-style allocating path vs the zero-alloc Workspace (`_into`)
+    // path. CI uploads BENCH_hotpath.json built from these rows, so the
+    // perf trajectory is tracked across PRs.
+    {
+        // Stable series names (no core count embedded) so the JSON trend
+        // lines stay comparable across runners; the thread count is
+        // printed alongside instead.
+        let nt = available_threads();
+        println!("(threaded backend using {nt} threads)");
+        let backends: Vec<(String, Arc<dyn Backend>)> = vec![
+            ("naive".to_string(), make(BackendKind::Naive, 1)),
+            ("tiled".to_string(), make(BackendKind::Tiled, 1)),
+            ("threaded".to_string(), Arc::new(Threaded::new(nt)) as Arc<dyn Backend>),
+        ];
+
+        let a = Matrix::randn(256, 250, 1.0, &mut rng);
+        let b = Matrix::randn(250, 64, 1.0, &mut rng);
+        for (name, be) in &backends {
+            let mut out = Matrix::default();
+            results.push(bench(&format!("matmul_into_256x250x64_{name}"), 5, 200, || {
+                be.matmul_into(&a, &b, &mut out);
+            }));
+        }
+
+        // Forward+backward through the 10-layer bottom at B=256 — the
+        // per-batch worker compute unit.
+        let spec = SplitModelSpec::build(ModelSize::Small, 250, &[250], 64, 32);
+        let params = SplitParams::init(&spec, &mut rng);
+        let bottom = &spec.passive_bottoms[0];
+        let x = Matrix::randn(256, 250, 1.0, &mut rng);
+        let d_out = Matrix::randn(256, 32, 1.0, &mut rng);
+
+        // Seed-style path: fresh caches + allocating GEMMs every step
+        // (this is what the worker loops did before the Workspace).
+        results.push(bench("fwd_bwd_256x250x64_seed_alloc", 3, 50, || {
+            let cache = forward_cached(bottom, &params.passive[0], &x);
+            let _ = backward(bottom, &params.passive[0], &cache, &d_out);
+        }));
+
+        for (name, be) in &backends {
+            let mut cache = ForwardCache::default();
+            let mut grads = params.passive[0].zeros_like();
+            let mut scratch = BackwardScratch::default();
+            results.push(bench(&format!("fwd_bwd_256x250x64_ws_{name}"), 3, 50, || {
+                forward_cached_into(bottom, &params.passive[0], &x, be.as_ref(), &mut cache);
+                backward_into(
+                    bottom,
+                    &params.passive[0],
+                    &cache,
+                    &d_out,
+                    be.as_ref(),
+                    &mut grads,
+                    &mut scratch,
+                );
+            }));
+        }
+    }
+
     // PJRT path: literal marshal + full active_step (if artifacts exist).
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("manifest.json").exists() {
@@ -154,4 +218,7 @@ fn main() {
         ]);
     }
     t.save_csv("micro_hotpath.csv");
+    // Machine-readable per-backend ns/step for CI trend tracking.
+    save_json("BENCH_hotpath.json", &results);
+    println!("(wrote BENCH_hotpath.json)");
 }

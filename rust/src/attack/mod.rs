@@ -10,6 +10,7 @@
 //! is the defense whose μ-sweep is Fig. 5's ASR panel.
 
 use crate::dp::GaussianMechanism;
+use crate::linalg::default_backend;
 use crate::model::{forward, MlpParams, MlpSpec};
 use crate::tensor::Matrix;
 #[cfg(test)]
@@ -43,12 +44,16 @@ impl RidgeInverter {
             }
         }
         // A = zᵀz + λI (e×e), B = zᵀx (e×d); solve A·W = B by Gauss-Jordan.
+        // The normal-equation GEMMs run on the linalg backend layer.
+        let be = default_backend();
         let e = z.cols;
-        let mut a = zc.matmul_at(&zc);
+        let mut a = Matrix::default();
+        be.matmul_at_into(&zc, &zc, &mut a);
         for i in 0..e {
             *a.at_mut(i, i) += l2;
         }
-        let bmat = zc.matmul_at(&xc);
+        let mut bmat = Matrix::default();
+        be.matmul_at_into(&zc, &xc, &mut bmat);
         let w = solve(&mut a, &bmat);
         // b = xm − zm·W.
         let mut b = xm.clone();
@@ -63,9 +68,15 @@ impl RidgeInverter {
     }
 
     pub fn invert(&self, z: &Matrix) -> Matrix {
-        let mut out = z.matmul(&self.w);
-        out.add_bias(&self.b);
+        let mut out = Matrix::default();
+        self.invert_into(z, &mut out);
         out
+    }
+
+    /// [`RidgeInverter::invert`] into a reusable buffer.
+    pub fn invert_into(&self, z: &Matrix, out: &mut Matrix) {
+        default_backend().matmul_into(z, &self.w, out);
+        out.add_bias(&self.b);
     }
 }
 

@@ -24,10 +24,11 @@
 //! and streams [`RunEvent`](crate::experiment::RunEvent)s per epoch.
 
 use crate::config::Architecture;
-use crate::coordinator::session::{evaluate, reached, SessionResult};
+use crate::coordinator::session::{evaluate_ws, reached, SessionResult};
 use crate::data::{BatchPlan, VerticalDataset};
 use crate::experiment::{RunEvent, RunOptions, TrainCtx};
-use crate::model::{MlpParams, SplitParams};
+use crate::linalg;
+use crate::model::{ActiveStepBuf, MlpParams, SplitParams, Workspace};
 use crate::tensor::Matrix;
 use crate::util::{Rng, Stopwatch};
 
@@ -59,24 +60,93 @@ struct LoopState<'a> {
     rng: Rng,
     loss_curve: Vec<(f64, f64)>,
     metric_curve: Vec<(f64, f64)>,
+    // Reused compute state: the baselines are single-worker loops, so one
+    // workspace + one set of gather/output buffers serves every batch
+    // (zero-alloc steady state on the host engine).
+    ws: Workspace,
+    x_a: Matrix,
+    x_p: Vec<Matrix>,
+    y: Vec<f32>,
+    z: Vec<Matrix>,
+    step: ActiveStepBuf,
+    gp: MlpParams,
 }
 
 impl<'a> LoopState<'a> {
     fn new(ctx: &'a TrainCtx<'a>) -> Self {
+        let k = ctx.train.passive.len();
         LoopState {
             ctx,
             rng: Rng::new(ctx.cfg.seed),
             loss_curve: Vec::new(),
             metric_curve: Vec::new(),
+            // One worker: the Threaded backend may use the whole machine.
+            ws: Workspace::new(linalg::worker_backend(ctx.cfg.backend, 1)),
+            x_a: Matrix::default(),
+            x_p: vec![Matrix::default(); k],
+            y: Vec::new(),
+            z: vec![Matrix::default(); k],
+            step: ActiveStepBuf::default(),
+            gp: MlpParams::default(),
         }
     }
 
-    fn batch_inputs(&self, rows: &[usize]) -> (Matrix, Vec<Matrix>, Vec<f32>) {
+    /// Gather one batch into the reused input buffers.
+    fn gather(&mut self, rows: &[usize]) {
         let train = self.ctx.train;
-        let x_a = train.active.x.take_rows(rows);
-        let x_p: Vec<Matrix> = train.passive.iter().map(|p| p.x.take_rows(rows)).collect();
-        let y: Vec<f32> = rows.iter().map(|&r| train.y[r]).collect();
-        (x_a, x_p, y)
+        train.active.x.take_rows_into(rows, &mut self.x_a);
+        for (p, buf) in self.x_p.iter_mut().enumerate() {
+            train.passive[p].x.take_rows_into(rows, buf);
+        }
+        self.y.clear();
+        self.y.extend(rows.iter().map(|&r| train.y[r]));
+    }
+
+    /// Bottom-forward every passive party at `passive` params into the
+    /// reused embedding buffers.
+    fn forward_embeddings(&mut self, passive: &[MlpParams]) {
+        let ctx = self.ctx;
+        let engine = ctx.engine.as_ref();
+        for p in 0..self.z.len() {
+            engine.passive_fwd_into(p, &passive[p], &self.x_p[p], &mut self.ws, &mut self.z[p]);
+        }
+    }
+
+    /// Active step on the gathered batch; leaves clipped gradients in
+    /// `self.step` and returns the loss.
+    fn active_step(&mut self, active: &MlpParams, top: &MlpParams) -> f64 {
+        let ctx = self.ctx;
+        let clip = ctx.cfg.train.grad_clip as f32;
+        ctx.engine.as_ref().active_step_into(
+            active,
+            top,
+            &self.x_a,
+            &self.z,
+            &self.y,
+            &mut self.ws,
+            &mut self.step,
+        );
+        self.step.grad_active.clip_norm(clip);
+        self.step.grad_top.clip_norm(clip);
+        self.step.loss
+    }
+
+    /// Passive backward for party `p` from the current step's cut-layer
+    /// gradient; returns the clipped gradient (borrowed from the reused
+    /// buffer).
+    fn passive_grad(&mut self, p: usize, params: &MlpParams) -> &MlpParams {
+        let ctx = self.ctx;
+        let clip = ctx.cfg.train.grad_clip as f32;
+        ctx.engine.as_ref().passive_bwd_into(
+            p,
+            params,
+            &self.x_p[p],
+            &self.step.grad_z[p],
+            &mut self.ws,
+            &mut self.gp,
+        );
+        self.gp.clip_norm(clip);
+        &self.gp
     }
 
     /// Record end-of-epoch stats; returns true when the target is hit.
@@ -104,7 +174,8 @@ impl<'a> LoopState<'a> {
             comm_batches as u64 * payload / train.passive.len().max(1) as u64
                 * train.passive.len() as u64,
         );
-        let metric = evaluate(ctx.engine.as_ref(), params, ctx.test, b, train.task);
+        let metric =
+            evaluate_ws(ctx.engine.as_ref(), params, ctx.test, b, train.task, &mut self.ws);
         self.metric_curve.push((epoch as f64, metric));
         ctx.metrics.push_point("eval_metric", epoch as f64, metric);
         ctx.emit(RunEvent::Eval { epoch, metric });
@@ -113,19 +184,20 @@ impl<'a> LoopState<'a> {
     }
 
     fn result(
-        self,
+        mut self,
         params: SplitParams,
         epochs_run: usize,
         reached_target: bool,
         sw: Stopwatch,
     ) -> SessionResult {
         let ctx = self.ctx;
-        let final_metric = evaluate(
+        let final_metric = evaluate_ws(
             ctx.engine.as_ref(),
             &params,
             ctx.test,
             ctx.cfg.train.batch_size,
             ctx.train.task,
+            &mut self.ws,
         );
         SessionResult {
             params,
@@ -142,7 +214,6 @@ impl<'a> LoopState<'a> {
 
 /// Classic lockstep VFL.
 pub(crate) fn train_vfl(ctx: &TrainCtx<'_>) -> SessionResult {
-    let engine = ctx.engine.as_ref();
     let train = ctx.train;
     let mut st = LoopState::new(ctx);
     let mut params = SplitParams::init(ctx.spec, &mut st.rng);
@@ -162,22 +233,16 @@ pub(crate) fn train_vfl(ctx: &TrainCtx<'_>) -> SessionResult {
                 cancelled = true;
                 break;
             }
-            let (x_a, x_p, y) = st.batch_inputs(&a.rows);
-            let zs: Vec<Matrix> = (0..train.passive.len())
-                .map(|p| engine.passive_fwd(p, &params.passive[p], &x_p[p]))
-                .collect();
-            let mut out = engine.active_step(&params.active, &params.top, &x_a, &zs, &y);
-            let clip = ctx.cfg.train.grad_clip as f32;
+            st.gather(&a.rows);
+            st.forward_embeddings(&params.passive);
+            let loss = st.active_step(&params.active, &params.top);
             for p in 0..train.passive.len() {
-                let mut g = engine.passive_bwd(p, &params.passive[p], &x_p[p], &out.grad_z[p]);
-                g.clip_norm(clip);
-                params.passive[p].sgd_step(&g, lr);
+                let g = st.passive_grad(p, &params.passive[p]);
+                params.passive[p].sgd_step(g, lr);
             }
-            out.grad_active.clip_norm(clip);
-            out.grad_top.clip_norm(clip);
-            params.active.sgd_step(&out.grad_active, lr);
-            params.top.sgd_step(&out.grad_top, lr);
-            losses.push(out.loss);
+            params.active.sgd_step(&st.step.grad_active, lr);
+            params.top.sgd_step(&st.step.grad_top, lr);
+            losses.push(loss);
             n += 1;
         }
         if cancelled {
@@ -195,7 +260,6 @@ pub(crate) fn train_vfl(ctx: &TrainCtx<'_>) -> SessionResult {
 
 /// VFL with synchronous PS: per-round mean-gradient barrier.
 pub(crate) fn train_vfl_ps(ctx: &TrainCtx<'_>) -> SessionResult {
-    let engine = ctx.engine.as_ref();
     let train = ctx.train;
     let cfg = ctx.cfg;
     let pairs = cfg.parties.active_workers.min(cfg.parties.passive_workers).max(1);
@@ -222,22 +286,16 @@ pub(crate) fn train_vfl_ps(ctx: &TrainCtx<'_>) -> SessionResult {
             let mut acc_t: Option<MlpParams> = None;
             let mut acc_p: Vec<Option<MlpParams>> = vec![None; train.passive.len()];
             for a in round {
-                let (x_a, x_p, y) = st.batch_inputs(&a.rows);
-                let zs: Vec<Matrix> = (0..train.passive.len())
-                    .map(|p| engine.passive_fwd(p, &params.passive[p], &x_p[p]))
-                    .collect();
-                let mut out = engine.active_step(&params.active, &params.top, &x_a, &zs, &y);
-                let clip = cfg.train.grad_clip as f32;
+                st.gather(&a.rows);
+                st.forward_embeddings(&params.passive);
+                let loss = st.active_step(&params.active, &params.top);
                 for p in 0..train.passive.len() {
-                    let mut g = engine.passive_bwd(p, &params.passive[p], &x_p[p], &out.grad_z[p]);
-                    g.clip_norm(clip);
+                    let g = st.passive_grad(p, &params.passive[p]);
                     accumulate(&mut acc_p[p], g);
                 }
-                out.grad_active.clip_norm(clip);
-                out.grad_top.clip_norm(clip);
-                accumulate(&mut acc_a, out.grad_active);
-                accumulate(&mut acc_t, out.grad_top);
-                losses.push(out.loss);
+                accumulate(&mut acc_a, &st.step.grad_active);
+                accumulate(&mut acc_t, &st.step.grad_top);
+                losses.push(loss);
             }
             // Synchronous barrier: apply mean gradients.
             let scale = 1.0 / round.len() as f32;
@@ -278,6 +336,8 @@ pub(crate) fn train_avfl(ctx: &TrainCtx<'_>) -> SessionResult {
     let mut stale_passive: Vec<MlpParams> = params.passive.clone();
     // Deferred cut-layer gradients (applied one step late).
     let mut pending: Option<(Vec<usize>, Vec<Matrix>)> = None;
+    // Gather buffer for the deferred batch's inputs.
+    let mut x_prev = Matrix::default();
     for epoch in 0..ctx.epochs() {
         epochs_run = epoch + 1;
         let plan =
@@ -289,30 +349,35 @@ pub(crate) fn train_avfl(ctx: &TrainCtx<'_>) -> SessionResult {
                 cancelled = true;
                 break;
             }
-            let (x_a, x_p, y) = st.batch_inputs(&a.rows);
+            st.gather(&a.rows);
             // Embeddings from *stale* passive params (async pipeline).
-            let zs: Vec<Matrix> = (0..k)
-                .map(|p| engine.passive_fwd(p, &stale_passive[p], &x_p[p]))
-                .collect();
-            let mut out = engine.active_step(&params.active, &params.top, &x_a, &zs, &y);
+            st.forward_embeddings(&stale_passive);
+            let loss = st.active_step(&params.active, &params.top);
             let clip = cfg.train.grad_clip as f32;
-            out.grad_active.clip_norm(clip);
-            out.grad_top.clip_norm(clip);
-            params.active.sgd_step(&out.grad_active, lr);
-            params.top.sgd_step(&out.grad_top, lr);
+            params.active.sgd_step(&st.step.grad_active, lr);
+            params.top.sgd_step(&st.step.grad_top, lr);
             // Apply the *previous* batch's passive gradient now.
             if let Some((rows, gzs)) = pending.take() {
                 for p in 0..k {
-                    let x_prev = train.passive[p].x.take_rows(&rows);
-                    let mut g = engine.passive_bwd(p, &params.passive[p], &x_prev, &gzs[p]);
-                    g.clip_norm(clip);
-                    params.passive[p].sgd_step(&g, lr);
+                    train.passive[p].x.take_rows_into(&rows, &mut x_prev);
+                    engine.passive_bwd_into(
+                        p,
+                        &params.passive[p],
+                        &x_prev,
+                        &gzs[p],
+                        &mut st.ws,
+                        &mut st.gp,
+                    );
+                    st.gp.clip_norm(clip);
+                    params.passive[p].sgd_step(&st.gp, lr);
                 }
             }
-            pending = Some((a.rows.clone(), out.grad_z));
+            // The current grad_z buffers move into `pending`; the next
+            // step's active_step_into re-sizes fresh ones.
+            pending = Some((a.rows.clone(), std::mem::take(&mut st.step.grad_z)));
             // Passive's embedding params refresh lags one step.
             stale_passive = params.passive.clone();
-            losses.push(out.loss);
+            losses.push(loss);
             n += 1;
         }
         if cancelled {
@@ -331,7 +396,6 @@ pub(crate) fn train_avfl(ctx: &TrainCtx<'_>) -> SessionResult {
 /// AVFL-PS: ν worker-local replicas, locally updated all epoch, averaged
 /// at a per-epoch PS barrier (local SGD).
 pub(crate) fn train_avfl_ps(ctx: &TrainCtx<'_>) -> SessionResult {
-    let engine = ctx.engine.as_ref();
     let train = ctx.train;
     let cfg = ctx.cfg;
     let pairs = cfg.parties.active_workers.min(cfg.parties.passive_workers).max(1);
@@ -357,22 +421,16 @@ pub(crate) fn train_avfl_ps(ctx: &TrainCtx<'_>) -> SessionResult {
                 break;
             }
             let r = &mut replicas[i % pairs];
-            let (x_a, x_p, y) = st.batch_inputs(&a.rows);
-            let zs: Vec<Matrix> = (0..k)
-                .map(|p| engine.passive_fwd(p, &r.passive[p], &x_p[p]))
-                .collect();
-            let mut out = engine.active_step(&r.active, &r.top, &x_a, &zs, &y);
-            let clip = cfg.train.grad_clip as f32;
+            st.gather(&a.rows);
+            st.forward_embeddings(&r.passive);
+            let loss = st.active_step(&r.active, &r.top);
             for p in 0..k {
-                let mut g = engine.passive_bwd(p, &r.passive[p], &x_p[p], &out.grad_z[p]);
-                g.clip_norm(clip);
-                r.passive[p].sgd_step(&g, lr);
+                let g = st.passive_grad(p, &r.passive[p]);
+                r.passive[p].sgd_step(g, lr);
             }
-            out.grad_active.clip_norm(clip);
-            out.grad_top.clip_norm(clip);
-            r.active.sgd_step(&out.grad_active, lr);
-            r.top.sgd_step(&out.grad_top, lr);
-            losses.push(out.loss);
+            r.active.sgd_step(&st.step.grad_active, lr);
+            r.top.sgd_step(&st.step.grad_top, lr);
+            losses.push(loss);
         }
         if cancelled {
             ctx.emit(RunEvent::Cancelled { epoch });
@@ -394,10 +452,10 @@ pub(crate) fn train_avfl_ps(ctx: &TrainCtx<'_>) -> SessionResult {
     st.result(mean, epochs_run, reached_target, sw)
 }
 
-fn accumulate(acc: &mut Option<MlpParams>, g: MlpParams) {
+fn accumulate(acc: &mut Option<MlpParams>, g: &MlpParams) {
     match acc {
-        None => *acc = Some(g),
-        Some(a) => a.axpy(1.0, &g),
+        None => *acc = Some(g.clone()),
+        Some(a) => a.axpy(1.0, g),
     }
 }
 

@@ -1,7 +1,10 @@
 //! Micro/macro benchmark harness (criterion is not in the vendored crate
-//! set): warmup + timed iterations with mean/p50/p95 reporting, plus the
-//! table printer shared by every `rust/benches/*` target.
+//! set): warmup + timed iterations with mean/p50/p95 reporting, the
+//! table printer shared by every `rust/benches/*` target, and the
+//! `BENCH_*.json` emitter CI uses to track the perf trajectory across
+//! PRs.
 
+use crate::jsonio::Json;
 use crate::util::{percentile, Stopwatch};
 use std::time::Duration;
 
@@ -51,6 +54,31 @@ pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Be
         p95: Duration::from_secs_f64(percentile(&secs, 95.0)),
         min: Duration::from_secs_f64(secs.iter().cloned().fold(f64::INFINITY, f64::min)),
     }
+}
+
+/// Serialize stats as a JSON array (durations in nanoseconds) so CI can
+/// upload machine-readable bench results, e.g. `BENCH_hotpath.json`.
+pub fn stats_to_json(stats: &[BenchStats]) -> Json {
+    Json::Arr(
+        stats
+            .iter()
+            .map(|b| {
+                let mut o = Json::obj();
+                o.set("name", Json::Str(b.name.clone()))
+                    .set("iters", Json::Num(b.iters as f64))
+                    .set("mean_ns", Json::Num(b.mean.as_nanos() as f64))
+                    .set("p50_ns", Json::Num(b.p50.as_nanos() as f64))
+                    .set("p95_ns", Json::Num(b.p95.as_nanos() as f64))
+                    .set("min_ns", Json::Num(b.min.as_nanos() as f64));
+                o
+            })
+            .collect(),
+    )
+}
+
+/// Write `stats` to `path` as pretty-printed JSON (best-effort).
+pub fn save_json(path: &str, stats: &[BenchStats]) {
+    let _ = std::fs::write(path, stats_to_json(stats).pretty());
 }
 
 /// Simple fixed-width table printer for paper-style outputs.
@@ -136,6 +164,19 @@ mod tests {
         assert!(s.min <= s.p50 && s.p50 <= s.p95);
         assert!(s.per_second(1000.0) > 0.0);
         assert!(s.row().contains("noop-ish"));
+    }
+
+    #[test]
+    fn stats_json_roundtrips() {
+        let s = bench("kernel", 0, 3, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        let j = stats_to_json(&[s]);
+        let parsed = Json::parse(&j.pretty()).unwrap();
+        let row = parsed.idx(0).unwrap();
+        assert_eq!(row.get("name").unwrap().as_str(), Some("kernel"));
+        assert_eq!(row.get("iters").unwrap().as_usize(), Some(3));
+        assert!(row.get("mean_ns").unwrap().as_f64().unwrap() >= 0.0);
     }
 
     #[test]

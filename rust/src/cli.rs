@@ -83,6 +83,10 @@ pub fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     if let Some(e) = args.get("engine") {
         cfg.engine = EngineKind::parse(e).ok_or_else(|| anyhow!("unknown engine '{e}'"))?;
     }
+    if let Some(b) = args.get("backend") {
+        cfg.backend = crate::linalg::BackendKind::parse(b)
+            .ok_or_else(|| anyhow!("unknown linalg backend '{b}' (naive|tiled|threaded)"))?;
+    }
     if let Some(n) = args.get("name") {
         cfg.name = n.to_string();
     }
@@ -113,6 +117,7 @@ USAGE:
 
 COMMANDS:
   train       run one experiment            [--arch pubsub --dataset bank --engine host|xla
+                                             --backend naive|tiled|threaded
                                              --batch N --epochs N --lr F --mu F --config file.toml]
   compare     all five architectures        [--dataset synthetic --samples N]
   plan        Algorithm 2 planner           [--ca N --cp N]
@@ -324,6 +329,15 @@ mod tests {
     fn bad_arch_rejected() {
         let a = Args::parse(&argv("train --arch ring"));
         assert!(config_from_args(&a).is_err());
+    }
+
+    #[test]
+    fn backend_flag_parsed() {
+        let a = Args::parse(&argv("train --backend threaded"));
+        let cfg = config_from_args(&a).unwrap();
+        assert_eq!(cfg.backend, crate::linalg::BackendKind::Threaded);
+        let bad = Args::parse(&argv("train --backend gpu"));
+        assert!(config_from_args(&bad).is_err());
     }
 
     #[test]

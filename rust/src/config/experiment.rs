@@ -7,6 +7,7 @@
 //! semi-async interval ΔT0 (Eq. 5), and the GDP privacy budget μ.
 
 use super::toml::{TomlDoc, TomlError};
+use crate::linalg::BackendKind;
 use std::fmt;
 
 /// Which of the five evaluated system architectures drives training.
@@ -198,6 +199,11 @@ pub struct ExperimentConfig {
     pub dp: DpConfig,
     pub ablation: AblationConfig,
     pub engine: EngineKind,
+    /// Linear-algebra kernel backend for the host engine
+    /// (`naive | tiled | threaded`); see [`crate::linalg`]. Threaded
+    /// pools are clamped per worker so the planner's (p, q) allocation
+    /// never oversubscribes the machine.
+    pub backend: BackendKind,
     pub artifacts_dir: String,
     /// Inter-party bandwidth in MB/s (Eq. 9).
     pub bandwidth_mbps: f64,
@@ -242,6 +248,7 @@ impl Default for ExperimentConfig {
             dp: DpConfig { enabled: false, mu: f64::INFINITY },
             ablation: AblationConfig::default(),
             engine: EngineKind::Host,
+            backend: BackendKind::default(),
             artifacts_dir: "artifacts".into(),
             bandwidth_mbps: 1000.0,
             passive_parties: 1,
@@ -322,6 +329,9 @@ impl ExperimentConfig {
         let engine = doc.str_or("engine", "kind", "host");
         c.engine = EngineKind::parse(&engine)
             .ok_or_else(|| ConfigError::Invalid(format!("unknown engine '{engine}'")))?;
+        let backend = doc.str_or("engine", "backend", c.backend.name());
+        c.backend = BackendKind::parse(&backend)
+            .ok_or_else(|| ConfigError::Invalid(format!("unknown linalg backend '{backend}'")))?;
         c.artifacts_dir = doc.str_or("engine", "artifacts_dir", &c.artifacts_dir);
         c.bandwidth_mbps = doc.f64_or("network", "bandwidth_mbps", c.bandwidth_mbps);
         c.validate()?;
@@ -433,6 +443,15 @@ bandwidth_mbps = 500.0
     fn unknown_architecture_rejected() {
         let e = ExperimentConfig::from_toml("[experiment]\narchitecture = \"ring\"");
         assert!(e.is_err());
+    }
+
+    #[test]
+    fn backend_parses_and_defaults() {
+        let c = ExperimentConfig::from_toml("[engine]\nbackend = \"threaded\"").unwrap();
+        assert_eq!(c.backend, BackendKind::Threaded);
+        let d = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(d.backend, BackendKind::Tiled);
+        assert!(ExperimentConfig::from_toml("[engine]\nbackend = \"gpu\"").is_err());
     }
 
     #[test]

@@ -18,4 +18,6 @@ pub use channel::{Publish, SubResult, Topic};
 pub use ledger::{BatchLedger, BatchStage, EmbedJob};
 pub use messages::{EmbeddingMsg, GradientMsg};
 pub use ps::{ParameterServer, PsMode, SemiAsyncSchedule};
-pub use session::{evaluate, reached, train_pubsub, train_pubsub_session, SessionResult};
+pub use session::{
+    evaluate, evaluate_ws, reached, train_pubsub, train_pubsub_session, SessionResult,
+};

@@ -38,8 +38,11 @@ use crate::config::ExperimentConfig;
 use crate::data::{BatchPlan, Task, VerticalDataset};
 use crate::dp::GaussianMechanism;
 use crate::experiment::{RunEvent, RunOptions, TrainCtx};
+use crate::linalg;
 use crate::metrics::Metrics;
-use crate::model::{auc, rmse, MlpParams, SplitEngine, SplitModelSpec, SplitParams};
+use crate::model::{
+    auc, rmse, ActiveStepBuf, MlpParams, SplitEngine, SplitModelSpec, SplitParams, Workspace,
+};
 use crate::tensor::Matrix;
 use crate::util::{Rng, Stopwatch};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -65,7 +68,8 @@ pub struct SessionResult {
 
 /// Evaluate the split model on a dataset in engine-batch-sized chunks
 /// (AOT artifacts have a static batch dimension; the ragged tail is
-/// dropped, consistent with training).
+/// dropped, consistent with training). Uses the process-default backend;
+/// sessions with a configured backend call [`evaluate_ws`].
 pub fn evaluate(
     engine: &dyn SplitEngine,
     params: &SplitParams,
@@ -73,18 +77,42 @@ pub fn evaluate(
     batch: usize,
     task: Task,
 ) -> f64 {
+    evaluate_ws(engine, params, data, batch, task, &mut Workspace::with_default_backend())
+}
+
+/// [`evaluate`] on a caller-provided workspace (and thus backend). The
+/// workspace carries the kernel scratch across calls; the small
+/// gather/prediction buffers below are reused across chunks within one
+/// call.
+pub fn evaluate_ws(
+    engine: &dyn SplitEngine,
+    params: &SplitParams,
+    data: &VerticalDataset,
+    batch: usize,
+    task: Task,
+    ws: &mut Workspace,
+) -> f64 {
     let n = data.len();
     let mut scores: Vec<f32> = Vec::with_capacity(n);
     let mut labels: Vec<f32> = Vec::with_capacity(n);
+    let mut x_a = Matrix::default();
+    let mut x_p = vec![Matrix::default(); data.passive.len()];
+    let mut preds = Matrix::default();
     let mut i = 0;
     while i + batch <= n {
-        let x_a = data.active.x.slice_rows(i, i + batch);
-        let x_p: Vec<Matrix> = data
-            .passive
-            .iter()
-            .map(|p| p.x.slice_rows(i, i + batch))
-            .collect();
-        let preds = engine.predict(&params.active, &params.top, &params.passive, &x_a, &x_p);
+        data.active.x.slice_rows_into(i, i + batch, &mut x_a);
+        for (p, buf) in x_p.iter_mut().enumerate() {
+            data.passive[p].x.slice_rows_into(i, i + batch, buf);
+        }
+        engine.predict_into(
+            &params.active,
+            &params.top,
+            &params.passive,
+            &x_a,
+            &x_p,
+            ws,
+            &mut preds,
+        );
         scores.extend_from_slice(&preds.data);
         labels.extend_from_slice(&data.y[i..i + batch]);
         i += batch;
@@ -167,6 +195,17 @@ pub fn train_pubsub_session(ctx: &TrainCtx<'_>) -> SessionResult {
     });
     let poll = Duration::from_millis(2);
 
+    // Linalg backend: every worker gets its own Workspace; the Threaded
+    // backend's per-worker pool is clamped so
+    // `workers × threads ≤ available_parallelism()` (the planner's (p, q)
+    // allocation drives `total_workers`).
+    let backend_kind = cfg.backend;
+    let total_workers = w_a + k * w_p;
+    metrics.gauge_max(
+        "linalg_threads_per_worker",
+        linalg::worker_threads(backend_kind, total_workers) as f64,
+    );
+
     let mut rng = Rng::new(cfg.seed);
     let init = SplitParams::init(spec, &mut rng);
 
@@ -241,6 +280,10 @@ pub fn train_pubsub_session(ctx: &TrainCtx<'_>) -> SessionResult {
     let mut reached_target = false;
     let mut epochs_run = 0usize;
     let mut cancelled = false;
+    // Supervisor-owned eval workspace on the configured backend (the
+    // workers are idle during evaluation, so a single worker's budget —
+    // i.e. the whole machine — applies).
+    let mut eval_ws = Workspace::new(linalg::worker_backend(backend_kind, 1));
     let sw = Stopwatch::start();
 
     std::thread::scope(|s| {
@@ -255,6 +298,15 @@ pub fn train_pubsub_session(ctx: &TrainCtx<'_>) -> SessionResult {
                 let ps = &ps_passive[party];
                 let train_ref = train;
                 s.spawn(move || {
+                    // Worker-lived compute state: scratch arena + reused
+                    // gather/output buffers — the steady-state step
+                    // allocates only the embedding payloads it publishes
+                    // (ownership crosses the channel).
+                    let mut ws =
+                        Workspace::new(linalg::worker_backend(backend_kind, total_workers));
+                    let mut x_buf = Matrix::default();
+                    let mut z_buf = Matrix::default();
+                    let mut grad_buf = MlpParams::default();
                     loop {
                         // Priority 1: backward work from the gradient
                         // channel.
@@ -269,15 +321,21 @@ pub fn train_pubsub_session(ctx: &TrainCtx<'_>) -> SessionResult {
                                     metrics.inc("stale_grads_dropped", 1);
                                     continue;
                                 };
-                                let x = train_ref.passive[party].x.take_rows(&rows);
+                                train_ref.passive[party].x.take_rows_into(&rows, &mut x_buf);
                                 let mut local = replica.lock().unwrap();
                                 let t = Instant::now();
-                                let mut g =
-                                    engine.passive_bwd(party, &local.params, &x, &gmsg.grad_z);
-                                g.clip_norm(clip);
-                                local.params.sgd_step(&g, lr);
+                                engine.passive_bwd_into(
+                                    party,
+                                    &local.params,
+                                    &x_buf,
+                                    &gmsg.grad_z,
+                                    &mut ws,
+                                    &mut grad_buf,
+                                );
+                                grad_buf.clip_norm(clip);
+                                local.params.sgd_step(&grad_buf, lr);
                                 drop(local);
-                                ps.push_grad(&g);
+                                ps.push_grad(&grad_buf);
                                 metrics.add_busy(t.elapsed());
                                 metrics.inc("passive_bwd", 1);
                                 // Credit the epoch only now that the
@@ -294,13 +352,19 @@ pub fn train_pubsub_session(ctx: &TrainCtx<'_>) -> SessionResult {
                         }
                         // Priority 2: produce the next embedding.
                         if let Some(job) = ledger.next_embed_job(party) {
-                            let x = train_ref.passive[party].x.take_rows(&job.rows);
+                            train_ref.passive[party].x.take_rows_into(&job.rows, &mut x_buf);
                             let local = replica.lock().unwrap();
                             let t = Instant::now();
-                            let mut z = engine.passive_fwd(party, &local.params, &x);
+                            engine.passive_fwd_into(
+                                party,
+                                &local.params,
+                                &x_buf,
+                                &mut ws,
+                                &mut z_buf,
+                            );
                             let version = local.version;
                             drop(local);
-                            dp[party].lock().unwrap().perturb(&mut z);
+                            dp[party].lock().unwrap().perturb(&mut z_buf);
                             metrics.add_busy(t.elapsed());
                             if !ledger.begin_publish(job.batch_id, job.generation, party) {
                                 // The batch was reassigned while we were
@@ -313,7 +377,7 @@ pub fn train_pubsub_session(ctx: &TrainCtx<'_>) -> SessionResult {
                                 batch_id: job.batch_id,
                                 party,
                                 generation: job.generation,
-                                z,
+                                z: std::mem::take(&mut z_buf),
                                 produced_at: Instant::now(),
                                 param_version: version,
                             });
@@ -351,6 +415,11 @@ pub fn train_pubsub_session(ctx: &TrainCtx<'_>) -> SessionResult {
             let emb_version_max = &emb_version_max;
             let train_ref = train;
             s.spawn(move || {
+                // Worker-lived compute state (see the passive pool).
+                let mut ws = Workspace::new(linalg::worker_backend(backend_kind, total_workers));
+                let mut step = ActiveStepBuf::default();
+                let mut x_buf = Matrix::default();
+                let mut y_buf: Vec<f32> = Vec::new();
                 'outer: loop {
                     let waited = Instant::now();
                     // Take any ready embedding from party 0, then join the
@@ -413,19 +482,27 @@ pub fn train_pubsub_session(ctx: &TrainCtx<'_>) -> SessionResult {
                         }
                         continue;
                     }
-                    let x_a = train_ref.active.x.take_rows(&rows);
-                    let y: Vec<f32> = rows.iter().map(|&r| train_ref.y[r]).collect();
+                    train_ref.active.x.take_rows_into(&rows, &mut x_buf);
+                    y_buf.clear();
+                    y_buf.extend(rows.iter().map(|&r| train_ref.y[r]));
                     let mut local = replica.lock().unwrap();
                     let t = Instant::now();
-                    let mut out =
-                        engine.active_step(&local.active, &local.top, &x_a, &zs, &y);
-                    out.grad_active.clip_norm(clip);
-                    out.grad_top.clip_norm(clip);
-                    local.active.sgd_step(&out.grad_active, lr);
-                    local.top.sgd_step(&out.grad_top, lr);
+                    engine.active_step_into(
+                        &local.active,
+                        &local.top,
+                        &x_buf,
+                        &zs,
+                        &y_buf,
+                        &mut ws,
+                        &mut step,
+                    );
+                    step.grad_active.clip_norm(clip);
+                    step.grad_top.clip_norm(clip);
+                    local.active.sgd_step(&step.grad_active, lr);
+                    local.top.sgd_step(&step.grad_top, lr);
                     drop(local);
-                    ps_active.push_grad(&out.grad_active);
-                    ps_top.push_grad(&out.grad_top);
+                    ps_active.push_grad(&step.grad_active);
+                    ps_top.push_grad(&step.grad_top);
                     metrics.add_busy(t.elapsed());
                     metrics.inc("active_steps", 1);
                     // Staleness: embedding production version vs the live
@@ -439,11 +516,11 @@ pub fn train_pubsub_session(ctx: &TrainCtx<'_>) -> SessionResult {
                     stale_n.fetch_add(k as u64, Ordering::Relaxed);
                     {
                         let mut l = epoch_loss.lock().unwrap();
-                        l.0 += out.loss;
+                        l.0 += step.loss;
                         l.1 += 1;
                     }
                     ledger.mark_stepped(id, generation);
-                    for (party, gz) in out.grad_z.into_iter().enumerate() {
+                    for party in 0..k {
                         if ledger.generation(id) != Some(generation) {
                             // The batch was reassigned mid-publish (a
                             // sibling gradient of ours was evicted): stop
@@ -455,9 +532,11 @@ pub fn train_pubsub_session(ctx: &TrainCtx<'_>) -> SessionResult {
                             batch_id: id,
                             party,
                             generation,
-                            grad_z: gz,
+                            // Ownership crosses the channel: take the
+                            // buffer (the next step re-grows it).
+                            grad_z: std::mem::take(&mut step.grad_z[party]),
                             produced_at: Instant::now(),
-                            loss: out.loss,
+                            loss: step.loss,
                         });
                         if let Some((old_id, old_gen)) = evicted {
                             // A dropped gradient would strand its batch:
@@ -587,7 +666,7 @@ pub fn train_pubsub_session(ctx: &TrainCtx<'_>) -> SessionResult {
             metrics.push_point("train_loss", epoch as f64, mean_loss);
 
             let eval_params = current_params(&active_replicas, &passive_replicas);
-            let metric = evaluate(engine.as_ref(), &eval_params, test, b, task);
+            let metric = evaluate_ws(engine.as_ref(), &eval_params, test, b, task, &mut eval_ws);
             metric_curve.push((epoch as f64, metric));
             metrics.push_point("eval_metric", epoch as f64, metric);
             opts.emit(RunEvent::Eval { epoch, metric });
@@ -603,7 +682,7 @@ pub fn train_pubsub_session(ctx: &TrainCtx<'_>) -> SessionResult {
     });
 
     let params = current_params(&active_replicas, &passive_replicas);
-    let final_metric = evaluate(engine.as_ref(), &params, test, b, task);
+    let final_metric = evaluate_ws(engine.as_ref(), &params, test, b, task, &mut eval_ws);
     SessionResult {
         params,
         loss_curve,

@@ -84,6 +84,13 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Linear-algebra kernel backend for the host engine
+    /// ([`crate::linalg::BackendKind`]).
+    pub fn backend(mut self, kind: crate::linalg::BackendKind) -> Self {
+        self.cfg.backend = kind;
+        self
+    }
+
     pub fn artifacts_dir(mut self, dir: &str) -> Self {
         self.cfg.artifacts_dir = dir.to_string();
         self

@@ -37,6 +37,7 @@ pub mod data;
 pub mod dp;
 pub mod experiment;
 pub mod jsonio;
+pub mod linalg;
 pub mod metrics;
 pub mod model;
 pub mod planner;

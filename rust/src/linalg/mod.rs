@@ -1,0 +1,319 @@
+//! Pluggable dense linear-algebra backends for the compute hot path.
+//!
+//! Every GEMM the host engine performs goes through a [`Backend`], whose
+//! kernels are **write-to-preallocated** (`_into`) so the steady-state
+//! training step performs zero heap allocations (see
+//! [`crate::model::Workspace`]). Three implementations ship:
+//!
+//! - [`Naive`] — the reference kernels (the seed `Matrix::matmul`
+//!   semantics, with the zero-skip inconsistency fixed); `Matrix::matmul`
+//!   and friends delegate here.
+//! - [`Tiled`] — cache-blocked panels with deeper register unrolling.
+//! - [`Threaded`] — the tiled kernels fanned out as row panels over a
+//!   [`crate::util::ThreadPool`] fork-join ([`ThreadPool::scope_ranges`]).
+//!
+//! **Accumulation-order contract:** every backend accumulates each output
+//! element over the shared dimension in ascending index order, so all
+//! three produce *bit-identical* results (f32 addition is not
+//! reassociated). The backend-parity tests below pin this down; future
+//! SIMD/XLA backends that relax it only have to stay within 1e-5.
+//!
+//! Backend selection flows from `ExperimentConfig::backend` (TOML
+//! `[engine] backend`, CLI `--backend naive|tiled|threaded`). Training
+//! sessions derive per-worker thread budgets with [`worker_backend`],
+//! which clamps `workers × per-worker threads ≤ available_parallelism()`
+//! so the planner's (p, q) worker allocation can never oversubscribe the
+//! machine.
+
+pub mod naive;
+pub mod tiled;
+pub mod threaded;
+
+pub use naive::Naive;
+pub use tiled::Tiled;
+pub use threaded::Threaded;
+
+use crate::tensor::Matrix;
+use std::fmt;
+use std::sync::{Arc, OnceLock};
+
+/// A dense linear-algebra kernel provider.
+///
+/// All kernels write into a caller-owned output matrix, resizing it in
+/// place (capacity is retained across calls, so repeated steps with
+/// stable shapes never reallocate).
+pub trait Backend: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Worker threads this backend fans kernels out to (1 = inline).
+    fn threads(&self) -> usize {
+        1
+    }
+
+    /// `out = a @ b`.
+    fn matmul_into(&self, a: &Matrix, b: &Matrix, out: &mut Matrix);
+
+    /// `out = a^T @ b` without materializing the transpose (dW = x^T dy).
+    fn matmul_at_into(&self, a: &Matrix, b: &Matrix, out: &mut Matrix);
+
+    /// `out = a @ b^T` without materializing the transpose (dx = dy W^T).
+    fn matmul_bt_into(&self, a: &Matrix, b: &Matrix, out: &mut Matrix);
+}
+
+/// Which [`Backend`] implementation to run; part of
+/// [`crate::config::ExperimentConfig`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// Reference kernels (seed semantics).
+    Naive,
+    /// Cache-blocked, single-threaded (the default).
+    #[default]
+    Tiled,
+    /// Tiled + row-panel fork-join on the util thread pool.
+    Threaded,
+}
+
+impl BackendKind {
+    pub const ALL: [BackendKind; 3] =
+        [BackendKind::Naive, BackendKind::Tiled, BackendKind::Threaded];
+
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "naive" | "reference" => Some(BackendKind::Naive),
+            "tiled" | "blocked" => Some(BackendKind::Tiled),
+            "threaded" | "parallel" => Some(BackendKind::Threaded),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Naive => "naive",
+            BackendKind::Tiled => "tiled",
+            BackendKind::Threaded => "threaded",
+        }
+    }
+}
+
+impl fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Instantiate a backend. `threads` only matters for
+/// [`BackendKind::Threaded`]; `threads <= 1` degrades to [`Tiled`]
+/// (a one-thread fork-join is pure overhead).
+pub fn make(kind: BackendKind, threads: usize) -> Arc<dyn Backend> {
+    match kind {
+        BackendKind::Naive => Arc::new(Naive),
+        BackendKind::Tiled => Arc::new(Tiled),
+        BackendKind::Threaded if threads <= 1 => Arc::new(Tiled),
+        BackendKind::Threaded => Arc::new(Threaded::new(threads)),
+    }
+}
+
+/// Cores the OS reports (>= 1).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Per-worker linalg thread budget for a session running `total_workers`
+/// concurrent compute workers (the planner's p + k·q allocation):
+/// `workers × threads ≤ available_parallelism()`, floored at 1.
+pub fn worker_threads(kind: BackendKind, total_workers: usize) -> usize {
+    match kind {
+        BackendKind::Threaded => (available_threads() / total_workers.max(1)).max(1),
+        _ => 1,
+    }
+}
+
+/// The backend one worker of a `total_workers`-worker session should use;
+/// [`BackendKind::Threaded`] is clamped (possibly down to [`Tiled`]) so
+/// the session as a whole never oversubscribes the machine.
+pub fn worker_backend(kind: BackendKind, total_workers: usize) -> Arc<dyn Backend> {
+    make(kind, worker_threads(kind, total_workers))
+}
+
+/// Process-wide default backend (single-threaded [`Tiled`]), used by the
+/// allocating compatibility wrappers in `model::host` and one-shot
+/// callers like the attack module.
+pub fn default_backend() -> &'static Arc<dyn Backend> {
+    static DEFAULT: OnceLock<Arc<dyn Backend>> = OnceLock::new();
+    DEFAULT.get_or_init(|| Arc::new(Tiled))
+}
+
+/// Shared shape checks; every backend calls these so panics are uniform.
+#[inline]
+pub(crate) fn shape_matmul(a: &Matrix, b: &Matrix) -> (usize, usize, usize) {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+    (a.rows, a.cols, b.cols)
+}
+
+#[inline]
+pub(crate) fn shape_matmul_at(a: &Matrix, b: &Matrix) -> (usize, usize, usize) {
+    assert_eq!(a.rows, b.rows, "matmul_at shape mismatch");
+    (a.rows, a.cols, b.cols)
+}
+
+#[inline]
+pub(crate) fn shape_matmul_bt(a: &Matrix, b: &Matrix) -> (usize, usize, usize) {
+    assert_eq!(a.cols, b.cols, "matmul_bt shape mismatch");
+    (a.rows, a.cols, b.rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn backends() -> Vec<(&'static str, Arc<dyn Backend>)> {
+        vec![
+            ("naive", make(BackendKind::Naive, 1)),
+            ("tiled", make(BackendKind::Tiled, 1)),
+            ("threaded", Arc::new(Threaded::new(3)) as Arc<dyn Backend>),
+        ]
+    }
+
+    /// Awkward shapes: tail rows (m % 4 != 0), k = 1, n = 1, empty batch,
+    /// and sizes crossing the tile boundaries.
+    const SHAPES: [(usize, usize, usize); 9] = [
+        (0, 3, 2),
+        (1, 1, 1),
+        (3, 1, 5),
+        (5, 7, 1),
+        (2, 3, 4),
+        (7, 13, 2),
+        (17, 31, 9),
+        (64, 64, 64),
+        (130, 250, 33),
+    ];
+
+    #[test]
+    fn backends_agree_on_matmul() {
+        let mut rng = Rng::new(11);
+        for &(m, k, n) in &SHAPES {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let reference = a.matmul(&b);
+            for (name, be) in backends() {
+                let mut out = Matrix::default();
+                be.matmul_into(&a, &b, &mut out);
+                assert_eq!(out.shape(), (m, n), "{name} {m}x{k}x{n}");
+                assert!(
+                    out.max_abs_diff(&reference) < 1e-5,
+                    "{name} diverges on {m}x{k}x{n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backends_agree_on_matmul_at() {
+        let mut rng = Rng::new(12);
+        for &(k, m, n) in &SHAPES {
+            let a = Matrix::randn(k, m, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let reference = a.transpose().matmul(&b);
+            for (name, be) in backends() {
+                let mut out = Matrix::default();
+                be.matmul_at_into(&a, &b, &mut out);
+                assert_eq!(out.shape(), (m, n), "{name}");
+                assert!(
+                    out.max_abs_diff(&reference) < 1e-5,
+                    "{name} diverges on at {k}x{m}x{n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backends_agree_on_matmul_bt() {
+        let mut rng = Rng::new(13);
+        for &(m, k, n) in &SHAPES {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(n, k, 1.0, &mut rng);
+            let reference = a.matmul(&b.transpose());
+            for (name, be) in backends() {
+                let mut out = Matrix::default();
+                be.matmul_bt_into(&a, &b, &mut out);
+                assert_eq!(out.shape(), (m, n), "{name}");
+                assert!(
+                    out.max_abs_diff(&reference) < 1e-5,
+                    "{name} diverges on bt {m}x{k}x{n}"
+                );
+            }
+        }
+    }
+
+    /// The accumulation-order contract makes the agreement *exact*, not
+    /// just within tolerance — pin it so a future kernel change that
+    /// reassociates sums is a conscious decision.
+    #[test]
+    fn tiled_and_threaded_are_bit_identical_to_naive() {
+        let mut rng = Rng::new(14);
+        let a = Matrix::randn(37, 53, 1.0, &mut rng);
+        let b = Matrix::randn(53, 29, 1.0, &mut rng);
+        let mut want = Matrix::default();
+        Naive.matmul_into(&a, &b, &mut want);
+        for (name, be) in backends() {
+            let mut got = Matrix::default();
+            be.matmul_into(&a, &b, &mut got);
+            assert_eq!(got.data, want.data, "{name} not bit-identical");
+        }
+    }
+
+    #[test]
+    fn output_buffer_reuse_is_clean() {
+        // A dirty, wrongly-shaped output buffer must not leak into the
+        // result (kernels resize + overwrite/zero).
+        let mut rng = Rng::new(15);
+        let a = Matrix::randn(6, 5, 1.0, &mut rng);
+        let b = Matrix::randn(5, 4, 1.0, &mut rng);
+        let want = a.matmul(&b);
+        for (name, be) in backends() {
+            let mut out = Matrix::from_vec(2, 2, vec![f32::NAN; 4]);
+            be.matmul_into(&a, &b, &mut out);
+            assert_eq!(out.shape(), (6, 4));
+            assert!(out.max_abs_diff(&want) < 1e-6, "{name} kept stale data");
+        }
+        // bt skips the zeroing memset (pure overwrite kernel) — a dirty
+        // reused buffer must still come out fully clean.
+        let c = Matrix::randn(6, 5, 1.0, &mut rng);
+        let d = Matrix::randn(7, 5, 1.0, &mut rng);
+        let want_bt = c.matmul(&d.transpose());
+        for (name, be) in backends() {
+            let mut out = Matrix::from_vec(9, 9, vec![f32::NAN; 81]);
+            be.matmul_bt_into(&c, &d, &mut out);
+            assert_eq!(out.shape(), (6, 7));
+            assert!(out.max_abs_diff(&want_bt) < 1e-6, "{name} bt kept stale data");
+        }
+    }
+
+    #[test]
+    fn kind_parsing_and_selection() {
+        assert_eq!(BackendKind::parse("Tiled"), Some(BackendKind::Tiled));
+        assert_eq!(BackendKind::parse("THREADED"), Some(BackendKind::Threaded));
+        assert_eq!(BackendKind::parse("naive"), Some(BackendKind::Naive));
+        assert_eq!(BackendKind::parse("gpu"), None);
+        for k in BackendKind::ALL {
+            assert_eq!(BackendKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(BackendKind::default(), BackendKind::Tiled);
+    }
+
+    #[test]
+    fn threaded_clamps_to_tiled_when_starved() {
+        // One thread per worker (or fewer) ⇒ the fork-join is pure
+        // overhead; `make` degrades to the tiled backend.
+        let be = make(BackendKind::Threaded, 1);
+        assert_eq!(be.name(), "tiled");
+        let avail = available_threads();
+        assert_eq!(worker_threads(BackendKind::Threaded, avail * 2), 1);
+        assert_eq!(worker_threads(BackendKind::Tiled, 1), 1);
+        // A single worker gets the whole machine.
+        assert_eq!(worker_threads(BackendKind::Threaded, 1), avail);
+        let total = worker_threads(BackendKind::Threaded, 3) * 3;
+        assert!(total <= avail.max(3), "oversubscribed: {total} > {avail}");
+    }
+}

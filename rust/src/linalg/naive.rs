@@ -1,0 +1,112 @@
+//! Reference kernels: the seed `Matrix::matmul` / `matmul_at` /
+//! `matmul_bt` loops, hoisted out of `tensor.rs` so `Matrix`'s allocating
+//! methods and the [`Naive`] backend share one implementation.
+//!
+//! One deliberate semantic fix vs the seed: the tail/saxpy paths used to
+//! skip `a == 0.0` terms, so `0 · NaN` contributed `NaN` in 4-row-blocked
+//! rows but nothing in tail rows — NaN/Inf propagation depended on the
+//! row index. The zero-skip is gone; every row now computes every term
+//! (regression-tested in `tensor.rs`).
+
+use super::{shape_matmul, shape_matmul_at, shape_matmul_bt, Backend};
+use crate::tensor::Matrix;
+
+/// `out = a @ b` — row-major, 4-row register-blocked.
+///
+/// Each pass over B's rows updates four output rows at once, cutting
+/// B-matrix memory traffic 4× vs the plain saxpy loop; the inner loop
+/// stays contiguous so it autovectorizes.
+pub fn matmul_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    let (m, k, n) = shape_matmul(a, b);
+    out.resize(m, n);
+    let mut i = 0;
+    // 4-row blocks.
+    while i + 4 <= m {
+        let (a0, a1, a2, a3) = (a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3));
+        // Split the output buffer into the four rows.
+        let (top, rest) = out.data[i * n..].split_at_mut(n);
+        let (r1, rest) = rest.split_at_mut(n);
+        let (r2, rest) = rest.split_at_mut(n);
+        let r3 = &mut rest[..n];
+        for p in 0..k {
+            let (c0, c1, c2, c3) = (a0[p], a1[p], a2[p], a3[p]);
+            let brow = &b.data[p * n..(p + 1) * n];
+            for j in 0..n {
+                let bv = brow[j];
+                top[j] += c0 * bv;
+                r1[j] += c1 * bv;
+                r2[j] += c2 * bv;
+                r3[j] += c3 * bv;
+            }
+        }
+        i += 4;
+    }
+    // Tail rows: plain saxpy (every term computed — see module docs).
+    while i < m {
+        let arow = a.row(i);
+        let orow = &mut out.data[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate().take(k) {
+            let brow = &b.data[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+        i += 1;
+    }
+}
+
+/// `out = a^T @ b` without materializing the transpose (dW = x^T @ dy).
+pub fn matmul_at_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    let (k, m, n) = shape_matmul_at(a, b);
+    out.resize(m, n);
+    for p in 0..k {
+        let arow = a.row(p);
+        let brow = b.row(p);
+        for (i, &av) in arow.iter().enumerate().take(m) {
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `out = a @ b^T` without materializing the transpose (dx = dy @ W^T).
+pub fn matmul_bt_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    let (m, k, n) = shape_matmul_bt(a, b);
+    // Every element is written (pure dot products) — no zeroing needed.
+    out.resize_for_overwrite(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        let orow = out.row_mut(i);
+        for (j, o) in orow.iter_mut().enumerate().take(n) {
+            let brow = b.row(j);
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += arow[p] * brow[p];
+            }
+            *o = acc;
+        }
+    }
+}
+
+/// Reference backend — current/seed semantics.
+pub struct Naive;
+
+impl Backend for Naive {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn matmul_into(&self, a: &Matrix, b: &Matrix, out: &mut Matrix) {
+        matmul_into(a, b, out);
+    }
+
+    fn matmul_at_into(&self, a: &Matrix, b: &Matrix, out: &mut Matrix) {
+        matmul_at_into(a, b, out);
+    }
+
+    fn matmul_bt_into(&self, a: &Matrix, b: &Matrix, out: &mut Matrix) {
+        matmul_bt_into(a, b, out);
+    }
+}

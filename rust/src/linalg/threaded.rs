@@ -1,0 +1,143 @@
+//! Threaded backend: the tiled row-panel kernels forked across a
+//! [`ThreadPool`] and joined before returning ([`ThreadPool::scope_ranges`]).
+//!
+//! Panels are disjoint contiguous row ranges of the output, so workers
+//! never write the same element; `a` and `b` are only read. Small
+//! problems run inline — below [`PAR_FLOP_CUTOFF`] the fork-join
+//! round-trip costs more than the compute it would parallelize.
+
+use super::{shape_matmul, shape_matmul_at, shape_matmul_bt, tiled, Backend};
+use crate::tensor::Matrix;
+use crate::util::ThreadPool;
+
+/// Multiply-adds below which kernels run inline on the calling thread.
+const PAR_FLOP_CUTOFF: usize = 16 * 1024;
+
+/// Raw output pointer smuggled into the panel closure. SAFETY: every
+/// panel receives a disjoint row range, and `scope_ranges` joins before
+/// the buffer can move or drop.
+#[derive(Clone, Copy)]
+struct OutPtr(*mut f32);
+unsafe impl Send for OutPtr {}
+unsafe impl Sync for OutPtr {}
+
+/// Tiled kernels + row-panel fork-join.
+pub struct Threaded {
+    pool: ThreadPool,
+    threads: usize,
+}
+
+impl Threaded {
+    /// A backend owning a pool of `threads` workers (>= 1). Session code
+    /// should size this via [`super::worker_backend`] so concurrent
+    /// workers never oversubscribe the machine.
+    pub fn new(threads: usize) -> Threaded {
+        let threads = threads.max(1);
+        Threaded { pool: ThreadPool::new(threads), threads }
+    }
+
+    /// Fan `kernel` out over disjoint row panels of `out` (already sized
+    /// to `rows × cols`), or run it inline when the problem is too small
+    /// to amortize the fork-join. `zero_out` is false for kernels that
+    /// overwrite every element (bt), sparing the memset.
+    fn run(
+        &self,
+        out: &mut Matrix,
+        rows: usize,
+        cols: usize,
+        flops: usize,
+        zero_out: bool,
+        kernel: impl Fn(&mut [f32], usize, usize) + Sync,
+    ) {
+        if zero_out {
+            out.resize(rows, cols);
+        } else {
+            out.resize_for_overwrite(rows, cols);
+        }
+        if self.threads == 1 || rows < 2 || flops < PAR_FLOP_CUTOFF {
+            kernel(&mut out.data, 0, rows);
+            return;
+        }
+        let ptr = OutPtr(out.data.as_mut_ptr());
+        self.pool.scope_ranges(rows, self.threads, &|r0, r1| {
+            // SAFETY: panels are disjoint row ranges (see OutPtr).
+            let panel =
+                unsafe { std::slice::from_raw_parts_mut(ptr.0.add(r0 * cols), (r1 - r0) * cols) };
+            kernel(panel, r0, r1);
+        });
+    }
+}
+
+impl Backend for Threaded {
+    fn name(&self) -> &'static str {
+        "threaded"
+    }
+
+    fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn matmul_into(&self, a: &Matrix, b: &Matrix, out: &mut Matrix) {
+        let (m, k, n) = shape_matmul(a, b);
+        self.run(out, m, n, m * k * n, true, |panel, r0, r1| {
+            tiled::matmul_rows(a, b, panel, r0, r1);
+        });
+    }
+
+    fn matmul_at_into(&self, a: &Matrix, b: &Matrix, out: &mut Matrix) {
+        let (k, m, n) = shape_matmul_at(a, b);
+        self.run(out, m, n, m * k * n, true, |panel, r0, r1| {
+            tiled::matmul_at_rows(a, b, panel, r0, r1);
+        });
+    }
+
+    fn matmul_bt_into(&self, a: &Matrix, b: &Matrix, out: &mut Matrix) {
+        let (m, k, n) = shape_matmul_bt(a, b);
+        self.run(out, m, n, m * k * n, false, |panel, r0, r1| {
+            tiled::matmul_bt_rows(a, b, panel, r0, r1);
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn large_shapes_cross_the_parallel_cutoff() {
+        // 96×80×64 is well above PAR_FLOP_CUTOFF: the panel path runs.
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(96, 80, 1.0, &mut rng);
+        let b = Matrix::randn(80, 64, 1.0, &mut rng);
+        let be = Threaded::new(4);
+        assert_eq!(be.threads(), 4);
+        let mut out = Matrix::default();
+        be.matmul_into(&a, &b, &mut out);
+        assert_eq!(out.data, a.matmul(&b).data, "panel split broke results");
+    }
+
+    #[test]
+    fn concurrent_use_from_multiple_workers_is_safe() {
+        // Several session workers sharing one backend must not interleave
+        // panels across calls.
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(64, 48, 1.0, &mut rng);
+        let b = Matrix::randn(48, 32, 1.0, &mut rng);
+        let want = a.matmul(&b);
+        let be = std::sync::Arc::new(Threaded::new(2));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let be = std::sync::Arc::clone(&be);
+                let (a, b, want) = (&a, &b, &want);
+                s.spawn(move || {
+                    for _ in 0..20 {
+                        let mut out = Matrix::default();
+                        be.matmul_into(a, b, &mut out);
+                        assert_eq!(out.data, want.data);
+                    }
+                });
+            }
+        });
+    }
+}

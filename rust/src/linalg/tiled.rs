@@ -1,0 +1,165 @@
+//! Cache-blocked kernels. Each kernel is expressed over a contiguous
+//! *row panel* `[r0, r1)` of the output so the [`super::Threaded`]
+//! backend can fork the same code across disjoint panels.
+//!
+//! All kernels keep the accumulation-order contract of [`super`]: each
+//! output element folds its `k` contributions in ascending index order,
+//! one dependent f32 add at a time, so results are bit-identical to the
+//! [`super::Naive`] reference.
+
+use super::{shape_matmul, shape_matmul_at, shape_matmul_bt, Backend};
+use crate::tensor::Matrix;
+
+/// k-dimension block: one block of B rows (`KC × n` floats) stays hot in
+/// L1/L2 while the row panel streams over it.
+pub(crate) const KC: usize = 128;
+
+/// Rows `[r0, r1)` of `out = a @ b`; `panel` is exactly that row range of
+/// the (already sized and zeroed) output.
+pub(crate) fn matmul_rows(a: &Matrix, b: &Matrix, panel: &mut [f32], r0: usize, r1: usize) {
+    let (k, n) = (a.cols, b.cols);
+    debug_assert_eq!(panel.len(), (r1 - r0) * n);
+    for pp in (0..k).step_by(KC) {
+        let pe = (pp + KC).min(k);
+        let mut i = r0;
+        // 4-row register blocks.
+        while i + 4 <= r1 {
+            let (a0, a1, a2, a3) = (a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3));
+            let base = (i - r0) * n;
+            let (o0, rest) = panel[base..].split_at_mut(n);
+            let (o1, rest) = rest.split_at_mut(n);
+            let (o2, rest) = rest.split_at_mut(n);
+            let o3 = &mut rest[..n];
+            for p in pp..pe {
+                let (c0, c1, c2, c3) = (a0[p], a1[p], a2[p], a3[p]);
+                let brow = &b.data[p * n..(p + 1) * n];
+                for j in 0..n {
+                    let bv = brow[j];
+                    o0[j] += c0 * bv;
+                    o1[j] += c1 * bv;
+                    o2[j] += c2 * bv;
+                    o3[j] += c3 * bv;
+                }
+            }
+            i += 4;
+        }
+        // Tail rows.
+        while i < r1 {
+            let arow = a.row(i);
+            let orow = &mut panel[(i - r0) * n..(i - r0 + 1) * n];
+            for p in pp..pe {
+                let av = arow[p];
+                let brow = &b.data[p * n..(p + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                    *o += av * bv;
+                }
+            }
+            i += 1;
+        }
+    }
+}
+
+/// Rows `[r0, r1)` of `out = a^T @ b` (output rows are columns of `a`).
+/// Four `p` steps are fused per sweep of the panel, cutting output-matrix
+/// memory traffic 4×; the four adds per element stay sequential and in
+/// ascending `p` order.
+pub(crate) fn matmul_at_rows(a: &Matrix, b: &Matrix, panel: &mut [f32], r0: usize, r1: usize) {
+    let (k, n) = (a.rows, b.cols);
+    debug_assert_eq!(panel.len(), (r1 - r0) * n);
+    let mut p = 0;
+    while p + 4 <= k {
+        let (a0, a1, a2, a3) = (a.row(p), a.row(p + 1), a.row(p + 2), a.row(p + 3));
+        let (b0, b1, b2, b3) = (b.row(p), b.row(p + 1), b.row(p + 2), b.row(p + 3));
+        for i in r0..r1 {
+            let (c0, c1, c2, c3) = (a0[i], a1[i], a2[i], a3[i]);
+            let orow = &mut panel[(i - r0) * n..(i - r0 + 1) * n];
+            for j in 0..n {
+                let mut acc = orow[j];
+                acc += c0 * b0[j];
+                acc += c1 * b1[j];
+                acc += c2 * b2[j];
+                acc += c3 * b3[j];
+                orow[j] = acc;
+            }
+        }
+        p += 4;
+    }
+    while p < k {
+        let arow = a.row(p);
+        let brow = b.row(p);
+        for i in r0..r1 {
+            let av = arow[i];
+            let orow = &mut panel[(i - r0) * n..(i - r0 + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
+                *o += av * bv;
+            }
+        }
+        p += 1;
+    }
+}
+
+/// Rows `[r0, r1)` of `out = a @ b^T`. Four output columns per pass reuse
+/// the `a` row from registers; each dot product accumulates in ascending
+/// `p` order into its own register.
+pub(crate) fn matmul_bt_rows(a: &Matrix, b: &Matrix, panel: &mut [f32], r0: usize, r1: usize) {
+    let (k, n) = (a.cols, b.rows);
+    debug_assert_eq!(panel.len(), (r1 - r0) * n);
+    for i in r0..r1 {
+        let arow = a.row(i);
+        let orow = &mut panel[(i - r0) * n..(i - r0 + 1) * n];
+        let mut j = 0;
+        while j + 4 <= n {
+            let (b0, b1, b2, b3) = (b.row(j), b.row(j + 1), b.row(j + 2), b.row(j + 3));
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for p in 0..k {
+                let av = arow[p];
+                s0 += av * b0[p];
+                s1 += av * b1[p];
+                s2 += av * b2[p];
+                s3 += av * b3[p];
+            }
+            orow[j] = s0;
+            orow[j + 1] = s1;
+            orow[j + 2] = s2;
+            orow[j + 3] = s3;
+            j += 4;
+        }
+        while j < n {
+            let brow = b.row(j);
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += arow[p] * brow[p];
+            }
+            orow[j] = acc;
+            j += 1;
+        }
+    }
+}
+
+/// Cache-blocked single-threaded backend (the default).
+pub struct Tiled;
+
+impl Backend for Tiled {
+    fn name(&self) -> &'static str {
+        "tiled"
+    }
+
+    fn matmul_into(&self, a: &Matrix, b: &Matrix, out: &mut Matrix) {
+        let (m, _, n) = shape_matmul(a, b);
+        out.resize(m, n);
+        matmul_rows(a, b, &mut out.data, 0, m);
+    }
+
+    fn matmul_at_into(&self, a: &Matrix, b: &Matrix, out: &mut Matrix) {
+        let (_, m, n) = shape_matmul_at(a, b);
+        out.resize(m, n);
+        matmul_at_rows(a, b, &mut out.data, 0, m);
+    }
+
+    fn matmul_bt_into(&self, a: &Matrix, b: &Matrix, out: &mut Matrix) {
+        let (m, _, n) = shape_matmul_bt(a, b);
+        // The bt kernel writes every element — skip the zeroing memset.
+        out.resize_for_overwrite(m, n);
+        matmul_bt_rows(a, b, &mut out.data, 0, m);
+    }
+}

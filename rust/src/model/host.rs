@@ -4,13 +4,24 @@
 //! PJRT/XLA path numerically (`rust/tests/runtime_parity.rs`), powers the
 //! big parameter sweeps where artifact shapes would explode, and acts as
 //! the "what the paper's PyTorch workers do" substrate for profiling.
+//!
+//! Two API levels:
+//!
+//! - `forward` / `forward_cached` / `backward` — allocating, seed-era
+//!   signatures, kept for one-shot callers and tests.
+//! - `forward_cached_into` / `backward_into` — write into a reusable
+//!   [`ForwardCache`] / [`BackwardScratch`] through a
+//!   [`crate::linalg::Backend`]; after one warmup step at a given shape
+//!   they perform **zero heap allocations** (the training loops' hot
+//!   path, driven through [`super::split::Workspace`]).
 
 use super::params::MlpParams;
-use super::spec::MlpSpec;
+use super::spec::{LayerSpec, MlpSpec};
+use crate::linalg::{default_backend, Backend};
 use crate::tensor::Matrix;
 
 /// Cached activations from a forward pass, needed for backward.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct ForwardCache {
     /// Input to each layer (len = n_layers).
     pub inputs: Vec<Matrix>,
@@ -18,6 +29,27 @@ pub struct ForwardCache {
     pub pres: Vec<Matrix>,
     /// Final output.
     pub out: Matrix,
+}
+
+/// Reusable buffers for [`backward_into`]: per-layer `dpre` and `dx`
+/// matrices. After the call, [`BackwardScratch::d_input`] is
+/// `dL/d(input)` (the cut-layer gradient when the MLP is a bottom model).
+#[derive(Clone, Debug, Default)]
+pub struct BackwardScratch {
+    dpres: Vec<Matrix>,
+    dxs: Vec<Matrix>,
+}
+
+impl BackwardScratch {
+    /// `dL/d(input)` of the most recent [`backward_into`] call.
+    pub fn d_input(&self) -> &Matrix {
+        &self.dxs[0]
+    }
+
+    /// Move `dL/d(input)` out (leaves an empty matrix behind).
+    pub fn take_d_input(&mut self) -> Matrix {
+        std::mem::take(&mut self.dxs[0])
+    }
 }
 
 /// Forward pass without caching (inference).
@@ -36,29 +68,191 @@ pub fn forward(spec: &MlpSpec, params: &MlpParams, x: &Matrix) -> Matrix {
     h
 }
 
-/// Forward pass with cache for backprop.
-pub fn forward_cached(spec: &MlpSpec, params: &MlpParams, x: &Matrix) -> ForwardCache {
-    let mut inputs = Vec::with_capacity(spec.layers.len());
-    let mut pres = Vec::with_capacity(spec.layers.len());
-    let mut h = x.clone();
-    for (i, l) in spec.layers.iter().enumerate() {
-        inputs.push(h.clone());
-        let mut pre = h.matmul(&params.weights[i]);
-        pre.add_bias(&params.biases[i]);
-        pres.push(pre.clone());
-        let mut y = pre;
-        y.map_inplace(|v| l.act.apply(v));
-        if l.residual {
-            y.axpy(1.0, &h);
-        }
-        h = y;
+/// Ping-pong buffers for the uncached [`forward_into`]: one
+/// pre-activation buffer and two alternating activation buffers —
+/// nothing per-layer is retained, unlike [`ForwardCache`].
+#[derive(Clone, Debug, Default)]
+pub struct InferScratch {
+    pre: Matrix,
+    h: [Matrix; 2],
+}
+
+/// Inference forward writing the final activation into `out`, with no
+/// per-layer caching (the embedding-production and predict hot paths —
+/// backward never sees these activations). Zero-alloc after warmup.
+pub fn forward_into(
+    spec: &MlpSpec,
+    params: &MlpParams,
+    x: &Matrix,
+    be: &dyn Backend,
+    scratch: &mut InferScratch,
+    out: &mut Matrix,
+) {
+    let n_layers = spec.layers.len();
+    if n_layers == 0 {
+        out.copy_from(x);
+        return;
     }
-    ForwardCache { inputs, pres, out: h }
+    // Layer i reads x (i == 0) or h[i & 1], and writes h[(i + 1) & 1] —
+    // except the last layer, which writes straight into `out`.
+    for i in 0..n_layers {
+        let l = &spec.layers[i];
+        {
+            let src: &Matrix = if i == 0 { x } else { &scratch.h[i & 1] };
+            be.matmul_into(src, &params.weights[i], &mut scratch.pre);
+        }
+        scratch.pre.add_bias(&params.biases[i]);
+        if i + 1 == n_layers {
+            let src: &Matrix = if i == 0 { x } else { &scratch.h[i & 1] };
+            apply_activation(l, &scratch.pre, src, out);
+        } else {
+            let (h0, h1) = scratch.h.split_at_mut(1);
+            let (src, dst): (&Matrix, &mut Matrix) = if i == 0 {
+                (x, &mut h1[0])
+            } else if i & 1 == 1 {
+                (&h1[0], &mut h0[0])
+            } else {
+                (&h0[0], &mut h1[0])
+            };
+            apply_activation(l, &scratch.pre, src, dst);
+        }
+    }
+}
+
+/// `dst = act(pre)` (+ `src` for residual blocks), reusing `dst`'s
+/// allocation. The residual add is a single dependent f32 add, matching
+/// the allocating path bit-for-bit.
+fn apply_activation(l: &LayerSpec, pre: &Matrix, src: &Matrix, dst: &mut Matrix) {
+    dst.rows = pre.rows;
+    dst.cols = pre.cols;
+    dst.data.clear();
+    if l.residual {
+        dst.data.extend(
+            pre.data
+                .iter()
+                .zip(src.data.iter())
+                .map(|(&p, &s)| l.act.apply(p) + s),
+        );
+    } else {
+        dst.data.extend(pre.data.iter().map(|&p| l.act.apply(p)));
+    }
+}
+
+/// Forward pass with cache for backprop, writing every intermediate into
+/// the reusable `cache` (zero-alloc after warmup).
+pub fn forward_cached_into(
+    spec: &MlpSpec,
+    params: &MlpParams,
+    x: &Matrix,
+    be: &dyn Backend,
+    cache: &mut ForwardCache,
+) {
+    let n_layers = spec.layers.len();
+    cache.inputs.resize_with(n_layers, Matrix::default);
+    cache.pres.resize_with(n_layers, Matrix::default);
+    if n_layers == 0 {
+        cache.out.copy_from(x);
+        return;
+    }
+    cache.inputs[0].copy_from(x);
+    for i in 0..n_layers {
+        let l = &spec.layers[i];
+        be.matmul_into(&cache.inputs[i], &params.weights[i], &mut cache.pres[i]);
+        cache.pres[i].add_bias(&params.biases[i]);
+        let pre = &cache.pres[i];
+        if i + 1 < n_layers {
+            // The activation of layer i is the input of layer i+1.
+            let (head, tail) = cache.inputs.split_at_mut(i + 1);
+            apply_activation(l, pre, &head[i], &mut tail[0]);
+        } else {
+            apply_activation(l, pre, &cache.inputs[i], &mut cache.out);
+        }
+    }
+}
+
+/// Forward pass with cache for backprop (allocating wrapper).
+pub fn forward_cached(spec: &MlpSpec, params: &MlpParams, x: &Matrix) -> ForwardCache {
+    let mut cache = ForwardCache::default();
+    forward_cached_into(spec, params, x, default_backend().as_ref(), &mut cache);
+    cache
+}
+
+/// Reshape `grads` to mirror `params` when they do not already (only the
+/// warmup step, or a spec change, pays this).
+fn ensure_grad_shapes(params: &MlpParams, grads: &mut MlpParams) {
+    let same = grads.n_layers() == params.n_layers()
+        && grads
+            .weights
+            .iter()
+            .zip(params.weights.iter())
+            .all(|(g, w)| g.shape() == w.shape())
+        && grads
+            .biases
+            .iter()
+            .zip(params.biases.iter())
+            .all(|(g, b)| g.len() == b.len());
+    if !same {
+        *grads = params.zeros_like();
+    }
+}
+
+/// Backward pass writing parameter gradients into `grads` and
+/// `dL/d(input)` into `scratch` (read it via [`BackwardScratch::d_input`]).
+/// Zero-alloc after warmup at stable shapes.
+pub fn backward_into(
+    spec: &MlpSpec,
+    params: &MlpParams,
+    cache: &ForwardCache,
+    d_out: &Matrix,
+    be: &dyn Backend,
+    grads: &mut MlpParams,
+    scratch: &mut BackwardScratch,
+) {
+    let n_layers = spec.layers.len();
+    ensure_grad_shapes(params, grads);
+    if n_layers == 0 {
+        scratch.dxs.resize_with(1, Matrix::default);
+        scratch.dxs[0].copy_from(d_out);
+        return;
+    }
+    scratch.dpres.resize_with(n_layers, Matrix::default);
+    scratch.dxs.resize_with(n_layers, Matrix::default);
+    for i in (0..n_layers).rev() {
+        let l = &spec.layers[i];
+        let pre = &cache.pres[i];
+        // dxs[i] must be writable while dxs[i+1] (the upstream dy) stays
+        // readable; the top layer's dy is d_out itself.
+        let (dx_head, dx_tail) = scratch.dxs.split_at_mut(i + 1);
+        let dy: &Matrix = if i + 1 == n_layers { d_out } else { &dx_tail[0] };
+        // dpre = dy ⊙ act'(pre)
+        let dpre = &mut scratch.dpres[i];
+        dpre.rows = pre.rows;
+        dpre.cols = pre.cols;
+        dpre.data.clear();
+        dpre.data.extend(
+            pre.data
+                .iter()
+                .zip(dy.data.iter())
+                .map(|(&p, &d)| {
+                    let y = l.act.apply(p);
+                    d * l.act.grad(p, y)
+                }),
+        );
+        // dW = x_in^T @ dpre ; db = colsum(dpre)
+        be.matmul_at_into(&cache.inputs[i], dpre, &mut grads.weights[i]);
+        dpre.col_sum_into(&mut grads.biases[i]);
+        // dx = dpre @ W^T (+ dy if residual skip)
+        let dx = &mut dx_head[i];
+        be.matmul_bt_into(dpre, &params.weights[i], dx);
+        if l.residual {
+            dx.axpy(1.0, dy);
+        }
+    }
 }
 
 /// Backward pass: given `d_out = dL/d(output)`, produce parameter
-/// gradients and `dL/d(input)` (the cut-layer gradient when this MLP is a
-/// bottom model).
+/// gradients and `dL/d(input)` (allocating wrapper over
+/// [`backward_into`]).
 pub fn backward(
     spec: &MlpSpec,
     params: &MlpParams,
@@ -66,32 +260,18 @@ pub fn backward(
     d_out: &Matrix,
 ) -> (MlpParams, Matrix) {
     let mut grads = params.zeros_like();
-    let mut dy = d_out.clone();
-    for i in (0..spec.layers.len()).rev() {
-        let l = &spec.layers[i];
-        let pre = &cache.pres[i];
-        let x_in = &cache.inputs[i];
-        // dpre = dy ⊙ act'(pre)
-        let mut dpre = dy.clone();
-        for (dv, (&p, &d)) in dpre
-            .data
-            .iter_mut()
-            .zip(pre.data.iter().zip(dy.data.iter()))
-        {
-            let y = l.act.apply(p);
-            *dv = d * l.act.grad(p, y);
-        }
-        // dW = x_in^T @ dpre ; db = colsum(dpre)
-        grads.weights[i] = x_in.matmul_at(&dpre);
-        grads.biases[i] = dpre.col_sum();
-        // dx = dpre @ W^T (+ dy if residual skip)
-        let mut dx = dpre.matmul_bt(&params.weights[i]);
-        if l.residual {
-            dx.axpy(1.0, &dy);
-        }
-        dy = dx;
-    }
-    (grads, dy)
+    let mut scratch = BackwardScratch::default();
+    backward_into(
+        spec,
+        params,
+        cache,
+        d_out,
+        default_backend().as_ref(),
+        &mut grads,
+        &mut scratch,
+    );
+    let dx = scratch.take_d_input();
+    (grads, dx)
 }
 
 #[cfg(test)]

@@ -14,36 +14,56 @@ pub fn sigmoid(z: f32) -> f32 {
 
 /// Binary cross-entropy **with logits** (Eq. 1, computed stably):
 /// `L = mean( max(z,0) − z·y + ln(1 + e^{−|z|}) )`.
-/// Returns `(loss, dL/dz)` where the gradient is `(σ(z) − y)/n`.
-pub fn bce_with_logits(logits: &Matrix, y: &[f32]) -> (f64, Matrix) {
+/// Writes `dL/dz = (σ(z) − y)/n` into the reusable `grad` buffer and
+/// returns the loss (zero-alloc after warmup).
+pub fn bce_with_logits_into(logits: &Matrix, y: &[f32], grad: &mut Matrix) -> f64 {
     assert_eq!(logits.cols, 1, "binary head expects a single logit column");
     assert_eq!(logits.rows, y.len());
     let n = y.len().max(1) as f64;
     let mut loss = 0.0f64;
-    let mut grad = Matrix::zeros(logits.rows, 1);
+    grad.rows = logits.rows;
+    grad.cols = 1;
+    grad.data.clear();
     for i in 0..logits.rows {
         let z = logits.at(i, 0);
         let t = y[i];
         let zl = z as f64;
         loss += zl.max(0.0) - zl * t as f64 + (1.0 + (-zl.abs()).exp()).ln();
-        *grad.at_mut(i, 0) = (sigmoid(z) - t) / n as f32;
+        grad.data.push((sigmoid(z) - t) / n as f32);
     }
-    (loss / n, grad)
+    loss / n
 }
 
-/// Mean squared error: `L = mean((z − y)^2)`, gradient `2(z − y)/n`.
-pub fn mse(pred: &Matrix, y: &[f32]) -> (f64, Matrix) {
+/// Allocating wrapper over [`bce_with_logits_into`].
+pub fn bce_with_logits(logits: &Matrix, y: &[f32]) -> (f64, Matrix) {
+    let mut grad = Matrix::default();
+    let loss = bce_with_logits_into(logits, y, &mut grad);
+    (loss, grad)
+}
+
+/// Mean squared error: `L = mean((z − y)^2)`, gradient `2(z − y)/n`,
+/// written into the reusable `grad` buffer.
+pub fn mse_into(pred: &Matrix, y: &[f32], grad: &mut Matrix) -> f64 {
     assert_eq!(pred.cols, 1);
     assert_eq!(pred.rows, y.len());
     let n = y.len().max(1) as f64;
     let mut loss = 0.0f64;
-    let mut grad = Matrix::zeros(pred.rows, 1);
+    grad.rows = pred.rows;
+    grad.cols = 1;
+    grad.data.clear();
     for i in 0..pred.rows {
         let d = pred.at(i, 0) - y[i];
         loss += (d as f64) * (d as f64);
-        *grad.at_mut(i, 0) = 2.0 * d / n as f32;
+        grad.data.push(2.0 * d / n as f32);
     }
-    (loss / n, grad)
+    loss / n
+}
+
+/// Allocating wrapper over [`mse_into`].
+pub fn mse(pred: &Matrix, y: &[f32]) -> (f64, Matrix) {
+    let mut grad = Matrix::default();
+    let loss = mse_into(pred, y, &mut grad);
+    (loss, grad)
 }
 
 #[cfg(test)]

@@ -9,8 +9,13 @@ pub mod spec;
 pub mod split;
 
 pub use eval::{accuracy, auc, rmse};
-pub use host::{backward, forward, forward_cached, ForwardCache};
-pub use loss::{bce_with_logits, mse, sigmoid};
+pub use host::{
+    backward, backward_into, forward, forward_cached, forward_cached_into, forward_into,
+    BackwardScratch, ForwardCache, InferScratch,
+};
+pub use loss::{bce_with_logits, bce_with_logits_into, mse, mse_into, sigmoid};
 pub use params::MlpParams;
 pub use spec::{Activation, LayerSpec, MlpSpec, SplitModelSpec};
-pub use split::{ActiveStepOut, HostSplitModel, SplitEngine, SplitParams};
+pub use split::{
+    ActiveStepBuf, ActiveStepOut, HostSplitModel, SplitEngine, SplitParams, Workspace,
+};

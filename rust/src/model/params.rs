@@ -7,8 +7,9 @@ use crate::tensor::Matrix;
 use crate::util::Rng;
 
 /// Parameters of one MLP: per layer a weight matrix `(in, out)` and a bias
-/// vector `(out,)`.
-#[derive(Clone, Debug, PartialEq)]
+/// vector `(out,)`. `Default` is the empty (zero-layer) value used to
+/// seed reusable gradient buffers.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct MlpParams {
     pub weights: Vec<Matrix>,
     pub biases: Vec<Vec<f32>>,

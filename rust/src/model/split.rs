@@ -12,12 +12,105 @@
 //! boundary. The top model consumes `[z_a | z_p0 | z_p1 | ...]` (active
 //! embedding first); `python/compile/model.py` uses the same order.
 
-use super::host::{backward, forward, forward_cached};
-use super::loss::{bce_with_logits, mse};
+use super::host::{
+    backward_into, forward, forward_cached_into, forward_into, BackwardScratch, ForwardCache,
+    InferScratch,
+};
+use super::loss::{bce_with_logits_into, mse_into};
 use super::params::MlpParams;
 use super::spec::SplitModelSpec;
 use crate::data::Task;
+use crate::linalg::{self, Backend};
 use crate::tensor::Matrix;
+use std::sync::Arc;
+
+/// Per-worker scratch arena for the zero-allocation training step.
+///
+/// Owns every intermediate the host engine needs — forward caches,
+/// backward scratch, the concatenated-embedding buffer, loss gradients —
+/// plus the [`Backend`] whose kernels write into them. Buffers are sized
+/// lazily on first use and reused afterwards, so after one warmup step at
+/// stable shapes none of the `_into` engine methods allocate.
+///
+/// Each training worker owns one `Workspace` (they are deliberately not
+/// `Sync`-shared); step *outputs* live in the caller-owned
+/// [`ActiveStepBuf`] / gradient buffers so they can be consumed while the
+/// workspace is reused for the next call.
+pub struct Workspace {
+    backend: Arc<dyn Backend>,
+    active_cache: ForwardCache,
+    top_cache: ForwardCache,
+    passive_caches: Vec<ForwardCache>,
+    bottom_bwd: BackwardScratch,
+    top_bwd: BackwardScratch,
+    // Uncached-inference state (embedding production / predict): ping-pong
+    // scratch plus per-model embedding outputs for the concat.
+    infer: InferScratch,
+    embed_a: Matrix,
+    embeds: Vec<Matrix>,
+    concat: Matrix,
+    d_preds: Matrix,
+    d_za: Matrix,
+}
+
+impl Workspace {
+    pub fn new(backend: Arc<dyn Backend>) -> Workspace {
+        Workspace {
+            backend,
+            active_cache: ForwardCache::default(),
+            top_cache: ForwardCache::default(),
+            passive_caches: Vec::new(),
+            bottom_bwd: BackwardScratch::default(),
+            top_bwd: BackwardScratch::default(),
+            infer: InferScratch::default(),
+            embed_a: Matrix::default(),
+            embeds: Vec::new(),
+            concat: Matrix::default(),
+            d_preds: Matrix::default(),
+            d_za: Matrix::default(),
+        }
+    }
+
+    /// Workspace on the process-default (tiled, single-threaded) backend.
+    pub fn with_default_backend() -> Workspace {
+        Workspace::new(Arc::clone(linalg::default_backend()))
+    }
+
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
+    }
+
+    fn ensure_parties(&mut self, k: usize) {
+        if self.passive_caches.len() < k {
+            self.passive_caches.resize_with(k, ForwardCache::default);
+        }
+    }
+}
+
+/// Caller-owned, reusable outputs of [`SplitEngine::active_step_into`].
+/// Kept outside the [`Workspace`] so its fields (e.g. `grad_z`) can be
+/// borrowed or moved into messages while the workspace runs the next
+/// kernel.
+#[derive(Clone, Debug, Default)]
+pub struct ActiveStepBuf {
+    pub loss: f64,
+    /// Model outputs (logits or regression predictions), shape (B, 1).
+    pub preds: Matrix,
+    /// Cut-layer gradient per passive party, shape (B, E) each.
+    pub grad_z: Vec<Matrix>,
+    pub grad_active: MlpParams,
+    pub grad_top: MlpParams,
+}
+
+/// `dst = src[:, c0..c1]`, reusing `dst`'s allocation.
+fn copy_col_block(src: &Matrix, c0: usize, c1: usize, dst: &mut Matrix) {
+    dst.rows = src.rows;
+    dst.cols = c1 - c0;
+    dst.data.clear();
+    for r in 0..src.rows {
+        dst.data.extend_from_slice(&src.row(r)[c0..c1]);
+    }
+}
 
 /// Output of the active party's step.
 #[derive(Clone, Debug)]
@@ -60,6 +153,80 @@ pub trait SplitEngine: Send + Sync {
         x_a: &Matrix,
         x_p: &[Matrix],
     ) -> Matrix;
+
+    // ---- zero-allocation variants -----------------------------------
+    //
+    // The training loops call these with a per-worker [`Workspace`] and
+    // caller-owned output buffers. The default implementations delegate
+    // to the allocating methods (correct for engines without workspace
+    // support, e.g. the PJRT service); `HostSplitModel` overrides them
+    // with fully in-place kernels.
+
+    /// [`SplitEngine::passive_fwd`] writing the embedding into `z`.
+    fn passive_fwd_into(
+        &self,
+        party: usize,
+        params: &MlpParams,
+        x: &Matrix,
+        ws: &mut Workspace,
+        z: &mut Matrix,
+    ) {
+        let _ = ws;
+        *z = self.passive_fwd(party, params, x);
+    }
+
+    /// [`SplitEngine::active_step`] writing every output into `out`;
+    /// returns the loss.
+    #[allow(clippy::too_many_arguments)]
+    fn active_step_into(
+        &self,
+        active: &MlpParams,
+        top: &MlpParams,
+        x_a: &Matrix,
+        z_p: &[Matrix],
+        y: &[f32],
+        ws: &mut Workspace,
+        out: &mut ActiveStepBuf,
+    ) -> f64 {
+        let _ = ws;
+        let o = self.active_step(active, top, x_a, z_p, y);
+        out.loss = o.loss;
+        out.preds = o.preds;
+        out.grad_z = o.grad_z;
+        out.grad_active = o.grad_active;
+        out.grad_top = o.grad_top;
+        out.loss
+    }
+
+    /// [`SplitEngine::passive_bwd`] writing the gradients into `grads`.
+    fn passive_bwd_into(
+        &self,
+        party: usize,
+        params: &MlpParams,
+        x: &Matrix,
+        grad_z: &Matrix,
+        ws: &mut Workspace,
+        grads: &mut MlpParams,
+    ) {
+        let _ = ws;
+        *grads = self.passive_bwd(party, params, x, grad_z);
+    }
+
+    /// [`SplitEngine::predict`] writing into `preds`.
+    #[allow(clippy::too_many_arguments)]
+    fn predict_into(
+        &self,
+        active: &MlpParams,
+        top: &MlpParams,
+        passive: &[MlpParams],
+        x_a: &Matrix,
+        x_p: &[Matrix],
+        ws: &mut Workspace,
+        preds: &mut Matrix,
+    ) {
+        let _ = ws;
+        *preds = self.predict(active, top, passive, x_a, x_p);
+    }
 }
 
 /// Pure-Rust implementation of [`SplitEngine`].
@@ -74,10 +241,10 @@ impl HostSplitModel {
         HostSplitModel { spec, task }
     }
 
-    fn loss_and_grad(&self, preds: &Matrix, y: &[f32]) -> (f64, Matrix) {
+    fn loss_and_grad_into(&self, preds: &Matrix, y: &[f32], d: &mut Matrix) -> f64 {
         match self.task {
-            Task::BinaryClassification => bce_with_logits(preds, y),
-            Task::Regression => mse(preds, y),
+            Task::BinaryClassification => bce_with_logits_into(preds, y, d),
+            Task::Regression => mse_into(preds, y, d),
         }
     }
 }
@@ -95,38 +262,16 @@ impl SplitEngine for HostSplitModel {
         z_p: &[Matrix],
         y: &[f32],
     ) -> ActiveStepOut {
-        assert_eq!(z_p.len(), self.spec.passive_bottoms.len(), "one embedding per passive party");
-        let e = self.spec.embed_dim();
-
-        // Active bottom forward (cached).
-        let cache_a = forward_cached(&self.spec.active_bottom, active, x_a);
-
-        // Concatenate [z_a | z_p...].
-        let mut concat = cache_a.out.clone();
-        for z in z_p {
-            assert_eq!(z.cols, e, "embedding width mismatch");
-            concat = concat.hcat(z);
+        let mut ws = Workspace::with_default_backend();
+        let mut out = ActiveStepBuf::default();
+        self.active_step_into(active, top, x_a, z_p, y, &mut ws, &mut out);
+        ActiveStepOut {
+            loss: out.loss,
+            preds: out.preds,
+            grad_z: out.grad_z,
+            grad_active: out.grad_active,
+            grad_top: out.grad_top,
         }
-
-        // Top forward (cached) + loss.
-        let cache_top = forward_cached(&self.spec.top, top, &concat);
-        let (loss, d_preds) = self.loss_and_grad(&cache_top.out, y);
-
-        // Top backward -> gradient on the concatenated embedding.
-        let (grad_top, d_concat) = backward(&self.spec.top, top, &cache_top, &d_preds);
-
-        // Split the concat gradient back into per-source pieces.
-        let d_za = d_concat.take_cols(&(0..e).collect::<Vec<_>>());
-        let mut grad_z = Vec::with_capacity(z_p.len());
-        for p in 0..z_p.len() {
-            let cols: Vec<usize> = ((p + 1) * e..(p + 2) * e).collect();
-            grad_z.push(d_concat.take_cols(&cols));
-        }
-
-        // Active bottom backward.
-        let (grad_active, _dx) = backward(&self.spec.active_bottom, active, &cache_a, &d_za);
-
-        ActiveStepOut { loss, preds: cache_top.out, grad_z, grad_active, grad_top }
     }
 
     fn passive_bwd(
@@ -136,9 +281,9 @@ impl SplitEngine for HostSplitModel {
         x: &Matrix,
         grad_z: &Matrix,
     ) -> MlpParams {
-        let spec = &self.spec.passive_bottoms[party];
-        let cache = forward_cached(spec, params, x);
-        let (grads, _dx) = backward(spec, params, &cache, grad_z);
+        let mut ws = Workspace::with_default_backend();
+        let mut grads = MlpParams::default();
+        self.passive_bwd_into(party, params, x, grad_z, &mut ws, &mut grads);
         grads
     }
 
@@ -150,12 +295,175 @@ impl SplitEngine for HostSplitModel {
         x_a: &Matrix,
         x_p: &[Matrix],
     ) -> Matrix {
-        let mut concat = forward(&self.spec.active_bottom, active, x_a);
-        for (p, xp) in x_p.iter().enumerate() {
-            let z = forward(&self.spec.passive_bottoms[p], &passive[p], xp);
-            concat = concat.hcat(&z);
+        let mut ws = Workspace::with_default_backend();
+        let mut preds = Matrix::default();
+        self.predict_into(active, top, passive, x_a, x_p, &mut ws, &mut preds);
+        preds
+    }
+
+    fn passive_fwd_into(
+        &self,
+        party: usize,
+        params: &MlpParams,
+        x: &Matrix,
+        ws: &mut Workspace,
+        z: &mut Matrix,
+    ) {
+        // Uncached: backward never sees these activations (passive_bwd
+        // recomputes its own forward when the gradient arrives), so the
+        // embedding lands straight in `z` with no per-layer stores.
+        let be = Arc::clone(&ws.backend);
+        forward_into(
+            &self.spec.passive_bottoms[party],
+            params,
+            x,
+            be.as_ref(),
+            &mut ws.infer,
+            z,
+        );
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn active_step_into(
+        &self,
+        active: &MlpParams,
+        top: &MlpParams,
+        x_a: &Matrix,
+        z_p: &[Matrix],
+        y: &[f32],
+        ws: &mut Workspace,
+        out: &mut ActiveStepBuf,
+    ) -> f64 {
+        assert_eq!(z_p.len(), self.spec.passive_bottoms.len(), "one embedding per passive party");
+        let e = self.spec.embed_dim();
+        let b_rows = x_a.rows;
+        for z in z_p {
+            assert_eq!(z.cols, e, "embedding width mismatch");
+            assert_eq!(z.rows, b_rows, "embedding batch mismatch");
         }
-        forward(&self.spec.top, top, &concat)
+        let be = Arc::clone(&ws.backend);
+        let be = be.as_ref();
+
+        // Active bottom forward (cached).
+        forward_cached_into(&self.spec.active_bottom, active, x_a, be, &mut ws.active_cache);
+
+        // concat = [z_a | z_p...], row-major into the reused buffer.
+        ws.concat.rows = b_rows;
+        ws.concat.cols = e * (1 + z_p.len());
+        ws.concat.data.clear();
+        for r in 0..b_rows {
+            ws.concat.data.extend_from_slice(ws.active_cache.out.row(r));
+            for z in z_p {
+                ws.concat.data.extend_from_slice(z.row(r));
+            }
+        }
+
+        // Top forward (cached) + loss.
+        forward_cached_into(&self.spec.top, top, &ws.concat, be, &mut ws.top_cache);
+        out.preds.copy_from(&ws.top_cache.out);
+        let loss = self.loss_and_grad_into(&ws.top_cache.out, y, &mut ws.d_preds);
+
+        // Top backward -> gradient on the concatenated embedding.
+        backward_into(
+            &self.spec.top,
+            top,
+            &ws.top_cache,
+            &ws.d_preds,
+            be,
+            &mut out.grad_top,
+            &mut ws.top_bwd,
+        );
+
+        // Split the concat gradient back into per-source pieces.
+        let d_concat = ws.top_bwd.d_input();
+        copy_col_block(d_concat, 0, e, &mut ws.d_za);
+        if out.grad_z.len() != z_p.len() {
+            out.grad_z.resize_with(z_p.len(), Matrix::default);
+        }
+        for (p, gz) in out.grad_z.iter_mut().enumerate() {
+            copy_col_block(d_concat, (p + 1) * e, (p + 2) * e, gz);
+        }
+
+        // Active bottom backward (its dx is the raw input's gradient —
+        // discarded, as before).
+        backward_into(
+            &self.spec.active_bottom,
+            active,
+            &ws.active_cache,
+            &ws.d_za,
+            be,
+            &mut out.grad_active,
+            &mut ws.bottom_bwd,
+        );
+        out.loss = loss;
+        loss
+    }
+
+    fn passive_bwd_into(
+        &self,
+        party: usize,
+        params: &MlpParams,
+        x: &Matrix,
+        grad_z: &Matrix,
+        ws: &mut Workspace,
+        grads: &mut MlpParams,
+    ) {
+        let be = Arc::clone(&ws.backend);
+        ws.ensure_parties(self.spec.passive_bottoms.len());
+        let spec = &self.spec.passive_bottoms[party];
+        forward_cached_into(spec, params, x, be.as_ref(), &mut ws.passive_caches[party]);
+        backward_into(
+            spec,
+            params,
+            &ws.passive_caches[party],
+            grad_z,
+            be.as_ref(),
+            grads,
+            &mut ws.bottom_bwd,
+        );
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn predict_into(
+        &self,
+        active: &MlpParams,
+        top: &MlpParams,
+        passive: &[MlpParams],
+        x_a: &Matrix,
+        x_p: &[Matrix],
+        ws: &mut Workspace,
+        preds: &mut Matrix,
+    ) {
+        let be = Arc::clone(&ws.backend);
+        let be = be.as_ref();
+        let k = x_p.len();
+        if ws.embeds.len() < k {
+            ws.embeds.resize_with(k, Matrix::default);
+        }
+        // Pure inference: uncached forwards straight into the embedding
+        // buffers, then the top model straight into `preds`.
+        forward_into(&self.spec.active_bottom, active, x_a, be, &mut ws.infer, &mut ws.embed_a);
+        for p in 0..k {
+            forward_into(
+                &self.spec.passive_bottoms[p],
+                &passive[p],
+                &x_p[p],
+                be,
+                &mut ws.infer,
+                &mut ws.embeds[p],
+            );
+        }
+        ws.concat.rows = x_a.rows;
+        ws.concat.cols =
+            ws.embed_a.cols + ws.embeds[..k].iter().map(|z| z.cols).sum::<usize>();
+        ws.concat.data.clear();
+        for r in 0..x_a.rows {
+            ws.concat.data.extend_from_slice(ws.embed_a.row(r));
+            for z in &ws.embeds[..k] {
+                ws.concat.data.extend_from_slice(z.row(r));
+            }
+        }
+        forward_into(&self.spec.top, top, &ws.concat, be, &mut ws.infer, preds);
     }
 }
 
@@ -289,6 +597,160 @@ mod tests {
         let z = model.passive_fwd(0, &params.passive[0], &x_p);
         let out = model.active_step(&params.active, &params.top, &x_a, &[z], &y);
         assert!(out.loss.is_finite());
+    }
+
+    /// The `_into` workspace paths must agree with the allocating API
+    /// *exactly* (same kernels, same accumulation order), and reusing one
+    /// workspace across steps must be bit-identical to a fresh workspace
+    /// per step.
+    #[test]
+    fn workspace_paths_match_allocating_api_exactly() {
+        let (model, params, x_a, x_p, y) = setup();
+        let z_alloc = model.passive_fwd(0, &params.passive[0], &x_p);
+        let out_alloc =
+            model.active_step(&params.active, &params.top, &x_a, &[z_alloc.clone()], &y);
+        let gp_alloc = model.passive_bwd(0, &params.passive[0], &x_p, &out_alloc.grad_z[0]);
+        let preds_alloc =
+            model.predict(&params.active, &params.top, &params.passive, &x_a, &[x_p.clone()]);
+
+        let mut ws = Workspace::with_default_backend();
+        let mut z = Matrix::default();
+        let mut buf = ActiveStepBuf::default();
+        let mut gp = MlpParams::default();
+        let mut preds = Matrix::default();
+        // Two passes through the same workspace: the second is the
+        // steady-state (warm-buffer) path.
+        for pass in 0..2 {
+            model.passive_fwd_into(0, &params.passive[0], &x_p, &mut ws, &mut z);
+            assert_eq!(z, z_alloc, "pass {pass}: passive_fwd_into");
+            let zs = [z.clone()];
+            let loss = model
+                .active_step_into(&params.active, &params.top, &x_a, &zs, &y, &mut ws, &mut buf);
+            assert_eq!(loss, out_alloc.loss, "pass {pass}: loss");
+            assert_eq!(buf.preds, out_alloc.preds, "pass {pass}: preds");
+            assert_eq!(buf.grad_z, out_alloc.grad_z, "pass {pass}: grad_z");
+            assert_eq!(buf.grad_active, out_alloc.grad_active, "pass {pass}: grad_active");
+            assert_eq!(buf.grad_top, out_alloc.grad_top, "pass {pass}: grad_top");
+            model.passive_bwd_into(0, &params.passive[0], &x_p, &buf.grad_z[0], &mut ws, &mut gp);
+            assert_eq!(gp, gp_alloc, "pass {pass}: passive_bwd_into");
+            let xp_arr = [x_p.clone()];
+            model.predict_into(
+                &params.active,
+                &params.top,
+                &params.passive,
+                &x_a,
+                &xp_arr,
+                &mut ws,
+                &mut preds,
+            );
+            assert_eq!(preds, preds_alloc, "pass {pass}: predict_into");
+        }
+    }
+
+    /// Multi-step training with one reused workspace lands on exactly the
+    /// same parameters as the allocating API — buffer reuse leaks nothing
+    /// across steps.
+    #[test]
+    fn workspace_reuse_is_bit_identical_over_training() {
+        let (model, params0, x_a, x_p, y) = setup();
+        let lr = 0.1f32;
+
+        let mut p_alloc = params0.clone();
+        for _ in 0..10 {
+            let z = model.passive_fwd(0, &p_alloc.passive[0], &x_p);
+            let out = model.active_step(&p_alloc.active, &p_alloc.top, &x_a, &[z], &y);
+            let gp = model.passive_bwd(0, &p_alloc.passive[0], &x_p, &out.grad_z[0]);
+            p_alloc.active.sgd_step(&out.grad_active, lr);
+            p_alloc.top.sgd_step(&out.grad_top, lr);
+            p_alloc.passive[0].sgd_step(&gp, lr);
+        }
+
+        let mut p_ws = params0.clone();
+        let mut ws = Workspace::with_default_backend();
+        let mut z = Matrix::default();
+        let mut buf = ActiveStepBuf::default();
+        let mut gp = MlpParams::default();
+        for _ in 0..10 {
+            model.passive_fwd_into(0, &p_ws.passive[0], &x_p, &mut ws, &mut z);
+            let zs = std::slice::from_ref(&z);
+            model.active_step_into(&p_ws.active, &p_ws.top, &x_a, zs, &y, &mut ws, &mut buf);
+            model.passive_bwd_into(0, &p_ws.passive[0], &x_p, &buf.grad_z[0], &mut ws, &mut gp);
+            p_ws.active.sgd_step(&buf.grad_active, lr);
+            p_ws.top.sgd_step(&buf.grad_top, lr);
+            p_ws.passive[0].sgd_step(&gp, lr);
+        }
+
+        assert_eq!(p_alloc.active, p_ws.active);
+        assert_eq!(p_alloc.top, p_ws.top);
+        assert_eq!(p_alloc.passive, p_ws.passive);
+    }
+
+    /// The trait's default `_into` methods (used by workspace-less
+    /// engines like the PJRT service) must match the overridden host
+    /// implementations.
+    #[test]
+    fn default_into_impls_delegate_correctly() {
+        struct Delegating(HostSplitModel);
+        impl SplitEngine for Delegating {
+            fn passive_fwd(&self, party: usize, params: &MlpParams, x: &Matrix) -> Matrix {
+                self.0.passive_fwd(party, params, x)
+            }
+            fn active_step(
+                &self,
+                active: &MlpParams,
+                top: &MlpParams,
+                x_a: &Matrix,
+                z_p: &[Matrix],
+                y: &[f32],
+            ) -> ActiveStepOut {
+                self.0.active_step(active, top, x_a, z_p, y)
+            }
+            fn passive_bwd(
+                &self,
+                party: usize,
+                params: &MlpParams,
+                x: &Matrix,
+                grad_z: &Matrix,
+            ) -> MlpParams {
+                self.0.passive_bwd(party, params, x, grad_z)
+            }
+            fn predict(
+                &self,
+                active: &MlpParams,
+                top: &MlpParams,
+                passive: &[MlpParams],
+                x_a: &Matrix,
+                x_p: &[Matrix],
+            ) -> Matrix {
+                self.0.predict(active, top, passive, x_a, x_p)
+            }
+        }
+
+        let (model, params, x_a, x_p, y) = setup();
+        let spec = model.spec.clone();
+        let task = model.task;
+        let wrapped = Delegating(HostSplitModel::new(spec, task));
+
+        let mut ws_h = Workspace::with_default_backend();
+        let mut ws_d = Workspace::with_default_backend();
+        let (mut z_h, mut z_d) = (Matrix::default(), Matrix::default());
+        model.passive_fwd_into(0, &params.passive[0], &x_p, &mut ws_h, &mut z_h);
+        wrapped.passive_fwd_into(0, &params.passive[0], &x_p, &mut ws_d, &mut z_d);
+        assert_eq!(z_h, z_d);
+
+        let (mut b_h, mut b_d) = (ActiveStepBuf::default(), ActiveStepBuf::default());
+        let zs_h = std::slice::from_ref(&z_h);
+        let zs_d = std::slice::from_ref(&z_d);
+        model.active_step_into(&params.active, &params.top, &x_a, zs_h, &y, &mut ws_h, &mut b_h);
+        wrapped.active_step_into(&params.active, &params.top, &x_a, zs_d, &y, &mut ws_d, &mut b_d);
+        assert_eq!(b_h.loss, b_d.loss);
+        assert_eq!(b_h.grad_z, b_d.grad_z);
+        assert_eq!(b_h.grad_active, b_d.grad_active);
+
+        let (mut g_h, mut g_d) = (MlpParams::default(), MlpParams::default());
+        model.passive_bwd_into(0, &params.passive[0], &x_p, &b_h.grad_z[0], &mut ws_h, &mut g_h);
+        wrapped.passive_bwd_into(0, &params.passive[0], &x_p, &b_d.grad_z[0], &mut ws_d, &mut g_d);
+        assert_eq!(g_h, g_d);
     }
 
     #[test]

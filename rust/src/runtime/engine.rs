@@ -45,15 +45,59 @@ pub fn push_params(out: &mut Vec<xla::Literal>, p: &MlpParams) -> Result<()> {
     Ok(())
 }
 
-/// Read a matrix back out of a literal.
-pub fn literal_to_matrix(l: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix> {
+/// Read a matrix out of a literal into a reusable destination. The PJRT
+/// API owns the decode (one payload `Vec` per literal); what this saves
+/// is every *container* allocation around it — the decoded buffer moves
+/// straight into `out.data`.
+pub fn literal_to_matrix_into(
+    l: &xla::Literal,
+    rows: usize,
+    cols: usize,
+    out: &mut Matrix,
+) -> Result<()> {
     let data = l
         .to_vec::<f32>()
         .map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
     if data.len() != rows * cols {
         return Err(anyhow!("literal has {} elems, want {}x{}", data.len(), rows, cols));
     }
-    Ok(Matrix::from_vec(rows, cols, data))
+    out.rows = rows;
+    out.cols = cols;
+    out.data = data;
+    Ok(())
+}
+
+/// Read a matrix back out of a literal (allocating wrapper).
+pub fn literal_to_matrix(l: &xla::Literal, rows: usize, cols: usize) -> Result<Matrix> {
+    let mut out = Matrix::default();
+    literal_to_matrix_into(l, rows, cols, &mut out)?;
+    Ok(out)
+}
+
+/// Rebuild MLP parameters from consecutive output literals into a
+/// reusable `out` (the per-layer `Vec` skeletons survive across calls).
+pub fn params_from_literals_into(
+    spec: &MlpSpec,
+    lits: &[xla::Literal],
+    off: &mut usize,
+    out: &mut MlpParams,
+) -> Result<()> {
+    let n_layers = spec.layers.len();
+    out.weights.resize_with(n_layers, Matrix::default);
+    out.biases.resize_with(n_layers, Vec::new);
+    for (i, l) in spec.layers.iter().enumerate() {
+        literal_to_matrix_into(&lits[*off], l.in_dim, l.out_dim, &mut out.weights[i])?;
+        *off += 1;
+        let b = lits[*off]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("bias literal: {e:?}"))?;
+        if b.len() != l.out_dim {
+            return Err(anyhow!("bias len {} != {}", b.len(), l.out_dim));
+        }
+        out.biases[i] = b;
+        *off += 1;
+    }
+    Ok(())
 }
 
 /// Rebuild MLP parameters from consecutive output literals.
@@ -62,21 +106,9 @@ pub fn params_from_literals(
     lits: &[xla::Literal],
     off: &mut usize,
 ) -> Result<MlpParams> {
-    let mut weights = Vec::with_capacity(spec.layers.len());
-    let mut biases = Vec::with_capacity(spec.layers.len());
-    for l in &spec.layers {
-        weights.push(literal_to_matrix(&lits[*off], l.in_dim, l.out_dim)?);
-        *off += 1;
-        let b = lits[*off]
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("bias literal: {e:?}"))?;
-        if b.len() != l.out_dim {
-            return Err(anyhow!("bias len {} != {}", b.len(), l.out_dim));
-        }
-        biases.push(b);
-        *off += 1;
-    }
-    Ok(MlpParams { weights, biases })
+    let mut out = MlpParams::default();
+    params_from_literals_into(spec, lits, off, &mut out)?;
+    Ok(out)
 }
 
 /// A compiled split-model configuration on the PJRT CPU client.
@@ -261,6 +293,31 @@ mod tests {
         let back = literal_to_matrix(&l, 2, 3).unwrap();
         assert_eq!(m, back);
         assert!(literal_to_matrix(&l, 3, 3).is_err());
+        // The `_into` form reuses the destination and rejects bad shapes
+        // without clobbering it.
+        let mut buf = Matrix::zeros(1, 1);
+        literal_to_matrix_into(&l, 2, 3, &mut buf).unwrap();
+        assert_eq!(buf, m);
+        assert!(literal_to_matrix_into(&l, 4, 4, &mut buf).is_err());
+    }
+
+    #[test]
+    fn params_into_reuses_skeleton() {
+        use crate::model::Activation;
+        let spec = MlpSpec::dense(&[2, 3], Activation::Linear);
+        let w = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = vec![7.0f32, 8.0, 9.0];
+        let lits = vec![matrix_to_literal(&w).unwrap(), vec_to_literal(&b).unwrap()];
+        let mut off = 0usize;
+        let mut out = MlpParams::default();
+        params_from_literals_into(&spec, &lits, &mut off, &mut out).unwrap();
+        assert_eq!(off, 2);
+        assert_eq!(out.weights[0], w);
+        assert_eq!(out.biases[0], b);
+        // Second decode into the same skeleton.
+        let mut off = 0usize;
+        params_from_literals_into(&spec, &lits, &mut off, &mut out).unwrap();
+        assert_eq!(out.weights[0], w);
     }
 
     #[test]

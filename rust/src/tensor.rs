@@ -1,15 +1,16 @@
 //! Row-major f32 matrix used by the data pipeline, the pure-Rust host
 //! engine, and the attack module.
 //!
-//! The host engine's hot path is `matmul` / `matmul_at` / `matmul_bt`; they
-//! are written cache-consciously (k-inner loop over contiguous rows with a
-//! transposed-B fallback) so the Rust baseline is a fair comparator for the
-//! XLA path. See EXPERIMENTS.md §Perf for before/after numbers.
+//! The GEMM hot path (`matmul` / `matmul_at` / `matmul_bt`) lives in
+//! [`crate::linalg`]: the allocating methods here delegate to the
+//! reference kernels, while the training loops use a [`crate::linalg::Backend`]
+//! with write-to-preallocated (`_into`) variants and per-worker
+//! workspaces. See EXPERIMENTS.md §Perf for before/after numbers.
 
 use crate::util::Rng;
 
 /// Dense row-major matrix of `f32`.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Matrix {
     pub rows: usize,
     pub cols: usize,
@@ -43,6 +44,35 @@ impl Matrix {
         m
     }
 
+    /// Reshape to `rows × cols` with every element zeroed, reusing the
+    /// existing allocation when capacity suffices. This is the buffer
+    /// protocol of every `_into` kernel: after the first (warmup) call at
+    /// a given shape, subsequent calls never touch the heap.
+    pub fn resize(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Reshape to `rows × cols` *without* zeroing retained elements —
+    /// for kernels that overwrite every output element (e.g. the
+    /// `matmul_bt` dot-product kernels), where [`Matrix::resize`]'s
+    /// memset would be pure overhead on the hot path.
+    pub fn resize_for_overwrite(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Become a copy of `other`, reusing this matrix's allocation.
+    pub fn copy_from(&mut self, other: &Matrix) {
+        self.rows = other.rows;
+        self.cols = other.cols;
+        self.data.clear();
+        self.data.extend_from_slice(&other.data);
+    }
+
     #[inline]
     pub fn at(&self, r: usize, c: usize) -> f32 {
         debug_assert!(r < self.rows && c < self.cols);
@@ -72,21 +102,36 @@ impl Matrix {
 
     /// Select a subset of rows (gather).
     pub fn take_rows(&self, idx: &[usize]) -> Matrix {
-        let mut out = Matrix::zeros(idx.len(), self.cols);
-        for (i, &r) in idx.iter().enumerate() {
-            out.row_mut(i).copy_from_slice(self.row(r));
-        }
+        let mut out = Matrix::default();
+        self.take_rows_into(idx, &mut out);
         out
+    }
+
+    /// Gather rows into a reusable buffer (zero-alloc after warmup).
+    pub fn take_rows_into(&self, idx: &[usize], out: &mut Matrix) {
+        out.rows = idx.len();
+        out.cols = self.cols;
+        out.data.clear();
+        for &r in idx {
+            out.data.extend_from_slice(self.row(r));
+        }
     }
 
     /// Select a contiguous row range `[start, end)`.
     pub fn slice_rows(&self, start: usize, end: usize) -> Matrix {
+        let mut out = Matrix::default();
+        self.slice_rows_into(start, end, &mut out);
+        out
+    }
+
+    /// Copy a contiguous row range into a reusable buffer.
+    pub fn slice_rows_into(&self, start: usize, end: usize, out: &mut Matrix) {
         assert!(start <= end && end <= self.rows);
-        Matrix {
-            rows: end - start,
-            cols: self.cols,
-            data: self.data[start * self.cols..end * self.cols].to_vec(),
-        }
+        out.rows = end - start;
+        out.cols = self.cols;
+        out.data.clear();
+        out.data
+            .extend_from_slice(&self.data[start * self.cols..end * self.cols]);
     }
 
     /// Select a subset of columns (feature split for VFL partitioning).
@@ -123,94 +168,27 @@ impl Matrix {
         out
     }
 
-    /// `self @ b` — row-major matmul, 4-row register-blocked.
-    ///
-    /// Each pass over B's rows updates four output rows at once, cutting
-    /// B-matrix memory traffic 4× vs the plain saxpy loop; the inner loop
-    /// stays contiguous so it autovectorizes. §Perf: 0.94 ms → measured
-    /// after-change in EXPERIMENTS.md for the 256×250×64 hot shape.
+    /// `self @ b` — allocating wrapper over the reference kernel
+    /// ([`crate::linalg::naive`]); training loops use a
+    /// [`crate::linalg::Backend`]'s `matmul_into` with a reused buffer
+    /// instead.
     pub fn matmul(&self, b: &Matrix) -> Matrix {
-        assert_eq!(self.cols, b.rows, "matmul shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, b.cols);
-        let mut out = Matrix::zeros(m, n);
-        let mut i = 0;
-        // 4-row blocks.
-        while i + 4 <= m {
-            let (a0, a1, a2, a3) = (self.row(i), self.row(i + 1), self.row(i + 2), self.row(i + 3));
-            // Split the output buffer into the four rows.
-            let (top, rest) = out.data[i * n..].split_at_mut(n);
-            let (r1, rest) = rest.split_at_mut(n);
-            let (r2, rest) = rest.split_at_mut(n);
-            let r3 = &mut rest[..n];
-            for p in 0..k {
-                let (c0, c1, c2, c3) = (a0[p], a1[p], a2[p], a3[p]);
-                let brow = &b.data[p * n..(p + 1) * n];
-                for j in 0..n {
-                    let bv = brow[j];
-                    top[j] += c0 * bv;
-                    r1[j] += c1 * bv;
-                    r2[j] += c2 * bv;
-                    r3[j] += c3 * bv;
-                }
-            }
-            i += 4;
-        }
-        // Tail rows: plain saxpy.
-        while i < m {
-            let arow = self.row(i);
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            for (p, &a) in arow.iter().enumerate().take(k) {
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &b.data[p * n..(p + 1) * n];
-                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
-                    *o += a * bv;
-                }
-            }
-            i += 1;
-        }
+        let mut out = Matrix::default();
+        crate::linalg::naive::matmul_into(self, b, &mut out);
         out
     }
 
     /// `self^T @ b` without materializing the transpose (dW = x^T @ dy).
     pub fn matmul_at(&self, b: &Matrix) -> Matrix {
-        assert_eq!(self.rows, b.rows, "matmul_at shape mismatch");
-        let (k, m, n) = (self.rows, self.cols, b.cols);
-        let mut out = Matrix::zeros(m, n);
-        for p in 0..k {
-            let arow = self.row(p);
-            let brow = b.row(p);
-            for (i, &a) in arow.iter().enumerate().take(m) {
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                for (o, &bv) in orow.iter_mut().zip(brow.iter()) {
-                    *o += a * bv;
-                }
-            }
-        }
+        let mut out = Matrix::default();
+        crate::linalg::naive::matmul_at_into(self, b, &mut out);
         out
     }
 
     /// `self @ b^T` without materializing the transpose (dx = dy @ W^T).
     pub fn matmul_bt(&self, b: &Matrix) -> Matrix {
-        assert_eq!(self.cols, b.cols, "matmul_bt shape mismatch");
-        let (m, k, n) = (self.rows, self.cols, b.rows);
-        let mut out = Matrix::zeros(m, n);
-        for i in 0..m {
-            let arow = self.row(i);
-            let orow = out.row_mut(i);
-            for (j, o) in orow.iter_mut().enumerate().take(n) {
-                let brow = b.row(j);
-                let mut acc = 0.0f32;
-                for p in 0..k {
-                    acc += arow[p] * brow[p];
-                }
-                *o = acc;
-            }
-        }
+        let mut out = Matrix::default();
+        crate::linalg::naive::matmul_bt_into(self, b, &mut out);
         out
     }
 
@@ -257,13 +235,20 @@ impl Matrix {
 
     /// Column-wise sum (db = sum_rows(dy)).
     pub fn col_sum(&self) -> Vec<f32> {
-        let mut out = vec![0.0f32; self.cols];
+        let mut out = Vec::new();
+        self.col_sum_into(&mut out);
+        out
+    }
+
+    /// Column-wise sum into a reusable buffer.
+    pub fn col_sum_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.cols, 0.0);
         for r in 0..self.rows {
             for (o, &v) in out.iter_mut().zip(self.row(r).iter()) {
                 *o += v;
             }
         }
-        out
     }
 
     /// Element-wise product.
@@ -449,5 +434,55 @@ mod tests {
         let a = Matrix::zeros(2, 3);
         let b = Matrix::zeros(4, 2);
         let _ = a.matmul(&b);
+    }
+
+    /// Regression: the seed tail/saxpy paths skipped `a == 0.0` terms, so
+    /// `0 · NaN` contributed NaN in 4-row-blocked rows but *nothing* in
+    /// tail rows — NaN propagation depended on the row index. Every row
+    /// must now agree: a NaN anywhere in B poisons every output element
+    /// it participates in, regardless of zeros in A.
+    #[test]
+    fn nan_propagation_is_row_uniform() {
+        // 5 rows: rows 0..4 take the blocked path, row 4 the tail path.
+        // A is all zeros, B is all NaN ⇒ every output must be NaN.
+        let a = Matrix::zeros(5, 3);
+        let b = Matrix::from_vec(3, 2, vec![f32::NAN; 6]);
+        let out = a.matmul(&b);
+        for r in 0..5 {
+            assert!(
+                out.row(r).iter().all(|v| v.is_nan()),
+                "row {r} swallowed NaN: {:?}",
+                out.row(r)
+            );
+        }
+        // Same property for matmul_at (dW path): zero activations must
+        // not mask a NaN gradient.
+        let x = Matrix::zeros(4, 3);
+        let dy = Matrix::from_vec(4, 2, vec![f32::NAN; 8]);
+        let dw = x.matmul_at(&dy);
+        assert!(dw.data.iter().all(|v| v.is_nan()), "matmul_at swallowed NaN");
+    }
+
+    #[test]
+    fn resize_and_copy_reuse_buffers() {
+        let mut m = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        m.resize(3, 2);
+        assert_eq!(m.shape(), (3, 2));
+        assert!(m.data.iter().all(|&v| v == 0.0), "resize must zero");
+        let src = Matrix::from_fn(2, 3, |r, c| (r * 3 + c) as f32);
+        m.copy_from(&src);
+        assert_eq!(m, src);
+    }
+
+    #[test]
+    fn gather_into_matches_allocating_forms() {
+        let m = Matrix::from_fn(5, 3, |r, c| (r * 3 + c) as f32);
+        let mut buf = Matrix::default();
+        m.take_rows_into(&[4, 1, 1], &mut buf);
+        assert_eq!(buf, m.take_rows(&[4, 1, 1]));
+        m.slice_rows_into(1, 4, &mut buf);
+        assert_eq!(buf, m.slice_rows(1, 4));
+        m.take_rows_into(&[], &mut buf);
+        assert_eq!(buf.shape(), (0, 3));
     }
 }

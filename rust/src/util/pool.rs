@@ -105,6 +105,56 @@ impl ThreadPool {
             .collect()
     }
 
+    /// Fork-join over contiguous chunks of `0..n`: splits the index range
+    /// into at most `chunks` near-equal pieces, runs `f(start, end)` for
+    /// each piece on pool workers, and returns only once every piece has
+    /// completed. Because the call blocks until completion, `f` may borrow
+    /// stack data (the `linalg::Threaded` GEMM panels rely on this).
+    pub fn scope_ranges<'env>(
+        &self,
+        n: usize,
+        chunks: usize,
+        f: &'env (dyn Fn(usize, usize) + Sync + 'env),
+    ) {
+        if n == 0 {
+            return;
+        }
+        let chunks = chunks.clamp(1, n);
+        if chunks == 1 {
+            f(0, n);
+            return;
+        }
+        // Lifetime erasure (the scoped-thread pattern): pool jobs must be
+        // 'static, but `f` is a borrow. SAFETY: this frame blocks on the
+        // completion channel below until every job has run, so the
+        // 'static lie can never be observed past `f`'s real lifetime.
+        // A reference transmute keeps pointer provenance intact (no
+        // integer round-trips).
+        let f_static: &'static (dyn Fn(usize, usize) + Sync + 'static) = unsafe {
+            std::mem::transmute::<
+                &'env (dyn Fn(usize, usize) + Sync + 'env),
+                &'static (dyn Fn(usize, usize) + Sync + 'static),
+            >(f)
+        };
+        let per = n / chunks;
+        let rem = n % chunks;
+        let (done_tx, done_rx) = channel::<()>();
+        let mut start = 0usize;
+        for c in 0..chunks {
+            let end = start + per + usize::from(c < rem);
+            let done = done_tx.clone();
+            self.execute(move || {
+                f_static(start, end);
+                let _ = done.send(());
+            });
+            start = end;
+        }
+        drop(done_tx);
+        for _ in 0..chunks {
+            done_rx.recv().expect("scope_ranges chunk completed");
+        }
+    }
+
     /// Block until every submitted job has finished.
     pub fn wait_idle(&self) {
         while self.inflight.load(Ordering::SeqCst) != 0 {
@@ -156,6 +206,39 @@ mod tests {
         let pool = ThreadPool::new(2);
         let out: Vec<i32> = pool.scope_map(Vec::<i32>::new(), |x| x);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn scope_ranges_covers_every_index_once() {
+        let pool = ThreadPool::new(3);
+        let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+        pool.scope_ranges(100, 7, &|start, end| {
+            for i in start..end {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+        // Degenerate cases: empty range, more chunks than items.
+        pool.scope_ranges(0, 4, &|_, _| panic!("no work expected"));
+        let small: Vec<AtomicU64> = (0..3).map(|_| AtomicU64::new(0)).collect();
+        pool.scope_ranges(3, 16, &|s, e| {
+            for i in s..e {
+                small[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(small.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn scope_ranges_borrows_stack_data() {
+        let pool = ThreadPool::new(2);
+        let data: Vec<u64> = (0..64).collect();
+        let sum = AtomicU64::new(0);
+        pool.scope_ranges(data.len(), 2, &|s, e| {
+            let part: u64 = data[s..e].iter().sum();
+            sum.fetch_add(part, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), (0..64).sum::<u64>());
     }
 
     #[test]
