@@ -8,7 +8,7 @@ mod common;
 use pubsub_vfl::bench_harness::{bench, save_json, Table};
 use pubsub_vfl::config::ModelSize;
 use pubsub_vfl::coordinator::{Broker, ParameterServer, PsMode, SubResult};
-use pubsub_vfl::coordinator::{EmbeddingMsg, GradientMsg};
+use pubsub_vfl::coordinator::{wire, EmbeddingMsg, GradientMsg};
 use pubsub_vfl::linalg::{available_threads, make, Backend, BackendKind, Threaded};
 use pubsub_vfl::metrics::Metrics;
 use pubsub_vfl::model::{
@@ -19,7 +19,7 @@ use pubsub_vfl::runtime::XlaService;
 use pubsub_vfl::tensor::Matrix;
 use pubsub_vfl::util::Rng;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 fn main() {
     let mut results = Vec::new();
@@ -36,7 +36,7 @@ fn main() {
                 party: 0,
                 generation: 0,
                 z: z.clone(),
-                produced_at: Instant::now(),
+                produced_at_us: wire::now_micros(),
                 param_version: 0,
             });
             match broker.take_embedding(0, Duration::from_millis(100)) {
@@ -48,7 +48,7 @@ fn main() {
                 party: 0,
                 generation: 0,
                 grad_z: z.clone(),
-                produced_at: Instant::now(),
+                produced_at_us: wire::now_micros(),
                 loss: 0.0,
             });
             let _ = broker.take_gradient(0, Duration::from_millis(100));
@@ -70,7 +70,7 @@ fn main() {
                                 party: 0,
                                 generation: 0,
                                 z: Matrix::zeros(8, 8),
-                                produced_at: Instant::now(),
+                                produced_at_us: wire::now_micros(),
                                 param_version: 0,
                             });
                         }

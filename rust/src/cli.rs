@@ -1,16 +1,20 @@
 //! Command-line interface (clap is not in the vendored crate set).
 //!
 //! Subcommands:
-//!   train     — run one experiment (architecture from --arch or config)
-//!   compare   — run all five architectures and print the comparison row
-//!   plan      — run the Algorithm 2 planner for a system profile
-//!   profile   — fit the local Table 8 cost constants (Fig. 8)
-//!   simulate  — project testbed system metrics for a configuration
-//!   attack    — run the EIA security evaluation across privacy budgets
-//!   quickcheck— fast self-test of the full stack
+//!   train         — run one experiment (architecture from --arch or
+//!                   config; `--connect ADDR` drives a remote passive
+//!                   party over the TCP transport)
+//!   serve-passive — host the passive party for a two-process run
+//!   compare       — run all five architectures and print the comparison row
+//!   plan          — run the Algorithm 2 planner for a system profile
+//!   profile       — fit the local Table 8 cost constants (Fig. 8)
+//!   simulate      — project testbed system metrics for a configuration
+//!   attack        — run the EIA security evaluation across privacy budgets
+//!   quickcheck    — fast self-test of the full stack
 
 use crate::attack::{chance_asr, run_eia, EiaConfig};
-use crate::config::{Architecture, EngineKind, ExperimentConfig, ModelSize};
+use crate::config::{Architecture, EngineKind, ExperimentConfig, ModelSize, TransportKind};
+use crate::coordinator::serve_passive;
 use crate::data::Task;
 use crate::dp::GaussianMechanism;
 use crate::metrics::RunReport;
@@ -26,7 +30,8 @@ use crate::util::Rng;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 
-/// Parsed flags: `--key value` pairs + positional args.
+/// Parsed flags: `--key value` / `--key=value` pairs plus bare boolean
+/// flags (`--verbose`), and positional args.
 #[derive(Debug, Default)]
 pub struct Args {
     pub positional: Vec<String>,
@@ -34,17 +39,31 @@ pub struct Args {
 }
 
 impl Args {
+    /// Parse `argv`. Three flag forms are accepted:
+    ///
+    /// - `--key value` — the value is the next token (even one starting
+    ///   with a single `-`, so negative numbers work);
+    /// - `--key=value` — inline value, unambiguous even when the value
+    ///   itself starts with `--`;
+    /// - `--flag` — bare boolean, stored as `"true"`; a flag directly
+    ///   followed by another `--flag` (or at the end of the line) is a
+    ///   boolean, never silently consumed as a value.
+    ///
+    /// Repeated flags keep the last occurrence.
     pub fn parse(argv: &[String]) -> Args {
         let mut a = Args::default();
         let mut i = 0;
         while i < argv.len() {
             let tok = &argv[i];
-            if let Some(key) = tok.strip_prefix("--") {
-                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
-                    a.flags.insert(key.to_string(), argv[i + 1].clone());
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((key, value)) = body.split_once('=') {
+                    a.flags.insert(key.to_string(), value.to_string());
+                    i += 1;
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    a.flags.insert(body.to_string(), argv[i + 1].clone());
                     i += 2;
                 } else {
-                    a.flags.insert(key.to_string(), "true".to_string());
+                    a.flags.insert(body.to_string(), "true".to_string());
                     i += 1;
                 }
             } else {
@@ -57,6 +76,12 @@ impl Args {
 
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// Boolean flag: present bare (`--verbose`), `=true`/`=1`, or with an
+    /// explicit `true`/`1` value.
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
 
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
@@ -105,6 +130,19 @@ pub fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
         cfg.dp.enabled = true;
         cfg.dp.mu = mu.parse().unwrap_or(f64::INFINITY);
     }
+    if let Some(t) = args.get("transport") {
+        cfg.transport.kind = TransportKind::parse(t)
+            .ok_or_else(|| anyhow!("unknown transport '{t}' (inproc|tcp)"))?;
+    }
+    if let Some(addr) = args.get("connect") {
+        cfg.transport.connect = addr.to_string();
+        cfg.transport.kind = TransportKind::Tcp;
+    }
+    if let Some(addr) = args.get("listen") {
+        cfg.transport.listen = addr.to_string();
+    }
+    cfg.transport.connect_timeout_s =
+        args.get_usize("connect-timeout", cfg.transport.connect_timeout_s as usize) as u64;
     cfg.validate().map_err(|e| anyhow!("{e}"))?;
     Ok(cfg)
 }
@@ -116,15 +154,21 @@ USAGE:
   pubsub-vfl <COMMAND> [--flags]
 
 COMMANDS:
-  train       run one experiment            [--arch pubsub --dataset bank --engine host|xla
+  train         run one experiment          [--arch pubsub --dataset bank --engine host|xla
                                              --backend naive|tiled|threaded
-                                             --batch N --epochs N --lr F --mu F --config file.toml]
-  compare     all five architectures        [--dataset synthetic --samples N]
-  plan        Algorithm 2 planner           [--ca N --cp N]
-  profile     fit local Table 8 constants
-  simulate    project testbed metrics       [--arch pubsub --ca N --cp N]
-  attack      EIA security sweep (Fig. 5)
-  quickcheck  fast full-stack self-test
+                                             --batch N --epochs N --lr F --mu F --config file.toml
+                                             --transport inproc|tcp --connect HOST:PORT]
+  serve-passive host the passive party      [--listen HOST:PORT --config file.toml --samples N]
+                (two-process training: start this first, then `train
+                 --connect` from the active party with the same config)
+  compare       all five architectures      [--dataset synthetic --samples N]
+  plan          Algorithm 2 planner         [--ca N --cp N]
+  profile       fit local Table 8 constants
+  simulate      project testbed metrics     [--arch pubsub --ca N --cp N]
+  attack        EIA security sweep (Fig. 5)
+  quickcheck    fast full-stack self-test
+
+Flags accept `--key value`, `--key=value`, and bare booleans (`--verbose`).
 ";
 
 /// CLI entry (returns process exit code).
@@ -133,6 +177,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "train" => cmd_train(&args),
+        "serve-passive" => cmd_serve_passive(&args),
         "compare" => cmd_compare(&args),
         "plan" => cmd_plan(&args),
         "profile" => cmd_profile(&args),
@@ -172,6 +217,35 @@ fn cmd_train(args: &Args) -> Result<i32> {
     println!("{}", RunReport::header());
     println!("{}   <- measured on this box", o.report.row());
     println!("{}   <- projected testbed (simulator)", paper_row(&o).row());
+    Ok(0)
+}
+
+fn cmd_serve_passive(args: &Args) -> Result<i32> {
+    let cfg = config_from_args(args)?;
+    let max = args.get_usize("samples", DEFAULT_MAX_SAMPLES);
+    println!(
+        "materializing '{}' (seed {}) for the passive party...",
+        cfg.dataset.name, cfg.seed
+    );
+    // Both processes materialize the same PSI-aligned dataset from the
+    // shared config/seed; only embeddings, gradients, and control frames
+    // ever cross the wire.
+    let prepared = Experiment::from_config(cfg).max_samples(max).prepare()?;
+    let addr = prepared.config().transport.listen.clone();
+    println!(
+        "passive party listening on {addr} (start `train --connect {addr}` on the active side)"
+    );
+    let report = serve_passive(
+        &addr,
+        prepared.config(),
+        prepared.spec(),
+        std::sync::Arc::clone(prepared.engine()),
+        prepared.train_data(),
+    )?;
+    println!(
+        "session complete: {} epochs served, {} backward passes applied, {} embeddings published",
+        report.epochs_served, report.bwd_applied, report.emb_published
+    );
     Ok(0)
 }
 
@@ -312,6 +386,60 @@ mod tests {
         assert_eq!(a.get_usize("batch", 0), 64);
         assert_eq!(a.get("verbose"), Some("true"));
         assert_eq!(a.get_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn parse_key_equals_value_syntax() {
+        let a = Args::parse(&argv("train --arch=pubsub --lr=0.01 --connect=127.0.0.1:7878"));
+        assert_eq!(a.get("arch"), Some("pubsub"));
+        assert_eq!(a.get_f64("lr", 0.0), 0.01);
+        assert_eq!(a.get("connect"), Some("127.0.0.1:7878"));
+        // `=` keeps values that themselves start with dashes unambiguous.
+        let b = Args::parse(&argv("train --name=--weird--"));
+        assert_eq!(b.get("name"), Some("--weird--"));
+        // Empty value after `=` is an explicit empty string, not a bool.
+        let c = Args::parse(&argv("train --name="));
+        assert_eq!(c.get("name"), Some(""));
+    }
+
+    #[test]
+    fn bare_boolean_flags_survive_adjacent_flags() {
+        // A bare flag directly followed by another flag must keep both:
+        // `--verbose` is boolean, `--batch 64` still parses as a pair.
+        let a = Args::parse(&argv("train --verbose --batch 64 --dry-run --seed 9"));
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.get_usize("batch", 0), 64);
+        assert!(a.get_bool("dry-run"));
+        assert_eq!(a.get_usize("seed", 0), 9);
+        // Trailing bare flag.
+        let b = Args::parse(&argv("train --batch 8 --verbose"));
+        assert_eq!(b.get_usize("batch", 0), 8);
+        assert!(b.get_bool("verbose"));
+        assert!(!b.get_bool("missing"));
+        // Repeated flags: last one wins.
+        let c = Args::parse(&argv("train --batch 8 --batch 16"));
+        assert_eq!(c.get_usize("batch", 0), 16);
+        // Negative numbers still work as `--key value`.
+        let d = Args::parse(&argv("train --bias -0.5"));
+        assert_eq!(d.get_f64("bias", 0.0), -0.5);
+    }
+
+    #[test]
+    fn transport_flags_parse_into_config() {
+        let a = Args::parse(&argv("train --connect 127.0.0.1:7001 --connect-timeout 5"));
+        let cfg = config_from_args(&a).unwrap();
+        assert_eq!(cfg.transport.kind, TransportKind::Tcp);
+        assert_eq!(cfg.transport.connect, "127.0.0.1:7001");
+        assert_eq!(cfg.transport.connect_timeout_s, 5);
+        let b = Args::parse(&argv("train --transport inproc"));
+        let cfg = config_from_args(&b).unwrap();
+        assert_eq!(cfg.transport.kind, TransportKind::InProc);
+        let bad = Args::parse(&argv("train --transport warp"));
+        assert!(config_from_args(&bad).is_err());
+        let l = Args::parse(&argv("serve-passive --listen 0.0.0.0:7005"));
+        let cfg = config_from_args(&l).unwrap();
+        assert_eq!(cfg.transport.listen, "0.0.0.0:7005");
+        assert_eq!(cfg.transport.kind, TransportKind::InProc, "--listen alone must not force tcp");
     }
 
     #[test]

@@ -10,6 +10,8 @@ use super::toml::{TomlDoc, TomlError};
 use crate::linalg::BackendKind;
 use std::fmt;
 
+pub use crate::coordinator::transport::TransportKind;
+
 /// Which of the five evaluated system architectures drives training.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Architecture {
@@ -168,6 +170,34 @@ pub struct DpConfig {
     pub mu: f64,
 }
 
+/// Message-plane selection for the PubSub session plus the addresses a
+/// distributed (two-process) run needs. `inproc` (the default) keeps
+/// both parties in one process over the shared broker; `tcp` splits them
+/// across `serve-passive --listen ADDR` / `train --connect ADDR`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TransportConfig {
+    pub kind: TransportKind,
+    /// Active side: address of the passive party's `serve-passive`
+    /// listener (required when `kind = tcp` on the training side).
+    pub connect: String,
+    /// Default listen address for `serve-passive`.
+    pub listen: String,
+    /// Seconds to keep retrying the initial connect + handshake
+    /// (tolerates startup skew between the two processes).
+    pub connect_timeout_s: u64,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        TransportConfig {
+            kind: TransportKind::InProc,
+            connect: String::new(),
+            listen: "127.0.0.1:7878".into(),
+            connect_timeout_s: 30,
+        }
+    }
+}
+
 /// Ablation toggles (Table 4).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct AblationConfig {
@@ -210,6 +240,8 @@ pub struct ExperimentConfig {
     /// Number of passive parties (1 = the paper's main two-party setting;
     /// >1 exercises the Appendix H multi-party extension).
     pub passive_parties: usize,
+    /// Message plane for the PubSub session (in-process or TCP).
+    pub transport: TransportConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -252,6 +284,7 @@ impl Default for ExperimentConfig {
             artifacts_dir: "artifacts".into(),
             bandwidth_mbps: 1000.0,
             passive_parties: 1,
+            transport: TransportConfig::default(),
         }
     }
 }
@@ -334,6 +367,15 @@ impl ExperimentConfig {
             .ok_or_else(|| ConfigError::Invalid(format!("unknown linalg backend '{backend}'")))?;
         c.artifacts_dir = doc.str_or("engine", "artifacts_dir", &c.artifacts_dir);
         c.bandwidth_mbps = doc.f64_or("network", "bandwidth_mbps", c.bandwidth_mbps);
+
+        let tkind = doc.str_or("transport", "kind", c.transport.kind.name());
+        c.transport.kind = TransportKind::parse(&tkind)
+            .ok_or_else(|| ConfigError::Invalid(format!("unknown transport '{tkind}'")))?;
+        c.transport.connect = doc.str_or("transport", "connect", &c.transport.connect);
+        c.transport.listen = doc.str_or("transport", "listen", &c.transport.listen);
+        c.transport.connect_timeout_s = doc
+            .i64_or("transport", "connect_timeout_s", c.transport.connect_timeout_s as i64)
+            .max(1) as u64;
         c.validate()?;
         Ok(c)
     }
@@ -477,6 +519,22 @@ bandwidth_mbps = 500.0
         assert!(Architecture::VflPs.has_ps());
         assert!(!Architecture::VflPs.is_async());
         assert!(Architecture::PubSub.is_async() && Architecture::PubSub.has_ps());
+    }
+
+    #[test]
+    fn transport_section_parses_and_defaults() {
+        let d = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(d.transport.kind, TransportKind::InProc);
+        assert!(d.transport.connect.is_empty());
+        let c = ExperimentConfig::from_toml(
+            "[transport]\nkind = \"tcp\"\nconnect = \"10.0.0.2:7878\"\nlisten = \"0.0.0.0:7878\"\nconnect_timeout_s = 5",
+        )
+        .unwrap();
+        assert_eq!(c.transport.kind, TransportKind::Tcp);
+        assert_eq!(c.transport.connect, "10.0.0.2:7878");
+        assert_eq!(c.transport.listen, "0.0.0.0:7878");
+        assert_eq!(c.transport.connect_timeout_s, 5);
+        assert!(ExperimentConfig::from_toml("[transport]\nkind = \"pigeon\"").is_err());
     }
 
     #[test]

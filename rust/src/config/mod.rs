@@ -6,6 +6,6 @@ pub mod toml;
 
 pub use experiment::{
     AblationConfig, Architecture, ConfigError, DatasetConfig, DpConfig, EngineKind,
-    ExperimentConfig, ModelSize, PartyConfig, TrainConfig,
+    ExperimentConfig, ModelSize, PartyConfig, TrainConfig, TransportConfig, TransportKind,
 };
 pub use toml::{TomlDoc, TomlError, TomlValue};

@@ -133,8 +133,8 @@ impl Broker {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::wire;
     use crate::tensor::Matrix;
-    use std::time::Instant;
 
     fn emb(id: u64) -> EmbeddingMsg {
         emb_gen(id, 0)
@@ -146,7 +146,7 @@ mod tests {
             party: 0,
             generation,
             z: Matrix::zeros(2, 4),
-            produced_at: Instant::now(),
+            produced_at_us: wire::now_micros(),
             param_version: 0,
         }
     }

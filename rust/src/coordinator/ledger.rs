@@ -273,6 +273,29 @@ impl BatchLedger {
         s.remaining_bwd = s.remaining_bwd.saturating_sub(1);
     }
 
+    /// Credit a backward pass reported by a *remote* passive party
+    /// (transport mode). Unlike [`BatchLedger::claim_bwd`] +
+    /// [`BatchLedger::finish_bwd`], the update has already been applied to
+    /// the remote replica when its ack arrives, and the ack may cross a
+    /// concurrent reassignment on the wire — so only the per-party
+    /// exactly-once flag gates it, not the generation (the remote side
+    /// applies at most one gradient per `(epoch, batch, party)`, enforced
+    /// by its own claim at take time). Credits `remaining_bwd` directly.
+    /// Returns whether the pass was counted.
+    pub fn credit_bwd(&self, batch_id: u64, party: usize) -> bool {
+        let mut s = self.state.lock().unwrap();
+        let Some(e) = s.entries.get_mut(&batch_id) else { return false };
+        if e.bwd_done[party] {
+            return false;
+        }
+        e.bwd_done[party] = true;
+        if e.bwd_done.iter().all(|&d| d) {
+            e.stage = BatchStage::Done;
+        }
+        s.remaining_bwd = s.remaining_bwd.saturating_sub(1);
+        true
+    }
+
     /// Reassign a batch on a single party after its (unconsumed) embedding
     /// was evicted by the buffer mechanism. No generation bump: the
     /// message never reached a consumer, and sibling embeddings already
@@ -449,6 +472,26 @@ mod tests {
         assert!(l.claim_bwd(10, g2, 1).is_some());
         l.finish_bwd();
         assert_eq!(l.remaining_bwd(), 0);
+        assert!(l.epoch_done());
+    }
+
+    #[test]
+    fn credit_bwd_counts_once_across_generations() {
+        // Remote-ack path: an ack for an already-superseded generation
+        // still counts (the remote replica really applied it), but each
+        // (batch, party) counts at most once and unknown batches never.
+        let l = ledger_with(2, &[10]);
+        let j = l.next_embed_job(0).unwrap();
+        assert!(l.credit_bwd(10, 0));
+        assert_eq!(l.remaining_bwd(), 1);
+        // Reassignment does not reset the credit.
+        let _g2 = l.requeue_all(10, j.generation).unwrap();
+        assert!(!l.credit_bwd(10, 0), "duplicate ack must not double-count");
+        assert_eq!(l.remaining_bwd(), 1);
+        assert!(l.credit_bwd(10, 1));
+        assert_eq!(l.remaining_bwd(), 0);
+        assert_eq!(l.stage(10), Some(BatchStage::Done));
+        assert!(!l.credit_bwd(99, 0), "unknown batch never credits");
         assert!(l.epoch_done());
     }
 

@@ -5,12 +5,18 @@
 //! is bumped each time the batch is reassigned, so brokers and consumers
 //! can reject messages produced for a superseded attempt and a retried
 //! batch can never be trained twice.
+//!
+//! Messages are fully serializable: timestamps are codec-boundary micros
+//! ([`super::wire::now_micros`]) rather than `Instant`s, and the wire
+//! sizes reported by [`EmbeddingMsg::bytes`] / [`GradientMsg::bytes`] are
+//! *derived from the encoder* ([`super::wire::embedding_wire_bytes`] /
+//! [`super::wire::gradient_wire_bytes`]), not a framing constant.
 
+use super::wire;
 use crate::tensor::Matrix;
-use std::time::Instant;
 
 /// An embedding published by a passive worker (one batch).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct EmbeddingMsg {
     pub batch_id: u64,
     /// Which passive party produced it (multi-party extension).
@@ -19,35 +25,40 @@ pub struct EmbeddingMsg {
     /// generations are rejected by the broker and dropped by consumers.
     pub generation: u64,
     pub z: Matrix,
-    pub produced_at: Instant,
+    /// Production timestamp in µs since the Unix epoch, stamped when the
+    /// message enters the message plane (codec boundary).
+    pub produced_at_us: u64,
     /// Parameter-server version the producer's replica was synced to
     /// (staleness accounting).
     pub param_version: u64,
 }
 
 impl EmbeddingMsg {
-    /// Wire size: payload + `(batch_id, generation)` framing (matches
-    /// `profiler::payload_bytes_per_sample`).
+    /// Exact wire size of this message's frame (header + payload),
+    /// derived from the codec — pinned equal to the encoder's output in
+    /// `wire::tests::derived_byte_accounting_matches_encoder`.
     pub fn bytes(&self) -> u64 {
-        (self.z.data.len() * 4 + 16) as u64
+        wire::embedding_wire_bytes(self.z.rows, self.z.cols)
     }
 }
 
 /// A cut-layer gradient published by an active worker.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct GradientMsg {
     pub batch_id: u64,
     pub party: usize,
     /// Generation of the batch attempt the gradient was computed for.
     pub generation: u64,
     pub grad_z: Matrix,
-    pub produced_at: Instant,
+    /// Production timestamp in µs since the Unix epoch (codec boundary).
+    pub produced_at_us: u64,
     pub loss: f64,
 }
 
 impl GradientMsg {
+    /// Exact wire size of this message's frame (see [`EmbeddingMsg::bytes`]).
     pub fn bytes(&self) -> u64 {
-        (self.grad_z.data.len() * 4 + 16) as u64
+        wire::gradient_wire_bytes(self.grad_z.rows, self.grad_z.cols)
     }
 }
 
@@ -56,24 +67,27 @@ mod tests {
     use super::*;
 
     #[test]
-    fn byte_accounting() {
+    fn byte_accounting_is_codec_derived() {
         let m = EmbeddingMsg {
             batch_id: 1,
             party: 0,
             generation: 0,
             z: Matrix::zeros(4, 8),
-            produced_at: Instant::now(),
+            produced_at_us: wire::now_micros(),
             param_version: 0,
         };
-        assert_eq!(m.bytes(), 4 * 8 * 4 + 16);
+        assert_eq!(m.bytes(), wire::embedding_wire_bytes(4, 8));
+        assert_eq!(m.bytes(), wire::encode(&wire::Frame::Embedding(m.clone())).len() as u64);
         let g = GradientMsg {
             batch_id: 1,
             party: 0,
             generation: 0,
             grad_z: Matrix::zeros(4, 8),
-            produced_at: Instant::now(),
+            produced_at_us: wire::now_micros(),
             loss: 0.0,
         };
+        assert_eq!(g.bytes(), wire::encode(&wire::Frame::Gradient(g.clone())).len() as u64);
+        // Embedding and gradient frames of the same shape cost the same.
         assert_eq!(g.bytes(), m.bytes());
     }
 }

@@ -2,9 +2,12 @@
 //! with batch-ID-keyed channels (buffer + waiting-deadline mechanisms),
 //! a generation-tagged batch ledger that makes the retry lifecycle
 //! exactly-once, per-party parameter servers with the Eq. (5)
-//! semi-asynchronous schedule, and the session-lived worker pool that
-//! wires workers, channels, PSI-aligned batch plans, and the GDP
-//! protocol together.
+//! semi-asynchronous schedule, and the party-split session (active /
+//! passive / supervisor) that wires workers, channels, PSI-aligned batch
+//! plans, and the GDP protocol together — over either transport: the
+//! zero-copy in-process plane, or a versioned length-prefixed wire codec
+//! carried by TCP between two genuinely separate party processes
+//! (`serve-passive` / `train --connect`).
 
 pub mod broker;
 pub mod channel;
@@ -12,6 +15,8 @@ pub mod ledger;
 pub mod messages;
 pub mod ps;
 pub mod session;
+pub mod transport;
+pub mod wire;
 
 pub use broker::Broker;
 pub use channel::{Publish, SubResult, Topic};
@@ -19,5 +24,12 @@ pub use ledger::{BatchLedger, BatchStage, EmbedJob};
 pub use messages::{EmbeddingMsg, GradientMsg};
 pub use ps::{ParameterServer, PsMode, SemiAsyncSchedule};
 pub use session::{
-    evaluate, evaluate_ws, reached, train_pubsub, train_pubsub_session, SessionResult,
+    evaluate, evaluate_ws, reached, serve_passive, serve_passive_listener,
+    serve_passive_session, train_pubsub, train_pubsub_over_link, train_pubsub_session,
+    PassiveSessionReport, SessionResult,
 };
+pub use transport::{
+    InProcLink, InProcTransport, Link, LinkRecv, LinkStats, LinkStatsSnapshot, TcpLink,
+    TcpTransport, Transport, TransportKind,
+};
+pub use wire::{Frame, WireError, WIRE_VERSION};

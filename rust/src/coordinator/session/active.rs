@@ -1,0 +1,223 @@
+//! The active party's worker half: join sibling embeddings by batch ID,
+//! run the combined bottom+top step, publish cut-layer gradients.
+//!
+//! Workers here touch only the message plane (the broker the active
+//! party hosts), the shared [`BatchLedger`] scheduling state, and the
+//! active party's own replicas/parameter servers. The passive party's
+//! state is visible exclusively through messages — locally when the
+//! transport is `inproc`, over the wire in `tcp` mode, where the only
+//! difference is how the consume-side staleness version is observed
+//! ([`PassiveVersionView`]).
+
+use super::super::broker::Broker;
+use super::super::channel::SubResult;
+use super::super::ledger::BatchLedger;
+use super::super::messages::GradientMsg;
+use super::super::ps::ParameterServer;
+use super::super::wire;
+use crate::data::VerticalDataset;
+use crate::experiment::{RunEvent, RunOptions};
+use crate::linalg::{self, BackendKind};
+use crate::metrics::Metrics;
+use crate::model::{ActiveStepBuf, MlpParams, SplitEngine, Workspace};
+use crate::tensor::Matrix;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Per-worker replica of the active-side models, carried across the
+/// whole session and re-synced at PS barriers.
+pub(crate) struct ActiveReplica {
+    pub active: MlpParams,
+    pub top: MlpParams,
+}
+
+/// Where the active party reads each passive party's "live" parameter
+/// version for staleness accounting at consume time.
+pub(crate) enum PassiveVersionView<'a> {
+    /// In-proc: the passive PS is in the same process — read it directly
+    /// (the pre-refactor behavior, bit-identical).
+    Local(&'a [ParameterServer]),
+    /// Remote: the newest version observed in frames from the passive
+    /// process (receiver-clock staleness; see EXPERIMENTS.md).
+    Remote(&'a [AtomicU64]),
+}
+
+impl PassiveVersionView<'_> {
+    fn version(&self, party: usize) -> u64 {
+        match self {
+            PassiveVersionView::Local(ps) => ps[party].version(),
+            PassiveVersionView::Remote(seen) => seen[party].load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Everything an active worker shares with its siblings and the
+/// supervisor. Built once on the supervisor stack, borrowed by every
+/// spawned worker.
+pub(crate) struct ActiveShared<'a> {
+    pub broker: &'a Broker,
+    pub ledger: &'a BatchLedger,
+    pub metrics: &'a Metrics,
+    pub ps_active: &'a ParameterServer,
+    pub ps_top: &'a ParameterServer,
+    pub versions: PassiveVersionView<'a>,
+    pub epoch_loss: &'a Mutex<(f64, usize)>,
+    pub stale_sum: &'a AtomicU64,
+    pub stale_n: &'a AtomicU64,
+    pub stale_max: &'a AtomicU64,
+    pub emb_version_max: &'a AtomicU64,
+    pub train: &'a VerticalDataset,
+    pub opts: &'a RunOptions,
+    pub k: usize,
+    pub t_ddl: Duration,
+    pub lr: f32,
+    pub clip: f32,
+    pub backend_kind: BackendKind,
+    pub total_workers: usize,
+}
+
+/// The persistent active-worker loop (runs until the broker closes).
+pub(crate) fn run_active_worker(
+    sh: &ActiveShared<'_>,
+    engine: &Arc<dyn SplitEngine>,
+    replica: &Mutex<ActiveReplica>,
+) {
+    // Worker-lived compute state: scratch arena + reused gather/output
+    // buffers — the steady-state step allocates only the gradient
+    // payloads it publishes (ownership crosses the channel).
+    let mut ws = Workspace::new(linalg::worker_backend(sh.backend_kind, sh.total_workers));
+    let mut step = ActiveStepBuf::default();
+    let mut x_buf = Matrix::default();
+    let mut y_buf: Vec<f32> = Vec::new();
+    'outer: loop {
+        let waited = Instant::now();
+        // Take any ready embedding from party 0, then join the *same
+        // batch ID* from the other parties (ID alignment is guaranteed by
+        // the batch plan both sides share after PSI).
+        let (id, first) = match sh.broker.take_embedding(0, sh.t_ddl) {
+            SubResult::Ok(v) => {
+                sh.metrics.add_wait(waited.elapsed());
+                v
+            }
+            SubResult::Closed => break,
+            SubResult::TimedOut => {
+                // Nothing was published within the deadline: there is no
+                // batch to give up on, so nothing is reassigned and
+                // nothing counts as a retry.
+                sh.metrics.add_wait(waited.elapsed());
+                continue;
+            }
+        };
+        let generation = first.generation;
+        // Compare-and-claim: only one worker can ever step this
+        // generation of the batch.
+        let Some(rows) = sh.ledger.begin_join(id, generation) else {
+            sh.metrics.inc("stale_embeddings_dropped", 1);
+            continue;
+        };
+        let mut zs: Vec<Matrix> = Vec::with_capacity(sh.k);
+        let mut versions: Vec<u64> = Vec::with_capacity(sh.k);
+        zs.push(first.z);
+        versions.push(first.param_version);
+        let mut join_failed = false;
+        for sibling in sh.broker.emb.iter().skip(1) {
+            match sibling.subscribe(id, sh.t_ddl) {
+                SubResult::Ok(m) if m.generation == generation => {
+                    versions.push(m.param_version);
+                    zs.push(m.z);
+                }
+                SubResult::Closed => break 'outer,
+                // Timed out, or a leftover from a stale generation
+                // surfaced: give up on the attempt.
+                _ => {
+                    join_failed = true;
+                    break;
+                }
+            }
+        }
+        if join_failed {
+            // Waiting-deadline mechanism: reassign the batch everywhere
+            // under a fresh generation and purge the siblings already
+            // buffered, so the retry can never be stepped twice.
+            sh.metrics.inc("deadline_expired", 1);
+            if let Some(new_gen) = sh.ledger.requeue_all(id, generation) {
+                sh.broker.purge_stale(id, new_gen);
+                sh.opts.emit(RunEvent::BatchRetried {
+                    epoch: sh.ledger.epoch(),
+                    batch_id: id,
+                });
+            }
+            continue;
+        }
+        sh.train.active.x.take_rows_into(&rows, &mut x_buf);
+        y_buf.clear();
+        y_buf.extend(rows.iter().map(|&r| sh.train.y[r]));
+        let mut local = replica.lock().unwrap();
+        let t = Instant::now();
+        engine.active_step_into(
+            &local.active,
+            &local.top,
+            &x_buf,
+            &zs,
+            &y_buf,
+            &mut ws,
+            &mut step,
+        );
+        step.grad_active.clip_norm(sh.clip);
+        step.grad_top.clip_norm(sh.clip);
+        local.active.sgd_step(&step.grad_active, sh.lr);
+        local.top.sgd_step(&step.grad_top, sh.lr);
+        drop(local);
+        sh.ps_active.push_grad(&step.grad_active);
+        sh.ps_top.push_grad(&step.grad_top);
+        sh.metrics.add_busy(t.elapsed());
+        sh.metrics.inc("active_steps", 1);
+        // Staleness: embedding production version vs the live passive PS
+        // version at consume time (remote: newest version seen on the
+        // wire — the receiver's clock).
+        for (party, &v) in versions.iter().enumerate() {
+            let gap = sh.versions.version(party).saturating_sub(v);
+            sh.stale_sum.fetch_add(gap, Ordering::Relaxed);
+            sh.stale_max.fetch_max(gap, Ordering::Relaxed);
+            sh.emb_version_max.fetch_max(v, Ordering::Relaxed);
+        }
+        sh.stale_n.fetch_add(sh.k as u64, Ordering::Relaxed);
+        {
+            let mut l = sh.epoch_loss.lock().unwrap();
+            l.0 += step.loss;
+            l.1 += 1;
+        }
+        sh.ledger.mark_stepped(id, generation);
+        for party in 0..sh.k {
+            if sh.ledger.generation(id) != Some(generation) {
+                // The batch was reassigned mid-publish (a sibling gradient
+                // of ours was evicted): stop seeding stale messages — the
+                // retry will republish the full set.
+                break;
+            }
+            let evicted = sh.broker.publish_gradient(GradientMsg {
+                batch_id: id,
+                party,
+                generation,
+                // Ownership crosses the channel: take the buffer (the
+                // next step re-grows it).
+                grad_z: std::mem::take(&mut step.grad_z[party]),
+                produced_at_us: wire::now_micros(),
+                loss: step.loss,
+            });
+            if let Some((old_id, old_gen)) = evicted {
+                // A dropped gradient would strand its batch: full retry
+                // (the victim's completed backward passes keep their
+                // credit in the ledger).
+                if let Some(new_gen) = sh.ledger.requeue_all(old_id, old_gen) {
+                    sh.broker.purge_stale(old_id, new_gen);
+                    sh.opts.emit(RunEvent::BatchRetried {
+                        epoch: sh.ledger.epoch(),
+                        batch_id: old_id,
+                    });
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! The PubSub-VFL training session (Algorithm 1), split by party role.
+//!
+//! The session used to be one 1k-line file interleaving both parties'
+//! logic; it is now carved along the administrative boundary the paper
+//! assumes:
+//!
+//! - [`active`] — the active party's worker loop: join embeddings, run
+//!   the top/bottom step, publish cut-layer gradients. Touches only
+//!   messages, the (active-hosted) broker/ledger, and its own replicas.
+//! - [`passive`] — the passive party's worker loop and, for distributed
+//!   runs, the full `serve-passive` server: replicas, per-party parameter
+//!   server, and the GDP mechanism live here and never leave the party.
+//! - [`supervisor`] — the epoch supervisor: installs batch plans into the
+//!   [`BatchLedger`](super::ledger::BatchLedger), waits for each epoch to
+//!   drain, runs the Eq. (5) semi-async PS schedule, and evaluates.
+//!
+//! Transport selection ([`crate::config::TransportConfig`]) decides the
+//! wiring: `inproc` runs both halves in one process over the shared
+//! broker exactly as before (zero-copy, bit-identical results), `tcp`
+//! runs the passive half in another process behind a
+//! [`Link`](super::transport::Link) carrying [`wire`](super::wire)
+//! frames, with the exactly-once generation protocol held across the
+//! wire.
+
+pub mod active;
+pub mod passive;
+pub mod supervisor;
+
+pub use passive::{
+    serve_passive, serve_passive_listener, serve_passive_session, PassiveSessionReport,
+};
+pub use supervisor::{train_pubsub_over_link, train_pubsub_session};
+
+use crate::config::ExperimentConfig;
+use crate::data::{Task, VerticalDataset};
+use crate::experiment::{RunOptions, TrainCtx};
+use crate::metrics::Metrics;
+use crate::model::{auc, rmse, MlpParams, SplitEngine, SplitModelSpec, SplitParams, Workspace};
+use crate::tensor::Matrix;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Outcome of a training session.
+#[derive(Clone, Debug)]
+pub struct SessionResult {
+    pub params: SplitParams,
+    /// (epoch, train-loss) curve.
+    pub loss_curve: Vec<(f64, f64)>,
+    /// (epoch, eval-metric) curve.
+    pub metric_curve: Vec<(f64, f64)>,
+    pub final_metric: f64,
+    pub epochs_run: usize,
+    pub reached_target: bool,
+    pub wall: Duration,
+    /// Batches genuinely reassigned by the deadline/buffer mechanisms
+    /// (each one also emitted a [`crate::experiment::RunEvent::BatchRetried`]).
+    pub retried_batches: usize,
+}
+
+/// Evaluate the split model on a dataset in engine-batch-sized chunks
+/// (AOT artifacts have a static batch dimension; the ragged tail is
+/// dropped, consistent with training). Uses the process-default backend;
+/// sessions with a configured backend call [`evaluate_ws`].
+pub fn evaluate(
+    engine: &dyn SplitEngine,
+    params: &SplitParams,
+    data: &VerticalDataset,
+    batch: usize,
+    task: Task,
+) -> f64 {
+    evaluate_ws(engine, params, data, batch, task, &mut Workspace::with_default_backend())
+}
+
+/// [`evaluate`] on a caller-provided workspace (and thus backend). The
+/// workspace carries the kernel scratch across calls; the small
+/// gather/prediction buffers below are reused across chunks within one
+/// call.
+pub fn evaluate_ws(
+    engine: &dyn SplitEngine,
+    params: &SplitParams,
+    data: &VerticalDataset,
+    batch: usize,
+    task: Task,
+    ws: &mut Workspace,
+) -> f64 {
+    let n = data.len();
+    let mut scores: Vec<f32> = Vec::with_capacity(n);
+    let mut labels: Vec<f32> = Vec::with_capacity(n);
+    let mut x_a = Matrix::default();
+    let mut x_p = vec![Matrix::default(); data.passive.len()];
+    let mut preds = Matrix::default();
+    let mut i = 0;
+    while i + batch <= n {
+        data.active.x.slice_rows_into(i, i + batch, &mut x_a);
+        for (p, buf) in x_p.iter_mut().enumerate() {
+            data.passive[p].x.slice_rows_into(i, i + batch, buf);
+        }
+        engine.predict_into(
+            &params.active,
+            &params.top,
+            &params.passive,
+            &x_a,
+            &x_p,
+            ws,
+            &mut preds,
+        );
+        scores.extend_from_slice(&preds.data);
+        labels.extend_from_slice(&data.y[i..i + batch]);
+        i += batch;
+    }
+    if scores.is_empty() {
+        return match task {
+            Task::BinaryClassification => 0.5,
+            Task::Regression => f64::INFINITY,
+        };
+    }
+    match task {
+        Task::BinaryClassification => auc(&scores, &labels),
+        Task::Regression => rmse(&scores, &labels),
+    }
+}
+
+/// Did `metric` reach `target` for the task (AUC up / RMSE down)?
+pub fn reached(task: Task, metric: f64, target: f64) -> bool {
+    match task {
+        Task::BinaryClassification => metric >= target,
+        Task::Regression => metric <= target,
+    }
+}
+
+/// Legacy explicit-argument entry point; the `Trainer` impl in
+/// `experiment::trainer` calls [`train_pubsub_session`] directly.
+///
+/// Always runs **in-process**, whatever `cfg.transport` says — the
+/// infallible signature predates the transport layer; distributed runs
+/// go through [`train_pubsub_session`] (or the `Experiment` API), which
+/// surface connect/handshake failures as errors.
+pub fn train_pubsub(
+    engine: Arc<dyn SplitEngine>,
+    spec: &SplitModelSpec,
+    train: &VerticalDataset,
+    test: &VerticalDataset,
+    cfg: &ExperimentConfig,
+    metrics: Arc<Metrics>,
+) -> SessionResult {
+    let mut cfg = cfg.clone();
+    cfg.transport.kind = crate::config::TransportKind::InProc;
+    let opts = RunOptions::default();
+    let ctx = TrainCtx { engine, spec, train, test, cfg: &cfg, metrics, opts: &opts };
+    train_pubsub_session(&ctx).expect("in-process session cannot fail to start")
+}
+
+/// Mean of parameter replicas.
+pub(crate) fn mean_params<'a>(mut it: impl Iterator<Item = &'a MlpParams>) -> MlpParams {
+    let first = it.next().expect("at least one replica").clone();
+    let mut acc = first;
+    let mut n = 1usize;
+    for p in it {
+        acc.axpy(1.0, p);
+        n += 1;
+    }
+    acc.scale(1.0 / n as f32);
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelSize;
+    use crate::data::{make_classification, ClassificationOpts};
+    use crate::model::HostSplitModel;
+    use crate::util::Rng;
+
+    #[test]
+    fn evaluate_chunks_and_reached() {
+        let mut rng = Rng::new(3);
+        let ds = make_classification(
+            &ClassificationOpts {
+                samples: 128,
+                features: 12,
+                informative: 8,
+                redundant: 2,
+                class_sep: 1.5,
+                flip_y: 0.0,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        let vtr = VerticalDataset::split_two(&ds, 6);
+        let spec = SplitModelSpec::build(ModelSize::Small, 6, &[6], 16, 8);
+        let engine = HostSplitModel::new(spec.clone(), Task::BinaryClassification);
+        let params = SplitParams::init(&spec, &mut Rng::new(1));
+        let m = evaluate(&engine, &params, &vtr, 32, Task::BinaryClassification);
+        assert!((0.0..=1.0).contains(&m));
+        assert!(reached(Task::BinaryClassification, 0.95, 0.9));
+        assert!(!reached(Task::BinaryClassification, 0.85, 0.9));
+        assert!(reached(Task::Regression, 10.0, 12.0));
+        assert!(!reached(Task::Regression, 15.0, 12.0));
+    }
+}

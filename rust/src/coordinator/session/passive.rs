@@ -1,0 +1,694 @@
+//! The passive party's half: embed batches, apply cut-layer gradients.
+//!
+//! Two wirings share the same per-batch compute:
+//!
+//! - [`run_local_passive_worker`] — the in-proc worker loop (transport
+//!   `inproc`): pulls jobs straight from the shared
+//!   [`BatchLedger`](super::super::ledger::BatchLedger) and publishes into
+//!   the shared broker, exactly as the pre-transport single-process
+//!   system did.
+//! - [`serve_passive_session`] — the standalone passive-party server
+//!   (transport `tcp`, CLI `serve-passive`): receives the epoch plan,
+//!   embed jobs, and gradients as [`wire`] frames over a
+//!   [`Link`](super::super::transport::Link); owns its replicas, its
+//!   parameter server, and the GDP mechanism; and never sees the active
+//!   party's data or labels. Exactly-once is enforced at the decode
+//!   boundary (stale-generation frames rejected) plus a claim-at-take on
+//!   each `(batch, party)` backward, acked with `BwdDone` only after the
+//!   update landed in a replica.
+
+use super::super::channel::{Publish, SubResult, Topic};
+use super::super::ledger::EmbedJob;
+use super::super::messages::{EmbeddingMsg, GradientMsg};
+use super::super::ps::{ParameterServer, PsMode};
+use super::super::transport::{Link, LinkRecv, TcpLink};
+use super::super::wire::{self, Frame};
+use super::mean_params;
+use crate::config::ExperimentConfig;
+use crate::data::VerticalDataset;
+use crate::dp::GaussianMechanism;
+use crate::experiment::{RunEvent, RunOptions};
+use crate::linalg::{self, BackendKind};
+use crate::metrics::Metrics;
+use crate::model::{MlpParams, SplitEngine, SplitModelSpec, SplitParams, Workspace};
+use crate::tensor::Matrix;
+use crate::util::Rng;
+use anyhow::{anyhow, bail, Result};
+use std::collections::{HashMap, VecDeque};
+use std::net::TcpListener;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Per-worker replica of one passive party's bottom model.
+pub(crate) struct PassiveReplica {
+    pub params: MlpParams,
+    /// PS version the replica was last synced to (stamped into the
+    /// embeddings it produces, for staleness accounting).
+    pub version: u64,
+}
+
+/// Fold each passive party's replicas through its parameter server and
+/// broadcast the result back, stamping the new version into every
+/// replica — the passive half of an Eq. (5) PS barrier. One
+/// implementation shared by the in-proc supervisor and the remote
+/// server, so the two transports cannot diverge.
+pub(crate) fn fold_passive_barrier(
+    replicas: &[Vec<Mutex<PassiveReplica>>],
+    ps: &[ParameterServer],
+) {
+    for (party, reps) in replicas.iter().enumerate() {
+        let mut guards: Vec<_> = reps.iter().map(|m| m.lock().unwrap()).collect();
+        let mean_p = mean_params(guards.iter().map(|g| &g.params));
+        ps[party].set_params(mean_p);
+        let (bcast_p, vp) = ps[party].fetch();
+        for g in guards.iter_mut() {
+            g.params = bcast_p.clone();
+            g.version = vp;
+        }
+    }
+}
+
+/// One Eq. (17) GDP mechanism per passive party, seeded from the
+/// experiment seed (`seed ^ (party + 1)`) — the single source of the
+/// derivation for both transports.
+pub(crate) fn make_dp_mechanisms(
+    cfg: &ExperimentConfig,
+    k: usize,
+) -> Vec<Mutex<GaussianMechanism>> {
+    let b = cfg.train.batch_size;
+    (0..k)
+        .map(|p| {
+            Mutex::new(if cfg.dp.enabled && cfg.dp.mu.is_finite() {
+                GaussianMechanism::new(cfg.dp.mu, b, b, cfg.seed ^ (p as u64 + 1))
+            } else {
+                GaussianMechanism::disabled(cfg.seed)
+            })
+        })
+        .collect()
+}
+
+/// Worker-lived compute state (scratch arena + reused gather/output
+/// buffers) plus the two per-batch kernels every passive worker runs.
+/// Both wirings — the in-proc loop and the remote server loop — call
+/// these, so the transports cannot diverge on the compute path; only the
+/// scheduling/ack glue around them differs.
+pub(crate) struct PassiveCompute {
+    ws: Workspace,
+    x_buf: Matrix,
+    z_buf: Matrix,
+    grad_buf: MlpParams,
+}
+
+impl PassiveCompute {
+    pub fn new(backend_kind: BackendKind, total_workers: usize) -> PassiveCompute {
+        PassiveCompute {
+            ws: Workspace::new(linalg::worker_backend(backend_kind, total_workers)),
+            x_buf: Matrix::default(),
+            z_buf: Matrix::default(),
+            grad_buf: MlpParams::default(),
+        }
+    }
+
+    /// Apply one claimed cut-layer gradient: gather → backward → clip →
+    /// replica SGD step → PS push, with busy-time + `passive_bwd`
+    /// accounting. The caller has already made the exactly-once claim.
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_gradient(
+        &mut self,
+        engine: &dyn SplitEngine,
+        party_x: &Matrix,
+        party: usize,
+        rows: &[usize],
+        grad_z: &Matrix,
+        replica: &Mutex<PassiveReplica>,
+        ps: &ParameterServer,
+        metrics: &Metrics,
+        lr: f32,
+        clip: f32,
+    ) {
+        party_x.take_rows_into(rows, &mut self.x_buf);
+        let mut local = replica.lock().unwrap();
+        let t = Instant::now();
+        engine.passive_bwd_into(
+            party,
+            &local.params,
+            &self.x_buf,
+            grad_z,
+            &mut self.ws,
+            &mut self.grad_buf,
+        );
+        self.grad_buf.clip_norm(clip);
+        local.params.sgd_step(&self.grad_buf, lr);
+        drop(local);
+        ps.push_grad(&self.grad_buf);
+        metrics.add_busy(t.elapsed());
+        metrics.inc("passive_bwd", 1);
+    }
+
+    /// Produce one embedding: gather → forward → GDP perturb, stamped
+    /// with the replica's synced PS version and a codec-boundary
+    /// timestamp. Ownership of the payload moves into the message.
+    #[allow(clippy::too_many_arguments)]
+    pub fn produce_embedding(
+        &mut self,
+        engine: &dyn SplitEngine,
+        party_x: &Matrix,
+        party: usize,
+        job: &EmbedJob,
+        replica: &Mutex<PassiveReplica>,
+        dp: &Mutex<GaussianMechanism>,
+        metrics: &Metrics,
+    ) -> EmbeddingMsg {
+        party_x.take_rows_into(&job.rows, &mut self.x_buf);
+        let local = replica.lock().unwrap();
+        let t = Instant::now();
+        engine.passive_fwd_into(party, &local.params, &self.x_buf, &mut self.ws, &mut self.z_buf);
+        let version = local.version;
+        drop(local);
+        dp.lock().unwrap().perturb(&mut self.z_buf);
+        metrics.add_busy(t.elapsed());
+        EmbeddingMsg {
+            batch_id: job.batch_id,
+            party,
+            generation: job.generation,
+            z: std::mem::take(&mut self.z_buf),
+            produced_at_us: wire::now_micros(),
+            param_version: version,
+        }
+    }
+}
+
+// ---- in-proc worker ------------------------------------------------------
+
+/// State shared by the in-proc passive workers (transport `inproc`).
+pub(crate) struct LocalPassiveShared<'a> {
+    pub broker: &'a super::super::broker::Broker,
+    pub ledger: &'a super::super::ledger::BatchLedger,
+    pub metrics: &'a Metrics,
+    pub dp: &'a [Mutex<GaussianMechanism>],
+    pub train: &'a VerticalDataset,
+    pub opts: &'a RunOptions,
+    pub lr: f32,
+    pub clip: f32,
+    pub backend_kind: BackendKind,
+    pub total_workers: usize,
+    pub poll: Duration,
+}
+
+/// The persistent in-proc passive-worker loop (runs until the broker
+/// closes). Behavior is identical to the pre-refactor single-file
+/// session.
+pub(crate) fn run_local_passive_worker(
+    sh: &LocalPassiveShared<'_>,
+    engine: &Arc<dyn SplitEngine>,
+    ps: &ParameterServer,
+    party: usize,
+    replica: &Mutex<PassiveReplica>,
+) {
+    // Worker-lived compute state — the steady-state step allocates only
+    // the embedding payloads it publishes (ownership crosses the channel).
+    let mut comp = PassiveCompute::new(sh.backend_kind, sh.total_workers);
+    loop {
+        // Priority 1: backward work from the gradient channel.
+        let waited = Instant::now();
+        match sh.broker.take_gradient(party, sh.poll) {
+            SubResult::Ok((id, gmsg)) => {
+                sh.metrics.add_wait(waited.elapsed());
+                let Some(rows) = sh.ledger.claim_bwd(id, gmsg.generation, party) else {
+                    // Stale generation or already counted for this party:
+                    // exactly-once.
+                    sh.metrics.inc("stale_grads_dropped", 1);
+                    continue;
+                };
+                comp.apply_gradient(
+                    engine.as_ref(),
+                    &sh.train.passive[party].x,
+                    party,
+                    &rows,
+                    &gmsg.grad_z,
+                    replica,
+                    ps,
+                    sh.metrics,
+                    sh.lr,
+                    sh.clip,
+                );
+                // Credit the epoch only now that the update landed — the
+                // supervisor must not run the barrier over a half-applied
+                // replica.
+                sh.ledger.finish_bwd();
+                continue;
+            }
+            SubResult::Closed => break,
+            SubResult::TimedOut => {
+                sh.metrics.add_wait(waited.elapsed());
+            }
+        }
+        // Priority 2: produce the next embedding.
+        if let Some(job) = sh.ledger.next_embed_job(party) {
+            let msg = comp.produce_embedding(
+                engine.as_ref(),
+                &sh.train.passive[party].x,
+                party,
+                &job,
+                replica,
+                &sh.dp[party],
+                sh.metrics,
+            );
+            if !sh.ledger.begin_publish(job.batch_id, job.generation, party) {
+                // The batch was reassigned while we were computing; the
+                // requeue already rescheduled it at a newer generation.
+                sh.metrics.inc("stale_publish_skipped", 1);
+                continue;
+            }
+            if let Some((old_id, old_gen)) = sh.broker.publish_embedding(msg) {
+                // Buffer mechanism: reassign the evicted batch on this
+                // party only — its sibling embeddings stay valid (no
+                // generation bump).
+                if sh.ledger.requeue_party(party, old_id, old_gen) {
+                    sh.opts.emit(RunEvent::BatchRetried {
+                        epoch: sh.ledger.epoch(),
+                        batch_id: old_id,
+                    });
+                }
+            }
+        }
+    }
+}
+
+// ---- remote server -------------------------------------------------------
+
+/// Per-batch state mirrored by the passive process: PSI-aligned rows,
+/// newest generation seen in embed-job frames, and the per-party
+/// exactly-once backward flags.
+struct PassiveBatch {
+    rows: Arc<Vec<usize>>,
+    gen: u64,
+    done: Vec<bool>,
+}
+
+type EpochTable = HashMap<u64, PassiveBatch>;
+
+/// State shared by the remote passive workers and the frame dispatcher.
+struct ServeShared<'a> {
+    link: &'a Arc<dyn Link>,
+    metrics: &'a Metrics,
+    table: &'a Mutex<EpochTable>,
+    inbox: &'a [Topic<GradientMsg>],
+    jobs: &'a [Mutex<VecDeque<EmbedJob>>],
+    ps: &'a [ParameterServer],
+    dp: &'a [Mutex<GaussianMechanism>],
+    train: &'a VerticalDataset,
+    lr: f32,
+    clip: f32,
+    backend_kind: BackendKind,
+    total_workers: usize,
+    poll: Duration,
+}
+
+/// The remote passive-worker loop: same per-batch compute as the in-proc
+/// loop, but fed from the link-backed inbox/job queues and acking each
+/// applied backward over the wire.
+fn run_remote_passive_worker(
+    sh: &ServeShared<'_>,
+    engine: &Arc<dyn SplitEngine>,
+    party: usize,
+    replica: &Mutex<PassiveReplica>,
+) {
+    let mut comp = PassiveCompute::new(sh.backend_kind, sh.total_workers);
+    loop {
+        // Priority 1: backward work from the gradient inbox.
+        let waited = Instant::now();
+        match sh.inbox[party].subscribe_any(sh.poll) {
+            SubResult::Ok((id, gmsg)) => {
+                sh.metrics.add_wait(waited.elapsed());
+                // Claim at take time: at most one applied gradient per
+                // (epoch, batch, party) — the remote mirror of
+                // `BatchLedger::claim_bwd`.
+                let rows = {
+                    let mut tb = sh.table.lock().unwrap();
+                    match tb.get_mut(&id) {
+                        Some(e) if !e.done[party] => {
+                            e.done[party] = true;
+                            Some(Arc::clone(&e.rows))
+                        }
+                        _ => None,
+                    }
+                };
+                let Some(rows) = rows else {
+                    sh.metrics.inc("stale_grads_dropped", 1);
+                    continue;
+                };
+                comp.apply_gradient(
+                    engine.as_ref(),
+                    &sh.train.passive[party].x,
+                    party,
+                    &rows,
+                    &gmsg.grad_z,
+                    replica,
+                    &sh.ps[party],
+                    sh.metrics,
+                    sh.lr,
+                    sh.clip,
+                );
+                // Ack only after the update landed in the replica — the
+                // active supervisor must not run a barrier over a
+                // half-applied replica.
+                if sh
+                    .link
+                    .send(Frame::BwdDone {
+                        batch_id: id,
+                        party: party as u32,
+                        ps_version: sh.ps[party].version(),
+                    })
+                    .is_err()
+                {
+                    break;
+                }
+                continue;
+            }
+            SubResult::Closed => break,
+            SubResult::TimedOut => {
+                sh.metrics.add_wait(waited.elapsed());
+            }
+        }
+        // Priority 2: produce the next embedding.
+        let job = sh.jobs[party].lock().unwrap().pop_front();
+        if let Some(job) = job {
+            // Skip superseded work (a newer generation was scheduled, or
+            // the batch already finished) — the wire analogue of the
+            // `begin_publish` gate; the active's decode gate re-checks.
+            let fresh = {
+                let tb = sh.table.lock().unwrap();
+                tb.get(&job.batch_id)
+                    .is_some_and(|e| e.gen == job.generation && !e.done.iter().all(|&d| d))
+            };
+            if !fresh {
+                sh.metrics.inc("stale_publish_skipped", 1);
+                continue;
+            }
+            let msg = comp.produce_embedding(
+                engine.as_ref(),
+                &sh.train.passive[party].x,
+                party,
+                &job,
+                replica,
+                &sh.dp[party],
+                sh.metrics,
+            );
+            sh.metrics.inc("emb_published", 1);
+            match sh.link.send(Frame::Embedding(msg)) {
+                Ok(bytes) => sh.metrics.add_comm(bytes),
+                Err(_) => break,
+            }
+        }
+    }
+}
+
+/// What a completed serve run can report back to its caller.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PassiveSessionReport {
+    /// Epochs installed by the active supervisor.
+    pub epochs_served: usize,
+    /// Backward passes applied (the exactly-once invariant's left side).
+    pub bwd_applied: u64,
+    /// Embeddings published over the wire.
+    pub emb_published: u64,
+}
+
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Serve the passive half of a PubSub-VFL session over `link` until the
+/// active party shuts the session down (or the link drops).
+///
+/// `cfg` and `train` must describe the same experiment on both sides:
+/// each process materializes the PSI-aligned dataset from the shared
+/// config/seed, and the initial parameters are drawn from the same seeded
+/// stream, so the wire only ever carries embeddings, gradients, and
+/// control frames — never raw features or labels.
+pub fn serve_passive_session(
+    cfg: &ExperimentConfig,
+    spec: &SplitModelSpec,
+    engine: Arc<dyn SplitEngine>,
+    train: &VerticalDataset,
+    link: Arc<dyn Link>,
+    metrics: Arc<Metrics>,
+) -> Result<PassiveSessionReport> {
+    let k = train.passive.len();
+    let lr = cfg.train.lr as f32;
+    let clip = cfg.train.grad_clip as f32;
+    let w_p = cfg.parties.passive_workers.max(1);
+    let backend_kind = cfg.backend;
+    let total_workers = k * w_p;
+    metrics.gauge_max(
+        "linalg_threads_per_worker",
+        linalg::worker_threads(backend_kind, total_workers) as f64,
+    );
+
+    // Identical init stream to the active process: same seed ⇒ the same
+    // `SplitParams` draws on both sides of the wire (only the passive
+    // slice is kept here).
+    let mut rng = Rng::new(cfg.seed);
+    let init = SplitParams::init(spec, &mut rng);
+
+    let ps: Vec<ParameterServer> = init
+        .passive
+        .iter()
+        .map(|p| ParameterServer::new(p.clone(), lr, PsMode::Sync))
+        .collect();
+    let dp = make_dp_mechanisms(cfg, k);
+    let replicas: Vec<Vec<Mutex<PassiveReplica>>> = (0..k)
+        .map(|p| {
+            (0..w_p)
+                .map(|_| Mutex::new(PassiveReplica { params: init.passive[p].clone(), version: 0 }))
+                .collect()
+        })
+        .collect();
+    // The gradient buffer (q, scaled by the subscriber pool) lives on the
+    // passive side of the wire; evictions request a requeue from the
+    // active ledger instead of being handled locally.
+    let inbox: Vec<Topic<GradientMsg>> = (0..k)
+        .map(|_| Topic::new("gradients", (cfg.train.buffer_q * w_p).max(1)))
+        .collect();
+    let jobs: Vec<Mutex<VecDeque<EmbedJob>>> =
+        (0..k).map(|_| Mutex::new(VecDeque::new())).collect();
+    let table: Mutex<EpochTable> = Mutex::new(HashMap::new());
+
+    // ---- handshake -------------------------------------------------------
+    let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
+    loop {
+        match link.recv(Duration::from_millis(100)) {
+            LinkRecv::Frame(Frame::Hello { parties }) => {
+                if parties as usize != k {
+                    bail!("active party expects {parties} passive parties, this server holds {k}");
+                }
+                break;
+            }
+            LinkRecv::Frame(other) => bail!("handshake: expected Hello, got {other:?}"),
+            LinkRecv::Closed => bail!("peer closed the link during handshake"),
+            LinkRecv::TimedOut => {
+                if Instant::now() >= deadline {
+                    bail!("handshake timed out waiting for Hello");
+                }
+            }
+        }
+    }
+    link.send(Frame::HelloAck { parties: k as u32 })
+        .map_err(|e| anyhow!("handshake ack failed: {e}"))?;
+
+    let mut epochs_served = 0usize;
+    let sh = ServeShared {
+        link: &link,
+        metrics: &metrics,
+        table: &table,
+        inbox: &inbox,
+        jobs: &jobs,
+        ps: &ps,
+        dp: &dp,
+        train,
+        lr,
+        clip,
+        backend_kind,
+        total_workers,
+        poll: Duration::from_millis(2),
+    };
+
+    std::thread::scope(|s| {
+        // ---- persistent passive workers (live for the whole session) --
+        for (party, reps) in replicas.iter().enumerate() {
+            for replica in reps.iter() {
+                let engine = Arc::clone(&engine);
+                let shref = &sh;
+                s.spawn(move || run_remote_passive_worker(shref, &engine, party, replica));
+            }
+        }
+
+        // ---- frame dispatcher (this thread) ---------------------------
+        loop {
+            match link.recv(Duration::from_millis(100)) {
+                LinkRecv::Frame(frame) => match frame {
+                    Frame::EpochInstall { epoch, batches } => {
+                        // Anything still buffered belongs to a drained
+                        // epoch and is stale by construction.
+                        for t in &inbox {
+                            t.reset();
+                        }
+                        for q in &jobs {
+                            q.lock().unwrap().clear();
+                        }
+                        let mut tb = table.lock().unwrap();
+                        tb.clear();
+                        for (id, rows) in batches {
+                            tb.insert(
+                                id,
+                                PassiveBatch {
+                                    rows: Arc::new(
+                                        rows.into_iter().map(|r| r as usize).collect(),
+                                    ),
+                                    gen: 0,
+                                    done: vec![false; k],
+                                },
+                            );
+                        }
+                        epochs_served = epochs_served.max(epoch as usize + 1);
+                    }
+                    Frame::EmbedJob { party, batch_id, generation } => {
+                        let party = party as usize;
+                        if party >= k {
+                            metrics.inc("wire_bad_party", 1);
+                            continue;
+                        }
+                        let rows = {
+                            let mut tb = table.lock().unwrap();
+                            tb.get_mut(&batch_id).map(|e| {
+                                if generation > e.gen {
+                                    e.gen = generation;
+                                }
+                                Arc::clone(&e.rows)
+                            })
+                        };
+                        match rows {
+                            Some(rows) => jobs[party]
+                                .lock()
+                                .unwrap()
+                                .push_back(EmbedJob { batch_id, generation, rows }),
+                            None => metrics.inc("wire_unknown_batch", 1),
+                        }
+                    }
+                    Frame::Gradient(g) => {
+                        if g.party >= k {
+                            metrics.inc("wire_bad_party", 1);
+                            continue;
+                        }
+                        metrics.add_comm(g.bytes());
+                        metrics.inc("grad_received", 1);
+                        // Decode-boundary generation gate: frames from a
+                        // superseded attempt (or finished work) are
+                        // rejected before they reach a worker.
+                        let ok = {
+                            let tb = table.lock().unwrap();
+                            tb.get(&g.batch_id)
+                                .is_some_and(|e| g.generation == e.gen && !e.done[g.party])
+                        };
+                        if !ok {
+                            metrics.inc("wire_stale_rejected", 1);
+                            continue;
+                        }
+                        let party = g.party;
+                        let id = g.batch_id;
+                        match inbox[party].publish_versioned(id, g, |m| m.generation) {
+                            Publish::Evicted(old_id, old) => {
+                                // Buffer mechanism across the wire: a
+                                // dropped gradient strands its batch —
+                                // request a full reassignment from the
+                                // active ledger.
+                                metrics.inc("grad_dropped", 1);
+                                let _ = link.send(Frame::Requeue {
+                                    batch_id: old_id,
+                                    generation: old.generation,
+                                });
+                            }
+                            Publish::Stale(_) => {
+                                metrics.inc("grad_rejected_stale", 1);
+                            }
+                            Publish::Stored => {}
+                        }
+                    }
+                    Frame::Barrier { epoch, broadcast } => {
+                        // The active only sends this once the epoch
+                        // drained (every ack received), so workers are
+                        // idle and the replica locks are uncontended.
+                        if broadcast {
+                            fold_passive_barrier(&replicas, &ps);
+                            metrics.inc("ps_barriers", 1);
+                        } else {
+                            // No broadcast: fold the pushed backlog so
+                            // versions advance (asynchronous aggregation).
+                            for p in &ps {
+                                p.aggregate();
+                            }
+                        }
+                        let versions: Vec<u64> = ps.iter().map(|p| p.version()).collect();
+                        let _ = link.send(Frame::BarrierDone { epoch, versions });
+                    }
+                    Frame::FetchParams => {
+                        for party in 0..k {
+                            let guards: Vec<_> =
+                                replicas[party].iter().map(|m| m.lock().unwrap()).collect();
+                            let mean_p = mean_params(guards.iter().map(|g| &g.params));
+                            drop(guards);
+                            let _ = link.send(Frame::PassiveParams {
+                                party: party as u32,
+                                version: ps[party].version(),
+                                flat: mean_p.flatten(),
+                            });
+                        }
+                    }
+                    Frame::Shutdown => break,
+                    _ => metrics.inc("wire_unexpected_frame", 1),
+                },
+                LinkRecv::TimedOut => {}
+                LinkRecv::Closed => break,
+            }
+        }
+
+        // End of session: release the worker pool.
+        for t in &inbox {
+            t.close();
+        }
+    });
+
+    Ok(PassiveSessionReport {
+        epochs_served,
+        bwd_applied: metrics.counter("passive_bwd"),
+        emb_published: metrics.counter("emb_published"),
+    })
+}
+
+/// Serve one session on an already-bound listener (accepts a single
+/// active-party connection). Useful when the caller wants to bind first
+/// — e.g. on port 0 — and advertise the address before blocking.
+pub fn serve_passive_listener(
+    listener: &TcpListener,
+    cfg: &ExperimentConfig,
+    spec: &SplitModelSpec,
+    engine: Arc<dyn SplitEngine>,
+    train: &VerticalDataset,
+    metrics: Arc<Metrics>,
+) -> Result<PassiveSessionReport> {
+    let link = TcpLink::accept(listener).map_err(|e| anyhow!("accept failed: {e}"))?;
+    serve_passive_session(cfg, spec, engine, train, Arc::new(link), metrics)
+}
+
+/// Bind `addr` and serve one passive session (the `serve-passive` CLI
+/// entry point).
+pub fn serve_passive(
+    addr: &str,
+    cfg: &ExperimentConfig,
+    spec: &SplitModelSpec,
+    engine: Arc<dyn SplitEngine>,
+    train: &VerticalDataset,
+) -> Result<PassiveSessionReport> {
+    let listener =
+        TcpListener::bind(addr).map_err(|e| anyhow!("cannot listen on {addr}: {e}"))?;
+    serve_passive_listener(&listener, cfg, spec, engine, train, Arc::new(Metrics::new()))
+}

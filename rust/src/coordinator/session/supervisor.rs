@@ -1,0 +1,1219 @@
+//! The epoch supervisor: owns the [`BatchLedger`], the broker, and the
+//! Eq. (5) semi-asynchronous PS schedule, and orchestrates either session
+//! wiring:
+//!
+//! - [`train_local`]-style in-proc runs (transport `inproc`): both party
+//!   halves share the broker in one process — the pre-transport system,
+//!   bit-identical.
+//! - [`train_pubsub_over_link`] (transport `tcp`, or any [`Link`]): the
+//!   passive half lives behind a frame pipe. The supervisor hosts the
+//!   broker + ledger (the middleware colocated with the active party),
+//!   and three bridge loops move the protocol over the link: a job pump
+//!   (ledger → `EmbedJob` frames), per-party gradient pumps (broker →
+//!   `Gradient` frames), and a receive loop (embeddings gated on the
+//!   ledger generation *at decode*, backward acks credited exactly once
+//!   via [`BatchLedger::credit_bwd`], remote-eviction `Requeue` requests,
+//!   barrier acks, and fetched parameters).
+//!
+//! Exactly-once across the wire: the ledger's generation protocol is
+//! unchanged — stale frames are rejected at the decode boundary, embed
+//! publishes re-validate against the ledger, each `(batch, party)`
+//! backward is claimed once on the passive side and credited once here,
+//! so `passive_bwd == epochs × n_batches × k` holds under retry storms on
+//! either transport.
+
+use super::super::broker::Broker;
+use super::super::channel::SubResult;
+use super::super::ledger::BatchLedger;
+use super::super::ps::{ParameterServer, PsMode, SemiAsyncSchedule};
+use super::super::transport::{Link, LinkRecv, LinkStatsSnapshot, TcpLink, TransportKind};
+use super::super::wire::Frame;
+use super::active::{run_active_worker, ActiveReplica, ActiveShared, PassiveVersionView};
+use super::passive::{
+    fold_passive_barrier, make_dp_mechanisms, run_local_passive_worker, LocalPassiveShared,
+    PassiveReplica,
+};
+use super::{evaluate_ws, mean_params, reached, SessionResult};
+use crate::data::BatchPlan;
+use crate::experiment::{RunEvent, TrainCtx};
+use crate::linalg;
+use crate::model::{MlpParams, SplitParams, Workspace};
+use crate::util::{Rng, Stopwatch};
+use anyhow::{anyhow, bail, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// How long a remote epoch may make zero backward progress before the
+/// session gives up with a diagnostic instead of hanging.
+const STALL_TIMEOUT: Duration = Duration::from_secs(180);
+/// How long to wait for barrier acks / fetched parameters.
+const SYNC_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Train with the full PubSub-VFL system, on the transport selected by
+/// `cfg.transport`: `inproc` runs both parties in this process (the
+/// default; zero-copy, bit-identical to the pre-transport system), `tcp`
+/// connects to a `serve-passive` process and drives the session over the
+/// wire.
+pub fn train_pubsub_session(ctx: &TrainCtx<'_>) -> Result<SessionResult> {
+    match ctx.cfg.transport.kind {
+        TransportKind::InProc => Ok(train_local(ctx)),
+        TransportKind::Tcp => {
+            let addr = ctx.cfg.transport.connect.clone();
+            if addr.is_empty() {
+                bail!(
+                    "transport.kind = tcp requires transport.connect \
+                     (start the peer with `pubsub-vfl serve-passive --listen ADDR` \
+                     and pass `--connect ADDR` here)"
+                );
+            }
+            let timeout = Duration::from_secs(ctx.cfg.transport.connect_timeout_s.max(1));
+            let link = TcpLink::connect(&addr, timeout)
+                .map_err(|e| anyhow!("cannot connect to passive party at {addr}: {e}"))?;
+            train_pubsub_over_link(ctx, Arc::new(link))
+        }
+    }
+}
+
+/// The in-process session: persistent worker pools for both parties over
+/// the shared broker. Semantics are identical to the pre-refactor
+/// single-file session.
+#[allow(clippy::too_many_lines)]
+fn train_local(ctx: &TrainCtx<'_>) -> SessionResult {
+    let engine = &ctx.engine;
+    let spec = ctx.spec;
+    let train = ctx.train;
+    let test = ctx.test;
+    let cfg = ctx.cfg;
+    let metrics = &ctx.metrics;
+    let opts = ctx.opts;
+
+    let task = train.task;
+    let k = train.passive.len();
+    let b = cfg.train.batch_size;
+    let lr = cfg.train.lr as f32;
+    let clip = cfg.train.grad_clip as f32;
+    let w_a = cfg.parties.active_workers.max(1);
+    let w_p = cfg.parties.passive_workers.max(1);
+    let t_ddl = Duration::from_millis(if cfg.ablation.no_deadline {
+        // "w/o T_ddl": the deadline mechanism is disabled — subscribers
+        // block (bounded here by a long poll so the loop can still
+        // observe shutdown).
+        60_000
+    } else {
+        cfg.train.t_ddl_ms.max(1)
+    });
+    let poll = Duration::from_millis(2);
+
+    // Linalg backend: every worker gets its own Workspace; the Threaded
+    // backend's per-worker pool is clamped so
+    // `workers × threads ≤ available_parallelism()` (the planner's (p, q)
+    // allocation drives `total_workers`).
+    let backend_kind = cfg.backend;
+    let total_workers = w_a + k * w_p;
+    metrics.gauge_max(
+        "linalg_threads_per_worker",
+        linalg::worker_threads(backend_kind, total_workers) as f64,
+    );
+
+    let mut rng = Rng::new(cfg.seed);
+    let init = SplitParams::init(spec, &mut rng);
+
+    // Parameter servers hold the authoritative model; workers keep local
+    // replicas, push every gradient, and re-sync at ΔT_t barriers
+    // (hierarchical asynchrony). Versions advance every epoch, so the
+    // `param_version` stamped into messages is live.
+    let ps_active = ParameterServer::new(init.active.clone(), lr, PsMode::Sync);
+    let ps_top = ParameterServer::new(init.top.clone(), lr, PsMode::Sync);
+    let ps_passive: Vec<ParameterServer> = init
+        .passive
+        .iter()
+        .map(|p| ParameterServer::new(p.clone(), lr, PsMode::Sync))
+        .collect();
+    let schedule = SemiAsyncSchedule {
+        delta_t0: cfg.train.delta_t0,
+        disabled: cfg.ablation.no_semi_async,
+    };
+
+    // Broker capacity: p/q scaled by subscriber pools (as in the sim).
+    let broker = Broker::new(
+        k,
+        cfg.train.buffer_p * w_a,
+        cfg.train.buffer_q * w_p,
+        Arc::clone(metrics),
+    );
+
+    // The exactly-once batch lifecycle + the pool's work queues.
+    let ledger = BatchLedger::new(k);
+
+    // GDP mechanism per passive party (Eq. 17), shared derivation with
+    // the remote server.
+    let dp = make_dp_mechanisms(cfg, k);
+
+    // Worker-local replicas, shared with the supervisor (which averages
+    // and re-broadcasts them at barriers) behind per-replica mutexes.
+    // Workers hold their own lock only while computing a step.
+    let active_replicas: Vec<Mutex<ActiveReplica>> = (0..w_a)
+        .map(|_| {
+            Mutex::new(ActiveReplica {
+                active: init.active.clone(),
+                top: init.top.clone(),
+            })
+        })
+        .collect();
+    let passive_replicas: Vec<Vec<Mutex<PassiveReplica>>> = (0..k)
+        .map(|p| {
+            (0..w_p)
+                .map(|_| Mutex::new(PassiveReplica { params: init.passive[p].clone(), version: 0 }))
+                .collect()
+        })
+        .collect();
+
+    let epoch_loss = Mutex::new((0.0f64, 0usize));
+    // Per-epoch staleness accumulators (reset by the supervisor), plus
+    // the session-wide maximum `param_version` observed in messages
+    // (folded into a gauge once per epoch, off the hot path).
+    let stale_sum = AtomicU64::new(0);
+    let stale_n = AtomicU64::new(0);
+    let stale_max = AtomicU64::new(0);
+    let emb_version_max = AtomicU64::new(0);
+
+    let mut loss_curve = Vec::new();
+    let mut metric_curve = Vec::new();
+    let mut reached_target = false;
+    let mut epochs_run = 0usize;
+    let mut cancelled = false;
+    // Supervisor-owned eval workspace on the configured backend (the
+    // workers are idle during evaluation, so a single worker's budget —
+    // i.e. the whole machine — applies).
+    let mut eval_ws = Workspace::new(linalg::worker_backend(backend_kind, 1));
+    let sw = Stopwatch::start();
+
+    let active_sh = ActiveShared {
+        broker: &broker,
+        ledger: &ledger,
+        metrics: metrics.as_ref(),
+        ps_active: &ps_active,
+        ps_top: &ps_top,
+        versions: PassiveVersionView::Local(&ps_passive),
+        epoch_loss: &epoch_loss,
+        stale_sum: &stale_sum,
+        stale_n: &stale_n,
+        stale_max: &stale_max,
+        emb_version_max: &emb_version_max,
+        train,
+        opts,
+        k,
+        t_ddl,
+        lr,
+        clip,
+        backend_kind,
+        total_workers,
+    };
+    let passive_sh = LocalPassiveShared {
+        broker: &broker,
+        ledger: &ledger,
+        metrics: metrics.as_ref(),
+        dp: &dp,
+        train,
+        opts,
+        lr,
+        clip,
+        backend_kind,
+        total_workers,
+        poll,
+    };
+
+    std::thread::scope(|s| {
+        // ---- persistent passive workers (live for the whole session) --
+        for (party, replicas) in passive_replicas.iter().enumerate() {
+            for replica in replicas.iter() {
+                let engine = Arc::clone(engine);
+                let sh = &passive_sh;
+                let ps = &ps_passive[party];
+                s.spawn(move || run_local_passive_worker(sh, &engine, ps, party, replica));
+            }
+        }
+
+        // ---- persistent active workers --------------------------------
+        for replica in active_replicas.iter() {
+            let engine = Arc::clone(engine);
+            let sh = &active_sh;
+            s.spawn(move || run_active_worker(sh, &engine, replica));
+        }
+
+        // ---- epoch supervisor (this thread) ---------------------------
+        for epoch in 0..ctx.epochs() {
+            if ctx.cancelled() {
+                cancelled = true;
+                epochs_run = epoch;
+                break;
+            }
+            epochs_run = epoch + 1;
+            let plan = BatchPlan::for_epoch(train.len(), b, epoch as u64, &mut rng);
+            let batches: Vec<(u64, Arc<Vec<usize>>)> = plan
+                .full_batches()
+                .map(|a| (a.batch_id, Arc::new(a.rows.clone())))
+                .collect();
+            if batches.is_empty() {
+                break;
+            }
+            // Anything still buffered belongs to a finished epoch and is
+            // stale by construction.
+            broker.reset();
+            *epoch_loss.lock().unwrap() = (0.0, 0);
+            stale_sum.store(0, Ordering::Relaxed);
+            stale_n.store(0, Ordering::Relaxed);
+            stale_max.store(0, Ordering::Relaxed);
+            // Arm the ledger: the pool picks the new epoch up from here.
+            ledger.install_epoch(epoch, &batches);
+
+            // Completion: all passive backward passes accounted for. The
+            // poll also observes the run's cancel token (bounding
+            // cancellation latency to well under one deadline period).
+            loop {
+                if ledger.epoch_done() {
+                    break;
+                }
+                if opts.is_cancelled() {
+                    cancelled = true;
+                    break;
+                }
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            if cancelled {
+                opts.emit(RunEvent::Cancelled { epoch });
+                break;
+            }
+
+            // ---- staleness summary for the epoch ---------------------
+            let n = stale_n.load(Ordering::Relaxed);
+            if n > 0 {
+                let mean = stale_sum.load(Ordering::Relaxed) as f64 / n as f64;
+                let max = stale_max.load(Ordering::Relaxed);
+                metrics.push_point("staleness_mean", epoch as f64, mean);
+                metrics.gauge_max("staleness_max", max as f64);
+                opts.emit(RunEvent::Staleness { epoch, mean, max });
+            }
+            metrics.gauge_max(
+                "emb_param_version_max",
+                emb_version_max.load(Ordering::Relaxed) as f64,
+            );
+
+            // ---- semi-asynchronous PS schedule (Eq. 5) ---------------
+            if schedule.barrier_after_epoch(epoch) {
+                // Barrier: fold worker replicas through the PS and
+                // broadcast the result (fetch) back, stamping the new
+                // version into every replica. Workers are idle here (the
+                // epoch is drained and the next one is not installed), so
+                // the replica locks are uncontended.
+                fold_active_barrier(&active_replicas, &ps_active, &ps_top);
+                fold_passive_barrier(&passive_replicas, &ps_passive);
+                metrics.inc("ps_barriers", 1);
+                opts.emit(RunEvent::PsBarrier { epoch });
+            } else {
+                // No broadcast this epoch: the PS still folds in the
+                // gradient backlog the workers pushed (asynchronous
+                // aggregation), so versions advance and the staleness gap
+                // measured next epoch is real.
+                ps_active.aggregate();
+                ps_top.aggregate();
+                for ps in &ps_passive {
+                    ps.aggregate();
+                }
+            }
+
+            // ---- bookkeeping + target check --------------------------
+            let (lsum, lcnt) = *epoch_loss.lock().unwrap();
+            let mean_loss = if lcnt > 0 { lsum / lcnt as f64 } else { f64::NAN };
+            loss_curve.push((epoch as f64, mean_loss));
+            metrics.push_point("train_loss", epoch as f64, mean_loss);
+
+            let eval_params = current_params(&active_replicas, &passive_replicas);
+            let metric = evaluate_ws(engine.as_ref(), &eval_params, test, b, task, &mut eval_ws);
+            metric_curve.push((epoch as f64, metric));
+            metrics.push_point("eval_metric", epoch as f64, metric);
+            opts.emit(RunEvent::Eval { epoch, metric });
+            opts.emit(RunEvent::EpochEnd { epoch, mean_loss, metric });
+            if reached(task, metric, ctx.target()) {
+                reached_target = true;
+                break;
+            }
+        }
+
+        // End of session: release the pool (workers exit on `Closed`).
+        broker.close();
+    });
+
+    let params = current_params(&active_replicas, &passive_replicas);
+    let final_metric = evaluate_ws(engine.as_ref(), &params, test, b, task, &mut eval_ws);
+    SessionResult {
+        params,
+        loss_curve,
+        metric_curve,
+        final_metric,
+        epochs_run,
+        reached_target,
+        wall: sw.elapsed(),
+        retried_batches: ledger.retried(),
+    }
+}
+
+/// Fold the active-party replicas through their parameter servers and
+/// broadcast the result back (the active half of a PS barrier).
+fn fold_active_barrier(
+    active_replicas: &[Mutex<ActiveReplica>],
+    ps_active: &ParameterServer,
+    ps_top: &ParameterServer,
+) {
+    let mut guards: Vec<_> = active_replicas.iter().map(|m| m.lock().unwrap()).collect();
+    let mean_a = mean_params(guards.iter().map(|g| &g.active));
+    let mean_t = mean_params(guards.iter().map(|g| &g.top));
+    ps_active.set_params(mean_a);
+    ps_top.set_params(mean_t);
+    let (bcast_a, _) = ps_active.fetch();
+    let (bcast_t, _) = ps_top.fetch();
+    for g in guards.iter_mut() {
+        g.active = bcast_a.clone();
+        g.top = bcast_t.clone();
+    }
+}
+
+fn mean_active(active: &[Mutex<ActiveReplica>]) -> (MlpParams, MlpParams) {
+    let guards: Vec<_> = active.iter().map(|m| m.lock().unwrap()).collect();
+    (
+        mean_params(guards.iter().map(|g| &g.active)),
+        mean_params(guards.iter().map(|g| &g.top)),
+    )
+}
+
+fn current_params(
+    active: &[Mutex<ActiveReplica>],
+    passive: &[Vec<Mutex<PassiveReplica>>],
+) -> SplitParams {
+    let (mean_a, mean_t) = mean_active(active);
+    SplitParams {
+        active: mean_a,
+        top: mean_t,
+        passive: passive
+            .iter()
+            .map(|reps| {
+                let guards: Vec<_> = reps.iter().map(|m| m.lock().unwrap()).collect();
+                mean_params(guards.iter().map(|g| &g.params))
+            })
+            .collect(),
+    }
+}
+
+/// The distributed session: drive training against a passive party
+/// served behind `link` (see [`super::passive::serve_passive_session`]).
+/// Public so tests and embedders can run the wire protocol over any
+/// [`Link`] implementation (e.g. an in-process pair).
+#[allow(clippy::too_many_lines)]
+pub fn train_pubsub_over_link(ctx: &TrainCtx<'_>, link: Arc<dyn Link>) -> Result<SessionResult> {
+    let engine = &ctx.engine;
+    let spec = ctx.spec;
+    let train = ctx.train;
+    let test = ctx.test;
+    let cfg = ctx.cfg;
+    let metrics = &ctx.metrics;
+    let opts = ctx.opts;
+
+    let task = train.task;
+    let k = train.passive.len();
+    let b = cfg.train.batch_size;
+    let lr = cfg.train.lr as f32;
+    let clip = cfg.train.grad_clip as f32;
+    let w_a = cfg.parties.active_workers.max(1);
+    let w_p = cfg.parties.passive_workers.max(1);
+    let t_ddl = Duration::from_millis(if cfg.ablation.no_deadline {
+        60_000
+    } else {
+        cfg.train.t_ddl_ms.max(1)
+    });
+
+    // Only the active party's workers run in this process.
+    let backend_kind = cfg.backend;
+    let total_workers = w_a;
+    metrics.gauge_max(
+        "linalg_threads_per_worker",
+        linalg::worker_threads(backend_kind, total_workers) as f64,
+    );
+
+    // Same seeded init stream as the passive process (and as an in-proc
+    // run): identical batch plans, identical starting parameters.
+    let mut rng = Rng::new(cfg.seed);
+    let init = SplitParams::init(spec, &mut rng);
+
+    let ps_active = ParameterServer::new(init.active.clone(), lr, PsMode::Sync);
+    let ps_top = ParameterServer::new(init.top.clone(), lr, PsMode::Sync);
+    let schedule = SemiAsyncSchedule {
+        delta_t0: cfg.train.delta_t0,
+        disabled: cfg.ablation.no_semi_async,
+    };
+
+    // The broker is hosted here (middleware colocated with the active
+    // party): the embedding buffers apply exactly as in-proc; the
+    // gradient topics act as the egress staging the pumps drain.
+    let broker = Broker::new(
+        k,
+        cfg.train.buffer_p * w_a,
+        cfg.train.buffer_q * w_p,
+        Arc::clone(metrics),
+    );
+    let ledger = BatchLedger::new(k);
+
+    let active_replicas: Vec<Mutex<ActiveReplica>> = (0..w_a)
+        .map(|_| {
+            Mutex::new(ActiveReplica {
+                active: init.active.clone(),
+                top: init.top.clone(),
+            })
+        })
+        .collect();
+
+    let epoch_loss = Mutex::new((0.0f64, 0usize));
+    let stale_sum = AtomicU64::new(0);
+    let stale_n = AtomicU64::new(0);
+    let stale_max = AtomicU64::new(0);
+    let emb_version_max = AtomicU64::new(0);
+    // Receiver-clock view of each passive party's PS version: the newest
+    // version observed in any frame from the passive process.
+    let live_versions: Vec<AtomicU64> = (0..k).map(|_| AtomicU64::new(0)).collect();
+    // Response slots for barrier acks and fetched parameters.
+    let barrier_done: (Mutex<Option<u64>>, Condvar) = (Mutex::new(None), Condvar::new());
+    let params_slot: Mutex<Vec<Option<MlpParams>>> = Mutex::new(vec![None; k]);
+    let params_cv = Condvar::new();
+    let shutdown = AtomicBool::new(false);
+    let link_down = AtomicBool::new(false);
+    let expected_flat: Vec<usize> =
+        spec.passive_bottoms.iter().map(|s| s.param_count()).collect();
+
+    let mut loss_curve = Vec::new();
+    let mut metric_curve = Vec::new();
+    let mut reached_target = false;
+    let mut epochs_run = 0usize;
+    let mut cancelled = false;
+    let mut last_passive: Option<Vec<MlpParams>> = None;
+    // Previous link-stats snapshot, so the per-epoch wire series record
+    // deltas rather than cumulative totals.
+    let mut wire_prev = LinkStatsSnapshot::default();
+    let mut eval_ws = Workspace::new(linalg::worker_backend(backend_kind, 1));
+    let sw = Stopwatch::start();
+
+    // ---- handshake -------------------------------------------------------
+    link.send(Frame::Hello { parties: k as u32 })
+        .map_err(|e| anyhow!("handshake send failed: {e}"))?;
+    let deadline = Instant::now() + Duration::from_secs(cfg.transport.connect_timeout_s.max(1));
+    loop {
+        match link.recv(Duration::from_millis(100)) {
+            LinkRecv::Frame(Frame::HelloAck { parties }) => {
+                if parties as usize != k {
+                    bail!("passive party serves {parties} parties, this run expects {k}");
+                }
+                break;
+            }
+            LinkRecv::Frame(other) => bail!("handshake: expected HelloAck, got {other:?}"),
+            LinkRecv::Closed => bail!("peer closed the link during handshake"),
+            LinkRecv::TimedOut => {
+                if Instant::now() >= deadline {
+                    bail!("handshake timed out waiting for HelloAck");
+                }
+            }
+        }
+    }
+
+    let active_sh = ActiveShared {
+        broker: &broker,
+        ledger: &ledger,
+        metrics: metrics.as_ref(),
+        ps_active: &ps_active,
+        ps_top: &ps_top,
+        versions: PassiveVersionView::Remote(&live_versions),
+        epoch_loss: &epoch_loss,
+        stale_sum: &stale_sum,
+        stale_n: &stale_n,
+        stale_max: &stale_max,
+        emb_version_max: &emb_version_max,
+        train,
+        opts,
+        k,
+        t_ddl,
+        lr,
+        clip,
+        backend_kind,
+        total_workers,
+    };
+
+    let run_result: Result<()> = std::thread::scope(|s| {
+        // ---- bridge: receive loop -------------------------------------
+        s.spawn(|| loop {
+            match link.recv(Duration::from_millis(50)) {
+                LinkRecv::Frame(frame) => match frame {
+                    Frame::Embedding(msg) => {
+                        if msg.party >= k {
+                            metrics.inc("wire_bad_party", 1);
+                            continue;
+                        }
+                        // Stale generations are rejected at the decode
+                        // boundary, before the message plane sees them.
+                        match ledger.generation(msg.batch_id) {
+                            Some(g) if g == msg.generation => {}
+                            _ => {
+                                metrics.inc("wire_stale_rejected", 1);
+                                continue;
+                            }
+                        }
+                        live_versions[msg.party].fetch_max(msg.param_version, Ordering::Relaxed);
+                        if ledger.begin_publish(msg.batch_id, msg.generation, msg.party) {
+                            let party = msg.party;
+                            if let Some((old_id, old_gen)) = broker.publish_embedding(msg) {
+                                // Buffer mechanism: single-party requeue,
+                                // no generation bump (siblings stay
+                                // valid) — the job pump re-ships it.
+                                if ledger.requeue_party(party, old_id, old_gen) {
+                                    opts.emit(RunEvent::BatchRetried {
+                                        epoch: ledger.epoch(),
+                                        batch_id: old_id,
+                                    });
+                                }
+                            }
+                        } else {
+                            metrics.inc("stale_publish_skipped", 1);
+                        }
+                    }
+                    Frame::BwdDone { batch_id, party, ps_version } => {
+                        let party = party as usize;
+                        if party >= k {
+                            metrics.inc("wire_bad_party", 1);
+                            continue;
+                        }
+                        live_versions[party].fetch_max(ps_version, Ordering::Relaxed);
+                        // The remote replica applied the update: credit
+                        // it exactly once (ack latency may cross a
+                        // reassignment; generation no longer matters).
+                        if ledger.credit_bwd(batch_id, party) {
+                            metrics.inc("bwd_acked", 1);
+                        } else {
+                            metrics.inc("bwd_ack_duplicate", 1);
+                        }
+                    }
+                    Frame::Requeue { batch_id, generation } => {
+                        // The passive party's gradient buffer evicted this
+                        // batch before a worker consumed it: full retry.
+                        if let Some(new_gen) = ledger.requeue_all(batch_id, generation) {
+                            broker.purge_stale(batch_id, new_gen);
+                            opts.emit(RunEvent::BatchRetried {
+                                epoch: ledger.epoch(),
+                                batch_id,
+                            });
+                        }
+                    }
+                    Frame::BarrierDone { epoch, versions } => {
+                        for (party, &v) in versions.iter().enumerate().take(k) {
+                            live_versions[party].fetch_max(v, Ordering::Relaxed);
+                        }
+                        *barrier_done.0.lock().unwrap() = Some(epoch);
+                        barrier_done.1.notify_all();
+                    }
+                    Frame::PassiveParams { party, version, flat } => {
+                        let party = party as usize;
+                        if party >= k || flat.len() != expected_flat[party] {
+                            metrics.inc("wire_bad_params", 1);
+                            continue;
+                        }
+                        live_versions[party].fetch_max(version, Ordering::Relaxed);
+                        let p = MlpParams::unflatten(&spec.passive_bottoms[party], &flat);
+                        params_slot.lock().unwrap()[party] = Some(p);
+                        params_cv.notify_all();
+                    }
+                    _ => metrics.inc("wire_unexpected_frame", 1),
+                },
+                LinkRecv::TimedOut => {
+                    if shutdown.load(Ordering::Relaxed) {
+                        break;
+                    }
+                }
+                LinkRecv::Closed => {
+                    link_down.store(true, Ordering::Relaxed);
+                    break;
+                }
+            }
+        });
+
+        // ---- bridge: job pump (ledger → EmbedJob frames) --------------
+        s.spawn(|| loop {
+            if shutdown.load(Ordering::Relaxed) || link_down.load(Ordering::Relaxed) {
+                break;
+            }
+            let mut sent = false;
+            for party in 0..k {
+                while let Some(job) = ledger.next_embed_job(party) {
+                    if link
+                        .send(Frame::EmbedJob {
+                            party: party as u32,
+                            batch_id: job.batch_id,
+                            generation: job.generation,
+                        })
+                        .is_err()
+                    {
+                        link_down.store(true, Ordering::Relaxed);
+                        return;
+                    }
+                    sent = true;
+                }
+            }
+            if !sent {
+                std::thread::sleep(Duration::from_micros(300));
+            }
+        });
+
+        // ---- bridge: gradient pumps (broker → Gradient frames) --------
+        for party in 0..k {
+            let broker = &broker;
+            let link = &link;
+            let link_down = &link_down;
+            s.spawn(move || loop {
+                match broker.take_gradient(party, Duration::from_millis(50)) {
+                    SubResult::Ok((_id, g)) => {
+                        if link.send(Frame::Gradient(g)).is_err() {
+                            link_down.store(true, Ordering::Relaxed);
+                            break;
+                        }
+                    }
+                    SubResult::Closed => break,
+                    SubResult::TimedOut => {}
+                }
+            });
+        }
+
+        // ---- active workers -------------------------------------------
+        for replica in active_replicas.iter() {
+            let engine = Arc::clone(engine);
+            let sh = &active_sh;
+            s.spawn(move || run_active_worker(sh, &engine, replica));
+        }
+
+        // ---- response waits -------------------------------------------
+        let wait_barrier = |epoch: u64| -> Result<()> {
+            let deadline = Instant::now() + SYNC_TIMEOUT;
+            let mut g = barrier_done.0.lock().unwrap();
+            loop {
+                if *g == Some(epoch) {
+                    return Ok(());
+                }
+                if link_down.load(Ordering::Relaxed) {
+                    bail!("link closed while waiting for the passive barrier ack");
+                }
+                if Instant::now() >= deadline {
+                    bail!("timed out waiting for the passive barrier ack (epoch {epoch})");
+                }
+                let (gg, _) = barrier_done.1.wait_timeout(g, Duration::from_millis(50)).unwrap();
+                g = gg;
+            }
+        };
+        let fetch_passive_params = || -> Result<Vec<MlpParams>> {
+            {
+                let mut slot = params_slot.lock().unwrap();
+                for s in slot.iter_mut() {
+                    *s = None;
+                }
+            }
+            link.send(Frame::FetchParams)
+                .map_err(|e| anyhow!("parameter fetch failed: {e}"))?;
+            let deadline = Instant::now() + SYNC_TIMEOUT;
+            let mut g = params_slot.lock().unwrap();
+            loop {
+                if g.iter().all(|sl| sl.is_some()) {
+                    return Ok(g.iter_mut().map(|sl| sl.take().unwrap()).collect());
+                }
+                if link_down.load(Ordering::Relaxed) {
+                    bail!("link closed while fetching passive parameters");
+                }
+                if Instant::now() >= deadline {
+                    bail!("timed out fetching passive parameters");
+                }
+                let (gg, _) = params_cv.wait_timeout(g, Duration::from_millis(50)).unwrap();
+                g = gg;
+            }
+        };
+
+        // ---- epoch supervisor -----------------------------------------
+        let result = (|| -> Result<()> {
+            for epoch in 0..ctx.epochs() {
+                if ctx.cancelled() {
+                    cancelled = true;
+                    epochs_run = epoch;
+                    break;
+                }
+                epochs_run = epoch + 1;
+                let plan = BatchPlan::for_epoch(train.len(), b, epoch as u64, &mut rng);
+                let batches: Vec<(u64, Arc<Vec<usize>>)> = plan
+                    .full_batches()
+                    .map(|a| (a.batch_id, Arc::new(a.rows.clone())))
+                    .collect();
+                if batches.is_empty() {
+                    break;
+                }
+                broker.reset();
+                *epoch_loss.lock().unwrap() = (0.0, 0);
+                stale_sum.store(0, Ordering::Relaxed);
+                stale_n.store(0, Ordering::Relaxed);
+                stale_max.store(0, Ordering::Relaxed);
+                // Ship the plan first: frame order guarantees the passive
+                // installs the epoch before any EmbedJob referencing it
+                // (the pump only sees jobs once the ledger is armed,
+                // which happens after this send completes).
+                let wire_batches: Vec<(u64, Vec<u32>)> = batches
+                    .iter()
+                    .map(|(id, rows)| (*id, rows.iter().map(|&r| r as u32).collect()))
+                    .collect();
+                link.send(Frame::EpochInstall { epoch: epoch as u64, batches: wire_batches })
+                    .map_err(|e| anyhow!("epoch install failed: {e}"))?;
+                ledger.install_epoch(epoch, &batches);
+
+                // Drain, with a stall watchdog so a wire bug surfaces as
+                // an error instead of a hang.
+                let mut last_remaining = usize::MAX;
+                let mut last_change = Instant::now();
+                loop {
+                    let rem = ledger.remaining_bwd();
+                    if rem == 0 {
+                        break;
+                    }
+                    if rem != last_remaining {
+                        last_remaining = rem;
+                        last_change = Instant::now();
+                    }
+                    if last_change.elapsed() > STALL_TIMEOUT {
+                        bail!(
+                            "epoch {epoch} stalled: {rem} backward passes outstanding \
+                             with no progress for {STALL_TIMEOUT:?}"
+                        );
+                    }
+                    if link_down.load(Ordering::Relaxed) {
+                        bail!("link closed mid-epoch ({rem} backward passes outstanding)");
+                    }
+                    if opts.is_cancelled() {
+                        cancelled = true;
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                if cancelled {
+                    opts.emit(RunEvent::Cancelled { epoch });
+                    break;
+                }
+
+                // ---- staleness summary (receiver clock) --------------
+                let n = stale_n.load(Ordering::Relaxed);
+                if n > 0 {
+                    let mean = stale_sum.load(Ordering::Relaxed) as f64 / n as f64;
+                    let max = stale_max.load(Ordering::Relaxed);
+                    metrics.push_point("staleness_mean", epoch as f64, mean);
+                    metrics.gauge_max("staleness_max", max as f64);
+                    opts.emit(RunEvent::Staleness { epoch, mean, max });
+                }
+                metrics.gauge_max(
+                    "emb_param_version_max",
+                    emb_version_max.load(Ordering::Relaxed) as f64,
+                );
+
+                // ---- semi-async PS schedule: active half local, ------
+                // passive half behind the barrier frame.
+                let barrier = schedule.barrier_after_epoch(epoch);
+                if barrier {
+                    fold_active_barrier(&active_replicas, &ps_active, &ps_top);
+                    metrics.inc("ps_barriers", 1);
+                    opts.emit(RunEvent::PsBarrier { epoch });
+                } else {
+                    ps_active.aggregate();
+                    ps_top.aggregate();
+                }
+                link.send(Frame::Barrier { epoch: epoch as u64, broadcast: barrier })
+                    .map_err(|e| anyhow!("barrier send failed: {e}"))?;
+                wait_barrier(epoch as u64)?;
+
+                // ---- wire-cost series: this epoch's delta of the ----
+                // cumulative link counters (codec bytes + codec time).
+                let st = link.stats();
+                let mb = 1024.0 * 1024.0;
+                let d = |now: u64, prev: u64| now.saturating_sub(prev) as f64;
+                let tx = d(st.tx_bytes, wire_prev.tx_bytes) / mb;
+                let rx = d(st.rx_bytes, wire_prev.rx_bytes) / mb;
+                metrics.push_point("wire_tx_mb", epoch as f64, tx);
+                metrics.push_point("wire_rx_mb", epoch as f64, rx);
+                metrics.push_point(
+                    "wire_encode_ms",
+                    epoch as f64,
+                    d(st.encode_ns, wire_prev.encode_ns) / 1e6,
+                );
+                metrics.push_point(
+                    "wire_decode_ms",
+                    epoch as f64,
+                    d(st.decode_ns, wire_prev.decode_ns) / 1e6,
+                );
+                wire_prev = st;
+
+                // ---- bookkeeping + eval on fetched parameters --------
+                let (lsum, lcnt) = *epoch_loss.lock().unwrap();
+                let mean_loss = if lcnt > 0 { lsum / lcnt as f64 } else { f64::NAN };
+                loss_curve.push((epoch as f64, mean_loss));
+                metrics.push_point("train_loss", epoch as f64, mean_loss);
+
+                let passive_params = fetch_passive_params()?;
+                let (mean_a, mean_t) = mean_active(&active_replicas);
+                let eval_params = SplitParams {
+                    active: mean_a,
+                    top: mean_t,
+                    passive: passive_params.clone(),
+                };
+                last_passive = Some(passive_params);
+                let metric =
+                    evaluate_ws(engine.as_ref(), &eval_params, test, b, task, &mut eval_ws);
+                metric_curve.push((epoch as f64, metric));
+                metrics.push_point("eval_metric", epoch as f64, metric);
+                opts.emit(RunEvent::Eval { epoch, metric });
+                opts.emit(RunEvent::EpochEnd { epoch, mean_loss, metric });
+                if reached(task, metric, ctx.target()) {
+                    reached_target = true;
+                    break;
+                }
+            }
+            // Make sure the final model includes the passive half even if
+            // no epoch completed (cancellation / zero-epoch runs).
+            if last_passive.is_none() && !link_down.load(Ordering::Relaxed) {
+                last_passive = fetch_passive_params().ok();
+            }
+            Ok(())
+        })();
+
+        // ---- teardown (always, so the scope can join) -----------------
+        shutdown.store(true, Ordering::Relaxed);
+        let _ = link.send(Frame::Shutdown);
+        broker.close();
+        link.close();
+        result
+    });
+
+    let st = link.stats();
+    metrics.set_gauge("wire_tx_frames", st.tx_frames as f64);
+    metrics.set_gauge("wire_rx_frames", st.rx_frames as f64);
+    run_result?;
+
+    let (mean_a, mean_t) = mean_active(&active_replicas);
+    let passive = match last_passive {
+        Some(p) => p,
+        None => init.passive.clone(),
+    };
+    let params = SplitParams { active: mean_a, top: mean_t, passive };
+    let final_metric = evaluate_ws(engine.as_ref(), &params, test, b, task, &mut eval_ws);
+    Ok(SessionResult {
+        params,
+        loss_curve,
+        metric_curve,
+        final_metric,
+        epochs_run,
+        reached_target,
+        wall: sw.elapsed(),
+        retried_batches: ledger.retried(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::transport::InProcTransport;
+    use super::super::passive::serve_passive_session;
+    use super::super::train_pubsub;
+    use super::*;
+    use crate::config::{ExperimentConfig, ModelSize};
+    use crate::data::{make_classification, ClassificationOpts, Task, VerticalDataset};
+    use crate::experiment::RunOptions;
+    use crate::metrics::Metrics;
+    use crate::model::{HostSplitModel, SplitModelSpec};
+    use std::sync::atomic::AtomicUsize;
+
+    fn tiny_setup() -> (
+        Arc<HostSplitModel>,
+        SplitModelSpec,
+        VerticalDataset,
+        VerticalDataset,
+        ExperimentConfig,
+    ) {
+        let mut rng = Rng::new(3);
+        let ds = make_classification(
+            &ClassificationOpts {
+                samples: 256,
+                features: 12,
+                informative: 8,
+                redundant: 2,
+                class_sep: 1.5,
+                flip_y: 0.0,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        let (tr, te) = ds.split(0.75);
+        let vtr = VerticalDataset::split_two(&tr, 6);
+        let vte = VerticalDataset::split_two(&te, 6);
+        let spec = SplitModelSpec::build(ModelSize::Small, 6, &[6], 16, 8);
+        let engine = Arc::new(HostSplitModel::new(spec.clone(), Task::BinaryClassification));
+        let mut cfg = ExperimentConfig::default();
+        cfg.train.batch_size = 32;
+        cfg.train.epochs = 6;
+        cfg.train.lr = 0.05;
+        cfg.train.target_accuracy = 0.995; // effectively run all epochs
+        cfg.parties.active_workers = 2;
+        cfg.parties.passive_workers = 2;
+        cfg.train.t_ddl_ms = 2000;
+        (engine, spec, vtr, vte, cfg)
+    }
+
+    #[test]
+    fn pubsub_session_learns() {
+        let (engine, spec, tr, te, cfg) = tiny_setup();
+        let metrics = Arc::new(Metrics::new());
+        let r = train_pubsub(engine, &spec, &tr, &te, &cfg, Arc::clone(&metrics));
+        assert_eq!(r.epochs_run, 6);
+        assert!(r.final_metric > 0.8, "AUC = {}", r.final_metric);
+        // Losses recorded and decreasing overall.
+        assert_eq!(r.loss_curve.len(), 6);
+        assert!(r.loss_curve[5].1 < r.loss_curve[0].1);
+        // Exactly-once: 6 epochs × 6 full batches × fwd+bwd, no retries
+        // needed with roomy buffers and a long deadline.
+        assert_eq!(metrics.counter("passive_bwd"), 36);
+        assert!(metrics.counter("active_steps") >= 36);
+        assert_eq!(r.retried_batches, 0);
+        assert_eq!(metrics.counter("deadline_expired"), 0);
+        assert!(metrics.comm_mb() > 0.0);
+        // The PS is live: versions advanced and were stamped into
+        // messages after the first sync.
+        assert!(metrics.gauge("emb_param_version_max").unwrap_or(0.0) > 0.0);
+        assert!(!metrics.series("staleness_mean").is_empty());
+    }
+
+    #[test]
+    fn dp_enabled_still_learns_with_noise() {
+        let (engine, spec, tr, te, mut cfg) = tiny_setup();
+        cfg.dp.enabled = true;
+        cfg.dp.mu = 4.0;
+        let metrics = Arc::new(Metrics::new());
+        let r = train_pubsub(engine, &spec, &tr, &te, &cfg, metrics);
+        assert!(r.final_metric > 0.65, "AUC with DP = {}", r.final_metric);
+    }
+
+    #[test]
+    fn target_stops_early() {
+        let (engine, spec, tr, te, mut cfg) = tiny_setup();
+        cfg.train.target_accuracy = 0.55; // easy target
+        cfg.train.epochs = 20;
+        let metrics = Arc::new(Metrics::new());
+        let r = train_pubsub(engine, &spec, &tr, &te, &cfg, metrics);
+        assert!(r.reached_target);
+        assert!(r.epochs_run < 20);
+    }
+
+    /// The full wire protocol over an in-process link pair: the passive
+    /// half runs `serve_passive_session` on one thread, the active half
+    /// drives `train_pubsub_over_link` — the exactly-once invariant must
+    /// hold and the model must learn, without any shared broker/ledger.
+    #[test]
+    fn linked_session_exactly_once_and_learns() {
+        let (engine, spec, tr, te, mut cfg) = tiny_setup();
+        // Unreachable target: every epoch runs, so the exactly-once
+        // count below is deterministic.
+        cfg.train.target_accuracy = 2.0;
+        let (active_link, passive_link) = InProcTransport::pair_inproc();
+
+        let spec_p = spec.clone();
+        let cfg_p = cfg.clone();
+        let tr_p = tr.clone();
+        let engine_p: Arc<dyn crate::model::SplitEngine> = Arc::clone(&engine);
+        let passive_metrics = Arc::new(Metrics::new());
+        let pm = Arc::clone(&passive_metrics);
+        let server = std::thread::spawn(move || {
+            serve_passive_session(&cfg_p, &spec_p, engine_p, &tr_p, Arc::new(passive_link), pm)
+                .unwrap()
+        });
+
+        let metrics = Arc::new(Metrics::new());
+        let opts = RunOptions::default();
+        let ctx = TrainCtx {
+            engine: Arc::clone(&engine),
+            spec: &spec,
+            train: &tr,
+            test: &te,
+            cfg: &cfg,
+            metrics: Arc::clone(&metrics),
+            opts: &opts,
+        };
+        let r = train_pubsub_over_link(&ctx, Arc::new(active_link)).unwrap();
+        let report = server.join().unwrap();
+
+        // 6 epochs × 6 full batches × k=1 parties, exactly once.
+        assert_eq!(report.bwd_applied, 36);
+        assert_eq!(report.epochs_served, 6);
+        assert_eq!(passive_metrics.counter("passive_bwd"), 36);
+        assert_eq!(r.epochs_run, 6);
+        assert!(r.final_metric > 0.8, "AUC over link = {}", r.final_metric);
+        assert!(r.loss_curve.iter().all(|&(_, l)| l.is_finite()));
+        assert!(r.loss_curve[5].1 < r.loss_curve[0].1);
+        // Wire-cost series recorded from the link stats.
+        assert!(!metrics.series("wire_tx_mb").is_empty());
+        assert!(metrics.counter("bwd_acked") >= 36);
+    }
+
+    /// The acceptance stress: single-slot buffers, a 1 ms deadline, and
+    /// 4×4 workers over two passive parties force constant evictions,
+    /// join failures, and reassignments — the session must still
+    /// terminate every epoch with *exactly* `epochs × n_batches × k`
+    /// passive backward passes, a finite loss curve, a retry counter that
+    /// matches the emitted `BatchRetried` events 1:1, and live
+    /// `param_version`s. (CI runs this under `--release` in the
+    /// `retry-stress` job so the contention path sees real parallelism.)
+    #[test]
+    fn retry_storm_exactly_once() {
+        let mut rng = Rng::new(11);
+        let ds = make_classification(
+            &ClassificationOpts {
+                samples: 256,
+                features: 12,
+                informative: 8,
+                redundant: 2,
+                class_sep: 1.5,
+                flip_y: 0.0,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        let (tr, te) = ds.split(0.75);
+        let vtr = VerticalDataset::split_multi(&tr, 4, 2);
+        let vte = VerticalDataset::split_multi(&te, 4, 2);
+        let d_passive: Vec<usize> = vtr.passive.iter().map(|p| p.x.cols).collect();
+        let spec = SplitModelSpec::build(ModelSize::Small, 4, &d_passive, 12, 8);
+        let engine = Arc::new(HostSplitModel::new(spec.clone(), Task::BinaryClassification));
+        let mut cfg = ExperimentConfig::default();
+        cfg.train.batch_size = 32;
+        cfg.train.epochs = 6;
+        cfg.train.lr = 0.05;
+        cfg.train.target_accuracy = 2.0; // unreachable: run every epoch
+        cfg.parties.active_workers = 4;
+        cfg.parties.passive_workers = 4;
+        cfg.train.t_ddl_ms = 1;
+        cfg.train.buffer_p = 1;
+        cfg.train.buffer_q = 1;
+        let metrics = Arc::new(Metrics::new());
+        let m2 = Arc::clone(&metrics);
+        let retry_events = Arc::new(AtomicUsize::new(0));
+        let rc = Arc::clone(&retry_events);
+
+        let h = std::thread::spawn(move || {
+            let opts = RunOptions::new().with_observer(move |ev| {
+                if matches!(ev, RunEvent::BatchRetried { .. }) {
+                    rc.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            let ctx = TrainCtx {
+                engine,
+                spec: &spec,
+                train: &vtr,
+                test: &vte,
+                cfg: &cfg,
+                metrics: m2,
+                opts: &opts,
+            };
+            train_pubsub_session(&ctx).unwrap()
+        });
+        // Watchdog: a lifecycle bug here historically meant an epoch that
+        // never drains (`remaining_bwd` underflow → hang). Fail loudly
+        // instead of hanging CI.
+        let deadline = Instant::now() + Duration::from_secs(180);
+        while !h.is_finished() {
+            assert!(
+                Instant::now() < deadline,
+                "retry-storm session hung: an epoch failed to drain"
+            );
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        let r = h.join().unwrap();
+
+        let epochs = 6u64;
+        let n_batches = 6u64; // 192 aligned rows / batch 32
+        let k = 2u64;
+        assert_eq!(r.epochs_run, 6);
+        // Exactly-once across every retry path: no duplicates, no losses.
+        assert_eq!(metrics.counter("passive_bwd"), epochs * n_batches * k);
+        assert!(
+            r.loss_curve.iter().all(|&(_, l)| l.is_finite()),
+            "loss diverged: {:?}",
+            r.loss_curve
+        );
+        // Every counted retry was a genuine requeue with its event.
+        assert_eq!(r.retried_batches, retry_events.load(Ordering::Relaxed));
+        // PS versioning stayed live through the storm.
+        assert!(metrics.gauge("emb_param_version_max").unwrap_or(0.0) > 0.0);
+    }
+
+    /// Regression for the join-failure path: a batch whose sibling
+    /// embedding misses the deadline is fully reassigned; the stale
+    /// sibling already buffered must be purged and the old generation can
+    /// never be stepped (no double training).
+    #[test]
+    fn join_failure_purges_stale_siblings_and_steps_once() {
+        use super::super::super::messages::EmbeddingMsg;
+        use super::super::super::wire;
+        use crate::tensor::Matrix;
+
+        let metrics = Arc::new(Metrics::new());
+        let broker = Broker::new(2, 4, 4, Arc::clone(&metrics));
+        let ledger = BatchLedger::new(2);
+        ledger.install_epoch(0, &[(5, Arc::new(vec![0, 1]))]);
+
+        let emb = |generation: u64, party: usize| EmbeddingMsg {
+            batch_id: 5,
+            party,
+            generation,
+            z: Matrix::zeros(2, 3),
+            produced_at_us: wire::now_micros(),
+            param_version: 0,
+        };
+        let j0 = ledger.next_embed_job(0).unwrap();
+        let j1 = ledger.next_embed_job(1).unwrap();
+        let gen = j0.generation;
+        assert!(ledger.begin_publish(5, gen, 0));
+        broker.publish_embedding(emb(gen, 0));
+        assert!(ledger.begin_publish(5, j1.generation, 1));
+        broker.publish_embedding(emb(gen, 1));
+
+        // Active worker takes party 0's message and claims the join...
+        let (id, first) = match broker.take_embedding(0, Duration::from_millis(5)) {
+            SubResult::Ok(v) => v,
+            other => panic!("expected embedding, got {other:?}"),
+        };
+        assert_eq!(first.generation, gen);
+        assert!(ledger.begin_join(id, gen).is_some());
+        // ...but the sibling join times out: full reassignment.
+        let g2 = ledger.requeue_all(id, gen).unwrap();
+        assert_eq!(broker.purge_stale(id, g2), 1, "stale sibling must be purged");
+        assert!(broker.emb[1].is_empty());
+        // The old attempt is dead: it can never be stepped again.
+        assert!(ledger.begin_join(id, gen).is_none());
+        assert!(!ledger.mark_stepped(id, gen));
+
+        // The retry proceeds and steps exactly once.
+        assert_eq!(ledger.next_embed_job(0).unwrap().generation, g2);
+        assert_eq!(ledger.next_embed_job(1).unwrap().generation, g2);
+        assert!(ledger.begin_publish(5, g2, 0));
+        broker.publish_embedding(emb(g2, 0));
+        assert!(ledger.begin_publish(5, g2, 1));
+        broker.publish_embedding(emb(g2, 1));
+        let (id2, second) = match broker.take_embedding(0, Duration::from_millis(5)) {
+            SubResult::Ok(v) => v,
+            other => panic!("expected retried embedding, got {other:?}"),
+        };
+        assert_eq!(second.generation, g2);
+        assert!(ledger.begin_join(id2, g2).is_some());
+        assert!(ledger.begin_join(id2, g2).is_none(), "one step per generation");
+        assert_eq!(ledger.retried(), 1);
+    }
+}

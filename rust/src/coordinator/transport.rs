@@ -1,0 +1,558 @@
+//! The transport layer: how frames move between the two parties.
+//!
+//! A [`Link`] is one end of a bidirectional, ordered frame pipe. The
+//! session code is written against the trait, so the same protocol runs
+//! over either implementation:
+//!
+//! - [`InProcTransport`] — a pair of in-memory frame queues. Frames move
+//!   by value (zero-copy: no encode/decode on the hot path); reported
+//!   wire sizes still come from the codec so accounting is
+//!   transport-invariant. This also backs deterministic protocol tests.
+//!   Note the default *session* mode (`transport.kind = inproc`) goes one
+//!   step further and keeps the broker in shared memory exactly as before
+//!   this layer existed — bit-identical to the single-process system.
+//! - [`TcpLink`] — length-prefixed [`wire`] frames over a TCP socket
+//!   (loopback-tested; `serve-passive` / `train --connect` use it across
+//!   real process boundaries). Receives are incremental: a timeout mid-
+//!   frame never loses bytes, and any decode error poisons the link
+//!   (subsequent receives report `Closed`).
+//!
+//! Per-link byte/frame/encode-time counters are kept in [`LinkStats`];
+//! sessions fold snapshots into their metrics each epoch so wire cost is
+//! a first-class measured series.
+
+use super::wire::{self, Frame, WireError};
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Which message plane the PubSub session runs on. `InProc` is the
+/// default and preserves the single-process shared-memory semantics
+/// exactly; `Tcp` splits the session across two processes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    #[default]
+    InProc,
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "inproc" | "in-proc" | "local" | "shared" => Some(TransportKind::InProc),
+            "tcp" | "socket" => Some(TransportKind::Tcp),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::InProc => "inproc",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
+/// Result of a [`Link::recv`] call.
+#[derive(Debug)]
+pub enum LinkRecv {
+    /// A complete frame arrived.
+    Frame(Frame),
+    /// Nothing arrived within the timeout; the link is still healthy.
+    TimedOut,
+    /// The peer closed the link (or it was poisoned by a wire error).
+    Closed,
+}
+
+/// Cumulative per-link counters (bytes are codec sizes on both
+/// implementations, so InProc and Tcp runs report comparable comm cost).
+#[derive(Default)]
+pub struct LinkStats {
+    pub tx_bytes: AtomicU64,
+    pub rx_bytes: AtomicU64,
+    pub tx_frames: AtomicU64,
+    pub rx_frames: AtomicU64,
+    /// Nanoseconds spent encoding frames (Tcp only; InProc never encodes).
+    pub encode_ns: AtomicU64,
+    /// Nanoseconds spent decoding frames (Tcp only).
+    pub decode_ns: AtomicU64,
+    /// Frames rejected by the decoder (poisoned the link).
+    pub decode_errors: AtomicU64,
+}
+
+/// Plain-value snapshot of [`LinkStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LinkStatsSnapshot {
+    pub tx_bytes: u64,
+    pub rx_bytes: u64,
+    pub tx_frames: u64,
+    pub rx_frames: u64,
+    pub encode_ns: u64,
+    pub decode_ns: u64,
+    pub decode_errors: u64,
+}
+
+impl LinkStats {
+    pub fn snapshot(&self) -> LinkStatsSnapshot {
+        LinkStatsSnapshot {
+            tx_bytes: self.tx_bytes.load(Ordering::Relaxed),
+            rx_bytes: self.rx_bytes.load(Ordering::Relaxed),
+            tx_frames: self.tx_frames.load(Ordering::Relaxed),
+            rx_frames: self.rx_frames.load(Ordering::Relaxed),
+            encode_ns: self.encode_ns.load(Ordering::Relaxed),
+            decode_ns: self.decode_ns.load(Ordering::Relaxed),
+            decode_errors: self.decode_errors.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One end of a bidirectional, ordered frame pipe between the parties.
+///
+/// Sends are atomic per frame (safe from multiple threads); receives are
+/// expected from one logical consumer loop but are internally
+/// synchronized.
+pub trait Link: Send + Sync {
+    /// Send one frame; returns its wire size in bytes.
+    fn send(&self, frame: Frame) -> Result<u64, WireError>;
+
+    /// Receive the next frame, waiting up to `timeout`.
+    fn recv(&self, timeout: Duration) -> LinkRecv;
+
+    /// Close both directions; the peer's subsequent receives return
+    /// [`LinkRecv::Closed`] once the in-flight backlog drains.
+    fn close(&self);
+
+    /// Cumulative transfer counters.
+    fn stats(&self) -> LinkStatsSnapshot;
+}
+
+/// Factory for connected link pairs — the trait half of transport
+/// selection (the session picks the concrete wiring from
+/// [`TransportKind`]; tests and benchmarks build pairs through here).
+pub trait Transport: Send + Sync {
+    fn kind(&self) -> TransportKind;
+
+    /// Create a connected `(active end, passive end)` pair.
+    fn pair(&self) -> Result<(Arc<dyn Link>, Arc<dyn Link>), WireError>;
+}
+
+// ---- in-process transport ------------------------------------------------
+
+struct FrameQueue {
+    q: Mutex<(VecDeque<Frame>, bool)>, // (frames, closed)
+    cv: Condvar,
+}
+
+impl FrameQueue {
+    fn new() -> Arc<FrameQueue> {
+        Arc::new(FrameQueue { q: Mutex::new((VecDeque::new(), false)), cv: Condvar::new() })
+    }
+
+    fn push(&self, f: Frame) -> bool {
+        let mut g = self.q.lock().unwrap();
+        if g.1 {
+            return false;
+        }
+        g.0.push_back(f);
+        drop(g);
+        self.cv.notify_all();
+        true
+    }
+
+    fn pop(&self, timeout: Duration) -> LinkRecv {
+        let start = Instant::now();
+        let mut g = self.q.lock().unwrap();
+        loop {
+            if let Some(f) = g.0.pop_front() {
+                return LinkRecv::Frame(f);
+            }
+            if g.1 {
+                return LinkRecv::Closed;
+            }
+            let elapsed = start.elapsed();
+            if elapsed >= timeout {
+                return LinkRecv::TimedOut;
+            }
+            let (guard, _) = self.cv.wait_timeout(g, timeout - elapsed).unwrap();
+            g = guard;
+        }
+    }
+
+    fn close(&self) {
+        self.q.lock().unwrap().1 = true;
+        self.cv.notify_all();
+    }
+}
+
+/// In-memory link: frames move by value between two queues. Wire sizes
+/// are still computed from the codec (without encoding) so comm
+/// accounting matches a Tcp run of the same traffic.
+pub struct InProcLink {
+    tx: Arc<FrameQueue>,
+    rx: Arc<FrameQueue>,
+    stats: LinkStats,
+}
+
+impl Link for InProcLink {
+    fn send(&self, frame: Frame) -> Result<u64, WireError> {
+        let bytes = wire::encoded_len(&frame) as u64;
+        if !self.tx.push(frame) {
+            return Err(WireError::Io("link closed".into()));
+        }
+        self.stats.tx_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.stats.tx_frames.fetch_add(1, Ordering::Relaxed);
+        Ok(bytes)
+    }
+
+    fn recv(&self, timeout: Duration) -> LinkRecv {
+        let r = self.rx.pop(timeout);
+        if let LinkRecv::Frame(f) = &r {
+            self.stats.rx_bytes.fetch_add(wire::encoded_len(f) as u64, Ordering::Relaxed);
+            self.stats.rx_frames.fetch_add(1, Ordering::Relaxed);
+        }
+        r
+    }
+
+    fn close(&self) {
+        self.tx.close();
+        self.rx.close();
+    }
+
+    fn stats(&self) -> LinkStatsSnapshot {
+        self.stats.snapshot()
+    }
+}
+
+/// Zero-copy in-process transport (see module docs).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct InProcTransport;
+
+impl InProcTransport {
+    /// Build a connected pair directly (non-trait form, no `Arc`/dyn).
+    pub fn pair_inproc() -> (InProcLink, InProcLink) {
+        let a_to_b = FrameQueue::new();
+        let b_to_a = FrameQueue::new();
+        (
+            InProcLink {
+                tx: Arc::clone(&a_to_b),
+                rx: Arc::clone(&b_to_a),
+                stats: LinkStats::default(),
+            },
+            InProcLink { tx: b_to_a, rx: a_to_b, stats: LinkStats::default() },
+        )
+    }
+}
+
+impl Transport for InProcTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::InProc
+    }
+
+    fn pair(&self) -> Result<(Arc<dyn Link>, Arc<dyn Link>), WireError> {
+        let (a, b) = InProcTransport::pair_inproc();
+        Ok((Arc::new(a), Arc::new(b)))
+    }
+}
+
+// ---- tcp transport -------------------------------------------------------
+
+struct TcpReader {
+    stream: TcpStream,
+    /// Accumulated bytes not yet forming a complete frame. A timeout
+    /// mid-frame keeps them here, so no byte is ever lost.
+    pending: Vec<u8>,
+}
+
+/// Length-prefixed [`wire`] frames over a TCP socket.
+pub struct TcpLink {
+    writer: Mutex<TcpStream>,
+    reader: Mutex<TcpReader>,
+    closed: AtomicBool,
+    poisoned: AtomicBool,
+    stats: LinkStats,
+}
+
+impl TcpLink {
+    /// Wrap a connected stream (used by both `accept` and `connect`).
+    pub fn new(stream: TcpStream) -> Result<TcpLink, WireError> {
+        stream.set_nodelay(true)?;
+        let reader_stream = stream.try_clone()?;
+        Ok(TcpLink {
+            writer: Mutex::new(stream),
+            reader: Mutex::new(TcpReader { stream: reader_stream, pending: Vec::new() }),
+            closed: AtomicBool::new(false),
+            poisoned: AtomicBool::new(false),
+            stats: LinkStats::default(),
+        })
+    }
+
+    /// Accept one peer on `listener`.
+    pub fn accept(listener: &TcpListener) -> Result<TcpLink, WireError> {
+        let (stream, _peer) = listener.accept()?;
+        TcpLink::new(stream)
+    }
+
+    /// Connect to `addr`, retrying until `timeout` elapses (tolerates the
+    /// usual startup skew between `serve-passive` and `train --connect`).
+    pub fn connect(addr: &str, timeout: Duration) -> Result<TcpLink, WireError> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match addr
+                .to_socket_addrs()
+                .ok()
+                .and_then(|mut it| it.next())
+                .ok_or_else(|| WireError::Io(format!("cannot resolve '{addr}'")))
+                .and_then(|sa| {
+                    TcpStream::connect_timeout(&sa, Duration::from_secs(2)).map_err(WireError::from)
+                }) {
+                Ok(stream) => return TcpLink::new(stream),
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(e);
+                    }
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+            }
+        }
+    }
+}
+
+impl Link for TcpLink {
+    fn send(&self, frame: Frame) -> Result<u64, WireError> {
+        if self.closed.load(Ordering::Acquire) {
+            return Err(WireError::Io("link closed".into()));
+        }
+        let t = Instant::now();
+        let bytes = wire::encode(&frame);
+        self.stats.encode_ns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let mut w = self.writer.lock().unwrap();
+        w.write_all(&bytes)?;
+        drop(w);
+        self.stats.tx_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        self.stats.tx_frames.fetch_add(1, Ordering::Relaxed);
+        Ok(bytes.len() as u64)
+    }
+
+    fn recv(&self, timeout: Duration) -> LinkRecv {
+        if self.poisoned.load(Ordering::Acquire) {
+            return LinkRecv::Closed;
+        }
+        let start = Instant::now();
+        let mut r = self.reader.lock().unwrap();
+        loop {
+            // A complete frame may already be buffered.
+            let t = Instant::now();
+            match wire::try_decode(&r.pending) {
+                Ok(Some((frame, used))) => {
+                    self.stats
+                        .decode_ns
+                        .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    r.pending.drain(..used);
+                    self.stats.rx_bytes.fetch_add(used as u64, Ordering::Relaxed);
+                    self.stats.rx_frames.fetch_add(1, Ordering::Relaxed);
+                    return LinkRecv::Frame(frame);
+                }
+                Ok(None) => {}
+                Err(_) => {
+                    // Protocol violation: the stream can never re-sync.
+                    self.stats.decode_errors.fetch_add(1, Ordering::Relaxed);
+                    self.poisoned.store(true, Ordering::Release);
+                    let _ = r.stream.shutdown(Shutdown::Both);
+                    return LinkRecv::Closed;
+                }
+            }
+            let elapsed = start.elapsed();
+            if elapsed >= timeout {
+                return LinkRecv::TimedOut;
+            }
+            let remaining = timeout - elapsed;
+            if r.stream.set_read_timeout(Some(remaining)).is_err() {
+                return LinkRecv::Closed;
+            }
+            let mut buf = [0u8; 16 * 1024];
+            match r.stream.read(&mut buf) {
+                Ok(0) => return LinkRecv::Closed,
+                Ok(n) => r.pending.extend_from_slice(&buf[..n]),
+                Err(e)
+                    if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+                {
+                    return LinkRecv::TimedOut;
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => return LinkRecv::Closed,
+            }
+        }
+    }
+
+    fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        if let Ok(w) = self.writer.lock() {
+            let _ = w.shutdown(Shutdown::Both);
+        }
+    }
+
+    fn stats(&self) -> LinkStatsSnapshot {
+        self.stats.snapshot()
+    }
+}
+
+/// TCP transport; [`Transport::pair`] builds a loopback pair (tests).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TcpTransport;
+
+impl Transport for TcpTransport {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Tcp
+    }
+
+    fn pair(&self) -> Result<(Arc<dyn Link>, Arc<dyn Link>), WireError> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let h = std::thread::spawn(move || TcpLink::accept(&listener));
+        let active = TcpLink::connect(&addr.to_string(), Duration::from_secs(10))?;
+        let passive = h
+            .join()
+            .map_err(|_| WireError::Io("accept thread panicked".into()))??;
+        Ok((Arc::new(active), Arc::new(passive)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::messages::EmbeddingMsg;
+    use crate::tensor::Matrix;
+
+    fn emb_frame() -> Frame {
+        Frame::Embedding(EmbeddingMsg {
+            batch_id: 5,
+            party: 0,
+            generation: 2,
+            z: Matrix::from_fn(3, 4, |r, c| (r + c) as f32),
+            produced_at_us: 7_777,
+            param_version: 1,
+        })
+    }
+
+    fn exercise_pair(a: &dyn Link, b: &dyn Link) {
+        // a → b data frame.
+        let f = emb_frame();
+        let sent = a.send(f.clone()).unwrap();
+        match b.recv(Duration::from_secs(5)) {
+            LinkRecv::Frame(got) => assert_eq!(got, f),
+            other => panic!("expected frame, got {other:?}"),
+        }
+        // b → a control frame.
+        b.send(Frame::BwdDone { batch_id: 5, party: 0, ps_version: 3 }).unwrap();
+        match a.recv(Duration::from_secs(5)) {
+            LinkRecv::Frame(Frame::BwdDone { batch_id: 5, party: 0, ps_version: 3 }) => {}
+            other => panic!("expected BwdDone, got {other:?}"),
+        }
+        // Timeout with no traffic.
+        assert!(matches!(a.recv(Duration::from_millis(20)), LinkRecv::TimedOut));
+        // Accounting: codec sizes on both sides.
+        assert_eq!(a.stats().tx_bytes, sent);
+        assert_eq!(b.stats().rx_bytes, sent);
+        assert_eq!(a.stats().tx_frames, 1);
+        assert_eq!(b.stats().rx_frames, 1);
+        // Close propagates.
+        a.close();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            match b.recv(Duration::from_millis(50)) {
+                LinkRecv::Closed => break,
+                LinkRecv::TimedOut if Instant::now() < deadline => {}
+                other => panic!("expected Closed, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn inproc_pair_delivers_in_order() {
+        let (a, b) = InProcTransport::pair_inproc();
+        for i in 0..10u64 {
+            a.send(Frame::Requeue { batch_id: i, generation: i }).unwrap();
+        }
+        for i in 0..10u64 {
+            match b.recv(Duration::from_secs(1)) {
+                LinkRecv::Frame(Frame::Requeue { batch_id, generation }) => {
+                    assert_eq!((batch_id, generation), (i, i));
+                }
+                other => panic!("expected Requeue {i}, got {other:?}"),
+            }
+        }
+        assert!(matches!(b.recv(Duration::from_millis(5)), LinkRecv::TimedOut));
+    }
+
+    #[test]
+    fn tcp_loopback_round_trip() {
+        let t = TcpTransport;
+        let (a, b) = t.pair().unwrap();
+        exercise_pair(a.as_ref(), b.as_ref());
+    }
+
+    #[test]
+    fn tcp_partial_reads_never_lose_bytes() {
+        // Send a large frame; receive with tiny timeouts so the reader
+        // sees it in several chunks across multiple recv calls.
+        let t = TcpTransport;
+        let (a, b) = t.pair().unwrap();
+        let big = Frame::Embedding(EmbeddingMsg {
+            batch_id: 9,
+            party: 0,
+            generation: 1,
+            z: Matrix::from_fn(512, 64, |r, c| (r * 64 + c) as f32),
+            produced_at_us: 123,
+            param_version: 0,
+        });
+        let big2 = big.clone();
+        let h = std::thread::spawn(move || a.send(big2).unwrap());
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let got = loop {
+            match b.recv(Duration::from_micros(200)) {
+                LinkRecv::Frame(f) => break f,
+                LinkRecv::TimedOut => assert!(Instant::now() < deadline, "frame never arrived"),
+                LinkRecv::Closed => panic!("link closed early"),
+            }
+        };
+        h.join().unwrap();
+        assert_eq!(got, big);
+    }
+
+    #[test]
+    fn tcp_poisoned_by_garbage() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            s.write_all(&[0xDE, 0xAD, 0xBE, 0xEF, 0, 0, 0, 0, 0, 0, 0, 0]).unwrap();
+        });
+        let link = TcpLink::connect(&addr.to_string(), Duration::from_secs(5)).unwrap();
+        h.join().unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            match link.recv(Duration::from_millis(50)) {
+                LinkRecv::Closed => break,
+                LinkRecv::TimedOut if Instant::now() < deadline => {}
+                other => panic!("expected poisoned Closed, got {other:?}"),
+            }
+        }
+        assert_eq!(link.stats().decode_errors, 1);
+        // Poisoned links stay closed.
+        assert!(matches!(link.recv(Duration::from_millis(5)), LinkRecv::Closed));
+    }
+
+    #[test]
+    fn transport_kind_parses() {
+        assert_eq!(TransportKind::parse("tcp"), Some(TransportKind::Tcp));
+        assert_eq!(TransportKind::parse("InProc"), Some(TransportKind::InProc));
+        assert_eq!(TransportKind::parse("carrier-pigeon"), None);
+        assert_eq!(TransportKind::default(), TransportKind::InProc);
+        for k in [TransportKind::InProc, TransportKind::Tcp] {
+            assert_eq!(TransportKind::parse(k.name()), Some(k));
+        }
+    }
+}

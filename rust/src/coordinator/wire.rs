@@ -1,0 +1,712 @@
+//! The versioned wire codec for the Pub/Sub message plane.
+//!
+//! Every message and control signal that crosses the party boundary is a
+//! **frame**: a fixed 10-byte header (`magic`, `version`, `type`, flags,
+//! payload length) followed by a little-endian payload. The codec is
+//! hand-rolled (no new dependencies) and is the *single source of truth*
+//! for payload sizes: [`EmbeddingMsg::bytes`](super::messages::EmbeddingMsg::bytes),
+//! [`GradientMsg::bytes`](super::messages::GradientMsg::bytes), and
+//! `profiler::payload_bytes_per_sample` all derive from
+//! [`embedding_wire_bytes`] / [`gradient_wire_bytes`] rather than a
+//! framing constant.
+//!
+//! Timestamps on messages are codec-boundary micros
+//! ([`now_micros`], µs since the Unix epoch) instead of `Instant`s, so a
+//! message is serializable and the receiving party can reason about
+//! latency on *its own* clock (cross-process staleness uses the receiver
+//! clock; see EXPERIMENTS.md).
+//!
+//! Decoding never panics: every malformed input — truncated frames, a
+//! corrupt length, a wrong magic/version, an unknown frame type, trailing
+//! bytes — maps to a [`WireError`]. The transport layer treats a decode
+//! error as a poisoned link.
+
+use super::messages::{EmbeddingMsg, GradientMsg};
+use crate::tensor::Matrix;
+use std::fmt;
+use std::io::{Read, Write};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// `b"VF"` little-endian: rejects non-protocol peers at the first frame.
+pub const WIRE_MAGIC: u16 = 0x4656;
+/// Protocol version; bumped on any layout change.
+pub const WIRE_VERSION: u16 = 1;
+/// Fixed frame header: magic u16, version u16, type u8, flags u8, len u32.
+pub const HEADER_BYTES: usize = 10;
+/// Upper bound on one frame's payload — anything larger is a corrupt
+/// length field, not a real message (the largest legitimate frame is a
+/// batch of f32 embeddings).
+pub const MAX_PAYLOAD_BYTES: u32 = 256 * 1024 * 1024;
+
+/// Decode/transport failure. Every malformed input maps here; the codec
+/// never panics on wire data.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// First two bytes were not [`WIRE_MAGIC`].
+    BadMagic(u16),
+    /// Peer speaks a different protocol version.
+    BadVersion(u16),
+    /// Unknown frame-type tag.
+    UnknownFrame(u8),
+    /// Input ended before the frame did.
+    Truncated,
+    /// Length field exceeds [`MAX_PAYLOAD_BYTES`].
+    Oversize(u32),
+    /// Structurally invalid payload (reason attached).
+    Corrupt(&'static str),
+    /// Underlying socket/stream error.
+    Io(String),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::BadMagic(m) => write!(f, "bad wire magic 0x{m:04x}"),
+            WireError::BadVersion(v) => write!(f, "unsupported wire version {v}"),
+            WireError::UnknownFrame(t) => write!(f, "unknown frame type {t}"),
+            WireError::Truncated => write!(f, "truncated frame"),
+            WireError::Oversize(n) => write!(f, "frame payload length {n} exceeds limit"),
+            WireError::Corrupt(why) => write!(f, "corrupt frame: {why}"),
+            WireError::Io(e) => write!(f, "transport i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> WireError {
+        WireError::Io(e.to_string())
+    }
+}
+
+/// Current µs since the Unix epoch — the codec-boundary timestamp stamped
+/// into messages when they enter the message plane.
+pub fn now_micros() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
+// ---- frame model --------------------------------------------------------
+
+const T_HELLO: u8 = 1;
+const T_HELLO_ACK: u8 = 2;
+const T_EPOCH_INSTALL: u8 = 3;
+const T_EMBED_JOB: u8 = 4;
+const T_EMBEDDING: u8 = 5;
+const T_GRADIENT: u8 = 6;
+const T_BWD_DONE: u8 = 7;
+const T_REQUEUE: u8 = 8;
+const T_BARRIER: u8 = 9;
+const T_BARRIER_DONE: u8 = 10;
+const T_FETCH_PARAMS: u8 = 11;
+const T_PASSIVE_PARAMS: u8 = 12;
+const T_SHUTDOWN: u8 = 13;
+
+/// Everything that crosses the party boundary: the two data-plane
+/// messages plus the control plane of the distributed session (handshake,
+/// epoch install, embed-job scheduling, backward acks, requeue requests,
+/// PS barriers, parameter fetch, shutdown).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Active → passive handshake: number of passive parties expected.
+    Hello { parties: u32 },
+    /// Passive → active handshake reply: number of parties served.
+    HelloAck { parties: u32 },
+    /// Active → passive: the epoch's batch plan — `(batch_id, rows)` per
+    /// batch, rows being PSI-aligned sample indices shared by both sides.
+    EpochInstall { epoch: u64, batches: Vec<(u64, Vec<u32>)> },
+    /// Active → passive: (re)queue one embedding job on `party` at the
+    /// ledger's current `generation`.
+    EmbedJob { party: u32, batch_id: u64, generation: u64 },
+    /// Passive → active data plane.
+    Embedding(EmbeddingMsg),
+    /// Active → passive data plane.
+    Gradient(GradientMsg),
+    /// Passive → active: the backward pass for `(batch_id, party)` has
+    /// been applied to a remote replica (`ps_version` = the passive PS
+    /// version at ack time, for receiver-clock staleness).
+    BwdDone { batch_id: u64, party: u32, ps_version: u64 },
+    /// Passive → active: a buffered gradient was evicted by the buffer
+    /// mechanism before any worker consumed it — the batch needs a full
+    /// reassignment (mirrors the in-proc eviction → `requeue_all` path).
+    Requeue { batch_id: u64, generation: u64 },
+    /// Active → passive: the epoch drained; run the semi-async PS sync
+    /// (`broadcast` = fold replicas + re-broadcast, else `aggregate`).
+    Barrier { epoch: u64, broadcast: bool },
+    /// Passive → active: barrier/aggregate done; per-party PS versions.
+    BarrierDone { epoch: u64, versions: Vec<u64> },
+    /// Active → passive: send back the mean passive parameters per party.
+    FetchParams,
+    /// Passive → active: one party's mean replica parameters, flattened
+    /// in the `[W_0, b_0, W_1, b_1, ...]` layout of `MlpParams::flatten`.
+    PassiveParams { party: u32, version: u64, flat: Vec<f32> },
+    /// Active → passive: end of session.
+    Shutdown,
+}
+
+impl Frame {
+    fn frame_type(&self) -> u8 {
+        match self {
+            Frame::Hello { .. } => T_HELLO,
+            Frame::HelloAck { .. } => T_HELLO_ACK,
+            Frame::EpochInstall { .. } => T_EPOCH_INSTALL,
+            Frame::EmbedJob { .. } => T_EMBED_JOB,
+            Frame::Embedding(_) => T_EMBEDDING,
+            Frame::Gradient(_) => T_GRADIENT,
+            Frame::BwdDone { .. } => T_BWD_DONE,
+            Frame::Requeue { .. } => T_REQUEUE,
+            Frame::Barrier { .. } => T_BARRIER,
+            Frame::BarrierDone { .. } => T_BARRIER_DONE,
+            Frame::FetchParams => T_FETCH_PARAMS,
+            Frame::PassiveParams { .. } => T_PASSIVE_PARAMS,
+            Frame::Shutdown => T_SHUTDOWN,
+        }
+    }
+}
+
+// ---- primitive writers/readers ------------------------------------------
+
+fn put_u16(b: &mut Vec<u8>, v: u16) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(b: &mut Vec<u8>, v: f32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(b: &mut Vec<u8>, v: f64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_matrix(b: &mut Vec<u8>, m: &Matrix) {
+    put_u32(b, m.rows as u32);
+    put_u32(b, m.cols as u32);
+    for &v in &m.data {
+        put_f32(b, v);
+    }
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.buf.len() - self.pos < n {
+            return Err(WireError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>, WireError> {
+        let raw = self.take(n.checked_mul(4).ok_or(WireError::Corrupt("length overflow"))?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn matrix(&mut self) -> Result<Matrix, WireError> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        let n = rows.checked_mul(cols).ok_or(WireError::Corrupt("matrix shape overflow"))?;
+        let data = self.f32_vec(n)?;
+        Ok(Matrix { rows, cols, data })
+    }
+
+    fn done(&self) -> Result<(), WireError> {
+        if self.pos != self.buf.len() {
+            return Err(WireError::Corrupt("trailing bytes after payload"));
+        }
+        Ok(())
+    }
+}
+
+// ---- sizes ---------------------------------------------------------------
+
+/// Payload bytes of the fixed (non-matrix) embedding fields:
+/// batch_id + party + generation + param_version + produced_at_us.
+const EMB_FIXED: usize = 8 + 4 + 8 + 8 + 8;
+/// Fixed gradient fields: batch_id + party + generation + produced_at_us
+/// + loss.
+const GRAD_FIXED: usize = 8 + 4 + 8 + 8 + 8;
+/// Matrix prefix: rows + cols.
+const MAT_DIMS: usize = 8;
+
+/// Exact wire size (header + payload) of an embedding frame carrying a
+/// `rows × cols` matrix. The single source of truth for embedding payload
+/// accounting (`EmbeddingMsg::bytes`, `profiler::payload_bytes_per_sample`).
+pub fn embedding_wire_bytes(rows: usize, cols: usize) -> u64 {
+    (HEADER_BYTES + EMB_FIXED + MAT_DIMS + rows * cols * 4) as u64
+}
+
+/// Exact wire size (header + payload) of a gradient frame carrying a
+/// `rows × cols` matrix.
+pub fn gradient_wire_bytes(rows: usize, cols: usize) -> u64 {
+    (HEADER_BYTES + GRAD_FIXED + MAT_DIMS + rows * cols * 4) as u64
+}
+
+fn payload_len(frame: &Frame) -> usize {
+    match frame {
+        Frame::Hello { .. } | Frame::HelloAck { .. } => 4,
+        Frame::EpochInstall { batches, .. } => {
+            8 + 4 + batches.iter().map(|(_, rows)| 8 + 4 + rows.len() * 4).sum::<usize>()
+        }
+        Frame::EmbedJob { .. } => 4 + 8 + 8,
+        Frame::Embedding(m) => EMB_FIXED + MAT_DIMS + m.z.data.len() * 4,
+        Frame::Gradient(m) => GRAD_FIXED + MAT_DIMS + m.grad_z.data.len() * 4,
+        Frame::BwdDone { .. } => 8 + 4 + 8,
+        Frame::Requeue { .. } => 8 + 8,
+        Frame::Barrier { .. } => 8 + 1,
+        Frame::BarrierDone { versions, .. } => 8 + 4 + versions.len() * 8,
+        Frame::FetchParams | Frame::Shutdown => 0,
+        Frame::PassiveParams { flat, .. } => 4 + 8 + 4 + flat.len() * 4,
+    }
+}
+
+/// Exact encoded size of `frame` (header + payload), without encoding.
+pub fn encoded_len(frame: &Frame) -> usize {
+    HEADER_BYTES + payload_len(frame)
+}
+
+// ---- encode --------------------------------------------------------------
+
+fn write_payload(frame: &Frame, b: &mut Vec<u8>) {
+    match frame {
+        Frame::Hello { parties } | Frame::HelloAck { parties } => put_u32(b, *parties),
+        Frame::EpochInstall { epoch, batches } => {
+            put_u64(b, *epoch);
+            put_u32(b, batches.len() as u32);
+            for (id, rows) in batches {
+                put_u64(b, *id);
+                put_u32(b, rows.len() as u32);
+                for &r in rows {
+                    put_u32(b, r);
+                }
+            }
+        }
+        Frame::EmbedJob { party, batch_id, generation } => {
+            put_u32(b, *party);
+            put_u64(b, *batch_id);
+            put_u64(b, *generation);
+        }
+        Frame::Embedding(m) => {
+            put_u64(b, m.batch_id);
+            put_u32(b, m.party as u32);
+            put_u64(b, m.generation);
+            put_u64(b, m.param_version);
+            put_u64(b, m.produced_at_us);
+            put_matrix(b, &m.z);
+        }
+        Frame::Gradient(m) => {
+            put_u64(b, m.batch_id);
+            put_u32(b, m.party as u32);
+            put_u64(b, m.generation);
+            put_u64(b, m.produced_at_us);
+            put_f64(b, m.loss);
+            put_matrix(b, &m.grad_z);
+        }
+        Frame::BwdDone { batch_id, party, ps_version } => {
+            put_u64(b, *batch_id);
+            put_u32(b, *party);
+            put_u64(b, *ps_version);
+        }
+        Frame::Requeue { batch_id, generation } => {
+            put_u64(b, *batch_id);
+            put_u64(b, *generation);
+        }
+        Frame::Barrier { epoch, broadcast } => {
+            put_u64(b, *epoch);
+            b.push(u8::from(*broadcast));
+        }
+        Frame::BarrierDone { epoch, versions } => {
+            put_u64(b, *epoch);
+            put_u32(b, versions.len() as u32);
+            for &v in versions {
+                put_u64(b, v);
+            }
+        }
+        Frame::FetchParams | Frame::Shutdown => {}
+        Frame::PassiveParams { party, version, flat } => {
+            put_u32(b, *party);
+            put_u64(b, *version);
+            put_u32(b, flat.len() as u32);
+            for &v in flat {
+                put_f32(b, v);
+            }
+        }
+    }
+}
+
+/// Encode one frame: 10-byte header + little-endian payload.
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let plen = payload_len(frame);
+    let mut out = Vec::with_capacity(HEADER_BYTES + plen);
+    put_u16(&mut out, WIRE_MAGIC);
+    put_u16(&mut out, WIRE_VERSION);
+    out.push(frame.frame_type());
+    out.push(0); // flags (reserved)
+    put_u32(&mut out, plen as u32);
+    write_payload(frame, &mut out);
+    debug_assert_eq!(out.len(), HEADER_BYTES + plen);
+    out
+}
+
+// ---- decode --------------------------------------------------------------
+
+fn parse_header(hdr: &[u8; HEADER_BYTES]) -> Result<(u8, u32), WireError> {
+    let magic = u16::from_le_bytes([hdr[0], hdr[1]]);
+    if magic != WIRE_MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let version = u16::from_le_bytes([hdr[2], hdr[3]]);
+    if version != WIRE_VERSION {
+        return Err(WireError::BadVersion(version));
+    }
+    let ftype = hdr[4];
+    let len = u32::from_le_bytes([hdr[6], hdr[7], hdr[8], hdr[9]]);
+    if len > MAX_PAYLOAD_BYTES {
+        return Err(WireError::Oversize(len));
+    }
+    Ok((ftype, len))
+}
+
+fn decode_payload(ftype: u8, payload: &[u8]) -> Result<Frame, WireError> {
+    let mut c = Cursor::new(payload);
+    let frame = match ftype {
+        T_HELLO => Frame::Hello { parties: c.u32()? },
+        T_HELLO_ACK => Frame::HelloAck { parties: c.u32()? },
+        T_EPOCH_INSTALL => {
+            let epoch = c.u64()?;
+            let n = c.u32()? as usize;
+            let mut batches = Vec::with_capacity(n.min(65_536));
+            for _ in 0..n {
+                let id = c.u64()?;
+                let len = c.u32()? as usize;
+                let raw = c.take(
+                    len.checked_mul(4).ok_or(WireError::Corrupt("row count overflow"))?,
+                )?;
+                let rows: Vec<u32> = raw
+                    .chunks_exact(4)
+                    .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+                    .collect();
+                batches.push((id, rows));
+            }
+            Frame::EpochInstall { epoch, batches }
+        }
+        T_EMBED_JOB => Frame::EmbedJob {
+            party: c.u32()?,
+            batch_id: c.u64()?,
+            generation: c.u64()?,
+        },
+        T_EMBEDDING => {
+            let batch_id = c.u64()?;
+            let party = c.u32()? as usize;
+            let generation = c.u64()?;
+            let param_version = c.u64()?;
+            let produced_at_us = c.u64()?;
+            let z = c.matrix()?;
+            Frame::Embedding(EmbeddingMsg {
+                batch_id,
+                party,
+                generation,
+                z,
+                produced_at_us,
+                param_version,
+            })
+        }
+        T_GRADIENT => {
+            let batch_id = c.u64()?;
+            let party = c.u32()? as usize;
+            let generation = c.u64()?;
+            let produced_at_us = c.u64()?;
+            let loss = c.f64()?;
+            let grad_z = c.matrix()?;
+            Frame::Gradient(GradientMsg {
+                batch_id,
+                party,
+                generation,
+                grad_z,
+                produced_at_us,
+                loss,
+            })
+        }
+        T_BWD_DONE => Frame::BwdDone {
+            batch_id: c.u64()?,
+            party: c.u32()?,
+            ps_version: c.u64()?,
+        },
+        T_REQUEUE => Frame::Requeue { batch_id: c.u64()?, generation: c.u64()? },
+        T_BARRIER => Frame::Barrier {
+            epoch: c.u64()?,
+            broadcast: c.u8()? != 0,
+        },
+        T_BARRIER_DONE => {
+            let epoch = c.u64()?;
+            let n = c.u32()? as usize;
+            let mut versions = Vec::with_capacity(n.min(65_536));
+            for _ in 0..n {
+                versions.push(c.u64()?);
+            }
+            Frame::BarrierDone { epoch, versions }
+        }
+        T_FETCH_PARAMS => Frame::FetchParams,
+        T_PASSIVE_PARAMS => {
+            let party = c.u32()?;
+            let version = c.u64()?;
+            let n = c.u32()? as usize;
+            let flat = c.f32_vec(n)?;
+            Frame::PassiveParams { party, version, flat }
+        }
+        T_SHUTDOWN => Frame::Shutdown,
+        other => return Err(WireError::UnknownFrame(other)),
+    };
+    c.done()?;
+    Ok(frame)
+}
+
+/// Decode one frame from the *prefix* of `buf`, returning the frame and
+/// the number of bytes consumed. `Ok(None)` means the buffer does not yet
+/// hold a complete frame (streaming callers should read more); hard
+/// protocol violations are `Err`.
+pub fn try_decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, WireError> {
+    if buf.len() < HEADER_BYTES {
+        return Ok(None);
+    }
+    let hdr: [u8; HEADER_BYTES] = buf[..HEADER_BYTES].try_into().unwrap();
+    let (ftype, len) = parse_header(&hdr)?;
+    let total = HEADER_BYTES + len as usize;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let frame = decode_payload(ftype, &buf[HEADER_BYTES..total])?;
+    Ok(Some((frame, total)))
+}
+
+/// Decode exactly one frame from `buf` (strict: an incomplete buffer is
+/// [`WireError::Truncated`]). Returns the frame and bytes consumed.
+pub fn decode(buf: &[u8]) -> Result<(Frame, usize), WireError> {
+    try_decode(buf)?.ok_or(WireError::Truncated)
+}
+
+/// Write one length-prefixed frame; returns the wire bytes written.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<u64, WireError> {
+    let bytes = encode(frame);
+    w.write_all(&bytes)?;
+    Ok(bytes.len() as u64)
+}
+
+/// Blocking read of one frame (used by handshake paths; the streaming
+/// transport uses [`try_decode`] over an accumulation buffer).
+pub fn read_frame(r: &mut impl Read) -> Result<Frame, WireError> {
+    let mut hdr = [0u8; HEADER_BYTES];
+    r.read_exact(&mut hdr)?;
+    let (ftype, len) = parse_header(&hdr)?;
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    decode_payload(ftype, &payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn emb(rows: usize, cols: usize) -> EmbeddingMsg {
+        EmbeddingMsg {
+            batch_id: 42,
+            party: 1,
+            generation: 7,
+            z: Matrix::from_fn(rows, cols, |r, c| (r * cols + c) as f32 - 3.5),
+            produced_at_us: now_micros(),
+            param_version: 9,
+        }
+    }
+
+    fn grad(rows: usize, cols: usize) -> GradientMsg {
+        GradientMsg {
+            batch_id: 42,
+            party: 0,
+            generation: 8,
+            grad_z: Matrix::from_fn(rows, cols, |r, c| 0.25 * (r as f32) - (c as f32)),
+            produced_at_us: now_micros(),
+            loss: 0.693,
+        }
+    }
+
+    fn all_frames() -> Vec<Frame> {
+        vec![
+            Frame::Hello { parties: 2 },
+            Frame::HelloAck { parties: 2 },
+            Frame::EpochInstall {
+                epoch: 3,
+                batches: vec![(3_000_000, vec![5, 1, 9]), (3_000_001, vec![])],
+            },
+            Frame::EmbedJob { party: 1, batch_id: 3_000_000, generation: 12 },
+            Frame::Embedding(emb(4, 8)),
+            Frame::Gradient(grad(4, 8)),
+            Frame::BwdDone { batch_id: 3_000_000, party: 0, ps_version: 5 },
+            Frame::Requeue { batch_id: 3_000_001, generation: 13 },
+            Frame::Barrier { epoch: 3, broadcast: true },
+            Frame::BarrierDone { epoch: 3, versions: vec![4, 6] },
+            Frame::FetchParams,
+            Frame::PassiveParams { party: 1, version: 6, flat: vec![0.5, -1.5, 3.25] },
+            Frame::Shutdown,
+        ]
+    }
+
+    #[test]
+    fn every_frame_round_trips_and_sizes_agree() {
+        for f in all_frames() {
+            let bytes = encode(&f);
+            assert_eq!(bytes.len(), encoded_len(&f), "size mismatch for {f:?}");
+            let (back, used) = decode(&bytes).unwrap();
+            assert_eq!(used, bytes.len());
+            assert_eq!(back, f);
+        }
+    }
+
+    /// Awkward shapes: empty batch, k=1-ish single column, 1×1, large n.
+    #[test]
+    fn message_round_trip_awkward_shapes() {
+        for &(rows, cols) in &[(0usize, 8usize), (1, 1), (4, 1), (1, 64), (300, 32)] {
+            let e = Frame::Embedding(emb(rows, cols));
+            let bytes = encode(&e);
+            assert_eq!(bytes.len() as u64, embedding_wire_bytes(rows, cols));
+            assert_eq!(decode(&bytes).unwrap().0, e);
+
+            let g = Frame::Gradient(grad(rows, cols));
+            let gb = encode(&g);
+            assert_eq!(gb.len() as u64, gradient_wire_bytes(rows, cols));
+            assert_eq!(decode(&gb).unwrap().0, g);
+        }
+    }
+
+    #[test]
+    fn float_payloads_are_bit_exact() {
+        let mut m = emb(2, 2);
+        m.z.data = vec![f32::NAN, f32::INFINITY, -0.0, f32::MIN_POSITIVE];
+        let bytes = encode(&Frame::Embedding(m.clone()));
+        let (back, _) = decode(&bytes).unwrap();
+        let Frame::Embedding(b) = back else { panic!("wrong frame") };
+        for (a, e) in b.z.data.iter().zip(m.z.data.iter()) {
+            assert_eq!(a.to_bits(), e.to_bits());
+        }
+    }
+
+    #[test]
+    fn truncated_frames_error_cleanly() {
+        for f in all_frames() {
+            let bytes = encode(&f);
+            // Every strict prefix must decode to Truncated, never panic.
+            for cut in 0..bytes.len() {
+                assert_eq!(
+                    decode(&bytes[..cut]).unwrap_err(),
+                    WireError::Truncated,
+                    "prefix {cut} of {f:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn try_decode_streams_incrementally() {
+        let f = Frame::EmbedJob { party: 0, batch_id: 1, generation: 2 };
+        let bytes = encode(&f);
+        assert_eq!(try_decode(&bytes[..4]).unwrap(), None);
+        let mut two = bytes.clone();
+        two.extend_from_slice(&encode(&Frame::Shutdown));
+        let (first, used) = try_decode(&two).unwrap().unwrap();
+        assert_eq!(first, f);
+        assert_eq!(used, bytes.len());
+        let (second, _) = try_decode(&two[used..]).unwrap().unwrap();
+        assert_eq!(second, Frame::Shutdown);
+    }
+
+    #[test]
+    fn wrong_version_magic_and_type_rejected() {
+        let mut bytes = encode(&Frame::Shutdown);
+        bytes[2] = 99; // version
+        assert_eq!(decode(&bytes).unwrap_err(), WireError::BadVersion(99));
+
+        let mut bytes = encode(&Frame::Shutdown);
+        bytes[0] = 0xAB;
+        assert!(matches!(decode(&bytes).unwrap_err(), WireError::BadMagic(_)));
+
+        let mut bytes = encode(&Frame::Shutdown);
+        bytes[4] = 200; // unknown frame type
+        assert_eq!(decode(&bytes).unwrap_err(), WireError::UnknownFrame(200));
+    }
+
+    #[test]
+    fn corrupt_lengths_rejected() {
+        // Oversize length field.
+        let mut bytes = encode(&Frame::Shutdown);
+        bytes[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(decode(&bytes).unwrap_err(), WireError::Oversize(_)));
+
+        // Trailing garbage inside the declared payload.
+        let mut bytes = encode(&Frame::Hello { parties: 1 });
+        bytes.extend_from_slice(&[0xFF; 3]);
+        let plen = (payload_len(&Frame::Hello { parties: 1 }) + 3) as u32;
+        bytes[6..10].copy_from_slice(&plen.to_le_bytes());
+        assert!(matches!(decode(&bytes).unwrap_err(), WireError::Corrupt(_)));
+
+        // Matrix dims promising more data than the payload holds.
+        let mut bytes = encode(&Frame::Embedding(emb(2, 2)));
+        let dims_off = HEADER_BYTES + EMB_FIXED;
+        bytes[dims_off..dims_off + 4].copy_from_slice(&1000u32.to_le_bytes());
+        assert_eq!(decode(&bytes).unwrap_err(), WireError::Truncated);
+    }
+
+    #[test]
+    fn io_round_trip_via_read_write_frame() {
+        let mut buf: Vec<u8> = Vec::new();
+        let f = Frame::Embedding(emb(3, 5));
+        let n = write_frame(&mut buf, &f).unwrap();
+        assert_eq!(n, embedding_wire_bytes(3, 5));
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap(), f);
+    }
+
+    #[test]
+    fn derived_byte_accounting_matches_encoder() {
+        let m = emb(4, 8);
+        assert_eq!(m.bytes(), encode(&Frame::Embedding(m.clone())).len() as u64);
+        let g = grad(4, 8);
+        assert_eq!(g.bytes(), encode(&Frame::Gradient(g.clone())).len() as u64);
+    }
+}

@@ -163,6 +163,20 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Message plane for the PubSub session (in-process or TCP).
+    pub fn transport(mut self, kind: crate::config::TransportKind) -> Self {
+        self.cfg.transport.kind = kind;
+        self
+    }
+
+    /// Run distributed: connect to a `serve-passive` process at `addr`
+    /// (implies the TCP transport).
+    pub fn connect(mut self, addr: &str) -> Self {
+        self.cfg.transport.connect = addr.to_string();
+        self.cfg.transport.kind = crate::config::TransportKind::Tcp;
+        self
+    }
+
     /// Escape hatch for knobs without a dedicated setter.
     pub fn tune(mut self, f: impl FnOnce(&mut ExperimentConfig)) -> Self {
         f(&mut self.cfg);

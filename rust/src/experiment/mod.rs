@@ -45,7 +45,7 @@ use crate::data::{Task, VerticalDataset};
 use crate::metrics::{Metrics, RunReport};
 use crate::model::{HostSplitModel, SplitEngine, SplitModelSpec};
 use crate::planner::{CostConstants, CostModel};
-use crate::profiler::payload_bytes_per_sample;
+use crate::profiler::payload_bytes_per_sample_at;
 use crate::runtime::XlaService;
 use crate::sim::{SimConfig, SimResult};
 use anyhow::{anyhow, Result};
@@ -108,8 +108,10 @@ pub fn sim_config(cfg: &ExperimentConfig, n_samples: usize) -> SimConfig {
         consts: CostConstants::balanced_default(),
         c_a: cfg.parties.active_cores,
         c_p: cfg.parties.passive_cores,
-        emb_bytes_per_sample: payload_bytes_per_sample(cfg.embed_dim),
-        grad_bytes_per_sample: payload_bytes_per_sample(cfg.embed_dim),
+        // Frame overhead amortizes over the batch the live system
+        // actually ships per message (codec-derived, see profiler).
+        emb_bytes_per_sample: payload_bytes_per_sample_at(cfg.train.batch_size, cfg.embed_dim),
+        grad_bytes_per_sample: payload_bytes_per_sample_at(cfg.train.batch_size, cfg.embed_dim),
         bandwidth_bps: cfg.bandwidth_mbps * 1e6 / 8.0,
     };
     let mut sc = SimConfig::new(cfg.arch, cost);

@@ -177,7 +177,7 @@ impl PreparedExperiment {
             metrics: Arc::clone(&metrics),
             opts,
         };
-        let session = trainer.train(&ctx);
+        let session = trainer.train(&ctx)?;
 
         // Projected testbed metrics from the calibrated simulator.
         let sim = simulate(&sim_config(&self.cfg, self.train.len()));

@@ -2,7 +2,7 @@
 //!
 //! [`Trainer`] replaces the old `match cfg.arch` in the experiment
 //! runner: each of the five architectures implements
-//! `train(&self, ctx) -> SessionResult`, and a [`TrainerRegistry`] maps
+//! `train(&self, ctx) -> Result<SessionResult>`, and a [`TrainerRegistry`] maps
 //! [`Architecture`] → trainer so new architectures plug in (via
 //! [`super::ExperimentBuilder::register_trainer`]) without touching any
 //! dispatcher.
@@ -14,6 +14,7 @@ use crate::coordinator::{train_pubsub_session, SessionResult};
 use crate::data::VerticalDataset;
 use crate::metrics::Metrics;
 use crate::model::{SplitEngine, SplitModelSpec};
+use anyhow::Result;
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -53,8 +54,10 @@ impl<'a> TrainCtx<'a> {
 pub trait Trainer: Send + Sync {
     /// Display name (matches `Architecture::name()` for built-ins).
     fn name(&self) -> &'static str;
-    /// Run one training session over the prepared state.
-    fn train(&self, ctx: &TrainCtx<'_>) -> SessionResult;
+    /// Run one training session over the prepared state. Fallible so
+    /// distributed sessions can surface transport failures (connect,
+    /// handshake, a dropped link) instead of panicking.
+    fn train(&self, ctx: &TrainCtx<'_>) -> Result<SessionResult>;
 }
 
 /// The paper's contribution: the threaded Pub/Sub session.
@@ -65,7 +68,7 @@ impl Trainer for PubSubTrainer {
         Architecture::PubSub.name()
     }
 
-    fn train(&self, ctx: &TrainCtx<'_>) -> SessionResult {
+    fn train(&self, ctx: &TrainCtx<'_>) -> Result<SessionResult> {
         train_pubsub_session(ctx)
     }
 }
@@ -78,8 +81,8 @@ impl Trainer for VflTrainer {
         Architecture::Vfl.name()
     }
 
-    fn train(&self, ctx: &TrainCtx<'_>) -> SessionResult {
-        baselines::train_vfl(ctx)
+    fn train(&self, ctx: &TrainCtx<'_>) -> Result<SessionResult> {
+        Ok(baselines::train_vfl(ctx))
     }
 }
 
@@ -91,8 +94,8 @@ impl Trainer for VflPsTrainer {
         Architecture::VflPs.name()
     }
 
-    fn train(&self, ctx: &TrainCtx<'_>) -> SessionResult {
-        baselines::train_vfl_ps(ctx)
+    fn train(&self, ctx: &TrainCtx<'_>) -> Result<SessionResult> {
+        Ok(baselines::train_vfl_ps(ctx))
     }
 }
 
@@ -104,8 +107,8 @@ impl Trainer for AvflTrainer {
         Architecture::Avfl.name()
     }
 
-    fn train(&self, ctx: &TrainCtx<'_>) -> SessionResult {
-        baselines::train_avfl(ctx)
+    fn train(&self, ctx: &TrainCtx<'_>) -> Result<SessionResult> {
+        Ok(baselines::train_avfl(ctx))
     }
 }
 
@@ -117,8 +120,8 @@ impl Trainer for AvflPsTrainer {
         Architecture::AvflPs.name()
     }
 
-    fn train(&self, ctx: &TrainCtx<'_>) -> SessionResult {
-        baselines::train_avfl_ps(ctx)
+    fn train(&self, ctx: &TrainCtx<'_>) -> Result<SessionResult> {
+        Ok(baselines::train_avfl_ps(ctx))
     }
 }
 
@@ -181,7 +184,7 @@ mod tests {
             fn name(&self) -> &'static str {
                 "custom"
             }
-            fn train(&self, _ctx: &TrainCtx<'_>) -> SessionResult {
+            fn train(&self, _ctx: &TrainCtx<'_>) -> Result<SessionResult> {
                 unimplemented!("never run in this test")
             }
         }

@@ -6,11 +6,14 @@
 //! Rust + JAX + Pallas stack:
 //!
 //! - **L3 (this crate)** — the Pub/Sub coordinator: batch-ID-keyed
-//!   embedding/gradient channels, per-party parameter servers with the
-//!   semi-asynchronous schedule of Eq. (5), the system profiler + planner
-//!   (Eq. 6–15, Algo. 2), the GDP protocol (Eq. 17), PSI alignment, the
-//!   four baselines, a discrete-event simulator, and the benchmark
-//!   harness that regenerates every table and figure in the paper.
+//!   embedding/gradient channels behind a transport-abstracted message
+//!   plane (in-process zero-copy, or a versioned wire codec over TCP for
+//!   genuine two-process runs — `serve-passive` / `train --connect`),
+//!   per-party parameter servers with the semi-asynchronous schedule of
+//!   Eq. (5), the system profiler + planner (Eq. 6–15, Algo. 2), the GDP
+//!   protocol (Eq. 17), PSI alignment, the four baselines, a
+//!   discrete-event simulator, and the benchmark harness that
+//!   regenerates every table and figure in the paper.
 //! - **L2 (JAX)** — the split model (bottom MLPs + top MLP), AOT-lowered
 //!   once to HLO text by `python/compile/aot.py`.
 //! - **L1 (Pallas)** — the fused `linear+bias+activation` kernel called by

@@ -168,10 +168,23 @@ pub fn profile_engine(
     rows
 }
 
-/// Estimate payload sizes for the cost model: bytes per sample crossing
-/// the party boundary (f32 embedding row + batch-ID framing overhead).
+/// Amortized per-sample wire bytes of an embedding frame carrying a
+/// `batch`-row payload — `embedding_wire_bytes(batch, d) / batch`.
+/// Derived from the wire codec, the same single source of truth as
+/// `EmbeddingMsg::bytes`, so the cost model charges exactly what the
+/// broker accounts: the live system sends **one frame per batch**, and
+/// the header/field overhead amortizes across its rows.
+pub fn payload_bytes_per_sample_at(batch: usize, embed_dim: usize) -> f64 {
+    let b = batch.max(1);
+    crate::coordinator::wire::embedding_wire_bytes(b, embed_dim) as f64 / b as f64
+}
+
+/// Worst-case per-sample payload (a single-row frame: the f32 row plus
+/// the full, unamortized frame overhead). Prefer
+/// [`payload_bytes_per_sample_at`] with the real batch size — the
+/// simulator does; this form remains for batch-agnostic estimates.
 pub fn payload_bytes_per_sample(embed_dim: usize) -> f64 {
-    (embed_dim * 4 + 16) as f64
+    payload_bytes_per_sample_at(1, embed_dim)
 }
 
 #[allow(unused)]
@@ -221,9 +234,47 @@ mod tests {
         }
     }
 
+    /// One source of truth for payload sizes: the profiler's per-sample
+    /// estimate, `EmbeddingMsg::bytes`/`GradientMsg::bytes`, and the wire
+    /// encoder must all agree (regression for the old hand-rolled
+    /// `+16`-byte framing constant).
     #[test]
-    fn payload_size_linear_in_embed() {
+    fn payload_size_is_codec_derived() {
+        use crate::coordinator::wire::{self, Frame};
+        use crate::coordinator::{EmbeddingMsg, GradientMsg};
+
         assert!(payload_bytes_per_sample(64) > payload_bytes_per_sample(32));
-        assert_eq!(payload_bytes_per_sample(32), (32 * 4 + 16) as f64);
+        // Frame overhead amortizes over the batch: per-sample cost at the
+        // real batch size approaches the raw row cost (4 bytes/f32) and
+        // matches the exact codec size of the whole frame.
+        for &(batch, d) in &[(1usize, 32usize), (32, 32), (256, 64)] {
+            let per = payload_bytes_per_sample_at(batch, d);
+            assert_eq!(per * batch as f64, wire::embedding_wire_bytes(batch, d) as f64);
+            assert!(per >= (d * 4) as f64);
+        }
+        assert!(payload_bytes_per_sample_at(256, 32) < payload_bytes_per_sample_at(1, 32));
+        for d in [1usize, 8, 32, 64] {
+            assert_eq!(payload_bytes_per_sample(d), wire::embedding_wire_bytes(1, d) as f64);
+            let m = EmbeddingMsg {
+                batch_id: 0,
+                party: 0,
+                generation: 0,
+                z: Matrix::zeros(1, d),
+                produced_at_us: 0,
+                param_version: 0,
+            };
+            assert_eq!(m.bytes() as f64, payload_bytes_per_sample(d));
+            assert_eq!(m.bytes(), wire::encode(&Frame::Embedding(m.clone())).len() as u64);
+            let g = GradientMsg {
+                batch_id: 0,
+                party: 0,
+                generation: 0,
+                grad_z: Matrix::zeros(1, d),
+                produced_at_us: 0,
+                loss: 0.0,
+            };
+            assert_eq!(g.bytes(), wire::encode(&Frame::Gradient(g.clone())).len() as u64);
+            assert_eq!(g.bytes(), m.bytes());
+        }
     }
 }

@@ -1,0 +1,183 @@
+//! Genuine two-process-shaped training over the TCP transport.
+//!
+//! Each test runs the two CLI roles as in-process threads connected over
+//! a real loopback socket: one thread is `serve-passive` (the passive
+//! party: its own data slice, replicas, parameter server, DP mechanism),
+//! the other is `train --connect` (the active party: labels, broker,
+//! ledger, supervisor). Nothing is shared between them but the wire.
+//!
+//! CI runs this file under `--release` in the `transport-smoke` job with
+//! a watchdog timeout, mirroring the `retry-stress` pattern.
+
+use pubsub_vfl::config::ExperimentConfig;
+use pubsub_vfl::coordinator::serve_passive_listener;
+use pubsub_vfl::experiment::{Experiment, ExperimentOutcome};
+use pubsub_vfl::metrics::Metrics;
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// The shared experiment description both roles materialize from. Any
+/// difference here would be a different dataset — both threads must call
+/// this with the same arguments.
+fn base_cfg(passive_parties: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.seed = 9;
+    cfg.dataset.name = "synthetic".into();
+    cfg.dataset.samples = 400;
+    cfg.dataset.features = 12;
+    cfg.dataset.active_features = 4;
+    cfg.passive_parties = passive_parties;
+    cfg.hidden = 16;
+    cfg.embed_dim = 8;
+    cfg.train.batch_size = 32;
+    cfg.train.epochs = 5;
+    cfg.train.lr = 0.05;
+    cfg.train.target_accuracy = 2.0; // unreachable: run every epoch
+    cfg.train.t_ddl_ms = 2000;
+    cfg.parties.active_workers = 2;
+    cfg.parties.passive_workers = 2;
+    cfg
+}
+
+/// Spawn the passive role on its own thread: prepare the (identical)
+/// dataset, then serve one session on `listener`. Returns the passive
+/// party's metrics via the join handle.
+fn spawn_passive_role(
+    cfg: ExperimentConfig,
+    listener: TcpListener,
+) -> std::thread::JoinHandle<(pubsub_vfl::coordinator::PassiveSessionReport, Arc<Metrics>)> {
+    std::thread::spawn(move || {
+        let prepared = Experiment::from_config(cfg).prepare().expect("passive prepare");
+        let metrics = Arc::new(Metrics::new());
+        let report = serve_passive_listener(
+            &listener,
+            prepared.config(),
+            prepared.spec(),
+            Arc::clone(prepared.engine()),
+            prepared.train_data(),
+            Arc::clone(&metrics),
+        )
+        .expect("serve-passive session");
+        (report, metrics)
+    })
+}
+
+/// Run the active role (train --connect) on its own thread so a protocol
+/// deadlock fails the test instead of hanging it.
+fn run_active_with_watchdog(
+    cfg: ExperimentConfig,
+    timeout: Duration,
+) -> (ExperimentOutcome, Arc<Metrics>) {
+    let h = std::thread::spawn(move || {
+        let prepared = Experiment::from_config(cfg).prepare().expect("active prepare");
+        let out = prepared.run().expect("tcp training run");
+        (out.metrics.clone(), out)
+    });
+    let deadline = Instant::now() + timeout;
+    while !h.is_finished() {
+        assert!(
+            Instant::now() < deadline,
+            "two-process loopback session hung (no progress within {timeout:?})"
+        );
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    let (metrics, out) = h.join().unwrap();
+    (out, metrics)
+}
+
+/// Happy path: two roles over loopback, k = 1. The exactly-once
+/// invariant must hold (`passive_bwd == epochs × n_batches × k`), the
+/// model must learn, and the run must track an identically-configured
+/// in-proc session.
+#[test]
+fn tcp_loopback_two_process_training_exactly_once() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+
+    let passive = spawn_passive_role(base_cfg(1), listener);
+
+    let mut active_cfg = base_cfg(1);
+    active_cfg.transport.connect = addr;
+    active_cfg.transport.kind = pubsub_vfl::config::TransportKind::Tcp;
+    let (out, active_metrics) = run_active_with_watchdog(active_cfg, Duration::from_secs(300));
+    let (report, passive_metrics) = passive.join().unwrap();
+
+    // 400 samples → 280 train rows → 8 full batches of 32; 5 epochs, k=1.
+    let expected: u64 = 5 * 8;
+    assert_eq!(report.epochs_served, 5);
+    assert_eq!(report.bwd_applied, expected, "exactly-once across the wire");
+    assert_eq!(passive_metrics.counter("passive_bwd"), expected);
+    assert_eq!(active_metrics.counter("bwd_acked"), expected);
+    assert_eq!(out.session.epochs_run, 5);
+    assert!(out.session.loss_curve.iter().all(|&(_, l)| l.is_finite()));
+    assert!(
+        out.session.loss_curve[4].1 < out.session.loss_curve[0].1,
+        "loss must decrease: {:?}",
+        out.session.loss_curve
+    );
+    // Embeddings really crossed the wire (passive-side tx accounting).
+    assert_eq!(passive_metrics.counter("emb_published"), report.emb_published);
+    assert!(report.emb_published >= expected);
+    // Wire-cost series recorded on the active side.
+    assert!(!active_metrics.series("wire_tx_mb").is_empty());
+    assert!(active_metrics.comm_mb() > 0.0);
+
+    // Same config in-proc: the distributed run must match its trajectory.
+    let inproc = Experiment::from_config(base_cfg(1))
+        .prepare()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(inproc.metrics.counter("passive_bwd"), expected);
+    assert!(
+        inproc.session.loss_curve[4].1 < inproc.session.loss_curve[0].1,
+        "in-proc loss must decrease"
+    );
+    let auc_tcp = out.session.final_metric;
+    let auc_inproc = inproc.session.final_metric;
+    assert!(auc_tcp > 0.7, "tcp AUC = {auc_tcp}");
+    assert!(auc_inproc > 0.7, "inproc AUC = {auc_inproc}");
+    assert!(
+        (auc_tcp - auc_inproc).abs() < 0.15,
+        "transports diverged: tcp {auc_tcp} vs inproc {auc_inproc}"
+    );
+}
+
+/// The storm variant of the acceptance criterion: tight buffers and a
+/// short deadline over a real socket with two passive parties — constant
+/// evictions, join failures, cross-wire requeues — and still exactly
+/// `epochs × n_batches × k` backward passes.
+#[test]
+fn tcp_loopback_retry_storm_exactly_once() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+
+    let mut cfg = base_cfg(2);
+    cfg.train.t_ddl_ms = 2;
+    cfg.train.buffer_p = 1;
+    cfg.train.buffer_q = 1;
+    cfg.parties.active_workers = 4;
+    cfg.parties.passive_workers = 4;
+
+    let passive = spawn_passive_role(cfg.clone(), listener);
+
+    let mut active_cfg = cfg;
+    active_cfg.transport.connect = addr;
+    active_cfg.transport.kind = pubsub_vfl::config::TransportKind::Tcp;
+    let (out, active_metrics) = run_active_with_watchdog(active_cfg, Duration::from_secs(300));
+    let (report, passive_metrics) = passive.join().unwrap();
+
+    // 5 epochs × 8 full batches × k=2 parties, exactly once — across any
+    // number of deadline expiries, evictions, and wire requeues.
+    let expected: u64 = 5 * 8 * 2;
+    assert_eq!(passive_metrics.counter("passive_bwd"), expected);
+    assert_eq!(report.bwd_applied, expected);
+    assert_eq!(active_metrics.counter("bwd_acked"), expected);
+    assert_eq!(out.session.epochs_run, 5);
+    assert!(
+        out.session.loss_curve.iter().all(|&(_, l)| l.is_finite()),
+        "loss diverged: {:?}",
+        out.session.loss_curve
+    );
+}
