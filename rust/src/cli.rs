@@ -143,6 +143,11 @@ pub fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     }
     cfg.transport.connect_timeout_s =
         args.get_usize("connect-timeout", cfg.transport.connect_timeout_s as usize) as u64;
+    if let Some(fp) = args.get("fault-profile") {
+        cfg.transport.fault_profile = fp.to_string();
+    }
+    cfg.transport.fault_seed =
+        args.get_usize("fault-seed", cfg.transport.fault_seed as usize) as u64;
     cfg.validate().map_err(|e| anyhow!("{e}"))?;
     Ok(cfg)
 }
@@ -157,7 +162,9 @@ COMMANDS:
   train         run one experiment          [--arch pubsub --dataset bank --engine host|xla
                                              --backend naive|tiled|threaded
                                              --batch N --epochs N --lr F --mu F --config file.toml
-                                             --transport inproc|tcp --connect HOST:PORT]
+                                             --transport inproc|tcp --connect HOST:PORT
+                                             --fault-profile lossy_lan|slow_passive|flaky_wire|
+                                               partition_heal|corrupt_frames --fault-seed N]
   serve-passive host the passive party      [--listen HOST:PORT --config file.toml --samples N]
                 (two-process training: start this first, then `train
                  --connect` from the active party with the same config)
@@ -440,6 +447,27 @@ mod tests {
         let cfg = config_from_args(&l).unwrap();
         assert_eq!(cfg.transport.listen, "0.0.0.0:7005");
         assert_eq!(cfg.transport.kind, TransportKind::InProc, "--listen alone must not force tcp");
+    }
+
+    #[test]
+    fn fault_profile_flags_parse_into_config() {
+        let a = Args::parse(&argv(
+            "train --connect 127.0.0.1:7001 --fault-profile lossy_lan --fault-seed 123",
+        ));
+        let cfg = config_from_args(&a).unwrap();
+        assert_eq!(cfg.transport.fault_profile, "lossy_lan");
+        assert_eq!(cfg.transport.fault_seed, 123);
+        // No flag: no faults, seed 0 (derive from experiment seed).
+        let none = config_from_args(&Args::parse(&argv("train"))).unwrap();
+        assert!(none.transport.fault_profile.is_empty());
+        assert_eq!(none.transport.fault_seed, 0);
+        // Unknown profile rejected at validation.
+        let bad = Args::parse(&argv("train --fault-profile hurricane --connect 127.0.0.1:7001"));
+        assert!(config_from_args(&bad).is_err());
+        // A known profile without the tcp transport is rejected rather
+        // than silently running fault-free.
+        let inproc = Args::parse(&argv("train --fault-profile lossy_lan"));
+        assert!(config_from_args(&inproc).is_err());
     }
 
     #[test]

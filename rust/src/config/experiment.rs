@@ -185,6 +185,15 @@ pub struct TransportConfig {
     /// Seconds to keep retrying the initial connect + handshake
     /// (tolerates startup skew between the two processes).
     pub connect_timeout_s: u64,
+    /// Chaos-harness fault profile armed on the training side's link
+    /// (a [`crate::testkit::Scenario`] name: `lossy_lan`, `slow_passive`,
+    /// `flaky_wire`, `partition_heal`, `corrupt_frames`); empty = no
+    /// faults. TOML `[transport.faults] profile`, CLI `--fault-profile`.
+    pub fault_profile: String,
+    /// Seed for the deterministic fault schedule (0 = derive from the
+    /// experiment seed). Re-running with the same seed replays the same
+    /// schedule. TOML `[transport.faults] seed`, CLI `--fault-seed`.
+    pub fault_seed: u64,
 }
 
 impl Default for TransportConfig {
@@ -194,6 +203,8 @@ impl Default for TransportConfig {
             connect: String::new(),
             listen: "127.0.0.1:7878".into(),
             connect_timeout_s: 30,
+            fault_profile: String::new(),
+            fault_seed: 0,
         }
     }
 }
@@ -376,6 +387,10 @@ impl ExperimentConfig {
         c.transport.connect_timeout_s = doc
             .i64_or("transport", "connect_timeout_s", c.transport.connect_timeout_s as i64)
             .max(1) as u64;
+        c.transport.fault_profile =
+            doc.str_or("transport.faults", "profile", &c.transport.fault_profile);
+        c.transport.fault_seed =
+            doc.i64_or("transport.faults", "seed", c.transport.fault_seed as i64) as u64;
         c.validate()?;
         Ok(c)
     }
@@ -406,6 +421,25 @@ impl ExperimentConfig {
         }
         if self.bandwidth_mbps <= 0.0 {
             return inv("bandwidth must be positive".into());
+        }
+        if !self.transport.fault_profile.is_empty() {
+            if crate::testkit::Scenario::parse(&self.transport.fault_profile).is_none() {
+                return inv(format!(
+                    "unknown fault profile '{}' (lossy_lan|slow_passive|flaky_wire|\
+                     partition_heal|corrupt_frames)",
+                    self.transport.fault_profile
+                ));
+            }
+            // The chaos harness decorates the training side's link; an
+            // in-proc session has no link, so accepting the profile there
+            // would silently run fault-free.
+            if self.transport.kind != TransportKind::Tcp {
+                return inv(format!(
+                    "fault profile '{}' requires transport.kind = tcp \
+                     (the harness wraps the training side's link)",
+                    self.transport.fault_profile
+                ));
+            }
         }
         Ok(())
     }
@@ -535,6 +569,38 @@ bandwidth_mbps = 500.0
         assert_eq!(c.transport.listen, "0.0.0.0:7878");
         assert_eq!(c.transport.connect_timeout_s, 5);
         assert!(ExperimentConfig::from_toml("[transport]\nkind = \"pigeon\"").is_err());
+    }
+
+    #[test]
+    fn fault_profile_section_parses_and_validates() {
+        let d = ExperimentConfig::from_toml("").unwrap();
+        assert!(d.transport.fault_profile.is_empty());
+        assert_eq!(d.transport.fault_seed, 0);
+        let c = ExperimentConfig::from_toml(
+            "[transport]\nkind = \"tcp\"\nconnect = \"10.0.0.2:7878\"\n\n\
+             [transport.faults]\nprofile = \"flaky_wire\"\nseed = 99",
+        )
+        .unwrap();
+        assert_eq!(c.transport.fault_profile, "flaky_wire");
+        assert_eq!(c.transport.fault_seed, 99);
+        // Every preset name is accepted on the tcp transport...
+        for s in crate::testkit::Scenario::ALL {
+            let toml = format!(
+                "[transport]\nkind = \"tcp\"\nconnect = \"h:1\"\n\n\
+                 [transport.faults]\nprofile = \"{}\"",
+                s.name()
+            );
+            assert!(ExperimentConfig::from_toml(&toml).is_ok(), "{s}");
+        }
+        // ...unknown names are rejected at validation...
+        let bad = ExperimentConfig::from_toml(
+            "[transport]\nkind = \"tcp\"\n\n[transport.faults]\nprofile = \"packet-storm\"",
+        );
+        assert!(bad.is_err());
+        // ...and a profile without the tcp transport is rejected rather
+        // than silently running fault-free.
+        let inproc = ExperimentConfig::from_toml("[transport.faults]\nprofile = \"lossy_lan\"");
+        assert!(inproc.is_err(), "fault profile on inproc must be rejected");
     }
 
     #[test]

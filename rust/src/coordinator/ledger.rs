@@ -324,28 +324,64 @@ impl BatchLedger {
     /// done or `generation` was stale (someone else requeued first).
     pub fn requeue_all(&self, batch_id: u64, generation: u64) -> Option<u64> {
         let mut s = self.state.lock().unwrap();
-        let next_gen = s.gen_seq + 1;
-        let e = s.entries.get_mut(&batch_id)?;
-        if e.generation != generation || e.stage == BatchStage::Done {
+        if s.entries.get(&batch_id)?.generation != generation {
             return None;
         }
-        e.generation = next_gen;
-        e.stage = BatchStage::Queued;
-        e.published.fill(false);
-        let mut to_queue = Vec::with_capacity(self.k);
-        for p in 0..self.k {
-            if !e.queued[p] {
-                e.queued[p] = true;
-                to_queue.push(p);
+        requeue_locked(&mut s, self.k, batch_id)
+    }
+
+    /// Deadline-sweep recovery: fully reassign **every** batch not yet
+    /// `Done`, bumping each one's generation. The distributed supervisor
+    /// calls this when an epoch stops making progress — a lost frame (a
+    /// hostile network, a fault-injecting transport) can strand a batch
+    /// in any intermediate stage with no in-flight message left to drive
+    /// it, and no consumer-side deadline will ever fire for work that
+    /// never arrived. Re-driving from `Queued` is always safe: generation
+    /// checks drop every stale message of the old attempt, and `bwd_done`
+    /// survives, so re-delivered work is deduplicated (the passive side
+    /// re-acks instead of re-applying). Each reassignment counts as one
+    /// retry; returns `(batch_id, new_generation)` per batch so the
+    /// caller can purge stale broker state and announce the retries.
+    pub fn requeue_stuck(&self) -> Vec<(u64, u64)> {
+        let mut s = self.state.lock().unwrap();
+        let ids: Vec<u64> = s.entries.keys().copied().collect();
+        let mut out = Vec::new();
+        for id in ids {
+            if let Some(new_gen) = requeue_locked(&mut s, self.k, id) {
+                out.push((id, new_gen));
             }
         }
-        for p in to_queue {
-            s.queues[p].push_back(batch_id);
-        }
-        s.gen_seq = next_gen;
-        s.retried += 1;
-        Some(next_gen)
+        out
     }
+}
+
+/// Fully reassign `id` under a fresh generation, within an already-held
+/// state lock — the single implementation behind both
+/// [`BatchLedger::requeue_all`] and [`BatchLedger::requeue_stuck`], so
+/// the two reassignment paths cannot drift. Returns the new generation,
+/// or `None` if the batch is missing or already `Done`.
+fn requeue_locked(s: &mut LedgerState, k: usize, id: u64) -> Option<u64> {
+    let next_gen = s.gen_seq + 1;
+    let e = s.entries.get_mut(&id)?;
+    if e.stage == BatchStage::Done {
+        return None;
+    }
+    e.generation = next_gen;
+    e.stage = BatchStage::Queued;
+    e.published.fill(false);
+    let mut to_queue = Vec::with_capacity(k);
+    for p in 0..k {
+        if !e.queued[p] {
+            e.queued[p] = true;
+            to_queue.push(p);
+        }
+    }
+    for p in to_queue {
+        s.queues[p].push_back(id);
+    }
+    s.gen_seq = next_gen;
+    s.retried += 1;
+    Some(next_gen)
 }
 
 #[cfg(test)]
@@ -543,6 +579,78 @@ mod tests {
         assert_eq!(l2.stage(20), Some(BatchStage::Done));
         assert_eq!(l2.next_embed_job(0).unwrap().batch_id, 21);
         assert!(l2.next_embed_job(0).is_none(), "done batch 20 must be skipped");
+    }
+
+    /// The recovery sweep re-drives every non-`Done` batch under a fresh
+    /// generation — whatever stage a lost frame stranded it in — while
+    /// finished batches and already-counted backward passes stay
+    /// untouched (exactly-once survives the sweep).
+    #[test]
+    fn requeue_stuck_redrives_only_unfinished_batches() {
+        let l = ledger_with(2, &[10, 11, 12]);
+        // Batch 10: fully done.
+        let j = l.next_embed_job(0).unwrap();
+        l.next_embed_job(1).unwrap();
+        assert_eq!(j.batch_id, 10);
+        assert!(l.begin_publish(10, j.generation, 0));
+        assert!(l.begin_publish(10, j.generation, 1));
+        l.begin_join(10, j.generation).unwrap();
+        assert!(l.mark_stepped(10, j.generation));
+        assert!(l.claim_bwd(10, j.generation, 0).is_some());
+        l.finish_bwd();
+        assert!(l.claim_bwd(10, j.generation, 1).is_some());
+        l.finish_bwd();
+        // Batch 11: stepped, party 0 counted, party 1's gradient "lost".
+        let a = l.next_embed_job(0).unwrap();
+        l.next_embed_job(1).unwrap();
+        assert_eq!(a.batch_id, 11);
+        assert!(l.begin_publish(11, a.generation, 0));
+        assert!(l.begin_publish(11, a.generation, 1));
+        l.begin_join(11, a.generation).unwrap();
+        assert!(l.mark_stepped(11, a.generation));
+        assert!(l.claim_bwd(11, a.generation, 0).is_some());
+        l.finish_bwd();
+        // Batch 12: its embed jobs were popped but every frame was lost.
+        let b = l.next_embed_job(0).unwrap();
+        l.next_embed_job(1).unwrap();
+        assert_eq!(b.batch_id, 12);
+
+        let retried_before = l.retried();
+        let kicked = l.requeue_stuck();
+        let mut ids: Vec<u64> = kicked.iter().map(|&(id, _)| id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![11, 12], "done batch must not be resurrected");
+        assert_eq!(l.retried(), retried_before + 2);
+        for &(id, new_gen) in &kicked {
+            assert_eq!(l.generation(id), Some(new_gen));
+            assert_eq!(l.stage(id), Some(BatchStage::Queued));
+        }
+        // Old-generation messages of the stuck batches are now dead.
+        assert!(!l.begin_publish(11, a.generation, 1));
+        assert!(l.claim_bwd(12, b.generation, 0).is_none());
+
+        // The re-driven attempts drain, with party 0 of batch 11 already
+        // counted (no double-credit, no underflow).
+        assert_eq!(l.remaining_bwd(), 3);
+        for party in 0..2 {
+            while let Some(job) = l.next_embed_job(party) {
+                assert!(l.begin_publish(job.batch_id, job.generation, party));
+            }
+        }
+        for id in [11u64, 12] {
+            let g = l.generation(id).unwrap();
+            l.begin_join(id, g).unwrap();
+            assert!(l.mark_stepped(id, g));
+            for party in 0..2 {
+                if l.claim_bwd(id, g, party).is_some() {
+                    l.finish_bwd();
+                }
+            }
+        }
+        assert_eq!(l.remaining_bwd(), 0);
+        assert!(l.epoch_done());
+        // A sweep over a drained epoch is a no-op.
+        assert!(l.requeue_stuck().is_empty());
     }
 
     #[test]

@@ -131,10 +131,12 @@ pub fn reached(task: Task, metric: f64, target: f64) -> bool {
 /// Legacy explicit-argument entry point; the `Trainer` impl in
 /// `experiment::trainer` calls [`train_pubsub_session`] directly.
 ///
-/// Always runs **in-process**, whatever `cfg.transport` says — the
-/// infallible signature predates the transport layer; distributed runs
-/// go through [`train_pubsub_session`] (or the `Experiment` API), which
-/// surface connect/handshake failures as errors.
+/// Always runs **in-process**, whatever `cfg.transport` says —
+/// distributed runs go through [`train_pubsub_session`] (or the
+/// `Experiment` API). `Trainer::train` returns `Result` since the
+/// transport refactor, so failures are propagated rather than panicked
+/// (the old `expect` here turned any future in-proc failure mode into a
+/// crash).
 pub fn train_pubsub(
     engine: Arc<dyn SplitEngine>,
     spec: &SplitModelSpec,
@@ -142,12 +144,12 @@ pub fn train_pubsub(
     test: &VerticalDataset,
     cfg: &ExperimentConfig,
     metrics: Arc<Metrics>,
-) -> SessionResult {
+) -> anyhow::Result<SessionResult> {
     let mut cfg = cfg.clone();
     cfg.transport.kind = crate::config::TransportKind::InProc;
     let opts = RunOptions::default();
     let ctx = TrainCtx { engine, spec, train, test, cfg: &cfg, metrics, opts: &opts };
-    train_pubsub_session(&ctx).expect("in-process session cannot fail to start")
+    train_pubsub_session(&ctx)
 }
 
 /// Mean of parameter replicas.
@@ -170,6 +172,56 @@ mod tests {
     use crate::data::{make_classification, ClassificationOpts};
     use crate::model::HostSplitModel;
     use crate::util::Rng;
+
+    /// Regression for the old
+    /// `expect("in-process session cannot fail to start")`: transport
+    /// failures must surface as `Err`, never a panic — and the legacy
+    /// in-proc shim keeps working (it forces `inproc`, so the same
+    /// misconfiguration that fails the fallible path trains fine).
+    #[test]
+    fn transport_failures_propagate_instead_of_panicking() {
+        let mut rng = Rng::new(5);
+        let ds = make_classification(
+            &ClassificationOpts {
+                samples: 96,
+                features: 8,
+                informative: 6,
+                redundant: 1,
+                class_sep: 1.5,
+                flip_y: 0.0,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        let vtr = VerticalDataset::split_two(&ds, 4);
+        let spec = SplitModelSpec::build(crate::config::ModelSize::Small, 4, &[4], 8, 4);
+        let engine: Arc<dyn SplitEngine> =
+            Arc::new(HostSplitModel::new(spec.clone(), Task::BinaryClassification));
+        let mut cfg = ExperimentConfig::default();
+        cfg.train.batch_size = 32;
+        cfg.train.epochs = 1;
+        cfg.arch = crate::config::Architecture::PubSub;
+        // tcp with no connect address: the fallible path must error out.
+        cfg.transport.kind = crate::config::TransportKind::Tcp;
+        cfg.transport.connect = String::new();
+        let opts = RunOptions::default();
+        let ctx = TrainCtx {
+            engine: Arc::clone(&engine),
+            spec: &spec,
+            train: &vtr,
+            test: &vtr,
+            cfg: &cfg,
+            metrics: Arc::new(Metrics::new()),
+            opts: &opts,
+        };
+        let err = crate::coordinator::train_pubsub_session(&ctx)
+            .expect_err("tcp without an address must fail");
+        assert!(err.to_string().contains("transport.connect"), "got: {err}");
+        // The legacy shim forces in-proc and returns Ok for the same cfg.
+        let r = train_pubsub(engine, &spec, &vtr, &vtr, &cfg, Arc::new(Metrics::new()))
+            .expect("in-proc shim must still train");
+        assert_eq!(r.epochs_run, 1);
+    }
 
     #[test]
     fn evaluate_chunks_and_reached() {

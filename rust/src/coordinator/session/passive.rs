@@ -557,20 +557,51 @@ pub fn serve_passive_session(
                             metrics.inc("wire_bad_party", 1);
                             continue;
                         }
-                        let rows = {
+                        let state = {
                             let mut tb = table.lock().unwrap();
-                            tb.get_mut(&batch_id).map(|e| {
-                                if generation > e.gen {
-                                    e.gen = generation;
+                            match tb.get_mut(&batch_id) {
+                                Some(e) => {
+                                    if generation > e.gen {
+                                        e.gen = generation;
+                                    }
+                                    Some((
+                                        Arc::clone(&e.rows),
+                                        e.done[party],
+                                        e.done.iter().all(|&d| d),
+                                    ))
                                 }
-                                Arc::clone(&e.rows)
-                            })
+                                None => None,
+                            }
                         };
-                        match rows {
-                            Some(rows) => jobs[party]
-                                .lock()
-                                .unwrap()
-                                .push_back(EmbedJob { batch_id, generation, rows }),
+                        match state {
+                            Some((rows, done_here, all_done)) => {
+                                // A re-driven job for work this party
+                                // already applied means the original ack
+                                // was lost on the wire: retransmit it —
+                                // `credit_bwd` on the active side dedupes,
+                                // so re-acking is always safe and unblocks
+                                // the epoch.
+                                if done_here {
+                                    metrics.inc("bwd_ack_resent", 1);
+                                    let _ = link.send(Frame::BwdDone {
+                                        batch_id,
+                                        party: party as u32,
+                                        ps_version: ps[party].version(),
+                                    });
+                                }
+                                // Still republish the embedding while any
+                                // sibling party is owed its backward pass:
+                                // the re-driven join needs every party's
+                                // embedding, and a done party's duplicate
+                                // gradient is dropped at the gate above.
+                                if !all_done {
+                                    jobs[party].lock().unwrap().push_back(EmbedJob {
+                                        batch_id,
+                                        generation,
+                                        rows,
+                                    });
+                                }
+                            }
                             None => metrics.inc("wire_unknown_batch", 1),
                         }
                     }
@@ -583,15 +614,30 @@ pub fn serve_passive_session(
                         metrics.inc("grad_received", 1);
                         // Decode-boundary generation gate: frames from a
                         // superseded attempt (or finished work) are
-                        // rejected before they reach a worker.
-                        let ok = {
+                        // rejected before they reach a worker. A gradient
+                        // for work this party *already applied* instead
+                        // retransmits the ack — the duplicate means the
+                        // active re-drove the batch because the original
+                        // `BwdDone` never arrived.
+                        let state = {
                             let tb = table.lock().unwrap();
-                            tb.get(&g.batch_id)
-                                .is_some_and(|e| g.generation == e.gen && !e.done[g.party])
+                            tb.get(&g.batch_id).map(|e| (g.generation == e.gen, e.done[g.party]))
                         };
-                        if !ok {
-                            metrics.inc("wire_stale_rejected", 1);
-                            continue;
+                        match state {
+                            Some((_, true)) => {
+                                metrics.inc("bwd_ack_resent", 1);
+                                let _ = link.send(Frame::BwdDone {
+                                    batch_id: g.batch_id,
+                                    party: g.party as u32,
+                                    ps_version: ps[g.party].version(),
+                                });
+                                continue;
+                            }
+                            Some((true, false)) => {}
+                            _ => {
+                                metrics.inc("wire_stale_rejected", 1);
+                                continue;
+                            }
                         }
                         let party = g.party;
                         let id = g.batch_id;

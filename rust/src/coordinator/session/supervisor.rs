@@ -26,7 +26,9 @@ use super::super::broker::Broker;
 use super::super::channel::SubResult;
 use super::super::ledger::BatchLedger;
 use super::super::ps::{ParameterServer, PsMode, SemiAsyncSchedule};
-use super::super::transport::{Link, LinkRecv, LinkStatsSnapshot, TcpLink, TransportKind};
+use super::super::transport::{
+    FaultStatsSnapshot, Link, LinkRecv, LinkStatsSnapshot, TcpLink, TransportKind,
+};
 use super::super::wire::Frame;
 use super::active::{run_active_worker, ActiveReplica, ActiveShared, PassiveVersionView};
 use super::passive::{
@@ -70,7 +72,19 @@ pub fn train_pubsub_session(ctx: &TrainCtx<'_>) -> Result<SessionResult> {
             let timeout = Duration::from_secs(ctx.cfg.transport.connect_timeout_s.max(1));
             let link = TcpLink::connect(&addr, timeout)
                 .map_err(|e| anyhow!("cannot connect to passive party at {addr}: {e}"))?;
-            train_pubsub_over_link(ctx, Arc::new(link))
+            // Chaos harness: a configured fault profile decorates the
+            // link with a seeded, deterministic fault schedule.
+            let fault_seed = if ctx.cfg.transport.fault_seed != 0 {
+                ctx.cfg.transport.fault_seed
+            } else {
+                ctx.cfg.seed
+            };
+            let link = crate::testkit::wrap_link_named(
+                Arc::new(link),
+                &ctx.cfg.transport.fault_profile,
+                fault_seed,
+            )?;
+            train_pubsub_over_link(ctx, link)
         }
     }
 }
@@ -498,6 +512,8 @@ pub fn train_pubsub_over_link(ctx: &TrainCtx<'_>, link: Arc<dyn Link>) -> Result
     // Previous link-stats snapshot, so the per-epoch wire series record
     // deltas rather than cumulative totals.
     let mut wire_prev = LinkStatsSnapshot::default();
+    // Same, for the injected-fault counters of a chaos-decorated link.
+    let mut fault_prev = FaultStatsSnapshot::default();
     let mut eval_ws = Workspace::new(linalg::worker_backend(backend_kind, 1));
     let sw = Stopwatch::start();
 
@@ -773,9 +789,21 @@ pub fn train_pubsub_over_link(ctx: &TrainCtx<'_>, link: Arc<dyn Link>) -> Result
                 ledger.install_epoch(epoch, &batches);
 
                 // Drain, with a stall watchdog so a wire bug surfaces as
-                // an error instead of a hang.
+                // an error instead of a hang, and a deadline sweep so a
+                // *lossy* wire (frames dropped by the network or a chaos
+                // harness) re-drives stranded batches instead of waiting
+                // out the watchdog: unlike the consumer-side T_ddl, the
+                // sweep also recovers work whose frames never arrived
+                // anywhere. Safe by ledger construction — generation
+                // bumps kill the old attempt, `bwd_done` dedupes
+                // re-delivered work, and the passive re-acks applied
+                // batches — so a spurious sweep costs only wasted compute.
+                let recovery_base = (t_ddl * 2).max(Duration::from_millis(200));
+                let recovery_cap = Duration::from_secs(5);
+                let mut recovery = recovery_base;
                 let mut last_remaining = usize::MAX;
-                let mut last_change = Instant::now();
+                let mut last_progress = Instant::now();
+                let mut last_sweep = Instant::now();
                 loop {
                     let rem = ledger.remaining_bwd();
                     if rem == 0 {
@@ -783,13 +811,36 @@ pub fn train_pubsub_over_link(ctx: &TrainCtx<'_>, link: Arc<dyn Link>) -> Result
                     }
                     if rem != last_remaining {
                         last_remaining = rem;
-                        last_change = Instant::now();
+                        last_progress = Instant::now();
+                        last_sweep = last_progress;
+                        recovery = recovery_base;
                     }
-                    if last_change.elapsed() > STALL_TIMEOUT {
+                    if last_progress.elapsed() > STALL_TIMEOUT {
                         bail!(
                             "epoch {epoch} stalled: {rem} backward passes outstanding \
                              with no progress for {STALL_TIMEOUT:?}"
                         );
+                    }
+                    if last_progress.elapsed() >= recovery && last_sweep.elapsed() >= recovery {
+                        last_sweep = Instant::now();
+                        // Exponential backoff: if the previous sweep did
+                        // not unstick the epoch, give in-flight attempts
+                        // progressively longer before re-driving them — a
+                        // slow-but-healthy link whose round trip exceeds
+                        // the base interval must not be livelocked by
+                        // sweeps invalidating every attempt mid-flight.
+                        recovery = (recovery * 2).min(recovery_cap);
+                        let kicked = ledger.requeue_stuck();
+                        if !kicked.is_empty() {
+                            metrics.inc("recovery_sweeps", 1);
+                            for &(batch_id, new_gen) in &kicked {
+                                broker.purge_stale(batch_id, new_gen);
+                                opts.emit(RunEvent::BatchRetried {
+                                    epoch: ledger.epoch(),
+                                    batch_id,
+                                });
+                            }
+                        }
                     }
                     if link_down.load(Ordering::Relaxed) {
                         bail!("link closed mid-epoch ({rem} backward passes outstanding)");
@@ -855,6 +906,36 @@ pub fn train_pubsub_over_link(ctx: &TrainCtx<'_>, link: Arc<dyn Link>) -> Result
                 );
                 wire_prev = st;
 
+                // Injected-fault counters (chaos-decorated links only):
+                // the same per-epoch delta treatment, so a resilience run
+                // reads its fault pressure next to its wire cost.
+                if let Some(fs) = link.fault_stats() {
+                    metrics.push_point(
+                        "wire_faults_dropped",
+                        epoch as f64,
+                        d(fs.dropped, fault_prev.dropped),
+                    );
+                    metrics.push_point(
+                        "wire_faults_duplicated",
+                        epoch as f64,
+                        d(fs.duplicated, fault_prev.duplicated),
+                    );
+                    let corrupt = d(fs.corrupted, fault_prev.corrupted)
+                        + d(fs.truncated, fault_prev.truncated);
+                    metrics.push_point("wire_faults_corrupted", epoch as f64, corrupt);
+                    metrics.push_point(
+                        "wire_faults_reordered",
+                        epoch as f64,
+                        d(fs.reordered, fault_prev.reordered),
+                    );
+                    metrics.push_point(
+                        "wire_fault_delay_ms",
+                        epoch as f64,
+                        d(fs.delay_injected_us, fault_prev.delay_injected_us) / 1e3,
+                    );
+                    fault_prev = fs;
+                }
+
                 // ---- bookkeeping + eval on fetched parameters --------
                 let (lsum, lcnt) = *epoch_loss.lock().unwrap();
                 let mean_loss = if lcnt > 0 { lsum / lcnt as f64 } else { f64::NAN };
@@ -899,6 +980,9 @@ pub fn train_pubsub_over_link(ctx: &TrainCtx<'_>, link: Arc<dyn Link>) -> Result
     let st = link.stats();
     metrics.set_gauge("wire_tx_frames", st.tx_frames as f64);
     metrics.set_gauge("wire_rx_frames", st.rx_frames as f64);
+    if let Some(fs) = link.fault_stats() {
+        metrics.set_gauge("wire_faults_injected", fs.disrupted() as f64);
+    }
     run_result?;
 
     let (mean_a, mean_t) = mean_active(&active_replicas);
@@ -973,7 +1057,7 @@ mod tests {
     fn pubsub_session_learns() {
         let (engine, spec, tr, te, cfg) = tiny_setup();
         let metrics = Arc::new(Metrics::new());
-        let r = train_pubsub(engine, &spec, &tr, &te, &cfg, Arc::clone(&metrics));
+        let r = train_pubsub(engine, &spec, &tr, &te, &cfg, Arc::clone(&metrics)).unwrap();
         assert_eq!(r.epochs_run, 6);
         assert!(r.final_metric > 0.8, "AUC = {}", r.final_metric);
         // Losses recorded and decreasing overall.
@@ -998,7 +1082,7 @@ mod tests {
         cfg.dp.enabled = true;
         cfg.dp.mu = 4.0;
         let metrics = Arc::new(Metrics::new());
-        let r = train_pubsub(engine, &spec, &tr, &te, &cfg, metrics);
+        let r = train_pubsub(engine, &spec, &tr, &te, &cfg, metrics).unwrap();
         assert!(r.final_metric > 0.65, "AUC with DP = {}", r.final_metric);
     }
 
@@ -1008,7 +1092,7 @@ mod tests {
         cfg.train.target_accuracy = 0.55; // easy target
         cfg.train.epochs = 20;
         let metrics = Arc::new(Metrics::new());
-        let r = train_pubsub(engine, &spec, &tr, &te, &cfg, metrics);
+        let r = train_pubsub(engine, &spec, &tr, &te, &cfg, metrics).unwrap();
         assert!(r.reached_target);
         assert!(r.epochs_run < 20);
     }

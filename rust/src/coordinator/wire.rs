@@ -148,6 +148,25 @@ pub enum Frame {
 }
 
 impl Frame {
+    /// Human-readable frame-type name (diagnostics, fault journals).
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Frame::Hello { .. } => "hello",
+            Frame::HelloAck { .. } => "hello_ack",
+            Frame::EpochInstall { .. } => "epoch_install",
+            Frame::EmbedJob { .. } => "embed_job",
+            Frame::Embedding(_) => "embedding",
+            Frame::Gradient(_) => "gradient",
+            Frame::BwdDone { .. } => "bwd_done",
+            Frame::Requeue { .. } => "requeue",
+            Frame::Barrier { .. } => "barrier",
+            Frame::BarrierDone { .. } => "barrier_done",
+            Frame::FetchParams => "fetch_params",
+            Frame::PassiveParams { .. } => "passive_params",
+            Frame::Shutdown => "shutdown",
+        }
+    }
+
     fn frame_type(&self) -> u8 {
         match self {
             Frame::Hello { .. } => T_HELLO,

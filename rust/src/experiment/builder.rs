@@ -177,6 +177,20 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Arm a chaos-harness fault profile on the training side's link
+    /// (a [`crate::testkit::Scenario`] name; validated at `prepare`).
+    pub fn fault_profile(mut self, name: &str) -> Self {
+        self.cfg.transport.fault_profile = name.to_string();
+        self
+    }
+
+    /// Seed for the deterministic fault schedule (0 = derive from the
+    /// experiment seed). The same seed replays the same schedule.
+    pub fn fault_seed(mut self, seed: u64) -> Self {
+        self.cfg.transport.fault_seed = seed;
+        self
+    }
+
     /// Escape hatch for knobs without a dedicated setter.
     pub fn tune(mut self, f: impl FnOnce(&mut ExperimentConfig)) -> Self {
         f(&mut self.cfg);
@@ -238,6 +252,20 @@ mod tests {
         let err = Experiment::builder().batch_size(0).prepare();
         assert!(err.is_err());
         let err = Experiment::builder().lr(-0.5).prepare();
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn fault_profile_accumulates_and_validates() {
+        let b = Experiment::builder().fault_profile("partition_heal").fault_seed(17);
+        assert_eq!(b.config().transport.fault_profile, "partition_heal");
+        assert_eq!(b.config().transport.fault_seed, 17);
+        // Unknown scenario names fail at prepare, like any invalid knob...
+        let err = Experiment::builder().connect("h:1").fault_profile("tsunami").prepare();
+        assert!(err.is_err());
+        // ...and a profile on a transport with no link to decorate is
+        // rejected rather than silently running fault-free.
+        let err = Experiment::builder().fault_profile("lossy_lan").prepare();
         assert!(err.is_err());
     }
 

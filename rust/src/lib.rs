@@ -50,6 +50,7 @@ pub mod psi;
 pub mod runtime;
 pub mod sim;
 pub mod tensor;
+pub mod testkit;
 pub mod train;
 pub mod util;
 

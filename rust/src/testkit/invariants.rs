@@ -1,0 +1,202 @@
+//! The post-run invariant checker: the conservation laws the
+//! exactly-once ledger guarantees, asserted over a finished session's
+//! metrics regardless of how hostile the transport was.
+//!
+//! Checked laws (violations are collected, not panicked, so a test can
+//! report all of them at once):
+//!
+//! 1. **Conservation** — `passive_bwd == epochs × n_batches × k`: every
+//!    backward pass applied exactly once, across any number of drops,
+//!    duplicates, reorders, and reassignments (no loss, no double-credit).
+//! 2. **Ack conservation** (distributed runs) — the active ledger
+//!    credited exactly the same total (`bwd_acked`), i.e. `remaining_bwd`
+//!    drained to zero every epoch without underflow.
+//! 3. **Completion** — every scheduled epoch ran and recorded a finite
+//!    loss (an underflow or a lost credit shows up here as a stall or a
+//!    short curve).
+//! 4. **Retry accounting** — `retried_batches` matches the observed
+//!    `BatchRetried` events 1:1 (every counted retry was a genuine,
+//!    announced requeue).
+//!
+//! Generation monotonicity and `remaining_bwd` non-underflow are state-
+//! machine-internal laws; they are pinned by the randomized property
+//! suite in `rust/tests/ledger_prop.rs`.
+
+use crate::coordinator::SessionResult;
+use crate::metrics::Metrics;
+
+/// What a run was configured to do — the right-hand side of the
+/// conservation law.
+#[derive(Clone, Copy, Debug)]
+pub struct ExactlyOnceExpectation {
+    pub epochs: u64,
+    pub n_batches: u64,
+    /// Passive party count `k`.
+    pub parties: u64,
+}
+
+impl ExactlyOnceExpectation {
+    /// Total backward passes the session owes: `epochs × n_batches × k`.
+    pub fn expected_bwd(&self) -> u64 {
+        self.epochs * self.n_batches * self.parties
+    }
+}
+
+/// Outcome of an invariant sweep.
+#[derive(Clone, Debug, Default)]
+pub struct InvariantReport {
+    pub violations: Vec<String>,
+    pub checks: usize,
+}
+
+impl InvariantReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    /// Panic with every violation if any law was broken (test helper).
+    pub fn assert_ok(&self, label: &str) {
+        assert!(
+            self.ok(),
+            "invariant violations in '{label}' ({} of {} checks):\n  - {}",
+            self.violations.len(),
+            self.checks,
+            self.violations.join("\n  - ")
+        );
+    }
+
+    fn check(&mut self, ok: bool, msg: impl FnOnce() -> String) {
+        self.checks += 1;
+        if !ok {
+            self.violations.push(msg());
+        }
+    }
+}
+
+/// Sweep the conservation laws over a finished session.
+///
+/// `passive_metrics` is the passive *process*'s registry for distributed
+/// runs (where `passive_bwd` is counted on the far side of the wire);
+/// pass `None` for in-proc sessions, where `active_metrics` holds it.
+/// `observed_retry_events` is the number of `BatchRetried` run events the
+/// caller observed, if it counted them.
+pub fn check_session(
+    exp: &ExactlyOnceExpectation,
+    session: &SessionResult,
+    active_metrics: &Metrics,
+    passive_metrics: Option<&Metrics>,
+    observed_retry_events: Option<u64>,
+) -> InvariantReport {
+    let mut r = InvariantReport::default();
+    let expected = exp.expected_bwd();
+
+    // 1. Conservation of backward passes.
+    let bwd = passive_metrics.unwrap_or(active_metrics).counter("passive_bwd");
+    r.check(bwd == expected, || {
+        format!("passive_bwd = {bwd}, expected epochs×n_batches×k = {expected}")
+    });
+
+    // 2. Ack conservation across the wire.
+    if passive_metrics.is_some() {
+        let acked = active_metrics.counter("bwd_acked");
+        r.check(acked == expected, || {
+            format!("bwd_acked = {acked}, expected {expected} (credit drain mismatch)")
+        });
+    }
+
+    // 3. Completion: every epoch ran, with a finite recorded loss.
+    r.check(session.epochs_run as u64 == exp.epochs, || {
+        format!("epochs_run = {}, expected {}", session.epochs_run, exp.epochs)
+    });
+    r.check(session.loss_curve.len() as u64 == exp.epochs, || {
+        format!("loss curve has {} points, expected {}", session.loss_curve.len(), exp.epochs)
+    });
+    r.check(session.loss_curve.iter().all(|&(_, l)| l.is_finite()), || {
+        format!("non-finite loss in curve: {:?}", session.loss_curve)
+    });
+
+    // 4. Retry accounting: counted retries ↔ announced events, 1:1.
+    if let Some(events) = observed_retry_events {
+        let retried = session.retried_batches as u64;
+        r.check(retried == events, || {
+            format!("retried_batches = {retried} but {events} BatchRetried events observed")
+        });
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{MlpParams, SplitParams};
+    use std::time::Duration;
+
+    fn session(epochs: usize, losses: &[f64], retried: usize) -> SessionResult {
+        SessionResult {
+            params: SplitParams {
+                active: MlpParams::default(),
+                top: MlpParams::default(),
+                passive: vec![],
+            },
+            loss_curve: losses.iter().enumerate().map(|(i, &l)| (i as f64, l)).collect(),
+            metric_curve: vec![],
+            final_metric: 0.9,
+            epochs_run: epochs,
+            reached_target: false,
+            wall: Duration::from_secs(1),
+            retried_batches: retried,
+        }
+    }
+
+    #[test]
+    fn clean_run_passes_every_law() {
+        let exp = ExactlyOnceExpectation { epochs: 2, n_batches: 3, parties: 2 };
+        assert_eq!(exp.expected_bwd(), 12);
+        let active = Metrics::new();
+        active.inc("bwd_acked", 12);
+        let passive = Metrics::new();
+        passive.inc("passive_bwd", 12);
+        let s = session(2, &[0.7, 0.5], 4);
+        let r = check_session(&exp, &s, &active, Some(&passive), Some(4));
+        r.assert_ok("clean");
+        assert!(r.checks >= 5);
+    }
+
+    #[test]
+    fn each_broken_law_is_reported() {
+        let exp = ExactlyOnceExpectation { epochs: 2, n_batches: 3, parties: 1 };
+        // Double-credited backward + short curve + retry mismatch.
+        let active = Metrics::new();
+        active.inc("passive_bwd", 7); // expected 6: one duplicate credit
+        let s = session(1, &[f64::NAN], 3);
+        let r = check_session(&exp, &s, &active, None, Some(2));
+        assert!(!r.ok());
+        let text = r.violations.join("\n");
+        assert!(text.contains("passive_bwd = 7"), "{text}");
+        assert!(text.contains("epochs_run = 1"), "{text}");
+        assert!(text.contains("non-finite loss"), "{text}");
+        assert!(text.contains("retried_batches = 3"), "{text}");
+    }
+
+    #[test]
+    fn distributed_ack_mismatch_detected() {
+        let exp = ExactlyOnceExpectation { epochs: 1, n_batches: 4, parties: 1 };
+        let active = Metrics::new();
+        active.inc("bwd_acked", 3); // one credit lost
+        let passive = Metrics::new();
+        passive.inc("passive_bwd", 4);
+        let s = session(1, &[0.4], 0);
+        let r = check_session(&exp, &s, &active, Some(&passive), None);
+        assert_eq!(r.violations.len(), 1, "{:?}", r.violations);
+        assert!(r.violations[0].contains("bwd_acked = 3"));
+    }
+
+    #[test]
+    #[should_panic(expected = "invariant violations in 'boom'")]
+    fn assert_ok_panics_with_details() {
+        let exp = ExactlyOnceExpectation { epochs: 1, n_batches: 1, parties: 1 };
+        let active = Metrics::new(); // passive_bwd = 0 ≠ 1
+        let s = session(1, &[0.1], 0);
+        check_session(&exp, &s, &active, None, None).assert_ok("boom");
+    }
+}

@@ -1,0 +1,184 @@
+//! Named chaos scenarios: curated [`FaultProfile`] presets, selectable
+//! via `[transport.faults] profile = "..."` in TOML, `--fault-profile`
+//! on the CLI, or [`crate::experiment::ExperimentBuilder::fault_profile`].
+//!
+//! Each preset stresses a different slice of the §4.1 retry surface (see
+//! EXPERIMENTS.md §Resilience for the invariant each exercises):
+//!
+//! | preset           | faults                                              |
+//! |------------------|-----------------------------------------------------|
+//! | `lossy_lan`      | light loss + duplication + reordering + jitter      |
+//! | `slow_passive`   | asymmetric bandwidth cap on the passive→active lane |
+//! | `flaky_wire`     | heavy loss, corruption, duplication, reordering     |
+//! | `partition_heal` | total data-plane loss for a window, then recovery   |
+//! | `corrupt_frames` | corruption/truncation at the wire boundary          |
+
+use super::fault::FaultProfile;
+use std::fmt;
+
+/// A named chaos preset.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scenario {
+    LossyLan,
+    SlowPassive,
+    FlakyWire,
+    PartitionHeal,
+    CorruptFrames,
+}
+
+impl Scenario {
+    pub const ALL: [Scenario; 5] = [
+        Scenario::LossyLan,
+        Scenario::SlowPassive,
+        Scenario::FlakyWire,
+        Scenario::PartitionHeal,
+        Scenario::CorruptFrames,
+    ];
+
+    pub fn parse(s: &str) -> Option<Scenario> {
+        match s.to_ascii_lowercase().replace('-', "_").as_str() {
+            "lossy_lan" => Some(Scenario::LossyLan),
+            "slow_passive" => Some(Scenario::SlowPassive),
+            "flaky_wire" => Some(Scenario::FlakyWire),
+            "partition_heal" => Some(Scenario::PartitionHeal),
+            "corrupt_frames" => Some(Scenario::CorruptFrames),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scenario::LossyLan => "lossy_lan",
+            Scenario::SlowPassive => "slow_passive",
+            Scenario::FlakyWire => "flaky_wire",
+            Scenario::PartitionHeal => "partition_heal",
+            Scenario::CorruptFrames => "corrupt_frames",
+        }
+    }
+
+    /// One-line description (CLI help, docs).
+    pub fn describe(&self) -> &'static str {
+        match self {
+            Scenario::LossyLan => "light loss, duplication, reordering, and jitter",
+            Scenario::SlowPassive => {
+                "asymmetric bandwidth cap on the passive→active lane (heterogeneity)"
+            }
+            Scenario::FlakyWire => "heavy loss + corruption + duplication + reordering",
+            Scenario::PartitionHeal => "total data-plane loss for a window, then heal",
+            Scenario::CorruptFrames => "byte corruption/truncation at the wire boundary",
+        }
+    }
+
+    /// The preset's deterministic schedule for `seed`. The same
+    /// `(scenario, seed)` always yields the same profile, hence the same
+    /// fault schedule — the replay contract.
+    pub fn profile(&self, seed: u64) -> FaultProfile {
+        let base = FaultProfile { seed, ..FaultProfile::default() };
+        match self {
+            Scenario::LossyLan => FaultProfile {
+                delay_us: 100,
+                jitter_us: 400,
+                drop: 0.05,
+                duplicate: 0.03,
+                reorder: 0.05,
+                reorder_span: 2,
+                ..base
+            },
+            Scenario::SlowPassive => FaultProfile {
+                delay_us: 200,
+                jitter_us: 600,
+                // Passive→active only: the heterogeneous (weaker) party.
+                rx_bandwidth: 1_500_000,
+                ..base
+            },
+            Scenario::FlakyWire => FaultProfile {
+                jitter_us: 300,
+                drop: 0.12,
+                duplicate: 0.05,
+                corrupt: 0.05,
+                truncate: 0.04,
+                reorder: 0.08,
+                reorder_span: 3,
+                ..base
+            },
+            Scenario::PartitionHeal => FaultProfile {
+                delay_us: 100,
+                jitter_us: 200,
+                drop: 0.03,
+                drop_window: Some((30, 60)),
+                ..base
+            },
+            Scenario::CorruptFrames => FaultProfile {
+                jitter_us: 200,
+                corrupt: 0.18,
+                truncate: 0.10,
+                ..base
+            },
+        }
+    }
+}
+
+impl fmt::Display for Scenario {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_preset_round_trips_through_parse() {
+        for s in Scenario::ALL {
+            assert_eq!(Scenario::parse(s.name()), Some(s));
+            assert_eq!(Scenario::parse(&s.name().replace('_', "-")), Some(s));
+            assert!(!s.describe().is_empty());
+        }
+        assert_eq!(Scenario::parse("LOSSY_LAN"), Some(Scenario::LossyLan));
+        assert_eq!(Scenario::parse("packet-storm"), None);
+        assert_eq!(Scenario::parse(""), None);
+    }
+
+    #[test]
+    fn profiles_are_deterministic_in_seed() {
+        for s in Scenario::ALL {
+            assert_eq!(s.profile(9), s.profile(9));
+            let p = s.profile(9);
+            assert_eq!(p.seed, 9);
+            // Every preset injects *something*.
+            let active = p.delay_us > 0
+                || p.jitter_us > 0
+                || p.drop > 0.0
+                || p.duplicate > 0.0
+                || p.corrupt > 0.0
+                || p.truncate > 0.0
+                || p.reorder > 0.0
+                || p.rx_bandwidth > 0
+                || p.tx_bandwidth > 0
+                || p.drop_window.is_some();
+            assert!(active, "{s} is a no-op preset");
+        }
+    }
+
+    #[test]
+    fn partition_preset_heals() {
+        let p = Scenario::PartitionHeal.profile(1);
+        let (start, end) = p.drop_window.unwrap();
+        use crate::testkit::fault::FaultKind;
+        // During the window every data frame is dropped...
+        for seq in start..end {
+            assert_eq!(p.decide(0, seq, false).kind, FaultKind::Drop, "seq {seq}");
+        }
+        // ...and outside it the lane carries traffic again (only the
+        // preset's light background loss remains).
+        let healed = (end..end + 100)
+            .filter(|&s| p.decide(0, s, false).kind == FaultKind::Deliver)
+            .count();
+        assert!(healed > 60, "only {healed}/100 frames delivered after the heal");
+        let before = (0..start)
+            .filter(|&s| p.decide(0, s, false).kind == FaultKind::Deliver)
+            .count() as u64;
+        assert!(before > start / 2, "partition must not start before its window");
+    }
+}

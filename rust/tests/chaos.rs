@@ -1,0 +1,502 @@
+//! The chaos scenario matrix: every named fault preset driven over both
+//! transports (an in-process link pair and a real loopback TCP socket),
+//! with the exactly-once invariant checker swept after every run and the
+//! final model required to stay within tolerance of an identically-
+//! seeded fault-free run.
+//!
+//! Also here: the deterministic-replay acceptance test (two runs of the
+//! same seeded scenario produce byte-identical fault journals), the
+//! mid-epoch disconnect test (clean error, never a hang), and the
+//! fuzz-style decode tests feeding `FaultLink`-style corrupted /
+//! truncated / duplicated byte streams directly at the wire decoder.
+//!
+//! Set `CHAOS_JOURNAL_DIR` to dump each run's fault journal + seed (the
+//! CI `chaos-smoke` job uploads them as artifacts on failure); replay any
+//! run by re-invoking the scenario with the seed printed in the journal
+//! header (see EXPERIMENTS.md §Resilience).
+
+use pubsub_vfl::config::{ExperimentConfig, ModelSize};
+use pubsub_vfl::coordinator::{
+    serve_passive_session, train_pubsub_over_link, wire, Frame, InProcTransport, Link, LinkRecv,
+    PassiveSessionReport, SessionResult, TcpLink, TcpTransport, Transport,
+};
+use pubsub_vfl::data::{make_classification, ClassificationOpts, Task, VerticalDataset};
+use pubsub_vfl::experiment::{RunEvent, RunOptions, TrainCtx};
+use pubsub_vfl::metrics::Metrics;
+use pubsub_vfl::model::{HostSplitModel, SplitModelSpec};
+use pubsub_vfl::testkit::{
+    check_session, ExactlyOnceExpectation, FaultLink, FaultProfile, Scenario,
+};
+use pubsub_vfl::util::Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::{Duration, Instant};
+
+const EPOCHS: usize = 4;
+const N_BATCHES: u64 = 6; // 192 aligned rows / batch 32
+const FAULT_SEED: u64 = 0xFA17;
+
+type Setup =
+    (Arc<HostSplitModel>, SplitModelSpec, VerticalDataset, VerticalDataset, ExperimentConfig);
+
+fn setup() -> Setup {
+    let mut rng = Rng::new(3);
+    let ds = make_classification(
+        &ClassificationOpts {
+            samples: 256,
+            features: 12,
+            informative: 8,
+            redundant: 2,
+            class_sep: 1.5,
+            flip_y: 0.0,
+            ..Default::default()
+        },
+        &mut rng,
+    );
+    let (tr, te) = ds.split(0.75);
+    let vtr = VerticalDataset::split_two(&tr, 6);
+    let vte = VerticalDataset::split_two(&te, 6);
+    let spec = SplitModelSpec::build(ModelSize::Small, 6, &[6], 16, 8);
+    let engine = Arc::new(HostSplitModel::new(spec.clone(), Task::BinaryClassification));
+    let mut cfg = ExperimentConfig::default();
+    cfg.train.batch_size = 32;
+    cfg.train.epochs = EPOCHS;
+    cfg.train.lr = 0.05;
+    cfg.train.target_accuracy = 2.0; // unreachable: run every epoch
+    cfg.parties.active_workers = 2;
+    cfg.parties.passive_workers = 2;
+    cfg.train.t_ddl_ms = 100;
+    (engine, spec, vtr, vte, cfg)
+}
+
+struct ChaosRun {
+    session: SessionResult,
+    active: Arc<Metrics>,
+    passive: Arc<Metrics>,
+    report: PassiveSessionReport,
+    retries: u64,
+    journal: Vec<String>,
+}
+
+/// One full two-party session over `transport`, with the active end
+/// optionally decorated by a fault schedule. Run under a watchdog so a
+/// liveness bug fails instead of hanging CI.
+fn run_linked(transport: &dyn Transport, profile: Option<FaultProfile>) -> ChaosRun {
+    let (engine, spec, vtr, vte, cfg) = setup();
+    let (active_raw, passive_link) = transport.pair().expect("link pair");
+    let fault_link = profile.map(|p| FaultLink::wrap(Arc::clone(&active_raw), p));
+    let active_link: Arc<dyn Link> = match &fault_link {
+        Some(fl) => Arc::<FaultLink>::clone(fl),
+        None => active_raw,
+    };
+
+    let passive_metrics = Arc::new(Metrics::new());
+    let pm = Arc::clone(&passive_metrics);
+    let cfg_p = cfg.clone();
+    let spec_p = spec.clone();
+    let tr_p = vtr.clone();
+    let engine_p: Arc<dyn pubsub_vfl::model::SplitEngine> = Arc::clone(&engine);
+    let server = std::thread::spawn(move || {
+        serve_passive_session(&cfg_p, &spec_p, engine_p, &tr_p, passive_link, pm)
+            .expect("passive session")
+    });
+
+    let active_metrics = Arc::new(Metrics::new());
+    let am = Arc::clone(&active_metrics);
+    let retries = Arc::new(AtomicU64::new(0));
+    let rc = Arc::clone(&retries);
+    let h = std::thread::spawn(move || {
+        let opts = RunOptions::new().with_observer(move |ev| {
+            if matches!(ev, RunEvent::BatchRetried { .. }) {
+                rc.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        let engine: Arc<dyn pubsub_vfl::model::SplitEngine> = engine;
+        let ctx = TrainCtx {
+            engine,
+            spec: &spec,
+            train: &vtr,
+            test: &vte,
+            cfg: &cfg,
+            metrics: am,
+            opts: &opts,
+        };
+        train_pubsub_over_link(&ctx, active_link).expect("chaos session must survive")
+    });
+    let deadline = Instant::now() + Duration::from_secs(240);
+    while !h.is_finished() {
+        assert!(Instant::now() < deadline, "chaos session hung: an epoch failed to drain");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let session = h.join().unwrap();
+    let report = server.join().unwrap();
+    ChaosRun {
+        session,
+        active: active_metrics,
+        passive: passive_metrics,
+        report,
+        retries: retries.load(Ordering::Relaxed),
+        journal: fault_link.map(|fl| fl.journal()).unwrap_or_default(),
+    }
+}
+
+fn dump_journal(name: &str, seed: u64, journal: &[String]) {
+    if let Ok(dir) = std::env::var("CHAOS_JOURNAL_DIR") {
+        let _ = std::fs::create_dir_all(&dir);
+        let body = format!("seed={seed}\n{}\n", journal.join("\n"));
+        let _ = std::fs::write(format!("{dir}/{name}.journal.txt"), body);
+    }
+}
+
+/// Fault-free reference run (shared across the matrix): the tolerance
+/// anchor — `(final AUC, final train loss)` — for every scenario.
+fn baseline() -> (f64, f64) {
+    static BASELINE: OnceLock<(f64, f64)> = OnceLock::new();
+    *BASELINE.get_or_init(|| {
+        let run = run_linked(&InProcTransport, None);
+        let exp = ExactlyOnceExpectation {
+            epochs: EPOCHS as u64,
+            n_batches: N_BATCHES,
+            parties: 1,
+        };
+        check_session(&exp, &run.session, &run.active, Some(&run.passive), Some(run.retries))
+            .assert_ok("fault-free baseline");
+        assert!(run.session.final_metric > 0.7, "baseline failed to learn");
+        (run.session.final_metric, run.session.loss_curve.last().unwrap().1)
+    })
+}
+
+/// One cell of the scenario matrix: run the preset over `transport`,
+/// sweep the invariant checker, and require the final metric within
+/// tolerance of the fault-free baseline.
+fn chaos_cell(scenario: Scenario, transport: &dyn Transport, label: &str) {
+    let profile = scenario.profile(FAULT_SEED);
+    let run = run_linked(transport, Some(profile));
+    dump_journal(&format!("{label}_{scenario}"), FAULT_SEED, &run.journal);
+
+    let exp =
+        ExactlyOnceExpectation { epochs: EPOCHS as u64, n_batches: N_BATCHES, parties: 1 };
+    check_session(&exp, &run.session, &run.active, Some(&run.passive), Some(run.retries))
+        .assert_ok(&format!("{scenario} over {label}"));
+    // The passive side's own ledger mirror agrees.
+    assert_eq!(run.report.bwd_applied, exp.expected_bwd(), "{scenario}/{label}");
+    assert_eq!(run.report.epochs_served, EPOCHS, "{scenario}/{label}");
+    // The schedule really injected something (journal + counters).
+    assert!(
+        !run.journal.is_empty(),
+        "{scenario}/{label}: no fault decisions journaled"
+    );
+    // Convergence within tolerance of the fault-free run: retries re-step
+    // batches, so trajectories differ, but the model must still learn.
+    let (base_auc, base_loss) = baseline();
+    let m = run.session.final_metric;
+    let loss = run.session.loss_curve.last().unwrap().1;
+    assert!(m > 0.7, "{scenario}/{label}: AUC {m} under faults");
+    assert!(
+        (m - base_auc).abs() < 0.15,
+        "{scenario}/{label}: AUC {m} diverged from fault-free {base_auc}"
+    );
+    assert!(
+        (loss - base_loss).abs() < 0.3,
+        "{scenario}/{label}: final loss {loss} diverged from fault-free {base_loss}"
+    );
+}
+
+// ---- the matrix: every preset × both transports --------------------------
+
+#[test]
+fn chaos_lossy_lan_inproc() {
+    chaos_cell(Scenario::LossyLan, &InProcTransport, "inproc");
+}
+
+#[test]
+fn chaos_lossy_lan_tcp() {
+    chaos_cell(Scenario::LossyLan, &TcpTransport, "tcp");
+}
+
+#[test]
+fn chaos_slow_passive_inproc() {
+    chaos_cell(Scenario::SlowPassive, &InProcTransport, "inproc");
+}
+
+#[test]
+fn chaos_slow_passive_tcp() {
+    chaos_cell(Scenario::SlowPassive, &TcpTransport, "tcp");
+}
+
+#[test]
+fn chaos_flaky_wire_inproc() {
+    chaos_cell(Scenario::FlakyWire, &InProcTransport, "inproc");
+}
+
+#[test]
+fn chaos_flaky_wire_tcp() {
+    chaos_cell(Scenario::FlakyWire, &TcpTransport, "tcp");
+}
+
+#[test]
+fn chaos_partition_heal_inproc() {
+    chaos_cell(Scenario::PartitionHeal, &InProcTransport, "inproc");
+}
+
+#[test]
+fn chaos_partition_heal_tcp() {
+    chaos_cell(Scenario::PartitionHeal, &TcpTransport, "tcp");
+}
+
+#[test]
+fn chaos_corrupt_frames_inproc() {
+    chaos_cell(Scenario::CorruptFrames, &InProcTransport, "inproc");
+}
+
+#[test]
+fn chaos_corrupt_frames_tcp() {
+    chaos_cell(Scenario::CorruptFrames, &TcpTransport, "tcp");
+}
+
+// ---- deterministic replay -------------------------------------------------
+
+/// The acceptance criterion: re-running a scenario with the same seed
+/// produces an identical fault schedule, demonstrated by diffing two
+/// runs' journals over an identical scripted frame sequence.
+#[test]
+fn same_seed_scenarios_replay_identical_journals() {
+    let script = |profile: FaultProfile| -> Vec<String> {
+        let (a, b) = InProcTransport::pair_inproc();
+        let fl = FaultLink::wrap(Arc::new(a), profile);
+        for i in 0..60u64 {
+            fl.send(Frame::EmbedJob { party: 0, batch_id: i, generation: i + 1 }).unwrap();
+        }
+        for i in 0..60u64 {
+            b.send(Frame::BwdDone { batch_id: i, party: 0, ps_version: i }).unwrap();
+        }
+        while let LinkRecv::Frame(_) = fl.recv(Duration::from_millis(20)) {}
+        fl.journal()
+    };
+    for scenario in Scenario::ALL {
+        let j1 = script(scenario.profile(FAULT_SEED));
+        let j2 = script(scenario.profile(FAULT_SEED));
+        assert_eq!(j1, j2, "{scenario}: same seed must replay the same schedule");
+        dump_journal(&format!("replay_{scenario}"), FAULT_SEED, &j1);
+        let j3 = script(scenario.profile(FAULT_SEED + 1));
+        assert_ne!(j1, j3, "{scenario}: different seed must differ");
+    }
+}
+
+// ---- mid-epoch disconnect -------------------------------------------------
+
+/// A link that dies mid-epoch must surface as a clean `Err` on the
+/// active side — never a hang, never a panic.
+#[test]
+fn mid_epoch_disconnect_fails_cleanly() {
+    let (engine, spec, vtr, vte, cfg) = setup();
+    let (active_raw, passive_link) = InProcTransport.pair().unwrap();
+    // Let the handshake + first epoch install through, then cut the wire.
+    let profile = FaultProfile { seed: 1, disconnect_after: Some(20), ..FaultProfile::default() };
+    let fl = FaultLink::wrap(active_raw, profile);
+
+    let cfg_p = cfg.clone();
+    let spec_p = spec.clone();
+    let tr_p = vtr.clone();
+    let engine_p: Arc<dyn pubsub_vfl::model::SplitEngine> = Arc::clone(&engine);
+    let server = std::thread::spawn(move || {
+        let _ = serve_passive_session(
+            &cfg_p,
+            &spec_p,
+            engine_p,
+            &tr_p,
+            passive_link,
+            Arc::new(Metrics::new()),
+        );
+    });
+
+    let link: Arc<dyn Link> = Arc::<FaultLink>::clone(&fl);
+    let h = std::thread::spawn(move || {
+        let opts = RunOptions::default();
+        let engine: Arc<dyn pubsub_vfl::model::SplitEngine> = engine;
+        let ctx = TrainCtx {
+            engine,
+            spec: &spec,
+            train: &vtr,
+            test: &vte,
+            cfg: &cfg,
+            metrics: Arc::new(Metrics::new()),
+            opts: &opts,
+        };
+        train_pubsub_over_link(&ctx, link)
+    });
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while !h.is_finished() {
+        assert!(Instant::now() < deadline, "disconnect must error out, not hang");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let result = h.join().unwrap();
+    assert!(result.is_err(), "mid-epoch disconnect must surface as an error");
+    // ≥ 1: teardown best-effort sends (Shutdown, pump flushes) also hit
+    // the dead link and are counted.
+    assert!(fl.injected().disconnects >= 1);
+    server.join().unwrap();
+}
+
+// ---- wire fault-surface fuzz ---------------------------------------------
+
+fn fuzz_frames() -> Vec<Frame> {
+    use pubsub_vfl::coordinator::{EmbeddingMsg, GradientMsg};
+    use pubsub_vfl::tensor::Matrix;
+    vec![
+        Frame::Hello { parties: 2 },
+        Frame::EpochInstall { epoch: 1, batches: vec![(7, vec![1, 2, 3]), (8, vec![])] },
+        Frame::EmbedJob { party: 1, batch_id: 7, generation: 3 },
+        Frame::Embedding(EmbeddingMsg {
+            batch_id: 7,
+            party: 0,
+            generation: 3,
+            z: Matrix::from_fn(4, 6, |r, c| (r * 6 + c) as f32 - 2.0),
+            produced_at_us: 1234,
+            param_version: 2,
+        }),
+        Frame::Gradient(GradientMsg {
+            batch_id: 7,
+            party: 0,
+            generation: 3,
+            grad_z: Matrix::from_fn(4, 6, |r, c| 0.5 * r as f32 - c as f32),
+            produced_at_us: 1234,
+            loss: 0.7,
+        }),
+        Frame::BwdDone { batch_id: 7, party: 0, ps_version: 4 },
+        Frame::Requeue { batch_id: 8, generation: 4 },
+        Frame::BarrierDone { epoch: 1, versions: vec![3, 4] },
+        Frame::PassiveParams { party: 0, version: 4, flat: vec![0.25; 9] },
+        Frame::Shutdown,
+    ]
+}
+
+/// FaultLink-style corruption fed directly at the decoder: every seeded
+/// byte-flip / truncation over every frame type must decode to a clean
+/// verdict — a frame, `None` (incomplete), or a `WireError` — and never
+/// panic or consume bytes it did not parse.
+#[test]
+fn decoder_survives_seeded_corruption_storm() {
+    let frames = fuzz_frames();
+    let mut rng = Rng::new(0xF422);
+    let mut rejected = 0u64;
+    for frame in &frames {
+        let clean = wire::encode(frame);
+        // Every strict truncation: incomplete, never a panic, never a
+        // silent success.
+        for cut in 0..clean.len() {
+            match wire::try_decode(&clean[..cut]) {
+                Ok(None) | Err(_) => {}
+                Ok(Some((f, used))) => {
+                    panic!("truncated {frame:?} at {cut} decoded to {f:?} ({used} bytes)")
+                }
+            }
+        }
+        // Any corruption of the magic/version words is always detected —
+        // the guaranteed-rejection half of the fault surface.
+        for i in 0..4 {
+            for bit in 0..8 {
+                let mut bytes = clean.clone();
+                bytes[i] ^= 1 << bit;
+                assert!(
+                    wire::try_decode(&bytes).is_err(),
+                    "magic/version flip at byte {i} bit {bit} of {frame:?} not rejected"
+                );
+            }
+        }
+        // Seeded random byte-flips (the FaultLink corruption model). A
+        // flip confined to payload *values* can legitimately decode (the
+        // frame header carries no checksum — that is FaultLink's job to
+        // model); the decoder's obligations are totality and bounds.
+        for case in 0..300 {
+            let mut bytes = clean.clone();
+            for _ in 0..(1 + rng.below(5)) {
+                let i = rng.below(bytes.len());
+                bytes[i] ^= 1 << rng.below(8);
+            }
+            match wire::try_decode(&bytes) {
+                Ok(Some((_f, used))) => {
+                    assert!(used <= bytes.len(), "case {case}: consumed past the buffer");
+                }
+                Ok(None) | Err(_) => rejected += 1,
+            }
+        }
+    }
+    assert!(rejected > 0, "the storm never hit a detectable corruption");
+}
+
+/// Duplicated and concatenated frames stream-decode exactly like the
+/// transport's incremental reader sees them: each copy decodes intact,
+/// and garbage after the stream poisons it with an error (never a silent
+/// success).
+#[test]
+fn duplicated_frames_and_garbage_tails_stream_correctly() {
+    let frames = fuzz_frames();
+    let mut stream = Vec::new();
+    for f in &frames {
+        let b = wire::encode(f);
+        stream.extend_from_slice(&b);
+        stream.extend_from_slice(&b); // duplicate every frame
+    }
+    stream.extend_from_slice(&[0xBA, 0xD0, 0xFF, 0xEE, 0, 0, 0, 0, 0, 0, 0, 0]);
+    let mut off = 0;
+    let mut decoded = Vec::new();
+    loop {
+        match wire::try_decode(&stream[off..]) {
+            Ok(Some((f, used))) => {
+                off += used;
+                decoded.push(f);
+            }
+            Ok(None) => panic!("stream stalled at offset {off}"),
+            Err(_) => break, // the garbage tail: poisoned, not silent
+        }
+    }
+    let expect: Vec<Frame> = frames.iter().flat_map(|f| [f.clone(), f.clone()]).collect();
+    assert_eq!(decoded, expect, "duplicates must decode bit-identically");
+}
+
+/// Poisoned-link behaviour matches `LinkStats` accounting: a TCP link fed
+/// N valid frames then garbage yields exactly N frames, counts them in
+/// `rx_frames`, records one decode error, and reports `Closed` forever
+/// after.
+#[test]
+fn tcp_poison_accounting_matches_link_stats() {
+    use std::io::Write;
+    use std::net::TcpListener;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let frames = fuzz_frames();
+    let n = frames.len() as u64;
+    let frames_w = frames.clone();
+    let writer = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        for f in &frames_w {
+            s.write_all(&wire::encode(f)).unwrap();
+        }
+        // FaultLink-style corruption at the wire boundary: a bad magic.
+        s.write_all(&[0xDE, 0xAD, 0xBE, 0xEF, 9, 9, 0, 0, 0, 0, 0, 0]).unwrap();
+    });
+    let link = TcpLink::connect(&addr.to_string(), Duration::from_secs(5)).unwrap();
+    writer.join().unwrap();
+
+    let mut got = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match link.recv(Duration::from_millis(50)) {
+            LinkRecv::Frame(f) => got.push(f),
+            LinkRecv::Closed => break,
+            LinkRecv::TimedOut => assert!(Instant::now() < deadline, "poison never surfaced"),
+        }
+    }
+    assert_eq!(got, frames, "every valid frame before the poison is delivered");
+    let st = link.stats();
+    assert_eq!(st.rx_frames, n, "rx_frames counts exactly the decoded frames");
+    assert_eq!(st.decode_errors, 1, "the poison is accounted once");
+    assert_eq!(
+        st.rx_bytes,
+        frames.iter().map(|f| wire::encoded_len(f) as u64).sum::<u64>(),
+        "rx_bytes counts exactly the decoded bytes"
+    );
+    // Poisoned forever: no silent recovery.
+    assert!(matches!(link.recv(Duration::from_millis(10)), LinkRecv::Closed));
+}

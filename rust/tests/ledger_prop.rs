@@ -1,0 +1,391 @@
+//! Randomized property suite for the exactly-once [`BatchLedger`].
+//!
+//! Thousands of seeded random interleavings of
+//! `publish / begin_join / mark_stepped / claim_bwd / credit_bwd /
+//! requeue_party / requeue_all / requeue_stuck` across generations and
+//! epochs, asserting after **every** operation that the state machine:
+//!
+//! - never double-credits a `(batch, party)` backward pass,
+//! - never lets `remaining_bwd` drift from `expected − credits`
+//!   (no underflow, no phantom credit),
+//! - never regresses a batch's generation (and never reuses one across
+//!   epochs),
+//! - always drains to `Done` once the work is actually delivered.
+//!
+//! Failures print the seeded witness (via `prop::assert_prop`), so any
+//! run is replayable: plug the printed seed into `Case { seed, .. }`.
+
+use pubsub_vfl::coordinator::{BatchLedger, BatchStage};
+use pubsub_vfl::prop::assert_prop;
+use pubsub_vfl::util::Rng;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// One replayable interleaving. The seed alone reproduces the run.
+#[derive(Clone, Debug)]
+struct Case {
+    seed: u64,
+    k: usize,
+    n_batches: usize,
+    epochs: usize,
+    ops: usize,
+}
+
+fn batches_for(n: usize) -> Vec<(u64, Arc<Vec<usize>>)> {
+    (1..=n as u64).map(|id| (id, Arc::new(vec![0, 1, 2, 3]))).collect()
+}
+
+/// Drive one seeded interleaving; returns a violation description on the
+/// first broken invariant.
+fn drive(case: &Case) -> Result<(), String> {
+    let mut rng = Rng::new(case.seed);
+    let ledger = BatchLedger::new(case.k);
+    let ids: Vec<u64> = (1..=case.n_batches as u64).collect();
+    let batches = batches_for(case.n_batches);
+    let expected = case.n_batches * case.k;
+    // Generations are session-monotonic: nothing installed later may
+    // reuse or regress below anything seen before.
+    let mut max_gen_ever = 0u64;
+
+    for epoch in 0..case.epochs {
+        ledger.install_epoch(epoch, &batches);
+        let mut gens: HashMap<u64, u64> = HashMap::new();
+        for &id in &ids {
+            let g = ledger
+                .generation(id)
+                .ok_or_else(|| format!("batch {id} missing after install"))?;
+            if g <= max_gen_ever {
+                return Err(format!(
+                    "epoch {epoch}: batch {id} installed at gen {g} ≤ prior max {max_gen_ever}"
+                ));
+            }
+            gens.insert(id, g);
+        }
+        // Per-(batch, party) shadow claim flags: the ground truth the
+        // ledger must agree with on exactly-once counting.
+        let mut claimed: HashMap<(u64, usize), bool> = HashMap::new();
+        let mut credits = 0usize;
+
+        let check = |ledger: &BatchLedger,
+                         gens: &HashMap<u64, u64>,
+                         credits: usize,
+                         what: &str|
+         -> Result<(), String> {
+            let rem = ledger.remaining_bwd();
+            if credits > expected {
+                return Err(format!("epoch {epoch}: {credits} credits > {expected} ({what})"));
+            }
+            if rem != expected - credits {
+                return Err(format!(
+                    "epoch {epoch}: remaining_bwd = {rem}, expected {} after {credits} \
+                     credits ({what}) — underflow or phantom credit",
+                    expected - credits
+                ));
+            }
+            for (&id, &last) in gens {
+                let now = ledger.generation(id).unwrap_or(0);
+                if now < last {
+                    return Err(format!(
+                        "epoch {epoch}: batch {id} generation regressed {last} → {now} ({what})"
+                    ));
+                }
+            }
+            Ok(())
+        };
+
+        // ---- random interleaving phase --------------------------------
+        for _ in 0..case.ops {
+            let id = ids[rng.below(ids.len())];
+            let party = rng.below(case.k);
+            let cur = ledger.generation(id).unwrap();
+            // Half the time aim at the live generation, half at a stale
+            // or bogus one — stale traffic must be inert.
+            let gen = if rng.flip(0.5) { cur } else { cur.wrapping_sub(1 + rng.below(3) as u64) };
+            let op = rng.below(9);
+            let what: String;
+            match op {
+                0 => {
+                    what = format!("next_embed_job(p{party})");
+                    if let Some(job) = ledger.next_embed_job(party) {
+                        let g = ledger.generation(job.batch_id).unwrap();
+                        if job.generation != g {
+                            return Err(format!(
+                                "job for batch {} carries gen {} but ledger is at {g}",
+                                job.batch_id, job.generation
+                            ));
+                        }
+                    }
+                }
+                1 => {
+                    what = format!("begin_publish({id}, g{gen}, p{party})");
+                    let ok = ledger.begin_publish(id, gen, party);
+                    if ok && gen != cur {
+                        return Err(format!("stale publish accepted: {id} gen {gen} != {cur}"));
+                    }
+                }
+                2 => {
+                    what = format!("begin_join({id}, g{gen})");
+                    if ledger.begin_join(id, gen).is_some() {
+                        if gen != cur {
+                            return Err(format!("stale join accepted: batch {id} gen {gen}"));
+                        }
+                        // Exactly-once step: an immediate second claim of
+                        // the same generation must fail.
+                        if ledger.begin_join(id, gen).is_some() {
+                            return Err(format!("double join of batch {id} gen {gen}"));
+                        }
+                    }
+                }
+                3 => {
+                    what = format!("mark_stepped({id}, g{gen})");
+                    let _ = ledger.mark_stepped(id, gen);
+                }
+                4 => {
+                    what = format!("claim_bwd({id}, g{gen}, p{party})");
+                    if ledger.claim_bwd(id, gen, party).is_some() {
+                        if gen != cur {
+                            return Err(format!("stale bwd claim accepted: batch {id} gen {gen}"));
+                        }
+                        if *claimed.get(&(id, party)).unwrap_or(&false) {
+                            return Err(format!(
+                                "double credit: claim_bwd({id}, p{party}) succeeded twice"
+                            ));
+                        }
+                        claimed.insert((id, party), true);
+                        ledger.finish_bwd();
+                        credits += 1;
+                    }
+                }
+                5 => {
+                    what = format!("credit_bwd({id}, p{party})");
+                    if ledger.credit_bwd(id, party) {
+                        if *claimed.get(&(id, party)).unwrap_or(&false) {
+                            return Err(format!(
+                                "double credit: credit_bwd({id}, p{party}) counted twice"
+                            ));
+                        }
+                        claimed.insert((id, party), true);
+                        credits += 1;
+                    }
+                }
+                6 => {
+                    what = format!("requeue_all({id}, g{gen})");
+                    if let Some(new_gen) = ledger.requeue_all(id, gen) {
+                        if gen != cur {
+                            return Err(format!("stale requeue_all accepted on batch {id}"));
+                        }
+                        if new_gen <= cur {
+                            return Err(format!(
+                                "requeue_all did not advance gen: {cur} → {new_gen}"
+                            ));
+                        }
+                    }
+                }
+                7 => {
+                    what = format!("requeue_party(p{party}, {id}, g{gen})");
+                    let _ = ledger.requeue_party(party, id, gen);
+                }
+                _ => {
+                    what = "requeue_stuck()".into();
+                    for (kid, new_gen) in ledger.requeue_stuck() {
+                        if ledger.stage(kid) == Some(BatchStage::Done) {
+                            return Err(format!("requeue_stuck touched done batch {kid}"));
+                        }
+                        if new_gen <= max_gen_ever {
+                            return Err(format!("requeue_stuck reused gen {new_gen}"));
+                        }
+                    }
+                }
+            }
+            for &id in &ids {
+                let g = ledger.generation(id).unwrap();
+                max_gen_ever = max_gen_ever.max(g);
+            }
+            check(&ledger, &gens, credits, &what)?;
+            for &id in &ids {
+                gens.insert(id, ledger.generation(id).unwrap());
+            }
+        }
+
+        // ---- deterministic drain: deliver all remaining work ----------
+        let mut rounds = 0;
+        while !ledger.epoch_done() {
+            rounds += 1;
+            if rounds > expected + 4 {
+                return Err(format!(
+                    "epoch {epoch} failed to drain: {} backward passes stuck",
+                    ledger.remaining_bwd()
+                ));
+            }
+            for &id in &ids {
+                if ledger.stage(id) == Some(BatchStage::Done) {
+                    continue;
+                }
+                let g = ledger.generation(id).unwrap();
+                for party in 0..case.k {
+                    ledger.begin_publish(id, g, party);
+                }
+                if ledger.begin_join(id, g).is_some() {
+                    ledger.mark_stepped(id, g);
+                }
+                for party in 0..case.k {
+                    if ledger.claim_bwd(id, g, party).is_some() {
+                        if *claimed.get(&(id, party)).unwrap_or(&false) {
+                            return Err(format!("double credit in drain: ({id}, p{party})"));
+                        }
+                        claimed.insert((id, party), true);
+                        ledger.finish_bwd();
+                        credits += 1;
+                    }
+                }
+            }
+            check(&ledger, &gens, credits, "drain round")?;
+        }
+        if credits != expected {
+            return Err(format!(
+                "epoch {epoch} drained with {credits} credits, expected {expected}"
+            ));
+        }
+        for &id in &ids {
+            if ledger.stage(id) != Some(BatchStage::Done) {
+                return Err(format!("epoch {epoch}: batch {id} not Done after drain"));
+            }
+            max_gen_ever = max_gen_ever.max(ledger.generation(id).unwrap());
+        }
+    }
+    Ok(())
+}
+
+/// Thousands of seeded interleavings; the failing seed is printed in the
+/// witness so any run is replayable.
+#[test]
+fn randomized_interleavings_never_break_exactly_once() {
+    assert_prop(
+        "ledger exactly-once under random interleavings (replay: Case { seed, .. })",
+        0xC0DE_CAFE,
+        2500,
+        |rng| Case {
+            seed: rng.next_u64(),
+            k: 1 + rng.below(3),
+            n_batches: 1 + rng.below(5),
+            epochs: 1 + rng.below(3),
+            ops: 16 + rng.below(64),
+        },
+        |c| {
+            // Shrink toward fewer ops / smaller plans while still failing.
+            if c.ops > 16 {
+                Some(Case { ops: c.ops / 2, ..c.clone() })
+            } else if c.n_batches > 1 {
+                Some(Case { n_batches: c.n_batches - 1, ..c.clone() })
+            } else if c.epochs > 1 {
+                Some(Case { epochs: 1, ..c.clone() })
+            } else {
+                None
+            }
+        },
+        |c| drive(c),
+    );
+}
+
+/// The same laws must hold when the interleaving is real: seeded random
+/// op streams on racing threads, then a single-threaded drain. Thread
+/// scheduling is nondeterministic, but the invariants may not depend on
+/// it — the seed only governs each thread's op choices.
+#[test]
+fn threaded_interleavings_count_each_bwd_exactly_once() {
+    for seed in [3u64, 17, 99, 2024] {
+        let k = 3;
+        let n = 6;
+        let ledger = BatchLedger::new(k);
+        let ids: Vec<u64> = (1..=n as u64).collect();
+        ledger.install_epoch(0, &batches_for(n));
+        let expected = n * k;
+        let credits = AtomicUsize::new(0);
+
+        std::thread::scope(|s| {
+            for t in 0..6u64 {
+                let ledger = &ledger;
+                let ids = &ids;
+                let credits = &credits;
+                s.spawn(move || {
+                    let mut rng = Rng::new(seed ^ (t + 1).wrapping_mul(0x9E37_79B9));
+                    for _ in 0..200 {
+                        let id = ids[rng.below(ids.len())];
+                        let party = rng.below(k);
+                        let Some(g) = ledger.generation(id) else { continue };
+                        match rng.below(6) {
+                            0 => {
+                                let _ = ledger.next_embed_job(party);
+                            }
+                            1 => {
+                                let _ = ledger.begin_publish(id, g, party);
+                            }
+                            2 => {
+                                if ledger.begin_join(id, g).is_some() {
+                                    ledger.mark_stepped(id, g);
+                                }
+                            }
+                            3 => {
+                                if ledger.claim_bwd(id, g, party).is_some() {
+                                    ledger.finish_bwd();
+                                    credits.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                            4 => {
+                                if ledger.credit_bwd(id, party) {
+                                    credits.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                            _ => {
+                                let _ = ledger.requeue_all(id, g);
+                            }
+                        }
+                        // Mid-flight conservation: credits can never
+                        // exceed the epoch's budget and `remaining_bwd`
+                        // can never underflow past it, whatever the
+                        // schedule. (The exact `remaining = expected −
+                        // credits` equality is asserted after the drain,
+                        // where no increment can be in flight.)
+                        let c = credits.load(Ordering::Relaxed);
+                        let rem = ledger.remaining_bwd();
+                        assert!(
+                            c <= expected && rem <= expected,
+                            "seed {seed}: credits {c} / remaining {rem} escaped the \
+                             {expected} budget"
+                        );
+                    }
+                });
+            }
+        });
+
+        // Single-threaded drain: whatever the storm left behind must
+        // complete to exactly `expected` credits.
+        let mut rounds = 0;
+        while !ledger.epoch_done() {
+            rounds += 1;
+            assert!(rounds <= expected + 4, "seed {seed}: drain stuck");
+            for &id in &ids {
+                let Some(g) = ledger.generation(id) else { continue };
+                for party in 0..k {
+                    ledger.begin_publish(id, g, party);
+                }
+                if ledger.begin_join(id, g).is_some() {
+                    ledger.mark_stepped(id, g);
+                }
+                for party in 0..k {
+                    if ledger.claim_bwd(id, g, party).is_some() {
+                        ledger.finish_bwd();
+                        credits.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+        assert_eq!(
+            credits.load(Ordering::Relaxed),
+            expected,
+            "seed {seed}: exactly-once violated under real threads"
+        );
+        assert_eq!(ledger.remaining_bwd(), 0, "seed {seed}");
+    }
+}
