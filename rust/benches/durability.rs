@@ -1,0 +1,218 @@
+//! Durability benchmarks: what the persistent broker costs when nothing
+//! crashes, and what recovery costs when something does.
+//!
+//! Rows (emitted to `BENCH_durability.json` for CI trend tracking):
+//!
+//! - `session_inproc_durability_{off,on}` — the fault-free in-proc
+//!   session with and without a state dir. The acceptance bar is ≤5%
+//!   overhead; the computed ratio is printed alongside the table.
+//! - `log_append_emb_64x32` vs `wire_encode_emb_64x32` — per-record
+//!   append cost against the encode-only floor (the delta is the disk
+//!   write + ring bookkeeping).
+//! - `checkpoint_{save,load}` — the barrier-aligned checkpoint codec on
+//!   a realistically sized parameter snapshot.
+//! - `session_resume_fast_forward` — wall time of a `--resume` run whose
+//!   epochs are all banked (pure replay/fast-forward, no training).
+
+use pubsub_vfl::bench_harness::{bench, save_json, BenchStats, Table};
+use pubsub_vfl::config::{ExperimentConfig, ModelSize};
+use pubsub_vfl::coordinator::{
+    train_pubsub_session, wire, Checkpoint, DurableHub, EmbeddingMsg, Frame, LogCaps, TopicLog,
+};
+use pubsub_vfl::data::{make_classification, ClassificationOpts, Task, VerticalDataset};
+use pubsub_vfl::experiment::{RunOptions, TrainCtx};
+use pubsub_vfl::metrics::Metrics;
+use pubsub_vfl::model::{HostSplitModel, SplitEngine, SplitModelSpec};
+use pubsub_vfl::tensor::Matrix;
+use pubsub_vfl::util::Rng;
+use std::hint::black_box;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn fresh_dir(dirs: &mut Vec<PathBuf>, tag: &str, n: usize) -> PathBuf {
+    let name = format!("pubsub-vfl-bench-dur-{}-{tag}-{n}", std::process::id());
+    let dir = std::env::temp_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dirs.push(dir.clone());
+    dir
+}
+
+type Setup =
+    (Arc<dyn SplitEngine>, SplitModelSpec, VerticalDataset, VerticalDataset, ExperimentConfig);
+
+/// Same tiny-but-real session as the recovery suite: 4 epochs × 6
+/// batches, 2+2 workers, host engine.
+fn setup() -> Setup {
+    let mut rng = Rng::new(3);
+    let ds = make_classification(
+        &ClassificationOpts {
+            samples: 256,
+            features: 12,
+            informative: 8,
+            redundant: 2,
+            class_sep: 1.5,
+            flip_y: 0.0,
+            ..Default::default()
+        },
+        &mut rng,
+    );
+    let (tr, te) = ds.split(0.75);
+    let vtr = VerticalDataset::split_two(&tr, 6);
+    let vte = VerticalDataset::split_two(&te, 6);
+    let spec = SplitModelSpec::build(ModelSize::Small, 6, &[6], 16, 8);
+    let engine: Arc<dyn SplitEngine> =
+        Arc::new(HostSplitModel::new(spec.clone(), Task::BinaryClassification));
+    let mut cfg = ExperimentConfig::default();
+    cfg.train.batch_size = 32;
+    cfg.train.epochs = 4;
+    cfg.train.lr = 0.05;
+    cfg.train.target_accuracy = 2.0; // unreachable: run every epoch
+    cfg.parties.active_workers = 2;
+    cfg.parties.passive_workers = 2;
+    cfg.train.t_ddl_ms = 100;
+    (engine, spec, vtr, vte, cfg)
+}
+
+fn run_session(
+    engine: &Arc<dyn SplitEngine>,
+    spec: &SplitModelSpec,
+    vtr: &VerticalDataset,
+    vte: &VerticalDataset,
+    cfg: &ExperimentConfig,
+) {
+    let opts = RunOptions::default();
+    let ctx = TrainCtx {
+        engine: Arc::clone(engine),
+        spec,
+        train: vtr,
+        test: vte,
+        cfg,
+        metrics: Arc::new(Metrics::new()),
+        opts: &opts,
+    };
+    let r = train_pubsub_session(&ctx).expect("bench session trains");
+    black_box(r.final_metric);
+}
+
+fn main() {
+    let mut results: Vec<BenchStats> = Vec::new();
+    let mut dirs: Vec<PathBuf> = Vec::new();
+    let (engine, spec, vtr, vte, cfg) = setup();
+
+    // ---- fault-free session: durability off vs on ---------------------
+    let (iters, warmup) = (10usize, 2usize);
+    results.push(bench("session_inproc_durability_off", warmup, iters, || {
+        run_session(&engine, &spec, &vtr, &vte, &cfg);
+    }));
+    {
+        // A fresh state dir per run so log recovery/compaction from a
+        // previous iteration never pollutes the next one's timing.
+        let mut n = 0usize;
+        let mut dirs_on: Vec<PathBuf> = Vec::new();
+        results.push(bench("session_inproc_durability_on", warmup, iters, || {
+            let dir = fresh_dir(&mut dirs_on, "on", n);
+            n += 1;
+            let mut c = cfg.clone();
+            c.durability.state_dir = dir.to_string_lossy().into_owned();
+            run_session(&engine, &spec, &vtr, &vte, &c);
+        }));
+        dirs.append(&mut dirs_on);
+    }
+    let off = results[results.len() - 2].mean.as_secs_f64();
+    let on = results[results.len() - 1].mean.as_secs_f64();
+    let overhead_pct = (on / off - 1.0) * 100.0;
+
+    // ---- resume fast-forward: all epochs banked ------------------------
+    {
+        let dir = fresh_dir(&mut dirs, "resume", 0);
+        let mut c = cfg.clone();
+        c.durability.state_dir = dir.to_string_lossy().into_owned();
+        run_session(&engine, &spec, &vtr, &vte, &c); // seed the checkpoint
+        c.durability.resume = true;
+        results.push(bench("session_resume_fast_forward", 1, 10, || {
+            run_session(&engine, &spec, &vtr, &vte, &c);
+        }));
+    }
+
+    // ---- topic log append vs encode-only floor -------------------------
+    {
+        let mut rng = Rng::new(7);
+        let frame = Frame::Embedding(EmbeddingMsg {
+            batch_id: 1,
+            party: 0,
+            generation: 1,
+            z: Matrix::randn(64, 32, 1.0, &mut rng),
+            produced_at_us: wire::now_micros(),
+            param_version: 0,
+        });
+        results.push(bench("wire_encode_emb_64x32", 50, 2000, || {
+            black_box(wire::encode(&frame));
+        }));
+        let dir = fresh_dir(&mut dirs, "log", 0);
+        let mut log = TopicLog::open("bench", &dir.join("bench.log"), LogCaps::default()).unwrap();
+        results.push(bench("log_append_emb_64x32", 50, 2000, || {
+            log.append(&frame).unwrap();
+        }));
+        let s = log.stats();
+        println!(
+            "(log after bench: depth {} live {:.1} MiB written {:.1} MiB evicted {})",
+            s.depth,
+            s.live_bytes as f64 / (1024.0 * 1024.0),
+            s.bytes_written as f64 / (1024.0 * 1024.0),
+            s.evicted,
+        );
+    }
+
+    // ---- checkpoint codec on a realistic snapshot ----------------------
+    {
+        let dir = fresh_dir(&mut dirs, "ckpt", 0);
+        let hub = DurableHub::open(&dir, 1, LogCaps::default()).unwrap();
+        let mut rng = Rng::new(11);
+        fn flat(n: usize, rng: &mut Rng) -> Vec<f32> {
+            (0..n).map(|_| rng.uniform() as f32 - 0.5).collect()
+        }
+        let ckpt = Checkpoint {
+            session_id: 1,
+            resume_token: 2,
+            completed_epochs: 4,
+            gen_seq: 64,
+            banked_bwd: 24,
+            retried: 0,
+            active_version: 24,
+            top_version: 24,
+            active_flat: flat(50_000, &mut rng),
+            top_flat: flat(5_000, &mut rng),
+            passive_versions: vec![24],
+            passive_flats: vec![flat(50_000, &mut rng)],
+            loss_curve: (0..4).map(|e| (e as f64, 0.5)).collect(),
+            metric_curve: (0..4).map(|e| (e as f64, 0.8)).collect(),
+        };
+        results.push(bench("checkpoint_save_105k_params", 5, 200, || {
+            hub.save_checkpoint(&ckpt).unwrap();
+        }));
+        results.push(bench("checkpoint_load_105k_params", 5, 200, || {
+            black_box(hub.load_checkpoint().unwrap());
+        }));
+    }
+
+    // ---- report --------------------------------------------------------
+    let mut t = Table::new("Durability benchmarks", &["bench", "mean", "p50", "p95"]);
+    for r in &results {
+        println!("{}", r.row());
+        t.row(&[
+            r.name.clone(),
+            format!("{:?}", r.mean),
+            format!("{:?}", r.p50),
+            format!("{:?}", r.p95),
+        ]);
+    }
+    t.save_csv("durability.csv");
+    println!("durability overhead (fault-free in-proc): {overhead_pct:+.2}% (acceptance: <= 5%)");
+    save_json("BENCH_durability.json", &results);
+    println!("(wrote BENCH_durability.json)");
+
+    for d in dirs {
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}

@@ -148,6 +148,12 @@ pub fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     }
     cfg.transport.fault_seed =
         args.get_usize("fault-seed", cfg.transport.fault_seed as usize) as u64;
+    if let Some(dir) = args.get("state-dir") {
+        cfg.durability.state_dir = dir.to_string();
+    }
+    if args.get("resume").is_some() {
+        cfg.durability.resume = true;
+    }
     cfg.validate().map_err(|e| anyhow!("{e}"))?;
     Ok(cfg)
 }
@@ -164,8 +170,10 @@ COMMANDS:
                                              --batch N --epochs N --lr F --mu F --config file.toml
                                              --transport inproc|tcp --connect HOST:PORT
                                              --fault-profile lossy_lan|slow_passive|flaky_wire|
-                                               partition_heal|corrupt_frames --fault-seed N]
-  serve-passive host the passive party      [--listen HOST:PORT --config file.toml --samples N]
+                                               partition_heal|corrupt_frames --fault-seed N
+                                             --state-dir DIR --resume]
+  serve-passive host the passive party      [--listen HOST:PORT --config file.toml --samples N
+                                             --state-dir DIR --resume]
                 (two-process training: start this first, then `train
                  --connect` from the active party with the same config)
   compare       all five architectures      [--dataset synthetic --samples N]
@@ -468,6 +476,23 @@ mod tests {
         // than silently running fault-free.
         let inproc = Args::parse(&argv("train --fault-profile lossy_lan"));
         assert!(config_from_args(&inproc).is_err());
+    }
+
+    #[test]
+    fn durability_flags_parse_into_config() {
+        let a = Args::parse(&argv("train --state-dir /tmp/vfl-state --resume"));
+        let cfg = config_from_args(&a).unwrap();
+        assert!(cfg.durability.enabled());
+        assert_eq!(cfg.durability.state_dir, "/tmp/vfl-state");
+        assert!(cfg.durability.resume);
+        // No flags: durability stays off.
+        let none = config_from_args(&Args::parse(&argv("train"))).unwrap();
+        assert!(!none.durability.enabled());
+        assert!(!none.durability.resume);
+        // --resume without a state dir cannot work (nothing to resume
+        // from) and is rejected at validation.
+        let bad = Args::parse(&argv("train --resume"));
+        assert!(config_from_args(&bad).is_err());
     }
 
     #[test]

@@ -209,6 +209,63 @@ impl Default for TransportConfig {
     }
 }
 
+/// Durable-broker settings: the state directory behind persistent topic
+/// logs + barrier-aligned checkpoints, the log retention caps, and the
+/// rejoin/resume behavior. Durability is off unless `state_dir` is set
+/// (TOML `[durability]`, CLI `--state-dir`/`--resume`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DurabilityConfig {
+    /// Root of the durable state (`logs/`, `checkpoint.bin`,
+    /// `session.bin`). Empty = durability disabled.
+    pub state_dir: String,
+    /// Resume from the checkpoint in `state_dir` at startup (`train`
+    /// skips completed epochs; `serve-passive` accepts a rejoin
+    /// handshake validated against its session file).
+    pub resume: bool,
+    /// Ring cap: retained records per topic log.
+    pub log_max_entries: usize,
+    /// Ring cap: retained encoded bytes per topic log.
+    pub log_max_bytes: u64,
+    /// Per-record TTL in milliseconds (0 = no expiry).
+    pub log_ttl_ms: u64,
+    /// How many times the supervisor re-handshakes after a mid-epoch
+    /// link loss before giving up on the session.
+    pub max_rejoin_attempts: u32,
+}
+
+impl Default for DurabilityConfig {
+    fn default() -> Self {
+        DurabilityConfig {
+            state_dir: String::new(),
+            resume: false,
+            log_max_entries: 1024,
+            log_max_bytes: 64 * 1024 * 1024,
+            log_ttl_ms: 60_000,
+            max_rejoin_attempts: 5,
+        }
+    }
+}
+
+impl DurabilityConfig {
+    /// Durability is armed iff a state dir is configured.
+    pub fn enabled(&self) -> bool {
+        !self.state_dir.is_empty()
+    }
+
+    /// The topic-log retention caps this config selects.
+    pub fn log_caps(&self) -> crate::coordinator::durable::LogCaps {
+        crate::coordinator::durable::LogCaps {
+            max_entries: self.log_max_entries.max(1),
+            max_bytes: self.log_max_bytes.max(1),
+            ttl: if self.log_ttl_ms == 0 {
+                None
+            } else {
+                Some(std::time::Duration::from_millis(self.log_ttl_ms))
+            },
+        }
+    }
+}
+
 /// Ablation toggles (Table 4).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct AblationConfig {
@@ -253,6 +310,9 @@ pub struct ExperimentConfig {
     pub passive_parties: usize,
     /// Message plane for the PubSub session (in-process or TCP).
     pub transport: TransportConfig,
+    /// Durable broker state (persistent topic logs, checkpoints,
+    /// crash recovery).
+    pub durability: DurabilityConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -296,6 +356,7 @@ impl Default for ExperimentConfig {
             bandwidth_mbps: 1000.0,
             passive_parties: 1,
             transport: TransportConfig::default(),
+            durability: DurabilityConfig::default(),
         }
     }
 }
@@ -391,6 +452,18 @@ impl ExperimentConfig {
             doc.str_or("transport.faults", "profile", &c.transport.fault_profile);
         c.transport.fault_seed =
             doc.i64_or("transport.faults", "seed", c.transport.fault_seed as i64) as u64;
+
+        c.durability.state_dir = doc.str_or("durability", "state_dir", &c.durability.state_dir);
+        c.durability.resume = doc.bool_or("durability", "resume", c.durability.resume);
+        c.durability.log_max_entries =
+            doc.usize_or("durability", "log_max_entries", c.durability.log_max_entries);
+        c.durability.log_max_bytes =
+            doc.i64_or("durability", "log_max_bytes", c.durability.log_max_bytes as i64) as u64;
+        c.durability.log_ttl_ms =
+            doc.i64_or("durability", "log_ttl_ms", c.durability.log_ttl_ms as i64) as u64;
+        c.durability.max_rejoin_attempts = doc
+            .i64_or("durability", "max_rejoin_attempts", c.durability.max_rejoin_attempts as i64)
+            as u32;
         c.validate()?;
         Ok(c)
     }
@@ -421,6 +494,12 @@ impl ExperimentConfig {
         }
         if self.bandwidth_mbps <= 0.0 {
             return inv("bandwidth must be positive".into());
+        }
+        if self.durability.resume && !self.durability.enabled() {
+            return inv("durability.resume requires durability.state_dir (--state-dir)".into());
+        }
+        if self.durability.enabled() && self.durability.log_max_entries == 0 {
+            return inv("durability.log_max_entries must be >= 1".into());
         }
         if !self.transport.fault_profile.is_empty() {
             if crate::testkit::Scenario::parse(&self.transport.fault_profile).is_none() {
@@ -601,6 +680,32 @@ bandwidth_mbps = 500.0
         // than silently running fault-free.
         let inproc = ExperimentConfig::from_toml("[transport.faults]\nprofile = \"lossy_lan\"");
         assert!(inproc.is_err(), "fault profile on inproc must be rejected");
+    }
+
+    #[test]
+    fn durability_section_parses_and_validates() {
+        let d = ExperimentConfig::from_toml("").unwrap();
+        assert!(!d.durability.enabled());
+        assert!(!d.durability.resume);
+        assert_eq!(d.durability.log_max_entries, 1024);
+
+        let c = ExperimentConfig::from_toml(
+            "[durability]\nstate_dir = \"/tmp/vfl-state\"\nresume = true\n\
+             log_max_entries = 64\nlog_max_bytes = 1048576\nlog_ttl_ms = 0\n\
+             max_rejoin_attempts = 3",
+        )
+        .unwrap();
+        assert!(c.durability.enabled());
+        assert!(c.durability.resume);
+        assert_eq!(c.durability.log_max_entries, 64);
+        assert_eq!(c.durability.log_max_bytes, 1_048_576);
+        assert_eq!(c.durability.max_rejoin_attempts, 3);
+        let caps = c.durability.log_caps();
+        assert_eq!(caps.max_entries, 64);
+        assert_eq!(caps.ttl, None, "ttl 0 disables expiry");
+
+        // Resume without a state dir has nothing to resume from.
+        assert!(ExperimentConfig::from_toml("[durability]\nresume = true").is_err());
     }
 
     #[test]

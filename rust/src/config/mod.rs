@@ -5,7 +5,8 @@ pub mod experiment;
 pub mod toml;
 
 pub use experiment::{
-    AblationConfig, Architecture, ConfigError, DatasetConfig, DpConfig, EngineKind,
-    ExperimentConfig, ModelSize, PartyConfig, TrainConfig, TransportConfig, TransportKind,
+    AblationConfig, Architecture, ConfigError, DatasetConfig, DpConfig, DurabilityConfig,
+    EngineKind, ExperimentConfig, ModelSize, PartyConfig, TrainConfig, TransportConfig,
+    TransportKind,
 };
 pub use toml::{TomlDoc, TomlError, TomlValue};

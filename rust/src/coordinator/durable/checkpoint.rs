@@ -1,0 +1,414 @@
+//! Barrier-aligned session checkpoints: versioned, checksummed, written
+//! atomically (tmp + rename), decoded defensively.
+//!
+//! A checkpoint captures the exact progress picture at an epoch barrier —
+//! completed-epoch count, the ledger's generation sequence and banked
+//! backward-pass credit, the per-party `ParameterServer` versions, and
+//! every party's flattened parameters (`MlpParams::flatten` layout) plus
+//! the recorded loss/metric curves. That is everything the supervisor
+//! needs to resume training at the next epoch boundary, or to push
+//! `RestoreParams` to a restarted passive process mid-session.
+//!
+//! The file layout reuses the wire primitives (`put_u32`/`Cursor` from
+//! `wire.rs` — no second serialization layer):
+//!
+//! ```text
+//! [magic u32][version u16][body ...][sha256(body || header) 32B]
+//! ```
+//!
+//! Decoding mirrors the wire codec's discipline: every malformed input —
+//! truncation at any byte, bit flips (checksum mismatch), wrong
+//! magic/version, length fields promising more than the file holds —
+//! maps to a [`CheckpointError`]; the decoder never panics and never
+//! returns a partially-populated checkpoint.
+
+use crate::coordinator::wire::{put_f32, put_f64, put_u16, put_u32, put_u64, Cursor, WireError};
+use sha2::{Digest, Sha256};
+use std::fmt;
+use std::fs;
+use std::path::Path;
+
+/// `b"KCFV"` little-endian ("VFCk" on the wire) — rejects non-checkpoint
+/// files at the first word.
+pub const CKPT_MAGIC: u32 = 0x5646_434B;
+/// Checkpoint layout version; bumped on any change.
+pub const CKPT_VERSION: u16 = 1;
+/// SHA-256 trailer length.
+const DIGEST_BYTES: usize = 32;
+/// Sanity bound on vector length fields — anything larger is a corrupt
+/// length, not a real checkpoint.
+const MAX_VEC: usize = 64 * 1024 * 1024;
+
+/// Decode/IO failure for checkpoint files. Restore paths treat any
+/// variant as "no usable checkpoint" — state is never partially applied.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CheckpointError {
+    /// First word was not [`CKPT_MAGIC`].
+    BadMagic(u32),
+    /// Layout version this build does not speak.
+    BadVersion(u16),
+    /// SHA-256 trailer does not match the body (bit flip, torn write).
+    ChecksumMismatch,
+    /// Truncated or structurally invalid body.
+    Malformed(&'static str),
+    /// Underlying filesystem error.
+    Io(String),
+}
+
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CheckpointError::BadMagic(m) => write!(f, "bad checkpoint magic 0x{m:08x}"),
+            CheckpointError::BadVersion(v) => write!(f, "unsupported checkpoint version {v}"),
+            CheckpointError::ChecksumMismatch => write!(f, "checkpoint checksum mismatch"),
+            CheckpointError::Malformed(why) => write!(f, "malformed checkpoint: {why}"),
+            CheckpointError::Io(e) => write!(f, "checkpoint i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
+impl From<WireError> for CheckpointError {
+    fn from(e: WireError) -> CheckpointError {
+        match e {
+            WireError::Truncated => CheckpointError::Malformed("truncated body"),
+            WireError::Corrupt(why) => CheckpointError::Malformed(why),
+            WireError::Io(e) => CheckpointError::Io(e),
+            _ => CheckpointError::Malformed("unexpected wire error"),
+        }
+    }
+}
+
+impl From<std::io::Error> for CheckpointError {
+    fn from(e: std::io::Error) -> CheckpointError {
+        CheckpointError::Io(e.to_string())
+    }
+}
+
+/// The barrier-aligned session snapshot.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Checkpoint {
+    /// Durable session identity (echoed in `Hello`).
+    pub session_id: u64,
+    /// Rejoin token a restarted peer must present.
+    pub resume_token: u64,
+    /// Epochs fully drained through their barrier.
+    pub completed_epochs: u64,
+    /// The ledger's session-monotonic generation sequence at the barrier
+    /// — restored so resumed installs never reuse a generation.
+    pub gen_seq: u64,
+    /// Backward-pass credit drained in completed epochs
+    /// (`completed_epochs × n_batches × k`).
+    pub banked_bwd: u64,
+    /// Batches retried so far (retry-accounting invariant carries over).
+    pub retried: u64,
+    /// Active-party bottom/top model PS versions.
+    pub active_version: u64,
+    pub top_version: u64,
+    /// Flattened active bottom/top parameters (`MlpParams::flatten`).
+    pub active_flat: Vec<f32>,
+    pub top_flat: Vec<f32>,
+    /// Per-passive-party PS versions and flattened parameters.
+    pub passive_versions: Vec<u64>,
+    pub passive_flats: Vec<Vec<f32>>,
+    /// Recorded `(x, loss)` / `(x, metric)` curves for completed epochs.
+    pub loss_curve: Vec<(f64, f64)>,
+    pub metric_curve: Vec<(f64, f64)>,
+}
+
+fn put_curve(b: &mut Vec<u8>, curve: &[(f64, f64)]) {
+    put_u32(b, curve.len() as u32);
+    for &(x, y) in curve {
+        put_f64(b, x);
+        put_f64(b, y);
+    }
+}
+
+fn put_flat(b: &mut Vec<u8>, flat: &[f32]) {
+    put_u32(b, flat.len() as u32);
+    for &v in flat {
+        put_f32(b, v);
+    }
+}
+
+fn read_len(c: &mut Cursor<'_>) -> Result<usize, CheckpointError> {
+    let n = c.u32()? as usize;
+    if n > MAX_VEC {
+        return Err(CheckpointError::Malformed("length field exceeds limit"));
+    }
+    Ok(n)
+}
+
+fn read_curve(c: &mut Cursor<'_>) -> Result<Vec<(f64, f64)>, CheckpointError> {
+    let n = read_len(c)?;
+    let mut out = Vec::with_capacity(n.min(65_536));
+    for _ in 0..n {
+        out.push((c.f64()?, c.f64()?));
+    }
+    Ok(out)
+}
+
+impl Checkpoint {
+    /// Encode to the on-disk layout (header + body + SHA-256 trailer).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        put_u32(&mut b, CKPT_MAGIC);
+        put_u16(&mut b, CKPT_VERSION);
+        put_u64(&mut b, self.session_id);
+        put_u64(&mut b, self.resume_token);
+        put_u64(&mut b, self.completed_epochs);
+        put_u64(&mut b, self.gen_seq);
+        put_u64(&mut b, self.banked_bwd);
+        put_u64(&mut b, self.retried);
+        put_u64(&mut b, self.active_version);
+        put_u64(&mut b, self.top_version);
+        put_flat(&mut b, &self.active_flat);
+        put_flat(&mut b, &self.top_flat);
+        put_u32(&mut b, self.passive_versions.len() as u32);
+        for &v in &self.passive_versions {
+            put_u64(&mut b, v);
+        }
+        put_u32(&mut b, self.passive_flats.len() as u32);
+        for flat in &self.passive_flats {
+            put_flat(&mut b, flat);
+        }
+        put_curve(&mut b, &self.loss_curve);
+        put_curve(&mut b, &self.metric_curve);
+        let mut h = Sha256::new();
+        h.update(&b);
+        b.extend_from_slice(h.finalize().as_ref());
+        b
+    }
+
+    /// Decode and verify a checkpoint. Errors on any corruption; never
+    /// panics, never yields a partial snapshot.
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint, CheckpointError> {
+        if bytes.len() < 4 + 2 + DIGEST_BYTES {
+            return Err(CheckpointError::Malformed("file shorter than header + digest"));
+        }
+        let (body, trailer) = bytes.split_at(bytes.len() - DIGEST_BYTES);
+        let magic = u32::from_le_bytes(body[0..4].try_into().unwrap());
+        if magic != CKPT_MAGIC {
+            return Err(CheckpointError::BadMagic(magic));
+        }
+        let version = u16::from_le_bytes(body[4..6].try_into().unwrap());
+        if version != CKPT_VERSION {
+            return Err(CheckpointError::BadVersion(version));
+        }
+        let mut h = Sha256::new();
+        h.update(body);
+        if h.finalize().as_ref() != trailer {
+            return Err(CheckpointError::ChecksumMismatch);
+        }
+        let mut c = Cursor::new(&body[6..]);
+        let session_id = c.u64()?;
+        let resume_token = c.u64()?;
+        let completed_epochs = c.u64()?;
+        let gen_seq = c.u64()?;
+        let banked_bwd = c.u64()?;
+        let retried = c.u64()?;
+        let active_version = c.u64()?;
+        let top_version = c.u64()?;
+        let active_flat = c.f32_vec(read_len(&mut c)?)?;
+        let top_flat = c.f32_vec(read_len(&mut c)?)?;
+        let n_versions = read_len(&mut c)?;
+        let mut passive_versions = Vec::with_capacity(n_versions.min(65_536));
+        for _ in 0..n_versions {
+            passive_versions.push(c.u64()?);
+        }
+        let n_parties = read_len(&mut c)?;
+        let mut passive_flats = Vec::with_capacity(n_parties.min(65_536));
+        for _ in 0..n_parties {
+            let n = read_len(&mut c)?;
+            passive_flats.push(c.f32_vec(n)?);
+        }
+        let loss_curve = read_curve(&mut c)?;
+        let metric_curve = read_curve(&mut c)?;
+        c.done()?;
+        Ok(Checkpoint {
+            session_id,
+            resume_token,
+            completed_epochs,
+            gen_seq,
+            banked_bwd,
+            retried,
+            active_version,
+            top_version,
+            active_flat,
+            top_flat,
+            passive_versions,
+            passive_flats,
+            loss_curve,
+            metric_curve,
+        })
+    }
+
+    /// Atomically persist to `path`: write `path.tmp`, then rename over
+    /// the old checkpoint, so a crash mid-write leaves the previous
+    /// checkpoint intact. Returns the encoded size.
+    pub fn save(&self, path: &Path) -> Result<u64, CheckpointError> {
+        let bytes = self.encode();
+        let tmp = path.with_extension("bin.tmp");
+        fs::write(&tmp, &bytes)?;
+        fs::rename(&tmp, path)?;
+        Ok(bytes.len() as u64)
+    }
+
+    /// Load and verify the checkpoint at `path`; `Ok(None)` when the
+    /// file does not exist (fresh session).
+    pub fn load(path: &Path) -> Result<Option<Checkpoint>, CheckpointError> {
+        let bytes = match fs::read(path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e.into()),
+        };
+        Checkpoint::decode(&bytes).map(Some)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic xorshift for the property storm (no RNG deps).
+    struct Prng(u64);
+    impl Prng {
+        fn next(&mut self) -> u64 {
+            let mut x = self.0;
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            self.0 = x;
+            x
+        }
+        fn f32(&mut self) -> f32 {
+            (self.next() % 10_000) as f32 / 100.0 - 50.0
+        }
+        fn f64(&mut self) -> f64 {
+            (self.next() % 1_000_000) as f64 / 1000.0
+        }
+    }
+
+    fn arbitrary(rng: &mut Prng) -> Checkpoint {
+        let parties = (rng.next() % 4) as usize;
+        let epochs = (rng.next() % 6) as usize;
+        Checkpoint {
+            session_id: rng.next(),
+            resume_token: rng.next(),
+            completed_epochs: epochs as u64,
+            gen_seq: rng.next() % 1000,
+            banked_bwd: rng.next() % 10_000,
+            retried: rng.next() % 100,
+            active_version: rng.next() % 500,
+            top_version: rng.next() % 500,
+            active_flat: (0..(rng.next() % 64)).map(|_| rng.f32()).collect(),
+            top_flat: (0..(rng.next() % 64)).map(|_| rng.f32()).collect(),
+            passive_versions: (0..parties).map(|_| rng.next() % 500).collect(),
+            passive_flats: (0..parties)
+                .map(|_| (0..(rng.next() % 64)).map(|_| rng.f32()).collect())
+                .collect(),
+            loss_curve: (0..epochs).map(|i| (i as f64, rng.f64())).collect(),
+            metric_curve: (0..epochs).map(|i| (i as f64, rng.f64())).collect(),
+        }
+    }
+
+    #[test]
+    fn round_trip_property_over_arbitrary_checkpoints() {
+        let mut rng = Prng(0x5EED_CAFE);
+        for case in 0..200 {
+            let ckpt = arbitrary(&mut rng);
+            let bytes = ckpt.encode();
+            let back = Checkpoint::decode(&bytes).unwrap_or_else(|e| {
+                panic!("case {case}: decode failed: {e} ({ckpt:?})")
+            });
+            assert_eq!(back, ckpt, "case {case}");
+        }
+    }
+
+    #[test]
+    fn float_payloads_round_trip_bit_exact() {
+        let ckpt = Checkpoint {
+            active_flat: vec![f32::NAN, f32::INFINITY, -0.0, f32::MIN_POSITIVE],
+            loss_curve: vec![(0.0, f64::NAN)],
+            ..Checkpoint::default()
+        };
+        let back = Checkpoint::decode(&ckpt.encode()).unwrap();
+        for (a, e) in back.active_flat.iter().zip(ckpt.active_flat.iter()) {
+            assert_eq!(a.to_bits(), e.to_bits());
+        }
+        assert_eq!(back.loss_curve[0].1.to_bits(), ckpt.loss_curve[0].1.to_bits());
+    }
+
+    /// Satellite: corruption storm. Truncations at every byte, a bit flip
+    /// at every byte, wrong magic/version — all must error, never panic.
+    #[test]
+    fn corruption_storm_truncation_and_bitflips() {
+        let mut rng = Prng(0xBAD_F00D);
+        let ckpt = arbitrary(&mut rng);
+        let bytes = ckpt.encode();
+
+        for cut in 0..bytes.len() {
+            assert!(
+                Checkpoint::decode(&bytes[..cut]).is_err(),
+                "truncation at {cut} must not decode"
+            );
+        }
+        for i in 0..bytes.len() {
+            let mut flipped = bytes.clone();
+            flipped[i] ^= 0x40;
+            // A flip anywhere lands in the digest or the digested body;
+            // either way verification must reject it.
+            assert!(
+                Checkpoint::decode(&flipped).is_err(),
+                "bit flip at {i} must not decode"
+            );
+        }
+    }
+
+    #[test]
+    fn wrong_magic_and_version_rejected() {
+        let bytes = Checkpoint::default().encode();
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(matches!(Checkpoint::decode(&bad).unwrap_err(), CheckpointError::BadMagic(_)));
+        let mut bad = bytes.clone();
+        bad[4] = 0x7F;
+        assert!(matches!(
+            Checkpoint::decode(&bad).unwrap_err(),
+            CheckpointError::BadVersion(_)
+        ));
+        assert!(matches!(
+            Checkpoint::decode(&[]).unwrap_err(),
+            CheckpointError::Malformed(_)
+        ));
+    }
+
+    #[test]
+    fn save_is_atomic_and_load_round_trips() {
+        let dir = std::env::temp_dir()
+            .join(format!("pubsub-vfl-ckpt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("checkpoint.bin");
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(Checkpoint::load(&path).unwrap(), None);
+
+        let mut rng = Prng(42);
+        let first = arbitrary(&mut rng);
+        first.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), Some(first.clone()));
+
+        // Overwrite with a second snapshot; the rename swaps wholesale.
+        let second = arbitrary(&mut rng);
+        second.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), Some(second));
+        assert!(!path.with_extension("bin.tmp").exists(), "tmp file left behind");
+
+        // A corrupt file on disk is an error, not a partial restore.
+        let mut raw = std::fs::read(&path).unwrap();
+        let mid = raw.len() / 2;
+        raw[mid] ^= 0x10;
+        std::fs::write(&path, &raw).unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+}

@@ -1,0 +1,391 @@
+//! Append-only, length-prefixed frame log for one topic.
+//!
+//! Each record on disk is `[seq: u64 LE]` followed by one wire-encoded
+//! frame — the frame's own 10-byte header carries the payload length, so
+//! the log reuses the `wire.rs` codec wholesale instead of inventing a
+//! second serialization layer. Semantics are ring-buffer-with-TTL,
+//! modeled on production Pub/Sub topic metadata (a `ring_size` depth cap
+//! plus per-message TTL, and per-publisher byte limits with cleanup
+//! deferred to idle time):
+//!
+//! - **depth/byte caps** — appending past `max_entries` or `max_bytes`
+//!   evicts the oldest retained records (counted, never silent);
+//! - **TTL** — [`TopicLog::sweep_ttl`] expires records older than
+//!   `ttl`; the supervisor calls it at barriers (the session's idle
+//!   points), not on the hot path;
+//! - **compaction** — eviction and delivery marking are logical (the
+//!   in-memory index drops the record); [`TopicLog::compact`] rewrites
+//!   the file to the retained set atomically (tmp + rename), again at
+//!   idle time.
+//!
+//! A consumer acknowledges progress with
+//! [`TopicLog::mark_delivered_through`]; everything newer is what
+//! [`TopicLog::replay_undelivered`] hands back on a rejoin. A torn tail
+//! (crash mid-append) is tolerated on reopen: complete records before
+//! the tear are recovered, the tear itself is dropped.
+
+use crate::coordinator::wire::{self, Frame};
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+/// Retention caps for one topic log (the `ring_size`/TTL knobs).
+#[derive(Clone, Copy, Debug)]
+pub struct LogCaps {
+    /// Maximum retained records; older records are ring-evicted.
+    pub max_entries: usize,
+    /// Maximum retained encoded bytes across records.
+    pub max_bytes: u64,
+    /// Per-record time-to-live; `None` disables expiry.
+    pub ttl: Option<Duration>,
+}
+
+impl Default for LogCaps {
+    fn default() -> LogCaps {
+        LogCaps {
+            max_entries: 1024,
+            max_bytes: 64 * 1024 * 1024,
+            ttl: Some(Duration::from_secs(60)),
+        }
+    }
+}
+
+/// Counters and gauges for one topic log, surfaced as `broker_*` metric
+/// series by the supervisor.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TopicLogStats {
+    /// Records currently retained.
+    pub depth: usize,
+    /// Encoded bytes currently retained.
+    pub live_bytes: u64,
+    /// Total bytes ever appended to disk (monotonic).
+    pub bytes_written: u64,
+    /// Records dropped by the depth/byte ring caps.
+    pub evicted: u64,
+    /// Records dropped by TTL expiry.
+    pub expired: u64,
+    /// Next sequence number to be assigned.
+    pub next_seq: u64,
+    /// Delivery watermark: every record with `seq < delivered_through`
+    /// has been acknowledged.
+    pub delivered_through: u64,
+}
+
+struct LogEntry {
+    seq: u64,
+    appended_at: Instant,
+    /// The encoded frame (wire bytes, header included). Kept in memory so
+    /// replay and compaction never re-read the file; the ring caps bound
+    /// this cache exactly as they bound the disk footprint.
+    bytes: Vec<u8>,
+}
+
+/// One topic's durable frame log. Not thread-safe by itself — the hub
+/// wraps each log in a `Mutex` (topic lanes are independent, so this
+/// never contends across topics).
+pub struct TopicLog {
+    name: String,
+    path: PathBuf,
+    file: File,
+    entries: VecDeque<LogEntry>,
+    caps: LogCaps,
+    next_seq: u64,
+    delivered_through: u64,
+    live_bytes: u64,
+    bytes_written: u64,
+    evicted: u64,
+    expired: u64,
+}
+
+impl TopicLog {
+    /// Open (or create) the log at `path`, recovering any complete
+    /// records already on disk. Recovered records are re-stamped at open
+    /// time for TTL purposes; a torn tail is discarded.
+    pub fn open(name: &str, path: &Path, caps: LogCaps) -> Result<TopicLog> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating log dir {}", parent.display()))?;
+        }
+        let mut raw = Vec::new();
+        if path.exists() {
+            File::open(path)
+                .and_then(|mut f| f.read_to_end(&mut raw))
+                .with_context(|| format!("reading topic log {}", path.display()))?;
+        }
+        let now = Instant::now();
+        let mut entries = VecDeque::new();
+        let mut next_seq = 0u64;
+        let mut live_bytes = 0u64;
+        let mut pos = 0usize;
+        while raw.len() - pos >= 8 {
+            let seq = u64::from_le_bytes(raw[pos..pos + 8].try_into().unwrap());
+            match wire::try_decode(&raw[pos + 8..]) {
+                Ok(Some((_, used))) => {
+                    let bytes = raw[pos + 8..pos + 8 + used].to_vec();
+                    live_bytes += bytes.len() as u64;
+                    entries.push_back(LogEntry { seq, appended_at: now, bytes });
+                    next_seq = next_seq.max(seq + 1);
+                    pos += 8 + used;
+                }
+                // Incomplete or corrupt tail: keep what decoded cleanly.
+                Ok(None) | Err(_) => break,
+            }
+        }
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening topic log {}", path.display()))?;
+        let mut log = TopicLog {
+            name: name.to_string(),
+            path: path.to_path_buf(),
+            file,
+            entries,
+            caps,
+            next_seq,
+            delivered_through: 0,
+            live_bytes,
+            bytes_written: live_bytes,
+            evicted: 0,
+            expired: 0,
+        };
+        log.enforce_caps();
+        Ok(log)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Append one frame; returns its sequence number. Enforces the ring
+    /// caps immediately (oldest-first eviction).
+    pub fn append(&mut self, frame: &Frame) -> Result<u64> {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let bytes = wire::encode(frame);
+        self.file
+            .write_all(&seq.to_le_bytes())
+            .and_then(|()| self.file.write_all(&bytes))
+            .with_context(|| format!("appending to topic log {}", self.path.display()))?;
+        self.live_bytes += bytes.len() as u64;
+        self.bytes_written += 8 + bytes.len() as u64;
+        self.entries.push_back(LogEntry { seq, appended_at: Instant::now(), bytes });
+        self.enforce_caps();
+        Ok(seq)
+    }
+
+    fn enforce_caps(&mut self) {
+        while self.entries.len() > self.caps.max_entries
+            || (self.live_bytes > self.caps.max_bytes && self.entries.len() > 1)
+        {
+            if let Some(e) = self.entries.pop_front() {
+                self.live_bytes -= e.bytes.len() as u64;
+                self.evicted += 1;
+            }
+        }
+    }
+
+    /// Expire records older than the TTL. Called from idle points
+    /// (barriers), not the append path.
+    pub fn sweep_ttl(&mut self) {
+        let Some(ttl) = self.caps.ttl else { return };
+        let now = Instant::now();
+        while let Some(front) = self.entries.front() {
+            if now.duration_since(front.appended_at) < ttl {
+                break;
+            }
+            let e = self.entries.pop_front().unwrap();
+            self.live_bytes -= e.bytes.len() as u64;
+            self.expired += 1;
+        }
+    }
+
+    /// Acknowledge delivery of every record with `seq < through` (an
+    /// exclusive watermark, so `through == next_seq` means fully
+    /// drained); they become compactable.
+    pub fn mark_delivered_through(&mut self, through: u64) {
+        self.delivered_through = self.delivered_through.max(through);
+    }
+
+    /// Decode and return the retained records newer than the delivery
+    /// watermark — what a rejoining subscriber is owed.
+    pub fn replay_undelivered(&self) -> Result<Vec<(u64, Frame)>> {
+        let mut out = Vec::new();
+        for e in &self.entries {
+            if e.seq < self.delivered_through {
+                continue;
+            }
+            let (frame, _) = wire::decode(&e.bytes).map_err(|err| {
+                anyhow::anyhow!("corrupt record {} in {}: {err}", e.seq, self.name)
+            })?;
+            out.push((e.seq, frame));
+        }
+        Ok(out)
+    }
+
+    /// Rewrite the file to the retained, undelivered set (tmp + rename),
+    /// dropping delivered and evicted records from disk. Idle-time work.
+    pub fn compact(&mut self) -> Result<()> {
+        while let Some(front) = self.entries.front() {
+            if front.seq >= self.delivered_through {
+                break;
+            }
+            let e = self.entries.pop_front().unwrap();
+            self.live_bytes -= e.bytes.len() as u64;
+        }
+        let tmp = self.path.with_extension("log.tmp");
+        {
+            let mut f = File::create(&tmp)
+                .with_context(|| format!("creating compaction file {}", tmp.display()))?;
+            for e in &self.entries {
+                f.write_all(&e.seq.to_le_bytes())?;
+                f.write_all(&e.bytes)?;
+            }
+            f.flush()?;
+        }
+        std::fs::rename(&tmp, &self.path)
+            .with_context(|| format!("swapping compacted log into {}", self.path.display()))?;
+        self.file = OpenOptions::new()
+            .append(true)
+            .open(&self.path)
+            .with_context(|| format!("reopening compacted log {}", self.path.display()))?;
+        Ok(())
+    }
+
+    pub fn stats(&self) -> TopicLogStats {
+        TopicLogStats {
+            depth: self.entries.len(),
+            live_bytes: self.live_bytes,
+            bytes_written: self.bytes_written,
+            evicted: self.evicted,
+            expired: self.expired,
+            next_seq: self.next_seq,
+            delivered_through: self.delivered_through,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        let name = format!("pubsub-vfl-log-{}-{tag}", std::process::id());
+        let dir = std::env::temp_dir().join(name);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("topic.log")
+    }
+
+    fn job(batch_id: u64) -> Frame {
+        Frame::EmbedJob { party: 0, batch_id, generation: batch_id + 1 }
+    }
+
+    #[test]
+    fn append_survives_reopen() {
+        let path = tmp_path("reopen");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut log = TopicLog::open("t", &path, LogCaps::default()).unwrap();
+            for i in 0..5 {
+                assert_eq!(log.append(&job(i)).unwrap(), i);
+            }
+        }
+        let log = TopicLog::open("t", &path, LogCaps::default()).unwrap();
+        let frames = log.replay_undelivered().unwrap();
+        assert_eq!(frames.len(), 5);
+        assert_eq!(frames[3], (3, job(3)));
+        assert_eq!(log.stats().next_seq, 5);
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_on_reopen() {
+        let path = tmp_path("torn");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut log = TopicLog::open("t", &path, LogCaps::default()).unwrap();
+            log.append(&job(0)).unwrap();
+            log.append(&job(1)).unwrap();
+        }
+        // Tear the last record mid-frame.
+        let mut raw = std::fs::read(&path).unwrap();
+        raw.truncate(raw.len() - 7);
+        std::fs::write(&path, &raw).unwrap();
+        let log = TopicLog::open("t", &path, LogCaps::default()).unwrap();
+        let frames = log.replay_undelivered().unwrap();
+        assert_eq!(frames, vec![(0, job(0))]);
+    }
+
+    #[test]
+    fn ring_caps_evict_oldest() {
+        let path = tmp_path("ring");
+        let _ = std::fs::remove_file(&path);
+        let caps = LogCaps { max_entries: 3, ..LogCaps::default() };
+        let mut log = TopicLog::open("t", &path, caps).unwrap();
+        for i in 0..10 {
+            log.append(&job(i)).unwrap();
+        }
+        let s = log.stats();
+        assert_eq!(s.depth, 3);
+        assert_eq!(s.evicted, 7);
+        let seqs: Vec<u64> = log.replay_undelivered().unwrap().iter().map(|(s, _)| *s).collect();
+        assert_eq!(seqs, vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn byte_cap_evicts_but_keeps_newest() {
+        let path = tmp_path("bytes");
+        let _ = std::fs::remove_file(&path);
+        let caps = LogCaps { max_bytes: 100, ..LogCaps::default() };
+        let mut log = TopicLog::open("t", &path, caps).unwrap();
+        for i in 0..8 {
+            log.append(&job(i)).unwrap();
+        }
+        let s = log.stats();
+        assert!(s.live_bytes <= 100, "live {} over cap", s.live_bytes);
+        assert!(s.depth >= 1);
+        assert!(s.evicted > 0);
+    }
+
+    #[test]
+    fn ttl_sweep_expires_old_records() {
+        let path = tmp_path("ttl");
+        let _ = std::fs::remove_file(&path);
+        let caps = LogCaps { ttl: Some(Duration::from_millis(20)), ..LogCaps::default() };
+        let mut log = TopicLog::open("t", &path, caps).unwrap();
+        log.append(&job(0)).unwrap();
+        log.append(&job(1)).unwrap();
+        std::thread::sleep(Duration::from_millis(40));
+        log.append(&job(2)).unwrap();
+        log.sweep_ttl();
+        let s = log.stats();
+        assert_eq!(s.expired, 2);
+        let seqs: Vec<u64> = log.replay_undelivered().unwrap().iter().map(|(s, _)| *s).collect();
+        assert_eq!(seqs, vec![2]);
+    }
+
+    #[test]
+    fn delivery_watermark_and_compaction() {
+        let path = tmp_path("compact");
+        let _ = std::fs::remove_file(&path);
+        let mut log = TopicLog::open("t", &path, LogCaps::default()).unwrap();
+        for i in 0..6 {
+            log.append(&job(i)).unwrap();
+        }
+        log.mark_delivered_through(3);
+        let undelivered: Vec<u64> =
+            log.replay_undelivered().unwrap().iter().map(|(s, _)| *s).collect();
+        assert_eq!(undelivered, vec![3, 4, 5]);
+        log.compact().unwrap();
+        assert_eq!(log.stats().depth, 3);
+        // Post-compaction appends land after the retained tail, and the
+        // file reflects exactly the retained set.
+        log.append(&job(6)).unwrap();
+        let reopened = TopicLog::open("t", &path, LogCaps::default()).unwrap();
+        let seqs: Vec<u64> =
+            reopened.replay_undelivered().unwrap().iter().map(|(s, _)| *s).collect();
+        assert_eq!(seqs, vec![3, 4, 5, 6]);
+    }
+}

@@ -167,6 +167,21 @@ impl BatchLedger {
         self.state.lock().unwrap().retried
     }
 
+    /// The session-monotonic generation sequence — the high-water mark a
+    /// barrier checkpoint records so a resumed session never reuses a
+    /// generation.
+    pub fn gen_seq(&self) -> u64 {
+        self.state.lock().unwrap().gen_seq
+    }
+
+    /// Raise the generation sequence to at least `floor` (checkpoint
+    /// restore in a fresh process). Never lowers it: in-session rejoin
+    /// keeps its own, already-higher sequence.
+    pub fn resume_gen_seq(&self, floor: u64) {
+        let mut s = self.state.lock().unwrap();
+        s.gen_seq = s.gen_seq.max(floor);
+    }
+
     /// Current generation of a batch (tests/diagnostics).
     pub fn generation(&self, batch_id: u64) -> Option<u64> {
         self.state.lock().unwrap().entries.get(&batch_id).map(|e| e.generation)
@@ -666,6 +681,23 @@ mod tests {
         // never alias a new attempt.
         assert!(l.generation(30).unwrap() > g1);
         assert!(l.claim_bwd(10, g1, 0).is_none());
+    }
+
+    #[test]
+    fn resume_gen_seq_raises_but_never_lowers() {
+        let l = ledger_with(1, &[10, 11]);
+        let before = l.gen_seq();
+        assert!(before >= 2, "one generation per installed batch");
+        // Checkpoint restore in a fresh process: floor wins.
+        l.resume_gen_seq(before + 40);
+        assert_eq!(l.gen_seq(), before + 40);
+        // In-session rejoin: an older checkpoint can't roll it back.
+        l.resume_gen_seq(1);
+        assert_eq!(l.gen_seq(), before + 40);
+        // New installs mint generations above the restored floor.
+        let batches = vec![(30u64, rows(4))];
+        l.install_epoch(1, &batches);
+        assert!(l.generation(30).unwrap() > before + 40);
     }
 
     #[test]

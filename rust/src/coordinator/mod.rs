@@ -11,6 +11,7 @@
 
 pub mod broker;
 pub mod channel;
+pub mod durable;
 pub mod ledger;
 pub mod messages;
 pub mod ps;
@@ -20,16 +21,17 @@ pub mod wire;
 
 pub use broker::Broker;
 pub use channel::{Publish, SubResult, Topic};
+pub use durable::{Checkpoint, CheckpointError, DurableHub, LogCaps, TopicLog};
 pub use ledger::{BatchLedger, BatchStage, EmbedJob};
 pub use messages::{EmbeddingMsg, GradientMsg};
 pub use ps::{ParameterServer, PsMode, SemiAsyncSchedule};
 pub use session::{
     evaluate, evaluate_ws, reached, serve_passive, serve_passive_listener,
-    serve_passive_session, train_pubsub, train_pubsub_over_link, train_pubsub_session,
-    PassiveSessionReport, SessionResult,
+    serve_passive_session, train_pubsub, train_pubsub_over_link, train_pubsub_over_link_with,
+    train_pubsub_session, PassiveSessionReport, SessionResult,
 };
 pub use transport::{
-    InProcLink, InProcTransport, Link, LinkRecv, LinkStats, LinkStatsSnapshot, TcpLink,
-    TcpTransport, Transport, TransportKind,
+    InProcLink, InProcTransport, Link, LinkRecv, LinkStats, LinkStatsSnapshot, SwappableLink,
+    TcpLink, TcpTransport, Transport, TransportKind,
 };
 pub use wire::{Frame, WireError, WIRE_VERSION};

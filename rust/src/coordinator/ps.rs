@@ -99,6 +99,19 @@ impl ParameterServer {
         s.params = params;
         s.version += 1;
     }
+
+    /// Restore a checkpointed `(params, version)` pair exactly — unlike
+    /// [`ParameterServer::set_params`] the version is pinned, not
+    /// bumped, so staleness accounting picks up where the checkpoint
+    /// left off. Pending accumulation is discarded (it belongs to the
+    /// aborted epoch attempt).
+    pub fn restore(&self, params: MlpParams, version: u64) {
+        let mut s = self.state.lock().unwrap();
+        s.accum = params.zeros_like();
+        s.n_accum = 0;
+        s.params = params;
+        s.version = version;
+    }
 }
 
 /// The semi-asynchronous controller: decides, per epoch, whether the PS
@@ -171,6 +184,21 @@ mod tests {
         q.weights[0].scale(0.0);
         ps.set_params(q.clone());
         assert_eq!(ps.fetch().0.weights[0].data, q.weights[0].data);
+    }
+
+    #[test]
+    fn restore_pins_params_and_version() {
+        let p = params();
+        let ps = ParameterServer::new(p.clone(), 0.1, PsMode::Async);
+        let mut g = p.zeros_like();
+        *g.weights[0].at_mut(0, 0) = 1.0;
+        ps.push_grad(&g);
+        assert_eq!(ps.version(), 1);
+        ps.restore(p.clone(), 17);
+        let (now, v) = ps.fetch();
+        assert_eq!(v, 17, "restore pins the checkpointed version");
+        assert_eq!(now.weights[0].data, p.weights[0].data);
+        assert_eq!(ps.pending(), 0);
     }
 
     #[test]

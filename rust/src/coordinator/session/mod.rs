@@ -29,7 +29,7 @@ pub mod supervisor;
 pub use passive::{
     serve_passive, serve_passive_listener, serve_passive_session, PassiveSessionReport,
 };
-pub use supervisor::{train_pubsub_over_link, train_pubsub_session};
+pub use supervisor::{train_pubsub_over_link, train_pubsub_over_link_with, train_pubsub_session};
 
 use crate::config::ExperimentConfig;
 use crate::data::{Task, VerticalDataset};

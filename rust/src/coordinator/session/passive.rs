@@ -477,9 +477,40 @@ pub fn serve_passive_session(
     let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
     loop {
         match link.recv(Duration::from_millis(100)) {
-            LinkRecv::Frame(Frame::Hello { parties }) => {
+            LinkRecv::Frame(Frame::Hello { parties, session_id, resume_token, attempt }) => {
                 if parties as usize != k {
                     bail!("active party expects {parties} passive parties, this server holds {k}");
+                }
+                // Durable identity: a state dir pins this server to one
+                // session. A recorded identity that does not match the
+                // incoming Hello means the active is resuming a *different*
+                // session than the one whose state lives here — refuse
+                // rather than silently mix state. A fresh state dir (no
+                // session file yet, e.g. a restarted server whose disk was
+                // wiped) accepts any attempt and records the identity.
+                if cfg.durability.enabled() {
+                    let dir = std::path::Path::new(&cfg.durability.state_dir);
+                    match super::super::durable::read_session_file(dir)? {
+                        Some((sid, tok)) if (sid, tok) != (session_id, resume_token) => {
+                            bail!(
+                                "rejoin rejected: state dir {} holds session \
+                                 {sid:#x}/{tok:#x} but the active party offered \
+                                 {session_id:#x}/{resume_token:#x} (attempt {attempt})",
+                                dir.display()
+                            );
+                        }
+                        Some(_) => {}
+                        None => {
+                            super::super::durable::write_session_file(
+                                dir,
+                                session_id,
+                                resume_token,
+                            )?;
+                        }
+                    }
+                }
+                if attempt > 0 {
+                    metrics.inc("rejoin_handshakes", 1);
                 }
                 break;
             }
@@ -496,6 +527,15 @@ pub fn serve_passive_session(
         .map_err(|e| anyhow!("handshake ack failed: {e}"))?;
 
     let mut epochs_served = 0usize;
+    // Satellite of the durability work: distinguish an orderly teardown
+    // (the active sent `Shutdown`) from the supervisor link dropping
+    // mid-session — the latter must surface as a hard error so a process
+    // supervisor (or CI harness) restarts this server with `--resume`.
+    let mut clean_shutdown = false;
+    // Restore frames are length-checked against the spec before
+    // `unflatten` (which asserts on mismatch) ever sees them.
+    let passive_param_counts: Vec<usize> =
+        spec.passive_bottoms.iter().map(|s| s.param_count()).collect();
     let sh = ServeShared {
         link: &link,
         metrics: &metrics,
@@ -689,7 +729,45 @@ pub fn serve_passive_session(
                             });
                         }
                     }
-                    Frame::Shutdown => break,
+                    Frame::Resume { epoch, banked_bwd } => {
+                        // Rejoin bookkeeping for a *restarted* passive
+                        // process: the active's checkpoint says `epoch`
+                        // epochs fully completed before the crash, each
+                        // worth `banked_bwd / epoch` applied backward
+                        // passes that this fresh process never saw. Bank
+                        // them so the conservation law
+                        // (`passive_bwd == epochs × n_batches × k`) holds
+                        // over the whole logical session, not just this
+                        // process's lifetime.
+                        metrics.inc("passive_bwd", banked_bwd);
+                        epochs_served = epochs_served.max(epoch as usize);
+                        metrics.inc("resumes_applied", 1);
+                    }
+                    Frame::RestoreParams { party, version, flat } => {
+                        let party = party as usize;
+                        if party >= k {
+                            metrics.inc("wire_bad_party", 1);
+                            continue;
+                        }
+                        if Some(&flat.len()) != passive_param_counts.get(party) {
+                            // Wrong shape for this spec: refuse the
+                            // restore rather than panic in `unflatten`.
+                            metrics.inc("wire_bad_restore", 1);
+                            continue;
+                        }
+                        let params = MlpParams::unflatten(&spec.passive_bottoms[party], &flat);
+                        for rep in &replicas[party] {
+                            let mut g = rep.lock().unwrap();
+                            g.params = params.clone();
+                            g.version = version;
+                        }
+                        ps[party].restore(params, version);
+                        metrics.inc("params_restored", 1);
+                    }
+                    Frame::Shutdown => {
+                        clean_shutdown = true;
+                        break;
+                    }
                     _ => metrics.inc("wire_unexpected_frame", 1),
                 },
                 LinkRecv::TimedOut => {}
@@ -702,6 +780,22 @@ pub fn serve_passive_session(
             t.close();
         }
     });
+
+    if !clean_shutdown {
+        // The dispatcher saw the link close (or poison) without a
+        // `Shutdown` frame: the active supervisor crashed or the network
+        // partitioned for good. Exit loudly and non-zero — a process
+        // supervisor restarts this server with `--state-dir … --resume`
+        // to rejoin the durable session.
+        bail!(
+            "supervisor link dropped without Shutdown ({} epochs installed, \
+             {} backward passes applied, {} embeddings published); restart \
+             with --state-dir/--resume to rejoin a durable session",
+            epochs_served,
+            metrics.counter("passive_bwd"),
+            metrics.counter("emb_published")
+        );
+    }
 
     Ok(PassiveSessionReport {
         epochs_served,

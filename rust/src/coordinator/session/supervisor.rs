@@ -24,10 +24,11 @@
 
 use super::super::broker::Broker;
 use super::super::channel::SubResult;
+use super::super::durable::{Checkpoint, DurableHub};
 use super::super::ledger::BatchLedger;
 use super::super::ps::{ParameterServer, PsMode, SemiAsyncSchedule};
 use super::super::transport::{
-    FaultStatsSnapshot, Link, LinkRecv, LinkStatsSnapshot, TcpLink, TransportKind,
+    FaultStatsSnapshot, Link, LinkRecv, LinkStatsSnapshot, SwappableLink, TcpLink, TransportKind,
 };
 use super::super::wire::Frame;
 use super::active::{run_active_worker, ActiveReplica, ActiveShared, PassiveVersionView};
@@ -39,9 +40,10 @@ use super::{evaluate_ws, mean_params, reached, SessionResult};
 use crate::data::BatchPlan;
 use crate::experiment::{RunEvent, TrainCtx};
 use crate::linalg;
-use crate::model::{MlpParams, SplitParams, Workspace};
+use crate::model::{MlpParams, SplitModelSpec, SplitParams, Workspace};
 use crate::util::{Rng, Stopwatch};
 use anyhow::{anyhow, bail, Result};
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -59,7 +61,7 @@ const SYNC_TIMEOUT: Duration = Duration::from_secs(120);
 /// wire.
 pub fn train_pubsub_session(ctx: &TrainCtx<'_>) -> Result<SessionResult> {
     match ctx.cfg.transport.kind {
-        TransportKind::InProc => Ok(train_local(ctx)),
+        TransportKind::InProc => train_local(ctx),
         TransportKind::Tcp => {
             let addr = ctx.cfg.transport.connect.clone();
             if addr.is_empty() {
@@ -84,16 +86,80 @@ pub fn train_pubsub_session(ctx: &TrainCtx<'_>) -> Result<SessionResult> {
                 &ctx.cfg.transport.fault_profile,
                 fault_seed,
             )?;
-            train_pubsub_over_link(ctx, link)
+            if ctx.cfg.durability.enabled() {
+                // Durable session: a mid-epoch link loss redials the same
+                // passive endpoint. The replacement link gets the same
+                // fault profile, re-seeded per attempt with its
+                // crash-shaped faults stripped (see testkit).
+                let profile = ctx.cfg.transport.fault_profile.clone();
+                let reconnect = move |attempt: u32| -> Result<Arc<dyn Link>> {
+                    let l = TcpLink::connect(&addr, timeout)
+                        .map_err(|e| anyhow!("rejoin dial to {addr} failed: {e}"))?;
+                    crate::testkit::wrap_link_named_attempt(
+                        Arc::new(l),
+                        &profile,
+                        fault_seed,
+                        attempt,
+                    )
+                };
+                train_pubsub_over_link_with(ctx, link, Some(&reconnect))
+            } else {
+                train_pubsub_over_link(ctx, link)
+            }
         }
     }
 }
 
+/// Deterministic durable-session identity: the active party derives
+/// `(session_id, resume_token)` from the experiment seed, so a restarted
+/// `train --resume` presents the same identity the passive's session file
+/// recorded on first contact.
+fn session_identity(seed: u64) -> (u64, u64) {
+    let mut rng = Rng::new(seed ^ 0x5E55_1D00_7C0F_FEE5);
+    (rng.next_u64(), rng.next_u64())
+}
+
+/// Refuse to resume from a checkpoint written by a different experiment:
+/// wrong identity (seed) or wrong model shapes are loud errors, never a
+/// silent fresh start with mismatched parameters.
+fn validate_checkpoint(
+    ck: &Checkpoint,
+    session_id: u64,
+    resume_token: u64,
+    spec: &SplitModelSpec,
+) -> Result<()> {
+    if (ck.session_id, ck.resume_token) != (session_id, resume_token) {
+        bail!(
+            "checkpoint belongs to session {:#x}/{:#x}, this run derives {session_id:#x}/\
+             {resume_token:#x} (different seed or experiment — refusing to resume)",
+            ck.session_id,
+            ck.resume_token,
+        );
+    }
+    let k = spec.passive_bottoms.len();
+    let flats_ok = ck.passive_flats.len() == k
+        && ck.passive_versions.len() == k
+        && ck
+            .passive_flats
+            .iter()
+            .zip(&spec.passive_bottoms)
+            .all(|(f, s)| f.len() == s.param_count());
+    if ck.active_flat.len() != spec.active_bottom.param_count()
+        || ck.top_flat.len() != spec.top.param_count()
+        || !flats_ok
+    {
+        bail!("checkpoint parameter shapes do not match this experiment's model spec");
+    }
+    Ok(())
+}
+
 /// The in-process session: persistent worker pools for both parties over
 /// the shared broker. Semantics are identical to the pre-refactor
-/// single-file session.
+/// single-file session. With `[durability]` configured it writes a
+/// barrier-aligned checkpoint per epoch and `--resume` fast-forwards past
+/// the completed ones (banking their backward credit).
 #[allow(clippy::too_many_lines)]
-fn train_local(ctx: &TrainCtx<'_>) -> SessionResult {
+fn train_local(ctx: &TrainCtx<'_>) -> Result<SessionResult> {
     let engine = &ctx.engine;
     let spec = ctx.spec;
     let train = ctx.train;
@@ -203,6 +269,53 @@ fn train_local(ctx: &TrainCtx<'_>) -> SessionResult {
     let mut eval_ws = Workspace::new(linalg::worker_backend(backend_kind, 1));
     let sw = Stopwatch::start();
 
+    // ---- durability: barrier checkpoints + resume fast-forward ----------
+    let hub = if cfg.durability.enabled() {
+        Some(DurableHub::open(Path::new(&cfg.durability.state_dir), k, cfg.durability.log_caps())?)
+    } else {
+        None
+    };
+    let (session_id, resume_token) = session_identity(cfg.seed);
+    let mut start_epoch = 0usize;
+    let mut banked_bwd = 0u64;
+    let mut resume_retried = 0u64;
+    if cfg.durability.resume {
+        let h = hub.as_ref().expect("config validation ties --resume to --state-dir");
+        if let Some(ck) = h.load_checkpoint()? {
+            validate_checkpoint(&ck, session_id, resume_token, spec)?;
+            start_epoch = ck.completed_epochs as usize;
+            banked_bwd = ck.banked_bwd;
+            resume_retried = ck.retried;
+            loss_curve = ck.loss_curve.clone();
+            metric_curve = ck.metric_curve.clone();
+            epochs_run = start_epoch;
+            ledger.resume_gen_seq(ck.gen_seq);
+            // The banked credit keeps the conservation law whole: the
+            // resumed process never re-runs the checkpointed epochs.
+            metrics.inc("passive_bwd", ck.banked_bwd);
+            metrics.inc("resumed_from_checkpoint", 1);
+            let a = MlpParams::unflatten(&spec.active_bottom, &ck.active_flat);
+            let t = MlpParams::unflatten(&spec.top, &ck.top_flat);
+            for r in &active_replicas {
+                let mut g = r.lock().unwrap();
+                g.active = a.clone();
+                g.top = t.clone();
+            }
+            ps_active.restore(a, ck.active_version);
+            ps_top.restore(t, ck.top_version);
+            for (party, ps) in ps_passive.iter().enumerate() {
+                let p =
+                    MlpParams::unflatten(&spec.passive_bottoms[party], &ck.passive_flats[party]);
+                for r in &passive_replicas[party] {
+                    let mut g = r.lock().unwrap();
+                    g.params = p.clone();
+                    g.version = ck.passive_versions[party];
+                }
+                ps.restore(p, ck.passive_versions[party]);
+            }
+        }
+    }
+
     let active_sh = ActiveShared {
         broker: &broker,
         ledger: &ledger,
@@ -238,7 +351,7 @@ fn train_local(ctx: &TrainCtx<'_>) -> SessionResult {
         poll,
     };
 
-    std::thread::scope(|s| {
+    let run_result: Result<()> = std::thread::scope(|s| {
         // ---- persistent passive workers (live for the whole session) --
         for (party, replicas) in passive_replicas.iter().enumerate() {
             for replica in replicas.iter() {
@@ -257,18 +370,28 @@ fn train_local(ctx: &TrainCtx<'_>) -> SessionResult {
         }
 
         // ---- epoch supervisor (this thread) ---------------------------
+        // The only fallible work in the in-proc loop is the durable
+        // checkpoint write; it lands here so the scope can still join the
+        // workers before the error propagates.
+        let mut epoch_err: Option<anyhow::Error> = None;
         for epoch in 0..ctx.epochs() {
             if ctx.cancelled() {
                 cancelled = true;
                 epochs_run = epoch;
                 break;
             }
-            epochs_run = epoch + 1;
             let plan = BatchPlan::for_epoch(train.len(), b, epoch as u64, &mut rng);
             let batches: Vec<(u64, Arc<Vec<usize>>)> = plan
                 .full_batches()
                 .map(|a| (a.batch_id, Arc::new(a.rows.clone())))
                 .collect();
+            if epoch < start_epoch {
+                // Resumed: this epoch's work is banked in the checkpoint;
+                // burning its plan keeps the rng stream identical to the
+                // original run's.
+                continue;
+            }
+            epochs_run = epoch + 1;
             if batches.is_empty() {
                 break;
             }
@@ -349,6 +472,44 @@ fn train_local(ctx: &TrainCtx<'_>) -> SessionResult {
             metrics.push_point("eval_metric", epoch as f64, metric);
             opts.emit(RunEvent::Eval { epoch, metric });
             opts.emit(RunEvent::EpochEnd { epoch, mean_loss, metric });
+
+            // ---- durable barrier checkpoint --------------------------
+            if let Some(h) = hub.as_ref() {
+                banked_bwd += (batches.len() * k) as u64;
+                let ck = Checkpoint {
+                    session_id,
+                    resume_token,
+                    completed_epochs: (epoch + 1) as u64,
+                    gen_seq: ledger.gen_seq(),
+                    banked_bwd,
+                    retried: resume_retried + ledger.retried() as u64,
+                    active_version: ps_active.version(),
+                    top_version: ps_top.version(),
+                    active_flat: eval_params.active.flatten(),
+                    top_flat: eval_params.top.flatten(),
+                    passive_versions: ps_passive.iter().map(|ps| ps.version()).collect(),
+                    passive_flats: eval_params.passive.iter().map(|p| p.flatten()).collect(),
+                    loss_curve: loss_curve.clone(),
+                    metric_curve: metric_curve.clone(),
+                };
+                let hs = h.stats();
+                metrics.push_point("broker_log_depth", epoch as f64, hs.depth as f64);
+                metrics.push_point(
+                    "broker_evictions",
+                    epoch as f64,
+                    (hs.evicted + hs.expired) as f64,
+                );
+                metrics.push_point(
+                    "broker_persisted_mb",
+                    epoch as f64,
+                    hs.persisted_bytes as f64 / (1024.0 * 1024.0),
+                );
+                if let Err(e) = h.save_checkpoint(&ck).and_then(|()| h.on_barrier()) {
+                    epoch_err = Some(e);
+                    break;
+                }
+            }
+
             if reached(task, metric, ctx.target()) {
                 reached_target = true;
                 break;
@@ -357,11 +518,16 @@ fn train_local(ctx: &TrainCtx<'_>) -> SessionResult {
 
         // End of session: release the pool (workers exit on `Closed`).
         broker.close();
+        match epoch_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     });
+    run_result?;
 
     let params = current_params(&active_replicas, &passive_replicas);
     let final_metric = evaluate_ws(engine.as_ref(), &params, test, b, task, &mut eval_ws);
-    SessionResult {
+    Ok(SessionResult {
         params,
         loss_curve,
         metric_curve,
@@ -369,8 +535,8 @@ fn train_local(ctx: &TrainCtx<'_>) -> SessionResult {
         epochs_run,
         reached_target,
         wall: sw.elapsed(),
-        retried_batches: ledger.retried(),
-    }
+        retried_batches: resume_retried as usize + ledger.retried(),
+    })
 }
 
 /// Fold the active-party replicas through their parameter servers and
@@ -423,8 +589,24 @@ fn current_params(
 /// served behind `link` (see [`super::passive::serve_passive_session`]).
 /// Public so tests and embedders can run the wire protocol over any
 /// [`Link`] implementation (e.g. an in-process pair).
-#[allow(clippy::too_many_lines)]
 pub fn train_pubsub_over_link(ctx: &TrainCtx<'_>, link: Arc<dyn Link>) -> Result<SessionResult> {
+    train_pubsub_over_link_with(ctx, link, None)
+}
+
+/// [`train_pubsub_over_link`] with a redial hook for durable sessions:
+/// when `[durability]` is configured and the link dies mid-epoch, the
+/// supervisor voids the aborted attempt's backward credits, dials a fresh
+/// link via `reconnect(attempt)`, re-handshakes under the session's
+/// durable identity, rolls both parties back to the last barrier
+/// checkpoint, and replays the in-flight epoch from the durable control
+/// log — so `claim_bwd`/`credit_bwd` dedupe keeps the session
+/// exactly-once across the crash.
+#[allow(clippy::too_many_lines)]
+pub fn train_pubsub_over_link_with(
+    ctx: &TrainCtx<'_>,
+    link: Arc<dyn Link>,
+    reconnect: Option<&dyn Fn(u32) -> Result<Arc<dyn Link>>>,
+) -> Result<SessionResult> {
     let engine = &ctx.engine;
     let spec = ctx.spec;
     let train = ctx.train;
@@ -477,6 +659,21 @@ pub fn train_pubsub_over_link(ctx: &TrainCtx<'_>, link: Arc<dyn Link>) -> Result
     );
     let ledger = BatchLedger::new(k);
 
+    // ---- durability: state dir, session identity, swappable link --------
+    let hub = if cfg.durability.enabled() {
+        Some(DurableHub::open(Path::new(&cfg.durability.state_dir), k, cfg.durability.log_caps())?)
+    } else {
+        None
+    };
+    let (session_id, resume_token) = session_identity(cfg.seed);
+    // A rejoin replaces the transport underneath the running bridge
+    // loops, so every loop drives the link through one swappable handle
+    // (whose stats fold retired incarnations in — the wire series stay
+    // monotonic across swaps).
+    let link: Arc<SwappableLink> = Arc::new(SwappableLink::new(link));
+    let durable_rejoin = hub.is_some() && reconnect.is_some();
+    let rejoin_count = AtomicU64::new(0);
+
     let active_replicas: Vec<Mutex<ActiveReplica>> = (0..w_a)
         .map(|_| {
             Mutex::new(ActiveReplica {
@@ -500,8 +697,7 @@ pub fn train_pubsub_over_link(ctx: &TrainCtx<'_>, link: Arc<dyn Link>) -> Result
     let params_cv = Condvar::new();
     let shutdown = AtomicBool::new(false);
     let link_down = AtomicBool::new(false);
-    let expected_flat: Vec<usize> =
-        spec.passive_bottoms.iter().map(|s| s.param_count()).collect();
+    let expected_flat: Vec<usize> = spec.passive_bottoms.iter().map(|s| s.param_count()).collect();
 
     let mut loss_curve = Vec::new();
     let mut metric_curve = Vec::new();
@@ -517,26 +713,101 @@ pub fn train_pubsub_over_link(ctx: &TrainCtx<'_>, link: Arc<dyn Link>) -> Result
     let mut eval_ws = Workspace::new(linalg::worker_backend(backend_kind, 1));
     let sw = Stopwatch::start();
 
-    // ---- handshake -------------------------------------------------------
-    link.send(Frame::Hello { parties: k as u32 })
-        .map_err(|e| anyhow!("handshake send failed: {e}"))?;
-    let deadline = Instant::now() + Duration::from_secs(cfg.transport.connect_timeout_s.max(1));
-    loop {
-        match link.recv(Duration::from_millis(100)) {
-            LinkRecv::Frame(Frame::HelloAck { parties }) => {
-                if parties as usize != k {
-                    bail!("passive party serves {parties} parties, this run expects {k}");
-                }
-                break;
+    // ---- durable resume: fast-forward to the checkpointed barrier --------
+    let mut start_epoch = 0usize;
+    let mut banked_bwd = 0u64;
+    let mut resume_retried = 0u64;
+    let mut initial_attempt = 0u32;
+    // In-memory copy of the newest durable checkpoint: the state a rejoin
+    // rolls both parties back to. Before the first barrier that is the
+    // seeded init itself.
+    let mut barrier_ckpt = Checkpoint {
+        session_id,
+        resume_token,
+        active_flat: init.active.flatten(),
+        top_flat: init.top.flatten(),
+        passive_versions: vec![0; k],
+        passive_flats: init.passive.iter().map(|p| p.flatten()).collect(),
+        ..Checkpoint::default()
+    };
+    if cfg.durability.resume {
+        let h = hub.as_ref().expect("config validation ties --resume to --state-dir");
+        if let Some(ck) = h.load_checkpoint()? {
+            validate_checkpoint(&ck, session_id, resume_token, spec)?;
+            start_epoch = ck.completed_epochs as usize;
+            banked_bwd = ck.banked_bwd;
+            resume_retried = ck.retried;
+            loss_curve = ck.loss_curve.clone();
+            metric_curve = ck.metric_curve.clone();
+            epochs_run = start_epoch;
+            ledger.resume_gen_seq(ck.gen_seq);
+            let a = MlpParams::unflatten(&spec.active_bottom, &ck.active_flat);
+            let t = MlpParams::unflatten(&spec.top, &ck.top_flat);
+            for r in &active_replicas {
+                let mut g = r.lock().unwrap();
+                g.active = a.clone();
+                g.top = t.clone();
             }
-            LinkRecv::Frame(other) => bail!("handshake: expected HelloAck, got {other:?}"),
-            LinkRecv::Closed => bail!("peer closed the link during handshake"),
-            LinkRecv::TimedOut => {
-                if Instant::now() >= deadline {
-                    bail!("handshake timed out waiting for HelloAck");
+            ps_active.restore(a, ck.active_version);
+            ps_top.restore(t, ck.top_version);
+            for (party, v) in live_versions.iter().enumerate() {
+                v.store(ck.passive_versions[party], Ordering::Relaxed);
+            }
+            last_passive = Some(
+                ck.passive_flats
+                    .iter()
+                    .zip(&spec.passive_bottoms)
+                    .map(|(f, s)| MlpParams::unflatten(s, f))
+                    .collect(),
+            );
+            initial_attempt = 1;
+            metrics.inc("resumed_from_checkpoint", 1);
+            barrier_ckpt = ck;
+        }
+    }
+
+    // ---- handshake -------------------------------------------------------
+    let handshake = |l: &dyn Link, attempt: u32| -> Result<()> {
+        l.send(Frame::Hello { parties: k as u32, session_id, resume_token, attempt })
+            .map_err(|e| anyhow!("handshake send failed: {e}"))?;
+        let timeout_s = cfg.transport.connect_timeout_s.max(1);
+        let deadline = Instant::now() + Duration::from_secs(timeout_s);
+        loop {
+            match l.recv(Duration::from_millis(100)) {
+                LinkRecv::Frame(Frame::HelloAck { parties }) => {
+                    if parties as usize != k {
+                        bail!("passive party serves {parties} parties, this run expects {k}");
+                    }
+                    return Ok(());
+                }
+                LinkRecv::Frame(other) => bail!("handshake: expected HelloAck, got {other:?}"),
+                LinkRecv::Closed => bail!("peer closed the link during handshake"),
+                LinkRecv::TimedOut => {
+                    if Instant::now() >= deadline {
+                        bail!("handshake timed out waiting for HelloAck");
+                    }
                 }
             }
         }
+    };
+    // Roll a (re)started passive back to the checkpointed barrier: bank
+    // the completed epochs' backward credit and restore its parameters.
+    let restore_passive = |l: &dyn Link, ck: &Checkpoint| -> Result<()> {
+        l.send(Frame::Resume { epoch: ck.completed_epochs, banked_bwd: ck.banked_bwd })
+            .map_err(|e| anyhow!("resume send failed: {e}"))?;
+        for party in 0..k {
+            l.send(Frame::RestoreParams {
+                party: party as u32,
+                version: ck.passive_versions[party],
+                flat: ck.passive_flats[party].clone(),
+            })
+            .map_err(|e| anyhow!("restore send failed: {e}"))?;
+        }
+        Ok(())
+    };
+    handshake(&*link, initial_attempt)?;
+    if initial_attempt > 0 {
+        restore_passive(&*link, &barrier_ckpt)?;
     }
 
     let active_sh = ActiveShared {
@@ -564,6 +835,10 @@ pub fn train_pubsub_over_link(ctx: &TrainCtx<'_>, link: Arc<dyn Link>) -> Result
     let run_result: Result<()> = std::thread::scope(|s| {
         // ---- bridge: receive loop -------------------------------------
         s.spawn(|| loop {
+            // A `Closed` that raced with a rejoin swap belongs to the
+            // retired link, not the live one — the swap counter tells the
+            // two apart.
+            let seen_swaps = link.swaps();
             match link.recv(Duration::from_millis(50)) {
                 LinkRecv::Frame(frame) => match frame {
                     Frame::Embedding(msg) => {
@@ -651,30 +926,55 @@ pub fn train_pubsub_over_link(ctx: &TrainCtx<'_>, link: Arc<dyn Link>) -> Result
                     }
                 }
                 LinkRecv::Closed => {
-                    link_down.store(true, Ordering::Relaxed);
-                    break;
+                    if link.swaps() == seen_swaps {
+                        link_down.store(true, Ordering::Relaxed);
+                    }
+                    if shutdown.load(Ordering::Relaxed) || !durable_rejoin {
+                        break;
+                    }
+                    // Durable session: the supervisor is rejoining — park
+                    // until the link is swapped for a live one.
+                    std::thread::sleep(Duration::from_millis(20));
                 }
             }
         });
 
         // ---- bridge: job pump (ledger → EmbedJob frames) --------------
         s.spawn(|| loop {
-            if shutdown.load(Ordering::Relaxed) || link_down.load(Ordering::Relaxed) {
+            if shutdown.load(Ordering::Relaxed) {
                 break;
+            }
+            if link_down.load(Ordering::Relaxed) {
+                if !durable_rejoin {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(5));
+                continue;
             }
             let mut sent = false;
             for party in 0..k {
                 while let Some(job) = ledger.next_embed_job(party) {
-                    if link
-                        .send(Frame::EmbedJob {
-                            party: party as u32,
-                            batch_id: job.batch_id,
-                            generation: job.generation,
-                        })
-                        .is_err()
-                    {
-                        link_down.store(true, Ordering::Relaxed);
-                        return;
+                    let frame = Frame::EmbedJob {
+                        party: party as u32,
+                        batch_id: job.batch_id,
+                        generation: job.generation,
+                    };
+                    if let Some(h) = hub.as_ref() {
+                        if h.log_job(party, &frame).is_err() {
+                            metrics.inc("durable_log_errors", 1);
+                        }
+                    }
+                    let seen_swaps = link.swaps();
+                    if link.send(frame).is_err() {
+                        if link.swaps() == seen_swaps {
+                            link_down.store(true, Ordering::Relaxed);
+                        }
+                        if !durable_rejoin {
+                            return;
+                        }
+                        // The job is gone with the dead link; the rejoin
+                        // reinstalls the whole epoch, regenerating it.
+                        break;
                     }
                     sent = true;
                 }
@@ -689,12 +989,29 @@ pub fn train_pubsub_over_link(ctx: &TrainCtx<'_>, link: Arc<dyn Link>) -> Result
             let broker = &broker;
             let link = &link;
             let link_down = &link_down;
+            let hub = &hub;
+            let metrics = &metrics;
             s.spawn(move || loop {
                 match broker.take_gradient(party, Duration::from_millis(50)) {
                     SubResult::Ok((_id, g)) => {
-                        if link.send(Frame::Gradient(g)).is_err() {
-                            link_down.store(true, Ordering::Relaxed);
-                            break;
+                        let frame = Frame::Gradient(g);
+                        if let Some(h) = hub.as_ref() {
+                            if h.log_grad(party, &frame).is_err() {
+                                metrics.inc("durable_log_errors", 1);
+                            }
+                        }
+                        let seen_swaps = link.swaps();
+                        if link.send(frame).is_err() {
+                            if link.swaps() == seen_swaps {
+                                link_down.store(true, Ordering::Relaxed);
+                            }
+                            if !durable_rejoin {
+                                break;
+                            }
+                            // Dropped with the dead link: the epoch re-run
+                            // regenerates the gradient under a fresh
+                            // generation.
+                            std::thread::sleep(Duration::from_millis(5));
                         }
                     }
                     SubResult::Closed => break,
@@ -711,14 +1028,19 @@ pub fn train_pubsub_over_link(ctx: &TrainCtx<'_>, link: Arc<dyn Link>) -> Result
         }
 
         // ---- response waits -------------------------------------------
-        let wait_barrier = |epoch: u64| -> Result<()> {
+        // `Ok(false)` / `Ok(None)` mean "the link died and this session
+        // can rejoin"; non-durable sessions keep their original errors.
+        let wait_barrier = |epoch: u64| -> Result<bool> {
             let deadline = Instant::now() + SYNC_TIMEOUT;
             let mut g = barrier_done.0.lock().unwrap();
             loop {
                 if *g == Some(epoch) {
-                    return Ok(());
+                    return Ok(true);
                 }
                 if link_down.load(Ordering::Relaxed) {
+                    if durable_rejoin {
+                        return Ok(false);
+                    }
                     bail!("link closed while waiting for the passive barrier ack");
                 }
                 if Instant::now() >= deadline {
@@ -728,22 +1050,30 @@ pub fn train_pubsub_over_link(ctx: &TrainCtx<'_>, link: Arc<dyn Link>) -> Result
                 g = gg;
             }
         };
-        let fetch_passive_params = || -> Result<Vec<MlpParams>> {
+        let fetch_passive_params = || -> Result<Option<Vec<MlpParams>>> {
             {
                 let mut slot = params_slot.lock().unwrap();
                 for s in slot.iter_mut() {
                     *s = None;
                 }
             }
-            link.send(Frame::FetchParams)
-                .map_err(|e| anyhow!("parameter fetch failed: {e}"))?;
+            if let Err(e) = link.send(Frame::FetchParams) {
+                link_down.store(true, Ordering::Relaxed);
+                if durable_rejoin {
+                    return Ok(None);
+                }
+                bail!("parameter fetch failed: {e}");
+            }
             let deadline = Instant::now() + SYNC_TIMEOUT;
             let mut g = params_slot.lock().unwrap();
             loop {
                 if g.iter().all(|sl| sl.is_some()) {
-                    return Ok(g.iter_mut().map(|sl| sl.take().unwrap()).collect());
+                    return Ok(Some(g.iter_mut().map(|sl| sl.take().unwrap()).collect()));
                 }
                 if link_down.load(Ordering::Relaxed) {
+                    if durable_rejoin {
+                        return Ok(None);
+                    }
                     bail!("link closed while fetching passive parameters");
                 }
                 if Instant::now() >= deadline {
@@ -754,6 +1084,68 @@ pub fn train_pubsub_over_link(ctx: &TrainCtx<'_>, link: Arc<dyn Link>) -> Result
             }
         };
 
+        // ---- crash recovery: void, redial, re-handshake, roll back ----
+        // Runs when the link dies mid-epoch. The aborted attempt's
+        // credits are voided (the re-run re-earns them), a fresh link is
+        // dialed and handshaken *before* the swap (so the receive loop
+        // cannot steal the `HelloAck`), and both parties roll back to the
+        // barrier checkpoint `ck`; the caller then re-runs the epoch.
+        let do_rejoin = |voided: u64, ck: &Checkpoint| -> Result<()> {
+            let rem = ledger.remaining_bwd();
+            let (Some(_), Some(reconnect)) = (hub.as_ref(), reconnect) else {
+                bail!("link closed mid-epoch ({rem} backward passes outstanding)");
+            };
+            if voided > 0 {
+                metrics.inc("bwd_acked_voided", voided);
+            }
+            let t0 = Instant::now();
+            let max_attempts = cfg.durability.max_rejoin_attempts.max(1);
+            let mut last_err = anyhow!("no rejoin attempt made");
+            for _ in 0..max_attempts {
+                if opts.is_cancelled() {
+                    bail!("run cancelled during rejoin");
+                }
+                let attempt = rejoin_count.fetch_add(1, Ordering::Relaxed) as u32 + 1;
+                metrics.inc("rejoin_attempts", 1);
+                let dial = reconnect(attempt).and_then(|raw| {
+                    handshake(&*raw, attempt)?;
+                    restore_passive(&*raw, ck)?;
+                    Ok(raw)
+                });
+                match dial {
+                    Ok(raw) => {
+                        // Roll the active half back to the same barrier.
+                        let a = MlpParams::unflatten(&spec.active_bottom, &ck.active_flat);
+                        let t = MlpParams::unflatten(&spec.top, &ck.top_flat);
+                        for r in &active_replicas {
+                            let mut g = r.lock().unwrap();
+                            g.active = a.clone();
+                            g.top = t.clone();
+                        }
+                        ps_active.restore(a, ck.active_version);
+                        ps_top.restore(t, ck.top_version);
+                        for (party, v) in live_versions.iter().enumerate() {
+                            v.store(ck.passive_versions[party], Ordering::Relaxed);
+                        }
+                        link.swap(raw);
+                        link_down.store(false, Ordering::Relaxed);
+                        metrics.set_gauge("rejoin_ms", t0.elapsed().as_secs_f64() * 1e3);
+                        eprintln!(
+                            "[durable] rejoined passive party (attempt {attempt}, \
+                             {voided} credits voided, epoch re-runs from barrier {})",
+                            ck.completed_epochs
+                        );
+                        return Ok(());
+                    }
+                    Err(e) => {
+                        last_err = e;
+                        std::thread::sleep(Duration::from_millis(100));
+                    }
+                }
+            }
+            Err(last_err.context(format!("rejoin failed after {max_attempts} attempts")))
+        };
+
         // ---- epoch supervisor -----------------------------------------
         let result = (|| -> Result<()> {
             for epoch in 0..ctx.epochs() {
@@ -762,209 +1154,337 @@ pub fn train_pubsub_over_link(ctx: &TrainCtx<'_>, link: Arc<dyn Link>) -> Result
                     epochs_run = epoch;
                     break;
                 }
-                epochs_run = epoch + 1;
                 let plan = BatchPlan::for_epoch(train.len(), b, epoch as u64, &mut rng);
                 let batches: Vec<(u64, Arc<Vec<usize>>)> = plan
                     .full_batches()
                     .map(|a| (a.batch_id, Arc::new(a.rows.clone())))
                     .collect();
+                if epoch < start_epoch {
+                    // Resumed: banked by the checkpoint; burning the plan
+                    // keeps the rng stream aligned with the original run.
+                    continue;
+                }
+                epochs_run = epoch + 1;
                 if batches.is_empty() {
                     break;
                 }
-                broker.reset();
-                *epoch_loss.lock().unwrap() = (0.0, 0);
-                stale_sum.store(0, Ordering::Relaxed);
-                stale_n.store(0, Ordering::Relaxed);
-                stale_max.store(0, Ordering::Relaxed);
-                // Ship the plan first: frame order guarantees the passive
-                // installs the epoch before any EmbedJob referencing it
-                // (the pump only sees jobs once the ledger is armed,
-                // which happens after this send completes).
                 let wire_batches: Vec<(u64, Vec<u32>)> = batches
                     .iter()
                     .map(|(id, rows)| (*id, rows.iter().map(|&r| r as u32).collect()))
                     .collect();
-                link.send(Frame::EpochInstall { epoch: epoch as u64, batches: wire_batches })
-                    .map_err(|e| anyhow!("epoch install failed: {e}"))?;
-                ledger.install_epoch(epoch, &batches);
-
-                // Drain, with a stall watchdog so a wire bug surfaces as
-                // an error instead of a hang, and a deadline sweep so a
-                // *lossy* wire (frames dropped by the network or a chaos
-                // harness) re-drives stranded batches instead of waiting
-                // out the watchdog: unlike the consumer-side T_ddl, the
-                // sweep also recovers work whose frames never arrived
-                // anywhere. Safe by ledger construction — generation
-                // bumps kill the old attempt, `bwd_done` dedupes
-                // re-delivered work, and the passive re-acks applied
-                // batches — so a spurious sweep costs only wasted compute.
-                let recovery_base = (t_ddl * 2).max(Duration::from_millis(200));
-                let recovery_cap = Duration::from_secs(5);
-                let mut recovery = recovery_base;
-                let mut last_remaining = usize::MAX;
-                let mut last_progress = Instant::now();
-                let mut last_sweep = Instant::now();
+                // The install is logged once per epoch; every delivery —
+                // the first send and any crash-recovery replay — reads it
+                // back off the durable control lane (the log is the
+                // source of truth for what a rejoined passive is owed).
+                let install = Frame::EpochInstall { epoch: epoch as u64, batches: wire_batches };
+                if let Some(h) = hub.as_ref() {
+                    h.log_control(&install)?;
+                }
+                let mut first_attempt = true;
+                // ---- attempt loop: one pass per link incarnation ------
                 loop {
-                    let rem = ledger.remaining_bwd();
-                    if rem == 0 {
-                        break;
-                    }
-                    if rem != last_remaining {
-                        last_remaining = rem;
-                        last_progress = Instant::now();
-                        last_sweep = last_progress;
-                        recovery = recovery_base;
-                    }
-                    if last_progress.elapsed() > STALL_TIMEOUT {
-                        bail!(
-                            "epoch {epoch} stalled: {rem} backward passes outstanding \
-                             with no progress for {STALL_TIMEOUT:?}"
-                        );
-                    }
-                    if last_progress.elapsed() >= recovery && last_sweep.elapsed() >= recovery {
-                        last_sweep = Instant::now();
-                        // Exponential backoff: if the previous sweep did
-                        // not unstick the epoch, give in-flight attempts
-                        // progressively longer before re-driving them — a
-                        // slow-but-healthy link whose round trip exceeds
-                        // the base interval must not be livelocked by
-                        // sweeps invalidating every attempt mid-flight.
-                        recovery = (recovery * 2).min(recovery_cap);
-                        let kicked = ledger.requeue_stuck();
-                        if !kicked.is_empty() {
-                            metrics.inc("recovery_sweeps", 1);
-                            for &(batch_id, new_gen) in &kicked {
-                                broker.purge_stale(batch_id, new_gen);
-                                opts.emit(RunEvent::BatchRetried {
-                                    epoch: ledger.epoch(),
-                                    batch_id,
-                                });
+                    let acked_before = metrics.counter("bwd_acked");
+                    broker.reset();
+                    *epoch_loss.lock().unwrap() = (0.0, 0);
+                    stale_sum.store(0, Ordering::Relaxed);
+                    stale_n.store(0, Ordering::Relaxed);
+                    stale_max.store(0, Ordering::Relaxed);
+                    // Ship the plan first: frame order guarantees the
+                    // passive installs the epoch before any EmbedJob
+                    // referencing it (the pump only sees jobs once the
+                    // ledger is armed, which happens after this send).
+                    let mut shipped = install.clone();
+                    if !first_attempt {
+                        // Re-attempt: replay the epoch's install from the
+                        // durable control lane.
+                        let h = hub.as_ref().expect("a rejoin implies a durable hub");
+                        for f in h.replay_control()?.into_iter().rev() {
+                            let owed_here = match &f {
+                                Frame::EpochInstall { epoch: e, .. } => *e == epoch as u64,
+                                _ => false,
+                            };
+                            if owed_here {
+                                shipped = f;
+                                break;
                             }
                         }
                     }
-                    if link_down.load(Ordering::Relaxed) {
-                        bail!("link closed mid-epoch ({rem} backward passes outstanding)");
+                    first_attempt = false;
+                    if link.send(shipped).is_err() {
+                        link_down.store(true, Ordering::Relaxed);
+                        do_rejoin(metrics.counter("bwd_acked") - acked_before, &barrier_ckpt)?;
+                        continue;
                     }
-                    if opts.is_cancelled() {
-                        cancelled = true;
+                    ledger.install_epoch(epoch, &batches);
+
+                    // Drain, with a stall watchdog so a wire bug surfaces
+                    // as an error instead of a hang, and a deadline sweep
+                    // so a *lossy* wire (frames dropped by the network or
+                    // a chaos harness) re-drives stranded batches instead
+                    // of waiting out the watchdog: unlike the
+                    // consumer-side T_ddl, the sweep also recovers work
+                    // whose frames never arrived anywhere. Safe by ledger
+                    // construction — generation bumps kill the old
+                    // attempt, `bwd_done` dedupes re-delivered work, and
+                    // the passive re-acks applied batches — so a spurious
+                    // sweep costs only wasted compute.
+                    let recovery_base = (t_ddl * 2).max(Duration::from_millis(200));
+                    let recovery_cap = Duration::from_secs(5);
+                    let mut recovery = recovery_base;
+                    let mut last_remaining = usize::MAX;
+                    let mut last_progress = Instant::now();
+                    let mut last_sweep = Instant::now();
+                    let mut drained = true;
+                    loop {
+                        let rem = ledger.remaining_bwd();
+                        if rem == 0 {
+                            break;
+                        }
+                        if rem != last_remaining {
+                            last_remaining = rem;
+                            last_progress = Instant::now();
+                            last_sweep = last_progress;
+                            recovery = recovery_base;
+                        }
+                        if last_progress.elapsed() > STALL_TIMEOUT {
+                            bail!(
+                                "epoch {epoch} stalled: {rem} backward passes outstanding \
+                                 with no progress for {STALL_TIMEOUT:?}"
+                            );
+                        }
+                        if last_progress.elapsed() >= recovery
+                            && last_sweep.elapsed() >= recovery
+                        {
+                            last_sweep = Instant::now();
+                            // Exponential backoff: if the previous sweep
+                            // did not unstick the epoch, give in-flight
+                            // attempts progressively longer before
+                            // re-driving them — a slow-but-healthy link
+                            // whose round trip exceeds the base interval
+                            // must not be livelocked by sweeps
+                            // invalidating every attempt mid-flight.
+                            recovery = (recovery * 2).min(recovery_cap);
+                            let kicked = ledger.requeue_stuck();
+                            if !kicked.is_empty() {
+                                metrics.inc("recovery_sweeps", 1);
+                                for &(batch_id, new_gen) in &kicked {
+                                    broker.purge_stale(batch_id, new_gen);
+                                    opts.emit(RunEvent::BatchRetried {
+                                        epoch: ledger.epoch(),
+                                        batch_id,
+                                    });
+                                }
+                            }
+                        }
+                        if link_down.load(Ordering::Relaxed) {
+                            drained = false;
+                            break;
+                        }
+                        if opts.is_cancelled() {
+                            cancelled = true;
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                    if cancelled {
                         break;
                     }
-                    std::thread::sleep(Duration::from_micros(200));
+                    if !drained {
+                        do_rejoin(metrics.counter("bwd_acked") - acked_before, &barrier_ckpt)?;
+                        continue;
+                    }
+
+                    // ---- semi-async PS schedule: active half local, --
+                    // passive half behind the barrier frame.
+                    let barrier = schedule.barrier_after_epoch(epoch);
+                    if barrier {
+                        fold_active_barrier(&active_replicas, &ps_active, &ps_top);
+                    } else {
+                        ps_active.aggregate();
+                        ps_top.aggregate();
+                    }
+                    let barrier_frame = Frame::Barrier { epoch: epoch as u64, broadcast: barrier };
+                    let barrier_ok = match link.send(barrier_frame) {
+                        Ok(()) => wait_barrier(epoch as u64)?,
+                        Err(e) => {
+                            link_down.store(true, Ordering::Relaxed);
+                            if !durable_rejoin {
+                                return Err(anyhow!("barrier send failed: {e}"));
+                            }
+                            false
+                        }
+                    };
+                    if !barrier_ok {
+                        // Crash inside the barrier window: the epoch
+                        // re-run rolls the PS fold back with the rest.
+                        do_rejoin(metrics.counter("bwd_acked") - acked_before, &barrier_ckpt)?;
+                        continue;
+                    }
+                    let passive_params = match fetch_passive_params()? {
+                        Some(p) => p,
+                        None => {
+                            do_rejoin(metrics.counter("bwd_acked") - acked_before, &barrier_ckpt)?;
+                            continue;
+                        }
+                    };
+
+                    // ---- committed: the attempt drained and synced ----
+                    // Everything below runs exactly once per epoch (no
+                    // doubled curve points or events across re-runs).
+                    if barrier {
+                        metrics.inc("ps_barriers", 1);
+                        opts.emit(RunEvent::PsBarrier { epoch });
+                    }
+
+                    // ---- staleness summary (receiver clock) ----------
+                    let n = stale_n.load(Ordering::Relaxed);
+                    if n > 0 {
+                        let mean = stale_sum.load(Ordering::Relaxed) as f64 / n as f64;
+                        let max = stale_max.load(Ordering::Relaxed);
+                        metrics.push_point("staleness_mean", epoch as f64, mean);
+                        metrics.gauge_max("staleness_max", max as f64);
+                        opts.emit(RunEvent::Staleness { epoch, mean, max });
+                    }
+                    metrics.gauge_max(
+                        "emb_param_version_max",
+                        emb_version_max.load(Ordering::Relaxed) as f64,
+                    );
+
+                    // ---- wire-cost series: this epoch's delta of the --
+                    // cumulative link counters (codec bytes + codec
+                    // time). The swappable handle folds retired links in,
+                    // so the deltas stay monotonic across rejoins.
+                    let st = link.stats();
+                    let mb = 1024.0 * 1024.0;
+                    let d = |now: u64, prev: u64| now.saturating_sub(prev) as f64;
+                    let tx = d(st.tx_bytes, wire_prev.tx_bytes) / mb;
+                    let rx = d(st.rx_bytes, wire_prev.rx_bytes) / mb;
+                    metrics.push_point("wire_tx_mb", epoch as f64, tx);
+                    metrics.push_point("wire_rx_mb", epoch as f64, rx);
+                    metrics.push_point(
+                        "wire_encode_ms",
+                        epoch as f64,
+                        d(st.encode_ns, wire_prev.encode_ns) / 1e6,
+                    );
+                    metrics.push_point(
+                        "wire_decode_ms",
+                        epoch as f64,
+                        d(st.decode_ns, wire_prev.decode_ns) / 1e6,
+                    );
+                    wire_prev = st;
+
+                    // Injected-fault counters (chaos-decorated links
+                    // only): the same per-epoch delta treatment, so a
+                    // resilience run reads its fault pressure next to its
+                    // wire cost.
+                    if let Some(fs) = link.fault_stats() {
+                        metrics.push_point(
+                            "wire_faults_dropped",
+                            epoch as f64,
+                            d(fs.dropped, fault_prev.dropped),
+                        );
+                        metrics.push_point(
+                            "wire_faults_duplicated",
+                            epoch as f64,
+                            d(fs.duplicated, fault_prev.duplicated),
+                        );
+                        let corrupt = d(fs.corrupted, fault_prev.corrupted)
+                            + d(fs.truncated, fault_prev.truncated);
+                        metrics.push_point("wire_faults_corrupted", epoch as f64, corrupt);
+                        metrics.push_point(
+                            "wire_faults_reordered",
+                            epoch as f64,
+                            d(fs.reordered, fault_prev.reordered),
+                        );
+                        metrics.push_point(
+                            "wire_fault_delay_ms",
+                            epoch as f64,
+                            d(fs.delay_injected_us, fault_prev.delay_injected_us) / 1e3,
+                        );
+                        fault_prev = fs;
+                    }
+
+                    // ---- bookkeeping + eval on fetched parameters ----
+                    let (lsum, lcnt) = *epoch_loss.lock().unwrap();
+                    let mean_loss = if lcnt > 0 { lsum / lcnt as f64 } else { f64::NAN };
+                    loss_curve.push((epoch as f64, mean_loss));
+                    metrics.push_point("train_loss", epoch as f64, mean_loss);
+
+                    let (mean_a, mean_t) = mean_active(&active_replicas);
+                    let eval_params = SplitParams {
+                        active: mean_a,
+                        top: mean_t,
+                        passive: passive_params.clone(),
+                    };
+                    let metric =
+                        evaluate_ws(engine.as_ref(), &eval_params, test, b, task, &mut eval_ws);
+                    metric_curve.push((epoch as f64, metric));
+                    metrics.push_point("eval_metric", epoch as f64, metric);
+                    opts.emit(RunEvent::Eval { epoch, metric });
+                    opts.emit(RunEvent::EpochEnd { epoch, mean_loss, metric });
+
+                    // ---- durable barrier checkpoint ------------------
+                    if let Some(h) = hub.as_ref() {
+                        banked_bwd += (batches.len() * k) as u64;
+                        barrier_ckpt = Checkpoint {
+                            session_id,
+                            resume_token,
+                            completed_epochs: (epoch + 1) as u64,
+                            gen_seq: ledger.gen_seq(),
+                            banked_bwd,
+                            retried: resume_retried + ledger.retried() as u64,
+                            active_version: ps_active.version(),
+                            top_version: ps_top.version(),
+                            active_flat: eval_params.active.flatten(),
+                            top_flat: eval_params.top.flatten(),
+                            passive_versions: live_versions
+                                .iter()
+                                .map(|v| v.load(Ordering::Relaxed))
+                                .collect(),
+                            passive_flats: passive_params
+                                .iter()
+                                .map(|p| p.flatten())
+                                .collect(),
+                            loss_curve: loss_curve.clone(),
+                            metric_curve: metric_curve.clone(),
+                        };
+                        h.save_checkpoint(&barrier_ckpt)?;
+                        // broker_* observability series, next to wire_*:
+                        // durable-log depth, ring/TTL evictions, and
+                        // persisted bytes (logs + checkpoints).
+                        let hs = h.stats();
+                        metrics.push_point("broker_log_depth", epoch as f64, hs.depth as f64);
+                        metrics.push_point(
+                            "broker_evictions",
+                            epoch as f64,
+                            (hs.evicted + hs.expired) as f64,
+                        );
+                        metrics.push_point(
+                            "broker_persisted_mb",
+                            epoch as f64,
+                            hs.persisted_bytes as f64 / (1024.0 * 1024.0),
+                        );
+                        h.on_barrier()?;
+                    }
+
+                    last_passive = Some(passive_params);
+                    if reached(task, metric, ctx.target()) {
+                        reached_target = true;
+                    }
+                    break;
                 }
                 if cancelled {
                     opts.emit(RunEvent::Cancelled { epoch });
                     break;
                 }
-
-                // ---- staleness summary (receiver clock) --------------
-                let n = stale_n.load(Ordering::Relaxed);
-                if n > 0 {
-                    let mean = stale_sum.load(Ordering::Relaxed) as f64 / n as f64;
-                    let max = stale_max.load(Ordering::Relaxed);
-                    metrics.push_point("staleness_mean", epoch as f64, mean);
-                    metrics.gauge_max("staleness_max", max as f64);
-                    opts.emit(RunEvent::Staleness { epoch, mean, max });
-                }
-                metrics.gauge_max(
-                    "emb_param_version_max",
-                    emb_version_max.load(Ordering::Relaxed) as f64,
-                );
-
-                // ---- semi-async PS schedule: active half local, ------
-                // passive half behind the barrier frame.
-                let barrier = schedule.barrier_after_epoch(epoch);
-                if barrier {
-                    fold_active_barrier(&active_replicas, &ps_active, &ps_top);
-                    metrics.inc("ps_barriers", 1);
-                    opts.emit(RunEvent::PsBarrier { epoch });
-                } else {
-                    ps_active.aggregate();
-                    ps_top.aggregate();
-                }
-                link.send(Frame::Barrier { epoch: epoch as u64, broadcast: barrier })
-                    .map_err(|e| anyhow!("barrier send failed: {e}"))?;
-                wait_barrier(epoch as u64)?;
-
-                // ---- wire-cost series: this epoch's delta of the ----
-                // cumulative link counters (codec bytes + codec time).
-                let st = link.stats();
-                let mb = 1024.0 * 1024.0;
-                let d = |now: u64, prev: u64| now.saturating_sub(prev) as f64;
-                let tx = d(st.tx_bytes, wire_prev.tx_bytes) / mb;
-                let rx = d(st.rx_bytes, wire_prev.rx_bytes) / mb;
-                metrics.push_point("wire_tx_mb", epoch as f64, tx);
-                metrics.push_point("wire_rx_mb", epoch as f64, rx);
-                metrics.push_point(
-                    "wire_encode_ms",
-                    epoch as f64,
-                    d(st.encode_ns, wire_prev.encode_ns) / 1e6,
-                );
-                metrics.push_point(
-                    "wire_decode_ms",
-                    epoch as f64,
-                    d(st.decode_ns, wire_prev.decode_ns) / 1e6,
-                );
-                wire_prev = st;
-
-                // Injected-fault counters (chaos-decorated links only):
-                // the same per-epoch delta treatment, so a resilience run
-                // reads its fault pressure next to its wire cost.
-                if let Some(fs) = link.fault_stats() {
-                    metrics.push_point(
-                        "wire_faults_dropped",
-                        epoch as f64,
-                        d(fs.dropped, fault_prev.dropped),
-                    );
-                    metrics.push_point(
-                        "wire_faults_duplicated",
-                        epoch as f64,
-                        d(fs.duplicated, fault_prev.duplicated),
-                    );
-                    let corrupt = d(fs.corrupted, fault_prev.corrupted)
-                        + d(fs.truncated, fault_prev.truncated);
-                    metrics.push_point("wire_faults_corrupted", epoch as f64, corrupt);
-                    metrics.push_point(
-                        "wire_faults_reordered",
-                        epoch as f64,
-                        d(fs.reordered, fault_prev.reordered),
-                    );
-                    metrics.push_point(
-                        "wire_fault_delay_ms",
-                        epoch as f64,
-                        d(fs.delay_injected_us, fault_prev.delay_injected_us) / 1e3,
-                    );
-                    fault_prev = fs;
-                }
-
-                // ---- bookkeeping + eval on fetched parameters --------
-                let (lsum, lcnt) = *epoch_loss.lock().unwrap();
-                let mean_loss = if lcnt > 0 { lsum / lcnt as f64 } else { f64::NAN };
-                loss_curve.push((epoch as f64, mean_loss));
-                metrics.push_point("train_loss", epoch as f64, mean_loss);
-
-                let passive_params = fetch_passive_params()?;
-                let (mean_a, mean_t) = mean_active(&active_replicas);
-                let eval_params = SplitParams {
-                    active: mean_a,
-                    top: mean_t,
-                    passive: passive_params.clone(),
-                };
-                last_passive = Some(passive_params);
-                let metric =
-                    evaluate_ws(engine.as_ref(), &eval_params, test, b, task, &mut eval_ws);
-                metric_curve.push((epoch as f64, metric));
-                metrics.push_point("eval_metric", epoch as f64, metric);
-                opts.emit(RunEvent::Eval { epoch, metric });
-                opts.emit(RunEvent::EpochEnd { epoch, mean_loss, metric });
-                if reached(task, metric, ctx.target()) {
-                    reached_target = true;
+                if reached_target {
                     break;
                 }
             }
             // Make sure the final model includes the passive half even if
             // no epoch completed (cancellation / zero-epoch runs).
             if last_passive.is_none() && !link_down.load(Ordering::Relaxed) {
-                last_passive = fetch_passive_params().ok();
+                last_passive = fetch_passive_params().ok().flatten();
             }
             Ok(())
         })();
@@ -1000,7 +1520,7 @@ pub fn train_pubsub_over_link(ctx: &TrainCtx<'_>, link: Arc<dyn Link>) -> Result
         epochs_run,
         reached_target,
         wall: sw.elapsed(),
-        retried_batches: ledger.retried(),
+        retried_batches: resume_retried as usize + ledger.retried(),
     })
 }
 

@@ -26,7 +26,7 @@ use std::collections::VecDeque;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 /// Which message plane the PubSub session runs on. `InProc` is the
@@ -436,6 +436,128 @@ impl Link for TcpLink {
     }
 }
 
+// ---- swappable link (crash-recovery rejoin) ------------------------------
+
+fn fold_link_stats(acc: &mut LinkStatsSnapshot, s: LinkStatsSnapshot) {
+    acc.tx_bytes += s.tx_bytes;
+    acc.rx_bytes += s.rx_bytes;
+    acc.tx_frames += s.tx_frames;
+    acc.rx_frames += s.rx_frames;
+    acc.encode_ns += s.encode_ns;
+    acc.decode_ns += s.decode_ns;
+    acc.decode_errors += s.decode_errors;
+}
+
+fn fold_fault_stats(acc: &mut FaultStatsSnapshot, s: FaultStatsSnapshot) {
+    acc.dropped += s.dropped;
+    acc.duplicated += s.duplicated;
+    acc.corrupted += s.corrupted;
+    acc.truncated += s.truncated;
+    acc.reordered += s.reordered;
+    acc.delayed_frames += s.delayed_frames;
+    acc.delay_injected_us += s.delay_injected_us;
+    acc.disconnects += s.disconnects;
+}
+
+/// A [`Link`] whose inner link can be replaced at runtime — the rejoin
+/// path of the durable session swaps in a freshly connected link after
+/// the peer process restarts, while the pump threads keep operating
+/// through the same handle.
+///
+/// `stats()` (and `fault_stats()`) stay monotonically non-decreasing
+/// across swaps: a retired link's final counters are folded into an
+/// accumulator at swap time, so per-epoch `wire_*` deltas never go
+/// negative because of a reconnect.
+///
+/// Blocking operations clone the current inner `Arc` and run against it
+/// outside the lock, so a `swap()` never waits on an in-flight `recv`;
+/// the retired link is closed, which unblocks any receiver parked on it
+/// with [`LinkRecv::Closed`].
+pub struct SwappableLink {
+    inner: RwLock<Arc<dyn Link>>,
+    retired: Mutex<(LinkStatsSnapshot, FaultStatsSnapshot, bool)>,
+    swaps: AtomicU64,
+}
+
+impl SwappableLink {
+    pub fn new(link: Arc<dyn Link>) -> SwappableLink {
+        SwappableLink {
+            inner: RwLock::new(link),
+            retired: Mutex::new((
+                LinkStatsSnapshot::default(),
+                FaultStatsSnapshot::default(),
+                false,
+            )),
+            swaps: AtomicU64::new(0),
+        }
+    }
+
+    /// The current inner link.
+    pub fn current(&self) -> Arc<dyn Link> {
+        Arc::clone(&self.inner.read().unwrap())
+    }
+
+    /// Replace the inner link. The old link's counters are banked so
+    /// cumulative stats stay monotonic, then it is closed.
+    pub fn swap(&self, next: Arc<dyn Link>) {
+        let old = {
+            let mut g = self.inner.write().unwrap();
+            std::mem::replace(&mut *g, next)
+        };
+        {
+            let mut r = self.retired.lock().unwrap();
+            fold_link_stats(&mut r.0, old.stats());
+            if let Some(f) = old.fault_stats() {
+                fold_fault_stats(&mut r.1, f);
+                r.2 = true;
+            }
+        }
+        old.close();
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// How many times `swap` has been called.
+    pub fn swaps(&self) -> u64 {
+        self.swaps.load(Ordering::Relaxed)
+    }
+}
+
+impl Link for SwappableLink {
+    fn send(&self, frame: Frame) -> Result<u64, WireError> {
+        self.current().send(frame)
+    }
+
+    fn recv(&self, timeout: Duration) -> LinkRecv {
+        self.current().recv(timeout)
+    }
+
+    fn close(&self) {
+        self.current().close();
+    }
+
+    fn stats(&self) -> LinkStatsSnapshot {
+        let mut acc = self.retired.lock().unwrap().0;
+        fold_link_stats(&mut acc, self.current().stats());
+        acc
+    }
+
+    fn fault_stats(&self) -> Option<FaultStatsSnapshot> {
+        let (retired_faults, any_retired) = {
+            let r = self.retired.lock().unwrap();
+            (r.1, r.2)
+        };
+        match self.current().fault_stats() {
+            Some(f) => {
+                let mut acc = retired_faults;
+                fold_fault_stats(&mut acc, f);
+                Some(acc)
+            }
+            None if any_retired => Some(retired_faults),
+            None => None,
+        }
+    }
+}
+
 /// TCP transport; [`Transport::pair`] builds a loopback pair (tests).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct TcpTransport;
@@ -636,6 +758,41 @@ mod tests {
         assert_eq!(FaultStatsSnapshot::default().disrupted(), 0);
         let s = FaultStatsSnapshot { dropped: 2, reordered: 3, ..Default::default() };
         assert_eq!(s.disrupted(), 5);
+    }
+
+    #[test]
+    fn swappable_link_keeps_stats_monotonic_across_swaps() {
+        let (a1, b1) = InProcTransport::pair_inproc();
+        let link = SwappableLink::new(Arc::new(a1));
+        link.send(Frame::FetchParams).unwrap();
+        assert!(matches!(b1.recv(Duration::from_secs(1)), LinkRecv::Frame(Frame::FetchParams)));
+        let before = link.stats();
+        assert_eq!(before.tx_frames, 1);
+
+        // Swap in a fresh pair (peer "restarted"); counters must not reset.
+        let (a2, b2) = InProcTransport::pair_inproc();
+        link.swap(Arc::new(a2));
+        assert_eq!(link.swaps(), 1);
+        let after_swap = link.stats();
+        assert_eq!(after_swap.tx_frames, 1, "retired link's counters are banked");
+        assert!(after_swap.tx_bytes >= before.tx_bytes);
+
+        // Old peer sees the retired link closed.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            match b1.recv(Duration::from_millis(20)) {
+                LinkRecv::Closed => break,
+                LinkRecv::TimedOut if Instant::now() < deadline => {}
+                other => panic!("expected Closed on retired peer, got {other:?}"),
+            }
+        }
+
+        // Traffic flows over the new link and accumulates on top.
+        link.send(Frame::Shutdown).unwrap();
+        assert!(matches!(b2.recv(Duration::from_secs(1)), LinkRecv::Frame(Frame::Shutdown)));
+        assert_eq!(link.stats().tx_frames, 2);
+        // Plain inner links: no fault stats before or after a swap.
+        assert!(link.fault_stats().is_none());
     }
 
     #[test]

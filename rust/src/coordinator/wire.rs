@@ -104,6 +104,8 @@ const T_BARRIER_DONE: u8 = 10;
 const T_FETCH_PARAMS: u8 = 11;
 const T_PASSIVE_PARAMS: u8 = 12;
 const T_SHUTDOWN: u8 = 13;
+const T_RESUME: u8 = 14;
+const T_RESTORE_PARAMS: u8 = 15;
 
 /// Everything that crosses the party boundary: the two data-plane
 /// messages plus the control plane of the distributed session (handshake,
@@ -111,8 +113,13 @@ const T_SHUTDOWN: u8 = 13;
 /// PS barriers, parameter fetch, shutdown).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Frame {
-    /// Active → passive handshake: number of passive parties expected.
-    Hello { parties: u32 },
+    /// Active → passive handshake: number of passive parties expected,
+    /// plus the durable-session identity. `session_id`/`resume_token`
+    /// name the training session across process restarts; `attempt` is 0
+    /// on the first connection and increments on every rejoin, so a
+    /// restarted `serve-passive` can tell a fresh session from a resumed
+    /// one and validate the token against its state dir.
+    Hello { parties: u32, session_id: u64, resume_token: u64, attempt: u32 },
     /// Passive → active handshake reply: number of parties served.
     HelloAck { parties: u32 },
     /// Active → passive: the epoch's batch plan — `(batch_id, rows)` per
@@ -145,6 +152,17 @@ pub enum Frame {
     PassiveParams { party: u32, version: u64, flat: Vec<f32> },
     /// Active → passive: end of session.
     Shutdown,
+    /// Active → passive after a rejoin handshake: the resumed session's
+    /// progress picture. `epoch` is the first epoch the passive will see
+    /// (re)installed; `banked_bwd` is the backward-pass credit already
+    /// drained in completed epochs (`completed_epochs × n_batches × k`),
+    /// which the restarted process banks into its `passive_bwd` counter
+    /// so conservation holds across the crash.
+    Resume { epoch: u64, banked_bwd: u64 },
+    /// Active → passive after a rejoin: restore one party's replica
+    /// parameters to the last barrier-aligned checkpoint (same flat
+    /// layout as [`Frame::PassiveParams`], opposite direction).
+    RestoreParams { party: u32, version: u64, flat: Vec<f32> },
 }
 
 impl Frame {
@@ -164,6 +182,8 @@ impl Frame {
             Frame::FetchParams => "fetch_params",
             Frame::PassiveParams { .. } => "passive_params",
             Frame::Shutdown => "shutdown",
+            Frame::Resume { .. } => "resume",
+            Frame::RestoreParams { .. } => "restore_params",
         }
     }
 
@@ -182,29 +202,34 @@ impl Frame {
             Frame::FetchParams => T_FETCH_PARAMS,
             Frame::PassiveParams { .. } => T_PASSIVE_PARAMS,
             Frame::Shutdown => T_SHUTDOWN,
+            Frame::Resume { .. } => T_RESUME,
+            Frame::RestoreParams { .. } => T_RESTORE_PARAMS,
         }
     }
 }
 
 // ---- primitive writers/readers ------------------------------------------
 
-fn put_u16(b: &mut Vec<u8>, v: u16) {
+// Shared with the durable checkpoint codec (`coordinator::durable`),
+// which reuses the wire primitives instead of inventing a second
+// serialization layer.
+pub(crate) fn put_u16(b: &mut Vec<u8>, v: u16) {
     b.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_u32(b: &mut Vec<u8>, v: u32) {
+pub(crate) fn put_u32(b: &mut Vec<u8>, v: u32) {
     b.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_u64(b: &mut Vec<u8>, v: u64) {
+pub(crate) fn put_u64(b: &mut Vec<u8>, v: u64) {
     b.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_f32(b: &mut Vec<u8>, v: f32) {
+pub(crate) fn put_f32(b: &mut Vec<u8>, v: f32) {
     b.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_f64(b: &mut Vec<u8>, v: f64) {
+pub(crate) fn put_f64(b: &mut Vec<u8>, v: f64) {
     b.extend_from_slice(&v.to_le_bytes());
 }
 
@@ -216,17 +241,17 @@ fn put_matrix(b: &mut Vec<u8>, m: &Matrix) {
     }
 }
 
-struct Cursor<'a> {
+pub(crate) struct Cursor<'a> {
     buf: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Cursor<'a> {
-    fn new(buf: &'a [u8]) -> Cursor<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Cursor<'a> {
         Cursor { buf, pos: 0 }
     }
 
-    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
         if self.buf.len() - self.pos < n {
             return Err(WireError::Truncated);
         }
@@ -235,23 +260,23 @@ impl<'a> Cursor<'a> {
         Ok(s)
     }
 
-    fn u8(&mut self) -> Result<u8, WireError> {
+    pub(crate) fn u8(&mut self) -> Result<u8, WireError> {
         Ok(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> Result<u32, WireError> {
+    pub(crate) fn u32(&mut self) -> Result<u32, WireError> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn u64(&mut self) -> Result<u64, WireError> {
+    pub(crate) fn u64(&mut self) -> Result<u64, WireError> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn f64(&mut self) -> Result<f64, WireError> {
+    pub(crate) fn f64(&mut self) -> Result<f64, WireError> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>, WireError> {
+    pub(crate) fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>, WireError> {
         let raw = self.take(n.checked_mul(4).ok_or(WireError::Corrupt("length overflow"))?)?;
         Ok(raw
             .chunks_exact(4)
@@ -267,7 +292,7 @@ impl<'a> Cursor<'a> {
         Ok(Matrix { rows, cols, data })
     }
 
-    fn done(&self) -> Result<(), WireError> {
+    pub(crate) fn done(&self) -> Result<(), WireError> {
         if self.pos != self.buf.len() {
             return Err(WireError::Corrupt("trailing bytes after payload"));
         }
@@ -301,7 +326,8 @@ pub fn gradient_wire_bytes(rows: usize, cols: usize) -> u64 {
 
 fn payload_len(frame: &Frame) -> usize {
     match frame {
-        Frame::Hello { .. } | Frame::HelloAck { .. } => 4,
+        Frame::Hello { .. } => 4 + 8 + 8 + 4,
+        Frame::HelloAck { .. } => 4,
         Frame::EpochInstall { batches, .. } => {
             8 + 4 + batches.iter().map(|(_, rows)| 8 + 4 + rows.len() * 4).sum::<usize>()
         }
@@ -313,7 +339,10 @@ fn payload_len(frame: &Frame) -> usize {
         Frame::Barrier { .. } => 8 + 1,
         Frame::BarrierDone { versions, .. } => 8 + 4 + versions.len() * 8,
         Frame::FetchParams | Frame::Shutdown => 0,
-        Frame::PassiveParams { flat, .. } => 4 + 8 + 4 + flat.len() * 4,
+        Frame::PassiveParams { flat, .. } | Frame::RestoreParams { flat, .. } => {
+            4 + 8 + 4 + flat.len() * 4
+        }
+        Frame::Resume { .. } => 8 + 8,
     }
 }
 
@@ -326,7 +355,13 @@ pub fn encoded_len(frame: &Frame) -> usize {
 
 fn write_payload(frame: &Frame, b: &mut Vec<u8>) {
     match frame {
-        Frame::Hello { parties } | Frame::HelloAck { parties } => put_u32(b, *parties),
+        Frame::Hello { parties, session_id, resume_token, attempt } => {
+            put_u32(b, *parties);
+            put_u64(b, *session_id);
+            put_u64(b, *resume_token);
+            put_u32(b, *attempt);
+        }
+        Frame::HelloAck { parties } => put_u32(b, *parties),
         Frame::EpochInstall { epoch, batches } => {
             put_u64(b, *epoch);
             put_u32(b, batches.len() as u32);
@@ -380,13 +415,18 @@ fn write_payload(frame: &Frame, b: &mut Vec<u8>) {
             }
         }
         Frame::FetchParams | Frame::Shutdown => {}
-        Frame::PassiveParams { party, version, flat } => {
+        Frame::PassiveParams { party, version, flat }
+        | Frame::RestoreParams { party, version, flat } => {
             put_u32(b, *party);
             put_u64(b, *version);
             put_u32(b, flat.len() as u32);
             for &v in flat {
                 put_f32(b, v);
             }
+        }
+        Frame::Resume { epoch, banked_bwd } => {
+            put_u64(b, *epoch);
+            put_u64(b, *banked_bwd);
         }
     }
 }
@@ -427,7 +467,12 @@ fn parse_header(hdr: &[u8; HEADER_BYTES]) -> Result<(u8, u32), WireError> {
 fn decode_payload(ftype: u8, payload: &[u8]) -> Result<Frame, WireError> {
     let mut c = Cursor::new(payload);
     let frame = match ftype {
-        T_HELLO => Frame::Hello { parties: c.u32()? },
+        T_HELLO => Frame::Hello {
+            parties: c.u32()?,
+            session_id: c.u64()?,
+            resume_token: c.u64()?,
+            attempt: c.u32()?,
+        },
         T_HELLO_ACK => Frame::HelloAck { parties: c.u32()? },
         T_EPOCH_INSTALL => {
             let epoch = c.u64()?;
@@ -512,6 +557,14 @@ fn decode_payload(ftype: u8, payload: &[u8]) -> Result<Frame, WireError> {
             Frame::PassiveParams { party, version, flat }
         }
         T_SHUTDOWN => Frame::Shutdown,
+        T_RESUME => Frame::Resume { epoch: c.u64()?, banked_bwd: c.u64()? },
+        T_RESTORE_PARAMS => {
+            let party = c.u32()?;
+            let version = c.u64()?;
+            let n = c.u32()? as usize;
+            let flat = c.f32_vec(n)?;
+            Frame::RestoreParams { party, version, flat }
+        }
         other => return Err(WireError::UnknownFrame(other)),
     };
     c.done()?;
@@ -588,7 +641,12 @@ mod tests {
 
     fn all_frames() -> Vec<Frame> {
         vec![
-            Frame::Hello { parties: 2 },
+            Frame::Hello {
+                parties: 2,
+                session_id: 0xDEAD_BEEF_0042,
+                resume_token: 0x0123_4567_89AB_CDEF,
+                attempt: 1,
+            },
             Frame::HelloAck { parties: 2 },
             Frame::EpochInstall {
                 epoch: 3,
@@ -604,6 +662,8 @@ mod tests {
             Frame::FetchParams,
             Frame::PassiveParams { party: 1, version: 6, flat: vec![0.5, -1.5, 3.25] },
             Frame::Shutdown,
+            Frame::Resume { epoch: 2, banked_bwd: 24 },
+            Frame::RestoreParams { party: 0, version: 11, flat: vec![1.0, 0.0, -2.5] },
         ]
     }
 
@@ -698,9 +758,10 @@ mod tests {
         assert!(matches!(decode(&bytes).unwrap_err(), WireError::Oversize(_)));
 
         // Trailing garbage inside the declared payload.
-        let mut bytes = encode(&Frame::Hello { parties: 1 });
+        let hello = Frame::Hello { parties: 1, session_id: 7, resume_token: 9, attempt: 0 };
+        let mut bytes = encode(&hello);
         bytes.extend_from_slice(&[0xFF; 3]);
-        let plen = (payload_len(&Frame::Hello { parties: 1 }) + 3) as u32;
+        let plen = (payload_len(&hello) + 3) as u32;
         bytes[6..10].copy_from_slice(&plen.to_le_bytes());
         assert!(matches!(decode(&bytes).unwrap_err(), WireError::Corrupt(_)));
 

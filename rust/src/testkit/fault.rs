@@ -177,6 +177,8 @@ fn is_critical(frame: &Frame) -> bool {
             | Frame::FetchParams
             | Frame::PassiveParams { .. }
             | Frame::Shutdown
+            | Frame::Resume { .. }
+            | Frame::RestoreParams { .. }
     )
 }
 
@@ -599,11 +601,12 @@ mod tests {
         }
         let (a, b) = InProcTransport::pair_inproc();
         let fl = FaultLink::wrap(Arc::new(a), p);
-        fl.send(Frame::Hello { parties: 1 }).unwrap();
+        let hello = Frame::Hello { parties: 1, session_id: 0, resume_token: 0, attempt: 0 };
+        fl.send(hello.clone()).unwrap();
         fl.send(data_frame(0)).unwrap();
         fl.send(Frame::Shutdown).unwrap();
         let got = drain(&b);
-        assert_eq!(got, vec![Frame::Hello { parties: 1 }, Frame::Shutdown]);
+        assert_eq!(got, vec![hello, Frame::Shutdown]);
         assert_eq!(fl.injected().dropped, 1);
     }
 

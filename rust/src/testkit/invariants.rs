@@ -9,8 +9,10 @@
 //!    backward pass applied exactly once, across any number of drops,
 //!    duplicates, reorders, and reassignments (no loss, no double-credit).
 //! 2. **Ack conservation** (distributed runs) — the active ledger
-//!    credited exactly the same total (`bwd_acked`), i.e. `remaining_bwd`
-//!    drained to zero every epoch without underflow.
+//!    credited exactly the same total net of crash-recovery voids
+//!    (`bwd_acked − bwd_acked_voided`), i.e. `remaining_bwd` drained to
+//!    zero every epoch without underflow, counting each re-run epoch
+//!    attempt once.
 //! 3. **Completion** — every scheduled epoch ran and recorded a finite
 //!    loss (an underflow or a lost credit shows up here as a stall or a
 //!    short curve).
@@ -96,11 +98,19 @@ pub fn check_session(
         format!("passive_bwd = {bwd}, expected epochs×n_batches×k = {expected}")
     });
 
-    // 2. Ack conservation across the wire.
+    // 2. Ack conservation across the wire. A crash-recovery rejoin voids
+    // the credits of an aborted epoch attempt (`bwd_acked_voided`) before
+    // re-running it, so the law nets those out: every *surviving* credit
+    // is accounted for exactly once.
     if passive_metrics.is_some() {
         let acked = active_metrics.counter("bwd_acked");
-        r.check(acked == expected, || {
-            format!("bwd_acked = {acked}, expected {expected} (credit drain mismatch)")
+        let voided = active_metrics.counter("bwd_acked_voided");
+        r.check(acked.saturating_sub(voided) == expected, || {
+            format!(
+                "bwd_acked = {acked} − voided {voided} = {}, expected {expected} \
+                 (credit drain mismatch)",
+                acked.saturating_sub(voided)
+            )
         });
     }
 
@@ -189,6 +199,26 @@ mod tests {
         let r = check_session(&exp, &s, &active, Some(&passive), None);
         assert_eq!(r.violations.len(), 1, "{:?}", r.violations);
         assert!(r.violations[0].contains("bwd_acked = 3"));
+    }
+
+    #[test]
+    fn voided_credits_net_out_of_ack_conservation() {
+        // A mid-epoch crash: the active side banked 3 credits for the
+        // aborted attempt, voided them at rejoin, then re-ran the epoch
+        // to completion. acked = 3 (aborted) + 4 (clean) = 7, voided 3.
+        let exp = ExactlyOnceExpectation { epochs: 1, n_batches: 4, parties: 1 };
+        let active = Metrics::new();
+        active.inc("bwd_acked", 7);
+        active.inc("bwd_acked_voided", 3);
+        let passive = Metrics::new();
+        passive.inc("passive_bwd", 4);
+        let s = session(1, &[0.4], 0);
+        check_session(&exp, &s, &active, Some(&passive), None).assert_ok("recovered");
+        // Without the void counter the same totals violate the law.
+        let bare = Metrics::new();
+        bare.inc("bwd_acked", 7);
+        let r = check_session(&exp, &s, &bare, Some(&passive), None);
+        assert_eq!(r.violations.len(), 1, "{:?}", r.violations);
     }
 
     #[test]

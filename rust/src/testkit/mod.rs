@@ -41,13 +41,38 @@ pub fn wrap_link_named(
     profile_name: &str,
     seed: u64,
 ) -> Result<Arc<dyn Link>> {
+    wrap_link_named_attempt(link, profile_name, seed, 0)
+}
+
+/// [`wrap_link_named`] for a rejoin: `attempt` distinguishes the fresh
+/// link a recovering session dials after a crash. The fault schedule is
+/// re-seeded per attempt (so the replacement link does not replay the
+/// exact fault sequence that killed its predecessor), and the
+/// crash-shaped faults — `disconnect_after` and `drop_window` — are
+/// stripped on `attempt > 0`: a rejoined link that immediately
+/// re-triggers the injected crash would never let the session make
+/// progress, which is not what the recovery tests are probing.
+pub fn wrap_link_named_attempt(
+    link: Arc<dyn Link>,
+    profile_name: &str,
+    seed: u64,
+    attempt: u32,
+) -> Result<Arc<dyn Link>> {
     if profile_name.is_empty() {
         return Ok(link);
     }
     let scenario = Scenario::parse(profile_name)
         .ok_or_else(|| anyhow!("unknown fault profile '{profile_name}'"))?;
-    eprintln!("[testkit] fault profile '{scenario}' armed (seed {seed}, replayable)");
-    let wrapped: Arc<dyn Link> = FaultLink::wrap(link, scenario.profile(seed));
+    let attempt_seed = seed ^ (attempt as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let mut profile = scenario.profile(attempt_seed);
+    if attempt > 0 {
+        profile.disconnect_after = None;
+        profile.drop_window = None;
+    }
+    eprintln!(
+        "[testkit] fault profile '{scenario}' armed (seed {attempt_seed}, attempt {attempt})"
+    );
+    let wrapped: Arc<dyn Link> = FaultLink::wrap(link, profile);
     Ok(wrapped)
 }
 
@@ -66,5 +91,21 @@ mod tests {
         assert!(wrapped.fault_stats().is_some());
         let (c, _d) = InProcTransport::pair_inproc();
         assert!(wrap_link_named(Arc::new(c), "no-such-profile", 1).is_err());
+    }
+
+    #[test]
+    fn rejoin_attempt_strips_crash_faults() {
+        use crate::coordinator::wire::Frame;
+        // partition_heal's drop_window would eat early data frames; a
+        // rejoin wrap (attempt > 0) must strip it so the replacement
+        // link delivers from frame one.
+        let (a, b) = InProcTransport::pair_inproc();
+        let wrapped = wrap_link_named_attempt(Arc::new(a), "partition_heal", 7, 1).unwrap();
+        assert!(wrapped.fault_stats().is_some(), "still a fault link (lossy faults stay)");
+        wrapped.send(Frame::Shutdown).unwrap();
+        match b.recv(std::time::Duration::from_secs(5)) {
+            crate::coordinator::transport::LinkRecv::Frame(Frame::Shutdown) => {}
+            other => panic!("expected Shutdown through rejoined link, got {other:?}"),
+        }
     }
 }

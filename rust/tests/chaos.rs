@@ -344,7 +344,9 @@ fn fuzz_frames() -> Vec<Frame> {
     use pubsub_vfl::coordinator::{EmbeddingMsg, GradientMsg};
     use pubsub_vfl::tensor::Matrix;
     vec![
-        Frame::Hello { parties: 2 },
+        Frame::Hello { parties: 2, session_id: 77, resume_token: 99, attempt: 1 },
+        Frame::Resume { epoch: 1, banked_bwd: 12 },
+        Frame::RestoreParams { party: 0, version: 4, flat: vec![0.5; 9] },
         Frame::EpochInstall { epoch: 1, batches: vec![(7, vec![1, 2, 3]), (8, vec![])] },
         Frame::EmbedJob { party: 1, batch_id: 7, generation: 3 },
         Frame::Embedding(EmbeddingMsg {

@@ -1,0 +1,356 @@
+//! Crash-recovery acceptance for the durable broker: a passive party
+//! killed mid-epoch (its link cut without `Shutdown`) must exit loudly,
+//! and a restarted incarnation pointed at the same state dir must rejoin
+//! the session — the supervisor re-handshakes under the durable identity,
+//! replays the in-flight epoch from the persistent control log, rolls
+//! both parties back to the barrier checkpoint, and the exactly-once
+//! conservation law (`passive_bwd == epochs × n_batches × k`) holds over
+//! the *logical* session spanning both incarnations.
+//!
+//! Also here: the `--resume` fast-forward path (in-proc), the foreign-
+//! checkpoint refusal, and the passive side's non-zero-exit regression.
+//! Set `CHAOS_JOURNAL_DIR` to dump fault journals (the CI
+//! `recovery-smoke` job uploads them, plus the state dirs, on failure).
+
+use pubsub_vfl::config::{ExperimentConfig, ModelSize};
+use pubsub_vfl::coordinator::{
+    serve_passive_session, train_pubsub_over_link_with, train_pubsub_session, Checkpoint,
+    DurableHub, Frame, InProcTransport, Link, LinkRecv, LogCaps, TcpLink,
+};
+use pubsub_vfl::data::{make_classification, ClassificationOpts, Task, VerticalDataset};
+use pubsub_vfl::experiment::{RunEvent, RunOptions, TrainCtx};
+use pubsub_vfl::metrics::Metrics;
+use pubsub_vfl::model::{HostSplitModel, SplitModelSpec};
+use pubsub_vfl::testkit::{
+    check_session, wrap_link_named_attempt, ExactlyOnceExpectation, FaultLink, Scenario,
+};
+use pubsub_vfl::util::Rng;
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const EPOCHS: usize = 4;
+const N_BATCHES: u64 = 6; // 192 aligned rows / batch 32
+const FAULT_SEED: u64 = 0xFA17;
+/// Active-side tx frame count after which the injected crash fires: past
+/// epoch 0's barrier on a clean wire (so a checkpoint usually exists) and
+/// inside epoch 1's data plane. The recovery path is correct from *any*
+/// crash point — if retries shift the schedule and the cut lands before
+/// the first barrier, the rejoin rolls back to the seeded init instead.
+const CRASH_AT_TX: u64 = 20;
+
+type Setup =
+    (Arc<HostSplitModel>, SplitModelSpec, VerticalDataset, VerticalDataset, ExperimentConfig);
+
+fn setup() -> Setup {
+    let mut rng = Rng::new(3);
+    let ds = make_classification(
+        &ClassificationOpts {
+            samples: 256,
+            features: 12,
+            informative: 8,
+            redundant: 2,
+            class_sep: 1.5,
+            flip_y: 0.0,
+            ..Default::default()
+        },
+        &mut rng,
+    );
+    let (tr, te) = ds.split(0.75);
+    let vtr = VerticalDataset::split_two(&tr, 6);
+    let vte = VerticalDataset::split_two(&te, 6);
+    let spec = SplitModelSpec::build(ModelSize::Small, 6, &[6], 16, 8);
+    let engine = Arc::new(HostSplitModel::new(spec.clone(), Task::BinaryClassification));
+    let mut cfg = ExperimentConfig::default();
+    cfg.train.batch_size = 32;
+    cfg.train.epochs = EPOCHS;
+    cfg.train.lr = 0.05;
+    cfg.train.target_accuracy = 2.0; // unreachable: run every epoch
+    cfg.parties.active_workers = 2;
+    cfg.parties.passive_workers = 2;
+    cfg.train.t_ddl_ms = 100;
+    (engine, spec, vtr, vte, cfg)
+}
+
+fn state_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("pubsub-vfl-recovery-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn dump_journal(name: &str, seed: u64, journal: &[String]) {
+    if let Ok(dir) = std::env::var("CHAOS_JOURNAL_DIR") {
+        let _ = std::fs::create_dir_all(&dir);
+        let body = format!("seed={seed}\n{}\n", journal.join("\n"));
+        let _ = std::fs::write(format!("{dir}/{name}.journal.txt"), body);
+    }
+}
+
+// ---- satellite regression: loud exit on a dropped supervisor link --------
+
+/// A passive server whose link drops without `Shutdown` must return a
+/// descriptive hard error (the serve-passive process exits non-zero), so
+/// a process supervisor knows to restart it with `--resume`.
+#[test]
+fn passive_exits_loudly_when_link_drops_without_shutdown() {
+    let (engine, spec, vtr, _vte, cfg) = setup();
+    let (active, passive) = InProcTransport::pair_inproc();
+    let passive: Arc<dyn Link> = Arc::new(passive);
+    let engine_p: Arc<dyn pubsub_vfl::model::SplitEngine> = engine;
+    let cfg_p = cfg.clone();
+    let spec_p = spec.clone();
+    let tr_p = vtr.clone();
+    let server = std::thread::spawn(move || {
+        serve_passive_session(&cfg_p, &spec_p, engine_p, &tr_p, passive, Arc::new(Metrics::new()))
+    });
+
+    active
+        .send(Frame::Hello { parties: 1, session_id: 7, resume_token: 9, attempt: 0 })
+        .unwrap();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        match active.recv(Duration::from_millis(50)) {
+            LinkRecv::Frame(Frame::HelloAck { .. }) => break,
+            LinkRecv::Frame(other) => panic!("expected HelloAck, got {other:?}"),
+            LinkRecv::Closed => panic!("passive closed during handshake"),
+            LinkRecv::TimedOut => assert!(Instant::now() < deadline, "no HelloAck"),
+        }
+    }
+    // Cut the wire with no Shutdown frame: the supervisor "crashed".
+    active.close();
+
+    let err = server.join().unwrap().expect_err("dropped link must be a hard error");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("without Shutdown"), "undescriptive error: {msg}");
+    assert!(msg.contains("--state-dir/--resume"), "error must point at recovery: {msg}");
+}
+
+// ---- resume safety --------------------------------------------------------
+
+/// `--resume` against a checkpoint written by a different experiment
+/// (different seed ⇒ different durable identity) is refused loudly, never
+/// silently trained on.
+#[test]
+fn resume_refuses_foreign_checkpoint() {
+    let (engine, spec, vtr, vte, mut cfg) = setup();
+    let dir = state_dir("foreign");
+    let hub = DurableHub::open(&dir, 1, LogCaps::default()).unwrap();
+    hub.save_checkpoint(&Checkpoint {
+        session_id: 0xDEAD,
+        resume_token: 0xBEEF,
+        completed_epochs: 1,
+        ..Checkpoint::default()
+    })
+    .unwrap();
+    cfg.durability.state_dir = dir.to_string_lossy().into_owned();
+    cfg.durability.resume = true;
+
+    let opts = RunOptions::default();
+    let engine: Arc<dyn pubsub_vfl::model::SplitEngine> = engine;
+    let ctx = TrainCtx {
+        engine,
+        spec: &spec,
+        train: &vtr,
+        test: &vte,
+        cfg: &cfg,
+        metrics: Arc::new(Metrics::new()),
+        opts: &opts,
+    };
+    let err = train_pubsub_session(&ctx).expect_err("foreign checkpoint must be refused");
+    assert!(format!("{err:#}").contains("refusing to resume"), "{err:#}");
+}
+
+/// The in-proc durable path: a full run writes barrier checkpoints; a
+/// second run with `--resume` fast-forwards past every completed epoch,
+/// banks their backward credit, and reproduces the same curves and final
+/// model without re-training.
+#[test]
+fn inproc_resume_fast_forwards_completed_epochs() {
+    let (engine, spec, vtr, vte, mut cfg) = setup();
+    let dir = state_dir("ffwd");
+    cfg.durability.state_dir = dir.to_string_lossy().into_owned();
+    let opts = RunOptions::default();
+
+    let m1 = Arc::new(Metrics::new());
+    let engine1: Arc<dyn pubsub_vfl::model::SplitEngine> = Arc::clone(&engine);
+    let r1 = {
+        let ctx = TrainCtx {
+            engine: engine1,
+            spec: &spec,
+            train: &vtr,
+            test: &vte,
+            cfg: &cfg,
+            metrics: Arc::clone(&m1),
+            opts: &opts,
+        };
+        train_pubsub_session(&ctx).unwrap()
+    };
+    let expected = (EPOCHS as u64) * N_BATCHES;
+    assert_eq!(r1.epochs_run, EPOCHS);
+    assert_eq!(m1.counter("passive_bwd"), expected);
+    assert!(dir.join("checkpoint.bin").exists(), "barrier checkpoint written");
+    assert!(!m1.series("broker_persisted_mb").is_empty(), "broker_* series recorded");
+
+    cfg.durability.resume = true;
+    let m2 = Arc::new(Metrics::new());
+    let engine2: Arc<dyn pubsub_vfl::model::SplitEngine> = engine;
+    let r2 = {
+        let ctx = TrainCtx {
+            engine: engine2,
+            spec: &spec,
+            train: &vtr,
+            test: &vte,
+            cfg: &cfg,
+            metrics: Arc::clone(&m2),
+            opts: &opts,
+        };
+        train_pubsub_session(&ctx).unwrap()
+    };
+    assert_eq!(m2.counter("resumed_from_checkpoint"), 1);
+    assert_eq!(r2.epochs_run, EPOCHS, "banked epochs still count as run");
+    assert_eq!(m2.counter("passive_bwd"), expected, "resume banks the checkpointed credit");
+    assert_eq!(r2.loss_curve, r1.loss_curve, "curves restored from the checkpoint");
+    assert!(
+        (r2.final_metric - r1.final_metric).abs() < 1e-6,
+        "restored model drifted: {} vs {}",
+        r2.final_metric,
+        r1.final_metric
+    );
+}
+
+// ---- the tentpole acceptance: kill + restart + rejoin over TCP ------------
+
+/// One kill+restart cell: the active supervisor trains over real loopback
+/// TCP decorated with `scenario`'s fault schedule *plus* an injected
+/// mid-epoch disconnect that kills the link under the first passive
+/// incarnation. The first serve call must exit non-zero; a second
+/// incarnation on the same listener (same state dir, resume semantics)
+/// must accept the supervisor's rejoin and finish the session with every
+/// invariant intact.
+fn recovery_cell(scenario: Scenario) {
+    let (engine, spec, vtr, vte, mut cfg) = setup();
+    let dir = state_dir(&format!("kill-{scenario}"));
+    cfg.durability.state_dir = dir.to_string_lossy().into_owned();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+
+    // ---- passive party: incarnation 1 dies with the link; the restart
+    // validates the session file and rejoins.
+    let cfg_p1 = cfg.clone();
+    let mut cfg_p2 = cfg.clone();
+    cfg_p2.durability.resume = true;
+    let spec_p = spec.clone();
+    let tr_p = vtr.clone();
+    let engine_p: Arc<dyn pubsub_vfl::model::SplitEngine> = Arc::clone(&engine);
+    let m2 = Arc::new(Metrics::new());
+    let m2_p = Arc::clone(&m2);
+    let server = std::thread::spawn(move || {
+        let l1: Arc<dyn Link> = Arc::new(TcpLink::accept(&listener).unwrap());
+        let first = serve_passive_session(
+            &cfg_p1,
+            &spec_p,
+            Arc::clone(&engine_p),
+            &tr_p,
+            l1,
+            Arc::new(Metrics::new()),
+        );
+        let msg = format!("{:#}", first.expect_err("crashed incarnation must exit non-zero"));
+        assert!(msg.contains("without Shutdown"), "incarnation 1: {msg}");
+        // "SIGKILL + restart": a fresh process accepts the supervisor's
+        // rejoin dial on the same endpoint and state dir.
+        let l2: Arc<dyn Link> = Arc::new(TcpLink::accept(&listener).unwrap());
+        serve_passive_session(&cfg_p2, &spec_p, engine_p, &tr_p, l2, m2_p)
+            .expect("restarted passive must finish the session")
+    });
+
+    // ---- active party: scenario faults + the injected crash ----------
+    let profile_name = scenario.to_string();
+    let mut profile = scenario.profile(FAULT_SEED);
+    profile.disconnect_after = Some(CRASH_AT_TX);
+    let raw = TcpLink::connect(&addr, Duration::from_secs(10)).expect("dial passive");
+    let fl = FaultLink::wrap(Arc::new(raw), profile);
+    let initial: Arc<dyn Link> = Arc::<FaultLink>::clone(&fl);
+
+    let active_metrics = Arc::new(Metrics::new());
+    let am = Arc::clone(&active_metrics);
+    let retries = Arc::new(AtomicU64::new(0));
+    let rc = Arc::clone(&retries);
+    let addr_r = addr.clone();
+    let h = std::thread::spawn(move || {
+        // The redial mirrors `train --connect`'s durable reconnector: the
+        // same named profile, re-seeded per attempt, crash faults
+        // stripped so the replacement link can make progress.
+        let reconnect = move |attempt: u32| -> anyhow::Result<Arc<dyn Link>> {
+            let l = TcpLink::connect(&addr_r, Duration::from_secs(10))
+                .map_err(|e| anyhow::anyhow!("redial failed: {e}"))?;
+            wrap_link_named_attempt(Arc::new(l), &profile_name, FAULT_SEED, attempt)
+        };
+        let opts = RunOptions::new().with_observer(move |ev| {
+            if matches!(ev, RunEvent::BatchRetried { .. }) {
+                rc.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        let engine: Arc<dyn pubsub_vfl::model::SplitEngine> = engine;
+        let ctx = TrainCtx {
+            engine,
+            spec: &spec,
+            train: &vtr,
+            test: &vte,
+            cfg: &cfg,
+            metrics: am,
+            opts: &opts,
+        };
+        train_pubsub_over_link_with(&ctx, initial, Some(&reconnect))
+            .expect("durable session must survive the crash")
+    });
+
+    let deadline = Instant::now() + Duration::from_secs(300);
+    while !h.is_finished() {
+        assert!(Instant::now() < deadline, "{scenario}: recovery session hung");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let session = h.join().unwrap();
+    let report = server.join().unwrap();
+    dump_journal(&format!("recovery_{scenario}"), FAULT_SEED, &fl.journal());
+
+    // The crash really fired, and the session really rejoined.
+    assert!(fl.injected().disconnects >= 1, "{scenario}: the crash never fired");
+    assert!(active_metrics.counter("rejoin_attempts") >= 1, "{scenario}: no rejoin recorded");
+    assert!(m2.counter("rejoin_handshakes") >= 1, "{scenario}: restart saw no rejoin Hello");
+    assert!(m2.counter("resumes_applied") >= 1, "{scenario}: restart never banked credit");
+
+    // Conservation over the logical session: the restarted incarnation's
+    // banked + applied backward passes equal epochs × n_batches × k, and
+    // the active ledger's credits net of the voided attempt agree.
+    let exp = ExactlyOnceExpectation { epochs: EPOCHS as u64, n_batches: N_BATCHES, parties: 1 };
+    check_session(
+        &exp,
+        &session,
+        &active_metrics,
+        Some(&m2),
+        Some(retries.load(Ordering::Relaxed)),
+    )
+    .assert_ok(&format!("kill+restart under {scenario}"));
+    assert_eq!(report.bwd_applied, exp.expected_bwd(), "{scenario}: passive ledger mirror");
+    assert_eq!(report.epochs_served, EPOCHS, "{scenario}: epochs served after restart");
+    assert!(
+        session.final_metric > 0.7,
+        "{scenario}: AUC {} after crash recovery",
+        session.final_metric
+    );
+}
+
+#[test]
+fn kill_restart_resume_lossy_lan_tcp() {
+    recovery_cell(Scenario::LossyLan);
+}
+
+#[test]
+fn kill_restart_resume_partition_heal_tcp() {
+    recovery_cell(Scenario::PartitionHeal);
+}
