@@ -1,0 +1,164 @@
+//! Ratchet-only baseline for vflint findings.
+//!
+//! The baseline file pins the set of *accepted* findings: a run fails
+//! only on findings not in the baseline, so the count can ratchet down
+//! (delete entries as they are fixed) but never silently up. Entries
+//! are keyed by `(lint, path, message)` — no line numbers — so edits
+//! elsewhere in a file do not invalidate them.
+//!
+//! Format: one entry per line, tab-separated `LINT\tPATH\tMESSAGE`;
+//! blank lines and lines starting with `#` are comments. Matching is
+//! multiset: two identical accepted findings need two entries.
+
+use super::lints::Finding;
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+/// A parsed baseline: finding key -> accepted count.
+#[derive(Debug, Default)]
+pub struct Baseline {
+    accepted: BTreeMap<String, usize>,
+}
+
+impl Baseline {
+    /// Load from `path`; a missing file is an empty baseline.
+    pub fn load(path: &Path) -> Result<Baseline, String> {
+        let mut b = Baseline::default();
+        let text = match fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(b),
+            Err(e) => return Err(format!("read baseline {}: {e}", path.display())),
+        };
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim_end();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if line.split('\t').count() != 3 {
+                return Err(format!(
+                    "{}:{}: malformed baseline entry (want LINT\\tPATH\\tMESSAGE)",
+                    path.display(),
+                    ln + 1
+                ));
+            }
+            *b.accepted.entry(line.to_string()).or_insert(0) += 1;
+        }
+        Ok(b)
+    }
+
+    /// Split findings into (new, suppressed) and report stale entries —
+    /// baseline lines no longer matched by any finding (candidates for
+    /// deletion; stale entries never fail the run, keeping the ratchet
+    /// monotone in one direction only).
+    pub fn apply(&self, findings: &[Finding]) -> Applied {
+        let mut budget = self.accepted.clone();
+        let mut new = Vec::new();
+        let mut suppressed = 0usize;
+        for f in findings {
+            match budget.get_mut(&f.key()) {
+                Some(n) if *n > 0 => {
+                    *n -= 1;
+                    suppressed += 1;
+                }
+                _ => new.push(f.clone()),
+            }
+        }
+        let stale = budget
+            .into_iter()
+            .filter(|(_, n)| *n > 0)
+            .flat_map(|(k, n)| std::iter::repeat(k).take(n))
+            .collect();
+        Applied { new, suppressed, stale }
+    }
+
+    /// Serialize `findings` as a fresh baseline file body.
+    pub fn render(findings: &[Finding]) -> String {
+        let mut out = String::from(
+            "# vflint baseline — accepted findings, one per line (LINT\\tPATH\\tMESSAGE).\n\
+             # Ratchet-only: new findings fail the build; delete lines as they are fixed.\n\
+             # Regenerate with `cargo run --bin vflint -- --write-baseline`.\n",
+        );
+        let mut keys: Vec<String> = findings.iter().map(|f| f.key()).collect();
+        keys.sort();
+        for k in keys {
+            out.push_str(&k);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Result of matching findings against a baseline.
+pub struct Applied {
+    /// Findings not covered by the baseline (these fail the run).
+    pub new: Vec<Finding>,
+    /// How many findings the baseline absorbed.
+    pub suppressed: usize,
+    /// Baseline entries with no matching finding (fixed — delete them).
+    pub stale: Vec<String>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(lint: &'static str, path: &str, msg: &str) -> Finding {
+        Finding { lint, path: path.to_string(), line: 1, msg: msg.to_string() }
+    }
+
+    #[test]
+    fn empty_baseline_passes_everything_through() {
+        let b = Baseline::default();
+        let a = b.apply(&[f("P001", "x.rs", "boom")]);
+        assert_eq!(a.new.len(), 1);
+        assert_eq!(a.suppressed, 0);
+        assert!(a.stale.is_empty());
+    }
+
+    #[test]
+    fn multiset_matching_and_stale_detection() {
+        let findings = [f("P001", "x.rs", "boom"), f("P001", "x.rs", "boom")];
+        let body = Baseline::render(&findings);
+        let dir = std::env::temp_dir().join("vflint-baseline-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("b.txt");
+        std::fs::write(&p, body).unwrap();
+        let b = Baseline::load(&p).unwrap();
+
+        // Two accepted, two found: all suppressed.
+        let a = b.apply(&findings);
+        assert!(a.new.is_empty());
+        assert_eq!(a.suppressed, 2);
+        assert!(a.stale.is_empty());
+
+        // One fixed: one stale entry, still no failures.
+        let a = b.apply(&findings[..1]);
+        assert!(a.new.is_empty());
+        assert_eq!(a.stale.len(), 1);
+
+        // A third identical finding exceeds the budget: it is new.
+        let three = [findings[0].clone(), findings[1].clone(), findings[0].clone()];
+        let a = b.apply(&three);
+        assert_eq!(a.new.len(), 1);
+    }
+
+    #[test]
+    fn comments_and_blanks_are_ignored_and_malformed_rejected() {
+        let dir = std::env::temp_dir().join("vflint-baseline-test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("b.txt");
+        std::fs::write(&p, "# header\n\nP001\tx.rs\tboom\n").unwrap();
+        let b = Baseline::load(&p).unwrap();
+        assert!(b.apply(&[f("P001", "x.rs", "boom")]).new.is_empty());
+
+        std::fs::write(&p, "not a valid line\n").unwrap();
+        assert!(Baseline::load(&p).is_err());
+    }
+
+    #[test]
+    fn missing_file_is_empty() {
+        let b = Baseline::load(Path::new("/nonexistent/vflint.baseline")).unwrap();
+        assert_eq!(b.apply(&[]).suppressed, 0);
+    }
+}

@@ -1,0 +1,337 @@
+//! A hand-rolled Rust token scanner for `vflint` — the static-analysis
+//! sibling of the hand-rolled wire codec. Zero dependencies by design:
+//! the linter must stay hermetic in the offline build environment.
+//!
+//! This is not a full Rust lexer; it covers exactly what the lints need:
+//! comments (line + nested block), string/char/byte literals, raw
+//! strings, lifetimes-vs-char-literals disambiguation, identifiers,
+//! numbers, and single-character punctuation, each stamped with its
+//! 1-based source line. Comment *content* is preserved separately (the
+//! `R001` relaxed-ordering lint reads invariant comments); literal
+//! content is discarded (no lint needs it, and discarding it means a
+//! string containing `".unwrap()"` can never false-positive).
+
+/// Token classes the lints distinguish.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`let`, `fn`, `lock`, `RankedMutex`, ...).
+    Ident,
+    /// Single punctuation character (`.`, `{`, `!`, ...).
+    Punct,
+    /// A lifetime such as `'a` (content discarded).
+    Lifetime,
+    /// A string/char/byte literal (content discarded).
+    Literal,
+    /// A numeric literal (text kept: tuple field access `pair.0`).
+    Num,
+}
+
+/// One token with its source position.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    /// True if this token is the identifier `s`.
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    /// True if this token is the punctuation character `c`.
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == 1 && self.text.starts_with(c)
+    }
+}
+
+/// A comment with the line it starts on (content without delimiters).
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub line: u32,
+    pub end_line: u32,
+    pub text: String,
+}
+
+/// The lexed view of one source file.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+/// Lex `src` into tokens + comments. Never fails: unterminated
+/// constructs consume to end-of-file (the compiler is the authority on
+/// well-formedness; the linter only needs a consistent view).
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut out = Lexed::default();
+
+    let is_id_start = |c: char| c.is_alphabetic() || c == '_';
+    let is_id = |c: char| c.is_alphanumeric() || c == '_';
+
+    while i < n {
+        let c = b[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_whitespace() => i += 1,
+            '/' if i + 1 < n && b[i + 1] == '/' => {
+                let start = i + 2;
+                let mut j = start;
+                while j < n && b[j] != '\n' {
+                    j += 1;
+                }
+                out.comments.push(Comment {
+                    line,
+                    end_line: line,
+                    text: b[start..j].iter().collect(),
+                });
+                i = j;
+            }
+            '/' if i + 1 < n && b[i + 1] == '*' => {
+                // Nested block comments, per the Rust grammar.
+                let start_line = line;
+                let start = i + 2;
+                let mut depth = 1usize;
+                let mut j = start;
+                while j < n && depth > 0 {
+                    if b[j] == '\n' {
+                        line += 1;
+                        j += 1;
+                    } else if b[j] == '/' && j + 1 < n && b[j + 1] == '*' {
+                        depth += 1;
+                        j += 2;
+                    } else if b[j] == '*' && j + 1 < n && b[j + 1] == '/' {
+                        depth -= 1;
+                        j += 2;
+                    } else {
+                        j += 1;
+                    }
+                }
+                let end = j.saturating_sub(2).max(start);
+                out.comments.push(Comment {
+                    line: start_line,
+                    end_line: line,
+                    text: b[start..end].iter().collect(),
+                });
+                i = j;
+            }
+            '"' => {
+                let l0 = line;
+                i = skip_string(&b, i, &mut line);
+                out.toks.push(Tok { kind: TokKind::Literal, text: String::new(), line: l0 });
+            }
+            'r' | 'b' if starts_raw_or_byte_literal(&b, i) => {
+                let l0 = line;
+                i = skip_prefixed_literal(&b, i, &mut line);
+                out.toks.push(Tok { kind: TokKind::Literal, text: String::new(), line: l0 });
+            }
+            '\'' => {
+                // Lifetime vs char literal: `'\...'` and `'x'` are chars;
+                // `'ident` not closed by a quote is a lifetime.
+                let is_char = i + 1 < n
+                    && (b[i + 1] == '\\'
+                        || (i + 2 < n && b[i + 2] == '\'' && b[i + 1] != '\''));
+                if is_char {
+                    let l0 = line;
+                    let mut j = i + 1;
+                    if j < n && b[j] == '\\' {
+                        j += 2; // escape + escaped char
+                        // Multi-char escapes (\u{..}, \x41) run to the quote.
+                        while j < n && b[j] != '\'' && b[j] != '\n' {
+                            j += 1;
+                        }
+                    } else {
+                        j += 1;
+                    }
+                    if j < n && b[j] == '\'' {
+                        j += 1;
+                    }
+                    out.toks.push(Tok { kind: TokKind::Literal, text: String::new(), line: l0 });
+                    i = j;
+                } else {
+                    let mut j = i + 1;
+                    while j < n && is_id(b[j]) {
+                        j += 1;
+                    }
+                    out.toks.push(Tok { kind: TokKind::Lifetime, text: String::new(), line });
+                    i = j;
+                }
+            }
+            c if is_id_start(c) => {
+                let mut j = i;
+                while j < n && is_id(b[j]) {
+                    j += 1;
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Ident,
+                    text: b[i..j].iter().collect(),
+                    line,
+                });
+                i = j;
+            }
+            c if c.is_ascii_digit() => {
+                // Numeric literal: suffixes and hex digits fold in; `.`
+                // stays punctuation so `pair.0` and `0..4` lex cleanly.
+                let mut j = i;
+                while j < n && is_id(b[j]) {
+                    j += 1;
+                }
+                out.toks.push(Tok { kind: TokKind::Num, text: b[i..j].iter().collect(), line });
+                i = j;
+            }
+            c => {
+                out.toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Does `b[i..]` start a raw string (`r"`, `r#`), byte string (`b"`),
+/// or raw byte string (`br"`, `br#`)? Plain identifiers starting with
+/// `r`/`b` fall through to the ident lexer.
+fn starts_raw_or_byte_literal(b: &[char], i: usize) -> bool {
+    let n = b.len();
+    let mut j = i;
+    if b[j] == 'b' {
+        j += 1;
+        if j < n && b[j] == '"' {
+            return true;
+        }
+    }
+    if j < n && b[j] == 'r' {
+        j += 1;
+        while j < n && b[j] == '#' {
+            j += 1;
+        }
+        return j < n && b[j] == '"';
+    }
+    false
+}
+
+/// Skip a `"..."` string with escapes; returns the index past the
+/// closing quote, updating `line` across embedded newlines.
+fn skip_string(b: &[char], i: usize, line: &mut u32) -> usize {
+    let n = b.len();
+    let mut j = i + 1;
+    while j < n {
+        match b[j] {
+            '\\' => j += 2,
+            '"' => return j + 1,
+            '\n' => {
+                *line += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    n
+}
+
+/// Skip `b"..."`, `r"..."`, `r#"..."#`, `br#"..."#` literals.
+fn skip_prefixed_literal(b: &[char], i: usize, line: &mut u32) -> usize {
+    let n = b.len();
+    let mut j = i;
+    if b[j] == 'b' {
+        j += 1;
+    }
+    if j < n && b[j] == 'r' {
+        j += 1;
+        let mut hashes = 0usize;
+        while j < n && b[j] == '#' {
+            hashes += 1;
+            j += 1;
+        }
+        // At the opening quote of a raw string: scan for `"` + hashes.
+        j += 1;
+        while j < n {
+            if b[j] == '\n' {
+                *line += 1;
+                j += 1;
+            } else if b[j] == '"' && b[j + 1..].iter().take(hashes).filter(|&&c| c == '#').count() == hashes
+            {
+                return j + 1 + hashes;
+            } else {
+                j += 1;
+            }
+        }
+        n
+    } else {
+        // b"..." — ordinary escape rules.
+        skip_string(b, j, line)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn comments_are_captured_not_tokenized() {
+        let l = lex("let a = 1; // Relaxed: fine\n/* block\nspans */ let b = 2;");
+        assert_eq!(l.comments.len(), 2);
+        assert!(l.comments[0].text.contains("Relaxed"));
+        assert_eq!(l.comments[0].line, 1);
+        assert_eq!(l.comments[1].line, 2);
+        assert_eq!(l.comments[1].end_line, 3);
+        assert_eq!(idents("let a = 1; // x\nlet b = 2;"), ["let", "a", "let", "b"]);
+    }
+
+    #[test]
+    fn strings_and_chars_do_not_leak_tokens() {
+        let l = lex(r#"call(".unwrap()", 'x', '\n', b"Mutex", r#_x)"#);
+        assert!(!l.toks.iter().any(|t| t.text == "unwrap" || t.text == "Mutex"));
+        // `r#_x` is a plain identifier path, not a raw string.
+        assert!(l.toks.iter().any(|t| t.is_ident("r")));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let src = "let s = r##\"has \"quote\" and .lock()\"##; s.lock();";
+        let l = lex(src);
+        let locks: Vec<_> = l.toks.iter().filter(|t| t.is_ident("lock")).collect();
+        assert_eq!(locks.len(), 1, "only the real .lock() outside the literal");
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let l = lex("fn f<'a>(x: &'a str) { let c = 'y'; let nl = '\\n'; }");
+        let lifetimes = l.toks.iter().filter(|t| t.kind == TokKind::Lifetime).count();
+        let chars = l.toks.iter().filter(|t| t.kind == TokKind::Literal).count();
+        assert_eq!(lifetimes, 2);
+        assert_eq!(chars, 2);
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let l = lex("/* outer /* inner */ still comment */ let x = 1;");
+        assert_eq!(l.comments.len(), 1);
+        assert_eq!(idents("/* a /* b */ c */ let x = 1;"), ["let", "x"]);
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_constructs() {
+        let src = "let a = \"two\nlines\";\nlet b = 1;";
+        let l = lex(src);
+        let b_tok = l.toks.iter().find(|t| t.is_ident("b")).unwrap();
+        assert_eq!(b_tok.line, 3);
+    }
+}

@@ -1,0 +1,1037 @@
+//! The vflint lint passes.
+//!
+//! Every lint works on the token stream from [`super::lexer`] — no AST,
+//! no external parser. Findings carry a stable `(lint, path, message)`
+//! key so the baseline file survives unrelated line drift.
+//!
+//! Lint catalog (see EXPERIMENTS.md §Static analysis for the rationale):
+//!
+//! - **L001** lock-order violation: a `.lock()` whose rank is not
+//!   strictly above every rank already held (same-rank only where
+//!   [`Rank::allows_same_rank`]). Intra-procedural: nested scopes inside
+//!   one function; cross-function chains are the runtime checker's job.
+//! - **L002** unknown lock site: a `.lock()` in the coordinator whose
+//!   receiver cannot be resolved to a rank (binding maps + alias table).
+//! - **P001** panic path: `.unwrap()` / `.expect(` / `panic!` /
+//!   `unreachable!` / `todo!` / `unimplemented!` in non-test
+//!   `coordinator/{session,transport,durable}` code. (Indexing panics
+//!   are deliberately out of scope: slice indexing is pervasive in the
+//!   kernels and a lint on it would drown the signal.)
+//! - **A001** hot-path allocation: allocation tokens inside `*_into`
+//!   zero-alloc kernels (the contract pinned by `rust/tests/zero_alloc.rs`).
+//! - **W001** wire exhaustiveness: every `Frame` variant must appear in
+//!   the codec's test region, in `kind_name()`, and in the decode fuzz
+//!   list (`fuzz_frames`).
+//! - **R001** undocumented relaxed ordering: `Ordering::Relaxed` in
+//!   `coordinator/session/` without an invariant comment mentioning
+//!   "relaxed" on the same line or within the 6 preceding lines.
+//! - **D001** dead shim: `#[deprecated]` items in non-test sources.
+//! - **M001** unranked primitive: raw `std::sync::Mutex`/`Condvar` in
+//!   the coordinator or worker pool (everything there must carry a
+//!   [`Rank`]; `RwLock` is exempt — the swappable link keeps one, with
+//!   poison absorbed at the call sites).
+//!
+//! Suppression: a comment containing `vflint: allow(<LINT>)` on the
+//! finding's line or the line above silences that one finding (used for
+//! documented exceptions, e.g. the XLA literal accessor that only
+//! exposes an owned `to_vec`). Everything else goes through the
+//! ratchet-only baseline file.
+
+use super::lexer::{lex, Lexed, Tok, TokKind};
+use crate::util::ordered::Rank;
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs;
+use std::path::Path;
+
+/// One diagnostic.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Finding {
+    /// Repo-relative path (forward slashes).
+    pub path: String,
+    pub line: u32,
+    /// Stable lint id (`L001`, `P001`, ...).
+    pub lint: &'static str,
+    pub msg: String,
+}
+
+impl Finding {
+    /// The stable identity used by the baseline (line numbers excluded
+    /// so unrelated edits above a finding don't invalidate the entry).
+    pub fn key(&self) -> String {
+        format!("{}\t{}\t{}", self.lint, self.path, self.msg)
+    }
+
+    pub fn render(&self) -> String {
+        format!("{}:{}: {} {}", self.path, self.line, self.lint, self.msg)
+    }
+}
+
+/// A `RankedMutex::new` construction site (for the totality self-test).
+#[derive(Clone, Debug)]
+pub struct ConstructionSite {
+    pub path: String,
+    pub line: u32,
+    /// `Some("Ledger")` when the site names a literal `Rank::X`.
+    pub rank_name: Option<String>,
+    /// The binding the construction was attributed to, if any.
+    pub binding: Option<String>,
+}
+
+/// One lexed + pre-analyzed source file.
+struct SrcFile {
+    /// Path as reported in diagnostics (repo-relative).
+    rel: String,
+    /// Path relative to the source root, for scope matching.
+    scope_rel: String,
+    lx: Lexed,
+    /// Token is inside a `#[test]` / `#[cfg(test)]` item.
+    test: Vec<bool>,
+    /// For each token: index of the innermost enclosing `}` token
+    /// (usize::MAX at top level).
+    enclosing_close: Vec<usize>,
+}
+
+struct FnSpan {
+    name: String,
+    body_open: usize,
+    body_close: usize,
+}
+
+/// The whole-tree analysis context.
+pub struct Analysis {
+    files: Vec<SrcFile>,
+    /// name -> rank, merged across files (conflicts dropped).
+    global_bindings: BTreeMap<String, Rank>,
+    /// per-file name -> rank maps, same index as `files`.
+    file_bindings: Vec<BTreeMap<String, Rank>>,
+    constructions: Vec<ConstructionSite>,
+}
+
+/// Receiver names whose rank is positional rather than lexical: loop
+/// variables and closure parameters over homogeneous lock arrays. Kept
+/// deliberately small; anything not resolvable here is an L002.
+const ALIASES: &[(&str, Rank)] = &[
+    ("replica", Rank::Replica),
+    ("reps", Rank::Replica),
+    ("rep", Rank::Replica),
+    ("r", Rank::Replica),
+    ("m", Rank::Replica),
+    ("dp", Rank::DpNoise),
+    ("log", Rank::DurableLog),
+    ("jobs", Rank::ServeJobs),
+    ("job_q", Rank::ServeJobs),
+];
+
+/// Files subject to the lock lints (L001/L002/M001): the coordinator
+/// plus the worker pool it dispatches onto.
+fn in_lock_scope(rel: &str) -> bool {
+    rel.starts_with("coordinator/") || rel == "util/pool.rs"
+}
+
+/// Files subject to the panic-path lint (P001).
+fn in_panic_scope(rel: &str) -> bool {
+    rel.starts_with("coordinator/session")
+        || rel.starts_with("coordinator/transport")
+        || rel.starts_with("coordinator/durable")
+}
+
+/// Files subject to the relaxed-ordering lint (R001).
+fn in_relaxed_scope(rel: &str) -> bool {
+    rel.starts_with("coordinator/session")
+}
+
+/// Analyze the tree rooted at `root`. If `root/rust/src` exists it is
+/// the source root (diagnostic paths get the `rust/src/` prefix);
+/// otherwise `root` itself is scanned — that is how the self-test
+/// fixtures run the binary against miniature trees.
+pub fn analyze_tree(root: &Path) -> Result<Analysis, String> {
+    let nested = root.join("rust").join("src");
+    let (src_root, prefix) = if nested.is_dir() {
+        (nested, "rust/src/")
+    } else {
+        (root.to_path_buf(), "")
+    };
+    let mut paths = Vec::new();
+    collect_rs(&src_root, &mut paths)?;
+    paths.sort();
+
+    let mut files = Vec::new();
+    for p in &paths {
+        let src = fs::read_to_string(p)
+            .map_err(|e| format!("read {}: {e}", p.display()))?;
+        let scope_rel = p
+            .strip_prefix(&src_root)
+            .map_err(|e| format!("strip prefix: {e}"))?
+            .to_string_lossy()
+            .replace('\\', "/");
+        let lx = lex(&src);
+        let test = test_mask(&lx.toks);
+        let enclosing_close = enclosing_close_map(&lx.toks);
+        files.push(SrcFile {
+            rel: format!("{prefix}{scope_rel}"),
+            scope_rel,
+            lx,
+            test,
+            enclosing_close,
+        });
+    }
+
+    let mut analysis = Analysis {
+        files,
+        global_bindings: BTreeMap::new(),
+        file_bindings: Vec::new(),
+        constructions: Vec::new(),
+    };
+    analysis.extract_bindings();
+    Ok(analysis)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<(), String> {
+    let rd = fs::read_dir(dir).map_err(|e| format!("read dir {}: {e}", dir.display()))?;
+    for entry in rd {
+        let entry = entry.map_err(|e| format!("read dir entry: {e}"))?;
+        let p = entry.path();
+        let name = entry.file_name().to_string_lossy().to_string();
+        if p.is_dir() {
+            // Vendored crates and build output are not ours to lint.
+            if name == "vendor" || name == "target" || name == ".git" {
+                continue;
+            }
+            collect_rs(&p, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+impl Analysis {
+    /// All findings across every lint, sorted by (path, line, lint).
+    pub fn run_all(&self, fuzz_file: Option<&Path>) -> Vec<Finding> {
+        let mut out = Vec::new();
+        for (fi, f) in self.files.iter().enumerate() {
+            if in_lock_scope(&f.scope_rel) {
+                self.lint_lock_order(fi, &mut out);
+                self.lint_raw_primitives(fi, &mut out);
+            }
+            if in_panic_scope(&f.scope_rel) {
+                self.lint_panic_paths(fi, &mut out);
+            }
+            if in_relaxed_scope(&f.scope_rel) {
+                self.lint_relaxed(fi, &mut out);
+            }
+            self.lint_hot_path_alloc(fi, &mut out);
+            self.lint_deprecated(fi, &mut out);
+        }
+        self.lint_wire_exhaustive(fuzz_file, &mut out);
+        out.retain(|fnd| !self.is_allowed(fnd));
+        out.sort();
+        out
+    }
+
+    /// `vflint: allow(<LINT>)` on the finding's line or the line above.
+    fn is_allowed(&self, fnd: &Finding) -> bool {
+        let needle = format!("vflint: allow({})", fnd.lint);
+        self.files.iter().filter(|f| f.rel == fnd.path).any(|f| {
+            f.lx.comments.iter().any(|c| {
+                c.text.contains(&needle)
+                    && c.line <= fnd.line
+                    && c.end_line + 1 >= fnd.line
+            })
+        })
+    }
+
+    /// Every `RankedMutex::new` construction site seen in non-test code
+    /// (drives the rank-table totality self-test).
+    pub fn construction_sites(&self) -> &[ConstructionSite] {
+        &self.constructions
+    }
+
+    // -- binding extraction -------------------------------------------------
+
+    fn extract_bindings(&mut self) {
+        let mut global: BTreeMap<String, Rank> = BTreeMap::new();
+        let mut poisoned: BTreeSet<String> = BTreeSet::new();
+        let mut per_file = Vec::new();
+        let mut constructions = Vec::new();
+        for f in &self.files {
+            let mut local: BTreeMap<String, Rank> = BTreeMap::new();
+            let mut local_poison: BTreeSet<String> = BTreeSet::new();
+            let toks = &f.lx.toks;
+            for i in 0..toks.len() {
+                if f.test[i] || !is_path_call(toks, i, "RankedMutex", "new") {
+                    continue;
+                }
+                let rank_name = find_rank_arg(toks, i);
+                let rank = rank_name.as_deref().and_then(Rank::from_name);
+                let binding = binding_name_for_construction(toks, i);
+                constructions.push(ConstructionSite {
+                    path: f.rel.clone(),
+                    line: toks[i].line,
+                    rank_name,
+                    binding: binding.clone(),
+                });
+                if let (Some(name), Some(rank)) = (binding, rank) {
+                    match local.get(&name) {
+                        Some(&prev) if prev != rank => {
+                            local_poison.insert(name);
+                        }
+                        _ => {
+                            local.insert(name, rank);
+                        }
+                    }
+                }
+            }
+            for name in &local_poison {
+                local.remove(name);
+            }
+            for (name, rank) in &local {
+                match global.get(name) {
+                    Some(&prev) if prev != *rank => {
+                        poisoned.insert(name.clone());
+                    }
+                    _ => {
+                        global.insert(name.clone(), *rank);
+                    }
+                }
+            }
+            per_file.push(local);
+        }
+        for name in &poisoned {
+            global.remove(name);
+        }
+        self.global_bindings = global;
+        self.file_bindings = per_file;
+        self.constructions = constructions;
+    }
+
+    /// Resolve a lock receiver to a rank: per-file bindings, then the
+    /// cross-file map, then the positional alias table.
+    fn resolve(&self, fi: usize, name: &str) -> Option<Rank> {
+        if let Some(&r) = self.file_bindings[fi].get(name) {
+            return Some(r);
+        }
+        if let Some(&r) = self.global_bindings.get(name) {
+            return Some(r);
+        }
+        ALIASES.iter().find(|(a, _)| *a == name).map(|&(_, r)| r)
+    }
+
+    // -- L001 / L002 --------------------------------------------------------
+
+    fn lint_lock_order(&self, fi: usize, out: &mut Vec<Finding>) {
+        let f = &self.files[fi];
+        let toks = &f.lx.toks;
+        for span in fn_spans(toks) {
+            if f.test[span.body_open] {
+                continue;
+            }
+            self.check_fn_locks(fi, &span, out);
+        }
+    }
+
+    fn check_fn_locks(&self, fi: usize, span: &FnSpan, out: &mut Vec<Finding>) {
+        let f = &self.files[fi];
+        let toks = &f.lx.toks;
+        // Guards held at the current token: (rank, released-after token
+        // index, binding name if `let`-bound).
+        let mut held: Vec<(Rank, usize, Option<String>)> = Vec::new();
+        let mut i = span.body_open + 1;
+        while i < span.body_close {
+            held.retain(|&(_, rel, _)| rel > i);
+            // `drop(name)` releases a named guard early.
+            if toks[i].is_ident("drop")
+                && i + 3 < span.body_close
+                && toks[i + 1].is_punct('(')
+                && toks[i + 2].kind == TokKind::Ident
+                && toks[i + 3].is_punct(')')
+            {
+                let victim = toks[i + 2].text.clone();
+                held.retain(|(_, _, n)| n.as_deref() != Some(victim.as_str()));
+                i += 4;
+                continue;
+            }
+            let is_lock = toks[i].is_ident("lock")
+                && i > 0
+                && toks[i - 1].is_punct('.')
+                && i + 2 < span.body_close
+                && toks[i + 1].is_punct('(')
+                && toks[i + 2].is_punct(')');
+            if !is_lock {
+                i += 1;
+                continue;
+            }
+            let line = toks[i].line;
+            let Some(recv) = receiver_name(toks, i - 1) else {
+                out.push(Finding {
+                    path: f.rel.clone(),
+                    line,
+                    lint: "L002",
+                    msg: "cannot resolve lock receiver to a rank (add a \
+                          binding the analyzer can see, or an alias)"
+                        .to_string(),
+                });
+                i += 1;
+                continue;
+            };
+            let Some(rank) = self.resolve(fi, &recv) else {
+                out.push(Finding {
+                    path: f.rel.clone(),
+                    line,
+                    lint: "L002",
+                    msg: format!(
+                        "lock receiver `{recv}` does not resolve to a rank \
+                         (no RankedMutex binding or alias matches)"
+                    ),
+                });
+                i += 1;
+                continue;
+            };
+            for (h, _, _) in &held {
+                let descending = h.value() > rank.value();
+                let same_misuse = *h == rank && !rank.allows_same_rank();
+                if descending || same_misuse {
+                    out.push(Finding {
+                        path: f.rel.clone(),
+                        line,
+                        lint: "L001",
+                        msg: format!(
+                            "acquires {}({}) via `{recv}` while {}({}) is held \
+                             — violates the lock-rank table (util::ordered)",
+                            rank.name(),
+                            rank.value(),
+                            h.name(),
+                            h.value()
+                        ),
+                    });
+                }
+            }
+            held.push(guard_liveness(toks, i, span, &f.enclosing_close, rank));
+            i += 1;
+        }
+    }
+
+    // -- P001 ---------------------------------------------------------------
+
+    fn lint_panic_paths(&self, fi: usize, out: &mut Vec<Finding>) {
+        let f = &self.files[fi];
+        let toks = &f.lx.toks;
+        for i in 0..toks.len() {
+            if f.test[i] {
+                continue;
+            }
+            let t = &toks[i];
+            let method_panic = (t.is_ident("unwrap") || t.is_ident("expect"))
+                && i > 0
+                && toks[i - 1].is_punct('.')
+                && i + 1 < toks.len()
+                && toks[i + 1].is_punct('(');
+            let macro_panic = (t.is_ident("panic")
+                || t.is_ident("unreachable")
+                || t.is_ident("todo")
+                || t.is_ident("unimplemented"))
+                && i + 1 < toks.len()
+                && toks[i + 1].is_punct('!');
+            if method_panic || macro_panic {
+                out.push(Finding {
+                    path: f.rel.clone(),
+                    line: t.line,
+                    lint: "P001",
+                    msg: format!(
+                        "panic path `{}{}` in coordinator non-test code \
+                         (return a Result or absorb the failure)",
+                        t.text,
+                        if macro_panic { "!" } else { "()" }
+                    ),
+                });
+            }
+        }
+    }
+
+    // -- A001 ---------------------------------------------------------------
+
+    fn lint_hot_path_alloc(&self, fi: usize, out: &mut Vec<Finding>) {
+        let f = &self.files[fi];
+        let toks = &f.lx.toks;
+        for span in fn_spans(toks) {
+            if f.test[span.body_open] || !span.name.ends_with("_into") {
+                continue;
+            }
+            for i in span.body_open + 1..span.body_close {
+                let t = &toks[i];
+                let path_alloc = (t.is_ident("Vec") || t.is_ident("String") || t.is_ident("Box"))
+                    && i + 3 < toks.len()
+                    && toks[i + 1].is_punct(':')
+                    && toks[i + 2].is_punct(':')
+                    && toks[i + 3].is_ident("new");
+                let macro_alloc = (t.is_ident("vec") || t.is_ident("format"))
+                    && i + 1 < toks.len()
+                    && toks[i + 1].is_punct('!');
+                let method_alloc = (t.is_ident("to_vec")
+                    || t.is_ident("clone")
+                    || t.is_ident("to_string")
+                    || t.is_ident("to_owned"))
+                    && i > 0
+                    && toks[i - 1].is_punct('.');
+                if path_alloc || macro_alloc || method_alloc {
+                    out.push(Finding {
+                        path: f.rel.clone(),
+                        line: t.line,
+                        lint: "A001",
+                        msg: format!(
+                            "allocation `{}` inside zero-alloc kernel `{}` \
+                             (reuse the caller-provided buffers)",
+                            t.text, span.name
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // -- W001 ---------------------------------------------------------------
+
+    fn lint_wire_exhaustive(&self, fuzz_file: Option<&Path>, out: &mut Vec<Finding>) {
+        let Some(wi) = self
+            .files
+            .iter()
+            .position(|f| f.scope_rel.ends_with("wire.rs") && !enum_variants(&f.lx.toks, "Frame").is_empty())
+        else {
+            return;
+        };
+        let wire = &self.files[wi];
+        let toks = &wire.lx.toks;
+        let variants = enum_variants(toks, "Frame");
+
+        let test_idents: BTreeSet<&str> = toks
+            .iter()
+            .zip(&wire.test)
+            .filter(|(t, &m)| m && t.kind == TokKind::Ident)
+            .map(|(t, _)| t.text.as_str())
+            .collect();
+        let kind_name_idents: BTreeSet<&str> = fn_spans(toks)
+            .into_iter()
+            .find(|s| s.name == "kind_name")
+            .map(|s| {
+                toks[s.body_open..=s.body_close]
+                    .iter()
+                    .filter(|t| t.kind == TokKind::Ident)
+                    .map(|t| t.text.as_str())
+                    .collect()
+            })
+            .unwrap_or_default();
+        let fuzz_idents: Option<BTreeSet<String>> = fuzz_file
+            .and_then(|p| fs::read_to_string(p).ok())
+            .and_then(|src| {
+                let lx = lex(&src);
+                fn_spans(&lx.toks).into_iter().find(|s| s.name == "fuzz_frames").map(|s| {
+                    lx.toks[s.body_open..=s.body_close]
+                        .iter()
+                        .filter(|t| t.kind == TokKind::Ident)
+                        .map(|t| t.text.clone())
+                        .collect()
+                })
+            });
+
+        for (name, line) in &variants {
+            let mut missing = Vec::new();
+            if !test_idents.contains(name.as_str()) {
+                missing.push("the codec round-trip tests");
+            }
+            if !kind_name_idents.contains(name.as_str()) {
+                missing.push("kind_name()");
+            }
+            if let Some(fz) = &fuzz_idents {
+                if !fz.contains(name.as_str()) {
+                    missing.push("the decode fuzz list (fuzz_frames)");
+                }
+            }
+            if !missing.is_empty() {
+                out.push(Finding {
+                    path: wire.rel.clone(),
+                    line: *line,
+                    lint: "W001",
+                    msg: format!("Frame::{name} is missing from {}", missing.join(" and ")),
+                });
+            }
+        }
+    }
+
+    // -- R001 ---------------------------------------------------------------
+
+    fn lint_relaxed(&self, fi: usize, out: &mut Vec<Finding>) {
+        let f = &self.files[fi];
+        let toks = &f.lx.toks;
+        for i in 0..toks.len() {
+            if f.test[i] || !is_path_call(toks, i, "Ordering", "Relaxed") {
+                continue;
+            }
+            let line = toks[i].line;
+            let documented = f.lx.comments.iter().any(|c| {
+                (c.line..=c.line + 6).contains(&line)
+                    && c.text.to_lowercase().contains("relaxed")
+            });
+            if !documented {
+                out.push(Finding {
+                    path: f.rel.clone(),
+                    line,
+                    lint: "R001",
+                    msg: "Ordering::Relaxed without an invariant comment \
+                          (state why relaxed is sound within 6 lines above)"
+                        .to_string(),
+                });
+            }
+        }
+    }
+
+    // -- D001 ---------------------------------------------------------------
+
+    fn lint_deprecated(&self, fi: usize, out: &mut Vec<Finding>) {
+        let f = &self.files[fi];
+        let toks = &f.lx.toks;
+        for i in 0..toks.len() {
+            if f.test[i] {
+                continue;
+            }
+            if toks[i].is_punct('#')
+                && i + 2 < toks.len()
+                && toks[i + 1].is_punct('[')
+                && toks[i + 2].is_ident("deprecated")
+            {
+                out.push(Finding {
+                    path: f.rel.clone(),
+                    line: toks[i].line,
+                    lint: "D001",
+                    msg: "deprecated shim left in the tree (delete it and \
+                          migrate the callers)"
+                        .to_string(),
+                });
+            }
+        }
+    }
+
+    // -- M001 ---------------------------------------------------------------
+
+    fn lint_raw_primitives(&self, fi: usize, out: &mut Vec<Finding>) {
+        let f = &self.files[fi];
+        let toks = &f.lx.toks;
+        for i in 0..toks.len() {
+            if f.test[i] {
+                continue;
+            }
+            let t = &toks[i];
+            if t.is_ident("Mutex") || t.is_ident("Condvar") {
+                out.push(Finding {
+                    path: f.rel.clone(),
+                    line: t.line,
+                    lint: "M001",
+                    msg: format!(
+                        "raw std::sync::{} in the coordinator — use \
+                         Ranked{} with a rank from the lock table",
+                        t.text, t.text
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Token-walk helpers
+// ---------------------------------------------------------------------------
+
+/// `toks[i]` starts `SEG :: name` (e.g. `RankedMutex::new`).
+fn is_path_call(toks: &[Tok], i: usize, seg: &str, name: &str) -> bool {
+    toks[i].is_ident(seg)
+        && i + 3 < toks.len()
+        && toks[i + 1].is_punct(':')
+        && toks[i + 2].is_punct(':')
+        && toks[i + 3].is_ident(name)
+}
+
+/// Scan a bounded window after `RankedMutex::new(` for `Rank::X`.
+fn find_rank_arg(toks: &[Tok], i: usize) -> Option<String> {
+    let end = (i + 40).min(toks.len().saturating_sub(3));
+    for j in i..end {
+        if toks[j].is_ident("Rank")
+            && toks[j + 1].is_punct(':')
+            && toks[j + 2].is_punct(':')
+            && toks[j + 3].kind == TokKind::Ident
+        {
+            return Some(toks[j + 3].text.clone());
+        }
+    }
+    None
+}
+
+/// Which binding does a `RankedMutex::new` at token `i` initialize?
+///
+/// Recognized forms, in order:
+/// - struct-literal field init: `{ name: RankedMutex::new(...)` or
+///   `, name: RankedMutex::new(...)`;
+/// - `name.push(RankedMutex::new(...))`;
+/// - a statement beginning `let [mut] name` anywhere around the call
+///   (covers `let x = RankedMutex::new(..)`, `let x = Arc::new(R..)`,
+///   and `let xs: Vec<_> = (..).map(|_| RankedMutex::new(..)).collect()`).
+fn binding_name_for_construction(toks: &[Tok], i: usize) -> Option<String> {
+    if i >= 2
+        && toks[i - 1].is_punct(':')
+        && !toks[i - 2].is_punct(':')
+        && toks[i - 2].kind == TokKind::Ident
+        && i >= 3
+        && (toks[i - 3].is_punct('{') || toks[i - 3].is_punct(','))
+    {
+        return Some(toks[i - 2].text.clone());
+    }
+    if i >= 4
+        && toks[i - 1].is_punct('(')
+        && toks[i - 2].is_ident("push")
+        && toks[i - 3].is_punct('.')
+        && toks[i - 4].kind == TokKind::Ident
+    {
+        return Some(toks[i - 4].text.clone());
+    }
+    let start = statement_start(toks, i);
+    if toks.get(start).map(|t| t.is_ident("let")) == Some(true) {
+        let mut j = start + 1;
+        if toks.get(j).map(|t| t.is_ident("mut")) == Some(true) {
+            j += 1;
+        }
+        if toks.get(j).map(|t| t.kind == TokKind::Ident) == Some(true) {
+            return Some(toks[j].text.clone());
+        }
+    }
+    None
+}
+
+/// Index of the first token of the statement containing token `i`
+/// (the token right after the nearest `;`, `{` or `}` looking back).
+fn statement_start(toks: &[Tok], i: usize) -> usize {
+    let mut j = i;
+    while j > 0 {
+        let t = &toks[j - 1];
+        if t.is_punct(';') || t.is_punct('{') || t.is_punct('}') {
+            return j;
+        }
+        j -= 1;
+    }
+    0
+}
+
+/// Walk the receiver chain backwards from the `.` before `lock` and
+/// return the significant name: `self.state.lock()` -> `state`,
+/// `sh.jobs[party].lock()` -> `jobs`, `barrier_done.0.lock()` ->
+/// `barrier_done`, `(*g).lock()` -> None.
+fn receiver_name(toks: &[Tok], dot: usize) -> Option<String> {
+    let mut j = dot; // toks[dot] is the '.'
+    let mut segs: Vec<&Tok> = Vec::new();
+    loop {
+        if j == 0 {
+            break;
+        }
+        let mut k = j - 1;
+        // Skip a balanced index expression `[...]`.
+        if toks[k].is_punct(']') {
+            let mut depth = 1usize;
+            while k > 0 && depth > 0 {
+                k -= 1;
+                if toks[k].is_punct(']') {
+                    depth += 1;
+                } else if toks[k].is_punct('[') {
+                    depth -= 1;
+                }
+            }
+            if k == 0 {
+                break;
+            }
+            k -= 1;
+        }
+        if toks[k].kind == TokKind::Ident || toks[k].kind == TokKind::Num {
+            segs.push(&toks[k]);
+            if k > 0 && toks[k - 1].is_punct('.') {
+                j = k - 1;
+                continue;
+            }
+        }
+        break;
+    }
+    segs.reverse();
+    segs.iter()
+        .filter(|t| t.kind == TokKind::Ident)
+        .map(|t| t.text.clone())
+        .filter(|s| s != "self" && s != "sh")
+        .next_back()
+}
+
+/// Decide how long the guard acquired at `lock_idx` lives.
+///
+/// A statement of the form `let name = ...lock()...;` pins the guard to
+/// the end of the enclosing block (minus an early `drop(name)`); any
+/// other shape is a statement-scoped temporary. One carve-out: when the
+/// guard is immediately consumed by a further method call
+/// (`let job = q.lock().pop_front();`), the binding holds the call's
+/// result, not the guard — the guard is a statement temporary.
+fn guard_liveness(
+    toks: &[Tok],
+    lock_idx: usize,
+    span: &FnSpan,
+    enclosing_close: &[usize],
+    rank: Rank,
+) -> (Rank, usize, Option<String>) {
+    let start = statement_start(toks, lock_idx);
+    let chained = toks.get(lock_idx + 3).map(|t| t.is_punct('.')) == Some(true);
+    if !chained && toks.get(start).map(|t| t.is_ident("let")) == Some(true) {
+        let mut j = start + 1;
+        if toks.get(j).map(|t| t.is_ident("mut")) == Some(true) {
+            j += 1;
+        }
+        if toks.get(j).map(|t| t.kind == TokKind::Ident) == Some(true) {
+            let release = enclosing_close[start].min(span.body_close);
+            return (rank, release, Some(toks[j].text.clone()));
+        }
+    }
+    // Temporary: released at the end of the statement (next `;`), capped
+    // at the enclosing block close.
+    let cap = enclosing_close[lock_idx].min(span.body_close);
+    let release = (lock_idx + 1..cap)
+        .find(|&j| toks[j].is_punct(';'))
+        .unwrap_or(cap);
+    (rank, release, None)
+}
+
+/// For each token, the index of the innermost enclosing `}` token.
+fn enclosing_close_map(toks: &[Tok]) -> Vec<usize> {
+    // Pass 1: match each `{` to its `}`.
+    let mut close_of: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut stack = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if t.is_punct('{') {
+            stack.push(i);
+        } else if t.is_punct('}') {
+            if let Some(o) = stack.pop() {
+                close_of.insert(o, i);
+            }
+        }
+    }
+    // Pass 2: per-token innermost enclosing close.
+    let mut out = vec![usize::MAX; toks.len()];
+    let mut open_stack: Vec<usize> = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if t.is_punct('}') {
+            open_stack.pop();
+        }
+        out[i] = open_stack
+            .last()
+            .and_then(|o| close_of.get(o))
+            .copied()
+            .unwrap_or(usize::MAX);
+        if t.is_punct('{') {
+            open_stack.push(i);
+        }
+    }
+    out
+}
+
+/// Mark tokens belonging to `#[test]` / `#[cfg(test)]` items (the
+/// attribute through the end of the annotated item).
+fn test_mask(toks: &[Tok]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !(toks[i].is_punct('#') && i + 1 < toks.len() && toks[i + 1].is_punct('[')) {
+            i += 1;
+            continue;
+        }
+        let attr_start = i;
+        let mut any_test = false;
+        // Consume a run of attributes.
+        let mut j = i;
+        while j < toks.len()
+            && toks[j].is_punct('#')
+            && j + 1 < toks.len()
+            && toks[j + 1].is_punct('[')
+        {
+            let close = match_forward(toks, j + 1, '[', ']');
+            let idents: Vec<&str> = toks[j + 2..close]
+                .iter()
+                .filter(|t| t.kind == TokKind::Ident)
+                .map(|t| t.text.as_str())
+                .collect();
+            let is_test_attr = idents.as_slice() == ["test"]
+                || (idents.first() == Some(&"cfg")
+                    && idents.contains(&"test")
+                    && !idents.contains(&"not"));
+            any_test |= is_test_attr;
+            j = close + 1;
+        }
+        if !any_test {
+            i = j;
+            continue;
+        }
+        // Mask through the end of the annotated item: the first `{`'s
+        // matching `}`, or a `;` reached before any `{`.
+        let mut k = j;
+        let mut end = toks.len().saturating_sub(1);
+        while k < toks.len() {
+            if toks[k].is_punct(';') {
+                end = k;
+                break;
+            }
+            if toks[k].is_punct('{') {
+                end = match_forward(toks, k, '{', '}');
+                break;
+            }
+            k += 1;
+        }
+        for slot in mask.iter_mut().take(end + 1).skip(attr_start) {
+            *slot = true;
+        }
+        i = end + 1;
+    }
+    mask
+}
+
+/// Index of the punct matching `toks[open]` (which must be `open_c`);
+/// saturates at the last token on unbalanced input.
+fn match_forward(toks: &[Tok], open: usize, open_c: char, close_c: char) -> usize {
+    let mut depth = 0usize;
+    for (i, t) in toks.iter().enumerate().skip(open) {
+        if t.is_punct(open_c) {
+            depth += 1;
+        } else if t.is_punct(close_c) {
+            depth -= 1;
+            if depth == 0 {
+                return i;
+            }
+        }
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Every `fn name { ... }` span (body token indices). Bodiless trait
+/// methods are skipped.
+fn fn_spans(toks: &[Tok]) -> Vec<FnSpan> {
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if !toks[i].is_ident("fn") || i + 1 >= toks.len() || toks[i + 1].kind != TokKind::Ident {
+            continue;
+        }
+        let name = toks[i + 1].text.clone();
+        let mut j = i + 2;
+        let mut body_open = None;
+        while j < toks.len() {
+            if toks[j].is_punct(';') {
+                break;
+            }
+            if toks[j].is_punct('{') {
+                body_open = Some(j);
+                break;
+            }
+            j += 1;
+        }
+        if let Some(open) = body_open {
+            out.push(FnSpan { name, body_open: open, body_close: match_forward(toks, open, '{', '}') });
+        }
+    }
+    out
+}
+
+/// `(variant name, line)` pairs of `enum <name> { ... }`, or empty.
+fn enum_variants(toks: &[Tok], name: &str) -> Vec<(String, u32)> {
+    let mut out = Vec::new();
+    let Some(start) = (0..toks.len()).find(|&i| {
+        toks[i].is_ident("enum")
+            && toks.get(i + 1).map(|t| t.is_ident(name)) == Some(true)
+            && toks.get(i + 2).map(|t| t.is_punct('{')) == Some(true)
+    }) else {
+        return out;
+    };
+    let open = start + 2;
+    let close = match_forward(toks, open, '{', '}');
+    let mut i = open + 1;
+    while i < close {
+        // Skip attributes on the variant.
+        while toks[i].is_punct('#') && i + 1 < close && toks[i + 1].is_punct('[') {
+            i = match_forward(toks, i + 1, '[', ']') + 1;
+        }
+        if toks[i].kind == TokKind::Ident {
+            out.push((toks[i].text.clone(), toks[i].line));
+            i += 1;
+            // Skip a payload.
+            if i < close && toks[i].is_punct('(') {
+                i = match_forward(toks, i, '(', ')') + 1;
+            } else if i < close && toks[i].is_punct('{') {
+                i = match_forward(toks, i, '{', '}') + 1;
+            }
+        }
+        // Advance to the comma (or the end).
+        while i < close && !toks[i].is_punct(',') {
+            i += 1;
+        }
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lexed(src: &str) -> Lexed {
+        lex(src)
+    }
+
+    #[test]
+    fn test_mask_covers_cfg_test_modules_and_test_fns() {
+        let lx = lexed(
+            "fn live() {}\n#[cfg(test)]\nmod tests {\n fn helper() { x.unwrap(); }\n}\n\
+             #[test]\nfn t() { y.unwrap(); }\nfn live2() {}",
+        );
+        let mask = test_mask(&lx.toks);
+        let live2 = lx.toks.iter().position(|t| t.is_ident("live2")).unwrap();
+        let helper = lx.toks.iter().position(|t| t.is_ident("helper")).unwrap();
+        let t_fn = lx.toks.iter().position(|t| t.is_ident("t")).unwrap();
+        assert!(!mask[live2]);
+        assert!(mask[helper]);
+        assert!(mask[t_fn]);
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_masked() {
+        let lx = lexed("#[cfg(not(test))]\nfn shipping() { a.unwrap(); }");
+        let mask = test_mask(&lx.toks);
+        let u = lx.toks.iter().position(|t| t.is_ident("unwrap")).unwrap();
+        assert!(!mask[u]);
+    }
+
+    #[test]
+    fn receiver_names_resolve_through_chains() {
+        let lx = lexed("self.state.lock(); sh.jobs[party].lock(); barrier_done.0.lock(); m.lock();");
+        let dots: Vec<usize> = lx
+            .toks
+            .iter()
+            .enumerate()
+            .filter(|(i, t)| t.is_ident("lock") && lx.toks[*i - 1].is_punct('.'))
+            .map(|(i, _)| i - 1)
+            .collect();
+        let names: Vec<_> = dots.iter().map(|&d| receiver_name(&lx.toks, d).unwrap()).collect();
+        assert_eq!(names, ["state", "jobs", "barrier_done", "m"]);
+    }
+
+    #[test]
+    fn enum_variants_skip_payloads_and_attrs() {
+        let lx = lexed(
+            "pub enum Frame { Hello { v: u32 }, #[allow(dead_code)] Data(Vec<u8>), Close, }",
+        );
+        let vs: Vec<String> = enum_variants(&lx.toks, "Frame").into_iter().map(|(n, _)| n).collect();
+        assert_eq!(vs, ["Hello", "Data", "Close"]);
+    }
+
+    #[test]
+    fn fn_spans_find_bodies() {
+        let lx = lexed("fn a() { 1 } trait T { fn b(); } fn c_into(x: &mut Vec<u8>) { x.clear(); }");
+        let spans = fn_spans(&lx.toks);
+        let names: Vec<_> = spans.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, ["a", "c_into"]);
+    }
+}

@@ -1,0 +1,40 @@
+//! `vflint`: a dependency-free static-analysis pass for this repo.
+//!
+//! The coordinator is a lock-heavy concurrent system; PR 6 made it
+//! crash-recoverable, and this subsystem makes its concurrency
+//! discipline *checkable*. The pass is hermetic by construction — a
+//! hand-rolled lexer ([`lexer`]), token-walk lints ([`lints`]), and a
+//! ratchet-only baseline ([`baseline`]) — so it runs in the offline
+//! build environment with zero new dependencies, exactly like the
+//! hand-rolled wire codec it guards.
+//!
+//! Entry points: the `vflint` binary (`rust/src/bin/vflint.rs`, wired
+//! into CI as a hard gate) and [`run`] for the self-tests. The lint
+//! catalog and maintenance recipes live in EXPERIMENTS.md §Static
+//! analysis & race detection.
+
+pub mod baseline;
+pub mod lexer;
+pub mod lints;
+
+pub use baseline::{Applied, Baseline};
+pub use lints::{analyze_tree, Analysis, ConstructionSite, Finding};
+
+use std::path::{Path, PathBuf};
+
+/// Where the decode fuzz list lives, relative to the scan root. The
+/// first existing candidate wins; fixtures without one simply skip the
+/// fuzz-list leg of W001.
+pub fn fuzz_file_for(root: &Path) -> Option<PathBuf> {
+    ["rust/tests/chaos.rs", "tests/chaos.rs"]
+        .iter()
+        .map(|c| root.join(c))
+        .find(|p| p.is_file())
+}
+
+/// Analyze `root` and return all findings (before baseline filtering).
+pub fn run(root: &Path) -> Result<Vec<Finding>, String> {
+    let analysis = analyze_tree(root)?;
+    let fuzz = fuzz_file_for(root);
+    Ok(analysis.run_all(fuzz.as_deref()))
+}

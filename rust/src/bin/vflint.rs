@@ -1,0 +1,115 @@
+//! The `vflint` CLI: static lock-order, panic-path, allocation, wire
+//! exhaustiveness, and hygiene lints over this repository's sources.
+//!
+//! ```text
+//! cargo run --release --bin vflint                 # gate the tree
+//! cargo run --release --bin vflint -- --write-baseline
+//! cargo run --release --bin vflint -- --root some/fixture
+//! ```
+//!
+//! Exit codes: 0 clean (or fully baselined), 1 findings, 2 usage/IO
+//! error. Diagnostics are `path:line: LINT-ID message`, one per line on
+//! stdout; bookkeeping (counts, stale-baseline notes) goes to stderr.
+
+use pubsub_vfl::analysis::{self, Baseline};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+struct Opts {
+    root: PathBuf,
+    baseline: PathBuf,
+    write_baseline: bool,
+}
+
+fn usage() -> String {
+    "usage: vflint [--root DIR] [--baseline FILE] [--write-baseline]\n\
+     \n\
+     Scans DIR (default: .) — `DIR/rust/src` when present, else DIR\n\
+     itself — and reports lint findings as `path:line: LINT-ID msg`.\n\
+     The baseline (default: DIR/vflint.baseline) suppresses accepted\n\
+     findings; --write-baseline rewrites it from the current findings."
+        .to_string()
+}
+
+fn parse(args: &[String]) -> Result<Opts, String> {
+    let mut root = PathBuf::from(".");
+    let mut baseline = None;
+    let mut write_baseline = false;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => {
+                root = PathBuf::from(it.next().ok_or("--root needs a value")?);
+            }
+            "--baseline" => {
+                baseline = Some(PathBuf::from(it.next().ok_or("--baseline needs a value")?));
+            }
+            "--write-baseline" => write_baseline = true,
+            "--help" | "-h" => return Err(usage()),
+            other => return Err(format!("unknown argument `{other}`\n{}", usage())),
+        }
+    }
+    let baseline = baseline.unwrap_or_else(|| root.join("vflint.baseline"));
+    Ok(Opts { root, baseline, write_baseline })
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let opts = match parse(&args) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("{e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let findings = match analysis::run(&opts.root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("vflint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if opts.write_baseline {
+        let body = Baseline::render(&findings);
+        if let Err(e) = std::fs::write(&opts.baseline, body) {
+            eprintln!("vflint: write baseline {}: {e}", opts.baseline.display());
+            return ExitCode::from(2);
+        }
+        eprintln!(
+            "vflint: wrote {} entries to {}",
+            findings.len(),
+            opts.baseline.display()
+        );
+        return ExitCode::SUCCESS;
+    }
+
+    let base = match Baseline::load(&opts.baseline) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("vflint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let applied = base.apply(&findings);
+
+    for f in &applied.new {
+        println!("{}", f.render());
+    }
+    for s in &applied.stale {
+        eprintln!("vflint: stale baseline entry (fixed — delete it): {}", s.replace('\t', " "));
+    }
+    eprintln!(
+        "vflint: {} finding(s), {} baselined, {} new, {} stale baseline entr(ies)",
+        findings.len(),
+        applied.suppressed,
+        applied.new.len(),
+        applied.stale.len()
+    );
+    if applied.new.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

@@ -17,7 +17,7 @@
 //! generations are kept out of the channels.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::{Condvar, Mutex};
+use crate::util::ordered::{Rank, RankedCondvar, RankedMutex};
 use std::time::{Duration, Instant};
 
 /// Result of a subscribe call.
@@ -54,8 +54,8 @@ struct TopicState<T> {
 
 /// A capacity-bounded, batch-ID-addressed topic.
 pub struct Topic<T> {
-    state: Mutex<TopicState<T>>,
-    cv: Condvar,
+    state: RankedMutex<TopicState<T>>,
+    cv: RankedCondvar,
     capacity: usize,
     name: &'static str,
 }
@@ -64,12 +64,11 @@ impl<T> Topic<T> {
     pub fn new(name: &'static str, capacity: usize) -> Topic<T> {
         assert!(capacity >= 1);
         Topic {
-            state: Mutex::new(TopicState {
-                map: HashMap::new(),
-                order: VecDeque::new(),
-                closed: false,
-            }),
-            cv: Condvar::new(),
+            state: RankedMutex::new(
+                Rank::TopicQueue,
+                TopicState { map: HashMap::new(), order: VecDeque::new(), closed: false },
+            ),
+            cv: RankedCondvar::new(),
             capacity,
             name,
         }
@@ -97,7 +96,7 @@ impl<T> Topic<T> {
         msg: T,
         version: impl Fn(&T) -> u64,
     ) -> Publish<T> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         if let Some(existing) = s.map.get(&batch_id) {
             if version(&msg) < version(existing) {
                 return Publish::Stale(msg);
@@ -133,7 +132,7 @@ impl<T> Topic<T> {
     /// Take any available message (FIFO order), waiting up to `deadline`.
     pub fn subscribe_any(&self, deadline: Duration) -> SubResult<(u64, T)> {
         let start = Instant::now();
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         loop {
             if let Some(&id) = s.order.front() {
                 s.order.pop_front();
@@ -149,10 +148,7 @@ impl<T> Topic<T> {
             if elapsed >= deadline {
                 return SubResult::TimedOut;
             }
-            let (guard, timeout) = self
-                .cv
-                .wait_timeout(s, deadline - elapsed)
-                .unwrap();
+            let (guard, timeout) = self.cv.wait_timeout(s, deadline - elapsed);
             s = guard;
             if timeout.timed_out() && s.order.is_empty() {
                 return if s.closed { SubResult::Closed } else { SubResult::TimedOut };
@@ -165,7 +161,7 @@ impl<T> Topic<T> {
     /// embeddings).
     pub fn subscribe(&self, batch_id: u64, deadline: Duration) -> SubResult<T> {
         let start = Instant::now();
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         loop {
             if let Some(msg) = s.map.remove(&batch_id) {
                 if let Some(pos) = s.order.iter().position(|&id| id == batch_id) {
@@ -180,7 +176,7 @@ impl<T> Topic<T> {
             if elapsed >= deadline {
                 return SubResult::TimedOut;
             }
-            let (guard, _timeout) = self.cv.wait_timeout(s, deadline - elapsed).unwrap();
+            let (guard, _timeout) = self.cv.wait_timeout(s, deadline - elapsed);
             s = guard;
         }
     }
@@ -189,7 +185,7 @@ impl<T> Topic<T> {
     /// (used to purge stale generations after a batch reassignment).
     /// Returns whether a message was removed.
     pub fn purge_if(&self, batch_id: u64, pred: impl FnOnce(&T) -> bool) -> bool {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         match s.map.get(&batch_id) {
             Some(msg) if pred(msg) => {
                 s.map.remove(&batch_id);
@@ -201,7 +197,7 @@ impl<T> Topic<T> {
 
     /// Number of buffered messages.
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().map.len()
+        self.state.lock().map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -210,14 +206,14 @@ impl<T> Topic<T> {
 
     /// Close the topic: blocked subscribers return `Closed`.
     pub fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        self.state.lock().closed = true;
         self.cv.notify_all();
     }
 
     /// Clear all buffered messages (epoch-boundary hygiene: anything left
     /// over is a stale generation by construction) and reopen.
     pub fn reset(&self) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         s.map.clear();
         s.order.clear();
         s.closed = false;

@@ -188,11 +188,17 @@ impl Checkpoint {
             return Err(CheckpointError::Malformed("file shorter than header + digest"));
         }
         let (body, trailer) = bytes.split_at(bytes.len() - DIGEST_BYTES);
-        let magic = u32::from_le_bytes(body[0..4].try_into().unwrap());
+        let magic = u32::from_le_bytes(match body[0..4].try_into() {
+            Ok(b) => b,
+            Err(_) => return Err(CheckpointError::Malformed("truncated magic")),
+        });
         if magic != CKPT_MAGIC {
             return Err(CheckpointError::BadMagic(magic));
         }
-        let version = u16::from_le_bytes(body[4..6].try_into().unwrap());
+        let version = u16::from_le_bytes(match body[4..6].try_into() {
+            Ok(b) => b,
+            Err(_) => return Err(CheckpointError::Malformed("truncated version")),
+        });
         if version != CKPT_VERSION {
             return Err(CheckpointError::BadVersion(version));
         }

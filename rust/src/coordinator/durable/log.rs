@@ -121,7 +121,8 @@ impl TopicLog {
         let mut live_bytes = 0u64;
         let mut pos = 0usize;
         while raw.len() - pos >= 8 {
-            let seq = u64::from_le_bytes(raw[pos..pos + 8].try_into().unwrap());
+            let Ok(seq_bytes) = <[u8; 8]>::try_from(&raw[pos..pos + 8]) else { break };
+            let seq = u64::from_le_bytes(seq_bytes);
             match wire::try_decode(&raw[pos + 8..]) {
                 Ok(Some((_, used))) => {
                     let bytes = raw[pos + 8..pos + 8 + used].to_vec();
@@ -197,8 +198,9 @@ impl TopicLog {
             if now.duration_since(front.appended_at) < ttl {
                 break;
             }
-            let e = self.entries.pop_front().unwrap();
-            self.live_bytes -= e.bytes.len() as u64;
+            let n = front.bytes.len() as u64;
+            self.entries.pop_front();
+            self.live_bytes -= n;
             self.expired += 1;
         }
     }
@@ -233,8 +235,9 @@ impl TopicLog {
             if front.seq >= self.delivered_through {
                 break;
             }
-            let e = self.entries.pop_front().unwrap();
-            self.live_bytes -= e.bytes.len() as u64;
+            let n = front.bytes.len() as u64;
+            self.entries.pop_front();
+            self.live_bytes -= n;
         }
         let tmp = self.path.with_extension("log.tmp");
         {

@@ -35,10 +35,10 @@ pub use checkpoint::{Checkpoint, CheckpointError, CKPT_MAGIC, CKPT_VERSION};
 pub use log::{LogCaps, TopicLog, TopicLogStats};
 
 use crate::coordinator::wire::Frame;
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use crate::util::ordered::{Rank, RankedMutex};
 
 /// Aggregated durability gauges across every lane the hub owns, surfaced
 /// as per-epoch `broker_*` metric series.
@@ -62,11 +62,11 @@ pub struct HubStats {
 pub struct DurableHub {
     state_dir: PathBuf,
     /// Control lane: `EpochInstall` frames, replayed verbatim on rejoin.
-    pub control: Mutex<TopicLog>,
+    pub control: RankedMutex<TopicLog>,
     /// Outbound `EmbedJob` lane per passive party.
-    pub jobs: Vec<Mutex<TopicLog>>,
+    pub jobs: Vec<RankedMutex<TopicLog>>,
     /// Outbound `Gradient` lane per passive party.
-    pub grads: Vec<Mutex<TopicLog>>,
+    pub grads: Vec<RankedMutex<TopicLog>>,
     checkpoint_bytes: AtomicU64,
 }
 
@@ -77,20 +77,19 @@ impl DurableHub {
         let logs = state_dir.join("logs");
         std::fs::create_dir_all(&logs)
             .with_context(|| format!("creating state dir {}", logs.display()))?;
-        let control = Mutex::new(TopicLog::open("control", &logs.join("control.log"), caps)?);
+        let control =
+            RankedMutex::new(Rank::DurableLog, TopicLog::open("control", &logs.join("control.log"), caps)?);
         let mut jobs = Vec::with_capacity(parties);
         let mut grads = Vec::with_capacity(parties);
         for p in 0..parties {
-            jobs.push(Mutex::new(TopicLog::open(
-                &format!("jobs_p{p}"),
-                &logs.join(format!("jobs_p{p}.log")),
-                caps,
-            )?));
-            grads.push(Mutex::new(TopicLog::open(
-                &format!("grads_p{p}"),
-                &logs.join(format!("grads_p{p}.log")),
-                caps,
-            )?));
+            jobs.push(RankedMutex::new(
+                Rank::DurableLog,
+                TopicLog::open(&format!("jobs_p{p}"), &logs.join(format!("jobs_p{p}.log")), caps)?,
+            ));
+            grads.push(RankedMutex::new(
+                Rank::DurableLog,
+                TopicLog::open(&format!("grads_p{p}"), &logs.join(format!("grads_p{p}.log")), caps)?,
+            ));
         }
         Ok(DurableHub {
             state_dir: state_dir.to_path_buf(),
@@ -107,24 +106,24 @@ impl DurableHub {
 
     /// Persist one control-plane frame (the `EpochInstall` lane).
     pub fn log_control(&self, frame: &Frame) -> Result<u64> {
-        self.control.lock().unwrap().append(frame)
+        self.control.lock().append(frame)
     }
 
     /// Persist one outbound embed-job frame on `party`'s lane.
     pub fn log_job(&self, party: usize, frame: &Frame) -> Result<u64> {
-        self.jobs[party].lock().unwrap().append(frame)
+        self.jobs[party].lock().append(frame)
     }
 
     /// Persist one outbound gradient frame on `party`'s lane.
     pub fn log_grad(&self, party: usize, frame: &Frame) -> Result<u64> {
-        self.grads[party].lock().unwrap().append(frame)
+        self.grads[party].lock().append(frame)
     }
 
     /// Barrier housekeeping (the session's idle point): every record so
     /// far is delivered — advance all watermarks, sweep TTLs, compact.
     pub fn on_barrier(&self) -> Result<()> {
         for log in self.all_logs() {
-            let mut l = log.lock().unwrap();
+            let mut l = log.lock();
             let tip = l.stats().next_seq;
             l.mark_delivered_through(tip);
             l.sweep_ttl();
@@ -137,18 +136,18 @@ impl DurableHub {
     /// in-flight epoch's `EpochInstall`, possibly several after repeated
     /// rejoins — the caller resends the newest install per epoch).
     pub fn replay_control(&self) -> Result<Vec<Frame>> {
-        let log = self.control.lock().unwrap();
+        let log = self.control.lock();
         Ok(log.replay_undelivered()?.into_iter().map(|(_, f)| f).collect())
     }
 
-    fn all_logs(&self) -> impl Iterator<Item = &Mutex<TopicLog>> {
+    fn all_logs(&self) -> impl Iterator<Item = &RankedMutex<TopicLog>> {
         std::iter::once(&self.control).chain(self.jobs.iter()).chain(self.grads.iter())
     }
 
     pub fn stats(&self) -> HubStats {
         let mut s = HubStats::default();
         for log in self.all_logs() {
-            let ls = log.lock().unwrap().stats();
+            let ls = log.lock().stats();
             s.depth += ls.depth;
             s.live_bytes += ls.live_bytes;
             s.persisted_bytes += ls.bytes_written;
@@ -227,10 +226,14 @@ pub fn read_session_file(dir: &Path) -> Result<Option<(u64, u64)>> {
     if raw.len() != 16 {
         bail!("malformed session file {} ({} bytes)", path.display(), raw.len());
     }
-    Ok(Some((
-        u64::from_le_bytes(raw[0..8].try_into().unwrap()),
-        u64::from_le_bytes(raw[8..16].try_into().unwrap()),
-    )))
+    let word = |off: usize| -> Result<u64> {
+        let bytes: [u8; 8] = raw
+            .get(off..off + 8)
+            .and_then(|w| w.try_into().ok())
+            .ok_or_else(|| anyhow!("malformed session file {} at offset {off}", path.display()))?;
+        Ok(u64::from_le_bytes(bytes))
+    };
+    Ok(Some((word(0)?, word(8)?)))
 }
 
 #[cfg(test)]

@@ -32,7 +32,8 @@
 //! boundaries.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::{Arc, Mutex};
+use crate::util::ordered::{Rank, RankedMutex};
+use std::sync::Arc;
 
 /// Lifecycle stage of one batch within the current epoch.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -91,7 +92,7 @@ struct LedgerState {
 /// persistent worker pool.
 pub struct BatchLedger {
     k: usize,
-    state: Mutex<LedgerState>,
+    state: RankedMutex<LedgerState>,
 }
 
 impl BatchLedger {
@@ -100,7 +101,7 @@ impl BatchLedger {
         assert!(k >= 1);
         BatchLedger {
             k,
-            state: Mutex::new(LedgerState {
+            state: RankedMutex::new(Rank::Ledger, LedgerState {
                 epoch: 0,
                 gen_seq: 0,
                 entries: HashMap::new(),
@@ -115,7 +116,7 @@ impl BatchLedger {
     /// every party with a fresh generation; `remaining_bwd` is armed to
     /// `batches.len() × k`. Replaces any previous epoch state outright.
     pub fn install_epoch(&self, epoch: usize, batches: &[(u64, Arc<Vec<usize>>)]) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         s.epoch = epoch;
         s.entries.clear();
         for q in &mut s.queues {
@@ -149,12 +150,12 @@ impl BatchLedger {
 
     /// Current epoch index.
     pub fn epoch(&self) -> usize {
-        self.state.lock().unwrap().epoch
+        self.state.lock().epoch
     }
 
     /// Backward passes still owed this epoch.
     pub fn remaining_bwd(&self) -> usize {
-        self.state.lock().unwrap().remaining_bwd
+        self.state.lock().remaining_bwd
     }
 
     /// Has the current epoch fully drained?
@@ -164,38 +165,38 @@ impl BatchLedger {
 
     /// Genuine reassignments across the session so far.
     pub fn retried(&self) -> usize {
-        self.state.lock().unwrap().retried
+        self.state.lock().retried
     }
 
     /// The session-monotonic generation sequence — the high-water mark a
     /// barrier checkpoint records so a resumed session never reuses a
     /// generation.
     pub fn gen_seq(&self) -> u64 {
-        self.state.lock().unwrap().gen_seq
+        self.state.lock().gen_seq
     }
 
     /// Raise the generation sequence to at least `floor` (checkpoint
     /// restore in a fresh process). Never lowers it: in-session rejoin
     /// keeps its own, already-higher sequence.
     pub fn resume_gen_seq(&self, floor: u64) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         s.gen_seq = s.gen_seq.max(floor);
     }
 
     /// Current generation of a batch (tests/diagnostics).
     pub fn generation(&self, batch_id: u64) -> Option<u64> {
-        self.state.lock().unwrap().entries.get(&batch_id).map(|e| e.generation)
+        self.state.lock().entries.get(&batch_id).map(|e| e.generation)
     }
 
     /// Current stage of a batch (tests/diagnostics).
     pub fn stage(&self, batch_id: u64) -> Option<BatchStage> {
-        self.state.lock().unwrap().entries.get(&batch_id).map(|e| e.stage)
+        self.state.lock().entries.get(&batch_id).map(|e| e.stage)
     }
 
     /// Pop the next embed job for `party`, skipping batches that finished
     /// while queued (stale requeue leftovers).
     pub fn next_embed_job(&self, party: usize) -> Option<EmbedJob> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         while let Some(id) = s.queues[party].pop_front() {
             let Some(e) = s.entries.get_mut(&id) else { continue };
             e.queued[party] = false;
@@ -215,7 +216,7 @@ impl BatchLedger {
     /// current and the batch has not already been stepped. On success the
     /// party is marked published and the stage advances to `Published`.
     pub fn begin_publish(&self, batch_id: u64, generation: u64, party: usize) -> bool {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         let Some(e) = s.entries.get_mut(&batch_id) else { return false };
         if e.generation != generation
             || matches!(e.stage, BatchStage::Stepped | BatchStage::Done)
@@ -233,7 +234,7 @@ impl BatchLedger {
     /// that makes the active step exactly-once per generation. Returns the
     /// batch's row set on success.
     pub fn begin_join(&self, batch_id: u64, generation: u64) -> Option<Arc<Vec<usize>>> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         let e = s.entries.get_mut(&batch_id)?;
         if e.generation != generation || e.stage != BatchStage::Published {
             return None;
@@ -244,7 +245,7 @@ impl BatchLedger {
 
     /// Record that the active step for the claimed generation ran.
     pub fn mark_stepped(&self, batch_id: u64, generation: u64) -> bool {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         let Some(e) = s.entries.get_mut(&batch_id) else { return false };
         if e.generation != generation || e.stage != BatchStage::Joined {
             return false;
@@ -266,7 +267,7 @@ impl BatchLedger {
         generation: u64,
         party: usize,
     ) -> Option<Arc<Vec<usize>>> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         let e = s.entries.get_mut(&batch_id)?;
         if e.generation != generation || e.bwd_done[party] {
             return None;
@@ -283,7 +284,7 @@ impl BatchLedger {
     /// its update landed in the worker replica. Must be called exactly
     /// once per successful claim.
     pub fn finish_bwd(&self) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         debug_assert!(s.remaining_bwd > 0, "finish_bwd without a matching claim");
         s.remaining_bwd = s.remaining_bwd.saturating_sub(1);
     }
@@ -298,7 +299,7 @@ impl BatchLedger {
     /// by its own claim at take time). Credits `remaining_bwd` directly.
     /// Returns whether the pass was counted.
     pub fn credit_bwd(&self, batch_id: u64, party: usize) -> bool {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         let Some(e) = s.entries.get_mut(&batch_id) else { return false };
         if e.bwd_done[party] {
             return false;
@@ -317,7 +318,7 @@ impl BatchLedger {
     /// buffered must stay valid. Counts as one retry. Returns whether the
     /// batch was actually requeued.
     pub fn requeue_party(&self, party: usize, batch_id: u64, generation: u64) -> bool {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         let Some(e) = s.entries.get_mut(&batch_id) else { return false };
         if e.generation != generation || e.stage == BatchStage::Done || e.queued[party] {
             return false;
@@ -338,7 +339,7 @@ impl BatchLedger {
     /// Returns the new generation, or `None` if the batch was already
     /// done or `generation` was stale (someone else requeued first).
     pub fn requeue_all(&self, batch_id: u64, generation: u64) -> Option<u64> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         if s.entries.get(&batch_id)?.generation != generation {
             return None;
         }
@@ -358,7 +359,7 @@ impl BatchLedger {
     /// retry; returns `(batch_id, new_generation)` per batch so the
     /// caller can purge stale broker state and announce the retries.
     pub fn requeue_stuck(&self) -> Vec<(u64, u64)> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         let ids: Vec<u64> = s.entries.keys().copied().collect();
         let mut out = Vec::new();
         for id in ids {

@@ -5,7 +5,7 @@
 
 use crate::model::MlpParams;
 use crate::sim::convergence::delta_t;
-use std::sync::Mutex;
+use crate::util::ordered::{Rank, RankedMutex};
 
 /// Aggregation mode.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -26,7 +26,7 @@ struct PsState {
 
 /// Thread-safe parameter server for one sub-model.
 pub struct ParameterServer {
-    state: Mutex<PsState>,
+    state: RankedMutex<PsState>,
     pub lr: f32,
     pub mode: PsMode,
 }
@@ -35,7 +35,7 @@ impl ParameterServer {
     pub fn new(params: MlpParams, lr: f32, mode: PsMode) -> ParameterServer {
         let accum = params.zeros_like();
         ParameterServer {
-            state: Mutex::new(PsState { params, accum, n_accum: 0, version: 0 }),
+            state: RankedMutex::new(Rank::ParamServer, PsState { params, accum, n_accum: 0, version: 0 }),
             lr,
             mode,
         }
@@ -43,13 +43,13 @@ impl ParameterServer {
 
     /// Snapshot current parameters (workers call this per batch).
     pub fn fetch(&self) -> (MlpParams, u64) {
-        let s = self.state.lock().unwrap();
+        let s = self.state.lock();
         (s.params.clone(), s.version)
     }
 
     /// Push a gradient.
     pub fn push_grad(&self, grad: &MlpParams) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         match self.mode {
             PsMode::Async => {
                 let lr = self.lr;
@@ -66,7 +66,7 @@ impl ParameterServer {
     /// Apply accumulated gradients (mean) — the synchronization point.
     /// No-op when nothing is pending. Returns the new version.
     pub fn aggregate(&self) -> u64 {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         if s.n_accum > 0 {
             let scale = 1.0 / s.n_accum as f32;
             let mut mean = s.accum.clone();
@@ -82,18 +82,18 @@ impl ParameterServer {
 
     /// Current parameter version.
     pub fn version(&self) -> u64 {
-        self.state.lock().unwrap().version
+        self.state.lock().version
     }
 
     /// Gradients pushed since the last `aggregate`/`set_params` (the
     /// backlog a synchronization point would fold in).
     pub fn pending(&self) -> usize {
-        self.state.lock().unwrap().n_accum
+        self.state.lock().n_accum
     }
 
     /// Replace parameters outright (broadcast after an external sync).
     pub fn set_params(&self, params: MlpParams) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         s.accum = params.zeros_like();
         s.n_accum = 0;
         s.params = params;
@@ -106,7 +106,7 @@ impl ParameterServer {
     /// left off. Pending accumulation is discarded (it belongs to the
     /// aborted epoch attempt).
     pub fn restore(&self, params: MlpParams, version: u64) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = self.state.lock();
         s.accum = params.zeros_like();
         s.n_accum = 0;
         s.params = params;

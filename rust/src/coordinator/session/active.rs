@@ -22,7 +22,8 @@ use crate::metrics::Metrics;
 use crate::model::{ActiveStepBuf, MlpParams, SplitEngine, Workspace};
 use crate::tensor::Matrix;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use crate::util::ordered::RankedMutex;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Per-worker replica of the active-side models, carried across the
@@ -47,6 +48,8 @@ impl PassiveVersionView<'_> {
     fn version(&self, party: usize) -> u64 {
         match self {
             PassiveVersionView::Local(ps) => ps[party].version(),
+            // Relaxed: receiver-clock cache; staleness accounting
+            // tolerates a lagging read by definition.
             PassiveVersionView::Remote(seen) => seen[party].load(Ordering::Relaxed),
         }
     }
@@ -62,7 +65,7 @@ pub(crate) struct ActiveShared<'a> {
     pub ps_active: &'a ParameterServer,
     pub ps_top: &'a ParameterServer,
     pub versions: PassiveVersionView<'a>,
-    pub epoch_loss: &'a Mutex<(f64, usize)>,
+    pub epoch_loss: &'a RankedMutex<(f64, usize)>,
     pub stale_sum: &'a AtomicU64,
     pub stale_n: &'a AtomicU64,
     pub stale_max: &'a AtomicU64,
@@ -81,7 +84,7 @@ pub(crate) struct ActiveShared<'a> {
 pub(crate) fn run_active_worker(
     sh: &ActiveShared<'_>,
     engine: &Arc<dyn SplitEngine>,
-    replica: &Mutex<ActiveReplica>,
+    replica: &RankedMutex<ActiveReplica>,
 ) {
     // Worker-lived compute state: scratch arena + reused gather/output
     // buffers — the steady-state step allocates only the gradient
@@ -153,7 +156,7 @@ pub(crate) fn run_active_worker(
         sh.train.active.x.take_rows_into(&rows, &mut x_buf);
         y_buf.clear();
         y_buf.extend(rows.iter().map(|&r| sh.train.y[r]));
-        let mut local = replica.lock().unwrap();
+        let mut local = replica.lock();
         let t = Instant::now();
         engine.active_step_into(
             &local.active,
@@ -178,13 +181,16 @@ pub(crate) fn run_active_worker(
         // wire — the receiver's clock).
         for (party, &v) in versions.iter().enumerate() {
             let gap = sh.versions.version(party).saturating_sub(v);
+            // Relaxed: per-epoch staleness counters folded by the
+            // supervisor only after the epoch drains (workers idle).
             sh.stale_sum.fetch_add(gap, Ordering::Relaxed);
             sh.stale_max.fetch_max(gap, Ordering::Relaxed);
             sh.emb_version_max.fetch_max(v, Ordering::Relaxed);
         }
+        // Relaxed: per-epoch sample counter; folded after drain.
         sh.stale_n.fetch_add(sh.k as u64, Ordering::Relaxed);
         {
-            let mut l = sh.epoch_loss.lock().unwrap();
+            let mut l = sh.epoch_loss.lock();
             l.0 += step.loss;
             l.1 += 1;
         }

@@ -154,8 +154,10 @@ pub fn train_pubsub(
 
 /// Mean of parameter replicas.
 pub(crate) fn mean_params<'a>(mut it: impl Iterator<Item = &'a MlpParams>) -> MlpParams {
-    let first = it.next().expect("at least one replica").clone();
-    let mut acc = first;
+    // Callers always hold at least one replica; an empty iterator
+    // yields the zero-params default rather than panicking mid-session.
+    let Some(first) = it.next() else { return MlpParams::default() };
+    let mut acc = first.clone();
     let mut n = 1usize;
     for p in it {
         acc.axpy(1.0, p);

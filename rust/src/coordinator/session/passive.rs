@@ -32,11 +32,12 @@ use crate::linalg::{self, BackendKind};
 use crate::metrics::Metrics;
 use crate::model::{MlpParams, SplitEngine, SplitModelSpec, SplitParams, Workspace};
 use crate::tensor::Matrix;
+use crate::util::ordered::{Rank, RankedMutex};
 use crate::util::Rng;
 use anyhow::{anyhow, bail, Result};
 use std::collections::{HashMap, VecDeque};
 use std::net::TcpListener;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Per-worker replica of one passive party's bottom model.
@@ -53,11 +54,11 @@ pub(crate) struct PassiveReplica {
 /// implementation shared by the in-proc supervisor and the remote
 /// server, so the two transports cannot diverge.
 pub(crate) fn fold_passive_barrier(
-    replicas: &[Vec<Mutex<PassiveReplica>>],
+    replicas: &[Vec<RankedMutex<PassiveReplica>>],
     ps: &[ParameterServer],
 ) {
     for (party, reps) in replicas.iter().enumerate() {
-        let mut guards: Vec<_> = reps.iter().map(|m| m.lock().unwrap()).collect();
+        let mut guards: Vec<_> = reps.iter().map(|m| m.lock()).collect();
         let mean_p = mean_params(guards.iter().map(|g| &g.params));
         ps[party].set_params(mean_p);
         let (bcast_p, vp) = ps[party].fetch();
@@ -74,11 +75,11 @@ pub(crate) fn fold_passive_barrier(
 pub(crate) fn make_dp_mechanisms(
     cfg: &ExperimentConfig,
     k: usize,
-) -> Vec<Mutex<GaussianMechanism>> {
+) -> Vec<RankedMutex<GaussianMechanism>> {
     let b = cfg.train.batch_size;
     (0..k)
         .map(|p| {
-            Mutex::new(if cfg.dp.enabled && cfg.dp.mu.is_finite() {
+            RankedMutex::new(Rank::DpNoise, if cfg.dp.enabled && cfg.dp.mu.is_finite() {
                 GaussianMechanism::new(cfg.dp.mu, b, b, cfg.seed ^ (p as u64 + 1))
             } else {
                 GaussianMechanism::disabled(cfg.seed)
@@ -120,14 +121,14 @@ impl PassiveCompute {
         party: usize,
         rows: &[usize],
         grad_z: &Matrix,
-        replica: &Mutex<PassiveReplica>,
+        replica: &RankedMutex<PassiveReplica>,
         ps: &ParameterServer,
         metrics: &Metrics,
         lr: f32,
         clip: f32,
     ) {
         party_x.take_rows_into(rows, &mut self.x_buf);
-        let mut local = replica.lock().unwrap();
+        let mut local = replica.lock();
         let t = Instant::now();
         engine.passive_bwd_into(
             party,
@@ -155,17 +156,17 @@ impl PassiveCompute {
         party_x: &Matrix,
         party: usize,
         job: &EmbedJob,
-        replica: &Mutex<PassiveReplica>,
-        dp: &Mutex<GaussianMechanism>,
+        replica: &RankedMutex<PassiveReplica>,
+        dp: &RankedMutex<GaussianMechanism>,
         metrics: &Metrics,
     ) -> EmbeddingMsg {
         party_x.take_rows_into(&job.rows, &mut self.x_buf);
-        let local = replica.lock().unwrap();
+        let local = replica.lock();
         let t = Instant::now();
         engine.passive_fwd_into(party, &local.params, &self.x_buf, &mut self.ws, &mut self.z_buf);
         let version = local.version;
         drop(local);
-        dp.lock().unwrap().perturb(&mut self.z_buf);
+        dp.lock().perturb(&mut self.z_buf);
         metrics.add_busy(t.elapsed());
         EmbeddingMsg {
             batch_id: job.batch_id,
@@ -185,7 +186,7 @@ pub(crate) struct LocalPassiveShared<'a> {
     pub broker: &'a super::super::broker::Broker,
     pub ledger: &'a super::super::ledger::BatchLedger,
     pub metrics: &'a Metrics,
-    pub dp: &'a [Mutex<GaussianMechanism>],
+    pub dp: &'a [RankedMutex<GaussianMechanism>],
     pub train: &'a VerticalDataset,
     pub opts: &'a RunOptions,
     pub lr: f32,
@@ -203,7 +204,7 @@ pub(crate) fn run_local_passive_worker(
     engine: &Arc<dyn SplitEngine>,
     ps: &ParameterServer,
     party: usize,
-    replica: &Mutex<PassiveReplica>,
+    replica: &RankedMutex<PassiveReplica>,
 ) {
     // Worker-lived compute state — the steady-state step allocates only
     // the embedding payloads it publishes (ownership crosses the channel).
@@ -292,11 +293,11 @@ type EpochTable = HashMap<u64, PassiveBatch>;
 struct ServeShared<'a> {
     link: &'a Arc<dyn Link>,
     metrics: &'a Metrics,
-    table: &'a Mutex<EpochTable>,
+    table: &'a RankedMutex<EpochTable>,
     inbox: &'a [Topic<GradientMsg>],
-    jobs: &'a [Mutex<VecDeque<EmbedJob>>],
+    jobs: &'a [RankedMutex<VecDeque<EmbedJob>>],
     ps: &'a [ParameterServer],
-    dp: &'a [Mutex<GaussianMechanism>],
+    dp: &'a [RankedMutex<GaussianMechanism>],
     train: &'a VerticalDataset,
     lr: f32,
     clip: f32,
@@ -312,7 +313,7 @@ fn run_remote_passive_worker(
     sh: &ServeShared<'_>,
     engine: &Arc<dyn SplitEngine>,
     party: usize,
-    replica: &Mutex<PassiveReplica>,
+    replica: &RankedMutex<PassiveReplica>,
 ) {
     let mut comp = PassiveCompute::new(sh.backend_kind, sh.total_workers);
     loop {
@@ -325,7 +326,7 @@ fn run_remote_passive_worker(
                 // (epoch, batch, party) — the remote mirror of
                 // `BatchLedger::claim_bwd`.
                 let rows = {
-                    let mut tb = sh.table.lock().unwrap();
+                    let mut tb = sh.table.lock();
                     match tb.get_mut(&id) {
                         Some(e) if !e.done[party] => {
                             e.done[party] = true;
@@ -372,13 +373,13 @@ fn run_remote_passive_worker(
             }
         }
         // Priority 2: produce the next embedding.
-        let job = sh.jobs[party].lock().unwrap().pop_front();
+        let job = sh.jobs[party].lock().pop_front();
         if let Some(job) = job {
             // Skip superseded work (a newer generation was scheduled, or
             // the batch already finished) — the wire analogue of the
             // `begin_publish` gate; the active's decode gate re-checks.
             let fresh = {
-                let tb = sh.table.lock().unwrap();
+                let tb = sh.table.lock();
                 tb.get(&job.batch_id)
                     .is_some_and(|e| e.gen == job.generation && !e.done.iter().all(|&d| d))
             };
@@ -456,10 +457,15 @@ pub fn serve_passive_session(
         .map(|p| ParameterServer::new(p.clone(), lr, PsMode::Sync))
         .collect();
     let dp = make_dp_mechanisms(cfg, k);
-    let replicas: Vec<Vec<Mutex<PassiveReplica>>> = (0..k)
+    let replicas: Vec<Vec<RankedMutex<PassiveReplica>>> = (0..k)
         .map(|p| {
             (0..w_p)
-                .map(|_| Mutex::new(PassiveReplica { params: init.passive[p].clone(), version: 0 }))
+                .map(|_| {
+                    RankedMutex::new(
+                        Rank::Replica,
+                        PassiveReplica { params: init.passive[p].clone(), version: 0 },
+                    )
+                })
                 .collect()
         })
         .collect();
@@ -469,9 +475,9 @@ pub fn serve_passive_session(
     let inbox: Vec<Topic<GradientMsg>> = (0..k)
         .map(|_| Topic::new("gradients", (cfg.train.buffer_q * w_p).max(1)))
         .collect();
-    let jobs: Vec<Mutex<VecDeque<EmbedJob>>> =
-        (0..k).map(|_| Mutex::new(VecDeque::new())).collect();
-    let table: Mutex<EpochTable> = Mutex::new(HashMap::new());
+    let jobs: Vec<RankedMutex<VecDeque<EmbedJob>>> =
+        (0..k).map(|_| RankedMutex::new(Rank::ServeJobs, VecDeque::new())).collect();
+    let table: RankedMutex<EpochTable> = RankedMutex::new(Rank::ServeTable, HashMap::new());
 
     // ---- handshake -------------------------------------------------------
     let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
@@ -572,10 +578,10 @@ pub fn serve_passive_session(
                         for t in &inbox {
                             t.reset();
                         }
-                        for q in &jobs {
-                            q.lock().unwrap().clear();
+                        for job_q in &jobs {
+                            job_q.lock().clear();
                         }
-                        let mut tb = table.lock().unwrap();
+                        let mut tb = table.lock();
                         tb.clear();
                         for (id, rows) in batches {
                             tb.insert(
@@ -598,7 +604,7 @@ pub fn serve_passive_session(
                             continue;
                         }
                         let state = {
-                            let mut tb = table.lock().unwrap();
+                            let mut tb = table.lock();
                             match tb.get_mut(&batch_id) {
                                 Some(e) => {
                                     if generation > e.gen {
@@ -635,7 +641,7 @@ pub fn serve_passive_session(
                                 // embedding, and a done party's duplicate
                                 // gradient is dropped at the gate above.
                                 if !all_done {
-                                    jobs[party].lock().unwrap().push_back(EmbedJob {
+                                    jobs[party].lock().push_back(EmbedJob {
                                         batch_id,
                                         generation,
                                         rows,
@@ -660,7 +666,7 @@ pub fn serve_passive_session(
                         // active re-drove the batch because the original
                         // `BwdDone` never arrived.
                         let state = {
-                            let tb = table.lock().unwrap();
+                            let tb = table.lock();
                             tb.get(&g.batch_id).map(|e| (g.generation == e.gen, e.done[g.party]))
                         };
                         match state {
@@ -719,7 +725,7 @@ pub fn serve_passive_session(
                     Frame::FetchParams => {
                         for party in 0..k {
                             let guards: Vec<_> =
-                                replicas[party].iter().map(|m| m.lock().unwrap()).collect();
+                                replicas[party].iter().map(|m| m.lock()).collect();
                             let mean_p = mean_params(guards.iter().map(|g| &g.params));
                             drop(guards);
                             let _ = link.send(Frame::PassiveParams {
@@ -757,7 +763,7 @@ pub fn serve_passive_session(
                         }
                         let params = MlpParams::unflatten(&spec.passive_bottoms[party], &flat);
                         for rep in &replicas[party] {
-                            let mut g = rep.lock().unwrap();
+                            let mut g = rep.lock();
                             g.params = params.clone();
                             g.version = version;
                         }

@@ -41,11 +41,12 @@ use crate::data::BatchPlan;
 use crate::experiment::{RunEvent, TrainCtx};
 use crate::linalg;
 use crate::model::{MlpParams, SplitModelSpec, SplitParams, Workspace};
+use crate::util::ordered::{Rank, RankedCondvar, RankedMutex};
 use crate::util::{Rng, Stopwatch};
 use anyhow::{anyhow, bail, Result};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// How long a remote epoch may make zero backward progress before the
@@ -233,23 +234,28 @@ fn train_local(ctx: &TrainCtx<'_>) -> Result<SessionResult> {
     // Worker-local replicas, shared with the supervisor (which averages
     // and re-broadcasts them at barriers) behind per-replica mutexes.
     // Workers hold their own lock only while computing a step.
-    let active_replicas: Vec<Mutex<ActiveReplica>> = (0..w_a)
+    let active_replicas: Vec<RankedMutex<ActiveReplica>> = (0..w_a)
         .map(|_| {
-            Mutex::new(ActiveReplica {
-                active: init.active.clone(),
-                top: init.top.clone(),
-            })
+            RankedMutex::new(
+                Rank::Replica,
+                ActiveReplica { active: init.active.clone(), top: init.top.clone() },
+            )
         })
         .collect();
-    let passive_replicas: Vec<Vec<Mutex<PassiveReplica>>> = (0..k)
+    let passive_replicas: Vec<Vec<RankedMutex<PassiveReplica>>> = (0..k)
         .map(|p| {
             (0..w_p)
-                .map(|_| Mutex::new(PassiveReplica { params: init.passive[p].clone(), version: 0 }))
+                .map(|_| {
+                    RankedMutex::new(
+                        Rank::Replica,
+                        PassiveReplica { params: init.passive[p].clone(), version: 0 },
+                    )
+                })
                 .collect()
         })
         .collect();
 
-    let epoch_loss = Mutex::new((0.0f64, 0usize));
+    let epoch_loss = RankedMutex::new(Rank::EpochLoss, (0.0f64, 0usize));
     // Per-epoch staleness accumulators (reset by the supervisor), plus
     // the session-wide maximum `param_version` observed in messages
     // (folded into a gauge once per epoch, off the hot path).
@@ -280,7 +286,9 @@ fn train_local(ctx: &TrainCtx<'_>) -> Result<SessionResult> {
     let mut banked_bwd = 0u64;
     let mut resume_retried = 0u64;
     if cfg.durability.resume {
-        let h = hub.as_ref().expect("config validation ties --resume to --state-dir");
+        let h = hub
+            .as_ref()
+            .ok_or_else(|| anyhow!("--resume requires [durability].state_dir to be set"))?;
         if let Some(ck) = h.load_checkpoint()? {
             validate_checkpoint(&ck, session_id, resume_token, spec)?;
             start_epoch = ck.completed_epochs as usize;
@@ -297,7 +305,7 @@ fn train_local(ctx: &TrainCtx<'_>) -> Result<SessionResult> {
             let a = MlpParams::unflatten(&spec.active_bottom, &ck.active_flat);
             let t = MlpParams::unflatten(&spec.top, &ck.top_flat);
             for r in &active_replicas {
-                let mut g = r.lock().unwrap();
+                let mut g = r.lock();
                 g.active = a.clone();
                 g.top = t.clone();
             }
@@ -307,7 +315,7 @@ fn train_local(ctx: &TrainCtx<'_>) -> Result<SessionResult> {
                 let p =
                     MlpParams::unflatten(&spec.passive_bottoms[party], &ck.passive_flats[party]);
                 for r in &passive_replicas[party] {
-                    let mut g = r.lock().unwrap();
+                    let mut g = r.lock();
                     g.params = p.clone();
                     g.version = ck.passive_versions[party];
                 }
@@ -398,7 +406,9 @@ fn train_local(ctx: &TrainCtx<'_>) -> Result<SessionResult> {
             // Anything still buffered belongs to a finished epoch and is
             // stale by construction.
             broker.reset();
-            *epoch_loss.lock().unwrap() = (0.0, 0);
+            *epoch_loss.lock() = (0.0, 0);
+            // Relaxed: per-epoch accumulators reset while every worker is
+            // idle (previous epoch drained, next not installed).
             stale_sum.store(0, Ordering::Relaxed);
             stale_n.store(0, Ordering::Relaxed);
             stale_max.store(0, Ordering::Relaxed);
@@ -424,6 +434,8 @@ fn train_local(ctx: &TrainCtx<'_>) -> Result<SessionResult> {
             }
 
             // ---- staleness summary for the epoch ---------------------
+            // Relaxed: plain counters folded after the epoch drained;
+            // workers are idle, so no write races this read.
             let n = stale_n.load(Ordering::Relaxed);
             if n > 0 {
                 let mean = stale_sum.load(Ordering::Relaxed) as f64 / n as f64;
@@ -432,6 +444,8 @@ fn train_local(ctx: &TrainCtx<'_>) -> Result<SessionResult> {
                 metrics.gauge_max("staleness_max", max as f64);
                 opts.emit(RunEvent::Staleness { epoch, mean, max });
             }
+            // Relaxed: monotonic fetch_max clock; a stale read only
+            // defers the gauge fold to the next epoch.
             metrics.gauge_max(
                 "emb_param_version_max",
                 emb_version_max.load(Ordering::Relaxed) as f64,
@@ -461,7 +475,7 @@ fn train_local(ctx: &TrainCtx<'_>) -> Result<SessionResult> {
             }
 
             // ---- bookkeeping + target check --------------------------
-            let (lsum, lcnt) = *epoch_loss.lock().unwrap();
+            let (lsum, lcnt) = *epoch_loss.lock();
             let mean_loss = if lcnt > 0 { lsum / lcnt as f64 } else { f64::NAN };
             loss_curve.push((epoch as f64, mean_loss));
             metrics.push_point("train_loss", epoch as f64, mean_loss);
@@ -542,11 +556,11 @@ fn train_local(ctx: &TrainCtx<'_>) -> Result<SessionResult> {
 /// Fold the active-party replicas through their parameter servers and
 /// broadcast the result back (the active half of a PS barrier).
 fn fold_active_barrier(
-    active_replicas: &[Mutex<ActiveReplica>],
+    active_replicas: &[RankedMutex<ActiveReplica>],
     ps_active: &ParameterServer,
     ps_top: &ParameterServer,
 ) {
-    let mut guards: Vec<_> = active_replicas.iter().map(|m| m.lock().unwrap()).collect();
+    let mut guards: Vec<_> = active_replicas.iter().map(|m| m.lock()).collect();
     let mean_a = mean_params(guards.iter().map(|g| &g.active));
     let mean_t = mean_params(guards.iter().map(|g| &g.top));
     ps_active.set_params(mean_a);
@@ -559,8 +573,8 @@ fn fold_active_barrier(
     }
 }
 
-fn mean_active(active: &[Mutex<ActiveReplica>]) -> (MlpParams, MlpParams) {
-    let guards: Vec<_> = active.iter().map(|m| m.lock().unwrap()).collect();
+fn mean_active(active: &[RankedMutex<ActiveReplica>]) -> (MlpParams, MlpParams) {
+    let guards: Vec<_> = active.iter().map(|m| m.lock()).collect();
     (
         mean_params(guards.iter().map(|g| &g.active)),
         mean_params(guards.iter().map(|g| &g.top)),
@@ -568,8 +582,8 @@ fn mean_active(active: &[Mutex<ActiveReplica>]) -> (MlpParams, MlpParams) {
 }
 
 fn current_params(
-    active: &[Mutex<ActiveReplica>],
-    passive: &[Vec<Mutex<PassiveReplica>>],
+    active: &[RankedMutex<ActiveReplica>],
+    passive: &[Vec<RankedMutex<PassiveReplica>>],
 ) -> SplitParams {
     let (mean_a, mean_t) = mean_active(active);
     SplitParams {
@@ -578,7 +592,7 @@ fn current_params(
         passive: passive
             .iter()
             .map(|reps| {
-                let guards: Vec<_> = reps.iter().map(|m| m.lock().unwrap()).collect();
+                let guards: Vec<_> = reps.iter().map(|m| m.lock()).collect();
                 mean_params(guards.iter().map(|g| &g.params))
             })
             .collect(),
@@ -674,16 +688,16 @@ pub fn train_pubsub_over_link_with(
     let durable_rejoin = hub.is_some() && reconnect.is_some();
     let rejoin_count = AtomicU64::new(0);
 
-    let active_replicas: Vec<Mutex<ActiveReplica>> = (0..w_a)
+    let active_replicas: Vec<RankedMutex<ActiveReplica>> = (0..w_a)
         .map(|_| {
-            Mutex::new(ActiveReplica {
-                active: init.active.clone(),
-                top: init.top.clone(),
-            })
+            RankedMutex::new(
+                Rank::Replica,
+                ActiveReplica { active: init.active.clone(), top: init.top.clone() },
+            )
         })
         .collect();
 
-    let epoch_loss = Mutex::new((0.0f64, 0usize));
+    let epoch_loss = RankedMutex::new(Rank::EpochLoss, (0.0f64, 0usize));
     let stale_sum = AtomicU64::new(0);
     let stale_n = AtomicU64::new(0);
     let stale_max = AtomicU64::new(0);
@@ -692,9 +706,11 @@ pub fn train_pubsub_over_link_with(
     // version observed in any frame from the passive process.
     let live_versions: Vec<AtomicU64> = (0..k).map(|_| AtomicU64::new(0)).collect();
     // Response slots for barrier acks and fetched parameters.
-    let barrier_done: (Mutex<Option<u64>>, Condvar) = (Mutex::new(None), Condvar::new());
-    let params_slot: Mutex<Vec<Option<MlpParams>>> = Mutex::new(vec![None; k]);
-    let params_cv = Condvar::new();
+    let barrier_done: (RankedMutex<Option<u64>>, RankedCondvar) =
+        (RankedMutex::new(Rank::SessionBarrier, None), RankedCondvar::new());
+    let params_slot: RankedMutex<Vec<Option<MlpParams>>> =
+        RankedMutex::new(Rank::SessionParams, vec![None; k]);
+    let params_cv = RankedCondvar::new();
     let shutdown = AtomicBool::new(false);
     let link_down = AtomicBool::new(false);
     let expected_flat: Vec<usize> = spec.passive_bottoms.iter().map(|s| s.param_count()).collect();
@@ -731,7 +747,9 @@ pub fn train_pubsub_over_link_with(
         ..Checkpoint::default()
     };
     if cfg.durability.resume {
-        let h = hub.as_ref().expect("config validation ties --resume to --state-dir");
+        let h = hub
+            .as_ref()
+            .ok_or_else(|| anyhow!("--resume requires [durability].state_dir to be set"))?;
         if let Some(ck) = h.load_checkpoint()? {
             validate_checkpoint(&ck, session_id, resume_token, spec)?;
             start_epoch = ck.completed_epochs as usize;
@@ -744,12 +762,14 @@ pub fn train_pubsub_over_link_with(
             let a = MlpParams::unflatten(&spec.active_bottom, &ck.active_flat);
             let t = MlpParams::unflatten(&spec.top, &ck.top_flat);
             for r in &active_replicas {
-                let mut g = r.lock().unwrap();
+                let mut g = r.lock();
                 g.active = a.clone();
                 g.top = t.clone();
             }
             ps_active.restore(a, ck.active_version);
             ps_top.restore(t, ck.top_version);
+            // Relaxed: receiver-clock version cache; readers tolerate
+            // staleness by design (it is what staleness *measures*).
             for (party, v) in live_versions.iter().enumerate() {
                 v.store(ck.passive_versions[party], Ordering::Relaxed);
             }
@@ -855,6 +875,7 @@ pub fn train_pubsub_over_link_with(
                                 continue;
                             }
                         }
+                        // Relaxed: monotonic version clock (fetch_max).
                         live_versions[msg.party].fetch_max(msg.param_version, Ordering::Relaxed);
                         if ledger.begin_publish(msg.batch_id, msg.generation, msg.party) {
                             let party = msg.party;
@@ -879,6 +900,7 @@ pub fn train_pubsub_over_link_with(
                             metrics.inc("wire_bad_party", 1);
                             continue;
                         }
+                        // Relaxed: monotonic version clock (fetch_max).
                         live_versions[party].fetch_max(ps_version, Ordering::Relaxed);
                         // The remote replica applied the update: credit
                         // it exactly once (ack latency may cross a
@@ -901,10 +923,11 @@ pub fn train_pubsub_over_link_with(
                         }
                     }
                     Frame::BarrierDone { epoch, versions } => {
+                        // Relaxed: monotonic version clock (fetch_max).
                         for (party, &v) in versions.iter().enumerate().take(k) {
                             live_versions[party].fetch_max(v, Ordering::Relaxed);
                         }
-                        *barrier_done.0.lock().unwrap() = Some(epoch);
+                        *barrier_done.0.lock() = Some(epoch);
                         barrier_done.1.notify_all();
                     }
                     Frame::PassiveParams { party, version, flat } => {
@@ -913,19 +936,24 @@ pub fn train_pubsub_over_link_with(
                             metrics.inc("wire_bad_params", 1);
                             continue;
                         }
+                        // Relaxed: monotonic version clock (fetch_max).
                         live_versions[party].fetch_max(version, Ordering::Relaxed);
                         let p = MlpParams::unflatten(&spec.passive_bottoms[party], &flat);
-                        params_slot.lock().unwrap()[party] = Some(p);
+                        params_slot.lock()[party] = Some(p);
                         params_cv.notify_all();
                     }
                     _ => metrics.inc("wire_unexpected_frame", 1),
                 },
                 LinkRecv::TimedOut => {
+                    // Relaxed: advisory teardown flag, polled; guarded data
+                    // travels through ranked locks and channels.
                     if shutdown.load(Ordering::Relaxed) {
                         break;
                     }
                 }
                 LinkRecv::Closed => {
+                    // Relaxed: advisory link-health + teardown flags, polled;
+                    // no payload is published through them.
                     if link.swaps() == seen_swaps {
                         link_down.store(true, Ordering::Relaxed);
                     }
@@ -941,6 +969,8 @@ pub fn train_pubsub_over_link_with(
 
         // ---- bridge: job pump (ledger → EmbedJob frames) --------------
         s.spawn(|| loop {
+            // Relaxed: advisory teardown/link-health flags, polled each
+            // pump iteration; payloads travel through ledger + link.
             if shutdown.load(Ordering::Relaxed) {
                 break;
             }
@@ -966,6 +996,7 @@ pub fn train_pubsub_over_link_with(
                     }
                     let seen_swaps = link.swaps();
                     if link.send(frame).is_err() {
+                        // Relaxed: advisory link-health flag, polled.
                         if link.swaps() == seen_swaps {
                             link_down.store(true, Ordering::Relaxed);
                         }
@@ -1002,6 +1033,7 @@ pub fn train_pubsub_over_link_with(
                         }
                         let seen_swaps = link.swaps();
                         if link.send(frame).is_err() {
+                            // Relaxed: advisory link-health flag, polled.
                             if link.swaps() == seen_swaps {
                                 link_down.store(true, Ordering::Relaxed);
                             }
@@ -1032,11 +1064,12 @@ pub fn train_pubsub_over_link_with(
         // can rejoin"; non-durable sessions keep their original errors.
         let wait_barrier = |epoch: u64| -> Result<bool> {
             let deadline = Instant::now() + SYNC_TIMEOUT;
-            let mut g = barrier_done.0.lock().unwrap();
+            let mut g = barrier_done.0.lock();
             loop {
                 if *g == Some(epoch) {
                     return Ok(true);
                 }
+                // Relaxed: advisory link-health flag, polled under the wait.
                 if link_down.load(Ordering::Relaxed) {
                     if durable_rejoin {
                         return Ok(false);
@@ -1046,18 +1079,19 @@ pub fn train_pubsub_over_link_with(
                 if Instant::now() >= deadline {
                     bail!("timed out waiting for the passive barrier ack (epoch {epoch})");
                 }
-                let (gg, _) = barrier_done.1.wait_timeout(g, Duration::from_millis(50)).unwrap();
+                let (gg, _) = barrier_done.1.wait_timeout(g, Duration::from_millis(50));
                 g = gg;
             }
         };
         let fetch_passive_params = || -> Result<Option<Vec<MlpParams>>> {
             {
-                let mut slot = params_slot.lock().unwrap();
+                let mut slot = params_slot.lock();
                 for s in slot.iter_mut() {
                     *s = None;
                 }
             }
             if let Err(e) = link.send(Frame::FetchParams) {
+                // Relaxed: advisory link-health flag, polled.
                 link_down.store(true, Ordering::Relaxed);
                 if durable_rejoin {
                     return Ok(None);
@@ -1065,11 +1099,12 @@ pub fn train_pubsub_over_link_with(
                 bail!("parameter fetch failed: {e}");
             }
             let deadline = Instant::now() + SYNC_TIMEOUT;
-            let mut g = params_slot.lock().unwrap();
+            let mut g = params_slot.lock();
             loop {
                 if g.iter().all(|sl| sl.is_some()) {
-                    return Ok(Some(g.iter_mut().map(|sl| sl.take().unwrap()).collect()));
+                    return Ok(Some(g.iter_mut().filter_map(|sl| sl.take()).collect()));
                 }
+                // Relaxed: advisory link-health flag, polled under the wait.
                 if link_down.load(Ordering::Relaxed) {
                     if durable_rejoin {
                         return Ok(None);
@@ -1079,7 +1114,7 @@ pub fn train_pubsub_over_link_with(
                 if Instant::now() >= deadline {
                     bail!("timed out fetching passive parameters");
                 }
-                let (gg, _) = params_cv.wait_timeout(g, Duration::from_millis(50)).unwrap();
+                let (gg, _) = params_cv.wait_timeout(g, Duration::from_millis(50));
                 g = gg;
             }
         };
@@ -1105,6 +1140,7 @@ pub fn train_pubsub_over_link_with(
                 if opts.is_cancelled() {
                     bail!("run cancelled during rejoin");
                 }
+                // Relaxed: attempt counter; only uniqueness matters.
                 let attempt = rejoin_count.fetch_add(1, Ordering::Relaxed) as u32 + 1;
                 metrics.inc("rejoin_attempts", 1);
                 let dial = reconnect(attempt).and_then(|raw| {
@@ -1118,16 +1154,20 @@ pub fn train_pubsub_over_link_with(
                         let a = MlpParams::unflatten(&spec.active_bottom, &ck.active_flat);
                         let t = MlpParams::unflatten(&spec.top, &ck.top_flat);
                         for r in &active_replicas {
-                            let mut g = r.lock().unwrap();
+                            let mut g = r.lock();
                             g.active = a.clone();
                             g.top = t.clone();
                         }
                         ps_active.restore(a, ck.active_version);
                         ps_top.restore(t, ck.top_version);
+                        // Relaxed: receiver-clock cache; staleness
+                        // accounting tolerates a lagging read.
                         for (party, v) in live_versions.iter().enumerate() {
                             v.store(ck.passive_versions[party], Ordering::Relaxed);
                         }
                         link.swap(raw);
+                        // Relaxed: advisory flag; the swap itself publishes
+                        // the new link via its own synchronization.
                         link_down.store(false, Ordering::Relaxed);
                         metrics.set_gauge("rejoin_ms", t0.elapsed().as_secs_f64() * 1e3);
                         eprintln!(
@@ -1185,7 +1225,9 @@ pub fn train_pubsub_over_link_with(
                 loop {
                     let acked_before = metrics.counter("bwd_acked");
                     broker.reset();
-                    *epoch_loss.lock().unwrap() = (0.0, 0);
+                    *epoch_loss.lock() = (0.0, 0);
+                    // Relaxed: per-attempt accumulators reset while the
+                    // epoch is uninstalled, so no worker is writing.
                     stale_sum.store(0, Ordering::Relaxed);
                     stale_n.store(0, Ordering::Relaxed);
                     stale_max.store(0, Ordering::Relaxed);
@@ -1197,7 +1239,9 @@ pub fn train_pubsub_over_link_with(
                     if !first_attempt {
                         // Re-attempt: replay the epoch's install from the
                         // durable control lane.
-                        let h = hub.as_ref().expect("a rejoin implies a durable hub");
+                        let h = hub
+                            .as_ref()
+                            .ok_or_else(|| anyhow!("rejoin attempted without a durable hub"))?;
                         for f in h.replay_control()?.into_iter().rev() {
                             let owed_here = match &f {
                                 Frame::EpochInstall { epoch: e, .. } => *e == epoch as u64,
@@ -1211,6 +1255,7 @@ pub fn train_pubsub_over_link_with(
                     }
                     first_attempt = false;
                     if link.send(shipped).is_err() {
+                        // Relaxed: advisory link-health flag, polled.
                         link_down.store(true, Ordering::Relaxed);
                         do_rejoin(metrics.counter("bwd_acked") - acked_before, &barrier_ckpt)?;
                         continue;
@@ -1276,6 +1321,7 @@ pub fn train_pubsub_over_link_with(
                                 }
                             }
                         }
+                        // Relaxed: advisory link-health flag, polled.
                         if link_down.load(Ordering::Relaxed) {
                             drained = false;
                             break;
@@ -1307,6 +1353,7 @@ pub fn train_pubsub_over_link_with(
                     let barrier_ok = match link.send(barrier_frame) {
                         Ok(()) => wait_barrier(epoch as u64)?,
                         Err(e) => {
+                            // Relaxed: advisory link-health flag, polled.
                             link_down.store(true, Ordering::Relaxed);
                             if !durable_rejoin {
                                 return Err(anyhow!("barrier send failed: {e}"));
@@ -1337,6 +1384,8 @@ pub fn train_pubsub_over_link_with(
                     }
 
                     // ---- staleness summary (receiver clock) ----------
+                    // Relaxed: plain counters folded after the epoch
+                    // drained; workers are idle, so no write races this read.
                     let n = stale_n.load(Ordering::Relaxed);
                     if n > 0 {
                         let mean = stale_sum.load(Ordering::Relaxed) as f64 / n as f64;
@@ -1345,6 +1394,8 @@ pub fn train_pubsub_over_link_with(
                         metrics.gauge_max("staleness_max", max as f64);
                         opts.emit(RunEvent::Staleness { epoch, mean, max });
                     }
+                    // Relaxed: monotonic fetch_max clock; a stale read
+                    // only defers the gauge fold to the next epoch.
                     metrics.gauge_max(
                         "emb_param_version_max",
                         emb_version_max.load(Ordering::Relaxed) as f64,
@@ -1405,7 +1456,7 @@ pub fn train_pubsub_over_link_with(
                     }
 
                     // ---- bookkeeping + eval on fetched parameters ----
-                    let (lsum, lcnt) = *epoch_loss.lock().unwrap();
+                    let (lsum, lcnt) = *epoch_loss.lock();
                     let mean_loss = if lcnt > 0 { lsum / lcnt as f64 } else { f64::NAN };
                     loss_curve.push((epoch as f64, mean_loss));
                     metrics.push_point("train_loss", epoch as f64, mean_loss);
@@ -1437,6 +1488,8 @@ pub fn train_pubsub_over_link_with(
                             top_version: ps_top.version(),
                             active_flat: eval_params.active.flatten(),
                             top_flat: eval_params.top.flatten(),
+                            // Relaxed: receiver-clock snapshot; barrier
+                            // acks already carried the authoritative values.
                             passive_versions: live_versions
                                 .iter()
                                 .map(|v| v.load(Ordering::Relaxed))
@@ -1483,6 +1536,7 @@ pub fn train_pubsub_over_link_with(
             }
             // Make sure the final model includes the passive half even if
             // no epoch completed (cancellation / zero-epoch runs).
+            // Relaxed: advisory link-health flag, polled.
             if last_passive.is_none() && !link_down.load(Ordering::Relaxed) {
                 last_passive = fetch_passive_params().ok().flatten();
             }
@@ -1490,6 +1544,7 @@ pub fn train_pubsub_over_link_with(
         })();
 
         // ---- teardown (always, so the scope can join) -----------------
+        // Relaxed: advisory teardown flag; loop exits are polled.
         shutdown.store(true, Ordering::Relaxed);
         let _ = link.send(Frame::Shutdown);
         broker.close();

@@ -26,7 +26,8 @@ use std::collections::VecDeque;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, RwLock};
+use crate::util::ordered::{Rank, RankedCondvar, RankedMutex};
+use std::sync::{Arc, RwLock};
 use std::time::{Duration, Instant};
 
 /// Which message plane the PubSub session runs on. `InProc` is the
@@ -173,17 +174,20 @@ pub trait Transport: Send + Sync {
 // ---- in-process transport ------------------------------------------------
 
 struct FrameQueue {
-    q: Mutex<(VecDeque<Frame>, bool)>, // (frames, closed)
-    cv: Condvar,
+    q: RankedMutex<(VecDeque<Frame>, bool)>, // (frames, closed)
+    cv: RankedCondvar,
 }
 
 impl FrameQueue {
     fn new() -> Arc<FrameQueue> {
-        Arc::new(FrameQueue { q: Mutex::new((VecDeque::new(), false)), cv: Condvar::new() })
+        Arc::new(FrameQueue {
+            q: RankedMutex::new(Rank::LinkQueue, (VecDeque::new(), false)),
+            cv: RankedCondvar::new(),
+        })
     }
 
     fn push(&self, f: Frame) -> bool {
-        let mut g = self.q.lock().unwrap();
+        let mut g = self.q.lock();
         if g.1 {
             return false;
         }
@@ -195,7 +199,7 @@ impl FrameQueue {
 
     fn pop(&self, timeout: Duration) -> LinkRecv {
         let start = Instant::now();
-        let mut g = self.q.lock().unwrap();
+        let mut g = self.q.lock();
         loop {
             if let Some(f) = g.0.pop_front() {
                 return LinkRecv::Frame(f);
@@ -207,13 +211,13 @@ impl FrameQueue {
             if elapsed >= timeout {
                 return LinkRecv::TimedOut;
             }
-            let (guard, _) = self.cv.wait_timeout(g, timeout - elapsed).unwrap();
+            let (guard, _) = self.cv.wait_timeout(g, timeout - elapsed);
             g = guard;
         }
     }
 
     fn close(&self) {
-        self.q.lock().unwrap().1 = true;
+        self.q.lock().1 = true;
         self.cv.notify_all();
     }
 }
@@ -299,8 +303,8 @@ struct TcpReader {
 
 /// Length-prefixed [`wire`] frames over a TCP socket.
 pub struct TcpLink {
-    writer: Mutex<TcpStream>,
-    reader: Mutex<TcpReader>,
+    writer: RankedMutex<TcpStream>,
+    reader: RankedMutex<TcpReader>,
     closed: AtomicBool,
     poisoned: AtomicBool,
     stats: LinkStats,
@@ -312,8 +316,8 @@ impl TcpLink {
         stream.set_nodelay(true)?;
         let reader_stream = stream.try_clone()?;
         Ok(TcpLink {
-            writer: Mutex::new(stream),
-            reader: Mutex::new(TcpReader { stream: reader_stream, pending: Vec::new() }),
+            writer: RankedMutex::new(Rank::LinkWriter, stream),
+            reader: RankedMutex::new(Rank::LinkReader, TcpReader { stream: reader_stream, pending: Vec::new() }),
             closed: AtomicBool::new(false),
             poisoned: AtomicBool::new(false),
             stats: LinkStats::default(),
@@ -359,7 +363,7 @@ impl Link for TcpLink {
         let t = Instant::now();
         let bytes = wire::encode(&frame);
         self.stats.encode_ns.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        let mut w = self.writer.lock().unwrap();
+        let mut w = self.writer.lock();
         w.write_all(&bytes)?;
         drop(w);
         self.stats.tx_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
@@ -372,7 +376,7 @@ impl Link for TcpLink {
             return LinkRecv::Closed;
         }
         let start = Instant::now();
-        let mut r = self.reader.lock().unwrap();
+        let mut r = self.reader.lock();
         loop {
             // A complete frame may already be buffered.
             let t = Instant::now();
@@ -426,9 +430,8 @@ impl Link for TcpLink {
 
     fn close(&self) {
         self.closed.store(true, Ordering::Release);
-        if let Ok(w) = self.writer.lock() {
-            let _ = w.shutdown(Shutdown::Both);
-        }
+        let writer = self.writer.lock();
+        let _ = writer.shutdown(Shutdown::Both);
     }
 
     fn stats(&self) -> LinkStatsSnapshot {
@@ -475,7 +478,7 @@ fn fold_fault_stats(acc: &mut FaultStatsSnapshot, s: FaultStatsSnapshot) {
 /// with [`LinkRecv::Closed`].
 pub struct SwappableLink {
     inner: RwLock<Arc<dyn Link>>,
-    retired: Mutex<(LinkStatsSnapshot, FaultStatsSnapshot, bool)>,
+    retired: RankedMutex<(LinkStatsSnapshot, FaultStatsSnapshot, bool)>,
     swaps: AtomicU64,
 }
 
@@ -483,29 +486,28 @@ impl SwappableLink {
     pub fn new(link: Arc<dyn Link>) -> SwappableLink {
         SwappableLink {
             inner: RwLock::new(link),
-            retired: Mutex::new((
-                LinkStatsSnapshot::default(),
-                FaultStatsSnapshot::default(),
-                false,
-            )),
+            retired: RankedMutex::new(
+                Rank::LinkRetired,
+                (LinkStatsSnapshot::default(), FaultStatsSnapshot::default(), false),
+            ),
             swaps: AtomicU64::new(0),
         }
     }
 
     /// The current inner link.
     pub fn current(&self) -> Arc<dyn Link> {
-        Arc::clone(&self.inner.read().unwrap())
+        Arc::clone(&self.inner.read().unwrap_or_else(|p| p.into_inner()))
     }
 
     /// Replace the inner link. The old link's counters are banked so
     /// cumulative stats stay monotonic, then it is closed.
     pub fn swap(&self, next: Arc<dyn Link>) {
         let old = {
-            let mut g = self.inner.write().unwrap();
+            let mut g = self.inner.write().unwrap_or_else(|p| p.into_inner());
             std::mem::replace(&mut *g, next)
         };
         {
-            let mut r = self.retired.lock().unwrap();
+            let mut r = self.retired.lock();
             fold_link_stats(&mut r.0, old.stats());
             if let Some(f) = old.fault_stats() {
                 fold_fault_stats(&mut r.1, f);
@@ -536,14 +538,14 @@ impl Link for SwappableLink {
     }
 
     fn stats(&self) -> LinkStatsSnapshot {
-        let mut acc = self.retired.lock().unwrap().0;
+        let mut acc = self.retired.lock().0;
         fold_link_stats(&mut acc, self.current().stats());
         acc
     }
 
     fn fault_stats(&self) -> Option<FaultStatsSnapshot> {
         let (retired_faults, any_retired) = {
-            let r = self.retired.lock().unwrap();
+            let r = self.retired.lock();
             (r.1, r.2)
         };
         match self.current().fault_stats() {

@@ -22,9 +22,6 @@
 //!    [`RunEvent`]s to an observer and honoring a [`CancelToken`], and
 //!    assemble the [`ExperimentOutcome`] (measured report + simulator
 //!    projection).
-//!
-//! The old single-shot `train::run_experiment` / `train::prepare_data`
-//! remain as deprecated shims over this module for one release.
 
 mod builder;
 mod events;

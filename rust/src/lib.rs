@@ -30,6 +30,7 @@
 //! architecture dispatch ([`experiment::Trainer`]), streaming
 //! [`experiment::RunEvent`]s, and cooperative cancellation.
 
+pub mod analysis;
 pub mod attack;
 pub mod baselines;
 pub mod bench_harness;
@@ -51,7 +52,6 @@ pub mod runtime;
 pub mod sim;
 pub mod tensor;
 pub mod testkit;
-pub mod train;
 pub mod util;
 
 /// Crate version (mirrors Cargo.toml).

@@ -56,6 +56,8 @@ pub fn literal_to_matrix_into(
     out: &mut Matrix,
 ) -> Result<()> {
     let data = l
+        // The PJRT literal API only exposes an owned decode; the Vec
+        // moves into `out.data` without copying. vflint: allow(A001)
         .to_vec::<f32>()
         .map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
     if data.len() != rows * cols {
@@ -84,11 +86,15 @@ pub fn params_from_literals_into(
 ) -> Result<()> {
     let n_layers = spec.layers.len();
     out.weights.resize_with(n_layers, Matrix::default);
+    // `Vec::new` is a constructor *pointer* here; resize_with only
+    // invokes it while growing, never at steady state. vflint: allow(A001)
     out.biases.resize_with(n_layers, Vec::new);
     for (i, l) in spec.layers.iter().enumerate() {
         literal_to_matrix_into(&lits[*off], l.in_dim, l.out_dim, &mut out.weights[i])?;
         *off += 1;
         let b = lits[*off]
+            // PJRT literal decode (an owned Vec is the only accessor);
+            // it moves into the reused skeleton. vflint: allow(A001)
             .to_vec::<f32>()
             .map_err(|e| anyhow!("bias literal: {e:?}"))?;
         if b.len() != l.out_dim {

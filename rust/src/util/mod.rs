@@ -4,11 +4,13 @@
 //! usual ecosystem crates (`rand`, `rayon`, …) are replaced by the minimal,
 //! well-tested implementations in this module.
 
+pub mod ordered;
 pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod timer;
 
+pub use ordered::{Rank, RankedCondvar, RankedGuard, RankedMutex};
 pub use pool::ThreadPool;
 pub use rng::Rng;
 pub use stats::{mean, percentile, stddev, Summary};

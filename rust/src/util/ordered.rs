@@ -1,0 +1,575 @@
+//! Rank-ordered synchronization primitives for the coordinator.
+//!
+//! Every coordinator-layer lock is a [`RankedMutex`] carrying a [`Rank`]
+//! from the single static lock-rank table below. The discipline is the
+//! classic lock-hierarchy rule: **a thread may only acquire a lock whose
+//! rank is strictly greater than every rank it already holds** (same-rank
+//! re-acquisition is allowed only for ranks that explicitly opt in, and
+//! then only in a caller-enforced canonical order — see
+//! [`Rank::allows_same_rank`]). A total order over acquisitions makes
+//! deadlock by lock-cycle impossible.
+//!
+//! Enforcement is two-layered:
+//!
+//! - **Statically**, the `vflint` binary (`rust/src/analysis/`) extracts
+//!   nested `.lock()` scopes from the coordinator sources and rejects any
+//!   acquisition pair that descends the table.
+//! - **At runtime** (debug builds only — `debug_assertions`), every
+//!   acquisition is checked against a thread-local stack of held ranks
+//!   and recorded into a global acquisition graph; a descending
+//!   acquisition or a cycle in the graph panics immediately with both
+//!   rank names. The chaos/recovery suites run in debug mode in
+//!   `cargo test`, so they double as race detectors.
+//!
+//! Poisoning: a panicking holder poisons a `std::sync::Mutex`; the
+//! coordinator treats that as "the protected value is whatever the dying
+//! thread left" — every session teardown path already tolerates partial
+//! state (that is what the chaos suite exercises). `RankedMutex::lock`
+//! therefore absorbs [`PoisonError`] instead of propagating a panic into
+//! every other worker, which is also what removed the blanket
+//! `lock().unwrap()` panic paths from the coordinator.
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+use std::time::Duration;
+
+/// The static lock-rank table. **Declaration order is acquisition
+/// order**: a thread holding a lock of one rank may only acquire locks
+/// of ranks declared *below* it. The numeric value of a rank is its
+/// declaration index.
+///
+/// Maintenance recipe (EXPERIMENTS.md §Static analysis): when adding a
+/// lock, find every site that can hold an existing lock while taking the
+/// new one (and vice versa), insert the new rank between its outermost
+/// holder and innermost holdee, then run `cargo run --bin vflint` — the
+/// static pass and the rank-table totality test both fail on an
+/// unregistered construction site.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+#[repr(u8)]
+pub enum Rank {
+    /// Supervisor barrier-completion slot (`barrier_done`): written by
+    /// the link receive loop, condvar-waited by the epoch loop.
+    SessionBarrier = 0,
+    /// Supervisor fetched-parameter slots (`params_slot`): written by
+    /// the link receive loop, condvar-waited by `fetch_passive_params`.
+    SessionParams = 1,
+    /// Per-epoch loss accumulator shared by active workers.
+    EpochLoss = 2,
+    /// Remote passive server's per-epoch batch table.
+    ServeTable = 3,
+    /// Remote passive server's per-party embed-job queues.
+    ServeJobs = 4,
+    /// The exactly-once batch ledger's state machine.
+    Ledger = 5,
+    /// Model replicas (active and passive). Same-rank nesting is allowed
+    /// because the barrier folds lock an entire replica array at once —
+    /// always in ascending index order, which keeps same-rank
+    /// acquisitions acyclic.
+    Replica = 6,
+    /// Per-party parameter server state. Strictly below `Replica`:
+    /// the barrier folds call `set_params`/`fetch` while holding every
+    /// replica guard.
+    ParamServer = 7,
+    /// Per-party DP noise mechanism state.
+    DpNoise = 8,
+    /// Pub/sub topic queues (`coordinator::channel::Topic`).
+    TopicQueue = 9,
+    /// Durable broker topic-log lanes. Same-rank allowed: barrier
+    /// compaction walks the lanes one at a time in lane order.
+    DurableLog = 10,
+    /// TCP link writer half.
+    LinkWriter = 11,
+    /// TCP link reader half (held across blocking socket reads).
+    LinkReader = 12,
+    /// In-process link frame queue.
+    LinkQueue = 13,
+    /// Swappable-link retired-stats fold (holds while snapshotting the
+    /// outgoing link's counters on swap).
+    LinkRetired = 14,
+    /// Worker-pool job queue (the shared `Receiver`). Below `Replica`:
+    /// engine kernels dispatch onto the pool while a replica guard is
+    /// held.
+    PoolQueue = 15,
+    /// Worker-pool result slots for `scope_map`.
+    PoolResults = 16,
+}
+
+/// Number of ranks in the table.
+pub const RANK_COUNT: usize = 17;
+
+impl Rank {
+    /// Every rank, in acquisition (declaration) order.
+    pub const ALL: [Rank; RANK_COUNT] = [
+        Rank::SessionBarrier,
+        Rank::SessionParams,
+        Rank::EpochLoss,
+        Rank::ServeTable,
+        Rank::ServeJobs,
+        Rank::Ledger,
+        Rank::Replica,
+        Rank::ParamServer,
+        Rank::DpNoise,
+        Rank::TopicQueue,
+        Rank::DurableLog,
+        Rank::LinkWriter,
+        Rank::LinkReader,
+        Rank::LinkQueue,
+        Rank::LinkRetired,
+        Rank::PoolQueue,
+        Rank::PoolResults,
+    ];
+
+    /// The rank's position in the acquisition order (0 = outermost).
+    pub fn value(self) -> u8 {
+        self as u8
+    }
+
+    /// The variant name, as it appears in source (`Rank::<name>`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Rank::SessionBarrier => "SessionBarrier",
+            Rank::SessionParams => "SessionParams",
+            Rank::EpochLoss => "EpochLoss",
+            Rank::ServeTable => "ServeTable",
+            Rank::ServeJobs => "ServeJobs",
+            Rank::Ledger => "Ledger",
+            Rank::Replica => "Replica",
+            Rank::ParamServer => "ParamServer",
+            Rank::DpNoise => "DpNoise",
+            Rank::TopicQueue => "TopicQueue",
+            Rank::DurableLog => "DurableLog",
+            Rank::LinkWriter => "LinkWriter",
+            Rank::LinkReader => "LinkReader",
+            Rank::LinkQueue => "LinkQueue",
+            Rank::LinkRetired => "LinkRetired",
+            Rank::PoolQueue => "PoolQueue",
+            Rank::PoolResults => "PoolResults",
+        }
+    }
+
+    /// Reverse of [`Rank::name`] (used by the vflint self-tests).
+    pub fn from_name(s: &str) -> Option<Rank> {
+        Rank::ALL.iter().copied().find(|r| r.name() == s)
+    }
+
+    /// Whether several locks of this same rank may be held at once.
+    /// Reserved for homogeneous arrays that are always locked in
+    /// ascending index order (replica folds, durable-log lane walks).
+    pub fn allows_same_rank(self) -> bool {
+        matches!(self, Rank::Replica | Rank::DurableLog)
+    }
+}
+
+impl fmt::Display for Rank {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}({})", self.name(), self.value())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Runtime checker (debug builds only).
+//
+// Per-thread: a fixed-size stack of held rank indices (fixed so the
+// zero-alloc hot path stays allocation-free even in debug builds).
+// Global: an acquisition-graph adjacency bitmap; inserting an edge that
+// closes a cycle panics with the offending rank pair. With the total
+// order enforced per-acquisition the graph can never actually acquire a
+// cycle; it exists so that if the per-thread check is ever relaxed (or a
+// same-rank allowance is misused across *different* arrays) the
+// cross-thread pattern is still caught.
+// ---------------------------------------------------------------------------
+
+#[cfg(debug_assertions)]
+mod rt {
+    use super::{Rank, RANK_COUNT};
+    use std::cell::RefCell;
+    use std::sync::atomic::{AtomicU32, Ordering};
+    use std::sync::OnceLock;
+
+    /// Max simultaneously-held ranked locks per thread. The deepest real
+    /// chain (replica array fold + PS) stays far below this.
+    pub const MAX_HELD: usize = 64;
+
+    thread_local! {
+        static HELD: RefCell<[Option<u8>; MAX_HELD]> = const { RefCell::new([None; MAX_HELD]) };
+    }
+
+    /// `EDGES[from] & (1 << to)` ⇒ some thread acquired `to` while
+    /// holding `from`.
+    static EDGES: OnceLock<[AtomicU32; RANK_COUNT]> = OnceLock::new();
+
+    fn edges() -> &'static [AtomicU32; RANK_COUNT] {
+        EDGES.get_or_init(|| std::array::from_fn(|_| AtomicU32::new(0)))
+    }
+
+    /// Is `to` reachable from `from` in the acquisition graph?
+    fn reaches(from: usize, to: usize) -> bool {
+        let e = edges();
+        let mut visited: u32 = 0;
+        let mut stack = [0usize; RANK_COUNT];
+        let mut sp = 0;
+        stack[sp] = from;
+        sp += 1;
+        while sp > 0 {
+            sp -= 1;
+            let n = stack[sp];
+            if n == to {
+                return true;
+            }
+            if visited & (1 << n) != 0 {
+                continue;
+            }
+            visited |= 1 << n;
+            let adj = e[n].load(Ordering::Relaxed);
+            for m in 0..RANK_COUNT {
+                if adj & (1 << m) != 0 && visited & (1 << m) == 0 {
+                    stack[sp] = m;
+                    sp += 1;
+                }
+            }
+        }
+        false
+    }
+
+    /// Validate + record an acquisition of `rank`. Returns the held-slot
+    /// index to pass to [`release`]. Panics on a rank-order violation or
+    /// on acquisition-graph cycle formation.
+    pub fn acquire(rank: Rank) -> u8 {
+        let ri = rank.value() as usize;
+        HELD.with(|h| {
+            let mut slots = h.borrow_mut();
+            for s in slots.iter().flatten() {
+                let held = Rank::ALL[*s as usize];
+                let descending = held.value() > rank.value();
+                let same_rank_misuse = held == rank && !rank.allows_same_rank();
+                if descending || same_rank_misuse {
+                    panic!(
+                        "lock-order violation: acquiring {} while holding {} \
+                         (ranks must be acquired in table order; see util::ordered)",
+                        rank, held
+                    );
+                }
+            }
+            // Record edges held → rank; a newly-inserted edge that makes
+            // `rank` reach back to `held` is a cycle.
+            let e = edges();
+            for s in slots.iter().flatten() {
+                let hi = *s as usize;
+                if hi == ri {
+                    continue;
+                }
+                let prev = e[hi].fetch_or(1 << ri, Ordering::Relaxed);
+                if prev & (1 << ri) == 0 && reaches(ri, hi) {
+                    panic!(
+                        "lock-order cycle: edge {} -> {} closes a cycle in the \
+                         acquisition graph",
+                        Rank::ALL[hi], rank
+                    );
+                }
+            }
+            let slot = slots
+                .iter()
+                .position(|s| s.is_none())
+                .unwrap_or_else(|| panic!("more than {MAX_HELD} ranked locks held by one thread"));
+            slots[slot] = Some(ri as u8);
+            slot as u8
+        })
+    }
+
+    /// Release the held-slot registered by [`acquire`].
+    pub fn release(slot: u8) {
+        HELD.with(|h| {
+            let mut slots = h.borrow_mut();
+            slots[slot as usize] = None;
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RankedMutex / RankedGuard / RankedCondvar
+// ---------------------------------------------------------------------------
+
+/// A [`Mutex`] tagged with its place in the static lock-rank table.
+///
+/// `lock()` returns the guard directly: poison is absorbed (see module
+/// docs) and, in debug builds, the acquisition is checked against the
+/// thread's held ranks before blocking.
+pub struct RankedMutex<T: ?Sized> {
+    rank: Rank,
+    inner: Mutex<T>,
+}
+
+impl<T> RankedMutex<T> {
+    /// Wrap `value` under the given rank.
+    pub fn new(rank: Rank, value: T) -> Self {
+        RankedMutex { rank, inner: Mutex::new(value) }
+    }
+
+    /// Consume the mutex, returning the protected value (poison
+    /// absorbed).
+    pub fn into_inner(self) -> T {
+        self.inner.into_inner().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+impl<T: ?Sized> RankedMutex<T> {
+    /// This lock's rank in the table.
+    pub fn rank(&self) -> Rank {
+        self.rank
+    }
+
+    /// Acquire the lock. Blocks; absorbs poison; panics (debug builds)
+    /// on a lock-order violation.
+    pub fn lock(&self) -> RankedGuard<'_, T> {
+        #[cfg(debug_assertions)]
+        let slot = rt::acquire(self.rank);
+        #[cfg(not(debug_assertions))]
+        let slot = 0u8;
+        let guard = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        RankedGuard { guard: Some(guard), rank: self.rank, slot }
+    }
+
+    /// Mutable access without locking (requires `&mut self`, so the
+    /// borrow checker proves exclusivity — no rank bookkeeping needed).
+    pub fn get_mut(&mut self) -> &mut T {
+        self.inner.get_mut().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+impl<T: ?Sized + fmt::Debug> fmt::Debug for RankedMutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("RankedMutex").field("rank", &self.rank).field("inner", &self.inner).finish()
+    }
+}
+
+/// Guard returned by [`RankedMutex::lock`]. Unregisters its rank from
+/// the thread's held set on drop.
+pub struct RankedGuard<'a, T: ?Sized> {
+    // `Option` so RankedCondvar can temporarily take the inner guard out
+    // across a wait (the OS mutex is released while waiting, so the rank
+    // must not count as held).
+    guard: Option<MutexGuard<'a, T>>,
+    rank: Rank,
+    slot: u8,
+}
+
+impl<'a, T: ?Sized> RankedGuard<'a, T> {
+    /// The rank of the lock this guard holds.
+    pub fn rank(&self) -> Rank {
+        self.rank
+    }
+
+    fn take_inner(mut self) -> (MutexGuard<'a, T>, Rank) {
+        let g = self.guard.take().expect("guard present until taken");
+        #[cfg(debug_assertions)]
+        rt::release(self.slot);
+        let rank = self.rank;
+        std::mem::forget(self);
+        (g, rank)
+    }
+
+    fn adopt(guard: MutexGuard<'a, T>, rank: Rank) -> Self {
+        #[cfg(debug_assertions)]
+        let slot = rt::acquire(rank);
+        #[cfg(not(debug_assertions))]
+        let slot = 0u8;
+        RankedGuard { guard: Some(guard), rank, slot }
+    }
+}
+
+impl<T: ?Sized> Deref for RankedGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.guard.as_ref().expect("guard present until drop")
+    }
+}
+
+impl<T: ?Sized> DerefMut for RankedGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.guard.as_mut().expect("guard present until drop")
+    }
+}
+
+impl<T: ?Sized> Drop for RankedGuard<'_, T> {
+    fn drop(&mut self) {
+        if self.guard.is_some() {
+            #[cfg(debug_assertions)]
+            rt::release(self.slot);
+        }
+    }
+}
+
+impl<T: ?Sized + fmt::Debug> fmt::Debug for RankedGuard<'_, T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&**self, f)
+    }
+}
+
+/// A [`Condvar`] paired with [`RankedMutex`] guards. While a thread
+/// waits, the underlying mutex is released, so the rank is unregistered
+/// for the duration and re-checked on wake-up.
+pub struct RankedCondvar {
+    inner: Condvar,
+}
+
+impl RankedCondvar {
+    pub fn new() -> Self {
+        RankedCondvar { inner: Condvar::new() }
+    }
+
+    pub fn notify_one(&self) {
+        self.inner.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        self.inner.notify_all();
+    }
+
+    /// Wait on the condvar, releasing (and rank-unregistering) the
+    /// guard; reacquires and re-registers on wake. Poison absorbed.
+    pub fn wait_timeout<'a, T: ?Sized>(
+        &self,
+        guard: RankedGuard<'a, T>,
+        dur: Duration,
+    ) -> (RankedGuard<'a, T>, WaitTimeoutResult) {
+        let (inner, rank) = guard.take_inner();
+        let (inner, res) = self
+            .inner
+            .wait_timeout(inner, dur)
+            .unwrap_or_else(|p| p.into_inner());
+        (RankedGuard::adopt(inner, rank), res)
+    }
+
+    /// Untimed wait (same release/re-register discipline).
+    pub fn wait<'a, T: ?Sized>(&self, guard: RankedGuard<'a, T>) -> RankedGuard<'a, T> {
+        let (inner, rank) = guard.take_inner();
+        let inner = self.inner.wait(inner).unwrap_or_else(|p| p.into_inner());
+        RankedGuard::adopt(inner, rank)
+    }
+}
+
+impl Default for RankedCondvar {
+    fn default() -> Self {
+        RankedCondvar::new()
+    }
+}
+
+impl fmt::Debug for RankedCondvar {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("RankedCondvar").finish_non_exhaustive()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::Arc;
+
+    #[test]
+    fn table_is_strictly_ascending_and_names_unique() {
+        for (i, r) in Rank::ALL.iter().enumerate() {
+            assert_eq!(r.value() as usize, i, "{} out of declaration order", r.name());
+            assert_eq!(Rank::from_name(r.name()), Some(*r));
+        }
+        let mut names: Vec<_> = Rank::ALL.iter().map(|r| r.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), RANK_COUNT);
+    }
+
+    #[test]
+    fn ascending_acquisition_is_fine() {
+        let a = RankedMutex::new(Rank::Ledger, 1u32);
+        let b = RankedMutex::new(Rank::TopicQueue, 2u32);
+        let ga = a.lock();
+        let gb = b.lock();
+        assert_eq!(*ga + *gb, 3);
+    }
+
+    #[test]
+    fn descending_acquisition_panics_in_debug() {
+        let a = RankedMutex::new(Rank::TopicQueue, ());
+        let b = RankedMutex::new(Rank::Ledger, ());
+        let _ga = a.lock();
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _gb = b.lock();
+        }));
+        if cfg!(debug_assertions) {
+            let msg = *r.expect_err("descending must panic").downcast::<String>().unwrap();
+            assert!(msg.contains("lock-order violation"), "{msg}");
+            assert!(msg.contains("Ledger") && msg.contains("TopicQueue"), "{msg}");
+        } else {
+            assert!(r.is_ok());
+        }
+    }
+
+    #[test]
+    fn same_rank_allowed_only_when_opted_in() {
+        // Replica opts in (array folds).
+        let r1 = RankedMutex::new(Rank::Replica, ());
+        let r2 = RankedMutex::new(Rank::Replica, ());
+        let _g1 = r1.lock();
+        let _g2 = r2.lock();
+
+        // Ledger does not.
+        let l1 = RankedMutex::new(Rank::Ledger, ());
+        let l2 = RankedMutex::new(Rank::Ledger, ());
+        let _h1 = l1.lock();
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _h2 = l2.lock();
+        }));
+        assert_eq!(r.is_err(), cfg!(debug_assertions));
+    }
+
+    #[test]
+    fn rank_released_on_drop_and_across_condvar_wait() {
+        let hi = RankedMutex::new(Rank::PoolResults, ());
+        let lo = RankedMutex::new(Rank::SessionBarrier, 0u32);
+        {
+            let _g = hi.lock();
+        }
+        // After drop, acquiring the lowest rank is fine again.
+        let g = lo.lock();
+        drop(g);
+
+        // While waiting, the rank must not count as held: a second
+        // thread takes the same mutex during our wait.
+        let pair = Arc::new((RankedMutex::new(Rank::SessionBarrier, false), RankedCondvar::new()));
+        let p2 = Arc::clone(&pair);
+        let t = std::thread::spawn(move || {
+            let mut g = p2.0.lock();
+            *g = true;
+            p2.1.notify_all();
+        });
+        let mut g = pair.0.lock();
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while !*g {
+            assert!(std::time::Instant::now() < deadline, "condvar wait timed out");
+            let (g2, _) = pair.1.wait_timeout(g, Duration::from_millis(50));
+            g = g2;
+        }
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn poisoned_lock_is_absorbed() {
+        let m = Arc::new(RankedMutex::new(Rank::Ledger, 7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock();
+            panic!("poison it");
+        })
+        .join();
+        // Still usable, value still readable.
+        assert_eq!(*m.lock(), 7);
+    }
+
+    #[test]
+    fn into_inner_and_get_mut() {
+        let mut m = RankedMutex::new(Rank::EpochLoss, 3u32);
+        *m.get_mut() += 1;
+        assert_eq!(m.into_inner(), 4);
+    }
+}

@@ -5,7 +5,8 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use crate::util::ordered::{Rank, RankedMutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -18,7 +19,7 @@ enum Msg {
 /// Fixed-size thread pool.
 pub struct ThreadPool {
     tx: Sender<Msg>,
-    rx: Arc<Mutex<Receiver<Msg>>>,
+    rx: Arc<RankedMutex<Receiver<Msg>>>,
     handles: Vec<JoinHandle<()>>,
     size: usize,
     inflight: Arc<AtomicUsize>,
@@ -29,7 +30,7 @@ impl ThreadPool {
     pub fn new(size: usize) -> Self {
         assert!(size >= 1);
         let (tx, rx) = channel::<Msg>();
-        let rx = Arc::new(Mutex::new(rx));
+        let rx = Arc::new(RankedMutex::new(Rank::PoolQueue, rx));
         let inflight = Arc::new(AtomicUsize::new(0));
         let mut handles = Vec::with_capacity(size);
         for i in 0..size {
@@ -40,7 +41,7 @@ impl ThreadPool {
                     .name(format!("pool-{i}"))
                     .spawn(move || loop {
                         let msg = {
-                            let guard = rx.lock().unwrap();
+                            let guard = rx.lock();
                             guard.recv()
                         };
                         match msg {
@@ -78,8 +79,8 @@ impl ThreadPool {
     {
         let n = items.len();
         let f = Arc::new(f);
-        let results: Arc<Mutex<Vec<Option<R>>>> =
-            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        let results: Arc<RankedMutex<Vec<Option<R>>>> =
+            Arc::new(RankedMutex::new(Rank::PoolResults, (0..n).map(|_| None).collect()));
         let (done_tx, done_rx) = channel::<()>();
         for (i, item) in items.into_iter().enumerate() {
             let f = Arc::clone(&f);
@@ -87,7 +88,7 @@ impl ThreadPool {
             let done = done_tx.clone();
             self.execute(move || {
                 let r = f(item);
-                results.lock().unwrap()[i] = Some(r);
+                results.lock()[i] = Some(r);
                 let _ = done.send(());
             });
         }
@@ -99,7 +100,6 @@ impl ThreadPool {
             .ok()
             .expect("all workers done")
             .into_inner()
-            .unwrap()
             .into_iter()
             .map(|o| o.expect("slot filled"))
             .collect()

@@ -345,6 +345,7 @@ fn fuzz_frames() -> Vec<Frame> {
     use pubsub_vfl::tensor::Matrix;
     vec![
         Frame::Hello { parties: 2, session_id: 77, resume_token: 99, attempt: 1 },
+        Frame::HelloAck { parties: 2 },
         Frame::Resume { epoch: 1, banked_bwd: 12 },
         Frame::RestoreParams { party: 0, version: 4, flat: vec![0.5; 9] },
         Frame::EpochInstall { epoch: 1, batches: vec![(7, vec![1, 2, 3]), (8, vec![])] },
@@ -367,7 +368,9 @@ fn fuzz_frames() -> Vec<Frame> {
         }),
         Frame::BwdDone { batch_id: 7, party: 0, ps_version: 4 },
         Frame::Requeue { batch_id: 8, generation: 4 },
+        Frame::Barrier { epoch: 1, broadcast: true },
         Frame::BarrierDone { epoch: 1, versions: vec![3, 4] },
+        Frame::FetchParams,
         Frame::PassiveParams { party: 0, version: 4, flat: vec![0.25; 9] },
         Frame::Shutdown,
     ]

@@ -1,0 +1,157 @@
+//! End-to-end tests for the `vflint` static-analysis pass.
+//!
+//! Pins three contracts:
+//! 1. the committed tree is lint-clean (the CI gate's exact invocation);
+//! 2. each fixture under `rust/tests/vflint_fixtures/` triggers exactly
+//!    its lint, with the `path:line: LINT-ID message` diagnostic format
+//!    and exit codes (0 clean / 1 findings / 2 usage error);
+//! 3. the lock-rank table is *total* over every `RankedMutex`
+//!    construction site in the tree — no lock exists outside the table.
+
+use pubsub_vfl::analysis::{analyze_tree, Baseline};
+use pubsub_vfl::util::ordered::{Rank, RANK_COUNT};
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::process::{Command, Output};
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixture(name: &str) -> PathBuf {
+    repo_root().join("rust/tests/vflint_fixtures").join(name)
+}
+
+fn run_vflint(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_vflint"))
+        .args(args)
+        .output()
+        .expect("spawn vflint")
+}
+
+fn stdout(o: &Output) -> String {
+    String::from_utf8_lossy(&o.stdout).to_string()
+}
+
+#[test]
+fn committed_tree_is_clean() {
+    let root = repo_root();
+    let out = run_vflint(&["--root", root.to_str().unwrap()]);
+    assert!(
+        out.status.success(),
+        "vflint found violations in the committed tree:\n{}\n{}",
+        stdout(&out),
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+#[test]
+fn clean_fixture_passes() {
+    let out = run_vflint(&["--root", fixture("clean").to_str().unwrap()]);
+    assert!(out.status.success(), "clean fixture flagged:\n{}", stdout(&out));
+    assert!(stdout(&out).is_empty());
+}
+
+#[test]
+fn each_fixture_triggers_its_lint() {
+    // (fixture dir, lint id, substring the diagnostic must carry).
+    let cases = [
+        ("lock_order", "L001", "while TopicQueue"),
+        ("unknown_lock", "L002", "mystery_widget"),
+        ("panic_path", "P001", "panic path"),
+        ("hot_alloc", "A001", "sum_into"),
+        ("wire_gap", "W001", "Frame::Orphan"),
+        ("relaxed", "R001", "Ordering::Relaxed"),
+        ("dead_shim", "D001", "deprecated"),
+        ("raw_mutex", "M001", "raw std::sync::Mutex"),
+    ];
+    for (dir, lint, needle) in cases {
+        let out = run_vflint(&["--root", fixture(dir).to_str().unwrap()]);
+        let text = stdout(&out);
+        assert_eq!(
+            out.status.code(),
+            Some(1),
+            "fixture `{dir}` should exit 1, got {:?}:\n{text}",
+            out.status.code()
+        );
+        assert!(text.contains(lint), "fixture `{dir}` missing {lint}:\n{text}");
+        assert!(text.contains(needle), "fixture `{dir}` missing `{needle}`:\n{text}");
+    }
+}
+
+#[test]
+fn diagnostics_pin_the_file_line_format() {
+    let out = run_vflint(&["--root", fixture("panic_path").to_str().unwrap()]);
+    let text = stdout(&out);
+    for line in text.lines() {
+        // `path:line: LINT-ID message`
+        let (loc, rest) = line.split_once(": ").expect("`: ` separator");
+        let (path, lineno) = loc.rsplit_once(':').expect("path:line prefix");
+        assert!(path.ends_with(".rs"), "bad path in `{line}`");
+        lineno.parse::<u32>().expect("numeric line");
+        let id = rest.split_whitespace().next().expect("lint id");
+        assert_eq!(id.len(), 4, "lint id `{id}` in `{line}`");
+        assert!(id.starts_with(|c: char| c.is_ascii_uppercase()));
+        assert!(id[1..].chars().all(|c| c.is_ascii_digit()));
+    }
+    // The P001 fixture has exactly two non-test panic paths.
+    assert_eq!(text.lines().count(), 2, "{text}");
+}
+
+#[test]
+fn unknown_flag_is_a_usage_error() {
+    let out = run_vflint(&["--bogus"]);
+    assert_eq!(out.status.code(), Some(2));
+}
+
+#[test]
+fn baseline_ratchets_findings_to_zero() {
+    let dir = std::env::temp_dir().join("vflint-ratchet-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let base = dir.join("accepted.baseline");
+    let root = fixture("panic_path");
+    let root = root.to_str().unwrap();
+
+    // Accept the current findings...
+    let out = run_vflint(&["--root", root, "--baseline", base.to_str().unwrap(), "--write-baseline"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // ...then the same tree passes against that baseline.
+    let out = run_vflint(&["--root", root, "--baseline", base.to_str().unwrap()]);
+    assert!(out.status.success(), "baselined run failed:\n{}", stdout(&out));
+
+    // An empty baseline still fails: the ratchet only goes down.
+    std::fs::write(&base, "# nothing accepted\n").unwrap();
+    let out = run_vflint(&["--root", root, "--baseline", base.to_str().unwrap()]);
+    assert_eq!(out.status.code(), Some(1));
+}
+
+#[test]
+fn rank_table_is_total_over_construction_sites() {
+    let analysis = analyze_tree(&repo_root()).expect("analyze repo");
+    let sites = analysis.construction_sites();
+    assert!(
+        sites.len() >= 20,
+        "expected the coordinator's RankedMutex sites, found {}",
+        sites.len()
+    );
+    let mut used: BTreeSet<Rank> = BTreeSet::new();
+    for s in sites {
+        let name = s.rank_name.as_deref().unwrap_or_else(|| {
+            panic!("{}:{}: RankedMutex::new without a literal Rank::X", s.path, s.line)
+        });
+        let rank = Rank::from_name(name).unwrap_or_else(|| {
+            panic!("{}:{}: Rank::{name} is not in the static table", s.path, s.line)
+        });
+        used.insert(rank);
+    }
+    // Totality both ways: every site names a table rank, and every
+    // table rank is constructed somewhere (no dead ranks drifting in
+    // the table).
+    assert_eq!(
+        used.len(),
+        RANK_COUNT,
+        "unconstructed ranks: {:?}",
+        Rank::ALL.iter().filter(|r| !used.contains(*r)).collect::<Vec<_>>()
+    );
+}

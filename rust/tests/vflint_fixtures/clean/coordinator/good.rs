@@ -1,0 +1,76 @@
+//! Clean fixture: exercises every heuristic edge the analyzer must NOT
+//! flag — ascending nesting, early `drop`, chained statement
+//! temporaries, same-rank opt-in arrays, documented Relaxed, and
+//! test-only panics. vflint must exit 0 on this tree.
+
+use crate::util::ordered::{Rank, RankedMutex};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct Coordinator {
+    ledger: RankedMutex<u64>,
+    q: RankedMutex<VecDeque<u32>>,
+    replicas: Vec<RankedMutex<Vec<f32>>>,
+    counter: AtomicU64,
+}
+
+impl Coordinator {
+    pub fn new(k: usize) -> Self {
+        let mut replicas = Vec::new();
+        for _ in 0..k {
+            replicas.push(RankedMutex::new(Rank::Replica, Vec::new()));
+        }
+        Coordinator {
+            ledger: RankedMutex::new(Rank::Ledger, 0),
+            q: RankedMutex::new(Rank::TopicQueue, VecDeque::new()),
+            replicas,
+            counter: AtomicU64::new(0),
+        }
+    }
+
+    /// Ascending nesting: Ledger(5) then TopicQueue(9) is fine.
+    pub fn ascending(&self) {
+        let mut st = self.ledger.lock();
+        *st += 1;
+        self.q.lock().push_back(1);
+    }
+
+    /// Chained temporary: the guard dies at the statement even though
+    /// the statement is a `let`; locking lower afterwards is fine.
+    pub fn chained_then_lower(&self) -> Option<u32> {
+        let head = self.q.lock().pop_front();
+        let mut st = self.ledger.lock();
+        *st += 1;
+        head
+    }
+
+    /// Early drop releases the higher rank before a lower acquisition.
+    pub fn drop_then_lower(&self) {
+        let g = self.q.lock();
+        let _n = g.len();
+        drop(g);
+        let mut st = self.ledger.lock();
+        *st += 1;
+    }
+
+    /// Same-rank nesting is allowed for Replica (array fold in
+    /// ascending index order).
+    pub fn fold(&self) -> usize {
+        let guards: Vec<_> = self.replicas.iter().map(|m| m.lock()).collect();
+        // Relaxed: monotonic statistics counter, read only after join.
+        self.counter.fetch_add(1, Ordering::Relaxed);
+        guards.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn panics_in_tests_are_fine() {
+        let c = Coordinator::new(2);
+        c.ascending();
+        assert_eq!(c.chained_then_lower().unwrap_or(1), 1);
+    }
+}

@@ -1,0 +1,6 @@
+//! D001 fixture: a deprecated shim left in the tree.
+
+#[deprecated(note = "use the staged experiment API")]
+pub fn run_experiment() -> u32 {
+    42
+}

@@ -1,0 +1,14 @@
+//! A001 fixture: allocations inside a `*_into` zero-alloc kernel.
+
+pub fn sum_into(xs: &[f32], out: &mut Vec<f32>) {
+    let scratch = Vec::new(); // A001: allocation in a zero-alloc kernel
+    let doubled = xs.to_vec(); // A001
+    out.clear();
+    out.extend(doubled.iter().map(|x| x * 2.0));
+    drop(scratch);
+}
+
+pub fn sum(xs: &[f32]) -> Vec<f32> {
+    // Allocation outside a `*_into` kernel is not A001's business.
+    xs.to_vec()
+}

@@ -1,0 +1,24 @@
+//! L001 fixture: holds TopicQueue(9) while acquiring Ledger(5) —
+//! descends the lock-rank table.
+
+use crate::util::ordered::{Rank, RankedMutex};
+
+pub struct Inverted {
+    topic: RankedMutex<Vec<u32>>,
+    ledger: RankedMutex<u64>,
+}
+
+impl Inverted {
+    pub fn new() -> Self {
+        Inverted {
+            topic: RankedMutex::new(Rank::TopicQueue, Vec::new()),
+            ledger: RankedMutex::new(Rank::Ledger, 0),
+        }
+    }
+
+    pub fn descending(&self) {
+        let g = self.topic.lock();
+        let mut st = self.ledger.lock(); // L001: Ledger(5) under TopicQueue(9)
+        *st += g.len() as u64;
+    }
+}

@@ -1,0 +1,20 @@
+//! P001 fixture: panic paths in non-test coordinator session code.
+
+pub fn first(xs: &[u32]) -> u32 {
+    *xs.first().unwrap()
+}
+
+pub fn must(flag: bool) {
+    if !flag {
+        panic!("invariant broken");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_here_is_fine() {
+        assert_eq!(super::first(&[3]), 3);
+        Some(1u32).unwrap();
+    }
+}

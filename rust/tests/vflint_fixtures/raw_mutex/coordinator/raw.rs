@@ -1,0 +1,14 @@
+//! M001 fixture: raw std::sync primitives inside the coordinator.
+
+use std::sync::{Condvar, Mutex};
+
+pub struct Unranked {
+    state: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl Unranked {
+    pub fn new() -> Self {
+        Unranked { state: Mutex::new(0), cv: Condvar::new() }
+    }
+}

@@ -1,0 +1,20 @@
+//! R001 fixture: one documented use (fine) and one bare use (flagged).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn documented(c: &AtomicU64) -> u64 {
+    // Relaxed: monotonic counter folded after the workers join.
+    c.load(Ordering::Relaxed)
+}
+
+pub fn spacer_one(x: u64) -> u64 {
+    x + 1
+}
+
+pub fn spacer_two(x: u64) -> u64 {
+    x + 2
+}
+
+pub fn undocumented(c: &AtomicU64) {
+    c.fetch_add(1, Ordering::Relaxed);
+}

@@ -1,0 +1,7 @@
+//! L002 fixture: a `.lock()` whose receiver never appears at any
+//! `RankedMutex::new` site and matches no alias — the analyzer cannot
+//! prove a rank for it.
+
+pub fn poke(mystery_widget: &crate::SomeLock) {
+    let _g = mystery_widget.lock();
+}

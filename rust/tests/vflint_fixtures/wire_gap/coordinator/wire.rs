@@ -1,0 +1,25 @@
+//! W001 fixture: `Frame::Orphan` is missing from the round-trip tests,
+//! from `kind_name()`, and from the decode fuzz list.
+
+pub enum Frame {
+    Hello { parties: u32 },
+    Orphan,
+}
+
+pub fn kind_name(f: &Frame) -> &'static str {
+    match f {
+        Frame::Hello { .. } => "hello",
+        _ => "unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let f = Frame::Hello { parties: 2 };
+        assert_eq!(kind_name(&f), "hello");
+    }
+}

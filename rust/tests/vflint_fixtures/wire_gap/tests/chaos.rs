@@ -1,0 +1,9 @@
+//! Companion fuzz list for the W001 fixture — also missing `Orphan`.
+
+fn fuzz_frames() -> Vec<super::Frame> {
+    vec![super::Frame::Hello { parties: 2 }]
+}
+
+fn run(seed: u64) -> usize {
+    fuzz_frames().len() + seed as usize
+}
