@@ -139,6 +139,7 @@ fn main() {
             ("naive".to_string(), make(BackendKind::Naive, 1)),
             ("tiled".to_string(), make(BackendKind::Tiled, 1)),
             ("threaded".to_string(), Arc::new(Threaded::new(nt)) as Arc<dyn Backend>),
+            ("simd".to_string(), make(BackendKind::Simd, 1)),
         ];
 
         let a = Matrix::randn(256, 250, 1.0, &mut rng);

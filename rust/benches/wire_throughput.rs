@@ -1,0 +1,139 @@
+//! Wire-path throughput (§Raw speed): codec encode/decode rates and
+//! loopback-TCP framing throughput for f32 vs fp16 vs int8 embedding
+//! frames, plus the bare quantize/dequantize kernels.
+//!
+//! CI's `perf-smoke` job runs this in `--release` and uploads
+//! `BENCH_wire.json` (same schema as `BENCH_hotpath.json`) so the wire
+//! trajectory is tracked across PRs. The per-frame byte counts printed
+//! alongside are codec-derived (`embedding_wire_bytes_q`) — the same
+//! single source of truth the broker, profiler, and planner charge.
+
+use pubsub_vfl::bench_harness::{bench, save_json, BenchStats};
+use pubsub_vfl::coordinator::wire::{self, decode, encode, Frame};
+use pubsub_vfl::coordinator::{
+    dequantize_into, quantize_into, EmbeddingMsg, FeedbackQuantizer, QuantEmbeddingMsg,
+    Quantization, QuantizedMatrix,
+};
+use pubsub_vfl::coordinator::{Link, LinkRecv, TcpLink};
+use pubsub_vfl::tensor::Matrix;
+use pubsub_vfl::util::Rng;
+use std::time::Duration;
+
+/// Rows, cols of the benched embedding payload (the planner hot shape).
+const ROWS: usize = 256;
+const COLS: usize = 64;
+/// Frames pushed through the loopback socket per timed iteration.
+const FRAMES_PER_ITER: usize = 8;
+
+fn emb(rng: &mut Rng) -> EmbeddingMsg {
+    EmbeddingMsg {
+        batch_id: 1,
+        party: 0,
+        generation: 0,
+        z: Matrix::randn(ROWS, COLS, 1.0, rng),
+        produced_at_us: wire::now_micros(),
+        param_version: 0,
+    }
+}
+
+/// The frame an embedding push produces under `mode` (quantized through
+/// a fresh feedback quantizer, exactly like the passive send path).
+fn frame_for(msg: &EmbeddingMsg, mode: Quantization) -> Frame {
+    if mode.is_quantized() {
+        let mut fq = FeedbackQuantizer::new(mode);
+        Frame::EmbeddingQ(QuantEmbeddingMsg::from_msg(msg, &mut fq))
+    } else {
+        Frame::Embedding(msg.clone())
+    }
+}
+
+fn main() {
+    let mut results: Vec<BenchStats> = Vec::new();
+    let mut rng = Rng::new(4242);
+    let msg = emb(&mut rng);
+
+    // ---- bare quantize/dequantize kernels -----------------------------
+    for mode in [Quantization::F16, Quantization::Int8] {
+        let mut q = QuantizedMatrix::default();
+        results.push(bench(&format!("quantize_{ROWS}x{COLS}_{mode}"), 10, 400, || {
+            quantize_into(&msg.z, mode, &mut q);
+        }));
+        let mut back = Matrix::default();
+        results.push(bench(&format!("dequantize_{ROWS}x{COLS}_{mode}"), 10, 400, || {
+            dequantize_into(&q, &mut back);
+        }));
+    }
+
+    // ---- codec encode/decode ------------------------------------------
+    for mode in Quantization::ALL {
+        let frame = frame_for(&msg, mode);
+        let frame_bytes = wire::embedding_wire_bytes_q(ROWS, COLS, mode);
+        let s = bench(&format!("encode_emb_{ROWS}x{COLS}_{mode}"), 10, 400, || {
+            let _ = encode(&frame);
+        });
+        let mbps = s.per_second(frame_bytes as f64) / 1e6;
+        println!("  ({mode}: {frame_bytes} B/frame, {mbps:.0} MB/s encode)");
+        results.push(s);
+
+        let bytes = encode(&frame);
+        let s = bench(&format!("decode_emb_{ROWS}x{COLS}_{mode}"), 10, 400, || {
+            let _ = decode(&bytes).expect("bench frame decodes");
+        });
+        results.push(s);
+    }
+
+    // ---- loopback TCP: framed send/recv through a real socket ---------
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || {
+        let link = TcpLink::accept(&listener).expect("accept");
+        // Drain frames; ack each burst so the sender measures the full
+        // round trip (bytes on the wire, not just kernel buffering).
+        let mut in_burst = 0usize;
+        loop {
+            match link.recv(Duration::from_secs(5)) {
+                LinkRecv::Frame(Frame::Shutdown) => break,
+                LinkRecv::Frame(_) => {
+                    in_burst += 1;
+                    if in_burst == FRAMES_PER_ITER {
+                        in_burst = 0;
+                        let _ = link.send(Frame::HelloAck {
+                            parties: 1,
+                            quantization: Quantization::None,
+                        });
+                    }
+                }
+                _ => break,
+            }
+        }
+        link.close();
+    });
+    let link = TcpLink::connect(&addr, Duration::from_secs(5)).expect("connect loopback");
+    for mode in Quantization::ALL {
+        let frame = frame_for(&msg, mode);
+        let burst_bytes = wire::embedding_wire_bytes_q(ROWS, COLS, mode) * FRAMES_PER_ITER as u64;
+        let s = bench(&format!("tcp_loopback_emb_{ROWS}x{COLS}_{mode}"), 3, 60, || {
+            for _ in 0..FRAMES_PER_ITER {
+                link.send(frame.clone()).expect("loopback send");
+            }
+            loop {
+                match link.recv(Duration::from_secs(5)) {
+                    LinkRecv::Frame(Frame::HelloAck { .. }) => break,
+                    LinkRecv::Frame(_) => {}
+                    other => panic!("loopback ack lost: {other:?}"),
+                }
+            }
+        });
+        let mbps = s.per_second(burst_bytes as f64) / 1e6;
+        println!("  ({mode}: {mbps:.0} MB/s over loopback)");
+        results.push(s);
+    }
+    let _ = link.send(Frame::Shutdown);
+    server.join().expect("server thread");
+
+    for r in &results {
+        println!("{}", r.row());
+    }
+    save_json("BENCH_wire.json", &results);
+    println!("(wrote BENCH_wire.json)");
+}

@@ -17,8 +17,10 @@
 //!   `coordinator/{session,transport,durable}` code. (Indexing panics
 //!   are deliberately out of scope: slice indexing is pervasive in the
 //!   kernels and a lint on it would drown the signal.)
-//! - **A001** hot-path allocation: allocation tokens inside `*_into`
-//!   zero-alloc kernels (the contract pinned by `rust/tests/zero_alloc.rs`).
+//! - **A001** hot-path allocation: allocation tokens inside zero-alloc
+//!   kernels — `*_into` functions, the `*_kernel` SIMD bodies, and the
+//!   `quantize_*`/`dequantize_*` wire routines (the contract pinned by
+//!   `rust/tests/zero_alloc.rs`).
 //! - **W001** wire exhaustiveness: every `Frame` variant must appear in
 //!   the codec's test region, in `kind_name()`, and in the decode fuzz
 //!   list (`fuzz_frames`).
@@ -450,11 +452,21 @@ impl Analysis {
 
     // -- A001 ---------------------------------------------------------------
 
+    /// Function names on the zero-alloc contract: the `_into` kernels,
+    /// the SIMD `_kernel` bodies they inline, and the quantize /
+    /// dequantize wire routines.
+    fn is_hot_path_fn(name: &str) -> bool {
+        name.ends_with("_into")
+            || name.ends_with("_kernel")
+            || name.starts_with("quantize_")
+            || name.starts_with("dequantize_")
+    }
+
     fn lint_hot_path_alloc(&self, fi: usize, out: &mut Vec<Finding>) {
         let f = &self.files[fi];
         let toks = &f.lx.toks;
         for span in fn_spans(toks) {
-            if f.test[span.body_open] || !span.name.ends_with("_into") {
+            if f.test[span.body_open] || !Self::is_hot_path_fn(&span.name) {
                 continue;
             }
             for i in span.body_open + 1..span.body_close {

@@ -110,7 +110,7 @@ pub fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     }
     if let Some(b) = args.get("backend") {
         cfg.backend = crate::linalg::BackendKind::parse(b)
-            .ok_or_else(|| anyhow!("unknown linalg backend '{b}' (naive|tiled|threaded)"))?;
+            .ok_or_else(|| anyhow!("unknown linalg backend '{b}' (naive|tiled|threaded|simd)"))?;
     }
     if let Some(n) = args.get("name") {
         cfg.name = n.to_string();
@@ -148,6 +148,10 @@ pub fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     }
     cfg.transport.fault_seed =
         args.get_usize("fault-seed", cfg.transport.fault_seed as usize) as u64;
+    if let Some(q) = args.get("quantization") {
+        cfg.transport.quantization = crate::config::Quantization::parse(q)
+            .ok_or_else(|| anyhow!("unknown quantization '{q}' (none|fp16|int8)"))?;
+    }
     if let Some(dir) = args.get("state-dir") {
         cfg.durability.state_dir = dir.to_string();
     }
@@ -166,13 +170,15 @@ USAGE:
 
 COMMANDS:
   train         run one experiment          [--arch pubsub --dataset bank --engine host|xla
-                                             --backend naive|tiled|threaded
+                                             --backend naive|tiled|threaded|simd
                                              --batch N --epochs N --lr F --mu F --config file.toml
                                              --transport inproc|tcp --connect HOST:PORT
+                                             --quantization none|fp16|int8
                                              --fault-profile lossy_lan|slow_passive|flaky_wire|
                                                partition_heal|corrupt_frames --fault-seed N
                                              --state-dir DIR --resume]
   serve-passive host the passive party      [--listen HOST:PORT --config file.toml --samples N
+                                             --quantization none|fp16|int8
                                              --state-dir DIR --resume]
                 (two-process training: start this first, then `train
                  --connect` from the active party with the same config)
@@ -517,7 +523,25 @@ mod tests {
         let a = Args::parse(&argv("train --backend threaded"));
         let cfg = config_from_args(&a).unwrap();
         assert_eq!(cfg.backend, crate::linalg::BackendKind::Threaded);
+        let s = Args::parse(&argv("train --backend simd"));
+        let cfg = config_from_args(&s).unwrap();
+        assert_eq!(cfg.backend, crate::linalg::BackendKind::Simd);
         let bad = Args::parse(&argv("train --backend gpu"));
+        assert!(config_from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn quantization_flag_parsed() {
+        let a = Args::parse(&argv("train --quantization int8"));
+        let cfg = config_from_args(&a).unwrap();
+        assert_eq!(cfg.transport.quantization, crate::config::Quantization::Int8);
+        let s = Args::parse(&argv("serve-passive --quantization fp16"));
+        let cfg = config_from_args(&s).unwrap();
+        assert_eq!(cfg.transport.quantization, crate::config::Quantization::F16);
+        // No flag: f32 frames.
+        let none = config_from_args(&Args::parse(&argv("train"))).unwrap();
+        assert_eq!(none.transport.quantization, crate::config::Quantization::None);
+        let bad = Args::parse(&argv("train --quantization int4"));
         assert!(config_from_args(&bad).is_err());
     }
 

@@ -10,6 +10,7 @@ use super::toml::{TomlDoc, TomlError};
 use crate::linalg::BackendKind;
 use std::fmt;
 
+pub use crate::coordinator::quant::Quantization;
 pub use crate::coordinator::transport::TransportKind;
 
 /// Which of the five evaluated system architectures drives training.
@@ -194,6 +195,12 @@ pub struct TransportConfig {
     /// experiment seed). Re-running with the same seed replays the same
     /// schedule. TOML `[transport.faults] seed`, CLI `--fault-seed`.
     pub fault_seed: u64,
+    /// Wire quantization for embedding/gradient frames (`none` = f32,
+    /// `fp16`, `int8` with per-row scale/zero-point + error feedback).
+    /// Proposed at the handshake; the session falls back to `none` unless
+    /// both sides are configured identically. TOML `[transport]
+    /// quantization`, CLI `--quantization`.
+    pub quantization: Quantization,
 }
 
 impl Default for TransportConfig {
@@ -205,6 +212,7 @@ impl Default for TransportConfig {
             connect_timeout_s: 30,
             fault_profile: String::new(),
             fault_seed: 0,
+            quantization: Quantization::None,
         }
     }
 }
@@ -452,6 +460,10 @@ impl ExperimentConfig {
             doc.str_or("transport.faults", "profile", &c.transport.fault_profile);
         c.transport.fault_seed =
             doc.i64_or("transport.faults", "seed", c.transport.fault_seed as i64) as u64;
+        let quant = doc.str_or("transport", "quantization", c.transport.quantization.name());
+        c.transport.quantization = Quantization::parse(&quant).ok_or_else(|| {
+            ConfigError::Invalid(format!("unknown quantization '{quant}' (none|fp16|int8)"))
+        })?;
 
         c.durability.state_dir = doc.str_or("durability", "state_dir", &c.durability.state_dir);
         c.durability.resume = doc.bool_or("durability", "resume", c.durability.resume);
@@ -648,6 +660,22 @@ bandwidth_mbps = 500.0
         assert_eq!(c.transport.listen, "0.0.0.0:7878");
         assert_eq!(c.transport.connect_timeout_s, 5);
         assert!(ExperimentConfig::from_toml("[transport]\nkind = \"pigeon\"").is_err());
+    }
+
+    #[test]
+    fn quantization_parses_and_defaults() {
+        let d = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(d.transport.quantization, Quantization::None);
+        for (s, q) in [
+            ("none", Quantization::None),
+            ("fp16", Quantization::F16),
+            ("int8", Quantization::Int8),
+        ] {
+            let toml = format!("[transport]\nquantization = \"{s}\"");
+            let c = ExperimentConfig::from_toml(&toml).unwrap();
+            assert_eq!(c.transport.quantization, q, "{s}");
+        }
+        assert!(ExperimentConfig::from_toml("[transport]\nquantization = \"int4\"").is_err());
     }
 
     #[test]

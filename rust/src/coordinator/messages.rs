@@ -12,6 +12,7 @@
 //! *derived from the encoder* ([`super::wire::embedding_wire_bytes`] /
 //! [`super::wire::gradient_wire_bytes`]), not a framing constant.
 
+use super::quant::{FeedbackQuantizer, QuantizedMatrix};
 use super::wire;
 use crate::tensor::Matrix;
 
@@ -62,6 +63,101 @@ impl GradientMsg {
     }
 }
 
+/// A quantized embedding frame: same identity fields as [`EmbeddingMsg`]
+/// but carrying a [`QuantizedMatrix`] (fp16 or per-row-affine int8)
+/// instead of the raw f32 matrix. Produced on the encode side by a
+/// [`FeedbackQuantizer`] so quantization error is fed back into the next
+/// push rather than biasing SGD.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantEmbeddingMsg {
+    pub batch_id: u64,
+    pub party: usize,
+    pub generation: u64,
+    pub q: QuantizedMatrix,
+    pub produced_at_us: u64,
+    pub param_version: u64,
+}
+
+impl QuantEmbeddingMsg {
+    /// Quantize `msg` through the sender's persistent error-feedback
+    /// state. The residual in `fq` accumulates what this frame failed to
+    /// carry and is added to the next message before encoding.
+    pub fn from_msg(msg: &EmbeddingMsg, fq: &mut FeedbackQuantizer) -> QuantEmbeddingMsg {
+        let mut q = QuantizedMatrix::default();
+        fq.quantize_into(&msg.z, &mut q);
+        QuantEmbeddingMsg {
+            batch_id: msg.batch_id,
+            party: msg.party,
+            generation: msg.generation,
+            q,
+            produced_at_us: msg.produced_at_us,
+            param_version: msg.param_version,
+        }
+    }
+
+    /// Dequantize back to the plain message the session layer consumes.
+    pub fn into_msg(self) -> EmbeddingMsg {
+        EmbeddingMsg {
+            batch_id: self.batch_id,
+            party: self.party,
+            generation: self.generation,
+            z: self.q.dequantize(),
+            produced_at_us: self.produced_at_us,
+            param_version: self.param_version,
+        }
+    }
+
+    /// Exact wire size of this message's frame, derived from the codec
+    /// (see [`EmbeddingMsg::bytes`]).
+    pub fn bytes(&self) -> u64 {
+        wire::embedding_wire_bytes_q(self.q.rows, self.q.cols, self.q.mode)
+    }
+}
+
+/// A quantized cut-layer gradient frame (see [`QuantEmbeddingMsg`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantGradientMsg {
+    pub batch_id: u64,
+    pub party: usize,
+    pub generation: u64,
+    pub q: QuantizedMatrix,
+    pub produced_at_us: u64,
+    pub loss: f64,
+}
+
+impl QuantGradientMsg {
+    /// Quantize `msg` through the sender's persistent error-feedback state.
+    pub fn from_msg(msg: &GradientMsg, fq: &mut FeedbackQuantizer) -> QuantGradientMsg {
+        let mut q = QuantizedMatrix::default();
+        fq.quantize_into(&msg.grad_z, &mut q);
+        QuantGradientMsg {
+            batch_id: msg.batch_id,
+            party: msg.party,
+            generation: msg.generation,
+            q,
+            produced_at_us: msg.produced_at_us,
+            loss: msg.loss,
+        }
+    }
+
+    /// Dequantize back to the plain message the session layer consumes.
+    pub fn into_msg(self) -> GradientMsg {
+        GradientMsg {
+            batch_id: self.batch_id,
+            party: self.party,
+            generation: self.generation,
+            grad_z: self.q.dequantize(),
+            produced_at_us: self.produced_at_us,
+            loss: self.loss,
+        }
+    }
+
+    /// Exact wire size of this message's frame, derived from the codec.
+    pub fn bytes(&self) -> u64 {
+        wire::gradient_wire_bytes_q(self.q.rows, self.q.cols, self.q.mode)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -89,5 +185,60 @@ mod tests {
         assert_eq!(g.bytes(), wire::encode(&wire::Frame::Gradient(g.clone())).len() as u64);
         // Embedding and gradient frames of the same shape cost the same.
         assert_eq!(g.bytes(), m.bytes());
+    }
+
+    #[test]
+    fn quantized_byte_accounting_is_codec_derived() {
+        use super::super::quant::Quantization;
+        let m = EmbeddingMsg {
+            batch_id: 1,
+            party: 0,
+            generation: 0,
+            z: Matrix::from_fn(4, 8, |r, c| (r + c) as f32 - 4.0),
+            produced_at_us: wire::now_micros(),
+            param_version: 0,
+        };
+        let g = GradientMsg {
+            batch_id: 1,
+            party: 0,
+            generation: 0,
+            grad_z: m.z.clone(),
+            produced_at_us: wire::now_micros(),
+            loss: 0.5,
+        };
+        for mode in [Quantization::F16, Quantization::Int8] {
+            let mut fq = FeedbackQuantizer::new(mode);
+            let qm = QuantEmbeddingMsg::from_msg(&m, &mut fq);
+            assert_eq!(
+                qm.bytes(),
+                wire::encode(&wire::Frame::EmbeddingQ(qm.clone())).len() as u64
+            );
+            // Quantized frames are strictly smaller than the f32 original.
+            assert!(qm.bytes() < m.bytes(), "{mode:?}");
+
+            let mut fq = FeedbackQuantizer::new(mode);
+            let qg = QuantGradientMsg::from_msg(&g, &mut fq);
+            assert_eq!(qg.bytes(), wire::encode(&wire::Frame::GradientQ(qg.clone())).len() as u64);
+        }
+    }
+
+    #[test]
+    fn quantized_round_trip_preserves_identity_fields() {
+        use super::super::quant::Quantization;
+        let m = EmbeddingMsg {
+            batch_id: 9,
+            party: 1,
+            generation: 3,
+            z: Matrix::from_fn(2, 3, |r, c| r as f32 - c as f32),
+            produced_at_us: 1234,
+            param_version: 7,
+        };
+        let mut fq = FeedbackQuantizer::new(Quantization::F16);
+        let back = QuantEmbeddingMsg::from_msg(&m, &mut fq).into_msg();
+        assert_eq!(
+            (back.batch_id, back.party, back.generation, back.produced_at_us, back.param_version),
+            (9, 1, 3, 1234, 7)
+        );
+        assert_eq!((back.z.rows, back.z.cols), (2, 3));
     }
 }

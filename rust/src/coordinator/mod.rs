@@ -15,6 +15,7 @@ pub mod durable;
 pub mod ledger;
 pub mod messages;
 pub mod ps;
+pub mod quant;
 pub mod session;
 pub mod transport;
 pub mod wire;
@@ -23,7 +24,10 @@ pub use broker::Broker;
 pub use channel::{Publish, SubResult, Topic};
 pub use durable::{Checkpoint, CheckpointError, DurableHub, LogCaps, TopicLog};
 pub use ledger::{BatchLedger, BatchStage, EmbedJob};
-pub use messages::{EmbeddingMsg, GradientMsg};
+pub use messages::{EmbeddingMsg, GradientMsg, QuantEmbeddingMsg, QuantGradientMsg};
+pub use quant::{
+    dequantize_into, quantize_into, FeedbackQuantizer, Quantization, QuantizedMatrix,
+};
 pub use ps::{ParameterServer, PsMode, SemiAsyncSchedule};
 pub use session::{
     evaluate, evaluate_ws, reached, serve_passive, serve_passive_listener,

@@ -1,0 +1,552 @@
+//! Lossy wire quantization for the data-plane matrices (fp16 / int8)
+//! with error-feedback residual accumulation.
+//!
+//! The two data-plane messages — embeddings (passive → active) and
+//! cut-layer gradients (active → passive) — dominate cross-silo traffic.
+//! This module shrinks them on the wire:
+//!
+//! - **fp16**: each f32 is rounded (to nearest even) to IEEE 754
+//!   binary16 — 2 bytes/value, ~3 decimal digits, covers the embedding
+//!   value range comfortably.
+//! - **int8**: per-row affine quantization — each row stores a
+//!   `(scale, zero)` pair and one byte per value, where
+//!   `value ≈ zero + code × scale`, `scale = (max − min) / 255`.
+//!
+//! Plain rounding biases SGD: the quantization error of one message is
+//! correlated with the values. [`FeedbackQuantizer`] therefore carries
+//! the classic error-feedback residual (1-bit SGD / EF-SGD): the error
+//! of message *t* is added to message *t+1* before quantizing, so the
+//! *running mean* of what the receiver reconstructs converges to the
+//! running mean of what the sender intended.
+//!
+//! The `quantize_*` / `dequantize_*` routines are steady-state
+//! alloc-free (buffers are reused across calls once warmed) and are
+//! covered by vflint's A001 hot-path-alloc lint alongside the `*_into`
+//! kernels; `rust/tests/zero_alloc.rs` proves the round-trip allocates
+//! nothing after warmup.
+
+use crate::tensor::Matrix;
+use std::fmt;
+
+/// Wire quantization mode for embedding/gradient frames, negotiated at
+/// `Hello`/`HelloAck` (see `coordinator::wire`). `None` is full f32.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Quantization {
+    /// Full-precision f32 frames (the v1 wire format).
+    #[default]
+    None,
+    /// IEEE 754 binary16 payloads: 2 bytes/value.
+    F16,
+    /// Per-row affine int8 payloads: 1 byte/value + 8 bytes/row.
+    Int8,
+}
+
+impl Quantization {
+    pub const ALL: [Quantization; 3] = [Quantization::None, Quantization::F16, Quantization::Int8];
+
+    pub fn parse(s: &str) -> Option<Quantization> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "off" | "f32" => Some(Quantization::None),
+            "fp16" | "f16" | "half" => Some(Quantization::F16),
+            "int8" | "i8" | "q8" => Some(Quantization::Int8),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Quantization::None => "none",
+            Quantization::F16 => "fp16",
+            Quantization::Int8 => "int8",
+        }
+    }
+
+    /// Wire byte for the negotiation field and quantized-matrix header.
+    pub(crate) fn as_u8(self) -> u8 {
+        match self {
+            Quantization::None => 0,
+            Quantization::F16 => 1,
+            Quantization::Int8 => 2,
+        }
+    }
+
+    /// Inverse of [`as_u8`]; unknown bytes are `None` (the wire layer
+    /// maps that to a `Corrupt` error rather than guessing).
+    pub(crate) fn from_u8(b: u8) -> Option<Quantization> {
+        match b {
+            0 => Some(Quantization::None),
+            1 => Some(Quantization::F16),
+            2 => Some(Quantization::Int8),
+            _ => None,
+        }
+    }
+
+    /// Payload bytes per matrix value (excluding per-row side data).
+    pub fn bytes_per_value(&self) -> usize {
+        match self {
+            Quantization::None => 4,
+            Quantization::F16 => 2,
+            Quantization::Int8 => 1,
+        }
+    }
+
+    pub fn is_quantized(&self) -> bool {
+        !matches!(self, Quantization::None)
+    }
+}
+
+impl fmt::Display for Quantization {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A matrix in quantized wire form. For [`Quantization::F16`] `bytes`
+/// holds `rows × cols` little-endian binary16 values and `scale`/`zero`
+/// are empty; for [`Quantization::Int8`] `bytes` holds one code per
+/// value and `scale`/`zero` hold one f32 each per row.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct QuantizedMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub mode: Quantization,
+    pub scale: Vec<f32>,
+    pub zero: Vec<f32>,
+    pub bytes: Vec<u8>,
+}
+
+impl QuantizedMatrix {
+    /// Allocating convenience wrapper over [`dequantize_into`].
+    pub fn dequantize(&self) -> Matrix {
+        let mut out = Matrix::default();
+        dequantize_into(self, &mut out);
+        out
+    }
+}
+
+// ---- f32 ↔ binary16 ------------------------------------------------------
+
+/// f32 → IEEE 754 binary16 bits, round-to-nearest-even, with subnormal
+/// and inf/NaN handling (no `half` crate in the vendored set).
+pub(crate) fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp32 = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp32 == 0xff {
+        // Inf / NaN: keep NaN-ness by forcing a mantissa bit.
+        let nan = if man != 0 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | nan;
+    }
+    // Rebase the exponent from f32's bias (127) to f16's (15).
+    let exp = exp32 - 127 + 15;
+    if exp >= 0x1f {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if exp <= 0 {
+        if exp < -10 {
+            return sign; // underflow → ±0
+        }
+        // Subnormal half: shift the (implicit-1) mantissa into place.
+        let full = man | 0x0080_0000;
+        let shift = (14 - exp) as u32;
+        let half = full >> shift;
+        let rem = full & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let rounded =
+            if rem > halfway || (rem == halfway && (half & 1) == 1) { half + 1 } else { half };
+        return sign | rounded as u16;
+    }
+    let half = ((exp as u32) << 10) | (man >> 13);
+    let rem = man & 0x1fff;
+    // Round to nearest even; a mantissa carry into the exponent (or into
+    // 0x7c00 = inf) is exactly the IEEE-correct result.
+    let rounded = if rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1) { half + 1 } else { half };
+    sign | rounded as u16
+}
+
+/// IEEE 754 binary16 bits → f32 (exact: every f16 is representable).
+pub(crate) fn f16_bits_to_f32(h: u16) -> f32 {
+    let neg = h & 0x8000 != 0;
+    let exp = (h >> 10) & 0x1f;
+    let man = (h & 0x3ff) as u32;
+    match exp {
+        0 => {
+            // ±0 and subnormals: value = man × 2⁻²⁴.
+            let v = man as f32 * (1.0 / 16_777_216.0);
+            if neg {
+                -v
+            } else {
+                v
+            }
+        }
+        0x1f => {
+            if man != 0 {
+                f32::NAN
+            } else if neg {
+                f32::NEG_INFINITY
+            } else {
+                f32::INFINITY
+            }
+        }
+        _ => {
+            let bits = (((h as u32) & 0x8000) << 16) | ((exp as u32 + 112) << 23) | (man << 13);
+            f32::from_bits(bits)
+        }
+    }
+}
+
+// ---- quantize / dequantize kernels ---------------------------------------
+// Steady-state alloc-free: `clear()` + `reserve()` + `push/extend` reuse
+// the buffers' retained capacity after the first call at a given shape.
+
+/// Quantize `src` to binary16 wire form into `out` (buffers reused).
+pub fn quantize_f16_into(src: &Matrix, out: &mut QuantizedMatrix) {
+    out.rows = src.rows;
+    out.cols = src.cols;
+    out.mode = Quantization::F16;
+    out.scale.clear();
+    out.zero.clear();
+    out.bytes.clear();
+    out.bytes.reserve(src.data.len() * 2);
+    for &v in &src.data {
+        out.bytes.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+    }
+}
+
+/// Quantize `src` to per-row affine int8 wire form into `out` (buffers
+/// reused). Constant rows (max == min) get `scale = 0` so they
+/// reconstruct exactly; non-finite rows degrade to `zero = 0`.
+pub fn quantize_i8_into(src: &Matrix, out: &mut QuantizedMatrix) {
+    out.rows = src.rows;
+    out.cols = src.cols;
+    out.mode = Quantization::Int8;
+    out.scale.clear();
+    out.zero.clear();
+    out.bytes.clear();
+    out.scale.reserve(src.rows);
+    out.zero.reserve(src.rows);
+    out.bytes.reserve(src.data.len());
+    for r in 0..src.rows {
+        let row = src.row(r);
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in row {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let range = hi - lo;
+        let (scale, zero) = if range.is_finite() && range > 0.0 {
+            (range / 255.0, lo)
+        } else if lo.is_finite() {
+            (0.0, lo)
+        } else {
+            (0.0, 0.0)
+        };
+        out.scale.push(scale);
+        out.zero.push(zero);
+        if scale > 0.0 {
+            let inv = 255.0 / range;
+            for &v in row {
+                // `as u8` saturates (and sends NaN to 0), so a stray
+                // out-of-range value can never wrap or panic.
+                out.bytes.push(((v - zero) * inv + 0.5) as u8);
+            }
+        } else {
+            for _ in row {
+                out.bytes.push(0);
+            }
+        }
+    }
+}
+
+/// Quantize `src` under `mode` into `out`. `None` is handled as fp16 so
+/// the call is total, but callers gate on
+/// [`Quantization::is_quantized`] and never pass `None` on live paths.
+pub fn quantize_into(src: &Matrix, mode: Quantization, out: &mut QuantizedMatrix) {
+    match mode {
+        Quantization::Int8 => quantize_i8_into(src, out),
+        _ => quantize_f16_into(src, out),
+    }
+}
+
+/// Reconstruct f32 values from quantized wire form (buffer reused).
+///
+/// Robust against wire-shaped input: iteration is bounded by the
+/// shortest of the declared shape and the actual payload/side-data
+/// lengths, so a hostile `QuantizedMatrix` can never index out of
+/// bounds (the wire decoder additionally validates exact lengths).
+pub fn dequantize_into(q: &QuantizedMatrix, out: &mut Matrix) {
+    out.resize_for_overwrite(q.rows, q.cols);
+    if q.rows == 0 || q.cols == 0 {
+        return;
+    }
+    match q.mode {
+        Quantization::Int8 => {
+            for ((orow, codes), (&scale, &zero)) in out
+                .data
+                .chunks_mut(q.cols)
+                .zip(q.bytes.chunks(q.cols))
+                .zip(q.scale.iter().zip(q.zero.iter()))
+            {
+                for (o, &c) in orow.iter_mut().zip(codes.iter()) {
+                    *o = zero + c as f32 * scale;
+                }
+            }
+        }
+        _ => {
+            for (o, ch) in out.data.iter_mut().zip(q.bytes.chunks_exact(2)) {
+                *o = f16_bits_to_f32(u16::from_le_bytes([ch[0], ch[1]]));
+            }
+        }
+    }
+}
+
+// ---- error feedback -------------------------------------------------------
+
+/// Quantizer with error-feedback residual accumulation (EF-SGD style).
+///
+/// Each call quantizes `v + residual` and then updates
+/// `residual = (v + residual) − dequantize(quantized)`, so quantization
+/// error is carried forward instead of lost: over repeated messages the
+/// mean reconstruction error is driven toward zero and SGD sees an
+/// unbiased gradient/embedding stream.
+///
+/// One instance per (party, direction) stream — residuals are
+/// shape-tracked and reset whenever the message shape changes (e.g. the
+/// epoch's tail batch).
+#[derive(Debug, Default)]
+pub struct FeedbackQuantizer {
+    mode: Quantization,
+    residual: Matrix,
+    biased: Matrix,
+    deq: Matrix,
+}
+
+impl FeedbackQuantizer {
+    pub fn new(mode: Quantization) -> FeedbackQuantizer {
+        FeedbackQuantizer { mode, ..FeedbackQuantizer::default() }
+    }
+
+    pub fn mode(&self) -> Quantization {
+        self.mode
+    }
+
+    /// Quantize `v` (plus the carried residual) into `out` and fold the
+    /// new quantization error back into the residual.
+    pub fn quantize_into(&mut self, v: &Matrix, out: &mut QuantizedMatrix) {
+        if self.residual.rows != v.rows || self.residual.cols != v.cols {
+            // Shape change (tail batch / new epoch plan): the old
+            // residual no longer lines up element-wise — drop it.
+            self.residual.resize(v.rows, v.cols);
+        }
+        self.biased.resize_for_overwrite(v.rows, v.cols);
+        for ((b, &x), &r) in
+            self.biased.data.iter_mut().zip(v.data.iter()).zip(self.residual.data.iter())
+        {
+            *b = x + r;
+        }
+        quantize_into(&self.biased, self.mode, out);
+        dequantize_into(out, &mut self.deq);
+        for ((r, &b), &d) in
+            self.residual.data.iter_mut().zip(self.biased.data.iter()).zip(self.deq.data.iter())
+        {
+            *r = b - d;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn parse_and_names_round_trip() {
+        for q in Quantization::ALL {
+            assert_eq!(Quantization::parse(q.name()), Some(q));
+            assert_eq!(Quantization::from_u8(q.as_u8()), Some(q));
+        }
+        assert_eq!(Quantization::parse("half"), Some(Quantization::F16));
+        assert_eq!(Quantization::parse("i8"), Some(Quantization::Int8));
+        assert_eq!(Quantization::parse("off"), Some(Quantization::None));
+        assert_eq!(Quantization::parse("int4"), None);
+        assert_eq!(Quantization::from_u8(7), None);
+        assert!(!Quantization::None.is_quantized());
+        assert!(Quantization::Int8.is_quantized());
+    }
+
+    #[test]
+    fn f16_conversion_handles_specials_and_rounding() {
+        // Exactly representable values survive the round trip.
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 65504.0, -65504.0, 0.099975586] {
+            let back = f16_bits_to_f32(f32_to_f16_bits(v));
+            assert_eq!(back, v, "{v} not preserved");
+        }
+        // Signed zero keeps its sign bit.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-0.0)).to_bits(), (-0.0f32).to_bits());
+        // Specials.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // Overflow saturates to inf, underflow flushes to zero.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e6)), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-1e6)), f32::NEG_INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e-9)), 0.0);
+        // Subnormal halves round-trip (2⁻²⁴ is the smallest positive).
+        let tiny = 1.0 / 16_777_216.0;
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(tiny)), tiny);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-tiny)), -tiny);
+        // Round-to-nearest-even: 1 + 2⁻¹¹ is exactly halfway between
+        // 1.0 and the next half up; even mantissa (1.0) wins.
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1.0 + 2f32.powi(-11))), 1.0);
+        // Relative error within the binary16 step for normal values.
+        let mut rng = Rng::new(7);
+        for _ in 0..2000 {
+            let v = (rng.uniform() as f32 - 0.5) * 100.0;
+            let back = f16_bits_to_f32(f32_to_f16_bits(v));
+            assert!((back - v).abs() <= v.abs() * 1e-3 + 1e-7, "{v} -> {back}");
+        }
+    }
+
+    #[test]
+    fn f16_matrix_round_trip_accuracy() {
+        let mut rng = Rng::new(11);
+        let m = Matrix::randn(33, 17, 1.0, &mut rng);
+        let mut q = QuantizedMatrix::default();
+        quantize_f16_into(&m, &mut q);
+        assert_eq!(q.bytes.len(), 33 * 17 * 2);
+        assert!(q.scale.is_empty() && q.zero.is_empty());
+        let back = q.dequantize();
+        assert_eq!(back.shape(), m.shape());
+        for (a, b) in back.data.iter().zip(m.data.iter()) {
+            assert!((a - b).abs() <= b.abs() * 1e-3 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn i8_matrix_round_trip_within_one_step() {
+        let mut rng = Rng::new(13);
+        let m = Matrix::randn(19, 23, 2.0, &mut rng);
+        let mut q = QuantizedMatrix::default();
+        quantize_i8_into(&m, &mut q);
+        assert_eq!(q.bytes.len(), 19 * 23);
+        assert_eq!(q.scale.len(), 19);
+        assert_eq!(q.zero.len(), 19);
+        let back = q.dequantize();
+        for r in 0..m.rows {
+            let step = q.scale[r];
+            for c in 0..m.cols {
+                let err = (back.at(r, c) - m.at(r, c)).abs();
+                assert!(err <= step * 0.5 + 1e-6, "({r},{c}): err {err} > step/2 {step}");
+            }
+        }
+    }
+
+    #[test]
+    fn i8_constant_and_degenerate_rows_are_exact() {
+        // A constant row has zero range: scale 0, reconstructs exactly.
+        let m = Matrix::from_fn(3, 4, |r, _| r as f32 - 1.0);
+        let mut q = QuantizedMatrix::default();
+        quantize_i8_into(&m, &mut q);
+        assert_eq!(q.dequantize(), m);
+        // Row extremes are preserved exactly when the scale is exact
+        // (range 255 → scale 1): min → code 0, max → code 255.
+        let m = Matrix::from_fn(1, 3, |_, c| [0.0f32, 100.25, 255.0][c]);
+        quantize_i8_into(&m, &mut q);
+        let back = q.dequantize();
+        assert_eq!(back.at(0, 0), 0.0);
+        assert_eq!(back.at(0, 1), 100.0, "mid value rounds to the nearest code");
+        assert_eq!(back.at(0, 2), 255.0);
+        // Empty shapes survive.
+        let m = Matrix::zeros(0, 8);
+        quantize_i8_into(&m, &mut q);
+        assert_eq!(q.dequantize().shape(), (0, 8));
+        let m = Matrix::zeros(4, 0);
+        quantize_f16_into(&m, &mut q);
+        assert_eq!(q.dequantize().shape(), (4, 0));
+    }
+
+    #[test]
+    fn dequantize_is_total_on_malformed_input() {
+        // Declared shape larger than the payload: bounded by zips, the
+        // untouched tail stays zero (resize_for_overwrite zero-fills
+        // fresh capacity) — no panic, no OOB.
+        let q = QuantizedMatrix {
+            rows: 4,
+            cols: 4,
+            mode: Quantization::Int8,
+            scale: vec![1.0], // only one row of side data
+            zero: vec![0.0],
+            bytes: vec![7; 5], // far fewer codes than 16
+        };
+        let mut out = Matrix::default();
+        dequantize_into(&q, &mut out);
+        assert_eq!(out.shape(), (4, 4));
+        assert_eq!(out.at(0, 0), 7.0);
+    }
+
+    /// The error-feedback acceptance: residual accumulation drives the
+    /// mean reconstruction toward the true value over repeated pushes of
+    /// the same message — the property that keeps quantized SGD unbiased.
+    #[test]
+    fn error_feedback_drives_mean_error_to_zero() {
+        let mut rng = Rng::new(99);
+        let v = Matrix::randn(8, 16, 1.0, &mut rng);
+        for mode in [Quantization::F16, Quantization::Int8] {
+            let mut fq = FeedbackQuantizer::new(mode);
+            let mut q = QuantizedMatrix::default();
+            let mut sum = Matrix::zeros(8, 16);
+            let rounds = 64;
+            let mut first_err = 0.0f64;
+            for t in 0..rounds {
+                fq.quantize_into(&v, &mut q);
+                let d = q.dequantize();
+                if t == 0 {
+                    first_err = d
+                        .data
+                        .iter()
+                        .zip(v.data.iter())
+                        .map(|(a, b)| (a - b).abs() as f64)
+                        .sum::<f64>()
+                        / v.data.len() as f64;
+                }
+                for (s, &x) in sum.data.iter_mut().zip(d.data.iter()) {
+                    *s += x;
+                }
+            }
+            let mean_err = sum
+                .data
+                .iter()
+                .zip(v.data.iter())
+                .map(|(s, &x)| (s / rounds as f32 - x).abs() as f64)
+                .sum::<f64>()
+                / v.data.len() as f64;
+            // The running mean must beat a single lossy push by a wide
+            // margin (the residual telescopes: |mean err| ≤ step/rounds).
+            assert!(
+                mean_err < first_err / 8.0 + 1e-7,
+                "{mode}: mean err {mean_err} vs single-shot {first_err}"
+            );
+        }
+    }
+
+    #[test]
+    fn feedback_residual_resets_on_shape_change() {
+        let mut rng = Rng::new(5);
+        let mut fq = FeedbackQuantizer::new(Quantization::Int8);
+        let mut q = QuantizedMatrix::default();
+        fq.quantize_into(&Matrix::randn(8, 4, 1.0, &mut rng), &mut q);
+        // Tail batch: smaller rows — must not reuse stale residuals.
+        let small = Matrix::randn(3, 4, 1.0, &mut rng);
+        fq.quantize_into(&small, &mut q);
+        assert_eq!(q.rows, 3);
+        let back = q.dequantize();
+        for r in 0..3 {
+            let step = q.scale[r].max(1e-6);
+            for c in 0..4 {
+                assert!((back.at(r, c) - small.at(r, c)).abs() <= step * 0.5 + 1e-6);
+            }
+        }
+    }
+}

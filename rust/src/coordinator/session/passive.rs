@@ -19,8 +19,9 @@
 
 use super::super::channel::{Publish, SubResult, Topic};
 use super::super::ledger::EmbedJob;
-use super::super::messages::{EmbeddingMsg, GradientMsg};
+use super::super::messages::{EmbeddingMsg, GradientMsg, QuantEmbeddingMsg};
 use super::super::ps::{ParameterServer, PsMode};
+use super::super::quant::{FeedbackQuantizer, Quantization};
 use super::super::transport::{Link, LinkRecv, TcpLink};
 use super::super::wire::{self, Frame};
 use super::mean_params;
@@ -304,6 +305,9 @@ struct ServeShared<'a> {
     backend_kind: BackendKind,
     total_workers: usize,
     poll: Duration,
+    /// Wire quantization negotiated at the handshake (`None` = f32
+    /// frames). Fixed for the lifetime of the session.
+    quant: Quantization,
 }
 
 /// The remote passive-worker loop: same per-batch compute as the in-proc
@@ -316,6 +320,10 @@ fn run_remote_passive_worker(
     replica: &RankedMutex<PassiveReplica>,
 ) {
     let mut comp = PassiveCompute::new(sh.backend_kind, sh.total_workers);
+    // Per-worker error-feedback state: whatever a quantized embedding
+    // frame failed to carry is folded into this worker's next one, so
+    // quantization noise stays unbiased over the session.
+    let mut fq = FeedbackQuantizer::new(sh.quant);
     loop {
         // Priority 1: backward work from the gradient inbox.
         let waited = Instant::now();
@@ -397,7 +405,14 @@ fn run_remote_passive_worker(
                 sh.metrics,
             );
             sh.metrics.inc("emb_published", 1);
-            match sh.link.send(Frame::Embedding(msg)) {
+            // Negotiated quantization applies at the codec boundary: the
+            // compute path above is identical either way.
+            let frame = if sh.quant.is_quantized() {
+                Frame::EmbeddingQ(QuantEmbeddingMsg::from_msg(&msg, &mut fq))
+            } else {
+                Frame::Embedding(msg)
+            };
+            match sh.link.send(frame) {
                 Ok(bytes) => sh.metrics.add_comm(bytes),
                 Err(_) => break,
             }
@@ -481,9 +496,15 @@ pub fn serve_passive_session(
 
     // ---- handshake -------------------------------------------------------
     let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
-    loop {
+    let negotiated_quant = loop {
         match link.recv(Duration::from_millis(100)) {
-            LinkRecv::Frame(Frame::Hello { parties, session_id, resume_token, attempt }) => {
+            LinkRecv::Frame(Frame::Hello {
+                parties,
+                session_id,
+                resume_token,
+                attempt,
+                quantization,
+            }) => {
                 if parties as usize != k {
                     bail!("active party expects {parties} passive parties, this server holds {k}");
                 }
@@ -518,7 +539,15 @@ pub fn serve_passive_session(
                 if attempt > 0 {
                     metrics.inc("rejoin_handshakes", 1);
                 }
-                break;
+                // Accept the proposed wire quantization only when this
+                // server is configured for the same mode; anything else
+                // (including a v1 Hello with no proposal) falls back to
+                // plain f32 frames — never a session failure.
+                if quantization == cfg.transport.quantization {
+                    break quantization;
+                }
+                metrics.inc("quantization_fell_back", 1);
+                break Quantization::None;
             }
             LinkRecv::Frame(other) => bail!("handshake: expected Hello, got {other:?}"),
             LinkRecv::Closed => bail!("peer closed the link during handshake"),
@@ -528,8 +557,8 @@ pub fn serve_passive_session(
                 }
             }
         }
-    }
-    link.send(Frame::HelloAck { parties: k as u32 })
+    };
+    link.send(Frame::HelloAck { parties: k as u32, quantization: negotiated_quant })
         .map_err(|e| anyhow!("handshake ack failed: {e}"))?;
 
     let mut epochs_served = 0usize;
@@ -556,6 +585,7 @@ pub fn serve_passive_session(
         backend_kind,
         total_workers,
         poll: Duration::from_millis(2),
+        quant: negotiated_quant,
     };
 
     std::thread::scope(|s| {
@@ -569,6 +599,62 @@ pub fn serve_passive_session(
         }
 
         // ---- frame dispatcher (this thread) ---------------------------
+        // Shared by the f32 and quantized gradient arms: `wire_bytes` is
+        // the frame's true size on the wire (a quantized frame's byte
+        // accounting must reflect what was actually received, not the
+        // dequantized f32 equivalent).
+        let handle_gradient = |g: GradientMsg, wire_bytes: u64| {
+            if g.party >= k {
+                metrics.inc("wire_bad_party", 1);
+                return;
+            }
+            metrics.add_comm(wire_bytes);
+            metrics.inc("grad_received", 1);
+            // Decode-boundary generation gate: frames from a superseded
+            // attempt (or finished work) are rejected before they reach a
+            // worker. A gradient for work this party *already applied*
+            // instead retransmits the ack — the duplicate means the
+            // active re-drove the batch because the original `BwdDone`
+            // never arrived.
+            let state = {
+                let tb = table.lock();
+                tb.get(&g.batch_id).map(|e| (g.generation == e.gen, e.done[g.party]))
+            };
+            match state {
+                Some((_, true)) => {
+                    metrics.inc("bwd_ack_resent", 1);
+                    let _ = link.send(Frame::BwdDone {
+                        batch_id: g.batch_id,
+                        party: g.party as u32,
+                        ps_version: ps[g.party].version(),
+                    });
+                    return;
+                }
+                Some((true, false)) => {}
+                _ => {
+                    metrics.inc("wire_stale_rejected", 1);
+                    return;
+                }
+            }
+            let party = g.party;
+            let id = g.batch_id;
+            match inbox[party].publish_versioned(id, g, |m| m.generation) {
+                Publish::Evicted(old_id, old) => {
+                    // Buffer mechanism across the wire: a dropped gradient
+                    // strands its batch — request a full reassignment from
+                    // the active ledger.
+                    metrics.inc("grad_dropped", 1);
+                    let _ = link.send(Frame::Requeue {
+                        batch_id: old_id,
+                        generation: old.generation,
+                    });
+                }
+                Publish::Stale(_) => {
+                    metrics.inc("grad_rejected_stale", 1);
+                }
+                Publish::Stored => {}
+            }
+        };
         loop {
             match link.recv(Duration::from_millis(100)) {
                 LinkRecv::Frame(frame) => match frame {
@@ -652,58 +738,14 @@ pub fn serve_passive_session(
                         }
                     }
                     Frame::Gradient(g) => {
-                        if g.party >= k {
-                            metrics.inc("wire_bad_party", 1);
-                            continue;
-                        }
-                        metrics.add_comm(g.bytes());
-                        metrics.inc("grad_received", 1);
-                        // Decode-boundary generation gate: frames from a
-                        // superseded attempt (or finished work) are
-                        // rejected before they reach a worker. A gradient
-                        // for work this party *already applied* instead
-                        // retransmits the ack — the duplicate means the
-                        // active re-drove the batch because the original
-                        // `BwdDone` never arrived.
-                        let state = {
-                            let tb = table.lock();
-                            tb.get(&g.batch_id).map(|e| (g.generation == e.gen, e.done[g.party]))
-                        };
-                        match state {
-                            Some((_, true)) => {
-                                metrics.inc("bwd_ack_resent", 1);
-                                let _ = link.send(Frame::BwdDone {
-                                    batch_id: g.batch_id,
-                                    party: g.party as u32,
-                                    ps_version: ps[g.party].version(),
-                                });
-                                continue;
-                            }
-                            Some((true, false)) => {}
-                            _ => {
-                                metrics.inc("wire_stale_rejected", 1);
-                                continue;
-                            }
-                        }
-                        let party = g.party;
-                        let id = g.batch_id;
-                        match inbox[party].publish_versioned(id, g, |m| m.generation) {
-                            Publish::Evicted(old_id, old) => {
-                                // Buffer mechanism across the wire: a
-                                // dropped gradient strands its batch —
-                                // request a full reassignment from the
-                                // active ledger.
-                                metrics.inc("grad_dropped", 1);
-                                let _ = link.send(Frame::Requeue {
-                                    batch_id: old_id,
-                                    generation: old.generation,
-                                });
-                            }
-                            Publish::Stale(_) => {
-                                metrics.inc("grad_rejected_stale", 1);
-                            }
-                            Publish::Stored => {}
-                        }
+                        let bytes = g.bytes();
+                        handle_gradient(g, bytes);
+                    }
+                    Frame::GradientQ(qg) => {
+                        // Dequantize at the codec boundary; downstream the
+                        // inbox/compute path only ever sees f32 messages.
+                        let bytes = qg.bytes();
+                        handle_gradient(qg.into_msg(), bytes);
                     }
                     Frame::Barrier { epoch, broadcast } => {
                         // The active only sends this once the epoch

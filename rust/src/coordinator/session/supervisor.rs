@@ -26,7 +26,9 @@ use super::super::broker::Broker;
 use super::super::channel::SubResult;
 use super::super::durable::{Checkpoint, DurableHub};
 use super::super::ledger::BatchLedger;
+use super::super::messages::QuantGradientMsg;
 use super::super::ps::{ParameterServer, PsMode, SemiAsyncSchedule};
+use super::super::quant::{FeedbackQuantizer, Quantization};
 use super::super::transport::{
     FaultStatsSnapshot, Link, LinkRecv, LinkStatsSnapshot, SwappableLink, TcpLink, TransportKind,
 };
@@ -45,7 +47,7 @@ use crate::util::ordered::{Rank, RankedCondvar, RankedMutex};
 use crate::util::{Rng, Stopwatch};
 use anyhow::{anyhow, bail, Result};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -713,6 +715,10 @@ pub fn train_pubsub_over_link_with(
     let params_cv = RankedCondvar::new();
     let shutdown = AtomicBool::new(false);
     let link_down = AtomicBool::new(false);
+    // Wire quantization agreed at the handshake: the passive party acks
+    // the proposed mode only if it is configured identically, otherwise
+    // both sides fall back to f32 frames. A rejoin re-negotiates.
+    let negotiated_quant = AtomicU8::new(Quantization::None.as_u8());
     let expected_flat: Vec<usize> = spec.passive_bottoms.iter().map(|s| s.param_count()).collect();
 
     let mut loss_curve = Vec::new();
@@ -788,16 +794,29 @@ pub fn train_pubsub_over_link_with(
 
     // ---- handshake -------------------------------------------------------
     let handshake = |l: &dyn Link, attempt: u32| -> Result<()> {
-        l.send(Frame::Hello { parties: k as u32, session_id, resume_token, attempt })
-            .map_err(|e| anyhow!("handshake send failed: {e}"))?;
+        l.send(Frame::Hello {
+            parties: k as u32,
+            session_id,
+            resume_token,
+            attempt,
+            quantization: cfg.transport.quantization,
+        })
+        .map_err(|e| anyhow!("handshake send failed: {e}"))?;
         let timeout_s = cfg.transport.connect_timeout_s.max(1);
         let deadline = Instant::now() + Duration::from_secs(timeout_s);
         loop {
             match l.recv(Duration::from_millis(100)) {
-                LinkRecv::Frame(Frame::HelloAck { parties }) => {
+                LinkRecv::Frame(Frame::HelloAck { parties, quantization }) => {
                     if parties as usize != k {
                         bail!("passive party serves {parties} parties, this run expects {k}");
                     }
+                    if quantization != cfg.transport.quantization {
+                        metrics.inc("quantization_fell_back", 1);
+                    }
+                    // Relaxed: set once per (re)handshake before any pump
+                    // reads it for the new incarnation; pumps tolerate a
+                    // stale mode for a frame (both kinds always decode).
+                    negotiated_quant.store(quantization.as_u8(), Ordering::Relaxed);
                     return Ok(());
                 }
                 LinkRecv::Frame(other) => bail!("handshake: expected HelloAck, got {other:?}"),
@@ -859,8 +878,17 @@ pub fn train_pubsub_over_link_with(
             // retired link, not the live one — the swap counter tells the
             // two apart.
             let seen_swaps = link.swaps();
+            // Quantized embeddings dequantize right here at the codec
+            // boundary; past this point the message plane only ever sees
+            // f32 messages.
+            let dequant = |f: Frame| -> Frame {
+                match f {
+                    Frame::EmbeddingQ(qm) => Frame::Embedding(qm.into_msg()),
+                    other => other,
+                }
+            };
             match link.recv(Duration::from_millis(50)) {
-                LinkRecv::Frame(frame) => match frame {
+                LinkRecv::Frame(frame) => match dequant(frame) {
                     Frame::Embedding(msg) => {
                         if msg.party >= k {
                             metrics.inc("wire_bad_party", 1);
@@ -1022,32 +1050,51 @@ pub fn train_pubsub_over_link_with(
             let link_down = &link_down;
             let hub = &hub;
             let metrics = &metrics;
-            s.spawn(move || loop {
-                match broker.take_gradient(party, Duration::from_millis(50)) {
-                    SubResult::Ok((_id, g)) => {
-                        let frame = Frame::Gradient(g);
-                        if let Some(h) = hub.as_ref() {
-                            if h.log_grad(party, &frame).is_err() {
-                                metrics.inc("durable_log_errors", 1);
+            let negotiated_quant = &negotiated_quant;
+            s.spawn(move || {
+                // Per-party error-feedback state: the residual each
+                // quantized gradient frame failed to carry is folded into
+                // the next one, so quantization noise stays unbiased.
+                let mut fq = FeedbackQuantizer::new(Quantization::None);
+                loop {
+                    match broker.take_gradient(party, Duration::from_millis(50)) {
+                        SubResult::Ok((_id, g)) => {
+                            // Relaxed: mode is set once per handshake; a
+                            // frame sent under a stale mode still decodes.
+                            let mode =
+                                Quantization::from_u8(negotiated_quant.load(Ordering::Relaxed))
+                                    .unwrap_or(Quantization::None);
+                            if fq.mode() != mode {
+                                fq = FeedbackQuantizer::new(mode);
+                            }
+                            let frame = if mode.is_quantized() {
+                                Frame::GradientQ(QuantGradientMsg::from_msg(&g, &mut fq))
+                            } else {
+                                Frame::Gradient(g)
+                            };
+                            if let Some(h) = hub.as_ref() {
+                                if h.log_grad(party, &frame).is_err() {
+                                    metrics.inc("durable_log_errors", 1);
+                                }
+                            }
+                            let seen_swaps = link.swaps();
+                            if link.send(frame).is_err() {
+                                // Relaxed: advisory link-health flag, polled.
+                                if link.swaps() == seen_swaps {
+                                    link_down.store(true, Ordering::Relaxed);
+                                }
+                                if !durable_rejoin {
+                                    break;
+                                }
+                                // Dropped with the dead link: the epoch
+                                // re-run regenerates the gradient under a
+                                // fresh generation.
+                                std::thread::sleep(Duration::from_millis(5));
                             }
                         }
-                        let seen_swaps = link.swaps();
-                        if link.send(frame).is_err() {
-                            // Relaxed: advisory link-health flag, polled.
-                            if link.swaps() == seen_swaps {
-                                link_down.store(true, Ordering::Relaxed);
-                            }
-                            if !durable_rejoin {
-                                break;
-                            }
-                            // Dropped with the dead link: the epoch re-run
-                            // regenerates the gradient under a fresh
-                            // generation.
-                            std::thread::sleep(Duration::from_millis(5));
-                        }
+                        SubResult::Closed => break,
+                        SubResult::TimedOut => {}
                     }
-                    SubResult::Closed => break,
-                    SubResult::TimedOut => {}
                 }
             });
         }

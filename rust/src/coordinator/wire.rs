@@ -20,8 +20,19 @@
 //! corrupt length, a wrong magic/version, an unknown frame type, trailing
 //! bytes — maps to a [`WireError`]. The transport layer treats a decode
 //! error as a poisoned link.
+//!
+//! **Version history.** v1: the original frame set. v2: quantized
+//! data-plane frames ([`Frame::EmbeddingQ`] / [`Frame::GradientQ`],
+//! fp16 or per-row-affine int8 payloads; see `coordinator::quant`) and a
+//! quantization-negotiation byte appended to `Hello` / `HelloAck`. The
+//! byte is *optional on decode*: a v1 peer's shorter handshake payload
+//! decodes with [`Quantization::None`], which is exactly the negotiation
+//! fallback — a quantization-unaware peer silently gets f32 frames. All
+//! v1 frames remain a byte-level subset of v2, so v1 streams (including
+//! durable topic logs written before the bump) still decode.
 
-use super::messages::{EmbeddingMsg, GradientMsg};
+use super::messages::{EmbeddingMsg, GradientMsg, QuantEmbeddingMsg, QuantGradientMsg};
+use super::quant::{Quantization, QuantizedMatrix};
 use crate::tensor::Matrix;
 use std::fmt;
 use std::io::{Read, Write};
@@ -29,8 +40,12 @@ use std::time::{SystemTime, UNIX_EPOCH};
 
 /// `b"VF"` little-endian: rejects non-protocol peers at the first frame.
 pub const WIRE_MAGIC: u16 = 0x4656;
-/// Protocol version; bumped on any layout change.
-pub const WIRE_VERSION: u16 = 1;
+/// Protocol version; bumped on any layout change. v2 added the
+/// quantized data-plane frames and the handshake negotiation byte.
+pub const WIRE_VERSION: u16 = 2;
+/// Oldest version this decoder still accepts (v1 frames are a strict
+/// byte-level subset of v2).
+pub const WIRE_VERSION_MIN: u16 = 1;
 /// Fixed frame header: magic u16, version u16, type u8, flags u8, len u32.
 pub const HEADER_BYTES: usize = 10;
 /// Upper bound on one frame's payload — anything larger is a corrupt
@@ -106,6 +121,8 @@ const T_PASSIVE_PARAMS: u8 = 12;
 const T_SHUTDOWN: u8 = 13;
 const T_RESUME: u8 = 14;
 const T_RESTORE_PARAMS: u8 = 15;
+const T_EMBEDDING_Q: u8 = 16;
+const T_GRADIENT_Q: u8 = 17;
 
 /// Everything that crosses the party boundary: the two data-plane
 /// messages plus the control plane of the distributed session (handshake,
@@ -118,10 +135,20 @@ pub enum Frame {
     /// name the training session across process restarts; `attempt` is 0
     /// on the first connection and increments on every rejoin, so a
     /// restarted `serve-passive` can tell a fresh session from a resumed
-    /// one and validate the token against its state dir.
-    Hello { parties: u32, session_id: u64, resume_token: u64, attempt: u32 },
-    /// Passive → active handshake reply: number of parties served.
-    HelloAck { parties: u32 },
+    /// one and validate the token against its state dir. `quantization`
+    /// is the active side's proposed data-plane wire quantization (v2;
+    /// decodes as `None` from a v1 peer's shorter payload).
+    Hello {
+        parties: u32,
+        session_id: u64,
+        resume_token: u64,
+        attempt: u32,
+        quantization: Quantization,
+    },
+    /// Passive → active handshake reply: number of parties served, plus
+    /// the accepted quantization mode (the proposal if the passive's own
+    /// config agrees, else `None`; v1 peers omit the byte ⇒ `None`).
+    HelloAck { parties: u32, quantization: Quantization },
     /// Active → passive: the epoch's batch plan — `(batch_id, rows)` per
     /// batch, rows being PSI-aligned sample indices shared by both sides.
     EpochInstall { epoch: u64, batches: Vec<(u64, Vec<u32>)> },
@@ -132,6 +159,12 @@ pub enum Frame {
     Embedding(EmbeddingMsg),
     /// Active → passive data plane.
     Gradient(GradientMsg),
+    /// Passive → active data plane, quantized (v2): fp16 or per-row
+    /// affine int8 payload with error-feedback applied on the encode
+    /// side; sent only after both handshake ends agreed on a mode.
+    EmbeddingQ(QuantEmbeddingMsg),
+    /// Active → passive data plane, quantized (v2).
+    GradientQ(QuantGradientMsg),
     /// Passive → active: the backward pass for `(batch_id, party)` has
     /// been applied to a remote replica (`ps_version` = the passive PS
     /// version at ack time, for receiver-clock staleness).
@@ -175,6 +208,8 @@ impl Frame {
             Frame::EmbedJob { .. } => "embed_job",
             Frame::Embedding(_) => "embedding",
             Frame::Gradient(_) => "gradient",
+            Frame::EmbeddingQ(_) => "embedding_q",
+            Frame::GradientQ(_) => "gradient_q",
             Frame::BwdDone { .. } => "bwd_done",
             Frame::Requeue { .. } => "requeue",
             Frame::Barrier { .. } => "barrier",
@@ -195,6 +230,8 @@ impl Frame {
             Frame::EmbedJob { .. } => T_EMBED_JOB,
             Frame::Embedding(_) => T_EMBEDDING,
             Frame::Gradient(_) => T_GRADIENT,
+            Frame::EmbeddingQ(_) => T_EMBEDDING_Q,
+            Frame::GradientQ(_) => T_GRADIENT_Q,
             Frame::BwdDone { .. } => T_BWD_DONE,
             Frame::Requeue { .. } => T_REQUEUE,
             Frame::Barrier { .. } => T_BARRIER,
@@ -239,6 +276,22 @@ fn put_matrix(b: &mut Vec<u8>, m: &Matrix) {
     for &v in &m.data {
         put_f32(b, v);
     }
+}
+
+/// Quantized matrix layout: mode u8, rows u32, cols u32, then (Int8
+/// only) `rows` scales + `rows` zero-points as f32 blocks, then the
+/// packed codes (2 bytes/value fp16, 1 byte/value int8).
+fn put_qmatrix(b: &mut Vec<u8>, q: &QuantizedMatrix) {
+    b.push(q.mode.as_u8());
+    put_u32(b, q.rows as u32);
+    put_u32(b, q.cols as u32);
+    for &s in &q.scale {
+        put_f32(b, s);
+    }
+    for &z in &q.zero {
+        put_f32(b, z);
+    }
+    b.extend_from_slice(&q.bytes);
 }
 
 pub(crate) struct Cursor<'a> {
@@ -292,6 +345,39 @@ impl<'a> Cursor<'a> {
         Ok(Matrix { rows, cols, data })
     }
 
+    fn qmatrix(&mut self) -> Result<QuantizedMatrix, WireError> {
+        let mode = match Quantization::from_u8(self.u8()?) {
+            // A full-precision matrix has no business in a Q frame.
+            Some(Quantization::None) | None => {
+                return Err(WireError::Corrupt("unknown quantization mode"))
+            }
+            Some(m) => m,
+        };
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        let n = rows.checked_mul(cols).ok_or(WireError::Corrupt("matrix shape overflow"))?;
+        let (scale, zero) = if mode == Quantization::Int8 {
+            (self.f32_vec(rows)?, self.f32_vec(rows)?)
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        let nbytes = n
+            .checked_mul(mode.bytes_per_value())
+            .ok_or(WireError::Corrupt("matrix shape overflow"))?;
+        let bytes = self.take(nbytes)?.to_vec();
+        Ok(QuantizedMatrix { rows, cols, mode, scale, zero, bytes })
+    }
+
+    /// Optional trailing quantization byte on the handshake frames: a v1
+    /// (or quantization-unaware) peer ends its payload here, which
+    /// negotiates [`Quantization::None`] — the f32 fallback.
+    fn quant_or_none(&mut self) -> Result<Quantization, WireError> {
+        if self.pos == self.buf.len() {
+            return Ok(Quantization::None);
+        }
+        Quantization::from_u8(self.u8()?).ok_or(WireError::Corrupt("unknown quantization mode"))
+    }
+
     pub(crate) fn done(&self) -> Result<(), WireError> {
         if self.pos != self.buf.len() {
             return Err(WireError::Corrupt("trailing bytes after payload"));
@@ -324,16 +410,53 @@ pub fn gradient_wire_bytes(rows: usize, cols: usize) -> u64 {
     (HEADER_BYTES + GRAD_FIXED + MAT_DIMS + rows * cols * 4) as u64
 }
 
+/// Quantized-matrix prefix: mode byte + rows + cols.
+const QMAT_DIMS: usize = 1 + 8;
+
+/// Wire bytes of a quantized `rows × cols` payload (codes + the Int8
+/// per-row side data), excluding header and fixed message fields.
+fn qmat_payload_bytes(rows: usize, cols: usize, mode: Quantization) -> usize {
+    let side = if mode == Quantization::Int8 { rows * 8 } else { 0 };
+    QMAT_DIMS + side + rows * cols * mode.bytes_per_value()
+}
+
+/// Exact wire size (header + payload) of an embedding frame under
+/// `mode`. `Quantization::None` delegates to [`embedding_wire_bytes`]
+/// (the f32 frame), so planner/profiler callers can pass the negotiated
+/// mode unconditionally.
+pub fn embedding_wire_bytes_q(rows: usize, cols: usize, mode: Quantization) -> u64 {
+    if mode == Quantization::None {
+        return embedding_wire_bytes(rows, cols);
+    }
+    (HEADER_BYTES + EMB_FIXED + qmat_payload_bytes(rows, cols, mode)) as u64
+}
+
+/// Exact wire size (header + payload) of a gradient frame under `mode`.
+pub fn gradient_wire_bytes_q(rows: usize, cols: usize, mode: Quantization) -> u64 {
+    if mode == Quantization::None {
+        return gradient_wire_bytes(rows, cols);
+    }
+    (HEADER_BYTES + GRAD_FIXED + qmat_payload_bytes(rows, cols, mode)) as u64
+}
+
+/// Encoded size of one [`QuantizedMatrix`], derived from its actual
+/// buffers (the encoder writes exactly these).
+fn qmat_len(q: &QuantizedMatrix) -> usize {
+    QMAT_DIMS + (q.scale.len() + q.zero.len()) * 4 + q.bytes.len()
+}
+
 fn payload_len(frame: &Frame) -> usize {
     match frame {
-        Frame::Hello { .. } => 4 + 8 + 8 + 4,
-        Frame::HelloAck { .. } => 4,
+        Frame::Hello { .. } => 4 + 8 + 8 + 4 + 1,
+        Frame::HelloAck { .. } => 4 + 1,
         Frame::EpochInstall { batches, .. } => {
             8 + 4 + batches.iter().map(|(_, rows)| 8 + 4 + rows.len() * 4).sum::<usize>()
         }
         Frame::EmbedJob { .. } => 4 + 8 + 8,
         Frame::Embedding(m) => EMB_FIXED + MAT_DIMS + m.z.data.len() * 4,
         Frame::Gradient(m) => GRAD_FIXED + MAT_DIMS + m.grad_z.data.len() * 4,
+        Frame::EmbeddingQ(m) => EMB_FIXED + qmat_len(&m.q),
+        Frame::GradientQ(m) => GRAD_FIXED + qmat_len(&m.q),
         Frame::BwdDone { .. } => 8 + 4 + 8,
         Frame::Requeue { .. } => 8 + 8,
         Frame::Barrier { .. } => 8 + 1,
@@ -355,13 +478,17 @@ pub fn encoded_len(frame: &Frame) -> usize {
 
 fn write_payload(frame: &Frame, b: &mut Vec<u8>) {
     match frame {
-        Frame::Hello { parties, session_id, resume_token, attempt } => {
+        Frame::Hello { parties, session_id, resume_token, attempt, quantization } => {
             put_u32(b, *parties);
             put_u64(b, *session_id);
             put_u64(b, *resume_token);
             put_u32(b, *attempt);
+            b.push(quantization.as_u8());
         }
-        Frame::HelloAck { parties } => put_u32(b, *parties),
+        Frame::HelloAck { parties, quantization } => {
+            put_u32(b, *parties);
+            b.push(quantization.as_u8());
+        }
         Frame::EpochInstall { epoch, batches } => {
             put_u64(b, *epoch);
             put_u32(b, batches.len() as u32);
@@ -393,6 +520,22 @@ fn write_payload(frame: &Frame, b: &mut Vec<u8>) {
             put_u64(b, m.produced_at_us);
             put_f64(b, m.loss);
             put_matrix(b, &m.grad_z);
+        }
+        Frame::EmbeddingQ(m) => {
+            put_u64(b, m.batch_id);
+            put_u32(b, m.party as u32);
+            put_u64(b, m.generation);
+            put_u64(b, m.param_version);
+            put_u64(b, m.produced_at_us);
+            put_qmatrix(b, &m.q);
+        }
+        Frame::GradientQ(m) => {
+            put_u64(b, m.batch_id);
+            put_u32(b, m.party as u32);
+            put_u64(b, m.generation);
+            put_u64(b, m.produced_at_us);
+            put_f64(b, m.loss);
+            put_qmatrix(b, &m.q);
         }
         Frame::BwdDone { batch_id, party, ps_version } => {
             put_u64(b, *batch_id);
@@ -453,7 +596,7 @@ fn parse_header(hdr: &[u8; HEADER_BYTES]) -> Result<(u8, u32), WireError> {
         return Err(WireError::BadMagic(magic));
     }
     let version = u16::from_le_bytes([hdr[2], hdr[3]]);
-    if version != WIRE_VERSION {
+    if !(WIRE_VERSION_MIN..=WIRE_VERSION).contains(&version) {
         return Err(WireError::BadVersion(version));
     }
     let ftype = hdr[4];
@@ -472,8 +615,11 @@ fn decode_payload(ftype: u8, payload: &[u8]) -> Result<Frame, WireError> {
             session_id: c.u64()?,
             resume_token: c.u64()?,
             attempt: c.u32()?,
+            quantization: c.quant_or_none()?,
         },
-        T_HELLO_ACK => Frame::HelloAck { parties: c.u32()? },
+        T_HELLO_ACK => {
+            Frame::HelloAck { parties: c.u32()?, quantization: c.quant_or_none()? }
+        }
         T_EPOCH_INSTALL => {
             let epoch = c.u64()?;
             let n = c.u32()? as usize;
@@ -525,6 +671,38 @@ fn decode_payload(ftype: u8, payload: &[u8]) -> Result<Frame, WireError> {
                 party,
                 generation,
                 grad_z,
+                produced_at_us,
+                loss,
+            })
+        }
+        T_EMBEDDING_Q => {
+            let batch_id = c.u64()?;
+            let party = c.u32()? as usize;
+            let generation = c.u64()?;
+            let param_version = c.u64()?;
+            let produced_at_us = c.u64()?;
+            let q = c.qmatrix()?;
+            Frame::EmbeddingQ(QuantEmbeddingMsg {
+                batch_id,
+                party,
+                generation,
+                q,
+                produced_at_us,
+                param_version,
+            })
+        }
+        T_GRADIENT_Q => {
+            let batch_id = c.u64()?;
+            let party = c.u32()? as usize;
+            let generation = c.u64()?;
+            let produced_at_us = c.u64()?;
+            let loss = c.f64()?;
+            let q = c.qmatrix()?;
+            Frame::GradientQ(QuantGradientMsg {
+                batch_id,
+                party,
+                generation,
+                q,
                 produced_at_us,
                 loss,
             })
@@ -639,6 +817,34 @@ mod tests {
         }
     }
 
+    fn qemb(rows: usize, cols: usize, mode: Quantization) -> QuantEmbeddingMsg {
+        let src = emb(rows, cols);
+        let mut q = QuantizedMatrix::default();
+        super::super::quant::quantize_into(&src.z, mode, &mut q);
+        QuantEmbeddingMsg {
+            batch_id: src.batch_id,
+            party: src.party,
+            generation: src.generation,
+            q,
+            produced_at_us: src.produced_at_us,
+            param_version: src.param_version,
+        }
+    }
+
+    fn qgrad(rows: usize, cols: usize, mode: Quantization) -> QuantGradientMsg {
+        let src = grad(rows, cols);
+        let mut q = QuantizedMatrix::default();
+        super::super::quant::quantize_into(&src.grad_z, mode, &mut q);
+        QuantGradientMsg {
+            batch_id: src.batch_id,
+            party: src.party,
+            generation: src.generation,
+            q,
+            produced_at_us: src.produced_at_us,
+            loss: src.loss,
+        }
+    }
+
     fn all_frames() -> Vec<Frame> {
         vec![
             Frame::Hello {
@@ -646,8 +852,9 @@ mod tests {
                 session_id: 0xDEAD_BEEF_0042,
                 resume_token: 0x0123_4567_89AB_CDEF,
                 attempt: 1,
+                quantization: Quantization::Int8,
             },
-            Frame::HelloAck { parties: 2 },
+            Frame::HelloAck { parties: 2, quantization: Quantization::F16 },
             Frame::EpochInstall {
                 epoch: 3,
                 batches: vec![(3_000_000, vec![5, 1, 9]), (3_000_001, vec![])],
@@ -655,6 +862,10 @@ mod tests {
             Frame::EmbedJob { party: 1, batch_id: 3_000_000, generation: 12 },
             Frame::Embedding(emb(4, 8)),
             Frame::Gradient(grad(4, 8)),
+            Frame::EmbeddingQ(qemb(4, 8, Quantization::F16)),
+            Frame::EmbeddingQ(qemb(4, 8, Quantization::Int8)),
+            Frame::GradientQ(qgrad(4, 8, Quantization::F16)),
+            Frame::GradientQ(qgrad(4, 8, Quantization::Int8)),
             Frame::BwdDone { batch_id: 3_000_000, party: 0, ps_version: 5 },
             Frame::Requeue { batch_id: 3_000_001, generation: 13 },
             Frame::Barrier { epoch: 3, broadcast: true },
@@ -758,7 +969,13 @@ mod tests {
         assert!(matches!(decode(&bytes).unwrap_err(), WireError::Oversize(_)));
 
         // Trailing garbage inside the declared payload.
-        let hello = Frame::Hello { parties: 1, session_id: 7, resume_token: 9, attempt: 0 };
+        let hello = Frame::Hello {
+            parties: 1,
+            session_id: 7,
+            resume_token: 9,
+            attempt: 0,
+            quantization: Quantization::None,
+        };
         let mut bytes = encode(&hello);
         bytes.extend_from_slice(&[0xFF; 3]);
         let plen = (payload_len(&hello) + 3) as u32;
@@ -788,5 +1005,116 @@ mod tests {
         assert_eq!(m.bytes(), encode(&Frame::Embedding(m.clone())).len() as u64);
         let g = grad(4, 8);
         assert_eq!(g.bytes(), encode(&Frame::Gradient(g.clone())).len() as u64);
+    }
+
+    /// A quantization-unaware (WIRE_VERSION 1) peer sends handshake frames
+    /// with no trailing quantization byte and the old version word. Both
+    /// must still decode, negotiating down to `Quantization::None`.
+    #[test]
+    fn v1_handshake_frames_still_decode() {
+        let hello = Frame::Hello {
+            parties: 2,
+            session_id: 77,
+            resume_token: 99,
+            attempt: 1,
+            quantization: Quantization::Int8,
+        };
+        let ack = Frame::HelloAck { parties: 2, quantization: Quantization::F16 };
+        for (f, stripped) in [(hello, Quantization::None), (ack, Quantization::None)] {
+            let mut bytes = encode(&f);
+            // Rewrite as the v1 peer would have sent it: drop the trailing
+            // quantization byte, shrink the length field, stamp version 1.
+            bytes.pop();
+            let plen = (payload_len(&f) - 1) as u32;
+            bytes[6..10].copy_from_slice(&plen.to_le_bytes());
+            bytes[2..4].copy_from_slice(&1u16.to_le_bytes());
+            let (back, used) = decode(&bytes).unwrap();
+            assert_eq!(used, bytes.len());
+            match back {
+                Frame::Hello { quantization, parties, .. } => {
+                    assert_eq!(quantization, stripped);
+                    assert_eq!(parties, 2);
+                }
+                Frame::HelloAck { quantization, parties } => {
+                    assert_eq!(quantization, stripped);
+                    assert_eq!(parties, 2);
+                }
+                other => panic!("unexpected frame {other:?}"),
+            }
+        }
+
+        // Non-handshake v1 frames are byte-identical to v2 apart from the
+        // version word: patching it must not change the decode.
+        let f = Frame::Embedding(emb(3, 5));
+        let mut bytes = encode(&f);
+        bytes[2..4].copy_from_slice(&1u16.to_le_bytes());
+        assert_eq!(decode(&bytes).unwrap().0, f);
+    }
+
+    /// Quantized frames round-trip over awkward shapes and their encoded
+    /// size is pinned to the codec-derived accounting functions.
+    #[test]
+    fn quantized_round_trip_and_sizes_agree() {
+        for mode in [Quantization::F16, Quantization::Int8] {
+            for &(rows, cols) in &[(0usize, 8usize), (1, 1), (4, 1), (1, 64), (300, 32)] {
+                let e = Frame::EmbeddingQ(qemb(rows, cols, mode));
+                let bytes = encode(&e);
+                assert_eq!(bytes.len(), encoded_len(&e), "size mismatch for {e:?}");
+                assert_eq!(bytes.len() as u64, embedding_wire_bytes_q(rows, cols, mode));
+                assert_eq!(decode(&bytes).unwrap().0, e);
+
+                let g = Frame::GradientQ(qgrad(rows, cols, mode));
+                let gb = encode(&g);
+                assert_eq!(gb.len(), encoded_len(&g), "size mismatch for {g:?}");
+                assert_eq!(gb.len() as u64, gradient_wire_bytes_q(rows, cols, mode));
+                assert_eq!(decode(&gb).unwrap().0, g);
+            }
+        }
+        // The `None` mode delegates to the f32 frame accounting.
+        assert_eq!(embedding_wire_bytes_q(4, 8, Quantization::None), embedding_wire_bytes(4, 8));
+        assert_eq!(gradient_wire_bytes_q(4, 8, Quantization::None), gradient_wire_bytes(4, 8));
+    }
+
+    /// int8 embeddings must be at least 3× smaller than f32 on the hot
+    /// shape — the acceptance bound the planner's byte model relies on.
+    #[test]
+    fn int8_frames_shrink_payload_at_least_3x() {
+        let f32_bytes = embedding_wire_bytes(256, 64);
+        let i8_bytes = embedding_wire_bytes_q(256, 64, Quantization::Int8);
+        let encoded = encode(&Frame::EmbeddingQ(qemb(256, 64, Quantization::Int8)));
+        assert_eq!(i8_bytes, encoded.len() as u64);
+        assert!(
+            f32_bytes >= 3 * i8_bytes,
+            "int8 ratio too small: {f32_bytes} vs {i8_bytes}"
+        );
+    }
+
+    /// Corruption of quantized frames: truncation, an unknown quantization
+    /// mode byte, and oversize dims all error cleanly — never panic.
+    #[test]
+    fn corrupt_quantized_frames_rejected() {
+        for mode in [Quantization::F16, Quantization::Int8] {
+            let f = Frame::EmbeddingQ(qemb(4, 8, mode));
+            let bytes = encode(&f);
+            for cut in 0..bytes.len() {
+                assert_eq!(
+                    decode(&bytes[..cut]).unwrap_err(),
+                    WireError::Truncated,
+                    "prefix {cut} of {f:?}"
+                );
+            }
+
+            // Stomp the quantization mode byte (first payload byte of the
+            // qmatrix, right after the fixed embedding fields).
+            let mut bad = bytes.clone();
+            bad[HEADER_BYTES + EMB_FIXED] = 0x7F;
+            assert!(matches!(decode(&bad).unwrap_err(), WireError::Corrupt(_)));
+
+            // Dims promising far more data than the payload holds.
+            let mut bad = bytes.clone();
+            let dims_off = HEADER_BYTES + EMB_FIXED + 1;
+            bad[dims_off..dims_off + 4].copy_from_slice(&100_000u32.to_le_bytes());
+            assert_eq!(decode(&bad).unwrap_err(), WireError::Truncated);
+        }
     }
 }

@@ -191,6 +191,15 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Wire quantization for embedding/gradient frames
+    /// ([`crate::config::Quantization`]). Proposed at the handshake; the
+    /// session falls back to `none` unless both sides configured the same
+    /// mode.
+    pub fn quantization(mut self, q: crate::config::Quantization) -> Self {
+        self.cfg.transport.quantization = q;
+        self
+    }
+
     /// Escape hatch for knobs without a dedicated setter.
     pub fn tune(mut self, f: impl FnOnce(&mut ExperimentConfig)) -> Self {
         f(&mut self.cfg);
@@ -260,6 +269,8 @@ mod tests {
         let b = Experiment::builder().fault_profile("partition_heal").fault_seed(17);
         assert_eq!(b.config().transport.fault_profile, "partition_heal");
         assert_eq!(b.config().transport.fault_seed, 17);
+        let b = Experiment::builder().quantization(crate::config::Quantization::Int8);
+        assert_eq!(b.config().transport.quantization, crate::config::Quantization::Int8);
         // Unknown scenario names fail at prepare, like any invalid knob...
         let err = Experiment::builder().connect("h:1").fault_profile("tsunami").prepare();
         assert!(err.is_err());

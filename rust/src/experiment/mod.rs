@@ -42,7 +42,7 @@ use crate::data::{Task, VerticalDataset};
 use crate::metrics::{Metrics, RunReport};
 use crate::model::{HostSplitModel, SplitEngine, SplitModelSpec};
 use crate::planner::{CostConstants, CostModel};
-use crate::profiler::payload_bytes_per_sample_at;
+use crate::profiler::payload_bytes_per_sample_at_q;
 use crate::runtime::XlaService;
 use crate::sim::{SimConfig, SimResult};
 use anyhow::{anyhow, Result};
@@ -106,9 +106,19 @@ pub fn sim_config(cfg: &ExperimentConfig, n_samples: usize) -> SimConfig {
         c_a: cfg.parties.active_cores,
         c_p: cfg.parties.passive_cores,
         // Frame overhead amortizes over the batch the live system
-        // actually ships per message (codec-derived, see profiler).
-        emb_bytes_per_sample: payload_bytes_per_sample_at(cfg.train.batch_size, cfg.embed_dim),
-        grad_bytes_per_sample: payload_bytes_per_sample_at(cfg.train.batch_size, cfg.embed_dim),
+        // actually ships per message (codec-derived, see profiler); the
+        // configured quantization shrinks the modelled payload exactly as
+        // much as it shrinks the real frames.
+        emb_bytes_per_sample: payload_bytes_per_sample_at_q(
+            cfg.train.batch_size,
+            cfg.embed_dim,
+            cfg.transport.quantization,
+        ),
+        grad_bytes_per_sample: payload_bytes_per_sample_at_q(
+            cfg.train.batch_size,
+            cfg.embed_dim,
+            cfg.transport.quantization,
+        ),
         bandwidth_bps: cfg.bandwidth_mbps * 1e6 / 8.0,
     };
     let mut sc = SimConfig::new(cfg.arch, cost);

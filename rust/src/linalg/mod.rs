@@ -3,7 +3,7 @@
 //! Every GEMM the host engine performs goes through a [`Backend`], whose
 //! kernels are **write-to-preallocated** (`_into`) so the steady-state
 //! training step performs zero heap allocations (see
-//! [`crate::model::Workspace`]). Three implementations ship:
+//! [`crate::model::Workspace`]). Four implementations ship:
 //!
 //! - [`Naive`] — the reference kernels (the seed `Matrix::matmul`
 //!   semantics, with the zero-skip inconsistency fixed); `Matrix::matmul`
@@ -11,25 +11,31 @@
 //! - [`Tiled`] — cache-blocked panels with deeper register unrolling.
 //! - [`Threaded`] — the tiled kernels fanned out as row panels over a
 //!   [`crate::util::ThreadPool`] fork-join ([`ThreadPool::scope_ranges`]).
+//! - [`Simd`] — 8-wide vector tiles with runtime AVX2+FMA dispatch; the
+//!   raw-speed tier.
 //!
-//! **Accumulation-order contract:** every backend accumulates each output
-//! element over the shared dimension in ascending index order, so all
-//! three produce *bit-identical* results (f32 addition is not
-//! reassociated). The backend-parity tests below pin this down; future
-//! SIMD/XLA backends that relax it only have to stay within 1e-5.
+//! **Accumulation-order contract:** [`Naive`], [`Tiled`], and
+//! [`Threaded`] accumulate each output element over the shared dimension
+//! in ascending index order, so all three produce *bit-identical* results
+//! (f32 addition is not reassociated). The backend-parity tests below pin
+//! this down. [`Simd`] deliberately relaxes the contract (lane-parallel
+//! accumulators reassociate the sums) and is instead pinned to a 1e-5
+//! relative-error envelope against [`Naive`].
 //!
 //! Backend selection flows from `ExperimentConfig::backend` (TOML
-//! `[engine] backend`, CLI `--backend naive|tiled|threaded`). Training
+//! `[engine] backend`, CLI `--backend naive|tiled|threaded|simd`). Training
 //! sessions derive per-worker thread budgets with [`worker_backend`],
 //! which clamps `workers × per-worker threads ≤ available_parallelism()`
 //! so the planner's (p, q) worker allocation can never oversubscribe the
 //! machine.
 
 pub mod naive;
+pub mod simd;
 pub mod tiled;
 pub mod threaded;
 
 pub use naive::Naive;
+pub use simd::Simd;
 pub use tiled::Tiled;
 pub use threaded::Threaded;
 
@@ -71,17 +77,21 @@ pub enum BackendKind {
     Tiled,
     /// Tiled + row-panel fork-join on the util thread pool.
     Threaded,
+    /// 8-wide SIMD tiles with runtime AVX2+FMA dispatch; tolerance tier
+    /// (≤ 1e-5 relative error vs the bit-identical backends).
+    Simd,
 }
 
 impl BackendKind {
-    pub const ALL: [BackendKind; 3] =
-        [BackendKind::Naive, BackendKind::Tiled, BackendKind::Threaded];
+    pub const ALL: [BackendKind; 4] =
+        [BackendKind::Naive, BackendKind::Tiled, BackendKind::Threaded, BackendKind::Simd];
 
     pub fn parse(s: &str) -> Option<BackendKind> {
         match s.to_ascii_lowercase().as_str() {
             "naive" | "reference" => Some(BackendKind::Naive),
             "tiled" | "blocked" => Some(BackendKind::Tiled),
             "threaded" | "parallel" => Some(BackendKind::Threaded),
+            "simd" | "vector" => Some(BackendKind::Simd),
             _ => None,
         }
     }
@@ -91,6 +101,7 @@ impl BackendKind {
             BackendKind::Naive => "naive",
             BackendKind::Tiled => "tiled",
             BackendKind::Threaded => "threaded",
+            BackendKind::Simd => "simd",
         }
     }
 }
@@ -110,6 +121,7 @@ pub fn make(kind: BackendKind, threads: usize) -> Arc<dyn Backend> {
         BackendKind::Tiled => Arc::new(Tiled),
         BackendKind::Threaded if threads <= 1 => Arc::new(Tiled),
         BackendKind::Threaded => Arc::new(Threaded::new(threads)),
+        BackendKind::Simd => Arc::new(Simd::new()),
     }
 }
 
@@ -290,11 +302,79 @@ mod tests {
         }
     }
 
+    /// Largest elementwise relative error `|got - want| / (1 + |want|)`.
+    fn max_rel_err(got: &Matrix, want: &Matrix) -> f32 {
+        assert_eq!(got.shape(), want.shape());
+        got.data
+            .iter()
+            .zip(want.data.iter())
+            .map(|(g, w)| (g - w).abs() / (1.0 + w.abs()))
+            .fold(0.0f32, f32::max)
+    }
+
+    /// The SIMD tier relaxes the accumulation-order contract, so it is
+    /// pinned by a relative-error envelope against [`Naive`] instead of
+    /// joining the bit-identical parity tests above.
+    #[test]
+    fn simd_matches_naive_within_tolerance() {
+        let mut rng = Rng::new(16);
+        let simd = make(BackendKind::Simd, 1);
+        assert_eq!(simd.name(), "simd");
+        for &(m, k, n) in &SHAPES {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let bt = Matrix::randn(n, k, 1.0, &mut rng);
+            let (mut want, mut got) = (Matrix::default(), Matrix::default());
+
+            Naive.matmul_into(&a, &b, &mut want);
+            simd.matmul_into(&a, &b, &mut got);
+            assert!(max_rel_err(&got, &want) < 1e-5, "simd matmul {m}x{k}x{n}");
+
+            Naive.matmul_bt_into(&a, &bt, &mut want);
+            simd.matmul_bt_into(&a, &bt, &mut got);
+            assert!(max_rel_err(&got, &want) < 1e-5, "simd bt {m}x{k}x{n}");
+
+            // a^T form: reinterpret (m, k) as the (k, m) operand shape.
+            let at = Matrix::randn(k, m, 1.0, &mut rng);
+            Naive.matmul_at_into(&at, &b, &mut want);
+            simd.matmul_at_into(&at, &b, &mut got);
+            assert!(max_rel_err(&got, &want) < 1e-5, "simd at {k}x{m}x{n}");
+        }
+    }
+
+    /// All three SIMD kernels skip the zeroing memset (pure-overwrite
+    /// register tiles) — a dirty reused buffer must still come out clean.
+    #[test]
+    fn simd_output_buffer_reuse_is_clean() {
+        let mut rng = Rng::new(17);
+        let simd = make(BackendKind::Simd, 1);
+        let a = Matrix::randn(7, 19, 1.0, &mut rng);
+        let b = Matrix::randn(19, 21, 1.0, &mut rng);
+        let bt = Matrix::randn(11, 19, 1.0, &mut rng);
+        let at = Matrix::randn(19, 7, 1.0, &mut rng);
+
+        let mut out = Matrix::from_vec(3, 3, vec![f32::NAN; 9]);
+        simd.matmul_into(&a, &b, &mut out);
+        assert_eq!(out.shape(), (7, 21));
+        assert!(max_rel_err(&out, &a.matmul(&b)) < 1e-5, "matmul kept stale data");
+
+        let mut out = Matrix::from_vec(3, 3, vec![f32::NAN; 9]);
+        simd.matmul_bt_into(&a, &bt, &mut out);
+        assert_eq!(out.shape(), (7, 11));
+        assert!(max_rel_err(&out, &a.matmul(&bt.transpose())) < 1e-5, "bt kept stale data");
+
+        let mut out = Matrix::from_vec(3, 3, vec![f32::NAN; 9]);
+        simd.matmul_at_into(&at, &b, &mut out);
+        assert_eq!(out.shape(), (7, 21));
+        assert!(max_rel_err(&out, &at.transpose().matmul(&b)) < 1e-5, "at kept stale data");
+    }
+
     #[test]
     fn kind_parsing_and_selection() {
         assert_eq!(BackendKind::parse("Tiled"), Some(BackendKind::Tiled));
         assert_eq!(BackendKind::parse("THREADED"), Some(BackendKind::Threaded));
         assert_eq!(BackendKind::parse("naive"), Some(BackendKind::Naive));
+        assert_eq!(BackendKind::parse("simd"), Some(BackendKind::Simd));
         assert_eq!(BackendKind::parse("gpu"), None);
         for k in BackendKind::ALL {
             assert_eq!(BackendKind::parse(k.name()), Some(k));

@@ -175,8 +175,21 @@ pub fn profile_engine(
 /// broker accounts: the live system sends **one frame per batch**, and
 /// the header/field overhead amortizes across its rows.
 pub fn payload_bytes_per_sample_at(batch: usize, embed_dim: usize) -> f64 {
+    payload_bytes_per_sample_at_q(batch, embed_dim, crate::coordinator::Quantization::None)
+}
+
+/// Quantization-aware form of [`payload_bytes_per_sample_at`]: amortized
+/// per-sample wire bytes of an embedding frame under the negotiated
+/// `quant` mode. Still codec-derived ([`wire::embedding_wire_bytes_q`] is
+/// the same function `QuantEmbeddingMsg::bytes` uses), so the planner and
+/// simulator see exactly the reduction the broker accounts.
+pub fn payload_bytes_per_sample_at_q(
+    batch: usize,
+    embed_dim: usize,
+    quant: crate::coordinator::Quantization,
+) -> f64 {
     let b = batch.max(1);
-    crate::coordinator::wire::embedding_wire_bytes(b, embed_dim) as f64 / b as f64
+    crate::coordinator::wire::embedding_wire_bytes_q(b, embed_dim, quant) as f64 / b as f64
 }
 
 /// Worst-case per-sample payload (a single-row frame: the f32 row plus
@@ -276,5 +289,38 @@ mod tests {
             assert_eq!(g.bytes(), wire::encode(&Frame::Gradient(g.clone())).len() as u64);
             assert_eq!(g.bytes(), m.bytes());
         }
+    }
+
+    /// Acceptance pin for the quantized wire: at the bench shape
+    /// (B = 256, d = 64) int8 frames carry at least 3× fewer bytes per
+    /// sample than f32, and the estimate equals the exact encoded size of
+    /// a real quantized frame (no drift between cost model and codec).
+    #[test]
+    fn quantized_payload_shrinks_at_least_3x() {
+        use crate::coordinator::wire::{self, Frame};
+        use crate::coordinator::{EmbeddingMsg, FeedbackQuantizer, QuantEmbeddingMsg, Quantization};
+
+        let (batch, d) = (256usize, 64usize);
+        let f32_per = payload_bytes_per_sample_at(batch, d);
+        let i8_per = payload_bytes_per_sample_at_q(batch, d, Quantization::Int8);
+        let f16_per = payload_bytes_per_sample_at_q(batch, d, Quantization::F16);
+        assert!(f32_per >= 3.0 * i8_per, "int8 only {:.2}x", f32_per / i8_per);
+        assert!(f32_per > f16_per && f16_per > i8_per);
+        // `None` mode is byte-identical to the unquantized estimate.
+        assert_eq!(payload_bytes_per_sample_at_q(batch, d, Quantization::None), f32_per);
+
+        let msg = EmbeddingMsg {
+            batch_id: 1,
+            party: 0,
+            generation: 0,
+            z: Matrix::zeros(batch, d),
+            produced_at_us: 0,
+            param_version: 0,
+        };
+        let mut fq = FeedbackQuantizer::new(Quantization::Int8);
+        let qm = QuantEmbeddingMsg::from_msg(&msg, &mut fq);
+        let encoded = wire::encode(&Frame::EmbeddingQ(qm.clone()));
+        assert_eq!(qm.bytes(), encoded.len() as u64);
+        assert_eq!(i8_per * batch as f64, qm.bytes() as f64);
     }
 }

@@ -601,7 +601,13 @@ mod tests {
         }
         let (a, b) = InProcTransport::pair_inproc();
         let fl = FaultLink::wrap(Arc::new(a), p);
-        let hello = Frame::Hello { parties: 1, session_id: 0, resume_token: 0, attempt: 0 };
+        let hello = Frame::Hello {
+            parties: 1,
+            session_id: 0,
+            resume_token: 0,
+            attempt: 0,
+            quantization: crate::coordinator::Quantization::None,
+        };
         fl.send(hello.clone()).unwrap();
         fl.send(data_frame(0)).unwrap();
         fl.send(Frame::Shutdown).unwrap();

@@ -15,7 +15,7 @@
 //! run by re-invoking the scenario with the seed printed in the journal
 //! header (see EXPERIMENTS.md §Resilience).
 
-use pubsub_vfl::config::{ExperimentConfig, ModelSize};
+use pubsub_vfl::config::{ExperimentConfig, ModelSize, Quantization};
 use pubsub_vfl::coordinator::{
     serve_passive_session, train_pubsub_over_link, wire, Frame, InProcTransport, Link, LinkRecv,
     PassiveSessionReport, SessionResult, TcpLink, TcpTransport, Transport,
@@ -82,7 +82,19 @@ struct ChaosRun {
 /// optionally decorated by a fault schedule. Run under a watchdog so a
 /// liveness bug fails instead of hanging CI.
 fn run_linked(transport: &dyn Transport, profile: Option<FaultProfile>) -> ChaosRun {
-    let (engine, spec, vtr, vte, cfg) = setup();
+    run_linked_quant(transport, profile, Quantization::None)
+}
+
+/// [`run_linked`] with a wire-quantization mode configured on *both*
+/// sides, so the handshake negotiates it and the data plane really ships
+/// quantized frames under the fault schedule.
+fn run_linked_quant(
+    transport: &dyn Transport,
+    profile: Option<FaultProfile>,
+    quant: Quantization,
+) -> ChaosRun {
+    let (engine, spec, vtr, vte, mut cfg) = setup();
+    cfg.transport.quantization = quant;
     let (active_raw, passive_link) = transport.pair().expect("link pair");
     let fault_link = profile.map(|p| FaultLink::wrap(Arc::clone(&active_raw), p));
     let active_link: Arc<dyn Link> = match &fault_link {
@@ -254,6 +266,41 @@ fn chaos_corrupt_frames_tcp() {
     chaos_cell(Scenario::CorruptFrames, &TcpTransport, "tcp");
 }
 
+/// Quantized-wire cell: the int8 data plane (with error feedback) under
+/// the lossy-LAN schedule must hold the same exactly-once invariants and
+/// convergence tolerance as the f32 matrix — and must really have
+/// negotiated int8 rather than silently falling back to f32.
+#[test]
+fn chaos_lossy_lan_int8_quantized() {
+    let profile = Scenario::LossyLan.profile(FAULT_SEED);
+    let run = run_linked_quant(&InProcTransport, Some(profile), Quantization::Int8);
+    dump_journal("int8_lossy_lan", FAULT_SEED, &run.journal);
+
+    let exp =
+        ExactlyOnceExpectation { epochs: EPOCHS as u64, n_batches: N_BATCHES, parties: 1 };
+    check_session(&exp, &run.session, &run.active, Some(&run.passive), Some(run.retries))
+        .assert_ok("lossy_lan over int8 wire");
+    assert_eq!(run.report.bwd_applied, exp.expected_bwd(), "int8/lossy_lan");
+    assert_eq!(run.report.epochs_served, EPOCHS, "int8/lossy_lan");
+    assert!(!run.journal.is_empty(), "int8/lossy_lan: no fault decisions journaled");
+    // Both sides proposed int8, so nothing may have fallen back.
+    assert_eq!(run.active.counter("quantization_fell_back"), 0);
+    assert_eq!(run.passive.counter("quantization_fell_back"), 0);
+
+    let (base_auc, base_loss) = baseline();
+    let m = run.session.final_metric;
+    let loss = run.session.loss_curve.last().unwrap().1;
+    assert!(m > 0.7, "int8/lossy_lan: AUC {m} under faults + quantization");
+    assert!(
+        (m - base_auc).abs() < 0.15,
+        "int8/lossy_lan: AUC {m} diverged from fault-free f32 {base_auc}"
+    );
+    assert!(
+        (loss - base_loss).abs() < 0.3,
+        "int8/lossy_lan: final loss {loss} diverged from fault-free f32 {base_loss}"
+    );
+}
+
 // ---- deterministic replay -------------------------------------------------
 
 /// The acceptance criterion: re-running a scenario with the same seed
@@ -341,11 +388,42 @@ fn mid_epoch_disconnect_fails_cleanly() {
 // ---- wire fault-surface fuzz ---------------------------------------------
 
 fn fuzz_frames() -> Vec<Frame> {
-    use pubsub_vfl::coordinator::{EmbeddingMsg, GradientMsg};
+    use pubsub_vfl::coordinator::{
+        quantize_into, EmbeddingMsg, GradientMsg, QuantEmbeddingMsg, QuantGradientMsg,
+        QuantizedMatrix,
+    };
     use pubsub_vfl::tensor::Matrix;
+    let emb_m = Matrix::from_fn(4, 6, |r, c| (r * 6 + c) as f32 - 2.0);
+    let mut q_emb = QuantizedMatrix::default();
+    quantize_into(&emb_m, Quantization::Int8, &mut q_emb);
+    let grad_m = Matrix::from_fn(4, 6, |r, c| 0.5 * r as f32 - c as f32);
+    let mut q_grad = QuantizedMatrix::default();
+    quantize_into(&grad_m, Quantization::F16, &mut q_grad);
     vec![
-        Frame::Hello { parties: 2, session_id: 77, resume_token: 99, attempt: 1 },
-        Frame::HelloAck { parties: 2 },
+        Frame::Hello {
+            parties: 2,
+            session_id: 77,
+            resume_token: 99,
+            attempt: 1,
+            quantization: Quantization::Int8,
+        },
+        Frame::HelloAck { parties: 2, quantization: Quantization::F16 },
+        Frame::EmbeddingQ(QuantEmbeddingMsg {
+            batch_id: 7,
+            party: 0,
+            generation: 3,
+            q: q_emb,
+            produced_at_us: 1234,
+            param_version: 2,
+        }),
+        Frame::GradientQ(QuantGradientMsg {
+            batch_id: 7,
+            party: 0,
+            generation: 3,
+            q: q_grad,
+            produced_at_us: 1234,
+            loss: 0.7,
+        }),
         Frame::Resume { epoch: 1, banked_bwd: 12 },
         Frame::RestoreParams { party: 0, version: 4, flat: vec![0.5; 9] },
         Frame::EpochInstall { epoch: 1, batches: vec![(7, vec![1, 2, 3]), (8, vec![])] },

@@ -109,7 +109,13 @@ fn passive_exits_loudly_when_link_drops_without_shutdown() {
     });
 
     active
-        .send(Frame::Hello { parties: 1, session_id: 7, resume_token: 9, attempt: 0 })
+        .send(Frame::Hello {
+            parties: 1,
+            session_id: 7,
+            resume_token: 9,
+            attempt: 0,
+            quantization: pubsub_vfl::coordinator::Quantization::None,
+        })
         .unwrap();
     let deadline = Instant::now() + Duration::from_secs(30);
     loop {

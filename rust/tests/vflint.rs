@@ -60,7 +60,10 @@ fn each_fixture_triggers_its_lint() {
         ("unknown_lock", "L002", "mystery_widget"),
         ("panic_path", "P001", "panic path"),
         ("hot_alloc", "A001", "sum_into"),
+        ("hot_alloc", "A001", "dequantize_rows"),
+        ("hot_alloc", "A001", "scale_kernel"),
         ("wire_gap", "W001", "Frame::Orphan"),
+        ("wire_gap", "W001", "Frame::GradientQ"),
         ("relaxed", "R001", "Ordering::Relaxed"),
         ("dead_shim", "D001", "deprecated"),
         ("raw_mutex", "M001", "raw std::sync::Mutex"),

@@ -8,6 +8,19 @@ pub fn sum_into(xs: &[f32], out: &mut Vec<f32>) {
     drop(scratch);
 }
 
+pub fn dequantize_rows(codes: &[u8], out: &mut Vec<f32>) {
+    // `quantize_*`/`dequantize_*` wire routines are on the contract too.
+    let staged = codes.to_vec(); // A001
+    out.clear();
+    out.extend(staged.iter().map(|&c| c as f32));
+}
+
+pub fn scale_kernel(xs: &[f32]) -> f32 {
+    // ...as are the `*_kernel` SIMD bodies.
+    let tmp = vec![0.0f32; xs.len()]; // A001
+    xs.iter().zip(tmp.iter()).map(|(x, t)| x + t).sum()
+}
+
 pub fn sum(xs: &[f32]) -> Vec<f32> {
     // Allocation outside a `*_into` kernel is not A001's business.
     xs.to_vec()

@@ -1,14 +1,17 @@
 //! W001 fixture: `Frame::Orphan` is missing from the round-trip tests,
-//! from `kind_name()`, and from the decode fuzz list.
+//! from `kind_name()`, and from the decode fuzz list; `Frame::GradientQ`
+//! is registered in `kind_name()` but missing from tests and fuzz.
 
 pub enum Frame {
     Hello { parties: u32 },
     Orphan,
+    GradientQ,
 }
 
 pub fn kind_name(f: &Frame) -> &'static str {
     match f {
         Frame::Hello { .. } => "hello",
+        Frame::GradientQ => "gradient_q",
         _ => "unknown",
     }
 }

@@ -3,13 +3,19 @@
 //! A counting global allocator wraps `System`; after a few warmup steps
 //! (which size every `Workspace` / `ActiveStepBuf` buffer), a full
 //! passive-fwd → active-step → passive-bwd train step on the 256×250×64
-//! hot shape must perform **zero** heap allocations.
+//! hot shape must perform **zero** heap allocations — on the tiled
+//! backend, on the SIMD backend, and with the quantized wire's
+//! quantize → error-feedback → dequantize round trip folded into the
+//! step.
 //!
 //! This file deliberately contains a single `#[test]`: the counter is
 //! process-global, and a sibling test running concurrently on another
 //! harness thread would pollute it.
 
 use pubsub_vfl::config::ModelSize;
+use pubsub_vfl::coordinator::{
+    dequantize_into, FeedbackQuantizer, Quantization, QuantizedMatrix,
+};
 use pubsub_vfl::data::Task;
 use pubsub_vfl::linalg::{make, BackendKind};
 use pubsub_vfl::model::{
@@ -104,5 +110,67 @@ fn steady_state_training_step_performs_zero_allocations() {
     );
     // Sanity: the steps really computed (same inputs ⇒ same loss).
     assert_eq!(buf.loss, loss_warm);
+    assert!(buf.loss.is_finite());
+
+    // ---- same contract on the SIMD backend ----------------------------
+    // A fresh workspace re-sizes against the simd kernels during warmup,
+    // then the steady state must again be alloc-free.
+    let mut ws = Workspace::new(make(BackendKind::Simd, 1));
+    for _ in 0..3 {
+        step(&mut ws, &mut z, &mut buf, &mut gp);
+    }
+    let loss_simd_warm = buf.loss;
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..10 {
+        step(&mut ws, &mut z, &mut buf, &mut gp);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "simd steady-state train step allocated {} times over 10 steps",
+        after - before
+    );
+    assert_eq!(buf.loss, loss_simd_warm);
+
+    // ---- quantized wire round trip on the hot path --------------------
+    // The encode-side feedback quantizer and the decode-side dequantize
+    // reuse their retained buffers: after warmup, a step plus a full
+    // int8 quantize → dequantize of the embedding must stay at zero.
+    let mut fq = FeedbackQuantizer::new(Quantization::Int8);
+    let mut q = QuantizedMatrix::default();
+    let mut z_deq = Matrix::default();
+    let mut quant_step = |ws: &mut Workspace,
+                          z: &mut Matrix,
+                          buf: &mut ActiveStepBuf,
+                          gp: &mut MlpParams| {
+        model.passive_fwd_into(0, &params.passive[0], &x_p, ws, z);
+        fq.quantize_into(z, &mut q);
+        dequantize_into(&q, &mut z_deq);
+        model.active_step_into(
+            &params.active,
+            &params.top,
+            &x_a,
+            std::slice::from_ref(&z_deq),
+            &y,
+            ws,
+            buf,
+        );
+        model.passive_bwd_into(0, &params.passive[0], &x_p, &buf.grad_z[0], ws, gp);
+    };
+    for _ in 0..3 {
+        quant_step(&mut ws, &mut z, &mut buf, &mut gp);
+    }
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..10 {
+        quant_step(&mut ws, &mut z, &mut buf, &mut gp);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "quantized steady-state step allocated {} times over 10 steps",
+        after - before
+    );
     assert!(buf.loss.is_finite());
 }
