@@ -122,6 +122,7 @@ const ALIASES: &[(&str, Rank)] = &[
     ("log", Rank::DurableLog),
     ("jobs", Rank::ServeJobs),
     ("job_q", Rank::ServeJobs),
+    ("replan", Rank::Controller),
 ];
 
 /// Files subject to the lock lints (L001/L002/M001): the coordinator

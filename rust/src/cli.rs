@@ -152,6 +152,10 @@ pub fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
         cfg.transport.quantization = crate::config::Quantization::parse(q)
             .ok_or_else(|| anyhow!("unknown quantization '{q}' (none|fp16|int8)"))?;
     }
+    if let Some(r) = args.get("replan") {
+        cfg.replanning.mode = crate::planner::ReplanMode::parse(r)
+            .ok_or_else(|| anyhow!("unknown replan mode '{r}' (off|observe|act)"))?;
+    }
     if let Some(dir) = args.get("state-dir") {
         cfg.durability.state_dir = dir.to_string();
     }
@@ -174,6 +178,7 @@ COMMANDS:
                                              --batch N --epochs N --lr F --mu F --config file.toml
                                              --transport inproc|tcp --connect HOST:PORT
                                              --quantization none|fp16|int8
+                                             --replan off|observe|act
                                              --fault-profile lossy_lan|slow_passive|flaky_wire|
                                                partition_heal|corrupt_frames --fault-seed N
                                              --state-dir DIR --resume]
@@ -231,6 +236,17 @@ fn cmd_train(args: &Args) -> Result<i32> {
         }
         RunEvent::BatchRetried { epoch, batch_id } => {
             println!("  epoch {epoch:>3}: batch {batch_id} reassigned (deadline/buffer)");
+        }
+        RunEvent::Replanned { epoch, from, to, predicted_gain, applied } => {
+            println!(
+                "  epoch {epoch:>3}: re-plan ({},{}) -> ({},{})  gain {:.1}%  {}",
+                from.0,
+                from.1,
+                to.0,
+                to.1,
+                predicted_gain * 100.0,
+                if applied { "applied" } else { "held" }
+            );
         }
         _ => {}
     });
@@ -542,6 +558,20 @@ mod tests {
         let none = config_from_args(&Args::parse(&argv("train"))).unwrap();
         assert_eq!(none.transport.quantization, crate::config::Quantization::None);
         let bad = Args::parse(&argv("train --quantization int4"));
+        assert!(config_from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn replan_flag_parsed() {
+        use crate::planner::ReplanMode;
+        let a = Args::parse(&argv("train --replan act"));
+        assert_eq!(config_from_args(&a).unwrap().replanning.mode, ReplanMode::Act);
+        let o = Args::parse(&argv("train --replan observe"));
+        assert_eq!(config_from_args(&o).unwrap().replanning.mode, ReplanMode::Observe);
+        // No flag: controller off.
+        let none = config_from_args(&Args::parse(&argv("train"))).unwrap();
+        assert_eq!(none.replanning.mode, ReplanMode::Off);
+        let bad = Args::parse(&argv("train --replan maybe"));
         assert!(config_from_args(&bad).is_err());
     }
 

@@ -12,6 +12,7 @@ use std::fmt;
 
 pub use crate::coordinator::quant::Quantization;
 pub use crate::coordinator::transport::TransportKind;
+pub use crate::planner::ReplanMode;
 
 /// Which of the five evaluated system architectures drives training.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -274,6 +275,80 @@ impl DurabilityConfig {
     }
 }
 
+/// Live re-planning: the epoch-boundary feedback controller that refits
+/// the cost constants from the streaming profiler series and re-solves
+/// the (p, q) worker allocation against the *observed* cost surface
+/// (see `planner::controller`). Off unless `mode` is `observe` (log
+/// decisions, hold the plan) or `act` (resize the running session).
+/// TOML `[replanning]`, CLI `--replan off|observe|act`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReplanningConfig {
+    /// `off` | `observe` | `act`.
+    pub mode: ReplanMode,
+    /// EWMA damping factor α ∈ (0, 1] folding each epoch's observed
+    /// cost ratios into the fitted constants (higher = faster to react,
+    /// noisier).
+    pub ewma_alpha: f64,
+    /// Minimum predicted relative gain (fraction of the current
+    /// per-epoch cost) before a new plan is applied — the hysteresis
+    /// band that keeps the controller from thrashing on noise.
+    pub hysteresis: f64,
+    /// Epochs to hold after an applied resize before considering
+    /// another (lets the EWMA re-converge on the new operating point).
+    pub cooldown_epochs: usize,
+    /// Hard cap on the live active worker count (0 = 2× the configured
+    /// `parties.active_workers`). Replica slots are pre-allocated to
+    /// this cap so a grow never reallocates mid-session.
+    pub max_active_workers: usize,
+    /// Hard cap on the live per-party passive worker count (0 = 2× the
+    /// configured `parties.passive_workers`).
+    pub max_passive_workers: usize,
+    /// Let the controller step the wire quantization
+    /// (none → fp16 → int8) when the wire is the bottleneck.
+    pub step_quantization: bool,
+}
+
+impl Default for ReplanningConfig {
+    fn default() -> Self {
+        ReplanningConfig {
+            mode: ReplanMode::Off,
+            ewma_alpha: 0.4,
+            hysteresis: 0.10,
+            cooldown_epochs: 1,
+            max_active_workers: 0,
+            max_passive_workers: 0,
+            step_quantization: true,
+        }
+    }
+}
+
+impl ReplanningConfig {
+    /// The controller runs iff the mode is not `off`.
+    pub fn enabled(&self) -> bool {
+        self.mode != ReplanMode::Off
+    }
+
+    /// Resolved live cap on active workers for a session configured with
+    /// `configured` of them (the `0 = 2×` default applied, never below
+    /// the configured size).
+    pub fn cap_active(&self, configured: usize) -> usize {
+        if self.max_active_workers == 0 {
+            configured.saturating_mul(2).max(1)
+        } else {
+            self.max_active_workers.max(configured)
+        }
+    }
+
+    /// Resolved live cap on per-party passive workers.
+    pub fn cap_passive(&self, configured: usize) -> usize {
+        if self.max_passive_workers == 0 {
+            configured.saturating_mul(2).max(1)
+        } else {
+            self.max_passive_workers.max(configured)
+        }
+    }
+}
+
 /// Ablation toggles (Table 4).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct AblationConfig {
@@ -321,6 +396,8 @@ pub struct ExperimentConfig {
     /// Durable broker state (persistent topic logs, checkpoints,
     /// crash recovery).
     pub durability: DurabilityConfig,
+    /// Live re-planning controller (epoch-boundary refit + resize).
+    pub replanning: ReplanningConfig,
 }
 
 impl Default for ExperimentConfig {
@@ -365,6 +442,7 @@ impl Default for ExperimentConfig {
             passive_parties: 1,
             transport: TransportConfig::default(),
             durability: DurabilityConfig::default(),
+            replanning: ReplanningConfig::default(),
         }
     }
 }
@@ -476,6 +554,21 @@ impl ExperimentConfig {
         c.durability.max_rejoin_attempts = doc
             .i64_or("durability", "max_rejoin_attempts", c.durability.max_rejoin_attempts as i64)
             as u32;
+
+        let rmode = doc.str_or("replanning", "mode", c.replanning.mode.name());
+        c.replanning.mode = ReplanMode::parse(&rmode).ok_or_else(|| {
+            ConfigError::Invalid(format!("unknown replan mode '{rmode}' (off|observe|act)"))
+        })?;
+        c.replanning.ewma_alpha = doc.f64_or("replanning", "ewma_alpha", c.replanning.ewma_alpha);
+        c.replanning.hysteresis = doc.f64_or("replanning", "hysteresis", c.replanning.hysteresis);
+        c.replanning.cooldown_epochs =
+            doc.usize_or("replanning", "cooldown_epochs", c.replanning.cooldown_epochs);
+        c.replanning.max_active_workers =
+            doc.usize_or("replanning", "max_active_workers", c.replanning.max_active_workers);
+        c.replanning.max_passive_workers =
+            doc.usize_or("replanning", "max_passive_workers", c.replanning.max_passive_workers);
+        c.replanning.step_quantization =
+            doc.bool_or("replanning", "step_quantization", c.replanning.step_quantization);
         c.validate()?;
         Ok(c)
     }
@@ -512,6 +605,16 @@ impl ExperimentConfig {
         }
         if self.durability.enabled() && self.durability.log_max_entries == 0 {
             return inv("durability.log_max_entries must be >= 1".into());
+        }
+        if self.replanning.enabled() {
+            let a = self.replanning.ewma_alpha;
+            if !(a > 0.0 && a <= 1.0) {
+                return inv(format!("replanning.ewma_alpha must be in (0, 1], got {a}"));
+            }
+            let h = self.replanning.hysteresis;
+            if !(h >= 0.0 && h.is_finite()) {
+                return inv(format!("replanning.hysteresis must be >= 0, got {h}"));
+            }
         }
         if !self.transport.fault_profile.is_empty() {
             if crate::testkit::Scenario::parse(&self.transport.fault_profile).is_none() {
@@ -734,6 +837,46 @@ bandwidth_mbps = 500.0
 
         // Resume without a state dir has nothing to resume from.
         assert!(ExperimentConfig::from_toml("[durability]\nresume = true").is_err());
+    }
+
+    #[test]
+    fn replanning_section_parses_and_validates() {
+        let d = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(d.replanning.mode, ReplanMode::Off);
+        assert!(!d.replanning.enabled());
+
+        let c = ExperimentConfig::from_toml(
+            "[replanning]\nmode = \"act\"\newma_alpha = 0.5\nhysteresis = 0.05\n\
+             cooldown_epochs = 2\nmax_active_workers = 6\nmax_passive_workers = 4\n\
+             step_quantization = false",
+        )
+        .unwrap();
+        assert_eq!(c.replanning.mode, ReplanMode::Act);
+        assert!(c.replanning.enabled());
+        assert_eq!(c.replanning.ewma_alpha, 0.5);
+        assert_eq!(c.replanning.hysteresis, 0.05);
+        assert_eq!(c.replanning.cooldown_epochs, 2);
+        assert_eq!(c.replanning.max_active_workers, 6);
+        assert!(!c.replanning.step_quantization);
+
+        let o = ExperimentConfig::from_toml("[replanning]\nmode = \"observe\"").unwrap();
+        assert_eq!(o.replanning.mode, ReplanMode::Observe);
+
+        // Unknown mode and out-of-range knobs are rejected.
+        assert!(ExperimentConfig::from_toml("[replanning]\nmode = \"panic\"").is_err());
+        assert!(ExperimentConfig::from_toml(
+            "[replanning]\nmode = \"act\"\newma_alpha = 0.0"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml(
+            "[replanning]\nmode = \"act\"\nhysteresis = -0.5"
+        )
+        .is_err());
+
+        // The caps resolve `0` to 2× the configured pool, never below it.
+        assert_eq!(d.replanning.cap_active(4), 8);
+        assert_eq!(d.replanning.cap_passive(3), 6);
+        assert_eq!(c.replanning.cap_active(8), 8, "explicit cap never shrinks the pool");
     }
 
     #[test]

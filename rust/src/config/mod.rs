@@ -6,7 +6,7 @@ pub mod toml;
 
 pub use experiment::{
     AblationConfig, Architecture, ConfigError, DatasetConfig, DpConfig, DurabilityConfig,
-    EngineKind, ExperimentConfig, ModelSize, PartyConfig, Quantization, TrainConfig,
-    TransportConfig, TransportKind,
+    EngineKind, ExperimentConfig, ModelSize, PartyConfig, Quantization, ReplanMode,
+    ReplanningConfig, TrainConfig, TransportConfig, TransportKind,
 };
 pub use toml::{TomlDoc, TomlError, TomlValue};

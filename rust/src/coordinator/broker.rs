@@ -128,6 +128,20 @@ impl Broker {
             t.reset();
         }
     }
+
+    /// Live-retune the §4.1 buffer depths: every embedding topic to `p`,
+    /// every gradient topic to `q`. The re-planning controller calls this
+    /// right after an epoch-boundary `reset`, while the topics are empty
+    /// and the workers idle, so no message is ever mass-evicted by a
+    /// shrink.
+    pub fn resize_buffers(&self, p: usize, q: usize) {
+        for t in &self.emb {
+            t.set_capacity(p.max(1));
+        }
+        for t in &self.grad {
+            t.set_capacity(q.max(1));
+        }
+    }
 }
 
 #[cfg(test)]
@@ -210,6 +224,27 @@ mod tests {
         b.publish_embedding(e);
         assert!(matches!(b.take_embedding(0, Duration::from_millis(1)), SubResult::TimedOut));
         assert!(matches!(b.take_embedding(1, Duration::from_millis(5)), SubResult::Ok((5, _))));
+    }
+
+    #[test]
+    fn resize_buffers_applies_to_every_topic() {
+        let m = Arc::new(Metrics::new());
+        let b = Broker::new(2, 1, 1, m);
+        b.resize_buffers(3, 2);
+        for t in &b.emb {
+            assert_eq!(t.capacity(), 3);
+        }
+        for t in &b.grad {
+            assert_eq!(t.capacity(), 2);
+        }
+        // The deeper embedding topic now holds three without eviction.
+        assert_eq!(b.publish_embedding(emb_gen(1, 1)), None);
+        assert_eq!(b.publish_embedding(emb_gen(2, 1)), None);
+        assert_eq!(b.publish_embedding(emb_gen(3, 1)), None);
+        assert_eq!(b.publish_embedding(emb_gen(4, 1)), Some((1, 1)));
+        // Zero requests clamp to one rather than wedging the topic.
+        b.resize_buffers(0, 0);
+        assert_eq!(b.emb[0].capacity(), 1);
     }
 
     #[test]

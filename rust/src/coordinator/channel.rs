@@ -18,6 +18,7 @@
 
 use std::collections::{HashMap, VecDeque};
 use crate::util::ordered::{Rank, RankedCondvar, RankedMutex};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
 
 /// Result of a subscribe call.
@@ -52,11 +53,13 @@ struct TopicState<T> {
     closed: bool,
 }
 
-/// A capacity-bounded, batch-ID-addressed topic.
+/// A capacity-bounded, batch-ID-addressed topic. The capacity is an
+/// atomic so the live re-planning controller can retune buffer depths
+/// at epoch boundaries without taking the topic lock.
 pub struct Topic<T> {
     state: RankedMutex<TopicState<T>>,
     cv: RankedCondvar,
-    capacity: usize,
+    capacity: AtomicUsize,
     name: &'static str,
 }
 
@@ -69,13 +72,28 @@ impl<T> Topic<T> {
                 TopicState { map: HashMap::new(), order: VecDeque::new(), closed: false },
             ),
             cv: RankedCondvar::new(),
-            capacity,
+            capacity: AtomicUsize::new(capacity),
             name,
         }
     }
 
     pub fn name(&self) -> &'static str {
         self.name
+    }
+
+    /// Current buffer capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity.load(Ordering::Relaxed)
+    }
+
+    /// Live-retune the buffer capacity (clamped to ≥ 1). Re-planning
+    /// calls this right after an epoch-boundary `reset`, so a shrink
+    /// never has to mass-evict: an over-full topic still sheds exactly
+    /// one oldest message per publish, same as before.
+    pub fn set_capacity(&self, capacity: usize) {
+        // Relaxed: capacity is advisory backpressure, re-read on every
+        // publish; no ordering with the buffered messages is needed.
+        self.capacity.store(capacity.max(1), Ordering::Relaxed);
     }
 
     /// Publish a message under `batch_id` (unversioned: a re-publish of a
@@ -110,7 +128,8 @@ impl<T> Topic<T> {
             return Publish::Stored;
         }
         let mut evicted = None;
-        if s.map.len() >= self.capacity {
+        // Relaxed: see `set_capacity` — advisory bound, re-read per call.
+        if s.map.len() >= self.capacity.load(Ordering::Relaxed) {
             // FIFO drop-oldest (skipping ghost order entries).
             while let Some(old) = s.order.pop_front() {
                 if let Some(m) = s.map.remove(&old) {
@@ -280,6 +299,24 @@ mod tests {
         assert_eq!(t.publish(7, 71), Publish::Stored);
         assert_eq!(t.len(), 1);
         assert_eq!(t.subscribe(7, Duration::from_millis(5)), SubResult::Ok(71));
+    }
+
+    #[test]
+    fn set_capacity_retunes_live() {
+        let t: Topic<u32> = Topic::new("emb", 1);
+        assert_eq!(t.capacity(), 1);
+        t.publish(1, 10);
+        assert_eq!(t.publish(2, 20), Publish::Evicted(1, 10));
+        // Grow: the next publishes fit without eviction.
+        t.set_capacity(3);
+        assert_eq!(t.publish(3, 30), Publish::Stored);
+        assert_eq!(t.publish(4, 40), Publish::Stored);
+        assert_eq!(t.publish(5, 50), Publish::Evicted(2, 20));
+        // Shrink below 1 clamps; an over-full topic sheds one per publish.
+        t.set_capacity(0);
+        assert_eq!(t.capacity(), 1);
+        assert_eq!(t.publish(6, 60), Publish::Evicted(3, 30));
+        assert_eq!(t.len(), 3);
     }
 
     #[test]

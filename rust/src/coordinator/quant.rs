@@ -93,6 +93,17 @@ impl Quantization {
     pub fn is_quantized(&self) -> bool {
         !matches!(self, Quantization::None)
     }
+
+    /// The next, coarser wire mode the re-planning controller steps a
+    /// wire-bound session down to (`none → fp16 → int8`); `None` once
+    /// at the bottom of the ladder.
+    pub fn step_down(self) -> Option<Quantization> {
+        match self {
+            Quantization::None => Some(Quantization::F16),
+            Quantization::F16 => Some(Quantization::Int8),
+            Quantization::Int8 => None,
+        }
+    }
 }
 
 impl fmt::Display for Quantization {
@@ -374,6 +385,19 @@ mod tests {
         assert_eq!(Quantization::from_u8(7), None);
         assert!(!Quantization::None.is_quantized());
         assert!(Quantization::Int8.is_quantized());
+    }
+
+    #[test]
+    fn step_down_walks_the_ladder_once() {
+        assert_eq!(Quantization::None.step_down(), Some(Quantization::F16));
+        assert_eq!(Quantization::F16.step_down(), Some(Quantization::Int8));
+        assert_eq!(Quantization::Int8.step_down(), None);
+        // Every step strictly shrinks the payload.
+        let mut q = Quantization::None;
+        while let Some(next) = q.step_down() {
+            assert!(next.bytes_per_value() < q.bytes_per_value());
+            q = next;
+        }
     }
 
     #[test]

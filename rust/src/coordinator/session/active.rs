@@ -15,6 +15,7 @@ use super::super::ledger::BatchLedger;
 use super::super::messages::GradientMsg;
 use super::super::ps::ParameterServer;
 use super::super::wire;
+use super::supervisor::PoolControl;
 use crate::data::VerticalDataset;
 use crate::experiment::{RunEvent, RunOptions};
 use crate::linalg::{self, BackendKind};
@@ -78,29 +79,69 @@ pub(crate) struct ActiveShared<'a> {
     pub clip: f32,
     pub backend_kind: BackendKind,
     pub total_workers: usize,
+    /// Live pool-control plane: park/unpark signal, per-worker thread
+    /// budget, and workspace-rebuild generation for re-planning.
+    pub ctl: &'a PoolControl,
 }
 
+/// How long a parked worker (index at or beyond the live pool target)
+/// sleeps between polls of the control plane.
+pub(crate) const PARK_POLL: Duration = Duration::from_millis(2);
+
 /// The persistent active-worker loop (runs until the broker closes).
+/// `idx` is this worker's slot in the pre-allocated replica vector;
+/// workers at or beyond the live `active_target` park until a re-plan
+/// grows the pool again.
 pub(crate) fn run_active_worker(
     sh: &ActiveShared<'_>,
     engine: &Arc<dyn SplitEngine>,
+    idx: usize,
     replica: &RankedMutex<ActiveReplica>,
 ) {
     // Worker-lived compute state: scratch arena + reused gather/output
     // buffers — the steady-state step allocates only the gradient
     // payloads it publishes (ownership crosses the channel).
     let mut ws = Workspace::new(linalg::worker_backend(sh.backend_kind, sh.total_workers));
+    // Relaxed: the initial workspace above was built from the same
+    // budget the control plane was seeded with.
+    let mut ws_gen = sh.ctl.generation.load(Ordering::Relaxed);
     let mut step = ActiveStepBuf::default();
     let mut x_buf = Matrix::default();
     let mut y_buf: Vec<f32> = Vec::new();
     'outer: loop {
+        // Relaxed: advisory teardown flag, raised before the broker
+        // closes; a late read just costs one more loop turn.
+        if sh.ctl.shutdown.load(Ordering::Relaxed) {
+            break;
+        }
+        // Relaxed: advisory pool target, polled every turn. Parked
+        // workers never touch a topic, so shrink takes effect as soon
+        // as each excess worker finishes its in-flight batch.
+        if idx >= sh.ctl.active_target.load(Ordering::Relaxed) {
+            std::thread::sleep(PARK_POLL);
+            continue;
+        }
+        // Acquire pairs with the supervisor's Release bump: a changed
+        // generation guarantees the new thread budget is visible.
+        let gen = sh.ctl.generation.load(Ordering::Acquire);
+        if gen != ws_gen {
+            // Resize boundary: rebuild the workspace on the new
+            // per-worker thread budget (the only steady-state-exempt
+            // allocation outside session start).
+            ws_gen = gen;
+            // Relaxed: ordered by the Acquire load above.
+            let threads = sh.ctl.threads.load(Ordering::Relaxed);
+            ws = Workspace::new(linalg::make(sh.backend_kind, threads));
+        }
         let waited = Instant::now();
         // Take any ready embedding from party 0, then join the *same
         // batch ID* from the other parties (ID alignment is guaranteed by
         // the batch plan both sides share after PSI).
         let (id, first) = match sh.broker.take_embedding(0, sh.t_ddl) {
             SubResult::Ok(v) => {
-                sh.metrics.add_wait(waited.elapsed());
+                let w = waited.elapsed();
+                sh.metrics.add_wait(w);
+                sh.metrics.inc("active_wait_us", w.as_micros() as u64);
                 v
             }
             SubResult::Closed => break,
@@ -108,7 +149,9 @@ pub(crate) fn run_active_worker(
                 // Nothing was published within the deadline: there is no
                 // batch to give up on, so nothing is reassigned and
                 // nothing counts as a retry.
-                sh.metrics.add_wait(waited.elapsed());
+                let w = waited.elapsed();
+                sh.metrics.add_wait(w);
+                sh.metrics.inc("active_wait_us", w.as_micros() as u64);
                 continue;
             }
         };
@@ -174,7 +217,11 @@ pub(crate) fn run_active_worker(
         drop(local);
         sh.ps_active.push_grad(&step.grad_active);
         sh.ps_top.push_grad(&step.grad_top);
-        sh.metrics.add_busy(t.elapsed());
+        let busy = t.elapsed();
+        sh.metrics.add_busy(busy);
+        // Per-role busy series: the re-planning controller's refit reads
+        // the epoch-boundary delta of this counter.
+        sh.metrics.inc("active_busy_us", busy.as_micros() as u64);
         sh.metrics.inc("active_steps", 1);
         // Staleness: embedding production version vs the live passive PS
         // version at consume time (remote: newest version seen on the

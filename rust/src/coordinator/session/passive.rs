@@ -25,6 +25,7 @@ use super::super::quant::{FeedbackQuantizer, Quantization};
 use super::super::transport::{Link, LinkRecv, TcpLink};
 use super::super::wire::{self, Frame};
 use super::mean_params;
+use super::supervisor::PoolControl;
 use crate::config::ExperimentConfig;
 use crate::data::VerticalDataset;
 use crate::dp::GaussianMechanism;
@@ -38,6 +39,7 @@ use crate::util::Rng;
 use anyhow::{anyhow, bail, Result};
 use std::collections::{HashMap, VecDeque};
 use std::net::TcpListener;
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -54,12 +56,18 @@ pub(crate) struct PassiveReplica {
 /// replica — the passive half of an Eq. (5) PS barrier. One
 /// implementation shared by the in-proc supervisor and the remote
 /// server, so the two transports cannot diverge.
+///
+/// `take` bounds the per-party fold to the first `take` replicas — the
+/// live prefix when re-planning has parked some of the pre-allocated
+/// pool (parked replicas are resynced from the PS if the pool grows
+/// again). Pass `usize::MAX` to fold every replica.
 pub(crate) fn fold_passive_barrier(
     replicas: &[Vec<RankedMutex<PassiveReplica>>],
     ps: &[ParameterServer],
+    take: usize,
 ) {
     for (party, reps) in replicas.iter().enumerate() {
-        let mut guards: Vec<_> = reps.iter().map(|m| m.lock()).collect();
+        let mut guards: Vec<_> = reps.iter().take(take.max(1)).map(|m| m.lock()).collect();
         let mean_p = mean_params(guards.iter().map(|g| &g.params));
         ps[party].set_params(mean_p);
         let (bcast_p, vp) = ps[party].fetch();
@@ -111,6 +119,13 @@ impl PassiveCompute {
         }
     }
 
+    /// Rebuild the workspace on a new per-worker thread budget — called
+    /// by the in-proc worker loop at a re-planning resize boundary (the
+    /// only steady-state-exempt allocation outside session start).
+    pub fn retune(&mut self, backend_kind: BackendKind, threads: usize) {
+        self.ws = Workspace::new(linalg::make(backend_kind, threads));
+    }
+
     /// Apply one claimed cut-layer gradient: gather → backward → clip →
     /// replica SGD step → PS push, with busy-time + `passive_bwd`
     /// accounting. The caller has already made the exactly-once claim.
@@ -143,7 +158,11 @@ impl PassiveCompute {
         local.params.sgd_step(&self.grad_buf, lr);
         drop(local);
         ps.push_grad(&self.grad_buf);
-        metrics.add_busy(t.elapsed());
+        let busy = t.elapsed();
+        metrics.add_busy(busy);
+        // Per-role busy series: the re-planning controller's refit reads
+        // the epoch-boundary delta of this counter.
+        metrics.inc("passive_busy_us", busy.as_micros() as u64);
         metrics.inc("passive_bwd", 1);
     }
 
@@ -168,7 +187,9 @@ impl PassiveCompute {
         let version = local.version;
         drop(local);
         dp.lock().perturb(&mut self.z_buf);
-        metrics.add_busy(t.elapsed());
+        let busy = t.elapsed();
+        metrics.add_busy(busy);
+        metrics.inc("passive_busy_us", busy.as_micros() as u64);
         EmbeddingMsg {
             batch_id: job.batch_id,
             party,
@@ -195,27 +216,58 @@ pub(crate) struct LocalPassiveShared<'a> {
     pub backend_kind: BackendKind,
     pub total_workers: usize,
     pub poll: Duration,
+    /// Live pool-control plane: park/unpark signal, per-worker thread
+    /// budget, and workspace-rebuild generation for re-planning.
+    pub ctl: &'a PoolControl,
 }
 
 /// The persistent in-proc passive-worker loop (runs until the broker
-/// closes). Behavior is identical to the pre-refactor single-file
-/// session.
+/// closes). `idx` is this worker's slot within its party's pre-allocated
+/// replica vector; workers at or beyond the live `passive_target` park
+/// until a re-plan grows the pool again.
 pub(crate) fn run_local_passive_worker(
     sh: &LocalPassiveShared<'_>,
     engine: &Arc<dyn SplitEngine>,
     ps: &ParameterServer,
     party: usize,
+    idx: usize,
     replica: &RankedMutex<PassiveReplica>,
 ) {
     // Worker-lived compute state — the steady-state step allocates only
     // the embedding payloads it publishes (ownership crosses the channel).
     let mut comp = PassiveCompute::new(sh.backend_kind, sh.total_workers);
+    // Relaxed: the initial workspace above was built from the same
+    // budget the control plane was seeded with.
+    let mut ws_gen = sh.ctl.generation.load(Ordering::Relaxed);
     loop {
+        // Relaxed: advisory teardown flag, raised before the broker
+        // closes; a late read just costs one more loop turn.
+        if sh.ctl.shutdown.load(Ordering::Relaxed) {
+            break;
+        }
+        // Relaxed: advisory pool target, polled every turn. Parked
+        // workers never touch a topic, so shrink takes effect as soon
+        // as each excess worker finishes its in-flight batch.
+        if idx >= sh.ctl.passive_target.load(Ordering::Relaxed) {
+            std::thread::sleep(super::active::PARK_POLL);
+            continue;
+        }
+        // Acquire pairs with the supervisor's Release bump: a changed
+        // generation guarantees the new thread budget is visible.
+        let gen = sh.ctl.generation.load(Ordering::Acquire);
+        if gen != ws_gen {
+            ws_gen = gen;
+            // Relaxed: ordered by the Acquire load above.
+            let threads = sh.ctl.threads.load(Ordering::Relaxed);
+            comp.retune(sh.backend_kind, threads);
+        }
         // Priority 1: backward work from the gradient channel.
         let waited = Instant::now();
         match sh.broker.take_gradient(party, sh.poll) {
             SubResult::Ok((id, gmsg)) => {
-                sh.metrics.add_wait(waited.elapsed());
+                let w = waited.elapsed();
+                sh.metrics.add_wait(w);
+                sh.metrics.inc("passive_wait_us", w.as_micros() as u64);
                 let Some(rows) = sh.ledger.claim_bwd(id, gmsg.generation, party) else {
                     // Stale generation or already counted for this party:
                     // exactly-once.
@@ -242,7 +294,9 @@ pub(crate) fn run_local_passive_worker(
             }
             SubResult::Closed => break,
             SubResult::TimedOut => {
-                sh.metrics.add_wait(waited.elapsed());
+                let w = waited.elapsed();
+                sh.metrics.add_wait(w);
+                sh.metrics.inc("passive_wait_us", w.as_micros() as u64);
             }
         }
         // Priority 2: produce the next embedding.
@@ -305,9 +359,11 @@ struct ServeShared<'a> {
     backend_kind: BackendKind,
     total_workers: usize,
     poll: Duration,
-    /// Wire quantization negotiated at the handshake (`None` = f32
-    /// frames). Fixed for the lifetime of the session.
-    quant: Quantization,
+    /// Wire quantization for embedding frames, seeded from the handshake
+    /// and stepped down live when the active's re-planning controller
+    /// sends `SetQuantization` (`as_u8` encoding; workers re-read it per
+    /// embedding).
+    quant: &'a AtomicU8,
 }
 
 /// The remote passive-worker loop: same per-batch compute as the in-proc
@@ -322,14 +378,18 @@ fn run_remote_passive_worker(
     let mut comp = PassiveCompute::new(sh.backend_kind, sh.total_workers);
     // Per-worker error-feedback state: whatever a quantized embedding
     // frame failed to carry is folded into this worker's next one, so
-    // quantization noise stays unbiased over the session.
-    let mut fq = FeedbackQuantizer::new(sh.quant);
+    // quantization noise stays unbiased over the session. Rebuilt (reset)
+    // whenever the live wire mode steps — the stashed residual belongs to
+    // the old mode's value grid.
+    let mut fq = FeedbackQuantizer::new(Quantization::None);
     loop {
         // Priority 1: backward work from the gradient inbox.
         let waited = Instant::now();
         match sh.inbox[party].subscribe_any(sh.poll) {
             SubResult::Ok((id, gmsg)) => {
-                sh.metrics.add_wait(waited.elapsed());
+                let w = waited.elapsed();
+                sh.metrics.add_wait(w);
+                sh.metrics.inc("passive_wait_us", w.as_micros() as u64);
                 // Claim at take time: at most one applied gradient per
                 // (epoch, batch, party) — the remote mirror of
                 // `BatchLedger::claim_bwd`.
@@ -377,7 +437,9 @@ fn run_remote_passive_worker(
             }
             SubResult::Closed => break,
             SubResult::TimedOut => {
-                sh.metrics.add_wait(waited.elapsed());
+                let w = waited.elapsed();
+                sh.metrics.add_wait(w);
+                sh.metrics.inc("passive_wait_us", w.as_micros() as u64);
             }
         }
         // Priority 2: produce the next embedding.
@@ -405,9 +467,18 @@ fn run_remote_passive_worker(
                 sh.metrics,
             );
             sh.metrics.inc("emb_published", 1);
-            // Negotiated quantization applies at the codec boundary: the
-            // compute path above is identical either way.
-            let frame = if sh.quant.is_quantized() {
+            // Live wire mode applies at the codec boundary: the compute
+            // path above is identical either way. Re-read per embedding —
+            // the dispatcher steps it when the active's re-planning
+            // controller decides the session is wire-bound.
+            // Relaxed: advisory mode; a frame encoded under the old mode
+            // still decodes (the frame type carries the mode).
+            let mode = Quantization::from_u8(sh.quant.load(Ordering::Relaxed))
+                .unwrap_or(Quantization::None);
+            if fq.mode() != mode {
+                fq = FeedbackQuantizer::new(mode);
+            }
+            let frame = if mode.is_quantized() {
                 Frame::EmbeddingQ(QuantEmbeddingMsg::from_msg(&msg, &mut fq))
             } else {
                 Frame::Embedding(msg)
@@ -571,6 +642,9 @@ pub fn serve_passive_session(
     // `unflatten` (which asserts on mismatch) ever sees them.
     let passive_param_counts: Vec<usize> =
         spec.passive_bottoms.iter().map(|s| s.param_count()).collect();
+    // The live wire mode starts at the handshake's answer and may be
+    // stepped down mid-session by a `SetQuantization` frame.
+    let live_quant = AtomicU8::new(negotiated_quant.as_u8());
     let sh = ServeShared {
         link: &link,
         metrics: &metrics,
@@ -585,7 +659,7 @@ pub fn serve_passive_session(
         backend_kind,
         total_workers,
         poll: Duration::from_millis(2),
-        quant: negotiated_quant,
+        quant: &live_quant,
     };
 
     std::thread::scope(|s| {
@@ -752,7 +826,7 @@ pub fn serve_passive_session(
                         // drained (every ack received), so workers are
                         // idle and the replica locks are uncontended.
                         if broadcast {
-                            fold_passive_barrier(&replicas, &ps);
+                            fold_passive_barrier(&replicas, &ps, usize::MAX);
                             metrics.inc("ps_barriers", 1);
                         } else {
                             // No broadcast: fold the pushed backlog so
@@ -811,6 +885,18 @@ pub fn serve_passive_session(
                         }
                         ps[party].restore(params, version);
                         metrics.inc("params_restored", 1);
+                    }
+                    Frame::SetQuantization { mode } => {
+                        // The active's re-planning controller decided the
+                        // session is wire-bound: step the embedding codec.
+                        // Fire-and-forget — the frame type carries the
+                        // mode, so both ends decode whatever arrives
+                        // regardless of when each worker observes the
+                        // switch.
+                        // Relaxed: advisory mode, re-read by workers per
+                        // embedding.
+                        live_quant.store(mode.as_u8(), Ordering::Relaxed);
+                        metrics.inc("quantization_stepped", 1);
                     }
                     Frame::Shutdown => {
                         clean_shutdown = true;

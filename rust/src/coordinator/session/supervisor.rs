@@ -40,14 +40,19 @@ use super::passive::{
 };
 use super::{evaluate_ws, mean_params, reached, SessionResult};
 use crate::data::BatchPlan;
-use crate::experiment::{RunEvent, TrainCtx};
+use crate::experiment::{RunEvent, RunOptions, TrainCtx};
 use crate::linalg;
+use crate::metrics::Metrics;
 use crate::model::{MlpParams, SplitModelSpec, SplitParams, Workspace};
+use crate::planner::{
+    Controller, ControllerConfig, CostConstants, CostModel, Decision, EpochObservation,
+    MemoryModel, WireAction,
+};
 use crate::util::ordered::{Rank, RankedCondvar, RankedMutex};
 use crate::util::{Rng, Stopwatch};
 use anyhow::{anyhow, bail, Result};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -56,6 +61,120 @@ use std::time::{Duration, Instant};
 const STALL_TIMEOUT: Duration = Duration::from_secs(180);
 /// How long to wait for barrier acks / fetched parameters.
 const SYNC_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Live pool-control plane shared with every spawned worker: the
+/// re-planning apply path writes the new targets/thread budget and bumps
+/// the generation; workers poll it at their loop top. Worker slots are
+/// pre-spawned to the replica cap, so a grow only moves a target — it
+/// never spawns a thread mid-session.
+pub(crate) struct PoolControl {
+    /// Live active-pool size; workers with `idx >=` this park.
+    pub active_target: AtomicUsize,
+    /// Live per-party passive-pool size.
+    pub passive_target: AtomicUsize,
+    /// Per-worker linalg thread budget for workspace rebuilds.
+    pub threads: AtomicUsize,
+    /// Bumped (Release) after targets/threads change; a worker whose
+    /// Acquire load observes a new value rebuilds its workspace.
+    pub generation: AtomicU64,
+    /// Orderly teardown: raised before the broker closes so parked
+    /// workers (which never observe a `Closed` topic) exit too.
+    pub shutdown: AtomicBool,
+}
+
+impl PoolControl {
+    pub(crate) fn new(w_a: usize, w_p: usize, threads: usize) -> PoolControl {
+        PoolControl {
+            active_target: AtomicUsize::new(w_a),
+            passive_target: AtomicUsize::new(w_p),
+            threads: AtomicUsize::new(threads.max(1)),
+            generation: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+}
+
+/// Build the live re-planning controller for a session starting at
+/// `(w_a, w_p)` with live caps `(cap_a, cap_p)`; `None` when
+/// `[replanning]` is off. `pin_passive` freezes the passive pool —
+/// link-mode sessions cannot resize the remote party's workers.
+fn make_controller(
+    ctx: &TrainCtx<'_>,
+    w_a: usize,
+    w_p: usize,
+    cap_a: usize,
+    cap_p: usize,
+    pin_passive: bool,
+) -> Option<RankedMutex<Controller>> {
+    let r = &ctx.cfg.replanning;
+    if !r.enabled() {
+        return None;
+    }
+    // Seed model: the balanced §5 constants on this machine's core
+    // split, with the codec-true payload size. The seed bandwidth is a
+    // placeholder the first wire-carrying epoch overwrites; the EWMA
+    // scales absorb seed error on the compute side the same way.
+    let cores = (linalg::available_threads() / 2).max(1);
+    let bytes = crate::profiler::payload_bytes_per_sample(ctx.spec.embed_dim());
+    let seed = CostModel {
+        consts: CostConstants::balanced_default(),
+        c_a: cores,
+        c_p: cores,
+        emb_bytes_per_sample: bytes,
+        grad_bytes_per_sample: bytes,
+        bandwidth_bps: 1e9,
+    };
+    let cfg = ControllerConfig {
+        mode: r.mode,
+        ewma_alpha: r.ewma_alpha,
+        hysteresis: r.hysteresis,
+        cooldown_epochs: r.cooldown_epochs,
+        max_w_a: cap_a,
+        max_w_p: if pin_passive { w_p } else { cap_p },
+        min_w_a: 1,
+        min_w_p: if pin_passive { w_p } else { 1 },
+        step_quantization: r.step_quantization,
+    };
+    Some(RankedMutex::new(
+        Rank::Controller,
+        Controller::new(
+            cfg,
+            &seed,
+            MemoryModel::default_profile(),
+            ctx.cfg.train.batch_size,
+            w_a,
+            w_p,
+        ),
+    ))
+}
+
+/// Record one controller decision: the `replan_*` per-epoch series plus
+/// the `Replanned` run event. `from` is the live plan *before* any apply.
+fn note_replan(
+    metrics: &Metrics,
+    opts: &RunOptions,
+    epoch: usize,
+    from: (usize, usize),
+    scales: (f64, f64),
+    eff_bw_bps: f64,
+    d: &Decision,
+) {
+    let x = epoch as f64;
+    metrics.push_point("replan_gain", x, d.gain);
+    metrics.push_point("replan_w_a", x, d.w_a as f64);
+    metrics.push_point("replan_w_p", x, d.w_p as f64);
+    metrics.push_point("replan_scale_a", x, scales.0);
+    metrics.push_point("replan_scale_p", x, scales.1);
+    metrics.push_point("replan_eff_bw_mbps", x, eff_bw_bps / 1e6);
+    metrics.push_point("replan_applied", x, if d.apply { 1.0 } else { 0.0 });
+    opts.emit(RunEvent::Replanned {
+        epoch,
+        from,
+        to: (d.w_a, d.w_p),
+        predicted_gain: d.gain,
+        applied: d.apply,
+    });
+}
 
 /// Train with the full PubSub-VFL system, on the transport selected by
 /// `cfg.transport`: `inproc` runs both parties in this process (the
@@ -178,6 +297,14 @@ fn train_local(ctx: &TrainCtx<'_>) -> Result<SessionResult> {
     let clip = cfg.train.grad_clip as f32;
     let w_a = cfg.parties.active_workers.max(1);
     let w_p = cfg.parties.passive_workers.max(1);
+    // Live caps: replica slots and worker threads are pre-allocated to
+    // the cap, so a re-planning grow never spawns or reallocates
+    // mid-session. With the controller off the cap is the live size.
+    let (cap_a, cap_p) = if cfg.replanning.enabled() {
+        (cfg.replanning.cap_active(w_a), cfg.replanning.cap_passive(w_p))
+    } else {
+        (w_a, w_p)
+    };
     let t_ddl = Duration::from_millis(if cfg.ablation.no_deadline {
         // "w/o T_ddl": the deadline mechanism is disabled — subscribers
         // block (bounded here by a long poll so the loop can still
@@ -218,13 +345,18 @@ fn train_local(ctx: &TrainCtx<'_>) -> Result<SessionResult> {
         disabled: cfg.ablation.no_semi_async,
     };
 
+    // Live pool-control plane + the epoch-boundary feedback controller.
+    // Both parties start at the configured plan; `live_w_a`/`live_w_p`
+    // track what the controller has resized them to.
+    let ctl = PoolControl::new(w_a, w_p, linalg::thread_budget(total_workers));
+    let replan = make_controller(ctx, w_a, w_p, cap_a, cap_p, false);
+    let mut live_w_a = w_a;
+    let mut live_w_p = w_p;
+    let mut depth_p = cfg.train.buffer_p;
+    let mut depth_q = cfg.train.buffer_q;
+
     // Broker capacity: p/q scaled by subscriber pools (as in the sim).
-    let broker = Broker::new(
-        k,
-        cfg.train.buffer_p * w_a,
-        cfg.train.buffer_q * w_p,
-        Arc::clone(metrics),
-    );
+    let broker = Broker::new(k, depth_p * w_a, depth_q * w_p, Arc::clone(metrics));
 
     // The exactly-once batch lifecycle + the pool's work queues.
     let ledger = BatchLedger::new(k);
@@ -236,7 +368,7 @@ fn train_local(ctx: &TrainCtx<'_>) -> Result<SessionResult> {
     // Worker-local replicas, shared with the supervisor (which averages
     // and re-broadcasts them at barriers) behind per-replica mutexes.
     // Workers hold their own lock only while computing a step.
-    let active_replicas: Vec<RankedMutex<ActiveReplica>> = (0..w_a)
+    let active_replicas: Vec<RankedMutex<ActiveReplica>> = (0..cap_a)
         .map(|_| {
             RankedMutex::new(
                 Rank::Replica,
@@ -246,7 +378,7 @@ fn train_local(ctx: &TrainCtx<'_>) -> Result<SessionResult> {
         .collect();
     let passive_replicas: Vec<Vec<RankedMutex<PassiveReplica>>> = (0..k)
         .map(|p| {
-            (0..w_p)
+            (0..cap_p)
                 .map(|_| {
                     RankedMutex::new(
                         Rank::Replica,
@@ -346,6 +478,7 @@ fn train_local(ctx: &TrainCtx<'_>) -> Result<SessionResult> {
         clip,
         backend_kind,
         total_workers,
+        ctl: &ctl,
     };
     let passive_sh = LocalPassiveShared {
         broker: &broker,
@@ -359,24 +492,27 @@ fn train_local(ctx: &TrainCtx<'_>) -> Result<SessionResult> {
         backend_kind,
         total_workers,
         poll,
+        ctl: &ctl,
     };
 
     let run_result: Result<()> = std::thread::scope(|s| {
         // ---- persistent passive workers (live for the whole session) --
+        // Spawned to the replica *cap*: workers beyond the live target
+        // park until a re-plan grows the pool.
         for (party, replicas) in passive_replicas.iter().enumerate() {
-            for replica in replicas.iter() {
+            for (idx, replica) in replicas.iter().enumerate() {
                 let engine = Arc::clone(engine);
                 let sh = &passive_sh;
                 let ps = &ps_passive[party];
-                s.spawn(move || run_local_passive_worker(sh, &engine, ps, party, replica));
+                s.spawn(move || run_local_passive_worker(sh, &engine, ps, party, idx, replica));
             }
         }
 
         // ---- persistent active workers --------------------------------
-        for replica in active_replicas.iter() {
+        for (idx, replica) in active_replicas.iter().enumerate() {
             let engine = Arc::clone(engine);
             let sh = &active_sh;
-            s.spawn(move || run_active_worker(sh, &engine, replica));
+            s.spawn(move || run_active_worker(sh, &engine, idx, replica));
         }
 
         // ---- epoch supervisor (this thread) ---------------------------
@@ -405,6 +541,14 @@ fn train_local(ctx: &TrainCtx<'_>) -> Result<SessionResult> {
             if batches.is_empty() {
                 break;
             }
+            // Per-epoch observation baselines for the re-planning
+            // controller: busy/retry deltas against the cumulative
+            // counters, wall from here to drain.
+            let epoch_t0 = Instant::now();
+            let busy_base =
+                (metrics.counter("active_busy_us"), metrics.counter("passive_busy_us"));
+            let retries_base = ledger.retried();
+            let mut stale_mean_epoch = 0.0;
             // Anything still buffered belongs to a finished epoch and is
             // stale by construction.
             broker.reset();
@@ -430,6 +574,7 @@ fn train_local(ctx: &TrainCtx<'_>) -> Result<SessionResult> {
                 }
                 std::thread::sleep(Duration::from_micros(200));
             }
+            let epoch_wall = epoch_t0.elapsed();
             if cancelled {
                 opts.emit(RunEvent::Cancelled { epoch });
                 break;
@@ -442,6 +587,7 @@ fn train_local(ctx: &TrainCtx<'_>) -> Result<SessionResult> {
             if n > 0 {
                 let mean = stale_sum.load(Ordering::Relaxed) as f64 / n as f64;
                 let max = stale_max.load(Ordering::Relaxed);
+                stale_mean_epoch = mean;
                 metrics.push_point("staleness_mean", epoch as f64, mean);
                 metrics.gauge_max("staleness_max", max as f64);
                 opts.emit(RunEvent::Staleness { epoch, mean, max });
@@ -460,8 +606,8 @@ fn train_local(ctx: &TrainCtx<'_>) -> Result<SessionResult> {
                 // version into every replica. Workers are idle here (the
                 // epoch is drained and the next one is not installed), so
                 // the replica locks are uncontended.
-                fold_active_barrier(&active_replicas, &ps_active, &ps_top);
-                fold_passive_barrier(&passive_replicas, &ps_passive);
+                fold_active_barrier(&active_replicas[..live_w_a], &ps_active, &ps_top);
+                fold_passive_barrier(&passive_replicas, &ps_passive, live_w_p);
                 metrics.inc("ps_barriers", 1);
                 opts.emit(RunEvent::PsBarrier { epoch });
             } else {
@@ -482,7 +628,8 @@ fn train_local(ctx: &TrainCtx<'_>) -> Result<SessionResult> {
             loss_curve.push((epoch as f64, mean_loss));
             metrics.push_point("train_loss", epoch as f64, mean_loss);
 
-            let eval_params = current_params(&active_replicas, &passive_replicas);
+            let eval_params =
+                current_params(&active_replicas[..live_w_a], &passive_replicas, live_w_p);
             let metric = evaluate_ws(engine.as_ref(), &eval_params, test, b, task, &mut eval_ws);
             metric_curve.push((epoch as f64, metric));
             metrics.push_point("eval_metric", epoch as f64, metric);
@@ -526,13 +673,95 @@ fn train_local(ctx: &TrainCtx<'_>) -> Result<SessionResult> {
                 }
             }
 
+            // ---- live re-planning (epoch-boundary controller) --------
+            if let Some(rc) = replan.as_ref() {
+                let obs = EpochObservation {
+                    epoch,
+                    wall_s: epoch_wall.as_secs_f64(),
+                    batches: batches.len() as u64,
+                    batch_size: b,
+                    active_busy_s: metrics
+                        .counter("active_busy_us")
+                        .saturating_sub(busy_base.0) as f64
+                        / 1e6,
+                    passive_busy_s: metrics
+                        .counter("passive_busy_us")
+                        .saturating_sub(busy_base.1) as f64
+                        / 1e6,
+                    // In-proc transport: no wire, no quantization lever.
+                    wire_bytes: 0,
+                    staleness_mean: stale_mean_epoch,
+                    retries: (ledger.retried() - retries_base) as u64,
+                    quant_can_step: false,
+                };
+                let (d, scales, bw) = {
+                    let mut c = rc.lock();
+                    let d = c.observe(&obs);
+                    (d, c.scales(), c.effective_bandwidth())
+                };
+                note_replan(metrics, opts, epoch, (live_w_a, live_w_p), scales, bw, &d);
+                if d.apply {
+                    let na = d.w_a.clamp(1, cap_a);
+                    let np = d.w_p.clamp(1, cap_p);
+                    // Grow resync: workers about to unpark have been
+                    // parked with whatever params they held when the pool
+                    // shrank (or session-start params if never live) —
+                    // seed them from the PS broadcast so the barrier fold
+                    // doesn't average in stale replicas.
+                    if na > live_w_a {
+                        let (pa, _) = ps_active.fetch();
+                        let (pt, _) = ps_top.fetch();
+                        for r in &active_replicas[live_w_a..na] {
+                            let mut g = r.lock();
+                            g.active = pa.clone();
+                            g.top = pt.clone();
+                        }
+                    }
+                    if np > live_w_p {
+                        for (party, reps) in passive_replicas.iter().enumerate() {
+                            let (pp, v) = ps_passive[party].fetch();
+                            for r in &reps[live_w_p..np] {
+                                let mut g = r.lock();
+                                g.params = pp.clone();
+                                g.version = v;
+                            }
+                        }
+                    }
+                    live_w_a = na;
+                    live_w_p = np;
+                    if d.bump_buffers {
+                        depth_p = (depth_p * 2).min(64);
+                        depth_q = (depth_q * 2).min(64);
+                    }
+                    // Topics are empty (epoch drained) so a shrink never
+                    // mass-evicts live messages.
+                    broker.resize_buffers(depth_p * na, depth_q * np);
+                    let threads = linalg::thread_budget(na + k * np);
+                    metrics.gauge_max("linalg_threads_per_worker", threads as f64);
+                    // Relaxed: the Release bump below publishes these
+                    // stores to workers via their Acquire generation load.
+                    ctl.threads.store(threads, Ordering::Relaxed);
+                    ctl.active_target.store(na, Ordering::Relaxed);
+                    ctl.passive_target.store(np, Ordering::Relaxed);
+                    // Release pairs with the workers' Acquire generation
+                    // load: a worker that sees the new generation also
+                    // sees the new thread budget and pool targets.
+                    ctl.generation.fetch_add(1, Ordering::Release);
+                    metrics.inc("replans_applied", 1);
+                }
+            }
+
             if reached(task, metric, ctx.target()) {
                 reached_target = true;
                 break;
             }
         }
 
-        // End of session: release the pool (workers exit on `Closed`).
+        // End of session: release the pool (workers exit on `Closed`),
+        // including parked workers that never see `Closed`.
+        // Relaxed: advisory teardown flag; `broker.close()` below is the
+        // hard stop for unparked workers.
+        ctl.shutdown.store(true, Ordering::Relaxed);
         broker.close();
         match epoch_err {
             Some(e) => Err(e),
@@ -541,7 +770,7 @@ fn train_local(ctx: &TrainCtx<'_>) -> Result<SessionResult> {
     });
     run_result?;
 
-    let params = current_params(&active_replicas, &passive_replicas);
+    let params = current_params(&active_replicas[..live_w_a], &passive_replicas, live_w_p);
     let final_metric = evaluate_ws(engine.as_ref(), &params, test, b, task, &mut eval_ws);
     Ok(SessionResult {
         params,
@@ -583,9 +812,14 @@ fn mean_active(active: &[RankedMutex<ActiveReplica>]) -> (MlpParams, MlpParams) 
     )
 }
 
+/// Mean the live prefix of the replica pools into a parameter snapshot.
+/// `take_p` bounds the passive fold to the live pool (parked replicas
+/// beyond it hold stale params by construction); pass `usize::MAX` to
+/// fold everything.
 fn current_params(
     active: &[RankedMutex<ActiveReplica>],
     passive: &[Vec<RankedMutex<PassiveReplica>>],
+    take_p: usize,
 ) -> SplitParams {
     let (mean_a, mean_t) = mean_active(active);
     SplitParams {
@@ -594,7 +828,8 @@ fn current_params(
         passive: passive
             .iter()
             .map(|reps| {
-                let guards: Vec<_> = reps.iter().map(|m| m.lock()).collect();
+                let guards: Vec<_> =
+                    reps.iter().take(take_p.max(1)).map(|m| m.lock()).collect();
                 mean_params(guards.iter().map(|g| &g.params))
             })
             .collect(),
@@ -664,12 +899,24 @@ pub fn train_pubsub_over_link_with(
         disabled: cfg.ablation.no_semi_async,
     };
 
+    // Re-planning (link mode): only the active pool lives in this
+    // process, so the controller may only move `p` — the passive pool is
+    // pinned at its configured size (min == max == w_p) and the wire
+    // lever is quantization step-down instead.
+    let cap_a = if cfg.replanning.enabled() { cfg.replanning.cap_active(w_a) } else { w_a };
+    let ctl = PoolControl::new(w_a, w_p, linalg::thread_budget(w_a));
+    let replan = make_controller(ctx, w_a, w_p, cap_a, w_p, true);
+    // Live plan + buffer depths, owned by the epoch supervisor (the only
+    // writer); spawned workers read the control plane instead.
+    let mut live_w_a = w_a;
+    let mut depth_p = cfg.train.buffer_p;
+
     // The broker is hosted here (middleware colocated with the active
     // party): the embedding buffers apply exactly as in-proc; the
     // gradient topics act as the egress staging the pumps drain.
     let broker = Broker::new(
         k,
-        cfg.train.buffer_p * w_a,
+        depth_p * w_a,
         cfg.train.buffer_q * w_p,
         Arc::clone(metrics),
     );
@@ -690,7 +937,9 @@ pub fn train_pubsub_over_link_with(
     let durable_rejoin = hub.is_some() && reconnect.is_some();
     let rejoin_count = AtomicU64::new(0);
 
-    let active_replicas: Vec<RankedMutex<ActiveReplica>> = (0..w_a)
+    // Replicas are allocated to the re-planning cap; workers beyond the
+    // live target park until the controller grows the pool.
+    let active_replicas: Vec<RankedMutex<ActiveReplica>> = (0..cap_a)
         .map(|_| {
             RankedMutex::new(
                 Rank::Replica,
@@ -869,6 +1118,7 @@ pub fn train_pubsub_over_link_with(
         clip,
         backend_kind,
         total_workers,
+        ctl: &ctl,
     };
 
     let run_result: Result<()> = std::thread::scope(|s| {
@@ -1059,8 +1309,9 @@ pub fn train_pubsub_over_link_with(
                 loop {
                     match broker.take_gradient(party, Duration::from_millis(50)) {
                         SubResult::Ok((_id, g)) => {
-                            // Relaxed: mode is set once per handshake; a
-                            // frame sent under a stale mode still decodes.
+                            // Relaxed: mode is set at the handshake and
+                            // stepped live by re-planning; a frame sent
+                            // under a stale mode still decodes.
                             let mode =
                                 Quantization::from_u8(negotiated_quant.load(Ordering::Relaxed))
                                     .unwrap_or(Quantization::None);
@@ -1100,10 +1351,12 @@ pub fn train_pubsub_over_link_with(
         }
 
         // ---- active workers -------------------------------------------
-        for replica in active_replicas.iter() {
+        // Spawned to the replica cap: workers at or beyond the live
+        // target park on the control plane until a re-plan grows the pool.
+        for (idx, replica) in active_replicas.iter().enumerate() {
             let engine = Arc::clone(engine);
             let sh = &active_sh;
-            s.spawn(move || run_active_worker(sh, &engine, replica));
+            s.spawn(move || run_active_worker(sh, &engine, idx, replica));
         }
 
         // ---- response waits -------------------------------------------
@@ -1255,6 +1508,13 @@ pub fn train_pubsub_over_link_with(
                 if batches.is_empty() {
                     break;
                 }
+                // Per-epoch observation baselines for the re-planning
+                // controller (committed attempt only reads the deltas;
+                // a rejoined attempt's wall correctly includes the retry).
+                let epoch_t0 = Instant::now();
+                let busy_base = metrics.counter("active_busy_us");
+                let retries_base = ledger.retried();
+                let mut stale_mean_epoch = 0.0;
                 let wire_batches: Vec<(u64, Vec<u32>)> = batches
                     .iter()
                     .map(|(id, rows)| (*id, rows.iter().map(|&r| r as u32).collect()))
@@ -1386,12 +1646,13 @@ pub fn train_pubsub_over_link_with(
                         do_rejoin(metrics.counter("bwd_acked") - acked_before, &barrier_ckpt)?;
                         continue;
                     }
+                    let epoch_wall = epoch_t0.elapsed();
 
                     // ---- semi-async PS schedule: active half local, --
                     // passive half behind the barrier frame.
                     let barrier = schedule.barrier_after_epoch(epoch);
                     if barrier {
-                        fold_active_barrier(&active_replicas, &ps_active, &ps_top);
+                        fold_active_barrier(&active_replicas[..live_w_a], &ps_active, &ps_top);
                     } else {
                         ps_active.aggregate();
                         ps_top.aggregate();
@@ -1437,6 +1698,7 @@ pub fn train_pubsub_over_link_with(
                     if n > 0 {
                         let mean = stale_sum.load(Ordering::Relaxed) as f64 / n as f64;
                         let max = stale_max.load(Ordering::Relaxed);
+                        stale_mean_epoch = mean;
                         metrics.push_point("staleness_mean", epoch as f64, mean);
                         metrics.gauge_max("staleness_max", max as f64);
                         opts.emit(RunEvent::Staleness { epoch, mean, max });
@@ -1469,6 +1731,10 @@ pub fn train_pubsub_over_link_with(
                         epoch as f64,
                         d(st.decode_ns, wire_prev.decode_ns) / 1e6,
                     );
+                    // The controller's bandwidth refit reads this epoch's
+                    // payload both ways.
+                    let wire_delta_bytes = st.tx_bytes.saturating_sub(wire_prev.tx_bytes)
+                        + st.rx_bytes.saturating_sub(wire_prev.rx_bytes);
                     wire_prev = st;
 
                     // Injected-fault counters (chaos-decorated links
@@ -1508,7 +1774,7 @@ pub fn train_pubsub_over_link_with(
                     loss_curve.push((epoch as f64, mean_loss));
                     metrics.push_point("train_loss", epoch as f64, mean_loss);
 
-                    let (mean_a, mean_t) = mean_active(&active_replicas);
+                    let (mean_a, mean_t) = mean_active(&active_replicas[..live_w_a]);
                     let eval_params = SplitParams {
                         active: mean_a,
                         top: mean_t,
@@ -1567,6 +1833,84 @@ pub fn train_pubsub_over_link_with(
                         h.on_barrier()?;
                     }
 
+                    // ---- live re-planning (epoch-boundary controller) -
+                    if let Some(rc) = replan.as_ref() {
+                        // Relaxed: advisory mode cache; the step below is
+                        // the only writer outside the handshake.
+                        let cur_q =
+                            Quantization::from_u8(negotiated_quant.load(Ordering::Relaxed))
+                                .unwrap_or(Quantization::None);
+                        let obs = EpochObservation {
+                            epoch,
+                            wall_s: epoch_wall.as_secs_f64(),
+                            batches: batches.len() as u64,
+                            batch_size: b,
+                            active_busy_s: metrics
+                                .counter("active_busy_us")
+                                .saturating_sub(busy_base) as f64
+                                / 1e6,
+                            // The remote party does not report busy time;
+                            // the refit falls back to the seeded passive
+                            // constants.
+                            passive_busy_s: 0.0,
+                            wire_bytes: wire_delta_bytes,
+                            staleness_mean: stale_mean_epoch,
+                            retries: (ledger.retried().saturating_sub(retries_base)) as u64,
+                            quant_can_step: cfg.replanning.step_quantization
+                                && cur_q.step_down().is_some(),
+                        };
+                        let (d, scales, bw) = {
+                            let mut c = rc.lock();
+                            let d = c.observe(&obs);
+                            (d, c.scales(), c.effective_bandwidth())
+                        };
+                        note_replan(metrics, opts, epoch, (live_w_a, w_p), scales, bw, &d);
+                        if d.apply {
+                            let na = d.w_a.clamp(1, cap_a);
+                            // Grow resync: unparking workers re-seed from
+                            // the PS broadcast so the next barrier fold
+                            // doesn't average in stale replicas.
+                            if na > live_w_a {
+                                let (pa, _) = ps_active.fetch();
+                                let (pt, _) = ps_top.fetch();
+                                for r in &active_replicas[live_w_a..na] {
+                                    let mut g = r.lock();
+                                    g.active = pa.clone();
+                                    g.top = pt.clone();
+                                }
+                            }
+                            live_w_a = na;
+                            if d.bump_buffers {
+                                depth_p = (depth_p * 2).min(64);
+                            }
+                            // Topics are empty (epoch drained + synced),
+                            // so a shrink never mass-evicts live messages.
+                            broker.resize_buffers(depth_p * na, cfg.train.buffer_q * w_p);
+                            let threads = linalg::thread_budget(na);
+                            metrics.gauge_max("linalg_threads_per_worker", threads as f64);
+                            // Relaxed: the Release bump below publishes
+                            // these stores via the workers' Acquire load.
+                            ctl.threads.store(threads, Ordering::Relaxed);
+                            ctl.active_target.store(na, Ordering::Relaxed);
+                            // Release pairs with the workers' Acquire
+                            // generation load.
+                            ctl.generation.fetch_add(1, Ordering::Release);
+                            metrics.inc("replans_applied", 1);
+                            if d.wire == WireAction::StepQuantization {
+                                if let Some(next) = cur_q.step_down() {
+                                    if link.send(Frame::SetQuantization { mode: next }).is_ok() {
+                                        // Relaxed: advisory mode; pumps
+                                        // re-read it per frame and both
+                                        // frame kinds always decode.
+                                        negotiated_quant
+                                            .store(next.as_u8(), Ordering::Relaxed);
+                                        metrics.inc("quantization_stepped", 1);
+                                    }
+                                }
+                            }
+                        }
+                    }
+
                     last_passive = Some(passive_params);
                     if reached(task, metric, ctx.target()) {
                         reached_target = true;
@@ -1591,8 +1935,11 @@ pub fn train_pubsub_over_link_with(
         })();
 
         // ---- teardown (always, so the scope can join) -----------------
-        // Relaxed: advisory teardown flag; loop exits are polled.
+        // Relaxed: advisory teardown flags; loop exits are polled (the
+        // pool-control flag releases parked workers that never observe
+        // the broker close).
         shutdown.store(true, Ordering::Relaxed);
+        ctl.shutdown.store(true, Ordering::Relaxed);
         let _ = link.send(Frame::Shutdown);
         broker.close();
         link.close();
@@ -1607,7 +1954,9 @@ pub fn train_pubsub_over_link_with(
     }
     run_result?;
 
-    let (mean_a, mean_t) = mean_active(&active_replicas);
+    // Fold only the live prefix: replicas past `live_w_a` were parked by
+    // a re-plan (or never unparked) and may hold stale params.
+    let (mean_a, mean_t) = mean_active(&active_replicas[..live_w_a]);
     let passive = match last_passive {
         Some(p) => p,
         None => init.passive.clone(),

@@ -123,6 +123,7 @@ const T_RESUME: u8 = 14;
 const T_RESTORE_PARAMS: u8 = 15;
 const T_EMBEDDING_Q: u8 = 16;
 const T_GRADIENT_Q: u8 = 17;
+const T_SET_QUANTIZATION: u8 = 18;
 
 /// Everything that crosses the party boundary: the two data-plane
 /// messages plus the control plane of the distributed session (handshake,
@@ -196,6 +197,15 @@ pub enum Frame {
     /// parameters to the last barrier-aligned checkpoint (same flat
     /// layout as [`Frame::PassiveParams`], opposite direction).
     RestoreParams { party: u32, version: u64, flat: Vec<f32> },
+    /// Active → passive: the live re-planning controller steps the
+    /// data-plane wire quantization mid-session (a wire-bound epoch
+    /// proposes `none → fp16 → int8`). Fire-and-forget: the frame type,
+    /// not the session, carries each data frame's mode, so in-flight
+    /// frames encoded under the old mode still decode; the receiver
+    /// applies `mode` to everything it sends after processing this.
+    /// Peers predating this frame reject it as `UnknownFrame`; the
+    /// controller only emits it when `step_quantization` is enabled.
+    SetQuantization { mode: Quantization },
 }
 
 impl Frame {
@@ -219,6 +229,7 @@ impl Frame {
             Frame::Shutdown => "shutdown",
             Frame::Resume { .. } => "resume",
             Frame::RestoreParams { .. } => "restore_params",
+            Frame::SetQuantization { .. } => "set_quantization",
         }
     }
 
@@ -241,6 +252,7 @@ impl Frame {
             Frame::Shutdown => T_SHUTDOWN,
             Frame::Resume { .. } => T_RESUME,
             Frame::RestoreParams { .. } => T_RESTORE_PARAMS,
+            Frame::SetQuantization { .. } => T_SET_QUANTIZATION,
         }
     }
 }
@@ -466,6 +478,7 @@ fn payload_len(frame: &Frame) -> usize {
             4 + 8 + 4 + flat.len() * 4
         }
         Frame::Resume { .. } => 8 + 8,
+        Frame::SetQuantization { .. } => 1,
     }
 }
 
@@ -571,6 +584,7 @@ fn write_payload(frame: &Frame, b: &mut Vec<u8>) {
             put_u64(b, *epoch);
             put_u64(b, *banked_bwd);
         }
+        Frame::SetQuantization { mode } => b.push(mode.as_u8()),
     }
 }
 
@@ -743,6 +757,10 @@ fn decode_payload(ftype: u8, payload: &[u8]) -> Result<Frame, WireError> {
             let flat = c.f32_vec(n)?;
             Frame::RestoreParams { party, version, flat }
         }
+        T_SET_QUANTIZATION => Frame::SetQuantization {
+            mode: Quantization::from_u8(c.u8()?)
+                .ok_or(WireError::Corrupt("unknown quantization mode"))?,
+        },
         other => return Err(WireError::UnknownFrame(other)),
     };
     c.done()?;
@@ -875,6 +893,7 @@ mod tests {
             Frame::Shutdown,
             Frame::Resume { epoch: 2, banked_bwd: 24 },
             Frame::RestoreParams { party: 0, version: 11, flat: vec![1.0, 0.0, -2.5] },
+            Frame::SetQuantization { mode: Quantization::F16 },
         ]
     }
 

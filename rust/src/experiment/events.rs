@@ -28,6 +28,18 @@ pub enum RunEvent {
     Staleness { epoch: usize, mean: f64, max: u64 },
     /// An evaluation pass completed.
     Eval { epoch: usize, metric: f64 },
+    /// The live re-planning controller re-solved (p, q) at an epoch
+    /// boundary. `from`/`to` are (active, passive-per-party) worker
+    /// counts; `applied` is true only when the session actually resized
+    /// (`act` mode, gain over hysteresis, cooldown elapsed) — `observe`
+    /// mode emits with `applied: false`.
+    Replanned {
+        epoch: usize,
+        from: (usize, usize),
+        to: (usize, usize),
+        predicted_gain: f64,
+        applied: bool,
+    },
     /// The run observed its cancel token and stopped early.
     Cancelled { epoch: usize },
 }
@@ -136,7 +148,14 @@ mod tests {
         assert_eq!(opts.target_accuracy, Some(0.9));
         opts.emit(RunEvent::PsBarrier { epoch: 1 });
         opts.emit(RunEvent::Staleness { epoch: 1, mean: 0.5, max: 2 });
-        assert_eq!(seen.lock().unwrap().len(), 2);
+        opts.emit(RunEvent::Replanned {
+            epoch: 1,
+            from: (4, 6),
+            to: (6, 4),
+            predicted_gain: 0.2,
+            applied: true,
+        });
+        assert_eq!(seen.lock().unwrap().len(), 3);
         assert!(!opts.is_cancelled());
     }
 }

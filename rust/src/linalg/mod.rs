@@ -130,12 +130,24 @@ pub fn available_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// The single thread-budget clamp shared by every pool-sizing path
+/// (session start in the supervisor, live pool resizes from the
+/// re-planning controller, and [`worker_threads`]): the per-worker
+/// thread budget for `total_workers` concurrent compute workers, such
+/// that `total_workers × budget ≤ available_parallelism()`, floored at
+/// 1. Keeping this in one place means a mid-session resize computes the
+/// same budget the initial spawn did and can never transiently
+/// oversubscribe the machine.
+pub fn thread_budget(total_workers: usize) -> usize {
+    (available_threads() / total_workers.max(1)).max(1)
+}
+
 /// Per-worker linalg thread budget for a session running `total_workers`
 /// concurrent compute workers (the planner's p + k·q allocation):
 /// `workers × threads ≤ available_parallelism()`, floored at 1.
 pub fn worker_threads(kind: BackendKind, total_workers: usize) -> usize {
     match kind {
-        BackendKind::Threaded => (available_threads() / total_workers.max(1)).max(1),
+        BackendKind::Threaded => thread_budget(total_workers),
         _ => 1,
     }
 }
@@ -395,5 +407,31 @@ mod tests {
         assert_eq!(worker_threads(BackendKind::Threaded, 1), avail);
         let total = worker_threads(BackendKind::Threaded, 3) * 3;
         assert!(total <= avail.max(3), "oversubscribed: {total} > {avail}");
+    }
+
+    /// The resize path: as the controller grows and shrinks the pool,
+    /// every step must re-derive its budget from the one shared clamp —
+    /// the product `workers × threads` stays inside the machine at every
+    /// intermediate size, and the budget is monotonically non-increasing
+    /// in the worker count (so applying the *new* budget before parking
+    /// the old workers is always safe).
+    #[test]
+    fn thread_budget_is_safe_across_resizes() {
+        let avail = available_threads();
+        let mut prev = usize::MAX;
+        for workers in 1..=(avail * 2 + 1) {
+            let budget = thread_budget(workers);
+            assert!(budget >= 1, "budget floored at 1");
+            // Below the floor the product is bounded by the machine...
+            if budget > 1 {
+                assert!(workers * budget <= avail, "oversubscribed at {workers} workers");
+            }
+            // ...and growing the pool never raises the per-worker budget.
+            assert!(budget <= prev, "budget grew with the pool at {workers}");
+            prev = budget;
+            // `worker_threads` is the same clamp, gated on the backend.
+            assert_eq!(worker_threads(BackendKind::Threaded, workers), budget);
+        }
+        assert_eq!(thread_budget(0), avail, "zero workers clamps to max(1)");
     }
 }

@@ -1,0 +1,652 @@
+//! Live re-planning: an epoch-boundary feedback controller that folds
+//! the session's observed per-epoch series back into the §4.2 delay
+//! model and re-runs the Algorithm 2 search against the *observed* cost
+//! surface.
+//!
+//! The loop, once per epoch boundary:
+//!
+//! 1. **Refit** — EWMA-damp per-party power-law *scale* factors from the
+//!    observed busy-seconds-per-batch (the γ exponents stay fixed: one
+//!    epoch identifies a level, not a slope), and re-estimate the
+//!    effective wire bandwidth from the non-compute residual of the
+//!    epoch wall time. A fault-injected or contended link therefore
+//!    shows up as a lower effective bandwidth, not a mystery.
+//! 2. **Re-solve** — run [`dp_solver::solve_rate`] over the (w_a, w_p)
+//!    grid at the *pinned* running batch size. Batch size never moves
+//!    mid-session: the exactly-once ledger's conservation laws are
+//!    stated in batches per epoch, and resizing B would rewrite them.
+//! 3. **Gate** — propose the new plan only when the modeled gain clears
+//!    the hysteresis threshold and a cooldown has elapsed since the last
+//!    resize. [`ReplanMode::Observe`] computes and reports everything
+//!    but never moves the applied plan; [`ReplanMode::Act`] commits it.
+//!
+//! The controller is deliberately pure: it owns no threads and takes no
+//! locks. The session supervisor keeps one instance behind a
+//! `RankedMutex` at `Rank::Controller` and is responsible for actually
+//! resizing pools, retuning per-worker threads, deepening buffers, and
+//! stepping wire quantization when a [`Decision`] says to.
+
+use super::cost::{CostConstants, CostModel, MemoryModel};
+use super::dp_solver::{self, PlanSpace, RateCosts};
+
+/// What the controller is allowed to do with its decisions.
+/// TOML `[replanning] mode`, CLI `--replan off|observe|act`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ReplanMode {
+    /// Controller disabled entirely.
+    Off,
+    /// Refit + re-solve + log decisions; never touch the session.
+    Observe,
+    /// Apply cleared decisions to the running session.
+    Act,
+}
+
+impl ReplanMode {
+    /// Parse the CLI/TOML spelling.
+    pub fn parse(s: &str) -> Option<ReplanMode> {
+        match s {
+            "off" => Some(ReplanMode::Off),
+            "observe" => Some(ReplanMode::Observe),
+            "act" => Some(ReplanMode::Act),
+            _ => None,
+        }
+    }
+
+    /// The canonical spelling accepted by [`ReplanMode::parse`].
+    pub fn name(self) -> &'static str {
+        match self {
+            ReplanMode::Off => "off",
+            ReplanMode::Observe => "observe",
+            ReplanMode::Act => "act",
+        }
+    }
+}
+
+/// Controller tuning, resolved from `config::ReplanningConfig` by the
+/// session supervisor (caps already turned into absolute worker counts).
+#[derive(Clone, Copy, Debug)]
+pub struct ControllerConfig {
+    pub mode: ReplanMode,
+    /// EWMA damping α ∈ (0, 1] for folding each epoch's observed ratios
+    /// into the fitted constants.
+    pub ewma_alpha: f64,
+    /// Minimum modeled relative gain before a plan is applied.
+    pub hysteresis: f64,
+    /// Epochs to hold after an applied resize before the next one.
+    pub cooldown_epochs: usize,
+    /// Absolute live caps on the worker pools (the supervisor spawns
+    /// this many parked workers up front, so a grow never spawns).
+    pub max_w_a: usize,
+    pub max_w_p: usize,
+    /// Floors on the pools. A remote passive party whose pool the
+    /// coordinator cannot resize is pinned by setting
+    /// `min_w_p == max_w_p == current`.
+    pub min_w_a: usize,
+    pub min_w_p: usize,
+    /// Allow stepping wire quantization when the wire is the bottleneck.
+    pub step_quantization: bool,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig {
+            mode: ReplanMode::Off,
+            ewma_alpha: 0.4,
+            hysteresis: 0.10,
+            cooldown_epochs: 1,
+            max_w_a: 16,
+            max_w_p: 16,
+            min_w_a: 1,
+            min_w_p: 1,
+            step_quantization: true,
+        }
+    }
+}
+
+/// One epoch's observed series, summed over the whole epoch. The
+/// supervisor assembles this from the metrics registry at the barrier.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EpochObservation {
+    pub epoch: usize,
+    /// Epoch wall-clock time.
+    pub wall_s: f64,
+    /// Batches completed this epoch.
+    pub batches: u64,
+    pub batch_size: usize,
+    /// Busy seconds summed across active-role workers (forward + top +
+    /// backward). Per batch this is the whole-batch stage time the
+    /// delay model calls `λB^γ·B`, which is what makes the ratio refit
+    /// well-posed.
+    pub active_busy_s: f64,
+    /// Same for passive-role workers; `0.0` when unobservable (remote
+    /// party that does not report), which leaves the passive scale
+    /// untouched.
+    pub passive_busy_s: f64,
+    /// Wire bytes moved this epoch (tx + rx); `0` for in-process
+    /// transports, which skips the bandwidth refit.
+    pub wire_bytes: u64,
+    /// Mean PS-version staleness of consumed embeddings.
+    pub staleness_mean: f64,
+    /// Batches retried by the deadline/buffer mechanisms.
+    pub retries: u64,
+    /// Whether a coarser wire quantization step still exists
+    /// (None → F16 → Int8; false once at Int8 or when quantization is
+    /// pinned by config).
+    pub quant_can_step: bool,
+}
+
+/// Wire-level action riding along with a plan change.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireAction {
+    Keep,
+    /// Step to the next coarser quantization (the supervisor maps
+    /// None → F16 → Int8 and renegotiates with the remote party).
+    StepQuantization,
+}
+
+/// The controller's verdict for one epoch boundary.
+#[derive(Clone, Copy, Debug)]
+pub struct Decision {
+    pub epoch: usize,
+    /// Commit this decision (always false in `Observe` mode).
+    pub apply: bool,
+    /// The gate cleared (gain > hysteresis, cooldown elapsed) — what
+    /// `Observe` mode logs as "would have applied".
+    pub would_apply: bool,
+    /// Proposed worker allocation (equals the current plan on a hold
+    /// with no better candidate).
+    pub w_a: usize,
+    pub w_p: usize,
+    pub wire: WireAction,
+    /// Retry pressure says the topic buffers are too shallow.
+    pub bump_buffers: bool,
+    /// Observed epoch wall time per batch (reporting only).
+    pub observed_round_s: f64,
+    /// Refitted-model service time at the current plan.
+    pub current_cost: f64,
+    /// Refitted-model service time at the proposed plan (with the wire
+    /// step folded in when one is proposed).
+    pub planned_cost: f64,
+    /// Relative modeled gain `(current − planned) / current`.
+    pub gain: f64,
+}
+
+/// Whole-batch stage seconds the delay model predicts for the active
+/// role (bottom forward + backward + top forward + backward) at batch
+/// size `b`. Public so tests can synthesize observations that hit an
+/// exact refit ratio.
+pub fn predicted_stage_active(c: &CostConstants, b: usize) -> f64 {
+    let b = b as f64;
+    whole_batch(c.lambda_a, c.gamma_a, b)
+        + whole_batch(c.phi_a, c.beta_a, b)
+        + whole_batch(c.lambda_a2, c.gamma_a2, b)
+        + whole_batch(c.phi_a2, c.beta_a2, b)
+}
+
+/// Whole-batch stage seconds for the passive role (bottom forward +
+/// backward) at batch size `b`.
+pub fn predicted_stage_passive(c: &CostConstants, b: usize) -> f64 {
+    let b = b as f64;
+    whole_batch(c.lambda_p, c.gamma_p, b) + whole_batch(c.phi_p, c.beta_p, b)
+}
+
+fn whole_batch(lambda: f64, gamma: f64, b: f64) -> f64 {
+    lambda * b.powf(gamma) * b
+}
+
+/// The feedback controller. Pure state machine: feed it one
+/// [`EpochObservation`] per epoch boundary, act on the [`Decision`].
+#[derive(Clone, Debug)]
+pub struct Controller {
+    cfg: ControllerConfig,
+    /// Seed constants from the planning phase; the EWMA scales multiply
+    /// onto these, so the refit can both rise and fully recover.
+    base: CostConstants,
+    memory: MemoryModel,
+    rate: RateCosts,
+    c_a: usize,
+    c_p: usize,
+    batch_size: usize,
+    /// The applied plan (what the session is actually running).
+    w_a: usize,
+    w_p: usize,
+    /// EWMA per-party level scales on the λ/φ constants.
+    scale_a: f64,
+    scale_p: f64,
+    /// EWMA effective bandwidth and observed wire payload.
+    eff_bw_bps: f64,
+    bytes_per_sample: f64,
+    seen_a: bool,
+    seen_p: bool,
+    seen_wire: bool,
+    cooldown: usize,
+    applies: usize,
+}
+
+impl Controller {
+    /// `seed` is the planning-phase cost model (constants, cores, seed
+    /// bandwidth and payload); `(w_a, w_p)` the session's starting plan.
+    pub fn new(
+        cfg: ControllerConfig,
+        seed: &CostModel,
+        memory: MemoryModel,
+        batch_size: usize,
+        w_a: usize,
+        w_p: usize,
+    ) -> Controller {
+        Controller {
+            cfg,
+            base: seed.consts,
+            memory,
+            rate: RateCosts::default(),
+            c_a: seed.c_a,
+            c_p: seed.c_p,
+            batch_size,
+            w_a: w_a.max(1),
+            w_p: w_p.max(1),
+            scale_a: 1.0,
+            scale_p: 1.0,
+            eff_bw_bps: seed.bandwidth_bps,
+            bytes_per_sample: seed.emb_bytes_per_sample + seed.grad_bytes_per_sample,
+            seen_a: false,
+            seen_p: false,
+            seen_wire: false,
+            cooldown: 0,
+            applies: 0,
+        }
+    }
+
+    /// The plan the controller believes is applied.
+    pub fn planned(&self) -> (usize, usize) {
+        (self.w_a, self.w_p)
+    }
+
+    /// Current EWMA (active, passive) level scales.
+    pub fn scales(&self) -> (f64, f64) {
+        (self.scale_a, self.scale_p)
+    }
+
+    /// Current EWMA effective bandwidth estimate (bytes/s).
+    pub fn effective_bandwidth(&self) -> f64 {
+        self.eff_bw_bps
+    }
+
+    /// Number of applied resizes so far.
+    pub fn applies(&self) -> usize {
+        self.applies
+    }
+
+    pub fn mode(&self) -> ReplanMode {
+        self.cfg.mode
+    }
+
+    /// The refitted cost model the next re-solve will run against.
+    pub fn model(&self) -> CostModel {
+        let mut c = self.base;
+        c.lambda_a *= self.scale_a;
+        c.phi_a *= self.scale_a;
+        c.lambda_a2 *= self.scale_a;
+        c.phi_a2 *= self.scale_a;
+        c.lambda_p *= self.scale_p;
+        c.phi_p *= self.scale_p;
+        CostModel {
+            consts: c,
+            c_a: self.c_a,
+            c_p: self.c_p,
+            emb_bytes_per_sample: self.bytes_per_sample * 0.5,
+            grad_bytes_per_sample: self.bytes_per_sample * 0.5,
+            bandwidth_bps: self.eff_bw_bps,
+        }
+    }
+
+    /// Fold one epoch's observations and decide. Call exactly once per
+    /// epoch boundary, in epoch order.
+    pub fn observe(&mut self, obs: &EpochObservation) -> Decision {
+        // A resize at epoch e holds through e+1 .. e+cooldown_epochs:
+        // gate on the value as of entry, then tick it down.
+        let cooling = self.cooldown > 0;
+        self.cooldown = self.cooldown.saturating_sub(1);
+        if obs.batches == 0 {
+            return self.hold(obs, 0.0);
+        }
+        let iters = obs.batches as f64;
+        let b = obs.batch_size.max(1);
+        let alpha = self.cfg.ewma_alpha.clamp(f64::EPSILON, 1.0);
+
+        // 1. Refit: EWMA the level scales from observed busy-per-batch.
+        // Ratios are clamped so a single pathological epoch (paused VM,
+        // clock glitch) cannot fling the model somewhere unrecoverable.
+        if obs.active_busy_s > 0.0 {
+            let pred = predicted_stage_active(&self.base, b).max(1e-12);
+            let ratio = (obs.active_busy_s / iters / pred).clamp(0.05, 50.0);
+            self.scale_a = fold(self.scale_a, ratio, alpha, &mut self.seen_a);
+        }
+        if obs.passive_busy_s > 0.0 {
+            let pred = predicted_stage_passive(&self.base, b).max(1e-12);
+            let ratio = (obs.passive_busy_s / iters / pred).clamp(0.05, 50.0);
+            self.scale_p = fold(self.scale_p, ratio, alpha, &mut self.seen_p);
+        }
+        // Fault-adjusted effective bandwidth: wire bytes over the
+        // non-compute residual of the epoch wall. Injected delay, loss
+        // retransmits, and receiver throttling all land in the residual,
+        // so the model sees the wire the session actually has.
+        if obs.wire_bytes > 0 && obs.wall_s > 0.0 {
+            let bytes = obs.wire_bytes as f64;
+            self.bytes_per_sample = fold(
+                self.bytes_per_sample,
+                bytes / iters / b as f64,
+                alpha,
+                &mut self.seen_wire,
+            );
+            let comp_wall = (obs.active_busy_s / self.c_a.max(1) as f64)
+                .max(obs.passive_busy_s / self.c_p.max(1) as f64);
+            let comm_s = (obs.wall_s - comp_wall).max(obs.wall_s * 0.01);
+            let bw = (bytes / comm_s).clamp(1e4, 1e13);
+            // Same damping, but `seen_wire` was just consumed above, so
+            // fold manually against the seeded estimate.
+            self.eff_bw_bps = alpha * bw + (1.0 - alpha) * self.eff_bw_bps;
+        }
+
+        // 2. Re-solve at the pinned batch size.
+        let m = self.model();
+        let current_cost = dp_solver::service_time(&m, &self.rate, b, self.w_a, self.w_p);
+        let space = PlanSpace {
+            w_a_range: (
+                self.cfg.min_w_a.max(1),
+                self.cfg.max_w_a.max(self.cfg.min_w_a).max(1),
+            ),
+            w_p_range: (
+                self.cfg.min_w_p.max(1),
+                self.cfg.max_w_p.max(self.cfg.min_w_p).max(1),
+            ),
+            batch_sizes: vec![b],
+        };
+        let Some(result) = dp_solver::solve_rate(&m, &self.memory, &space, &self.rate) else {
+            return self.hold(obs, current_cost);
+        };
+        let best = result.best;
+
+        // Wire bottleneck: propose a quantization step when the modeled
+        // comm term dominates compute even at the proposed plan.
+        let comm = m.t_emb(b) + m.t_grad(b);
+        let comp_best = (m.t_f_a(b, best.w_a) + m.t_b_a(b, best.w_a) + m.t_top(b, best.w_a))
+            .max(m.t_f_p(b, best.w_p) + m.t_b_p(b, best.w_p));
+        let wire = if comm > comp_best && self.cfg.step_quantization && obs.quant_can_step {
+            WireAction::StepQuantization
+        } else {
+            WireAction::Keep
+        };
+        let planned_cost = if wire == WireAction::StepQuantization {
+            // One quantization step roughly halves the payload.
+            let mut m2 = m;
+            m2.emb_bytes_per_sample *= 0.5;
+            m2.grad_bytes_per_sample *= 0.5;
+            dp_solver::service_time(&m2, &self.rate, b, best.w_a, best.w_p)
+        } else {
+            best.cost
+        };
+        let gain = (current_cost - planned_cost) / current_cost.max(1e-12);
+
+        // 3. Gate.
+        let changed = best.w_a != self.w_a || best.w_p != self.w_p;
+        let would_apply = gain > self.cfg.hysteresis
+            && !cooling
+            && (changed || wire == WireAction::StepQuantization);
+        let apply = would_apply && self.cfg.mode == ReplanMode::Act;
+        if apply {
+            self.w_a = best.w_a;
+            self.w_p = best.w_p;
+            self.cooldown = self.cfg.cooldown_epochs;
+            self.applies += 1;
+        }
+        Decision {
+            epoch: obs.epoch,
+            apply,
+            would_apply,
+            w_a: best.w_a,
+            w_p: best.w_p,
+            wire,
+            bump_buffers: retry_pressure(obs),
+            observed_round_s: obs.wall_s / iters,
+            current_cost,
+            planned_cost,
+            gain,
+        }
+    }
+
+    fn hold(&self, obs: &EpochObservation, current_cost: f64) -> Decision {
+        Decision {
+            epoch: obs.epoch,
+            apply: false,
+            would_apply: false,
+            w_a: self.w_a,
+            w_p: self.w_p,
+            wire: WireAction::Keep,
+            bump_buffers: retry_pressure(obs),
+            observed_round_s: if obs.batches == 0 {
+                0.0
+            } else {
+                obs.wall_s / obs.batches as f64
+            },
+            current_cost,
+            planned_cost: current_cost,
+            gain: 0.0,
+        }
+    }
+}
+
+/// More than 10% of the epoch's batches got retried: the topics are too
+/// shallow for the observed jitter.
+fn retry_pressure(obs: &EpochObservation) -> bool {
+    obs.batches > 0 && obs.retries.saturating_mul(10) > obs.batches
+}
+
+/// EWMA fold that seeds on first contact instead of averaging against
+/// the arbitrary initial value.
+fn fold(cur: f64, sample: f64, alpha: f64, seen: &mut bool) -> f64 {
+    if !*seen {
+        *seen = true;
+        sample
+    } else {
+        alpha * sample + (1.0 - alpha) * cur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seed_model() -> CostModel {
+        CostModel {
+            consts: CostConstants::balanced_default(),
+            c_a: 16,
+            c_p: 16,
+            emb_bytes_per_sample: 144.0,
+            grad_bytes_per_sample: 144.0,
+            bandwidth_bps: 2e6,
+        }
+    }
+
+    fn cfg(mode: ReplanMode) -> ControllerConfig {
+        ControllerConfig {
+            mode,
+            ewma_alpha: 0.6,
+            hysteresis: 0.05,
+            cooldown_epochs: 1,
+            max_w_a: 24,
+            max_w_p: 24,
+            min_w_a: 1,
+            min_w_p: 1,
+            step_quantization: true,
+        }
+    }
+
+    /// Synthesize an epoch that hits exact refit ratios `(ra, rp)` at
+    /// the given plan.
+    fn obs(epoch: usize, b: usize, ra: f64, rp: f64) -> EpochObservation {
+        let iters = 50u64;
+        let c = CostConstants::balanced_default();
+        EpochObservation {
+            epoch,
+            wall_s: 10.0,
+            batches: iters,
+            batch_size: b,
+            active_busy_s: ra * predicted_stage_active(&c, b) * iters as f64,
+            passive_busy_s: rp * predicted_stage_passive(&c, b) * iters as f64,
+            wire_bytes: 0,
+            staleness_mean: 0.0,
+            retries: 0,
+            quant_can_step: false,
+        }
+    }
+
+    #[test]
+    fn parse_and_name_round_trip() {
+        for m in [ReplanMode::Off, ReplanMode::Observe, ReplanMode::Act] {
+            assert_eq!(ReplanMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(ReplanMode::parse("panic"), None);
+    }
+
+    #[test]
+    fn refit_tracks_observed_slowdown() {
+        let m = seed_model();
+        let mut c = Controller::new(cfg(ReplanMode::Observe), &m, MemoryModel::default_profile(), 128, 8, 12);
+        // First epoch seeds the scales exactly.
+        c.observe(&obs(0, 128, 1.0, 4.0));
+        let (sa, sp) = c.scales();
+        assert!((sa - 1.0).abs() < 1e-9, "scale_a={sa}");
+        assert!((sp - 4.0).abs() < 1e-9, "scale_p={sp}");
+        // Later epochs are damped: recovery pulls the scale back toward
+        // 1 but not all the way in one step.
+        c.observe(&obs(1, 128, 1.0, 1.0));
+        let (_, sp) = c.scales();
+        assert!(sp > 1.0 && sp < 4.0, "scale_p={sp}");
+    }
+
+    #[test]
+    fn zero_batch_epoch_holds() {
+        let m = seed_model();
+        let mut c = Controller::new(cfg(ReplanMode::Act), &m, MemoryModel::default_profile(), 128, 8, 12);
+        let d = c.observe(&EpochObservation { epoch: 0, ..Default::default() });
+        assert!(!d.apply && !d.would_apply);
+        assert_eq!(c.planned(), (8, 12));
+    }
+
+    #[test]
+    fn act_applies_and_observe_holds() {
+        let m = seed_model();
+        let mm = MemoryModel::default_profile();
+        // Start far from the optimum so the first decision clears any
+        // reasonable hysteresis.
+        let start = (2, 2);
+        let mut act = Controller::new(cfg(ReplanMode::Act), &m, mm, 128, start.0, start.1);
+        let mut watch = Controller::new(cfg(ReplanMode::Observe), &m, mm, 128, start.0, start.1);
+        let d = act.observe(&obs(0, 128, 1.0, 1.0));
+        assert!(d.apply, "expected an applied resize: {d:?}");
+        assert_ne!(act.planned(), start);
+        assert_eq!(act.applies(), 1);
+
+        let d = watch.observe(&obs(0, 128, 1.0, 1.0));
+        assert!(d.would_apply && !d.apply, "observe must log-but-hold: {d:?}");
+        assert_eq!(watch.planned(), start, "observe mode moved the plan");
+        assert_eq!(watch.applies(), 0);
+    }
+
+    #[test]
+    fn hysteresis_holds_at_the_optimum() {
+        let m = seed_model();
+        let mm = MemoryModel::default_profile();
+        let space = PlanSpace { w_a_range: (1, 24), w_p_range: (1, 24), batch_sizes: vec![128] };
+        let opt = dp_solver::solve_rate(&m, &mm, &space, &RateCosts::default()).unwrap().best;
+        let mut c = Controller::new(cfg(ReplanMode::Act), &m, mm, 128, opt.w_a, opt.w_p);
+        for e in 0..4 {
+            let d = c.observe(&obs(e, 128, 1.0, 1.0));
+            assert!(!d.apply, "resized away from the optimum at epoch {e}: {d:?}");
+        }
+        assert_eq!(c.planned(), (opt.w_a, opt.w_p));
+    }
+
+    #[test]
+    fn cooldown_spaces_applied_resizes() {
+        let m = seed_model();
+        let mut c = Controller::new(
+            ControllerConfig { cooldown_epochs: 3, ..cfg(ReplanMode::Act) },
+            &m,
+            MemoryModel::default_profile(),
+            128,
+            2,
+            2,
+        );
+        let mut applied_at = Vec::new();
+        // Oscillating observed surface keeps proposing different optima;
+        // the cooldown must still space the applies.
+        for e in 0..10 {
+            let rp = if (e / 2) % 2 == 0 { 1.0 } else { 8.0 };
+            if c.observe(&obs(e, 128, 1.0, rp)).apply {
+                applied_at.push(e);
+            }
+        }
+        assert!(!applied_at.is_empty());
+        for w in applied_at.windows(2) {
+            assert!(w[1] - w[0] > 3, "applies too close: {applied_at:?}");
+        }
+    }
+
+    #[test]
+    fn wire_bound_epoch_steps_quantization() {
+        // Model with a wire so slow the comm term dwarfs compute.
+        let mut m = seed_model();
+        m.bandwidth_bps = 1e4;
+        let mut c = Controller::new(cfg(ReplanMode::Act), &m, MemoryModel::default_profile(), 128, 8, 12);
+        let mut o = obs(0, 128, 1.0, 1.0);
+        // Wire-heavy epoch: bytes at the seed payload, wall dominated by
+        // the residual.
+        o.wire_bytes = (288.0 * 128.0 * o.batches as f64) as u64;
+        o.wall_s = 120.0;
+        o.quant_can_step = true;
+        let d = c.observe(&o);
+        assert_eq!(d.wire, WireAction::StepQuantization, "{d:?}");
+        // The same epoch with stepping disabled keeps the wire format.
+        let mut c2 = Controller::new(
+            ControllerConfig { step_quantization: false, ..cfg(ReplanMode::Act) },
+            &m,
+            MemoryModel::default_profile(),
+            128,
+            8,
+            12,
+        );
+        assert_eq!(c2.observe(&o).wire, WireAction::Keep);
+    }
+
+    #[test]
+    fn pinned_passive_pool_never_moves() {
+        // Link-mode sessions pin the remote passive pool with
+        // min == max == current; the solver must only move w_a.
+        let m = seed_model();
+        let mut c = Controller::new(
+            ControllerConfig { min_w_p: 12, max_w_p: 12, ..cfg(ReplanMode::Act) },
+            &m,
+            MemoryModel::default_profile(),
+            128,
+            2,
+            12,
+        );
+        for e in 0..4 {
+            let d = c.observe(&obs(e, 128, 1.0, 4.0));
+            assert_eq!(d.w_p, 12, "pinned pool proposed a move: {d:?}");
+        }
+    }
+
+    #[test]
+    fn retry_pressure_requests_deeper_buffers() {
+        let m = seed_model();
+        let mut c = Controller::new(cfg(ReplanMode::Act), &m, MemoryModel::default_profile(), 128, 8, 12);
+        let mut o = obs(0, 128, 1.0, 1.0);
+        o.retries = o.batches / 5; // 20% retried
+        assert!(c.observe(&o).bump_buffers);
+        let mut o2 = obs(1, 128, 1.0, 1.0);
+        o2.retries = 1;
+        assert!(!c.observe(&o2).bump_buffers);
+    }
+}

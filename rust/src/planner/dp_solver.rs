@@ -82,6 +82,102 @@ pub fn solve(cost: &CostModel, memory: &MemoryModel, space: &PlanSpace) -> Optio
     best.map(|best| PlanResult { best, b_max, table })
 }
 
+/// Tunables for the steady-state (throughput) cost surface searched by
+/// the live re-planning controller ([`crate::planner::controller`]).
+///
+/// The paper's Eq. (14) objective is the wall time of one *round* and is
+/// monotone in both worker counts (workers share a fixed core budget, so
+/// adding a worker only stretches the round). That is the right surface
+/// for the offline planning phase, where batch size is free — but
+/// re-solving it mid-session would always propose the range floor. The
+/// controller instead minimizes per-completed-batch *service time*:
+/// the round cost normalized by the batch pairs a round retires, plus
+/// the two effects the idealized sharing model omits — a per-worker
+/// dispatch/sync overhead and an oversubscription penalty once the
+/// combined pool exceeds the combined core count.
+#[derive(Clone, Copy, Debug)]
+pub struct RateCosts {
+    /// Per-worker dispatch/sync overhead folded into each round (s).
+    pub overhead_s: f64,
+    /// Oversubscription penalty slope: compute stretches by
+    /// `1 + contention · (w_a + w_p − C) / C` once the pool exceeds the
+    /// combined core count `C` (dimensionless).
+    pub contention: f64,
+}
+
+impl Default for RateCosts {
+    fn default() -> Self {
+        RateCosts { overhead_s: 2e-4, contention: 1.5 }
+    }
+}
+
+/// Steady-state service time per completed batch pair at `(b, w_a, w_p)`:
+///
+/// ```text
+/// [ max(comp_a, comp_p) · thrash + t_emb + t_grad + η·(w_a + w_p) ]
+/// ─────────────────────────────────────────────────────────────────
+///                         min(w_a, w_p)
+/// ```
+///
+/// scaled by `1 + imbalance` — the §3 "equalize T_A and T_P" pressure,
+/// which is what gives the surface an interior optimum in the worker
+/// *ratio* (the raw round cost is scale-free along a balanced ray).
+/// Epoch wall time is `n_batches ×` this, so minimizing it maximizes
+/// throughput at the pinned batch size.
+pub fn service_time(cost: &CostModel, rc: &RateCosts, b: usize, w_a: usize, w_p: usize) -> f64 {
+    let total = (w_a + w_p) as f64;
+    let cores = (cost.c_a + cost.c_p).max(1) as f64;
+    let thrash = 1.0 + rc.contention * ((total - cores).max(0.0) / cores);
+    let comp_a = cost.t_f_a(b, w_a) + cost.t_b_a(b, w_a) + cost.t_top(b, w_a);
+    let comp_p = cost.t_f_p(b, w_p) + cost.t_b_p(b, w_p);
+    let round =
+        comp_a.max(comp_p) * thrash + cost.t_emb(b) + cost.t_grad(b) + rc.overhead_s * total;
+    let per_pair = round / w_a.min(w_p).max(1) as f64;
+    per_pair * (1.0 + cost.imbalance(b, w_a, w_p))
+}
+
+/// Algorithm 2 over the steady-state surface: the same exhaustive DP as
+/// [`solve`], minimizing [`service_time`] instead of the per-iteration
+/// objective. [`solve`] remains the paper's planning-phase search; this
+/// variant is what the epoch-boundary controller re-runs against the
+/// observed (refitted) cost surface, with `batch_sizes` pinned to the
+/// single running batch size.
+pub fn solve_rate(
+    cost: &CostModel,
+    memory: &MemoryModel,
+    space: &PlanSpace,
+    rc: &RateCosts,
+) -> Option<PlanResult> {
+    let b_max = memory.b_max();
+    let mut table = Vec::new();
+    let mut best: Option<Plan> = None;
+    for &b in &space.batch_sizes {
+        if (b as f64) > b_max {
+            continue; // infeasible under Eq. (13)
+        }
+        for w_a in space.w_a_range.0..=space.w_a_range.1 {
+            for w_p in space.w_p_range.0..=space.w_p_range.1 {
+                let c = service_time(cost, rc, b, w_a, w_p);
+                table.push((w_a, w_p, b, c));
+                let better = match &best {
+                    None => true,
+                    Some(p) => c < p.cost,
+                };
+                if better {
+                    best = Some(Plan {
+                        w_a,
+                        w_p,
+                        batch_size: b,
+                        cost: c,
+                        imbalance: cost.imbalance(b, w_a, w_p),
+                    });
+                }
+            }
+        }
+    }
+    best.map(|best| PlanResult { best, b_max, table })
+}
+
 /// The "w/o Dynamic Programming" ablation (Table 4): fixed equal worker
 /// allocation, median batch size, no search.
 pub fn equal_allocation(space: &PlanSpace, workers: usize) -> Plan {
@@ -180,6 +276,77 @@ mod tests {
         let eq = equal_allocation(&space, 8);
         let eq_cost = cm.objective(eq.batch_size, eq.w_a, eq.w_p);
         assert!(planned.cost <= eq_cost + 1e-12);
+    }
+
+    /// Comm-heavy single-host model used by the rate-surface tests: the
+    /// grid has to trade comm amortization against oversubscription, so
+    /// the optimum sits strictly inside the range.
+    fn rate_model() -> CostModel {
+        CostModel {
+            consts: CostConstants::balanced_default(),
+            c_a: 16,
+            c_p: 16,
+            emb_bytes_per_sample: 144.0,
+            grad_bytes_per_sample: 144.0,
+            bandwidth_bps: 2e6,
+        }
+    }
+
+    fn rate_space() -> PlanSpace {
+        PlanSpace { w_a_range: (1, 24), w_p_range: (1, 24), batch_sizes: vec![128] }
+    }
+
+    #[test]
+    fn rate_surface_has_interior_optimum() {
+        let cm = rate_model();
+        let mm = MemoryModel::default_profile();
+        let r = solve_rate(&cm, &mm, &rate_space(), &RateCosts::default()).unwrap();
+        let p = r.best;
+        // Not pinned to either corner: the per-iteration objective would
+        // put it at (1, 1); a pure-amortization surface at (24, 24).
+        assert!(p.w_a > 1 || p.w_p > 1, "rate optimum collapsed to the floor");
+        assert!(p.w_a < 24 && p.w_p < 24, "rate optimum ran to the cap: {p:?}");
+        // Exhaustive argmin, same contract as `solve`.
+        let brute = r.table.iter().cloned().min_by(|a, b| a.3.total_cmp(&b.3)).unwrap();
+        assert!((p.cost - brute.3).abs() < 1e-15);
+        // Balanced constants put the extra top-model work on the active
+        // side, so equalizing T_A and T_P wants more passive workers.
+        assert!(p.w_p > p.w_a, "balanced optimum should favor passive: {p:?}");
+    }
+
+    #[test]
+    fn rate_surface_shifts_with_slowed_passive() {
+        let mm = MemoryModel::default_profile();
+        let space = rate_space();
+        let rc = RateCosts::default();
+        let before = solve_rate(&rate_model(), &mm, &space, &rc).unwrap().best;
+        // Passive party slows 4×: the observed surface the controller
+        // refits. Load balance now wants the worker ratio flipped.
+        let mut slow = rate_model();
+        slow.consts.lambda_p *= 4.0;
+        slow.consts.phi_p *= 4.0;
+        let after = solve_rate(&slow, &mm, &space, &rc).unwrap().best;
+        assert!(before.w_p > before.w_a, "before: {before:?}");
+        assert!(after.w_a > after.w_p, "after: {after:?}");
+        assert!(after.cost > before.cost, "slowing a party cannot cheapen the optimum");
+    }
+
+    #[test]
+    fn oversubscription_penalizes_past_core_budget() {
+        let cm = rate_model();
+        let rc = RateCosts::default();
+        // Same balanced split, one inside and one past the 32-core
+        // budget: the thrash term must make the oversubscribed round
+        // strictly worse per pair.
+        let inside = service_time(&cm, &rc, 128, 12, 18);
+        let over = service_time(&cm, &rc, 128, 20, 30);
+        assert!(over > inside, "inside={inside} over={over}");
+        // And with contention off the surface is scale-free enough that
+        // the gap shrinks.
+        let free = RateCosts { contention: 0.0, ..rc };
+        let gap_on = over / inside;
+        let gap_off = service_time(&cm, &free, 128, 20, 30) / service_time(&cm, &free, 128, 12, 18);
+        assert!(gap_off < gap_on);
     }
 
     #[test]

@@ -2,10 +2,16 @@
 //! power-law constant fitting (Fig. 8 / Table 8), and the Algorithm 2
 //! dynamic-programming hyper-parameter search.
 
+pub mod controller;
 pub mod cost;
 pub mod dp_solver;
 pub mod fit;
 
+pub use controller::{
+    Controller, ControllerConfig, Decision, EpochObservation, ReplanMode, WireAction,
+};
 pub use cost::{CostConstants, CostModel, MemoryModel};
-pub use dp_solver::{equal_allocation, solve, Plan, PlanResult, PlanSpace};
+pub use dp_solver::{
+    equal_allocation, service_time, solve, solve_rate, Plan, PlanResult, PlanSpace, RateCosts,
+};
 pub use fit::{table8_report, FitResult, ProfileMeasurements, StageMeasurements};

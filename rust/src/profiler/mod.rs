@@ -42,7 +42,14 @@ pub struct ProfileReport {
 }
 
 fn median(mut xs: Vec<f64>) -> f64 {
-    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // `total_cmp`, not `partial_cmp(..).unwrap()`: a hung or broken stage
+    // clock can hand us a NaN, and a profile run must degrade to the
+    // median of the surviving reps rather than abort the whole session.
+    xs.retain(|x| !x.is_nan());
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.sort_by(f64::total_cmp);
     xs[xs.len() / 2]
 }
 
@@ -210,6 +217,23 @@ mod tests {
 
     fn tiny_opts() -> ProfileOpts {
         ProfileOpts { batch_sizes: vec![4, 16, 64], reps: 2, warmup: 0 }
+    }
+
+    /// A hung stage clock (NaN wall time) must not abort the profile
+    /// run: `median` used to `partial_cmp(..).unwrap()` and panic on the
+    /// first NaN-bearing timing vector. NaNs now sort last and are
+    /// excluded from the median; an all-NaN vector degrades to NaN
+    /// instead of panicking.
+    #[test]
+    fn median_tolerates_nan_stage_timings() {
+        assert_eq!(median(vec![3.0, 1.0, 2.0]), 2.0);
+        // One poisoned rep out of three: the median of the finite pair.
+        assert_eq!(median(vec![f64::NAN, 1.0, 2.0]), 2.0);
+        assert_eq!(median(vec![4.0, f64::NAN, f64::NAN, 2.0]), 4.0);
+        // Every rep poisoned: degrade, don't abort.
+        assert!(median(vec![f64::NAN, f64::NAN]).is_nan());
+        // Infinities are ordered normally by total_cmp.
+        assert_eq!(median(vec![f64::INFINITY, 1.0, 2.0]), 2.0);
     }
 
     #[test]

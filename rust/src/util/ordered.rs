@@ -51,57 +51,64 @@ pub enum Rank {
     /// Supervisor barrier-completion slot (`barrier_done`): written by
     /// the link receive loop, condvar-waited by the epoch loop.
     SessionBarrier = 0,
+    /// The live re-planning controller's state (`planner::controller`).
+    /// Held only by the supervisor epoch loop at epoch boundaries, and
+    /// deliberately near the top of the table: applying a plan may
+    /// fetch parameters, resync replicas, and resize topic queues while
+    /// the decision is being committed.
+    Controller = 1,
     /// Supervisor fetched-parameter slots (`params_slot`): written by
     /// the link receive loop, condvar-waited by `fetch_passive_params`.
-    SessionParams = 1,
+    SessionParams = 2,
     /// Per-epoch loss accumulator shared by active workers.
-    EpochLoss = 2,
+    EpochLoss = 3,
     /// Remote passive server's per-epoch batch table.
-    ServeTable = 3,
+    ServeTable = 4,
     /// Remote passive server's per-party embed-job queues.
-    ServeJobs = 4,
+    ServeJobs = 5,
     /// The exactly-once batch ledger's state machine.
-    Ledger = 5,
+    Ledger = 6,
     /// Model replicas (active and passive). Same-rank nesting is allowed
     /// because the barrier folds lock an entire replica array at once —
     /// always in ascending index order, which keeps same-rank
     /// acquisitions acyclic.
-    Replica = 6,
+    Replica = 7,
     /// Per-party parameter server state. Strictly below `Replica`:
     /// the barrier folds call `set_params`/`fetch` while holding every
     /// replica guard.
-    ParamServer = 7,
+    ParamServer = 8,
     /// Per-party DP noise mechanism state.
-    DpNoise = 8,
+    DpNoise = 9,
     /// Pub/sub topic queues (`coordinator::channel::Topic`).
-    TopicQueue = 9,
+    TopicQueue = 10,
     /// Durable broker topic-log lanes. Same-rank allowed: barrier
     /// compaction walks the lanes one at a time in lane order.
-    DurableLog = 10,
+    DurableLog = 11,
     /// TCP link writer half.
-    LinkWriter = 11,
+    LinkWriter = 12,
     /// TCP link reader half (held across blocking socket reads).
-    LinkReader = 12,
+    LinkReader = 13,
     /// In-process link frame queue.
-    LinkQueue = 13,
+    LinkQueue = 14,
     /// Swappable-link retired-stats fold (holds while snapshotting the
     /// outgoing link's counters on swap).
-    LinkRetired = 14,
+    LinkRetired = 15,
     /// Worker-pool job queue (the shared `Receiver`). Below `Replica`:
     /// engine kernels dispatch onto the pool while a replica guard is
     /// held.
-    PoolQueue = 15,
+    PoolQueue = 16,
     /// Worker-pool result slots for `scope_map`.
-    PoolResults = 16,
+    PoolResults = 17,
 }
 
 /// Number of ranks in the table.
-pub const RANK_COUNT: usize = 17;
+pub const RANK_COUNT: usize = 18;
 
 impl Rank {
     /// Every rank, in acquisition (declaration) order.
     pub const ALL: [Rank; RANK_COUNT] = [
         Rank::SessionBarrier,
+        Rank::Controller,
         Rank::SessionParams,
         Rank::EpochLoss,
         Rank::ServeTable,
@@ -129,6 +136,7 @@ impl Rank {
     pub fn name(self) -> &'static str {
         match self {
             Rank::SessionBarrier => "SessionBarrier",
+            Rank::Controller => "Controller",
             Rank::SessionParams => "SessionParams",
             Rank::EpochLoss => "EpochLoss",
             Rank::ServeTable => "ServeTable",

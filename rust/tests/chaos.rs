@@ -75,6 +75,10 @@ struct ChaosRun {
     passive: Arc<Metrics>,
     report: PassiveSessionReport,
     retries: u64,
+    /// `Replanned` run events observed (total, applied) — the live
+    /// re-planning cell asserts on these.
+    replans: u64,
+    replans_applied: u64,
     journal: Vec<String>,
 }
 
@@ -93,8 +97,21 @@ fn run_linked_quant(
     profile: Option<FaultProfile>,
     quant: Quantization,
 ) -> ChaosRun {
+    run_linked_with(transport, profile, quant, |_| {})
+}
+
+/// [`run_linked_quant`] with a config hook applied to *both* sides
+/// before the session starts (the replanning cell turns the controller
+/// on with it).
+fn run_linked_with(
+    transport: &dyn Transport,
+    profile: Option<FaultProfile>,
+    quant: Quantization,
+    tweak: impl FnOnce(&mut ExperimentConfig),
+) -> ChaosRun {
     let (engine, spec, vtr, vte, mut cfg) = setup();
     cfg.transport.quantization = quant;
+    tweak(&mut cfg);
     let (active_raw, passive_link) = transport.pair().expect("link pair");
     let fault_link = profile.map(|p| FaultLink::wrap(Arc::clone(&active_raw), p));
     let active_link: Arc<dyn Link> = match &fault_link {
@@ -117,11 +134,21 @@ fn run_linked_quant(
     let am = Arc::clone(&active_metrics);
     let retries = Arc::new(AtomicU64::new(0));
     let rc = Arc::clone(&retries);
+    let replans = Arc::new(AtomicU64::new(0));
+    let replans_applied = Arc::new(AtomicU64::new(0));
+    let (rp, ra) = (Arc::clone(&replans), Arc::clone(&replans_applied));
     let h = std::thread::spawn(move || {
-        let opts = RunOptions::new().with_observer(move |ev| {
-            if matches!(ev, RunEvent::BatchRetried { .. }) {
+        let opts = RunOptions::new().with_observer(move |ev| match ev {
+            RunEvent::BatchRetried { .. } => {
                 rc.fetch_add(1, Ordering::Relaxed);
             }
+            RunEvent::Replanned { applied, .. } => {
+                rp.fetch_add(1, Ordering::Relaxed);
+                if applied {
+                    ra.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            _ => {}
         });
         let engine: Arc<dyn pubsub_vfl::model::SplitEngine> = engine;
         let ctx = TrainCtx {
@@ -148,6 +175,8 @@ fn run_linked_quant(
         passive: passive_metrics,
         report,
         retries: retries.load(Ordering::Relaxed),
+        replans: replans.load(Ordering::Relaxed),
+        replans_applied: replans_applied.load(Ordering::Relaxed),
         journal: fault_link.map(|fl| fl.journal()).unwrap_or_default(),
     }
 }
@@ -264,6 +293,78 @@ fn chaos_corrupt_frames_inproc() {
 #[test]
 fn chaos_corrupt_frames_tcp() {
     chaos_cell(Scenario::CorruptFrames, &TcpTransport, "tcp");
+}
+
+/// Live re-planning cell: slow_passive × `--replan act` × real TCP. The
+/// session starts deliberately under-provisioned (one active worker):
+/// a single-worker active pool is never optimal on the refit surface —
+/// growing to 2 halves the steady-state per-pair cost outright — so the
+/// controller must apply a grow on the first epoch boundary regardless
+/// of the host's core count. All assertions are structural: the
+/// exactly-once conservation laws must hold across the mid-session pool
+/// resize (grow-resync, buffer retune, generation bump), never
+/// wall-clock speedup.
+#[test]
+fn chaos_slow_passive_replan_act_tcp() {
+    use pubsub_vfl::config::ReplanMode;
+    let profile = Scenario::SlowPassive.profile(FAULT_SEED);
+    let run = run_linked_with(&TcpTransport, Some(profile), Quantization::None, |cfg| {
+        cfg.parties.active_workers = 1; // mis-planned seed the controller must fix
+        cfg.replanning.mode = ReplanMode::Act;
+        // The cell tests conservation under live resizes, not policy:
+        // replan as eagerly as the controller allows.
+        cfg.replanning.hysteresis = 0.0;
+        cfg.replanning.cooldown_epochs = 0;
+        cfg.replanning.max_active_workers = 4;
+        cfg.replanning.step_quantization = true;
+    });
+    dump_journal("replan_act_slow_passive", FAULT_SEED, &run.journal);
+
+    let exp =
+        ExactlyOnceExpectation { epochs: EPOCHS as u64, n_batches: N_BATCHES, parties: 1 };
+    check_session(&exp, &run.session, &run.active, Some(&run.passive), Some(run.retries))
+        .assert_ok("slow_passive × replan act over tcp");
+    assert_eq!(run.report.bwd_applied, exp.expected_bwd(), "replan_act/tcp");
+    assert_eq!(run.report.epochs_served, EPOCHS, "replan_act/tcp");
+    assert!(!run.journal.is_empty(), "replan_act/tcp: no fault decisions journaled");
+
+    // The controller really ran: one decision per completed epoch, each
+    // recorded in the replan_* series, and at least one applied (the
+    // single-worker seed is strictly dominated, so the grow clears the
+    // zero hysteresis at the first boundary).
+    assert_eq!(run.replans, EPOCHS as u64, "one Replanned decision per epoch boundary");
+    assert_eq!(run.active.series("replan_w_a").len(), EPOCHS);
+    assert_eq!(run.active.series("replan_applied").len(), EPOCHS);
+    assert!(
+        run.replans_applied >= 1,
+        "the controller never grew the strictly-dominated 1-worker active pool"
+    );
+    assert_eq!(run.active.counter("replans_applied"), run.replans_applied);
+    let (_, proposed_w_a) = *run.active.series("replan_w_a").last().unwrap();
+    assert!(proposed_w_a >= 2.0, "final proposal stayed at the dominated plan");
+    // The wire lever is opportunistic (bandwidth refit is EWMA-damped,
+    // so stepping within 4 epochs depends on the host) — but a step the
+    // active side committed must always have reached the passive
+    // dispatcher; TCP is reliable and the step precedes shutdown.
+    assert_eq!(
+        run.active.counter("quantization_stepped"),
+        run.passive.counter("quantization_stepped"),
+        "active committed a quantization step the passive never applied"
+    );
+
+    // Convergence within the matrix tolerance of the fault-free run.
+    let (base_auc, base_loss) = baseline();
+    let m = run.session.final_metric;
+    let loss = run.session.loss_curve.last().unwrap().1;
+    assert!(m > 0.7, "replan_act/tcp: AUC {m} under faults + live resizes");
+    assert!(
+        (m - base_auc).abs() < 0.15,
+        "replan_act/tcp: AUC {m} diverged from fault-free {base_auc}"
+    );
+    assert!(
+        (loss - base_loss).abs() < 0.3,
+        "replan_act/tcp: final loss {loss} diverged from fault-free {base_loss}"
+    );
 }
 
 /// Quantized-wire cell: the int8 data plane (with error feedback) under
@@ -451,6 +552,7 @@ fn fuzz_frames() -> Vec<Frame> {
         Frame::FetchParams,
         Frame::PassiveParams { party: 0, version: 4, flat: vec![0.25; 9] },
         Frame::Shutdown,
+        Frame::SetQuantization { mode: Quantization::Int8 },
     ]
 }
 

@@ -241,3 +241,119 @@ fn prop_ps_aggregation_is_mean() {
         },
     );
 }
+
+/// The live re-planning loop against a synthetic cost surface whose
+/// optimal (p, q) shifts mid-run: for the first four epochs the observed
+/// busy times match the seed model exactly (the controller must hold at
+/// the seed optimum); from epoch 4 the passive stage runs 4× slower.
+/// An `act` controller must land on the shifted DP optimum within three
+/// epochs of the shift; an `observe` controller fed the same series must
+/// log a would-apply but never move its plan.
+#[test]
+fn controller_reconverges_within_three_epochs_of_a_cost_shift() {
+    use pubsub_vfl::planner::controller::{predicted_stage_active, predicted_stage_passive};
+    use pubsub_vfl::planner::{
+        Controller, ControllerConfig, EpochObservation, RateCosts, ReplanMode,
+    };
+
+    let seed = CostModel {
+        consts: CostConstants::balanced_default(),
+        c_a: 16,
+        c_p: 16,
+        emb_bytes_per_sample: 144.0,
+        grad_bytes_per_sample: 144.0,
+        bandwidth_bps: 2e6,
+    };
+    let mm = MemoryModel::default_profile();
+    let b = 128usize;
+    let space = PlanSpace { w_a_range: (1, 24), w_p_range: (1, 24), batch_sizes: vec![b] };
+    let pre = planner::solve_rate(&seed, &mm, &space, &RateCosts::default())
+        .expect("seed surface must be feasible")
+        .best;
+
+    // Observed epochs synthesized straight from the cost constants, with
+    // the passive stage scaled by `rp` — so the controller's EWMA refit
+    // sees exactly the surface we solve against below.
+    let obs = |epoch: usize, rp: f64| -> EpochObservation {
+        let iters = 40u64;
+        let c = CostConstants::balanced_default();
+        EpochObservation {
+            epoch,
+            wall_s: 8.0,
+            batches: iters,
+            batch_size: b,
+            active_busy_s: predicted_stage_active(&c, b) * iters as f64,
+            passive_busy_s: rp * predicted_stage_passive(&c, b) * iters as f64,
+            ..Default::default()
+        }
+    };
+
+    // alpha = 1.0: the refit adopts each epoch's observation outright, so
+    // "within three epochs" tests the decision loop, not EWMA lag. The
+    // hysteresis is small-but-positive: the gate must be live, but this
+    // test is about convergence, not the gate's threshold.
+    let cfg = ControllerConfig {
+        mode: ReplanMode::Act,
+        ewma_alpha: 1.0,
+        hysteresis: 0.01,
+        cooldown_epochs: 0,
+        max_w_a: 24,
+        max_w_p: 24,
+        min_w_a: 1,
+        min_w_p: 1,
+        step_quantization: false,
+    };
+    let mut act = Controller::new(cfg, &seed, mm, b, pre.w_a, pre.w_p);
+    let mut watch = Controller::new(
+        ControllerConfig { mode: ReplanMode::Observe, ..cfg },
+        &seed,
+        mm,
+        b,
+        pre.w_a,
+        pre.w_p,
+    );
+
+    // Phase 1: the observed surface matches the seed — hold the optimum.
+    for e in 0..4 {
+        let d = act.observe(&obs(e, 1.0));
+        assert!(!d.apply, "epoch {e}: applied while already at the optimum");
+        watch.observe(&obs(e, 1.0));
+    }
+    assert_eq!(act.planned(), (pre.w_a, pre.w_p));
+
+    // The surface the controller should now discover: passive 4× slower.
+    let mut shifted = seed;
+    shifted.consts.lambda_p *= 4.0;
+    shifted.consts.phi_p *= 4.0;
+    let post = planner::solve_rate(&shifted, &mm, &space, &RateCosts::default())
+        .expect("shifted surface must be feasible")
+        .best;
+    assert_ne!(
+        (pre.w_a, pre.w_p),
+        (post.w_a, post.w_p),
+        "degenerate fixture: the optimum did not move under a 4x passive slowdown"
+    );
+
+    // Phase 2: converge onto the shifted optimum.
+    let mut converged_at = None;
+    let mut would = false;
+    for e in 4..8 {
+        act.observe(&obs(e, 4.0));
+        let dw = watch.observe(&obs(e, 4.0));
+        would |= dw.would_apply;
+        assert!(!dw.apply, "observe mode must never apply");
+        if converged_at.is_none() && act.planned() == (post.w_a, post.w_p) {
+            converged_at = Some(e);
+        }
+    }
+    let at = converged_at.expect("act controller never reached the shifted optimum");
+    assert!(at - 4 < 3, "converged at epoch {at}, more than 3 epochs after the shift");
+    assert!(act.applies() >= 1, "act controller converged without ever applying");
+    assert_eq!(
+        watch.planned(),
+        (pre.w_a, pre.w_p),
+        "observe mode moved the live plan"
+    );
+    assert!(would, "observe mode never logged a would-apply for the shifted surface");
+    assert_eq!(watch.applies(), 0);
+}

@@ -173,4 +173,27 @@ fn steady_state_training_step_performs_zero_allocations() {
         after - before
     );
     assert!(buf.loss.is_finite());
+
+    // ---- across a re-planning resize boundary -------------------------
+    // A live re-plan rebuilds each worker's workspace on a new thread
+    // budget (the one steady-state-exempt allocation outside session
+    // start), exactly as the pool-control generation bump does. After
+    // the rebuild's own warmup, the steady state must again be zero.
+    let mut ws = Workspace::new(make(BackendKind::Tiled, 1));
+    for _ in 0..3 {
+        step(&mut ws, &mut z, &mut buf, &mut gp);
+    }
+    let loss_resized = buf.loss;
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..10 {
+        step(&mut ws, &mut z, &mut buf, &mut gp);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "post-resize steady-state step allocated {} times over 10 steps",
+        after - before
+    );
+    assert_eq!(buf.loss, loss_resized);
 }
