@@ -58,8 +58,8 @@ fn setup() -> Setup {
         &mut rng,
     );
     let (tr, te) = ds.split(0.75);
-    let vtr = VerticalDataset::split_two(&tr, 6);
-    let vte = VerticalDataset::split_two(&te, 6);
+    let vtr = VerticalDataset::split_two(&tr, 6).unwrap();
+    let vte = VerticalDataset::split_two(&te, 6).unwrap();
     let spec = SplitModelSpec::build(ModelSize::Small, 6, &[6], 16, 8);
     let engine: Arc<dyn SplitEngine> =
         Arc::new(HostSplitModel::new(spec.clone(), Task::BinaryClassification));

@@ -100,6 +100,8 @@ fn main() {
                         let _ = link.send(Frame::HelloAck {
                             parties: 1,
                             quantization: Quantization::None,
+                            party_id: 0,
+                            workers: 1,
                         });
                     }
                 }

@@ -509,8 +509,8 @@ mod tests {
             &mut rng,
         );
         let (tr, te) = ds.split(0.75);
-        let vtr = VerticalDataset::split_two(&tr, 6);
-        let vte = VerticalDataset::split_two(&te, 6);
+        let vtr = VerticalDataset::split_two(&tr, 6).unwrap();
+        let vte = VerticalDataset::split_two(&te, 6).unwrap();
         let spec = SplitModelSpec::build(ModelSize::Small, 6, &[6], 16, 8);
         let engine = Arc::new(HostSplitModel::new(spec.clone(), Task::BinaryClassification));
         let mut cfg = ExperimentConfig::default();

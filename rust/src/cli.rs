@@ -141,6 +141,11 @@ pub fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     if let Some(addr) = args.get("listen") {
         cfg.transport.listen = addr.to_string();
     }
+    if let Some(p) = args.get("party") {
+        let p: usize =
+            p.parse().map_err(|_| anyhow!("--party expects a party index, got '{p}'"))?;
+        cfg.transport.party = Some(p);
+    }
     cfg.transport.connect_timeout_s =
         args.get_usize("connect-timeout", cfg.transport.connect_timeout_s as usize) as u64;
     if let Some(fp) = args.get("fault-profile") {
@@ -176,17 +181,22 @@ COMMANDS:
   train         run one experiment          [--arch pubsub --dataset bank --engine host|xla
                                              --backend naive|tiled|threaded|simd
                                              --batch N --epochs N --lr F --mu F --config file.toml
-                                             --transport inproc|tcp --connect HOST:PORT
+                                             --transport inproc|tcp --connect HOST:PORT[,HOST:PORT...]
+                                               (one address per passive organization; a single
+                                                address serves every party from one process)
                                              --quantization none|fp16|int8
                                              --replan off|observe|act
                                              --fault-profile lossy_lan|slow_passive|flaky_wire|
                                                partition_heal|corrupt_frames --fault-seed N
                                              --state-dir DIR --resume]
   serve-passive host the passive party      [--listen HOST:PORT --config file.toml --samples N
+                                             --party N (own one party in an N-org session;
+                                               omit to accept the supervisor's proposal)
                                              --quantization none|fp16|int8
                                              --state-dir DIR --resume]
-                (two-process training: start this first, then `train
-                 --connect` from the active party with the same config)
+                (multi-process training: start one per organization, then
+                 `train --connect addr0,addr1,...` from the active party
+                 with the same config)
   compare       all five architectures      [--dataset synthetic --samples N]
   plan          Algorithm 2 planner         [--ca N --cp N]
   profile       fit local Table 8 constants
@@ -477,6 +487,31 @@ mod tests {
         let cfg = config_from_args(&l).unwrap();
         assert_eq!(cfg.transport.listen, "0.0.0.0:7005");
         assert_eq!(cfg.transport.kind, TransportKind::InProc, "--listen alone must not force tcp");
+    }
+
+    #[test]
+    fn party_flag_parses_into_config() {
+        // passive_parties defaults to 1, so party 1 is out of range and
+        // must be rejected by validation.
+        let a = Args::parse(&argv("serve-passive --listen 0.0.0.0:7005 --party 1"));
+        assert!(config_from_args(&a).is_err());
+        let b = Args::parse(&argv("serve-passive --party 0"));
+        let cfg = config_from_args(&b).unwrap();
+        assert_eq!(cfg.transport.party, Some(0));
+        // No flag: accept whatever the supervisor proposes.
+        let none = config_from_args(&Args::parse(&argv("serve-passive"))).unwrap();
+        assert_eq!(none.transport.party, None);
+        let bad = Args::parse(&argv("serve-passive --party one"));
+        assert!(config_from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn multi_connect_flag_keeps_address_list() {
+        let a = Args::parse(&argv("train --connect h0:1,h1:2,h2:3"));
+        // Default passive_parties = 1: a 3-address list is >= k, valid.
+        let cfg = config_from_args(&a).unwrap();
+        assert_eq!(cfg.transport.kind, TransportKind::Tcp);
+        assert_eq!(cfg.transport.connect_addrs(), vec!["h0:1", "h1:2", "h2:3"]);
     }
 
     #[test]

@@ -173,17 +173,29 @@ pub struct DpConfig {
 }
 
 /// Message-plane selection for the PubSub session plus the addresses a
-/// distributed (two-process) run needs. `inproc` (the default) keeps
-/// both parties in one process over the shared broker; `tcp` splits them
-/// across `serve-passive --listen ADDR` / `train --connect ADDR`.
+/// distributed run needs. `inproc` (the default) keeps both parties in
+/// one process over the shared broker; `tcp` splits them across one or
+/// more `serve-passive --listen ADDR` processes / `train --connect
+/// ADDR[,ADDR...]`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TransportConfig {
     pub kind: TransportKind,
-    /// Active side: address of the passive party's `serve-passive`
-    /// listener (required when `kind = tcp` on the training side).
+    /// Active side: address(es) of the passive organizations'
+    /// `serve-passive` listeners (required when `kind = tcp` on the
+    /// training side). One address is the legacy two-process topology
+    /// (that org serves every passive party); a comma-separated list
+    /// runs one link per organization, with address `i` proposed party
+    /// `i % passive_parties` at the handshake — more addresses than
+    /// parties form queue groups sharing a party's work.
     pub connect: String,
     /// Default listen address for `serve-passive`.
     pub listen: String,
+    /// Passive side: the single party index this `serve-passive`
+    /// process owns (N-party deployments). `None` accepts the active
+    /// supervisor's handshake proposal — or serves every party when the
+    /// proposal is the wildcard. TOML `[transport] party`, CLI
+    /// `--party`.
+    pub party: Option<usize>,
     /// Seconds to keep retrying the initial connect + handshake
     /// (tolerates startup skew between the two processes).
     pub connect_timeout_s: u64,
@@ -210,11 +222,26 @@ impl Default for TransportConfig {
             kind: TransportKind::InProc,
             connect: String::new(),
             listen: "127.0.0.1:7878".into(),
+            party: None,
             connect_timeout_s: 30,
             fault_profile: String::new(),
             fault_seed: 0,
             quantization: Quantization::None,
         }
+    }
+}
+
+impl TransportConfig {
+    /// The `connect` field split into one address per passive
+    /// organization (comma-separated, whitespace-tolerant, empties
+    /// dropped). Empty when `connect` is unset.
+    pub fn connect_addrs(&self) -> Vec<String> {
+        self.connect
+            .split(',')
+            .map(str::trim)
+            .filter(|a| !a.is_empty())
+            .map(str::to_string)
+            .collect()
     }
 }
 
@@ -531,6 +558,10 @@ impl ExperimentConfig {
             .ok_or_else(|| ConfigError::Invalid(format!("unknown transport '{tkind}'")))?;
         c.transport.connect = doc.str_or("transport", "connect", &c.transport.connect);
         c.transport.listen = doc.str_or("transport", "listen", &c.transport.listen);
+        let party = doc.i64_or("transport", "party", -1);
+        if party >= 0 {
+            c.transport.party = Some(party as usize);
+        }
         c.transport.connect_timeout_s = doc
             .i64_or("transport", "connect_timeout_s", c.transport.connect_timeout_s as i64)
             .max(1) as u64;
@@ -593,6 +624,45 @@ impl ExperimentConfig {
         }
         if self.passive_parties == 0 {
             return inv("need at least one passive party".into());
+        }
+        // The vertical split hands every party (active included) >= 1
+        // feature column; a party count the configured feature count
+        // cannot cover used to surface as a usize-underflow panic inside
+        // `VerticalDataset::split_multi`. `features = 0` defers to the
+        // catalog default, which `prepare()` cross-checks after the
+        // dataset materializes.
+        if self.dataset.features != 0 && self.dataset.features < self.passive_parties + 1 {
+            return inv(format!(
+                "passive_parties = {} needs dataset.features >= {} (every party, active \
+                 included, holds >= 1 feature column; got features = {})",
+                self.passive_parties,
+                self.passive_parties + 1,
+                self.dataset.features
+            ));
+        }
+        // Multi-organization TCP sessions: one address is the legacy
+        // single-link topology (the org serves every party); a list must
+        // cover every party under the `addr i -> party i % k` default
+        // assignment, i.e. hold at least `passive_parties` addresses
+        // (extras form queue groups sharing a party's jobs).
+        let addrs = self.transport.connect_addrs().len();
+        if addrs > 1 && addrs < self.passive_parties {
+            return inv(format!(
+                "transport.connect lists {addrs} passive addresses but passive_parties = {}: \
+                 give one address (a single organization serving every party) or at least \
+                 {} (one per organization, extras joining queue groups)",
+                self.passive_parties, self.passive_parties
+            ));
+        }
+        if let Some(p) = self.transport.party {
+            if p >= self.passive_parties {
+                return inv(format!(
+                    "transport.party = {p} is out of range for passive_parties = {} \
+                     (valid party indices are 0..={})",
+                    self.passive_parties,
+                    self.passive_parties - 1
+                ));
+            }
         }
         if self.dp.enabled && self.dp.mu <= 0.0 {
             return inv("dp.mu must be > 0".into());
@@ -877,6 +947,71 @@ bandwidth_mbps = 500.0
         assert_eq!(d.replanning.cap_active(4), 8);
         assert_eq!(d.replanning.cap_passive(3), 6);
         assert_eq!(c.replanning.cap_active(8), 8, "explicit cap never shrinks the pool");
+    }
+
+    #[test]
+    fn party_count_vs_feature_count_cross_checked() {
+        // 12 parties over 10 columns cannot give everyone a feature.
+        let bad = ExperimentConfig::from_toml(
+            "[experiment]\npassive_parties = 12\n\n[dataset]\nfeatures = 10",
+        );
+        let msg = format!("{}", bad.unwrap_err());
+        assert!(msg.contains("passive_parties = 12"), "unhelpful error: {msg}");
+        assert!(msg.contains("features >= 13"), "unhelpful error: {msg}");
+        // features = 0 defers to the catalog default; prepare() re-checks
+        // against the materialized width.
+        assert!(ExperimentConfig::from_toml("[experiment]\npassive_parties = 12").is_ok());
+        // A coverable count passes.
+        assert!(ExperimentConfig::from_toml(
+            "[experiment]\npassive_parties = 3\n\n[dataset]\nfeatures = 10"
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn multi_address_connect_splits_and_validates() {
+        let c = ExperimentConfig::from_toml(
+            "[experiment]\npassive_parties = 3\n\n[dataset]\nfeatures = 12\n\n\
+             [transport]\nkind = \"tcp\"\nconnect = \"a:1, b:2 ,c:3\"",
+        )
+        .unwrap();
+        assert_eq!(c.transport.connect_addrs(), vec!["a:1", "b:2", "c:3"]);
+
+        // 2 addresses cannot cover 3 parties: neither single-org nor
+        // one-per-org. Rejected with both counts in the message.
+        let bad = ExperimentConfig::from_toml(
+            "[experiment]\npassive_parties = 3\n\n[dataset]\nfeatures = 12\n\n\
+             [transport]\nkind = \"tcp\"\nconnect = \"a:1,b:2\"",
+        );
+        let msg = format!("{}", bad.unwrap_err());
+        assert!(msg.contains("2 passive addresses"), "unhelpful error: {msg}");
+        assert!(msg.contains("passive_parties = 3"), "unhelpful error: {msg}");
+
+        // One address (legacy single org) and >k (queue groups) both pass.
+        for connect in ["a:1", "a:1,b:2,c:3,d:4"] {
+            let toml = format!(
+                "[experiment]\npassive_parties = 3\n\n[dataset]\nfeatures = 12\n\n\
+                 [transport]\nkind = \"tcp\"\nconnect = \"{connect}\""
+            );
+            assert!(ExperimentConfig::from_toml(&toml).is_ok(), "{connect}");
+        }
+    }
+
+    #[test]
+    fn transport_party_parses_and_validates() {
+        let d = ExperimentConfig::from_toml("").unwrap();
+        assert_eq!(d.transport.party, None);
+        let c = ExperimentConfig::from_toml(
+            "[experiment]\npassive_parties = 3\n\n[dataset]\nfeatures = 12\n\n\
+             [transport]\nparty = 2",
+        )
+        .unwrap();
+        assert_eq!(c.transport.party, Some(2));
+
+        let bad = ExperimentConfig::from_toml("[transport]\nparty = 1");
+        let msg = format!("{}", bad.unwrap_err());
+        assert!(msg.contains("transport.party = 1"), "unhelpful error: {msg}");
+        assert!(msg.contains("passive_parties = 1"), "unhelpful error: {msg}");
     }
 
     #[test]

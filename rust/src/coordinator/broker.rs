@@ -142,6 +142,16 @@ impl Broker {
             t.set_capacity(q.max(1));
         }
     }
+
+    /// Retune one party's topic pair only. N-organization sessions size
+    /// each party's depths to that organization's advertised worker pool
+    /// (a 2-worker org and an 8-worker org should not share one global
+    /// `(p, q)`), so the controller calls this per party instead of
+    /// [`Broker::resize_buffers`].
+    pub fn resize_party_buffers(&self, party: usize, p: usize, q: usize) {
+        self.emb[party].set_capacity(p.max(1));
+        self.grad[party].set_capacity(q.max(1));
+    }
 }
 
 #[cfg(test)]
@@ -245,6 +255,22 @@ mod tests {
         // Zero requests clamp to one rather than wedging the topic.
         b.resize_buffers(0, 0);
         assert_eq!(b.emb[0].capacity(), 1);
+    }
+
+    #[test]
+    fn resize_party_buffers_touches_one_party_only() {
+        let m = Arc::new(Metrics::new());
+        let b = Broker::new(3, 2, 2, m);
+        b.resize_party_buffers(1, 5, 4);
+        assert_eq!(b.emb[0].capacity(), 2);
+        assert_eq!(b.emb[1].capacity(), 5);
+        assert_eq!(b.emb[2].capacity(), 2);
+        assert_eq!(b.grad[1].capacity(), 4);
+        assert_eq!(b.grad[2].capacity(), 2);
+        // Zero clamps to one, same as the global resize.
+        b.resize_party_buffers(0, 0, 0);
+        assert_eq!(b.emb[0].capacity(), 1);
+        assert_eq!(b.grad[0].capacity(), 1);
     }
 
     #[test]

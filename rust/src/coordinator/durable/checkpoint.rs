@@ -38,6 +38,12 @@ const DIGEST_BYTES: usize = 32;
 /// Sanity bound on vector length fields — anything larger is a corrupt
 /// length, not a real checkpoint.
 const MAX_VEC: usize = 64 * 1024 * 1024;
+/// Sanity bound on per-party counts (`passive_versions`,
+/// `passive_flats`). A real session holds a handful of passive parties;
+/// a count beyond this is a corrupt header, and it must bound the *read
+/// loop*, not just the pre-allocation, so a corrupted u32 cannot drive
+/// millions of decode iterations.
+const MAX_PARTIES: usize = 65_536;
 
 /// Decode/IO failure for checkpoint files. Restore paths treat any
 /// variant as "no usable checkpoint" — state is never partially applied.
@@ -219,12 +225,18 @@ impl Checkpoint {
         let active_flat = c.f32_vec(read_len(&mut c)?)?;
         let top_flat = c.f32_vec(read_len(&mut c)?)?;
         let n_versions = read_len(&mut c)?;
-        let mut passive_versions = Vec::with_capacity(n_versions.min(65_536));
+        if n_versions > MAX_PARTIES {
+            return Err(CheckpointError::Malformed("passive_versions count exceeds party limit"));
+        }
+        let mut passive_versions = Vec::with_capacity(n_versions);
         for _ in 0..n_versions {
             passive_versions.push(c.u64()?);
         }
         let n_parties = read_len(&mut c)?;
-        let mut passive_flats = Vec::with_capacity(n_parties.min(65_536));
+        if n_parties > MAX_PARTIES {
+            return Err(CheckpointError::Malformed("passive_flats count exceeds party limit"));
+        }
+        let mut passive_flats = Vec::with_capacity(n_parties);
         for _ in 0..n_parties {
             let n = read_len(&mut c)?;
             passive_flats.push(c.f32_vec(n)?);
@@ -370,6 +382,55 @@ mod tests {
                 "bit flip at {i} must not decode"
             );
         }
+    }
+
+    /// Satellite: an oversized party-count header must error loudly even
+    /// under a *valid* digest — the read-loop bound itself is checked,
+    /// not just the `Vec` pre-allocation. The counts are corrupted and
+    /// the SHA-256 trailer re-signed, so the storm reaches the
+    /// structural check instead of stopping at `ChecksumMismatch`.
+    #[test]
+    fn corruption_storm_oversized_party_headers() {
+        let bytes = Checkpoint::default().encode();
+        // Body layout of the default (all-empty) checkpoint: 6-byte
+        // header, 8 u64 scalars, two empty flats (4-byte counts), then
+        // the passive_versions count and the passive_flats count.
+        let n_versions_off = 6 + 8 * 8 + 4 + 4;
+        let n_parties_off = n_versions_off + 4;
+        let resign = |evil: &mut [u8]| {
+            let body_len = evil.len() - DIGEST_BYTES;
+            let mut h = Sha256::new();
+            h.update(&evil[..body_len]);
+            let digest = h.finalize();
+            evil[body_len..].copy_from_slice(digest.as_ref());
+        };
+        for off in [n_versions_off, n_parties_off] {
+            // Over the party limit but under the generic MAX_VEC cap:
+            // must be caught by the dedicated party bound.
+            let mut evil = bytes.clone();
+            evil[off..off + 4].copy_from_slice(&1_000_000u32.to_le_bytes());
+            resign(&mut evil);
+            match Checkpoint::decode(&evil).unwrap_err() {
+                CheckpointError::Malformed(why) => {
+                    assert!(why.contains("party limit"), "offset {off}: {why}");
+                }
+                other => panic!("offset {off}: expected Malformed, got {other}"),
+            }
+            // Beyond even MAX_VEC: the generic length cap still holds.
+            let mut evil = bytes.clone();
+            evil[off..off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+            resign(&mut evil);
+            assert!(matches!(
+                Checkpoint::decode(&evil).unwrap_err(),
+                CheckpointError::Malformed(_)
+            ));
+        }
+        // Inside the party limit but promising more than the payload
+        // holds: truncation error, never a partial decode.
+        let mut evil = bytes.clone();
+        evil[n_versions_off..n_versions_off + 4].copy_from_slice(&60_000u32.to_le_bytes());
+        resign(&mut evil);
+        assert!(Checkpoint::decode(&evil).is_err());
     }
 
     #[test]

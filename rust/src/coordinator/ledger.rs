@@ -369,6 +369,45 @@ impl BatchLedger {
         }
         out
     }
+
+    /// Void every backward-pass credit held by `party` and re-drive the
+    /// affected batches under fresh generations. The N-organization
+    /// supervisor calls this when one organization's process dies
+    /// mid-epoch: its replica state is gone, so credits it earned this
+    /// epoch describe updates that no longer exist anywhere — the rejoined
+    /// process must re-earn them. Other parties' `bwd_done` flags are
+    /// untouched (their replicas are intact; exactly-once still drops
+    /// their duplicate gradients), and `Done` batches missing only this
+    /// party's work are downgraded to `Stepped` so the sweep can requeue
+    /// them. Every voided credit re-arms `remaining_bwd`. Returns the
+    /// number of credits voided — healthy organizations always observe 0.
+    pub fn void_party_bwd(&self, party: usize) -> u64 {
+        let mut s = self.state.lock();
+        let ids: Vec<u64> = s.entries.keys().copied().collect();
+        let mut voided = 0u64;
+        for id in ids {
+            let mut cleared = false;
+            if let Some(e) = s.entries.get_mut(&id) {
+                if e.bwd_done[party] {
+                    e.bwd_done[party] = false;
+                    if e.stage == BatchStage::Done {
+                        e.stage = BatchStage::Stepped;
+                    }
+                    cleared = true;
+                }
+            }
+            if cleared {
+                voided += 1;
+                s.remaining_bwd += 1;
+            }
+            // Re-drive regardless of whether a credit was voided: a batch
+            // the dead party never finished is equally stranded (its
+            // in-flight embedding or gradient died with the process).
+            // `requeue_locked` skips batches that are still `Done`.
+            requeue_locked(&mut s, self.k, id);
+        }
+        voided
+    }
 }
 
 /// Fully reassign `id` under a fresh generation, within an already-held
@@ -699,6 +738,53 @@ mod tests {
         let batches = vec![(30u64, rows(4))];
         l.install_epoch(1, &batches);
         assert!(l.generation(30).unwrap() > before + 40);
+    }
+
+    /// One organization's process dies mid-epoch: only *its* credits are
+    /// voided and re-armed; the surviving party's exactly-once flags keep
+    /// dropping duplicate gradients across the re-driven attempt.
+    #[test]
+    fn void_party_bwd_revokes_only_the_dead_party() {
+        let l = ledger_with(2, &[10, 11]);
+        // Drain the epoch fully: both batches Done, all four credits in.
+        for id in [10u64, 11] {
+            let g = l.generation(id).unwrap();
+            assert!(l.begin_publish(id, g, 0));
+            assert!(l.begin_publish(id, g, 1));
+            l.begin_join(id, g).unwrap();
+            assert!(l.mark_stepped(id, g));
+            assert!(l.credit_bwd(id, 0));
+            assert!(l.credit_bwd(id, 1));
+            assert_eq!(l.stage(id), Some(BatchStage::Done));
+        }
+        assert!(l.epoch_done());
+        let g10 = l.generation(10).unwrap();
+
+        // Party 1's process dies: both of its credits are voided, the Done
+        // batches are resurrected, and each is re-driven under a fresh
+        // generation.
+        assert_eq!(l.void_party_bwd(1), 2);
+        assert_eq!(l.remaining_bwd(), 2);
+        assert_eq!(l.stage(10), Some(BatchStage::Queued));
+        assert!(l.generation(10).unwrap() > g10);
+
+        // A second void finds nothing: party 0's credits were untouched by
+        // the first, and party 1's are already revoked.
+        assert_eq!(l.void_party_bwd(1), 0, "second void finds nothing to revoke");
+
+        // Re-drive: party 0's surviving flags drop its duplicates, party 1
+        // re-earns its credits.
+        for id in [10u64, 11] {
+            let g = l.generation(id).unwrap();
+            assert!(l.begin_publish(id, g, 0));
+            assert!(l.begin_publish(id, g, 1));
+            l.begin_join(id, g).unwrap();
+            assert!(l.mark_stepped(id, g));
+            assert!(!l.credit_bwd(id, 0), "party 0 already counted batch {id}");
+            assert!(l.credit_bwd(id, 1));
+            assert_eq!(l.stage(id), Some(BatchStage::Done));
+        }
+        assert!(l.epoch_done());
     }
 
     #[test]

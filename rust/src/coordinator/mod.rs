@@ -32,7 +32,8 @@ pub use ps::{ParameterServer, PsMode, SemiAsyncSchedule};
 pub use session::{
     evaluate, evaluate_ws, reached, serve_passive, serve_passive_listener,
     serve_passive_session, train_pubsub, train_pubsub_over_link, train_pubsub_over_link_with,
-    train_pubsub_session, PassiveSessionReport, SessionResult,
+    train_pubsub_over_links, train_pubsub_session, OrgEndpoint, PassiveSessionReport,
+    SessionResult,
 };
 pub use transport::{
     InProcLink, InProcTransport, Link, LinkRecv, LinkStats, LinkStatsSnapshot, SwappableLink,

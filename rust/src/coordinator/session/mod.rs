@@ -29,7 +29,10 @@ pub mod supervisor;
 pub use passive::{
     serve_passive, serve_passive_listener, serve_passive_session, PassiveSessionReport,
 };
-pub use supervisor::{train_pubsub_over_link, train_pubsub_over_link_with, train_pubsub_session};
+pub use supervisor::{
+    train_pubsub_over_link, train_pubsub_over_link_with, train_pubsub_over_links,
+    train_pubsub_session, OrgEndpoint,
+};
 
 use crate::config::ExperimentConfig;
 use crate::data::{Task, VerticalDataset};
@@ -195,7 +198,7 @@ mod tests {
             },
             &mut rng,
         );
-        let vtr = VerticalDataset::split_two(&ds, 4);
+        let vtr = VerticalDataset::split_two(&ds, 4).unwrap();
         let spec = SplitModelSpec::build(crate::config::ModelSize::Small, 4, &[4], 8, 4);
         let engine: Arc<dyn SplitEngine> =
             Arc::new(HostSplitModel::new(spec.clone(), Task::BinaryClassification));
@@ -240,7 +243,7 @@ mod tests {
             },
             &mut rng,
         );
-        let vtr = VerticalDataset::split_two(&ds, 6);
+        let vtr = VerticalDataset::split_two(&ds, 6).unwrap();
         let spec = SplitModelSpec::build(ModelSize::Small, 6, &[6], 16, 8);
         let engine = HostSplitModel::new(spec.clone(), Task::BinaryClassification);
         let params = SplitParams::init(&spec, &mut Rng::new(1));

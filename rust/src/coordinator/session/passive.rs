@@ -66,8 +66,23 @@ pub(crate) fn fold_passive_barrier(
     ps: &[ParameterServer],
     take: usize,
 ) {
-    for (party, reps) in replicas.iter().enumerate() {
-        let mut guards: Vec<_> = reps.iter().take(take.max(1)).map(|m| m.lock()).collect();
+    let all: Vec<usize> = (0..replicas.len()).collect();
+    fold_passive_barrier_for(replicas, ps, take, &all);
+}
+
+/// [`fold_passive_barrier`] restricted to the parties in `owned` — the
+/// N-organization serve path folds only the parties this process hosts
+/// (its foreign replica slots hold untouched init params; folding them
+/// would re-broadcast stale weights and advance versions nobody earns).
+pub(crate) fn fold_passive_barrier_for(
+    replicas: &[Vec<RankedMutex<PassiveReplica>>],
+    ps: &[ParameterServer],
+    take: usize,
+    owned: &[usize],
+) {
+    for &party in owned {
+        let mut guards: Vec<_> =
+            replicas[party].iter().take(take.max(1)).map(|m| m.lock()).collect();
         let mean_p = mean_params(guards.iter().map(|g| &g.params));
         ps[party].set_params(mean_p);
         let (bcast_p, vp) = ps[party].fetch();
@@ -512,6 +527,13 @@ const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(60);
 /// config/seed, and the initial parameters are drawn from the same seeded
 /// stream, so the wire only ever carries embeddings, gradients, and
 /// control frames — never raw features or labels.
+///
+/// In an N-organization deployment each process owns a subset of the
+/// parties (usually one): `cfg.transport.party` pins it explicitly, else
+/// the supervisor's Hello proposal decides, else the process serves every
+/// party (the legacy single-org topology). The HelloAck registers the
+/// choice plus this org's worker-pool size; frames addressed to foreign
+/// parties are counted (`wire_foreign_party`) and dropped.
 pub fn serve_passive_session(
     cfg: &ExperimentConfig,
     spec: &SplitModelSpec,
@@ -525,11 +547,6 @@ pub fn serve_passive_session(
     let clip = cfg.train.grad_clip as f32;
     let w_p = cfg.parties.passive_workers.max(1);
     let backend_kind = cfg.backend;
-    let total_workers = k * w_p;
-    metrics.gauge_max(
-        "linalg_threads_per_worker",
-        linalg::worker_threads(backend_kind, total_workers) as f64,
-    );
 
     // Identical init stream to the active process: same seed ⇒ the same
     // `SplitParams` draws on both sides of the wire (only the passive
@@ -567,7 +584,7 @@ pub fn serve_passive_session(
 
     // ---- handshake -------------------------------------------------------
     let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
-    let negotiated_quant = loop {
+    let (negotiated_quant, proposed_party) = loop {
         match link.recv(Duration::from_millis(100)) {
             LinkRecv::Frame(Frame::Hello {
                 parties,
@@ -575,6 +592,8 @@ pub fn serve_passive_session(
                 resume_token,
                 attempt,
                 quantization,
+                party_id,
+                workers: _,
             }) => {
                 if parties as usize != k {
                     bail!("active party expects {parties} passive parties, this server holds {k}");
@@ -615,10 +634,10 @@ pub fn serve_passive_session(
                 // (including a v1 Hello with no proposal) falls back to
                 // plain f32 frames — never a session failure.
                 if quantization == cfg.transport.quantization {
-                    break quantization;
+                    break (quantization, party_id);
                 }
                 metrics.inc("quantization_fell_back", 1);
-                break Quantization::None;
+                break (Quantization::None, party_id);
             }
             LinkRecv::Frame(other) => bail!("handshake: expected Hello, got {other:?}"),
             LinkRecv::Closed => bail!("peer closed the link during handshake"),
@@ -629,8 +648,57 @@ pub fn serve_passive_session(
             }
         }
     };
-    link.send(Frame::HelloAck { parties: k as u32, quantization: negotiated_quant })
-        .map_err(|e| anyhow!("handshake ack failed: {e}"))?;
+    // Which parties does this process own? Precedence: an explicit
+    // `--party`/config pin beats the supervisor's handshake proposal,
+    // which beats the legacy default of serving every party (a wildcard
+    // proposal, or a v1/v2 active with no notion of organizations). The
+    // HelloAck below registers the answer — it is authoritative for the
+    // supervisor's routing.
+    let owned: Vec<usize> = match (cfg.transport.party, proposed_party) {
+        (Some(p), _) => {
+            if p >= k {
+                bail!(
+                    "transport.party = {p} is out of range: this session has {k} passive \
+                     parties (valid indices 0..={})",
+                    k - 1
+                );
+            }
+            vec![p]
+        }
+        (None, wire::PARTY_ANY) => (0..k).collect(),
+        (None, p) => {
+            let p = p as usize;
+            if p >= k {
+                bail!(
+                    "active party proposed party index {p}, but this session has only {k} \
+                     passive parties — the supervisor's --connect list and passive_parties \
+                     disagree across processes"
+                );
+            }
+            vec![p]
+        }
+    };
+    let owned_flags: Vec<bool> = {
+        let mut f = vec![false; k];
+        for &p in &owned {
+            f[p] = true;
+        }
+        f
+    };
+    let registered_party =
+        if owned.len() == 1 { owned[0] as u32 } else { wire::PARTY_ANY };
+    let total_workers = owned.len() * w_p;
+    metrics.gauge_max(
+        "linalg_threads_per_worker",
+        linalg::worker_threads(backend_kind, total_workers) as f64,
+    );
+    link.send(Frame::HelloAck {
+        parties: k as u32,
+        quantization: negotiated_quant,
+        party_id: registered_party,
+        workers: w_p as u32,
+    })
+    .map_err(|e| anyhow!("handshake ack failed: {e}"))?;
 
     let mut epochs_served = 0usize;
     // Satellite of the durability work: distinguish an orderly teardown
@@ -664,8 +732,11 @@ pub fn serve_passive_session(
 
     std::thread::scope(|s| {
         // ---- persistent passive workers (live for the whole session) --
-        for (party, reps) in replicas.iter().enumerate() {
-            for replica in reps.iter() {
+        // Only the owned parties get workers: a per-organization process
+        // must never embed or step a sibling organization's model (its
+        // copies of those replicas are dead weight holding init params).
+        for &party in &owned {
+            for replica in replicas[party].iter() {
                 let engine = Arc::clone(&engine);
                 let shref = &sh;
                 s.spawn(move || run_remote_passive_worker(shref, &engine, party, replica));
@@ -680,6 +751,14 @@ pub fn serve_passive_session(
         let handle_gradient = |g: GradientMsg, wire_bytes: u64| {
             if g.party >= k {
                 metrics.inc("wire_bad_party", 1);
+                return;
+            }
+            if !owned_flags[g.party] {
+                // A sibling organization's gradient routed down the wrong
+                // link (supervisor routing bug, or a mid-rejoin race).
+                // Counted and dropped — applying it to a dead replica
+                // would silently diverge that party's model.
+                metrics.inc("wire_foreign_party", 1);
                 return;
             }
             metrics.add_comm(wire_bytes);
@@ -763,6 +842,10 @@ pub fn serve_passive_session(
                             metrics.inc("wire_bad_party", 1);
                             continue;
                         }
+                        if !owned_flags[party] {
+                            metrics.inc("wire_foreign_party", 1);
+                            continue;
+                        }
                         let state = {
                             let mut tb = table.lock();
                             match tb.get_mut(&batch_id) {
@@ -826,20 +909,23 @@ pub fn serve_passive_session(
                         // drained (every ack received), so workers are
                         // idle and the replica locks are uncontended.
                         if broadcast {
-                            fold_passive_barrier(&replicas, &ps, usize::MAX);
+                            fold_passive_barrier_for(&replicas, &ps, usize::MAX, &owned);
                             metrics.inc("ps_barriers", 1);
                         } else {
                             // No broadcast: fold the pushed backlog so
                             // versions advance (asynchronous aggregation).
-                            for p in &ps {
-                                p.aggregate();
+                            for &p in &owned {
+                                ps[p].aggregate();
                             }
                         }
                         let versions: Vec<u64> = ps.iter().map(|p| p.version()).collect();
                         let _ = link.send(Frame::BarrierDone { epoch, versions });
                     }
                     Frame::FetchParams => {
-                        for party in 0..k {
+                        // Owned parties only: a per-organization process
+                        // answering for parties it never trained would
+                        // hand the supervisor init-valued weights.
+                        for &party in &owned {
                             let guards: Vec<_> =
                                 replicas[party].iter().map(|m| m.lock()).collect();
                             let mean_p = mean_params(guards.iter().map(|g| &g.params));

@@ -30,9 +30,10 @@ use super::super::messages::QuantGradientMsg;
 use super::super::ps::{ParameterServer, PsMode, SemiAsyncSchedule};
 use super::super::quant::{FeedbackQuantizer, Quantization};
 use super::super::transport::{
-    FaultStatsSnapshot, Link, LinkRecv, LinkStatsSnapshot, SwappableLink, TcpLink, TransportKind,
+    fold_fault_stats, fold_link_stats, FaultStatsSnapshot, Link, LinkRecv, LinkStatsSnapshot,
+    SwappableLink, TcpLink, TransportKind,
 };
-use super::super::wire::Frame;
+use super::super::wire::{self, Frame};
 use super::active::{run_active_worker, ActiveReplica, ActiveShared, PassiveVersionView};
 use super::passive::{
     fold_passive_barrier, make_dp_mechanisms, run_local_passive_worker, LocalPassiveShared,
@@ -185,49 +186,72 @@ pub fn train_pubsub_session(ctx: &TrainCtx<'_>) -> Result<SessionResult> {
     match ctx.cfg.transport.kind {
         TransportKind::InProc => train_local(ctx),
         TransportKind::Tcp => {
-            let addr = ctx.cfg.transport.connect.clone();
-            if addr.is_empty() {
+            let addrs = ctx.cfg.transport.connect_addrs();
+            if addrs.is_empty() {
                 bail!(
                     "transport.kind = tcp requires transport.connect \
                      (start the peer with `pubsub-vfl serve-passive --listen ADDR` \
-                     and pass `--connect ADDR` here)"
+                     and pass `--connect ADDR` here; an N-organization session \
+                     lists one address per org, comma-separated)"
                 );
             }
             let timeout = Duration::from_secs(ctx.cfg.transport.connect_timeout_s.max(1));
-            let link = TcpLink::connect(&addr, timeout)
-                .map_err(|e| anyhow!("cannot connect to passive party at {addr}: {e}"))?;
-            // Chaos harness: a configured fault profile decorates the
+            // Chaos harness: a configured fault profile decorates each
             // link with a seeded, deterministic fault schedule.
             let fault_seed = if ctx.cfg.transport.fault_seed != 0 {
                 ctx.cfg.transport.fault_seed
             } else {
                 ctx.cfg.seed
             };
-            let link = crate::testkit::wrap_link_named(
-                Arc::new(link),
-                &ctx.cfg.transport.fault_profile,
-                fault_seed,
-            )?;
-            if ctx.cfg.durability.enabled() {
-                // Durable session: a mid-epoch link loss redials the same
-                // passive endpoint. The replacement link gets the same
-                // fault profile, re-seeded per attempt with its
-                // crash-shaped faults stripped (see testkit).
-                let profile = ctx.cfg.transport.fault_profile.clone();
-                let reconnect = move |attempt: u32| -> Result<Arc<dyn Link>> {
-                    let l = TcpLink::connect(&addr, timeout)
-                        .map_err(|e| anyhow!("rejoin dial to {addr} failed: {e}"))?;
-                    crate::testkit::wrap_link_named_attempt(
-                        Arc::new(l),
-                        &profile,
-                        fault_seed,
-                        attempt,
-                    )
-                };
-                train_pubsub_over_link_with(ctx, link, Some(&reconnect))
-            } else {
-                train_pubsub_over_link(ctx, link)
+            let k = ctx.train.passive.len();
+            if k == 0 {
+                bail!("a tcp session needs at least one passive party (the dataset has none)");
             }
+            let multi = addrs.len() > 1;
+            let mut endpoints = Vec::with_capacity(addrs.len());
+            for (i, addr) in addrs.iter().enumerate() {
+                let addr = addr.to_string();
+                let link = TcpLink::connect(&addr, timeout)
+                    .map_err(|e| anyhow!("cannot connect to passive party at {addr}: {e}"))?;
+                // Per-org fault decoration: each link draws its own
+                // deterministic schedule (seed varied by org index so a
+                // drop storm does not hit every org in lockstep).
+                let org_seed = fault_seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                let link = crate::testkit::wrap_link_named(
+                    Arc::new(link),
+                    &ctx.cfg.transport.fault_profile,
+                    org_seed,
+                )?;
+                // One address: the legacy topology (a single process
+                // serves every party). Several: address i is asked to own
+                // party i mod k — addresses beyond k join that party's
+                // queue group and share its job stream.
+                let proposed_party = if multi { (i % k) as u32 } else { wire::PARTY_ANY };
+                let reconnect: Option<Box<dyn Fn(u32) -> Result<Arc<dyn Link>>>> =
+                    if ctx.cfg.durability.enabled() {
+                        // Durable session: a mid-epoch link loss redials
+                        // the same org endpoint. The replacement link gets
+                        // the same fault profile, re-seeded per attempt
+                        // with its crash-shaped faults stripped (testkit).
+                        let profile = ctx.cfg.transport.fault_profile.clone();
+                        let dial_addr = addr.clone();
+                        Some(Box::new(move |attempt: u32| -> Result<Arc<dyn Link>> {
+                            let l = TcpLink::connect(&dial_addr, timeout).map_err(|e| {
+                                anyhow!("rejoin dial to {dial_addr} failed: {e}")
+                            })?;
+                            crate::testkit::wrap_link_named_attempt(
+                                Arc::new(l),
+                                &profile,
+                                org_seed,
+                                attempt,
+                            )
+                        }))
+                    } else {
+                        None
+                    };
+                endpoints.push(OrgEndpoint { addr, proposed_party, link, reconnect });
+            }
+            train_pubsub_over_links(ctx, endpoints)
         }
     }
 }
@@ -836,6 +860,102 @@ fn current_params(
     }
 }
 
+/// One passive organization's endpoint, pre-handshake: the raw link, the
+/// address it was dialed at (threaded into every handshake and rejoin
+/// diagnostic so an N-org failure names the org that broke), the party
+/// the supervisor proposes it owns, and an optional durable redial hook
+/// for that same address.
+pub struct OrgEndpoint<'a> {
+    /// Dial target — the org's label in errors and logs.
+    pub addr: String,
+    /// Party index this org is asked to own; [`wire::PARTY_ANY`] for the
+    /// legacy topology where one process serves every party.
+    pub proposed_party: u32,
+    /// The connected (but not yet handshaken) link.
+    pub link: Arc<dyn Link>,
+    /// Durable redial hook for this org's address, called with the
+    /// rejoin attempt number.
+    pub reconnect: Option<Box<dyn Fn(u32) -> Result<Arc<dyn Link>> + 'a>>,
+}
+
+/// A handshaken org line inside the running session: the swappable
+/// handle its pumps drive, its advisory health flag, and what the org
+/// registered at the handshake.
+struct OrgLine {
+    link: Arc<SwappableLink>,
+    down: AtomicBool,
+    /// Parties this org answers for (usually one; every party on the
+    /// legacy single-link topology).
+    parties: Vec<usize>,
+    /// Advertised per-party worker-pool size (0 = not advertised).
+    workers: usize,
+}
+
+/// One link's `Hello`/`HelloAck` exchange. `peer` is the org's address,
+/// named in every failure so a multi-org session error identifies which
+/// organization broke. Returns the negotiated wire quantization plus the
+/// party id and per-party worker count the passive registered.
+fn handshake_link(
+    l: &dyn Link,
+    peer: &str,
+    proposed_party: u32,
+    k: usize,
+    session_id: u64,
+    resume_token: u64,
+    attempt: u32,
+    proposed_quant: Quantization,
+    timeout: Duration,
+) -> Result<(Quantization, u32, u32)> {
+    l.send(Frame::Hello {
+        parties: k as u32,
+        session_id,
+        resume_token,
+        attempt,
+        quantization: proposed_quant,
+        party_id: proposed_party,
+        workers: 0,
+    })
+    .map_err(|e| anyhow!("handshake send to {peer} failed: {e}"))?;
+    let deadline = Instant::now() + timeout;
+    loop {
+        match l.recv(Duration::from_millis(100)) {
+            LinkRecv::Frame(Frame::HelloAck { parties, quantization, party_id, workers }) => {
+                if parties as usize != k {
+                    bail!(
+                        "passive party at {peer} serves {parties} parties, \
+                         this run expects {k}"
+                    );
+                }
+                if party_id != wire::PARTY_ANY {
+                    if party_id as usize >= k {
+                        bail!(
+                            "passive party at {peer} registered out-of-range party \
+                             {party_id} (this session has {k} passive parties)"
+                        );
+                    }
+                    if proposed_party != wire::PARTY_ANY && party_id != proposed_party {
+                        bail!(
+                            "passive party at {peer} registered party {party_id}, but \
+                             this supervisor proposed party {proposed_party} — its \
+                             --party pin disagrees with the --connect address order"
+                        );
+                    }
+                }
+                return Ok((quantization, party_id, workers));
+            }
+            LinkRecv::Frame(other) => {
+                bail!("handshake with {peer}: expected HelloAck, got {other:?}")
+            }
+            LinkRecv::Closed => bail!("peer {peer} closed the link during handshake"),
+            LinkRecv::TimedOut => {
+                if Instant::now() >= deadline {
+                    bail!("handshake with {peer} timed out waiting for HelloAck");
+                }
+            }
+        }
+    }
+}
+
 /// The distributed session: drive training against a passive party
 /// served behind `link` (see [`super::passive::serve_passive_session`]).
 /// Public so tests and embedders can run the wire protocol over any
@@ -852,11 +972,45 @@ pub fn train_pubsub_over_link(ctx: &TrainCtx<'_>, link: Arc<dyn Link>) -> Result
 /// checkpoint, and replays the in-flight epoch from the durable control
 /// log — so `claim_bwd`/`credit_bwd` dedupe keeps the session
 /// exactly-once across the crash.
-#[allow(clippy::too_many_lines)]
 pub fn train_pubsub_over_link_with(
     ctx: &TrainCtx<'_>,
     link: Arc<dyn Link>,
     reconnect: Option<&dyn Fn(u32) -> Result<Arc<dyn Link>>>,
+) -> Result<SessionResult> {
+    let addr = if ctx.cfg.transport.connect.is_empty() {
+        "passive peer".to_string()
+    } else {
+        ctx.cfg.transport.connect.clone()
+    };
+    let ep = OrgEndpoint {
+        addr,
+        proposed_party: wire::PARTY_ANY,
+        link,
+        reconnect: reconnect.map(|r| {
+            Box::new(move |attempt: u32| r(attempt))
+                as Box<dyn Fn(u32) -> Result<Arc<dyn Link>> + '_>
+        }),
+    };
+    train_pubsub_over_links(ctx, vec![ep])
+}
+
+/// The N-organization distributed session (tentpole of the multi-party
+/// scale-out): each [`OrgEndpoint`] is one `serve-passive` process. The
+/// supervisor handshakes every link (registering each org's party and
+/// worker pool), shards the broker's per-party topics across the links,
+/// and runs per-link receive loops plus party-routed job/gradient pumps.
+/// Several endpoints registering the same party form a queue group: that
+/// party's jobs scatter across the members by `batch_id`, with
+/// `claim_bwd`/`credit_bwd` dedupe keeping the session exactly-once.
+///
+/// With one endpoint this *is* [`train_pubsub_over_link`] — same frames,
+/// same rejoin semantics. With several, a mid-epoch link death voids and
+/// re-drives only the dead org's party
+/// ([`BatchLedger::void_party_bwd`]); the surviving orgs keep training.
+#[allow(clippy::too_many_lines)]
+pub fn train_pubsub_over_links(
+    ctx: &TrainCtx<'_>,
+    endpoints: Vec<OrgEndpoint<'_>>,
 ) -> Result<SessionResult> {
     let engine = &ctx.engine;
     let spec = ctx.spec;
@@ -880,6 +1034,9 @@ pub fn train_pubsub_over_link_with(
     });
 
     // Only the active party's workers run in this process.
+    if k == 0 {
+        bail!("a link session needs at least one passive party (the dataset has none)");
+    }
     let backend_kind = cfg.backend;
     let total_workers = w_a;
     metrics.gauge_max(
@@ -930,11 +1087,15 @@ pub fn train_pubsub_over_link_with(
     };
     let (session_id, resume_token) = session_identity(cfg.seed);
     // A rejoin replaces the transport underneath the running bridge
-    // loops, so every loop drives the link through one swappable handle
-    // (whose stats fold retired incarnations in — the wire series stay
-    // monotonic across swaps).
-    let link: Arc<SwappableLink> = Arc::new(SwappableLink::new(link));
-    let durable_rejoin = hub.is_some() && reconnect.is_some();
+    // loops, so every loop drives its org's link through one swappable
+    // handle (whose stats fold retired incarnations in — the wire series
+    // stay monotonic across swaps). Rejoin is on only when every org
+    // endpoint can be redialed.
+    let n_orgs = endpoints.len();
+    if n_orgs == 0 {
+        bail!("a link session needs at least one passive organization endpoint");
+    }
+    let durable_rejoin = hub.is_some() && endpoints.iter().all(|e| e.reconnect.is_some());
     let rejoin_count = AtomicU64::new(0);
 
     // Replicas are allocated to the re-planning cap; workers beyond the
@@ -956,17 +1117,19 @@ pub fn train_pubsub_over_link_with(
     // Receiver-clock view of each passive party's PS version: the newest
     // version observed in any frame from the passive process.
     let live_versions: Vec<AtomicU64> = (0..k).map(|_| AtomicU64::new(0)).collect();
-    // Response slots for barrier acks and fetched parameters.
-    let barrier_done: (RankedMutex<Option<u64>>, RankedCondvar) =
-        (RankedMutex::new(Rank::SessionBarrier, None), RankedCondvar::new());
+    // Response slots for barrier acks (epoch plus acks received — one
+    // ack per org link) and fetched parameters.
+    let barrier_done: (RankedMutex<(u64, usize)>, RankedCondvar) =
+        (RankedMutex::new(Rank::SessionBarrier, (u64::MAX, 0)), RankedCondvar::new());
     let params_slot: RankedMutex<Vec<Option<MlpParams>>> =
         RankedMutex::new(Rank::SessionParams, vec![None; k]);
     let params_cv = RankedCondvar::new();
     let shutdown = AtomicBool::new(false);
-    let link_down = AtomicBool::new(false);
-    // Wire quantization agreed at the handshake: the passive party acks
-    // the proposed mode only if it is configured identically, otherwise
-    // both sides fall back to f32 frames. A rejoin re-negotiates.
+    // Wire quantization agreed at the handshakes, folded conservatively
+    // across the orgs: each passive acks the proposed mode only if it is
+    // configured identically, and one fallen-back org downgrades the
+    // whole session to f32 frames (decode is mode-agnostic, so mixed
+    // in-flight frames are harmless).
     let negotiated_quant = AtomicU8::new(Quantization::None.as_u8());
     let expected_flat: Vec<usize> = spec.passive_bottoms.iter().map(|s| s.param_count()).collect();
 
@@ -1041,49 +1204,101 @@ pub fn train_pubsub_over_link_with(
         }
     }
 
-    // ---- handshake -------------------------------------------------------
-    let handshake = |l: &dyn Link, attempt: u32| -> Result<()> {
-        l.send(Frame::Hello {
-            parties: k as u32,
+    // ---- handshake: every org link, registration, coverage ---------------
+    let hs_timeout = Duration::from_secs(cfg.transport.connect_timeout_s.max(1));
+    let proposed_quant = cfg.transport.quantization;
+    let handshake_org = |l: &dyn Link, ep: &OrgEndpoint<'_>, attempt: u32| {
+        let (q, party_id, workers) = handshake_link(
+            l,
+            &ep.addr,
+            ep.proposed_party,
+            k,
             session_id,
             resume_token,
             attempt,
-            quantization: cfg.transport.quantization,
-        })
-        .map_err(|e| anyhow!("handshake send failed: {e}"))?;
-        let timeout_s = cfg.transport.connect_timeout_s.max(1);
-        let deadline = Instant::now() + Duration::from_secs(timeout_s);
-        loop {
-            match l.recv(Duration::from_millis(100)) {
-                LinkRecv::Frame(Frame::HelloAck { parties, quantization }) => {
-                    if parties as usize != k {
-                        bail!("passive party serves {parties} parties, this run expects {k}");
-                    }
-                    if quantization != cfg.transport.quantization {
-                        metrics.inc("quantization_fell_back", 1);
-                    }
-                    // Relaxed: set once per (re)handshake before any pump
-                    // reads it for the new incarnation; pumps tolerate a
-                    // stale mode for a frame (both kinds always decode).
-                    negotiated_quant.store(quantization.as_u8(), Ordering::Relaxed);
-                    return Ok(());
-                }
-                LinkRecv::Frame(other) => bail!("handshake: expected HelloAck, got {other:?}"),
-                LinkRecv::Closed => bail!("peer closed the link during handshake"),
-                LinkRecv::TimedOut => {
-                    if Instant::now() >= deadline {
-                        bail!("handshake timed out waiting for HelloAck");
-                    }
-                }
-            }
+            proposed_quant,
+            hs_timeout,
+        )?;
+        if q != proposed_quant {
+            metrics.inc("quantization_fell_back", 1);
+        }
+        Ok::<_, anyhow::Error>((q, party_id, workers))
+    };
+    // Expand a registered party id to the party set the org answers for.
+    let expand_parties = |party_id: u32| -> Vec<usize> {
+        if party_id == wire::PARTY_ANY {
+            (0..k).collect()
+        } else {
+            vec![party_id as usize]
         }
     };
-    // Roll a (re)started passive back to the checkpointed barrier: bank
-    // the completed epochs' backward credit and restore its parameters.
-    let restore_passive = |l: &dyn Link, ck: &Checkpoint| -> Result<()> {
-        l.send(Frame::Resume { epoch: ck.completed_epochs, banked_bwd: ck.banked_bwd })
+    let mut org_lines: Vec<OrgLine> = Vec::with_capacity(n_orgs);
+    let mut all_acked_proposed = true;
+    for ep in &endpoints {
+        let (q, party_id, workers) = handshake_org(&*ep.link, ep, initial_attempt)?;
+        if q != proposed_quant {
+            all_acked_proposed = false;
+        }
+        org_lines.push(OrgLine {
+            link: Arc::new(SwappableLink::new(Arc::clone(&ep.link))),
+            down: AtomicBool::new(false),
+            parties: expand_parties(party_id),
+            workers: workers as usize,
+        });
+    }
+    let orgs = org_lines;
+    // Relaxed: set before any pump reads it; pumps tolerate a stale mode
+    // for a frame (both frame kinds always decode).
+    negotiated_quant.store(
+        if all_acked_proposed { proposed_quant } else { Quantization::None }.as_u8(),
+        Ordering::Relaxed,
+    );
+    // Coverage: every passive party needs at least one serving org, and
+    // the orgs serving the same party form that party's queue group (in
+    // endpoint order — the first member is the group's primary).
+    let groups: Vec<Vec<usize>> = (0..k)
+        .map(|party| (0..n_orgs).filter(|&o| orgs[o].parties.contains(&party)).collect())
+        .collect();
+    for (party, grp) in groups.iter().enumerate() {
+        if grp.is_empty() {
+            let roster: Vec<String> = endpoints
+                .iter()
+                .zip(&orgs)
+                .map(|(ep, o)| format!("{} -> parties {:?}", ep.addr, o.parties))
+                .collect();
+            bail!(
+                "passive party {party} has no serving organization (registered: {}); \
+                 check each serve-passive --party pin against the --connect address \
+                 order and passive_parties = {k}",
+                roster.join(", ")
+            );
+        }
+    }
+    // Size each party's broker depths to its group's advertised worker
+    // pool (a 2-worker org and an 8-worker org should not share one
+    // global q); workers == 0 means the org did not advertise (a v1/v2
+    // peer) and the local config stands in.
+    let party_workers: Vec<usize> = groups
+        .iter()
+        .map(|grp| {
+            grp.iter()
+                .map(|&o| if orgs[o].workers > 0 { orgs[o].workers } else { w_p })
+                .max()
+                .unwrap_or(w_p)
+        })
+        .collect();
+    for party in 0..k {
+        broker.resize_party_buffers(party, depth_p * w_a, cfg.train.buffer_q * party_workers[party]);
+    }
+    // Roll a (re)started org back to the checkpointed barrier: bank its
+    // share of the completed epochs' backward credit (exact — each barrier
+    // banks `batches * k`, so the per-party share divides evenly) and
+    // restore the parameters of the parties it owns.
+    let restore_org = |l: &dyn Link, parties: &[usize], ck: &Checkpoint| -> Result<()> {
+        let share = ck.banked_bwd / k as u64 * parties.len() as u64;
+        l.send(Frame::Resume { epoch: ck.completed_epochs, banked_bwd: share })
             .map_err(|e| anyhow!("resume send failed: {e}"))?;
-        for party in 0..k {
+        for &party in parties {
             l.send(Frame::RestoreParams {
                 party: party as u32,
                 version: ck.passive_versions[party],
@@ -1093,9 +1308,10 @@ pub fn train_pubsub_over_link_with(
         }
         Ok(())
     };
-    handshake(&*link, initial_attempt)?;
     if initial_attempt > 0 {
-        restore_passive(&*link, &barrier_ckpt)?;
+        for o in &orgs {
+            restore_org(&*o.link, &o.parties, &barrier_ckpt)?;
+        }
     }
 
     let active_sh = ActiveShared {
@@ -1122,8 +1338,19 @@ pub fn train_pubsub_over_link_with(
     };
 
     let run_result: Result<()> = std::thread::scope(|s| {
-        // ---- bridge: receive loop -------------------------------------
-        s.spawn(|| loop {
+        // ---- bridge: one receive loop per org link --------------------
+        for o in orgs.iter() {
+            let link = &o.link;
+            let down = &o.down;
+            let ledger = &ledger;
+            let broker = &broker;
+            let live_versions = &live_versions;
+            let barrier_done = &barrier_done;
+            let params_slot = &params_slot;
+            let params_cv = &params_cv;
+            let shutdown = &shutdown;
+            let expected_flat = &expected_flat;
+            s.spawn(move || loop {
             // A `Closed` that raced with a rejoin swap belongs to the
             // retired link, not the live one — the swap counter tells the
             // two apart.
@@ -1205,7 +1432,14 @@ pub fn train_pubsub_over_link_with(
                         for (party, &v) in versions.iter().enumerate().take(k) {
                             live_versions[party].fetch_max(v, Ordering::Relaxed);
                         }
-                        *barrier_done.0.lock() = Some(epoch);
+                        // One ack per org toward the armed epoch's quorum
+                        // (the waiter re-arms the slot per barrier round).
+                        {
+                            let mut g = barrier_done.0.lock();
+                            if g.0 == epoch {
+                                g.1 += 1;
+                            }
+                        }
                         barrier_done.1.notify_all();
                     }
                     Frame::PassiveParams { party, version, flat } => {
@@ -1233,71 +1467,91 @@ pub fn train_pubsub_over_link_with(
                     // Relaxed: advisory link-health + teardown flags, polled;
                     // no payload is published through them.
                     if link.swaps() == seen_swaps {
-                        link_down.store(true, Ordering::Relaxed);
+                        down.store(true, Ordering::Relaxed);
                     }
                     if shutdown.load(Ordering::Relaxed) || !durable_rejoin {
                         break;
                     }
-                    // Durable session: the supervisor is rejoining — park
-                    // until the link is swapped for a live one.
+                    // Durable session: the supervisor is rejoining this
+                    // org — park until its link is swapped for a live one.
                     std::thread::sleep(Duration::from_millis(20));
                 }
             }
-        });
+            });
+        }
 
         // ---- bridge: job pump (ledger → EmbedJob frames) --------------
-        s.spawn(|| loop {
-            // Relaxed: advisory teardown/link-health flags, polled each
-            // pump iteration; payloads travel through ledger + link.
-            if shutdown.load(Ordering::Relaxed) {
-                break;
-            }
-            if link_down.load(Ordering::Relaxed) {
-                if !durable_rejoin {
+        // Party jobs scatter across the party's queue group by batch id;
+        // the gradient pumps below use the same rule, so each batch's
+        // backward lands on the member whose table holds its forward.
+        {
+            let orgs = &orgs;
+            let groups = &groups;
+            let ledger = &ledger;
+            let hub = &hub;
+            let shutdown = &shutdown;
+            s.spawn(move || loop {
+                // Relaxed: advisory teardown/link-health flags, polled each
+                // pump iteration; payloads travel through ledger + link.
+                if shutdown.load(Ordering::Relaxed) {
                     break;
                 }
-                std::thread::sleep(Duration::from_millis(5));
-                continue;
-            }
-            let mut sent = false;
-            for party in 0..k {
-                while let Some(job) = ledger.next_embed_job(party) {
-                    let frame = Frame::EmbedJob {
-                        party: party as u32,
-                        batch_id: job.batch_id,
-                        generation: job.generation,
-                    };
-                    if let Some(h) = hub.as_ref() {
-                        if h.log_job(party, &frame).is_err() {
-                            metrics.inc("durable_log_errors", 1);
-                        }
-                    }
-                    let seen_swaps = link.swaps();
-                    if link.send(frame).is_err() {
-                        // Relaxed: advisory link-health flag, polled.
-                        if link.swaps() == seen_swaps {
-                            link_down.store(true, Ordering::Relaxed);
-                        }
-                        if !durable_rejoin {
-                            return;
-                        }
-                        // The job is gone with the dead link; the rejoin
-                        // reinstalls the whole epoch, regenerating it.
+                if orgs.iter().all(|o| o.down.load(Ordering::Relaxed)) {
+                    if !durable_rejoin {
                         break;
                     }
-                    sent = true;
+                    std::thread::sleep(Duration::from_millis(5));
+                    continue;
                 }
-            }
-            if !sent {
-                std::thread::sleep(Duration::from_micros(300));
-            }
-        });
+                let mut sent = false;
+                for party in 0..k {
+                    let grp = &groups[party];
+                    // Every member of this party's group is down: leave
+                    // the jobs queued in the ledger — the rejoin re-drives
+                    // the party, and popping now would strand them on a
+                    // dead link until a recovery sweep.
+                    if grp.iter().all(|&o| orgs[o].down.load(Ordering::Relaxed)) {
+                        continue;
+                    }
+                    while let Some(job) = ledger.next_embed_job(party) {
+                        let frame = Frame::EmbedJob {
+                            party: party as u32,
+                            batch_id: job.batch_id,
+                            generation: job.generation,
+                        };
+                        if let Some(h) = hub.as_ref() {
+                            if h.log_job(party, &frame).is_err() {
+                                metrics.inc("durable_log_errors", 1);
+                            }
+                        }
+                        let o = &orgs[grp[(job.batch_id % grp.len() as u64) as usize]];
+                        let seen_swaps = o.link.swaps();
+                        if o.link.send(frame).is_err() {
+                            // Relaxed: advisory link-health flag, polled.
+                            if o.link.swaps() == seen_swaps {
+                                o.down.store(true, Ordering::Relaxed);
+                            }
+                            // The job is gone with the dead link; the
+                            // rejoin re-drives the dead org's party (or
+                            // reinstalls the whole epoch on the legacy
+                            // single-link topology), and the recovery
+                            // sweep covers anything left.
+                            break;
+                        }
+                        sent = true;
+                    }
+                }
+                if !sent {
+                    std::thread::sleep(Duration::from_micros(300));
+                }
+            });
+        }
 
         // ---- bridge: gradient pumps (broker → Gradient frames) --------
         for party in 0..k {
             let broker = &broker;
-            let link = &link;
-            let link_down = &link_down;
+            let orgs = &orgs;
+            let groups = &groups;
             let hub = &hub;
             let metrics = &metrics;
             let negotiated_quant = &negotiated_quant;
@@ -1308,7 +1562,7 @@ pub fn train_pubsub_over_link_with(
                 let mut fq = FeedbackQuantizer::new(Quantization::None);
                 loop {
                     match broker.take_gradient(party, Duration::from_millis(50)) {
-                        SubResult::Ok((_id, g)) => {
+                        SubResult::Ok((id, g)) => {
                             // Relaxed: mode is set at the handshake and
                             // stepped live by re-planning; a frame sent
                             // under a stale mode still decodes.
@@ -1328,18 +1582,25 @@ pub fn train_pubsub_over_link_with(
                                     metrics.inc("durable_log_errors", 1);
                                 }
                             }
-                            let seen_swaps = link.swaps();
-                            if link.send(frame).is_err() {
+                            // Same batch-id rule as the job pump: the
+                            // backward must land on the queue-group member
+                            // whose table claimed the forward (its EmbedJob
+                            // armed the generation gate).
+                            let grp = &groups[party];
+                            let o = &orgs[grp[(id % grp.len() as u64) as usize]];
+                            let seen_swaps = o.link.swaps();
+                            if o.link.send(frame).is_err() {
                                 // Relaxed: advisory link-health flag, polled.
-                                if link.swaps() == seen_swaps {
-                                    link_down.store(true, Ordering::Relaxed);
+                                if o.link.swaps() == seen_swaps {
+                                    o.down.store(true, Ordering::Relaxed);
                                 }
                                 if !durable_rejoin {
                                     break;
                                 }
-                                // Dropped with the dead link: the epoch
-                                // re-run regenerates the gradient under a
-                                // fresh generation.
+                                // Dropped with the dead link: the rejoin
+                                // re-drives the party (or re-runs the
+                                // epoch), regenerating the gradient under
+                                // a fresh generation.
                                 std::thread::sleep(Duration::from_millis(5));
                             }
                         }
@@ -1360,21 +1621,50 @@ pub fn train_pubsub_over_link_with(
         }
 
         // ---- response waits -------------------------------------------
-        // `Ok(false)` / `Ok(None)` mean "the link died and this session
-        // can rejoin"; non-durable sessions keep their original errors.
+        // `Ok(false)` / `Ok(None)` mean "a link died and this session
+        // can rejoin"; non-durable sessions keep their original errors,
+        // now naming the org(s) that broke.
+        // Relaxed throughout: advisory link-health flags, polled.
+        let any_down = || orgs.iter().any(|o| o.down.load(Ordering::Relaxed));
+        let downed_label = || -> String {
+            let names: Vec<String> = orgs
+                .iter()
+                .zip(&endpoints)
+                .filter(|(o, _)| o.down.load(Ordering::Relaxed))
+                .map(|(o, ep)| format!("{} (parties {:?})", ep.addr, o.parties))
+                .collect();
+            if names.is_empty() {
+                "an unidentified organization".to_string()
+            } else {
+                names.join(", ")
+            }
+        };
+        // Arm the ack quorum for `epoch`, then broadcast the barrier to
+        // every org; a send failure marks that org down and the quorum
+        // wait fails over to the rejoin path.
+        let send_barrier = |epoch: u64, broadcast: bool| {
+            *barrier_done.0.lock() = (epoch, 0);
+            for o in orgs.iter() {
+                if o.link.send(Frame::Barrier { epoch, broadcast }).is_err() {
+                    o.down.store(true, Ordering::Relaxed);
+                }
+            }
+        };
         let wait_barrier = |epoch: u64| -> Result<bool> {
             let deadline = Instant::now() + SYNC_TIMEOUT;
             let mut g = barrier_done.0.lock();
             loop {
-                if *g == Some(epoch) {
+                if g.0 == epoch && g.1 >= n_orgs {
                     return Ok(true);
                 }
-                // Relaxed: advisory link-health flag, polled under the wait.
-                if link_down.load(Ordering::Relaxed) {
+                if any_down() {
                     if durable_rejoin {
                         return Ok(false);
                     }
-                    bail!("link closed while waiting for the passive barrier ack");
+                    bail!(
+                        "link to {} closed while waiting for the passive barrier ack",
+                        downed_label()
+                    );
                 }
                 if Instant::now() >= deadline {
                     bail!("timed out waiting for the passive barrier ack (epoch {epoch})");
@@ -1390,45 +1680,98 @@ pub fn train_pubsub_over_link_with(
                     *s = None;
                 }
             }
-            if let Err(e) = link.send(Frame::FetchParams) {
-                // Relaxed: advisory link-health flag, polled.
-                link_down.store(true, Ordering::Relaxed);
-                if durable_rejoin {
-                    return Ok(None);
-                }
-                bail!("parameter fetch failed: {e}");
-            }
-            let deadline = Instant::now() + SYNC_TIMEOUT;
-            let mut g = params_slot.lock();
-            loop {
-                if g.iter().all(|sl| sl.is_some()) {
-                    return Ok(Some(g.iter_mut().filter_map(|sl| sl.take()).collect()));
-                }
-                // Relaxed: advisory link-health flag, polled under the wait.
-                if link_down.load(Ordering::Relaxed) {
+            // Fetch from each party's group primary only: queue-group
+            // replicas can drift within an epoch, and the primary's answer
+            // is the canonical one the secondaries are resynced to below.
+            let mut primaries: Vec<usize> = groups.iter().map(|g| g[0]).collect();
+            primaries.sort_unstable();
+            primaries.dedup();
+            for &oi in &primaries {
+                let o = &orgs[oi];
+                if let Err(e) = o.link.send(Frame::FetchParams) {
+                    o.down.store(true, Ordering::Relaxed);
                     if durable_rejoin {
                         return Ok(None);
                     }
-                    bail!("link closed while fetching passive parameters");
+                    bail!("parameter fetch from {} failed: {e}", endpoints[oi].addr);
                 }
-                if Instant::now() >= deadline {
-                    bail!("timed out fetching passive parameters");
-                }
-                let (gg, _) = params_cv.wait_timeout(g, Duration::from_millis(50));
-                g = gg;
             }
+            let deadline = Instant::now() + SYNC_TIMEOUT;
+            let fetched: Vec<MlpParams> = {
+                let mut g = params_slot.lock();
+                loop {
+                    if g.iter().all(|sl| sl.is_some()) {
+                        break g.iter_mut().filter_map(|sl| sl.take()).collect();
+                    }
+                    if any_down() {
+                        if durable_rejoin {
+                            return Ok(None);
+                        }
+                        bail!(
+                            "link to {} closed while fetching passive parameters",
+                            downed_label()
+                        );
+                    }
+                    if Instant::now() >= deadline {
+                        bail!("timed out fetching passive parameters");
+                    }
+                    let (gg, _) = params_cv.wait_timeout(g, Duration::from_millis(50));
+                    g = gg;
+                }
+            };
+            // Queue-group resync: push the primary's answer to every
+            // secondary member so the whole group starts the next epoch
+            // from one model (RestoreParams reinstalls replicas + PS).
+            for (party, grp) in groups.iter().enumerate() {
+                for &oi in grp.iter().skip(1) {
+                    let o = &orgs[oi];
+                    if o.link
+                        .send(Frame::RestoreParams {
+                            party: party as u32,
+                            version: live_versions[party].load(Ordering::Relaxed),
+                            flat: fetched[party].flatten(),
+                        })
+                        .is_err()
+                    {
+                        o.down.store(true, Ordering::Relaxed);
+                    }
+                }
+            }
+            Ok(Some(fetched))
         };
 
         // ---- crash recovery: void, redial, re-handshake, roll back ----
-        // Runs when the link dies mid-epoch. The aborted attempt's
-        // credits are voided (the re-run re-earns them), a fresh link is
-        // dialed and handshaken *before* the swap (so the receive loop
-        // cannot steal the `HelloAck`), and both parties roll back to the
-        // barrier checkpoint `ck`; the caller then re-runs the epoch.
+        // Validate a re-registration: a restarted org must answer for the
+        // same parties it originally served.
+        let check_reparties = |oi: usize, party_id: u32| -> Result<()> {
+            let reparties: Vec<usize> = if party_id == wire::PARTY_ANY {
+                (0..k).collect()
+            } else {
+                vec![party_id as usize]
+            };
+            if reparties != orgs[oi].parties {
+                bail!(
+                    "rejoined org {} registered parties {reparties:?} but originally \
+                     served {:?} — restart it with the same --party pin",
+                    endpoints[oi].addr,
+                    orgs[oi].parties
+                );
+            }
+            Ok(())
+        };
+        // Legacy single-link path: runs when THE link dies mid-epoch. The
+        // aborted attempt's credits are voided (the re-run re-earns them),
+        // a fresh link is dialed and handshaken *before* the swap (so the
+        // receive loop cannot steal the `HelloAck`), and both parties roll
+        // back to the barrier checkpoint `ck`; the caller re-runs the epoch.
         let do_rejoin = |voided: u64, ck: &Checkpoint| -> Result<()> {
             let rem = ledger.remaining_bwd();
-            let (Some(_), Some(reconnect)) = (hub.as_ref(), reconnect) else {
-                bail!("link closed mid-epoch ({rem} backward passes outstanding)");
+            let ep = &endpoints[0];
+            let (Some(_), Some(reconnect)) = (hub.as_ref(), ep.reconnect.as_ref()) else {
+                bail!(
+                    "link to {} closed mid-epoch ({rem} backward passes outstanding)",
+                    ep.addr
+                );
             };
             if voided > 0 {
                 metrics.inc("bwd_acked_voided", voided);
@@ -1438,14 +1781,18 @@ pub fn train_pubsub_over_link_with(
             let mut last_err = anyhow!("no rejoin attempt made");
             for _ in 0..max_attempts {
                 if opts.is_cancelled() {
-                    bail!("run cancelled during rejoin");
+                    bail!("run cancelled during rejoin of {}", ep.addr);
                 }
                 // Relaxed: attempt counter; only uniqueness matters.
                 let attempt = rejoin_count.fetch_add(1, Ordering::Relaxed) as u32 + 1;
                 metrics.inc("rejoin_attempts", 1);
                 let dial = reconnect(attempt).and_then(|raw| {
-                    handshake(&*raw, attempt)?;
-                    restore_passive(&*raw, ck)?;
+                    let (q, party_id, _workers) = handshake_org(&*raw, ep, attempt)?;
+                    check_reparties(0, party_id)?;
+                    // Single org: its re-negotiated mode IS the session's.
+                    // Relaxed: advisory mode; both frame kinds decode.
+                    negotiated_quant.store(q.as_u8(), Ordering::Relaxed);
+                    restore_org(&*raw, &orgs[0].parties, ck)?;
                     Ok(raw)
                 });
                 match dial {
@@ -1465,15 +1812,15 @@ pub fn train_pubsub_over_link_with(
                         for (party, v) in live_versions.iter().enumerate() {
                             v.store(ck.passive_versions[party], Ordering::Relaxed);
                         }
-                        link.swap(raw);
+                        orgs[0].link.swap(raw);
                         // Relaxed: advisory flag; the swap itself publishes
                         // the new link via its own synchronization.
-                        link_down.store(false, Ordering::Relaxed);
+                        orgs[0].down.store(false, Ordering::Relaxed);
                         metrics.set_gauge("rejoin_ms", t0.elapsed().as_secs_f64() * 1e3);
                         eprintln!(
-                            "[durable] rejoined passive party (attempt {attempt}, \
+                            "[durable] rejoined passive org {} (attempt {attempt}, \
                              {voided} credits voided, epoch re-runs from barrier {})",
-                            ck.completed_epochs
+                            ep.addr, ck.completed_epochs
                         );
                         return Ok(());
                     }
@@ -1483,7 +1830,117 @@ pub fn train_pubsub_over_link_with(
                     }
                 }
             }
-            Err(last_err.context(format!("rejoin failed after {max_attempts} attempts")))
+            Err(last_err.context(format!(
+                "rejoin of organization {} failed after {max_attempts} attempts",
+                ep.addr
+            )))
+        };
+        // N-org path: per-org recovery. Voids ONLY the dead org's parties
+        // (re-opening their share of the epoch's backward credit), redials
+        // that org, restores its parties from the barrier checkpoint, and
+        // replays the current epoch's install to it alone — survivors keep
+        // training throughout, their tables untouched (a healthy org must
+        // never see a re-install: EpochInstall resets its dedupe table and
+        // would double-count `passive_bwd`). Re-driven duplicates on the
+        // rejoined org re-ack via its done flags. The active replicas are
+        // NOT rolled back. Returns the total credits voided.
+        let rejoin_downed = |install: &Frame, ck: &Checkpoint| -> Result<u64> {
+            let mut voided_total = 0u64;
+            for (oi, o) in orgs.iter().enumerate() {
+                if !o.down.load(Ordering::Relaxed) {
+                    continue;
+                }
+                let ep = &endpoints[oi];
+                let rem = ledger.remaining_bwd();
+                let Some(reconnect) = ep.reconnect.as_ref() else {
+                    bail!(
+                        "link to organization {} (parties {:?}) closed mid-epoch \
+                         ({rem} backward passes outstanding)",
+                        ep.addr,
+                        o.parties
+                    );
+                };
+                if hub.is_none() {
+                    bail!(
+                        "link to organization {} (parties {:?}) closed mid-epoch \
+                         ({rem} backward passes outstanding); configure [durability] \
+                         so organizations can rejoin",
+                        ep.addr,
+                        o.parties
+                    );
+                }
+                let mut voided = 0u64;
+                for &party in &o.parties {
+                    voided += ledger.void_party_bwd(party);
+                }
+                if voided > 0 {
+                    metrics.inc("bwd_acked_voided", voided);
+                }
+                voided_total += voided;
+                let t0 = Instant::now();
+                let max_attempts = cfg.durability.max_rejoin_attempts.max(1);
+                let mut last_err = anyhow!("no rejoin attempt made");
+                let mut rejoined = false;
+                for _ in 0..max_attempts {
+                    if opts.is_cancelled() {
+                        bail!("run cancelled during rejoin of {}", ep.addr);
+                    }
+                    // Relaxed: attempt counter; only uniqueness matters.
+                    let attempt = rejoin_count.fetch_add(1, Ordering::Relaxed) as u32 + 1;
+                    metrics.inc("rejoin_attempts", 1);
+                    let dial = reconnect(attempt).and_then(|raw| {
+                        let (q, party_id, _workers) = handshake_org(&*raw, ep, attempt)?;
+                        check_reparties(oi, party_id)?;
+                        if q != proposed_quant {
+                            // Conservative re-negotiation: one fallen-back
+                            // member downgrades the whole session (decode
+                            // is mode-agnostic, so this is always safe).
+                            // Relaxed: advisory mode cache.
+                            negotiated_quant
+                                .store(Quantization::None.as_u8(), Ordering::Relaxed);
+                        }
+                        restore_org(&*raw, &o.parties, ck)?;
+                        raw.send(install.clone())
+                            .map_err(|e| anyhow!("epoch replay to {} failed: {e}", ep.addr))?;
+                        Ok(raw)
+                    });
+                    match dial {
+                        Ok(raw) => {
+                            // The rejoined org's parties roll back to the
+                            // barrier; the receiver-clock caches follow.
+                            // Relaxed: staleness accounting tolerates a
+                            // lagging read.
+                            for &party in &o.parties {
+                                live_versions[party]
+                                    .store(ck.passive_versions[party], Ordering::Relaxed);
+                            }
+                            o.link.swap(raw);
+                            // Relaxed: advisory flag; the swap publishes
+                            // the new link via its own synchronization.
+                            o.down.store(false, Ordering::Relaxed);
+                            metrics.set_gauge("rejoin_ms", t0.elapsed().as_secs_f64() * 1e3);
+                            eprintln!(
+                                "[durable] rejoined passive org {} (attempt {attempt}, \
+                                 parties {:?}, {voided} credits voided and re-driven)",
+                                ep.addr, o.parties
+                            );
+                            rejoined = true;
+                            break;
+                        }
+                        Err(e) => {
+                            last_err = e;
+                            std::thread::sleep(Duration::from_millis(100));
+                        }
+                    }
+                }
+                if !rejoined {
+                    return Err(last_err.context(format!(
+                        "rejoin of organization {} failed after {max_attempts} attempts",
+                        ep.addr
+                    )));
+                }
+            }
+            Ok(voided_total)
         };
 
         // ---- epoch supervisor -----------------------------------------
@@ -1561,13 +2018,25 @@ pub fn train_pubsub_over_link_with(
                         }
                     }
                     first_attempt = false;
-                    if link.send(shipped).is_err() {
-                        // Relaxed: advisory link-health flag, polled.
-                        link_down.store(true, Ordering::Relaxed);
+                    let mut install_failed = false;
+                    for o in orgs.iter() {
+                        if o.link.send(shipped.clone()).is_err() {
+                            // Relaxed: advisory link-health flag, polled.
+                            o.down.store(true, Ordering::Relaxed);
+                            install_failed = true;
+                        }
+                    }
+                    if install_failed && n_orgs == 1 {
                         do_rejoin(metrics.counter("bwd_acked") - acked_before, &barrier_ckpt)?;
                         continue;
                     }
                     ledger.install_epoch(epoch, &batches);
+                    if install_failed {
+                        // N-org: only the dead org is re-driven — the
+                        // rejoin replays the install to it alone, the
+                        // healthy orgs already hold theirs.
+                        rejoin_downed(&shipped, &barrier_ckpt)?;
+                    }
 
                     // Drain, with a stall watchdog so a wire bug surfaces
                     // as an error instead of a hang, and a deadline sweep
@@ -1582,111 +2051,152 @@ pub fn train_pubsub_over_link_with(
                     // sweep costs only wasted compute.
                     let recovery_base = (t_ddl * 2).max(Duration::from_millis(200));
                     let recovery_cap = Duration::from_secs(5);
-                    let mut recovery = recovery_base;
-                    let mut last_remaining = usize::MAX;
-                    let mut last_progress = Instant::now();
-                    let mut last_sweep = Instant::now();
-                    let mut drained = true;
-                    loop {
-                        let rem = ledger.remaining_bwd();
-                        if rem == 0 {
-                            break;
-                        }
-                        if rem != last_remaining {
-                            last_remaining = rem;
-                            last_progress = Instant::now();
-                            last_sweep = last_progress;
-                            recovery = recovery_base;
-                        }
-                        if last_progress.elapsed() > STALL_TIMEOUT {
-                            bail!(
-                                "epoch {epoch} stalled: {rem} backward passes outstanding \
-                                 with no progress for {STALL_TIMEOUT:?}"
-                            );
-                        }
-                        if last_progress.elapsed() >= recovery
-                            && last_sweep.elapsed() >= recovery
-                        {
-                            last_sweep = Instant::now();
-                            // Exponential backoff: if the previous sweep
-                            // did not unstick the epoch, give in-flight
-                            // attempts progressively longer before
-                            // re-driving them — a slow-but-healthy link
-                            // whose round trip exceeds the base interval
-                            // must not be livelocked by sweeps
-                            // invalidating every attempt mid-flight.
-                            recovery = (recovery * 2).min(recovery_cap);
-                            let kicked = ledger.requeue_stuck();
-                            if !kicked.is_empty() {
-                                metrics.inc("recovery_sweeps", 1);
-                                for &(batch_id, new_gen) in &kicked {
-                                    broker.purge_stale(batch_id, new_gen);
-                                    opts.emit(RunEvent::BatchRetried {
-                                        epoch: ledger.epoch(),
-                                        batch_id,
-                                    });
+                    let mut epoch_wall = Duration::ZERO;
+                    let mut did_barrier = false;
+                    // The sync window: drain, then barrier + fetch. On the
+                    // N-org topology a link death anywhere in this window
+                    // rejoins just the dead org and re-enters the drain
+                    // (its voided party re-drives before the barrier
+                    // re-arms, preserving the drain-before-barrier
+                    // invariant the per-epoch batch ids rely on); the
+                    // single-link topology keeps its whole-epoch re-run.
+                    let sync_result: Option<Vec<MlpParams>>;
+                    'sync: loop {
+                        let mut recovery = recovery_base;
+                        let mut last_remaining = usize::MAX;
+                        let mut last_progress = Instant::now();
+                        let mut last_sweep = Instant::now();
+                        let mut drained = true;
+                        loop {
+                            let rem = ledger.remaining_bwd();
+                            if rem == 0 {
+                                break;
+                            }
+                            if rem != last_remaining {
+                                last_remaining = rem;
+                                last_progress = Instant::now();
+                                last_sweep = last_progress;
+                                recovery = recovery_base;
+                            }
+                            if last_progress.elapsed() > STALL_TIMEOUT {
+                                bail!(
+                                    "epoch {epoch} stalled: {rem} backward passes outstanding \
+                                     with no progress for {STALL_TIMEOUT:?}"
+                                );
+                            }
+                            if last_progress.elapsed() >= recovery
+                                && last_sweep.elapsed() >= recovery
+                            {
+                                last_sweep = Instant::now();
+                                // Exponential backoff: if the previous sweep
+                                // did not unstick the epoch, give in-flight
+                                // attempts progressively longer before
+                                // re-driving them — a slow-but-healthy link
+                                // whose round trip exceeds the base interval
+                                // must not be livelocked by sweeps
+                                // invalidating every attempt mid-flight.
+                                recovery = (recovery * 2).min(recovery_cap);
+                                let kicked = ledger.requeue_stuck();
+                                if !kicked.is_empty() {
+                                    metrics.inc("recovery_sweeps", 1);
+                                    for &(batch_id, new_gen) in &kicked {
+                                        broker.purge_stale(batch_id, new_gen);
+                                        opts.emit(RunEvent::BatchRetried {
+                                            epoch: ledger.epoch(),
+                                            batch_id,
+                                        });
+                                    }
                                 }
                             }
+                            // Relaxed: advisory link-health flags, polled.
+                            if any_down() {
+                                if n_orgs > 1 && durable_rejoin {
+                                    // Per-org recovery in place: the dead
+                                    // org rejoins and its party re-drives
+                                    // while the survivors keep draining.
+                                    rejoin_downed(&shipped, &barrier_ckpt)?;
+                                    last_remaining = usize::MAX;
+                                    last_progress = Instant::now();
+                                    last_sweep = last_progress;
+                                    recovery = recovery_base;
+                                    continue;
+                                }
+                                drained = false;
+                                break;
+                            }
+                            if opts.is_cancelled() {
+                                cancelled = true;
+                                break;
+                            }
+                            std::thread::sleep(Duration::from_micros(200));
                         }
-                        // Relaxed: advisory link-health flag, polled.
-                        if link_down.load(Ordering::Relaxed) {
-                            drained = false;
-                            break;
+                        if cancelled || !drained {
+                            sync_result = None;
+                            break 'sync;
                         }
-                        if opts.is_cancelled() {
-                            cancelled = true;
-                            break;
+                        epoch_wall = epoch_t0.elapsed();
+
+                        // ---- semi-async PS schedule: active half local,
+                        // passive half behind the barrier frame. On a
+                        // 'sync re-entry the fold repeats over the latest
+                        // replicas (re-driven work moved them since).
+                        let barrier = schedule.barrier_after_epoch(epoch);
+                        did_barrier = barrier;
+                        if barrier {
+                            fold_active_barrier(&active_replicas[..live_w_a], &ps_active, &ps_top);
+                        } else {
+                            ps_active.aggregate();
+                            ps_top.aggregate();
                         }
-                        std::thread::sleep(Duration::from_micros(200));
+                        send_barrier(epoch as u64, barrier);
+                        if !wait_barrier(epoch as u64)? {
+                            // Crash inside the barrier window.
+                            if n_orgs > 1 {
+                                rejoin_downed(&shipped, &barrier_ckpt)?;
+                                continue 'sync;
+                            }
+                            sync_result = None;
+                            break 'sync;
+                        }
+                        match fetch_passive_params()? {
+                            Some(p) => {
+                                sync_result = Some(p);
+                                break 'sync;
+                            }
+                            None => {
+                                if n_orgs > 1 {
+                                    rejoin_downed(&shipped, &barrier_ckpt)?;
+                                    continue 'sync;
+                                }
+                                sync_result = None;
+                                break 'sync;
+                            }
+                        }
                     }
                     if cancelled {
                         break;
                     }
-                    if !drained {
+                    let Some(passive_params) = sync_result else {
+                        if n_orgs > 1 {
+                            let rem = ledger.remaining_bwd();
+                            bail!(
+                                "link to {} closed mid-epoch ({rem} backward passes \
+                                 outstanding); configure [durability] so organizations \
+                                 can rejoin",
+                                downed_label()
+                            );
+                        }
+                        // Crash inside the epoch or its sync window: the
+                        // single-link whole-epoch rollback + re-run (the
+                        // PS fold, if any, rolls back with the rest).
                         do_rejoin(metrics.counter("bwd_acked") - acked_before, &barrier_ckpt)?;
                         continue;
-                    }
-                    let epoch_wall = epoch_t0.elapsed();
-
-                    // ---- semi-async PS schedule: active half local, --
-                    // passive half behind the barrier frame.
-                    let barrier = schedule.barrier_after_epoch(epoch);
-                    if barrier {
-                        fold_active_barrier(&active_replicas[..live_w_a], &ps_active, &ps_top);
-                    } else {
-                        ps_active.aggregate();
-                        ps_top.aggregate();
-                    }
-                    let barrier_frame = Frame::Barrier { epoch: epoch as u64, broadcast: barrier };
-                    let barrier_ok = match link.send(barrier_frame) {
-                        Ok(()) => wait_barrier(epoch as u64)?,
-                        Err(e) => {
-                            // Relaxed: advisory link-health flag, polled.
-                            link_down.store(true, Ordering::Relaxed);
-                            if !durable_rejoin {
-                                return Err(anyhow!("barrier send failed: {e}"));
-                            }
-                            false
-                        }
-                    };
-                    if !barrier_ok {
-                        // Crash inside the barrier window: the epoch
-                        // re-run rolls the PS fold back with the rest.
-                        do_rejoin(metrics.counter("bwd_acked") - acked_before, &barrier_ckpt)?;
-                        continue;
-                    }
-                    let passive_params = match fetch_passive_params()? {
-                        Some(p) => p,
-                        None => {
-                            do_rejoin(metrics.counter("bwd_acked") - acked_before, &barrier_ckpt)?;
-                            continue;
-                        }
                     };
 
                     // ---- committed: the attempt drained and synced ----
                     // Everything below runs exactly once per epoch (no
                     // doubled curve points or events across re-runs).
-                    if barrier {
+                    if did_barrier {
                         metrics.inc("ps_barriers", 1);
                         opts.emit(RunEvent::PsBarrier { epoch });
                     }
@@ -1712,9 +2222,16 @@ pub fn train_pubsub_over_link_with(
 
                     // ---- wire-cost series: this epoch's delta of the --
                     // cumulative link counters (codec bytes + codec
-                    // time). The swappable handle folds retired links in,
-                    // so the deltas stay monotonic across rejoins.
-                    let st = link.stats();
+                    // time), folded across the org links. The swappable
+                    // handles fold retired links in, so the deltas stay
+                    // monotonic across rejoins.
+                    let st = {
+                        let mut acc = LinkStatsSnapshot::default();
+                        for o in orgs.iter() {
+                            fold_link_stats(&mut acc, o.link.stats());
+                        }
+                        acc
+                    };
                     let mb = 1024.0 * 1024.0;
                     let d = |now: u64, prev: u64| now.saturating_sub(prev) as f64;
                     let tx = d(st.tx_bytes, wire_prev.tx_bytes) / mb;
@@ -1738,10 +2255,21 @@ pub fn train_pubsub_over_link_with(
                     wire_prev = st;
 
                     // Injected-fault counters (chaos-decorated links
-                    // only): the same per-epoch delta treatment, so a
-                    // resilience run reads its fault pressure next to its
-                    // wire cost.
-                    if let Some(fs) = link.fault_stats() {
+                    // only): the same per-epoch delta treatment, folded
+                    // across orgs, so a resilience run reads its fault
+                    // pressure next to its wire cost.
+                    let folded_faults = {
+                        let mut acc = FaultStatsSnapshot::default();
+                        let mut any = false;
+                        for o in orgs.iter() {
+                            if let Some(fs) = o.link.fault_stats() {
+                                fold_fault_stats(&mut acc, fs);
+                                any = true;
+                            }
+                        }
+                        any.then_some(acc)
+                    };
+                    if let Some(fs) = folded_faults {
                         metrics.push_point(
                             "wire_faults_dropped",
                             epoch as f64,
@@ -1885,7 +2413,15 @@ pub fn train_pubsub_over_link_with(
                             }
                             // Topics are empty (epoch drained + synced),
                             // so a shrink never mass-evicts live messages.
-                            broker.resize_buffers(depth_p * na, cfg.train.buffer_q * w_p);
+                            // Depths stay per-party: each gradient topic
+                            // keeps tracking its org's advertised pool.
+                            for party in 0..k {
+                                broker.resize_party_buffers(
+                                    party,
+                                    depth_p * na,
+                                    cfg.train.buffer_q * party_workers[party],
+                                );
+                            }
                             let threads = linalg::thread_budget(na);
                             metrics.gauge_max("linalg_threads_per_worker", threads as f64);
                             // Relaxed: the Release bump below publishes
@@ -1898,7 +2434,16 @@ pub fn train_pubsub_over_link_with(
                             metrics.inc("replans_applied", 1);
                             if d.wire == WireAction::StepQuantization {
                                 if let Some(next) = cur_q.step_down() {
-                                    if link.send(Frame::SetQuantization { mode: next }).is_ok() {
+                                    let mut any_ok = false;
+                                    for o in orgs.iter() {
+                                        if o.link
+                                            .send(Frame::SetQuantization { mode: next })
+                                            .is_ok()
+                                        {
+                                            any_ok = true;
+                                        }
+                                    }
+                                    if any_ok {
                                         // Relaxed: advisory mode; pumps
                                         // re-read it per frame and both
                                         // frame kinds always decode.
@@ -1927,8 +2472,7 @@ pub fn train_pubsub_over_link_with(
             }
             // Make sure the final model includes the passive half even if
             // no epoch completed (cancellation / zero-epoch runs).
-            // Relaxed: advisory link-health flag, polled.
-            if last_passive.is_none() && !link_down.load(Ordering::Relaxed) {
+            if last_passive.is_none() && !any_down() {
                 last_passive = fetch_passive_params().ok().flatten();
             }
             Ok(())
@@ -1940,17 +2484,30 @@ pub fn train_pubsub_over_link_with(
         // the broker close).
         shutdown.store(true, Ordering::Relaxed);
         ctl.shutdown.store(true, Ordering::Relaxed);
-        let _ = link.send(Frame::Shutdown);
+        for o in orgs.iter() {
+            let _ = o.link.send(Frame::Shutdown);
+        }
         broker.close();
-        link.close();
+        for o in orgs.iter() {
+            o.link.close();
+        }
         result
     });
 
-    let st = link.stats();
+    let mut st = LinkStatsSnapshot::default();
+    let mut faults = FaultStatsSnapshot::default();
+    let mut any_faults = false;
+    for o in &orgs {
+        fold_link_stats(&mut st, o.link.stats());
+        if let Some(fs) = o.link.fault_stats() {
+            fold_fault_stats(&mut faults, fs);
+            any_faults = true;
+        }
+    }
     metrics.set_gauge("wire_tx_frames", st.tx_frames as f64);
     metrics.set_gauge("wire_rx_frames", st.rx_frames as f64);
-    if let Some(fs) = link.fault_stats() {
-        metrics.set_gauge("wire_faults_injected", fs.disrupted() as f64);
+    if any_faults {
+        metrics.set_gauge("wire_faults_injected", faults.disrupted() as f64);
     }
     run_result?;
 
@@ -2009,8 +2566,8 @@ mod tests {
             &mut rng,
         );
         let (tr, te) = ds.split(0.75);
-        let vtr = VerticalDataset::split_two(&tr, 6);
-        let vte = VerticalDataset::split_two(&te, 6);
+        let vtr = VerticalDataset::split_two(&tr, 6).unwrap();
+        let vte = VerticalDataset::split_two(&te, 6).unwrap();
         let spec = SplitModelSpec::build(ModelSize::Small, 6, &[6], 16, 8);
         let engine = Arc::new(HostSplitModel::new(spec.clone(), Task::BinaryClassification));
         let mut cfg = ExperimentConfig::default();
@@ -2142,8 +2699,8 @@ mod tests {
             &mut rng,
         );
         let (tr, te) = ds.split(0.75);
-        let vtr = VerticalDataset::split_multi(&tr, 4, 2);
-        let vte = VerticalDataset::split_multi(&te, 4, 2);
+        let vtr = VerticalDataset::split_multi(&tr, 4, 2).unwrap();
+        let vte = VerticalDataset::split_multi(&te, 4, 2).unwrap();
         let d_passive: Vec<usize> = vtr.passive.iter().map(|p| p.x.cols).collect();
         let spec = SplitModelSpec::build(ModelSize::Small, 4, &d_passive, 12, 8);
         let engine = Arc::new(HostSplitModel::new(spec.clone(), Task::BinaryClassification));
@@ -2270,5 +2827,164 @@ mod tests {
         assert!(ledger.begin_join(id2, g2).is_some());
         assert!(ledger.begin_join(id2, g2).is_none(), "one step per generation");
         assert_eq!(ledger.retried(), 1);
+    }
+
+    /// Every handshake failure names the organization that broke, so an
+    /// N-org session error points at the right process to restart.
+    #[test]
+    fn handshake_errors_name_the_peer_address() {
+        // Peer closes during the handshake: the address is in the error.
+        let (a, b) = InProcTransport::pair_inproc();
+        b.close();
+        let err = handshake_link(
+            &a,
+            "10.0.0.7:4242",
+            wire::PARTY_ANY,
+            2,
+            0,
+            0,
+            0,
+            Quantization::None,
+            Duration::from_secs(1),
+        )
+        .expect_err("closed peer must fail the handshake");
+        assert!(format!("{err:#}").contains("10.0.0.7:4242"), "got: {err:#}");
+
+        // Peer registers a party other than the proposed one: the error
+        // names the org and spells out the pin disagreement.
+        let (a, b) = InProcTransport::pair_inproc();
+        let responder = std::thread::spawn(move || {
+            match b.recv(Duration::from_secs(5)) {
+                LinkRecv::Frame(Frame::Hello { .. }) => {}
+                other => panic!("expected Hello, got {other:?}"),
+            }
+            b.send(Frame::HelloAck {
+                parties: 2,
+                quantization: Quantization::None,
+                party_id: 1,
+                workers: 1,
+            })
+            .unwrap();
+        });
+        let err = handshake_link(
+            &a,
+            "10.0.0.8:4242",
+            0, // supervisor proposes party 0, the peer registers 1
+            2,
+            0,
+            0,
+            0,
+            Quantization::None,
+            Duration::from_secs(5),
+        )
+        .expect_err("party mismatch must fail the handshake");
+        responder.join().unwrap();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("10.0.0.8:4242"), "got: {msg}");
+        assert!(msg.contains("--party"), "got: {msg}");
+    }
+
+    /// Tentpole: three passive organizations — one per party — behind
+    /// three in-process links. Jobs route per party to the owning org,
+    /// every org applies exactly its party's backward passes, and the
+    /// learned model matches the in-proc k=3 baseline.
+    #[test]
+    fn three_org_session_learns_and_shards_exactly_once() {
+        let mut rng = Rng::new(7);
+        let ds = make_classification(
+            &ClassificationOpts {
+                samples: 256,
+                features: 12,
+                informative: 8,
+                redundant: 2,
+                class_sep: 1.5,
+                flip_y: 0.0,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        let (tr, te) = ds.split(0.75);
+        let vtr = VerticalDataset::split_multi(&tr, 6, 3).unwrap();
+        let vte = VerticalDataset::split_multi(&te, 6, 3).unwrap();
+        let d_passive: Vec<usize> = vtr.passive.iter().map(|p| p.x.cols).collect();
+        let spec = SplitModelSpec::build(ModelSize::Small, 6, &d_passive, 16, 8);
+        let engine = Arc::new(HostSplitModel::new(spec.clone(), Task::BinaryClassification));
+        let mut cfg = ExperimentConfig::default();
+        cfg.train.batch_size = 32;
+        cfg.train.epochs = 6;
+        cfg.train.lr = 0.05;
+        cfg.train.target_accuracy = 2.0; // unreachable: deterministic counts
+        cfg.parties.active_workers = 2;
+        cfg.parties.passive_workers = 2;
+        cfg.train.t_ddl_ms = 2000;
+
+        // Baseline: the same k=3 split trained in one process.
+        let base =
+            train_pubsub(Arc::clone(&engine), &spec, &vtr, &vte, &cfg, Arc::new(Metrics::new()))
+                .unwrap();
+
+        // Three orgs, org i pinned to party i.
+        let mut endpoints = Vec::new();
+        let mut servers = Vec::new();
+        let mut passive_metrics = Vec::new();
+        for party in 0..3usize {
+            let (active_link, passive_link) = InProcTransport::pair_inproc();
+            let mut cfg_p = cfg.clone();
+            cfg_p.transport.party = Some(party);
+            let spec_p = spec.clone();
+            let tr_p = vtr.clone();
+            let engine_p: Arc<dyn crate::model::SplitEngine> = Arc::clone(&engine);
+            let pm = Arc::new(Metrics::new());
+            let pm2 = Arc::clone(&pm);
+            passive_metrics.push(pm);
+            servers.push(std::thread::spawn(move || {
+                serve_passive_session(
+                    &cfg_p,
+                    &spec_p,
+                    engine_p,
+                    &tr_p,
+                    Arc::new(passive_link),
+                    pm2,
+                )
+                .unwrap()
+            }));
+            endpoints.push(OrgEndpoint {
+                addr: format!("org-{party}"),
+                proposed_party: party as u32,
+                link: Arc::new(active_link),
+                reconnect: None,
+            });
+        }
+
+        let metrics = Arc::new(Metrics::new());
+        let opts = RunOptions::default();
+        let ctx = TrainCtx {
+            engine: Arc::clone(&engine),
+            spec: &spec,
+            train: &vtr,
+            test: &vte,
+            cfg: &cfg,
+            metrics: Arc::clone(&metrics),
+            opts: &opts,
+        };
+        let r = train_pubsub_over_links(&ctx, endpoints).unwrap();
+
+        // 6 epochs × 6 full batches (192 aligned rows / 32), one party
+        // per org: each org applied exactly its shard.
+        for (party, s) in servers.into_iter().enumerate() {
+            let report = s.join().unwrap();
+            assert_eq!(report.bwd_applied, 36, "org {party} shard not exactly-once");
+            assert_eq!(report.epochs_served, 6, "org {party}");
+            assert_eq!(passive_metrics[party].counter("passive_bwd"), 36, "org {party}");
+        }
+        assert_eq!(r.epochs_run, 6);
+        assert!(r.loss_curve.iter().all(|&(_, l)| l.is_finite()));
+        assert!(r.final_metric > 0.75, "AUC 3-org = {}", r.final_metric);
+        assert!(
+            (r.final_metric - base.final_metric).abs() < 0.1,
+            "3-org AUC {} drifted from the in-proc k=3 baseline {}",
+            r.final_metric,
+            base.final_metric
+        );
     }
 }

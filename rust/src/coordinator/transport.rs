@@ -441,7 +441,7 @@ impl Link for TcpLink {
 
 // ---- swappable link (crash-recovery rejoin) ------------------------------
 
-fn fold_link_stats(acc: &mut LinkStatsSnapshot, s: LinkStatsSnapshot) {
+pub(crate) fn fold_link_stats(acc: &mut LinkStatsSnapshot, s: LinkStatsSnapshot) {
     acc.tx_bytes += s.tx_bytes;
     acc.rx_bytes += s.rx_bytes;
     acc.tx_frames += s.tx_frames;
@@ -451,7 +451,7 @@ fn fold_link_stats(acc: &mut LinkStatsSnapshot, s: LinkStatsSnapshot) {
     acc.decode_errors += s.decode_errors;
 }
 
-fn fold_fault_stats(acc: &mut FaultStatsSnapshot, s: FaultStatsSnapshot) {
+pub(crate) fn fold_fault_stats(acc: &mut FaultStatsSnapshot, s: FaultStatsSnapshot) {
     acc.dropped += s.dropped;
     acc.duplicated += s.duplicated;
     acc.corrupted += s.corrupted;

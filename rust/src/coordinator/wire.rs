@@ -27,9 +27,14 @@
 //! quantization-negotiation byte appended to `Hello` / `HelloAck`. The
 //! byte is *optional on decode*: a v1 peer's shorter handshake payload
 //! decodes with [`Quantization::None`], which is exactly the negotiation
-//! fallback — a quantization-unaware peer silently gets f32 frames. All
-//! v1 frames remain a byte-level subset of v2, so v1 streams (including
-//! durable topic logs written before the bump) still decode.
+//! fallback — a quantization-unaware peer silently gets f32 frames. v3:
+//! party registration for the N-organization session — `Hello` and
+//! `HelloAck` gain trailing `party_id` + `workers` (capability) fields,
+//! again optional on decode: older peers' shorter payloads register as
+//! [`PARTY_ANY`] (serve every party, the two-process legacy topology)
+//! with an unspecified worker count. All v1/v2 frames remain a
+//! byte-level subset of v3, so old streams (including durable topic
+//! logs written before the bumps) still decode.
 
 use super::messages::{EmbeddingMsg, GradientMsg, QuantEmbeddingMsg, QuantGradientMsg};
 use super::quant::{Quantization, QuantizedMatrix};
@@ -41,11 +46,17 @@ use std::time::{SystemTime, UNIX_EPOCH};
 /// `b"VF"` little-endian: rejects non-protocol peers at the first frame.
 pub const WIRE_MAGIC: u16 = 0x4656;
 /// Protocol version; bumped on any layout change. v2 added the
-/// quantized data-plane frames and the handshake negotiation byte.
-pub const WIRE_VERSION: u16 = 2;
-/// Oldest version this decoder still accepts (v1 frames are a strict
-/// byte-level subset of v2).
+/// quantized data-plane frames and the handshake negotiation byte; v3
+/// added the party-registration fields on `Hello` / `HelloAck`.
+pub const WIRE_VERSION: u16 = 3;
+/// Oldest version this decoder still accepts (v1/v2 frames are a strict
+/// byte-level subset of v3).
 pub const WIRE_VERSION_MIN: u16 = 1;
+/// `party_id` wildcard on the handshake frames: the peer serves (or is
+/// asked to serve) *every* passive party over one link — the legacy
+/// single-link topology, and what an older peer's shorter payload
+/// decodes to.
+pub const PARTY_ANY: u32 = u32::MAX;
 /// Fixed frame header: magic u16, version u16, type u8, flags u8, len u32.
 pub const HEADER_BYTES: usize = 10;
 /// Upper bound on one frame's payload — anything larger is a corrupt
@@ -138,18 +149,30 @@ pub enum Frame {
     /// restarted `serve-passive` can tell a fresh session from a resumed
     /// one and validate the token against its state dir. `quantization`
     /// is the active side's proposed data-plane wire quantization (v2;
-    /// decodes as `None` from a v1 peer's shorter payload).
+    /// decodes as `None` from a v1 peer's shorter payload). `party_id`
+    /// (v3) is the organization slot the supervisor proposes this link
+    /// should serve ([`PARTY_ANY`] = all parties, the legacy topology);
+    /// `workers` is the sender's worker-pool capability hint (0 =
+    /// unspecified). Both decode from older peers' shorter payloads as
+    /// `PARTY_ANY` / 0.
     Hello {
         parties: u32,
         session_id: u64,
         resume_token: u64,
         attempt: u32,
         quantization: Quantization,
+        party_id: u32,
+        workers: u32,
     },
     /// Passive → active handshake reply: number of parties served, plus
     /// the accepted quantization mode (the proposal if the passive's own
     /// config agrees, else `None`; v1 peers omit the byte ⇒ `None`).
-    HelloAck { parties: u32, quantization: Quantization },
+    /// `party_id` (v3) is the organization slot this server *registers*
+    /// — its `--party` override if set, else the supervisor's proposal;
+    /// the registration is authoritative for topic sharding. `workers`
+    /// is the server's per-party worker-pool size (capability profile
+    /// for queue-group load weighting; 0 = unspecified).
+    HelloAck { parties: u32, quantization: Quantization, party_id: u32, workers: u32 },
     /// Active → passive: the epoch's batch plan — `(batch_id, rows)` per
     /// batch, rows being PSI-aligned sample indices shared by both sides.
     EpochInstall { epoch: u64, batches: Vec<(u64, Vec<u32>)> },
@@ -390,6 +413,21 @@ impl<'a> Cursor<'a> {
         Quantization::from_u8(self.u8()?).ok_or(WireError::Corrupt("unknown quantization mode"))
     }
 
+    /// Optional trailing u32 on the handshake frames (v3 party
+    /// registration): an older peer ends its payload here, which decodes
+    /// to `default`. A *partial* trailing field is corrupt — the
+    /// declared payload length covered it, so bytes are missing, not
+    /// merely absent.
+    fn u32_or(&mut self, default: u32) -> Result<u32, WireError> {
+        if self.pos == self.buf.len() {
+            return Ok(default);
+        }
+        if self.buf.len() - self.pos < 4 {
+            return Err(WireError::Corrupt("partial trailing field"));
+        }
+        self.u32()
+    }
+
     pub(crate) fn done(&self) -> Result<(), WireError> {
         if self.pos != self.buf.len() {
             return Err(WireError::Corrupt("trailing bytes after payload"));
@@ -459,8 +497,8 @@ fn qmat_len(q: &QuantizedMatrix) -> usize {
 
 fn payload_len(frame: &Frame) -> usize {
     match frame {
-        Frame::Hello { .. } => 4 + 8 + 8 + 4 + 1,
-        Frame::HelloAck { .. } => 4 + 1,
+        Frame::Hello { .. } => 4 + 8 + 8 + 4 + 1 + 4 + 4,
+        Frame::HelloAck { .. } => 4 + 1 + 4 + 4,
         Frame::EpochInstall { batches, .. } => {
             8 + 4 + batches.iter().map(|(_, rows)| 8 + 4 + rows.len() * 4).sum::<usize>()
         }
@@ -491,16 +529,28 @@ pub fn encoded_len(frame: &Frame) -> usize {
 
 fn write_payload(frame: &Frame, b: &mut Vec<u8>) {
     match frame {
-        Frame::Hello { parties, session_id, resume_token, attempt, quantization } => {
+        Frame::Hello {
+            parties,
+            session_id,
+            resume_token,
+            attempt,
+            quantization,
+            party_id,
+            workers,
+        } => {
             put_u32(b, *parties);
             put_u64(b, *session_id);
             put_u64(b, *resume_token);
             put_u32(b, *attempt);
             b.push(quantization.as_u8());
+            put_u32(b, *party_id);
+            put_u32(b, *workers);
         }
-        Frame::HelloAck { parties, quantization } => {
+        Frame::HelloAck { parties, quantization, party_id, workers } => {
             put_u32(b, *parties);
             b.push(quantization.as_u8());
+            put_u32(b, *party_id);
+            put_u32(b, *workers);
         }
         Frame::EpochInstall { epoch, batches } => {
             put_u64(b, *epoch);
@@ -630,10 +680,15 @@ fn decode_payload(ftype: u8, payload: &[u8]) -> Result<Frame, WireError> {
             resume_token: c.u64()?,
             attempt: c.u32()?,
             quantization: c.quant_or_none()?,
+            party_id: c.u32_or(PARTY_ANY)?,
+            workers: c.u32_or(0)?,
         },
-        T_HELLO_ACK => {
-            Frame::HelloAck { parties: c.u32()?, quantization: c.quant_or_none()? }
-        }
+        T_HELLO_ACK => Frame::HelloAck {
+            parties: c.u32()?,
+            quantization: c.quant_or_none()?,
+            party_id: c.u32_or(PARTY_ANY)?,
+            workers: c.u32_or(0)?,
+        },
         T_EPOCH_INSTALL => {
             let epoch = c.u64()?;
             let n = c.u32()? as usize;
@@ -871,8 +926,24 @@ mod tests {
                 resume_token: 0x0123_4567_89AB_CDEF,
                 attempt: 1,
                 quantization: Quantization::Int8,
+                party_id: 1,
+                workers: 4,
             },
-            Frame::HelloAck { parties: 2, quantization: Quantization::F16 },
+            Frame::Hello {
+                parties: 3,
+                session_id: 1,
+                resume_token: 2,
+                attempt: 0,
+                quantization: Quantization::None,
+                party_id: PARTY_ANY,
+                workers: 0,
+            },
+            Frame::HelloAck {
+                parties: 2,
+                quantization: Quantization::F16,
+                party_id: 0,
+                workers: 8,
+            },
             Frame::EpochInstall {
                 epoch: 3,
                 batches: vec![(3_000_000, vec![5, 1, 9]), (3_000_001, vec![])],
@@ -994,6 +1065,8 @@ mod tests {
             resume_token: 9,
             attempt: 0,
             quantization: Quantization::None,
+            party_id: PARTY_ANY,
+            workers: 0,
         };
         let mut bytes = encode(&hello);
         bytes.extend_from_slice(&[0xFF; 3]);
@@ -1026,48 +1099,99 @@ mod tests {
         assert_eq!(g.bytes(), encode(&Frame::Gradient(g.clone())).len() as u64);
     }
 
-    /// A quantization-unaware (WIRE_VERSION 1) peer sends handshake frames
-    /// with no trailing quantization byte and the old version word. Both
-    /// must still decode, negotiating down to `Quantization::None`.
+    /// Older peers send shorter handshake payloads: a v1 peer omits the
+    /// quantization byte AND the party registration words (9 bytes
+    /// shorter), a v2 peer carries quantization but not the registration
+    /// (8 bytes shorter). Both must still decode, defaulting the missing
+    /// fields (`Quantization::None`, [`PARTY_ANY`], 0 workers).
     #[test]
-    fn v1_handshake_frames_still_decode() {
+    fn v1_and_v2_handshake_frames_still_decode() {
         let hello = Frame::Hello {
             parties: 2,
             session_id: 77,
             resume_token: 99,
             attempt: 1,
             quantization: Quantization::Int8,
+            party_id: 1,
+            workers: 4,
         };
-        let ack = Frame::HelloAck { parties: 2, quantization: Quantization::F16 };
-        for (f, stripped) in [(hello, Quantization::None), (ack, Quantization::None)] {
+        let ack = Frame::HelloAck {
+            parties: 2,
+            quantization: Quantization::F16,
+            party_id: 1,
+            workers: 4,
+        };
+        // (frame, stamped version, bytes the old peer never sent,
+        //  quantization the decoder should land on)
+        let cases = [
+            (hello.clone(), 1u16, 9usize, Quantization::None),
+            (ack.clone(), 1, 9, Quantization::None),
+            (hello, 2, 8, Quantization::Int8),
+            (ack, 2, 8, Quantization::F16),
+        ];
+        for (f, version, strip, want_q) in cases {
             let mut bytes = encode(&f);
-            // Rewrite as the v1 peer would have sent it: drop the trailing
-            // quantization byte, shrink the length field, stamp version 1.
-            bytes.pop();
-            let plen = (payload_len(&f) - 1) as u32;
+            // Rewrite as the old peer would have sent it: drop the
+            // trailing bytes it never knew, shrink the length field,
+            // stamp its version word.
+            bytes.truncate(bytes.len() - strip);
+            let plen = (payload_len(&f) - strip) as u32;
             bytes[6..10].copy_from_slice(&plen.to_le_bytes());
-            bytes[2..4].copy_from_slice(&1u16.to_le_bytes());
+            bytes[2..4].copy_from_slice(&version.to_le_bytes());
             let (back, used) = decode(&bytes).unwrap();
             assert_eq!(used, bytes.len());
             match back {
-                Frame::Hello { quantization, parties, .. } => {
-                    assert_eq!(quantization, stripped);
+                Frame::Hello { quantization, parties, party_id, workers, .. } => {
+                    assert_eq!(quantization, want_q);
                     assert_eq!(parties, 2);
+                    assert_eq!(party_id, PARTY_ANY, "legacy peer serves all parties");
+                    assert_eq!(workers, 0, "legacy peer reports no capability");
                 }
-                Frame::HelloAck { quantization, parties } => {
-                    assert_eq!(quantization, stripped);
+                Frame::HelloAck { quantization, parties, party_id, workers } => {
+                    assert_eq!(quantization, want_q);
                     assert_eq!(parties, 2);
+                    assert_eq!(party_id, PARTY_ANY);
+                    assert_eq!(workers, 0);
                 }
                 other => panic!("unexpected frame {other:?}"),
             }
         }
 
-        // Non-handshake v1 frames are byte-identical to v2 apart from the
+        // Non-handshake v1 frames are byte-identical to v3 apart from the
         // version word: patching it must not change the decode.
         let f = Frame::Embedding(emb(3, 5));
         let mut bytes = encode(&f);
         bytes[2..4].copy_from_slice(&1u16.to_le_bytes());
         assert_eq!(decode(&bytes).unwrap().0, f);
+    }
+
+    /// A partially-present trailing registration field is corrupt, not a
+    /// silent default: the declared payload length covered it, so bytes
+    /// are missing rather than absent.
+    #[test]
+    fn partial_trailing_registration_is_corrupt() {
+        let hello = Frame::Hello {
+            parties: 2,
+            session_id: 7,
+            resume_token: 9,
+            attempt: 0,
+            quantization: Quantization::None,
+            party_id: 3,
+            workers: 2,
+        };
+        let full = encode(&hello);
+        // Chop 1..=3 bytes off the final u32 while keeping the header's
+        // length field honest about the shortened payload.
+        for cut in 1..=3usize {
+            let mut bytes = full.clone();
+            bytes.truncate(bytes.len() - cut);
+            let plen = (payload_len(&hello) - cut) as u32;
+            bytes[6..10].copy_from_slice(&plen.to_le_bytes());
+            assert!(
+                matches!(decode(&bytes).unwrap_err(), WireError::Corrupt(_)),
+                "cut {cut} should be corrupt"
+            );
+        }
     }
 
     /// Quantized frames round-trip over awkward shapes and their encoded

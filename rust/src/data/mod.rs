@@ -11,4 +11,4 @@ pub use catalog::{load as load_catalog, spec as catalog_spec, DatasetSpec, CATAL
 pub use synth::{
     make_classification, make_regression, ClassificationOpts, Dataset, RegressionOpts, Task,
 };
-pub use vertical::{BatchAssignment, BatchPlan, PartyView, VerticalDataset};
+pub use vertical::{BatchAssignment, BatchPlan, PartyView, SplitError, VerticalDataset};

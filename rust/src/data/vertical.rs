@@ -5,6 +5,41 @@
 use super::synth::{Dataset, Task};
 use crate::tensor::Matrix;
 use crate::util::{ceil_div, Rng};
+use std::fmt;
+
+/// A vertical split that cannot give every party at least one feature
+/// column. Historically these inputs panicked (`d - n_passive` usize
+/// underflow, then an empty-slice assert); they are ordinary
+/// configuration errors and decode to one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SplitError {
+    /// `n_passive == 0`: a vertical session needs at least one passive
+    /// party.
+    NoPassiveParties,
+    /// More parties than feature columns: `features` columns cannot cover
+    /// `passive` passive parties plus the active party with >= 1 each.
+    TooManyParties { features: usize, passive: usize },
+}
+
+impl fmt::Display for SplitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SplitError::NoPassiveParties => {
+                write!(f, "vertical split needs at least one passive party")
+            }
+            SplitError::TooManyParties { features, passive } => write!(
+                f,
+                "cannot split {features} feature column(s) across {passive} passive \
+                 part{} plus the active party (every party needs >= 1 feature; \
+                 need at least {} columns)",
+                if *passive == 1 { "y" } else { "ies" },
+                passive + 1
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SplitError {}
 
 /// One party's feature view of the shared (PSI-aligned) sample set.
 #[derive(Clone, Debug)]
@@ -28,38 +63,63 @@ pub struct VerticalDataset {
 
 impl VerticalDataset {
     /// Two-party split: the active party gets `active_features` columns
-    /// (0 ⇒ an even split) and the passive party gets the rest.
-    pub fn split_two(ds: &Dataset, active_features: usize) -> VerticalDataset {
+    /// (0 ⇒ an even split) and the passive party gets the rest. Errors
+    /// when the dataset has fewer than two feature columns.
+    pub fn split_two(ds: &Dataset, active_features: usize) -> Result<VerticalDataset, SplitError> {
         let d = ds.x.cols;
-        let a = if active_features == 0 { d / 2 } else { active_features.min(d - 1) };
+        let a = if active_features == 0 {
+            d / 2
+        } else {
+            active_features.min(d.saturating_sub(1)).max(1)
+        };
         Self::split_multi(ds, a, 1)
     }
 
     /// Multi-party split: active gets `active_features` columns, the
     /// remainder is divided as evenly as possible among `n_passive`
-    /// passive parties (Appendix H extension).
-    pub fn split_multi(ds: &Dataset, active_features: usize, n_passive: usize) -> VerticalDataset {
-        assert!(n_passive >= 1);
+    /// passive parties (Appendix H extension). An `active_features`
+    /// larger than the dataset allows is clamped down so every passive
+    /// party keeps >= 1 column; a party count the feature count cannot
+    /// cover at all is a [`SplitError`], not a panic.
+    pub fn split_multi(
+        ds: &Dataset,
+        active_features: usize,
+        n_passive: usize,
+    ) -> Result<VerticalDataset, SplitError> {
+        if n_passive == 0 {
+            return Err(SplitError::NoPassiveParties);
+        }
         let d = ds.x.cols;
-        let a = if active_features == 0 { d / (n_passive + 1) } else { active_features };
+        if d < n_passive + 1 {
+            return Err(SplitError::TooManyParties { features: d, passive: n_passive });
+        }
+        let a = if active_features == 0 {
+            (d / (n_passive + 1)).max(1)
+        } else {
+            active_features
+        };
         let a = a.clamp(1, d - n_passive); // each passive party needs >= 1 feature
         let active_idx: Vec<usize> = (0..a).collect();
         let rest: Vec<usize> = (a..d).collect();
-        let per = ceil_div(rest.len(), n_passive);
+        // Balanced distribution: base columns each, the first `extra`
+        // parties take one more. With rest.len() >= n_passive every party
+        // is non-empty (ceil-sized chunks could starve the tail party).
+        let base = rest.len() / n_passive;
+        let extra = rest.len() % n_passive;
         let mut passive = Vec::with_capacity(n_passive);
+        let mut lo = 0;
         for p in 0..n_passive {
-            let lo = (p * per).min(rest.len());
-            let hi = ((p + 1) * per).min(rest.len());
-            let idx: Vec<usize> = rest[lo..hi].to_vec();
-            assert!(!idx.is_empty(), "passive party {p} got no features (d={d}, k={n_passive})");
+            let take = base + usize::from(p < extra);
+            let idx: Vec<usize> = rest[lo..lo + take].to_vec();
+            lo += take;
             passive.push(PartyView { x: ds.x.take_cols(&idx), feature_idx: idx });
         }
-        VerticalDataset {
+        Ok(VerticalDataset {
             active: PartyView { x: ds.x.take_cols(&active_idx), feature_idx: active_idx },
             passive,
             y: ds.y.clone(),
             task: ds.task,
-        }
+        })
     }
 
     pub fn len(&self) -> usize {
@@ -151,7 +211,7 @@ mod tests {
     #[test]
     fn two_party_split_covers_all_features_disjointly() {
         let ds = tiny();
-        let v = VerticalDataset::split_two(&ds, 3);
+        let v = VerticalDataset::split_two(&ds, 3).unwrap();
         assert_eq!(v.d_active(), 3);
         assert_eq!(v.d_passive(0), 7);
         assert_eq!(v.d_total(), 10);
@@ -164,7 +224,7 @@ mod tests {
     #[test]
     fn even_split_default() {
         let ds = tiny();
-        let v = VerticalDataset::split_two(&ds, 0);
+        let v = VerticalDataset::split_two(&ds, 0).unwrap();
         assert_eq!(v.d_active(), 5);
         assert_eq!(v.d_passive(0), 5);
     }
@@ -172,7 +232,7 @@ mod tests {
     #[test]
     fn multi_party_split() {
         let ds = tiny();
-        let v = VerticalDataset::split_multi(&ds, 2, 4);
+        let v = VerticalDataset::split_multi(&ds, 2, 4).unwrap();
         assert_eq!(v.passive.len(), 4);
         assert_eq!(v.d_total(), 10);
         for p in &v.passive {
@@ -180,10 +240,70 @@ mod tests {
         }
     }
 
+    /// Regression (the k >= d panic family): `d == k` used to underflow
+    /// `d - n_passive` and abort; it is now a descriptive error.
+    #[test]
+    fn split_with_as_many_parties_as_features_errors() {
+        let ds = tiny(); // d = 10
+        let e = VerticalDataset::split_multi(&ds, 0, 10).unwrap_err();
+        assert_eq!(e, SplitError::TooManyParties { features: 10, passive: 10 });
+        let msg = e.to_string();
+        assert!(msg.contains("10 feature column(s)"), "unhelpful error: {msg}");
+        assert!(msg.contains("11 columns"), "unhelpful error: {msg}");
+    }
+
+    /// Regression: `d < k` (even more parties than columns) errors too,
+    /// for any `active_features` request.
+    #[test]
+    fn split_with_more_parties_than_features_errors() {
+        let ds = tiny(); // d = 10
+        for af in [0, 1, 5, 100] {
+            let e = VerticalDataset::split_multi(&ds, af, 25).unwrap_err();
+            assert_eq!(e, SplitError::TooManyParties { features: 10, passive: 25 }, "af={af}");
+        }
+        assert_eq!(
+            VerticalDataset::split_multi(&ds, 1, 0).unwrap_err(),
+            SplitError::NoPassiveParties
+        );
+    }
+
+    /// Regression: an oversized `active_features` request (>= d) clamps
+    /// down so every passive party still holds >= 1 column — previously
+    /// this could panic via `clamp(1, 0)` on narrow datasets.
+    #[test]
+    fn oversized_active_features_clamps_instead_of_panicking() {
+        let ds = tiny(); // d = 10
+        for af in [9, 10, 11, 9999] {
+            let v = VerticalDataset::split_multi(&ds, af, 3).unwrap();
+            assert_eq!(v.d_active(), 7, "af={af}: active clamps to d - k");
+            assert_eq!(v.d_total(), 10);
+            for p in &v.passive {
+                assert!(!p.feature_idx.is_empty());
+            }
+        }
+        // Two-party form on the narrowest splittable dataset.
+        let mut narrow = tiny();
+        narrow.x = narrow.x.take_cols(&[0, 1]);
+        let v = VerticalDataset::split_two(&narrow, 5).unwrap();
+        assert_eq!((v.d_active(), v.d_passive(0)), (1, 1));
+    }
+
+    /// The balanced remainder distribution keeps every party non-empty
+    /// even when the leftover columns don't divide evenly (ceil-sized
+    /// chunks used to starve the tail party and trip an assert).
+    #[test]
+    fn uneven_remainder_still_covers_every_party() {
+        let ds = tiny(); // d = 10
+        let v = VerticalDataset::split_multi(&ds, 5, 4).unwrap(); // rest = 5 over 4 parties
+        let sizes: Vec<usize> = v.passive.iter().map(|p| p.feature_idx.len()).collect();
+        assert_eq!(sizes, vec![2, 1, 1, 1]);
+        assert_eq!(v.d_total(), 10);
+    }
+
     #[test]
     fn party_views_match_source_columns() {
         let ds = tiny();
-        let v = VerticalDataset::split_two(&ds, 4);
+        let v = VerticalDataset::split_two(&ds, 4).unwrap();
         for r in 0..5 {
             for (j, &c) in v.active.feature_idx.iter().enumerate() {
                 assert_eq!(v.active.x.at(r, j), ds.x.at(r, c));

@@ -54,8 +54,23 @@ pub fn materialize_data(
     let mut rng = Rng::new(cfg.seed ^ 0x5111_7000);
     ds.shuffle(&mut rng);
     let (tr, te) = ds.split(0.7);
-    let vtr = VerticalDataset::split_multi(&tr, cfg.dataset.active_features, cfg.passive_parties);
-    let vte = VerticalDataset::split_multi(&te, cfg.dataset.active_features, cfg.passive_parties);
+    // Cross-check the party count against the *materialized* feature
+    // count (validate() can only see explicit `dataset.features`; the
+    // catalog default is only known here).
+    let split = |d: &crate::data::Dataset| {
+        VerticalDataset::split_multi(d, cfg.dataset.active_features, cfg.passive_parties).map_err(
+            |e| {
+                anyhow!(
+                    "dataset '{}': {e}; reduce passive_parties (currently {}) or use a wider \
+                     dataset",
+                    cfg.dataset.name,
+                    cfg.passive_parties
+                )
+            },
+        )
+    };
+    let vtr = split(&tr)?;
+    let vte = split(&te)?;
     Ok((vtr, vte))
 }
 

@@ -607,6 +607,8 @@ mod tests {
             resume_token: 0,
             attempt: 0,
             quantization: crate::coordinator::Quantization::None,
+            party_id: crate::coordinator::wire::PARTY_ANY,
+            workers: 0,
         };
         fl.send(hello.clone()).unwrap();
         fl.send(data_frame(0)).unwrap();

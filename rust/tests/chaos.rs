@@ -17,8 +17,9 @@
 
 use pubsub_vfl::config::{ExperimentConfig, ModelSize, Quantization};
 use pubsub_vfl::coordinator::{
-    serve_passive_session, train_pubsub_over_link, wire, Frame, InProcTransport, Link, LinkRecv,
-    PassiveSessionReport, SessionResult, TcpLink, TcpTransport, Transport,
+    serve_passive_session, train_pubsub_over_link, train_pubsub_over_links, wire, Frame,
+    InProcTransport, Link, LinkRecv, OrgEndpoint, PassiveSessionReport, SessionResult, TcpLink,
+    TcpTransport, Transport,
 };
 use pubsub_vfl::data::{make_classification, ClassificationOpts, Task, VerticalDataset};
 use pubsub_vfl::experiment::{RunEvent, RunOptions, TrainCtx};
@@ -54,8 +55,8 @@ fn setup() -> Setup {
         &mut rng,
     );
     let (tr, te) = ds.split(0.75);
-    let vtr = VerticalDataset::split_two(&tr, 6);
-    let vte = VerticalDataset::split_two(&te, 6);
+    let vtr = VerticalDataset::split_two(&tr, 6).unwrap();
+    let vte = VerticalDataset::split_two(&te, 6).unwrap();
     let spec = SplitModelSpec::build(ModelSize::Small, 6, &[6], 16, 8);
     let engine = Arc::new(HostSplitModel::new(spec.clone(), Task::BinaryClassification));
     let mut cfg = ExperimentConfig::default();
@@ -295,6 +296,110 @@ fn chaos_corrupt_frames_tcp() {
     chaos_cell(Scenario::CorruptFrames, &TcpTransport, "tcp");
 }
 
+/// N-party matrix cell: the lossy-LAN preset on *every* org link of a
+/// 3-organization session (distinct per-org fault seeds, so the three
+/// schedules are uncorrelated). The per-org pumps and the ledger's
+/// per-party credits must keep each org independently exactly-once, and
+/// the model must still learn within tolerance.
+#[test]
+fn chaos_lossy_lan_three_org() {
+    let mut rng = Rng::new(3);
+    let ds = make_classification(
+        &ClassificationOpts {
+            samples: 256,
+            features: 12,
+            informative: 8,
+            redundant: 2,
+            class_sep: 1.5,
+            flip_y: 0.0,
+            ..Default::default()
+        },
+        &mut rng,
+    );
+    let (tr, te) = ds.split(0.75);
+    let vtr = VerticalDataset::split_multi(&tr, 6, 3).unwrap();
+    let vte = VerticalDataset::split_multi(&te, 6, 3).unwrap();
+    let d_passive: Vec<usize> = vtr.passive.iter().map(|p| p.x.cols).collect();
+    let spec = SplitModelSpec::build(ModelSize::Small, 6, &d_passive, 16, 8);
+    let engine = Arc::new(HostSplitModel::new(spec.clone(), Task::BinaryClassification));
+    let mut cfg = ExperimentConfig::default();
+    cfg.train.batch_size = 32;
+    cfg.train.epochs = EPOCHS;
+    cfg.train.lr = 0.05;
+    cfg.train.target_accuracy = 2.0; // unreachable: run every epoch
+    cfg.parties.active_workers = 2;
+    cfg.parties.passive_workers = 2;
+    cfg.train.t_ddl_ms = 100;
+
+    let mut endpoints = Vec::new();
+    let mut fault_links = Vec::new();
+    let mut servers = Vec::new();
+    let mut passive_metrics = Vec::new();
+    for party in 0..3usize {
+        let (active_raw, passive_link) = InProcTransport::pair_inproc();
+        let profile = Scenario::LossyLan.profile(FAULT_SEED ^ party as u64);
+        let fl = FaultLink::wrap(Arc::new(active_raw), profile);
+        fault_links.push(Arc::<FaultLink>::clone(&fl));
+
+        let mut cfg_p = cfg.clone();
+        cfg_p.transport.party = Some(party);
+        let spec_p = spec.clone();
+        let tr_p = vtr.clone();
+        let engine_p: Arc<dyn pubsub_vfl::model::SplitEngine> = Arc::clone(&engine);
+        let pm = Arc::new(Metrics::new());
+        let pm2 = Arc::clone(&pm);
+        passive_metrics.push(pm);
+        servers.push(std::thread::spawn(move || {
+            serve_passive_session(&cfg_p, &spec_p, engine_p, &tr_p, Arc::new(passive_link), pm2)
+                .expect("passive org session")
+        }));
+        endpoints.push(OrgEndpoint {
+            addr: format!("org-{party}"),
+            proposed_party: party as u32,
+            link: fl,
+            reconnect: None,
+        });
+    }
+
+    let active_metrics = Arc::new(Metrics::new());
+    let am = Arc::clone(&active_metrics);
+    let h = std::thread::spawn(move || {
+        let opts = RunOptions::default();
+        let engine: Arc<dyn pubsub_vfl::model::SplitEngine> = engine;
+        let ctx = TrainCtx {
+            engine,
+            spec: &spec,
+            train: &vtr,
+            test: &vte,
+            cfg: &cfg,
+            metrics: am,
+            opts: &opts,
+        };
+        train_pubsub_over_links(&ctx, endpoints).expect("3-org chaos session must survive")
+    });
+    let deadline = Instant::now() + Duration::from_secs(240);
+    while !h.is_finished() {
+        assert!(Instant::now() < deadline, "3-org chaos session hung");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let session = h.join().unwrap();
+
+    let per_org = EPOCHS as u64 * N_BATCHES;
+    for (party, s) in servers.into_iter().enumerate() {
+        let report = s.join().unwrap();
+        assert_eq!(report.bwd_applied, per_org, "org {party}: per-org exactly-once");
+        assert_eq!(report.epochs_served, EPOCHS, "org {party}");
+        assert_eq!(passive_metrics[party].counter("passive_bwd"), per_org, "org {party}");
+    }
+    for (party, fl) in fault_links.iter().enumerate() {
+        dump_journal(&format!("three_org_lossy_lan_org{party}"), FAULT_SEED, &fl.journal());
+        assert!(!fl.journal().is_empty(), "org {party}: no fault decisions journaled");
+    }
+    assert_eq!(session.epochs_run, EPOCHS);
+    assert!(session.loss_curve.iter().all(|&(_, l)| l.is_finite()));
+    assert!(session.final_metric > 0.7, "3-org AUC under faults: {}", session.final_metric);
+}
+
 /// Live re-planning cell: slow_passive × `--replan act` × real TCP. The
 /// session starts deliberately under-provisioned (one active worker):
 /// a single-worker active pool is never optimal on the refit surface —
@@ -507,8 +612,10 @@ fn fuzz_frames() -> Vec<Frame> {
             resume_token: 99,
             attempt: 1,
             quantization: Quantization::Int8,
+            party_id: 1,
+            workers: 4,
         },
-        Frame::HelloAck { parties: 2, quantization: Quantization::F16 },
+        Frame::HelloAck { parties: 2, quantization: Quantization::F16, party_id: 1, workers: 4 },
         Frame::EmbeddingQ(QuantEmbeddingMsg {
             batch_id: 7,
             party: 0,

@@ -2,8 +2,9 @@
 //!
 //! Thousands of seeded random interleavings of
 //! `publish / begin_join / mark_stepped / claim_bwd / credit_bwd /
-//! requeue_party / requeue_all / requeue_stuck` across generations and
-//! epochs, asserting after **every** operation that the state machine:
+//! requeue_party / requeue_all / requeue_stuck / void_party_bwd` across
+//! 1–4 parties, generations, and epochs, asserting after **every**
+//! operation that the state machine:
 //!
 //! - never double-credits a `(batch, party)` backward pass,
 //! - never lets `remaining_bwd` drift from `expected − credits`
@@ -102,7 +103,7 @@ fn drive(case: &Case) -> Result<(), String> {
             // Half the time aim at the live generation, half at a stale
             // or bogus one — stale traffic must be inert.
             let gen = if rng.flip(0.5) { cur } else { cur.wrapping_sub(1 + rng.below(3) as u64) };
-            let op = rng.below(9);
+            let op = rng.below(10);
             let what: String;
             match op {
                 0 => {
@@ -186,6 +187,29 @@ fn drive(case: &Case) -> Result<(), String> {
                     what = format!("requeue_party(p{party}, {id}, g{gen})");
                     let _ = ledger.requeue_party(party, id, gen);
                 }
+                8 => {
+                    // One organization's process dies: every credit it
+                    // earned is voided and must be re-earned. The shadow
+                    // model mirrors the void exactly — a mismatch means
+                    // the ledger voided a credit it never counted (or
+                    // kept one it should have dropped).
+                    what = format!("void_party_bwd(p{party})");
+                    let voided = ledger.void_party_bwd(party) as usize;
+                    let held = ids
+                        .iter()
+                        .filter(|&&id| *claimed.get(&(id, party)).unwrap_or(&false))
+                        .count();
+                    if voided != held {
+                        return Err(format!(
+                            "void_party_bwd(p{party}) voided {voided} credits but the \
+                             shadow model holds {held}"
+                        ));
+                    }
+                    for &id in &ids {
+                        claimed.insert((id, party), false);
+                    }
+                    credits -= voided;
+                }
                 _ => {
                     what = "requeue_stuck()".into();
                     for (kid, new_gen) in ledger.requeue_stuck() {
@@ -267,7 +291,7 @@ fn randomized_interleavings_never_break_exactly_once() {
         2500,
         |rng| Case {
             seed: rng.next_u64(),
-            k: 1 + rng.below(3),
+            k: 1 + rng.below(4),
             n_batches: 1 + rng.below(5),
             epochs: 1 + rng.below(3),
             ops: 16 + rng.below(64),

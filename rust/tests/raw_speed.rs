@@ -61,8 +61,8 @@ fn run_wire_session(
         &mut rng,
     );
     let (tr, te) = ds.split(0.75);
-    let vtr = VerticalDataset::split_two(&tr, split);
-    let vte = VerticalDataset::split_two(&te, split);
+    let vtr = VerticalDataset::split_two(&tr, split).unwrap();
+    let vte = VerticalDataset::split_two(&te, split).unwrap();
     let spec = SplitModelSpec::build(ModelSize::Small, features - split, &[split], 16, 8);
     let engine = Arc::new(HostSplitModel::new(spec.clone(), Task::BinaryClassification));
     let mut cfg = ExperimentConfig::default();

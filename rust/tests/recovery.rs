@@ -14,15 +14,17 @@
 
 use pubsub_vfl::config::{ExperimentConfig, ModelSize};
 use pubsub_vfl::coordinator::{
-    serve_passive_session, train_pubsub_over_link_with, train_pubsub_session, Checkpoint,
-    DurableHub, Frame, InProcTransport, Link, LinkRecv, LogCaps, TcpLink,
+    serve_passive_session, train_pubsub_over_link_with, train_pubsub_over_links,
+    train_pubsub_session, Checkpoint, DurableHub, Frame, InProcTransport, Link, LinkRecv,
+    LogCaps, OrgEndpoint, TcpLink,
 };
 use pubsub_vfl::data::{make_classification, ClassificationOpts, Task, VerticalDataset};
 use pubsub_vfl::experiment::{RunEvent, RunOptions, TrainCtx};
 use pubsub_vfl::metrics::Metrics;
 use pubsub_vfl::model::{HostSplitModel, SplitModelSpec};
 use pubsub_vfl::testkit::{
-    check_session, wrap_link_named_attempt, ExactlyOnceExpectation, FaultLink, Scenario,
+    check_session, wrap_link_named_attempt, ExactlyOnceExpectation, FaultLink, FaultProfile,
+    Scenario,
 };
 use pubsub_vfl::util::Rng;
 use std::net::TcpListener;
@@ -59,8 +61,8 @@ fn setup() -> Setup {
         &mut rng,
     );
     let (tr, te) = ds.split(0.75);
-    let vtr = VerticalDataset::split_two(&tr, 6);
-    let vte = VerticalDataset::split_two(&te, 6);
+    let vtr = VerticalDataset::split_two(&tr, 6).unwrap();
+    let vte = VerticalDataset::split_two(&te, 6).unwrap();
     let spec = SplitModelSpec::build(ModelSize::Small, 6, &[6], 16, 8);
     let engine = Arc::new(HostSplitModel::new(spec.clone(), Task::BinaryClassification));
     let mut cfg = ExperimentConfig::default();
@@ -115,6 +117,8 @@ fn passive_exits_loudly_when_link_drops_without_shutdown() {
             resume_token: 9,
             attempt: 0,
             quantization: pubsub_vfl::coordinator::Quantization::None,
+            party_id: pubsub_vfl::coordinator::wire::PARTY_ANY,
+            workers: 0,
         })
         .unwrap();
     let deadline = Instant::now() + Duration::from_secs(30);
@@ -359,4 +363,182 @@ fn kill_restart_resume_lossy_lan_tcp() {
 #[test]
 fn kill_restart_resume_partition_heal_tcp() {
     recovery_cell(Scenario::PartitionHeal);
+}
+
+// ---- N-org: kill one org mid-epoch; only that org rejoins -----------------
+
+/// Three organizations (one party each) over loopback TCP; an injected
+/// disconnect cuts org 1's link mid-epoch. Recovery must be *per-org*:
+/// party 1's credits are voided and re-driven through a rejoin of org 1
+/// alone, while orgs 0 and 2 keep their original links — no rejoin
+/// Hello, no voided credits, their pumps never stall — and per-org
+/// exactly-once holds for all three over the logical session.
+#[test]
+fn kill_one_org_rejoins_that_org_alone() {
+    let mut rng = Rng::new(3);
+    let ds = make_classification(
+        &ClassificationOpts {
+            samples: 256,
+            features: 12,
+            informative: 8,
+            redundant: 2,
+            class_sep: 1.5,
+            flip_y: 0.0,
+            ..Default::default()
+        },
+        &mut rng,
+    );
+    let (tr, te) = ds.split(0.75);
+    let vtr = VerticalDataset::split_multi(&tr, 6, 3).unwrap();
+    let vte = VerticalDataset::split_multi(&te, 6, 3).unwrap();
+    let d_passive: Vec<usize> = vtr.passive.iter().map(|p| p.x.cols).collect();
+    let spec = SplitModelSpec::build(ModelSize::Small, 6, &d_passive, 16, 8);
+    let engine = Arc::new(HostSplitModel::new(spec.clone(), Task::BinaryClassification));
+    let mut cfg = ExperimentConfig::default();
+    cfg.train.batch_size = 32;
+    cfg.train.epochs = EPOCHS;
+    cfg.train.lr = 0.05;
+    cfg.train.target_accuracy = 2.0; // unreachable: run every epoch
+    cfg.parties.active_workers = 2;
+    cfg.parties.passive_workers = 2;
+    cfg.train.t_ddl_ms = 100;
+    cfg.durability.state_dir = state_dir("one-org-active").to_string_lossy().into_owned();
+
+    // ---- three passive orgs, party i pinned on org i ------------------
+    let mut listeners = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..3 {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        addrs.push(l.local_addr().unwrap().to_string());
+        listeners.push(l);
+    }
+    let mut servers = Vec::new();
+    let mut passive_metrics = Vec::new();
+    for (party, listener) in listeners.into_iter().enumerate() {
+        let mut cfg_p = cfg.clone();
+        cfg_p.transport.party = Some(party);
+        cfg_p.durability.state_dir =
+            state_dir(&format!("one-org-p{party}")).to_string_lossy().into_owned();
+        let spec_p = spec.clone();
+        let tr_p = vtr.clone();
+        let engine_p: Arc<dyn pubsub_vfl::model::SplitEngine> = Arc::clone(&engine);
+        let pm = Arc::new(Metrics::new());
+        let pm2 = Arc::clone(&pm);
+        passive_metrics.push(pm);
+        servers.push(std::thread::spawn(move || {
+            let l1: Arc<dyn Link> = Arc::new(TcpLink::accept(&listener).unwrap());
+            if party == 1 {
+                // The victim: incarnation 1 dies with the cut link...
+                let first = serve_passive_session(
+                    &cfg_p,
+                    &spec_p,
+                    Arc::clone(&engine_p),
+                    &tr_p,
+                    l1,
+                    Arc::new(Metrics::new()),
+                );
+                let msg =
+                    format!("{:#}", first.expect_err("victim incarnation must exit non-zero"));
+                assert!(msg.contains("without Shutdown"), "victim: {msg}");
+                // ...and the "restarted process" accepts the rejoin dial
+                // on the same listener and state dir.
+                let mut cfg_r = cfg_p.clone();
+                cfg_r.durability.resume = true;
+                let l2: Arc<dyn Link> = Arc::new(TcpLink::accept(&listener).unwrap());
+                serve_passive_session(&cfg_r, &spec_p, engine_p, &tr_p, l2, pm2)
+                    .expect("restarted org must finish the session")
+            } else {
+                // Healthy orgs serve the whole session on one link.
+                serve_passive_session(&cfg_p, &spec_p, engine_p, &tr_p, l1, pm2)
+                    .expect("healthy org must never need a restart")
+            }
+        }));
+    }
+
+    // ---- active supervisor: three endpoints, org 1 chaos-decorated ----
+    let mut endpoints = Vec::new();
+    let mut victim_fl = None;
+    for (party, addr) in addrs.iter().enumerate() {
+        let raw = TcpLink::connect(addr, Duration::from_secs(10)).expect("dial org");
+        let link: Arc<dyn Link> = if party == 1 {
+            let profile =
+                FaultProfile { disconnect_after: Some(CRASH_AT_TX), ..FaultProfile::default() };
+            let fl = FaultLink::wrap(Arc::new(raw), profile);
+            victim_fl = Some(Arc::<FaultLink>::clone(&fl));
+            fl
+        } else {
+            Arc::new(raw)
+        };
+        let addr_r = addr.clone();
+        endpoints.push(OrgEndpoint {
+            addr: addr.clone(),
+            proposed_party: party as u32,
+            link,
+            // The redial mirrors `train --connect`'s durable reconnector;
+            // the replacement link is plain (crash fault stripped).
+            reconnect: Some(Box::new(move |_attempt: u32| -> anyhow::Result<Arc<dyn Link>> {
+                let l = TcpLink::connect(&addr_r, Duration::from_secs(10))
+                    .map_err(|e| anyhow::anyhow!("redial failed: {e}"))?;
+                Ok(Arc::new(l))
+            })),
+        });
+    }
+    let fl = victim_fl.expect("victim fault link installed");
+
+    let active_metrics = Arc::new(Metrics::new());
+    let am = Arc::clone(&active_metrics);
+    let h = std::thread::spawn(move || {
+        let opts = RunOptions::default();
+        let engine: Arc<dyn pubsub_vfl::model::SplitEngine> = engine;
+        let ctx = TrainCtx {
+            engine,
+            spec: &spec,
+            train: &vtr,
+            test: &vte,
+            cfg: &cfg,
+            metrics: am,
+            opts: &opts,
+        };
+        train_pubsub_over_links(&ctx, endpoints)
+            .expect("N-org durable session must survive a single-org crash")
+    });
+
+    let deadline = Instant::now() + Duration::from_secs(300);
+    while !h.is_finished() {
+        assert!(Instant::now() < deadline, "single-org-kill session hung");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let session = h.join().unwrap();
+    let reports: Vec<_> = servers.into_iter().map(|s| s.join().unwrap()).collect();
+    dump_journal("kill_one_org", FAULT_SEED, &fl.journal());
+
+    // The crash really fired, and only org 1 rejoined.
+    assert!(fl.injected().disconnects >= 1, "the injected cut never fired");
+    assert!(active_metrics.counter("rejoin_attempts") >= 1, "no rejoin recorded");
+    assert!(passive_metrics[1].counter("rejoin_handshakes") >= 1, "victim saw no rejoin Hello");
+    assert!(passive_metrics[1].counter("resumes_applied") >= 1, "victim never banked credit");
+    for party in [0usize, 2] {
+        assert_eq!(
+            passive_metrics[party].counter("rejoin_handshakes"),
+            0,
+            "healthy org {party} must never re-handshake"
+        );
+    }
+
+    // Per-org conservation over the logical session: every org —
+    // including the victim's two incarnations — nets exactly epochs ×
+    // n_batches backward passes. The healthy orgs' exact counts are the
+    // "zero voided credits" criterion: a voided healthy party would have
+    // re-driven work visible as a different bank/apply split.
+    let per_org = EPOCHS as u64 * N_BATCHES;
+    for (party, report) in reports.iter().enumerate() {
+        assert_eq!(report.bwd_applied, per_org, "org {party}: per-org exactly-once");
+        assert_eq!(report.epochs_served, EPOCHS, "org {party}: epochs served");
+    }
+    assert_eq!(session.epochs_run, EPOCHS);
+    assert!(
+        session.final_metric > 0.7,
+        "AUC after single-org recovery: {}",
+        session.final_metric
+    );
 }

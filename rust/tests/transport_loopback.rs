@@ -144,6 +144,66 @@ fn tcp_loopback_two_process_training_exactly_once() {
     );
 }
 
+/// The N-party tentpole over real sockets: three `serve-passive`
+/// processes — one per party, each pinned with `transport.party` — and
+/// the active role dialing `--connect a,b,c`. Jobs route per party to
+/// the owning org, per-org exactly-once holds (`passive_bwd == epochs ×
+/// n_batches` on every org), and the final AUC stays within tolerance of
+/// the identically-configured in-proc `passive_parties = 3` run.
+#[test]
+fn tcp_loopback_three_org_session_matches_inproc() {
+    let mut listeners = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..3 {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        addrs.push(l.local_addr().unwrap().to_string());
+        listeners.push(l);
+    }
+
+    let mut passives = Vec::new();
+    for (party, listener) in listeners.into_iter().enumerate() {
+        let mut cfg = base_cfg(3);
+        cfg.transport.party = Some(party);
+        passives.push(spawn_passive_role(cfg, listener));
+    }
+
+    let mut active_cfg = base_cfg(3);
+    active_cfg.transport.connect = addrs.join(",");
+    active_cfg.transport.kind = pubsub_vfl::config::TransportKind::Tcp;
+    let (out, active_metrics) = run_active_with_watchdog(active_cfg, Duration::from_secs(300));
+
+    // 400 samples → 280 train rows → 8 full batches of 32; 5 epochs.
+    // Each org serves exactly one party's shard of that work.
+    let per_org: u64 = 5 * 8;
+    for (party, p) in passives.into_iter().enumerate() {
+        let (report, pm) = p.join().unwrap();
+        assert_eq!(report.epochs_served, 5, "org {party}");
+        assert_eq!(report.bwd_applied, per_org, "org {party}: per-org exactly-once");
+        assert_eq!(pm.counter("passive_bwd"), per_org, "org {party}");
+        assert!(report.emb_published >= per_org, "org {party} published its embeddings");
+    }
+    assert_eq!(active_metrics.counter("bwd_acked"), per_org * 3);
+    assert_eq!(out.session.epochs_run, 5);
+    assert!(out.session.loss_curve.iter().all(|&(_, l)| l.is_finite()));
+    assert!(
+        out.session.loss_curve[4].1 < out.session.loss_curve[0].1,
+        "loss must decrease: {:?}",
+        out.session.loss_curve
+    );
+
+    // Parity with the in-proc k=3 run (same config, same dataset seed).
+    let inproc = Experiment::from_config(base_cfg(3)).prepare().unwrap().run().unwrap();
+    assert_eq!(inproc.metrics.counter("passive_bwd"), per_org * 3);
+    let auc_3org = out.session.final_metric;
+    let auc_inproc = inproc.session.final_metric;
+    assert!(auc_3org > 0.7, "3-org AUC = {auc_3org}");
+    assert!(auc_inproc > 0.7, "inproc k=3 AUC = {auc_inproc}");
+    assert!(
+        (auc_3org - auc_inproc).abs() < 0.15,
+        "3-org session diverged from in-proc k=3: {auc_3org} vs {auc_inproc}"
+    );
+}
+
 /// The storm variant of the acceptance criterion: tight buffers and a
 /// short deadline over a real socket with two passive parties — constant
 /// evictions, join failures, cross-wire requeues — and still exactly
